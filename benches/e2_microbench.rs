@@ -1,0 +1,222 @@
+//! E2 — §6.2 Microbenchmark performance: hetGPU vs "native" per platform.
+//!
+//! Paper shape to reproduce: compute-bound kernels lose <10% to the
+//! abstraction; the Tenstorrent gap is larger (synchronous DMA); the
+//! vendor-library path (here: XLA via PJRT) sits well above a generic
+//! kernel on matmul.
+//!
+//! "Native" columns:
+//! * hand-tuned device-ISA programs (vecadd) — what a vendor compiler
+//!   would emit without the portable-IR detour;
+//! * the same hetIR compiled without migration support (no checkpoint
+//!   guards), the paper's pure-performance build;
+//! * the XLA/PJRT artifact wall-time as the cuBLAS-analog reference.
+
+use hetgpu::backends::{self, TranslateOpts};
+use hetgpu::hetir::instr::{BinOp, Dim};
+use hetgpu::hetir::types::{AddrSpace, Scalar, Value};
+use hetgpu::isa::simt_isa::*;
+use hetgpu::isa::tensix_isa::{TensixConfig, TensixMode};
+use hetgpu::runtime::api::HetGpu;
+use hetgpu::runtime::device::DeviceKind;
+use hetgpu::sim::mem::DeviceMemory;
+use hetgpu::sim::simt::{LaunchDims, SimtSim};
+use hetgpu::sim::tensix::TensixSim;
+use hetgpu::suite;
+use hetgpu::xla_native::{default_artifacts_dir, Tensor, XlaNative};
+use std::sync::atomic::AtomicBool;
+
+/// Hand-tuned SIMT vecadd (no guard, minimal registers) — the baseline a
+/// vendor compiler would produce for an exact-size launch.
+fn hand_vecadd_simt() -> SimtProgram {
+    use SInst as I;
+    let body = vec![
+        SStmt::I(I::Special { dst: DReg(3), kind: SSpecial::ThreadIdx(Dim::X) }),
+        SStmt::I(I::Special { dst: DReg(4), kind: SSpecial::BlockIdx(Dim::X) }),
+        SStmt::I(I::Special { dst: DReg(5), kind: SSpecial::BlockDim(Dim::X) }),
+        SStmt::I(I::Bin { op: BinOp::Mul, ty: Scalar::U32, dst: DReg(4), a: DReg(4).into(), b: DReg(5).into() }),
+        SStmt::I(I::Bin { op: BinOp::Add, ty: Scalar::U32, dst: DReg(3), a: DReg(3).into(), b: DReg(4).into() }),
+        SStmt::I(I::Cvt { from: Scalar::U32, to: Scalar::U64, dst: DReg(6), src: DReg(3).into() }),
+        SStmt::I(I::Ld { space: AddrSpace::Global, ty: Scalar::F32, dst: DReg(7), addr: SAddr { base: DReg(0), index: Some(DReg(6)), scale: 4, disp: 0 } }),
+        SStmt::I(I::Ld { space: AddrSpace::Global, ty: Scalar::F32, dst: DReg(8), addr: SAddr { base: DReg(1), index: Some(DReg(6)), scale: 4, disp: 0 } }),
+        SStmt::I(I::Bin { op: BinOp::Add, ty: Scalar::F32, dst: DReg(9), a: DReg(7).into(), b: DReg(8).into() }),
+        SStmt::I(I::St { space: AddrSpace::Global, ty: Scalar::F32, addr: SAddr { base: DReg(2), index: Some(DReg(6)), scale: 4, disp: 0 }, val: DReg(9).into() }),
+    ];
+    SimtProgram {
+        kernel_name: "vecadd_hand".into(),
+        blocks: vec![body],
+        entry: 0,
+        num_regs: 10,
+        shared_bytes: 0,
+        num_params: 3,
+        ckpt_sites: vec![],
+        migratable: false,
+    }
+}
+
+/// Cycles for running `prog` over `n` elements on a SIMT sim.
+fn simt_cycles(cfg: SimtConfig, prog: &SimtProgram, n: u32) -> u64 {
+    let sim = SimtSim::new(cfg);
+    let mut mem = DeviceMemory::new(32 << 20, "bench");
+    let params = [
+        Value::ptr(0, AddrSpace::Global),
+        Value::ptr((4 * n) as u64, AddrSpace::Global),
+        Value::ptr((8 * n) as u64, AddrSpace::Global),
+        Value::u32(n),
+    ];
+    let pause = AtomicBool::new(false);
+    let out = sim
+        .run_grid(prog, LaunchDims::d1(n / 256, 256), &params[..(prog.num_params as usize).clamp(3, 4)], &mut mem, &pause, None)
+        .unwrap();
+    out.cost().device_cycles
+}
+
+fn main() {
+    let n = 1 << 16; // vector length (scaled from the paper's 1M)
+    let ctx = HetGpu::full_testbed().unwrap();
+    let module = ctx.compile_cuda(suite::SUITE_SRC).unwrap();
+
+    println!("\nE2: microbenchmark performance (paper §6.2)");
+    println!("simulated time per kernel per device (model cycles / clock):\n");
+    println!(
+        "{:12} {:>14} {:>14} {:>14} {:>16}",
+        "kernel", "nvidia-sim", "amd-sim", "intel-sim", "tenstorrent-sim"
+    );
+    for kernel in ["vecadd", "saxpy", "matmul16", "reduce_sum", "mc_pi", "stencil3"] {
+        print!("{kernel:12}");
+        for dev in 0..ctx.device_count() {
+            let stream = ctx.create_stream(dev).unwrap();
+            let r = suite::run_kernel(&ctx, module, stream, kernel, 1).unwrap();
+            assert!(r.passed, "{kernel} on dev {dev}");
+            let clock = match ctx.device_kind(dev).unwrap() {
+                DeviceKind::NvidiaSim => 1700,
+                DeviceKind::AmdSim | DeviceKind::AmdWave64Sim => 2400,
+                DeviceKind::IntelSim => 1400,
+                DeviceKind::TenstorrentSim => 1350,
+            };
+            print!(" {:>11.1} us", r.device_cycles as f64 / clock as f64);
+        }
+        println!();
+    }
+
+    // ---- hetGPU vs hand-tuned (the <10% claim) ----
+    println!("\nhetGPU vs hand-tuned device code (vecadd, {n} elements):");
+    {
+        let m = hetgpu::frontend::compile(suite::SUITE_SRC, "suite").unwrap();
+        let k = m.kernel("vecadd").unwrap();
+        for cfg in [SimtConfig::nvidia(), SimtConfig::amd(), SimtConfig::intel()] {
+            let name = cfg.name;
+            let het = backends::translate_simt(k, &cfg, TranslateOpts { migratable: true }).unwrap();
+            let hand = hand_vecadd_simt();
+            let c_het = simt_cycles(cfg.clone(), &het, n);
+            let c_hand = simt_cycles(cfg, &hand, n);
+            println!(
+                "  {name:12} hetGPU {c_het:>9} cycles vs hand {c_hand:>9} -> overhead {:+.1}%",
+                100.0 * (c_het as f64 / c_hand as f64 - 1.0)
+            );
+        }
+        // Tensix: hetGPU vector mode vs hand Metalium-style program.
+        let het =
+            backends::translate_tensix(k, TensixMode::VectorSingleCore, TranslateOpts::default())
+                .unwrap();
+        let sim = TensixSim::new(TensixConfig::blackhole());
+        let mut mem = DeviceMemory::new(32 << 20, "bench");
+        let pause = AtomicBool::new(false);
+        let params = [
+            Value::ptr(0, AddrSpace::Global),
+            Value::ptr((4 * n) as u64, AddrSpace::Global),
+            Value::ptr((8 * n) as u64, AddrSpace::Global),
+            Value::u32(n),
+        ];
+        let out = sim
+            .run_grid(&het, LaunchDims::d1(n / 32, 32), &params, &mut mem, &pause, None, None)
+            .unwrap();
+        println!(
+            "  {:12} hetGPU {:>9} cycles (sync-DMA dominated — the paper's 0.95 vs 0.72 ms gap)",
+            "tenstorrent", out.cost().device_cycles
+        );
+        // Ablation: double-buffered (async) DMA — the paper attributes the
+        // Tenstorrent gap to its synchronous-DMA prototype; this quantifies
+        // the headroom (EXPERIMENTS.md §Perf).
+        let mut async_cfg = TensixConfig::blackhole();
+        async_cfg.async_dma = true;
+        let sim2 = TensixSim::new(async_cfg);
+        let mut mem2 = DeviceMemory::new(32 << 20, "bench");
+        let out2 = sim2
+            .run_grid(&het, LaunchDims::d1(n / 32, 32), &params, &mut mem2, &pause, None, None)
+            .unwrap();
+        println!(
+            "  {:12} hetGPU {:>9} cycles with double-buffered DMA ({:.2}x faster)",
+            "tenstorrent",
+            out2.cost().device_cycles,
+            out.cost().device_cycles as f64 / out2.cost().device_cycles as f64
+        );
+    }
+
+    // ---- migration-enabled vs pure-performance build ----
+    println!("\ncheckpoint-instrumented vs pure-performance build (matmul16, 64x64):");
+    {
+        let m = hetgpu::frontend::compile(suite::SUITE_SRC, "suite").unwrap();
+        let k = m.kernel("matmul16").unwrap();
+        for (label, mig) in [("migratable", true), ("pure-perf", false)] {
+            let cfg = SimtConfig::nvidia();
+            let p = backends::translate_simt(k, &cfg, TranslateOpts { migratable: mig }).unwrap();
+            let sim = SimtSim::new(cfg);
+            let mut mem = DeviceMemory::new(32 << 20, "bench");
+            for i in 0..64 * 64 {
+                mem.store(4 * i, Scalar::F32, Value::f32(1.0)).unwrap();
+                mem.store(65536 + 4 * i, Scalar::F32, Value::f32(1.0)).unwrap();
+            }
+            let params = [
+                Value::ptr(0, AddrSpace::Global),
+                Value::ptr(65536, AddrSpace::Global),
+                Value::ptr(131072, AddrSpace::Global),
+                Value::u32(64),
+            ];
+            let pause = AtomicBool::new(false);
+            let out = sim
+                .run_grid(
+                    &p,
+                    LaunchDims { grid: [4, 4, 1], block: [16, 16, 1] },
+                    &params,
+                    &mut mem,
+                    &pause,
+                    None,
+                )
+                .unwrap();
+            println!("  {label:12} {:>9} cycles", out.cost().device_cycles);
+        }
+    }
+
+    // ---- vendor-library analog: XLA/PJRT artifacts ----
+    let xla = XlaNative::new(default_artifacts_dir()).unwrap();
+    if xla.has_artifact("matmul") {
+        println!("\nvendor-library reference (XLA via PJRT, host wall time):");
+        let nn = 1 << 20;
+        let a: Vec<f32> = (0..nn).map(|i| i as f32).collect();
+        let b = vec![1.0f32; nn];
+        let t0 = std::time::Instant::now();
+        xla.run1("vecadd", &[Tensor::new(a, &[nn as i64]), Tensor::new(b, &[nn as i64])]).unwrap();
+        println!("  vecadd (1M)      {:>9.2} ms", t0.elapsed().as_secs_f64() * 1e3);
+        let mm = 512usize;
+        let a: Vec<f32> = (0..mm * mm).map(|i| (i % 7) as f32).collect();
+        let b: Vec<f32> = (0..mm * mm).map(|i| (i % 5) as f32).collect();
+        let t0 = std::time::Instant::now();
+        xla.run1(
+            "matmul",
+            &[
+                Tensor::new(a, &[mm as i64, mm as i64]),
+                Tensor::new(b, &[mm as i64, mm as i64]),
+            ],
+        )
+        .unwrap();
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "  matmul (512^2)   {:>9.2} ms  ({:.2} GFLOP/s)",
+            dt * 1e3,
+            2.0 * (mm as f64).powi(3) / dt / 1e9
+        );
+    } else {
+        println!("\n(run `make artifacts` for the XLA vendor-library columns)");
+    }
+}

@@ -1,0 +1,60 @@
+//! E4 — §6.2 Translation/JIT cost: time to translate each kernel of the
+//! suite binary to every target ISA.
+//!
+//! Paper shape: tens-to-hundreds of ms per kernel per target on real
+//! toolchains (ptxas 50–100 ms, LLVM→GCN 100–200 ms, SPIR-V 80 ms,
+//! TT-MLIR 30 ms); our translators are direct (no LLVM underneath) so the
+//! absolute numbers are far smaller — the *ordering* (SIMT backends with
+//! legalization > Tensix module) and the caching behaviour are the
+//! reproduced shape. Costs are "acceptable for long-running programs;
+//! repeated launches don't incur translation overhead" (cache hits).
+
+use hetgpu::runtime::api::HetGpu;
+use hetgpu::runtime::device::DeviceKind;
+use hetgpu::suite;
+
+fn main() {
+    let ctx = HetGpu::full_testbed().unwrap();
+    let module = ctx.compile_cuda(suite::SUITE_SRC).unwrap();
+
+    // Force-translate every kernel for every device by running it once.
+    for dev in 0..ctx.device_count() {
+        let stream = ctx.create_stream(dev).unwrap();
+        for kernel in suite::KERNELS {
+            let _ = suite::run_kernel(&ctx, module, stream, kernel, 8).unwrap();
+        }
+        // Second pass: must be all cache hits.
+        for kernel in suite::KERNELS {
+            let _ = suite::run_kernel(&ctx, module, stream, kernel, 8).unwrap();
+        }
+    }
+
+    let events = ctx.runtime().jit.events();
+    println!("\nE4: JIT translation cost per kernel per target (paper §6.2)\n");
+    println!("{:12} {:>16} {:>12} {:>12}", "kernel", "target", "micros", "out insts");
+    let mut per_target: std::collections::HashMap<&str, (f64, usize)> = Default::default();
+    for e in &events {
+        let tname = match e.kind {
+            DeviceKind::NvidiaSim => "nvidia (PTX)",
+            DeviceKind::AmdSim => "amd (SPIR-V)",
+            DeviceKind::AmdWave64Sim => "amd w64",
+            DeviceKind::IntelSim => "intel (SPIR-V)",
+            DeviceKind::TenstorrentSim => "tt (Metalium)",
+        };
+        println!("{:12} {:>16} {:>12.1} {:>12}", e.kernel, tname, e.micros, e.out_insts);
+        let t = per_target.entry(tname).or_default();
+        t.0 += e.micros;
+        t.1 += 1;
+    }
+    println!("\naverage per target:");
+    let mut rows: Vec<_> = per_target.into_iter().collect();
+    rows.sort_by_key(|(n, _)| *n);
+    for (t, (total, n)) in rows {
+        println!("  {t:16} {:>10.1} us/kernel", total / n as f64);
+    }
+    println!(
+        "\ncache hits on repeated launches: {} (paper: \"0.11 ms on subsequent runs (cached)\")",
+        ctx.runtime().jit.hit_count()
+    );
+    assert!(ctx.runtime().jit.hit_count() > 0);
+}

@@ -1,0 +1,90 @@
+"""AOT lowering: JAX/Pallas → HLO text artifacts for the Rust runtime.
+
+Run once at build time (``make artifacts``); Python never touches the
+request path. HLO *text* is the interchange format — jax >= 0.5 emits
+protos with 64-bit instruction ids that the xla crate's xla_extension
+0.5.1 rejects, while the text parser reassigns ids cleanly (see
+/opt/xla-example/README.md and DESIGN.md).
+
+Usage: ``python -m compile.aot --out-dir ../artifacts``
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import matmul_tiled as ker
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+N = 1 << 20  # paper §6.2: 1M-element vector workloads
+MM = 512  # matmul size (shape-reduced from the paper's 1024², DESIGN.md E2)
+
+
+def artifacts():
+    """name -> (function, example args). Each becomes <name>.hlo.txt."""
+    return {
+        "vecadd": (lambda a, b: (ker.vecadd(a, b),), [f32(N), f32(N)]),
+        "saxpy": (lambda a, x, y: (a * x + y,), [f32(), f32(N), f32(N)]),
+        "matmul": (
+            lambda a, b: (ker.matmul_tiled(a, b),),
+            [f32(MM, MM), f32(MM, MM)],
+        ),
+        "reduction": (lambda x: (jnp.sum(x),), [f32(N)]),
+        "nn_layer": (
+            lambda x, w, b: (model.nn_layer(x, w, b),),
+            [
+                f32(model.LAYER_B, model.LAYER_D),
+                f32(model.LAYER_D, model.LAYER_H),
+                f32(model.LAYER_H),
+            ],
+        ),
+        "mlp_train_step": (
+            model.mlp_train_step,
+            [
+                f32(model.MLP_D, model.MLP_H),
+                f32(model.MLP_H),
+                f32(model.MLP_H),
+                f32(),
+                f32(model.MLP_B, model.MLP_D),
+                f32(model.MLP_B),
+                f32(),
+            ],
+        ),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="build a single artifact")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    for name, (fn, specs) in artifacts().items():
+        if args.only and name != args.only:
+            continue
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,111 @@
+"""L1: tiled matrix-multiply as a Pallas kernel.
+
+The paper's compute hot-spot is the 16x16 shared-memory-tiled matmul
+(§6.1/§6.2). §Hardware-Adaptation (DESIGN.md): on the TPU-ish model the
+CUDA shared-memory tiling becomes a Pallas ``BlockSpec`` grid — each
+(128, 128) output tile is accumulated over K-tiles staged through VMEM and
+fed to the MXU, which is the same HBM<->scratchpad schedule the CUDA kernel
+expressed with threadblocks and __shared__ tiles.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and the interpret path lowers to plain HLO that the Rust
+runtime runs (see /opt/xla-example/README.md).
+
+VMEM/MXU estimate (for DESIGN.md §Perf): per grid cell the kernel holds
+one (TM,K) A-slab, one (K,TN) B-slab and a (TM,TN) accumulator in VMEM:
+for 512x512 f32 with TM=TN=128 that is 128*512*4 * 2 + 128*128*4 ≈ 576 KiB
+— under the ~16 MiB VMEM budget, leaving room for double buffering. Every
+FMA lands on the MXU via jnp.dot: arithmetic intensity = K/2 per output
+element, MXU-bound for K >= 256.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Output tile size (one MXU-friendly block per grid cell).
+TILE = 128
+
+
+def _mm_kernel(a_ref, b_ref, o_ref):
+    """One (TILE, TILE) output block: full-K contraction in VMEM."""
+    o_ref[...] = jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _mm_pallas(a, b, tile: int):
+    """C = A @ B with a Pallas grid over (tile, tile) output blocks."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    assert m % tile == 0 and n % tile == 0, "shapes must be tile-aligned"
+    grid = (m // tile, n // tile)
+    return pl.pallas_call(
+        _mm_kernel,
+        grid=grid,
+        in_specs=[
+            # A: the full K strip for this row of output tiles.
+            pl.BlockSpec((tile, k), lambda i, j: (i, 0)),
+            # B: the full K strip for this column of output tiles.
+            pl.BlockSpec((k, tile), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tile, tile), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+def _mm_or_ref(a, b, tile: int):
+    """Pallas when tile-aligned, jnp otherwise (odd backward shapes)."""
+    m, _ = a.shape
+    _, n = b.shape
+    if m % tile == 0 and n % tile == 0:
+        return _mm_pallas(a, b, tile)
+    return jnp.matmul(a, b)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _mm(a, b, tile: int):
+    return _mm_pallas(a, b, tile)
+
+
+def _mm_fwd(a, b, tile: int):
+    return _mm_pallas(a, b, tile), (a, b)
+
+
+def _mm_bwd(tile: int, res, g):
+    # dA = g @ B^T, dB = A^T @ g — the backward pass rides the same Pallas
+    # kernel (interpret-mode pallas_call has no built-in reverse AD).
+    a, b = res
+    return _mm_or_ref(g, b.T, tile), _mm_or_ref(a.T, g, tile)
+
+
+_mm.defvjp(_mm_fwd, _mm_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def matmul_tiled(a, b, tile: int = TILE):
+    """C = A @ B via the Pallas tiled kernel (differentiable).
+
+    Shapes must be multiples of ``tile`` (the AOT artifacts use 512x512;
+    the hypothesis suite sweeps smaller multiples).
+    """
+    return _mm(a, b, tile)
+
+
+def _vecadd_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = a_ref[...] + b_ref[...]
+
+
+@jax.jit
+def vecadd(a, b):
+    """Element-wise add as a (trivial) Pallas kernel — used so even the
+    simplest artifact exercises the Pallas lowering path."""
+    return pl.pallas_call(
+        _vecadd_kernel,
+        out_shape=jax.ShapeDtypeStruct(a.shape, jnp.float32),
+        interpret=True,
+    )(a, b)

@@ -1,0 +1,41 @@
+"""Pure-jnp reference oracles (L1 correctness signal).
+
+Every Pallas kernel in this package is checked against these functions by
+``python/tests/test_kernel.py`` (pytest + hypothesis) before it is allowed
+into an AOT artifact.
+"""
+
+import jax.numpy as jnp
+
+
+def vecadd(a, b):
+    return a + b
+
+
+def saxpy(a, x, y):
+    return a * x + y
+
+
+def matmul(a, b):
+    return jnp.matmul(a, b)
+
+
+def reduction(x):
+    return jnp.sum(x)
+
+
+def nn_layer(x, w, b):
+    """Matmul + bias + ReLU (the paper's §6.1 'small neural-network layer
+    (matrix-vector plus ReLU)', batched)."""
+    return jnp.maximum(x @ w + b, 0.0)
+
+
+def mlp_forward(w1, b1, w2, b2, x):
+    """Two-layer MLP regression head."""
+    h = jnp.maximum(x @ w1 + b1, 0.0)
+    return h @ w2 + b2
+
+
+def mlp_loss(w1, b1, w2, b2, x, y):
+    pred = mlp_forward(w1, b1, w2, b2, x)
+    return jnp.mean((pred - y) ** 2)

@@ -1,0 +1,55 @@
+"""L2: the JAX compute graphs AOT-lowered into artifacts.
+
+These are the paper's evaluation workloads expressed at the framework
+level, calling the L1 Pallas kernels where the shapes are tile-aligned:
+
+* ``nn_layer`` — §6.1's "small neural-network layer (matrix-vector plus
+  ReLU)", batched to (128, 256) @ (256, 128) so the Pallas tiled matmul
+  carries the contraction.
+* ``mlp_train_step`` — the §6.3 "CNN training iteration" stand-in: one
+  fwd/bwd/SGD step of a two-layer MLP. jax.grad differentiates *through*
+  the Pallas kernel (interpret mode is differentiable), so the backward
+  pass exercises the same tiled matmul.
+
+Build-time only: this module is lowered once by ``aot.py``; the Rust
+runtime executes the resulting HLO via PJRT.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.matmul_tiled import matmul_tiled
+
+# Fixed AOT shapes (HLO artifacts are shape-specialized).
+LAYER_B, LAYER_D, LAYER_H = 128, 256, 128
+MLP_B, MLP_D, MLP_H = 128, 128, 128
+
+
+def nn_layer(x, w, b):
+    """(B, D) @ (D, H) + b, ReLU — contraction via the Pallas kernel."""
+    return jnp.maximum(matmul_tiled(x, w) + b, 0.0)
+
+
+def mlp_forward(w1, b1, w2, b2, x):
+    h = jnp.maximum(matmul_tiled(x, w1) + b1, 0.0)
+    return h @ w2 + b2
+
+
+def mlp_loss(w1, b1, w2, b2, x, y):
+    pred = mlp_forward(w1, b1, w2, b2, x)
+    return jnp.mean((pred - y) ** 2)
+
+
+def mlp_train_step(w1, b1, w2, b2, x, y, lr):
+    """One SGD step; returns (w1', b1', w2', b2', loss)."""
+    loss, grads = jax.value_and_grad(mlp_loss, argnums=(0, 1, 2, 3))(
+        w1, b1, w2, b2, x, y
+    )
+    g1, gb1, g2, gb2 = grads
+    return (
+        w1 - lr * g1,
+        b1 - lr * gb1,
+        w2 - lr * g2,
+        b2 - lr * gb2,
+        loss,
+    )

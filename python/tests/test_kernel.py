@@ -1,0 +1,119 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps the kernel's shape space; assert_allclose against ref —
+this is the CORE correctness signal gating the AOT artifacts (the paper's
+§5.3 microbenchmark validation, here automated).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.matmul_tiled import matmul_tiled, vecadd
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---- Pallas tiled matmul vs ref ----
+
+@settings(max_examples=12, deadline=None)
+@given(
+    mi=st.integers(min_value=1, max_value=3),
+    ni=st.integers(min_value=1, max_value=3),
+    k=st.sampled_from([32, 64, 128, 256]),
+    tile=st.sampled_from([32, 64]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_matmul_tiled_matches_ref(mi, ni, k, tile, seed):
+    m, n = mi * tile, ni * tile
+    r = rng(seed)
+    a = jnp.asarray(r.standard_normal((m, k), dtype=np.float32))
+    b = jnp.asarray(r.standard_normal((k, n), dtype=np.float32))
+    got = matmul_tiled(a, b, tile=tile)
+    want = ref.matmul(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_tiled_rejects_unaligned():
+    a = jnp.zeros((100, 64), jnp.float32)
+    b = jnp.zeros((64, 128), jnp.float32)
+    with pytest.raises(AssertionError):
+        matmul_tiled(a, b, tile=64)
+
+
+def test_matmul_512_default_tile():
+    r = rng(7)
+    a = jnp.asarray(r.standard_normal((512, 512), dtype=np.float32))
+    b = jnp.asarray(r.standard_normal((512, 512), dtype=np.float32))
+    np.testing.assert_allclose(
+        matmul_tiled(a, b), ref.matmul(a, b), rtol=1e-3, atol=1e-3
+    )
+
+
+# ---- Pallas vecadd vs ref ----
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=4096),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_vecadd_matches_ref(n, seed):
+    r = rng(seed)
+    a = jnp.asarray(r.standard_normal(n, dtype=np.float32))
+    b = jnp.asarray(r.standard_normal(n, dtype=np.float32))
+    np.testing.assert_allclose(vecadd(a, b), ref.vecadd(a, b), rtol=1e-6)
+
+
+# ---- L2 model shapes & training behaviour ----
+
+def test_nn_layer_shape_and_relu():
+    from compile import model
+
+    r = rng(3)
+    x = jnp.asarray(r.standard_normal((model.LAYER_B, model.LAYER_D), dtype=np.float32))
+    w = jnp.asarray(r.standard_normal((model.LAYER_D, model.LAYER_H), dtype=np.float32))
+    b = jnp.asarray(r.standard_normal(model.LAYER_H, dtype=np.float32))
+    out = model.nn_layer(x, w, b)
+    assert out.shape == (model.LAYER_B, model.LAYER_H)
+    assert (np.asarray(out) >= 0).all(), "ReLU output must be non-negative"
+    np.testing.assert_allclose(out, ref.nn_layer(x, w, b), rtol=1e-4, atol=1e-4)
+
+
+def test_mlp_train_step_decreases_loss():
+    from compile import model
+
+    r = rng(11)
+    w1 = jnp.asarray(0.05 * r.standard_normal((model.MLP_D, model.MLP_H), dtype=np.float32))
+    b1 = jnp.zeros(model.MLP_H, jnp.float32)
+    w2 = jnp.asarray(0.05 * r.standard_normal(model.MLP_H, dtype=np.float32))
+    b2 = jnp.float32(0.0)
+    x = jnp.asarray(r.standard_normal((model.MLP_B, model.MLP_D), dtype=np.float32))
+    y = jnp.asarray(np.sin(np.asarray(x)[:, 0]).astype(np.float32))
+    step = jax.jit(model.mlp_train_step)
+    losses = []
+    for _ in range(20):
+        w1, b1, w2, b2, loss = step(w1, b1, w2, b2, x, y, jnp.float32(0.05))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.9, f"no learning: {losses[:3]} .. {losses[-3:]}"
+
+
+def test_grad_flows_through_pallas_kernel():
+    """jax.grad must differentiate through the interpret-mode Pallas call
+    (the backward pass of the train step depends on this)."""
+    from compile import model
+
+    r = rng(5)
+    w1 = jnp.asarray(0.1 * r.standard_normal((model.MLP_D, model.MLP_H), dtype=np.float32))
+    b1 = jnp.zeros(model.MLP_H, jnp.float32)
+    w2 = jnp.asarray(0.1 * r.standard_normal(model.MLP_H, dtype=np.float32))
+    b2 = jnp.float32(0.0)
+    x = jnp.asarray(r.standard_normal((model.MLP_B, model.MLP_D), dtype=np.float32))
+    y = jnp.zeros(model.MLP_B, jnp.float32)
+    g = jax.grad(model.mlp_loss)(w1, b1, w2, b2, x, y)
+    assert g.shape == w1.shape
+    assert float(jnp.abs(g).max()) > 0.0, "gradient through pallas_call is zero"

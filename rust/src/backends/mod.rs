@@ -1,0 +1,79 @@
+//! Backend translation modules: hetIR → device ISA (paper §4.1 "ISA
+//! Modules for Backends" and §5.1).
+//!
+//! These are the JIT components the runtime invokes on first launch of a
+//! kernel on a given device kind:
+//!
+//! * [`simt`] — the shared hetIR→SIMT translator, configured per vendor:
+//!   `nvidia()` (warp 32, all team ops native — the PTX path),
+//!   `amd()` (wave32/wave64, native team ops — the SPIR-V/RDNA path),
+//!   `intel()` (subgroup 16, **no** native 32-wide team ops: vote/ballot/
+//!   shuffle are legalized into shared-memory staging sequences with team
+//!   syncs — the paper's "using shared memory as a staging buffer").
+//! * [`tenstorrent`] — hetIR→Tensix translator with the three §4.4
+//!   mapping strategies (vector single-core, vector multi-core,
+//!   scalar MIMD), driven by the uniformity analysis.
+//!
+//! Every translator compiles in the cooperative checkpoint guard at each
+//! barrier when `TranslateOpts::migratable` is set, recording the
+//! virtual→device register mapping in a [`crate::isa::CkptSite`]. Barrier
+//! ids come from the hetIR segmenter, so all backends agree on suspension
+//! points — the invariant cross-architecture migration rests on.
+
+pub mod simt;
+pub mod tenstorrent;
+
+use crate::hetir::module::Kernel;
+use crate::isa::simt_isa::{SimtConfig, SimtProgram};
+use crate::isa::tensix_isa::{TensixMode, TensixProgram};
+use crate::Result;
+
+/// Translation options.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TranslateOpts {
+    /// Compile in checkpoint guards at barriers (paper's migration-friendly
+    /// build; off reproduces the pure-performance build of §6.2).
+    pub migratable: bool,
+}
+
+impl Default for TranslateOpts {
+    fn default() -> Self {
+        TranslateOpts { migratable: true }
+    }
+}
+
+/// A translated, device-specific program.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DeviceProgram {
+    Simt(SimtProgram),
+    Tensix(TensixProgram),
+}
+
+impl DeviceProgram {
+    pub fn inst_count(&self) -> usize {
+        match self {
+            DeviceProgram::Simt(p) => p.inst_count(),
+            DeviceProgram::Tensix(p) => p.inst_count(),
+        }
+    }
+    pub fn kernel_name(&self) -> &str {
+        match self {
+            DeviceProgram::Simt(p) => &p.kernel_name,
+            DeviceProgram::Tensix(p) => &p.kernel_name,
+        }
+    }
+}
+
+/// Translate `kernel` for a SIMT vendor configuration.
+pub fn translate_simt(kernel: &Kernel, cfg: &SimtConfig, opts: TranslateOpts) -> Result<SimtProgram> {
+    simt::translate(kernel, cfg, opts)
+}
+
+/// Translate `kernel` for the Tensix backend in the given mode.
+pub fn translate_tensix(
+    kernel: &Kernel,
+    mode: TensixMode,
+    opts: TranslateOpts,
+) -> Result<TensixProgram> {
+    tenstorrent::translate(kernel, mode, opts)
+}

@@ -1,0 +1,836 @@
+//! hetIR → SIMT ISA translator (the PTX / RDNA / Xe code-generation
+//! modules of paper §5.1, sharing one implementation parameterized by
+//! [`SimtConfig`]).
+//!
+//! Responsibilities:
+//! * virtual→device register assignment (1:1 for kernel registers, fresh
+//!   scratch registers for legalization sequences);
+//! * address legalization — 32-bit hetIR indices are widened to 64-bit
+//!   before entering address expressions, as a real backend must;
+//! * `GET_GLOBAL_ID` decomposition into `ctaid*ntid + tid` (the paper's
+//!   example of hetIR→PTX lowering);
+//! * **team-op legalization**: on hardware whose subgroup is narrower than
+//!   the 32-thread hetIR team (Intel), `SHFL`/`VOTE`/`BALLOT` become
+//!   shared-memory staging sequences bracketed by team syncs — the paper's
+//!   "using shared memory as a staging buffer if not natively supported";
+//! * checkpoint instrumentation: a `Ckpt` guard before every barrier
+//!   carrying the live-register mapping from the hetIR liveness pass.
+
+use crate::error::{HetError, Result};
+use crate::hetir::instr as hir;
+use crate::hetir::module::{Kernel, Stmt};
+use crate::hetir::types::{AddrSpace, Scalar, Value};
+use crate::hetir::verify;
+use crate::isa::simt_isa::*;
+use crate::isa::{CkptSite, DevLoc};
+use super::TranslateOpts;
+
+/// Bytes of staging space appended to shared memory for team-op
+/// legalization: 8 B per thread (shuffle values) + 8 B per subgroup slot
+/// (ballot partials), sized for the 1024-thread block maximum.
+const SHFL_STAGE_BYTES: u64 = 1024 * 8;
+const BALLOT_STAGE_BYTES: u64 = (1024 / 8) * 8; // ≥ 64 subgroup slots
+
+struct Tx<'a> {
+    k: &'a Kernel,
+    cfg: &'a SimtConfig,
+    opts: TranslateOpts,
+    blocks: Vec<Vec<SStmt>>,
+    next_reg: u32,
+    /// Offset of the legalization staging area within shared memory
+    /// (`None` when no staging is needed).
+    stage_base: Option<u64>,
+    ckpt_sites: Vec<CkptSite>,
+    /// Per-block cache of index registers already widened to 64 bits —
+    /// reusing the widened copy keeps address legalization near the
+    /// hand-tuned instruction count (perf pass, EXPERIMENTS.md §Perf).
+    widen_cache: std::collections::HashMap<hir::Reg, DReg>,
+}
+
+impl<'a> Tx<'a> {
+    fn dreg(&self, r: hir::Reg) -> DReg {
+        DReg(r.0)
+    }
+
+    fn scratch(&mut self) -> DReg {
+        let r = DReg(self.next_reg);
+        self.next_reg += 1;
+        r
+    }
+
+    fn op(&self, o: &hir::Operand) -> SOp {
+        match o {
+            hir::Operand::Reg(r) => SOp::Reg(self.dreg(*r)),
+            hir::Operand::Imm(v) => SOp::Imm(*v),
+        }
+    }
+
+    /// Legalize a hetIR address: indices narrower than 64 bits are widened
+    /// into a scratch register first (cached per block until the index
+    /// register is redefined).
+    fn addr(&mut self, out: &mut Vec<SStmt>, a: &hir::Address) -> SAddr {
+        let index = match a.index {
+            None => None,
+            Some(idx) => {
+                let ty = self.k.reg_ty(idx).scalar().expect("verified int index");
+                if ty.is_64() {
+                    Some(self.dreg(idx))
+                } else if let Some(w) = self.widen_cache.get(&idx) {
+                    Some(*w)
+                } else {
+                    let wide = self.scratch();
+                    let to = if ty.is_signed() { Scalar::I64 } else { Scalar::U64 };
+                    out.push(SStmt::I(SInst::Cvt {
+                        from: ty,
+                        to,
+                        dst: wide,
+                        src: SOp::Reg(self.dreg(idx)),
+                    }));
+                    self.widen_cache.insert(idx, wide);
+                    Some(wide)
+                }
+            }
+        };
+        SAddr { base: self.dreg(a.base), index, scale: a.scale, disp: a.disp }
+    }
+
+    /// Reserve the team-op staging area (idempotent) and return its base.
+    fn stage(&mut self) -> u64 {
+        if self.stage_base.is_none() {
+            // Staging sits after the kernel's own shared memory.
+            self.stage_base = Some((self.k.shared_bytes + 15) & !15);
+        }
+        self.stage_base.unwrap()
+    }
+
+    /// Emit `dst = LinearTid` plus a 64-bit copy, returning both.
+    fn linear_tid(&mut self, out: &mut Vec<SStmt>) -> (DReg, DReg) {
+        let ltid = self.scratch();
+        out.push(SStmt::I(SInst::Special { dst: ltid, kind: SSpecial::LinearTid }));
+        let ltid64 = self.scratch();
+        out.push(SStmt::I(SInst::Cvt {
+            from: Scalar::U32,
+            to: Scalar::U64,
+            dst: ltid64,
+            src: SOp::Reg(ltid),
+        }));
+        (ltid, ltid64)
+    }
+
+    /// Materialize a shared-space pointer register holding `addr`.
+    fn shared_ptr(&mut self, out: &mut Vec<SStmt>, addr: u64) -> DReg {
+        let r = self.scratch();
+        out.push(SStmt::I(SInst::Mov {
+            dst: r,
+            src: SOp::Imm(Value::ptr(addr, AddrSpace::Shared)),
+        }));
+        r
+    }
+
+    /// Legalized 32-wide ballot via subgroup ballots + SLM staging
+    /// (Intel path). Returns the register holding the 32-bit team mask.
+    fn ballot_staged(&mut self, out: &mut Vec<SStmt>, src: SOp) -> DReg {
+        let w = self.cfg.warp_width as u64; // < 32 on this path
+        let slots_per_team = (32 / w).max(1);
+        let stage = self.stage() + SHFL_STAGE_BYTES;
+        let sb = self.shared_ptr(out, stage);
+        // Subgroup-native ballot (w-wide).
+        let sub = self.scratch();
+        out.push(SStmt::I(SInst::Ballot { dst: sub, src }));
+        let (ltid, _) = self.linear_tid(out);
+        // slot index within the block = ltid / w
+        let slot = self.scratch();
+        out.push(SStmt::I(SInst::Bin {
+            op: hir::BinOp::Div,
+            ty: Scalar::U32,
+            dst: slot,
+            a: SOp::Reg(ltid),
+            b: SOp::Imm(Value::u32(w as u32)),
+        }));
+        let slot64 = self.scratch();
+        out.push(SStmt::I(SInst::Cvt {
+            from: Scalar::U32,
+            to: Scalar::U64,
+            dst: slot64,
+            src: SOp::Reg(slot),
+        }));
+        out.push(SStmt::I(SInst::St {
+            space: AddrSpace::Shared,
+            ty: Scalar::U64,
+            addr: SAddr { base: sb, index: Some(slot64), scale: 8, disp: 0 },
+            val: SOp::Reg(sub),
+        }));
+        out.push(SStmt::I(SInst::TeamSync));
+        // Combine the team's slots: team base slot = (ltid/32)*slots.
+        let team = self.scratch();
+        out.push(SStmt::I(SInst::Bin {
+            op: hir::BinOp::Div,
+            ty: Scalar::U32,
+            dst: team,
+            a: SOp::Reg(ltid),
+            b: SOp::Imm(Value::u32(32)),
+        }));
+        let base_slot = self.scratch();
+        out.push(SStmt::I(SInst::Bin {
+            op: hir::BinOp::Mul,
+            ty: Scalar::U32,
+            dst: base_slot,
+            a: SOp::Reg(team),
+            b: SOp::Imm(Value::u32(slots_per_team as u32)),
+        }));
+        let mask = self.scratch();
+        out.push(SStmt::I(SInst::Mov { dst: mask, src: SOp::Imm(Value::u32(0)) }));
+        for s in 0..slots_per_team {
+            let slot_i = self.scratch();
+            out.push(SStmt::I(SInst::Bin {
+                op: hir::BinOp::Add,
+                ty: Scalar::U32,
+                dst: slot_i,
+                a: SOp::Reg(base_slot),
+                b: SOp::Imm(Value::u32(s as u32)),
+            }));
+            let slot_i64 = self.scratch();
+            out.push(SStmt::I(SInst::Cvt {
+                from: Scalar::U32,
+                to: Scalar::U64,
+                dst: slot_i64,
+                src: SOp::Reg(slot_i),
+            }));
+            let part = self.scratch();
+            out.push(SStmt::I(SInst::Ld {
+                space: AddrSpace::Shared,
+                ty: Scalar::U64,
+                dst: part,
+                addr: SAddr { base: sb, index: Some(slot_i64), scale: 8, disp: 0 },
+            }));
+            let part32 = self.scratch();
+            out.push(SStmt::I(SInst::Cvt {
+                from: Scalar::U64,
+                to: Scalar::U32,
+                dst: part32,
+                src: SOp::Reg(part),
+            }));
+            let shifted = self.scratch();
+            out.push(SStmt::I(SInst::Bin {
+                op: hir::BinOp::Shl,
+                ty: Scalar::U32,
+                dst: shifted,
+                a: SOp::Reg(part32),
+                b: SOp::Imm(Value::u32((s * w) as u32)),
+            }));
+            out.push(SStmt::I(SInst::Bin {
+                op: hir::BinOp::Or,
+                ty: Scalar::U32,
+                dst: mask,
+                a: SOp::Reg(mask),
+                b: SOp::Reg(shifted),
+            }));
+        }
+        out.push(SStmt::I(SInst::TeamSync));
+        mask
+    }
+
+    /// Translate one hetIR instruction into the current block.
+    fn inst(&mut self, out: &mut Vec<SStmt>, i: &hir::Inst) -> Result<()> {
+        use hir::Inst as I;
+        match i {
+            I::Special { dst, kind } => {
+                let dst = self.dreg(*dst);
+                match kind {
+                    hir::SpecialReg::ThreadIdx(d) => {
+                        out.push(SStmt::I(SInst::Special { dst, kind: SSpecial::ThreadIdx(*d) }))
+                    }
+                    hir::SpecialReg::BlockIdx(d) => {
+                        out.push(SStmt::I(SInst::Special { dst, kind: SSpecial::BlockIdx(*d) }))
+                    }
+                    hir::SpecialReg::BlockDim(d) => {
+                        out.push(SStmt::I(SInst::Special { dst, kind: SSpecial::BlockDim(*d) }))
+                    }
+                    hir::SpecialReg::GridDim(d) => {
+                        out.push(SStmt::I(SInst::Special { dst, kind: SSpecial::GridDim(*d) }))
+                    }
+                    hir::SpecialReg::GlobalId(d) => {
+                        // ctaid*ntid + tid (paper §5.1's lowering example)
+                        let cta = self.scratch();
+                        let ntid = self.scratch();
+                        let tid = self.scratch();
+                        out.push(SStmt::I(SInst::Special { dst: cta, kind: SSpecial::BlockIdx(*d) }));
+                        out.push(SStmt::I(SInst::Special {
+                            dst: ntid,
+                            kind: SSpecial::BlockDim(*d),
+                        }));
+                        out.push(SStmt::I(SInst::Special { dst: tid, kind: SSpecial::ThreadIdx(*d) }));
+                        out.push(SStmt::I(SInst::Bin {
+                            op: hir::BinOp::Mul,
+                            ty: Scalar::U32,
+                            dst,
+                            a: SOp::Reg(cta),
+                            b: SOp::Reg(ntid),
+                        }));
+                        out.push(SStmt::I(SInst::Bin {
+                            op: hir::BinOp::Add,
+                            ty: Scalar::U32,
+                            dst,
+                            a: SOp::Reg(dst),
+                            b: SOp::Reg(tid),
+                        }));
+                    }
+                }
+            }
+            I::Mov { dst, src } => {
+                out.push(SStmt::I(SInst::Mov { dst: self.dreg(*dst), src: self.op(src) }))
+            }
+            I::Bin { op, ty, dst, a, b } => out.push(SStmt::I(SInst::Bin {
+                op: *op,
+                ty: *ty,
+                dst: self.dreg(*dst),
+                a: self.op(a),
+                b: self.op(b),
+            })),
+            I::Un { op, ty, dst, a } => out.push(SStmt::I(SInst::Un {
+                op: *op,
+                ty: *ty,
+                dst: self.dreg(*dst),
+                a: self.op(a),
+            })),
+            I::Fma { ty, dst, a, b, c } => out.push(SStmt::I(SInst::Fma {
+                ty: *ty,
+                dst: self.dreg(*dst),
+                a: self.op(a),
+                b: self.op(b),
+                c: self.op(c),
+            })),
+            I::Cmp { op, ty, dst, a, b } => out.push(SStmt::I(SInst::Cmp {
+                op: *op,
+                ty: *ty,
+                dst: self.dreg(*dst),
+                a: self.op(a),
+                b: self.op(b),
+            })),
+            I::Sel { dst, cond, a, b } => out.push(SStmt::I(SInst::Sel {
+                dst: self.dreg(*dst),
+                cond: self.op(cond),
+                a: self.op(a),
+                b: self.op(b),
+            })),
+            I::Cvt { from, to, dst, src } => out.push(SStmt::I(SInst::Cvt {
+                from: *from,
+                to: *to,
+                dst: self.dreg(*dst),
+                src: self.op(src),
+            })),
+            I::PtrAdd { dst, addr } => {
+                let a = self.addr(out, addr);
+                out.push(SStmt::I(SInst::PtrAdd { dst: self.dreg(*dst), addr: a }));
+            }
+            I::Ld { space, ty, dst, addr } => {
+                let a = self.addr(out, addr);
+                out.push(SStmt::I(SInst::Ld {
+                    space: *space,
+                    ty: *ty,
+                    dst: self.dreg(*dst),
+                    addr: a,
+                }));
+            }
+            I::St { space, ty, addr, val } => {
+                let a = self.addr(out, addr);
+                out.push(SStmt::I(SInst::St {
+                    space: *space,
+                    ty: *ty,
+                    addr: a,
+                    val: self.op(val),
+                }));
+            }
+            I::Atom { op, space, ty, dst, addr, val, val2 } => {
+                let a = self.addr(out, addr);
+                out.push(SStmt::I(SInst::Atom {
+                    op: *op,
+                    space: *space,
+                    ty: *ty,
+                    dst: dst.map(|d| self.dreg(d)),
+                    addr: a,
+                    val: self.op(val),
+                    val2: val2.as_ref().map(|v| self.op(v)),
+                }));
+            }
+            I::Bar { id } => {
+                if self.opts.migratable {
+                    let sp = self.k.suspension_point(*id).ok_or_else(|| {
+                        HetError::translate(self.cfg.name, format!("no liveness for barrier {id}"))
+                    })?;
+                    let site = CkptSite {
+                        barrier_id: *id,
+                        saves: sp
+                            .live_regs
+                            .iter()
+                            .map(|r| (*r, self.k.reg_ty(*r), DevLoc::SimtReg(r.0)))
+                            .collect(),
+                    };
+                    self.ckpt_sites.push(site.clone());
+                    out.push(SStmt::I(SInst::Ckpt { site }));
+                }
+                out.push(SStmt::I(SInst::BarSync { id: *id }));
+            }
+            I::Fence { scope } => out.push(SStmt::I(SInst::Fence { scope: *scope })),
+            I::Vote { kind, dst, src } => {
+                if self.cfg.native_vote {
+                    out.push(SStmt::I(SInst::Vote {
+                        kind: *kind,
+                        dst: self.dreg(*dst),
+                        src: self.op(src),
+                    }));
+                } else {
+                    // ANY(p) = ballot32(p) != 0; ALL(p) = ballot32(!p) == 0.
+                    let src_op = match kind {
+                        hir::VoteKind::Any => self.op(src),
+                        hir::VoteKind::All => {
+                            let notp = self.scratch();
+                            out.push(SStmt::I(SInst::Un {
+                                op: hir::UnOp::Not,
+                                ty: Scalar::Pred,
+                                dst: notp,
+                                a: self.op(src),
+                            }));
+                            SOp::Reg(notp)
+                        }
+                    };
+                    let mask = self.ballot_staged(out, src_op);
+                    let cmp = match kind {
+                        hir::VoteKind::Any => hir::CmpOp::Ne,
+                        hir::VoteKind::All => hir::CmpOp::Eq,
+                    };
+                    out.push(SStmt::I(SInst::Cmp {
+                        op: cmp,
+                        ty: Scalar::U32,
+                        dst: self.dreg(*dst),
+                        a: SOp::Reg(mask),
+                        b: SOp::Imm(Value::u32(0)),
+                    }));
+                }
+            }
+            I::Ballot { dst, src } => {
+                if self.cfg.native_vote && self.cfg.warp_width >= 32 {
+                    out.push(SStmt::I(SInst::Ballot { dst: self.dreg(*dst), src: self.op(src) }));
+                } else {
+                    let mask = self.ballot_staged(out, self.op(src));
+                    out.push(SStmt::I(SInst::Mov { dst: self.dreg(*dst), src: SOp::Reg(mask) }));
+                }
+            }
+            I::Shfl { kind, ty, dst, val, lane } => {
+                if self.cfg.native_shfl && self.cfg.warp_width >= 32 {
+                    out.push(SStmt::I(SInst::Shfl {
+                        kind: *kind,
+                        ty: *ty,
+                        dst: self.dreg(*dst),
+                        val: self.op(val),
+                        lane: self.op(lane),
+                    }));
+                } else {
+                    self.shfl_staged(out, *kind, *ty, *dst, val, lane)?;
+                }
+            }
+            I::Rng { dst, state } => out.push(SStmt::I(SInst::Rng {
+                dst: self.dreg(*dst),
+                state: self.dreg(*state),
+            })),
+            I::Trap { code } => out.push(SStmt::I(SInst::Trap { code: *code })),
+        }
+        Ok(())
+    }
+
+    /// SLM-staged shuffle for sub-team-width hardware.
+    fn shfl_staged(
+        &mut self,
+        out: &mut Vec<SStmt>,
+        kind: hir::ShflKind,
+        ty: Scalar,
+        dst: hir::Reg,
+        val: &hir::Operand,
+        lane: &hir::Operand,
+    ) -> Result<()> {
+        let stage = self.stage();
+        let sb = self.shared_ptr(out, stage);
+        let (ltid, ltid64) = self.linear_tid(out);
+        // Stage own value (as 64-bit slot).
+        out.push(SStmt::I(SInst::St {
+            space: AddrSpace::Shared,
+            ty,
+            addr: SAddr { base: sb, index: Some(ltid64), scale: 8, disp: 0 },
+            val: self.op(val),
+        }));
+        out.push(SStmt::I(SInst::TeamSync));
+        // team_lane = ltid & 31; team_start = ltid & !31
+        let team_lane = self.scratch();
+        out.push(SStmt::I(SInst::Bin {
+            op: hir::BinOp::And,
+            ty: Scalar::U32,
+            dst: team_lane,
+            a: SOp::Reg(ltid),
+            b: SOp::Imm(Value::u32(31)),
+        }));
+        let team_start = self.scratch();
+        out.push(SStmt::I(SInst::Bin {
+            op: hir::BinOp::And,
+            ty: Scalar::U32,
+            dst: team_start,
+            a: SOp::Reg(ltid),
+            b: SOp::Imm(Value::u32(!31)),
+        }));
+        // src lane per kind (u32 arithmetic; underflow wraps large).
+        let sel = self.op(lane);
+        let src = self.scratch();
+        let binop = |op, a, b| SStmt::I(SInst::Bin { op, ty: Scalar::U32, dst: src, a, b });
+        match kind {
+            hir::ShflKind::Idx => out.push(SStmt::I(SInst::Mov { dst: src, src: sel })),
+            hir::ShflKind::Down => out.push(binop(hir::BinOp::Add, SOp::Reg(team_lane), sel)),
+            hir::ShflKind::Up => out.push(binop(hir::BinOp::Sub, SOp::Reg(team_lane), sel)),
+            hir::ShflKind::Xor => out.push(binop(hir::BinOp::Xor, SOp::Reg(team_lane), sel)),
+        }
+        // Valid if src < team size (= min(32, block_size - team_start)).
+        let bs = self.block_size_reg(out);
+        let remaining = self.scratch();
+        out.push(SStmt::I(SInst::Bin {
+            op: hir::BinOp::Sub,
+            ty: Scalar::U32,
+            dst: remaining,
+            a: SOp::Reg(bs),
+            b: SOp::Reg(team_start),
+        }));
+        let team_n = self.scratch();
+        out.push(SStmt::I(SInst::Bin {
+            op: hir::BinOp::Min,
+            ty: Scalar::U32,
+            dst: team_n,
+            a: SOp::Reg(remaining),
+            b: SOp::Imm(Value::u32(32)),
+        }));
+        let valid = self.scratch();
+        out.push(SStmt::I(SInst::Cmp {
+            op: hir::CmpOp::Lt,
+            ty: Scalar::U32,
+            dst: valid,
+            a: SOp::Reg(src),
+            b: SOp::Reg(team_n),
+        }));
+        let sel_lane = self.scratch();
+        out.push(SStmt::I(SInst::Sel {
+            dst: sel_lane,
+            cond: SOp::Reg(valid),
+            a: SOp::Reg(src),
+            b: SOp::Reg(team_lane),
+        }));
+        // Load staged value from team_start + sel_lane.
+        let abs = self.scratch();
+        out.push(SStmt::I(SInst::Bin {
+            op: hir::BinOp::Add,
+            ty: Scalar::U32,
+            dst: abs,
+            a: SOp::Reg(team_start),
+            b: SOp::Reg(sel_lane),
+        }));
+        let abs64 = self.scratch();
+        out.push(SStmt::I(SInst::Cvt {
+            from: Scalar::U32,
+            to: Scalar::U64,
+            dst: abs64,
+            src: SOp::Reg(abs),
+        }));
+        out.push(SStmt::I(SInst::Ld {
+            space: AddrSpace::Shared,
+            ty,
+            dst: self.dreg(dst),
+            addr: SAddr { base: sb, index: Some(abs64), scale: 8, disp: 0 },
+        }));
+        out.push(SStmt::I(SInst::TeamSync));
+        Ok(())
+    }
+
+    /// Emit `block_size = ntid.x * ntid.y * ntid.z`.
+    fn block_size_reg(&mut self, out: &mut Vec<SStmt>) -> DReg {
+        let bs = self.scratch();
+        out.push(SStmt::I(SInst::Special { dst: bs, kind: SSpecial::BlockDim(hir::Dim::X) }));
+        for d in [hir::Dim::Y, hir::Dim::Z] {
+            let t = self.scratch();
+            out.push(SStmt::I(SInst::Special { dst: t, kind: SSpecial::BlockDim(d) }));
+            out.push(SStmt::I(SInst::Bin {
+                op: hir::BinOp::Mul,
+                ty: Scalar::U32,
+                dst: bs,
+                a: SOp::Reg(bs),
+                b: SOp::Reg(t),
+            }));
+        }
+        bs
+    }
+
+    /// Invalidate widen-cache entries after a structured region: registers
+    /// redefined inside it are stale, and if the region contains a barrier
+    /// the whole cache dies (resume may re-enter inside the region and skip
+    /// every prefix instruction, including cached Cvts).
+    fn invalidate_after_region(&mut self, regions: &[&[Stmt]]) {
+        let mut has_bar = false;
+        for blk in regions {
+            for st in *blk {
+                st.visit_insts(&mut |ii| {
+                    if matches!(ii, hir::Inst::Bar { .. }) {
+                        has_bar = true;
+                    }
+                    if let Some(d) = ii.def() {
+                        self.widen_cache.remove(&d);
+                    }
+                });
+            }
+        }
+        if has_bar {
+            self.widen_cache.clear();
+        }
+    }
+
+    /// Translate a statement list into a fresh arena block.
+    fn block(&mut self, stmts: &[Stmt]) -> Result<BlockId> {
+        // Widened-index reuse is valid only within one straight-line block.
+        let saved_cache = std::mem::take(&mut self.widen_cache);
+        let mut out = Vec::new();
+        for s in stmts {
+            match s {
+                Stmt::I(i) => {
+                    self.inst(&mut out, i)?;
+                    // A redefinition invalidates the cached widened copy.
+                    if let Some(d) = i.def() {
+                        self.widen_cache.remove(&d);
+                    }
+                    // CRITICAL for migration: a resumed kernel re-enters
+                    // just after a barrier, skipping every instruction
+                    // before it — cached widenings (scratch registers, not
+                    // part of the snapshot) must not survive across any
+                    // suspension point.
+                    if matches!(i, hir::Inst::Bar { .. }) {
+                        self.widen_cache.clear();
+                    }
+                }
+                Stmt::If { cond, then_b, else_b } => {
+                    let t = self.block(then_b)?;
+                    let e = self.block(else_b)?;
+                    self.invalidate_after_region(&[then_b, else_b]);
+                    out.push(SStmt::If { cond: self.dreg(*cond), then_b: t, else_b: e });
+                }
+                Stmt::While { cond, cond_reg, body } => {
+                    let c = self.block(cond)?;
+                    let b = self.block(body)?;
+                    self.invalidate_after_region(&[cond, body]);
+                    out.push(SStmt::Loop { cond: c, cond_reg: self.dreg(*cond_reg), body: b });
+                }
+                Stmt::Break => out.push(SStmt::Break),
+                Stmt::Continue => out.push(SStmt::Continue),
+                Stmt::Return => out.push(SStmt::Return),
+            }
+        }
+        self.widen_cache = saved_cache;
+        self.blocks.push(out);
+        Ok(self.blocks.len() - 1)
+    }
+}
+
+/// Translate a verified hetIR kernel to a SIMT program for `cfg`.
+pub fn translate(k: &Kernel, cfg: &SimtConfig, opts: TranslateOpts) -> Result<SimtProgram> {
+    verify::verify_kernel(k)?;
+    let mut tx = Tx {
+        k,
+        cfg,
+        opts,
+        blocks: Vec::new(),
+        next_reg: k.reg_types.len() as u32,
+        stage_base: None,
+        ckpt_sites: Vec::new(),
+        widen_cache: std::collections::HashMap::new(),
+    };
+    let entry = tx.block(&k.body)?;
+    let shared_bytes = match tx.stage_base {
+        Some(base) => base + SHFL_STAGE_BYTES + BALLOT_STAGE_BYTES,
+        None => k.shared_bytes,
+    };
+    let mut sites = tx.ckpt_sites;
+    sites.sort_by_key(|s| s.barrier_id);
+    sites.dedup_by_key(|s| s.barrier_id);
+    Ok(SimtProgram {
+        kernel_name: k.name.clone(),
+        blocks: tx.blocks,
+        entry,
+        num_regs: tx.next_reg,
+        shared_bytes,
+        num_params: k.params.len() as u32,
+        ckpt_sites: sites,
+        migratable: opts.migratable,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hetir::types::Type;
+    use crate::hetir::builder::KernelBuilder;
+    use crate::hetir::instr::*;
+    use crate::sim::mem::DeviceMemory;
+    use crate::sim::simt::{LaunchDims, SimtSim};
+    use std::sync::atomic::AtomicBool;
+
+    fn vadd_kernel() -> Kernel {
+        let mut b = KernelBuilder::new("vadd");
+        let a = b.param("A", Type::PTR_GLOBAL);
+        let bb = b.param("B", Type::PTR_GLOBAL);
+        let c = b.param("C", Type::PTR_GLOBAL);
+        let n = b.param("N", Type::U32);
+        let i = b.special(SpecialReg::GlobalId(Dim::X));
+        let p = b.cmp(CmpOp::Lt, Scalar::U32, i.into(), n.into());
+        b.if_(p, |b| {
+            let x = b.ld(AddrSpace::Global, Scalar::F32, Address::indexed(a, i, 4));
+            let y = b.ld(AddrSpace::Global, Scalar::F32, Address::indexed(bb, i, 4));
+            let s = b.bin(BinOp::Add, Scalar::F32, x.into(), y.into());
+            b.st(AddrSpace::Global, Scalar::F32, Address::indexed(c, i, 4), s.into());
+        });
+        b.finish()
+    }
+
+    fn run_on(cfg: SimtConfig, k: &Kernel, n: usize) -> Vec<f32> {
+        let p = translate(k, &cfg, TranslateOpts::default()).unwrap();
+        let sim = SimtSim::new(cfg);
+        let mut mem = DeviceMemory::new(1 << 20, "t");
+        for i in 0..n {
+            mem.store(i as u64 * 4, Scalar::F32, Value::f32(i as f32)).unwrap();
+            mem.store(65536 + i as u64 * 4, Scalar::F32, Value::f32(1000.0)).unwrap();
+        }
+        let params = [
+            Value::ptr(0, AddrSpace::Global),
+            Value::ptr(65536, AddrSpace::Global),
+            Value::ptr(131072, AddrSpace::Global),
+            Value::u32(n as u32),
+        ];
+        let pause = AtomicBool::new(false);
+        let blocks = (n as u32).div_ceil(128);
+        sim.run_grid(&p, LaunchDims::d1(blocks, 128), &params, &mut mem, &pause, None).unwrap();
+        (0..n)
+            .map(|i| mem.load(131072 + i as u64 * 4, Scalar::F32).unwrap().as_f32())
+            .collect()
+    }
+
+    #[test]
+    fn vadd_translates_and_runs_on_all_vendors() {
+        let k = vadd_kernel();
+        for cfg in [SimtConfig::nvidia(), SimtConfig::amd(), SimtConfig::amd_wave64(), SimtConfig::intel()]
+        {
+            let name = cfg.name;
+            let out = run_on(cfg, &k, 300);
+            for (i, v) in out.iter().enumerate() {
+                assert_eq!(*v, i as f32 + 1000.0, "elem {i} on {name}");
+            }
+        }
+    }
+
+    /// Ballot must agree between the native path (nvidia) and the staged
+    /// path (intel) — the paper's §5.3 "results matched" check.
+    #[test]
+    fn ballot_native_vs_staged_agree() {
+        let mut b = KernelBuilder::new("ballot");
+        let out = b.param("O", Type::PTR_GLOBAL);
+        let t = b.special(SpecialReg::ThreadIdx(Dim::X));
+        // pred: thread id divisible by 3
+        let r = b.bin(BinOp::Rem, Scalar::U32, t.into(), Operand::Imm(Value::u32(3)));
+        let p = b.cmp(CmpOp::Eq, Scalar::U32, r.into(), Operand::Imm(Value::u32(0)));
+        let m = b.ballot(p.into());
+        let t64 = b.cvt(Scalar::U32, Scalar::U64, t.into());
+        b.st(AddrSpace::Global, Scalar::U32, Address::indexed(out, t64, 4), m.into());
+        let k = b.finish();
+
+        let mut results = Vec::new();
+        for cfg in [SimtConfig::nvidia(), SimtConfig::intel()] {
+            let p = translate(&k, &cfg, TranslateOpts::default()).unwrap();
+            let sim = SimtSim::new(cfg);
+            let mut mem = DeviceMemory::new(1 << 16, "t");
+            let pause = AtomicBool::new(false);
+            sim.run_grid(
+                &p,
+                LaunchDims::d1(1, 64),
+                &[Value::ptr(0, AddrSpace::Global)],
+                &mut mem,
+                &pause,
+                None,
+            )
+            .unwrap();
+            let vals: Vec<u32> =
+                (0..64).map(|i| mem.load(i * 4, Scalar::U32).unwrap().as_u32()).collect();
+            results.push(vals);
+        }
+        assert_eq!(results[0], results[1], "native vs staged ballot mismatch");
+        // Expected: lanes 0,3,6,... of each 32-thread team set.
+        let mut expect = 0u32;
+        for l in (0..32).step_by(3) {
+            expect |= 1 << l;
+        }
+        assert_eq!(results[0][0], expect);
+    }
+
+    /// Shuffle-down must agree between native and staged paths.
+    #[test]
+    fn shfl_native_vs_staged_agree() {
+        let mut b = KernelBuilder::new("shfl");
+        let out = b.param("O", Type::PTR_GLOBAL);
+        let t = b.special(SpecialReg::ThreadIdx(Dim::X));
+        let tf = b.cvt(Scalar::U32, Scalar::F32, t.into());
+        let v = b.shfl(ShflKind::Down, Scalar::F32, tf.into(), Operand::Imm(Value::u32(1)));
+        let t64 = b.cvt(Scalar::U32, Scalar::U64, t.into());
+        b.st(AddrSpace::Global, Scalar::F32, Address::indexed(out, t64, 4), v.into());
+        let k = b.finish();
+
+        let mut results = Vec::new();
+        for cfg in [SimtConfig::nvidia(), SimtConfig::intel()] {
+            let p = translate(&k, &cfg, TranslateOpts::default()).unwrap();
+            let sim = SimtSim::new(cfg);
+            let mut mem = DeviceMemory::new(1 << 16, "t");
+            let pause = AtomicBool::new(false);
+            sim.run_grid(
+                &p,
+                LaunchDims::d1(1, 64),
+                &[Value::ptr(0, AddrSpace::Global)],
+                &mut mem,
+                &pause,
+                None,
+            )
+            .unwrap();
+            let vals: Vec<f32> =
+                (0..64).map(|i| mem.load(i * 4, Scalar::F32).unwrap().as_f32()).collect();
+            results.push(vals);
+        }
+        assert_eq!(results[0], results[1], "native vs staged shfl mismatch");
+        // Lane 0 reads lane 1's value (= 1.0); lane 31 clamps to itself.
+        assert_eq!(results[0][0], 1.0);
+        assert_eq!(results[0][31], 31.0);
+        assert_eq!(results[0][32], 33.0);
+    }
+
+    #[test]
+    fn barrier_gets_ckpt_when_migratable() {
+        let mut b = KernelBuilder::new("k");
+        let _n = b.param("N", Type::U32);
+        b.bar();
+        let k = b.finish();
+        let p = translate(&k, &SimtConfig::nvidia(), TranslateOpts { migratable: true }).unwrap();
+        assert_eq!(p.ckpt_sites.len(), 1);
+        let has_ckpt = p.blocks.iter().flatten().any(|s| matches!(s, SStmt::I(SInst::Ckpt { .. })));
+        assert!(has_ckpt);
+        let p2 = translate(&k, &SimtConfig::nvidia(), TranslateOpts { migratable: false }).unwrap();
+        assert!(p2.ckpt_sites.is_empty());
+        assert!(!p2
+            .blocks
+            .iter()
+            .flatten()
+            .any(|s| matches!(s, SStmt::I(SInst::Ckpt { .. }))));
+    }
+
+    #[test]
+    fn rejects_unverified_kernel() {
+        let mut b = KernelBuilder::new("bad");
+        b.brk(); // break outside loop
+        let k = b.finish();
+        assert!(translate(&k, &SimtConfig::nvidia(), TranslateOpts::default()).is_err());
+    }
+}

@@ -1,0 +1,1215 @@
+//! hetIR → Tensix (Metalium-like) translator — the paper's §5.1
+//! "Tenstorrent/Metalium" code-generation module.
+//!
+//! Driven by the hetIR **uniformity analysis**: block-uniform values go to
+//! scalar registers and take real branches; varying values go to 32-lane
+//! vector registers with mask-based divergence. Three §4.4 strategies:
+//!
+//! * **VectorSingleCore** — a ≤32-thread block is one core's vector unit;
+//!   shared memory is a scratchpad slice; barriers degenerate to one-core
+//!   mesh barriers.
+//! * **VectorMultiCore** — each core takes a 32-thread slice; shared
+//!   memory moves to a global-DRAM region; divergent control flow runs the
+//!   paper's **agreement protocol**: a mesh vote per side decides whether
+//!   the group executes it, and divergent loops iterate collectively until
+//!   no core has live lanes.
+//! * **ScalarMimd** — each thread compiles to a pure scalar program
+//!   (barrier/team-op/shared-free kernels only); divergence costs nothing
+//!   beyond a branch, which is why irregular kernels prefer this mode.
+
+use super::TranslateOpts;
+use crate::error::{HetError, Result};
+use crate::hetir::instr as hir;
+use crate::hetir::module::{Kernel, Stmt};
+use crate::hetir::passes::uniformity::{self, Uniformity};
+use crate::hetir::types::{AddrSpace, Scalar, Value};
+use crate::hetir::verify;
+use crate::isa::tensix_isa::*;
+use crate::isa::{CkptSite, DevLoc};
+
+/// Where a hetIR register was placed.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Loc {
+    S(SR),
+    V(VR),
+}
+
+struct Ttx<'a> {
+    k: &'a Kernel,
+    mode: TensixMode,
+    opts: TranslateOpts,
+    uni: Uniformity,
+    blocks: Vec<Vec<TStmt>>,
+    loc: Vec<Loc>,
+    next_sr: u16,
+    next_vr: u16,
+    shared_base: SR,
+    ckpt_sites: Vec<CkptSite>,
+    name: &'static str,
+    /// Depth of divergent control around the current translation point
+    /// (scalar-store eligibility, protocol emission decisions).
+    div_depth: usize,
+}
+
+impl<'a> Ttx<'a> {
+    fn sr(&mut self) -> SR {
+        let r = SR(self.next_sr);
+        self.next_sr += 1;
+        r
+    }
+    fn vr(&mut self) -> VR {
+        let r = VR(self.next_vr);
+        self.next_vr += 1;
+        r
+    }
+
+    fn loc(&self, r: hir::Reg) -> Loc {
+        self.loc[r.0 as usize]
+    }
+
+    fn err(&self, msg: impl Into<String>) -> HetError {
+        HetError::translate(self.name, msg.into())
+    }
+
+    /// Scalar operand from a hetIR operand (must be uniform).
+    fn so(&self, o: &hir::Operand) -> Result<So> {
+        Ok(match o {
+            hir::Operand::Imm(v) => So::Imm(*v),
+            hir::Operand::Reg(r) => match self.loc(*r) {
+                Loc::S(s) => So::Reg(s),
+                Loc::V(_) => return Err(self.err(format!("varying operand {r} in scalar ctx"))),
+            },
+        })
+    }
+
+    /// Vector operand from a hetIR operand (splatting uniforms).
+    fn vo(&self, o: &hir::Operand) -> Vo {
+        match o {
+            hir::Operand::Imm(v) => Vo::Imm(*v),
+            hir::Operand::Reg(r) => match self.loc(*r) {
+                Loc::S(s) => Vo::Splat(s),
+                Loc::V(v) => Vo::Reg(v),
+            },
+        }
+    }
+
+    /// Widen a uniform integer register to 64 bits (scratch SR).
+    fn widen_s(&mut self, out: &mut Vec<TStmt>, r: hir::Reg) -> Result<SR> {
+        let ty = self.k.reg_ty(r).scalar().ok_or_else(|| self.err("pointer index"))?;
+        let s = match self.loc(r) {
+            Loc::S(s) => s,
+            Loc::V(_) => return Err(self.err("varying index in scalar address")),
+        };
+        if ty.is_64() {
+            return Ok(s);
+        }
+        let w = self.sr();
+        let to = if ty.is_signed() { Scalar::I64 } else { Scalar::U64 };
+        out.push(TStmt::I(TInst::SCvt { from: ty, to, dst: w, src: So::Reg(s) }));
+        Ok(w)
+    }
+
+    /// Widen any integer operand to a 64-bit vector register.
+    fn widen_v(&mut self, out: &mut Vec<TStmt>, r: hir::Reg) -> Result<VR> {
+        let ty = self.k.reg_ty(r).scalar().ok_or_else(|| self.err("pointer index"))?;
+        let to = if ty.is_signed() { Scalar::I64 } else { Scalar::U64 };
+        let src = match self.loc(r) {
+            Loc::S(s) => Vo::Splat(s),
+            Loc::V(v) => Vo::Reg(v),
+        };
+        let w = self.vr();
+        if ty.is_64() {
+            out.push(TStmt::I(TInst::VMov { dst: w, src }));
+        } else {
+            out.push(TStmt::I(TInst::VCvt { from: ty, to, dst: w, src }));
+        }
+        Ok(w)
+    }
+
+    /// Is a hetIR address uniform (base and index both uniform)?
+    fn addr_uniform(&self, a: &hir::Address) -> bool {
+        self.uni.is_uniform(a.base) && a.index.map_or(true, |i| self.uni.is_uniform(i))
+    }
+
+    /// Lower a uniform hetIR address to a scalar `TAddr`.
+    fn taddr(&mut self, out: &mut Vec<TStmt>, a: &hir::Address) -> Result<TAddr> {
+        let base = match self.loc(a.base) {
+            Loc::S(s) => s,
+            Loc::V(_) => return Err(self.err("varying base in scalar address")),
+        };
+        let index = match a.index {
+            None => None,
+            Some(i) => Some(self.widen_s(out, i)?),
+        };
+        Ok(TAddr { base, index, scale: a.scale, disp: a.disp })
+    }
+
+    /// Lower a (possibly varying) hetIR address to `(base SR, per-lane
+    /// 64-bit byte-offset VR)` suitable for gather/scatter: the effective
+    /// address is `base + off[lane]`.
+    fn vaddr(&mut self, out: &mut Vec<TStmt>, a: &hir::Address) -> Result<(SR, VR)> {
+        // off = index*scale + disp, then if base varying, off += base and
+        // the scalar base becomes 0.
+        let off = self.vr();
+        match a.index {
+            Some(i) => {
+                let wi = self.widen_v(out, i)?;
+                out.push(TStmt::I(TInst::VBin {
+                    op: hir::BinOp::Mul,
+                    ty: Scalar::U64,
+                    dst: off,
+                    a: Vo::Reg(wi),
+                    b: Vo::Imm(Value::u64(a.scale as u64)),
+                }));
+                if a.disp != 0 {
+                    out.push(TStmt::I(TInst::VBin {
+                        op: hir::BinOp::Add,
+                        ty: Scalar::U64,
+                        dst: off,
+                        a: Vo::Reg(off),
+                        b: Vo::Imm(Value::u64(a.disp as u64)),
+                    }));
+                }
+            }
+            None => {
+                out.push(TStmt::I(TInst::VMov {
+                    dst: off,
+                    src: Vo::Imm(Value::u64(a.disp as u64)),
+                }));
+            }
+        }
+        let base = match self.loc(a.base) {
+            Loc::S(s) => s,
+            Loc::V(v) => {
+                out.push(TStmt::I(TInst::VBin {
+                    op: hir::BinOp::Add,
+                    ty: Scalar::U64,
+                    dst: off,
+                    a: Vo::Reg(off),
+                    b: Vo::Reg(v),
+                }));
+                // Base folded into the offsets; use the zero scalar.
+                let z = self.sr();
+                out.push(TStmt::I(TInst::SMov { dst: z, src: So::Imm(Value::u64(0)) }));
+                z
+            }
+        };
+        Ok((base, off))
+    }
+
+    /// For shared-memory ops the hetIR pointer value is an *offset* into
+    /// the block's shared space; rebase it onto `shared_base`. Returns a
+    /// scalar `TAddr` when fully uniform, otherwise a vector offset pair.
+    fn shared_taddr(&mut self, out: &mut Vec<TStmt>, a: &hir::Address) -> Result<TAddr> {
+        // combined = ptr_offset + idx*scale + disp, as scalar arithmetic.
+        let ptr = match self.loc(a.base) {
+            Loc::S(s) => s,
+            Loc::V(_) => return Err(self.err("varying base in uniform shared address")),
+        };
+        let off = self.sr();
+        match a.index {
+            Some(i) => {
+                let wi = self.widen_s(out, i)?;
+                out.push(TStmt::I(TInst::SBin {
+                    op: hir::BinOp::Mul,
+                    ty: Scalar::U64,
+                    dst: off,
+                    a: So::Reg(wi),
+                    b: So::Imm(Value::u64(a.scale as u64)),
+                }));
+                out.push(TStmt::I(TInst::SBin {
+                    op: hir::BinOp::Add,
+                    ty: Scalar::U64,
+                    dst: off,
+                    a: So::Reg(off),
+                    b: So::Reg(ptr),
+                }));
+            }
+            None => {
+                out.push(TStmt::I(TInst::SMov { dst: off, src: So::Reg(ptr) }));
+            }
+        }
+        Ok(TAddr { base: self.shared_base, index: Some(off), scale: 1, disp: a.disp })
+    }
+
+    /// Vector shared-memory offsets rebased onto `shared_base`.
+    fn shared_vaddr(&mut self, out: &mut Vec<TStmt>, a: &hir::Address) -> Result<(SR, VR)> {
+        let off = self.vr();
+        match a.index {
+            Some(i) => {
+                let wi = self.widen_v(out, i)?;
+                out.push(TStmt::I(TInst::VBin {
+                    op: hir::BinOp::Mul,
+                    ty: Scalar::U64,
+                    dst: off,
+                    a: Vo::Reg(wi),
+                    b: Vo::Imm(Value::u64(a.scale as u64)),
+                }));
+            }
+            None => out.push(TStmt::I(TInst::VMov { dst: off, src: Vo::Imm(Value::u64(0)) })),
+        }
+        // add the pointer offset (uniform or varying)
+        let ptr_vo = match self.loc(a.base) {
+            Loc::S(s) => Vo::Splat(s),
+            Loc::V(v) => Vo::Reg(v),
+        };
+        out.push(TStmt::I(TInst::VBin {
+            op: hir::BinOp::Add,
+            ty: Scalar::U64,
+            dst: off,
+            a: Vo::Reg(off),
+            b: ptr_vo,
+        }));
+        if a.disp != 0 {
+            out.push(TStmt::I(TInst::VBin {
+                op: hir::BinOp::Add,
+                ty: Scalar::U64,
+                dst: off,
+                a: Vo::Reg(off),
+                b: Vo::Imm(Value::u64(a.disp as u64)),
+            }));
+        }
+        Ok((self.shared_base, off))
+    }
+
+    /// Emit the per-thread linear id as a vector register (vector modes).
+    fn linear_tid_v(&mut self, out: &mut Vec<TStmt>) -> VR {
+        let lane = self.vr();
+        out.push(TStmt::I(TInst::VLaneId { dst: lane }));
+        let slot = self.sr();
+        out.push(TStmt::I(TInst::SSpecial { dst: slot, kind: TSpecial::CoreSlot }));
+        let base = self.sr();
+        out.push(TStmt::I(TInst::SBin {
+            op: hir::BinOp::Mul,
+            ty: Scalar::U32,
+            dst: base,
+            a: So::Reg(slot),
+            b: So::Imm(Value::u32(32)),
+        }));
+        let lin = self.vr();
+        out.push(TStmt::I(TInst::VBin {
+            op: hir::BinOp::Add,
+            ty: Scalar::U32,
+            dst: lin,
+            a: Vo::Reg(lane),
+            b: Vo::Splat(base),
+        }));
+        lin
+    }
+
+    /// threadIdx.<d> as a vector register (vector modes).
+    fn thread_idx_v(&mut self, out: &mut Vec<TStmt>, d: hir::Dim) -> VR {
+        let lin = self.linear_tid_v(out);
+        let bdx = self.sr();
+        out.push(TStmt::I(TInst::SSpecial { dst: bdx, kind: TSpecial::BlockDim(hir::Dim::X) }));
+        match d {
+            hir::Dim::X => {
+                let t = self.vr();
+                out.push(TStmt::I(TInst::VBin {
+                    op: hir::BinOp::Rem,
+                    ty: Scalar::U32,
+                    dst: t,
+                    a: Vo::Reg(lin),
+                    b: Vo::Splat(bdx),
+                }));
+                t
+            }
+            hir::Dim::Y => {
+                let bdy = self.sr();
+                out.push(TStmt::I(TInst::SSpecial {
+                    dst: bdy,
+                    kind: TSpecial::BlockDim(hir::Dim::Y),
+                }));
+                let q = self.vr();
+                out.push(TStmt::I(TInst::VBin {
+                    op: hir::BinOp::Div,
+                    ty: Scalar::U32,
+                    dst: q,
+                    a: Vo::Reg(lin),
+                    b: Vo::Splat(bdx),
+                }));
+                let t = self.vr();
+                out.push(TStmt::I(TInst::VBin {
+                    op: hir::BinOp::Rem,
+                    ty: Scalar::U32,
+                    dst: t,
+                    a: Vo::Reg(q),
+                    b: Vo::Splat(bdy),
+                }));
+                t
+            }
+            hir::Dim::Z => {
+                let bdy = self.sr();
+                out.push(TStmt::I(TInst::SSpecial {
+                    dst: bdy,
+                    kind: TSpecial::BlockDim(hir::Dim::Y),
+                }));
+                let plane = self.sr();
+                out.push(TStmt::I(TInst::SBin {
+                    op: hir::BinOp::Mul,
+                    ty: Scalar::U32,
+                    dst: plane,
+                    a: So::Reg(bdx),
+                    b: So::Reg(bdy),
+                }));
+                let t = self.vr();
+                out.push(TStmt::I(TInst::VBin {
+                    op: hir::BinOp::Div,
+                    ty: Scalar::U32,
+                    dst: t,
+                    a: Vo::Reg(lin),
+                    b: Vo::Splat(plane),
+                }));
+                t
+            }
+        }
+    }
+
+    fn is_mimd(&self) -> bool {
+        self.mode == TensixMode::ScalarMimd
+    }
+
+    /// Translate one instruction into `out`.
+    fn inst(&mut self, out: &mut Vec<TStmt>, i: &hir::Inst) -> Result<()> {
+        use hir::Inst as I;
+        match i {
+            I::Special { dst, kind } => {
+                let dst_loc = self.loc(*dst);
+                match (kind, dst_loc) {
+                    (hir::SpecialReg::BlockIdx(d), Loc::S(s)) => out.push(TStmt::I(
+                        TInst::SSpecial { dst: s, kind: TSpecial::BlockIdx(*d) },
+                    )),
+                    (hir::SpecialReg::BlockDim(d), Loc::S(s)) => out.push(TStmt::I(
+                        TInst::SSpecial { dst: s, kind: TSpecial::BlockDim(*d) },
+                    )),
+                    (hir::SpecialReg::GridDim(d), Loc::S(s)) => out.push(TStmt::I(
+                        TInst::SSpecial { dst: s, kind: TSpecial::GridDim(*d) },
+                    )),
+                    (hir::SpecialReg::ThreadIdx(d), loc) => {
+                        if self.is_mimd() {
+                            let s = match loc {
+                                Loc::S(s) => s,
+                                Loc::V(_) => return Err(self.err("vector reg in MIMD")),
+                            };
+                            out.push(TStmt::I(TInst::SSpecial {
+                                dst: s,
+                                kind: TSpecial::MimdThread(*d),
+                            }));
+                        } else {
+                            let v = match loc {
+                                Loc::V(v) => v,
+                                Loc::S(_) => return Err(self.err("threadIdx must be varying")),
+                            };
+                            let t = self.thread_idx_v(out, *d);
+                            out.push(TStmt::I(TInst::VMov { dst: v, src: Vo::Reg(t) }));
+                        }
+                    }
+                    (hir::SpecialReg::GlobalId(d), loc) => {
+                        // ctaid*ntid (uniform) + tid (varying or MIMD-scalar)
+                        let cta = self.sr();
+                        out.push(TStmt::I(TInst::SSpecial {
+                            dst: cta,
+                            kind: TSpecial::BlockIdx(*d),
+                        }));
+                        let ntid = self.sr();
+                        out.push(TStmt::I(TInst::SSpecial {
+                            dst: ntid,
+                            kind: TSpecial::BlockDim(*d),
+                        }));
+                        let base = self.sr();
+                        out.push(TStmt::I(TInst::SBin {
+                            op: hir::BinOp::Mul,
+                            ty: Scalar::U32,
+                            dst: base,
+                            a: So::Reg(cta),
+                            b: So::Reg(ntid),
+                        }));
+                        if self.is_mimd() {
+                            let s = match loc {
+                                Loc::S(s) => s,
+                                Loc::V(_) => return Err(self.err("vector reg in MIMD")),
+                            };
+                            let t = self.sr();
+                            out.push(TStmt::I(TInst::SSpecial {
+                                dst: t,
+                                kind: TSpecial::MimdThread(*d),
+                            }));
+                            out.push(TStmt::I(TInst::SBin {
+                                op: hir::BinOp::Add,
+                                ty: Scalar::U32,
+                                dst: s,
+                                a: So::Reg(base),
+                                b: So::Reg(t),
+                            }));
+                        } else {
+                            let v = match loc {
+                                Loc::V(v) => v,
+                                Loc::S(_) => return Err(self.err("global id must be varying")),
+                            };
+                            let t = self.thread_idx_v(out, *d);
+                            out.push(TStmt::I(TInst::VBin {
+                                op: hir::BinOp::Add,
+                                ty: Scalar::U32,
+                                dst: v,
+                                a: Vo::Reg(t),
+                                b: Vo::Splat(base),
+                            }));
+                        }
+                    }
+                    (k, l) => {
+                        return Err(self.err(format!("special {k:?} with location {l:?}")))
+                    }
+                }
+            }
+            I::Mov { dst, src } => match self.loc(*dst) {
+                Loc::S(s) => out.push(TStmt::I(TInst::SMov { dst: s, src: self.so(src)? })),
+                Loc::V(v) => out.push(TStmt::I(TInst::VMov { dst: v, src: self.vo(src) })),
+            },
+            I::Bin { op, ty, dst, a, b } => match self.loc(*dst) {
+                Loc::S(s) => out.push(TStmt::I(TInst::SBin {
+                    op: *op,
+                    ty: *ty,
+                    dst: s,
+                    a: self.so(a)?,
+                    b: self.so(b)?,
+                })),
+                Loc::V(v) => out.push(TStmt::I(TInst::VBin {
+                    op: *op,
+                    ty: *ty,
+                    dst: v,
+                    a: self.vo(a),
+                    b: self.vo(b),
+                })),
+            },
+            I::Un { op, ty, dst, a } => match self.loc(*dst) {
+                Loc::S(s) => out.push(TStmt::I(TInst::SUn {
+                    op: *op,
+                    ty: *ty,
+                    dst: s,
+                    a: self.so(a)?,
+                })),
+                Loc::V(v) => out.push(TStmt::I(TInst::VUn {
+                    op: *op,
+                    ty: *ty,
+                    dst: v,
+                    a: self.vo(a),
+                })),
+            },
+            I::Fma { ty, dst, a, b, c } => match self.loc(*dst) {
+                Loc::S(s) => out.push(TStmt::I(TInst::SFma {
+                    ty: *ty,
+                    dst: s,
+                    a: self.so(a)?,
+                    b: self.so(b)?,
+                    c: self.so(c)?,
+                })),
+                Loc::V(v) => out.push(TStmt::I(TInst::VFma {
+                    ty: *ty,
+                    dst: v,
+                    a: self.vo(a),
+                    b: self.vo(b),
+                    c: self.vo(c),
+                })),
+            },
+            I::Cmp { op, ty, dst, a, b } => match self.loc(*dst) {
+                Loc::S(s) => out.push(TStmt::I(TInst::SCmp {
+                    op: *op,
+                    ty: *ty,
+                    dst: s,
+                    a: self.so(a)?,
+                    b: self.so(b)?,
+                })),
+                Loc::V(v) => out.push(TStmt::I(TInst::VCmp {
+                    op: *op,
+                    ty: *ty,
+                    dst: v,
+                    a: self.vo(a),
+                    b: self.vo(b),
+                })),
+            },
+            I::Sel { dst, cond, a, b } => match self.loc(*dst) {
+                Loc::S(s) => out.push(TStmt::I(TInst::SSel {
+                    dst: s,
+                    cond: self.so(cond)?,
+                    a: self.so(a)?,
+                    b: self.so(b)?,
+                })),
+                Loc::V(v) => out.push(TStmt::I(TInst::VSel {
+                    dst: v,
+                    cond: self.vo(cond),
+                    a: self.vo(a),
+                    b: self.vo(b),
+                })),
+            },
+            I::Cvt { from, to, dst, src } => match self.loc(*dst) {
+                Loc::S(s) => out.push(TStmt::I(TInst::SCvt {
+                    from: *from,
+                    to: *to,
+                    dst: s,
+                    src: self.so(src)?,
+                })),
+                Loc::V(v) => out.push(TStmt::I(TInst::VCvt {
+                    from: *from,
+                    to: *to,
+                    dst: v,
+                    src: self.vo(src),
+                })),
+            },
+            I::PtrAdd { dst, addr } => match self.loc(*dst) {
+                Loc::S(s) => {
+                    // Effective scalar address computed through SBin ops.
+                    let ta = self.taddr(out, addr)?;
+                    // dst = base + index*scale + disp
+                    match ta.index {
+                        Some(idx) => {
+                            out.push(TStmt::I(TInst::SBin {
+                                op: hir::BinOp::Mul,
+                                ty: Scalar::U64,
+                                dst: s,
+                                a: So::Reg(idx),
+                                b: So::Imm(Value::u64(ta.scale as u64)),
+                            }));
+                            out.push(TStmt::I(TInst::SBin {
+                                op: hir::BinOp::Add,
+                                ty: Scalar::U64,
+                                dst: s,
+                                a: So::Reg(s),
+                                b: So::Reg(ta.base),
+                            }));
+                        }
+                        None => {
+                            out.push(TStmt::I(TInst::SMov { dst: s, src: So::Reg(ta.base) }))
+                        }
+                    }
+                    if ta.disp != 0 {
+                        out.push(TStmt::I(TInst::SBin {
+                            op: hir::BinOp::Add,
+                            ty: Scalar::U64,
+                            dst: s,
+                            a: So::Reg(s),
+                            b: So::Imm(Value::u64(ta.disp as u64)),
+                        }));
+                    }
+                }
+                Loc::V(v) => {
+                    let (base, off) = self.vaddr(out, addr)?;
+                    out.push(TStmt::I(TInst::VBin {
+                        op: hir::BinOp::Add,
+                        ty: Scalar::U64,
+                        dst: v,
+                        a: Vo::Reg(off),
+                        b: Vo::Splat(base),
+                    }));
+                }
+            },
+            I::Ld { space, ty, dst, addr } => match (space, self.loc(*dst)) {
+                (AddrSpace::Global, Loc::S(s)) => {
+                    let ta = self.taddr(out, addr)?;
+                    out.push(TStmt::I(TInst::SDmaLd { ty: *ty, dst: s, addr: ta }));
+                }
+                (AddrSpace::Global, Loc::V(v)) => {
+                    let (base, off) = self.vaddr(out, addr)?;
+                    out.push(TStmt::I(TInst::VDmaGather {
+                        ty: *ty,
+                        dst: v,
+                        base,
+                        idx: Some(off),
+                        scale: 1,
+                        disp: 0,
+                    }));
+                }
+                (AddrSpace::Shared, loc) => {
+                    if self.is_mimd() {
+                        return Err(self.err("shared memory unsupported in MIMD mode"));
+                    }
+                    let local = self.mode == TensixMode::VectorSingleCore;
+                    match loc {
+                        Loc::S(s) if self.addr_uniform(addr) => {
+                            let ta = self.shared_taddr(out, addr)?;
+                            out.push(TStmt::I(if local {
+                                TInst::SLdLocal { ty: *ty, dst: s, addr: ta }
+                            } else {
+                                TInst::SDmaLd { ty: *ty, dst: s, addr: ta }
+                            }));
+                        }
+                        Loc::S(_) => return Err(self.err("uniform load from varying address")),
+                        Loc::V(v) => {
+                            let (base, off) = self.shared_vaddr(out, addr)?;
+                            out.push(TStmt::I(if local {
+                                TInst::VLdLocal {
+                                    ty: *ty,
+                                    dst: v,
+                                    base,
+                                    idx: Some(off),
+                                    scale: 1,
+                                    disp: 0,
+                                }
+                            } else {
+                                TInst::VDmaGather {
+                                    ty: *ty,
+                                    dst: v,
+                                    base,
+                                    idx: Some(off),
+                                    scale: 1,
+                                    disp: 0,
+                                }
+                            }));
+                        }
+                    }
+                }
+            },
+            I::St { space, ty, addr, val } => match space {
+                AddrSpace::Global => {
+                    if self.addr_uniform(addr)
+                        && val.reg().map_or(true, |r| self.uni.is_uniform(r))
+                        && !self.under_divergence()
+                    {
+                        let ta = self.taddr(out, addr)?;
+                        out.push(TStmt::I(TInst::SDmaSt { ty: *ty, addr: ta, val: self.so(val)? }));
+                    } else {
+                        let (base, off) = self.vaddr(out, addr)?;
+                        out.push(TStmt::I(TInst::VDmaScatter {
+                            ty: *ty,
+                            base,
+                            idx: Some(off),
+                            scale: 1,
+                            disp: 0,
+                            val: self.vo(val),
+                        }));
+                    }
+                }
+                AddrSpace::Shared => {
+                    if self.is_mimd() {
+                        return Err(self.err("shared memory unsupported in MIMD mode"));
+                    }
+                    let local = self.mode == TensixMode::VectorSingleCore;
+                    let (base, off) = self.shared_vaddr(out, addr)?;
+                    out.push(TStmt::I(if local {
+                        TInst::VStLocal {
+                            ty: *ty,
+                            base,
+                            idx: Some(off),
+                            scale: 1,
+                            disp: 0,
+                            val: self.vo(val),
+                        }
+                    } else {
+                        TInst::VDmaScatter {
+                            ty: *ty,
+                            base,
+                            idx: Some(off),
+                            scale: 1,
+                            disp: 0,
+                            val: self.vo(val),
+                        }
+                    }));
+                }
+            },
+            I::Atom { op, space, ty, dst, addr, val, val2 } => {
+                if self.is_mimd() {
+                    // Whole thread is scalar: scalar DMA RMW.
+                    if *space == AddrSpace::Shared {
+                        return Err(self.err("shared atomics unsupported in MIMD mode"));
+                    }
+                    let ta = self.taddr(out, addr)?;
+                    let d = match dst {
+                        Some(d) => Some(match self.loc(*d) {
+                            Loc::S(s) => s,
+                            Loc::V(_) => return Err(self.err("vector reg in MIMD")),
+                        }),
+                        None => None,
+                    };
+                    let v2 = match val2 {
+                        Some(v) => Some(self.so(v)?),
+                        None => None,
+                    };
+                    out.push(TStmt::I(TInst::SAtom {
+                        op: *op,
+                        ty: *ty,
+                        dst: d,
+                        addr: ta,
+                        val: self.so(val)?,
+                        val2: v2,
+                    }));
+                } else {
+                    // Every thread participates: per-lane serialized RMW.
+                    let local = *space == AddrSpace::Shared
+                        && self.mode == TensixMode::VectorSingleCore;
+                    let (base, off) = if *space == AddrSpace::Shared {
+                        self.shared_vaddr(out, addr)?
+                    } else {
+                        self.vaddr(out, addr)?
+                    };
+                    let d = match dst {
+                        Some(d) => Some(match self.loc(*d) {
+                            Loc::V(v) => v,
+                            Loc::S(_) => return Err(self.err("atomic dst must be varying")),
+                        }),
+                        None => None,
+                    };
+                    out.push(TStmt::I(TInst::VAtom {
+                        op: *op,
+                        ty: *ty,
+                        dst: d,
+                        base,
+                        idx: Some(off),
+                        scale: 1,
+                        disp: 0,
+                        val: self.vo(val),
+                        val2: val2.as_ref().map(|v| self.vo(v)),
+                        local,
+                    }));
+                }
+            }
+            I::Bar { id } => {
+                if self.is_mimd() {
+                    return Err(self.err("barriers unsupported in MIMD mode"));
+                }
+                if self.opts.migratable {
+                    let sp = self.k.suspension_point(*id).ok_or_else(|| {
+                        self.err(format!("no liveness for barrier {id}"))
+                    })?;
+                    let site = CkptSite {
+                        barrier_id: *id,
+                        saves: sp
+                            .live_regs
+                            .iter()
+                            .map(|r| {
+                                let loc = match self.loc(*r) {
+                                    Loc::S(s) => DevLoc::TensixScalar(s.0),
+                                    Loc::V(v) => DevLoc::TensixVector(v.0),
+                                };
+                                (*r, self.k.reg_ty(*r), loc)
+                            })
+                            .collect(),
+                    };
+                    self.ckpt_sites.push(site.clone());
+                    out.push(TStmt::I(TInst::Ckpt { site }));
+                }
+                out.push(TStmt::I(TInst::MeshBar { id: *id }));
+            }
+            // Tensix DMA is synchronous in this prototype: ordering is
+            // already program order, so fences are no-ops (documented
+            // deviation; async DMA would need real fences).
+            I::Fence { .. } => {}
+            I::Vote { kind, dst, src } => {
+                if self.is_mimd() {
+                    return Err(self.err("team ops unsupported in MIMD mode"));
+                }
+                let d = match self.loc(*dst) {
+                    Loc::S(s) => s,
+                    Loc::V(_) => return Err(self.err("vote dst is team-uniform")),
+                };
+                out.push(TStmt::I(TInst::VVote { kind: *kind, dst: d, src: self.vo(src) }));
+            }
+            I::Ballot { dst, src } => {
+                if self.is_mimd() {
+                    return Err(self.err("team ops unsupported in MIMD mode"));
+                }
+                let d = match self.loc(*dst) {
+                    Loc::S(s) => s,
+                    Loc::V(_) => return Err(self.err("ballot dst is team-uniform")),
+                };
+                out.push(TStmt::I(TInst::VBallot { dst: d, src: self.vo(src) }));
+            }
+            I::Shfl { kind, ty, dst, val, lane } => {
+                if self.is_mimd() {
+                    return Err(self.err("team ops unsupported in MIMD mode"));
+                }
+                let d = match self.loc(*dst) {
+                    Loc::V(v) => v,
+                    Loc::S(_) => return Err(self.err("shfl dst must be varying")),
+                };
+                out.push(TStmt::I(TInst::VShfl {
+                    kind: *kind,
+                    ty: *ty,
+                    dst: d,
+                    val: self.vo(val),
+                    lane: self.vo(lane),
+                }));
+            }
+            I::Rng { dst, state } => match (self.loc(*dst), self.loc(*state)) {
+                (Loc::S(d), Loc::S(s)) => out.push(TStmt::I(TInst::SRng { dst: d, state: s })),
+                (Loc::V(d), Loc::V(s)) => out.push(TStmt::I(TInst::VRng { dst: d, state: s })),
+                _ => return Err(self.err("rng dst/state location mismatch")),
+            },
+            I::Trap { code } => out.push(TStmt::I(TInst::Trap { code: *code })),
+        }
+        Ok(())
+    }
+
+    /// Conservative check used only for scalar-store eligibility.
+    fn under_divergence(&self) -> bool {
+        // Divergent contexts force vector stores; we track this simply by
+        // the fact that uniform stores only appear in uniform regions in
+        // verified kernels. (Scalar stores under divergence would execute
+        // once per core rather than once per thread; the translator routes
+        // anything doubtful through the vector path.)
+        self.div_depth > 0
+    }
+
+    fn block(&mut self, stmts: &[Stmt], divergent: bool) -> Result<TBlockId> {
+        let saved = self.div_depth;
+        if divergent {
+            self.div_depth += 1;
+        }
+        let mut out = Vec::new();
+        for s in stmts {
+            match s {
+                Stmt::I(i) => self.inst(&mut out, i)?,
+                Stmt::If { cond, then_b, else_b } => {
+                    if self.is_mimd() || self.uni.is_uniform(*cond) {
+                        let c = match self.loc(*cond) {
+                            Loc::S(s) => s,
+                            Loc::V(_) => return Err(self.err("uniform if with vector cond")),
+                        };
+                        let t = self.block(then_b, false)?;
+                        let e = self.block(else_b, false)?;
+                        out.push(TStmt::SIf { cond: c, then_b: t, else_b: e });
+                    } else {
+                        let c = match self.loc(*cond) {
+                            Loc::V(v) => v,
+                            Loc::S(_) => return Err(self.err("divergent if with scalar cond")),
+                        };
+                        let multi = self.mode == TensixMode::VectorMultiCore;
+                        if multi {
+                            // Divergence agreement protocol (paper §4.4):
+                            // vote per side, group-wide entry decisions.
+                            let any_t = self.sr();
+                            out.push(TStmt::I(TInst::MeshVoteAny {
+                                dst: any_t,
+                                src: Vo::Reg(c),
+                            }));
+                            let not_c = self.vr();
+                            out.push(TStmt::I(TInst::VUn {
+                                op: hir::UnOp::Not,
+                                ty: Scalar::Pred,
+                                dst: not_c,
+                                a: Vo::Reg(c),
+                            }));
+                            let any_e = self.sr();
+                            out.push(TStmt::I(TInst::MeshVoteAny {
+                                dst: any_e,
+                                src: Vo::Reg(not_c),
+                            }));
+                            let t = self.block(then_b, true)?;
+                            let e = self.block(else_b, true)?;
+                            let empty1 = self.fresh_block();
+                            let vthen = self.push_block(vec![TStmt::VIf {
+                                cond: c,
+                                then_b: t,
+                                else_b: empty1,
+                                always: true,
+                            }]);
+                            let empty2 = self.fresh_block();
+                            let empty3 = self.fresh_block();
+                            let velse = self.push_block(vec![TStmt::VIf {
+                                cond: not_c,
+                                then_b: e,
+                                else_b: empty2,
+                                always: true,
+                            }]);
+                            out.push(TStmt::SIf { cond: any_t, then_b: vthen, else_b: empty3 });
+                            let empty4 = self.fresh_block();
+                            out.push(TStmt::SIf { cond: any_e, then_b: velse, else_b: empty4 });
+                        } else {
+                            let t = self.block(then_b, true)?;
+                            let e = self.block(else_b, true)?;
+                            out.push(TStmt::VIf {
+                                cond: c,
+                                then_b: t,
+                                else_b: e,
+                                always: false,
+                            });
+                        }
+                    }
+                }
+                Stmt::While { cond, cond_reg, body } => {
+                    let loop_divergent = !self.is_mimd()
+                        && (self.uni.is_varying(*cond_reg) || divergent
+                            || has_divergent_exit(body, &self.uni));
+                    if !loop_divergent {
+                        let c = self.block(cond, false)?;
+                        let b = self.block(body, false)?;
+                        let cr = match self.loc(*cond_reg) {
+                            Loc::S(s) => s,
+                            Loc::V(_) => return Err(self.err("uniform loop with vector cond")),
+                        };
+                        out.push(TStmt::SLoop { cond: c, cond_reg: cr, body: b });
+                    } else {
+                        // Divergent loop: the condition itself may live in
+                        // a scalar register (uniform value) — splat it.
+                        let mut cblk = self.block(cond, true)?;
+                        let cr = match self.loc(*cond_reg) {
+                            Loc::V(v) => v,
+                            Loc::S(s) => {
+                                let v = self.vr();
+                                self.blocks[cblk].push(TStmt::I(TInst::VMov {
+                                    dst: v,
+                                    src: Vo::Splat(s),
+                                }));
+                                v
+                            }
+                        };
+                        let collective = if self.mode == TensixMode::VectorMultiCore {
+                            let s_any = self.sr();
+                            self.blocks[cblk].push(TStmt::I(TInst::MeshVoteAny {
+                                dst: s_any,
+                                src: Vo::Reg(cr),
+                            }));
+                            Some(s_any)
+                        } else {
+                            None
+                        };
+                        let b = self.block(body, true)?;
+                        // NB: cblk was extended above after creation; the
+                        // arena index remains valid.
+                        let _ = &mut cblk;
+                        out.push(TStmt::VLoop { cond: cblk, cond_reg: cr, body: b, collective });
+                    }
+                }
+                Stmt::Break => out.push(TStmt::Break),
+                Stmt::Continue => out.push(TStmt::Continue),
+                Stmt::Return => out.push(TStmt::Return),
+            }
+        }
+        self.div_depth = saved;
+        Ok(self.push_block(out))
+    }
+
+    fn push_block(&mut self, b: Vec<TStmt>) -> TBlockId {
+        self.blocks.push(b);
+        self.blocks.len() - 1
+    }
+
+    fn fresh_block(&mut self) -> TBlockId {
+        self.push_block(Vec::new())
+    }
+}
+
+/// Does the loop body contain a Break/Continue under divergent control
+/// (which makes the loop itself divergent even with a uniform condition)?
+fn has_divergent_exit(body: &[Stmt], uni: &Uniformity) -> bool {
+    fn walk(stmts: &[Stmt], uni: &Uniformity, div: bool) -> bool {
+        for s in stmts {
+            match s {
+                Stmt::Break | Stmt::Continue if div => return true,
+                Stmt::If { cond, then_b, else_b } => {
+                    let d = div || uni.is_varying(*cond);
+                    if walk(then_b, uni, d) || walk(else_b, uni, d) {
+                        return true;
+                    }
+                }
+                // Nested loops own their Break/Continue.
+                Stmt::While { .. } => {}
+                _ => {}
+            }
+        }
+        false
+    }
+    walk(body, uni, false)
+}
+
+// The struct needs div_depth; declared here to keep the main impl readable.
+impl<'a> Ttx<'a> {
+    fn new(k: &'a Kernel, mode: TensixMode, opts: TranslateOpts) -> Result<Ttx<'a>> {
+        let uni = uniformity::run(k);
+        let mut next_sr: u16 = 0;
+        let mut next_vr: u16 = 0;
+        let mut loc = Vec::with_capacity(k.reg_types.len());
+        for (i, _ty) in k.reg_types.iter().enumerate() {
+            let is_param = i < k.params.len();
+            let uniform = mode == TensixMode::ScalarMimd
+                || is_param
+                || uni.is_uniform(hir::Reg(i as u32));
+            if uniform {
+                loc.push(Loc::S(SR(next_sr)));
+                next_sr += 1;
+            } else {
+                loc.push(Loc::V(VR(next_vr)));
+                next_vr += 1;
+            }
+        }
+        // Params must land on scalar regs 0..n (CoreState::new contract).
+        for i in 0..k.params.len() {
+            if loc[i] != Loc::S(SR(i as u16)) {
+                return Err(HetError::translate(
+                    "tenstorrent-sim",
+                    "parameter register allocation violated",
+                ));
+            }
+        }
+        let shared_base = SR(next_sr);
+        next_sr += 1;
+        Ok(Ttx {
+            k,
+            mode,
+            opts,
+            uni,
+            blocks: Vec::new(),
+            loc,
+            next_sr,
+            next_vr,
+            shared_base,
+            ckpt_sites: Vec::new(),
+            name: "tenstorrent-sim",
+            div_depth: 0,
+        })
+    }
+}
+
+/// Translate a verified hetIR kernel to a Tensix program in `mode`.
+pub fn translate(k: &Kernel, mode: TensixMode, opts: TranslateOpts) -> Result<TensixProgram> {
+    verify::verify_kernel(k)?;
+    let mut tx = Ttx::new(k, mode, opts)?;
+    let entry = tx.block(&k.body, false)?;
+    let mut sites = tx.ckpt_sites;
+    sites.sort_by_key(|s| s.barrier_id);
+    sites.dedup_by_key(|s| s.barrier_id);
+    Ok(TensixProgram {
+        kernel_name: k.name.clone(),
+        mode,
+        blocks: tx.blocks,
+        entry,
+        num_sregs: tx.next_sr,
+        num_vregs: tx.next_vr,
+        shared_bytes: k.shared_bytes,
+        shared_base_sreg: tx.shared_base,
+        num_params: k.params.len() as u32,
+        ckpt_sites: sites,
+        migratable: opts.migratable,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hetir::types::Type;
+    use crate::hetir::builder::KernelBuilder;
+    use crate::hetir::instr::*;
+    use crate::sim::mem::DeviceMemory;
+    use crate::sim::simt::LaunchDims;
+    use crate::sim::tensix::TensixSim;
+    use std::sync::atomic::AtomicBool;
+
+    fn vadd_kernel() -> Kernel {
+        let mut b = KernelBuilder::new("vadd");
+        let a = b.param("A", Type::PTR_GLOBAL);
+        let bb = b.param("B", Type::PTR_GLOBAL);
+        let c = b.param("C", Type::PTR_GLOBAL);
+        let n = b.param("N", Type::U32);
+        let i = b.special(SpecialReg::GlobalId(Dim::X));
+        let p = b.cmp(CmpOp::Lt, Scalar::U32, i.into(), n.into());
+        b.if_(p, |b| {
+            let x = b.ld(AddrSpace::Global, Scalar::F32, Address::indexed(a, i, 4));
+            let y = b.ld(AddrSpace::Global, Scalar::F32, Address::indexed(bb, i, 4));
+            let s = b.bin(BinOp::Add, Scalar::F32, x.into(), y.into());
+            b.st(AddrSpace::Global, Scalar::F32, Address::indexed(c, i, 4), s.into());
+        });
+        b.finish()
+    }
+
+    fn run_mode(mode: TensixMode, block: u32, n: usize) -> Vec<f32> {
+        let k = vadd_kernel();
+        let p = translate(&k, mode, TranslateOpts::default()).unwrap();
+        let sim = TensixSim::new(TensixConfig::blackhole());
+        let mut mem = DeviceMemory::new(1 << 20, "t");
+        for i in 0..n {
+            mem.store(i as u64 * 4, Scalar::F32, Value::f32(i as f32)).unwrap();
+            mem.store(65536 + i as u64 * 4, Scalar::F32, Value::f32(0.5)).unwrap();
+        }
+        let params = [
+            Value::ptr(0, AddrSpace::Global),
+            Value::ptr(65536, AddrSpace::Global),
+            Value::ptr(131072, AddrSpace::Global),
+            Value::u32(n as u32),
+        ];
+        let pause = AtomicBool::new(false);
+        let blocks = (n as u32).div_ceil(block);
+        sim.run_grid(&p, LaunchDims::d1(blocks, block), &params, &mut mem, &pause, None, None)
+            .unwrap();
+        (0..n)
+            .map(|i| mem.load(131072 + i as u64 * 4, Scalar::F32).unwrap().as_f32())
+            .collect()
+    }
+
+    #[test]
+    fn vadd_single_core_mode() {
+        let out = run_mode(TensixMode::VectorSingleCore, 32, 100);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i as f32 + 0.5, "elem {i}");
+        }
+    }
+
+    #[test]
+    fn vadd_multi_core_mode() {
+        // 96-thread blocks -> 3 cores per block, with the agreement
+        // protocol around the bounds-check divergence.
+        let out = run_mode(TensixMode::VectorMultiCore, 96, 200);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i as f32 + 0.5, "elem {i}");
+        }
+    }
+
+    #[test]
+    fn vadd_mimd_mode() {
+        let out = run_mode(TensixMode::ScalarMimd, 64, 100);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i as f32 + 0.5, "elem {i}");
+        }
+    }
+
+    #[test]
+    fn mimd_rejects_barriers() {
+        let mut b = KernelBuilder::new("k");
+        let _n = b.param("N", Type::U32);
+        b.bar();
+        let k = b.finish();
+        assert!(translate(&k, TensixMode::ScalarMimd, TranslateOpts::default()).is_err());
+        assert!(translate(&k, TensixMode::VectorSingleCore, TranslateOpts::default()).is_ok());
+    }
+
+    /// Shared-memory reversal within a block, on both vector modes:
+    /// exercises scratchpad shared (single-core) and global-region shared
+    /// (multi-core) plus barrier coordination.
+    #[test]
+    fn shared_memory_reverse_both_modes() {
+        let mut b = KernelBuilder::new("rev");
+        let out = b.param("O", Type::PTR_GLOBAL);
+        let sh = b.shared_alloc(32 * 4);
+        let t = b.special(SpecialReg::ThreadIdx(Dim::X));
+        let tf = b.cvt(Scalar::U32, Scalar::F32, t.into());
+        b.st(AddrSpace::Shared, Scalar::F32, Address::indexed(sh, t, 4), tf.into());
+        b.bar();
+        let n1 = b.bin(BinOp::Sub, Scalar::U32, Operand::Imm(Value::u32(31)), t.into());
+        let v = b.ld(AddrSpace::Shared, Scalar::F32, Address::indexed(sh, n1, 4));
+        let t64 = b.cvt(Scalar::U32, Scalar::U64, t.into());
+        b.st(AddrSpace::Global, Scalar::F32, Address::indexed(out, t64, 4), v.into());
+        let k = b.finish();
+
+        for mode in [TensixMode::VectorSingleCore, TensixMode::VectorMultiCore] {
+            let p = translate(&k, mode, TranslateOpts::default()).unwrap();
+            let sim = TensixSim::new(TensixConfig::blackhole());
+            let mut mem = DeviceMemory::new(1 << 16, "t");
+            let pause = AtomicBool::new(false);
+            let heap = if mode == TensixMode::VectorMultiCore { Some(8192) } else { None };
+            sim.run_grid(
+                &p,
+                LaunchDims::d1(1, 32),
+                &[Value::ptr(0, AddrSpace::Global)],
+                &mut mem,
+                &pause,
+                None,
+                heap,
+            )
+            .unwrap();
+            for i in 0..32u64 {
+                assert_eq!(
+                    mem.load(i * 4, Scalar::F32).unwrap().as_f32(),
+                    (31 - i) as f32,
+                    "thread {i} mode {mode}"
+                );
+            }
+        }
+    }
+}

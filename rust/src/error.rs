@@ -1,0 +1,81 @@
+//! Unified error type for the hetGPU stack.
+//!
+//! Every layer (IR, frontend, backend translators, simulators, runtime,
+//! migration) reports through [`HetError`] so the public API surfaces a
+//! single error enum, mirroring how the paper's runtime "propagates errors
+//! in a uniform way" (§4.3 *Error Handling*).
+
+use thiserror::Error;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, HetError>;
+
+/// Unified error enum for all hetGPU layers.
+#[derive(Debug, Error)]
+pub enum HetError {
+    /// Lexer/parser errors from the CUDA-subset frontend.
+    #[error("frontend error at {line}:{col}: {msg}")]
+    Frontend { line: usize, col: usize, msg: String },
+
+    /// hetIR text-assembly parse errors.
+    #[error("hetIR parse error at line {line}: {msg}")]
+    IrParse { line: usize, msg: String },
+
+    /// hetIR verifier failures (type errors, malformed structure).
+    #[error("hetIR verify error in `{func}`: {msg}")]
+    Verify { func: String, msg: String },
+
+    /// Backend translation failures (unsupported op on a target, etc).
+    #[error("backend `{backend}` translation error: {msg}")]
+    Translate { backend: String, msg: String },
+
+    /// Device simulator faults (the simulated equivalent of a GPU fault,
+    /// e.g. an illegal global-memory access).
+    #[error("device fault on {device}: {msg}")]
+    DeviceFault { device: String, msg: String },
+
+    /// Runtime API misuse or resource exhaustion.
+    #[error("runtime error: {msg}")]
+    Runtime { msg: String },
+
+    /// Checkpoint/restore/migration failures.
+    #[error("migration error: {msg}")]
+    Migrate { msg: String },
+
+    /// State-blob (de)serialization failures.
+    #[error("state blob error: {msg}")]
+    Blob { msg: String },
+
+    /// Errors from the PJRT/XLA native path.
+    #[error("xla native error: {0}")]
+    Xla(String),
+
+    /// Wrapped I/O errors (artifact loading, config files).
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl HetError {
+    /// Convenience constructor for runtime errors.
+    pub fn runtime(msg: impl Into<String>) -> Self {
+        HetError::Runtime { msg: msg.into() }
+    }
+    /// Convenience constructor for migration errors.
+    pub fn migrate(msg: impl Into<String>) -> Self {
+        HetError::Migrate { msg: msg.into() }
+    }
+    /// Convenience constructor for device faults.
+    pub fn fault(device: impl Into<String>, msg: impl Into<String>) -> Self {
+        HetError::DeviceFault { device: device.into(), msg: msg.into() }
+    }
+    /// Convenience constructor for translation errors.
+    pub fn translate(backend: impl Into<String>, msg: impl Into<String>) -> Self {
+        HetError::Translate { backend: backend.into(), msg: msg.into() }
+    }
+}
+
+impl From<xla::Error> for HetError {
+    fn from(e: xla::Error) -> Self {
+        HetError::Xla(e.to_string())
+    }
+}

@@ -1,0 +1,118 @@
+//! AST for the CUDA C subset.
+
+/// Source-level scalar types.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CType {
+    Void,
+    Bool,
+    Int,
+    Uint,
+    Long,   // long long
+    Ulong,  // unsigned long long / size_t
+    Float,
+}
+
+/// A (possibly pointer) type.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FullType {
+    pub base: CType,
+    /// Pointer depth (0 = scalar, 1 = `T*`). Depth > 1 unsupported.
+    pub ptr: bool,
+}
+
+/// Binary operators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Bo {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Rem,
+    Shl,
+    Shr,
+    And,
+    Or,
+    Xor,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    Eq,
+    Ne,
+    LAnd,
+    LOr,
+}
+
+/// Unary operators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Uo {
+    Neg,
+    Not,  // logical !
+    BNot, // bitwise ~
+}
+
+/// Expressions.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expr {
+    IntLit(i64),
+    FloatLit(f32),
+    BoolLit(bool),
+    Var(String),
+    /// `threadIdx.x`, `blockIdx.y`, ... (base name, dim 0..2)
+    Special(String, usize),
+    Bin(Bo, Box<Expr>, Box<Expr>),
+    Un(Uo, Box<Expr>),
+    /// `cond ? a : b` — both arms are evaluated (documented deviation).
+    Ternary(Box<Expr>, Box<Expr>, Box<Expr>),
+    /// `a[i]`
+    Index(Box<Expr>, Box<Expr>),
+    /// `*p`
+    Deref(Box<Expr>),
+    /// `&lvalue`
+    AddrOf(Box<Expr>),
+    /// `(float)x` etc.
+    Cast(FullType, Box<Expr>),
+    /// Builtin or intrinsic call.
+    Call(String, Vec<Expr>),
+}
+
+/// Statements.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CStmt {
+    /// `T name = init;` (scalar declarations only).
+    Decl { ty: FullType, name: String, init: Option<Expr> },
+    /// `__shared__ T name[N];`
+    SharedDecl { ty: CType, name: String, elems: u64 },
+    /// `lhs = rhs;` where lhs is Var / Index / Deref.
+    Assign { lhs: Expr, op: Option<Bo>, rhs: Expr },
+    /// Expression statement (calls with side effects).
+    ExprStmt(Expr),
+    If { cond: Expr, then_b: Vec<CStmt>, else_b: Vec<CStmt> },
+    While { cond: Expr, body: Vec<CStmt> },
+    For { init: Option<Box<CStmt>>, cond: Option<Expr>, inc: Option<Box<CStmt>>, body: Vec<CStmt> },
+    Break,
+    Continue,
+    Return,
+    Block(Vec<CStmt>),
+}
+
+/// A kernel parameter.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KParam {
+    pub ty: FullType,
+    pub name: String,
+}
+
+/// A `__global__` kernel definition.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelDef {
+    pub name: String,
+    pub params: Vec<KParam>,
+    pub body: Vec<CStmt>,
+}
+
+/// A translation unit: one or more kernels.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Unit {
+    pub kernels: Vec<KernelDef>,
+}

@@ -1,0 +1,792 @@
+//! AST → hetIR code generation (the hetGPU "Clang/LLVM backend" stand-in,
+//! paper §5.1 Compiler Toolchain).
+//!
+//! Straightforward register-machine lowering onto the hetIR builder:
+//! every local variable owns a typed virtual register (hetIR registers are
+//! assign-many, so no SSA construction is needed), control flow maps to
+//! structured `If`/`While`, `__syncthreads()` to `Bar`, warp intrinsics to
+//! the virtualized team ops, and `atomic*` to `Atom`.
+//!
+//! Documented deviations from C semantics (kernel-friendly subset):
+//! * `&&`/`||` short-circuit via predicated regions (so `i < n && a[i]`
+//!   is safe), but `?:` evaluates **both** arms.
+//! * Integer promotion is simplified: `f32 > u64 > s64 > u32 > s32`.
+
+use super::ast::*;
+use crate::error::{HetError, Result};
+use crate::hetir::builder::KernelBuilder;
+use crate::hetir::instr::{
+    Address, AtomOp, BinOp, CmpOp, Dim, Operand, Reg, ShflKind, SpecialReg, UnOp, VoteKind,
+};
+use crate::hetir::module::{Kernel, Module, Stmt};
+use crate::hetir::types::{AddrSpace, Scalar, Type, Value};
+use std::collections::HashMap;
+
+/// The type of an evaluated expression.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Ty {
+    S(Scalar),
+    /// Pointer into `space` with element type `elem`.
+    P { space: AddrSpace, elem: Scalar },
+}
+
+impl Ty {
+    fn scalar(self) -> Option<Scalar> {
+        match self {
+            Ty::S(s) => Some(s),
+            Ty::P { .. } => None,
+        }
+    }
+}
+
+fn ctype_scalar(c: CType) -> Result<Scalar> {
+    Ok(match c {
+        CType::Bool => Scalar::Pred,
+        CType::Int => Scalar::I32,
+        CType::Uint => Scalar::U32,
+        CType::Long => Scalar::I64,
+        CType::Ulong => Scalar::U64,
+        CType::Float => Scalar::F32,
+        CType::Void => {
+            return Err(HetError::Frontend { line: 0, col: 0, msg: "void value".into() })
+        }
+    })
+}
+
+fn full_ty(t: FullType) -> Result<Ty> {
+    let elem = ctype_scalar(t.base)?;
+    Ok(if t.ptr { Ty::P { space: AddrSpace::Global, elem } } else { Ty::S(elem) })
+}
+
+fn het_type(t: Ty) -> Type {
+    match t {
+        Ty::S(s) => Type::Scalar(s),
+        Ty::P { space, .. } => Type::Ptr(space),
+    }
+}
+
+/// Promotion rank (higher wins).
+fn rank(s: Scalar) -> u8 {
+    match s {
+        Scalar::Pred => 0,
+        Scalar::I32 => 1,
+        Scalar::U32 => 2,
+        Scalar::I64 => 3,
+        Scalar::U64 => 4,
+        Scalar::F32 => 5,
+    }
+}
+
+struct Var {
+    reg: Reg,
+    ty: Ty,
+}
+
+struct Cg {
+    b: KernelBuilder,
+    scopes: Vec<HashMap<String, Var>>,
+    /// Increment statements of enclosing `for` loops (run before
+    /// `continue`); `None` for plain `while` loops.
+    loop_incs: Vec<Option<CStmt>>,
+}
+
+/// An lvalue target.
+enum LValue {
+    Var(Reg, Ty),
+    Mem { space: AddrSpace, elem: Scalar, addr: Address },
+}
+
+impl Cg {
+    fn err(&self, msg: impl Into<String>) -> HetError {
+        HetError::Frontend { line: 0, col: 0, msg: msg.into() }
+    }
+
+    fn lookup(&self, name: &str) -> Result<(Reg, Ty)> {
+        for scope in self.scopes.iter().rev() {
+            if let Some(v) = scope.get(name) {
+                return Ok((v.reg, v.ty));
+            }
+        }
+        Err(self.err(format!("unknown variable `{name}`")))
+    }
+
+    fn declare(&mut self, name: &str, reg: Reg, ty: Ty) {
+        self.scopes.last_mut().unwrap().insert(name.to_string(), Var { reg, ty });
+    }
+
+    /// Convert `(op, from)` to scalar type `to`, emitting `Cvt` if needed.
+    fn coerce(&mut self, op: Operand, from: Scalar, to: Scalar) -> Operand {
+        if from == to {
+            return op;
+        }
+        // Fold immediate conversions directly.
+        if let Operand::Imm(v) = op {
+            return Operand::Imm(crate::sim::alu::cvt(from, to, v));
+        }
+        Operand::Reg(self.b.cvt(from, to, op))
+    }
+
+    /// Evaluate to an operand, coercing the result to scalar `want`.
+    fn eval_as(&mut self, e: &Expr, want: Scalar) -> Result<Operand> {
+        let (op, ty) = self.eval(e)?;
+        let s = ty.scalar().ok_or_else(|| self.err("expected scalar, got pointer"))?;
+        Ok(self.coerce(op, s, want))
+    }
+
+    /// Evaluate to a predicate operand (`!= 0` for numerics).
+    fn eval_pred(&mut self, e: &Expr) -> Result<Operand> {
+        let (op, ty) = self.eval(e)?;
+        match ty {
+            Ty::S(Scalar::Pred) => Ok(op),
+            Ty::S(s) => {
+                let zero = Operand::Imm(crate::sim::alu::cvt(Scalar::I32, s, Value::i32(0)));
+                Ok(Operand::Reg(self.b.cmp(CmpOp::Ne, s, op, zero)))
+            }
+            Ty::P { .. } => Err(self.err("pointer used as condition")),
+        }
+    }
+
+    /// Materialize a predicate operand into a register.
+    fn pred_reg(&mut self, op: Operand) -> Reg {
+        match op {
+            Operand::Reg(r) => r,
+            Operand::Imm(_) => self.b.mov(Type::PRED, op),
+        }
+    }
+
+    /// Resolve an lvalue expression.
+    fn lvalue(&mut self, e: &Expr) -> Result<LValue> {
+        match e {
+            Expr::Var(name) => {
+                let (reg, ty) = self.lookup(name)?;
+                Ok(LValue::Var(reg, ty))
+            }
+            Expr::Index(base, idx) => {
+                let (bop, bty) = self.eval(base)?;
+                let (space, elem) = match bty {
+                    Ty::P { space, elem } => (space, elem),
+                    Ty::S(_) => return Err(self.err("indexing a non-pointer")),
+                };
+                let breg = match bop {
+                    Operand::Reg(r) => r,
+                    Operand::Imm(_) => self.b.mov(Type::Ptr(space), bop),
+                };
+                let (iop, ity) = self.eval(idx)?;
+                let is = ity.scalar().ok_or_else(|| self.err("pointer index"))?;
+                if !is.is_int() {
+                    return Err(self.err("array index must be integer"));
+                }
+                let ireg = match iop {
+                    Operand::Reg(r) => r,
+                    Operand::Imm(_) => self.b.mov(Type::Scalar(is), iop),
+                };
+                Ok(LValue::Mem {
+                    space,
+                    elem,
+                    addr: Address::indexed(breg, ireg, elem.size_bytes() as u32),
+                })
+            }
+            Expr::Deref(p) => {
+                let (pop, pty) = self.eval(p)?;
+                let (space, elem) = match pty {
+                    Ty::P { space, elem } => (space, elem),
+                    Ty::S(_) => return Err(self.err("dereferencing a non-pointer")),
+                };
+                let preg = match pop {
+                    Operand::Reg(r) => r,
+                    Operand::Imm(_) => self.b.mov(Type::Ptr(space), pop),
+                };
+                Ok(LValue::Mem { space, elem, addr: Address::base(preg) })
+            }
+            _ => Err(self.err("expression is not an lvalue")),
+        }
+    }
+
+    /// Load an lvalue.
+    fn load(&mut self, lv: &LValue) -> (Operand, Ty) {
+        match lv {
+            LValue::Var(r, ty) => (Operand::Reg(*r), *ty),
+            LValue::Mem { space, elem, addr } => {
+                let r = self.b.ld(*space, *elem, *addr);
+                (Operand::Reg(r), Ty::S(*elem))
+            }
+        }
+    }
+
+    /// Store into an lvalue, coercing the value.
+    fn store(&mut self, lv: &LValue, val: Operand, vty: Scalar) -> Result<()> {
+        match lv {
+            LValue::Var(r, ty) => {
+                let want = match ty {
+                    Ty::S(s) => *s,
+                    Ty::P { .. } => {
+                        // pointer assignment: value must be pointer-typed
+                        self.b.push(crate::hetir::instr::Inst::Mov { dst: *r, src: val });
+                        return Ok(());
+                    }
+                };
+                let v = self.coerce(val, vty, want);
+                self.b.push(crate::hetir::instr::Inst::Mov { dst: *r, src: v });
+            }
+            LValue::Mem { space, elem, addr } => {
+                let v = self.coerce(val, vty, *elem);
+                self.b.st(*space, *elem, *addr, v);
+            }
+        }
+        Ok(())
+    }
+
+    /// Evaluate an expression to `(operand, type)`.
+    fn eval(&mut self, e: &Expr) -> Result<(Operand, Ty)> {
+        match e {
+            Expr::IntLit(v) => Ok((Operand::Imm(Value::i32(*v as i32)), Ty::S(Scalar::I32))),
+            Expr::FloatLit(v) => Ok((Operand::Imm(Value::f32(*v)), Ty::S(Scalar::F32))),
+            Expr::BoolLit(v) => Ok((Operand::Imm(Value::pred(*v)), Ty::S(Scalar::Pred))),
+            Expr::Var(name) => {
+                let (reg, ty) = self.lookup(name)?;
+                Ok((Operand::Reg(reg), ty))
+            }
+            Expr::Special(base, dim) => {
+                let d = Dim::from_index(*dim);
+                let kind = match base.as_str() {
+                    "threadIdx" => SpecialReg::ThreadIdx(d),
+                    "blockIdx" => SpecialReg::BlockIdx(d),
+                    "blockDim" => SpecialReg::BlockDim(d),
+                    _ => SpecialReg::GridDim(d),
+                };
+                Ok((Operand::Reg(self.b.special(kind)), Ty::S(Scalar::U32)))
+            }
+            Expr::Index(..) | Expr::Deref(_) => {
+                let lv = self.lvalue(e)?;
+                Ok(self.load(&lv))
+            }
+            Expr::AddrOf(_) => Err(self.err("`&` only valid as an atomic builtin argument")),
+            Expr::Cast(t, inner) => {
+                let want = full_ty(*t)?;
+                let (op, ty) = self.eval(inner)?;
+                match (want, ty) {
+                    (Ty::S(to), Ty::S(from)) => Ok((self.coerce(op, from, to), Ty::S(to))),
+                    (Ty::P { elem, .. }, Ty::P { space, .. }) => {
+                        // reinterpret pointer element type, keep space
+                        Ok((op, Ty::P { space, elem }))
+                    }
+                    _ => Err(self.err("invalid cast between pointer and scalar")),
+                }
+            }
+            Expr::Un(op, a) => {
+                let (av, aty) = self.eval(a)?;
+                let s = aty.scalar().ok_or_else(|| self.err("unary op on pointer"))?;
+                match op {
+                    Uo::Neg => {
+                        let s2 = if s == Scalar::Pred { Scalar::I32 } else { s };
+                        let av = self.coerce(av, s, s2);
+                        Ok((Operand::Reg(self.b.un(UnOp::Neg, s2, av)), Ty::S(s2)))
+                    }
+                    Uo::Not => {
+                        let p = self.eval_pred(a)?;
+                        Ok((Operand::Reg(self.b.un(UnOp::Not, Scalar::Pred, p)), Ty::S(Scalar::Pred)))
+                    }
+                    Uo::BNot => {
+                        if !s.is_int() {
+                            return Err(self.err("~ on non-integer"));
+                        }
+                        Ok((Operand::Reg(self.b.un(UnOp::Not, s, av)), Ty::S(s)))
+                    }
+                }
+            }
+            Expr::Bin(bo, a, b) => self.eval_bin(*bo, a, b),
+            Expr::Ternary(c, a, b) => {
+                let p = self.eval_pred(c)?;
+                let (av, aty) = self.eval(a)?;
+                let (bv, bty) = self.eval(b)?;
+                let (asc, bsc) = (
+                    aty.scalar().ok_or_else(|| self.err("pointer in ?:"))?,
+                    bty.scalar().ok_or_else(|| self.err("pointer in ?:"))?,
+                );
+                let res = if rank(asc) >= rank(bsc) { asc } else { bsc };
+                let av = self.coerce(av, asc, res);
+                let bv = self.coerce(bv, bsc, res);
+                Ok((Operand::Reg(self.b.sel(Type::Scalar(res), p, av, bv)), Ty::S(res)))
+            }
+            Expr::Call(name, args) => self.eval_call(name, args),
+        }
+    }
+
+    fn eval_bin(&mut self, bo: Bo, a: &Expr, b: &Expr) -> Result<(Operand, Ty)> {
+        // Short-circuit logical ops via predicated regions.
+        if bo == Bo::LAnd || bo == Bo::LOr {
+            let pa = self.eval_pred(a)?;
+            let res = self.b.mov(Type::PRED, pa);
+            let cond = self.pred_reg(Operand::Reg(res));
+            if bo == Bo::LAnd {
+                // if (res) res = b;
+                self.b.push_block();
+                let pb = self.eval_pred(b)?;
+                self.b.push(crate::hetir::instr::Inst::Mov { dst: res, src: pb });
+                let blk = self.b.pop_block();
+                self.b.push_stmt(Stmt::If { cond, then_b: blk, else_b: vec![] });
+            } else {
+                // if (!res) res = b;
+                let ncond = self.b.un(UnOp::Not, Scalar::Pred, cond.into());
+                self.b.push_block();
+                let pb = self.eval_pred(b)?;
+                self.b.push(crate::hetir::instr::Inst::Mov { dst: res, src: pb });
+                let blk = self.b.pop_block();
+                self.b.push_stmt(Stmt::If { cond: ncond, then_b: blk, else_b: vec![] });
+            }
+            return Ok((Operand::Reg(res), Ty::S(Scalar::Pred)));
+        }
+
+        let (av, aty) = self.eval(a)?;
+        let (bv, bty) = self.eval(b)?;
+
+        // Pointer arithmetic: ptr + int / ptr - int.
+        if let Ty::P { space, elem } = aty {
+            if matches!(bo, Bo::Add | Bo::Sub) {
+                let is = bty.scalar().ok_or_else(|| self.err("ptr + ptr unsupported"))?;
+                if !is.is_int() {
+                    return Err(self.err("pointer offset must be integer"));
+                }
+                let base = match av {
+                    Operand::Reg(r) => r,
+                    Operand::Imm(_) => self.b.mov(Type::Ptr(space), av),
+                };
+                let mut idx = match bv {
+                    Operand::Reg(r) => r,
+                    Operand::Imm(_) => self.b.mov(Type::Scalar(is), bv),
+                };
+                if bo == Bo::Sub {
+                    let sty = if is.is_signed() { is } else { Scalar::I64 };
+                    let w = self.coerce(idx.into(), is, sty);
+                    idx = self.b.un(UnOp::Neg, sty, w);
+                }
+                let dst = self.b.ptr_add(
+                    space,
+                    Address::indexed(base, idx, elem.size_bytes() as u32),
+                );
+                return Ok((Operand::Reg(dst), aty));
+            }
+            return Err(self.err("unsupported pointer operation"));
+        }
+
+        let asc = aty.scalar().ok_or_else(|| self.err("pointer operand"))?;
+        let bsc = bty.scalar().ok_or_else(|| self.err("pointer operand"))?;
+        // promote pred operands to i32 for arithmetic
+        let (asc2, av) = if asc == Scalar::Pred && !matches!(bo, Bo::Eq | Bo::Ne) {
+            (Scalar::I32, self.coerce(av, Scalar::Pred, Scalar::I32))
+        } else {
+            (asc, av)
+        };
+        let (bsc2, bv) = if bsc == Scalar::Pred && !matches!(bo, Bo::Eq | Bo::Ne) {
+            (Scalar::I32, self.coerce(bv, Scalar::Pred, Scalar::I32))
+        } else {
+            (bsc, bv)
+        };
+        let common = if rank(asc2) >= rank(bsc2) { asc2 } else { bsc2 };
+        let av = self.coerce(av, asc2, common);
+        let bv = self.coerce(bv, bsc2, common);
+
+        let cmp = |op: CmpOp| -> CmpOp { op };
+        match bo {
+            Bo::Lt | Bo::Le | Bo::Gt | Bo::Ge | Bo::Eq | Bo::Ne => {
+                let op = match bo {
+                    Bo::Lt => cmp(CmpOp::Lt),
+                    Bo::Le => cmp(CmpOp::Le),
+                    Bo::Gt => cmp(CmpOp::Gt),
+                    Bo::Ge => cmp(CmpOp::Ge),
+                    Bo::Eq => cmp(CmpOp::Eq),
+                    _ => cmp(CmpOp::Ne),
+                };
+                Ok((Operand::Reg(self.b.cmp(op, common, av, bv)), Ty::S(Scalar::Pred)))
+            }
+            _ => {
+                let op = match bo {
+                    Bo::Add => BinOp::Add,
+                    Bo::Sub => BinOp::Sub,
+                    Bo::Mul => BinOp::Mul,
+                    Bo::Div => BinOp::Div,
+                    Bo::Rem => BinOp::Rem,
+                    Bo::Shl => BinOp::Shl,
+                    Bo::Shr => BinOp::Shr,
+                    Bo::And => BinOp::And,
+                    Bo::Or => BinOp::Or,
+                    Bo::Xor => BinOp::Xor,
+                    _ => unreachable!(),
+                };
+                Ok((Operand::Reg(self.b.bin(op, common, av, bv)), Ty::S(common)))
+            }
+        }
+    }
+
+    fn eval_call(&mut self, name: &str, args: &[Expr]) -> Result<(Operand, Ty)> {
+        let nargs = args.len();
+        let want = |n: usize| -> Result<()> {
+            if nargs != n {
+                Err(HetError::Frontend {
+                    line: 0,
+                    col: 0,
+                    msg: format!("{name} expects {n} args, got {nargs}"),
+                })
+            } else {
+                Ok(())
+            }
+        };
+        match name {
+            "__syncthreads" => {
+                want(0)?;
+                self.b.bar();
+                Ok((Operand::Imm(Value::u32(0)), Ty::S(Scalar::U32)))
+            }
+            "__threadfence" => {
+                want(0)?;
+                self.b.fence(crate::hetir::instr::FenceScope::Device);
+                Ok((Operand::Imm(Value::u32(0)), Ty::S(Scalar::U32)))
+            }
+            "__threadfence_block" => {
+                want(0)?;
+                self.b.fence(crate::hetir::instr::FenceScope::Block);
+                Ok((Operand::Imm(Value::u32(0)), Ty::S(Scalar::U32)))
+            }
+            "__shfl_sync" | "__shfl_down_sync" | "__shfl_up_sync" | "__shfl_xor_sync" => {
+                want(3)?;
+                // args: (mask — ignored), value, lane/delta
+                let (v, vty) = self.eval(&args[1])?;
+                let s = vty.scalar().ok_or_else(|| self.err("shfl of pointer"))?;
+                let lane = self.eval_as(&args[2], Scalar::U32)?;
+                let kind = match name {
+                    "__shfl_sync" => ShflKind::Idx,
+                    "__shfl_down_sync" => ShflKind::Down,
+                    "__shfl_up_sync" => ShflKind::Up,
+                    _ => ShflKind::Xor,
+                };
+                Ok((Operand::Reg(self.b.shfl(kind, s, v, lane)), Ty::S(s)))
+            }
+            "__ballot_sync" => {
+                want(2)?;
+                let p = self.eval_pred(&args[1])?;
+                Ok((Operand::Reg(self.b.ballot(p)), Ty::S(Scalar::U32)))
+            }
+            "__any_sync" | "__all_sync" => {
+                want(2)?;
+                let p = self.eval_pred(&args[1])?;
+                let kind =
+                    if name == "__any_sync" { VoteKind::Any } else { VoteKind::All };
+                Ok((Operand::Reg(self.b.vote(kind, p)), Ty::S(Scalar::Pred)))
+            }
+            "__popc" => {
+                want(1)?;
+                let v = self.eval_as(&args[0], Scalar::U32)?;
+                Ok((Operand::Reg(self.b.un(UnOp::Popc, Scalar::U32, v)), Ty::S(Scalar::U32)))
+            }
+            "sqrtf" | "rsqrtf" | "expf" | "logf" | "sinf" | "cosf" | "fabsf" => {
+                want(1)?;
+                let v = self.eval_as(&args[0], Scalar::F32)?;
+                let op = match name {
+                    "sqrtf" => UnOp::Sqrt,
+                    "rsqrtf" => UnOp::Rsqrt,
+                    "expf" => UnOp::Exp,
+                    "logf" => UnOp::Log,
+                    "sinf" => UnOp::Sin,
+                    "cosf" => UnOp::Cos,
+                    _ => UnOp::Abs,
+                };
+                Ok((Operand::Reg(self.b.un(op, Scalar::F32, v)), Ty::S(Scalar::F32)))
+            }
+            "fminf" | "fmaxf" => {
+                want(2)?;
+                let a = self.eval_as(&args[0], Scalar::F32)?;
+                let b = self.eval_as(&args[1], Scalar::F32)?;
+                let op = if name == "fminf" { BinOp::Min } else { BinOp::Max };
+                Ok((Operand::Reg(self.b.bin(op, Scalar::F32, a, b)), Ty::S(Scalar::F32)))
+            }
+            "min" | "max" => {
+                want(2)?;
+                let (av, aty) = self.eval(&args[0])?;
+                let (bv, bty) = self.eval(&args[1])?;
+                let (asc, bsc) = (
+                    aty.scalar().ok_or_else(|| self.err("min of pointer"))?,
+                    bty.scalar().ok_or_else(|| self.err("min of pointer"))?,
+                );
+                let common = if rank(asc) >= rank(bsc) { asc } else { bsc };
+                let a = self.coerce(av, asc, common);
+                let b = self.coerce(bv, bsc, common);
+                let op = if name == "min" { BinOp::Min } else { BinOp::Max };
+                Ok((Operand::Reg(self.b.bin(op, common, a, b)), Ty::S(common)))
+            }
+            "fmaf" => {
+                want(3)?;
+                let a = self.eval_as(&args[0], Scalar::F32)?;
+                let b = self.eval_as(&args[1], Scalar::F32)?;
+                let c = self.eval_as(&args[2], Scalar::F32)?;
+                Ok((Operand::Reg(self.b.fma(Scalar::F32, a, b, c)), Ty::S(Scalar::F32)))
+            }
+            "hetgpu_rand" => {
+                // Virtualized PRNG (see hetIR `Rng`): updates the u32 state
+                // variable in place and returns the new value.
+                want(1)?;
+                let state = match &args[0] {
+                    Expr::Var(n) => {
+                        let (r, ty) = self.lookup(n)?;
+                        if ty != Ty::S(Scalar::U32) {
+                            return Err(self.err("hetgpu_rand state must be `unsigned`"));
+                        }
+                        r
+                    }
+                    _ => return Err(self.err("hetgpu_rand takes a variable")),
+                };
+                Ok((Operand::Reg(self.b.rng(state)), Ty::S(Scalar::U32)))
+            }
+            "atomicAdd" | "atomicMin" | "atomicMax" | "atomicExch" | "atomicAnd" | "atomicOr" => {
+                want(2)?;
+                let (space, elem, addr) = self.atomic_target(&args[0])?;
+                let v = self.eval_as(&args[1], elem)?;
+                let op = match name {
+                    "atomicAdd" => AtomOp::Add,
+                    "atomicMin" => AtomOp::Min,
+                    "atomicMax" => AtomOp::Max,
+                    "atomicExch" => AtomOp::Exch,
+                    "atomicAnd" => AtomOp::And,
+                    _ => AtomOp::Or,
+                };
+                Ok((Operand::Reg(self.b.atom(op, space, elem, addr, v)), Ty::S(elem)))
+            }
+            "atomicCAS" => {
+                want(3)?;
+                let (space, elem, addr) = self.atomic_target(&args[0])?;
+                let cmp = self.eval_as(&args[1], elem)?;
+                let new = self.eval_as(&args[2], elem)?;
+                let dst = self.b.reg(Type::Scalar(elem));
+                self.b.push(crate::hetir::instr::Inst::Atom {
+                    op: AtomOp::Cas,
+                    space,
+                    ty: elem,
+                    dst: Some(dst),
+                    addr,
+                    val: cmp,
+                    val2: Some(new),
+                });
+                Ok((Operand::Reg(dst), Ty::S(elem)))
+            }
+            other => Err(self.err(format!("unknown function `{other}`"))),
+        }
+    }
+
+    /// Resolve `&lvalue` (or a bare pointer expression) for atomics.
+    fn atomic_target(&mut self, e: &Expr) -> Result<(AddrSpace, Scalar, Address)> {
+        let inner = match e {
+            Expr::AddrOf(inner) => inner.as_ref(),
+            other => other,
+        };
+        match self.lvalue(inner) {
+            Ok(LValue::Mem { space, elem, addr }) => Ok((space, elem, addr)),
+            Ok(LValue::Var(..)) => Err(self.err("atomic on a register variable")),
+            Err(_) => {
+                // bare pointer expression: atomic on *ptr
+                let (pop, pty) = self.eval(inner)?;
+                match pty {
+                    Ty::P { space, elem } => {
+                        let r = match pop {
+                            Operand::Reg(r) => r,
+                            Operand::Imm(_) => self.b.mov(Type::Ptr(space), pop),
+                        };
+                        Ok((space, elem, Address::base(r)))
+                    }
+                    _ => Err(self.err("atomic target must be an address")),
+                }
+            }
+        }
+    }
+
+    // ---- statements ----
+
+    fn stmt(&mut self, s: &CStmt) -> Result<()> {
+        match s {
+            CStmt::Decl { ty, name, init } => {
+                let t = full_ty(*ty)?;
+                let reg = self.b.reg(het_type(t));
+                if let Some(e) = init {
+                    let (v, vty) = self.eval(e)?;
+                    match (t, vty) {
+                        (Ty::S(want), Ty::S(from)) => {
+                            let v = self.coerce(v, from, want);
+                            self.b.push(crate::hetir::instr::Inst::Mov { dst: reg, src: v });
+                        }
+                        (Ty::P { .. }, Ty::P { space, elem }) => {
+                            self.b.push(crate::hetir::instr::Inst::Mov { dst: reg, src: v });
+                            // Propagate the actual space/elem of the
+                            // initializer (e.g. shared arrays).
+                            self.declare(name, reg, Ty::P { space, elem });
+                            return Ok(());
+                        }
+                        _ => return Err(self.err("pointer/scalar initializer mismatch")),
+                    }
+                }
+                self.declare(name, reg, t);
+            }
+            CStmt::SharedDecl { ty, name, elems } => {
+                let elem = ctype_scalar(*ty)?;
+                let reg = self.b.shared_alloc(elems * elem.size_bytes());
+                self.declare(name, reg, Ty::P { space: AddrSpace::Shared, elem });
+            }
+            CStmt::Assign { lhs, op, rhs } => {
+                match op {
+                    None => {
+                        let (v, vty) = self.eval(rhs)?;
+                        let lv = self.lvalue(lhs)?;
+                        match vty {
+                            Ty::S(s) => self.store(&lv, v, s)?,
+                            Ty::P { .. } => match lv {
+                                LValue::Var(r, _) => {
+                                    self.b.push(crate::hetir::instr::Inst::Mov { dst: r, src: v })
+                                }
+                                _ => return Err(self.err("storing pointers to memory unsupported")),
+                            },
+                        }
+                    }
+                    Some(bo) => {
+                        // lhs op= rhs  ==>  lhs = lhs op rhs (lvalue
+                        // evaluated once for memory targets).
+                        let lv = self.lvalue(lhs)?;
+                        let (cur, cty) = self.load(&lv);
+                        let cs = cty.scalar().ok_or_else(|| self.err("compound ptr assign"))?;
+                        let (rv, rty) = self.eval(rhs)?;
+                        let rs = rty.scalar().ok_or_else(|| self.err("pointer rhs"))?;
+                        let common = if rank(cs) >= rank(rs) { cs } else { rs };
+                        let a = self.coerce(cur, cs, common);
+                        let b = self.coerce(rv, rs, common);
+                        let op = match bo {
+                            Bo::Add => BinOp::Add,
+                            Bo::Sub => BinOp::Sub,
+                            Bo::Mul => BinOp::Mul,
+                            Bo::Div => BinOp::Div,
+                            Bo::Rem => BinOp::Rem,
+                            Bo::Shl => BinOp::Shl,
+                            Bo::Shr => BinOp::Shr,
+                            Bo::And => BinOp::And,
+                            Bo::Or => BinOp::Or,
+                            Bo::Xor => BinOp::Xor,
+                            _ => return Err(self.err("invalid compound operator")),
+                        };
+                        let res = self.b.bin(op, common, a, b);
+                        self.store(&lv, res.into(), common)?;
+                    }
+                }
+            }
+            CStmt::ExprStmt(e) => {
+                self.eval(e)?;
+            }
+            CStmt::If { cond, then_b, else_b } => {
+                let p = self.eval_pred(cond)?;
+                let cond = self.pred_reg(p);
+                self.scopes.push(HashMap::new());
+                self.b.push_block();
+                for s in then_b {
+                    self.stmt(s)?;
+                }
+                let tb = self.b.pop_block();
+                self.scopes.pop();
+                self.scopes.push(HashMap::new());
+                self.b.push_block();
+                for s in else_b {
+                    self.stmt(s)?;
+                }
+                let eb = self.b.pop_block();
+                self.scopes.pop();
+                self.b.push_stmt(Stmt::If { cond, then_b: tb, else_b: eb });
+            }
+            CStmt::While { cond, body } => {
+                self.b.push_block();
+                let p = self.eval_pred(cond)?;
+                let cond_reg = self.pred_reg(p);
+                let cb = self.b.pop_block();
+                self.scopes.push(HashMap::new());
+                self.loop_incs.push(None);
+                self.b.push_block();
+                for s in body {
+                    self.stmt(s)?;
+                }
+                let bb = self.b.pop_block();
+                self.loop_incs.pop();
+                self.scopes.pop();
+                self.b.push_stmt(Stmt::While { cond: cb, cond_reg, body: bb });
+            }
+            CStmt::For { init, cond, inc, body } => {
+                self.scopes.push(HashMap::new());
+                if let Some(i) = init {
+                    self.stmt(i)?;
+                }
+                self.b.push_block();
+                let cond_reg = match cond {
+                    Some(c) => {
+                        let p = self.eval_pred(c)?;
+                        self.pred_reg(p)
+                    }
+                    None => self.b.mov(Type::PRED, Operand::Imm(Value::pred(true))),
+                };
+                let cb = self.b.pop_block();
+                self.loop_incs.push(inc.as_deref().cloned());
+                self.b.push_block();
+                for s in body {
+                    self.stmt(s)?;
+                }
+                if let Some(i) = inc {
+                    self.stmt(i)?;
+                }
+                let bb = self.b.pop_block();
+                self.loop_incs.pop();
+                self.scopes.pop();
+                self.b.push_stmt(Stmt::While { cond: cb, cond_reg, body: bb });
+            }
+            CStmt::Break => self.b.brk(),
+            CStmt::Continue => {
+                // `for` loops must run their increment before re-testing.
+                if let Some(Some(inc)) = self.loop_incs.last().cloned() {
+                    self.stmt(&inc)?;
+                }
+                self.b.cont();
+            }
+            CStmt::Return => self.b.ret(),
+            CStmt::Block(stmts) => {
+                self.scopes.push(HashMap::new());
+                for s in stmts {
+                    self.stmt(s)?;
+                }
+                self.scopes.pop();
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Lower one kernel definition to hetIR.
+pub fn lower_kernel(def: &KernelDef) -> Result<Kernel> {
+    let mut cg = Cg {
+        b: KernelBuilder::new(&def.name),
+        scopes: vec![HashMap::new()],
+        loop_incs: Vec::new(),
+    };
+    for p in &def.params {
+        let t = full_ty(p.ty)?;
+        let reg = cg.b.param(&p.name, het_type(t));
+        cg.declare(&p.name, reg, t);
+    }
+    for s in &def.body {
+        cg.stmt(s)?;
+    }
+    let mut kernel = cg.b.finish();
+    // Target-agnostic optimization pipeline (paper §4.1): constant folding,
+    // local CSE, DCE — then the migration metadata passes re-run.
+    crate::hetir::passes::optimize(&mut kernel);
+    crate::hetir::verify::verify_kernel(&kernel)?;
+    Ok(kernel)
+}
+
+/// Compile a CUDA-subset translation unit to a hetIR module.
+pub fn compile(src: &str, module_name: &str) -> Result<Module> {
+    let unit = super::parser::parse_unit(src)?;
+    let mut m = Module::new(module_name);
+    for k in &unit.kernels {
+        m.add_kernel(lower_kernel(k)?);
+    }
+    Ok(m)
+}

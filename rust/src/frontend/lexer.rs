@@ -1,0 +1,302 @@
+//! Lexer for the CUDA C subset accepted by the hetGPU frontend.
+
+use crate::error::{HetError, Result};
+
+/// Token kinds.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tok {
+    Ident(String),
+    IntLit(i64),
+    FloatLit(f32),
+    // punctuation / operators
+    LParen,
+    RParen,
+    LBrace,
+    RBrace,
+    LBracket,
+    RBracket,
+    Semi,
+    Comma,
+    Dot,
+    Star,
+    Amp,
+    Plus,
+    Minus,
+    Slash,
+    Percent,
+    Caret,
+    Pipe,
+    Tilde,
+    Bang,
+    Assign,
+    Lt,
+    Gt,
+    Le,
+    Ge,
+    EqEq,
+    Ne,
+    AndAnd,
+    OrOr,
+    Shl,
+    Shr,
+    PlusEq,
+    MinusEq,
+    StarEq,
+    SlashEq,
+    PercentEq,
+    AmpEq,
+    PipeEq,
+    CaretEq,
+    ShlEq,
+    ShrEq,
+    PlusPlus,
+    MinusMinus,
+    Question,
+    Colon,
+    Eof,
+}
+
+/// A token with its source line (for diagnostics).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Token {
+    pub tok: Tok,
+    pub line: usize,
+    pub col: usize,
+}
+
+/// Tokenize the whole source.
+pub fn lex(src: &str) -> Result<Vec<Token>> {
+    let b = src.as_bytes();
+    let mut toks = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    let mut col = 1usize;
+    macro_rules! err {
+        ($($t:tt)*) => {
+            return Err(HetError::Frontend { line, col, msg: format!($($t)*) })
+        };
+    }
+    while i < b.len() {
+        let c = b[i] as char;
+        let (tline, tcol) = (line, col);
+        let mut push = |tok: Tok| toks.push(Token { tok, line: tline, col: tcol });
+        match c {
+            '\n' => {
+                line += 1;
+                col = 1;
+                i += 1;
+                continue;
+            }
+            c if c.is_ascii_whitespace() => {
+                i += 1;
+                col += 1;
+                continue;
+            }
+            '/' if b.get(i + 1) == Some(&b'/') => {
+                while i < b.len() && b[i] != b'\n' {
+                    i += 1;
+                }
+                continue;
+            }
+            '/' if b.get(i + 1) == Some(&b'*') => {
+                i += 2;
+                while i + 1 < b.len() && !(b[i] == b'*' && b[i + 1] == b'/') {
+                    if b[i] == b'\n' {
+                        line += 1;
+                        col = 1;
+                    }
+                    i += 1;
+                }
+                i += 2;
+                continue;
+            }
+            c if c.is_ascii_alphabetic() || c == '_' => {
+                let start = i;
+                while i < b.len() && ((b[i] as char).is_ascii_alphanumeric() || b[i] == b'_') {
+                    i += 1;
+                }
+                let w = &src[start..i];
+                col += i - start;
+                push(Tok::Ident(w.to_string()));
+                continue;
+            }
+            c if c.is_ascii_digit() => {
+                let start = i;
+                // hex
+                if c == '0' && (b.get(i + 1) == Some(&b'x') || b.get(i + 1) == Some(&b'X')) {
+                    i += 2;
+                    while i < b.len() && (b[i] as char).is_ascii_hexdigit() {
+                        i += 1;
+                    }
+                    let v = i64::from_str_radix(&src[start + 2..i], 16)
+                        .map_err(|e| HetError::Frontend { line, col, msg: e.to_string() })?;
+                    // optional u/U suffix
+                    if i < b.len() && (b[i] == b'u' || b[i] == b'U') {
+                        i += 1;
+                    }
+                    col += i - start;
+                    push(Tok::IntLit(v));
+                    continue;
+                }
+                let mut is_float = false;
+                while i < b.len() && (b[i] as char).is_ascii_digit() {
+                    i += 1;
+                }
+                if i < b.len() && b[i] == b'.' {
+                    is_float = true;
+                    i += 1;
+                    while i < b.len() && (b[i] as char).is_ascii_digit() {
+                        i += 1;
+                    }
+                }
+                if i < b.len() && (b[i] == b'e' || b[i] == b'E') {
+                    is_float = true;
+                    i += 1;
+                    if i < b.len() && (b[i] == b'+' || b[i] == b'-') {
+                        i += 1;
+                    }
+                    while i < b.len() && (b[i] as char).is_ascii_digit() {
+                        i += 1;
+                    }
+                }
+                let text = &src[start..i];
+                if i < b.len() && (b[i] == b'f' || b[i] == b'F') {
+                    is_float = true;
+                    i += 1;
+                }
+                if i < b.len() && (b[i] == b'u' || b[i] == b'U') && !is_float {
+                    i += 1;
+                }
+                col += i - start;
+                if is_float {
+                    let v: f32 = text
+                        .parse()
+                        .map_err(|e| HetError::Frontend { line, col, msg: format!("{e}") })?;
+                    push(Tok::FloatLit(v));
+                } else {
+                    let v: i64 = text
+                        .parse()
+                        .map_err(|e| HetError::Frontend { line, col, msg: format!("{e}") })?;
+                    push(Tok::IntLit(v));
+                }
+                continue;
+            }
+            _ => {}
+        }
+        // operators / punctuation
+        let two = if i + 1 < b.len() { &src[i..i + 2] } else { "" };
+        let three = if i + 2 < b.len() { &src[i..i + 3] } else { "" };
+        let (tok, n) = match three {
+            "<<=" => (Tok::ShlEq, 3),
+            ">>=" => (Tok::ShrEq, 3),
+            _ => match two {
+                "<=" => (Tok::Le, 2),
+                ">=" => (Tok::Ge, 2),
+                "==" => (Tok::EqEq, 2),
+                "!=" => (Tok::Ne, 2),
+                "&&" => (Tok::AndAnd, 2),
+                "||" => (Tok::OrOr, 2),
+                "<<" => (Tok::Shl, 2),
+                ">>" => (Tok::Shr, 2),
+                "+=" => (Tok::PlusEq, 2),
+                "-=" => (Tok::MinusEq, 2),
+                "*=" => (Tok::StarEq, 2),
+                "/=" => (Tok::SlashEq, 2),
+                "%=" => (Tok::PercentEq, 2),
+                "&=" => (Tok::AmpEq, 2),
+                "|=" => (Tok::PipeEq, 2),
+                "^=" => (Tok::CaretEq, 2),
+                "++" => (Tok::PlusPlus, 2),
+                "--" => (Tok::MinusMinus, 2),
+                _ => match c {
+                    '(' => (Tok::LParen, 1),
+                    ')' => (Tok::RParen, 1),
+                    '{' => (Tok::LBrace, 1),
+                    '}' => (Tok::RBrace, 1),
+                    '[' => (Tok::LBracket, 1),
+                    ']' => (Tok::RBracket, 1),
+                    ';' => (Tok::Semi, 1),
+                    ',' => (Tok::Comma, 1),
+                    '.' => (Tok::Dot, 1),
+                    '*' => (Tok::Star, 1),
+                    '&' => (Tok::Amp, 1),
+                    '+' => (Tok::Plus, 1),
+                    '-' => (Tok::Minus, 1),
+                    '/' => (Tok::Slash, 1),
+                    '%' => (Tok::Percent, 1),
+                    '^' => (Tok::Caret, 1),
+                    '|' => (Tok::Pipe, 1),
+                    '~' => (Tok::Tilde, 1),
+                    '!' => (Tok::Bang, 1),
+                    '=' => (Tok::Assign, 1),
+                    '<' => (Tok::Lt, 1),
+                    '>' => (Tok::Gt, 1),
+                    '?' => (Tok::Question, 1),
+                    ':' => (Tok::Colon, 1),
+                    other => err!("unexpected character `{other}`"),
+                },
+            },
+        };
+        toks.push(Token { tok, line, col });
+        i += n;
+        col += n;
+    }
+    toks.push(Token { tok: Tok::Eof, line, col });
+    Ok(toks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lexes_kernel_header() {
+        let toks = lex("__global__ void f(float* a, unsigned n) {}").unwrap();
+        assert!(matches!(&toks[0].tok, Tok::Ident(s) if s == "__global__"));
+        assert!(toks.iter().any(|t| t.tok == Tok::Star));
+        assert_eq!(toks.last().unwrap().tok, Tok::Eof);
+    }
+
+    #[test]
+    fn lexes_numbers() {
+        let toks = lex("42 3.5f 1e-3 0x1F 7u").unwrap();
+        assert_eq!(toks[0].tok, Tok::IntLit(42));
+        assert_eq!(toks[1].tok, Tok::FloatLit(3.5));
+        assert_eq!(toks[2].tok, Tok::FloatLit(1e-3));
+        assert_eq!(toks[3].tok, Tok::IntLit(0x1F));
+        assert_eq!(toks[4].tok, Tok::IntLit(7));
+    }
+
+    #[test]
+    fn lexes_compound_ops() {
+        let toks = lex("a += b <<= c && d >> 2").unwrap();
+        assert!(toks.iter().any(|t| t.tok == Tok::PlusEq));
+        assert!(toks.iter().any(|t| t.tok == Tok::ShlEq));
+        assert!(toks.iter().any(|t| t.tok == Tok::AndAnd));
+        assert!(toks.iter().any(|t| t.tok == Tok::Shr));
+    }
+
+    #[test]
+    fn skips_comments() {
+        let toks = lex("a // line\n/* block\nblock */ b").unwrap();
+        let idents: Vec<_> = toks
+            .iter()
+            .filter_map(|t| match &t.tok {
+                Tok::Ident(s) => Some(s.clone()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(idents, vec!["a", "b"]);
+    }
+
+    #[test]
+    fn tracks_lines() {
+        let toks = lex("a\nb\nc").unwrap();
+        assert_eq!(toks[2].line, 3);
+    }
+
+    #[test]
+    fn rejects_bad_chars() {
+        assert!(lex("a @ b").is_err());
+    }
+}

@@ -1,0 +1,645 @@
+//! Recursive-descent parser for the CUDA C subset.
+
+use super::ast::*;
+use super::lexer::{lex, Tok, Token};
+use crate::error::{HetError, Result};
+
+struct P {
+    toks: Vec<Token>,
+    i: usize,
+}
+
+impl P {
+    fn peek(&self) -> &Tok {
+        &self.toks[self.i].tok
+    }
+    fn peek2(&self) -> &Tok {
+        &self.toks[(self.i + 1).min(self.toks.len() - 1)].tok
+    }
+    fn next(&mut self) -> Tok {
+        let t = self.toks[self.i].tok.clone();
+        if self.i + 1 < self.toks.len() {
+            self.i += 1;
+        }
+        t
+    }
+    fn err(&self, msg: impl Into<String>) -> HetError {
+        let t = &self.toks[self.i];
+        HetError::Frontend { line: t.line, col: t.col, msg: msg.into() }
+    }
+    fn eat(&mut self, t: &Tok) -> bool {
+        if self.peek() == t {
+            self.next();
+            true
+        } else {
+            false
+        }
+    }
+    fn expect(&mut self, t: &Tok) -> Result<()> {
+        if self.eat(t) {
+            Ok(())
+        } else {
+            Err(self.err(format!("expected {t:?}, found {:?}", self.peek())))
+        }
+    }
+    fn ident(&mut self) -> Result<String> {
+        match self.next() {
+            Tok::Ident(s) => Ok(s),
+            other => Err(self.err(format!("expected identifier, found {other:?}"))),
+        }
+    }
+
+    /// Try to parse a type specifier; returns None if the cursor isn't at
+    /// one (cursor restored).
+    fn try_type(&mut self) -> Option<FullType> {
+        let save = self.i;
+        let base = match self.peek() {
+            Tok::Ident(s) => match s.as_str() {
+                "void" => CType::Void,
+                "bool" => CType::Bool,
+                "float" => CType::Float,
+                "int" => CType::Int,
+                "size_t" => CType::Ulong,
+                "unsigned" => {
+                    self.next();
+                    // optional int / long long
+                    if let Tok::Ident(n) = self.peek().clone() {
+                        if n == "int" {
+                            self.next();
+                        } else if n == "long" {
+                            self.next();
+                            if let Tok::Ident(n2) = self.peek().clone() {
+                                if n2 == "long" {
+                                    self.next();
+                                }
+                            }
+                            let ptr = self.eat(&Tok::Star);
+                            return Some(FullType { base: CType::Ulong, ptr });
+                        }
+                    }
+                    let ptr = self.eat(&Tok::Star);
+                    return Some(FullType { base: CType::Uint, ptr });
+                }
+                "long" => {
+                    self.next();
+                    if let Tok::Ident(n) = self.peek().clone() {
+                        if n == "long" {
+                            self.next();
+                        }
+                    }
+                    let ptr = self.eat(&Tok::Star);
+                    return Some(FullType { base: CType::Long, ptr });
+                }
+                _ => {
+                    self.i = save;
+                    return None;
+                }
+            },
+            _ => return None,
+        };
+        self.next();
+        let ptr = self.eat(&Tok::Star);
+        Some(FullType { base, ptr })
+    }
+
+    // ---- expressions (precedence climbing) ----
+
+    fn expr(&mut self) -> Result<Expr> {
+        self.ternary()
+    }
+
+    fn ternary(&mut self) -> Result<Expr> {
+        let c = self.lor()?;
+        if self.eat(&Tok::Question) {
+            let a = self.expr()?;
+            self.expect(&Tok::Colon)?;
+            let b = self.ternary()?;
+            return Ok(Expr::Ternary(Box::new(c), Box::new(a), Box::new(b)));
+        }
+        Ok(c)
+    }
+
+    fn lor(&mut self) -> Result<Expr> {
+        let mut e = self.land()?;
+        while self.eat(&Tok::OrOr) {
+            let r = self.land()?;
+            e = Expr::Bin(Bo::LOr, Box::new(e), Box::new(r));
+        }
+        Ok(e)
+    }
+
+    fn land(&mut self) -> Result<Expr> {
+        let mut e = self.bitor()?;
+        while self.eat(&Tok::AndAnd) {
+            let r = self.bitor()?;
+            e = Expr::Bin(Bo::LAnd, Box::new(e), Box::new(r));
+        }
+        Ok(e)
+    }
+
+    fn bitor(&mut self) -> Result<Expr> {
+        let mut e = self.bitxor()?;
+        while self.eat(&Tok::Pipe) {
+            let r = self.bitxor()?;
+            e = Expr::Bin(Bo::Or, Box::new(e), Box::new(r));
+        }
+        Ok(e)
+    }
+
+    fn bitxor(&mut self) -> Result<Expr> {
+        let mut e = self.bitand()?;
+        while self.eat(&Tok::Caret) {
+            let r = self.bitand()?;
+            e = Expr::Bin(Bo::Xor, Box::new(e), Box::new(r));
+        }
+        Ok(e)
+    }
+
+    fn bitand(&mut self) -> Result<Expr> {
+        let mut e = self.equality()?;
+        while *self.peek() == Tok::Amp && *self.peek2() != Tok::Amp {
+            self.next();
+            let r = self.equality()?;
+            e = Expr::Bin(Bo::And, Box::new(e), Box::new(r));
+        }
+        Ok(e)
+    }
+
+    fn equality(&mut self) -> Result<Expr> {
+        let mut e = self.relational()?;
+        loop {
+            let op = match self.peek() {
+                Tok::EqEq => Bo::Eq,
+                Tok::Ne => Bo::Ne,
+                _ => break,
+            };
+            self.next();
+            let r = self.relational()?;
+            e = Expr::Bin(op, Box::new(e), Box::new(r));
+        }
+        Ok(e)
+    }
+
+    fn relational(&mut self) -> Result<Expr> {
+        let mut e = self.shift()?;
+        loop {
+            let op = match self.peek() {
+                Tok::Lt => Bo::Lt,
+                Tok::Le => Bo::Le,
+                Tok::Gt => Bo::Gt,
+                Tok::Ge => Bo::Ge,
+                _ => break,
+            };
+            self.next();
+            let r = self.shift()?;
+            e = Expr::Bin(op, Box::new(e), Box::new(r));
+        }
+        Ok(e)
+    }
+
+    fn shift(&mut self) -> Result<Expr> {
+        let mut e = self.additive()?;
+        loop {
+            let op = match self.peek() {
+                Tok::Shl => Bo::Shl,
+                Tok::Shr => Bo::Shr,
+                _ => break,
+            };
+            self.next();
+            let r = self.additive()?;
+            e = Expr::Bin(op, Box::new(e), Box::new(r));
+        }
+        Ok(e)
+    }
+
+    fn additive(&mut self) -> Result<Expr> {
+        let mut e = self.multiplicative()?;
+        loop {
+            let op = match self.peek() {
+                Tok::Plus => Bo::Add,
+                Tok::Minus => Bo::Sub,
+                _ => break,
+            };
+            self.next();
+            let r = self.multiplicative()?;
+            e = Expr::Bin(op, Box::new(e), Box::new(r));
+        }
+        Ok(e)
+    }
+
+    fn multiplicative(&mut self) -> Result<Expr> {
+        let mut e = self.unary()?;
+        loop {
+            let op = match self.peek() {
+                Tok::Star => Bo::Mul,
+                Tok::Slash => Bo::Div,
+                Tok::Percent => Bo::Rem,
+                _ => break,
+            };
+            self.next();
+            let r = self.unary()?;
+            e = Expr::Bin(op, Box::new(e), Box::new(r));
+        }
+        Ok(e)
+    }
+
+    fn unary(&mut self) -> Result<Expr> {
+        match self.peek().clone() {
+            Tok::Minus => {
+                self.next();
+                Ok(Expr::Un(Uo::Neg, Box::new(self.unary()?)))
+            }
+            Tok::Bang => {
+                self.next();
+                Ok(Expr::Un(Uo::Not, Box::new(self.unary()?)))
+            }
+            Tok::Tilde => {
+                self.next();
+                Ok(Expr::Un(Uo::BNot, Box::new(self.unary()?)))
+            }
+            Tok::Star => {
+                self.next();
+                Ok(Expr::Deref(Box::new(self.unary()?)))
+            }
+            Tok::Amp => {
+                self.next();
+                Ok(Expr::AddrOf(Box::new(self.unary()?)))
+            }
+            Tok::LParen => {
+                // cast or parenthesized expression
+                let save = self.i;
+                self.next();
+                if let Some(ty) = self.try_type() {
+                    if self.eat(&Tok::RParen) {
+                        return Ok(Expr::Cast(ty, Box::new(self.unary()?)));
+                    }
+                }
+                self.i = save;
+                self.next(); // consume '('
+                let e = self.expr()?;
+                self.expect(&Tok::RParen)?;
+                self.postfix(e)
+            }
+            _ => {
+                let e = self.primary()?;
+                self.postfix(e)
+            }
+        }
+    }
+
+    fn postfix(&mut self, mut e: Expr) -> Result<Expr> {
+        loop {
+            if self.eat(&Tok::LBracket) {
+                let idx = self.expr()?;
+                self.expect(&Tok::RBracket)?;
+                e = Expr::Index(Box::new(e), Box::new(idx));
+            } else {
+                break;
+            }
+        }
+        Ok(e)
+    }
+
+    fn primary(&mut self) -> Result<Expr> {
+        match self.next() {
+            Tok::IntLit(v) => Ok(Expr::IntLit(v)),
+            Tok::FloatLit(v) => Ok(Expr::FloatLit(v)),
+            Tok::Ident(name) => {
+                match name.as_str() {
+                    "true" => return Ok(Expr::BoolLit(true)),
+                    "false" => return Ok(Expr::BoolLit(false)),
+                    "threadIdx" | "blockIdx" | "blockDim" | "gridDim" => {
+                        self.expect(&Tok::Dot)?;
+                        let d = self.ident()?;
+                        let dim = match d.as_str() {
+                            "x" => 0,
+                            "y" => 1,
+                            "z" => 2,
+                            _ => return Err(self.err(format!("bad dim .{d}"))),
+                        };
+                        return Ok(Expr::Special(name, dim));
+                    }
+                    _ => {}
+                }
+                if self.eat(&Tok::LParen) {
+                    let mut args = Vec::new();
+                    if !self.eat(&Tok::RParen) {
+                        loop {
+                            args.push(self.expr()?);
+                            if self.eat(&Tok::RParen) {
+                                break;
+                            }
+                            self.expect(&Tok::Comma)?;
+                        }
+                    }
+                    Ok(Expr::Call(name, args))
+                } else {
+                    Ok(Expr::Var(name))
+                }
+            }
+            other => Err(self.err(format!("unexpected token {other:?} in expression"))),
+        }
+    }
+
+    // ---- statements ----
+
+    fn block(&mut self) -> Result<Vec<CStmt>> {
+        self.expect(&Tok::LBrace)?;
+        let mut out = Vec::new();
+        while !self.eat(&Tok::RBrace) {
+            out.push(self.stmt()?);
+        }
+        Ok(out)
+    }
+
+    /// Parse a simple (no-semicolon) statement: declaration or
+    /// assignment/expression — used by `for(...)` clauses.
+    fn simple_stmt(&mut self) -> Result<CStmt> {
+        if let Some(ty) = self.try_type() {
+            if ty.base == CType::Void && !ty.ptr {
+                return Err(self.err("void variable"));
+            }
+            let name = self.ident()?;
+            let init = if self.eat(&Tok::Assign) { Some(self.expr()?) } else { None };
+            return Ok(CStmt::Decl { ty, name, init });
+        }
+        // assignment / inc-dec / expression
+        let lhs = self.expr()?;
+        let op = match self.peek() {
+            Tok::Assign => {
+                self.next();
+                return Ok(CStmt::Assign { lhs, op: None, rhs: self.expr()? });
+            }
+            Tok::PlusEq => Some(Bo::Add),
+            Tok::MinusEq => Some(Bo::Sub),
+            Tok::StarEq => Some(Bo::Mul),
+            Tok::SlashEq => Some(Bo::Div),
+            Tok::PercentEq => Some(Bo::Rem),
+            Tok::AmpEq => Some(Bo::And),
+            Tok::PipeEq => Some(Bo::Or),
+            Tok::CaretEq => Some(Bo::Xor),
+            Tok::ShlEq => Some(Bo::Shl),
+            Tok::ShrEq => Some(Bo::Shr),
+            Tok::PlusPlus => {
+                self.next();
+                return Ok(CStmt::Assign { lhs, op: Some(Bo::Add), rhs: Expr::IntLit(1) });
+            }
+            Tok::MinusMinus => {
+                self.next();
+                return Ok(CStmt::Assign { lhs, op: Some(Bo::Sub), rhs: Expr::IntLit(1) });
+            }
+            _ => return Ok(CStmt::ExprStmt(lhs)),
+        };
+        self.next();
+        let rhs = self.expr()?;
+        Ok(CStmt::Assign { lhs, op, rhs })
+    }
+
+    fn stmt(&mut self) -> Result<CStmt> {
+        match self.peek().clone() {
+            Tok::LBrace => Ok(CStmt::Block(self.block()?)),
+            Tok::Ident(kw) => match kw.as_str() {
+                "if" => {
+                    self.next();
+                    self.expect(&Tok::LParen)?;
+                    let cond = self.expr()?;
+                    self.expect(&Tok::RParen)?;
+                    let then_b = self.stmt_as_block()?;
+                    let else_b = if matches!(self.peek(), Tok::Ident(s) if s == "else") {
+                        self.next();
+                        self.stmt_as_block()?
+                    } else {
+                        Vec::new()
+                    };
+                    Ok(CStmt::If { cond, then_b, else_b })
+                }
+                "while" => {
+                    self.next();
+                    self.expect(&Tok::LParen)?;
+                    let cond = self.expr()?;
+                    self.expect(&Tok::RParen)?;
+                    let body = self.stmt_as_block()?;
+                    Ok(CStmt::While { cond, body })
+                }
+                "for" => {
+                    self.next();
+                    self.expect(&Tok::LParen)?;
+                    let init = if self.eat(&Tok::Semi) {
+                        None
+                    } else {
+                        let s = self.simple_stmt()?;
+                        self.expect(&Tok::Semi)?;
+                        Some(Box::new(s))
+                    };
+                    let cond = if *self.peek() == Tok::Semi { None } else { Some(self.expr()?) };
+                    self.expect(&Tok::Semi)?;
+                    let inc = if *self.peek() == Tok::RParen {
+                        None
+                    } else {
+                        Some(Box::new(self.simple_stmt()?))
+                    };
+                    self.expect(&Tok::RParen)?;
+                    let body = self.stmt_as_block()?;
+                    Ok(CStmt::For { init, cond, inc, body })
+                }
+                "break" => {
+                    self.next();
+                    self.expect(&Tok::Semi)?;
+                    Ok(CStmt::Break)
+                }
+                "continue" => {
+                    self.next();
+                    self.expect(&Tok::Semi)?;
+                    Ok(CStmt::Continue)
+                }
+                "return" => {
+                    self.next();
+                    self.expect(&Tok::Semi)?;
+                    Ok(CStmt::Return)
+                }
+                "__shared__" => {
+                    self.next();
+                    let ty = self
+                        .try_type()
+                        .ok_or_else(|| self.err("expected type after __shared__"))?;
+                    if ty.ptr {
+                        return Err(self.err("__shared__ pointers unsupported"));
+                    }
+                    let name = self.ident()?;
+                    self.expect(&Tok::LBracket)?;
+                    let n = match self.next() {
+                        Tok::IntLit(v) if v > 0 => v as u64,
+                        _ => return Err(self.err("__shared__ size must be a positive literal")),
+                    };
+                    self.expect(&Tok::RBracket)?;
+                    self.expect(&Tok::Semi)?;
+                    Ok(CStmt::SharedDecl { ty: ty.base, name, elems: n })
+                }
+                _ => {
+                    let s = self.simple_stmt()?;
+                    self.expect(&Tok::Semi)?;
+                    Ok(s)
+                }
+            },
+            _ => {
+                let s = self.simple_stmt()?;
+                self.expect(&Tok::Semi)?;
+                Ok(s)
+            }
+        }
+    }
+
+    fn stmt_as_block(&mut self) -> Result<Vec<CStmt>> {
+        if *self.peek() == Tok::LBrace {
+            self.block()
+        } else {
+            Ok(vec![self.stmt()?])
+        }
+    }
+
+    fn kernel(&mut self) -> Result<KernelDef> {
+        // `__global__ void name(params) { body }`
+        match self.next() {
+            Tok::Ident(s) if s == "__global__" => {}
+            other => return Err(self.err(format!("expected __global__, found {other:?}"))),
+        }
+        match self.try_type() {
+            Some(FullType { base: CType::Void, ptr: false }) => {}
+            _ => return Err(self.err("kernels must return void")),
+        }
+        let name = self.ident()?;
+        self.expect(&Tok::LParen)?;
+        let mut params = Vec::new();
+        if !self.eat(&Tok::RParen) {
+            loop {
+                // tolerate `const`
+                if matches!(self.peek(), Tok::Ident(s) if s == "const") {
+                    self.next();
+                }
+                let ty = self.try_type().ok_or_else(|| self.err("expected parameter type"))?;
+                let pname = self.ident()?;
+                params.push(KParam { ty, name: pname });
+                if self.eat(&Tok::RParen) {
+                    break;
+                }
+                self.expect(&Tok::Comma)?;
+            }
+        }
+        let body = self.block()?;
+        Ok(KernelDef { name, params, body })
+    }
+}
+
+/// Parse a translation unit (one or more `__global__` kernels).
+pub fn parse_unit(src: &str) -> Result<Unit> {
+    let toks = lex(src)?;
+    let mut p = P { toks, i: 0 };
+    let mut unit = Unit::default();
+    while *p.peek() != Tok::Eof {
+        unit.kernels.push(p.kernel()?);
+    }
+    if unit.kernels.is_empty() {
+        return Err(HetError::Frontend { line: 1, col: 1, msg: "no kernels found".into() });
+    }
+    Ok(unit)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_vadd() {
+        let u = parse_unit(
+            r#"__global__ void vadd(float* a, float* b, float* c, unsigned n) {
+                unsigned i = blockIdx.x * blockDim.x + threadIdx.x;
+                if (i < n) c[i] = a[i] + b[i];
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(u.kernels.len(), 1);
+        let k = &u.kernels[0];
+        assert_eq!(k.name, "vadd");
+        assert_eq!(k.params.len(), 4);
+        assert!(k.params[0].ty.ptr);
+        assert!(!k.params[3].ty.ptr);
+    }
+
+    #[test]
+    fn parses_for_loop_and_shared() {
+        let u = parse_unit(
+            r#"__global__ void k(float* x) {
+                __shared__ float tile[256];
+                float acc = 0.0f;
+                for (int j = 0; j < 16; j++) {
+                    acc += tile[j];
+                    __syncthreads();
+                }
+                x[threadIdx.x] = acc;
+            }"#,
+        )
+        .unwrap();
+        let body = &u.kernels[0].body;
+        assert!(matches!(body[0], CStmt::SharedDecl { elems: 256, .. }));
+        assert!(matches!(body[2], CStmt::For { .. }));
+    }
+
+    #[test]
+    fn parses_intrinsics_and_atomics() {
+        let u = parse_unit(
+            r#"__global__ void k(unsigned* c) {
+                unsigned m = __ballot_sync(0xffffffffu, threadIdx.x % 2 == 0);
+                atomicAdd(&c[0], __popc(m));
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(u.kernels[0].body.len(), 2);
+    }
+
+    #[test]
+    fn parses_multiple_kernels() {
+        let u = parse_unit(
+            "__global__ void a(float* p) { p[0] = 1.0f; }
+             __global__ void b(float* p) { p[0] = 2.0f; }",
+        )
+        .unwrap();
+        assert_eq!(u.kernels.len(), 2);
+    }
+
+    #[test]
+    fn parses_casts_and_ternary() {
+        let u = parse_unit(
+            "__global__ void k(float* p, int n) {
+                 float f = (float)n;
+                 p[0] = n > 0 ? f : -f;
+             }",
+        )
+        .unwrap();
+        assert!(matches!(
+            u.kernels[0].body[0],
+            CStmt::Decl { init: Some(Expr::Cast(..)), .. }
+        ));
+    }
+
+    #[test]
+    fn rejects_nonvoid_kernel() {
+        assert!(parse_unit("__global__ int k() {}").is_err());
+    }
+
+    #[test]
+    fn parses_while_break_continue() {
+        let u = parse_unit(
+            "__global__ void k(unsigned* p) {
+                 unsigned s = 1u;
+                 while (true) {
+                     s = hetgpu_rand(s);
+                     if (s % 2u == 0u) continue;
+                     if (s > 100u) break;
+                 }
+                 p[threadIdx.x] = s;
+             }",
+        )
+        .unwrap();
+        assert!(matches!(u.kernels[0].body[1], CStmt::While { .. }));
+    }
+}

@@ -1,0 +1,376 @@
+//! Convenience builder for constructing hetIR kernels programmatically.
+//!
+//! Used by the CUDA-subset frontend's codegen and by hand-written kernels in
+//! tests/benches. The builder keeps a stack of open statement blocks so
+//! structured control flow nests via closures:
+//!
+//! ```no_run
+//! use hetgpu::hetir::builder::KernelBuilder;
+//! use hetgpu::hetir::types::{AddrSpace, Type, Scalar};
+//! use hetgpu::hetir::instr::{Address, CmpOp, Dim, SpecialReg};
+//!
+//! let mut b = KernelBuilder::new("vadd");
+//! let a = b.param("A", Type::PTR_GLOBAL);
+//! let x = b.param("X", Type::PTR_GLOBAL);
+//! let n = b.param("N", Type::U32);
+//! let i = b.special(SpecialReg::GlobalId(Dim::X));
+//! let p = b.cmp(CmpOp::Lt, Scalar::U32, i.into(), n.into());
+//! b.if_(p, |b| {
+//!     let v = b.ld(AddrSpace::Global, Scalar::F32, Address::indexed(a, i, 4));
+//!     b.st(AddrSpace::Global, Scalar::F32, Address::indexed(x, i, 4), v.into());
+//! });
+//! let kernel = b.finish();
+//! assert_eq!(kernel.name, "vadd");
+//! ```
+
+use super::instr::*;
+use super::module::{Kernel, Param, Stmt};
+use super::passes;
+use super::types::{AddrSpace, Scalar, Type, Value};
+
+/// Re-export so builder call sites read naturally.
+pub type AddrSpaceArg = AddrSpace;
+
+/// Builder for a single kernel.
+pub struct KernelBuilder {
+    kernel: Kernel,
+    /// Stack of open statement blocks; `stack[0]` is the kernel body.
+    stack: Vec<Vec<Stmt>>,
+}
+
+impl KernelBuilder {
+    pub fn new(name: impl Into<String>) -> KernelBuilder {
+        KernelBuilder { kernel: Kernel::new(name), stack: vec![Vec::new()] }
+    }
+
+    /// Declare a kernel parameter. Parameters occupy the first registers.
+    pub fn param(&mut self, name: impl Into<String>, ty: Type) -> Reg {
+        assert!(
+            self.kernel.reg_types.len() == self.kernel.params.len(),
+            "params must be declared before any other registers"
+        );
+        let r = self.kernel.new_reg(ty);
+        self.kernel.params.push(Param { name: name.into(), ty });
+        r
+    }
+
+    /// Reserve `bytes` of block-shared memory, returning a pointer register
+    /// pre-set to the current offset (so multiple `__shared__` arrays pack).
+    pub fn shared_alloc(&mut self, bytes: u64) -> Reg {
+        let off = self.kernel.shared_bytes;
+        self.kernel.shared_bytes += (bytes + 15) & !15; // 16-byte align
+        let r = self.kernel.new_reg(Type::PTR_SHARED);
+        self.push(Inst::Mov { dst: r, src: Operand::Imm(Value::ptr(off, AddrSpace::Shared)) });
+        r
+    }
+
+    /// Allocate a fresh register.
+    pub fn reg(&mut self, ty: Type) -> Reg {
+        self.kernel.new_reg(ty)
+    }
+
+    /// Append a raw instruction.
+    pub fn push(&mut self, i: Inst) {
+        self.stack.last_mut().unwrap().push(Stmt::I(i));
+    }
+
+    // ---- instruction conveniences (allocate dst, append, return dst) ----
+
+    pub fn special(&mut self, kind: SpecialReg) -> Reg {
+        let dst = self.reg(Type::U32);
+        self.push(Inst::Special { dst, kind });
+        dst
+    }
+
+    pub fn mov(&mut self, ty: Type, src: Operand) -> Reg {
+        let dst = self.reg(ty);
+        self.push(Inst::Mov { dst, src });
+        dst
+    }
+
+    pub fn imm_u32(&mut self, v: u32) -> Operand {
+        Operand::Imm(Value::u32(v))
+    }
+
+    pub fn imm_f32(&mut self, v: f32) -> Operand {
+        Operand::Imm(Value::f32(v))
+    }
+
+    pub fn bin(&mut self, op: BinOp, ty: Scalar, a: Operand, b: Operand) -> Reg {
+        let dst = self.reg(Type::Scalar(ty));
+        self.push(Inst::Bin { op, ty, dst, a, b });
+        dst
+    }
+
+    /// Binary op writing into an existing register (for loop-carried vars).
+    pub fn bin_into(&mut self, dst: Reg, op: BinOp, ty: Scalar, a: Operand, b: Operand) {
+        self.push(Inst::Bin { op, ty, dst, a, b });
+    }
+
+    pub fn un(&mut self, op: UnOp, ty: Scalar, a: Operand) -> Reg {
+        let dst = self.reg(Type::Scalar(ty));
+        self.push(Inst::Un { op, ty, dst, a });
+        dst
+    }
+
+    pub fn fma(&mut self, ty: Scalar, a: Operand, b: Operand, c: Operand) -> Reg {
+        let dst = self.reg(Type::Scalar(ty));
+        self.push(Inst::Fma { ty, dst, a, b, c });
+        dst
+    }
+
+    pub fn cmp(&mut self, op: CmpOp, ty: Scalar, a: Operand, b: Operand) -> Reg {
+        let dst = self.reg(Type::PRED);
+        self.push(Inst::Cmp { op, ty, dst, a, b });
+        dst
+    }
+
+    pub fn sel(&mut self, ty: Type, cond: Operand, a: Operand, b: Operand) -> Reg {
+        let dst = self.reg(ty);
+        self.push(Inst::Sel { dst, cond, a, b });
+        dst
+    }
+
+    pub fn cvt(&mut self, from: Scalar, to: Scalar, src: Operand) -> Reg {
+        let dst = self.reg(Type::Scalar(to));
+        self.push(Inst::Cvt { from, to, dst, src });
+        dst
+    }
+
+    /// Pointer arithmetic producing a new pointer register of the same
+    /// address space as `addr.base`.
+    pub fn ptr_add(&mut self, space: AddrSpace, addr: Address) -> Reg {
+        let dst = self.reg(Type::Ptr(space));
+        self.push(Inst::PtrAdd { dst, addr });
+        dst
+    }
+
+    pub fn ld(&mut self, space: AddrSpace, ty: Scalar, addr: Address) -> Reg {
+        let dst = self.reg(Type::Scalar(ty));
+        self.push(Inst::Ld { space, ty, dst, addr });
+        dst
+    }
+
+    pub fn st(&mut self, space: AddrSpace, ty: Scalar, addr: Address, val: Operand) {
+        self.push(Inst::St { space, ty, addr, val });
+    }
+
+    pub fn atom(
+        &mut self,
+        op: AtomOp,
+        space: AddrSpace,
+        ty: Scalar,
+        addr: Address,
+        val: Operand,
+    ) -> Reg {
+        let dst = self.reg(Type::Scalar(ty));
+        self.push(Inst::Atom { op, space, ty, dst: Some(dst), addr, val, val2: None });
+        dst
+    }
+
+    /// Barrier; the id is provisional (the segmenter pass renumbers).
+    pub fn bar(&mut self) {
+        self.push(Inst::Bar { id: u32::MAX });
+    }
+
+    pub fn fence(&mut self, scope: FenceScope) {
+        self.push(Inst::Fence { scope });
+    }
+
+    pub fn vote(&mut self, kind: VoteKind, src: Operand) -> Reg {
+        let dst = self.reg(Type::PRED);
+        self.push(Inst::Vote { kind, dst, src });
+        dst
+    }
+
+    pub fn ballot(&mut self, src: Operand) -> Reg {
+        let dst = self.reg(Type::U32);
+        self.push(Inst::Ballot { dst, src });
+        dst
+    }
+
+    pub fn shfl(&mut self, kind: ShflKind, ty: Scalar, val: Operand, lane: Operand) -> Reg {
+        let dst = self.reg(Type::Scalar(ty));
+        self.push(Inst::Shfl { kind, ty, dst, val, lane });
+        dst
+    }
+
+    pub fn rng(&mut self, state: Reg) -> Reg {
+        let dst = self.reg(Type::U32);
+        self.push(Inst::Rng { dst, state });
+        dst
+    }
+
+    pub fn ret(&mut self) {
+        self.stack.last_mut().unwrap().push(Stmt::Return);
+    }
+
+    pub fn brk(&mut self) {
+        self.stack.last_mut().unwrap().push(Stmt::Break);
+    }
+
+    pub fn cont(&mut self) {
+        self.stack.last_mut().unwrap().push(Stmt::Continue);
+    }
+
+    // ---- low-level block API (used by frontend codegen, which cannot
+    // thread its own state through the closure-style API below) ----
+
+    /// Open a fresh statement block; closed by [`Self::pop_block`].
+    pub fn push_block(&mut self) {
+        self.stack.push(Vec::new());
+    }
+
+    /// Close the innermost open block and return its statements.
+    pub fn pop_block(&mut self) -> Vec<Stmt> {
+        assert!(self.stack.len() > 1, "pop_block on kernel body");
+        self.stack.pop().unwrap()
+    }
+
+    /// Append an arbitrary structured statement.
+    pub fn push_stmt(&mut self, s: Stmt) {
+        self.stack.last_mut().unwrap().push(s);
+    }
+
+    // ---- structured control flow ----
+
+    /// `if (cond) { then }`.
+    pub fn if_(&mut self, cond: Reg, then_f: impl FnOnce(&mut Self)) {
+        self.stack.push(Vec::new());
+        then_f(self);
+        let then_b = self.stack.pop().unwrap();
+        self.stack.last_mut().unwrap().push(Stmt::If { cond, then_b, else_b: Vec::new() });
+    }
+
+    /// `if (cond) { then } else { else }`.
+    pub fn if_else(
+        &mut self,
+        cond: Reg,
+        then_f: impl FnOnce(&mut Self),
+        else_f: impl FnOnce(&mut Self),
+    ) {
+        self.stack.push(Vec::new());
+        then_f(self);
+        let then_b = self.stack.pop().unwrap();
+        self.stack.push(Vec::new());
+        else_f(self);
+        let else_b = self.stack.pop().unwrap();
+        self.stack.last_mut().unwrap().push(Stmt::If { cond, then_b, else_b });
+    }
+
+    /// Structured while loop: `cond_f` emits the condition computation and
+    /// returns the predicate register; `body_f` emits the body.
+    pub fn while_(
+        &mut self,
+        cond_f: impl FnOnce(&mut Self) -> Reg,
+        body_f: impl FnOnce(&mut Self),
+    ) {
+        self.stack.push(Vec::new());
+        let cond_reg = cond_f(self);
+        let cond = self.stack.pop().unwrap();
+        self.stack.push(Vec::new());
+        body_f(self);
+        let body = self.stack.pop().unwrap();
+        self.stack.last_mut().unwrap().push(Stmt::While { cond, cond_reg, body });
+    }
+
+    /// Counted loop helper: `for (i = start; i < end; i += step)` over u32,
+    /// with `i` exposed to the body. Returns the induction register.
+    pub fn for_u32(
+        &mut self,
+        start: Operand,
+        end: Operand,
+        step: u32,
+        body_f: impl FnOnce(&mut Self, Reg),
+    ) -> Reg {
+        let i = self.mov(Type::U32, start);
+        self.while_(
+            |b| b.cmp(CmpOp::Lt, Scalar::U32, i.into(), end),
+            |b| {
+                body_f(b, i);
+                b.bin_into(i, BinOp::Add, Scalar::U32, i.into(), Operand::Imm(Value::u32(step)));
+            },
+        );
+        i
+    }
+
+    /// Finish the kernel: closes the body, assigns barrier ids (segmenter)
+    /// and computes suspension-point liveness.
+    pub fn finish(mut self) -> Kernel {
+        assert_eq!(self.stack.len(), 1, "unclosed control-flow block");
+        self.kernel.body = self.stack.pop().unwrap();
+        passes::segmenter::run(&mut self.kernel);
+        passes::liveness::run(&mut self.kernel);
+        self.kernel
+    }
+
+    /// Finish without running passes (for parser/pass unit tests).
+    pub fn finish_raw(mut self) -> Kernel {
+        assert_eq!(self.stack.len(), 1, "unclosed control-flow block");
+        self.kernel.body = self.stack.pop().unwrap();
+        self.kernel
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_vadd_shape() {
+        let mut b = KernelBuilder::new("vadd");
+        let a = b.param("A", Type::PTR_GLOBAL);
+        let c = b.param("C", Type::PTR_GLOBAL);
+        let n = b.param("N", Type::U32);
+        let i = b.special(SpecialReg::GlobalId(Dim::X));
+        let p = b.cmp(CmpOp::Lt, Scalar::U32, i.into(), n.into());
+        b.if_(p, |b| {
+            let v = b.ld(AddrSpace::Global, Scalar::F32, Address::indexed(a, i, 4));
+            b.st(AddrSpace::Global, Scalar::F32, Address::indexed(c, i, 4), v.into());
+        });
+        let k = b.finish();
+        assert_eq!(k.params.len(), 3);
+        assert_eq!(k.inst_count(), 4);
+        assert_eq!(k.num_barriers, 0);
+    }
+
+    #[test]
+    fn nested_loops_and_barriers_get_ids() {
+        let mut b = KernelBuilder::new("k");
+        let n = b.param("N", Type::U32);
+        b.for_u32(Operand::Imm(Value::u32(0)), n.into(), 1, |b, _i| {
+            b.bar();
+        });
+        b.bar();
+        let k = b.finish();
+        assert_eq!(k.num_barriers, 2);
+        // barrier ids are distinct and dense
+        let mut ids = vec![];
+        k.visit_insts(|i| {
+            if let Inst::Bar { id } = i {
+                ids.push(*id);
+            }
+        });
+        ids.sort();
+        assert_eq!(ids, vec![0, 1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "params must be declared before")]
+    fn params_after_regs_panics() {
+        let mut b = KernelBuilder::new("k");
+        b.reg(Type::F32);
+        b.param("late", Type::U32);
+    }
+
+    #[test]
+    fn shared_alloc_packs_aligned() {
+        let mut b = KernelBuilder::new("k");
+        let s0 = b.shared_alloc(20);
+        let s1 = b.shared_alloc(4);
+        let k = b.finish();
+        assert_eq!(k.shared_bytes, 32 + 16);
+        assert_eq!(k.reg_ty(s0), Type::PTR_SHARED);
+        assert_eq!(k.reg_ty(s1), Type::PTR_SHARED);
+    }
+}

@@ -1,0 +1,475 @@
+//! hetIR instruction set.
+//!
+//! hetIR is an SPMD, *structured-control-flow* IR (paper §4.1):
+//!
+//! * Threads are conceptually independent; no warp size is baked in.
+//! * Divergence is expressed with structured `If`/`While` regions whose
+//!   reconvergence points are implicit in the structure — SIMT backends map
+//!   these to hardware divergence (mask stacks / SSY-SYNC), MIMD backends to
+//!   real branches (scalar mode) or vector masks (vectorized-warp mode).
+//! * Synchronization is explicit: `Bar` is a block-wide barrier, and every
+//!   barrier is a **safe suspension point** for checkpoint/migration.
+//! * Team-level operations (`Vote`, `Ballot`, `Shfl`) are virtualized: the
+//!   backend implements them with warp intrinsics where the hardware has
+//!   them, and with reductions/staging buffers where it does not.
+//!
+//! Registers are typed virtual registers with PTX-like assign-many
+//! semantics (not strict SSA) — this keeps the frontend simple and makes a
+//! snapshot literally "the register file", as the paper's state
+//! representation requires.
+
+use super::types::{AddrSpace, Scalar, Value};
+use std::fmt;
+
+/// A virtual register id. Each kernel owns a flat, typed register file.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Reg(pub u32);
+
+impl fmt::Display for Reg {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "%r{}", self.0)
+    }
+}
+
+/// An instruction operand: a register or an immediate constant.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Operand {
+    Reg(Reg),
+    Imm(Value),
+}
+
+impl Operand {
+    /// The register, if this operand is one.
+    pub fn reg(&self) -> Option<Reg> {
+        match self {
+            Operand::Reg(r) => Some(*r),
+            Operand::Imm(_) => None,
+        }
+    }
+}
+
+impl From<Reg> for Operand {
+    fn from(r: Reg) -> Self {
+        Operand::Reg(r)
+    }
+}
+
+impl From<Value> for Operand {
+    fn from(v: Value) -> Self {
+        Operand::Imm(v)
+    }
+}
+
+/// Grid/block index dimension.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dim {
+    X,
+    Y,
+    Z,
+}
+
+impl Dim {
+    pub fn index(self) -> usize {
+        match self {
+            Dim::X => 0,
+            Dim::Y => 1,
+            Dim::Z => 2,
+        }
+    }
+    pub fn from_index(i: usize) -> Dim {
+        match i {
+            0 => Dim::X,
+            1 => Dim::Y,
+            _ => Dim::Z,
+        }
+    }
+}
+
+impl fmt::Display for Dim {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Dim::X => write!(f, "x"),
+            Dim::Y => write!(f, "y"),
+            Dim::Z => write!(f, "z"),
+        }
+    }
+}
+
+/// Special (read-only) per-thread registers, CUDA-style.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SpecialReg {
+    /// Thread index within the block (u32).
+    ThreadIdx(Dim),
+    /// Block index within the grid (u32).
+    BlockIdx(Dim),
+    /// Block dimensions (u32).
+    BlockDim(Dim),
+    /// Grid dimensions (u32).
+    GridDim(Dim),
+    /// Convenience: `blockIdx*blockDim + threadIdx` (u32) — the paper's
+    /// `GET_GLOBAL_ID` opcode.
+    GlobalId(Dim),
+}
+
+/// Binary arithmetic / bitwise operations. The `ty` on the instruction
+/// selects the interpretation (signed/unsigned/float).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    /// Division. Integer division by zero is a device fault (as on real
+    /// GPUs it yields undefined results; we choose to trap in the sim).
+    Div,
+    Rem,
+    Min,
+    Max,
+    And,
+    Or,
+    Xor,
+    Shl,
+    /// Shift right: arithmetic for signed `ty`, logical for unsigned.
+    Shr,
+}
+
+/// Unary operations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum UnOp {
+    Neg,
+    /// Bitwise not for ints, logical not for predicates.
+    Not,
+    Abs,
+    Sqrt,
+    Rsqrt,
+    Exp,
+    Log,
+    Sin,
+    Cos,
+    /// Population count (int → u32).
+    Popc,
+}
+
+/// Comparison predicates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CmpOp {
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+}
+
+/// Atomic read-modify-write operations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AtomOp {
+    Add,
+    Min,
+    Max,
+    Exch,
+    /// Compare-and-swap: `val` is the compare value, `val2` the new value.
+    Cas,
+    And,
+    Or,
+}
+
+/// Warp/team vote flavors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum VoteKind {
+    Any,
+    All,
+}
+
+/// Shuffle flavors (CUDA `__shfl_*_sync` family).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ShflKind {
+    /// Read from absolute lane `lane`.
+    Idx,
+    /// Read from `self_lane + lane`.
+    Down,
+    /// Read from `self_lane - lane`.
+    Up,
+    /// Read from `self_lane ^ lane`.
+    Xor,
+}
+
+/// A memory address expression: `[%base + %index * scale + disp]`.
+///
+/// Keeping the index/scale explicit (instead of pre-folding into the base)
+/// lets the Tensix backend turn strided loads into DMA descriptors and the
+/// SIMT cost model detect coalesced access patterns.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Address {
+    /// Base pointer register (must be `Ptr(space)`-typed matching the op).
+    pub base: Reg,
+    /// Optional index register (integer-typed).
+    pub index: Option<Reg>,
+    /// Byte scale applied to the index.
+    pub scale: u32,
+    /// Constant byte displacement.
+    pub disp: i64,
+}
+
+impl Address {
+    pub fn base(base: Reg) -> Address {
+        Address { base, index: None, scale: 1, disp: 0 }
+    }
+    pub fn indexed(base: Reg, index: Reg, scale: u32) -> Address {
+        Address { base, index: Some(index), scale, disp: 0 }
+    }
+    pub fn with_disp(mut self, disp: i64) -> Address {
+        self.disp = disp;
+        self
+    }
+}
+
+/// Memory fence scope.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FenceScope {
+    /// Orders accesses for threads in the same block.
+    Block,
+    /// Orders accesses device-wide.
+    Device,
+}
+
+/// A straight-line hetIR instruction (control flow lives in [`super::module::Stmt`]).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Inst {
+    /// Read a special register into `dst`.
+    Special { dst: Reg, kind: SpecialReg },
+    /// Copy/materialize a value.
+    Mov { dst: Reg, src: Operand },
+    /// `dst = a <op> b` in type `ty`.
+    Bin { op: BinOp, ty: Scalar, dst: Reg, a: Operand, b: Operand },
+    /// `dst = <op> a` in type `ty`.
+    Un { op: UnOp, ty: Scalar, dst: Reg, a: Operand },
+    /// Fused multiply-add: `dst = a * b + c` (float only).
+    Fma { ty: Scalar, dst: Reg, a: Operand, b: Operand, c: Operand },
+    /// `dst(pred) = a <cmp> b` comparing in type `ty`.
+    Cmp { op: CmpOp, ty: Scalar, dst: Reg, a: Operand, b: Operand },
+    /// `dst = cond ? a : b`.
+    Sel { dst: Reg, cond: Operand, a: Operand, b: Operand },
+    /// Convert `src` (of type `from`) to `to`, storing in `dst`.
+    Cvt { from: Scalar, to: Scalar, dst: Reg, src: Operand },
+    /// Pointer arithmetic: `dst(ptr) = base + index*scale + disp` — kept
+    /// distinct from `Bin` so pointer-typed dataflow stays visible to the
+    /// migration pointer-rebasing machinery.
+    PtrAdd { dst: Reg, addr: Address },
+    /// Load `ty` from `space` at `addr`.
+    Ld { space: AddrSpace, ty: Scalar, dst: Reg, addr: Address },
+    /// Store `ty` to `space` at `addr`.
+    St { space: AddrSpace, ty: Scalar, addr: Address, val: Operand },
+    /// Atomic RMW. `dst` receives the old value if present.
+    /// For `Cas`, `val` is the expected value and `val2` the replacement.
+    Atom {
+        op: AtomOp,
+        space: AddrSpace,
+        ty: Scalar,
+        dst: Option<Reg>,
+        addr: Address,
+        val: Operand,
+        val2: Option<Operand>,
+    },
+    /// Block-wide barrier. `id` is assigned by the segmenter pass and names
+    /// the suspension point / migration segment boundary.
+    Bar { id: u32 },
+    /// Memory fence.
+    Fence { scope: FenceScope },
+    /// Team vote: `dst(pred) = any/all(pred over team)`.
+    Vote { kind: VoteKind, dst: Reg, src: Operand },
+    /// Team ballot: `dst(u32) = bitmask of lanes where src is true`.
+    Ballot { dst: Reg, src: Operand },
+    /// Team shuffle: `dst = value of `val` in the lane selected by `kind`/`lane``.
+    Shfl { kind: ShflKind, ty: Scalar, dst: Reg, val: Operand, lane: Operand },
+    /// Simple xorshift PRNG step: `dst = xorshift32(state)`; `state` is
+    /// updated in place. Virtualized so that every backend produces the
+    /// *same* random sequence — required for bit-reproducible migration of
+    /// the Monte-Carlo workload across architectures.
+    Rng { dst: Reg, state: Reg },
+    /// Abort the kernel with an error code (device-side assert).
+    Trap { code: u32 },
+}
+
+impl Inst {
+    /// The register this instruction defines, if any.
+    pub fn def(&self) -> Option<Reg> {
+        match self {
+            Inst::Special { dst, .. }
+            | Inst::Mov { dst, .. }
+            | Inst::Bin { dst, .. }
+            | Inst::Un { dst, .. }
+            | Inst::Fma { dst, .. }
+            | Inst::Cmp { dst, .. }
+            | Inst::Sel { dst, .. }
+            | Inst::Cvt { dst, .. }
+            | Inst::PtrAdd { dst, .. }
+            | Inst::Ld { dst, .. }
+            | Inst::Vote { dst, .. }
+            | Inst::Ballot { dst, .. }
+            | Inst::Shfl { dst, .. }
+            | Inst::Rng { dst, .. } => Some(*dst),
+            Inst::Atom { dst, .. } => *dst,
+            Inst::St { .. } | Inst::Bar { .. } | Inst::Fence { .. } | Inst::Trap { .. } => None,
+        }
+    }
+
+    /// Collect the registers this instruction reads.
+    pub fn uses(&self, out: &mut Vec<Reg>) {
+        fn op(o: &Operand, out: &mut Vec<Reg>) {
+            if let Operand::Reg(r) = o {
+                out.push(*r);
+            }
+        }
+        fn addr(a: &Address, out: &mut Vec<Reg>) {
+            out.push(a.base);
+            if let Some(i) = a.index {
+                out.push(i);
+            }
+        }
+        match self {
+            Inst::Special { .. } | Inst::Bar { .. } | Inst::Fence { .. } | Inst::Trap { .. } => {}
+            Inst::Mov { src, .. } => op(src, out),
+            Inst::Bin { a, b, .. } | Inst::Cmp { a, b, .. } => {
+                op(a, out);
+                op(b, out);
+            }
+            Inst::Un { a, .. } => op(a, out),
+            Inst::Fma { a, b, c, .. } => {
+                op(a, out);
+                op(b, out);
+                op(c, out);
+            }
+            Inst::Sel { cond, a, b, .. } => {
+                op(cond, out);
+                op(a, out);
+                op(b, out);
+            }
+            Inst::Cvt { src, .. } => op(src, out),
+            Inst::PtrAdd { addr: a, .. } => addr(a, out),
+            Inst::Ld { addr: a, .. } => addr(a, out),
+            Inst::St { addr: a, val, .. } => {
+                addr(a, out);
+                op(val, out);
+            }
+            Inst::Atom { addr: a, val, val2, .. } => {
+                addr(a, out);
+                op(val, out);
+                if let Some(v2) = val2 {
+                    op(v2, out);
+                }
+            }
+            Inst::Vote { src, .. } | Inst::Ballot { src, .. } => op(src, out),
+            Inst::Shfl { val, lane, .. } => {
+                op(val, out);
+                op(lane, out);
+            }
+            Inst::Rng { state, .. } => out.push(*state),
+        }
+    }
+
+    /// True if the instruction has side effects beyond its `def` (memory
+    /// writes, barriers, traps, RNG state update) — these survive DCE.
+    pub fn has_side_effect(&self) -> bool {
+        matches!(
+            self,
+            Inst::St { .. }
+                | Inst::Atom { .. }
+                | Inst::Bar { .. }
+                | Inst::Fence { .. }
+                | Inst::Trap { .. }
+                | Inst::Rng { .. }
+        )
+    }
+
+    /// True if this instruction communicates across the team (its result
+    /// depends on other threads) — such instructions can never be folded or
+    /// hoisted thread-locally.
+    pub fn is_team_op(&self) -> bool {
+        matches!(
+            self,
+            Inst::Vote { .. } | Inst::Ballot { .. } | Inst::Shfl { .. } | Inst::Bar { .. }
+        )
+    }
+
+    /// The result type this instruction produces given the kernel's
+    /// register typing rules, if statically determined by the opcode alone.
+    pub fn result_scalar(&self) -> Option<Scalar> {
+        match self {
+            Inst::Cmp { .. } | Inst::Vote { .. } => Some(Scalar::Pred),
+            Inst::Ballot { .. } => Some(Scalar::U32),
+            Inst::Special { .. } => Some(Scalar::U32),
+            Inst::Cvt { to, .. } => Some(*to),
+            Inst::Bin { ty, .. } | Inst::Un { ty, .. } | Inst::Fma { ty, .. } => Some(*ty),
+            Inst::Ld { ty, .. } | Inst::Atom { ty, .. } | Inst::Shfl { ty, .. } => Some(*ty),
+            Inst::Rng { .. } => Some(Scalar::U32),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn def_and_uses() {
+        let i = Inst::Bin {
+            op: BinOp::Add,
+            ty: Scalar::F32,
+            dst: Reg(2),
+            a: Operand::Reg(Reg(0)),
+            b: Operand::Reg(Reg(1)),
+        };
+        assert_eq!(i.def(), Some(Reg(2)));
+        let mut u = vec![];
+        i.uses(&mut u);
+        assert_eq!(u, vec![Reg(0), Reg(1)]);
+    }
+
+    #[test]
+    fn store_has_side_effect_and_no_def() {
+        let st = Inst::St {
+            space: AddrSpace::Global,
+            ty: Scalar::F32,
+            addr: Address::base(Reg(0)),
+            val: Operand::Reg(Reg(1)),
+        };
+        assert!(st.has_side_effect());
+        assert_eq!(st.def(), None);
+        let mut u = vec![];
+        st.uses(&mut u);
+        assert_eq!(u, vec![Reg(0), Reg(1)]);
+    }
+
+    #[test]
+    fn team_ops_flagged() {
+        let v = Inst::Vote { kind: VoteKind::Any, dst: Reg(1), src: Operand::Reg(Reg(0)) };
+        assert!(v.is_team_op());
+        assert_eq!(v.result_scalar(), Some(Scalar::Pred));
+    }
+
+    #[test]
+    fn address_constructors() {
+        let a = Address::indexed(Reg(0), Reg(1), 4).with_disp(8);
+        assert_eq!(a.scale, 4);
+        assert_eq!(a.disp, 8);
+        assert_eq!(a.index, Some(Reg(1)));
+    }
+
+    #[test]
+    fn atom_cas_uses_both_values() {
+        let i = Inst::Atom {
+            op: AtomOp::Cas,
+            space: AddrSpace::Global,
+            ty: Scalar::U32,
+            dst: Some(Reg(3)),
+            addr: Address::base(Reg(0)),
+            val: Operand::Reg(Reg(1)),
+            val2: Some(Operand::Reg(Reg(2))),
+        };
+        let mut u = vec![];
+        i.uses(&mut u);
+        assert_eq!(u, vec![Reg(0), Reg(1), Reg(2)]);
+        assert_eq!(i.def(), Some(Reg(3)));
+    }
+}

@@ -1,0 +1,21 @@
+//! hetIR — the portable GPU intermediate representation (paper §4.1).
+//!
+//! An architecture-neutral, SPMD, structured-control-flow IR with explicit
+//! barriers and virtualized team operations. This module provides the IR
+//! data structures, a programmatic [`builder`], the text-assembly
+//! [`printer`]/[`parser`] pair (the on-disk "binary" format), a [`verify`]
+//! pass, and the target-agnostic optimization + migration-metadata
+//! [`passes`].
+
+pub mod builder;
+pub mod instr;
+pub mod module;
+pub mod parser;
+pub mod passes;
+pub mod printer;
+pub mod types;
+pub mod verify;
+
+pub use instr::{Address, BinOp, CmpOp, Dim, Inst, Operand, Reg, SpecialReg};
+pub use module::{Kernel, Module, Stmt};
+pub use types::{AddrSpace, Scalar, Type, Value};

@@ -1,0 +1,271 @@
+//! hetIR module and kernel structures.
+//!
+//! A [`Module`] is the unit the compiler emits and the runtime loads — the
+//! paper's "single hetIR binary containing N kernels" (§6.1). Each
+//! [`Kernel`] carries:
+//!
+//! * a typed parameter list,
+//! * a static shared-memory size,
+//! * a typed virtual register file declaration,
+//! * a *structured* body ([`Stmt`] tree), and
+//! * migration metadata: barrier/segment ids and (after the liveness pass)
+//!   the live-register set at every suspension point.
+
+use super::instr::{Inst, Reg};
+use super::types::Type;
+use std::collections::HashMap;
+
+/// A kernel parameter.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Param {
+    pub name: String,
+    pub ty: Type,
+}
+
+/// Structured control flow statement.
+///
+/// hetIR deliberately has no arbitrary gotos: every divergent region has a
+/// single reconvergence point given by the structure, which (a) satisfies
+/// SPIR-V's structured-merge requirement directly (paper §5.1 "SPIR-V
+/// demands structured merges, which our compiler inherently had by
+/// structured @PRED blocks"), and (b) makes divergence mapping onto both
+/// hardware mask stacks and software vector masks mechanical.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Stmt {
+    /// A straight-line instruction.
+    I(Inst),
+    /// Predicated region with implicit reconvergence after it.
+    If { cond: Reg, then_b: Vec<Stmt>, else_b: Vec<Stmt> },
+    /// Structured loop: execute `cond` statements, test `cond_reg`; if
+    /// true run `body` and repeat, else exit. Reconvergence at loop exit.
+    While { cond: Vec<Stmt>, cond_reg: Reg, body: Vec<Stmt> },
+    /// Exit the innermost enclosing `While` (may be divergent).
+    Break,
+    /// Skip to the condition of the innermost enclosing `While`.
+    Continue,
+    /// Terminate this thread (reconverges only at kernel end).
+    Return,
+}
+
+impl Stmt {
+    /// Visit all instructions in this statement tree (immutable).
+    pub fn visit_insts<'a>(&'a self, f: &mut impl FnMut(&'a Inst)) {
+        match self {
+            Stmt::I(i) => f(i),
+            Stmt::If { then_b, else_b, .. } => {
+                for s in then_b {
+                    s.visit_insts(f);
+                }
+                for s in else_b {
+                    s.visit_insts(f);
+                }
+            }
+            Stmt::While { cond, body, .. } => {
+                for s in cond {
+                    s.visit_insts(f);
+                }
+                for s in body {
+                    s.visit_insts(f);
+                }
+            }
+            Stmt::Break | Stmt::Continue | Stmt::Return => {}
+        }
+    }
+
+    /// Visit all instructions in this statement tree (mutable).
+    pub fn visit_insts_mut(&mut self, f: &mut impl FnMut(&mut Inst)) {
+        match self {
+            Stmt::I(i) => f(i),
+            Stmt::If { then_b, else_b, .. } => {
+                for s in then_b {
+                    s.visit_insts_mut(f);
+                }
+                for s in else_b {
+                    s.visit_insts_mut(f);
+                }
+            }
+            Stmt::While { cond, body, .. } => {
+                for s in cond {
+                    s.visit_insts_mut(f);
+                }
+                for s in body {
+                    s.visit_insts_mut(f);
+                }
+            }
+            Stmt::Break | Stmt::Continue | Stmt::Return => {}
+        }
+    }
+}
+
+/// Per-suspension-point migration metadata, filled by the liveness pass.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SuspensionPoint {
+    /// The barrier id (== segment boundary id) this point corresponds to.
+    pub barrier_id: u32,
+    /// Virtual registers live across this barrier, in ascending order.
+    /// Only these are captured into a snapshot (paper §8: "only saving
+    /// live registers (not entire register files)").
+    pub live_regs: Vec<Reg>,
+}
+
+/// A hetIR kernel: the unit of launch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Kernel {
+    pub name: String,
+    pub params: Vec<Param>,
+    /// Static shared-memory ("scratchpad") requirement in bytes.
+    pub shared_bytes: u64,
+    /// Types of the virtual registers; `Reg(i)` has type `reg_types[i]`.
+    /// Parameters are pre-loaded into registers `0..params.len()`.
+    pub reg_types: Vec<Type>,
+    /// Structured body.
+    pub body: Vec<Stmt>,
+    /// Number of barriers (assigned by the segmenter; barrier ids are
+    /// `0..num_barriers`). Segment ids are `0..=num_barriers`: segment 0 is
+    /// kernel entry, segment `b+1` starts just after barrier `b`.
+    pub num_barriers: u32,
+    /// Suspension-point metadata (index = barrier id), filled by liveness.
+    pub suspension_points: Vec<SuspensionPoint>,
+}
+
+impl Kernel {
+    pub fn new(name: impl Into<String>) -> Kernel {
+        Kernel {
+            name: name.into(),
+            params: Vec::new(),
+            shared_bytes: 0,
+            reg_types: Vec::new(),
+            body: Vec::new(),
+            num_barriers: 0,
+            suspension_points: Vec::new(),
+        }
+    }
+
+    /// Allocate a fresh virtual register of type `ty`.
+    pub fn new_reg(&mut self, ty: Type) -> Reg {
+        let r = Reg(self.reg_types.len() as u32);
+        self.reg_types.push(ty);
+        r
+    }
+
+    /// The type of register `r` (panics on out-of-range: that is an IR bug
+    /// the verifier reports with context before execution ever gets here).
+    pub fn reg_ty(&self, r: Reg) -> Type {
+        self.reg_types[r.0 as usize]
+    }
+
+    /// Visit every instruction in the kernel body.
+    pub fn visit_insts<'a>(&'a self, mut f: impl FnMut(&'a Inst)) {
+        for s in &self.body {
+            s.visit_insts(&mut f);
+        }
+    }
+
+    /// Visit every instruction in the kernel body, mutably.
+    pub fn visit_insts_mut(&mut self, mut f: impl FnMut(&mut Inst)) {
+        for s in &mut self.body {
+            s.visit_insts_mut(&mut f);
+        }
+    }
+
+    /// Count instructions (diagnostics / cost estimates).
+    pub fn inst_count(&self) -> usize {
+        let mut n = 0;
+        self.visit_insts(|_| n += 1);
+        n
+    }
+
+    /// The suspension-point metadata for barrier `id`, if liveness ran.
+    pub fn suspension_point(&self, id: u32) -> Option<&SuspensionPoint> {
+        self.suspension_points.iter().find(|p| p.barrier_id == id)
+    }
+}
+
+/// A hetIR module: a named collection of kernels ("one binary").
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Module {
+    pub name: String,
+    pub kernels: Vec<Kernel>,
+    /// Source mapping / provenance notes (DWARF-like, paper §4.1), purely
+    /// informational.
+    pub annotations: HashMap<String, String>,
+}
+
+impl Module {
+    pub fn new(name: impl Into<String>) -> Module {
+        Module { name: name.into(), kernels: Vec::new(), annotations: HashMap::new() }
+    }
+
+    /// Add a kernel, returning its index.
+    pub fn add_kernel(&mut self, k: Kernel) -> usize {
+        self.kernels.push(k);
+        self.kernels.len() - 1
+    }
+
+    /// Find a kernel by name.
+    pub fn kernel(&self, name: &str) -> Option<&Kernel> {
+        self.kernels.iter().find(|k| k.name == name)
+    }
+
+    /// Find a kernel by name, mutably.
+    pub fn kernel_mut(&mut self, name: &str) -> Option<&mut Kernel> {
+        self.kernels.iter_mut().find(|k| k.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hetir::instr::{BinOp, Operand};
+    use crate::hetir::types::Scalar;
+
+    fn mk_add(dst: u32, a: u32, b: u32) -> Stmt {
+        Stmt::I(Inst::Bin {
+            op: BinOp::Add,
+            ty: Scalar::F32,
+            dst: Reg(dst),
+            a: Operand::Reg(Reg(a)),
+            b: Operand::Reg(Reg(b)),
+        })
+    }
+
+    #[test]
+    fn reg_allocation_and_typing() {
+        let mut k = Kernel::new("k");
+        let r0 = k.new_reg(Type::F32);
+        let r1 = k.new_reg(Type::PTR_GLOBAL);
+        assert_eq!(r0, Reg(0));
+        assert_eq!(r1, Reg(1));
+        assert_eq!(k.reg_ty(r0), Type::F32);
+        assert_eq!(k.reg_ty(r1), Type::PTR_GLOBAL);
+    }
+
+    #[test]
+    fn visit_counts_nested() {
+        let mut k = Kernel::new("k");
+        for _ in 0..4 {
+            k.new_reg(Type::F32);
+        }
+        k.body = vec![
+            mk_add(2, 0, 1),
+            Stmt::If {
+                cond: Reg(3),
+                then_b: vec![mk_add(2, 2, 0)],
+                else_b: vec![mk_add(2, 2, 1), mk_add(2, 2, 2)],
+            },
+            Stmt::While { cond: vec![mk_add(2, 2, 2)], cond_reg: Reg(3), body: vec![mk_add(2, 0, 0)] },
+        ];
+        assert_eq!(k.inst_count(), 6);
+    }
+
+    #[test]
+    fn module_lookup() {
+        let mut m = Module::new("test");
+        m.add_kernel(Kernel::new("a"));
+        m.add_kernel(Kernel::new("b"));
+        assert!(m.kernel("a").is_some());
+        assert!(m.kernel("c").is_none());
+        m.kernel_mut("b").unwrap().shared_bytes = 128;
+        assert_eq!(m.kernel("b").unwrap().shared_bytes, 128);
+    }
+}

@@ -1,0 +1,721 @@
+//! hetIR text-assembly parser — the load half of the interchange format.
+//!
+//! Accepts exactly the grammar [`super::printer`] emits (plus flexible
+//! whitespace and `//` comments). The runtime calls this when loading a
+//! `.hetir` module from disk; the roundtrip property is tested below and in
+//! the property suite.
+
+use super::instr::*;
+use super::module::{Kernel, Module, Param, Stmt};
+use super::types::{AddrSpace, Scalar, Type, Value};
+use crate::error::{HetError, Result};
+
+/// Token-level cursor over the input text.
+struct Cursor<'a> {
+    src: &'a str,
+    pos: usize,
+    line: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(src: &'a str) -> Self {
+        Cursor { src, pos: 0, line: 1 }
+    }
+
+    fn err(&self, msg: impl Into<String>) -> HetError {
+        HetError::IrParse { line: self.line, msg: msg.into() }
+    }
+
+    fn skip_ws(&mut self) {
+        let bytes = self.src.as_bytes();
+        while self.pos < bytes.len() {
+            let c = bytes[self.pos];
+            if c == b'\n' {
+                self.line += 1;
+                self.pos += 1;
+            } else if c.is_ascii_whitespace() {
+                self.pos += 1;
+            } else if c == b'/' && bytes.get(self.pos + 1) == Some(&b'/') {
+                while self.pos < bytes.len() && bytes[self.pos] != b'\n' {
+                    self.pos += 1;
+                }
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn eof(&mut self) -> bool {
+        self.skip_ws();
+        self.pos >= self.src.len()
+    }
+
+    fn peek(&mut self) -> Option<char> {
+        self.skip_ws();
+        self.src[self.pos..].chars().next()
+    }
+
+    /// Consume `tok` if it is next; returns whether it was consumed.
+    fn eat(&mut self, tok: &str) -> bool {
+        self.skip_ws();
+        if self.src[self.pos..].starts_with(tok) {
+            self.pos += tok.len();
+            true
+        } else {
+            false
+        }
+    }
+
+    fn expect(&mut self, tok: &str) -> Result<()> {
+        if self.eat(tok) {
+            Ok(())
+        } else {
+            let rest: String = self.src[self.pos..].chars().take(20).collect();
+            Err(self.err(format!("expected `{tok}`, found `{rest}`")))
+        }
+    }
+
+    /// Read an identifier-like word ([A-Za-z0-9_.$]+).
+    fn word(&mut self) -> Result<String> {
+        self.skip_ws();
+        let start = self.pos;
+        let bytes = self.src.as_bytes();
+        while self.pos < bytes.len() {
+            let c = bytes[self.pos] as char;
+            if c.is_ascii_alphanumeric() || c == '_' || c == '.' || c == '$' {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+        if self.pos == start {
+            let rest: String = self.src[self.pos..].chars().take(10).collect();
+            return Err(self.err(format!("expected word, found `{rest}`")));
+        }
+        Ok(self.src[start..self.pos].to_string())
+    }
+
+    /// Parse `%rN`.
+    fn reg(&mut self) -> Result<Reg> {
+        self.expect("%r")?;
+        let start = self.pos;
+        let bytes = self.src.as_bytes();
+        while self.pos < bytes.len() && bytes[self.pos].is_ascii_digit() {
+            self.pos += 1;
+        }
+        if self.pos == start {
+            return Err(self.err("expected register number after %r"));
+        }
+        let n: u32 =
+            self.src[start..self.pos].parse().map_err(|e| self.err(format!("bad reg: {e}")))?;
+        Ok(Reg(n))
+    }
+
+    /// Parse a signed integer literal (used for displacements / ids).
+    fn int(&mut self) -> Result<i64> {
+        self.skip_ws();
+        let start = self.pos;
+        let bytes = self.src.as_bytes();
+        if self.pos < bytes.len() && (bytes[self.pos] == b'-' || bytes[self.pos] == b'+') {
+            self.pos += 1;
+        }
+        if self.src[self.pos..].starts_with("0x") {
+            self.pos += 2;
+            while self.pos < bytes.len() && bytes[self.pos].is_ascii_hexdigit() {
+                self.pos += 1;
+            }
+            let text = &self.src[start..self.pos];
+            let neg = text.starts_with('-');
+            let digits = text.trim_start_matches(['-', '+']).trim_start_matches("0x");
+            let v = u64::from_str_radix(digits, 16)
+                .map_err(|e| self.err(format!("bad hex int: {e}")))? as i64;
+            return Ok(if neg { -v } else { v });
+        }
+        while self.pos < bytes.len() && bytes[self.pos].is_ascii_digit() {
+            self.pos += 1;
+        }
+        if self.pos == start {
+            return Err(self.err("expected integer"));
+        }
+        self.src[start..self.pos].parse().map_err(|e| self.err(format!("bad int: {e}")))
+    }
+
+    /// Parse a type: `pred|s32|u32|s64|u64|f32|ptr<global>|ptr<shared>`.
+    fn ty(&mut self) -> Result<Type> {
+        if self.eat("ptr<") {
+            let t = if self.eat("global") {
+                Type::PTR_GLOBAL
+            } else if self.eat("shared") {
+                Type::PTR_SHARED
+            } else {
+                return Err(self.err("expected global|shared in ptr<>"));
+            };
+            self.expect(">")?;
+            return Ok(t);
+        }
+        let w = self.word()?;
+        Ok(match w.as_str() {
+            "pred" => Type::PRED,
+            "s32" => Type::I32,
+            "u32" => Type::U32,
+            "s64" => Type::I64,
+            "u64" => Type::U64,
+            "f32" => Type::F32,
+            other => return Err(self.err(format!("unknown type `{other}`"))),
+        })
+    }
+
+    /// Parse an operand: register or typed immediate.
+    fn operand(&mut self) -> Result<Operand> {
+        self.skip_ws();
+        if self.src[self.pos..].starts_with("%r") {
+            return Ok(Operand::Reg(self.reg()?));
+        }
+        if self.eat("true") {
+            return Ok(Operand::Imm(Value::pred(true)));
+        }
+        if self.eat("false") {
+            return Ok(Operand::Imm(Value::pred(false)));
+        }
+        // float hex form: 0f<8 hex digits>:f32
+        if self.src[self.pos..].starts_with("0f") {
+            self.pos += 2;
+            let start = self.pos;
+            let bytes = self.src.as_bytes();
+            while self.pos < bytes.len() && bytes[self.pos].is_ascii_hexdigit() {
+                self.pos += 1;
+            }
+            let bits = u32::from_str_radix(&self.src[start..self.pos], 16)
+                .map_err(|e| self.err(format!("bad float bits: {e}")))?;
+            self.expect(":f32")?;
+            return Ok(Operand::Imm(Value { bits: bits as u64, ty: Type::F32 }));
+        }
+        let n = self.int()?;
+        self.expect(":")?;
+        let ty = self.ty()?;
+        let v = match ty {
+            Type::Scalar(Scalar::I32) => Value::i32(n as i32),
+            Type::Scalar(Scalar::U32) => Value::u32(n as u32),
+            Type::Scalar(Scalar::I64) => Value::i64(n),
+            Type::Scalar(Scalar::U64) => Value::u64(n as u64),
+            Type::Scalar(Scalar::F32) => Value::f32(n as f32),
+            Type::Scalar(Scalar::Pred) => Value::pred(n != 0),
+            Type::Ptr(space) => Value::ptr(n as u64, space),
+        };
+        Ok(Operand::Imm(v))
+    }
+
+    /// Parse `[%base (+ %idx*scale)? (+ disp)?]`.
+    fn address(&mut self) -> Result<Address> {
+        self.expect("[")?;
+        let base = self.reg()?;
+        let mut addr = Address::base(base);
+        while self.eat("+") {
+            self.skip_ws();
+            if self.src[self.pos..].starts_with("%r") {
+                let idx = self.reg()?;
+                self.expect("*")?;
+                let scale = self.int()? as u32;
+                addr.index = Some(idx);
+                addr.scale = scale;
+            } else {
+                addr.disp = self.int()?;
+            }
+        }
+        self.expect("]")?;
+        Ok(addr)
+    }
+}
+
+fn scalar_of(w: &str, c: &Cursor) -> Result<Scalar> {
+    Scalar::from_suffix(w).ok_or_else(|| c.err(format!("unknown scalar suffix `{w}`")))
+}
+
+fn dim_of(w: &str, c: &Cursor) -> Result<Dim> {
+    Ok(match w {
+        "x" => Dim::X,
+        "y" => Dim::Y,
+        "z" => Dim::Z,
+        _ => return Err(c.err(format!("bad dim `{w}`"))),
+    })
+}
+
+/// Parse the mnemonic (already split on '.') into an instruction,
+/// given the optional destination register.
+fn parse_inst(c: &mut Cursor, dst: Option<Reg>) -> Result<Inst> {
+    let m = c.word()?;
+    let parts: Vec<&str> = m.split('.').collect();
+    let inst = match parts[0] {
+        "TID" | "CTAID" | "NTID" | "NCTAID" | "GID" => {
+            let d = dim_of(parts.get(1).copied().unwrap_or(""), c)?;
+            let kind = match parts[0] {
+                "TID" => SpecialReg::ThreadIdx(d),
+                "CTAID" => SpecialReg::BlockIdx(d),
+                "NTID" => SpecialReg::BlockDim(d),
+                "NCTAID" => SpecialReg::GridDim(d),
+                _ => SpecialReg::GlobalId(d),
+            };
+            Inst::Special { dst: dst.ok_or_else(|| c.err("special needs dst"))?, kind }
+        }
+        "MOV" => {
+            let src = c.operand()?;
+            Inst::Mov { dst: dst.ok_or_else(|| c.err("MOV needs dst"))?, src }
+        }
+        "ADD" | "SUB" | "MUL" | "DIV" | "REM" | "MIN" | "MAX" | "AND" | "OR" | "XOR" | "SHL"
+        | "SHR" => {
+            let op = match parts[0] {
+                "ADD" => BinOp::Add,
+                "SUB" => BinOp::Sub,
+                "MUL" => BinOp::Mul,
+                "DIV" => BinOp::Div,
+                "REM" => BinOp::Rem,
+                "MIN" => BinOp::Min,
+                "MAX" => BinOp::Max,
+                "AND" => BinOp::And,
+                "OR" => BinOp::Or,
+                "XOR" => BinOp::Xor,
+                "SHL" => BinOp::Shl,
+                _ => BinOp::Shr,
+            };
+            let ty = scalar_of(parts.get(1).copied().unwrap_or(""), c)?;
+            let a = c.operand()?;
+            c.expect(",")?;
+            let b = c.operand()?;
+            Inst::Bin { op, ty, dst: dst.ok_or_else(|| c.err("bin needs dst"))?, a, b }
+        }
+        "NEG" | "NOT" | "ABS" | "SQRT" | "RSQRT" | "EXP" | "LOG" | "SIN" | "COS" | "POPC" => {
+            let op = match parts[0] {
+                "NEG" => UnOp::Neg,
+                "NOT" => UnOp::Not,
+                "ABS" => UnOp::Abs,
+                "SQRT" => UnOp::Sqrt,
+                "RSQRT" => UnOp::Rsqrt,
+                "EXP" => UnOp::Exp,
+                "LOG" => UnOp::Log,
+                "SIN" => UnOp::Sin,
+                "COS" => UnOp::Cos,
+                _ => UnOp::Popc,
+            };
+            let ty = scalar_of(parts.get(1).copied().unwrap_or(""), c)?;
+            let a = c.operand()?;
+            Inst::Un { op, ty, dst: dst.ok_or_else(|| c.err("un needs dst"))?, a }
+        }
+        "FMA" => {
+            let ty = scalar_of(parts.get(1).copied().unwrap_or(""), c)?;
+            let a = c.operand()?;
+            c.expect(",")?;
+            let b = c.operand()?;
+            c.expect(",")?;
+            let v = c.operand()?;
+            Inst::Fma { ty, dst: dst.ok_or_else(|| c.err("FMA needs dst"))?, a, b, c: v }
+        }
+        "SETP" => {
+            let op = match parts.get(1).copied().unwrap_or("") {
+                "EQ" => CmpOp::Eq,
+                "NE" => CmpOp::Ne,
+                "LT" => CmpOp::Lt,
+                "LE" => CmpOp::Le,
+                "GT" => CmpOp::Gt,
+                "GE" => CmpOp::Ge,
+                other => return Err(c.err(format!("bad cmp `{other}`"))),
+            };
+            let ty = scalar_of(parts.get(2).copied().unwrap_or(""), c)?;
+            let a = c.operand()?;
+            c.expect(",")?;
+            let b = c.operand()?;
+            Inst::Cmp { op, ty, dst: dst.ok_or_else(|| c.err("SETP needs dst"))?, a, b }
+        }
+        "SEL" => {
+            let cond = c.operand()?;
+            c.expect(",")?;
+            let a = c.operand()?;
+            c.expect(",")?;
+            let b = c.operand()?;
+            Inst::Sel { dst: dst.ok_or_else(|| c.err("SEL needs dst"))?, cond, a, b }
+        }
+        "CVT" => {
+            let to = scalar_of(parts.get(1).copied().unwrap_or(""), c)?;
+            let from = scalar_of(parts.get(2).copied().unwrap_or(""), c)?;
+            let src = c.operand()?;
+            Inst::Cvt { from, to, dst: dst.ok_or_else(|| c.err("CVT needs dst"))?, src }
+        }
+        "PTRADD" => {
+            let addr = c.address()?;
+            Inst::PtrAdd { dst: dst.ok_or_else(|| c.err("PTRADD needs dst"))?, addr }
+        }
+        "LD" => {
+            let space = match parts.get(1).copied().unwrap_or("") {
+                "GLOBAL" => AddrSpace::Global,
+                "SHARED" => AddrSpace::Shared,
+                other => return Err(c.err(format!("bad space `{other}`"))),
+            };
+            let ty = scalar_of(parts.get(2).copied().unwrap_or(""), c)?;
+            let addr = c.address()?;
+            Inst::Ld { space, ty, dst: dst.ok_or_else(|| c.err("LD needs dst"))?, addr }
+        }
+        "ST" => {
+            let space = match parts.get(1).copied().unwrap_or("") {
+                "GLOBAL" => AddrSpace::Global,
+                "SHARED" => AddrSpace::Shared,
+                other => return Err(c.err(format!("bad space `{other}`"))),
+            };
+            let ty = scalar_of(parts.get(2).copied().unwrap_or(""), c)?;
+            let addr = c.address()?;
+            c.expect(",")?;
+            let val = c.operand()?;
+            Inst::St { space, ty, addr, val }
+        }
+        "ATOM" => {
+            let op = match parts.get(1).copied().unwrap_or("") {
+                "ADD" => AtomOp::Add,
+                "MIN" => AtomOp::Min,
+                "MAX" => AtomOp::Max,
+                "EXCH" => AtomOp::Exch,
+                "CAS" => AtomOp::Cas,
+                "AND" => AtomOp::And,
+                "OR" => AtomOp::Or,
+                other => return Err(c.err(format!("bad atomic `{other}`"))),
+            };
+            let space = match parts.get(2).copied().unwrap_or("") {
+                "GLOBAL" => AddrSpace::Global,
+                "SHARED" => AddrSpace::Shared,
+                other => return Err(c.err(format!("bad space `{other}`"))),
+            };
+            let ty = scalar_of(parts.get(3).copied().unwrap_or(""), c)?;
+            let addr = c.address()?;
+            c.expect(",")?;
+            let val = c.operand()?;
+            let val2 = if c.eat(",") { Some(c.operand()?) } else { None };
+            if op == AtomOp::Cas && val2.is_none() {
+                return Err(c.err("ATOM.CAS needs two value operands"));
+            }
+            Inst::Atom { op, space, ty, dst, addr, val, val2 }
+        }
+        "BAR" => Inst::Bar { id: c.int()? as u32 },
+        "FENCE" => {
+            let scope = match parts.get(1).copied().unwrap_or("") {
+                "BLOCK" => FenceScope::Block,
+                "DEVICE" => FenceScope::Device,
+                other => return Err(c.err(format!("bad fence scope `{other}`"))),
+            };
+            Inst::Fence { scope }
+        }
+        "VOTE" => {
+            let kind = match parts.get(1).copied().unwrap_or("") {
+                "ANY" => VoteKind::Any,
+                "ALL" => VoteKind::All,
+                other => return Err(c.err(format!("bad vote `{other}`"))),
+            };
+            let src = c.operand()?;
+            Inst::Vote { kind, dst: dst.ok_or_else(|| c.err("VOTE needs dst"))?, src }
+        }
+        "BALLOT" => {
+            let src = c.operand()?;
+            Inst::Ballot { dst: dst.ok_or_else(|| c.err("BALLOT needs dst"))?, src }
+        }
+        "SHFL" => {
+            let kind = match parts.get(1).copied().unwrap_or("") {
+                "IDX" => ShflKind::Idx,
+                "DOWN" => ShflKind::Down,
+                "UP" => ShflKind::Up,
+                "XOR" => ShflKind::Xor,
+                other => return Err(c.err(format!("bad shfl `{other}`"))),
+            };
+            let ty = scalar_of(parts.get(2).copied().unwrap_or(""), c)?;
+            let val = c.operand()?;
+            c.expect(",")?;
+            let lane = c.operand()?;
+            Inst::Shfl { kind, ty, dst: dst.ok_or_else(|| c.err("SHFL needs dst"))?, val, lane }
+        }
+        "RNG" => {
+            let state = c.reg()?;
+            Inst::Rng { dst: dst.ok_or_else(|| c.err("RNG needs dst"))?, state }
+        }
+        "TRAP" => Inst::Trap { code: c.int()? as u32 },
+        other => return Err(c.err(format!("unknown mnemonic `{other}`"))),
+    };
+    c.expect(";")?;
+    Ok(inst)
+}
+
+/// Parse a statement block until the closing `}` (not consumed).
+fn parse_block(c: &mut Cursor) -> Result<Vec<Stmt>> {
+    let mut stmts = Vec::new();
+    loop {
+        match c.peek() {
+            None => return Err(c.err("unexpected EOF in block")),
+            Some('}') => return Ok(stmts),
+            _ => {}
+        }
+        if c.eat("@PRED") {
+            let cond = c.reg()?;
+            c.expect("{")?;
+            let then_b = parse_block(c)?;
+            c.expect("}")?;
+            let else_b = if c.eat("ELSE") {
+                c.expect("{")?;
+                let e = parse_block(c)?;
+                c.expect("}")?;
+                e
+            } else {
+                Vec::new()
+            };
+            stmts.push(Stmt::If { cond, then_b, else_b });
+            continue;
+        }
+        if c.eat("LOOP") {
+            c.expect("{")?;
+            // condition block ends with `TEST %r;`
+            let mut cond = Vec::new();
+            let cond_reg;
+            loop {
+                if c.eat("TEST") {
+                    cond_reg = c.reg()?;
+                    c.expect(";")?;
+                    break;
+                }
+                cond.append(&mut parse_one(c)?);
+            }
+            c.expect("}")?;
+            c.expect("BODY")?;
+            c.expect("{")?;
+            let body = parse_block(c)?;
+            c.expect("}")?;
+            stmts.push(Stmt::While { cond, cond_reg, body });
+            continue;
+        }
+        stmts.append(&mut parse_one(c)?);
+    }
+}
+
+/// Parse a single simple statement (instruction / BREAK / CONTINUE / RET,
+/// or a nested structured statement).
+fn parse_one(c: &mut Cursor) -> Result<Vec<Stmt>> {
+    if c.eat("BREAK;") || (c.eat("BREAK") && c.eat(";")) {
+        return Ok(vec![Stmt::Break]);
+    }
+    if c.eat("CONTINUE;") || (c.eat("CONTINUE") && c.eat(";")) {
+        return Ok(vec![Stmt::Continue]);
+    }
+    if c.eat("RET;") || (c.eat("RET") && c.eat(";")) {
+        return Ok(vec![Stmt::Return]);
+    }
+    if c.eat("@PRED") {
+        let cond = c.reg()?;
+        c.expect("{")?;
+        let then_b = parse_block(c)?;
+        c.expect("}")?;
+        let else_b = if c.eat("ELSE") {
+            c.expect("{")?;
+            let e = parse_block(c)?;
+            c.expect("}")?;
+            e
+        } else {
+            Vec::new()
+        };
+        return Ok(vec![Stmt::If { cond, then_b, else_b }]);
+    }
+    // `%rN = MNEMONIC ...;` or `MNEMONIC ...;`
+    let dst = if c.peek() == Some('%') {
+        let r = c.reg()?;
+        c.expect("=")?;
+        Some(r)
+    } else {
+        None
+    };
+    Ok(vec![Stmt::I(parse_inst(c, dst)?)])
+}
+
+/// Parse one kernel starting at `.kernel`.
+fn parse_kernel(c: &mut Cursor) -> Result<Kernel> {
+    c.expect(".kernel")?;
+    let name = c.word()?;
+    let mut k = Kernel::new(name);
+    c.expect("(")?;
+    if !c.eat(")") {
+        loop {
+            let r = c.reg()?;
+            if r.0 as usize != k.params.len() {
+                return Err(c.err("parameter registers must be dense from %r0"));
+            }
+            c.expect(":")?;
+            let ty = c.ty()?;
+            let pname = c.word()?;
+            k.new_reg(ty);
+            k.params.push(Param { name: pname, ty });
+            if c.eat(")") {
+                break;
+            }
+            c.expect(",")?;
+        }
+    }
+    c.expect(".shared")?;
+    k.shared_bytes = c.int()? as u64;
+    c.expect("{")?;
+    // register declarations
+    while c.eat(".reg") {
+        loop {
+            c.skip_ws();
+            if !c.src[c.pos..].starts_with("%r") {
+                break;
+            }
+            // An instruction line also starts with %rN; only consume the
+            // register if a `:` (declaration) follows rather than `=`.
+            let save = c.pos;
+            let r = c.reg()?;
+            if !c.eat(":") {
+                c.pos = save;
+                break;
+            }
+            let ty = c.ty()?;
+            if r.0 as usize != k.reg_types.len() {
+                return Err(c.err(format!(
+                    "register declarations must be dense: got %r{}, expected %r{}",
+                    r.0,
+                    k.reg_types.len()
+                )));
+            }
+            k.new_reg(ty);
+        }
+    }
+    k.body = parse_block(c)?;
+    c.expect("}")?;
+    // Re-derive migration metadata from the (already-numbered) barriers.
+    super::passes::segmenter::run(&mut k);
+    super::passes::liveness::run(&mut k);
+    Ok(k)
+}
+
+/// Parse a whole module from text.
+pub fn parse_module(src: &str) -> Result<Module> {
+    let mut c = Cursor::new(src);
+    c.expect(".module")?;
+    c.expect("\"")?;
+    let start = c.pos;
+    while c.pos < c.src.len() && c.src.as_bytes()[c.pos] != b'"' {
+        c.pos += 1;
+    }
+    let name = c.src[start..c.pos].to_string();
+    c.expect("\"")?;
+    let mut m = Module::new(name);
+    while !c.eof() {
+        m.kernels.push(parse_kernel(&mut c)?);
+    }
+    Ok(m)
+}
+
+/// Parse a single kernel from text (no `.module` header).
+pub fn parse_kernel_text(src: &str) -> Result<Kernel> {
+    let mut c = Cursor::new(src);
+    parse_kernel(&mut c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hetir::builder::KernelBuilder;
+    use crate::hetir::printer;
+
+    fn vadd_kernel() -> Kernel {
+        let mut b = KernelBuilder::new("vadd");
+        let a = b.param("A", Type::PTR_GLOBAL);
+        let bb = b.param("B", Type::PTR_GLOBAL);
+        let cc = b.param("C", Type::PTR_GLOBAL);
+        let n = b.param("N", Type::U32);
+        let i = b.special(SpecialReg::GlobalId(Dim::X));
+        let p = b.cmp(CmpOp::Lt, Scalar::U32, i.into(), n.into());
+        b.if_(p, |b| {
+            let x = b.ld(AddrSpace::Global, Scalar::F32, Address::indexed(a, i, 4));
+            let y = b.ld(AddrSpace::Global, Scalar::F32, Address::indexed(bb, i, 4));
+            let s = b.bin(BinOp::Add, Scalar::F32, x.into(), y.into());
+            b.st(AddrSpace::Global, Scalar::F32, Address::indexed(cc, i, 4), s.into());
+        });
+        b.ret();
+        b.finish()
+    }
+
+    #[test]
+    fn roundtrip_vadd() {
+        let k = vadd_kernel();
+        let text = printer::print_kernel(&k);
+        let k2 = parse_kernel_text(&text).unwrap();
+        assert_eq!(k, k2, "parse(print(k)) != k\ntext:\n{text}");
+    }
+
+    #[test]
+    fn roundtrip_module_with_loops_and_atomics() {
+        let mut m = Module::new("mixed");
+        m.add_kernel(vadd_kernel());
+        let mut b = KernelBuilder::new("looped");
+        let out = b.param("O", Type::PTR_GLOBAL);
+        let n = b.param("N", Type::U32);
+        let acc = b.mov(Type::F32, Operand::Imm(Value::f32(0.5)));
+        b.for_u32(Operand::Imm(Value::u32(0)), n.into(), 1, |b, _i| {
+            b.bin_into(acc, BinOp::Add, Scalar::F32, acc.into(), Operand::Imm(Value::f32(1.0)));
+            b.bar();
+        });
+        let _old = b.atom(
+            AtomOp::Add,
+            AddrSpace::Global,
+            Scalar::U32,
+            Address::base(out),
+            Operand::Imm(Value::u32(1)),
+        );
+        b.st(AddrSpace::Global, Scalar::F32, Address::base(out).with_disp(8), acc.into());
+        m.add_kernel(b.finish());
+
+        let text = printer::print_module(&m);
+        let m2 = parse_module(&text).unwrap();
+        assert_eq!(m, m2, "module roundtrip failed:\n{text}");
+    }
+
+    #[test]
+    fn roundtrip_preserves_float_bits() {
+        let mut b = KernelBuilder::new("f");
+        let out = b.param("O", Type::PTR_GLOBAL);
+        for bits in [0x7FC0_0001u32, 0x8000_0000, 0xFF80_0000] {
+            // NaN payload, -0.0, -inf
+            let v = Value { bits: bits as u64, ty: Type::F32 };
+            b.st(AddrSpace::Global, Scalar::F32, Address::base(out), Operand::Imm(v));
+        }
+        let k = b.finish();
+        let text = printer::print_kernel(&k);
+        let k2 = parse_kernel_text(&text).unwrap();
+        assert_eq!(k, k2);
+    }
+
+    #[test]
+    fn comments_and_whitespace_tolerated() {
+        let src = r#"
+.kernel k(%r0:u32 n) .shared 16 {
+  .reg %r1:u32 // a comment
+  // full line comment
+  %r1 = ADD.U32   %r0 ,  1:u32 ;
+  RET;
+}
+"#;
+        let k = parse_kernel_text(src).unwrap();
+        assert_eq!(k.shared_bytes, 16);
+        assert_eq!(k.inst_count(), 1);
+    }
+
+    #[test]
+    fn error_reports_line() {
+        let src = ".kernel k(%r0:u32 n) .shared 0 {\n  %r1 = BOGUS.U32 %r0;\n}";
+        let err = parse_kernel_text(src).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("line 2"), "{msg}");
+    }
+
+    #[test]
+    fn rejects_sparse_registers() {
+        let src = ".kernel k(%r0:u32 n) .shared 0 {\n  .reg %r5:u32\n  RET;\n}";
+        assert!(parse_kernel_text(src).is_err());
+    }
+
+    #[test]
+    fn cas_requires_two_values() {
+        let src = ".kernel k(%r0:ptr<global> p) .shared 0 {\n  .reg %r1:u32\n  %r1 = ATOM.CAS.GLOBAL.U32 [%r0], 1:u32;\n}";
+        assert!(parse_kernel_text(src).is_err());
+    }
+}

@@ -1,0 +1,260 @@
+//! Constant folding: evaluates instructions whose operands are all
+//! immediates and replaces them with `Mov` of the folded constant; also
+//! forwards constants into later operand positions within straight-line
+//! regions (a simple local constant propagation).
+//!
+//! Device-independent by construction — folding uses the same semantics the
+//! simulators implement (see `sim::alu`), so a folded kernel and an
+//! unfolded one produce bit-identical results on every backend. That
+//! property is exercised by the differential tests in `tests/`.
+
+use crate::hetir::instr::{BinOp, Inst, Operand, Reg};
+use crate::hetir::module::{Kernel, Stmt};
+use crate::hetir::types::{Scalar, Type, Value};
+use crate::sim::alu;
+use std::collections::HashMap;
+
+/// Environment of known-constant registers (valid within one straight-line
+/// region; invalidated at control-flow joins conservatively).
+type Env = HashMap<Reg, Value>;
+
+fn subst(op: &mut Operand, env: &Env) {
+    if let Operand::Reg(r) = op {
+        if let Some(v) = env.get(r) {
+            *op = Operand::Imm(*v);
+        }
+    }
+}
+
+fn imm(op: &Operand) -> Option<Value> {
+    match op {
+        Operand::Imm(v) => Some(*v),
+        Operand::Reg(_) => None,
+    }
+}
+
+/// Try to fold one instruction; returns the constant result if it folds.
+fn fold(i: &Inst) -> Option<(Reg, Value)> {
+    match i {
+        Inst::Mov { dst, src } => imm(src).map(|v| (*dst, v)),
+        Inst::Bin { op, ty, dst, a, b } => {
+            let (a, b) = (imm(a)?, imm(b)?);
+            // Division/remainder by zero must fault at runtime, not fold.
+            if matches!(op, BinOp::Div | BinOp::Rem) && ty.is_int() && b.bits == 0 {
+                return None;
+            }
+            Some((*dst, alu::bin(*op, *ty, a, b).ok()?))
+        }
+        Inst::Un { op, ty, dst, a } => {
+            let a = imm(a)?;
+            Some((*dst, alu::un(*op, *ty, a).ok()?))
+        }
+        Inst::Cmp { op, ty, dst, a, b } => {
+            let (a, b) = (imm(a)?, imm(b)?);
+            Some((*dst, Value::pred(alu::cmp(*op, *ty, a, b))))
+        }
+        Inst::Cvt { from, to, dst, src } => {
+            let v = imm(src)?;
+            Some((*dst, alu::cvt(*from, *to, v)))
+        }
+        Inst::Sel { dst, cond, a, b } => {
+            let c = imm(cond)?;
+            let (a, b) = (imm(a)?, imm(b)?);
+            Some((*dst, if c.as_pred() { a } else { b }))
+        }
+        Inst::Fma { ty: Scalar::F32, dst, a, b, c } => {
+            let (a, b, c) = (imm(a)?, imm(b)?, imm(c)?);
+            Some((*dst, Value::f32(a.as_f32().mul_add(b.as_f32(), c.as_f32()))))
+        }
+        _ => None,
+    }
+}
+
+fn run_block(stmts: &mut Vec<Stmt>, env: &mut Env, k: &Kernel) {
+    for s in stmts.iter_mut() {
+        match s {
+            Stmt::I(i) => {
+                // Substitute known constants into operands first.
+                match i {
+                    Inst::Mov { src, .. } => subst(src, env),
+                    Inst::Bin { a, b, .. } | Inst::Cmp { a, b, .. } => {
+                        subst(a, env);
+                        subst(b, env);
+                    }
+                    Inst::Un { a, .. } => subst(a, env),
+                    Inst::Fma { a, b, c, .. } => {
+                        subst(a, env);
+                        subst(b, env);
+                        subst(c, env);
+                    }
+                    Inst::Sel { cond, a, b, .. } => {
+                        subst(cond, env);
+                        subst(a, env);
+                        subst(b, env);
+                    }
+                    Inst::Cvt { src, .. } => subst(src, env),
+                    Inst::St { val, .. } => subst(val, env),
+                    Inst::Atom { val, val2, .. } => {
+                        subst(val, env);
+                        if let Some(v2) = val2 {
+                            subst(v2, env);
+                        }
+                    }
+                    Inst::Vote { src, .. } | Inst::Ballot { src, .. } => subst(src, env),
+                    Inst::Shfl { val, lane, .. } => {
+                        subst(val, env);
+                        subst(lane, env);
+                    }
+                    _ => {}
+                }
+                // Then fold if fully constant.
+                if let Some((dst, v)) = fold(i) {
+                    // Predicate registers can't hold arbitrary bit patterns.
+                    debug_assert!(
+                        k.reg_ty(dst) != Type::PRED || v.bits <= 1,
+                        "folded non-boolean into predicate"
+                    );
+                    *i = Inst::Mov { dst, src: Operand::Imm(v) };
+                    env.insert(dst, v);
+                } else if let Some(d) = i.def() {
+                    // Register redefined with non-constant value.
+                    env.remove(&d);
+                }
+            }
+            Stmt::If { then_b, else_b, .. } => {
+                // Each branch starts from the current env; after the join we
+                // conservatively drop constants defined inside either side.
+                let mut t_env = env.clone();
+                run_block(then_b, &mut t_env, k);
+                let mut e_env = env.clone();
+                run_block(else_b, &mut e_env, k);
+                // Keep only facts that are identical on both paths AND were
+                // already true before (simplest sound join).
+                env.retain(|r, v| t_env.get(r) == Some(v) && e_env.get(r) == Some(v));
+            }
+            Stmt::While { cond, body, .. } => {
+                // Registers assigned anywhere in the loop are not constant
+                // at loop entry; clear them, then fold inside with that env.
+                let mut killed = Vec::new();
+                for b in [&*cond, &*body] {
+                    for st in b {
+                        st.visit_insts(&mut |ii| {
+                            if let Some(d) = ii.def() {
+                                killed.push(d);
+                            }
+                        });
+                    }
+                }
+                for r in &killed {
+                    env.remove(r);
+                }
+                let mut loop_env = env.clone();
+                run_block(cond, &mut loop_env, k);
+                run_block(body, &mut loop_env, k);
+                // After the loop only pre-loop facts survive.
+                for r in &killed {
+                    env.remove(r);
+                }
+            }
+            Stmt::Break | Stmt::Continue | Stmt::Return => {}
+        }
+    }
+}
+
+/// Run constant folding over the kernel.
+pub fn run(k: &mut Kernel) {
+    let mut env = Env::new();
+    let mut body = std::mem::take(&mut k.body);
+    run_block(&mut body, &mut env, k);
+    k.body = body;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hetir::types::Type;
+    use crate::hetir::builder::KernelBuilder;
+
+    #[test]
+    fn folds_constant_chain() {
+        let mut b = KernelBuilder::new("k");
+        let x = b.mov(Type::U32, Operand::Imm(Value::u32(6)));
+        let y = b.mov(Type::U32, Operand::Imm(Value::u32(7)));
+        let z = b.bin(BinOp::Mul, Scalar::U32, x.into(), y.into());
+        let _w = b.bin(BinOp::Add, Scalar::U32, z.into(), Operand::Imm(Value::u32(1)));
+        let mut k = b.finish_raw();
+        run(&mut k);
+        // last instruction must now be Mov 43
+        let mut last = None;
+        k.visit_insts(|i| last = Some(i.clone()));
+        match last.unwrap() {
+            Inst::Mov { src: Operand::Imm(v), .. } => assert_eq!(v.as_u32(), 43),
+            other => panic!("expected folded mov, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn does_not_fold_div_by_zero() {
+        let mut b = KernelBuilder::new("k");
+        let x = b.mov(Type::U32, Operand::Imm(Value::u32(1)));
+        let _d = b.bin(BinOp::Div, Scalar::U32, x.into(), Operand::Imm(Value::u32(0)));
+        let mut k = b.finish_raw();
+        run(&mut k);
+        let mut saw_div = false;
+        k.visit_insts(|i| {
+            if matches!(i, Inst::Bin { op: BinOp::Div, .. }) {
+                saw_div = true;
+            }
+        });
+        assert!(saw_div, "div by zero must be left to fault at runtime");
+    }
+
+    #[test]
+    fn loop_carried_not_folded() {
+        let mut b = KernelBuilder::new("k");
+        let n = b.param("N", Type::U32);
+        let acc = b.mov(Type::U32, Operand::Imm(Value::u32(0)));
+        b.for_u32(Operand::Imm(Value::u32(0)), n.into(), 1, |b, _| {
+            b.bin_into(acc, BinOp::Add, Scalar::U32, acc.into(), Operand::Imm(Value::u32(2)));
+        });
+        let use_after = b.bin(BinOp::Add, Scalar::U32, acc.into(), Operand::Imm(Value::u32(0)));
+        let mut k = b.finish_raw();
+        run(&mut k);
+        // the add-after-loop must still reference acc, not a constant
+        let mut ok = false;
+        k.visit_insts(|i| {
+            if let Inst::Bin { dst, a, .. } = i {
+                if *dst == use_after {
+                    ok = matches!(a, Operand::Reg(r) if *r == acc);
+                }
+            }
+        });
+        assert!(ok, "loop-carried register wrongly folded");
+    }
+
+    #[test]
+    fn if_join_is_conservative() {
+        let mut b = KernelBuilder::new("k");
+        let p = b.param("p", Type::PRED);
+        let x = b.mov(Type::U32, Operand::Imm(Value::u32(1)));
+        b.if_else(
+            p,
+            |b| {
+                b.bin_into(x, BinOp::Add, Scalar::U32, x.into(), Operand::Imm(Value::u32(1)));
+            },
+            |_b| {},
+        );
+        let y = b.bin(BinOp::Add, Scalar::U32, x.into(), Operand::Imm(Value::u32(0)));
+        let mut k = b.finish_raw();
+        run(&mut k);
+        let mut ok = false;
+        k.visit_insts(|i| {
+            if let Inst::Bin { dst, a, .. } = i {
+                if *dst == y {
+                    ok = matches!(a, Operand::Reg(r) if *r == x);
+                }
+            }
+        });
+        assert!(ok, "divergently-assigned register wrongly folded");
+    }
+}

@@ -1,0 +1,219 @@
+//! Local common-subexpression elimination.
+//!
+//! Value-numbers pure instructions within straight-line regions and
+//! rewrites recomputations into `Mov`s of the first occurrence (which DCE
+//! then usually removes together with the producer if it dies). Only
+//! thread-local, side-effect-free instructions participate: memory reads
+//! are NOT eliminated (another thread may have written between them), and
+//! team ops never move (every thread must execute them).
+//!
+//! Like the constant folder, the analysis is conservative at control-flow
+//! joins and inside loops; soundness is covered by the differential
+//! property tests (`tests/property.rs`).
+
+use crate::hetir::instr::{Inst, Operand, Reg};
+use crate::hetir::module::{Kernel, Stmt};
+use std::collections::HashMap;
+
+/// A hashable key describing a pure computation.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+enum Key {
+    Special(String),
+    Bin(u8, u8, OperandKey, OperandKey),
+    Un(u8, u8, OperandKey),
+    Fma(u8, OperandKey, OperandKey, OperandKey),
+    Cmp(u8, u8, OperandKey, OperandKey),
+    Sel(OperandKey, OperandKey, OperandKey),
+    Cvt(u8, u8, OperandKey),
+    PtrAdd(Reg, Option<Reg>, u32, i64),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+enum OperandKey {
+    R(Reg),
+    I(u64, u8),
+}
+
+fn okey(o: &Operand) -> OperandKey {
+    match o {
+        Operand::Reg(r) => OperandKey::R(*r),
+        Operand::Imm(v) => OperandKey::I(v.bits, type_tag(v.ty)),
+    }
+}
+
+fn type_tag(t: crate::hetir::types::Type) -> u8 {
+    use crate::hetir::types::{AddrSpace, Scalar, Type};
+    match t {
+        Type::Scalar(Scalar::Pred) => 0,
+        Type::Scalar(Scalar::I32) => 1,
+        Type::Scalar(Scalar::U32) => 2,
+        Type::Scalar(Scalar::I64) => 3,
+        Type::Scalar(Scalar::U64) => 4,
+        Type::Scalar(Scalar::F32) => 5,
+        Type::Ptr(AddrSpace::Global) => 6,
+        Type::Ptr(AddrSpace::Shared) => 7,
+    }
+}
+
+fn key_of(i: &Inst) -> Option<Key> {
+    Some(match i {
+        Inst::Special { kind, .. } => Key::Special(format!("{kind:?}")),
+        Inst::Bin { op, ty, a, b, .. } => {
+            Key::Bin(*op as u8, ty.suffix().as_bytes()[0], okey(a), okey(b))
+        }
+        Inst::Un { op, ty, a, .. } => Key::Un(*op as u8, ty.suffix().as_bytes()[0], okey(a)),
+        Inst::Fma { ty, a, b, c, .. } => {
+            Key::Fma(ty.suffix().as_bytes()[0], okey(a), okey(b), okey(c))
+        }
+        Inst::Cmp { op, ty, a, b, .. } => {
+            Key::Cmp(*op as u8, ty.suffix().as_bytes()[0], okey(a), okey(b))
+        }
+        Inst::Sel { cond, a, b, .. } => Key::Sel(okey(cond), okey(a), okey(b)),
+        Inst::Cvt { from, to, src, .. } => {
+            Key::Cvt(from.suffix().as_bytes()[0], to.suffix().as_bytes()[0], okey(src))
+        }
+        Inst::PtrAdd { addr, .. } => Key::PtrAdd(addr.base, addr.index, addr.scale, addr.disp),
+        // Loads, atomics, team ops, RNG, barriers: never CSE'd.
+        _ => return None,
+    })
+}
+
+/// Registers an instruction's key depends on (for invalidation).
+fn key_deps(i: &Inst, out: &mut Vec<Reg>) {
+    i.uses(out);
+}
+
+struct Cse {
+    replaced: usize,
+}
+
+impl Cse {
+    fn block(&mut self, stmts: &mut [Stmt]) {
+        // expr key -> register holding the value; reg -> keys depending on it
+        let mut avail: HashMap<Key, Reg> = HashMap::new();
+        let mut dep_of: HashMap<Reg, Vec<Key>> = HashMap::new();
+        for s in stmts.iter_mut() {
+            match s {
+                Stmt::I(i) => {
+                    let dst = i.def();
+                    let key = key_of(i);
+                    let hit = key.as_ref().and_then(|k| avail.get(k).copied());
+                    if let (Some(prev), Some(d)) = (hit, dst) {
+                        *i = Inst::Mov { dst: d, src: Operand::Reg(prev) };
+                        self.replaced += 1;
+                        // The Mov still redefines d: fall through to the
+                        // invalidation below, then record d as an alias?
+                        // (keep it simple: no aliasing.)
+                        if let Some(keys) = dep_of.remove(&d) {
+                            for k in keys {
+                                avail.remove(&k);
+                            }
+                        }
+                        avail.retain(|_, r| *r != d);
+                        continue;
+                    }
+                    // Redefinition invalidates expressions over the old
+                    // value and any expression held in the redefined
+                    // register — BEFORE recording the new fact.
+                    if let Some(d) = dst {
+                        if let Some(keys) = dep_of.remove(&d) {
+                            for k in keys {
+                                avail.remove(&k);
+                            }
+                        }
+                        avail.retain(|_, r| *r != d);
+                    }
+                    if let (Some(key), Some(d)) = (key, dst) {
+                        avail.insert(key.clone(), d);
+                        let mut deps = Vec::new();
+                        key_deps(i, &mut deps);
+                        for r in deps {
+                            dep_of.entry(r).or_default().push(key.clone());
+                        }
+                    }
+                }
+                // Conservative: nothing survives into or across control flow.
+                Stmt::If { then_b, else_b, .. } => {
+                    self.block(then_b);
+                    self.block(else_b);
+                    avail.clear();
+                    dep_of.clear();
+                }
+                Stmt::While { cond, body, .. } => {
+                    self.block(cond);
+                    self.block(body);
+                    avail.clear();
+                    dep_of.clear();
+                }
+                Stmt::Break | Stmt::Continue | Stmt::Return => {}
+            }
+        }
+    }
+}
+
+/// Run local CSE; returns the number of replaced instructions.
+pub fn run(k: &mut Kernel) -> usize {
+    let mut c = Cse { replaced: 0 };
+    let mut body = std::mem::take(&mut k.body);
+    c.block(&mut body);
+    k.body = body;
+    c.replaced
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hetir::builder::KernelBuilder;
+    use crate::hetir::instr::*;
+    use crate::hetir::types::{AddrSpace, Scalar, Type, Value};
+
+    #[test]
+    fn eliminates_duplicate_arith() {
+        let mut b = KernelBuilder::new("k");
+        let x = b.param("x", Type::U32);
+        let a = b.bin(BinOp::Mul, Scalar::U32, x.into(), Operand::Imm(Value::u32(4)));
+        let c = b.bin(BinOp::Mul, Scalar::U32, x.into(), Operand::Imm(Value::u32(4)));
+        let _d = b.bin(BinOp::Add, Scalar::U32, a.into(), c.into());
+        let mut k = b.finish_raw();
+        assert_eq!(run(&mut k), 1);
+        let mut movs = 0;
+        k.visit_insts(|i| {
+            if matches!(i, Inst::Mov { src: Operand::Reg(r), .. } if *r == a) {
+                movs += 1;
+            }
+        });
+        assert_eq!(movs, 1);
+    }
+
+    #[test]
+    fn redefinition_invalidates() {
+        let mut b = KernelBuilder::new("k");
+        let x = b.param("x", Type::U32);
+        let _a = b.bin(BinOp::Add, Scalar::U32, x.into(), Operand::Imm(Value::u32(1)));
+        // redefine x
+        b.bin_into(x, BinOp::Add, Scalar::U32, x.into(), Operand::Imm(Value::u32(5)));
+        let _c = b.bin(BinOp::Add, Scalar::U32, x.into(), Operand::Imm(Value::u32(1)));
+        let mut k = b.finish_raw();
+        assert_eq!(run(&mut k), 0, "x changed between occurrences");
+    }
+
+    #[test]
+    fn loads_never_csed() {
+        let mut b = KernelBuilder::new("k");
+        let p = b.param("p", Type::PTR_GLOBAL);
+        let _v1 = b.ld(AddrSpace::Global, Scalar::F32, Address::base(p));
+        let _v2 = b.ld(AddrSpace::Global, Scalar::F32, Address::base(p));
+        let mut k = b.finish_raw();
+        assert_eq!(run(&mut k), 0, "loads may observe other threads' writes");
+    }
+
+    #[test]
+    fn team_ops_never_csed() {
+        let mut b = KernelBuilder::new("k");
+        let p = b.param("p", Type::PRED);
+        let _v1 = b.vote(VoteKind::Any, p.into());
+        let _v2 = b.vote(VoteKind::Any, p.into());
+        let mut k = b.finish_raw();
+        assert_eq!(run(&mut k), 0);
+    }
+}

@@ -1,0 +1,256 @@
+//! Dead code elimination over the structured hetIR body.
+//!
+//! Removes instructions whose results are never used and which have no side
+//! effects, plus empty `If` regions. Runs backward liveness internally (the
+//! same machinery as `liveness.rs` but keeping a running live set while
+//! deleting). Conservative around loops: anything defined in a loop that is
+//! live at the loop's own entry survives.
+
+use crate::hetir::instr::Reg;
+use crate::hetir::module::{Kernel, Stmt};
+use std::collections::BTreeSet;
+
+type Live = BTreeSet<Reg>;
+
+struct LoopCtx {
+    live_exit: Live,
+    live_cond_in: Live,
+}
+
+struct Dce {
+    loops: Vec<LoopCtx>,
+    removed: usize,
+}
+
+impl Dce {
+    /// Process a block backward; deletes dead instructions in place.
+    fn block(&mut self, stmts: &mut Vec<Stmt>, live_out: &Live) -> Live {
+        let mut live = live_out.clone();
+        let mut keep: Vec<bool> = vec![true; stmts.len()];
+        for (idx, s) in stmts.iter_mut().enumerate().rev() {
+            match s {
+                Stmt::I(i) => {
+                    let dead = !i.has_side_effect()
+                        && !i.is_team_op()
+                        && i.def().map_or(false, |d| !live.contains(&d));
+                    if dead {
+                        keep[idx] = false;
+                        self.removed += 1;
+                        continue;
+                    }
+                    if let Some(d) = i.def() {
+                        live.remove(&d);
+                    }
+                    let mut uses = Vec::new();
+                    i.uses(&mut uses);
+                    live.extend(uses);
+                }
+                Stmt::Return => live = Live::new(),
+                Stmt::Break => {
+                    live = self.loops.last().map(|l| l.live_exit.clone()).unwrap_or_default()
+                }
+                Stmt::Continue => {
+                    live =
+                        self.loops.last().map(|l| l.live_cond_in.clone()).unwrap_or_default()
+                }
+                Stmt::If { cond, then_b, else_b } => {
+                    let t = self.block(then_b, &live);
+                    let e = self.block(else_b, &live);
+                    if then_b.is_empty() && else_b.is_empty() {
+                        keep[idx] = false;
+                        self.removed += 1;
+                        continue;
+                    }
+                    live = &t | &e;
+                    live.insert(*cond);
+                }
+                Stmt::While { cond, cond_reg, body } => {
+                    // Fixpoint as in liveness; DCE inside using the final
+                    // live sets (delete only on the last iteration to stay
+                    // sound while the fixpoint converges).
+                    let live_exit = live.clone();
+                    let mut live_cond_in = Live::new();
+                    // First converge liveness without deleting.
+                    loop {
+                        self.loops.push(LoopCtx {
+                            live_exit: live_exit.clone(),
+                            live_cond_in: live_cond_in.clone(),
+                        });
+                        let body_in = probe_block(body, &live_cond_in, &mut self.loops);
+                        let mut after_test = &body_in | &live_exit;
+                        after_test.insert(*cond_reg);
+                        let new_cond_in = probe_block(cond, &after_test, &mut self.loops);
+                        self.loops.pop();
+                        if new_cond_in == live_cond_in {
+                            break;
+                        }
+                        live_cond_in = new_cond_in;
+                    }
+                    // Now delete with the converged sets.
+                    self.loops.push(LoopCtx {
+                        live_exit: live_exit.clone(),
+                        live_cond_in: live_cond_in.clone(),
+                    });
+                    let body_in = self.block(body, &live_cond_in);
+                    let mut after_test = &body_in | &live_exit;
+                    after_test.insert(*cond_reg);
+                    let cond_in = self.block(cond, &after_test);
+                    self.loops.pop();
+                    live = cond_in;
+                }
+            }
+        }
+        let mut it = keep.iter();
+        stmts.retain(|_| *it.next().unwrap());
+        live
+    }
+}
+
+/// Liveness-only probe used while converging loop fixpoints (no deletion).
+fn probe_block(stmts: &[Stmt], live_out: &Live, loops: &mut Vec<LoopCtx>) -> Live {
+    let mut live = live_out.clone();
+    for s in stmts.iter().rev() {
+        match s {
+            Stmt::I(i) => {
+                if let Some(d) = i.def() {
+                    live.remove(&d);
+                }
+                let mut uses = Vec::new();
+                i.uses(&mut uses);
+                live.extend(uses);
+            }
+            Stmt::Return => live = Live::new(),
+            Stmt::Break => live = loops.last().map(|l| l.live_exit.clone()).unwrap_or_default(),
+            Stmt::Continue => {
+                live = loops.last().map(|l| l.live_cond_in.clone()).unwrap_or_default()
+            }
+            Stmt::If { cond, then_b, else_b } => {
+                let t = probe_block(then_b, &live, loops);
+                let e = probe_block(else_b, &live, loops);
+                live = &t | &e;
+                live.insert(*cond);
+            }
+            Stmt::While { cond, cond_reg, body } => {
+                let live_exit = live.clone();
+                let mut live_cond_in = Live::new();
+                loop {
+                    loops.push(LoopCtx {
+                        live_exit: live_exit.clone(),
+                        live_cond_in: live_cond_in.clone(),
+                    });
+                    let body_in = probe_block(body, &live_cond_in, loops);
+                    let mut after_test = &body_in | &live_exit;
+                    after_test.insert(*cond_reg);
+                    let new_cond_in = probe_block(cond, &after_test, loops);
+                    loops.pop();
+                    if new_cond_in == live_cond_in {
+                        break;
+                    }
+                    live_cond_in = new_cond_in;
+                }
+                live = live_cond_in;
+            }
+        }
+    }
+    live
+}
+
+/// Run DCE; returns the number of removed statements.
+pub fn run(k: &mut Kernel) -> usize {
+    let mut d = Dce { loops: Vec::new(), removed: 0 };
+    let mut body = std::mem::take(&mut k.body);
+    d.block(&mut body, &Live::new());
+    k.body = body;
+    d.removed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hetir::builder::KernelBuilder;
+    use crate::hetir::instr::*;
+    use crate::hetir::types::{AddrSpace, Scalar, Type, Value};
+
+    #[test]
+    fn removes_unused_arith() {
+        let mut b = KernelBuilder::new("k");
+        let out = b.param("O", Type::PTR_GLOBAL);
+        let used = b.bin(
+            BinOp::Add,
+            Scalar::F32,
+            Operand::Imm(Value::f32(1.0)),
+            Operand::Imm(Value::f32(2.0)),
+        );
+        let _dead = b.bin(
+            BinOp::Mul,
+            Scalar::F32,
+            Operand::Imm(Value::f32(3.0)),
+            Operand::Imm(Value::f32(4.0)),
+        );
+        b.st(AddrSpace::Global, Scalar::F32, Address::base(out), used.into());
+        let mut k = b.finish_raw();
+        let n_before = k.inst_count();
+        let removed = run(&mut k);
+        assert_eq!(removed, 1);
+        assert_eq!(k.inst_count(), n_before - 1);
+    }
+
+    #[test]
+    fn keeps_stores_and_atomics() {
+        let mut b = KernelBuilder::new("k");
+        let out = b.param("O", Type::PTR_GLOBAL);
+        b.st(
+            AddrSpace::Global,
+            Scalar::F32,
+            Address::base(out),
+            Operand::Imm(Value::f32(1.0)),
+        );
+        let _old =
+            b.atom(AtomOp::Add, AddrSpace::Global, Scalar::U32, Address::base(out), Operand::Imm(Value::u32(1)));
+        let mut k = b.finish_raw();
+        assert_eq!(run(&mut k), 0);
+    }
+
+    #[test]
+    fn keeps_loop_carried_values() {
+        let mut b = KernelBuilder::new("k");
+        let out = b.param("O", Type::PTR_GLOBAL);
+        let acc = b.mov(Type::U32, Operand::Imm(Value::u32(0)));
+        b.for_u32(Operand::Imm(Value::u32(0)), Operand::Imm(Value::u32(10)), 1, |b, _| {
+            b.bin_into(acc, BinOp::Add, Scalar::U32, acc.into(), Operand::Imm(Value::u32(1)));
+        });
+        b.st(AddrSpace::Global, Scalar::U32, Address::base(out), acc.into());
+        let mut k = b.finish_raw();
+        assert_eq!(run(&mut k), 0, "nothing in the loop is dead");
+    }
+
+    #[test]
+    fn removes_empty_if() {
+        let mut b = KernelBuilder::new("k");
+        let p = b.param("p", Type::PRED);
+        b.if_(p, |b| {
+            // body computes something never used
+            let _d = b.bin(
+                BinOp::Add,
+                Scalar::U32,
+                Operand::Imm(Value::u32(1)),
+                Operand::Imm(Value::u32(2)),
+            );
+        });
+        let mut k = b.finish_raw();
+        let removed = run(&mut k);
+        assert_eq!(removed, 2); // the add, then the now-empty if
+        assert!(k.body.is_empty());
+    }
+
+    #[test]
+    fn team_ops_survive_even_if_unused() {
+        // A vote participates in cross-thread communication; removing it on
+        // one thread but not another would deadlock/diverge. DCE keeps it.
+        let mut b = KernelBuilder::new("k");
+        let p = b.param("p", Type::PRED);
+        let _v = b.vote(VoteKind::Any, p.into());
+        let mut k = b.finish_raw();
+        assert_eq!(run(&mut k), 0);
+    }
+}

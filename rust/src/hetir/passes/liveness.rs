@@ -1,0 +1,239 @@
+//! Liveness analysis over the structured hetIR body.
+//!
+//! Computes, for every barrier (suspension point), the set of virtual
+//! registers whose values must be captured into a snapshot for execution to
+//! resume *after* that barrier — and nothing more (paper §8: "only saving
+//! live registers (not entire register files) would help").
+//!
+//! The analysis is a standard backward may-liveness over the statement
+//! tree. Loops iterate to a fixpoint (registers are finite and the transfer
+//! function is monotone, so this terminates quickly). `Break`/`Continue`
+//! take the live set of the innermost loop's exit/condition respectively,
+//! carried on an explicit context stack.
+//!
+//! Over-approximation is safe here (a too-large snapshot is merely bigger);
+//! under-approximation would corrupt migrated state, so tests in this
+//! module and the cross-backend migration tests guard the precise sets.
+
+use crate::hetir::instr::{Inst, Reg};
+use crate::hetir::module::{Kernel, Stmt};
+use std::collections::BTreeSet;
+
+type Live = BTreeSet<Reg>;
+
+/// Loop context for Break/Continue targets.
+struct LoopCtx {
+    live_exit: Live,
+    live_cond_in: Live,
+}
+
+struct Analyzer {
+    /// live_regs per barrier id, recorded as the live set *after* the
+    /// barrier instruction (== what a resume at that segment must restore).
+    at_barrier: Vec<Option<Live>>,
+    loops: Vec<LoopCtx>,
+}
+
+impl Analyzer {
+    fn transfer_inst(&mut self, i: &Inst, live: &mut Live) {
+        if let Inst::Bar { id } = i {
+            // Record live-after (current set, since we walk backward and
+            // have already processed everything after the barrier).
+            let slot = &mut self.at_barrier[*id as usize];
+            match slot {
+                // Loops visit barriers multiple times during fixpoint
+                // iteration; keep the union (conservative).
+                Some(prev) => prev.extend(live.iter().copied()),
+                None => *slot = Some(live.clone()),
+            }
+        }
+        if let Some(d) = i.def() {
+            live.remove(&d);
+        }
+        let mut uses = Vec::new();
+        i.uses(&mut uses);
+        live.extend(uses);
+    }
+
+    /// Process a block backward: given live-out, return live-in.
+    fn block(&mut self, stmts: &[Stmt], live_out: &Live) -> Live {
+        let mut live = live_out.clone();
+        for s in stmts.iter().rev() {
+            match s {
+                Stmt::I(i) => self.transfer_inst(i, &mut live),
+                Stmt::Return => {
+                    // Nothing after a Return in this thread is reachable;
+                    // live set restarts from empty for code before it.
+                    live = Live::new();
+                }
+                // Break/Continue outside a loop is malformed IR; the
+                // verifier reports it — the analysis just stays safe.
+                Stmt::Break => {
+                    live = self.loops.last().map(|l| l.live_exit.clone()).unwrap_or_default();
+                }
+                Stmt::Continue => {
+                    live =
+                        self.loops.last().map(|l| l.live_cond_in.clone()).unwrap_or_default();
+                }
+                Stmt::If { cond, then_b, else_b } => {
+                    let t = self.block(then_b, &live);
+                    let e = self.block(else_b, &live);
+                    live = &t | &e;
+                    live.insert(*cond);
+                }
+                Stmt::While { cond, cond_reg, body } => {
+                    // Fixpoint: live at condition entry depends on body
+                    // live-in which depends back on condition entry.
+                    let live_exit = live.clone();
+                    let mut live_cond_in = Live::new();
+                    loop {
+                        self.loops.push(LoopCtx {
+                            live_exit: live_exit.clone(),
+                            live_cond_in: live_cond_in.clone(),
+                        });
+                        // after the test: either body runs (then back to
+                        // cond) or we exit
+                        let body_in = self.block(body, &live_cond_in);
+                        let mut after_test = &body_in | &live_exit;
+                        after_test.insert(*cond_reg);
+                        let new_cond_in = self.block(cond, &after_test);
+                        self.loops.pop();
+                        if new_cond_in == live_cond_in {
+                            break;
+                        }
+                        live_cond_in = new_cond_in;
+                    }
+                    live = live_cond_in;
+                }
+            }
+        }
+        live
+    }
+}
+
+/// Run liveness; fills `kernel.suspension_points[*].live_regs`.
+pub fn run(k: &mut Kernel) {
+    if k.suspension_points.len() != k.num_barriers as usize {
+        // Segmenter hasn't run (or IR changed); establish metadata first.
+        super::segmenter::run(k);
+    }
+    let mut a = Analyzer {
+        at_barrier: vec![None; k.num_barriers as usize],
+        loops: Vec::new(),
+    };
+    let body = std::mem::take(&mut k.body);
+    a.block(&body, &Live::new());
+    k.body = body;
+    for (id, live) in a.at_barrier.into_iter().enumerate() {
+        k.suspension_points[id].live_regs = live.unwrap_or_default().into_iter().collect();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hetir::builder::KernelBuilder;
+    use crate::hetir::instr::*;
+    use crate::hetir::types::{Scalar, Type, Value};
+
+    /// A loop-carried accumulator must be live at a barrier inside the loop.
+    #[test]
+    fn loop_carried_reg_is_live_at_barrier() {
+        let mut b = KernelBuilder::new("k");
+        let n = b.param("N", Type::U32);
+        let out = b.param("O", Type::PTR_GLOBAL);
+        let acc = b.mov(Type::F32, Operand::Imm(Value::f32(0.0)));
+        b.for_u32(Operand::Imm(Value::u32(0)), n.into(), 1, |b, _i| {
+            b.bin_into(acc, BinOp::Add, Scalar::F32, acc.into(), Operand::Imm(Value::f32(1.0)));
+            b.bar();
+        });
+        b.st(
+            crate::hetir::types::AddrSpace::Global,
+            Scalar::F32,
+            Address::base(out),
+            acc.into(),
+        );
+        let k = b.finish();
+        let sp = k.suspension_point(0).unwrap();
+        assert!(sp.live_regs.contains(&acc), "accumulator {acc} not in {:?}", sp.live_regs);
+        assert!(sp.live_regs.contains(&n), "loop bound must be live");
+        assert!(sp.live_regs.contains(&out), "output pointer must be live");
+    }
+
+    /// A register fully consumed before the barrier must NOT be captured.
+    #[test]
+    fn dead_reg_not_captured() {
+        let mut b = KernelBuilder::new("k");
+        let out = b.param("O", Type::PTR_GLOBAL);
+        let t = b.bin(
+            BinOp::Add,
+            Scalar::F32,
+            Operand::Imm(Value::f32(1.0)),
+            Operand::Imm(Value::f32(2.0)),
+        );
+        b.st(crate::hetir::types::AddrSpace::Global, Scalar::F32, Address::base(out), t.into());
+        b.bar();
+        // after the barrier, only `out` is reused
+        b.st(
+            crate::hetir::types::AddrSpace::Global,
+            Scalar::F32,
+            Address::base(out).with_disp(4),
+            Operand::Imm(Value::f32(0.0)),
+        );
+        let k = b.finish();
+        let sp = k.suspension_point(0).unwrap();
+        assert!(!sp.live_regs.contains(&t), "consumed temp must not be live");
+        assert!(sp.live_regs.contains(&out));
+    }
+
+    /// Values defined after the barrier are not live at it.
+    #[test]
+    fn post_barrier_defs_not_live() {
+        let mut b = KernelBuilder::new("k");
+        let out = b.param("O", Type::PTR_GLOBAL);
+        b.bar();
+        let t = b.bin(
+            BinOp::Add,
+            Scalar::F32,
+            Operand::Imm(Value::f32(1.0)),
+            Operand::Imm(Value::f32(2.0)),
+        );
+        b.st(crate::hetir::types::AddrSpace::Global, Scalar::F32, Address::base(out), t.into());
+        let k = b.finish();
+        let sp = k.suspension_point(0).unwrap();
+        assert!(!sp.live_regs.contains(&t));
+    }
+
+    /// Break takes the loop-exit live set.
+    #[test]
+    fn break_uses_exit_liveness() {
+        let mut b = KernelBuilder::new("k");
+        let out = b.param("O", Type::PTR_GLOBAL);
+        let after_loop = b.mov(Type::F32, Operand::Imm(Value::f32(7.0)));
+        let p = b.cmp(
+            CmpOp::Lt,
+            Scalar::U32,
+            Operand::Imm(Value::u32(0)),
+            Operand::Imm(Value::u32(1)),
+        );
+        b.while_(
+            |_| p,
+            |b| {
+                b.bar();
+                b.brk();
+            },
+        );
+        b.st(
+            crate::hetir::types::AddrSpace::Global,
+            Scalar::F32,
+            Address::base(out),
+            after_loop.into(),
+        );
+        let k = b.finish();
+        let sp = k.suspension_point(0).unwrap();
+        assert!(
+            sp.live_regs.contains(&after_loop),
+            "value used after loop must be live at in-loop barrier before break"
+        );
+    }
+}

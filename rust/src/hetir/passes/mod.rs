@@ -1,0 +1,28 @@
+//! Target-agnostic hetIR passes.
+//!
+//! The compiler performs only device-independent transforms here (paper
+//! §4.1: "we avoid any optimizations that assume specific hardware
+//! characteristics ... those decisions are deferred to runtime or late
+//! JIT"). The migration-critical passes are [`segmenter`] (stable barrier /
+//! segment ids shared by every backend) and [`liveness`] (minimal snapshot
+//! register sets).
+
+pub mod constfold;
+pub mod cse;
+pub mod dce;
+pub mod liveness;
+pub mod segmenter;
+pub mod uniformity;
+
+use super::module::Kernel;
+
+/// Run the standard optimization pipeline followed by the migration
+/// metadata passes. Idempotent.
+pub fn optimize(k: &mut Kernel) {
+    constfold::run(k);
+    cse::run(k);
+    dce::run(k);
+    // Re-establish migration metadata after any instruction removal.
+    segmenter::run(k);
+    liveness::run(k);
+}

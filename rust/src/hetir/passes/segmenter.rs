@@ -1,0 +1,83 @@
+//! Segmenter: assigns stable ids to every barrier in a kernel.
+//!
+//! Barrier ids double as migration segment boundaries (paper §4.2: "we
+//! break the kernel into segments separated by barriers ... In migration,
+//! we end the segment early on GPU A, transfer state, then start at the
+//! next segment on GPU B"). Ids are assigned in deterministic pre-order
+//! traversal so **every backend translation of the same kernel agrees on
+//! them** — that agreement is what makes a snapshot taken on one
+//! architecture restorable on another.
+
+use crate::hetir::instr::Inst;
+use crate::hetir::module::{Kernel, Stmt, SuspensionPoint};
+
+fn walk(stmts: &mut [Stmt], next: &mut u32) {
+    for s in stmts {
+        match s {
+            Stmt::I(Inst::Bar { id }) => {
+                *id = *next;
+                *next += 1;
+            }
+            Stmt::I(_) | Stmt::Break | Stmt::Continue | Stmt::Return => {}
+            Stmt::If { then_b, else_b, .. } => {
+                walk(then_b, next);
+                walk(else_b, next);
+            }
+            Stmt::While { cond, body, .. } => {
+                walk(cond, next);
+                walk(body, next);
+            }
+        }
+    }
+}
+
+/// Assign dense barrier ids in pre-order; reset suspension-point metadata.
+pub fn run(k: &mut Kernel) {
+    let mut next = 0u32;
+    walk(&mut k.body, &mut next);
+    k.num_barriers = next;
+    k.suspension_points = (0..next)
+        .map(|barrier_id| SuspensionPoint { barrier_id, live_regs: Vec::new() })
+        .collect();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hetir::instr::Reg;
+
+    #[test]
+    fn ids_are_dense_and_preorder() {
+        let mut k = Kernel::new("k");
+        k.reg_types.push(crate::hetir::types::Type::PRED);
+        k.body = vec![
+            Stmt::I(Inst::Bar { id: u32::MAX }),
+            Stmt::If {
+                cond: Reg(0),
+                then_b: vec![Stmt::I(Inst::Bar { id: u32::MAX })],
+                else_b: vec![Stmt::I(Inst::Bar { id: u32::MAX })],
+            },
+            Stmt::I(Inst::Bar { id: u32::MAX }),
+        ];
+        run(&mut k);
+        assert_eq!(k.num_barriers, 4);
+        let mut ids = vec![];
+        k.visit_insts(|i| {
+            if let Inst::Bar { id } = i {
+                ids.push(*id)
+            }
+        });
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+        assert_eq!(k.suspension_points.len(), 4);
+    }
+
+    #[test]
+    fn rerun_is_stable() {
+        let mut k = Kernel::new("k");
+        k.body = vec![Stmt::I(Inst::Bar { id: u32::MAX }), Stmt::I(Inst::Bar { id: u32::MAX })];
+        run(&mut k);
+        let first: Vec<Stmt> = k.body.clone();
+        run(&mut k);
+        assert_eq!(k.body, first);
+    }
+}

@@ -1,0 +1,271 @@
+//! Uniformity (divergence) analysis.
+//!
+//! Classifies every virtual register as **uniform** (provably the same
+//! value in all threads of a block) or **varying**. Two consumers:
+//!
+//! * The **Tensix backend** assigns uniform values to scalar RISC-V
+//!   registers and varying values to 32-lane vector registers — the paper's
+//!   "one core simulates a warp" mapping needs exactly this split.
+//! * The **verifier** rejects barriers under divergent control flow (a
+//!   block-wide barrier inside a branch only some threads take is undefined
+//!   behaviour on every real GPU, and would deadlock our simulators).
+//!
+//! Sources of varying-ness: thread indices, loads from varying addresses,
+//! atomics (each thread gets a different old value), shuffles, RNG state,
+//! and any assignment under a divergent branch (control dependence).
+//! Vote/ballot results are *uniform* — every lane receives the same value.
+
+use crate::hetir::instr::{Inst, Reg, SpecialReg};
+use crate::hetir::module::{Kernel, Stmt};
+use std::collections::BTreeSet;
+
+/// Analysis result.
+#[derive(Debug, Clone, Default)]
+pub struct Uniformity {
+    varying: BTreeSet<Reg>,
+}
+
+impl Uniformity {
+    pub fn is_varying(&self, r: Reg) -> bool {
+        self.varying.contains(&r)
+    }
+    pub fn is_uniform(&self, r: Reg) -> bool {
+        !self.is_varying(r)
+    }
+    /// Number of varying registers (diagnostics).
+    pub fn varying_count(&self) -> usize {
+        self.varying.len()
+    }
+}
+
+struct Analysis {
+    varying: BTreeSet<Reg>,
+    changed: bool,
+}
+
+impl Analysis {
+    fn mark(&mut self, r: Reg) {
+        if self.varying.insert(r) {
+            self.changed = true;
+        }
+    }
+
+    fn operand_varying(&self, o: &crate::hetir::instr::Operand) -> bool {
+        o.reg().map_or(false, |r| self.varying.contains(&r))
+    }
+
+    fn addr_varying(&self, a: &crate::hetir::instr::Address) -> bool {
+        self.varying.contains(&a.base)
+            || a.index.map_or(false, |r| self.varying.contains(&r))
+    }
+
+    fn inst(&mut self, i: &Inst, divergent: bool) {
+        let dst = match i.def() {
+            Some(d) => d,
+            None => return,
+        };
+        let varying = match i {
+            Inst::Special { kind, .. } => matches!(
+                kind,
+                SpecialReg::ThreadIdx(_) | SpecialReg::GlobalId(_)
+            ),
+            Inst::Mov { src, .. } => self.operand_varying(src),
+            Inst::Bin { a, b, .. } | Inst::Cmp { a, b, .. } => {
+                self.operand_varying(a) || self.operand_varying(b)
+            }
+            Inst::Un { a, .. } => self.operand_varying(a),
+            Inst::Fma { a, b, c, .. } => {
+                self.operand_varying(a) || self.operand_varying(b) || self.operand_varying(c)
+            }
+            Inst::Sel { cond, a, b, .. } => {
+                self.operand_varying(cond) || self.operand_varying(a) || self.operand_varying(b)
+            }
+            Inst::Cvt { src, .. } => self.operand_varying(src),
+            Inst::PtrAdd { addr, .. } => self.addr_varying(addr),
+            // A load from a uniform address executed by all threads yields
+            // the same value everywhere → uniform.
+            Inst::Ld { addr, .. } => self.addr_varying(addr),
+            // Each thread receives a distinct old value.
+            Inst::Atom { .. } => true,
+            // Every lane receives the identical reduction result.
+            Inst::Vote { .. } | Inst::Ballot { .. } => false,
+            Inst::Shfl { .. } => true,
+            Inst::Rng { .. } => true,
+            Inst::St { .. } | Inst::Bar { .. } | Inst::Fence { .. } | Inst::Trap { .. } => false,
+        };
+        if varying || divergent {
+            self.mark(dst);
+        }
+    }
+
+    fn block(&mut self, stmts: &[Stmt], divergent: bool) {
+        for s in stmts {
+            match s {
+                Stmt::I(i) => self.inst(i, divergent),
+                Stmt::If { cond, then_b, else_b } => {
+                    let div = divergent || self.varying.contains(cond);
+                    self.block(then_b, div);
+                    self.block(else_b, div);
+                }
+                Stmt::While { cond, cond_reg, body } => {
+                    // First process the condition block in the current
+                    // context, then the body under (possible) divergence.
+                    self.block(cond, divergent);
+                    let div = divergent || self.varying.contains(cond_reg);
+                    self.block(body, div);
+                    // Re-run cond under divergence if the loop is divergent
+                    // (a lane can exit earlier than others, making the
+                    // condition computation itself control-dependent).
+                    if div {
+                        self.block(cond, true);
+                    }
+                }
+                Stmt::Break | Stmt::Continue | Stmt::Return => {}
+            }
+        }
+    }
+}
+
+/// Run the analysis to fixpoint.
+pub fn run(k: &Kernel) -> Uniformity {
+    let mut a = Analysis { varying: BTreeSet::new(), changed: true };
+    while a.changed {
+        a.changed = false;
+        a.block(&k.body, false);
+    }
+    Uniformity { varying: a.varying }
+}
+
+/// Check whether any barrier sits under divergent control flow; returns the
+/// offending barrier id if so. Used by the verifier.
+pub fn barrier_under_divergence(k: &Kernel) -> Option<u32> {
+    let u = run(k);
+    fn walk(stmts: &[Stmt], u: &Uniformity, divergent: bool) -> Option<u32> {
+        for s in stmts {
+            match s {
+                Stmt::I(Inst::Bar { id }) if divergent => return Some(*id),
+                Stmt::I(_) | Stmt::Break | Stmt::Continue | Stmt::Return => {}
+                Stmt::If { cond, then_b, else_b } => {
+                    let div = divergent || u.is_varying(*cond);
+                    if let Some(id) = walk(then_b, u, div) {
+                        return Some(id);
+                    }
+                    if let Some(id) = walk(else_b, u, div) {
+                        return Some(id);
+                    }
+                }
+                Stmt::While { cond, cond_reg, body } => {
+                    let div = divergent || u.is_varying(*cond_reg);
+                    if let Some(id) = walk(cond, u, divergent) {
+                        return Some(id);
+                    }
+                    if let Some(id) = walk(body, u, div) {
+                        return Some(id);
+                    }
+                }
+            }
+        }
+        None
+    }
+    walk(&k.body, &u, false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hetir::builder::KernelBuilder;
+    use crate::hetir::instr::*;
+    use crate::hetir::types::{Scalar, Type, Value};
+
+    #[test]
+    fn thread_idx_is_varying_block_idx_uniform() {
+        let mut b = KernelBuilder::new("k");
+        let t = b.special(SpecialReg::ThreadIdx(Dim::X));
+        let blk = b.special(SpecialReg::BlockIdx(Dim::X));
+        let k = b.finish_raw();
+        let u = run(&k);
+        assert!(u.is_varying(t));
+        assert!(u.is_uniform(blk));
+    }
+
+    #[test]
+    fn varying_propagates_through_arith() {
+        let mut b = KernelBuilder::new("k");
+        let t = b.special(SpecialReg::ThreadIdx(Dim::X));
+        let x = b.bin(BinOp::Add, Scalar::U32, t.into(), Operand::Imm(Value::u32(1)));
+        let y = b.bin(
+            BinOp::Add,
+            Scalar::U32,
+            Operand::Imm(Value::u32(1)),
+            Operand::Imm(Value::u32(2)),
+        );
+        let k = b.finish_raw();
+        let u = run(&k);
+        assert!(u.is_varying(x));
+        assert!(u.is_uniform(y));
+    }
+
+    #[test]
+    fn control_dependence_marks_varying() {
+        let mut b = KernelBuilder::new("k");
+        let t = b.special(SpecialReg::ThreadIdx(Dim::X));
+        let p = b.cmp(CmpOp::Lt, Scalar::U32, t.into(), Operand::Imm(Value::u32(16)));
+        let x = b.mov(Type::U32, Operand::Imm(Value::u32(0)));
+        b.if_(p, |b| {
+            // constant assignment, but only some threads execute it
+            b.bin_into(x, BinOp::Add, Scalar::U32, x.into(), Operand::Imm(Value::u32(1)));
+        });
+        let k = b.finish_raw();
+        let u = run(&k);
+        assert!(u.is_varying(x), "divergently-assigned register must be varying");
+    }
+
+    #[test]
+    fn vote_result_is_uniform() {
+        let mut b = KernelBuilder::new("k");
+        let t = b.special(SpecialReg::ThreadIdx(Dim::X));
+        let p = b.cmp(CmpOp::Lt, Scalar::U32, t.into(), Operand::Imm(Value::u32(16)));
+        let v = b.vote(VoteKind::Any, p.into());
+        let k = b.finish_raw();
+        let u = run(&k);
+        assert!(u.is_varying(p));
+        assert!(u.is_uniform(v));
+    }
+
+    #[test]
+    fn barrier_under_divergent_if_detected() {
+        let mut b = KernelBuilder::new("k");
+        let t = b.special(SpecialReg::ThreadIdx(Dim::X));
+        let p = b.cmp(CmpOp::Lt, Scalar::U32, t.into(), Operand::Imm(Value::u32(16)));
+        b.if_(p, |b| b.bar());
+        let k = b.finish_raw();
+        assert!(barrier_under_divergence(&k).is_some());
+    }
+
+    #[test]
+    fn barrier_in_uniform_loop_ok() {
+        let mut b = KernelBuilder::new("k");
+        let n = b.param("N", Type::U32);
+        b.for_u32(Operand::Imm(Value::u32(0)), n.into(), 1, |b, _| b.bar());
+        let k = b.finish_raw();
+        assert!(barrier_under_divergence(&k).is_none());
+    }
+
+    #[test]
+    fn loop_carried_varying_reaches_fixpoint() {
+        // x starts uniform but is updated from a varying value inside the
+        // loop — after fixpoint it must be varying even in the condition.
+        let mut b = KernelBuilder::new("k");
+        let t = b.special(SpecialReg::ThreadIdx(Dim::X));
+        let x = b.mov(Type::U32, Operand::Imm(Value::u32(0)));
+        b.while_(
+            |bb| bb.cmp(CmpOp::Lt, Scalar::U32, x.into(), Operand::Imm(Value::u32(10))),
+            |bb| {
+                bb.bin_into(x, BinOp::Add, Scalar::U32, x.into(), t.into());
+            },
+        );
+        let k = b.finish_raw();
+        let u = run(&k);
+        assert!(u.is_varying(x));
+    }
+}

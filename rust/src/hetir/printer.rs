@@ -1,0 +1,345 @@
+//! hetIR text-assembly printer.
+//!
+//! The text form is the on-disk "binary" format of hetGPU (the paper ships
+//! one abstract code version per module, §2.1) and the debugging surface.
+//! [`super::parser`] parses exactly what this module prints; the roundtrip
+//! property (print ∘ parse ∘ print = print) is tested in the parser module
+//! and fuzzed by the property tests.
+//!
+//! Example output:
+//! ```text
+//! .module "vecops"
+//! .kernel vadd(%r0:ptr<global> A, %r1:ptr<global> B, %r2:u32 N) .shared 0 {
+//!   .reg %r3:u32 %r4:pred %r5:f32
+//!   %r3 = GID.x;
+//!   %r4 = SETP.LT.U32 %r3, %r2;
+//!   @PRED %r4 {
+//!     %r5 = LD.GLOBAL.F32 [%r0 + %r3*4];
+//!     ST.GLOBAL.F32 [%r1 + %r3*4], %r5;
+//!   }
+//!   RET;
+//! }
+//! ```
+
+use super::instr::*;
+use super::module::{Kernel, Module, Stmt};
+use super::types::{AddrSpace, Scalar, Type, Value};
+use std::fmt::Write;
+
+fn space_tag(s: AddrSpace) -> &'static str {
+    match s {
+        AddrSpace::Global => "GLOBAL",
+        AddrSpace::Shared => "SHARED",
+    }
+}
+
+fn imm_str(v: Value) -> String {
+    match v.ty {
+        Type::Scalar(Scalar::Pred) => format!("{}", v.as_pred()),
+        Type::Scalar(Scalar::I32) => format!("{}:s32", v.as_i32()),
+        Type::Scalar(Scalar::U32) => format!("{}:u32", v.as_u32()),
+        Type::Scalar(Scalar::I64) => format!("{}:s64", v.as_i64()),
+        Type::Scalar(Scalar::U64) => format!("{}:u64", v.as_u64()),
+        // Hex bit-pattern keeps float roundtrips exact (NaN payloads, -0.0).
+        Type::Scalar(Scalar::F32) => format!("0f{:08x}:f32", v.bits as u32),
+        Type::Ptr(a) => format!("0x{:x}:ptr<{a}>", v.bits),
+    }
+}
+
+fn op_str(o: &Operand) -> String {
+    match o {
+        Operand::Reg(r) => r.to_string(),
+        Operand::Imm(v) => imm_str(*v),
+    }
+}
+
+fn addr_str(a: &Address) -> String {
+    let mut s = format!("[{}", a.base);
+    if let Some(i) = a.index {
+        write!(s, " + {i}*{}", a.scale).unwrap();
+    }
+    if a.disp != 0 {
+        write!(s, " + {}", a.disp).unwrap();
+    }
+    s.push(']');
+    s
+}
+
+fn special_str(k: SpecialReg) -> String {
+    match k {
+        SpecialReg::ThreadIdx(d) => format!("TID.{d}"),
+        SpecialReg::BlockIdx(d) => format!("CTAID.{d}"),
+        SpecialReg::BlockDim(d) => format!("NTID.{d}"),
+        SpecialReg::GridDim(d) => format!("NCTAID.{d}"),
+        SpecialReg::GlobalId(d) => format!("GID.{d}"),
+    }
+}
+
+fn bin_name(op: BinOp) -> &'static str {
+    match op {
+        BinOp::Add => "ADD",
+        BinOp::Sub => "SUB",
+        BinOp::Mul => "MUL",
+        BinOp::Div => "DIV",
+        BinOp::Rem => "REM",
+        BinOp::Min => "MIN",
+        BinOp::Max => "MAX",
+        BinOp::And => "AND",
+        BinOp::Or => "OR",
+        BinOp::Xor => "XOR",
+        BinOp::Shl => "SHL",
+        BinOp::Shr => "SHR",
+    }
+}
+
+fn un_name(op: UnOp) -> &'static str {
+    match op {
+        UnOp::Neg => "NEG",
+        UnOp::Not => "NOT",
+        UnOp::Abs => "ABS",
+        UnOp::Sqrt => "SQRT",
+        UnOp::Rsqrt => "RSQRT",
+        UnOp::Exp => "EXP",
+        UnOp::Log => "LOG",
+        UnOp::Sin => "SIN",
+        UnOp::Cos => "COS",
+        UnOp::Popc => "POPC",
+    }
+}
+
+fn cmp_name(op: CmpOp) -> &'static str {
+    match op {
+        CmpOp::Eq => "EQ",
+        CmpOp::Ne => "NE",
+        CmpOp::Lt => "LT",
+        CmpOp::Le => "LE",
+        CmpOp::Gt => "GT",
+        CmpOp::Ge => "GE",
+    }
+}
+
+fn atom_name(op: AtomOp) -> &'static str {
+    match op {
+        AtomOp::Add => "ADD",
+        AtomOp::Min => "MIN",
+        AtomOp::Max => "MAX",
+        AtomOp::Exch => "EXCH",
+        AtomOp::Cas => "CAS",
+        AtomOp::And => "AND",
+        AtomOp::Or => "OR",
+    }
+}
+
+fn shfl_name(k: ShflKind) -> &'static str {
+    match k {
+        ShflKind::Idx => "IDX",
+        ShflKind::Down => "DOWN",
+        ShflKind::Up => "UP",
+        ShflKind::Xor => "XOR",
+    }
+}
+
+/// Print one instruction (no indentation, no trailing newline).
+pub fn inst_str(i: &Inst) -> String {
+    match i {
+        Inst::Special { dst, kind } => format!("{dst} = {};", special_str(*kind)),
+        Inst::Mov { dst, src } => format!("{dst} = MOV {};", op_str(src)),
+        Inst::Bin { op, ty, dst, a, b } => {
+            format!("{dst} = {}.{} {}, {};", bin_name(*op), ty.suffix(), op_str(a), op_str(b))
+        }
+        Inst::Un { op, ty, dst, a } => {
+            format!("{dst} = {}.{} {};", un_name(*op), ty.suffix(), op_str(a))
+        }
+        Inst::Fma { ty, dst, a, b, c } => format!(
+            "{dst} = FMA.{} {}, {}, {};",
+            ty.suffix(),
+            op_str(a),
+            op_str(b),
+            op_str(c)
+        ),
+        Inst::Cmp { op, ty, dst, a, b } => format!(
+            "{dst} = SETP.{}.{} {}, {};",
+            cmp_name(*op),
+            ty.suffix(),
+            op_str(a),
+            op_str(b)
+        ),
+        Inst::Sel { dst, cond, a, b } => {
+            format!("{dst} = SEL {}, {}, {};", op_str(cond), op_str(a), op_str(b))
+        }
+        Inst::Cvt { from, to, dst, src } => {
+            format!("{dst} = CVT.{}.{} {};", to.suffix(), from.suffix(), op_str(src))
+        }
+        Inst::PtrAdd { dst, addr } => format!("{dst} = PTRADD {};", addr_str(addr)),
+        Inst::Ld { space, ty, dst, addr } => {
+            format!("{dst} = LD.{}.{} {};", space_tag(*space), ty.suffix(), addr_str(addr))
+        }
+        Inst::St { space, ty, addr, val } => {
+            format!("ST.{}.{} {}, {};", space_tag(*space), ty.suffix(), addr_str(addr), op_str(val))
+        }
+        Inst::Atom { op, space, ty, dst, addr, val, val2 } => {
+            let mut s = String::new();
+            if let Some(d) = dst {
+                write!(s, "{d} = ").unwrap();
+            }
+            write!(
+                s,
+                "ATOM.{}.{}.{} {}, {}",
+                atom_name(*op),
+                space_tag(*space),
+                ty.suffix(),
+                addr_str(addr),
+                op_str(val)
+            )
+            .unwrap();
+            if let Some(v2) = val2 {
+                write!(s, ", {}", op_str(v2)).unwrap();
+            }
+            s.push(';');
+            s
+        }
+        Inst::Bar { id } => format!("BAR {id};"),
+        Inst::Fence { scope } => match scope {
+            FenceScope::Block => "FENCE.BLOCK;".to_string(),
+            FenceScope::Device => "FENCE.DEVICE;".to_string(),
+        },
+        Inst::Vote { kind, dst, src } => {
+            let k = match kind {
+                VoteKind::Any => "ANY",
+                VoteKind::All => "ALL",
+            };
+            format!("{dst} = VOTE.{k} {};", op_str(src))
+        }
+        Inst::Ballot { dst, src } => format!("{dst} = BALLOT {};", op_str(src)),
+        Inst::Shfl { kind, ty, dst, val, lane } => format!(
+            "{dst} = SHFL.{}.{} {}, {};",
+            shfl_name(*kind),
+            ty.suffix(),
+            op_str(val),
+            op_str(lane)
+        ),
+        Inst::Rng { dst, state } => format!("{dst} = RNG {state};"),
+        Inst::Trap { code } => format!("TRAP {code};"),
+    }
+}
+
+fn print_block(out: &mut String, stmts: &[Stmt], indent: usize) {
+    let pad = "  ".repeat(indent);
+    for s in stmts {
+        match s {
+            Stmt::I(i) => {
+                out.push_str(&pad);
+                out.push_str(&inst_str(i));
+                out.push('\n');
+            }
+            Stmt::If { cond, then_b, else_b } => {
+                out.push_str(&pad);
+                writeln!(out, "@PRED {cond} {{").unwrap();
+                print_block(out, then_b, indent + 1);
+                if else_b.is_empty() {
+                    writeln!(out, "{pad}}}").unwrap();
+                } else {
+                    writeln!(out, "{pad}}} ELSE {{").unwrap();
+                    print_block(out, else_b, indent + 1);
+                    writeln!(out, "{pad}}}").unwrap();
+                }
+            }
+            Stmt::While { cond, cond_reg, body } => {
+                out.push_str(&pad);
+                writeln!(out, "LOOP {{").unwrap();
+                print_block(out, cond, indent + 1);
+                writeln!(out, "{pad}  TEST {cond_reg};").unwrap();
+                writeln!(out, "{pad}}} BODY {{").unwrap();
+                print_block(out, body, indent + 1);
+                writeln!(out, "{pad}}}").unwrap();
+            }
+            Stmt::Break => writeln!(out, "{pad}BREAK;").unwrap(),
+            Stmt::Continue => writeln!(out, "{pad}CONTINUE;").unwrap(),
+            Stmt::Return => writeln!(out, "{pad}RET;").unwrap(),
+        }
+    }
+}
+
+/// Print a kernel to text assembly.
+pub fn print_kernel(k: &Kernel) -> String {
+    let mut out = String::new();
+    let params: Vec<String> = k
+        .params
+        .iter()
+        .enumerate()
+        .map(|(i, p)| format!("%r{i}:{} {}", p.ty, p.name))
+        .collect();
+    writeln!(out, ".kernel {}({}) .shared {} {{", k.name, params.join(", "), k.shared_bytes)
+        .unwrap();
+    // Non-parameter register declarations, 8 per line for readability.
+    let decls: Vec<String> = (k.params.len()..k.reg_types.len())
+        .map(|i| format!("%r{i}:{}", k.reg_types[i]))
+        .collect();
+    for chunk in decls.chunks(8) {
+        writeln!(out, "  .reg {}", chunk.join(" ")).unwrap();
+    }
+    print_block(&mut out, &k.body, 1);
+    out.push_str("}\n");
+    out
+}
+
+/// Print a whole module.
+pub fn print_module(m: &Module) -> String {
+    let mut out = format!(".module \"{}\"\n", m.name);
+    for k in &m.kernels {
+        out.push('\n');
+        out.push_str(&print_kernel(k));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hetir::builder::KernelBuilder;
+
+    #[test]
+    fn prints_vadd() {
+        let mut b = KernelBuilder::new("vadd");
+        let a = b.param("A", Type::PTR_GLOBAL);
+        let c = b.param("C", Type::PTR_GLOBAL);
+        let n = b.param("N", Type::U32);
+        let i = b.special(SpecialReg::GlobalId(Dim::X));
+        let p = b.cmp(CmpOp::Lt, Scalar::U32, i.into(), n.into());
+        b.if_(p, |b| {
+            let v = b.ld(AddrSpace::Global, Scalar::F32, Address::indexed(a, i, 4));
+            b.st(AddrSpace::Global, Scalar::F32, Address::indexed(c, i, 4), v.into());
+        });
+        b.ret();
+        let k = b.finish();
+        let text = print_kernel(&k);
+        assert!(text.contains(".kernel vadd(%r0:ptr<global> A"));
+        assert!(text.contains("GID.x"));
+        assert!(text.contains("SETP.LT.U32"));
+        assert!(text.contains("@PRED %r4 {"));
+        assert!(text.contains("LD.GLOBAL.F32 [%r0 + %r3*4]"));
+        assert!(text.contains("RET;"));
+    }
+
+    #[test]
+    fn float_imm_exact() {
+        // -0.0 and NaN payloads must roundtrip via the hex form
+        let v = Value::f32(-0.0);
+        let s = imm_str(v);
+        assert!(s.starts_with("0f80000000"), "{s}");
+    }
+
+    #[test]
+    fn loop_syntax() {
+        let mut b = KernelBuilder::new("k");
+        let n = b.param("N", Type::U32);
+        b.for_u32(Operand::Imm(Value::u32(0)), n.into(), 1, |b, _| {
+            b.bar();
+        });
+        let text = print_kernel(&b.finish());
+        assert!(text.contains("LOOP {"));
+        assert!(text.contains("TEST %r"));
+        assert!(text.contains("} BODY {"));
+        assert!(text.contains("BAR 0;"));
+    }
+}

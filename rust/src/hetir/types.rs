@@ -1,0 +1,306 @@
+//! hetIR type system: scalar types, address spaces, and runtime value
+//! representation.
+//!
+//! hetIR registers are *typed* virtual registers (like PTX `.reg .f32 %f0`).
+//! Typing matters for two reasons beyond codegen:
+//!
+//! 1. **State capture** — a snapshot stores the tagged value of every live
+//!    virtual register, so the restore side knows how to reload it into the
+//!    target ISA's register classes (scalar vs vector, 32 vs 64 bit).
+//! 2. **Pointer rebasing** — registers of pointer type are rebased when a
+//!    snapshot is restored on a device whose allocator placed buffers at
+//!    different base addresses (paper §5.2 "adjusting any pointers if
+//!    needed").
+
+use std::fmt;
+
+/// Scalar value types supported by hetIR.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Scalar {
+    /// 1-bit predicate (divergence masks, comparison results).
+    Pred,
+    /// 32-bit signed integer.
+    I32,
+    /// 32-bit unsigned integer.
+    U32,
+    /// 64-bit signed integer.
+    I64,
+    /// 64-bit unsigned integer.
+    U64,
+    /// IEEE-754 binary32.
+    F32,
+}
+
+impl Scalar {
+    /// Size of the scalar in bytes (predicates are stored as one byte).
+    pub fn size_bytes(self) -> u64 {
+        match self {
+            Scalar::Pred => 1,
+            Scalar::I32 | Scalar::U32 | Scalar::F32 => 4,
+            Scalar::I64 | Scalar::U64 => 8,
+        }
+    }
+
+    /// True for the two 64-bit integer types.
+    pub fn is_64(self) -> bool {
+        matches!(self, Scalar::I64 | Scalar::U64)
+    }
+
+    /// True for any integer type (signed or unsigned, any width).
+    pub fn is_int(self) -> bool {
+        matches!(self, Scalar::I32 | Scalar::U32 | Scalar::I64 | Scalar::U64)
+    }
+
+    /// True for floating-point types.
+    pub fn is_float(self) -> bool {
+        matches!(self, Scalar::F32)
+    }
+
+    /// True for signed integer types.
+    pub fn is_signed(self) -> bool {
+        matches!(self, Scalar::I32 | Scalar::I64)
+    }
+
+    /// The text-assembly suffix for this type (e.g. `.F32`).
+    pub fn suffix(self) -> &'static str {
+        match self {
+            Scalar::Pred => "PRED",
+            Scalar::I32 => "S32",
+            Scalar::U32 => "U32",
+            Scalar::I64 => "S64",
+            Scalar::U64 => "U64",
+            Scalar::F32 => "F32",
+        }
+    }
+
+    /// Parse a text-assembly suffix back into a scalar type.
+    pub fn from_suffix(s: &str) -> Option<Scalar> {
+        Some(match s {
+            "PRED" => Scalar::Pred,
+            "S32" => Scalar::I32,
+            "U32" => Scalar::U32,
+            "S64" => Scalar::I64,
+            "U64" => Scalar::U64,
+            "F32" => Scalar::F32,
+            _ => return None,
+        })
+    }
+}
+
+impl fmt::Display for Scalar {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Scalar::Pred => "pred",
+            Scalar::I32 => "s32",
+            Scalar::U32 => "u32",
+            Scalar::I64 => "s64",
+            Scalar::U64 => "u64",
+            Scalar::F32 => "f32",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// GPU memory address spaces exposed by hetIR.
+///
+/// hetIR deliberately models only the two spaces every target must provide a
+/// story for (paper §4.1 *Unified Memory Operations*). Registers/locals are
+/// implicit in the virtual register file.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AddrSpace {
+    /// Device-global memory: visible to all threads of all blocks.
+    /// On the Tensix backend this is off-chip DRAM reached via DMA.
+    Global,
+    /// Block-shared scratchpad: visible to all threads of one block.
+    /// On SIMT targets this is on-chip shared memory/LDS; on Tensix it is a
+    /// slice of the owning core's scratchpad (single-core mode) or a
+    /// designated core's scratchpad (multi-core mode).
+    Shared,
+}
+
+impl fmt::Display for AddrSpace {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AddrSpace::Global => write!(f, "global"),
+            AddrSpace::Shared => write!(f, "shared"),
+        }
+    }
+}
+
+/// The full hetIR register/parameter type: a scalar or a pointer into an
+/// address space.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Type {
+    Scalar(Scalar),
+    /// Pointer into an address space. Pointers are 64-bit.
+    Ptr(AddrSpace),
+}
+
+impl Type {
+    pub const PRED: Type = Type::Scalar(Scalar::Pred);
+    pub const I32: Type = Type::Scalar(Scalar::I32);
+    pub const U32: Type = Type::Scalar(Scalar::U32);
+    pub const I64: Type = Type::Scalar(Scalar::I64);
+    pub const U64: Type = Type::Scalar(Scalar::U64);
+    pub const F32: Type = Type::Scalar(Scalar::F32);
+    pub const PTR_GLOBAL: Type = Type::Ptr(AddrSpace::Global);
+    pub const PTR_SHARED: Type = Type::Ptr(AddrSpace::Shared);
+
+    /// Size in bytes when stored to memory or a snapshot.
+    pub fn size_bytes(self) -> u64 {
+        match self {
+            Type::Scalar(s) => s.size_bytes(),
+            Type::Ptr(_) => 8,
+        }
+    }
+
+    /// True if this is any pointer type.
+    pub fn is_ptr(self) -> bool {
+        matches!(self, Type::Ptr(_))
+    }
+
+    /// True if this is a pointer into global memory (the only kind that
+    /// needs rebasing across devices).
+    pub fn is_global_ptr(self) -> bool {
+        matches!(self, Type::Ptr(AddrSpace::Global))
+    }
+
+    /// The scalar type, if this is a scalar.
+    pub fn scalar(self) -> Option<Scalar> {
+        match self {
+            Type::Scalar(s) => Some(s),
+            Type::Ptr(_) => None,
+        }
+    }
+}
+
+impl fmt::Display for Type {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Type::Scalar(s) => write!(f, "{s}"),
+            Type::Ptr(a) => write!(f, "ptr<{a}>"),
+        }
+    }
+}
+
+/// A runtime value: 64-bit bit-pattern tagged with its hetIR type.
+///
+/// This is the unit stored in snapshots (paper §4.2 *State Representation*:
+/// "an array of per-thread register files ... storing values of hetIR-level
+/// virtual registers").
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Value {
+    pub bits: u64,
+    pub ty: Type,
+}
+
+impl Value {
+    pub fn pred(b: bool) -> Value {
+        Value { bits: b as u64, ty: Type::PRED }
+    }
+    pub fn i32(v: i32) -> Value {
+        Value { bits: v as u32 as u64, ty: Type::I32 }
+    }
+    pub fn u32(v: u32) -> Value {
+        Value { bits: v as u64, ty: Type::U32 }
+    }
+    pub fn i64(v: i64) -> Value {
+        Value { bits: v as u64, ty: Type::I64 }
+    }
+    pub fn u64(v: u64) -> Value {
+        Value { bits: v, ty: Type::U64 }
+    }
+    pub fn f32(v: f32) -> Value {
+        Value { bits: v.to_bits() as u64, ty: Type::F32 }
+    }
+    pub fn ptr(addr: u64, space: AddrSpace) -> Value {
+        Value { bits: addr, ty: Type::Ptr(space) }
+    }
+
+    pub fn as_pred(self) -> bool {
+        self.bits & 1 != 0
+    }
+    pub fn as_i32(self) -> i32 {
+        self.bits as u32 as i32
+    }
+    pub fn as_u32(self) -> u32 {
+        self.bits as u32
+    }
+    pub fn as_i64(self) -> i64 {
+        self.bits as i64
+    }
+    pub fn as_u64(self) -> u64 {
+        self.bits
+    }
+    pub fn as_f32(self) -> f32 {
+        f32::from_bits(self.bits as u32)
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.ty {
+            Type::Scalar(Scalar::Pred) => write!(f, "{}", self.as_pred()),
+            Type::Scalar(Scalar::I32) => write!(f, "{}", self.as_i32()),
+            Type::Scalar(Scalar::U32) => write!(f, "{}", self.as_u32()),
+            Type::Scalar(Scalar::I64) => write!(f, "{}", self.as_i64()),
+            Type::Scalar(Scalar::U64) => write!(f, "{}", self.as_u64()),
+            Type::Scalar(Scalar::F32) => write!(f, "{}", self.as_f32()),
+            Type::Ptr(a) => write!(f, "{a}:0x{:x}", self.bits),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_sizes() {
+        assert_eq!(Scalar::Pred.size_bytes(), 1);
+        assert_eq!(Scalar::I32.size_bytes(), 4);
+        assert_eq!(Scalar::U32.size_bytes(), 4);
+        assert_eq!(Scalar::F32.size_bytes(), 4);
+        assert_eq!(Scalar::I64.size_bytes(), 8);
+        assert_eq!(Scalar::U64.size_bytes(), 8);
+    }
+
+    #[test]
+    fn suffix_roundtrip() {
+        for s in [Scalar::Pred, Scalar::I32, Scalar::U32, Scalar::I64, Scalar::U64, Scalar::F32] {
+            assert_eq!(Scalar::from_suffix(s.suffix()), Some(s));
+        }
+        assert_eq!(Scalar::from_suffix("F16"), None);
+    }
+
+    #[test]
+    fn value_roundtrip_f32() {
+        let v = Value::f32(-3.25);
+        assert_eq!(v.as_f32(), -3.25);
+        assert_eq!(v.ty, Type::F32);
+    }
+
+    #[test]
+    fn value_roundtrip_negative_i32() {
+        let v = Value::i32(-7);
+        assert_eq!(v.as_i32(), -7);
+        // upper bits must be zero so snapshots are canonical
+        assert_eq!(v.bits >> 32, 0);
+    }
+
+    #[test]
+    fn ptr_type_predicates() {
+        assert!(Type::PTR_GLOBAL.is_ptr());
+        assert!(Type::PTR_GLOBAL.is_global_ptr());
+        assert!(Type::PTR_SHARED.is_ptr());
+        assert!(!Type::PTR_SHARED.is_global_ptr());
+        assert!(!Type::F32.is_ptr());
+    }
+
+    #[test]
+    fn display_forms() {
+        assert_eq!(Type::PTR_GLOBAL.to_string(), "ptr<global>");
+        assert_eq!(Type::F32.to_string(), "f32");
+        assert_eq!(Value::f32(1.5).to_string(), "1.5");
+    }
+}

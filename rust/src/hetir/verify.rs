@@ -1,0 +1,364 @@
+//! hetIR structural and type verifier.
+//!
+//! Runs before any backend translation (the runtime refuses to JIT an
+//! unverified module). Checks:
+//!
+//! * register indices in range; operand/destination types consistent with
+//!   each opcode's typing rules;
+//! * `If`/`While` condition registers are predicates;
+//! * address bases are pointer-typed into the address space the memory op
+//!   names;
+//! * `Break`/`Continue` appear only inside loops;
+//! * barriers do not sit under divergent control flow (via the uniformity
+//!   analysis — the cross-platform UB the paper's design must avoid);
+//! * barrier ids are dense and match `num_barriers` (segmenter ran).
+
+use super::instr::*;
+use super::module::{Kernel, Module, Stmt};
+use super::passes::uniformity;
+use super::types::{AddrSpace, Scalar, Type};
+use crate::error::{HetError, Result};
+
+struct V<'k> {
+    k: &'k Kernel,
+    loop_depth: usize,
+    barrier_ids: Vec<u32>,
+}
+
+impl<'k> V<'k> {
+    fn err(&self, msg: impl Into<String>) -> HetError {
+        HetError::Verify { func: self.k.name.clone(), msg: msg.into() }
+    }
+
+    fn reg_ty(&self, r: Reg) -> Result<Type> {
+        self.k
+            .reg_types
+            .get(r.0 as usize)
+            .copied()
+            .ok_or_else(|| self.err(format!("register {r} out of range")))
+    }
+
+    fn check_operand(&self, o: &Operand, want: Type, what: &str) -> Result<()> {
+        let got = match o {
+            Operand::Reg(r) => self.reg_ty(*r)?,
+            Operand::Imm(v) => v.ty,
+        };
+        if got != want {
+            return Err(self.err(format!("{what}: expected {want}, got {got}")));
+        }
+        Ok(())
+    }
+
+    fn check_dst(&self, r: Reg, want: Type, what: &str) -> Result<()> {
+        let got = self.reg_ty(r)?;
+        if got != want {
+            return Err(self.err(format!("{what}: dst {r} is {got}, expected {want}")));
+        }
+        Ok(())
+    }
+
+    fn check_addr(&self, a: &Address, space: AddrSpace, what: &str) -> Result<()> {
+        match self.reg_ty(a.base)? {
+            Type::Ptr(s) if s == space => {}
+            other => {
+                return Err(self.err(format!(
+                    "{what}: base {} has type {other}, expected ptr<{space}>",
+                    a.base
+                )))
+            }
+        }
+        if let Some(i) = a.index {
+            let t = self.reg_ty(i)?;
+            if !matches!(t, Type::Scalar(s) if s.is_int()) {
+                return Err(self.err(format!("{what}: index {i} must be integer, got {t}")));
+            }
+            if a.scale == 0 {
+                return Err(self.err(format!("{what}: zero scale with index")));
+            }
+        }
+        Ok(())
+    }
+
+    fn check_inst(&mut self, i: &Inst) -> Result<()> {
+        match i {
+            Inst::Special { dst, .. } => self.check_dst(*dst, Type::U32, "special")?,
+            Inst::Mov { dst, src } => {
+                let want = self.reg_ty(*dst)?;
+                self.check_operand(src, want, "MOV src")?;
+            }
+            Inst::Bin { op, ty, dst, a, b } => {
+                if *ty == Scalar::Pred
+                    && !matches!(op, BinOp::And | BinOp::Or | BinOp::Xor)
+                {
+                    return Err(self.err(format!("{op:?} not defined on predicates")));
+                }
+                if ty.is_float()
+                    && matches!(op, BinOp::And | BinOp::Or | BinOp::Xor | BinOp::Shl | BinOp::Shr)
+                {
+                    return Err(self.err(format!("{op:?} not defined on floats")));
+                }
+                self.check_dst(*dst, Type::Scalar(*ty), "bin dst")?;
+                self.check_operand(a, Type::Scalar(*ty), "bin lhs")?;
+                self.check_operand(b, Type::Scalar(*ty), "bin rhs")?;
+            }
+            Inst::Un { op, ty, dst, a } => {
+                let dst_ty = if *op == UnOp::Popc { Type::U32 } else { Type::Scalar(*ty) };
+                self.check_dst(*dst, dst_ty, "un dst")?;
+                self.check_operand(a, Type::Scalar(*ty), "un src")?;
+            }
+            Inst::Fma { ty, dst, a, b, c } => {
+                if !ty.is_float() {
+                    return Err(self.err("FMA is float-only"));
+                }
+                self.check_dst(*dst, Type::Scalar(*ty), "fma dst")?;
+                for (o, w) in [(a, "fma a"), (b, "fma b"), (c, "fma c")] {
+                    self.check_operand(o, Type::Scalar(*ty), w)?;
+                }
+            }
+            Inst::Cmp { ty, dst, a, b, .. } => {
+                self.check_dst(*dst, Type::PRED, "setp dst")?;
+                self.check_operand(a, Type::Scalar(*ty), "setp lhs")?;
+                self.check_operand(b, Type::Scalar(*ty), "setp rhs")?;
+            }
+            Inst::Sel { dst, cond, a, b } => {
+                self.check_operand(cond, Type::PRED, "sel cond")?;
+                let want = self.reg_ty(*dst)?;
+                self.check_operand(a, want, "sel a")?;
+                self.check_operand(b, want, "sel b")?;
+            }
+            Inst::Cvt { from, to, dst, src } => {
+                self.check_dst(*dst, Type::Scalar(*to), "cvt dst")?;
+                self.check_operand(src, Type::Scalar(*from), "cvt src")?;
+            }
+            Inst::PtrAdd { dst, addr } => {
+                let dst_ty = self.reg_ty(*dst)?;
+                let base_ty = self.reg_ty(addr.base)?;
+                if !dst_ty.is_ptr() || dst_ty != base_ty {
+                    return Err(self.err(format!(
+                        "PTRADD dst {dst}:{dst_ty} must match base {}:{base_ty}",
+                        addr.base
+                    )));
+                }
+                if let Some(i) = addr.index {
+                    let t = self.reg_ty(i)?;
+                    if !matches!(t, Type::Scalar(s) if s.is_int()) {
+                        return Err(self.err("PTRADD index must be integer"));
+                    }
+                }
+            }
+            Inst::Ld { space, ty, dst, addr } => {
+                self.check_addr(addr, *space, "LD")?;
+                self.check_dst(*dst, Type::Scalar(*ty), "LD dst")?;
+            }
+            Inst::St { space, ty, addr, val } => {
+                self.check_addr(addr, *space, "ST")?;
+                self.check_operand(val, Type::Scalar(*ty), "ST val")?;
+            }
+            Inst::Atom { op, space, ty, dst, addr, val, val2 } => {
+                if ty.is_float() && !matches!(op, AtomOp::Add | AtomOp::Exch) {
+                    return Err(self.err(format!("ATOM.{op:?} not defined on floats")));
+                }
+                if *ty == Scalar::Pred {
+                    return Err(self.err("atomics on predicates are invalid"));
+                }
+                self.check_addr(addr, *space, "ATOM")?;
+                self.check_operand(val, Type::Scalar(*ty), "ATOM val")?;
+                match (op, val2) {
+                    (AtomOp::Cas, None) => return Err(self.err("ATOM.CAS needs val2")),
+                    (AtomOp::Cas, Some(v2)) => {
+                        self.check_operand(v2, Type::Scalar(*ty), "ATOM val2")?
+                    }
+                    (_, Some(_)) => return Err(self.err("val2 only valid for CAS")),
+                    _ => {}
+                }
+                if let Some(d) = dst {
+                    self.check_dst(*d, Type::Scalar(*ty), "ATOM dst")?;
+                }
+            }
+            Inst::Bar { id } => self.barrier_ids.push(*id),
+            Inst::Fence { .. } | Inst::Trap { .. } => {}
+            Inst::Vote { dst, src, .. } => {
+                self.check_dst(*dst, Type::PRED, "vote dst")?;
+                self.check_operand(src, Type::PRED, "vote src")?;
+            }
+            Inst::Ballot { dst, src } => {
+                self.check_dst(*dst, Type::U32, "ballot dst")?;
+                self.check_operand(src, Type::PRED, "ballot src")?;
+            }
+            Inst::Shfl { ty, dst, val, lane, .. } => {
+                self.check_dst(*dst, Type::Scalar(*ty), "shfl dst")?;
+                self.check_operand(val, Type::Scalar(*ty), "shfl val")?;
+                self.check_operand(lane, Type::U32, "shfl lane")?;
+            }
+            Inst::Rng { dst, state } => {
+                self.check_dst(*dst, Type::U32, "rng dst")?;
+                self.check_dst(*state, Type::U32, "rng state")?;
+            }
+        }
+        Ok(())
+    }
+
+    fn check_block(&mut self, stmts: &[Stmt]) -> Result<()> {
+        for s in stmts {
+            match s {
+                Stmt::I(i) => self.check_inst(i)?,
+                Stmt::If { cond, then_b, else_b } => {
+                    if self.reg_ty(*cond)? != Type::PRED {
+                        return Err(self.err(format!("if condition {cond} must be pred")));
+                    }
+                    self.check_block(then_b)?;
+                    self.check_block(else_b)?;
+                }
+                Stmt::While { cond, cond_reg, body } => {
+                    if self.reg_ty(*cond_reg)? != Type::PRED {
+                        return Err(self.err(format!("loop condition {cond_reg} must be pred")));
+                    }
+                    self.check_block(cond)?;
+                    self.loop_depth += 1;
+                    self.check_block(body)?;
+                    self.loop_depth -= 1;
+                }
+                Stmt::Break | Stmt::Continue => {
+                    if self.loop_depth == 0 {
+                        return Err(self.err("break/continue outside loop"));
+                    }
+                }
+                Stmt::Return => {}
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Verify a single kernel.
+pub fn verify_kernel(k: &Kernel) -> Result<()> {
+    // Parameter registers must come first and match declared types.
+    if k.params.len() > k.reg_types.len() {
+        return Err(HetError::Verify {
+            func: k.name.clone(),
+            msg: "fewer registers than parameters".into(),
+        });
+    }
+    for (i, p) in k.params.iter().enumerate() {
+        if k.reg_types[i] != p.ty {
+            return Err(HetError::Verify {
+                func: k.name.clone(),
+                msg: format!("param {} type mismatch: reg says {}, param says {}",
+                    p.name, k.reg_types[i], p.ty),
+            });
+        }
+    }
+    let mut v = V { k, loop_depth: 0, barrier_ids: Vec::new() };
+    v.check_block(&k.body)?;
+    // Barrier ids dense 0..num_barriers.
+    let mut ids = v.barrier_ids.clone();
+    ids.sort_unstable();
+    let expect: Vec<u32> = (0..k.num_barriers).collect();
+    if ids != expect {
+        return Err(HetError::Verify {
+            func: k.name.clone(),
+            msg: format!(
+                "barrier ids {ids:?} are not dense 0..{} — run the segmenter",
+                k.num_barriers
+            ),
+        });
+    }
+    // No barrier under divergence.
+    if let Some(id) = uniformity::barrier_under_divergence(k) {
+        return Err(HetError::Verify {
+            func: k.name.clone(),
+            msg: format!("barrier {id} under divergent control flow"),
+        });
+    }
+    Ok(())
+}
+
+/// Verify every kernel in a module.
+pub fn verify_module(m: &Module) -> Result<()> {
+    for k in &m.kernels {
+        verify_kernel(k)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hetir::builder::KernelBuilder;
+    use crate::hetir::types::Value;
+
+    #[test]
+    fn accepts_wellformed() {
+        let mut b = KernelBuilder::new("ok");
+        let a = b.param("A", Type::PTR_GLOBAL);
+        let i = b.special(SpecialReg::GlobalId(Dim::X));
+        let v = b.ld(AddrSpace::Global, Scalar::F32, Address::indexed(a, i, 4));
+        let w = b.bin(BinOp::Mul, Scalar::F32, v.into(), Operand::Imm(Value::f32(2.0)));
+        b.st(AddrSpace::Global, Scalar::F32, Address::indexed(a, i, 4), w.into());
+        assert!(verify_kernel(&b.finish()).is_ok());
+    }
+
+    #[test]
+    fn rejects_type_mismatch() {
+        let mut b = KernelBuilder::new("bad");
+        let a = b.param("A", Type::PTR_GLOBAL);
+        let i = b.special(SpecialReg::GlobalId(Dim::X));
+        // store a u32 register as F32 value
+        b.st(AddrSpace::Global, Scalar::F32, Address::indexed(a, i, 4), i.into());
+        let e = verify_kernel(&b.finish()).unwrap_err();
+        assert!(e.to_string().contains("ST val"));
+    }
+
+    #[test]
+    fn rejects_wrong_space() {
+        let mut b = KernelBuilder::new("bad");
+        let a = b.param("A", Type::PTR_GLOBAL);
+        b.st(AddrSpace::Shared, Scalar::F32, Address::base(a), Operand::Imm(Value::f32(0.0)));
+        assert!(verify_kernel(&b.finish()).is_err());
+    }
+
+    #[test]
+    fn rejects_barrier_under_divergence() {
+        let mut b = KernelBuilder::new("bad");
+        let t = b.special(SpecialReg::ThreadIdx(Dim::X));
+        let p = b.cmp(CmpOp::Lt, Scalar::U32, t.into(), Operand::Imm(Value::u32(1)));
+        b.if_(p, |b| b.bar());
+        let e = verify_kernel(&b.finish()).unwrap_err();
+        assert!(e.to_string().contains("divergent"));
+    }
+
+    #[test]
+    fn rejects_float_bitops() {
+        let mut b = KernelBuilder::new("bad");
+        let x = b.reg(Type::F32);
+        b.push(Inst::Bin {
+            op: BinOp::And,
+            ty: Scalar::F32,
+            dst: x,
+            a: Operand::Imm(Value::f32(1.0)),
+            b: Operand::Imm(Value::f32(2.0)),
+        });
+        assert!(verify_kernel(&b.finish()).is_err());
+    }
+
+    #[test]
+    fn rejects_break_outside_loop() {
+        let mut b = KernelBuilder::new("bad");
+        b.brk();
+        assert!(verify_kernel(&b.finish()).is_err());
+    }
+
+    #[test]
+    fn rejects_stale_barrier_ids() {
+        let mut b = KernelBuilder::new("bad");
+        b.bar();
+        let mut k = b.finish();
+        // corrupt the id
+        k.visit_insts_mut(|i| {
+            if let Inst::Bar { id } = i {
+                *id = 7;
+            }
+        });
+        assert!(verify_kernel(&k).is_err());
+    }
+}

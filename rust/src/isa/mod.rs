@@ -1,0 +1,58 @@
+//! Simulated device instruction sets.
+//!
+//! These are what the backend translation modules emit and the simulators
+//! execute — the stand-ins for SASS (NVIDIA), RDNA ISA (AMD), Xe EU ISA
+//! (Intel) and Metalium (Tenstorrent). Two families:
+//!
+//! * [`simt_isa`] — a warp-centric ISA shared by the three SIMT vendors,
+//!   parameterized by warp width and intrinsic availability (exactly the
+//!   knobs on which PTX/RDNA/Xe differ for our purposes).
+//! * [`tensix_isa`] — a Metalium-like per-core ISA: scalar RISC ops,
+//!   32-lane vector ops with explicit mask registers, synchronous DMA,
+//!   mesh barriers and mesh votes.
+//!
+//! Both ISAs keep *structured* control flow. This is deliberate and
+//! faithful: SPIR-V requires structured merges, and SIMT hardware derives
+//! its reconvergence stack from exactly this structure; preserving it makes
+//! the simulators' mask handling the literal implementation of "hardware
+//! masks off inactive threads ... and reconverges implicitly" (paper §2.2).
+//! The translators still do all the real lowering work: device register
+//! allocation, team-op legalization (e.g. shared-memory staging on Intel's
+//! 16-wide subgroups), checkpoint instrumentation at barrier sites, and
+//! vendor cost attribution.
+
+pub mod simt_isa;
+pub mod tensix_isa;
+
+use crate::hetir::instr::Reg as VReg;
+use crate::hetir::types::Type;
+
+/// Where a hetIR virtual register lives on a particular device — the
+/// many-to-one low-level↔IR state mapping the paper's migration design
+/// hinges on (§2.2 "the program's counter and registers on GPU A may not
+/// map 1:1 to those on GPU B").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DevLoc {
+    /// Per-lane SIMT device register.
+    SimtReg(u32),
+    /// Tensix scalar (uniform) register — one value for all 32 lanes.
+    TensixScalar(u16),
+    /// Tensix vector register — one value per lane.
+    TensixVector(u16),
+}
+
+/// A checkpoint site: the compiled-in pause-flag check at a barrier
+/// (paper §4.2 "our compiler inserts a check at each barrier").
+///
+/// Carries the mapping from hetIR virtual registers to device registers —
+/// the paper's "metadata for managing execution state". The same
+/// `barrier_id` in two different backends' programs denotes the same hetIR
+/// suspension point, which is what makes snapshots cross-architecture.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CkptSite {
+    /// hetIR barrier id (== migration segment boundary).
+    pub barrier_id: u32,
+    /// (virtual register, its hetIR type, device location) for every live
+    /// register at this suspension point, sorted by virtual register.
+    pub saves: Vec<(VReg, Type, DevLoc)>,
+}

@@ -1,0 +1,345 @@
+//! The SIMT device ISA — stand-in for SASS / RDNA ISA / Xe EU ISA.
+//!
+//! One instruction stream is executed by every warp of a thread block, with
+//! per-lane register files and hardware-managed divergence masks (see
+//! `sim::simt`). The three SIMT vendors share this ISA *shape* but differ in
+//! [`SimtConfig`]: warp width, native team-op availability, wave64 mode —
+//! the same axes on which the real ISAs differ (paper §3.1).
+//!
+//! Register model: a flat file of `u64` device registers per lane, indexed
+//! by [`DReg`]. The translator performs the virtual→device register
+//! assignment and records the mapping at checkpoint sites.
+
+use super::CkptSite;
+use crate::hetir::instr::{AtomOp, BinOp, CmpOp, Dim, ShflKind, UnOp, VoteKind};
+use crate::hetir::types::{AddrSpace, Scalar, Value};
+
+/// Device register index (per-lane storage slot).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct DReg(pub u32);
+
+impl std::fmt::Display for DReg {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "R{}", self.0)
+    }
+}
+
+/// Instruction operand.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SOp {
+    Reg(DReg),
+    Imm(Value),
+}
+
+impl From<DReg> for SOp {
+    fn from(r: DReg) -> Self {
+        SOp::Reg(r)
+    }
+}
+
+/// Address expression (base register + optional scaled index + disp).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SAddr {
+    pub base: DReg,
+    pub index: Option<DReg>,
+    pub scale: u32,
+    pub disp: i64,
+}
+
+/// Special-register reads (resolved per lane by the simulator).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SSpecial {
+    ThreadIdx(Dim),
+    BlockIdx(Dim),
+    BlockDim(Dim),
+    GridDim(Dim),
+    /// Lane index within the warp (used by legalization sequences).
+    LaneId,
+    /// Linear thread id within the block (`tid.x + tid.y*ntid.x + ...`) —
+    /// used by shared-memory staging sequences on sub-team-width hardware.
+    LinearTid,
+}
+
+/// A straight-line SIMT device instruction.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SInst {
+    Special { dst: DReg, kind: SSpecial },
+    Mov { dst: DReg, src: SOp },
+    Bin { op: BinOp, ty: Scalar, dst: DReg, a: SOp, b: SOp },
+    Un { op: UnOp, ty: Scalar, dst: DReg, a: SOp },
+    Fma { ty: Scalar, dst: DReg, a: SOp, b: SOp, c: SOp },
+    Cmp { op: CmpOp, ty: Scalar, dst: DReg, a: SOp, b: SOp },
+    Sel { dst: DReg, cond: SOp, a: SOp, b: SOp },
+    Cvt { from: Scalar, to: Scalar, dst: DReg, src: SOp },
+    PtrAdd { dst: DReg, addr: SAddr },
+    Ld { space: AddrSpace, ty: Scalar, dst: DReg, addr: SAddr },
+    St { space: AddrSpace, ty: Scalar, addr: SAddr, val: SOp },
+    Atom {
+        op: AtomOp,
+        space: AddrSpace,
+        ty: Scalar,
+        dst: Option<DReg>,
+        addr: SAddr,
+        val: SOp,
+        val2: Option<SOp>,
+    },
+    /// Block-wide barrier (`bar.sync` / `s_barrier`). The simulator
+    /// suspends the warp until all warps of the block arrive.
+    BarSync { id: u32 },
+    /// Checkpoint guard compiled in just before barrier `site.barrier_id`:
+    /// if the device pause flag is set, dump the registers named in `site`
+    /// and suspend (paper §4.2's cooperative checkpointing). When the flag
+    /// is clear this costs one predicated load+test.
+    Ckpt { site: CkptSite },
+    /// Synchronize the 32-thread *team* (sub-block). Emitted only by
+    /// backends whose warp is narrower than the hetIR team (Intel, 16-wide
+    /// subgroups) for shared-memory staging sequences.
+    TeamSync,
+    Fence { scope: crate::hetir::instr::FenceScope },
+    /// Native warp/team vote. Only emitted when the vendor has it.
+    Vote { kind: VoteKind, dst: DReg, src: SOp },
+    /// Native team ballot (32-bit mask of the lane's team).
+    Ballot { dst: DReg, src: SOp },
+    /// Native team shuffle. Only emitted when the vendor has it; otherwise
+    /// the translator emits an LDS/SLM staging sequence instead.
+    Shfl { kind: ShflKind, ty: Scalar, dst: DReg, val: SOp, lane: SOp },
+    /// Virtualized PRNG step (see `sim::alu::xorshift32`).
+    Rng { dst: DReg, state: DReg },
+    Trap { code: u32 },
+}
+
+/// Block id within a program's block arena.
+pub type BlockId = usize;
+
+/// Structured statement (see module docs for why structure is preserved).
+#[derive(Debug, Clone, PartialEq)]
+pub enum SStmt {
+    I(SInst),
+    /// Divergence-capable conditional region; reconverges after.
+    If { cond: DReg, then_b: BlockId, else_b: BlockId },
+    /// Loop: run `cond` block, test `cond_reg` per lane; active lanes with
+    /// a false condition leave the loop (reconverging at loop exit).
+    Loop { cond: BlockId, cond_reg: DReg, body: BlockId },
+    Break,
+    Continue,
+    Return,
+}
+
+/// A compiled SIMT program for one kernel.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimtProgram {
+    pub kernel_name: String,
+    /// Block arena; `blocks[entry]` is the top-level body.
+    pub blocks: Vec<Vec<SStmt>>,
+    pub entry: BlockId,
+    /// Number of device registers per lane.
+    pub num_regs: u32,
+    /// Static shared memory bytes per block.
+    pub shared_bytes: u64,
+    /// Parameter count (params are pre-loaded into device regs `0..n`).
+    pub num_params: u32,
+    /// Checkpoint sites indexed by barrier id (for restore lookups).
+    pub ckpt_sites: Vec<CkptSite>,
+    /// True if the kernel was compiled with migration support (Ckpt guards
+    /// emitted). Pure-performance builds set this false (paper §6
+    /// "migration support off for pure performance tests").
+    pub migratable: bool,
+}
+
+impl SimtProgram {
+    /// Count instructions across all blocks (diagnostics, JIT-cost model).
+    pub fn inst_count(&self) -> usize {
+        self.blocks.iter().flatten().filter(|s| matches!(s, SStmt::I(_))).count()
+    }
+
+    /// Find the frame path to the statement *after* barrier `id`:
+    /// a list of `(block, next_idx)` pairs from the entry block down to the
+    /// position just past the `BarSync`. Used by the simulator to resume a
+    /// restored snapshot mid-kernel (the paper's "switch at the start jumps
+    /// to the correct basic block", realized structurally).
+    pub fn resume_path(&self, barrier_id: u32) -> Option<Vec<(BlockId, usize)>> {
+        fn walk(
+            p: &SimtProgram,
+            block: BlockId,
+            id: u32,
+            path: &mut Vec<(BlockId, usize)>,
+        ) -> bool {
+            for (i, s) in p.blocks[block].iter().enumerate() {
+                match s {
+                    SStmt::I(SInst::BarSync { id: b }) if *b == id => {
+                        path.push((block, i + 1));
+                        return true;
+                    }
+                    SStmt::If { then_b, else_b, .. } => {
+                        path.push((block, i));
+                        if walk(p, *then_b, id, path) || walk(p, *else_b, id, path) {
+                            return true;
+                        }
+                        path.pop();
+                    }
+                    SStmt::Loop { cond, body, .. } => {
+                        path.push((block, i));
+                        if walk(p, *cond, id, path) || walk(p, *body, id, path) {
+                            return true;
+                        }
+                        path.pop();
+                    }
+                    _ => {}
+                }
+            }
+            false
+        }
+        let mut path = Vec::new();
+        if walk(self, self.entry, barrier_id, &mut path) {
+            Some(path)
+        } else {
+            None
+        }
+    }
+}
+
+/// Vendor configuration for the SIMT ISA/simulator pair — the axes on
+/// which NVIDIA/AMD/Intel actually differ for this reproduction.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimtConfig {
+    /// Marketing name used in errors/reports.
+    pub name: &'static str,
+    /// Hardware warp/wavefront/subgroup width (32 / 32-or-64 / 16).
+    pub warp_width: u32,
+    /// Native team shuffle available (NVIDIA, AMD). When false the
+    /// translator stages through shared memory (Intel).
+    pub native_shfl: bool,
+    /// Native team vote/ballot available across a full 32-thread team.
+    pub native_vote: bool,
+    /// Number of SMs / CUs / Xe-cores (cost model parallelism).
+    pub num_sms: u32,
+    /// Per-instruction base cost in model cycles.
+    pub alu_cost: u64,
+    /// Cost of one coalesced 32-lane global memory transaction.
+    pub mem_cost: u64,
+    /// Additional cost per extra memory transaction (uncoalesced access).
+    pub mem_div_cost: u64,
+    /// Shared-memory (LDS/SLM) access cost.
+    pub smem_cost: u64,
+    /// Barrier cost.
+    pub bar_cost: u64,
+    /// Atomic op cost (per lane serialized).
+    pub atom_cost: u64,
+    /// Model clock in MHz — converts model cycles to simulated time so the
+    /// benches can print throughput numbers with paper-like shapes.
+    pub clock_mhz: u64,
+}
+
+impl SimtConfig {
+    /// NVIDIA H100-like configuration (the paper's primary testbed).
+    pub fn nvidia() -> SimtConfig {
+        SimtConfig {
+            name: "nvidia-sim",
+            warp_width: 32,
+            native_shfl: true,
+            native_vote: true,
+            num_sms: 132,
+            alu_cost: 1,
+            mem_cost: 8,
+            mem_div_cost: 4,
+            smem_cost: 2,
+            bar_cost: 8,
+            atom_cost: 4,
+            clock_mhz: 1700,
+        }
+    }
+
+    /// AMD RDNA4-like configuration (wave32 default).
+    pub fn amd() -> SimtConfig {
+        SimtConfig {
+            name: "amd-sim",
+            warp_width: 32,
+            native_shfl: true,
+            native_vote: true,
+            num_sms: 64,
+            alu_cost: 1,
+            mem_cost: 9,
+            mem_div_cost: 5,
+            smem_cost: 2,
+            bar_cost: 9,
+            atom_cost: 5,
+            clock_mhz: 2400,
+        }
+    }
+
+    /// AMD in legacy wave64 mode (GCN) — used by the divergence ablation.
+    pub fn amd_wave64() -> SimtConfig {
+        SimtConfig { name: "amd-sim-w64", warp_width: 64, ..SimtConfig::amd() }
+    }
+
+    /// Intel Iris-Xe-like configuration: 16-wide subgroups, no native
+    /// 32-thread team ops (forces the staging legalization), fewer cores.
+    pub fn intel() -> SimtConfig {
+        SimtConfig {
+            name: "intel-sim",
+            warp_width: 16,
+            native_shfl: false,
+            native_vote: false,
+            num_sms: 32,
+            alu_cost: 1,
+            mem_cost: 10,
+            mem_div_cost: 6,
+            smem_cost: 2,
+            bar_cost: 10,
+            atom_cost: 6,
+            clock_mhz: 1400,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_program() -> SimtProgram {
+        // entry: [ Bar 0, Loop { cond=[], r0, body=[Bar 1] } ]
+        SimtProgram {
+            kernel_name: "t".into(),
+            blocks: vec![
+                vec![
+                    SStmt::I(SInst::BarSync { id: 0 }),
+                    SStmt::Loop { cond: 1, cond_reg: DReg(0), body: 2 },
+                ],
+                vec![],
+                vec![SStmt::I(SInst::BarSync { id: 1 })],
+            ],
+            entry: 0,
+            num_regs: 1,
+            shared_bytes: 0,
+            num_params: 0,
+            ckpt_sites: vec![],
+            migratable: true,
+        }
+    }
+
+    #[test]
+    fn resume_path_top_level() {
+        let p = tiny_program();
+        assert_eq!(p.resume_path(0), Some(vec![(0usize, 1usize)]));
+    }
+
+    #[test]
+    fn resume_path_inside_loop() {
+        let p = tiny_program();
+        assert_eq!(p.resume_path(1), Some(vec![(0, 1), (2, 1)]));
+    }
+
+    #[test]
+    fn resume_path_missing() {
+        let p = tiny_program();
+        assert_eq!(p.resume_path(9), None);
+    }
+
+    #[test]
+    fn configs_are_distinct() {
+        assert_eq!(SimtConfig::nvidia().warp_width, 32);
+        assert_eq!(SimtConfig::intel().warp_width, 16);
+        assert!(!SimtConfig::intel().native_shfl);
+        assert_eq!(SimtConfig::amd_wave64().warp_width, 64);
+    }
+}

@@ -1,0 +1,397 @@
+//! The Tensix device ISA — stand-in for Tenstorrent's Metalium assembly.
+//!
+//! Each Tensix core is a scalar RISC-V-style CPU with a 32-lane vector
+//! unit. The architectural split that matters (paper §3.1):
+//!
+//! * **Scalar registers** hold uniform values (pointers, loop counters,
+//!   mesh-vote results). One value per core.
+//! * **Vector registers** hold 32 lanes — in vectorized-warp mode, one lane
+//!   per emulated thread ("one core simulates a warp", §4.2).
+//! * The vector unit is an **FP engine**: f32 vector arithmetic runs at
+//!   hardware speed, while per-lane *integer/predicate* operations are
+//!   emulated lane-by-lane through the scalar core. This asymmetry is what
+//!   makes vectorized-warp emulation lose to pure-MIMD execution on
+//!   integer/divergence-heavy kernels (the paper's §6.2 Monte-Carlo result)
+//!   while tile matmul reaches ~80% of a hand-tuned kernel.
+//! * **No shared memory, no implicit global loads**: every global access is
+//!   an explicit, synchronous DMA (the paper's stated reason for the vecadd
+//!   gap), and block-level synchronization is a mesh barrier.
+//!
+//! Control flow is structured, split into *scalar* (uniform — real branch
+//! on every core) and *vector* (divergent — mask discipline) forms; the
+//! translator picks using the hetIR uniformity analysis.
+
+use super::CkptSite;
+use crate::hetir::instr::{AtomOp, BinOp, CmpOp, Dim, ShflKind, UnOp, VoteKind};
+use crate::hetir::types::{Scalar, Value};
+
+/// Scalar (uniform) register index.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SR(pub u16);
+
+/// Vector (32-lane) register index.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct VR(pub u16);
+
+impl std::fmt::Display for SR {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "s{}", self.0)
+    }
+}
+impl std::fmt::Display for VR {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "v{}", self.0)
+    }
+}
+
+/// Scalar operand.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum So {
+    Reg(SR),
+    Imm(Value),
+}
+
+impl From<SR> for So {
+    fn from(r: SR) -> Self {
+        So::Reg(r)
+    }
+}
+
+/// Vector operand: a vector register, a broadcast scalar, or a broadcast
+/// immediate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Vo {
+    Reg(VR),
+    /// Broadcast a scalar register across lanes.
+    Splat(SR),
+    Imm(Value),
+}
+
+impl From<VR> for Vo {
+    fn from(r: VR) -> Self {
+        Vo::Reg(r)
+    }
+}
+
+/// Per-core special values.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TSpecial {
+    /// Block index this core participates in (uniform).
+    BlockIdx(Dim),
+    BlockDim(Dim),
+    GridDim(Dim),
+    /// Index of this core within its block's core group (multi-core mode;
+    /// 0 in single-core mode).
+    CoreSlot,
+    /// In MIMD mode: the per-dimension thread index of the thread this
+    /// core is currently running.
+    MimdThread(Dim),
+}
+
+/// Scalar address expression (DMA descriptors, scratchpad addressing).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TAddr {
+    pub base: SR,
+    pub index: Option<SR>,
+    pub scale: u32,
+    pub disp: i64,
+}
+
+impl TAddr {
+    pub fn base(base: SR) -> TAddr {
+        TAddr { base, index: None, scale: 1, disp: 0 }
+    }
+}
+
+/// A Tensix instruction.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TInst {
+    // ---- scalar (uniform) ----
+    SSpecial { dst: SR, kind: TSpecial },
+    SMov { dst: SR, src: So },
+    SBin { op: BinOp, ty: Scalar, dst: SR, a: So, b: So },
+    SUn { op: UnOp, ty: Scalar, dst: SR, a: So },
+    SCmp { op: CmpOp, ty: Scalar, dst: SR, a: So, b: So },
+    SSel { dst: SR, cond: So, a: So, b: So },
+    SCvt { from: Scalar, to: Scalar, dst: SR, src: So },
+    SFma { ty: Scalar, dst: SR, a: So, b: So, c: So },
+    SRng { dst: SR, state: SR },
+    /// Scalar load/store on the core's local scratchpad.
+    SLdLocal { ty: Scalar, dst: SR, addr: TAddr },
+    SStLocal { ty: Scalar, addr: TAddr, val: So },
+    /// Scalar synchronous DMA to/from global DRAM.
+    SDmaLd { ty: Scalar, dst: SR, addr: TAddr },
+    SDmaSt { ty: Scalar, addr: TAddr, val: So },
+    /// Scalar atomic on global memory (DMA RMW with the device lock).
+    SAtom { op: AtomOp, ty: Scalar, dst: Option<SR>, addr: TAddr, val: So, val2: Option<So> },
+    /// Bulk synchronous DMA: copy `len` bytes between global and local.
+    DmaIn { local: TAddr, global: TAddr, len: So },
+    DmaOut { local: TAddr, global: TAddr, len: So },
+
+    // ---- vector (per-lane) ----
+    VLaneId { dst: VR },
+    VMov { dst: VR, src: Vo },
+    VBin { op: BinOp, ty: Scalar, dst: VR, a: Vo, b: Vo },
+    VUn { op: UnOp, ty: Scalar, dst: VR, a: Vo },
+    VFma { ty: Scalar, dst: VR, a: Vo, b: Vo, c: Vo },
+    VCmp { op: CmpOp, ty: Scalar, dst: VR, a: Vo, b: Vo },
+    VSel { dst: VR, cond: Vo, a: Vo, b: Vo },
+    VCvt { from: Scalar, to: Scalar, dst: VR, src: Vo },
+    VRng { dst: VR, state: VR },
+    /// Vector scratchpad access: per-lane address `base + idx[lane]*scale
+    /// + disp`.
+    VLdLocal { ty: Scalar, dst: VR, base: SR, idx: Option<VR>, scale: u32, disp: i64 },
+    VStLocal { ty: Scalar, base: SR, idx: Option<VR>, scale: u32, disp: i64, val: Vo },
+    /// Per-lane synchronous DMA gather/scatter on global memory — the
+    /// expensive path the paper's prototype pays for (§6.2 vecadd).
+    VDmaGather { ty: Scalar, dst: VR, base: SR, idx: Option<VR>, scale: u32, disp: i64 },
+    VDmaScatter { ty: Scalar, base: SR, idx: Option<VR>, scale: u32, disp: i64, val: Vo },
+    /// Per-lane atomic, serialized lane-by-lane. `local` targets the
+    /// core's scratchpad (single-core-mode shared memory); otherwise a
+    /// global-DRAM DMA RMW (the paper's "spin-lock in global memory").
+    VAtom {
+        op: AtomOp,
+        ty: Scalar,
+        dst: Option<VR>,
+        base: SR,
+        idx: Option<VR>,
+        scale: u32,
+        disp: i64,
+        val: Vo,
+        val2: Option<Vo>,
+        local: bool,
+    },
+    /// Core-local team ops (a 32-thread team always maps onto one core's
+    /// 32 lanes, so vote/ballot/shuffle never cross the mesh).
+    VVote { kind: VoteKind, dst: SR, src: Vo },
+    VBallot { dst: SR, src: Vo },
+    VShfl { kind: ShflKind, ty: Scalar, dst: VR, val: Vo, lane: Vo },
+
+    // ---- mesh / sync ----
+    /// Block-wide barrier across the cores executing this block.
+    MeshBar { id: u32 },
+    /// Share "does any lane on any core satisfy `src`?" across the block's
+    /// core group; uniform result in `dst` (paper §4.2's divergence
+    /// agreement protocol for multi-core partitioning).
+    MeshVoteAny { dst: SR, src: Vo },
+    /// Checkpoint guard (see `isa::CkptSite`).
+    Ckpt { site: CkptSite },
+    Trap { code: u32 },
+}
+
+/// Block id within the program's block arena.
+pub type TBlockId = usize;
+
+/// Structured statement.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TStmt {
+    I(TInst),
+    /// Uniform branch: one scalar condition per core.
+    SIf { cond: SR, then_b: TBlockId, else_b: TBlockId },
+    /// Divergent region: per-lane masking, both sides executed. `always`
+    /// forces entry even with an all-zero local mask — set by the
+    /// multi-core divergence-agreement protocol so that every core reaches
+    /// mesh votes nested inside divergent regions (paper §4.4: "they all
+    /// execute that path for their threads (others idle via masks)").
+    VIf { cond: VR, then_b: TBlockId, else_b: TBlockId, always: bool },
+    /// Uniform loop.
+    SLoop { cond: TBlockId, cond_reg: SR, body: TBlockId },
+    /// Divergent loop: lanes drop out as their condition goes false.
+    /// With `collective = Some(s)`, loop continuation is decided by the
+    /// mesh-vote result in scalar register `s` (computed by a
+    /// `MeshVoteAny` the translator places at the end of the cond block):
+    /// every core of the group keeps iterating — possibly with zero live
+    /// lanes — until no core has a lane that wants to continue.
+    VLoop { cond: TBlockId, cond_reg: VR, body: TBlockId, collective: Option<SR> },
+    Break,
+    Continue,
+    Return,
+}
+
+/// Execution mode a program was compiled for (paper §4.4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TensixMode {
+    /// Vectorized warp on a core: one core runs a whole 32-thread slice of
+    /// a block on its vector unit.
+    VectorSingleCore,
+    /// Multi-core partitioning: a block larger than 32 threads is split
+    /// across `ceil(block/32)` cores with mesh coordination.
+    VectorMultiCore,
+    /// Pure MIMD: each thread runs as an independent scalar program
+    /// (barrier-free kernels only).
+    ScalarMimd,
+}
+
+impl std::fmt::Display for TensixMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TensixMode::VectorSingleCore => write!(f, "vector-single-core"),
+            TensixMode::VectorMultiCore => write!(f, "vector-multi-core"),
+            TensixMode::ScalarMimd => write!(f, "scalar-mimd"),
+        }
+    }
+}
+
+/// A compiled Tensix program.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensixProgram {
+    pub kernel_name: String,
+    pub mode: TensixMode,
+    pub blocks: Vec<Vec<TStmt>>,
+    pub entry: TBlockId,
+    pub num_sregs: u16,
+    pub num_vregs: u16,
+    /// hetIR shared-memory bytes (scratchpad slice in single-core mode,
+    /// global allocation in multi-core mode).
+    pub shared_bytes: u64,
+    /// Scalar register that carries the shared-memory base address —
+    /// set up by the launcher per mode.
+    pub shared_base_sreg: SR,
+    pub num_params: u32,
+    pub ckpt_sites: Vec<CkptSite>,
+    pub migratable: bool,
+}
+
+impl TensixProgram {
+    pub fn inst_count(&self) -> usize {
+        self.blocks.iter().flatten().filter(|s| matches!(s, TStmt::I(_))).count()
+    }
+
+    /// Structural path to just after mesh barrier `id` (resume support,
+    /// mirroring `SimtProgram::resume_path`).
+    pub fn resume_path(&self, barrier_id: u32) -> Option<Vec<(TBlockId, usize)>> {
+        fn walk(
+            p: &TensixProgram,
+            block: TBlockId,
+            id: u32,
+            path: &mut Vec<(TBlockId, usize)>,
+        ) -> bool {
+            for (i, s) in p.blocks[block].iter().enumerate() {
+                match s {
+                    TStmt::I(TInst::MeshBar { id: b }) if *b == id => {
+                        path.push((block, i + 1));
+                        return true;
+                    }
+                    TStmt::SIf { then_b, else_b, .. } | TStmt::VIf { then_b, else_b, .. } => {
+                        path.push((block, i));
+                        if walk(p, *then_b, id, path) || walk(p, *else_b, id, path) {
+                            return true;
+                        }
+                        path.pop();
+                    }
+                    TStmt::SLoop { cond, body, .. } | TStmt::VLoop { cond, body, .. } => {
+                        path.push((block, i));
+                        if walk(p, *cond, id, path) || walk(p, *body, id, path) {
+                            return true;
+                        }
+                        path.pop();
+                    }
+                    _ => {}
+                }
+            }
+            false
+        }
+        let mut path = Vec::new();
+        if walk(self, self.entry, barrier_id, &mut path) {
+            Some(path)
+        } else {
+            None
+        }
+    }
+}
+
+/// Cost/topology configuration for the Tensix simulator.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensixConfig {
+    pub name: &'static str,
+    /// Number of Tensix cores (BlackHole: 120).
+    pub num_cores: u32,
+    /// Scratchpad bytes per core.
+    pub scratchpad_bytes: u64,
+    /// Scalar op cost.
+    pub scalar_cost: u64,
+    /// Hardware (f32) vector op cost — the VPU fast path.
+    pub vector_fp_cost: u64,
+    /// Per-lane cost of software-emulated vector ops (integer/predicate
+    /// lanes looped on the scalar core; see module docs).
+    pub vector_emu_lane_cost: u64,
+    /// Fixed overhead per software-emulated vector op.
+    pub vector_emu_base_cost: u64,
+    /// Vector scratchpad access cost.
+    pub local_mem_cost: u64,
+    /// Synchronous DMA setup latency.
+    pub dma_base_cost: u64,
+    /// DMA cost per 32 bytes transferred.
+    pub dma_per_32b_cost: u64,
+    /// Mesh barrier cost.
+    pub mesh_bar_cost: u64,
+    /// Mesh vote cost (divergence agreement protocol).
+    pub mesh_vote_cost: u64,
+    /// When true, bulk DMA overlaps with compute (double buffering): bulk
+    /// transfers charge only the per-byte cost, hiding the setup latency.
+    /// The paper's prototype is synchronous (`false`); the perf pass
+    /// enables this to quantify "the gap is due to synchronous DMA".
+    pub async_dma: bool,
+    pub clock_mhz: u64,
+}
+
+impl TensixConfig {
+    /// Tenstorrent BlackHole-like configuration (120 Tensix cores).
+    pub fn blackhole() -> TensixConfig {
+        TensixConfig {
+            name: "tenstorrent-sim",
+            num_cores: 120,
+            scratchpad_bytes: 1 << 20,
+            scalar_cost: 1,
+            vector_fp_cost: 2,
+            vector_emu_lane_cost: 2,
+            vector_emu_base_cost: 4,
+            local_mem_cost: 3,
+            dma_base_cost: 48,
+            dma_per_32b_cost: 2,
+            mesh_bar_cost: 30,
+            mesh_vote_cost: 18,
+            async_dma: false,
+            clock_mhz: 1350,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resume_path_finds_mesh_bar() {
+        let p = TensixProgram {
+            kernel_name: "t".into(),
+            mode: TensixMode::VectorSingleCore,
+            blocks: vec![
+                vec![TStmt::SLoop { cond: 1, cond_reg: SR(0), body: 2 }],
+                vec![],
+                vec![TStmt::I(TInst::MeshBar { id: 0 })],
+            ],
+            entry: 0,
+            num_sregs: 1,
+            num_vregs: 0,
+            shared_bytes: 0,
+            shared_base_sreg: SR(0),
+            num_params: 0,
+            ckpt_sites: vec![],
+            migratable: true,
+        };
+        assert_eq!(p.resume_path(0), Some(vec![(0, 0), (2, 1)]));
+        assert_eq!(p.resume_path(3), None);
+    }
+
+    #[test]
+    fn blackhole_config_shape() {
+        let c = TensixConfig::blackhole();
+        assert_eq!(c.num_cores, 120);
+        assert!(
+            c.vector_emu_lane_cost * 32 > c.vector_fp_cost * 4,
+            "integer lane emulation must dwarf the FP fast path"
+        );
+        assert!(!c.async_dma, "paper prototype is synchronous");
+    }
+}

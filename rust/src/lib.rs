@@ -1,0 +1,32 @@
+//! # hetGPU — binary compatibility across heterogeneous GPUs
+//!
+//! A reproduction of *"HetGPU: The pursuit of making binary compatibility
+//! towards GPUs"* (Yang, Zheng, Yu, Quinn — CS.AR 2025): one compiled GPU
+//! binary (a hetIR module) executes on four simulated GPU architectures
+//! (NVIDIA/AMD/Intel SIMT configs and a Tenstorrent-style MIMD many-core),
+//! and a *running kernel* can be checkpointed on one architecture and
+//! resumed on another.
+//!
+//! ## Layer map (see DESIGN.md)
+//! * [`hetir`] — the portable IR: types, instructions, text format, passes.
+//! * [`frontend`] — mini-CUDA C → hetIR compiler.
+//! * [`isa`] — the simulated device instruction sets backends emit.
+//! * [`backends`] — JIT translation modules hetIR → device ISA.
+//! * [`sim`] — the device simulators (hardware substitution, DESIGN.md §2).
+//! * [`runtime`] — device registry, memory, streams, launch, JIT cache.
+//! * [`migrate`] — device-neutral snapshots, checkpoint/restore/migrate.
+//! * [`xla_native`] — PJRT/XLA "vendor native" path + numerics oracle.
+
+pub mod backends;
+pub mod error;
+pub mod frontend;
+pub mod isa;
+pub mod migrate;
+pub mod runtime;
+pub mod hetir;
+pub mod sim;
+pub mod suite;
+pub mod testutil;
+pub mod xla_native;
+
+pub use error::{HetError, Result};

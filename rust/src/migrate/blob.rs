@@ -1,0 +1,450 @@
+//! Binary wire format for snapshots — the on-disk / over-the-wire form of
+//! the paper's device-independent state blob ("the runtime then collects
+//! these buffers and composes state_out, a blob containing all blocks'
+//! states", §5.2).
+//!
+//! Hand-rolled little-endian format (layout in DESIGN.md §6):
+//!
+//! ```text
+//! "HGPU" | u32 version
+//! | u8 has_kernel
+//! |   [kernel: module u32, name, dims 6×u32, args, tensix hint]
+//! |   [blocks: u32 count, per block: tag u8
+//! |      (2 ⇒ barrier u32, thread count, per thread: reg count,
+//! |         per reg: vreg u32, type tag u8, bits u64; shared bytes)]
+//! | u32 alloc count | per alloc: addr u64, len u64, bytes
+//! ```
+
+use crate::error::{HetError, Result};
+use crate::hetir::instr::Reg as VReg;
+use crate::hetir::types::{AddrSpace, Scalar, Type, Value};
+use crate::isa::tensix_isa::TensixMode;
+use crate::migrate::state::Snapshot;
+use crate::runtime::launch::{Arg, LaunchSpec};
+use crate::runtime::memory::GpuPtr;
+use crate::runtime::stream::PausedKernel;
+use crate::sim::simt::LaunchDims;
+use crate::sim::snapshot::{BlockCapture, BlockState, ThreadCapture};
+
+const MAGIC: &[u8; 4] = b"HGPU";
+const VERSION: u32 = 1;
+
+// ---- writer ----
+
+struct W {
+    buf: Vec<u8>,
+}
+
+impl W {
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn bytes(&mut self, v: &[u8]) {
+        self.u64(v.len() as u64);
+        self.buf.extend_from_slice(v);
+    }
+    fn string(&mut self, s: &str) {
+        self.bytes(s.as_bytes());
+    }
+}
+
+// ---- reader ----
+
+struct R<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> R<'a> {
+    fn err(&self, msg: &str) -> HetError {
+        HetError::Blob { msg: format!("{msg} at offset {}", self.pos) }
+    }
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(self.err("truncated blob"));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.u64()? as usize;
+        if n > self.buf.len() {
+            return Err(self.err("length field exceeds blob size"));
+        }
+        Ok(self.take(n)?.to_vec())
+    }
+    fn string(&mut self) -> Result<String> {
+        String::from_utf8(self.bytes()?).map_err(|e| HetError::Blob { msg: e.to_string() })
+    }
+    /// Validate an element count against the remaining bytes (each element
+    /// needs at least `min_elem` bytes) — untrusted counts must never
+    /// drive `Vec::with_capacity` directly.
+    fn count(&mut self, min_elem: usize) -> Result<usize> {
+        let n = self.u32()? as usize;
+        let remaining = self.buf.len() - self.pos;
+        if n.saturating_mul(min_elem.max(1)) > remaining {
+            return Err(self.err("count exceeds blob size"));
+        }
+        Ok(n)
+    }
+}
+
+fn type_tag(t: Type) -> u8 {
+    match t {
+        Type::Scalar(Scalar::Pred) => 0,
+        Type::Scalar(Scalar::I32) => 1,
+        Type::Scalar(Scalar::U32) => 2,
+        Type::Scalar(Scalar::I64) => 3,
+        Type::Scalar(Scalar::U64) => 4,
+        Type::Scalar(Scalar::F32) => 5,
+        Type::Ptr(AddrSpace::Global) => 6,
+        Type::Ptr(AddrSpace::Shared) => 7,
+    }
+}
+
+fn tag_type(t: u8, r: &R) -> Result<Type> {
+    Ok(match t {
+        0 => Type::PRED,
+        1 => Type::I32,
+        2 => Type::U32,
+        3 => Type::I64,
+        4 => Type::U64,
+        5 => Type::F32,
+        6 => Type::PTR_GLOBAL,
+        7 => Type::PTR_SHARED,
+        _ => return Err(r.err("bad type tag")),
+    })
+}
+
+fn write_arg(w: &mut W, a: &Arg) {
+    match a {
+        Arg::Ptr(p) => {
+            w.u8(0);
+            w.u64(p.0);
+        }
+        Arg::U32(v) => {
+            w.u8(1);
+            w.u32(*v);
+        }
+        Arg::I32(v) => {
+            w.u8(2);
+            w.u32(*v as u32);
+        }
+        Arg::U64(v) => {
+            w.u8(3);
+            w.u64(*v);
+        }
+        Arg::I64(v) => {
+            w.u8(4);
+            w.u64(*v as u64);
+        }
+        Arg::F32(v) => {
+            w.u8(5);
+            w.f32(*v);
+        }
+        Arg::Pred(v) => {
+            w.u8(6);
+            w.u8(*v as u8);
+        }
+    }
+}
+
+fn read_arg(r: &mut R) -> Result<Arg> {
+    Ok(match r.u8()? {
+        0 => Arg::Ptr(GpuPtr(r.u64()?)),
+        1 => Arg::U32(r.u32()?),
+        2 => Arg::I32(r.u32()? as i32),
+        3 => Arg::U64(r.u64()?),
+        4 => Arg::I64(r.u64()? as i64),
+        5 => Arg::F32(r.f32()?),
+        6 => Arg::Pred(r.u8()? != 0),
+        _ => return Err(r.err("bad arg tag")),
+    })
+}
+
+fn mode_tag(m: Option<TensixMode>) -> u8 {
+    match m {
+        None => 0,
+        Some(TensixMode::VectorSingleCore) => 1,
+        Some(TensixMode::VectorMultiCore) => 2,
+        Some(TensixMode::ScalarMimd) => 3,
+    }
+}
+
+fn tag_mode(t: u8, r: &R) -> Result<Option<TensixMode>> {
+    Ok(match t {
+        0 => None,
+        1 => Some(TensixMode::VectorSingleCore),
+        2 => Some(TensixMode::VectorMultiCore),
+        3 => Some(TensixMode::ScalarMimd),
+        _ => return Err(r.err("bad mode tag")),
+    })
+}
+
+/// Serialize a snapshot to its wire form.
+pub fn serialize(snap: &Snapshot) -> Vec<u8> {
+    let mut w = W { buf: Vec::new() };
+    w.buf.extend_from_slice(MAGIC);
+    w.u32(VERSION);
+    w.u32(snap.src_device as u32);
+    match &snap.paused {
+        None => w.u8(0),
+        Some(p) => {
+            w.u8(1);
+            w.u32(p.spec.module as u32);
+            w.string(&p.spec.kernel);
+            for d in p.spec.dims.grid.iter().chain(p.spec.dims.block.iter()) {
+                w.u32(*d);
+            }
+            w.u32(p.spec.args.len() as u32);
+            for a in &p.spec.args {
+                write_arg(&mut w, a);
+            }
+            w.u8(mode_tag(p.spec.tensix_mode_hint));
+            w.u32(p.blocks.len() as u32);
+            for b in &p.blocks {
+                match b {
+                    BlockState::NotStarted => w.u8(0),
+                    BlockState::Done => w.u8(1),
+                    BlockState::Suspended(cap) => {
+                        w.u8(2);
+                        w.u32(cap.block_idx);
+                        w.u32(cap.barrier_id);
+                        w.u32(cap.threads.len() as u32);
+                        for t in &cap.threads {
+                            w.u32(t.regs.len() as u32);
+                            for (vr, val) in &t.regs {
+                                w.u32(vr.0);
+                                w.u8(type_tag(val.ty));
+                                w.u64(val.bits);
+                            }
+                        }
+                        w.bytes(&cap.shared_mem);
+                    }
+                }
+            }
+        }
+    }
+    w.u32(snap.allocations.len() as u32);
+    for (addr, bytes) in &snap.allocations {
+        w.u64(*addr);
+        w.bytes(bytes);
+    }
+    w.buf
+}
+
+/// Parse a snapshot from its wire form.
+pub fn deserialize(buf: &[u8]) -> Result<Snapshot> {
+    let mut r = R { buf, pos: 0 };
+    if r.take(4)? != MAGIC {
+        return Err(HetError::Blob { msg: "bad magic (not a hetGPU snapshot)".into() });
+    }
+    let ver = r.u32()?;
+    if ver != VERSION {
+        return Err(HetError::Blob { msg: format!("unsupported version {ver}") });
+    }
+    let src_device = r.u32()? as usize;
+    let paused = if r.u8()? == 1 {
+        let module = r.u32()? as usize;
+        let kernel = r.string()?;
+        let mut dims = [0u32; 6];
+        for d in dims.iter_mut() {
+            *d = r.u32()?;
+        }
+        let nargs = r.count(2)?;
+        let mut args = Vec::with_capacity(nargs);
+        for _ in 0..nargs {
+            args.push(read_arg(&mut r)?);
+        }
+        let hint_tag = r.u8()?;
+        let tensix_mode_hint = tag_mode(hint_tag, &r)?;
+        let nblocks = r.count(1)?;
+        let mut blocks = Vec::with_capacity(nblocks);
+        for _ in 0..nblocks {
+            let tag = r.u8()?;
+            blocks.push(match tag {
+                0 => BlockState::NotStarted,
+                1 => BlockState::Done,
+                2 => {
+                    let block_idx = r.u32()?;
+                    let barrier_id = r.u32()?;
+                    let nthreads = r.count(4)?;
+                    let mut threads = Vec::with_capacity(nthreads);
+                    for _ in 0..nthreads {
+                        let nregs = r.count(13)?;
+                        let mut regs = Vec::with_capacity(nregs);
+                        for _ in 0..nregs {
+                            let vr = VReg(r.u32()?);
+                            let tt = r.u8()?;
+                            let ty = tag_type(tt, &r)?;
+                            let bits = r.u64()?;
+                            regs.push((vr, Value { bits, ty }));
+                        }
+                        threads.push(ThreadCapture { regs });
+                    }
+                    let shared_mem = r.bytes()?;
+                    BlockState::Suspended(BlockCapture {
+                        block_idx,
+                        barrier_id,
+                        threads,
+                        shared_mem,
+                    })
+                }
+                _ => return Err(r.err("bad block tag")),
+            });
+        }
+        Some(PausedKernel {
+            spec: LaunchSpec {
+                module,
+                kernel,
+                dims: LaunchDims {
+                    grid: [dims[0], dims[1], dims[2]],
+                    block: [dims[3], dims[4], dims[5]],
+                },
+                args,
+                tensix_mode_hint,
+            },
+            blocks,
+        })
+    } else {
+        None
+    };
+    let nallocs = r.count(16)?;
+    let mut allocations = Vec::with_capacity(nallocs);
+    for _ in 0..nallocs {
+        let addr = r.u64()?;
+        let bytes = r.bytes()?;
+        allocations.push((addr, bytes));
+    }
+    if r.pos != buf.len() {
+        return Err(r.err("trailing bytes"));
+    }
+    Ok(Snapshot { src_device, paused, allocations })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_snapshot() -> Snapshot {
+        Snapshot {
+            src_device: 1,
+            paused: Some(PausedKernel {
+                spec: LaunchSpec {
+                    module: 3,
+                    kernel: "iter_mm".into(),
+                    dims: LaunchDims::d1(4, 64),
+                    args: vec![
+                        Arg::Ptr(GpuPtr(0x1000)),
+                        Arg::U32(7),
+                        Arg::F32(1.5),
+                        Arg::I64(-3),
+                        Arg::Pred(true),
+                    ],
+                    tensix_mode_hint: Some(TensixMode::VectorMultiCore),
+                },
+                blocks: vec![
+                    BlockState::Done,
+                    BlockState::NotStarted,
+                    BlockState::Suspended(BlockCapture {
+                        block_idx: 2,
+                        barrier_id: 5,
+                        threads: vec![ThreadCapture {
+                            regs: vec![
+                                (VReg(4), Value::u32(42)),
+                                (VReg(9), Value::f32(-0.5)),
+                                (VReg(11), Value::ptr(0x2000, AddrSpace::Global)),
+                            ],
+                        }],
+                        shared_mem: vec![1, 2, 3, 4],
+                    }),
+                    BlockState::Done,
+                ],
+            }),
+            allocations: vec![(0x1000, vec![0xAB; 100]), (0x8000, vec![0xCD; 7])],
+        }
+    }
+
+    #[test]
+    fn roundtrip_full() {
+        let s = sample_snapshot();
+        let blob = serialize(&s);
+        let s2 = deserialize(&blob).unwrap();
+        assert_eq!(s.src_device, s2.src_device);
+        assert_eq!(s.allocations, s2.allocations);
+        let (p, p2) = (s.paused.unwrap(), s2.paused.unwrap());
+        assert_eq!(p.spec.kernel, p2.spec.kernel);
+        assert_eq!(p.spec.args, p2.spec.args);
+        assert_eq!(p.spec.dims, p2.spec.dims);
+        assert_eq!(p.spec.tensix_mode_hint, p2.spec.tensix_mode_hint);
+        assert_eq!(p.blocks, p2.blocks);
+    }
+
+    #[test]
+    fn roundtrip_idle_snapshot() {
+        let s = Snapshot { src_device: 0, paused: None, allocations: vec![(64, vec![9; 3])] };
+        let blob = serialize(&s);
+        let s2 = deserialize(&blob).unwrap();
+        assert!(s2.paused.is_none());
+        assert_eq!(s2.allocations, s.allocations);
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let s = sample_snapshot();
+        let mut blob = serialize(&s);
+        // bad magic
+        let mut bad = blob.clone();
+        bad[0] = b'X';
+        assert!(deserialize(&bad).is_err());
+        // truncation at every prefix must error, not panic
+        for cut in [4usize, 8, 9, 20, blob.len() - 1] {
+            assert!(deserialize(&blob[..cut]).is_err(), "cut at {cut}");
+        }
+        // trailing garbage
+        blob.push(0);
+        assert!(deserialize(&blob).is_err());
+    }
+
+    #[test]
+    fn float_bits_exact() {
+        let mut s = sample_snapshot();
+        if let Some(p) = &mut s.paused {
+            if let BlockState::Suspended(cap) = &mut p.blocks[2] {
+                cap.threads[0].regs.push((
+                    VReg(20),
+                    Value { bits: 0x7FC0_0001, ty: Type::F32 }, // NaN payload
+                ));
+            }
+        }
+        let s2 = deserialize(&serialize(&s)).unwrap();
+        let p2 = s2.paused.unwrap();
+        if let BlockState::Suspended(cap) = &p2.blocks[2] {
+            assert_eq!(cap.threads[0].regs.last().unwrap().1.bits, 0x7FC0_0001);
+        } else {
+            panic!("expected suspended block");
+        }
+    }
+}

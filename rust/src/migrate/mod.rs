@@ -1,0 +1,14 @@
+//! Execution state management: snapshots, the serialized blob format, and
+//! the cross-architecture migration machinery (paper §4.2 *State
+//! Management and Migration*).
+//!
+//! The actual orchestration lives on [`crate::runtime::api::HetGpu`]
+//! (`checkpoint` / `restore` / `migrate`); this module owns the data
+//! formats and the cross-device invariants, which the integration tests in
+//! `tests/` exercise end-to-end (NVIDIA→AMD→Tenstorrent and back).
+
+pub mod blob;
+pub mod state;
+
+pub use blob::{deserialize, serialize};
+pub use state::{MigrationReport, Snapshot};

@@ -1,0 +1,128 @@
+//! Device-neutral execution snapshots and the migration report.
+//!
+//! A [`Snapshot`] is the paper's §4.2 *State Representation*: per-thread
+//! hetIR virtual-register files keyed by barrier/segment id, shared-memory
+//! contents, and all global allocations — everything needed to re-
+//! instantiate the computation on a *different* GPU architecture.
+
+use crate::runtime::stream::PausedKernel;
+use crate::sim::snapshot::BlockState;
+
+/// A complete captured stream state.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    /// Device the snapshot was taken on.
+    pub src_device: usize,
+    /// The kernel frozen mid-execution (None if the stream was idle or
+    /// the kernel completed before observing the pause).
+    pub paused: Option<PausedKernel>,
+    /// Global-memory contents: (virtual address, bytes) per allocation.
+    pub allocations: Vec<(u64, Vec<u8>)>,
+}
+
+impl Snapshot {
+    /// Total bytes of captured register + shared-memory state (the paper's
+    /// §8 scalability discussion measures exactly this).
+    pub fn register_bytes(&self) -> u64 {
+        let mut total = 0u64;
+        if let Some(p) = &self.paused {
+            for b in &p.blocks {
+                if let BlockState::Suspended(cap) = b {
+                    for t in &cap.threads {
+                        total += t.regs.iter().map(|(_, v)| v.ty.size_bytes()).sum::<u64>();
+                    }
+                    total += cap.shared_mem.len() as u64;
+                }
+            }
+        }
+        total
+    }
+
+    /// Number of suspended blocks.
+    pub fn suspended_blocks(&self) -> usize {
+        self.paused
+            .as_ref()
+            .map(|p| {
+                p.blocks.iter().filter(|b| matches!(b, BlockState::Suspended(_))).count()
+            })
+            .unwrap_or(0)
+    }
+}
+
+/// Timing breakdown of one migration (paper §6.3's checkpoint / restore /
+/// downtime numbers).
+#[derive(Debug, Clone)]
+pub struct MigrationReport {
+    pub src_device: usize,
+    pub dst_device: usize,
+    /// Global memory moved.
+    pub memory_bytes: u64,
+    /// Captured register/shared state moved.
+    pub register_bytes: u64,
+    /// Host wall time of the checkpoint phase.
+    pub checkpoint_us: f64,
+    /// Host wall time of the restore phase.
+    pub restore_us: f64,
+    /// Modeled downtime over simulated PCIe (both legs) — the number that
+    /// corresponds to the paper's "0.5 s + 0.6 s" style figures.
+    pub modeled_downtime_ms: f64,
+}
+
+impl MigrationReport {
+    /// Effective host↔device PCIe bandwidth per device kind, GB/s.
+    /// Derived from the paper's own measurements: 2 GB from the H100 took
+    /// 0.5 s (≈4 GB/s effective, checkpoint overheads included), the 9070
+    /// XT restore ran slightly faster, and the Tenstorrent dev board is
+    /// PCIe-limited ("1.1 s ... PCIe speed to dev board").
+    pub fn pcie_gbps(kind: crate::runtime::device::DeviceKind) -> f64 {
+        use crate::runtime::device::DeviceKind::*;
+        match kind {
+            NvidiaSim => 4.0,
+            AmdSim | AmdWave64Sim => 4.5,
+            IntelSim => 3.0,
+            TenstorrentSim => 1.8,
+        }
+    }
+
+    /// Downtime model: drain over the source link + fill over the
+    /// destination link (no overlap — the paper's stop-and-copy).
+    pub fn model_downtime_ms(
+        bytes: u64,
+        src: crate::runtime::device::DeviceKind,
+        dst: crate::runtime::device::DeviceKind,
+    ) -> f64 {
+        let gb = bytes as f64 / 1e9;
+        (gb / Self::pcie_gbps(src) + gb / Self::pcie_gbps(dst)) * 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::device::DeviceKind;
+
+    #[test]
+    fn downtime_model_matches_paper_scale() {
+        // 2 GB off an H100 ≈ 0.5 s; plus 2 GB onto the AMD card ≈ 0.44 s.
+        let ms = MigrationReport::model_downtime_ms(
+            2_000_000_000,
+            DeviceKind::NvidiaSim,
+            DeviceKind::AmdSim,
+        );
+        assert!((900.0..1100.0).contains(&ms), "{ms} ms");
+        // Tenstorrent leg is slower (paper: 1.1 s).
+        let ms_tt = MigrationReport::model_downtime_ms(
+            2_000_000_000,
+            DeviceKind::AmdSim,
+            DeviceKind::TenstorrentSim,
+        );
+        assert!(ms_tt > ms, "dev-board PCIe must dominate");
+    }
+
+    #[test]
+    fn empty_snapshot_counts() {
+        let s = Snapshot { src_device: 0, paused: None, allocations: vec![] };
+        assert_eq!(s.register_bytes(), 0);
+        assert_eq!(s.suspended_blocks(), 0);
+    }
+}

@@ -1,0 +1,304 @@
+//! The public hetGPU API — the CUDA-like abstraction layer of paper §4.3.
+//!
+//! `HetGpu` is the context a program links against (`libhetgpu.so` in the
+//! paper): device discovery, module loading (from CUDA source or hetIR
+//! text), unified memory (`malloc`/`memcpy`), stream creation, kernel
+//! launch, and the checkpoint/migration entry points.
+
+use crate::error::{HetError, Result};
+use crate::frontend;
+use crate::hetir::{self, module::Module};
+use crate::migrate::state::{MigrationReport, Snapshot};
+use crate::runtime::device::{Device, DeviceKind};
+use crate::runtime::jit::JitCache;
+use crate::runtime::launch::{Arg, LaunchSpec};
+use crate::runtime::memory::{GpuPtr, MemoryManager};
+use crate::runtime::stream::{Cmd, Stream, StreamStats};
+use crate::runtime::RuntimeInner;
+use crate::sim::simt::LaunchDims;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Handle to a loaded hetIR module.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModuleHandle(pub usize);
+
+/// Handle to a stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StreamHandle(pub usize);
+
+/// The hetGPU context.
+pub struct HetGpu {
+    inner: Arc<RuntimeInner>,
+    streams: Mutex<Vec<Stream>>,
+    /// Device each stream is currently bound to (updated by migration).
+    stream_devices: Mutex<Vec<usize>>,
+}
+
+impl HetGpu {
+    /// Create a context with the given simulated devices.
+    pub fn with_devices(kinds: &[DeviceKind]) -> Result<HetGpu> {
+        if kinds.is_empty() {
+            return Err(HetError::runtime("no devices"));
+        }
+        let devices: Vec<Device> =
+            kinds.iter().enumerate().map(|(i, k)| Device::new(i, *k)).collect();
+        let inner = Arc::new(RuntimeInner {
+            devices,
+            modules: std::sync::RwLock::new(Vec::new()),
+            jit: JitCache::new(),
+            memory: MemoryManager::new(crate::runtime::device::DEVICE_MEM_BYTES),
+        });
+        Ok(HetGpu { inner, streams: Mutex::new(Vec::new()), stream_devices: Mutex::new(Vec::new()) })
+    }
+
+    /// Create a context with all four paper devices.
+    pub fn full_testbed() -> Result<HetGpu> {
+        HetGpu::with_devices(&DeviceKind::all())
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.inner.devices.len()
+    }
+
+    pub fn device_kind(&self, id: usize) -> Result<DeviceKind> {
+        Ok(self.inner.device(id)?.kind)
+    }
+
+    /// Shared runtime internals (benches/tests poke at the JIT cache).
+    pub fn runtime(&self) -> &RuntimeInner {
+        &self.inner
+    }
+
+    // ---- modules ----
+
+    /// Compile CUDA-subset source into a loaded module.
+    pub fn compile_cuda(&self, src: &str) -> Result<ModuleHandle> {
+        let module = frontend::compile(src, "cuda-module")?;
+        self.load_module(module)
+    }
+
+    /// Load a hetIR module from its text-assembly form ("the binary").
+    pub fn load_module_text(&self, text: &str) -> Result<ModuleHandle> {
+        let module = hetir::parser::parse_module(text)?;
+        self.load_module(module)
+    }
+
+    /// Load an in-memory hetIR module (verifies every kernel first).
+    pub fn load_module(&self, module: Module) -> Result<ModuleHandle> {
+        hetir::verify::verify_module(&module)?;
+        let mut mods = self.inner.modules.write().unwrap();
+        mods.push(module);
+        Ok(ModuleHandle(mods.len() - 1))
+    }
+
+    // ---- memory ----
+
+    /// Allocate device memory resident on `device`.
+    pub fn malloc_on(&self, bytes: u64, device: usize) -> Result<GpuPtr> {
+        self.inner.device(device)?;
+        self.inner.memory.alloc(bytes, device)
+    }
+
+    pub fn free(&self, ptr: GpuPtr) -> Result<()> {
+        self.inner.memory.free(ptr)
+    }
+
+    /// Host→device copy (to wherever the buffer is resident).
+    pub fn memcpy_h2d(&self, dst: GpuPtr, data: &[u8]) -> Result<()> {
+        let (base, size, device) = self.inner.memory.lookup(dst)?;
+        if dst.0 + data.len() as u64 > base + size {
+            return Err(HetError::runtime("h2d copy out of bounds"));
+        }
+        let dev = self.inner.device(device)?;
+        dev.mem.lock().unwrap().write_bytes(dst.0, data)
+    }
+
+    /// Device→host copy.
+    pub fn memcpy_d2h(&self, out: &mut [u8], src: GpuPtr) -> Result<()> {
+        let (base, size, device) = self.inner.memory.lookup(src)?;
+        if src.0 + out.len() as u64 > base + size {
+            return Err(HetError::runtime("d2h copy out of bounds"));
+        }
+        let dev = self.inner.device(device)?;
+        dev.mem.lock().unwrap().read_bytes(src.0, out)
+    }
+
+    /// Typed convenience: upload an `f32` slice.
+    pub fn upload_f32(&self, dst: GpuPtr, data: &[f32]) -> Result<()> {
+        let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        self.memcpy_h2d(dst, &bytes)
+    }
+
+    /// Typed convenience: download an `f32` slice.
+    pub fn download_f32(&self, src: GpuPtr, n: usize) -> Result<Vec<f32>> {
+        let mut bytes = vec![0u8; n * 4];
+        self.memcpy_d2h(&mut bytes, src)?;
+        Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    }
+
+    /// Typed convenience: upload a `u32` slice.
+    pub fn upload_u32(&self, dst: GpuPtr, data: &[u32]) -> Result<()> {
+        let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        self.memcpy_h2d(dst, &bytes)
+    }
+
+    /// Typed convenience: download a `u32` slice.
+    pub fn download_u32(&self, src: GpuPtr, n: usize) -> Result<Vec<u32>> {
+        let mut bytes = vec![0u8; n * 4];
+        self.memcpy_d2h(&mut bytes, src)?;
+        Ok(bytes.chunks_exact(4).map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    }
+
+    // ---- streams & launch ----
+
+    /// Create a stream bound to `device`.
+    pub fn create_stream(&self, device: usize) -> Result<StreamHandle> {
+        self.inner.device(device)?;
+        let mut streams = self.streams.lock().unwrap();
+        let id = streams.len();
+        streams.push(Stream::spawn(id, device, self.inner.clone()));
+        self.stream_devices.lock().unwrap().push(device);
+        Ok(StreamHandle(id))
+    }
+
+    /// Which device a stream currently runs on.
+    pub fn stream_device(&self, s: StreamHandle) -> Result<usize> {
+        self.stream_devices
+            .lock()
+            .unwrap()
+            .get(s.0)
+            .copied()
+            .ok_or_else(|| HetError::runtime("bad stream handle"))
+    }
+
+    fn with_stream<T>(&self, s: StreamHandle, f: impl FnOnce(&Stream) -> Result<T>) -> Result<T> {
+        let streams = self.streams.lock().unwrap();
+        let st = streams.get(s.0).ok_or_else(|| HetError::runtime("bad stream handle"))?;
+        f(st)
+    }
+
+    /// Asynchronously launch a kernel on a stream.
+    pub fn launch(
+        &self,
+        stream: StreamHandle,
+        module: ModuleHandle,
+        kernel: &str,
+        dims: LaunchDims,
+        args: &[Arg],
+    ) -> Result<()> {
+        let spec = LaunchSpec {
+            module: module.0,
+            kernel: kernel.to_string(),
+            dims,
+            args: args.to_vec(),
+            tensix_mode_hint: None,
+        };
+        self.with_stream(stream, |s| s.send(Cmd::Launch(spec)))
+    }
+
+    /// Launch with a Tensix execution-mode hint (paper §4.4 user hints).
+    pub fn launch_with_mode(
+        &self,
+        stream: StreamHandle,
+        module: ModuleHandle,
+        kernel: &str,
+        dims: LaunchDims,
+        args: &[Arg],
+        mode: crate::isa::tensix_isa::TensixMode,
+    ) -> Result<()> {
+        let spec = LaunchSpec {
+            module: module.0,
+            kernel: kernel.to_string(),
+            dims,
+            args: args.to_vec(),
+            tensix_mode_hint: Some(mode),
+        };
+        self.with_stream(stream, |s| s.send(Cmd::Launch(spec)))
+    }
+
+    /// Wait for all work on a stream (propagates sticky errors).
+    pub fn synchronize(&self, stream: StreamHandle) -> Result<()> {
+        self.with_stream(stream, |s| s.synchronize())
+    }
+
+    /// Per-stream stats (launches, model cycles, wall time).
+    pub fn stream_stats(&self, stream: StreamHandle) -> Result<StreamStats> {
+        self.with_stream(stream, |s| Ok(s.stats.lock().unwrap().clone()))
+    }
+
+    // ---- checkpoint / migration (paper §4.2, §6.3) ----
+
+    /// Cooperatively checkpoint a stream: sets the device pause flag,
+    /// waits for the in-flight kernel to dump at its next barrier (or
+    /// finish), and returns the device-neutral snapshot (kernel state +
+    /// all global allocations on the device).
+    pub fn checkpoint(&self, stream: StreamHandle) -> Result<Snapshot> {
+        let device = self.stream_device(stream)?;
+        let dev = self.inner.device(device)?;
+        dev.pause.store(true, Ordering::SeqCst);
+        // Wait until the worker has observed the pause (quiesce processes
+        // the queue up to here; a running launch returns Paused first).
+        let _halted = self.with_stream(stream, |s| s.quiesce())?;
+        dev.pause.store(false, Ordering::SeqCst);
+        let paused = self.with_stream(stream, |s| s.take_paused())?;
+        // Collect global memory: every allocation resident on the device.
+        let allocs = self.inner.memory.allocations_on(device);
+        let mut mem_blobs = Vec::with_capacity(allocs.len());
+        {
+            let mem = dev.mem.lock().unwrap();
+            for (addr, size) in allocs {
+                let mut bytes = vec![0u8; size as usize];
+                mem.read_bytes(addr, &mut bytes)?;
+                mem_blobs.push((addr, bytes));
+            }
+        }
+        Ok(Snapshot { src_device: device, paused, allocations: mem_blobs })
+    }
+
+    /// Restore a snapshot onto `dst_device` and resume the stream there.
+    pub fn restore(&self, stream: StreamHandle, snap: Snapshot, dst_device: usize) -> Result<()> {
+        let dst = self.inner.device(dst_device)?;
+        {
+            let mut mem = dst.mem.lock().unwrap();
+            for (addr, bytes) in &snap.allocations {
+                mem.write_bytes(*addr, bytes)?;
+            }
+        }
+        self.inner.memory.move_residency(snap.src_device, dst_device);
+        self.stream_devices.lock().unwrap()[stream.0] = dst_device;
+        self.with_stream(stream, |s| s.resume(dst_device, snap.paused))
+    }
+
+    /// Live-migrate a stream to another device: checkpoint → move memory →
+    /// resume. Returns the §6.3-style timing breakdown.
+    pub fn migrate(&self, stream: StreamHandle, dst_device: usize) -> Result<MigrationReport> {
+        let src_device = self.stream_device(stream)?;
+        if src_device == dst_device {
+            return Err(HetError::migrate("source and destination are the same device"));
+        }
+        let t0 = Instant::now();
+        let snap = self.checkpoint(stream)?;
+        let t_ckpt = t0.elapsed();
+        let bytes: u64 = snap.allocations.iter().map(|(_, b)| b.len() as u64).sum();
+        let reg_bytes = snap.register_bytes();
+        let t1 = Instant::now();
+        self.restore(stream, snap, dst_device)?;
+        let t_restore = t1.elapsed();
+        // Wait for the resumed kernel to finish its current segment run.
+        Ok(MigrationReport {
+            src_device,
+            dst_device,
+            memory_bytes: bytes,
+            register_bytes: reg_bytes,
+            checkpoint_us: t_ckpt.as_secs_f64() * 1e6,
+            restore_us: t_restore.as_secs_f64() * 1e6,
+            modeled_downtime_ms: MigrationReport::model_downtime_ms(
+                bytes + reg_bytes,
+                self.inner.device(src_device)?.kind,
+                self.inner.device(dst_device)?.kind,
+            ),
+        })
+    }
+}

@@ -1,0 +1,144 @@
+//! Device registry: the simulated GPUs the runtime can schedule onto.
+//!
+//! Mirrors paper §5.2 "the runtime detects devices via environment
+//! variables or a config file" — here, devices are declared when the
+//! [`crate::runtime::api::HetGpu`] context is created.
+
+use crate::isa::simt_isa::SimtConfig;
+use crate::isa::tensix_isa::TensixConfig;
+use crate::sim::mem::DeviceMemory;
+use crate::sim::simt::SimtSim;
+use crate::sim::tensix::TensixSim;
+use std::sync::atomic::AtomicBool;
+use std::sync::Mutex;
+
+/// The GPU vendors hetGPU supports (paper abstract: NVIDIA, AMD, Intel,
+/// Tenstorrent). `AmdWave64Sim` is the GCN-era wave64 configuration used
+/// by the divergence ablation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DeviceKind {
+    NvidiaSim,
+    AmdSim,
+    AmdWave64Sim,
+    IntelSim,
+    TenstorrentSim,
+}
+
+impl DeviceKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            DeviceKind::NvidiaSim => "nvidia-sim",
+            DeviceKind::AmdSim => "amd-sim",
+            DeviceKind::AmdWave64Sim => "amd-sim-w64",
+            DeviceKind::IntelSim => "intel-sim",
+            DeviceKind::TenstorrentSim => "tenstorrent-sim",
+        }
+    }
+
+    /// All kinds (the paper's four-vendor testbed plus the wave64 ablation).
+    pub fn all() -> [DeviceKind; 4] {
+        [DeviceKind::NvidiaSim, DeviceKind::AmdSim, DeviceKind::IntelSim, DeviceKind::TenstorrentSim]
+    }
+
+    pub fn is_simt(self) -> bool {
+        !matches!(self, DeviceKind::TenstorrentSim)
+    }
+
+    /// Parse from a CLI/name string.
+    pub fn parse(s: &str) -> Option<DeviceKind> {
+        Some(match s {
+            "nvidia" | "nvidia-sim" => DeviceKind::NvidiaSim,
+            "amd" | "amd-sim" => DeviceKind::AmdSim,
+            "amd-w64" | "amd-sim-w64" => DeviceKind::AmdWave64Sim,
+            "intel" | "intel-sim" => DeviceKind::IntelSim,
+            "tenstorrent" | "tenstorrent-sim" | "tt" => DeviceKind::TenstorrentSim,
+            _ => return None,
+        })
+    }
+}
+
+/// The execution engine behind a device.
+pub enum Engine {
+    Simt(SimtSim),
+    Tensix(TensixSim),
+}
+
+impl Engine {
+    pub fn clock_mhz(&self) -> u64 {
+        match self {
+            Engine::Simt(s) => s.cfg.clock_mhz,
+            Engine::Tensix(t) => t.cfg.clock_mhz,
+        }
+    }
+}
+
+/// One simulated GPU: engine + DRAM + the cooperative pause flag.
+pub struct Device {
+    pub id: usize,
+    pub kind: DeviceKind,
+    pub engine: Engine,
+    /// Device DRAM. A launch holds the lock for its whole execution;
+    /// host copies and checkpoint collection synchronize on it.
+    pub mem: Mutex<DeviceMemory>,
+    /// Cooperative pause flag (paper §4.2): checked by compiled-in
+    /// checkpoint guards and at block-dispatch boundaries.
+    pub pause: AtomicBool,
+}
+
+/// Default simulated DRAM size per device (256 MiB — enough for every
+/// workload in the evaluation while keeping allocation cheap).
+pub const DEVICE_MEM_BYTES: u64 = 256 << 20;
+
+impl Device {
+    pub fn new(id: usize, kind: DeviceKind) -> Device {
+        let engine = match kind {
+            DeviceKind::NvidiaSim => Engine::Simt(SimtSim::new(SimtConfig::nvidia())),
+            DeviceKind::AmdSim => Engine::Simt(SimtSim::new(SimtConfig::amd())),
+            DeviceKind::AmdWave64Sim => Engine::Simt(SimtSim::new(SimtConfig::amd_wave64())),
+            DeviceKind::IntelSim => Engine::Simt(SimtSim::new(SimtConfig::intel())),
+            DeviceKind::TenstorrentSim => Engine::Tensix(TensixSim::new(TensixConfig::blackhole())),
+        };
+        Device {
+            id,
+            kind,
+            engine,
+            mem: Mutex::new(DeviceMemory::new(DEVICE_MEM_BYTES, kind.name())),
+            pause: AtomicBool::new(false),
+        }
+    }
+
+    /// Replace the Tensix engine configuration (perf-pass ablations).
+    pub fn with_tensix_config(id: usize, cfg: TensixConfig) -> Device {
+        Device {
+            id,
+            kind: DeviceKind::TenstorrentSim,
+            engine: Engine::Tensix(TensixSim::new(cfg)),
+            mem: Mutex::new(DeviceMemory::new(DEVICE_MEM_BYTES, "tenstorrent-sim")),
+            pause: AtomicBool::new(false),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kinds_parse_roundtrip() {
+        for k in DeviceKind::all() {
+            assert_eq!(DeviceKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(DeviceKind::parse("tt"), Some(DeviceKind::TenstorrentSim));
+        assert_eq!(DeviceKind::parse("riscv"), None);
+    }
+
+    #[test]
+    fn device_construction() {
+        let d = Device::new(0, DeviceKind::NvidiaSim);
+        assert_eq!(d.kind.name(), "nvidia-sim");
+        assert_eq!(d.mem.lock().unwrap().capacity(), DEVICE_MEM_BYTES);
+        assert!(d.kind.is_simt());
+        let t = Device::new(1, DeviceKind::TenstorrentSim);
+        assert!(!t.kind.is_simt());
+    }
+}

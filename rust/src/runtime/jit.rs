@@ -1,0 +1,154 @@
+//! JIT translation cache (paper §4.2 Module Loading and JIT: "the runtime
+//! caches these translated kernels, so repeated launches don't incur
+//! translation overhead").
+//!
+//! Also records per-translation timing — the data behind the paper's §6.2
+//! "Translation/JIT cost" table (bench E4).
+
+use crate::backends::{self, DeviceProgram, TranslateOpts};
+use crate::error::Result;
+use crate::hetir::module::Kernel;
+use crate::isa::simt_isa::SimtConfig;
+use crate::isa::tensix_isa::TensixMode;
+use crate::runtime::device::DeviceKind;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Cache key: one translation per (module, kernel, target, mode, build).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct JitKey {
+    pub module: usize,
+    pub kernel: String,
+    pub kind: DeviceKind,
+    pub tensix_mode: Option<TensixMode>,
+    pub migratable: bool,
+}
+
+/// One recorded translation event (for the E4 table).
+#[derive(Debug, Clone)]
+pub struct JitEvent {
+    pub kernel: String,
+    pub kind: DeviceKind,
+    pub tensix_mode: Option<TensixMode>,
+    pub micros: f64,
+    pub out_insts: usize,
+}
+
+#[derive(Default)]
+pub struct JitCache {
+    map: Mutex<HashMap<JitKey, Arc<DeviceProgram>>>,
+    events: Mutex<Vec<JitEvent>>,
+    hits: Mutex<u64>,
+}
+
+impl JitCache {
+    pub fn new() -> JitCache {
+        JitCache::default()
+    }
+
+    /// Translate (or fetch the cached translation of) `kernel` for the
+    /// target identified by `key`. `simt_cfg` must be provided for SIMT
+    /// targets.
+    pub fn get_or_translate(
+        &self,
+        key: JitKey,
+        kernel: &Kernel,
+        simt_cfg: Option<&SimtConfig>,
+    ) -> Result<Arc<DeviceProgram>> {
+        if let Some(p) = self.map.lock().unwrap().get(&key) {
+            *self.hits.lock().unwrap() += 1;
+            return Ok(p.clone());
+        }
+        let opts = TranslateOpts { migratable: key.migratable };
+        let t0 = Instant::now();
+        let prog = match key.kind {
+            DeviceKind::TenstorrentSim => {
+                let mode = key.tensix_mode.expect("tensix mode required");
+                DeviceProgram::Tensix(backends::translate_tensix(kernel, mode, opts)?)
+            }
+            _ => {
+                let cfg = simt_cfg.expect("simt config required");
+                DeviceProgram::Simt(backends::translate_simt(kernel, cfg, opts)?)
+            }
+        };
+        let micros = t0.elapsed().as_secs_f64() * 1e6;
+        self.events.lock().unwrap().push(JitEvent {
+            kernel: key.kernel.clone(),
+            kind: key.kind,
+            tensix_mode: key.tensix_mode,
+            micros,
+            out_insts: prog.inst_count(),
+        });
+        let prog = Arc::new(prog);
+        self.map.lock().unwrap().insert(key, prog.clone());
+        Ok(prog)
+    }
+
+    /// Recorded translation events (E4 table data).
+    pub fn events(&self) -> Vec<JitEvent> {
+        self.events.lock().unwrap().clone()
+    }
+
+    /// Cache hit count (repeated-launch check, §6.2 "0.11 ms on
+    /// subsequent runs (cached)").
+    pub fn hit_count(&self) -> u64 {
+        *self.hits.lock().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hetir::builder::KernelBuilder;
+    use crate::hetir::types::Type;
+
+    fn tiny_kernel() -> Kernel {
+        let mut b = KernelBuilder::new("k");
+        let _p = b.param("p", Type::PTR_GLOBAL);
+        b.finish()
+    }
+
+    #[test]
+    fn caches_by_key() {
+        let cache = JitCache::new();
+        let k = tiny_kernel();
+        let key = JitKey {
+            module: 0,
+            kernel: "k".into(),
+            kind: DeviceKind::NvidiaSim,
+            tensix_mode: None,
+            migratable: true,
+        };
+        let cfg = SimtConfig::nvidia();
+        let a = cache.get_or_translate(key.clone(), &k, Some(&cfg)).unwrap();
+        let b = cache.get_or_translate(key, &k, Some(&cfg)).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(cache.hit_count(), 1);
+        assert_eq!(cache.events().len(), 1);
+    }
+
+    #[test]
+    fn different_targets_translate_separately() {
+        let cache = JitCache::new();
+        let k = tiny_kernel();
+        let cfg = SimtConfig::nvidia();
+        let mk = |kind, mode| JitKey {
+            module: 0,
+            kernel: "k".into(),
+            kind,
+            tensix_mode: mode,
+            migratable: true,
+        };
+        cache.get_or_translate(mk(DeviceKind::NvidiaSim, None), &k, Some(&cfg)).unwrap();
+        cache
+            .get_or_translate(
+                mk(DeviceKind::TenstorrentSim, Some(TensixMode::VectorSingleCore)),
+                &k,
+                None,
+            )
+            .unwrap();
+        assert_eq!(cache.events().len(), 2);
+        assert_eq!(cache.hit_count(), 0);
+    }
+}

@@ -1,0 +1,210 @@
+//! Kernel launch specification: arguments, dimension checks, and the
+//! Tensix execution-mode heuristic (paper §4.4 "the runtime decides which
+//! strategy per kernel ... based on heuristics. The user can also give
+//! hints").
+
+use crate::error::{HetError, Result};
+use crate::hetir::instr::Inst;
+use crate::hetir::module::Kernel;
+use crate::hetir::passes::uniformity;
+use crate::hetir::types::{AddrSpace, Type, Value};
+use crate::isa::tensix_isa::TensixMode;
+use crate::runtime::memory::GpuPtr;
+use crate::sim::simt::LaunchDims;
+
+/// A kernel argument, CUDA-style.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Arg {
+    Ptr(GpuPtr),
+    U32(u32),
+    I32(i32),
+    U64(u64),
+    I64(i64),
+    F32(f32),
+    Pred(bool),
+}
+
+impl Arg {
+    /// Convert to a hetIR value, checking against the parameter type.
+    pub fn to_value(&self, want: Type, pname: &str) -> Result<Value> {
+        let v = match (self, want) {
+            (Arg::Ptr(p), Type::Ptr(AddrSpace::Global)) => Value::ptr(p.0, AddrSpace::Global),
+            (Arg::U32(v), Type::Scalar(crate::hetir::types::Scalar::U32)) => Value::u32(*v),
+            (Arg::I32(v), Type::Scalar(crate::hetir::types::Scalar::I32)) => Value::i32(*v),
+            (Arg::U64(v), Type::Scalar(crate::hetir::types::Scalar::U64)) => Value::u64(*v),
+            (Arg::I64(v), Type::Scalar(crate::hetir::types::Scalar::I64)) => Value::i64(*v),
+            (Arg::F32(v), Type::Scalar(crate::hetir::types::Scalar::F32)) => Value::f32(*v),
+            (Arg::Pred(v), Type::Scalar(crate::hetir::types::Scalar::Pred)) => Value::pred(*v),
+            (got, want) => {
+                return Err(HetError::runtime(format!(
+                    "argument type mismatch for `{pname}`: kernel wants {want}, got {got:?}"
+                )))
+            }
+        };
+        Ok(v)
+    }
+}
+
+/// A fully-specified launch request.
+#[derive(Debug, Clone)]
+pub struct LaunchSpec {
+    /// Module handle (index into the context's loaded modules).
+    pub module: usize,
+    pub kernel: String,
+    pub dims: LaunchDims,
+    pub args: Vec<Arg>,
+    /// Optional user hint overriding the Tensix mode heuristic.
+    pub tensix_mode_hint: Option<TensixMode>,
+}
+
+/// Convert launch args to typed values against the kernel signature.
+pub fn args_to_values(kernel: &Kernel, args: &[Arg]) -> Result<Vec<Value>> {
+    if args.len() != kernel.params.len() {
+        return Err(HetError::runtime(format!(
+            "kernel `{}` takes {} args, got {}",
+            kernel.name,
+            kernel.params.len(),
+            args.len()
+        )));
+    }
+    args.iter()
+        .zip(&kernel.params)
+        .map(|(a, p)| a.to_value(p.ty, &p.name))
+        .collect()
+}
+
+/// Static kernel features consulted by the mode heuristic.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct KernelFeatures {
+    pub has_barrier: bool,
+    pub has_shared: bool,
+    pub has_team_ops: bool,
+    pub has_divergence: bool,
+}
+
+pub fn kernel_features(k: &Kernel) -> KernelFeatures {
+    let mut f = KernelFeatures::default();
+    k.visit_insts(|i| match i {
+        Inst::Bar { .. } => f.has_barrier = true,
+        Inst::Ld { space: AddrSpace::Shared, .. }
+        | Inst::St { space: AddrSpace::Shared, .. }
+        | Inst::Atom { space: AddrSpace::Shared, .. } => f.has_shared = true,
+        Inst::Vote { .. } | Inst::Ballot { .. } | Inst::Shfl { .. } => f.has_team_ops = true,
+        _ => {}
+    });
+    if k.shared_bytes > 0 {
+        f.has_shared = true;
+    }
+    // Divergence: any If/While controlled by a varying predicate.
+    let uni = uniformity::run(k);
+    fn walk(stmts: &[crate::hetir::module::Stmt], uni: &uniformity::Uniformity) -> bool {
+        use crate::hetir::module::Stmt;
+        for s in stmts {
+            match s {
+                Stmt::If { cond, then_b, else_b } => {
+                    if uni.is_varying(*cond) || walk(then_b, uni) || walk(else_b, uni) {
+                        return true;
+                    }
+                }
+                Stmt::While { cond, cond_reg, body } => {
+                    if uni.is_varying(*cond_reg) || walk(cond, uni) || walk(body, uni) {
+                        return true;
+                    }
+                }
+                _ => {}
+            }
+        }
+        false
+    }
+    f.has_divergence = walk(&k.body, &uni);
+    f
+}
+
+/// The paper's §4.4 heuristic: kernels that need cross-thread coordination
+/// run vectorized (single core when the block fits, multi-core otherwise);
+/// "for highly divergent workloads, forcing SIMT behavior is detrimental,
+/// so our runtime can instead run each thread independently (pure MIMD)".
+pub fn choose_tensix_mode(k: &Kernel, dims: LaunchDims) -> TensixMode {
+    let f = kernel_features(k);
+    let needs_vector = f.has_barrier || f.has_shared || f.has_team_ops;
+    if !needs_vector && f.has_divergence {
+        return TensixMode::ScalarMimd;
+    }
+    if dims.block_size() <= 32 {
+        TensixMode::VectorSingleCore
+    } else {
+        TensixMode::VectorMultiCore
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::compile;
+
+    #[test]
+    fn arg_type_checking() {
+        let m = compile(
+            "__global__ void k(float* p, unsigned n, float a) { p[n] = a; }",
+            "m",
+        )
+        .unwrap();
+        let k = m.kernel("k").unwrap();
+        let good = [Arg::Ptr(GpuPtr(4096)), Arg::U32(1), Arg::F32(2.0)];
+        assert!(args_to_values(k, &good).is_ok());
+        let wrong_ty = [Arg::Ptr(GpuPtr(4096)), Arg::F32(1.0), Arg::F32(2.0)];
+        assert!(args_to_values(k, &wrong_ty).is_err());
+        let wrong_n = [Arg::Ptr(GpuPtr(4096))];
+        assert!(args_to_values(k, &wrong_n).is_err());
+    }
+
+    #[test]
+    fn mode_heuristic_matches_paper() {
+        // Divergent, barrier-free kernel (Monte-Carlo-like) → MIMD.
+        let mc = compile(
+            r#"__global__ void mc(unsigned* hits, unsigned n) {
+                unsigned i = blockIdx.x * blockDim.x + threadIdx.x;
+                unsigned s = i + 1u;
+                unsigned local = 0u;
+                for (unsigned j = 0u; j < n; j++) {
+                    unsigned x = hetgpu_rand(s);
+                    if (x % 2u == 0u) local += 1u;
+                }
+                atomicAdd(&hits[0], local);
+            }"#,
+            "m",
+        )
+        .unwrap();
+        assert_eq!(
+            choose_tensix_mode(mc.kernel("mc").unwrap(), LaunchDims::d1(4, 64)),
+            TensixMode::ScalarMimd
+        );
+
+        // Shared-memory kernel → vector; small block → single core.
+        let sh = compile(
+            r#"__global__ void s(float* p) {
+                __shared__ float t[32];
+                t[threadIdx.x] = p[threadIdx.x];
+                __syncthreads();
+                p[threadIdx.x] = t[31u - threadIdx.x];
+            }"#,
+            "m",
+        )
+        .unwrap();
+        let k = sh.kernel("s").unwrap();
+        assert_eq!(choose_tensix_mode(k, LaunchDims::d1(1, 32)), TensixMode::VectorSingleCore);
+        assert_eq!(choose_tensix_mode(k, LaunchDims::d1(1, 128)), TensixMode::VectorMultiCore);
+    }
+
+    #[test]
+    fn features_detect_team_ops() {
+        let m = compile(
+            "__global__ void k(unsigned* p) { p[0] = __ballot_sync(0u, true); }",
+            "m",
+        )
+        .unwrap();
+        let f = kernel_features(m.kernel("k").unwrap());
+        assert!(f.has_team_ops);
+        assert!(!f.has_barrier);
+    }
+}

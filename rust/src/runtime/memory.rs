@@ -1,0 +1,221 @@
+//! Unified memory manager: device-independent GPU pointers.
+//!
+//! Implements paper §4.3 *Memory Allocation*: `gpuMalloc` returns a pointer
+//! usable on any GPU through the hetGPU API. We use a **unified virtual
+//! address space**: one allocator hands out address ranges, and a buffer's
+//! bytes live at the *same* address inside whichever device's DRAM it is
+//! currently resident on. Migration therefore copies bytes but never needs
+//! to rewrite embedded addresses (the paper's alternative — per-device
+//! bases with pointer fix-up — is supported by the snapshot layer via typed
+//! pointer registers, and exercised in the migration tests).
+//!
+//! The allocator is a first-fit free list over the device DRAM range,
+//! deterministic across devices by construction.
+
+use crate::error::{HetError, Result};
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::Mutex;
+
+/// A device-independent GPU pointer (a virtual address).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct GpuPtr(pub u64);
+
+impl fmt::Display for GpuPtr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "gpu:0x{:x}", self.0)
+    }
+}
+
+impl GpuPtr {
+    /// Pointer arithmetic (byte offset), like CUDA device pointers.
+    pub fn offset(self, bytes: u64) -> GpuPtr {
+        GpuPtr(self.0 + bytes)
+    }
+}
+
+#[derive(Debug, Clone)]
+struct Alloc {
+    addr: u64,
+    size: u64,
+    /// Device currently holding the bytes.
+    device: usize,
+}
+
+/// Allocation table + free-list allocator.
+pub struct MemoryManager {
+    inner: Mutex<Inner>,
+}
+
+struct Inner {
+    /// Live allocations keyed by base address.
+    allocs: HashMap<u64, Alloc>,
+    /// Free regions (addr, size), kept sorted by address and coalesced.
+    free: Vec<(u64, u64)>,
+    capacity: u64,
+    bytes_in_use: u64,
+}
+
+/// Allocations start above address 0 so that null stays invalid.
+const HEAP_BASE: u64 = 4096;
+
+impl MemoryManager {
+    pub fn new(capacity: u64) -> MemoryManager {
+        MemoryManager {
+            inner: Mutex::new(Inner {
+                allocs: HashMap::new(),
+                free: vec![(HEAP_BASE, capacity - HEAP_BASE)],
+                capacity,
+                bytes_in_use: 0,
+            }),
+        }
+    }
+
+    /// Allocate `size` bytes resident on `device`.
+    pub fn alloc(&self, size: u64, device: usize) -> Result<GpuPtr> {
+        if size == 0 {
+            return Err(HetError::runtime("zero-size allocation"));
+        }
+        let size = (size + 255) & !255; // 256-byte granularity
+        let mut g = self.inner.lock().unwrap();
+        let slot = g
+            .free
+            .iter()
+            .position(|(_, s)| *s >= size)
+            .ok_or_else(|| HetError::runtime(format!("out of device memory ({size} bytes)")))?;
+        let (addr, fsize) = g.free[slot];
+        if fsize == size {
+            g.free.remove(slot);
+        } else {
+            g.free[slot] = (addr + size, fsize - size);
+        }
+        g.allocs.insert(addr, Alloc { addr, size, device });
+        g.bytes_in_use += size;
+        Ok(GpuPtr(addr))
+    }
+
+    /// Free an allocation (must be the base pointer).
+    pub fn free(&self, ptr: GpuPtr) -> Result<()> {
+        let mut g = self.inner.lock().unwrap();
+        let a = g
+            .allocs
+            .remove(&ptr.0)
+            .ok_or_else(|| HetError::runtime(format!("free of unknown pointer {ptr}")))?;
+        g.bytes_in_use -= a.size;
+        // insert + coalesce
+        let pos = g.free.partition_point(|(fa, _)| *fa < a.addr);
+        g.free.insert(pos, (a.addr, a.size));
+        let mut i = pos.saturating_sub(1);
+        while i + 1 < g.free.len() {
+            if g.free[i].0 + g.free[i].1 == g.free[i + 1].0 {
+                g.free[i].1 += g.free[i + 1].1;
+                g.free.remove(i + 1);
+            } else {
+                i += 1;
+            }
+        }
+        Ok(())
+    }
+
+    /// Look up the allocation containing `ptr` → (base, size, device).
+    pub fn lookup(&self, ptr: GpuPtr) -> Result<(u64, u64, usize)> {
+        let g = self.inner.lock().unwrap();
+        // exact base or interior pointer
+        for a in g.allocs.values() {
+            if ptr.0 >= a.addr && ptr.0 < a.addr + a.size {
+                return Ok((a.addr, a.size, a.device));
+            }
+        }
+        Err(HetError::runtime(format!("pointer {ptr} does not name an allocation")))
+    }
+
+    /// All live allocations resident on `device` (for migration copies).
+    pub fn allocations_on(&self, device: usize) -> Vec<(u64, u64)> {
+        let g = self.inner.lock().unwrap();
+        let mut v: Vec<(u64, u64)> = g
+            .allocs
+            .values()
+            .filter(|a| a.device == device)
+            .map(|a| (a.addr, a.size))
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Mark every allocation on `from` as now resident on `to` (after the
+    /// migration copy completed).
+    pub fn move_residency(&self, from: usize, to: usize) {
+        let mut g = self.inner.lock().unwrap();
+        for a in g.allocs.values_mut() {
+            if a.device == from {
+                a.device = to;
+            }
+        }
+    }
+
+    pub fn bytes_in_use(&self) -> u64 {
+        self.inner.lock().unwrap().bytes_in_use
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.inner.lock().unwrap().capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_reuse() {
+        let m = MemoryManager::new(1 << 20);
+        let a = m.alloc(1000, 0).unwrap();
+        let b = m.alloc(1000, 0).unwrap();
+        assert_ne!(a, b);
+        m.free(a).unwrap();
+        let c = m.alloc(1000, 0).unwrap();
+        assert_eq!(a, c, "freed block should be reused first-fit");
+        m.free(b).unwrap();
+        m.free(c).unwrap();
+        assert_eq!(m.bytes_in_use(), 0);
+    }
+
+    #[test]
+    fn interior_pointer_lookup() {
+        let m = MemoryManager::new(1 << 20);
+        let a = m.alloc(4096, 2).unwrap();
+        let (base, size, dev) = m.lookup(a.offset(100)).unwrap();
+        assert_eq!(base, a.0);
+        assert_eq!(size, 4096);
+        assert_eq!(dev, 2);
+        assert!(m.lookup(GpuPtr(0)).is_err());
+    }
+
+    #[test]
+    fn oom_reported() {
+        let m = MemoryManager::new(1 << 16);
+        assert!(m.alloc(1 << 20, 0).is_err());
+    }
+
+    #[test]
+    fn residency_moves() {
+        let m = MemoryManager::new(1 << 20);
+        let _a = m.alloc(100, 0).unwrap();
+        let _b = m.alloc(100, 1).unwrap();
+        assert_eq!(m.allocations_on(0).len(), 1);
+        m.move_residency(0, 1);
+        assert_eq!(m.allocations_on(0).len(), 0);
+        assert_eq!(m.allocations_on(1).len(), 2);
+    }
+
+    #[test]
+    fn coalescing_allows_large_realloc() {
+        let m = MemoryManager::new(1 << 20);
+        let ptrs: Vec<GpuPtr> = (0..16).map(|_| m.alloc(4096, 0).unwrap()).collect();
+        for p in ptrs {
+            m.free(p).unwrap();
+        }
+        // After coalescing, one big allocation must fit again.
+        assert!(m.alloc((1 << 20) - 8192, 0).is_ok());
+    }
+}

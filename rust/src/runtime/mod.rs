@@ -1,0 +1,109 @@
+//! The hetGPU runtime (paper §4.2): device registry, unified memory,
+//! JIT translation cache, streams, kernel launch, and the execution entry
+//! point shared by fresh launches and migration resumes.
+
+pub mod api;
+pub mod device;
+pub mod jit;
+pub mod launch;
+pub mod memory;
+pub mod stream;
+
+use crate::error::{HetError, Result};
+use crate::hetir::module::Module;
+use crate::isa::tensix_isa::TensixMode;
+use crate::runtime::device::{Device, DeviceKind, Engine};
+use crate::runtime::jit::{JitCache, JitKey};
+use crate::runtime::launch::{args_to_values, choose_tensix_mode, LaunchSpec};
+use crate::runtime::memory::MemoryManager;
+use crate::sim::snapshot::{BlockResume, LaunchOutcome};
+use std::sync::RwLock;
+
+/// Shared state behind a [`api::HetGpu`] context.
+pub struct RuntimeInner {
+    pub devices: Vec<Device>,
+    pub modules: RwLock<Vec<Module>>,
+    pub jit: JitCache,
+    pub memory: MemoryManager,
+}
+
+impl RuntimeInner {
+    pub fn device(&self, id: usize) -> Result<&Device> {
+        self.devices.get(id).ok_or_else(|| HetError::runtime(format!("no device {id}")))
+    }
+
+    /// Execute `spec` on `device_id`, optionally resuming from per-block
+    /// directives. This is the single execution path used by streams and
+    /// by the migration orchestrator — fresh launch and cross-device
+    /// resume differ only in `resume`.
+    pub fn run_launch(
+        &self,
+        device_id: usize,
+        spec: &LaunchSpec,
+        resume: Option<&[BlockResume]>,
+    ) -> Result<LaunchOutcome> {
+        let dev = self.device(device_id)?;
+        let modules = self.modules.read().unwrap();
+        let module = modules
+            .get(spec.module)
+            .ok_or_else(|| HetError::runtime(format!("no module {}", spec.module)))?;
+        let kernel = module
+            .kernel(&spec.kernel)
+            .ok_or_else(|| HetError::runtime(format!("no kernel `{}`", spec.kernel)))?;
+        let values = args_to_values(kernel, &spec.args)?;
+
+        let tensix_mode = if dev.kind == DeviceKind::TenstorrentSim {
+            Some(spec.tensix_mode_hint.unwrap_or_else(|| choose_tensix_mode(kernel, spec.dims)))
+        } else {
+            None
+        };
+        let key = JitKey {
+            module: spec.module,
+            kernel: spec.kernel.clone(),
+            kind: dev.kind,
+            tensix_mode,
+            migratable: true,
+        };
+        let simt_cfg = match &dev.engine {
+            Engine::Simt(s) => Some(s.cfg.clone()),
+            Engine::Tensix(_) => None,
+        };
+        let prog = self.jit.get_or_translate(key, kernel, simt_cfg.as_ref())?;
+        drop(modules);
+
+        match (&dev.engine, prog.as_ref()) {
+            (Engine::Simt(sim), crate::backends::DeviceProgram::Simt(p)) => {
+                let mut mem = dev.mem.lock().unwrap();
+                sim.run_grid(p, spec.dims, &values, &mut mem, &dev.pause, resume)
+            }
+            (Engine::Tensix(sim), crate::backends::DeviceProgram::Tensix(p)) => {
+                // Multi-core shared memory needs a global heap region.
+                let heap = if p.mode == TensixMode::VectorMultiCore && p.shared_bytes > 0 {
+                    let bytes = p.shared_bytes * spec.dims.grid_size() as u64;
+                    Some(self.memory.alloc(bytes, device_id)?)
+                } else {
+                    None
+                };
+                let out = {
+                    let mut mem = dev.mem.lock().unwrap();
+                    sim.run_grid(
+                        p,
+                        spec.dims,
+                        &values,
+                        &mut mem,
+                        &dev.pause,
+                        resume,
+                        heap.map(|h| h.0),
+                    )
+                };
+                if let Some(h) = heap {
+                    // Shared contents are captured in block snapshots, so
+                    // the heap region can be released either way.
+                    let _ = self.memory.free(h);
+                }
+                out
+            }
+            _ => Err(HetError::runtime("engine/program kind mismatch (JIT cache corrupt)")),
+        }
+    }
+}

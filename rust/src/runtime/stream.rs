@@ -1,0 +1,240 @@
+//! Streams: ordered asynchronous command queues, one worker thread each
+//! (paper §4.3 *Kernel and Stream Management*).
+//!
+//! A stream executes launches in order on its bound device. When a launch
+//! is paused by the cooperative checkpoint protocol, the stream **halts**:
+//! subsequent launches are deferred "until migration completes" (paper
+//! §4.3), and the harvested state waits for the orchestrator. A `Resume`
+//! command (possibly naming a different device) re-enters the kernel from
+//! its snapshot and then drains the deferred queue.
+
+use crate::error::{HetError, Result};
+use crate::runtime::launch::LaunchSpec;
+use crate::runtime::RuntimeInner;
+use crate::sim::snapshot::{BlockResume, BlockState, CostReport, LaunchOutcome};
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// A kernel frozen mid-execution by a checkpoint.
+#[derive(Debug, Clone)]
+pub struct PausedKernel {
+    pub spec: LaunchSpec,
+    /// Per-block states (captured registers / not-started / done).
+    pub blocks: Vec<BlockState>,
+}
+
+impl PausedKernel {
+    /// Build the per-block resume directives for a new launch.
+    pub fn resume_directives(&self) -> Vec<BlockResume> {
+        self.blocks
+            .iter()
+            .map(|b| match b {
+                BlockState::NotStarted => BlockResume::FromEntry,
+                BlockState::Done => BlockResume::Skip,
+                BlockState::Suspended(cap) => BlockResume::FromBarrier(cap.clone()),
+            })
+            .collect()
+    }
+}
+
+/// Accumulated per-stream statistics.
+#[derive(Debug, Clone, Default)]
+pub struct StreamStats {
+    pub launches: u64,
+    pub completed: u64,
+    pub cost: CostReport,
+    pub wall_micros: f64,
+}
+
+pub enum Cmd {
+    Launch(LaunchSpec),
+    /// Fence: acknowledged once all prior commands were processed;
+    /// returns (sticky error, halted?).
+    Barrier(Sender<(Option<String>, bool)>),
+    /// Hand the paused kernel to the orchestrator (leaves the stream
+    /// halted until `Resume`).
+    TakePaused(Sender<Option<PausedKernel>>),
+    /// Re-enter a paused kernel (possibly on a new device), or just
+    /// un-halt if `paused` is `None`.
+    Resume { device: usize, paused: Option<Box<PausedKernel>>, ack: Sender<Result<()>> },
+    Shutdown,
+}
+
+/// Host-side handle to a stream.
+pub struct Stream {
+    pub id: usize,
+    tx: Sender<Cmd>,
+    pub stats: Arc<Mutex<StreamStats>>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Stream {
+    pub fn spawn(id: usize, device: usize, inner: Arc<RuntimeInner>) -> Stream {
+        let (tx, rx) = channel();
+        let stats = Arc::new(Mutex::new(StreamStats::default()));
+        let stats2 = stats.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("hetgpu-stream-{id}"))
+            .spawn(move || worker(device, inner, rx, stats2))
+            .expect("spawn stream worker");
+        Stream { id, tx, stats, handle: Some(handle) }
+    }
+
+    pub fn send(&self, cmd: Cmd) -> Result<()> {
+        self.tx.send(cmd).map_err(|_| HetError::runtime("stream worker died"))
+    }
+
+    /// Wait for all queued work; surfaces the sticky error if any.
+    pub fn synchronize(&self) -> Result<()> {
+        let (ack, rx) = channel();
+        self.send(Cmd::Barrier(ack))?;
+        let (err, _halted) =
+            rx.recv().map_err(|_| HetError::runtime("stream worker died"))?;
+        match err {
+            Some(e) => Err(HetError::runtime(format!("stream {}: {e}", self.id))),
+            None => Ok(()),
+        }
+    }
+
+    /// Wait for the queue and report whether the stream is halted at a
+    /// checkpoint (used by the migration orchestrator).
+    pub fn quiesce(&self) -> Result<bool> {
+        let (ack, rx) = channel();
+        self.send(Cmd::Barrier(ack))?;
+        let (err, halted) =
+            rx.recv().map_err(|_| HetError::runtime("stream worker died"))?;
+        if let Some(e) = err {
+            return Err(HetError::runtime(format!("stream {}: {e}", self.id)));
+        }
+        Ok(halted)
+    }
+
+    /// Take the paused kernel (leaves the stream halted).
+    pub fn take_paused(&self) -> Result<Option<PausedKernel>> {
+        let (ack, rx) = channel();
+        self.send(Cmd::TakePaused(ack))?;
+        rx.recv().map_err(|_| HetError::runtime("stream worker died"))
+    }
+
+    /// Resume on `device` with optional restored kernel state.
+    pub fn resume(&self, device: usize, paused: Option<PausedKernel>) -> Result<()> {
+        let (ack, rx) = channel();
+        self.send(Cmd::Resume { device, paused: paused.map(Box::new), ack })?;
+        rx.recv().map_err(|_| HetError::runtime("stream worker died"))?
+    }
+}
+
+impl Drop for Stream {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Cmd::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker(
+    mut device: usize,
+    inner: Arc<RuntimeInner>,
+    rx: Receiver<Cmd>,
+    stats: Arc<Mutex<StreamStats>>,
+) {
+    let mut deferred: VecDeque<LaunchSpec> = VecDeque::new();
+    let mut paused: Option<PausedKernel> = None;
+    let mut halted = false;
+    let mut sticky_error: Option<String> = None;
+
+    let exec = |device: usize,
+                spec: &LaunchSpec,
+                resume: Option<&[BlockResume]>,
+                stats: &Mutex<StreamStats>|
+     -> Result<Option<PausedKernel>> {
+        let t0 = Instant::now();
+        let outcome = inner.run_launch(device, spec, resume)?;
+        let wall = t0.elapsed().as_secs_f64() * 1e6;
+        let mut s = stats.lock().unwrap();
+        s.launches += 1;
+        s.wall_micros += wall;
+        s.cost.merge(outcome.cost());
+        match outcome {
+            LaunchOutcome::Completed(_) => {
+                s.completed += 1;
+                Ok(None)
+            }
+            LaunchOutcome::Paused { grid, .. } => {
+                Ok(Some(PausedKernel { spec: spec.clone(), blocks: grid.blocks }))
+            }
+        }
+    };
+
+    loop {
+        // Drain deferred work first when running normally.
+        if !halted && sticky_error.is_none() {
+            if let Some(spec) = deferred.pop_front() {
+                match exec(device, &spec, None, &stats) {
+                    Ok(Some(p)) => {
+                        paused = Some(p);
+                        halted = true;
+                    }
+                    Ok(None) => {}
+                    Err(e) => sticky_error = Some(e.to_string()),
+                }
+                continue;
+            }
+        }
+        let cmd = match rx.recv() {
+            Ok(c) => c,
+            Err(_) => return,
+        };
+        match cmd {
+            Cmd::Launch(spec) => {
+                if halted || sticky_error.is_some() {
+                    deferred.push_back(spec);
+                } else {
+                    match exec(device, &spec, None, &stats) {
+                        Ok(Some(p)) => {
+                            paused = Some(p);
+                            halted = true;
+                        }
+                        Ok(None) => {}
+                        Err(e) => sticky_error = Some(e.to_string()),
+                    }
+                }
+            }
+            Cmd::Barrier(ack) => {
+                let _ = ack.send((sticky_error.clone(), halted));
+            }
+            Cmd::TakePaused(ack) => {
+                let _ = ack.send(paused.take());
+            }
+            Cmd::Resume { device: dev, paused: pk, ack } => {
+                device = dev;
+                // Acknowledge before executing: migration is considered
+                // complete once the kernel is re-entered; the caller can
+                // trigger another checkpoint while it runs (the chained
+                // H100→AMD→Tenstorrent scenario of §6.3). Errors surface
+                // as sticky stream errors at the next synchronize.
+                let _ = ack.send(Ok(()));
+                match pk {
+                    Some(pk) => {
+                        let dirs = pk.resume_directives();
+                        match exec(device, &pk.spec, Some(&dirs), &stats) {
+                            Ok(Some(p2)) => {
+                                // Paused again mid-resume (double migration).
+                                paused = Some(p2);
+                                halted = true;
+                            }
+                            Ok(None) => halted = false,
+                            Err(e) => sticky_error = Some(e.to_string()),
+                        }
+                    }
+                    None => halted = false,
+                }
+            }
+            Cmd::Shutdown => return,
+        }
+    }
+}

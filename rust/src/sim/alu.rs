@@ -1,0 +1,388 @@
+//! Scalar ALU semantics shared by every execution engine.
+//!
+//! The constant folder, the SIMT simulator, and the Tensix simulator all
+//! evaluate hetIR arithmetic through these functions, so "the same binary
+//! produces the same numbers on every device" holds by construction — the
+//! cross-backend differential tests then check the *translations* didn't
+//! break dataflow, not arithmetic.
+
+use crate::error::{HetError, Result};
+use crate::hetir::instr::{BinOp, CmpOp, UnOp};
+use crate::hetir::types::{Scalar, Value};
+
+/// Evaluate a binary operation in type `ty`.
+pub fn bin(op: BinOp, ty: Scalar, a: Value, b: Value) -> Result<Value> {
+    use BinOp::*;
+    Ok(match ty {
+        Scalar::F32 => {
+            let (x, y) = (a.as_f32(), b.as_f32());
+            Value::f32(match op {
+                Add => x + y,
+                Sub => x - y,
+                Mul => x * y,
+                Div => x / y,
+                Rem => x % y,
+                Min => x.min(y),
+                Max => x.max(y),
+                And | Or | Xor | Shl | Shr => {
+                    return Err(HetError::runtime(format!("bitwise op {op:?} on f32")))
+                }
+            })
+        }
+        Scalar::I32 => {
+            let (x, y) = (a.as_i32(), b.as_i32());
+            Value::i32(match op {
+                Add => x.wrapping_add(y),
+                Sub => x.wrapping_sub(y),
+                Mul => x.wrapping_mul(y),
+                Div => {
+                    if y == 0 {
+                        return Err(HetError::runtime("integer division by zero"));
+                    }
+                    x.wrapping_div(y)
+                }
+                Rem => {
+                    if y == 0 {
+                        return Err(HetError::runtime("integer remainder by zero"));
+                    }
+                    x.wrapping_rem(y)
+                }
+                Min => x.min(y),
+                Max => x.max(y),
+                And => x & y,
+                Or => x | y,
+                Xor => x ^ y,
+                Shl => x.wrapping_shl(y as u32 & 31),
+                Shr => x.wrapping_shr(y as u32 & 31), // arithmetic
+            })
+        }
+        Scalar::U32 => {
+            let (x, y) = (a.as_u32(), b.as_u32());
+            Value::u32(match op {
+                Add => x.wrapping_add(y),
+                Sub => x.wrapping_sub(y),
+                Mul => x.wrapping_mul(y),
+                Div => {
+                    if y == 0 {
+                        return Err(HetError::runtime("integer division by zero"));
+                    }
+                    x / y
+                }
+                Rem => {
+                    if y == 0 {
+                        return Err(HetError::runtime("integer remainder by zero"));
+                    }
+                    x % y
+                }
+                Min => x.min(y),
+                Max => x.max(y),
+                And => x & y,
+                Or => x | y,
+                Xor => x ^ y,
+                Shl => x.wrapping_shl(y & 31),
+                Shr => x.wrapping_shr(y & 31), // logical
+            })
+        }
+        Scalar::I64 => {
+            let (x, y) = (a.as_i64(), b.as_i64());
+            Value::i64(match op {
+                Add => x.wrapping_add(y),
+                Sub => x.wrapping_sub(y),
+                Mul => x.wrapping_mul(y),
+                Div => {
+                    if y == 0 {
+                        return Err(HetError::runtime("integer division by zero"));
+                    }
+                    x.wrapping_div(y)
+                }
+                Rem => {
+                    if y == 0 {
+                        return Err(HetError::runtime("integer remainder by zero"));
+                    }
+                    x.wrapping_rem(y)
+                }
+                Min => x.min(y),
+                Max => x.max(y),
+                And => x & y,
+                Or => x | y,
+                Xor => x ^ y,
+                Shl => x.wrapping_shl(y as u32 & 63),
+                Shr => x.wrapping_shr(y as u32 & 63),
+            })
+        }
+        Scalar::U64 => {
+            let (x, y) = (a.as_u64(), b.as_u64());
+            Value::u64(match op {
+                Add => x.wrapping_add(y),
+                Sub => x.wrapping_sub(y),
+                Mul => x.wrapping_mul(y),
+                Div => {
+                    if y == 0 {
+                        return Err(HetError::runtime("integer division by zero"));
+                    }
+                    x / y
+                }
+                Rem => {
+                    if y == 0 {
+                        return Err(HetError::runtime("integer remainder by zero"));
+                    }
+                    x % y
+                }
+                Min => x.min(y),
+                Max => x.max(y),
+                And => x & y,
+                Or => x | y,
+                Xor => x ^ y,
+                Shl => x.wrapping_shl(y as u32 & 63),
+                Shr => x.wrapping_shr(y as u32 & 63),
+            })
+        }
+        Scalar::Pred => {
+            let (x, y) = (a.as_pred(), b.as_pred());
+            Value::pred(match op {
+                And => x & y,
+                Or => x | y,
+                Xor => x ^ y,
+                _ => return Err(HetError::runtime(format!("op {op:?} on predicate"))),
+            })
+        }
+    })
+}
+
+/// Evaluate a unary operation in type `ty`.
+pub fn un(op: UnOp, ty: Scalar, a: Value) -> Result<Value> {
+    use UnOp::*;
+    Ok(match (op, ty) {
+        (Neg, Scalar::F32) => Value::f32(-a.as_f32()),
+        (Neg, Scalar::I32) => Value::i32(a.as_i32().wrapping_neg()),
+        (Neg, Scalar::I64) => Value::i64(a.as_i64().wrapping_neg()),
+        (Abs, Scalar::F32) => Value::f32(a.as_f32().abs()),
+        (Abs, Scalar::I32) => Value::i32(a.as_i32().wrapping_abs()),
+        (Not, Scalar::Pred) => Value::pred(!a.as_pred()),
+        (Not, Scalar::I32) => Value::i32(!a.as_i32()),
+        (Not, Scalar::U32) => Value::u32(!a.as_u32()),
+        (Not, Scalar::I64) => Value::i64(!a.as_i64()),
+        (Not, Scalar::U64) => Value::u64(!a.as_u64()),
+        (Sqrt, Scalar::F32) => Value::f32(a.as_f32().sqrt()),
+        (Rsqrt, Scalar::F32) => Value::f32(1.0 / a.as_f32().sqrt()),
+        (Exp, Scalar::F32) => Value::f32(a.as_f32().exp()),
+        (Log, Scalar::F32) => Value::f32(a.as_f32().ln()),
+        (Sin, Scalar::F32) => Value::f32(a.as_f32().sin()),
+        (Cos, Scalar::F32) => Value::f32(a.as_f32().cos()),
+        (Popc, Scalar::U32) => Value::u32(a.as_u32().count_ones()),
+        (Popc, Scalar::U64) => Value::u32(a.as_u64().count_ones()),
+        (op, ty) => return Err(HetError::runtime(format!("unary {op:?} on {ty}"))),
+    })
+}
+
+/// Evaluate a comparison in type `ty`.
+pub fn cmp(op: CmpOp, ty: Scalar, a: Value, b: Value) -> bool {
+    use std::cmp::Ordering;
+    use CmpOp::*;
+    // Float comparisons follow IEEE semantics (NaN compares false except Ne).
+    if ty == Scalar::F32 {
+        let (x, y) = (a.as_f32(), b.as_f32());
+        return match op {
+            Eq => x == y,
+            Ne => x != y,
+            Lt => x < y,
+            Le => x <= y,
+            Gt => x > y,
+            Ge => x >= y,
+        };
+    }
+    let ord = match ty {
+        Scalar::I32 => a.as_i32().cmp(&b.as_i32()),
+        Scalar::U32 => a.as_u32().cmp(&b.as_u32()),
+        Scalar::I64 => a.as_i64().cmp(&b.as_i64()),
+        Scalar::U64 | Scalar::Pred => a.as_u64().cmp(&b.as_u64()),
+        Scalar::F32 => unreachable!(),
+    };
+    match op {
+        Eq => ord == Ordering::Equal,
+        Ne => ord != Ordering::Equal,
+        Lt => ord == Ordering::Less,
+        Le => ord != Ordering::Greater,
+        Gt => ord == Ordering::Greater,
+        Ge => ord != Ordering::Less,
+    }
+}
+
+/// Type conversion matching PTX `cvt` semantics (float→int truncates toward
+/// zero and saturates; int→float rounds to nearest).
+pub fn cvt(from: Scalar, to: Scalar, v: Value) -> Value {
+    // Normalize the source to a wide representation first.
+    #[derive(Clone, Copy)]
+    enum Wide {
+        I(i64),
+        U(u64),
+        F(f64),
+    }
+    let w = match from {
+        Scalar::Pred => Wide::U(v.as_pred() as u64),
+        Scalar::I32 => Wide::I(v.as_i32() as i64),
+        Scalar::U32 => Wide::U(v.as_u32() as u64),
+        Scalar::I64 => Wide::I(v.as_i64()),
+        Scalar::U64 => Wide::U(v.as_u64()),
+        Scalar::F32 => Wide::F(v.as_f32() as f64),
+    };
+    match to {
+        Scalar::Pred => Value::pred(match w {
+            Wide::I(x) => x != 0,
+            Wide::U(x) => x != 0,
+            Wide::F(x) => x != 0.0,
+        }),
+        Scalar::I32 => Value::i32(match w {
+            Wide::I(x) => x as i32,
+            Wide::U(x) => x as i32,
+            Wide::F(x) => {
+                // saturating truncation, NaN -> 0 (PTX cvt.rzi semantics)
+                if x.is_nan() {
+                    0
+                } else {
+                    x.trunc().clamp(i32::MIN as f64, i32::MAX as f64) as i32
+                }
+            }
+        }),
+        Scalar::U32 => Value::u32(match w {
+            Wide::I(x) => x as u32,
+            Wide::U(x) => x as u32,
+            Wide::F(x) => {
+                if x.is_nan() {
+                    0
+                } else {
+                    x.trunc().clamp(0.0, u32::MAX as f64) as u32
+                }
+            }
+        }),
+        Scalar::I64 => Value::i64(match w {
+            Wide::I(x) => x,
+            Wide::U(x) => x as i64,
+            Wide::F(x) => {
+                if x.is_nan() {
+                    0
+                } else {
+                    x.trunc().clamp(i64::MIN as f64, i64::MAX as f64) as i64
+                }
+            }
+        }),
+        Scalar::U64 => Value::u64(match w {
+            Wide::I(x) => x as u64,
+            Wide::U(x) => x,
+            Wide::F(x) => {
+                if x.is_nan() {
+                    0
+                } else {
+                    x.trunc().clamp(0.0, u64::MAX as f64) as u64
+                }
+            }
+        }),
+        Scalar::F32 => Value::f32(match w {
+            Wide::I(x) => x as f32,
+            Wide::U(x) => x as f32,
+            Wide::F(x) => x as f32,
+        }),
+    }
+}
+
+/// The virtualized xorshift32 PRNG step (hetIR `Rng`): returns the new
+/// state, which is also the random value. Identical on every backend so the
+/// Monte-Carlo workload is bit-reproducible across migration (paper §5.3's
+/// "final sum matched a non-migrated run" depends on this).
+pub fn xorshift32(state: u32) -> u32 {
+    let mut x = state;
+    // The 13/17/5 triple from Marsaglia's "Xorshift RNGs".
+    x ^= x << 13;
+    x ^= x >> 17;
+    x ^= x << 5;
+    // avoid the absorbing zero state
+    if x == 0 {
+        0x9E3779B9
+    } else {
+        x
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wrapping_int_add() {
+        let v = bin(BinOp::Add, Scalar::U32, Value::u32(u32::MAX), Value::u32(1)).unwrap();
+        assert_eq!(v.as_u32(), 0);
+    }
+
+    #[test]
+    fn signed_vs_unsigned_shr() {
+        let s = bin(BinOp::Shr, Scalar::I32, Value::i32(-8), Value::i32(1)).unwrap();
+        assert_eq!(s.as_i32(), -4);
+        let u = bin(BinOp::Shr, Scalar::U32, Value::u32(0x8000_0000), Value::u32(1)).unwrap();
+        assert_eq!(u.as_u32(), 0x4000_0000);
+    }
+
+    #[test]
+    fn div_by_zero_errors() {
+        assert!(bin(BinOp::Div, Scalar::I32, Value::i32(1), Value::i32(0)).is_err());
+        assert!(bin(BinOp::Rem, Scalar::U32, Value::u32(1), Value::u32(0)).is_err());
+        // float div by zero is inf, not an error
+        let v = bin(BinOp::Div, Scalar::F32, Value::f32(1.0), Value::f32(0.0)).unwrap();
+        assert!(v.as_f32().is_infinite());
+    }
+
+    #[test]
+    fn nan_comparisons() {
+        let nan = Value::f32(f32::NAN);
+        assert!(!cmp(CmpOp::Eq, Scalar::F32, nan, nan));
+        assert!(cmp(CmpOp::Ne, Scalar::F32, nan, nan));
+        assert!(!cmp(CmpOp::Lt, Scalar::F32, nan, Value::f32(1.0)));
+    }
+
+    #[test]
+    fn unsigned_comparison_differs_from_signed() {
+        let a = Value::u32(0xFFFF_FFFF);
+        let b = Value::u32(1);
+        assert!(cmp(CmpOp::Gt, Scalar::U32, a, b));
+        assert!(!cmp(CmpOp::Gt, Scalar::I32, a, b)); // -1 < 1 signed
+    }
+
+    #[test]
+    fn cvt_f32_to_int_saturates() {
+        assert_eq!(cvt(Scalar::F32, Scalar::I32, Value::f32(3.9)).as_i32(), 3);
+        assert_eq!(cvt(Scalar::F32, Scalar::I32, Value::f32(-3.9)).as_i32(), -3);
+        assert_eq!(cvt(Scalar::F32, Scalar::U32, Value::f32(-1.0)).as_u32(), 0);
+        assert_eq!(cvt(Scalar::F32, Scalar::I32, Value::f32(1e30)).as_i32(), i32::MAX);
+        assert_eq!(cvt(Scalar::F32, Scalar::I32, Value::f32(f32::NAN)).as_i32(), 0);
+    }
+
+    #[test]
+    fn cvt_sign_extension() {
+        assert_eq!(cvt(Scalar::I32, Scalar::I64, Value::i32(-5)).as_i64(), -5);
+        assert_eq!(cvt(Scalar::U32, Scalar::U64, Value::u32(0xFFFF_FFFF)).as_u64(), 0xFFFF_FFFF);
+    }
+
+    #[test]
+    fn xorshift_never_zero_and_deterministic() {
+        let mut s = 1u32;
+        for _ in 0..10_000 {
+            s = xorshift32(s);
+            assert_ne!(s, 0);
+        }
+        assert_eq!(xorshift32(1), xorshift32(1));
+    }
+
+    #[test]
+    fn popc() {
+        assert_eq!(un(UnOp::Popc, Scalar::U32, Value::u32(0xF0F0)).unwrap().as_u32(), 8);
+    }
+
+    #[test]
+    fn pred_logic() {
+        let t = Value::pred(true);
+        let f = Value::pred(false);
+        assert!(bin(BinOp::And, Scalar::Pred, t, t).unwrap().as_pred());
+        assert!(!bin(BinOp::And, Scalar::Pred, t, f).unwrap().as_pred());
+        assert!(bin(BinOp::Xor, Scalar::Pred, t, f).unwrap().as_pred());
+        assert!(bin(BinOp::Add, Scalar::Pred, t, f).is_err());
+    }
+}

@@ -1,0 +1,135 @@
+//! Flat, bounds-checked device memory.
+//!
+//! Each simulated device owns one [`DeviceMemory`] standing in for its
+//! DRAM. Addresses are plain `u64` byte offsets; the runtime's allocator
+//! hands out ranges. Out-of-bounds accesses fault exactly like an illegal
+//! global access on a real GPU (surfaced as `HetError::DeviceFault` through
+//! the simulators), which the failure-injection tests rely on.
+
+use crate::error::{HetError, Result};
+use crate::hetir::types::{Scalar, Value};
+
+/// Byte-addressable memory with explicit capacity.
+pub struct DeviceMemory {
+    bytes: Vec<u8>,
+    device_name: String,
+}
+
+impl DeviceMemory {
+    pub fn new(capacity: u64, device_name: impl Into<String>) -> DeviceMemory {
+        DeviceMemory { bytes: vec![0u8; capacity as usize], device_name: device_name.into() }
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.bytes.len() as u64
+    }
+
+    fn check(&self, addr: u64, len: u64) -> Result<usize> {
+        let end = addr.checked_add(len).ok_or_else(|| {
+            HetError::fault(&self.device_name, format!("address overflow at 0x{addr:x}"))
+        })?;
+        if end > self.bytes.len() as u64 {
+            return Err(HetError::fault(
+                &self.device_name,
+                format!(
+                    "illegal memory access: 0x{addr:x}+{len} exceeds capacity 0x{:x}",
+                    self.bytes.len()
+                ),
+            ));
+        }
+        Ok(addr as usize)
+    }
+
+    /// Load a scalar of type `ty` from `addr`.
+    pub fn load(&self, addr: u64, ty: Scalar) -> Result<Value> {
+        let sz = ty.size_bytes();
+        let i = self.check(addr, sz)?;
+        let mut buf = [0u8; 8];
+        buf[..sz as usize].copy_from_slice(&self.bytes[i..i + sz as usize]);
+        let bits = u64::from_le_bytes(buf);
+        Ok(match ty {
+            Scalar::Pred => Value::pred(bits & 1 != 0),
+            Scalar::I32 => Value::i32(bits as u32 as i32),
+            Scalar::U32 => Value::u32(bits as u32),
+            Scalar::I64 => Value::i64(bits as i64),
+            Scalar::U64 => Value::u64(bits),
+            Scalar::F32 => Value { bits: bits as u32 as u64, ty: crate::hetir::types::Type::F32 },
+        })
+    }
+
+    /// Store a scalar of type `ty` to `addr`.
+    pub fn store(&mut self, addr: u64, ty: Scalar, v: Value) -> Result<()> {
+        let sz = ty.size_bytes() as usize;
+        let i = self.check(addr, sz as u64)?;
+        let buf = v.bits.to_le_bytes();
+        self.bytes[i..i + sz].copy_from_slice(&buf[..sz]);
+        Ok(())
+    }
+
+    /// Bulk read (host<->device copies, DMA).
+    pub fn read_bytes(&self, addr: u64, out: &mut [u8]) -> Result<()> {
+        let i = self.check(addr, out.len() as u64)?;
+        out.copy_from_slice(&self.bytes[i..i + out.len()]);
+        Ok(())
+    }
+
+    /// Bulk write (host<->device copies, DMA).
+    pub fn write_bytes(&mut self, addr: u64, data: &[u8]) -> Result<()> {
+        let i = self.check(addr, data.len() as u64)?;
+        self.bytes[i..i + data.len()].copy_from_slice(data);
+        Ok(())
+    }
+
+    /// Zero a range (fresh allocations).
+    pub fn zero(&mut self, addr: u64, len: u64) -> Result<()> {
+        let i = self.check(addr, len)?;
+        self.bytes[i..i + len as usize].fill(0);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_scalar_types() {
+        let mut m = DeviceMemory::new(64, "test");
+        m.store(0, Scalar::F32, Value::f32(3.5)).unwrap();
+        m.store(8, Scalar::I32, Value::i32(-9)).unwrap();
+        m.store(16, Scalar::U64, Value::u64(u64::MAX)).unwrap();
+        m.store(24, Scalar::Pred, Value::pred(true)).unwrap();
+        assert_eq!(m.load(0, Scalar::F32).unwrap().as_f32(), 3.5);
+        assert_eq!(m.load(8, Scalar::I32).unwrap().as_i32(), -9);
+        assert_eq!(m.load(16, Scalar::U64).unwrap().as_u64(), u64::MAX);
+        assert!(m.load(24, Scalar::Pred).unwrap().as_pred());
+    }
+
+    #[test]
+    fn oob_faults() {
+        let mut m = DeviceMemory::new(8, "test");
+        assert!(m.load(8, Scalar::U32).is_err());
+        assert!(m.load(5, Scalar::U32).is_err());
+        assert!(m.store(u64::MAX, Scalar::U32, Value::u32(0)).is_err());
+        assert!(m.load(4, Scalar::U32).is_ok());
+    }
+
+    #[test]
+    fn fault_mentions_device() {
+        let m = DeviceMemory::new(8, "nvidia-sim0");
+        let e = m.load(100, Scalar::U32).unwrap_err();
+        assert!(e.to_string().contains("nvidia-sim0"));
+    }
+
+    #[test]
+    fn bulk_rw() {
+        let mut m = DeviceMemory::new(16, "t");
+        m.write_bytes(4, &[1, 2, 3, 4]).unwrap();
+        let mut out = [0u8; 4];
+        m.read_bytes(4, &mut out).unwrap();
+        assert_eq!(out, [1, 2, 3, 4]);
+        m.zero(4, 4).unwrap();
+        m.read_bytes(4, &mut out).unwrap();
+        assert_eq!(out, [0, 0, 0, 0]);
+    }
+}

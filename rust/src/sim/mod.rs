@@ -1,0 +1,16 @@
+//! Device simulators — the hardware substrate of this reproduction.
+//!
+//! The paper's testbed (H100, RX 9070 XT, Iris Xe, Tenstorrent BlackHole)
+//! is unavailable, so per DESIGN.md §2 we execute the backend-emitted
+//! device ISAs on faithful functional simulators with an instruction-level
+//! cost model: [`simt`] models warp-based GPUs (NVIDIA/AMD/Intel configs),
+//! [`tensix`] models the many-core MIMD + vector-unit design.
+//! [`alu`] holds the scalar semantics shared by both (and by the constant
+//! folder); [`mem`] is the bounds-checked flat device memory.
+
+pub mod alu;
+pub mod mem;
+pub mod simt;
+pub mod snapshot;
+pub mod tensix;
+

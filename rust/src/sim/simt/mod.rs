@@ -1,0 +1,635 @@
+//! SIMT device simulator: block/grid scheduling over the warp interpreter.
+//!
+//! One [`SimtSim`] instance is one simulated GPU chip (the `SimtConfig`
+//! decides which vendor it stands in for). Blocks execute sequentially in
+//! linear-id order — deterministic, which the bit-reproducible migration
+//! guarantees rely on — while the cost model distributes block costs over
+//! the configured number of SMs to produce device-level cycle estimates.
+//!
+//! Warp scheduling within a block: each warp runs until it suspends (block
+//! barrier, team sync, checkpoint dump, or completion); the scheduler
+//! releases barriers when every warp has arrived, faulting on mismatched
+//! barrier ids (a real GPU would hang — we'd rather fail loudly, and the
+//! failure-injection tests assert this).
+
+pub mod warp;
+
+use crate::error::{HetError, Result};
+use crate::hetir::types::Value;
+use crate::isa::simt_isa::{SimtConfig, SimtProgram};
+use crate::sim::mem::DeviceMemory;
+use crate::sim::snapshot::*;
+use std::sync::atomic::{AtomicBool, Ordering};
+use warp::{Env, WarpState, WarpStop};
+
+/// Grid launch geometry (CUDA `<<<grid, block>>>`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LaunchDims {
+    pub grid: [u32; 3],
+    pub block: [u32; 3],
+}
+
+impl LaunchDims {
+    /// 1-D convenience constructor.
+    pub fn d1(grid: u32, block: u32) -> LaunchDims {
+        LaunchDims { grid: [grid, 1, 1], block: [block, 1, 1] }
+    }
+    pub fn grid_size(&self) -> u32 {
+        self.grid[0] * self.grid[1] * self.grid[2]
+    }
+    pub fn block_size(&self) -> u32 {
+        self.block[0] * self.block[1] * self.block[2]
+    }
+    /// Decompose a linear block id into 3-D coordinates.
+    pub fn block_coords(&self, linear: u32) -> [u32; 3] {
+        [
+            linear % self.grid[0],
+            (linear / self.grid[0]) % self.grid[1],
+            linear / (self.grid[0] * self.grid[1]),
+        ]
+    }
+}
+
+/// Warp status tracked by the block scheduler.
+#[derive(Debug, Clone, PartialEq)]
+enum WStatus {
+    Ready,
+    AtBarrier(u32),
+    AtTeamSync,
+    Dumped(u32),
+    Done,
+}
+
+/// One simulated SIMT GPU.
+pub struct SimtSim {
+    pub cfg: SimtConfig,
+}
+
+impl SimtSim {
+    pub fn new(cfg: SimtConfig) -> SimtSim {
+        SimtSim { cfg }
+    }
+
+    /// Run a full grid (or resume one from per-block directives).
+    ///
+    /// * `params` — kernel arguments, pre-typed.
+    /// * `global` — the device's global memory.
+    /// * `pause` — the cooperative pause flag (paper §4.2). Checked at
+    ///   checkpoint sites inside blocks and at block-dispatch boundaries.
+    /// * `resume` — optional per-block resume directives (from a restored
+    ///   snapshot); `None` means a fresh launch.
+    pub fn run_grid(
+        &self,
+        p: &SimtProgram,
+        dims: LaunchDims,
+        params: &[Value],
+        global: &mut DeviceMemory,
+        pause: &AtomicBool,
+        resume: Option<&[BlockResume]>,
+    ) -> Result<LaunchOutcome> {
+        let grid_size = dims.grid_size();
+        if let Some(r) = resume {
+            if r.len() != grid_size as usize {
+                return Err(HetError::migrate(format!(
+                    "resume directives for {} blocks, grid has {grid_size}",
+                    r.len()
+                )));
+            }
+        }
+        let block_size = dims.block_size();
+        if block_size == 0 || grid_size == 0 {
+            return Err(HetError::runtime("empty launch"));
+        }
+        if block_size > 1024 {
+            return Err(HetError::runtime(format!("block size {block_size} exceeds 1024")));
+        }
+
+        let mut cost = CostReport::default();
+        let mut block_cycles: Vec<u64> = Vec::with_capacity(grid_size as usize);
+        let mut states: Vec<BlockState> = Vec::with_capacity(grid_size as usize);
+        let mut paused = false;
+
+        for b in 0..grid_size {
+            let directive = resume.map(|r| &r[b as usize]);
+            if matches!(directive, Some(BlockResume::Skip)) {
+                states.push(BlockState::Done);
+                block_cycles.push(0);
+                continue;
+            }
+            // Cooperative pause at block-dispatch granularity: blocks not
+            // yet started stay NotStarted in the snapshot.
+            if paused || (p.migratable && pause.load(Ordering::SeqCst)) {
+                paused = true;
+                states.push(BlockState::NotStarted);
+                block_cycles.push(0);
+                continue;
+            }
+            let (state, cycles) =
+                self.run_block(p, dims, b, params, global, pause, directive, &mut cost)?;
+            if matches!(state, BlockState::Suspended(_)) {
+                paused = true;
+            }
+            block_cycles.push(cycles);
+            states.push(state);
+        }
+
+        // Distribute block costs round-robin over SMs; the device critical
+        // path is the busiest SM.
+        let sms = self.cfg.num_sms.max(1) as usize;
+        let mut queues = vec![0u64; sms];
+        for (i, c) in block_cycles.iter().enumerate() {
+            queues[i % sms] += c;
+        }
+        cost.device_cycles = queues.into_iter().max().unwrap_or(0);
+
+        if paused {
+            Ok(LaunchOutcome::Paused { grid: PausedGrid { blocks: states }, cost })
+        } else {
+            Ok(LaunchOutcome::Completed(cost))
+        }
+    }
+
+    /// Execute one block to completion or checkpoint-dump.
+    #[allow(clippy::too_many_arguments)]
+    fn run_block(
+        &self,
+        p: &SimtProgram,
+        dims: LaunchDims,
+        block_linear: u32,
+        params: &[Value],
+        global: &mut DeviceMemory,
+        pause: &AtomicBool,
+        directive: Option<&BlockResume>,
+        cost: &mut CostReport,
+    ) -> Result<(BlockState, u64)> {
+        let block_size = dims.block_size();
+        let ww = self.cfg.warp_width;
+        let num_warps = block_size.div_ceil(ww);
+        let mut shared = DeviceMemory::new(p.shared_bytes.max(1), self.cfg.name);
+
+        // Build warps: fresh or restored.
+        let mut warps: Vec<WarpState> = Vec::with_capacity(num_warps as usize);
+        let mut statuses: Vec<WStatus> = vec![WStatus::Ready; num_warps as usize];
+        match directive {
+            None | Some(BlockResume::FromEntry) => {
+                for w in 0..num_warps {
+                    let lanes = ww.min(block_size - w * ww);
+                    warps.push(WarpState::new(p, w, lanes, params));
+                }
+            }
+            Some(BlockResume::FromBarrier(cap)) => {
+                shared.write_bytes(0, &cap.shared_mem)?;
+                for w in 0..num_warps {
+                    let lanes = ww.min(block_size - w * ww);
+                    warps.push(WarpState::resume(
+                        p,
+                        w,
+                        ww,
+                        lanes,
+                        params,
+                        cap.barrier_id,
+                        &cap.threads,
+                    )?);
+                }
+            }
+            Some(BlockResume::Skip) => unreachable!("handled by caller"),
+        }
+
+        let mut block_cost = 0u64;
+        let mut insts = 0u64;
+        let mut gbytes = 0u64;
+        loop {
+            let mut progressed = false;
+            for w in 0..num_warps as usize {
+                if statuses[w] != WStatus::Ready {
+                    continue;
+                }
+                progressed = true;
+                let mut env = Env {
+                    cfg: &self.cfg,
+                    global,
+                    shared: &mut shared,
+                    block_idx: dims.block_coords(block_linear),
+                    block_dim: dims.block,
+                    grid_dim: dims.grid,
+                    pause,
+                    cost: &mut block_cost,
+                    insts: &mut insts,
+                    gbytes: &mut gbytes,
+                };
+                statuses[w] = match warps[w].run(p, &mut env)? {
+                    WarpStop::Barrier(id) => WStatus::AtBarrier(id),
+                    WarpStop::TeamSync => WStatus::AtTeamSync,
+                    WarpStop::Dumped(id) => WStatus::Dumped(id),
+                    WarpStop::Done => WStatus::Done,
+                };
+            }
+
+            // All done?
+            if statuses.iter().all(|s| *s == WStatus::Done) {
+                cost.warp_instructions += insts;
+                cost.total_cycles += block_cost;
+                cost.global_bytes += gbytes;
+                return Ok((BlockState::Done, block_cost));
+            }
+
+            // All dumped at the same checkpoint?
+            if statuses.iter().all(|s| matches!(s, WStatus::Dumped(_))) {
+                let id = match &statuses[0] {
+                    WStatus::Dumped(id) => *id,
+                    _ => unreachable!(),
+                };
+                if statuses.iter().any(|s| *s != WStatus::Dumped(id)) {
+                    return Err(HetError::fault(
+                        self.cfg.name,
+                        "warps dumped at different checkpoints",
+                    ));
+                }
+                // Assemble per-thread captures in linear-thread order.
+                let mut threads = Vec::with_capacity(block_size as usize);
+                for w in warps.iter_mut() {
+                    threads.append(w.dump.as_mut().expect("dumped warp has capture"));
+                }
+                let mut shared_mem = vec![0u8; p.shared_bytes as usize];
+                if p.shared_bytes > 0 {
+                    shared.read_bytes(0, &mut shared_mem)?;
+                }
+                cost.warp_instructions += insts;
+                cost.total_cycles += block_cost;
+                cost.global_bytes += gbytes;
+                return Ok((
+                    BlockState::Suspended(BlockCapture {
+                        block_idx: block_linear,
+                        barrier_id: id,
+                        threads,
+                        shared_mem,
+                    }),
+                    block_cost,
+                ));
+            }
+
+            // Release a block barrier when every non-done warp arrived at
+            // the same id (warps that finished the kernel can't be waited
+            // on — that is the classic barrier-after-exit UB; fault).
+            let barrier_ids: Vec<u32> = statuses
+                .iter()
+                .filter_map(|s| match s {
+                    WStatus::AtBarrier(id) => Some(*id),
+                    _ => None,
+                })
+                .collect();
+            if !barrier_ids.is_empty() {
+                if barrier_ids.len() != num_warps as usize {
+                    let others_team = statuses.iter().any(|s| *s == WStatus::AtTeamSync);
+                    let others_done = statuses.iter().any(|s| *s == WStatus::Done);
+                    let others_dumped =
+                        statuses.iter().any(|s| matches!(s, WStatus::Dumped(_)));
+                    if others_done || others_team || others_dumped {
+                        return Err(HetError::fault(
+                            self.cfg.name,
+                            format!(
+                                "barrier {} reached by only {}/{} warps (deadlock on real hardware)",
+                                barrier_ids[0],
+                                barrier_ids.len(),
+                                num_warps
+                            ),
+                        ));
+                    }
+                } else {
+                    let id = barrier_ids[0];
+                    if barrier_ids.iter().any(|b| *b != id) {
+                        return Err(HetError::fault(
+                            self.cfg.name,
+                            "warps waiting at different barriers",
+                        ));
+                    }
+                    // Cooperative pause: the dump decision is taken here,
+                    // at barrier release, so the whole block agrees on the
+                    // suspension point.
+                    if p.migratable && pause.load(Ordering::SeqCst) {
+                        if let Some(site) =
+                            p.ckpt_sites.iter().find(|s| s.barrier_id == id)
+                        {
+                            for (w, st) in warps.iter_mut().zip(statuses.iter_mut()) {
+                                w.dump_at(&self.cfg, site, &mut block_cost)?;
+                                *st = WStatus::Dumped(id);
+                            }
+                            continue;
+                        }
+                    }
+                    for s in statuses.iter_mut() {
+                        *s = WStatus::Ready;
+                    }
+                    continue;
+                }
+            }
+
+            // Release team syncs: a team spans TEAM_WIDTH consecutive
+            // threads = TEAM_WIDTH/warp_width consecutive warps (>= 1).
+            let warps_per_team = (warp::TEAM_WIDTH / ww).max(1) as usize;
+            let mut released = false;
+            for team in statuses.chunks_mut(warps_per_team) {
+                if team.iter().all(|s| *s == WStatus::AtTeamSync || *s == WStatus::Done) {
+                    let mut any = false;
+                    for s in team.iter_mut() {
+                        if *s == WStatus::AtTeamSync {
+                            *s = WStatus::Ready;
+                            any = true;
+                        }
+                    }
+                    released |= any;
+                }
+            }
+            if released {
+                continue;
+            }
+
+            if !progressed {
+                return Err(HetError::fault(
+                    self.cfg.name,
+                    format!(
+                        "scheduler deadlock in {}: statuses {statuses:?}",
+                        p.kernel_name
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hetir::instr::{BinOp, CmpOp, Dim};
+    use crate::hetir::types::{AddrSpace, Scalar};
+    use crate::isa::simt_isa::*;
+
+    /// Hand-assemble: C[i] = A[i] + B[i] for i = global id; no guard.
+    /// Params: R0=A, R1=B, R2=C. Registers: R3=tid, R4=ctaid, R5=ntid,
+    /// R6=i(u64), R7/R8 loaded values, R9 sum.
+    fn vadd_program() -> SimtProgram {
+        use SInst as I;
+        let body = vec![
+            SStmt::I(I::Special { dst: DReg(3), kind: SSpecial::ThreadIdx(Dim::X) }),
+            SStmt::I(I::Special { dst: DReg(4), kind: SSpecial::BlockIdx(Dim::X) }),
+            SStmt::I(I::Special { dst: DReg(5), kind: SSpecial::BlockDim(Dim::X) }),
+            SStmt::I(I::Bin {
+                op: BinOp::Mul,
+                ty: Scalar::U32,
+                dst: DReg(4),
+                a: DReg(4).into(),
+                b: DReg(5).into(),
+            }),
+            SStmt::I(I::Bin {
+                op: BinOp::Add,
+                ty: Scalar::U32,
+                dst: DReg(3),
+                a: DReg(3).into(),
+                b: DReg(4).into(),
+            }),
+            // zero-extend to 64-bit index
+            SStmt::I(I::Cvt { from: Scalar::U32, to: Scalar::U64, dst: DReg(6), src: DReg(3).into() }),
+            SStmt::I(I::Ld {
+                space: AddrSpace::Global,
+                ty: Scalar::F32,
+                dst: DReg(7),
+                addr: SAddr { base: DReg(0), index: Some(DReg(6)), scale: 4, disp: 0 },
+            }),
+            SStmt::I(I::Ld {
+                space: AddrSpace::Global,
+                ty: Scalar::F32,
+                dst: DReg(8),
+                addr: SAddr { base: DReg(1), index: Some(DReg(6)), scale: 4, disp: 0 },
+            }),
+            SStmt::I(I::Bin {
+                op: BinOp::Add,
+                ty: Scalar::F32,
+                dst: DReg(9),
+                a: DReg(7).into(),
+                b: DReg(8).into(),
+            }),
+            SStmt::I(I::St {
+                space: AddrSpace::Global,
+                ty: Scalar::F32,
+                addr: SAddr { base: DReg(2), index: Some(DReg(6)), scale: 4, disp: 0 },
+                val: DReg(9).into(),
+            }),
+        ];
+        SimtProgram {
+            kernel_name: "vadd".into(),
+            blocks: vec![body],
+            entry: 0,
+            num_regs: 10,
+            shared_bytes: 0,
+            num_params: 3,
+            ckpt_sites: vec![],
+            migratable: false,
+        }
+    }
+
+    fn write_f32s(mem: &mut DeviceMemory, addr: u64, vals: &[f32]) {
+        for (i, v) in vals.iter().enumerate() {
+            mem.store(addr + 4 * i as u64, Scalar::F32, Value::f32(*v)).unwrap();
+        }
+    }
+
+    fn read_f32s(mem: &DeviceMemory, addr: u64, n: usize) -> Vec<f32> {
+        (0..n).map(|i| mem.load(addr + 4 * i as u64, Scalar::F32).unwrap().as_f32()).collect()
+    }
+
+    #[test]
+    fn vadd_runs_on_all_simt_configs() {
+        for cfg in [SimtConfig::nvidia(), SimtConfig::amd(), SimtConfig::amd_wave64(), SimtConfig::intel()]
+        {
+            let sim = SimtSim::new(cfg);
+            let p = vadd_program();
+            let n = 100usize; // not a multiple of any warp width
+            let mut mem = DeviceMemory::new(1 << 16, "test");
+            let a: Vec<f32> = (0..n).map(|i| i as f32).collect();
+            let b: Vec<f32> = (0..n).map(|i| 2.0 * i as f32).collect();
+            write_f32s(&mut mem, 0, &a);
+            write_f32s(&mut mem, 4096, &b);
+            let params = [
+                Value::ptr(0, AddrSpace::Global),
+                Value::ptr(4096, AddrSpace::Global),
+                Value::ptr(8192, AddrSpace::Global),
+            ];
+            let pause = AtomicBool::new(false);
+            // grid of 4 blocks x 25 threads covers 100 exactly
+            let out = sim
+                .run_grid(&p, LaunchDims::d1(4, 25), &params, &mut mem, &pause, None)
+                .unwrap();
+            assert!(out.is_completed(), "{}", sim.cfg.name);
+            let c = read_f32s(&mem, 8192, n);
+            for i in 0..n {
+                assert_eq!(c[i], 3.0 * i as f32, "lane {i} on {}", sim.cfg.name);
+            }
+            assert!(out.cost().warp_instructions > 0);
+            assert!(out.cost().device_cycles > 0);
+        }
+    }
+
+    /// Divergent If: odd lanes add 1, even lanes add 2; all lanes correct.
+    #[test]
+    fn divergent_if_both_sides() {
+        use SInst as I;
+        let blocks = vec![
+            vec![
+                SStmt::I(I::Special { dst: DReg(1), kind: SSpecial::ThreadIdx(Dim::X) }),
+                SStmt::I(I::Bin {
+                    op: BinOp::And,
+                    ty: Scalar::U32,
+                    dst: DReg(2),
+                    a: DReg(1).into(),
+                    b: SOp::Imm(Value::u32(1)),
+                }),
+                SStmt::I(I::Cmp {
+                    op: CmpOp::Eq,
+                    ty: Scalar::U32,
+                    dst: DReg(3),
+                    a: DReg(2).into(),
+                    b: SOp::Imm(Value::u32(1)),
+                }),
+                SStmt::If { cond: DReg(3), then_b: 1, else_b: 2 },
+                SStmt::I(I::Cvt {
+                    from: Scalar::U32,
+                    to: Scalar::U64,
+                    dst: DReg(5),
+                    src: DReg(1).into(),
+                }),
+                SStmt::I(I::St {
+                    space: AddrSpace::Global,
+                    ty: Scalar::U32,
+                    addr: SAddr { base: DReg(0), index: Some(DReg(5)), scale: 4, disp: 0 },
+                    val: DReg(4).into(),
+                }),
+            ],
+            vec![SStmt::I(I::Bin {
+                op: BinOp::Add,
+                ty: Scalar::U32,
+                dst: DReg(4),
+                a: DReg(1).into(),
+                b: SOp::Imm(Value::u32(1)),
+            })],
+            vec![SStmt::I(I::Bin {
+                op: BinOp::Add,
+                ty: Scalar::U32,
+                dst: DReg(4),
+                a: DReg(1).into(),
+                b: SOp::Imm(Value::u32(2)),
+            })],
+        ];
+        let p = SimtProgram {
+            kernel_name: "div".into(),
+            blocks,
+            entry: 0,
+            num_regs: 6,
+            shared_bytes: 0,
+            num_params: 1,
+            ckpt_sites: vec![],
+            migratable: false,
+        };
+        let sim = SimtSim::new(SimtConfig::nvidia());
+        let mut mem = DeviceMemory::new(4096, "t");
+        let pause = AtomicBool::new(false);
+        sim.run_grid(
+            &p,
+            LaunchDims::d1(1, 32),
+            &[Value::ptr(0, AddrSpace::Global)],
+            &mut mem,
+            &pause,
+            None,
+        )
+        .unwrap();
+        for i in 0..32u64 {
+            let v = mem.load(i * 4, Scalar::U32).unwrap().as_u32();
+            let expect = if i % 2 == 1 { i as u32 + 1 } else { i as u32 + 2 };
+            assert_eq!(v, expect, "lane {i}");
+        }
+    }
+
+    /// A barrier reached by all warps releases; kernel completes.
+    #[test]
+    fn barrier_releases_all_warps() {
+        use SInst as I;
+        let p = SimtProgram {
+            kernel_name: "bar".into(),
+            blocks: vec![vec![
+                SStmt::I(I::BarSync { id: 0 }),
+                SStmt::I(I::Special { dst: DReg(1), kind: SSpecial::ThreadIdx(Dim::X) }),
+            ]],
+            entry: 0,
+            num_regs: 2,
+            shared_bytes: 0,
+            num_params: 1,
+            ckpt_sites: vec![],
+            migratable: false,
+        };
+        let sim = SimtSim::new(SimtConfig::nvidia());
+        let mut mem = DeviceMemory::new(64, "t");
+        let pause = AtomicBool::new(false);
+        let out = sim
+            .run_grid(
+                &p,
+                LaunchDims::d1(1, 128), // 4 warps
+                &[Value::ptr(0, AddrSpace::Global)],
+                &mut mem,
+                &pause,
+                None,
+            )
+            .unwrap();
+        assert!(out.is_completed());
+    }
+
+    /// Uncoalesced access costs more than coalesced.
+    #[test]
+    fn coalescing_cost_model() {
+        use SInst as I;
+        let mk = |scale: u32| SimtProgram {
+            kernel_name: "mem".into(),
+            blocks: vec![vec![
+                SStmt::I(I::Special { dst: DReg(1), kind: SSpecial::ThreadIdx(Dim::X) }),
+                SStmt::I(I::Cvt {
+                    from: Scalar::U32,
+                    to: Scalar::U64,
+                    dst: DReg(2),
+                    src: DReg(1).into(),
+                }),
+                SStmt::I(I::Ld {
+                    space: AddrSpace::Global,
+                    ty: Scalar::F32,
+                    dst: DReg(3),
+                    addr: SAddr { base: DReg(0), index: Some(DReg(2)), scale, disp: 0 },
+                }),
+            ]],
+            entry: 0,
+            num_regs: 4,
+            shared_bytes: 0,
+            num_params: 1,
+            ckpt_sites: vec![],
+            migratable: false,
+        };
+        let sim = SimtSim::new(SimtConfig::nvidia());
+        let pause = AtomicBool::new(false);
+        let run = |scale| {
+            let mut mem = DeviceMemory::new(1 << 20, "t");
+            let out = sim
+                .run_grid(
+                    &mk(scale),
+                    LaunchDims::d1(1, 32),
+                    &[Value::ptr(0, AddrSpace::Global)],
+                    &mut mem,
+                    &pause,
+                    None,
+                )
+                .unwrap();
+            out.cost().total_cycles
+        };
+        let coalesced = run(4);
+        let strided = run(512);
+        assert!(
+            strided > coalesced,
+            "strided ({strided}) must cost more than coalesced ({coalesced})"
+        );
+    }
+}

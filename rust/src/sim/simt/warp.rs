@@ -1,0 +1,784 @@
+//! Warp-level interpreter for the SIMT device ISA.
+//!
+//! This is the "hardware" of the SIMT simulators: it executes one warp's
+//! instruction stream over per-lane register files, maintaining the
+//! divergence mask discipline implicitly through the structured frames —
+//! the literal realization of "the hardware masks off inactive threads when
+//! branches diverge and reconverges them implicitly" (paper §2.2).
+//!
+//! A warp runs until it *suspends*: at a block barrier, at a team sync, at
+//! a checkpoint dump (pause flag set), or at kernel end. The block
+//! scheduler in [`super`] coordinates suspended warps.
+
+use crate::error::{HetError, Result};
+use crate::hetir::instr::{AtomOp, BinOp, ShflKind, VoteKind};
+use crate::hetir::types::{AddrSpace, Scalar, Type, Value};
+use crate::isa::simt_isa::*;
+use crate::sim::alu;
+use crate::sim::mem::DeviceMemory;
+use crate::sim::snapshot::ThreadCapture;
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Lane activity mask (supports warp widths up to 64).
+pub type Mask = u64;
+
+/// hetIR team width: team ops always operate over 32 consecutive threads
+/// regardless of the hardware warp width (see `isa::simt_isa` docs).
+pub const TEAM_WIDTH: u32 = 32;
+
+/// Execution environment shared by all warps of a block.
+pub struct Env<'a> {
+    pub cfg: &'a SimtConfig,
+    pub global: &'a mut DeviceMemory,
+    pub shared: &'a mut DeviceMemory,
+    pub block_idx: [u32; 3],
+    pub block_dim: [u32; 3],
+    pub grid_dim: [u32; 3],
+    pub pause: &'a AtomicBool,
+    /// Model-cycle accumulator for this block.
+    pub cost: &'a mut u64,
+    /// Dynamic warp-instruction counter.
+    pub insts: &'a mut u64,
+    /// Global-memory traffic counter (bytes).
+    pub gbytes: &'a mut u64,
+}
+
+/// Why a warp stopped running.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WarpStop {
+    /// Arrived at block barrier `id`.
+    Barrier(u32),
+    /// Arrived at a team sync point.
+    TeamSync,
+    /// Pause flag was set: dumped registers at barrier `id` and exited.
+    Dumped(u32),
+    /// Ran to completion.
+    Done,
+}
+
+/// Interpreter frame context.
+#[derive(Debug, Clone, PartialEq)]
+enum Ctx {
+    Top,
+    /// Executing the then-side; optionally the else side is pending with
+    /// its lane mask.
+    Then { pending_else: Option<(BlockId, Mask)> },
+    Else,
+    /// Evaluating a loop condition block.
+    LoopCond { loop_ref: (BlockId, usize), loop_mask: Mask },
+    /// Executing a loop body.
+    LoopBody { loop_ref: (BlockId, usize), loop_mask: Mask, break_mask: Mask, cont_mask: Mask },
+}
+
+#[derive(Debug, Clone, PartialEq)]
+struct Frame {
+    block: BlockId,
+    idx: usize,
+    entry_mask: Mask,
+    ctx: Ctx,
+}
+
+/// One warp's architectural state.
+pub struct WarpState {
+    /// Warp index within the block.
+    pub warp_idx: u32,
+    /// Per-lane device register files: `regs[lane][dreg]` (u64 bit patterns).
+    regs: Vec<Vec<u64>>,
+    frames: Vec<Frame>,
+    ret_mask: Mask,
+    /// Lanes that exist (block tail may not fill the warp).
+    full_mask: Mask,
+    lanes: u32,
+    /// Captured thread states when this warp dumped at a checkpoint.
+    pub dump: Option<Vec<ThreadCapture>>,
+}
+
+impl WarpState {
+    /// Fresh warp starting at kernel entry. `params` are pre-loaded into
+    /// device registers `0..params.len()` of every lane.
+    pub fn new(p: &SimtProgram, warp_idx: u32, lanes: u32, params: &[Value]) -> WarpState {
+        let mut regs = vec![vec![0u64; p.num_regs as usize]; lanes as usize];
+        for lane in regs.iter_mut() {
+            for (i, v) in params.iter().enumerate() {
+                lane[i] = v.bits;
+            }
+        }
+        let full_mask = mask_of(lanes);
+        WarpState {
+            warp_idx,
+            regs,
+            frames: vec![Frame { block: p.entry, idx: 0, entry_mask: full_mask, ctx: Ctx::Top }],
+            ret_mask: 0,
+            full_mask,
+            lanes,
+            dump: None,
+        }
+    }
+
+    /// Warp resuming just after `barrier_id` with restored registers.
+    /// `threads[t]` is the capture for block-linear thread `t`; this warp
+    /// reads its own lanes (`warp_width` is the device warp width, used for
+    /// linear thread-id math; `lanes` may be smaller for the tail warp).
+    /// Parameters are re-passed (pointer args may have been rebased by the
+    /// migration layer).
+    pub fn resume(
+        p: &SimtProgram,
+        warp_idx: u32,
+        warp_width: u32,
+        lanes: u32,
+        params: &[Value],
+        barrier_id: u32,
+        threads: &[ThreadCapture],
+    ) -> Result<WarpState> {
+        let mut w = WarpState::new(p, warp_idx, lanes, params);
+        let site = p
+            .ckpt_sites
+            .iter()
+            .find(|s| s.barrier_id == barrier_id)
+            .ok_or_else(|| HetError::migrate(format!("no ckpt site for barrier {barrier_id}")))?;
+        for lane in 0..lanes {
+            let tid = warp_idx * warp_width + lane;
+            let cap = threads.get(tid as usize).ok_or_else(|| {
+                HetError::migrate(format!("snapshot missing thread {tid}"))
+            })?;
+            for (vreg, _ty, loc) in &site.saves {
+                let val = cap.get(*vreg).ok_or_else(|| {
+                    HetError::migrate(format!("snapshot missing vreg {vreg} for thread {tid}"))
+                })?;
+                match loc {
+                    crate::isa::DevLoc::SimtReg(d) => {
+                        w.regs[lane as usize][*d as usize] = val.bits;
+                    }
+                    other => {
+                        return Err(HetError::migrate(format!(
+                            "SIMT program has non-SIMT device location {other:?}"
+                        )))
+                    }
+                }
+            }
+        }
+        // Rebuild the frame stack along the structural path to the barrier.
+        // Path elements name the structured statement descended through;
+        // the last element is positioned just past the BarSync. The frame
+        // for level d gets a context derived from level d-1's statement.
+        let path = p
+            .resume_path(barrier_id)
+            .ok_or_else(|| HetError::migrate(format!("barrier {barrier_id} not in program")))?;
+        let full = w.full_mask;
+        let mut ctxs: Vec<Ctx> = vec![Ctx::Top];
+        for depth in 0..path.len() - 1 {
+            let (block, idx) = path[depth];
+            let (child_block, _) = path[depth + 1];
+            let child_ctx = match &p.blocks[block][idx] {
+                SStmt::If { then_b, else_b, .. } => {
+                    if child_block == *then_b {
+                        Ctx::Then { pending_else: None }
+                    } else if child_block == *else_b {
+                        Ctx::Else
+                    } else {
+                        return Err(HetError::migrate("resume path mismatch at If"));
+                    }
+                }
+                SStmt::Loop { cond, body, .. } => {
+                    if child_block == *cond {
+                        Ctx::LoopCond { loop_ref: (block, idx), loop_mask: full }
+                    } else if child_block == *body {
+                        Ctx::LoopBody {
+                            loop_ref: (block, idx),
+                            loop_mask: full,
+                            break_mask: 0,
+                            cont_mask: 0,
+                        }
+                    } else {
+                        return Err(HetError::migrate("resume path mismatch at Loop"));
+                    }
+                }
+                _ => return Err(HetError::migrate("resume path through non-structured stmt")),
+            };
+            ctxs.push(child_ctx);
+        }
+        w.frames.clear();
+        for (depth, (block, idx)) in path.iter().enumerate() {
+            let is_last = depth == path.len() - 1;
+            // Outer frames continue *after* their structured statement;
+            // the innermost frame starts right after the barrier.
+            let frame_idx = if is_last { *idx } else { idx + 1 };
+            w.frames.push(Frame {
+                block: *block,
+                idx: frame_idx,
+                entry_mask: full,
+                ctx: ctxs[depth].clone(),
+            });
+        }
+        Ok(w)
+    }
+
+    /// Currently active lanes: innermost region mask minus returned lanes
+    /// and minus lanes that broke/continued out of the innermost loop.
+    fn active(&self) -> Mask {
+        let top = match self.frames.last() {
+            Some(f) => f,
+            None => return 0,
+        };
+        let mut m = top.entry_mask & !self.ret_mask;
+        for f in self.frames.iter().rev() {
+            if let Ctx::LoopBody { break_mask, cont_mask, .. } = &f.ctx {
+                m &= !(break_mask | cont_mask);
+                break;
+            }
+        }
+        m
+    }
+
+    /// Capture this warp's lanes for checkpoint `site` (called by the
+    /// block scheduler at a paused barrier release).
+    pub fn dump_at(&mut self, cfg: &SimtConfig, site: &crate::isa::CkptSite, cost: &mut u64) -> Result<()> {
+        let mut caps = Vec::with_capacity(self.lanes as usize);
+        for lane in 0..self.lanes as usize {
+            let mut regs = Vec::with_capacity(site.saves.len());
+            for (vreg, ty, loc) in &site.saves {
+                let d = match loc {
+                    crate::isa::DevLoc::SimtReg(d) => *d,
+                    other => {
+                        return Err(HetError::migrate(format!(
+                            "non-SIMT ckpt location {other:?}"
+                        )))
+                    }
+                };
+                regs.push((*vreg, Value { bits: self.regs[lane][d as usize], ty: *ty }));
+            }
+            caps.push(ThreadCapture { regs });
+        }
+        // Model cost: one store per saved register per lane.
+        *cost += cfg.smem_cost * site.saves.len() as u64 + cfg.mem_cost;
+        self.dump = Some(caps);
+        Ok(())
+    }
+
+    /// Read operand `op` for `lane` as raw bits.
+    fn rv(&self, lane: usize, op: &SOp) -> u64 {
+        match op {
+            SOp::Reg(r) => self.regs[lane][r.0 as usize],
+            SOp::Imm(v) => v.bits,
+        }
+    }
+
+    /// Effective address for `lane`.
+    fn eaddr(&self, lane: usize, a: &SAddr) -> u64 {
+        let base = self.regs[lane][a.base.0 as usize];
+        let idx = a.index.map_or(0i64, |r| self.regs[lane][r.0 as usize] as i64);
+        (base as i64)
+            .wrapping_add(idx.wrapping_mul(a.scale as i64))
+            .wrapping_add(a.disp) as u64
+    }
+
+    fn linear_tid(&self, p_warp_w: u32, lane: u32) -> u32 {
+        self.warp_idx * p_warp_w + lane
+    }
+}
+
+impl WarpState {
+    fn charge_mem(env: &mut Env, addrs: &[u64], bytes: u64, space: AddrSpace) {
+        match space {
+            AddrSpace::Shared => {
+                *env.cost += env.cfg.smem_cost;
+            }
+            AddrSpace::Global => {
+                // Count distinct 128-byte segments among lane addresses:
+                // 1 segment = fully coalesced; each extra segment costs
+                // more. Stack buffer — this runs per memory instruction.
+                let mut segs = [0u64; 64];
+                let mut n = 0usize;
+                'outer: for a in addrs {
+                    let seg = a >> 7;
+                    for s in &segs[..n] {
+                        if *s == seg {
+                            continue 'outer;
+                        }
+                    }
+                    if n < 64 {
+                        segs[n] = seg;
+                        n += 1;
+                    }
+                }
+                let n = n.max(1) as u64;
+                *env.cost += env.cfg.mem_cost + (n - 1) * env.cfg.mem_div_cost;
+                *env.gbytes += bytes * addrs.len() as u64;
+            }
+        }
+    }
+
+    /// Execute one instruction across active lanes.
+    fn exec_inst(&mut self, p: &SimtProgram, env: &mut Env, i: &SInst) -> Result<Option<WarpStop>> {
+        let active = self.active();
+        if active == 0 {
+            return Ok(None);
+        }
+        *env.insts += 1;
+        // Issue beats: a wave wider than the 32-lane ALU datapath takes
+        // proportionally more cycles per instruction (GCN-style wave64
+        // double-pumping) — uniform code throughput is width-neutral, so
+        // the wave64 cost shows up only where divergence serializes more
+        // work per wave (the paper's §3.1 observation).
+        let beats = (env.cfg.warp_width as u64).div_ceil(32);
+        *env.cost += env.cfg.alu_cost * beats;
+        let warp_w = env.cfg.warp_width;
+        match i {
+            SInst::Special { dst, kind } => {
+                for lane in 0..self.lanes {
+                    if active >> lane & 1 == 0 {
+                        continue;
+                    }
+                    let tid = self.linear_tid(warp_w, lane);
+                    let bd = env.block_dim;
+                    let (tx, ty, tz) =
+                        (tid % bd[0], (tid / bd[0]) % bd[1], tid / (bd[0] * bd[1]));
+                    let v = match kind {
+                        SSpecial::ThreadIdx(d) => [tx, ty, tz][d.index()],
+                        SSpecial::BlockIdx(d) => env.block_idx[d.index()],
+                        SSpecial::BlockDim(d) => env.block_dim[d.index()],
+                        SSpecial::GridDim(d) => env.grid_dim[d.index()],
+                        SSpecial::LaneId => lane % TEAM_WIDTH,
+                        SSpecial::LinearTid => tid,
+                    };
+                    self.regs[lane as usize][dst.0 as usize] = v as u64;
+                }
+            }
+            SInst::Mov { dst, src } => {
+                for lane in lanes_of(active, self.lanes) {
+                    self.regs[lane][dst.0 as usize] = self.rv(lane, src);
+                }
+            }
+            SInst::Bin { op, ty, dst, a, b } => {
+                for lane in lanes_of(active, self.lanes) {
+                    let x = Value { bits: self.rv(lane, a), ty: Type::Scalar(*ty) };
+                    let y = Value { bits: self.rv(lane, b), ty: Type::Scalar(*ty) };
+                    let r = alu::bin(*op, *ty, x, y).map_err(|e| {
+                        HetError::fault(env.cfg.name, format!("{e} in {}", p.kernel_name))
+                    })?;
+                    self.regs[lane][dst.0 as usize] = r.bits;
+                }
+            }
+            SInst::Un { op, ty, dst, a } => {
+                for lane in lanes_of(active, self.lanes) {
+                    let x = Value { bits: self.rv(lane, a), ty: Type::Scalar(*ty) };
+                    let r = alu::un(*op, *ty, x)
+                        .map_err(|e| HetError::fault(env.cfg.name, e.to_string()))?;
+                    self.regs[lane][dst.0 as usize] = r.bits;
+                }
+            }
+            SInst::Fma { ty, dst, a, b, c } => {
+                for lane in lanes_of(active, self.lanes) {
+                    let x = f32::from_bits(self.rv(lane, a) as u32);
+                    let y = f32::from_bits(self.rv(lane, b) as u32);
+                    let z = f32::from_bits(self.rv(lane, c) as u32);
+                    debug_assert_eq!(*ty, Scalar::F32);
+                    self.regs[lane][dst.0 as usize] = x.mul_add(y, z).to_bits() as u64;
+                }
+            }
+            SInst::Cmp { op, ty, dst, a, b } => {
+                for lane in lanes_of(active, self.lanes) {
+                    let x = Value { bits: self.rv(lane, a), ty: Type::Scalar(*ty) };
+                    let y = Value { bits: self.rv(lane, b), ty: Type::Scalar(*ty) };
+                    self.regs[lane][dst.0 as usize] = alu::cmp(*op, *ty, x, y) as u64;
+                }
+            }
+            SInst::Sel { dst, cond, a, b } => {
+                for lane in lanes_of(active, self.lanes) {
+                    let c = self.rv(lane, cond) & 1 != 0;
+                    let v = if c { self.rv(lane, a) } else { self.rv(lane, b) };
+                    self.regs[lane][dst.0 as usize] = v;
+                }
+            }
+            SInst::Cvt { from, to, dst, src } => {
+                for lane in lanes_of(active, self.lanes) {
+                    let v = Value { bits: self.rv(lane, src), ty: Type::Scalar(*from) };
+                    self.regs[lane][dst.0 as usize] = alu::cvt(*from, *to, v).bits;
+                }
+            }
+            SInst::PtrAdd { dst, addr } => {
+                for lane in lanes_of(active, self.lanes) {
+                    self.regs[lane][dst.0 as usize] = self.eaddr(lane, addr);
+                }
+            }
+            SInst::Ld { space, ty, dst, addr } => {
+                let mut addrs = [0u64; 64];
+                let mut lanes = [0usize; 64];
+                let mut n = 0usize;
+                for lane in lanes_of(active, self.lanes) {
+                    addrs[n] = self.eaddr(lane, addr);
+                    lanes[n] = lane;
+                    n += 1;
+                }
+                Self::charge_mem(env, &addrs[..n], ty.size_bytes(), *space);
+                for k in 0..n {
+                    let m: &DeviceMemory = match space {
+                        AddrSpace::Global => env.global,
+                        AddrSpace::Shared => env.shared,
+                    };
+                    let v = m.load(addrs[k], *ty)?;
+                    self.regs[lanes[k]][dst.0 as usize] = v.bits;
+                }
+            }
+            SInst::St { space, ty, addr, val } => {
+                let mut addrs = [0u64; 64];
+                let mut lanes = [0usize; 64];
+                let mut n = 0usize;
+                for lane in lanes_of(active, self.lanes) {
+                    addrs[n] = self.eaddr(lane, addr);
+                    lanes[n] = lane;
+                    n += 1;
+                }
+                Self::charge_mem(env, &addrs[..n], ty.size_bytes(), *space);
+                for k in 0..n {
+                    let v = Value { bits: self.rv(lanes[k], val), ty: Type::Scalar(*ty) };
+                    match space {
+                        AddrSpace::Global => env.global.store(addrs[k], *ty, v)?,
+                        AddrSpace::Shared => env.shared.store(addrs[k], *ty, v)?,
+                    }
+                }
+            }
+            SInst::Atom { op, space, ty, dst, addr, val, val2 } => {
+                // Lanes apply sequentially in lane order (deterministic).
+                for lane in lanes_of(active, self.lanes) {
+                    *env.cost += env.cfg.atom_cost;
+                    let a = self.eaddr(lane, addr);
+                    let m: &mut DeviceMemory = match space {
+                        AddrSpace::Global => env.global,
+                        AddrSpace::Shared => env.shared,
+                    };
+                    let old = m.load(a, *ty)?;
+                    let v = Value { bits: self.rv(lane, val), ty: Type::Scalar(*ty) };
+                    let new = match op {
+                        AtomOp::Add => alu::bin(BinOp::Add, *ty, old, v)
+                            .map_err(|e| HetError::fault(env.cfg.name, e.to_string()))?,
+                        AtomOp::Min => alu::bin(BinOp::Min, *ty, old, v).unwrap(),
+                        AtomOp::Max => alu::bin(BinOp::Max, *ty, old, v).unwrap(),
+                        AtomOp::And => alu::bin(BinOp::And, *ty, old, v).unwrap(),
+                        AtomOp::Or => alu::bin(BinOp::Or, *ty, old, v).unwrap(),
+                        AtomOp::Exch => v,
+                        AtomOp::Cas => {
+                            let v2 = val2.as_ref().expect("verified CAS");
+                            if old.bits == v.bits {
+                                Value { bits: self.rv(lane, v2), ty: Type::Scalar(*ty) }
+                            } else {
+                                old
+                            }
+                        }
+                    };
+                    m.store(a, *ty, new)?;
+                    if let Some(d) = dst {
+                        self.regs[lane][d.0 as usize] = old.bits;
+                    }
+                }
+            }
+            SInst::BarSync { id } => {
+                *env.cost += env.cfg.bar_cost;
+                if active != self.full_mask {
+                    return Err(HetError::fault(
+                        env.cfg.name,
+                        format!(
+                            "barrier {id} reached with partial warp mask {active:#x} (full {:#x}) — divergent or exited threads",
+                            self.full_mask
+                        ),
+                    ));
+                }
+                return Ok(Some(WarpStop::Barrier(*id)));
+            }
+            SInst::Ckpt { .. } => {
+                // The compiled-in pause check: one predicated load+test.
+                // The actual dump decision is made by the block scheduler
+                // at barrier release, so every warp of the block agrees on
+                // the suspension point (checking the flag here per-warp
+                // would race: warps observing it at different barriers
+                // deadlock — the subtlety the paper's cooperative design
+                // glosses over).
+                let _ = env.pause.load(Ordering::SeqCst);
+            }
+            SInst::TeamSync => {
+                *env.cost += env.cfg.bar_cost / 2;
+                return Ok(Some(WarpStop::TeamSync));
+            }
+            SInst::Fence { .. } => {
+                *env.cost += 2;
+            }
+            SInst::Vote { kind, dst, src } => {
+                self.team_op(active, warp_w, |lanes, regs| {
+                    let mut any = false;
+                    let mut all = true;
+                    for &l in lanes {
+                        let p = match src {
+                            SOp::Reg(r) => regs[l][r.0 as usize] & 1 != 0,
+                            SOp::Imm(v) => v.as_pred(),
+                        };
+                        any |= p;
+                        all &= p;
+                    }
+                    let res = match kind {
+                        VoteKind::Any => any,
+                        VoteKind::All => all,
+                    } as u64;
+                    for &l in lanes {
+                        regs[l][dst.0 as usize] = res;
+                    }
+                });
+            }
+            SInst::Ballot { dst, src } => {
+                self.team_op(active, warp_w, |lanes, regs| {
+                    let mut mask = 0u64;
+                    for (bit, &l) in lanes.iter().enumerate() {
+                        let p = match src {
+                            SOp::Reg(r) => regs[l][r.0 as usize] & 1 != 0,
+                            SOp::Imm(v) => v.as_pred(),
+                        };
+                        if p {
+                            mask |= 1 << bit;
+                        }
+                    }
+                    for &l in lanes {
+                        regs[l][dst.0 as usize] = mask;
+                    }
+                });
+            }
+            SInst::Shfl { kind, ty: _, dst, val, lane } => {
+                self.team_op(active, warp_w, |lanes, regs| {
+                    // Gather semantics: read all sources first.
+                    let srcs: Vec<u64> = lanes
+                        .iter()
+                        .map(|&l| match val {
+                            SOp::Reg(r) => regs[l][r.0 as usize],
+                            SOp::Imm(v) => v.bits,
+                        })
+                        .collect();
+                    let n = lanes.len() as i64;
+                    for (pos, &l) in lanes.iter().enumerate() {
+                        let sel = match lane {
+                            SOp::Reg(r) => regs[l][r.0 as usize] as i64,
+                            SOp::Imm(v) => v.bits as i64,
+                        };
+                        let src_pos = match kind {
+                            ShflKind::Idx => sel,
+                            ShflKind::Down => pos as i64 + sel,
+                            ShflKind::Up => pos as i64 - sel,
+                            ShflKind::Xor => pos as i64 ^ sel,
+                        };
+                        // Out-of-range keeps own value (CUDA clamps).
+                        let v = if src_pos >= 0 && src_pos < n {
+                            srcs[src_pos as usize]
+                        } else {
+                            srcs[pos]
+                        };
+                        regs[l][dst.0 as usize] = v;
+                    }
+                });
+            }
+            SInst::Rng { dst, state } => {
+                for lane in lanes_of(active, self.lanes) {
+                    let s = self.regs[lane][state.0 as usize] as u32;
+                    let n = alu::xorshift32(s);
+                    self.regs[lane][state.0 as usize] = n as u64;
+                    self.regs[lane][dst.0 as usize] = n as u64;
+                }
+            }
+            SInst::Trap { code } => {
+                return Err(HetError::fault(
+                    env.cfg.name,
+                    format!("device trap {code} in {}", p.kernel_name),
+                ));
+            }
+        }
+        Ok(None)
+    }
+
+    /// Apply `f` to each 32-thread team's active lanes within this warp.
+    fn team_op(
+        &mut self,
+        active: Mask,
+        _warp_w: u32,
+        mut f: impl FnMut(&[usize], &mut Vec<Vec<u64>>),
+    ) {
+        let mut team_start = 0u32;
+        while team_start < self.lanes {
+            let end = (team_start + TEAM_WIDTH).min(self.lanes);
+            let lanes: Vec<usize> = (team_start..end)
+                .filter(|l| active >> l & 1 != 0)
+                .map(|l| l as usize)
+                .collect();
+            if !lanes.is_empty() {
+                f(&lanes, &mut self.regs);
+            }
+            team_start = end;
+        }
+    }
+
+    /// Run until suspension. Returns why the warp stopped.
+    pub fn run(&mut self, p: &SimtProgram, env: &mut Env) -> Result<WarpStop> {
+        loop {
+            let frame = match self.frames.last_mut() {
+                Some(f) => f,
+                None => return Ok(WarpStop::Done),
+            };
+            let block = &p.blocks[frame.block];
+            if frame.idx >= block.len() {
+                // Region finished: pop and handle the context.
+                let f = self.frames.pop().unwrap();
+                match f.ctx {
+                    Ctx::Top => return Ok(WarpStop::Done),
+                    Ctx::Then { pending_else: Some((else_b, e_mask)) } => {
+                        self.frames.push(Frame {
+                            block: else_b,
+                            idx: 0,
+                            entry_mask: e_mask,
+                            ctx: Ctx::Else,
+                        });
+                    }
+                    Ctx::Then { pending_else: None } | Ctx::Else => {}
+                    Ctx::LoopCond { loop_ref, loop_mask } => {
+                        let (lb, li) = loop_ref;
+                        let (cond_reg, body) = match &p.blocks[lb][li] {
+                            SStmt::Loop { cond_reg, body, .. } => (*cond_reg, *body),
+                            _ => unreachable!("loop_ref must point at Loop"),
+                        };
+                        let live = loop_mask & !self.ret_mask;
+                        let mut stay = 0u64;
+                        for lane in lanes_of(live, self.lanes) {
+                            if self.regs[lane][cond_reg.0 as usize] & 1 != 0 {
+                                stay |= 1 << lane;
+                            }
+                        }
+                        *env.cost += env.cfg.alu_cost; // the loop branch
+                        if stay != 0 {
+                            self.frames.push(Frame {
+                                block: body,
+                                idx: 0,
+                                entry_mask: stay,
+                                ctx: Ctx::LoopBody {
+                                    loop_ref,
+                                    loop_mask: stay,
+                                    break_mask: 0,
+                                    cont_mask: 0,
+                                },
+                            });
+                        }
+                    }
+                    Ctx::LoopBody { loop_ref, loop_mask, break_mask, .. } => {
+                        let (lb, li) = loop_ref;
+                        let cond = match &p.blocks[lb][li] {
+                            SStmt::Loop { cond, .. } => *cond,
+                            _ => unreachable!(),
+                        };
+                        let next = loop_mask & !break_mask & !self.ret_mask;
+                        if next != 0 {
+                            self.frames.push(Frame {
+                                block: cond,
+                                idx: 0,
+                                entry_mask: next,
+                                ctx: Ctx::LoopCond { loop_ref, loop_mask: next },
+                            });
+                        }
+                    }
+                }
+                continue;
+            }
+            // Fetch the statement; advance idx first (suspension resumes
+            // after the current instruction).
+            let cur_block = frame.block;
+            let stmt_idx = frame.idx;
+            frame.idx += 1;
+            let stmt = &block[stmt_idx];
+            match stmt {
+                SStmt::I(inst) => {
+                    if let Some(stop) = self.exec_inst(p, env, inst)? {
+                        return Ok(stop);
+                    }
+                }
+                SStmt::If { cond, then_b, else_b } => {
+                    let active = self.active();
+                    if active == 0 {
+                        continue;
+                    }
+                    let mut t = 0u64;
+                    for lane in lanes_of(active, self.lanes) {
+                        if self.regs[lane][cond.0 as usize] & 1 != 0 {
+                            t |= 1 << lane;
+                        }
+                    }
+                    let e = active & !t;
+                    *env.cost += env.cfg.alu_cost; // the branch itself
+                    let then_empty = p.blocks[*then_b].is_empty();
+                    let else_empty = p.blocks[*else_b].is_empty();
+                    if t != 0 && !then_empty {
+                        let pending =
+                            if e != 0 && !else_empty { Some((*else_b, e)) } else { None };
+                        self.frames.push(Frame {
+                            block: *then_b,
+                            idx: 0,
+                            entry_mask: t,
+                            ctx: Ctx::Then { pending_else: pending },
+                        });
+                    } else if e != 0 && !else_empty {
+                        self.frames.push(Frame {
+                            block: *else_b,
+                            idx: 0,
+                            entry_mask: e,
+                            ctx: Ctx::Else,
+                        });
+                    }
+                }
+                SStmt::Loop { cond, .. } => {
+                    let active = self.active();
+                    if active == 0 {
+                        continue;
+                    }
+                    self.frames.push(Frame {
+                        block: *cond,
+                        idx: 0,
+                        entry_mask: active,
+                        ctx: Ctx::LoopCond {
+                            loop_ref: (cur_block, stmt_idx),
+                            loop_mask: active,
+                        },
+                    });
+                }
+                SStmt::Break => {
+                    let m = self.active();
+                    for f in self.frames.iter_mut().rev() {
+                        if let Ctx::LoopBody { break_mask, .. } = &mut f.ctx {
+                            *break_mask |= m;
+                            break;
+                        }
+                    }
+                    // Skip the rest of the current region for these lanes;
+                    // remaining statements run with the reduced mask, which
+                    // active() now reflects. Nothing else to do.
+                }
+                SStmt::Continue => {
+                    let m = self.active();
+                    for f in self.frames.iter_mut().rev() {
+                        if let Ctx::LoopBody { cont_mask, .. } = &mut f.ctx {
+                            *cont_mask |= m;
+                            break;
+                        }
+                    }
+                }
+                SStmt::Return => {
+                    self.ret_mask |= self.active();
+                }
+            }
+        }
+    }
+}
+
+/// Helper: iterate set lanes of a mask.
+fn lanes_of(mask: Mask, lanes: u32) -> impl Iterator<Item = usize> {
+    (0..lanes as usize).filter(move |l| mask >> l & 1 != 0)
+}
+
+fn mask_of(lanes: u32) -> Mask {
+    if lanes >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << lanes) - 1
+    }
+}
+

@@ -1,0 +1,172 @@
+//! Device-side snapshot structures produced by cooperative checkpointing.
+//!
+//! These are the *in-memory* representation of captured execution state,
+//! still tied to a particular launch (grid geometry, kernel identity). The
+//! migration layer (`migrate::state`) wraps them into the device-neutral
+//! serialized blob. The key property established here: register values are
+//! keyed by **hetIR virtual register**, not device register — a
+//! `BlockCapture` taken on the NVIDIA simulator can be reloaded through the
+//! Tenstorrent backend's register mapping and vice versa (paper §4.2
+//! *State Representation*).
+
+use crate::hetir::instr::Reg as VReg;
+use crate::hetir::types::Value;
+
+/// Captured state of one thread: values of the live hetIR virtual
+/// registers at the suspension point, sorted by register id.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ThreadCapture {
+    pub regs: Vec<(VReg, Value)>,
+}
+
+impl ThreadCapture {
+    /// Look up a captured register value.
+    pub fn get(&self, r: VReg) -> Option<Value> {
+        self.regs.iter().find(|(v, _)| *v == r).map(|(_, val)| *val)
+    }
+}
+
+/// Captured state of one thread block at a barrier/suspension point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockCapture {
+    /// Linear block index within the grid.
+    pub block_idx: u32,
+    /// The hetIR barrier id the block is parked at. Resume continues just
+    /// *after* this barrier (segment `barrier_id + 1` in paper terms).
+    pub barrier_id: u32,
+    /// Per-thread register captures, indexed by linear thread id.
+    pub threads: Vec<ThreadCapture>,
+    /// Full contents of the block's shared memory at the barrier.
+    pub shared_mem: Vec<u8>,
+}
+
+/// How far one block got when the kernel was paused.
+#[derive(Debug, Clone, PartialEq)]
+pub enum BlockState {
+    /// Not yet scheduled; restart from the top on the new device.
+    NotStarted,
+    /// Parked at a barrier with captured state.
+    Suspended(BlockCapture),
+    /// Ran to completion; its effects are in global memory.
+    Done,
+}
+
+/// Outcome of a (possibly paused) grid launch on a simulator.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PausedGrid {
+    /// State of every block, indexed by linear block id.
+    pub blocks: Vec<BlockState>,
+}
+
+impl PausedGrid {
+    /// True if every block either completed or never started (i.e. there
+    /// is no mid-kernel register state to move).
+    pub fn no_live_state(&self) -> bool {
+        self.blocks.iter().all(|b| !matches!(b, BlockState::Suspended(_)))
+    }
+
+    /// Count of suspended blocks.
+    pub fn suspended_count(&self) -> usize {
+        self.blocks.iter().filter(|b| matches!(b, BlockState::Suspended(_))).count()
+    }
+}
+
+/// Per-launch cost model output (model cycles, see `SimtConfig`).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct CostReport {
+    /// Total dynamic warp-instructions executed.
+    pub warp_instructions: u64,
+    /// Model cycles on the critical path (max over SM/core queues).
+    pub device_cycles: u64,
+    /// Total model cycles summed over all execution units (utilization).
+    pub total_cycles: u64,
+    /// Bytes moved between global memory and the chip (DMA/LD/ST traffic).
+    pub global_bytes: u64,
+}
+
+impl CostReport {
+    /// Simulated execution time in microseconds at `clock_mhz`.
+    pub fn sim_time_us(&self, clock_mhz: u64) -> f64 {
+        self.device_cycles as f64 / clock_mhz as f64
+    }
+
+    pub fn merge(&mut self, other: &CostReport) {
+        self.warp_instructions += other.warp_instructions;
+        self.device_cycles += other.device_cycles;
+        self.total_cycles += other.total_cycles;
+        self.global_bytes += other.global_bytes;
+    }
+}
+
+/// Result of running a grid: completed, or paused with captured state.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LaunchOutcome {
+    Completed(CostReport),
+    Paused { grid: PausedGrid, cost: CostReport },
+}
+
+impl LaunchOutcome {
+    pub fn cost(&self) -> &CostReport {
+        match self {
+            LaunchOutcome::Completed(c) => c,
+            LaunchOutcome::Paused { cost, .. } => cost,
+        }
+    }
+
+    pub fn is_completed(&self) -> bool {
+        matches!(self, LaunchOutcome::Completed(_))
+    }
+}
+
+/// Resume directive for one block (built from a snapshot by the migration
+/// layer, consumed by a simulator's resume entry point).
+#[derive(Debug, Clone, PartialEq)]
+pub enum BlockResume {
+    /// Start from the kernel entry (block never ran before the pause).
+    FromEntry,
+    /// Skip entirely (block completed before the pause).
+    Skip,
+    /// Re-enter just after `barrier_id` with restored thread registers and
+    /// shared memory.
+    FromBarrier(BlockCapture),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hetir::types::Value;
+
+    #[test]
+    fn thread_capture_lookup() {
+        let t = ThreadCapture {
+            regs: vec![(VReg(2), Value::u32(7)), (VReg(5), Value::f32(1.5))],
+        };
+        assert_eq!(t.get(VReg(2)).unwrap().as_u32(), 7);
+        assert_eq!(t.get(VReg(5)).unwrap().as_f32(), 1.5);
+        assert!(t.get(VReg(9)).is_none());
+    }
+
+    #[test]
+    fn paused_grid_queries() {
+        let g = PausedGrid {
+            blocks: vec![
+                BlockState::Done,
+                BlockState::NotStarted,
+                BlockState::Suspended(BlockCapture {
+                    block_idx: 2,
+                    barrier_id: 0,
+                    threads: vec![],
+                    shared_mem: vec![],
+                }),
+            ],
+        };
+        assert!(!g.no_live_state());
+        assert_eq!(g.suspended_count(), 1);
+    }
+
+    #[test]
+    fn cost_report_time() {
+        let c = CostReport { device_cycles: 1700, ..Default::default() };
+        assert!((c.sim_time_us(1700) - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,1018 @@
+//! Per-core interpreter for the Tensix ISA.
+//!
+//! One [`CoreState`] is a Tensix core executing its program over a slice of
+//! up to 32 threads (vector lanes). Uniform control flow takes real scalar
+//! branches; divergent control flow uses lane-mask discipline exactly like
+//! the SIMT warp interpreter — but with the Tensix cost asymmetry: f32
+//! vector ops ride the hardware VPU while per-lane integer/predicate ops
+//! are emulated through the scalar core (see `isa::tensix_isa` docs).
+//!
+//! A core suspends at mesh barriers, mesh votes, and checkpoint dumps; the
+//! block scheduler in [`super`] coordinates the core group.
+
+use crate::error::{HetError, Result};
+use crate::hetir::instr::{AtomOp, BinOp, VoteKind};
+use crate::hetir::types::{Scalar, Type, Value};
+use crate::isa::tensix_isa::*;
+use crate::isa::DevLoc;
+use crate::sim::alu;
+use crate::sim::mem::DeviceMemory;
+use crate::sim::snapshot::ThreadCapture;
+use std::sync::atomic::{AtomicBool, Ordering};
+
+pub type Mask = u32;
+
+/// Execution environment for one core while it runs.
+pub struct TEnv<'a> {
+    pub cfg: &'a TensixConfig,
+    /// Device DRAM (shared by all cores).
+    pub global: &'a mut DeviceMemory,
+    /// This core's private scratchpad.
+    pub scratch: &'a mut DeviceMemory,
+    pub block_idx: [u32; 3],
+    pub block_dim: [u32; 3],
+    pub grid_dim: [u32; 3],
+    /// This core's slot within the block's core group.
+    pub core_slot: u32,
+    /// MIMD mode: the 3-D thread index currently being executed.
+    pub mimd_thread: [u32; 3],
+    pub pause: &'a AtomicBool,
+    pub cost: &'a mut u64,
+    pub insts: &'a mut u64,
+    pub gbytes: &'a mut u64,
+}
+
+/// Why a core stopped.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CoreStop {
+    MeshBar(u32),
+    /// Suspended at a mesh vote: local result is `local_any`; the
+    /// scheduler must OR across the group and call [`CoreState::deliver_vote`].
+    MeshVote { dst: SR, local_any: bool },
+    Dumped(u32),
+    Done,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum TCtx {
+    Top,
+    /// Uniform branch side (only one side is ever pushed).
+    SBranch,
+    VThen { pending_else: Option<(TBlockId, Mask)> },
+    VElse,
+    SLoopCond { loop_ref: (TBlockId, usize) },
+    SLoopBody { loop_ref: (TBlockId, usize), broken: bool },
+    VLoopCond { loop_ref: (TBlockId, usize), loop_mask: Mask },
+    VLoopBody { loop_ref: (TBlockId, usize), loop_mask: Mask, break_mask: Mask, cont_mask: Mask },
+}
+
+#[derive(Debug, Clone, PartialEq)]
+struct TFrame {
+    block: TBlockId,
+    idx: usize,
+    entry_mask: Mask,
+    ctx: TCtx,
+}
+
+/// One Tensix core's architectural state.
+pub struct CoreState {
+    /// Which 32-thread slice of the block this core runs (slice s covers
+    /// linear threads `[32*s, 32*s + lanes)`).
+    pub slice: u32,
+    sregs: Vec<u64>,
+    vregs: Vec<[u64; 32]>,
+    frames: Vec<TFrame>,
+    ret_mask: Mask,
+    full_mask: Mask,
+    lanes: u32,
+    pub dump: Option<Vec<ThreadCapture>>,
+}
+
+fn mask_of(lanes: u32) -> Mask {
+    if lanes >= 32 {
+        u32::MAX
+    } else {
+        (1u32 << lanes) - 1
+    }
+}
+
+impl CoreState {
+    /// Fresh core at kernel entry. Params go to scalar regs `0..n`;
+    /// `shared_base` is written to `p.shared_base_sreg`.
+    pub fn new(p: &TensixProgram, slice: u32, lanes: u32, params: &[Value], shared_base: u64) -> CoreState {
+        let mut sregs = vec![0u64; p.num_sregs as usize];
+        for (i, v) in params.iter().enumerate() {
+            sregs[i] = v.bits;
+        }
+        sregs[p.shared_base_sreg.0 as usize] = shared_base;
+        let full_mask = mask_of(lanes);
+        CoreState {
+            slice,
+            sregs,
+            vregs: vec![[0u64; 32]; p.num_vregs as usize],
+            frames: vec![TFrame { block: p.entry, idx: 0, entry_mask: full_mask, ctx: TCtx::Top }],
+            ret_mask: 0,
+            full_mask,
+            lanes,
+            dump: None,
+        }
+    }
+
+    /// Core resuming just after mesh barrier `barrier_id` from a snapshot.
+    pub fn resume(
+        p: &TensixProgram,
+        slice: u32,
+        lanes: u32,
+        params: &[Value],
+        shared_base: u64,
+        barrier_id: u32,
+        threads: &[ThreadCapture],
+    ) -> Result<CoreState> {
+        let mut c = CoreState::new(p, slice, lanes, params, shared_base);
+        let site = p
+            .ckpt_sites
+            .iter()
+            .find(|s| s.barrier_id == barrier_id)
+            .ok_or_else(|| HetError::migrate(format!("no ckpt site for barrier {barrier_id}")))?;
+        for lane in 0..lanes {
+            let tid = slice * 32 + lane;
+            let cap = threads
+                .get(tid as usize)
+                .ok_or_else(|| HetError::migrate(format!("snapshot missing thread {tid}")))?;
+            for (vreg, _ty, loc) in &site.saves {
+                let val = cap.get(*vreg).ok_or_else(|| {
+                    HetError::migrate(format!("snapshot missing vreg {vreg} for thread {tid}"))
+                })?;
+                match loc {
+                    DevLoc::TensixScalar(s) => {
+                        // Uniform: all lanes agree; last write wins (equal).
+                        c.sregs[*s as usize] = val.bits;
+                    }
+                    DevLoc::TensixVector(v) => {
+                        c.vregs[*v as usize][lane as usize] = val.bits;
+                    }
+                    DevLoc::SimtReg(_) => {
+                        return Err(HetError::migrate(
+                            "Tensix program has SIMT device location in ckpt site",
+                        ))
+                    }
+                }
+            }
+        }
+        // Rebuild frames along the structural path (same scheme as the
+        // SIMT warp resume; all masks full at a barrier).
+        let path = p
+            .resume_path(barrier_id)
+            .ok_or_else(|| HetError::migrate(format!("barrier {barrier_id} not in program")))?;
+        let full = c.full_mask;
+        let mut ctxs: Vec<TCtx> = vec![TCtx::Top];
+        for depth in 0..path.len() - 1 {
+            let (block, idx) = path[depth];
+            let (child_block, _) = path[depth + 1];
+            let ctx = match &p.blocks[block][idx] {
+                TStmt::SIf { then_b, else_b, .. } => {
+                    if child_block == *then_b || child_block == *else_b {
+                        TCtx::SBranch
+                    } else {
+                        return Err(HetError::migrate("resume path mismatch at SIf"));
+                    }
+                }
+                TStmt::VIf { then_b, else_b, .. } => {
+                    if child_block == *then_b {
+                        TCtx::VThen { pending_else: None }
+                    } else if child_block == *else_b {
+                        TCtx::VElse
+                    } else {
+                        return Err(HetError::migrate("resume path mismatch at VIf"));
+                    }
+                }
+                TStmt::SLoop { cond, body, .. } => {
+                    if child_block == *cond {
+                        TCtx::SLoopCond { loop_ref: (block, idx) }
+                    } else if child_block == *body {
+                        TCtx::SLoopBody { loop_ref: (block, idx), broken: false }
+                    } else {
+                        return Err(HetError::migrate("resume path mismatch at SLoop"));
+                    }
+                }
+                TStmt::VLoop { cond, body, .. } => {
+                    if child_block == *cond {
+                        TCtx::VLoopCond { loop_ref: (block, idx), loop_mask: full }
+                    } else if child_block == *body {
+                        TCtx::VLoopBody {
+                            loop_ref: (block, idx),
+                            loop_mask: full,
+                            break_mask: 0,
+                            cont_mask: 0,
+                        }
+                    } else {
+                        return Err(HetError::migrate("resume path mismatch at VLoop"));
+                    }
+                }
+                _ => return Err(HetError::migrate("resume path through non-structured stmt")),
+            };
+            ctxs.push(ctx);
+        }
+        c.frames.clear();
+        for (depth, (block, idx)) in path.iter().enumerate() {
+            let is_last = depth == path.len() - 1;
+            let frame_idx = if is_last { *idx } else { idx + 1 };
+            c.frames.push(TFrame {
+                block: *block,
+                idx: frame_idx,
+                entry_mask: full,
+                ctx: ctxs[depth].clone(),
+            });
+        }
+        Ok(c)
+    }
+
+    /// Capture this core's lanes for checkpoint `site` (called by the
+    /// block scheduler at a paused mesh-barrier release).
+    pub fn dump_at(
+        &mut self,
+        cfg: &TensixConfig,
+        site: &crate::isa::CkptSite,
+        cost: &mut u64,
+    ) -> Result<()> {
+        let mut caps = Vec::with_capacity(self.lanes as usize);
+        for lane in 0..self.lanes as usize {
+            let mut regs = Vec::with_capacity(site.saves.len());
+            for (vreg, ty, loc) in &site.saves {
+                let bits = match loc {
+                    DevLoc::TensixScalar(s) => self.sregs[*s as usize],
+                    DevLoc::TensixVector(v) => self.vregs[*v as usize][lane],
+                    DevLoc::SimtReg(_) => {
+                        return Err(HetError::migrate("SIMT location in Tensix ckpt"))
+                    }
+                };
+                regs.push((*vreg, Value { bits, ty: *ty }));
+            }
+            caps.push(ThreadCapture { regs });
+        }
+        *cost += cfg.local_mem_cost * site.saves.len() as u64 + cfg.dma_base_cost;
+        self.dump = Some(caps);
+        Ok(())
+    }
+
+    /// Deliver a mesh-vote result (scheduler callback after OR-reduction).
+    pub fn deliver_vote(&mut self, dst: SR, result: bool) {
+        self.sregs[dst.0 as usize] = result as u64;
+    }
+
+    fn active(&self) -> Mask {
+        let top = match self.frames.last() {
+            Some(f) => f,
+            None => return 0,
+        };
+        let mut m = top.entry_mask & !self.ret_mask;
+        for f in self.frames.iter().rev() {
+            if let TCtx::VLoopBody { break_mask, cont_mask, .. } = &f.ctx {
+                m &= !(break_mask | cont_mask);
+                break;
+            }
+        }
+        m
+    }
+
+    // ---- operand helpers ----
+
+    fn so(&self, o: &So) -> u64 {
+        match o {
+            So::Reg(r) => self.sregs[r.0 as usize],
+            So::Imm(v) => v.bits,
+        }
+    }
+
+    fn vo(&self, o: &Vo, lane: usize) -> u64 {
+        match o {
+            Vo::Reg(r) => self.vregs[r.0 as usize][lane],
+            Vo::Splat(s) => self.sregs[s.0 as usize],
+            Vo::Imm(v) => v.bits,
+        }
+    }
+
+    fn saddr(&self, a: &TAddr) -> u64 {
+        let base = self.sregs[a.base.0 as usize];
+        let idx = a.index.map_or(0i64, |r| self.sregs[r.0 as usize] as i64);
+        (base as i64).wrapping_add(idx.wrapping_mul(a.scale as i64)).wrapping_add(a.disp) as u64
+    }
+
+    fn vaddr(&self, base: SR, idx: Option<VR>, scale: u32, disp: i64, lane: usize) -> u64 {
+        let b = self.sregs[base.0 as usize];
+        let i = idx.map_or(0i64, |r| self.vregs[r.0 as usize][lane] as i64);
+        (b as i64).wrapping_add(i.wrapping_mul(scale as i64)).wrapping_add(disp) as u64
+    }
+
+    /// Cost of a vector op: FP rides the VPU, everything else is emulated
+    /// lane-by-lane through the scalar core (the architectural asymmetry
+    /// driving the paper's MIMD-vs-vector result).
+    fn vcost(&self, cfg: &TensixConfig, ty: Scalar, active: Mask) -> u64 {
+        if ty == Scalar::F32 {
+            cfg.vector_fp_cost
+        } else {
+            cfg.vector_emu_base_cost
+                + cfg.vector_emu_lane_cost * active.count_ones() as u64
+        }
+    }
+
+    fn lanes_of(&self, mask: Mask) -> impl Iterator<Item = usize> + '_ {
+        (0..self.lanes as usize).filter(move |l| mask >> l & 1 != 0)
+    }
+
+    /// Execute one instruction; `Some(stop)` suspends the core.
+    #[allow(clippy::cognitive_complexity)]
+    fn exec_inst(&mut self, p: &TensixProgram, env: &mut TEnv, i: &TInst) -> Result<Option<CoreStop>> {
+        let active = self.active();
+        *env.insts += 1;
+        match i {
+            // ---- scalar ----
+            TInst::SSpecial { dst, kind } => {
+                *env.cost += env.cfg.scalar_cost;
+                let v = match kind {
+                    TSpecial::BlockIdx(d) => env.block_idx[d.index()],
+                    TSpecial::BlockDim(d) => env.block_dim[d.index()],
+                    TSpecial::GridDim(d) => env.grid_dim[d.index()],
+                    TSpecial::CoreSlot => env.core_slot,
+                    TSpecial::MimdThread(d) => env.mimd_thread[d.index()],
+                };
+                self.sregs[dst.0 as usize] = v as u64;
+            }
+            TInst::SMov { dst, src } => {
+                *env.cost += env.cfg.scalar_cost;
+                self.sregs[dst.0 as usize] = self.so(src);
+            }
+            TInst::SBin { op, ty, dst, a, b } => {
+                *env.cost += env.cfg.scalar_cost;
+                let x = Value { bits: self.so(a), ty: Type::Scalar(*ty) };
+                let y = Value { bits: self.so(b), ty: Type::Scalar(*ty) };
+                self.sregs[dst.0 as usize] = alu::bin(*op, *ty, x, y)
+                    .map_err(|e| HetError::fault(env.cfg.name, e.to_string()))?
+                    .bits;
+            }
+            TInst::SUn { op, ty, dst, a } => {
+                *env.cost += env.cfg.scalar_cost;
+                let x = Value { bits: self.so(a), ty: Type::Scalar(*ty) };
+                self.sregs[dst.0 as usize] = alu::un(*op, *ty, x)
+                    .map_err(|e| HetError::fault(env.cfg.name, e.to_string()))?
+                    .bits;
+            }
+            TInst::SCmp { op, ty, dst, a, b } => {
+                *env.cost += env.cfg.scalar_cost;
+                let x = Value { bits: self.so(a), ty: Type::Scalar(*ty) };
+                let y = Value { bits: self.so(b), ty: Type::Scalar(*ty) };
+                self.sregs[dst.0 as usize] = alu::cmp(*op, *ty, x, y) as u64;
+            }
+            TInst::SSel { dst, cond, a, b } => {
+                *env.cost += env.cfg.scalar_cost;
+                let c = self.so(cond) & 1 != 0;
+                self.sregs[dst.0 as usize] = if c { self.so(a) } else { self.so(b) };
+            }
+            TInst::SCvt { from, to, dst, src } => {
+                *env.cost += env.cfg.scalar_cost;
+                let v = Value { bits: self.so(src), ty: Type::Scalar(*from) };
+                self.sregs[dst.0 as usize] = alu::cvt(*from, *to, v).bits;
+            }
+            TInst::SFma { ty: _, dst, a, b, c } => {
+                *env.cost += env.cfg.scalar_cost;
+                let x = f32::from_bits(self.so(a) as u32);
+                let y = f32::from_bits(self.so(b) as u32);
+                let z = f32::from_bits(self.so(c) as u32);
+                self.sregs[dst.0 as usize] = x.mul_add(y, z).to_bits() as u64;
+            }
+            TInst::SRng { dst, state } => {
+                *env.cost += env.cfg.scalar_cost;
+                let n = alu::xorshift32(self.sregs[state.0 as usize] as u32);
+                self.sregs[state.0 as usize] = n as u64;
+                self.sregs[dst.0 as usize] = n as u64;
+            }
+            TInst::SLdLocal { ty, dst, addr } => {
+                *env.cost += env.cfg.local_mem_cost;
+                self.sregs[dst.0 as usize] = env.scratch.load(self.saddr(addr), *ty)?.bits;
+            }
+            TInst::SStLocal { ty, addr, val } => {
+                *env.cost += env.cfg.local_mem_cost;
+                let v = Value { bits: self.so(val), ty: Type::Scalar(*ty) };
+                env.scratch.store(self.saddr(addr), *ty, v)?;
+            }
+            TInst::SDmaLd { ty, dst, addr } => {
+                *env.cost += env.cfg.dma_base_cost + env.cfg.dma_per_32b_cost;
+                *env.gbytes += ty.size_bytes();
+                self.sregs[dst.0 as usize] = env.global.load(self.saddr(addr), *ty)?.bits;
+            }
+            TInst::SDmaSt { ty, addr, val } => {
+                *env.cost += env.cfg.dma_base_cost + env.cfg.dma_per_32b_cost;
+                *env.gbytes += ty.size_bytes();
+                let v = Value { bits: self.so(val), ty: Type::Scalar(*ty) };
+                env.global.store(self.saddr(addr), *ty, v)?;
+            }
+            TInst::SAtom { op, ty, dst, addr, val, val2 } => {
+                *env.cost += env.cfg.dma_base_cost + 2 * env.cfg.dma_per_32b_cost;
+                let a = self.saddr(addr);
+                let old = env.global.load(a, *ty)?;
+                let v = Value { bits: self.so(val), ty: Type::Scalar(*ty) };
+                let new = apply_atom(*op, *ty, old, v, val2.map(|v2| Value {
+                    bits: self.so(&v2),
+                    ty: Type::Scalar(*ty),
+                }))
+                .map_err(|e| HetError::fault(env.cfg.name, e.to_string()))?;
+                env.global.store(a, *ty, new)?;
+                if let Some(d) = dst {
+                    self.sregs[d.0 as usize] = old.bits;
+                }
+            }
+            TInst::DmaIn { local, global, len } => {
+                let n = self.so(len);
+                *env.cost += bulk_dma_cost(env.cfg, n);
+                *env.gbytes += n;
+                let mut buf = vec![0u8; n as usize];
+                env.global.read_bytes(self.saddr(global), &mut buf)?;
+                env.scratch.write_bytes(self.saddr(local), &buf)?;
+            }
+            TInst::DmaOut { local, global, len } => {
+                let n = self.so(len);
+                *env.cost += bulk_dma_cost(env.cfg, n);
+                *env.gbytes += n;
+                let mut buf = vec![0u8; n as usize];
+                env.scratch.read_bytes(self.saddr(local), &mut buf)?;
+                env.global.write_bytes(self.saddr(global), &buf)?;
+            }
+
+            // ---- vector ----
+            TInst::VLaneId { dst } => {
+                *env.cost += self.vcost(env.cfg, Scalar::U32, active);
+                for lane in 0..self.lanes as usize {
+                    self.vregs[dst.0 as usize][lane] = lane as u64;
+                }
+            }
+            TInst::VMov { dst, src } => {
+                *env.cost += env.cfg.vector_fp_cost; // register move rides the VPU
+                for lane in 0..self.lanes as usize {
+                    if active >> lane & 1 == 0 { continue; }
+                    self.vregs[dst.0 as usize][lane] = self.vo(src, lane);
+                }
+            }
+            TInst::VBin { op, ty, dst, a, b } => {
+                *env.cost += self.vcost(env.cfg, *ty, active);
+                for lane in 0..self.lanes as usize {
+                    if active >> lane & 1 == 0 { continue; }
+                    let x = Value { bits: self.vo(a, lane), ty: Type::Scalar(*ty) };
+                    let y = Value { bits: self.vo(b, lane), ty: Type::Scalar(*ty) };
+                    self.vregs[dst.0 as usize][lane] = alu::bin(*op, *ty, x, y)
+                        .map_err(|e| HetError::fault(env.cfg.name, e.to_string()))?
+                        .bits;
+                }
+            }
+            TInst::VUn { op, ty, dst, a } => {
+                *env.cost += self.vcost(env.cfg, *ty, active);
+                for lane in 0..self.lanes as usize {
+                    if active >> lane & 1 == 0 { continue; }
+                    let x = Value { bits: self.vo(a, lane), ty: Type::Scalar(*ty) };
+                    self.vregs[dst.0 as usize][lane] = alu::un(*op, *ty, x)
+                        .map_err(|e| HetError::fault(env.cfg.name, e.to_string()))?
+                        .bits;
+                }
+            }
+            TInst::VFma { ty, dst, a, b, c } => {
+                *env.cost += self.vcost(env.cfg, *ty, active);
+                for lane in 0..self.lanes as usize {
+                    if active >> lane & 1 == 0 { continue; }
+                    let x = f32::from_bits(self.vo(a, lane) as u32);
+                    let y = f32::from_bits(self.vo(b, lane) as u32);
+                    let z = f32::from_bits(self.vo(c, lane) as u32);
+                    self.vregs[dst.0 as usize][lane] = x.mul_add(y, z).to_bits() as u64;
+                }
+            }
+            TInst::VCmp { op, ty, dst, a, b } => {
+                // Predicate production is integer-domain → emulated.
+                *env.cost += env.cfg.vector_emu_base_cost
+                    + env.cfg.vector_emu_lane_cost * active.count_ones() as u64;
+                for lane in 0..self.lanes as usize {
+                    if active >> lane & 1 == 0 { continue; }
+                    let x = Value { bits: self.vo(a, lane), ty: Type::Scalar(*ty) };
+                    let y = Value { bits: self.vo(b, lane), ty: Type::Scalar(*ty) };
+                    self.vregs[dst.0 as usize][lane] = alu::cmp(*op, *ty, x, y) as u64;
+                }
+            }
+            TInst::VSel { dst, cond, a, b } => {
+                *env.cost += self.vcost(env.cfg, Scalar::U32, active);
+                for lane in 0..self.lanes as usize {
+                    if active >> lane & 1 == 0 { continue; }
+                    let c = self.vo(cond, lane) & 1 != 0;
+                    let v = if c { self.vo(a, lane) } else { self.vo(b, lane) };
+                    self.vregs[dst.0 as usize][lane] = v;
+                }
+            }
+            TInst::VCvt { from, to, dst, src } => {
+                *env.cost += self.vcost(env.cfg, *to, active);
+                for lane in 0..self.lanes as usize {
+                    if active >> lane & 1 == 0 { continue; }
+                    let v = Value { bits: self.vo(src, lane), ty: Type::Scalar(*from) };
+                    self.vregs[dst.0 as usize][lane] = alu::cvt(*from, *to, v).bits;
+                }
+            }
+            TInst::VRng { dst, state } => {
+                *env.cost += self.vcost(env.cfg, Scalar::U32, active);
+                for lane in 0..self.lanes as usize {
+                    if active >> lane & 1 == 0 { continue; }
+                    let n = alu::xorshift32(self.vregs[state.0 as usize][lane] as u32);
+                    self.vregs[state.0 as usize][lane] = n as u64;
+                    self.vregs[dst.0 as usize][lane] = n as u64;
+                }
+            }
+            TInst::VLdLocal { ty, dst, base, idx, scale, disp } => {
+                *env.cost += env.cfg.local_mem_cost + active.count_ones() as u64 / 8;
+                for lane in 0..self.lanes as usize {
+                    if active >> lane & 1 == 0 { continue; }
+                    let a = self.vaddr(*base, *idx, *scale, *disp, lane);
+                    self.vregs[dst.0 as usize][lane] = env.scratch.load(a, *ty)?.bits;
+                }
+            }
+            TInst::VStLocal { ty, base, idx, scale, disp, val } => {
+                *env.cost += env.cfg.local_mem_cost + active.count_ones() as u64 / 8;
+                for lane in 0..self.lanes as usize {
+                    if active >> lane & 1 == 0 { continue; }
+                    let a = self.vaddr(*base, *idx, *scale, *disp, lane);
+                    let v = Value { bits: self.vo(val, lane), ty: Type::Scalar(*ty) };
+                    env.scratch.store(a, *ty, v)?;
+                }
+            }
+            TInst::VDmaGather { ty, dst, base, idx, scale, disp } => {
+                let mut addrs = [0u64; 32];
+                let mut n = 0usize;
+                for lane in 0..self.lanes as usize {
+                    if active >> lane & 1 == 0 {
+                        continue;
+                    }
+                    addrs[n] = self.vaddr(*base, *idx, *scale, *disp, lane);
+                    n += 1;
+                }
+                *env.cost += gather_dma_cost(env.cfg, ty.size_bytes(), &addrs[..n]);
+                *env.gbytes += n as u64 * ty.size_bytes();
+                let mut k = 0usize;
+                for lane in 0..self.lanes as usize {
+                    if active >> lane & 1 == 0 {
+                        continue;
+                    }
+                    self.vregs[dst.0 as usize][lane] = env.global.load(addrs[k], *ty)?.bits;
+                    k += 1;
+                }
+            }
+            TInst::VDmaScatter { ty, base, idx, scale, disp, val } => {
+                let mut addrs = [0u64; 32];
+                let mut n = 0usize;
+                for lane in 0..self.lanes as usize {
+                    if active >> lane & 1 == 0 {
+                        continue;
+                    }
+                    addrs[n] = self.vaddr(*base, *idx, *scale, *disp, lane);
+                    n += 1;
+                }
+                *env.cost += gather_dma_cost(env.cfg, ty.size_bytes(), &addrs[..n]);
+                *env.gbytes += n as u64 * ty.size_bytes();
+                let mut k = 0usize;
+                for lane in 0..self.lanes as usize {
+                    if active >> lane & 1 == 0 {
+                        continue;
+                    }
+                    let v = Value { bits: self.vo(val, lane), ty: Type::Scalar(*ty) };
+                    env.global.store(addrs[k], *ty, v)?;
+                    k += 1;
+                }
+            }
+            TInst::VAtom { op, ty, dst, base, idx, scale, disp, val, val2, local } => {
+                for lane in 0..self.lanes as usize {
+                    if active >> lane & 1 == 0 { continue; }
+                    *env.cost += if *local {
+                        env.cfg.local_mem_cost * 2
+                    } else {
+                        env.cfg.dma_base_cost / 2 + env.cfg.dma_per_32b_cost
+                    };
+                    let a = self.vaddr(*base, *idx, *scale, *disp, lane);
+                    let m: &mut DeviceMemory =
+                        if *local { env.scratch } else { env.global };
+                    let old = m.load(a, *ty)?;
+                    let v = Value { bits: self.vo(val, lane), ty: Type::Scalar(*ty) };
+                    let v2 = val2.map(|v2| Value { bits: self.vo(&v2, lane), ty: Type::Scalar(*ty) });
+                    let new = apply_atom(*op, *ty, old, v, v2)
+                        .map_err(|e| HetError::fault(env.cfg.name, e.to_string()))?;
+                    m.store(a, *ty, new)?;
+                    if let Some(d) = dst {
+                        self.vregs[d.0 as usize][lane] = old.bits;
+                    }
+                }
+            }
+            TInst::VVote { kind, dst, src } => {
+                *env.cost += env.cfg.vector_emu_base_cost
+                    + env.cfg.vector_emu_lane_cost * active.count_ones() as u64;
+                let mut any = false;
+                let mut all = true;
+                for lane in 0..self.lanes as usize {
+                    if active >> lane & 1 == 0 { continue; }
+                    let p = self.vo(src, lane) & 1 != 0;
+                    any |= p;
+                    all &= p;
+                }
+                let r = match kind {
+                    VoteKind::Any => any,
+                    VoteKind::All => all,
+                };
+                self.sregs[dst.0 as usize] = r as u64;
+            }
+            TInst::VBallot { dst, src } => {
+                *env.cost += env.cfg.vector_emu_base_cost
+                    + env.cfg.vector_emu_lane_cost * active.count_ones() as u64;
+                let mut m = 0u64;
+                for lane in 0..self.lanes as usize {
+                    if active >> lane & 1 == 0 { continue; }
+                    if self.vo(src, lane) & 1 != 0 {
+                        m |= 1 << lane;
+                    }
+                }
+                self.sregs[dst.0 as usize] = m;
+            }
+            TInst::VShfl { kind, ty: _, dst, val, lane } => {
+                *env.cost += env.cfg.vector_emu_base_cost
+                    + env.cfg.vector_emu_lane_cost * active.count_ones() as u64;
+                let lanes: Vec<usize> = self.lanes_of(active).collect();
+                let srcs: Vec<u64> = lanes.iter().map(|&l| self.vo(val, l)).collect();
+                let n = lanes.len() as i64;
+                for (pos, &l) in lanes.iter().enumerate() {
+                    let sel = self.vo(lane, l) as i64;
+                    let src_pos = match kind {
+                        crate::hetir::instr::ShflKind::Idx => sel,
+                        crate::hetir::instr::ShflKind::Down => pos as i64 + sel,
+                        crate::hetir::instr::ShflKind::Up => pos as i64 - sel,
+                        crate::hetir::instr::ShflKind::Xor => pos as i64 ^ sel,
+                    };
+                    let v = if src_pos >= 0 && src_pos < n { srcs[src_pos as usize] } else { srcs[pos] };
+                    self.vregs[dst.0 as usize][l] = v;
+                }
+            }
+
+            // ---- mesh / sync ----
+            TInst::MeshBar { id } => {
+                *env.cost += env.cfg.mesh_bar_cost;
+                if active != self.full_mask {
+                    return Err(HetError::fault(
+                        env.cfg.name,
+                        format!("mesh barrier {id} with partial lane mask {active:#x}"),
+                    ));
+                }
+                return Ok(Some(CoreStop::MeshBar(*id)));
+            }
+            TInst::MeshVoteAny { dst, src } => {
+                *env.cost += env.cfg.mesh_vote_cost;
+                let mut any = false;
+                for lane in 0..self.lanes as usize {
+                    if active >> lane & 1 == 0 { continue; }
+                    any |= self.vo(src, lane) & 1 != 0;
+                }
+                return Ok(Some(CoreStop::MeshVote { dst: *dst, local_any: any }));
+            }
+            TInst::Ckpt { .. } => {
+                // Flag check only; the dump decision is made by the block
+                // scheduler at mesh-barrier release (group-wide agreement
+                // — see the SIMT warp interpreter for the race this
+                // avoids).
+                let _ = env.pause.load(Ordering::SeqCst);
+            }
+            TInst::Trap { code } => {
+                return Err(HetError::fault(
+                    env.cfg.name,
+                    format!("device trap {code} in {}", p.kernel_name),
+                ));
+            }
+        }
+        Ok(None)
+    }
+
+    /// Run until suspension.
+    pub fn run(&mut self, p: &TensixProgram, env: &mut TEnv) -> Result<CoreStop> {
+        loop {
+            let frame = match self.frames.last_mut() {
+                Some(f) => f,
+                None => return Ok(CoreStop::Done),
+            };
+            let block = &p.blocks[frame.block];
+            if frame.idx >= block.len() {
+                let f = self.frames.pop().unwrap();
+                match f.ctx {
+                    TCtx::Top => return Ok(CoreStop::Done),
+                    TCtx::SBranch | TCtx::VElse => {}
+                    TCtx::VThen { pending_else: Some((else_b, e_mask)) } => {
+                        self.frames.push(TFrame {
+                            block: else_b,
+                            idx: 0,
+                            entry_mask: e_mask,
+                            ctx: TCtx::VElse,
+                        });
+                    }
+                    TCtx::VThen { pending_else: None } => {}
+                    TCtx::SLoopCond { loop_ref } => {
+                        let (lb, li) = loop_ref;
+                        let (cond_reg, body) = match &p.blocks[lb][li] {
+                            TStmt::SLoop { cond_reg, body, .. } => (*cond_reg, *body),
+                            _ => unreachable!(),
+                        };
+                        *env.cost += env.cfg.scalar_cost;
+                        if self.sregs[cond_reg.0 as usize] & 1 != 0 {
+                            self.frames.push(TFrame {
+                                block: body,
+                                idx: 0,
+                                entry_mask: f.entry_mask,
+                                ctx: TCtx::SLoopBody { loop_ref, broken: false },
+                            });
+                        }
+                    }
+                    TCtx::SLoopBody { loop_ref, broken } => {
+                        if !broken && self.ret_mask & f.entry_mask != f.entry_mask {
+                            let (lb, li) = loop_ref;
+                            let cond = match &p.blocks[lb][li] {
+                                TStmt::SLoop { cond, .. } => *cond,
+                                _ => unreachable!(),
+                            };
+                            if f.entry_mask & !self.ret_mask != 0 {
+                                self.frames.push(TFrame {
+                                    block: cond,
+                                    idx: 0,
+                                    entry_mask: f.entry_mask,
+                                    ctx: TCtx::SLoopCond { loop_ref },
+                                });
+                            }
+                        }
+                    }
+                    TCtx::VLoopCond { loop_ref, loop_mask } => {
+                        let (lb, li) = loop_ref;
+                        let (cond_reg, body, collective) = match &p.blocks[lb][li] {
+                            TStmt::VLoop { cond_reg, body, collective, .. } => {
+                                (*cond_reg, *body, *collective)
+                            }
+                            _ => unreachable!(),
+                        };
+                        *env.cost += env.cfg.vector_emu_base_cost;
+                        let live = loop_mask & !self.ret_mask;
+                        let mut stay = 0u32;
+                        for lane in 0..self.lanes {
+                            if live >> lane & 1 != 0
+                                && self.vregs[cond_reg.0 as usize][lane as usize] & 1 != 0
+                            {
+                                stay |= 1 << lane;
+                            }
+                        }
+                        // Collective loops iterate while ANY core in the
+                        // group wants to (mesh-vote result), even with an
+                        // all-zero local mask, so nested mesh ops stay in
+                        // lockstep across the group.
+                        let go = match collective {
+                            Some(s) => self.sregs[s.0 as usize] & 1 != 0,
+                            None => stay != 0,
+                        };
+                        if go {
+                            self.frames.push(TFrame {
+                                block: body,
+                                idx: 0,
+                                entry_mask: stay,
+                                ctx: TCtx::VLoopBody {
+                                    loop_ref,
+                                    loop_mask: stay,
+                                    break_mask: 0,
+                                    cont_mask: 0,
+                                },
+                            });
+                        }
+                    }
+                    TCtx::VLoopBody { loop_ref, loop_mask, break_mask, .. } => {
+                        let (lb, li) = loop_ref;
+                        let (cond, collective) = match &p.blocks[lb][li] {
+                            TStmt::VLoop { cond, collective, .. } => (*cond, *collective),
+                            _ => unreachable!(),
+                        };
+                        let next = loop_mask & !break_mask & !self.ret_mask;
+                        if next != 0 || collective.is_some() {
+                            self.frames.push(TFrame {
+                                block: cond,
+                                idx: 0,
+                                entry_mask: next,
+                                ctx: TCtx::VLoopCond { loop_ref, loop_mask: next },
+                            });
+                        }
+                    }
+                }
+                continue;
+            }
+            let cur_block = frame.block;
+            let stmt_idx = frame.idx;
+            frame.idx += 1;
+            match &block[stmt_idx] {
+                TStmt::I(inst) => {
+                    if let Some(stop) = self.exec_inst(p, env, inst)? {
+                        return Ok(stop);
+                    }
+                }
+                TStmt::SIf { cond, then_b, else_b } => {
+                    *env.cost += env.cfg.scalar_cost;
+                    let taken = self.sregs[cond.0 as usize] & 1 != 0;
+                    let target = if taken { *then_b } else { *else_b };
+                    if !p.blocks[target].is_empty() {
+                        let mask = self.active();
+                        self.frames.push(TFrame {
+                            block: target,
+                            idx: 0,
+                            entry_mask: mask,
+                            ctx: TCtx::SBranch,
+                        });
+                    }
+                }
+                TStmt::VIf { cond, then_b, else_b, always } => {
+                    let active = self.active();
+                    if active == 0 && !always {
+                        continue;
+                    }
+                    // Mask computation is integer-domain → emulated cost.
+                    *env.cost += env.cfg.vector_emu_base_cost
+                        + env.cfg.vector_emu_lane_cost * active.count_ones() as u64;
+                    let mut t = 0u32;
+                    for lane in 0..self.lanes {
+                        if active >> lane & 1 != 0
+                            && self.vregs[cond.0 as usize][lane as usize] & 1 != 0
+                        {
+                            t |= 1 << lane;
+                        }
+                    }
+                    let e = active & !t;
+                    let then_empty = p.blocks[*then_b].is_empty();
+                    let else_empty = p.blocks[*else_b].is_empty();
+                    if *always {
+                        // Protocol mode: enter both sides unconditionally
+                        // (zero-mask instructions are no-ops) so every core
+                        // reaches nested mesh rendezvous points.
+                        let pending = if !else_empty { Some((*else_b, e)) } else { None };
+                        if !then_empty {
+                            self.frames.push(TFrame {
+                                block: *then_b,
+                                idx: 0,
+                                entry_mask: t,
+                                ctx: TCtx::VThen { pending_else: pending },
+                            });
+                        } else if let Some((eb, em)) = pending {
+                            self.frames.push(TFrame {
+                                block: eb,
+                                idx: 0,
+                                entry_mask: em,
+                                ctx: TCtx::VElse,
+                            });
+                        }
+                        continue;
+                    }
+                    if t != 0 && !then_empty {
+                        let pending = if e != 0 && !else_empty { Some((*else_b, e)) } else { None };
+                        self.frames.push(TFrame {
+                            block: *then_b,
+                            idx: 0,
+                            entry_mask: t,
+                            ctx: TCtx::VThen { pending_else: pending },
+                        });
+                    } else if e != 0 && !else_empty {
+                        self.frames.push(TFrame {
+                            block: *else_b,
+                            idx: 0,
+                            entry_mask: e,
+                            ctx: TCtx::VElse,
+                        });
+                    }
+                }
+                TStmt::SLoop { cond, .. } => {
+                    let mask = self.active();
+                    self.frames.push(TFrame {
+                        block: *cond,
+                        idx: 0,
+                        entry_mask: mask,
+                        ctx: TCtx::SLoopCond { loop_ref: (cur_block, stmt_idx) },
+                    });
+                }
+                TStmt::VLoop { cond, collective, .. } => {
+                    let active = self.active();
+                    if active == 0 && collective.is_none() {
+                        continue;
+                    }
+                    self.frames.push(TFrame {
+                        block: *cond,
+                        idx: 0,
+                        entry_mask: active,
+                        ctx: TCtx::VLoopCond {
+                            loop_ref: (cur_block, stmt_idx),
+                            loop_mask: active,
+                        },
+                    });
+                }
+                TStmt::Break => {
+                    let m = self.active();
+                    // Find the nearest loop frame; vector loops accumulate
+                    // a break mask, scalar loops unwind uniformly.
+                    let mut unwind_to: Option<usize> = None;
+                    for (fi, f) in self.frames.iter_mut().enumerate().rev() {
+                        match &mut f.ctx {
+                            TCtx::VLoopBody { break_mask, .. } => {
+                                *break_mask |= m;
+                                break;
+                            }
+                            TCtx::SLoopBody { broken, .. } => {
+                                *broken = true;
+                                unwind_to = Some(fi);
+                                break;
+                            }
+                            _ => {}
+                        }
+                    }
+                    if let Some(fi) = unwind_to {
+                        // Uniform break: drop inner frames, finish the loop
+                        // body frame immediately.
+                        self.frames.truncate(fi + 1);
+                        let f = self.frames.last_mut().unwrap();
+                        f.idx = p.blocks[f.block].len();
+                    }
+                }
+                TStmt::Continue => {
+                    let m = self.active();
+                    let mut unwind_to: Option<usize> = None;
+                    for (fi, f) in self.frames.iter_mut().enumerate().rev() {
+                        match &mut f.ctx {
+                            TCtx::VLoopBody { cont_mask, .. } => {
+                                *cont_mask |= m;
+                                break;
+                            }
+                            TCtx::SLoopBody { .. } => {
+                                unwind_to = Some(fi);
+                                break;
+                            }
+                            _ => {}
+                        }
+                    }
+                    if let Some(fi) = unwind_to {
+                        self.frames.truncate(fi + 1);
+                        let f = self.frames.last_mut().unwrap();
+                        f.idx = p.blocks[f.block].len();
+                    }
+                }
+                TStmt::Return => {
+                    self.ret_mask |= self.active();
+                }
+            }
+        }
+    }
+}
+
+fn bulk_dma_cost(cfg: &TensixConfig, bytes: u64) -> u64 {
+    let per_byte = bytes.div_ceil(32) * cfg.dma_per_32b_cost;
+    if cfg.async_dma {
+        // Double-buffered: setup latency hidden behind compute.
+        per_byte
+    } else {
+        cfg.dma_base_cost + per_byte
+    }
+}
+
+/// Gather/scatter cost. A run of *contiguous* lane addresses coalesces
+/// into a single DMA burst (what a real descriptor engine does — and what
+/// a hand-written Metalium kernel gets with a bulk transfer); scattered
+/// addresses serialize into per-lane beats, the paper's slow prototype
+/// path.
+fn gather_dma_cost(cfg: &TensixConfig, elem: u64, addrs: &[u64]) -> u64 {
+    let contiguous =
+        addrs.len() > 1 && addrs.windows(2).all(|w| w[1].wrapping_sub(w[0]) == elem);
+    let beats = if contiguous {
+        (addrs.len() as u64 * elem).div_ceil(32) * cfg.dma_per_32b_cost
+    } else {
+        addrs.len() as u64 * 4
+    };
+    if cfg.async_dma {
+        cfg.dma_base_cost / 4 + beats
+    } else {
+        cfg.dma_base_cost + beats
+    }
+}
+
+fn apply_atom(
+    op: AtomOp,
+    ty: Scalar,
+    old: Value,
+    v: Value,
+    v2: Option<Value>,
+) -> crate::error::Result<Value> {
+    Ok(match op {
+        AtomOp::Add => alu::bin(BinOp::Add, ty, old, v)?,
+        AtomOp::Min => alu::bin(BinOp::Min, ty, old, v)?,
+        AtomOp::Max => alu::bin(BinOp::Max, ty, old, v)?,
+        AtomOp::And => alu::bin(BinOp::And, ty, old, v)?,
+        AtomOp::Or => alu::bin(BinOp::Or, ty, old, v)?,
+        AtomOp::Exch => v,
+        AtomOp::Cas => {
+            if old.bits == v.bits {
+                v2.expect("verified CAS")
+            } else {
+                old
+            }
+        }
+    })
+}

@@ -1,0 +1,652 @@
+//! Tensix device simulator: mapping thread blocks onto the core mesh.
+//!
+//! Implements the paper's three SIMT-on-MIMD strategies (§4.4):
+//!
+//! * **Vector single-core** — each block (≤32 threads) runs on one core's
+//!   vector unit; shared memory lives in the core's scratchpad.
+//! * **Vector multi-core** — a block of N>32 threads spans `ceil(N/32)`
+//!   cores; block barriers become mesh barriers, divergence agreement uses
+//!   mesh votes, and shared memory is a designated global-DRAM region
+//!   (paper §5.1 "if a block spans multiple cores, we allocate ... in
+//!   global memory").
+//! * **Scalar MIMD** — barrier-free kernels run one thread at a time per
+//!   core; no emulation overhead, less parallelism per core — the mode
+//!   that wins on irregular kernels (§6.2).
+
+pub mod core;
+
+use crate::error::{HetError, Result};
+use crate::hetir::types::Value;
+use crate::isa::tensix_isa::{TensixConfig, TensixMode, TensixProgram};
+use crate::sim::mem::DeviceMemory;
+use crate::sim::simt::LaunchDims;
+use crate::sim::snapshot::*;
+use core::{CoreState, CoreStop, TEnv};
+use std::sync::atomic::{AtomicBool, Ordering};
+
+#[derive(Debug, Clone, PartialEq)]
+enum CStatus {
+    Ready,
+    AtBar(u32),
+    AtVote { dst: crate::isa::tensix_isa::SR, local: bool },
+    Dumped(u32),
+    Done,
+}
+
+/// One simulated Tensix device.
+pub struct TensixSim {
+    pub cfg: TensixConfig,
+}
+
+impl TensixSim {
+    pub fn new(cfg: TensixConfig) -> TensixSim {
+        TensixSim { cfg }
+    }
+
+    /// Run a grid. `shared_heap` must point at a reserved global region of
+    /// `grid_size * program.shared_bytes` bytes when the program was
+    /// compiled for multi-core mode and uses shared memory.
+    pub fn run_grid(
+        &self,
+        p: &TensixProgram,
+        dims: LaunchDims,
+        params: &[Value],
+        global: &mut DeviceMemory,
+        pause: &AtomicBool,
+        resume: Option<&[BlockResume]>,
+        shared_heap: Option<u64>,
+    ) -> Result<LaunchOutcome> {
+        let grid_size = dims.grid_size();
+        let block_size = dims.block_size();
+        if block_size == 0 || grid_size == 0 {
+            return Err(HetError::runtime("empty launch"));
+        }
+        match p.mode {
+            TensixMode::VectorSingleCore if block_size > 32 => {
+                return Err(HetError::runtime(format!(
+                    "single-core mode requires block size <= 32, got {block_size}"
+                )));
+            }
+            TensixMode::VectorMultiCore if p.shared_bytes > 0 && shared_heap.is_none() => {
+                return Err(HetError::runtime(
+                    "multi-core program with shared memory needs a shared heap",
+                ));
+            }
+            _ => {}
+        }
+        if let Some(r) = resume {
+            if r.len() != grid_size as usize {
+                return Err(HetError::migrate("resume directive count mismatch"));
+            }
+        }
+
+        let mut cost = CostReport::default();
+        let mut block_cycles: Vec<u64> = Vec::with_capacity(grid_size as usize);
+        let mut states: Vec<BlockState> = Vec::with_capacity(grid_size as usize);
+        let mut paused = false;
+
+        for b in 0..grid_size {
+            let directive = resume.map(|r| &r[b as usize]);
+            if matches!(directive, Some(BlockResume::Skip)) {
+                states.push(BlockState::Done);
+                block_cycles.push(0);
+                continue;
+            }
+            if paused || (p.migratable && pause.load(Ordering::SeqCst)) {
+                paused = true;
+                states.push(BlockState::NotStarted);
+                block_cycles.push(0);
+                continue;
+            }
+            let shared_base = match p.mode {
+                TensixMode::VectorMultiCore => {
+                    shared_heap.unwrap_or(0) + b as u64 * p.shared_bytes
+                }
+                _ => 0, // scratchpad offset
+            };
+            let (state, cycles) = match p.mode {
+                TensixMode::ScalarMimd => {
+                    self.run_block_mimd(p, dims, b, params, global, pause, &mut cost)?
+                }
+                _ => self.run_block_vector(
+                    p,
+                    dims,
+                    b,
+                    params,
+                    global,
+                    pause,
+                    directive,
+                    shared_base,
+                    &mut cost,
+                )?,
+            };
+            if matches!(state, BlockState::Suspended(_)) {
+                paused = true;
+            }
+            block_cycles.push(cycles);
+            states.push(state);
+        }
+
+        // Device critical path.
+        match p.mode {
+            // MIMD: every thread is an independent scalar job; the mesh
+            // packs them across all cores, so the critical path is the
+            // total scalar work divided by the core count (bounded below
+            // by the longest single block).
+            TensixMode::ScalarMimd => {
+                let packed = cost.total_cycles / self.cfg.num_cores.max(1) as u64;
+                let longest = block_cycles.iter().copied().max().unwrap_or(0);
+                cost.device_cycles = packed.max(longest);
+            }
+            // Vector modes: blocks occupy core-group slots.
+            _ => {
+                let cores_per_block = match p.mode {
+                    TensixMode::VectorMultiCore => block_size.div_ceil(32).max(1),
+                    _ => 1,
+                };
+                let slots = (self.cfg.num_cores / cores_per_block).max(1) as usize;
+                let mut queues = vec![0u64; slots];
+                for (i, c) in block_cycles.iter().enumerate() {
+                    queues[i % slots] += c;
+                }
+                cost.device_cycles = queues.into_iter().max().unwrap_or(0);
+            }
+        }
+
+        if paused {
+            Ok(LaunchOutcome::Paused { grid: PausedGrid { blocks: states }, cost })
+        } else {
+            Ok(LaunchOutcome::Completed(cost))
+        }
+    }
+
+    /// Vector modes: a block on one core or a mesh-coordinated core group.
+    #[allow(clippy::too_many_arguments)]
+    fn run_block_vector(
+        &self,
+        p: &TensixProgram,
+        dims: LaunchDims,
+        block_linear: u32,
+        params: &[Value],
+        global: &mut DeviceMemory,
+        pause: &AtomicBool,
+        directive: Option<&BlockResume>,
+        shared_base: u64,
+        cost: &mut CostReport,
+    ) -> Result<(BlockState, u64)> {
+        let block_size = dims.block_size();
+        let num_cores = block_size.div_ceil(32);
+        let single_core = p.mode == TensixMode::VectorSingleCore;
+
+        let mut cores: Vec<CoreState> = Vec::with_capacity(num_cores as usize);
+        let mut scratches: Vec<DeviceMemory> = Vec::with_capacity(num_cores as usize);
+        let mut statuses = vec![CStatus::Ready; num_cores as usize];
+        for s in 0..num_cores {
+            let lanes = 32.min(block_size - s * 32);
+            let core = match directive {
+                None | Some(BlockResume::FromEntry) => {
+                    CoreState::new(p, s, lanes, params, shared_base)
+                }
+                Some(BlockResume::FromBarrier(cap)) => CoreState::resume(
+                    p,
+                    s,
+                    lanes,
+                    params,
+                    shared_base,
+                    cap.barrier_id,
+                    &cap.threads,
+                )?,
+                Some(BlockResume::Skip) => unreachable!(),
+            };
+            cores.push(core);
+            scratches.push(DeviceMemory::new(self.cfg.scratchpad_bytes, self.cfg.name));
+        }
+        // Restore shared memory.
+        if let Some(BlockResume::FromBarrier(cap)) = directive {
+            if p.shared_bytes > 0 {
+                if single_core {
+                    scratches[0].write_bytes(shared_base, &cap.shared_mem)?;
+                } else {
+                    global.write_bytes(shared_base, &cap.shared_mem)?;
+                }
+            }
+        }
+
+        let mut core_costs = vec![0u64; num_cores as usize];
+        let mut insts = 0u64;
+        let mut gbytes = 0u64;
+        loop {
+            let mut progressed = false;
+            for c in 0..num_cores as usize {
+                if statuses[c] != CStatus::Ready {
+                    continue;
+                }
+                progressed = true;
+                let mut env = TEnv {
+                    cfg: &self.cfg,
+                    global,
+                    scratch: &mut scratches[c],
+                    block_idx: dims.block_coords(block_linear),
+                    block_dim: dims.block,
+                    grid_dim: dims.grid,
+                    core_slot: c as u32,
+                    mimd_thread: [0; 3],
+                    pause,
+                    cost: &mut core_costs[c],
+                    insts: &mut insts,
+                    gbytes: &mut gbytes,
+                };
+                statuses[c] = match cores[c].run(p, &mut env)? {
+                    CoreStop::MeshBar(id) => CStatus::AtBar(id),
+                    CoreStop::MeshVote { dst, local_any } => {
+                        CStatus::AtVote { dst, local: local_any }
+                    }
+                    CoreStop::Dumped(id) => CStatus::Dumped(id),
+                    CoreStop::Done => CStatus::Done,
+                };
+            }
+
+            if statuses.iter().all(|s| *s == CStatus::Done) {
+                cost.warp_instructions += insts;
+                let block_cost = *core_costs.iter().max().unwrap();
+                cost.total_cycles += core_costs.iter().sum::<u64>();
+                cost.global_bytes += gbytes;
+                return Ok((BlockState::Done, block_cost));
+            }
+
+            if statuses.iter().all(|s| matches!(s, CStatus::Dumped(_))) {
+                let id = match &statuses[0] {
+                    CStatus::Dumped(id) => *id,
+                    _ => unreachable!(),
+                };
+                let mut threads = Vec::with_capacity(block_size as usize);
+                for core in cores.iter_mut() {
+                    threads.append(core.dump.as_mut().expect("dumped core"));
+                }
+                let mut shared_mem = vec![0u8; p.shared_bytes as usize];
+                if p.shared_bytes > 0 {
+                    if single_core {
+                        scratches[0].read_bytes(shared_base, &mut shared_mem)?;
+                    } else {
+                        global.read_bytes(shared_base, &mut shared_mem)?;
+                    }
+                }
+                cost.warp_instructions += insts;
+                cost.total_cycles += core_costs.iter().sum::<u64>();
+                cost.global_bytes += gbytes;
+                let block_cost = *core_costs.iter().max().unwrap();
+                return Ok((
+                    BlockState::Suspended(BlockCapture {
+                        block_idx: block_linear,
+                        barrier_id: id,
+                        threads,
+                        shared_mem,
+                    }),
+                    block_cost,
+                ));
+            }
+
+            // Mesh barrier release: all cores at the same id.
+            let at_bar: Vec<u32> = statuses
+                .iter()
+                .filter_map(|s| match s {
+                    CStatus::AtBar(id) => Some(*id),
+                    _ => None,
+                })
+                .collect();
+            if at_bar.len() == num_cores as usize {
+                let id = at_bar[0];
+                if at_bar.iter().any(|b| *b != id) {
+                    return Err(HetError::fault(self.cfg.name, "cores at different mesh barriers"));
+                }
+                // Group-wide cooperative pause decision at barrier release.
+                if p.migratable && pause.load(Ordering::SeqCst) {
+                    if let Some(site) = p.ckpt_sites.iter().find(|s| s.barrier_id == id) {
+                        for (c, (core, st)) in
+                            cores.iter_mut().zip(statuses.iter_mut()).enumerate()
+                        {
+                            core.dump_at(&self.cfg, site, &mut core_costs[c])?;
+                            *st = CStatus::Dumped(id);
+                        }
+                        continue;
+                    }
+                }
+                for s in statuses.iter_mut() {
+                    *s = CStatus::Ready;
+                }
+                continue;
+            }
+
+            // Mesh vote release: all cores arrived at a vote; OR and deliver.
+            let votes: Vec<(usize, crate::isa::tensix_isa::SR, bool)> = statuses
+                .iter()
+                .enumerate()
+                .filter_map(|(i, s)| match s {
+                    CStatus::AtVote { dst, local } => Some((i, *dst, *local)),
+                    _ => None,
+                })
+                .collect();
+            if votes.len() == num_cores as usize {
+                let result = votes.iter().any(|(_, _, l)| *l);
+                for (i, dst, _) in votes {
+                    cores[i].deliver_vote(dst, result);
+                    statuses[i] = CStatus::Ready;
+                }
+                continue;
+            }
+
+            if !progressed {
+                return Err(HetError::fault(
+                    self.cfg.name,
+                    format!("mesh deadlock in {}: {statuses:?}", p.kernel_name),
+                ));
+            }
+        }
+    }
+
+    /// MIMD mode: threads of the block run independently, round-robin over
+    /// cores. Barrier-free programs only (the translator enforces this).
+    #[allow(clippy::too_many_arguments)]
+    fn run_block_mimd(
+        &self,
+        p: &TensixProgram,
+        dims: LaunchDims,
+        block_linear: u32,
+        params: &[Value],
+        global: &mut DeviceMemory,
+        pause: &AtomicBool,
+        cost: &mut CostReport,
+    ) -> Result<(BlockState, u64)> {
+        let block_size = dims.block_size();
+        let n_cores = self.cfg.num_cores.max(1);
+        let mut core_costs = vec![0u64; n_cores as usize];
+        let mut insts = 0u64;
+        let mut gbytes = 0u64;
+        let mut scratch = DeviceMemory::new(self.cfg.scratchpad_bytes, self.cfg.name);
+        for t in 0..block_size {
+            let bd = dims.block;
+            let tc = [t % bd[0], (t / bd[0]) % bd[1], t / (bd[0] * bd[1])];
+            let mut core = CoreState::new(p, 0, 1, params, 0);
+            let slot = (t % n_cores) as usize;
+            // Per-thread dispatch overhead (the "batches" of §6.2).
+            core_costs[slot] += 2 * self.cfg.scalar_cost;
+            let mut env = TEnv {
+                cfg: &self.cfg,
+                global,
+                scratch: &mut scratch,
+                block_idx: dims.block_coords(block_linear),
+                block_dim: dims.block,
+                grid_dim: dims.grid,
+                core_slot: 0,
+                mimd_thread: tc,
+                pause,
+                cost: &mut core_costs[slot],
+                insts: &mut insts,
+                gbytes: &mut gbytes,
+            };
+            match core.run(p, &mut env)? {
+                CoreStop::Done => {}
+                other => {
+                    return Err(HetError::fault(
+                        self.cfg.name,
+                        format!("MIMD thread suspended unexpectedly: {other:?}"),
+                    ))
+                }
+            }
+        }
+        cost.warp_instructions += insts;
+        cost.total_cycles += core_costs.iter().sum::<u64>();
+        cost.global_bytes += gbytes;
+        let block_cost = *core_costs.iter().max().unwrap_or(&0);
+        Ok((BlockState::Done, block_cost))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hetir::instr::{BinOp, Dim};
+    use crate::hetir::types::{AddrSpace, Scalar};
+    use crate::isa::tensix_isa::*;
+
+    /// Vector single-core vecadd: C[i] = A[i] + B[i] over one 32-thread
+    /// block. Params in s0..s2. v0 = lane id, gathers via DMA.
+    fn vadd_vector() -> TensixProgram {
+        use TInst as I;
+        TensixProgram {
+            kernel_name: "vadd".into(),
+            mode: TensixMode::VectorSingleCore,
+            blocks: vec![vec![
+                TStmt::I(I::VLaneId { dst: VR(0) }),
+                TStmt::I(I::VDmaGather {
+                    ty: Scalar::F32,
+                    dst: VR(1),
+                    base: SR(0),
+                    idx: Some(VR(0)),
+                    scale: 4,
+                    disp: 0,
+                }),
+                TStmt::I(I::VDmaGather {
+                    ty: Scalar::F32,
+                    dst: VR(2),
+                    base: SR(1),
+                    idx: Some(VR(0)),
+                    scale: 4,
+                    disp: 0,
+                }),
+                TStmt::I(I::VBin {
+                    op: BinOp::Add,
+                    ty: Scalar::F32,
+                    dst: VR(3),
+                    a: VR(1).into(),
+                    b: VR(2).into(),
+                }),
+                TStmt::I(I::VDmaScatter {
+                    ty: Scalar::F32,
+                    base: SR(2),
+                    idx: Some(VR(0)),
+                    scale: 4,
+                    disp: 0,
+                    val: VR(3).into(),
+                }),
+            ]],
+            entry: 0,
+            num_sregs: 4,
+            num_vregs: 4,
+            shared_bytes: 0,
+            shared_base_sreg: SR(3),
+            num_params: 3,
+            ckpt_sites: vec![],
+            migratable: false,
+        }
+    }
+
+    #[test]
+    fn vector_single_core_vadd() {
+        let sim = TensixSim::new(TensixConfig::blackhole());
+        let p = vadd_vector();
+        let mut mem = DeviceMemory::new(4096, "t");
+        for i in 0..32u64 {
+            mem.store(i * 4, Scalar::F32, Value::f32(i as f32)).unwrap();
+            mem.store(512 + i * 4, Scalar::F32, Value::f32(10.0)).unwrap();
+        }
+        let params = [
+            Value::ptr(0, AddrSpace::Global),
+            Value::ptr(512, AddrSpace::Global),
+            Value::ptr(1024, AddrSpace::Global),
+        ];
+        let pause = AtomicBool::new(false);
+        let out = sim
+            .run_grid(&p, LaunchDims::d1(1, 32), &params, &mut mem, &pause, None, None)
+            .unwrap();
+        assert!(out.is_completed());
+        for i in 0..32u64 {
+            assert_eq!(
+                mem.load(1024 + i * 4, Scalar::F32).unwrap().as_f32(),
+                i as f32 + 10.0
+            );
+        }
+        // Synchronous DMA must dominate the cost (3 gathers/scatters).
+        assert!(out.cost().total_cycles > 3 * sim.cfg.dma_base_cost);
+    }
+
+    /// MIMD scalar program: each thread writes threadIdx.x * 3 to out[tid].
+    fn mimd_mul3() -> TensixProgram {
+        use TInst as I;
+        TensixProgram {
+            kernel_name: "mul3".into(),
+            mode: TensixMode::ScalarMimd,
+            blocks: vec![vec![
+                TStmt::I(I::SSpecial { dst: SR(1), kind: TSpecial::MimdThread(Dim::X) }),
+                TStmt::I(I::SBin {
+                    op: BinOp::Mul,
+                    ty: Scalar::U32,
+                    dst: SR(2),
+                    a: SR(1).into(),
+                    b: So::Imm(Value::u32(3)),
+                }),
+                TStmt::I(I::SCvt {
+                    from: Scalar::U32,
+                    to: Scalar::U64,
+                    dst: SR(3),
+                    src: SR(1).into(),
+                }),
+                TStmt::I(I::SDmaSt {
+                    ty: Scalar::U32,
+                    addr: TAddr { base: SR(0), index: Some(SR(3)), scale: 4, disp: 0 },
+                    val: SR(2).into(),
+                }),
+            ]],
+            entry: 0,
+            num_sregs: 5,
+            num_vregs: 0,
+            shared_bytes: 0,
+            shared_base_sreg: SR(4),
+            num_params: 1,
+            ckpt_sites: vec![],
+            migratable: false,
+        }
+    }
+
+    #[test]
+    fn mimd_runs_threads_independently() {
+        let sim = TensixSim::new(TensixConfig::blackhole());
+        let p = mimd_mul3();
+        let mut mem = DeviceMemory::new(4096, "t");
+        let pause = AtomicBool::new(false);
+        let out = sim
+            .run_grid(
+                &p,
+                LaunchDims::d1(1, 200),
+                &[Value::ptr(0, AddrSpace::Global)],
+                &mut mem,
+                &pause,
+                None,
+                None,
+            )
+            .unwrap();
+        assert!(out.is_completed());
+        for t in 0..200u64 {
+            assert_eq!(mem.load(t * 4, Scalar::U32).unwrap().as_u32(), t as u32 * 3);
+        }
+    }
+
+    #[test]
+    fn single_core_rejects_big_blocks() {
+        let sim = TensixSim::new(TensixConfig::blackhole());
+        let p = vadd_vector();
+        let mut mem = DeviceMemory::new(4096, "t");
+        let pause = AtomicBool::new(false);
+        let err = sim
+            .run_grid(
+                &p,
+                LaunchDims::d1(1, 64),
+                &[Value::ptr(0, AddrSpace::Global)],
+                &mut mem,
+                &pause,
+                None,
+                None,
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("single-core"));
+    }
+
+    /// Multi-core: 64-thread block over 2 cores with a mesh barrier and a
+    /// mesh vote; verifies cross-core coordination.
+    #[test]
+    fn multi_core_mesh_bar_and_vote() {
+        use TInst as I;
+        // Each core: v0 = laneid; vote-any(lane id + slice*32 == 40);
+        // only core 1 has that lane, but BOTH cores must see result=1.
+        // After the barrier, core writes vote result to out[core_slot].
+        let p = TensixProgram {
+            kernel_name: "mesh".into(),
+            mode: TensixMode::VectorMultiCore,
+            blocks: vec![vec![
+                TStmt::I(I::VLaneId { dst: VR(0) }),
+                TStmt::I(I::SSpecial { dst: SR(1), kind: TSpecial::CoreSlot }),
+                TStmt::I(I::SBin {
+                    op: BinOp::Mul,
+                    ty: Scalar::U32,
+                    dst: SR(2),
+                    a: SR(1).into(),
+                    b: So::Imm(Value::u32(32)),
+                }),
+                // v1 = lane + slice*32 (global thread id)
+                TStmt::I(I::VBin {
+                    op: BinOp::Add,
+                    ty: Scalar::U32,
+                    dst: VR(1),
+                    a: VR(0).into(),
+                    b: Vo::Splat(SR(2)),
+                }),
+                TStmt::I(I::VCmp {
+                    op: crate::hetir::instr::CmpOp::Eq,
+                    ty: Scalar::U32,
+                    dst: VR(2),
+                    a: VR(1).into(),
+                    b: Vo::Imm(Value::u32(40)),
+                }),
+                TStmt::I(I::MeshVoteAny { dst: SR(3), src: VR(2).into() }),
+                TStmt::I(I::MeshBar { id: 0 }),
+                TStmt::I(I::SCvt {
+                    from: Scalar::U32,
+                    to: Scalar::U64,
+                    dst: SR(4),
+                    src: SR(1).into(),
+                }),
+                TStmt::I(I::SDmaSt {
+                    ty: Scalar::U32,
+                    addr: TAddr { base: SR(0), index: Some(SR(4)), scale: 4, disp: 0 },
+                    val: SR(3).into(),
+                }),
+            ]],
+            entry: 0,
+            num_sregs: 6,
+            num_vregs: 3,
+            shared_bytes: 0,
+            shared_base_sreg: SR(5),
+            num_params: 1,
+            ckpt_sites: vec![],
+            migratable: false,
+        };
+        let sim = TensixSim::new(TensixConfig::blackhole());
+        let mut mem = DeviceMemory::new(4096, "t");
+        let pause = AtomicBool::new(false);
+        let out = sim
+            .run_grid(
+                &p,
+                LaunchDims::d1(1, 64),
+                &[Value::ptr(0, AddrSpace::Global)],
+                &mut mem,
+                &pause,
+                None,
+                None,
+            )
+            .unwrap();
+        assert!(out.is_completed());
+        // Both cores observed the vote result 1.
+        assert_eq!(mem.load(0, Scalar::U32).unwrap().as_u32(), 1);
+        assert_eq!(mem.load(4, Scalar::U32).unwrap().as_u32(), 1);
+    }
+}

@@ -1,0 +1,474 @@
+//! The paper's evaluation kernel suite (§6.1): "a single hetIR binary
+//! containing 10 kernels", authored in the CUDA subset and compiled once —
+//! the binary that must run unmodified on all four simulated GPUs.
+//!
+//! Each kernel comes with a CPU reference (`verify_*`) so the portability
+//! matrix (bench E1) checks numerics, not just absence of faults. The
+//! Monte-Carlo reference reuses `sim::alu::xorshift32`, keeping the PRNG
+//! bit-identical across CPU reference, SIMT devices and Tensix — the
+//! property §5.3's migration cross-check relies on.
+
+use crate::error::Result;
+use crate::runtime::api::{HetGpu, ModuleHandle, StreamHandle};
+use crate::runtime::launch::Arg;
+use crate::sim::alu;
+use crate::sim::simt::LaunchDims;
+
+/// All ten kernels as one translation unit — "one binary".
+pub const SUITE_SRC: &str = r#"
+// 1. vector addition (paper §6.1)
+__global__ void vecadd(float* a, float* b, float* c, unsigned n) {
+    unsigned i = blockIdx.x * blockDim.x + threadIdx.x;
+    if (i < n) c[i] = a[i] + b[i];
+}
+
+// 2. SAXPY
+__global__ void saxpy(float* x, float* y, float a, unsigned n) {
+    unsigned i = blockIdx.x * blockDim.x + threadIdx.x;
+    if (i < n) y[i] = a * x[i] + y[i];
+}
+
+// 3. tiled matrix multiply (16x16 shared-memory tiles, paper §6.1)
+__global__ void matmul16(float* A, float* B, float* C, unsigned n) {
+    __shared__ float As[256];
+    __shared__ float Bs[256];
+    unsigned tx = threadIdx.x;
+    unsigned ty = threadIdx.y;
+    unsigned row = blockIdx.y * 16u + ty;
+    unsigned col = blockIdx.x * 16u + tx;
+    float acc = 0.0f;
+    for (unsigned t = 0u; t < n / 16u; t++) {
+        As[ty * 16u + tx] = A[row * n + t * 16u + tx];
+        Bs[ty * 16u + tx] = B[(t * 16u + ty) * n + col];
+        __syncthreads();
+        for (unsigned k = 0u; k < 16u; k++) {
+            acc += As[ty * 16u + k] * Bs[k * 16u + tx];
+        }
+        __syncthreads();
+    }
+    C[row * n + col] = acc;
+}
+
+// 4. reduction (block tree + atomic, paper §6.1)
+__global__ void reduce_sum(float* in, float* out, unsigned n) {
+    __shared__ float tile[256];
+    unsigned t = threadIdx.x;
+    unsigned i = blockIdx.x * blockDim.x + threadIdx.x;
+    float v = 0.0f;
+    if (i < n) v = in[i];
+    tile[t] = v;
+    __syncthreads();
+    for (unsigned s = 128u; s > 0u; s >>= 1u) {
+        if (t < s) tile[t] += tile[t + s];
+        __syncthreads();
+    }
+    if (t == 0u) atomicAdd(&out[0], tile[0]);
+}
+
+// 5. inclusive scan within 32-thread teams (warp shuffle, paper §6.1)
+__global__ void scan32(float* data, unsigned n) {
+    unsigned i = blockIdx.x * blockDim.x + threadIdx.x;
+    unsigned lane = threadIdx.x % 32u;
+    float v = 0.0f;
+    if (i < n) v = data[i];
+    for (unsigned d = 1u; d < 32u; d <<= 1u) {
+        float w = __shfl_up_sync(0xffffffffu, v, d);
+        if (lane >= d) v = v + w;
+    }
+    if (i < n) data[i] = v;
+}
+
+// 6. bitcount via warp vote/ballot (paper §6.1)
+__global__ void bitcount(unsigned* data, unsigned* count, unsigned n) {
+    unsigned i = blockIdx.x * blockDim.x + threadIdx.x;
+    bool p = false;
+    if (i < n) p = (data[i] & 1u) == 1u;
+    unsigned m = __ballot_sync(0xffffffffu, p);
+    if (threadIdx.x % 32u == 0u) atomicAdd(&count[0], __popc(m));
+}
+
+// 7. Monte-Carlo pi (divergence + atomics, paper §6.1/§6.2)
+__global__ void mc_pi(unsigned* hits, unsigned iters, unsigned seed) {
+    unsigned i = blockIdx.x * blockDim.x + threadIdx.x;
+    unsigned s = seed + i * 2654435761u;
+    unsigned local = 0u;
+    for (unsigned k = 0u; k < iters; k++) {
+        unsigned xa = hetgpu_rand(s);
+        unsigned xb = hetgpu_rand(s);
+        float x = (float)(xa & 16777215u) / 16777216.0f;
+        float y = (float)(xb & 16777215u) / 16777216.0f;
+        if (x * x + y * y < 1.0f) local += 1u;
+    }
+    atomicAdd(&hits[0], local);
+}
+
+// 8. small neural-network layer: matmul + bias + ReLU (paper §6.1)
+__global__ void nn_layer(float* X, float* W, float* Bias, float* Out,
+                         unsigned d, unsigned h) {
+    unsigned j = blockIdx.x * blockDim.x + threadIdx.x;
+    unsigned row = blockIdx.y;
+    if (j < h) {
+        float acc = Bias[j];
+        for (unsigned k = 0u; k < d; k++) {
+            acc += X[row * d + k] * W[k * h + j];
+        }
+        Out[row * h + j] = fmaxf(acc, 0.0f);
+    }
+}
+
+// 9. 3-point stencil
+__global__ void stencil3(float* in, float* out, unsigned n) {
+    unsigned i = blockIdx.x * blockDim.x + threadIdx.x;
+    if (i > 0u && i < n - 1u) {
+        out[i] = 0.25f * in[i - 1u] + 0.5f * in[i] + 0.25f * in[i + 1u];
+    }
+}
+
+// 10. 16-bin histogram (atomics)
+__global__ void hist16(unsigned* data, unsigned* bins, unsigned n) {
+    unsigned i = blockIdx.x * blockDim.x + threadIdx.x;
+    if (i < n) atomicAdd(&bins[data[i] & 15u], 1u);
+}
+"#;
+
+/// Kernel names in the binary, in paper order.
+pub const KERNELS: [&str; 10] = [
+    "vecadd", "saxpy", "matmul16", "reduce_sum", "scan32", "bitcount", "mc_pi", "nn_layer",
+    "stencil3", "hist16",
+];
+
+/// Deterministic input generator.
+pub fn gen_f32(n: usize, seed: u64) -> Vec<f32> {
+    let mut r = crate::testutil::XorShift::new(seed);
+    (0..n).map(|_| r.f32()).collect()
+}
+
+pub fn gen_u32(n: usize, seed: u64) -> Vec<u32> {
+    let mut r = crate::testutil::XorShift::new(seed);
+    (0..n).map(|_| r.next_u32()).collect()
+}
+
+/// CPU reference for `mc_pi` — bit-identical PRNG path.
+pub fn mc_pi_reference(threads: u32, iters: u32, seed: u32) -> u64 {
+    let mut hits = 0u64;
+    for i in 0..threads {
+        let mut s = seed.wrapping_add(i.wrapping_mul(2654435761));
+        for _ in 0..iters {
+            s = alu::xorshift32(s);
+            let xa = s;
+            s = alu::xorshift32(s);
+            let xb = s;
+            let x = (xa & 16777215) as f32 / 16777216.0;
+            let y = (xb & 16777215) as f32 / 16777216.0;
+            if x * x + y * y < 1.0 {
+                hits += 1;
+            }
+        }
+    }
+    hits
+}
+
+/// CPU reference matmul (f64 accumulation for comparison tolerance).
+pub fn matmul_reference(a: &[f32], b: &[f32], n: usize) -> Vec<f32> {
+    let mut c = vec![0f32; n * n];
+    for i in 0..n {
+        for k in 0..n {
+            let av = a[i * n + k];
+            for j in 0..n {
+                c[i * n + j] += av * b[k * n + j];
+            }
+        }
+    }
+    c
+}
+
+/// Outcome of one suite-kernel verification run.
+#[derive(Debug, Clone)]
+pub struct KernelRun {
+    pub kernel: &'static str,
+    pub passed: bool,
+    pub detail: String,
+    /// Model cycles from the launch (for perf tables).
+    pub device_cycles: u64,
+    pub wall_micros: f64,
+}
+
+/// Run and verify one suite kernel on the context's device behind `stream`.
+/// `scale` shrinks the workloads for quick tests (1 = bench size).
+pub fn run_kernel(
+    ctx: &HetGpu,
+    module: ModuleHandle,
+    stream: StreamHandle,
+    kernel: &'static str,
+    scale: u32,
+) -> Result<KernelRun> {
+    let device = ctx.stream_device(stream)?;
+    let stats_before = ctx.stream_stats(stream)?;
+    let run = |args: &[Arg], dims: LaunchDims| -> Result<()> {
+        ctx.launch(stream, module, kernel, dims, args)?;
+        ctx.synchronize(stream)
+    };
+    let approx = |a: f32, b: f32, tol: f32| (a - b).abs() <= tol * (1.0 + b.abs());
+
+    let (passed, detail) = match kernel {
+        "vecadd" => {
+            let n = (65536 / scale).max(256) as usize;
+            let a = gen_f32(n, 1);
+            let b = gen_f32(n, 2);
+            let (pa, pb, pc) = (
+                ctx.malloc_on(4 * n as u64, device)?,
+                ctx.malloc_on(4 * n as u64, device)?,
+                ctx.malloc_on(4 * n as u64, device)?,
+            );
+            ctx.upload_f32(pa, &a)?;
+            ctx.upload_f32(pb, &b)?;
+            run(
+                &[Arg::Ptr(pa), Arg::Ptr(pb), Arg::Ptr(pc), Arg::U32(n as u32)],
+                LaunchDims::d1((n as u32).div_ceil(256), 256),
+            )?;
+            let c = ctx.download_f32(pc, n)?;
+            let ok = (0..n).all(|i| c[i] == a[i] + b[i]);
+            for p in [pa, pb, pc] {
+                ctx.free(p)?;
+            }
+            (ok, format!("n={n}"))
+        }
+        "saxpy" => {
+            let n = (65536 / scale).max(256) as usize;
+            let x = gen_f32(n, 3);
+            let y0 = gen_f32(n, 4);
+            let (px, py) =
+                (ctx.malloc_on(4 * n as u64, device)?, ctx.malloc_on(4 * n as u64, device)?);
+            ctx.upload_f32(px, &x)?;
+            ctx.upload_f32(py, &y0)?;
+            run(
+                &[Arg::Ptr(px), Arg::Ptr(py), Arg::F32(2.5), Arg::U32(n as u32)],
+                LaunchDims::d1((n as u32).div_ceil(256), 256),
+            )?;
+            let y = ctx.download_f32(py, n)?;
+            let ok = (0..n).all(|i| y[i] == 2.5 * x[i] + y0[i]);
+            ctx.free(px)?;
+            ctx.free(py)?;
+            (ok, format!("n={n}"))
+        }
+        "matmul16" => {
+            let n = if scale <= 1 { 128usize } else { 64 };
+            let a = gen_f32(n * n, 5);
+            let b = gen_f32(n * n, 6);
+            let (pa, pb, pc) = (
+                ctx.malloc_on(4 * (n * n) as u64, device)?,
+                ctx.malloc_on(4 * (n * n) as u64, device)?,
+                ctx.malloc_on(4 * (n * n) as u64, device)?,
+            );
+            ctx.upload_f32(pa, &a)?;
+            ctx.upload_f32(pb, &b)?;
+            let g = (n / 16) as u32;
+            run(
+                &[Arg::Ptr(pa), Arg::Ptr(pb), Arg::Ptr(pc), Arg::U32(n as u32)],
+                LaunchDims { grid: [g, g, 1], block: [16, 16, 1] },
+            )?;
+            let c = ctx.download_f32(pc, n * n)?;
+            let reference = matmul_reference(&a, &b, n);
+            let ok = c.iter().zip(&reference).all(|(g, r)| approx(*g, *r, 1e-4));
+            for p in [pa, pb, pc] {
+                ctx.free(p)?;
+            }
+            (ok, format!("n={n}"))
+        }
+        "reduce_sum" => {
+            let n = (65536 / scale).max(512) as usize;
+            let x = gen_f32(n, 7);
+            let (px, po) = (ctx.malloc_on(4 * n as u64, device)?, ctx.malloc_on(256, device)?);
+            ctx.upload_f32(px, &x)?;
+            ctx.upload_f32(po, &[0.0])?;
+            run(
+                &[Arg::Ptr(px), Arg::Ptr(po), Arg::U32(n as u32)],
+                LaunchDims::d1((n as u32).div_ceil(256), 256),
+            )?;
+            let got = ctx.download_f32(po, 1)?[0];
+            let want: f32 = x.iter().sum();
+            let ok = approx(got, want, 1e-3);
+            ctx.free(px)?;
+            ctx.free(po)?;
+            (ok, format!("n={n} got={got} want={want}"))
+        }
+        "scan32" => {
+            let n = 4096usize / scale.min(4) as usize;
+            let x = gen_f32(n, 8);
+            let px = ctx.malloc_on(4 * n as u64, device)?;
+            ctx.upload_f32(px, &x)?;
+            run(
+                &[Arg::Ptr(px), Arg::U32(n as u32)],
+                LaunchDims::d1((n as u32).div_ceil(256), 256),
+            )?;
+            let got = ctx.download_f32(px, n)?;
+            let mut ok = true;
+            for team in 0..n / 32 {
+                let mut acc = 0f32;
+                for l in 0..32 {
+                    acc += x[team * 32 + l];
+                    if !approx(got[team * 32 + l], acc, 1e-4) {
+                        ok = false;
+                    }
+                }
+            }
+            ctx.free(px)?;
+            (ok, format!("n={n}"))
+        }
+        "bitcount" => {
+            let n = 8192usize / scale.min(8) as usize;
+            let data = gen_u32(n, 9);
+            let (pd, pc) =
+                (ctx.malloc_on(4 * n as u64, device)?, ctx.malloc_on(256, device)?);
+            ctx.upload_u32(pd, &data)?;
+            ctx.upload_u32(pc, &[0])?;
+            run(
+                &[Arg::Ptr(pd), Arg::Ptr(pc), Arg::U32(n as u32)],
+                LaunchDims::d1((n as u32).div_ceil(256), 256),
+            )?;
+            let got = ctx.download_u32(pc, 1)?[0];
+            let want = data.iter().filter(|v| *v & 1 == 1).count() as u32;
+            let ok = got == want;
+            ctx.free(pd)?;
+            ctx.free(pc)?;
+            (ok, format!("got={got} want={want}"))
+        }
+        "mc_pi" => {
+            let threads = 512u32;
+            let iters = (2000 / scale).max(50);
+            let ph = ctx.malloc_on(256, device)?;
+            ctx.upload_u32(ph, &[0])?;
+            run(
+                &[Arg::Ptr(ph), Arg::U32(iters), Arg::U32(12345)],
+                LaunchDims::d1(threads / 64, 64),
+            )?;
+            let got = ctx.download_u32(ph, 1)?[0] as u64;
+            let want = mc_pi_reference(threads, iters, 12345);
+            let ok = got == want;
+            ctx.free(ph)?;
+            (ok, format!("got={got} want={want} (bit-exact PRNG)"))
+        }
+        "nn_layer" => {
+            let (batch, d, h) = (8usize, 64usize, 128usize);
+            let x = gen_f32(batch * d, 10);
+            let w = gen_f32(d * h, 11);
+            let bias = gen_f32(h, 12);
+            let (px, pw, pb, po) = (
+                ctx.malloc_on(4 * (batch * d) as u64, device)?,
+                ctx.malloc_on(4 * (d * h) as u64, device)?,
+                ctx.malloc_on(4 * h as u64, device)?,
+                ctx.malloc_on(4 * (batch * h) as u64, device)?,
+            );
+            ctx.upload_f32(px, &x)?;
+            ctx.upload_f32(pw, &w)?;
+            ctx.upload_f32(pb, &bias)?;
+            run(
+                &[
+                    Arg::Ptr(px),
+                    Arg::Ptr(pw),
+                    Arg::Ptr(pb),
+                    Arg::Ptr(po),
+                    Arg::U32(d as u32),
+                    Arg::U32(h as u32),
+                ],
+                LaunchDims { grid: [(h as u32).div_ceil(64), batch as u32, 1], block: [64, 1, 1] },
+            )?;
+            let out = ctx.download_f32(po, batch * h)?;
+            let mut ok = true;
+            for r in 0..batch {
+                for j in 0..h {
+                    let mut acc = bias[j];
+                    for k in 0..d {
+                        acc += x[r * d + k] * w[k * h + j];
+                    }
+                    if !approx(out[r * h + j], acc.max(0.0), 1e-4) {
+                        ok = false;
+                    }
+                }
+            }
+            for p in [px, pw, pb, po] {
+                ctx.free(p)?;
+            }
+            (ok, format!("batch={batch} d={d} h={h}"))
+        }
+        "stencil3" => {
+            let n = (32768 / scale).max(512) as usize;
+            let x = gen_f32(n, 13);
+            let (pi, po) =
+                (ctx.malloc_on(4 * n as u64, device)?, ctx.malloc_on(4 * n as u64, device)?);
+            ctx.upload_f32(pi, &x)?;
+            run(
+                &[Arg::Ptr(pi), Arg::Ptr(po), Arg::U32(n as u32)],
+                LaunchDims::d1((n as u32).div_ceil(256), 256),
+            )?;
+            let got = ctx.download_f32(po, n)?;
+            let ok = (1..n - 1)
+                .all(|i| got[i] == 0.25 * x[i - 1] + 0.5 * x[i] + 0.25 * x[i + 1]);
+            ctx.free(pi)?;
+            ctx.free(po)?;
+            (ok, format!("n={n}"))
+        }
+        "hist16" => {
+            let n = (32768 / scale).max(512) as usize;
+            let data = gen_u32(n, 14);
+            let (pd, pb) =
+                (ctx.malloc_on(4 * n as u64, device)?, ctx.malloc_on(256, device)?);
+            ctx.upload_u32(pd, &data)?;
+            ctx.upload_u32(pb, &[0; 16])?;
+            run(
+                &[Arg::Ptr(pd), Arg::Ptr(pb), Arg::U32(n as u32)],
+                LaunchDims::d1((n as u32).div_ceil(256), 256),
+            )?;
+            let got = ctx.download_u32(pb, 16)?;
+            let mut want = [0u32; 16];
+            for v in &data {
+                want[(v & 15) as usize] += 1;
+            }
+            let ok = got == want;
+            ctx.free(pd)?;
+            ctx.free(pb)?;
+            (ok, "16 bins".to_string())
+        }
+        other => (false, format!("unknown kernel {other}")),
+    };
+    let stats_after = ctx.stream_stats(stream)?;
+    Ok(KernelRun {
+        kernel,
+        passed,
+        detail,
+        device_cycles: stats_after.cost.device_cycles - stats_before.cost.device_cycles,
+        wall_micros: stats_after.wall_micros - stats_before.wall_micros,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The §6.1 portability matrix in miniature: every kernel of the one
+    /// binary must pass on every device kind.
+    #[test]
+    fn suite_passes_on_all_devices_small() {
+        let ctx = HetGpu::full_testbed().unwrap();
+        let module = ctx.compile_cuda(SUITE_SRC).unwrap();
+        for dev in 0..ctx.device_count() {
+            let stream = ctx.create_stream(dev).unwrap();
+            for kernel in KERNELS {
+                let r = run_kernel(&ctx, module, stream, kernel, 8).unwrap();
+                assert!(
+                    r.passed,
+                    "{kernel} failed on {:?}: {}",
+                    ctx.device_kind(dev).unwrap(),
+                    r.detail
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mc_pi_reference_estimates_pi() {
+        let hits = mc_pi_reference(256, 400, 7);
+        let pi = 4.0 * hits as f64 / (256.0 * 400.0);
+        assert!((pi - std::f64::consts::PI).abs() < 0.05, "pi estimate {pi}");
+    }
+}

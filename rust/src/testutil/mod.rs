@@ -1,0 +1,78 @@
+//! Minimal property-testing helpers (no proptest crate in the offline
+//! vendor set): a seeded xorshift PRNG and a case runner that reports the
+//! failing seed so runs are reproducible.
+
+/// Deterministic 64-bit xorshift* PRNG.
+pub struct XorShift {
+    state: u64,
+}
+
+impl XorShift {
+    pub fn new(seed: u64) -> XorShift {
+        XorShift { state: seed.max(1) }
+    }
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+    /// Uniform in [0, n).
+    pub fn below(&mut self, n: u64) -> u64 {
+        self.next_u64() % n.max(1)
+    }
+    /// f32 in [-1, 1).
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u32() as f32 / u32::MAX as f32) * 2.0 - 1.0
+    }
+    pub fn bool(&mut self) -> bool {
+        self.next_u64() & 1 == 1
+    }
+}
+
+/// Run `cases` property checks with derived seeds; panics with the seed on
+/// the first failure so it can be replayed.
+pub fn check(cases: u64, base_seed: u64, mut prop: impl FnMut(&mut XorShift)) {
+    for i in 0..cases {
+        let seed = base_seed.wrapping_add(i.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = XorShift::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property failed on case {i} (seed {seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = XorShift::new(42);
+        let mut b = XorShift::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut r = XorShift::new(7);
+        for _ in 0..1000 {
+            assert!(r.below(17) < 17);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn check_reports_failure() {
+        check(10, 1, |r| assert!(r.below(100) < 50));
+    }
+}

@@ -1,0 +1,220 @@
+//! PJRT/XLA native execution path.
+//!
+//! Plays the role of the **vendor driver + JIT** in this reproduction
+//! (DESIGN.md §2): kernels authored in JAX/Pallas are AOT-lowered to HLO
+//! text by `python/compile/aot.py` (build time only — Python never runs on
+//! the request path) and executed here through the PJRT C API. The
+//! resulting numbers are
+//!
+//! * the **"native" baseline** the hetGPU path is compared against in the
+//!   §6.2 microbenchmarks (bench E2), and
+//! * the **numerics oracle** for the end-to-end examples.
+//!
+//! Artifacts are HLO *text* (not serialized protos) — see
+//! `/opt/xla-example/README.md` for the version-skew gotcha.
+
+use crate::error::{HetError, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Loaded-and-compiled artifact cache over one PJRT CPU client.
+pub struct XlaNative {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+/// A typed f32 tensor (row-major) for crossing the PJRT boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub data: Vec<f32>,
+    pub shape: Vec<i64>,
+}
+
+impl Tensor {
+    pub fn new(data: Vec<f32>, shape: &[i64]) -> Tensor {
+        assert_eq!(
+            data.len() as i64,
+            shape.iter().product::<i64>().max(1),
+            "shape/data mismatch"
+        );
+        Tensor { data, shape: shape.to_vec() }
+    }
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { data: vec![v], shape: vec![] }
+    }
+}
+
+impl XlaNative {
+    /// Create a client over the artifacts directory (default:
+    /// `artifacts/` at the repo root).
+    pub fn new(dir: impl AsRef<Path>) -> Result<XlaNative> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(XlaNative {
+            client,
+            dir: dir.as_ref().to_path_buf(),
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Whether artifact `name` exists (lets tests skip before
+    /// `make artifacts` has run).
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.dir.join(format!("{name}.hlo.txt")).exists()
+    }
+
+    fn load(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| HetError::Xla("bad path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(self.client.compile(&comp)?);
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute artifact `name` on f32 inputs; returns all outputs (the
+    /// artifacts are lowered with `return_tuple=True`).
+    pub fn run(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let exe = self.load(name)?;
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| -> Result<xla::Literal> {
+                let l = xla::Literal::vec1(&t.data);
+                if t.shape.is_empty() {
+                    // scalar: reshape to rank-0
+                    Ok(l.reshape(&[])?)
+                } else {
+                    Ok(l.reshape(&t.shape)?)
+                }
+            })
+            .collect::<Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        parts
+            .into_iter()
+            .map(|p| {
+                let shape = p.array_shape()?;
+                let dims: Vec<i64> = shape.dims().to_vec();
+                let data = p.to_vec::<f32>()?;
+                Ok(Tensor { data, shape: dims })
+            })
+            .collect()
+    }
+
+    /// Convenience: run and return the single output.
+    pub fn run1(&self, name: &str, inputs: &[Tensor]) -> Result<Tensor> {
+        let mut out = self.run(name, inputs)?;
+        if out.len() != 1 {
+            return Err(HetError::Xla(format!(
+                "artifact {name} returned {} outputs, expected 1",
+                out.len()
+            )));
+        }
+        Ok(out.remove(0))
+    }
+}
+
+/// Locate the artifacts directory relative to the crate root.
+pub fn default_artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn native() -> Option<XlaNative> {
+        let x = XlaNative::new(default_artifacts_dir()).ok()?;
+        if x.has_artifact("vecadd") {
+            Some(x)
+        } else {
+            eprintln!("skipping: run `make artifacts` first");
+            None
+        }
+    }
+
+    #[test]
+    fn vecadd_artifact_runs() {
+        let Some(x) = native() else { return };
+        let n = 1 << 20;
+        let a: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let b: Vec<f32> = (0..n).map(|_| 2.0).collect();
+        let out = x
+            .run1("vecadd", &[Tensor::new(a, &[n as i64]), Tensor::new(b, &[n as i64])])
+            .unwrap();
+        assert_eq!(out.data.len(), n);
+        assert_eq!(out.data[100], 102.0);
+    }
+
+    #[test]
+    fn matmul_artifact_matches_cpu() {
+        let Some(x) = native() else { return };
+        let n = 512usize;
+        let a: Vec<f32> = (0..n * n).map(|i| ((i % 7) as f32) * 0.25).collect();
+        let b: Vec<f32> = (0..n * n).map(|i| ((i % 5) as f32) * 0.5).collect();
+        let out = x
+            .run1(
+                "matmul",
+                &[
+                    Tensor::new(a.clone(), &[n as i64, n as i64]),
+                    Tensor::new(b.clone(), &[n as i64, n as i64]),
+                ],
+            )
+            .unwrap();
+        // spot-check a few entries against a CPU dot product
+        for &(r, c) in &[(0usize, 0usize), (17, 250), (511, 511)] {
+            let mut acc = 0.0f64;
+            for k in 0..n {
+                acc += a[r * n + k] as f64 * b[k * n + c] as f64;
+            }
+            let got = out.data[r * n + c] as f64;
+            assert!((got - acc).abs() < 1e-2 * acc.abs().max(1.0), "({r},{c}): {got} vs {acc}");
+        }
+    }
+
+    #[test]
+    fn train_step_artifact_decreases_loss() {
+        let Some(x) = native() else { return };
+        // shapes fixed by aot.py: x[128,128], y[128], W1[128,128], b1[128],
+        // w2[128], b2 scalar, lr scalar
+        let mut w1: Vec<f32> = (0..128 * 128).map(|i| ((i % 13) as f32 - 6.0) * 0.01).collect();
+        let mut b1 = vec![0.0f32; 128];
+        let mut w2: Vec<f32> = (0..128).map(|i| ((i % 7) as f32 - 3.0) * 0.05).collect();
+        let mut b2 = 0.0f32;
+        let xs: Vec<f32> = (0..128 * 128).map(|i| ((i % 11) as f32 - 5.0) * 0.1).collect();
+        let ys: Vec<f32> = (0..128).map(|i| (i % 3) as f32 - 1.0).collect();
+        let mut losses = Vec::new();
+        for _ in 0..5 {
+            let out = x
+                .run(
+                    "mlp_train_step",
+                    &[
+                        Tensor::new(w1.clone(), &[128, 128]),
+                        Tensor::new(b1.clone(), &[128]),
+                        Tensor::new(w2.clone(), &[128]),
+                        Tensor::scalar(b2),
+                        Tensor::new(xs.clone(), &[128, 128]),
+                        Tensor::new(ys.clone(), &[128]),
+                        Tensor::scalar(0.05),
+                    ],
+                )
+                .unwrap();
+            assert_eq!(out.len(), 5);
+            w1 = out[0].data.clone();
+            b1 = out[1].data.clone();
+            w2 = out[2].data.clone();
+            b2 = out[3].data[0];
+            losses.push(out[4].data[0]);
+        }
+        assert!(
+            losses.last().unwrap() < losses.first().unwrap(),
+            "loss must decrease: {losses:?}"
+        );
+    }
+}

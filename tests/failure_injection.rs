@@ -1,0 +1,149 @@
+//! Failure injection: the abstraction layer must surface device faults
+//! uniformly (paper §4.3 *Error Handling*) and recover cleanly.
+
+use hetgpu::runtime::api::HetGpu;
+use hetgpu::runtime::device::DeviceKind;
+use hetgpu::runtime::launch::Arg;
+use hetgpu::sim::simt::LaunchDims;
+
+/// Out-of-bounds global access faults on every architecture, with the
+/// device named in the error.
+#[test]
+fn oob_access_faults_uniformly() {
+    let src = r#"
+        __global__ void oob(float* p) {
+            p[268435456u + threadIdx.x] = 1.0f; // 1 GiB past any allocation
+        }
+    "#;
+    for kind in DeviceKind::all() {
+        let ctx = HetGpu::with_devices(&[kind]).unwrap();
+        let m = ctx.compile_cuda(src).unwrap();
+        let buf = ctx.malloc_on(256, 0).unwrap();
+        let s = ctx.create_stream(0).unwrap();
+        ctx.launch(s, m, "oob", LaunchDims::d1(1, 32), &[Arg::Ptr(buf)]).unwrap();
+        let err = ctx.synchronize(s).unwrap_err().to_string();
+        assert!(
+            err.contains("illegal memory access") || err.contains("exceeds capacity"),
+            "{kind:?}: {err}"
+        );
+        assert!(err.contains(kind.name()), "fault must name the device: {err}");
+    }
+}
+
+/// Integer division by zero is a device fault, not a wrong answer.
+#[test]
+fn div_by_zero_faults() {
+    let src = r#"
+        __global__ void divz(unsigned* p, unsigned d) {
+            p[threadIdx.x] = 100u / d;
+        }
+    "#;
+    let ctx = HetGpu::with_devices(&[DeviceKind::NvidiaSim]).unwrap();
+    let m = ctx.compile_cuda(src).unwrap();
+    let buf = ctx.malloc_on(256, 0).unwrap();
+    let s = ctx.create_stream(0).unwrap();
+    ctx.launch(s, m, "divz", LaunchDims::d1(1, 32), &[Arg::Ptr(buf), Arg::U32(0)]).unwrap();
+    assert!(ctx.synchronize(s).is_err());
+}
+
+/// Barrier under divergent control flow is rejected at compile time (the
+/// verifier), before any device sees it.
+#[test]
+fn divergent_barrier_rejected_at_compile() {
+    let src = r#"
+        __global__ void bad(float* p) {
+            if (threadIdx.x < 16u) {
+                __syncthreads();
+            }
+            p[threadIdx.x] = 1.0f;
+        }
+    "#;
+    let ctx = HetGpu::with_devices(&[DeviceKind::NvidiaSim]).unwrap();
+    let err = ctx.compile_cuda(src).unwrap_err().to_string();
+    assert!(err.contains("divergent"), "{err}");
+}
+
+/// Launch argument mismatches are rejected before execution.
+#[test]
+fn arg_mismatch_rejected() {
+    let ctx = HetGpu::with_devices(&[DeviceKind::AmdSim]).unwrap();
+    let m = ctx
+        .compile_cuda("__global__ void k(float* p, unsigned n) { p[n] = 0.0f; }")
+        .unwrap();
+    let buf = ctx.malloc_on(256, 0).unwrap();
+    let s = ctx.create_stream(0).unwrap();
+    // wrong count
+    ctx.launch(s, m, "k", LaunchDims::d1(1, 32), &[Arg::Ptr(buf)]).unwrap();
+    assert!(ctx.synchronize(s).is_err());
+}
+
+/// Unknown kernels are reported.
+#[test]
+fn unknown_kernel_reported() {
+    let ctx = HetGpu::with_devices(&[DeviceKind::IntelSim]).unwrap();
+    let m = ctx.compile_cuda("__global__ void k(float* p) { p[0] = 1.0f; }").unwrap();
+    let s = ctx.create_stream(0).unwrap();
+    ctx.launch(s, m, "nope", LaunchDims::d1(1, 32), &[]).unwrap();
+    let err = ctx.synchronize(s).unwrap_err().to_string();
+    assert!(err.contains("nope"), "{err}");
+}
+
+/// A fault poisons the stream (sticky error) but the context survives: a
+/// new stream keeps working — the "propagate errors in a uniform way"
+/// behaviour.
+#[test]
+fn fault_is_sticky_but_context_survives() {
+    let ctx = HetGpu::with_devices(&[DeviceKind::NvidiaSim]).unwrap();
+    let m = ctx
+        .compile_cuda(
+            "__global__ void good(float* p) { p[threadIdx.x] = 7.0f; }
+             __global__ void bad(float* p) { p[1073741824u] = 0.0f; }",
+        )
+        .unwrap();
+    let buf = ctx.malloc_on(256, 0).unwrap();
+    let s1 = ctx.create_stream(0).unwrap();
+    ctx.launch(s1, m, "bad", LaunchDims::d1(1, 32), &[Arg::Ptr(buf)]).unwrap();
+    assert!(ctx.synchronize(s1).is_err());
+    // Fresh stream still executes correctly.
+    let s2 = ctx.create_stream(0).unwrap();
+    ctx.launch(s2, m, "good", LaunchDims::d1(1, 32), &[Arg::Ptr(buf)]).unwrap();
+    ctx.synchronize(s2).unwrap();
+    assert_eq!(ctx.download_f32(buf, 1).unwrap()[0], 7.0);
+}
+
+/// Out-of-memory is a clean runtime error.
+#[test]
+fn oom_is_clean_error() {
+    let ctx = HetGpu::with_devices(&[DeviceKind::NvidiaSim]).unwrap();
+    let err = ctx.malloc_on(1 << 40, 0).unwrap_err().to_string();
+    assert!(err.contains("out of device memory"), "{err}");
+}
+
+/// Migrating to a nonexistent device fails without corrupting the stream.
+#[test]
+fn migrate_to_bad_device_fails_cleanly() {
+    let ctx = HetGpu::with_devices(&[DeviceKind::NvidiaSim]).unwrap();
+    let s = ctx.create_stream(0).unwrap();
+    assert!(ctx.migrate(s, 7).is_err());
+    // Stream still usable.
+    let m = ctx.compile_cuda("__global__ void k(float* p) { p[0] = 1.0f; }").unwrap();
+    let buf = ctx.malloc_on(256, 0).unwrap();
+    ctx.launch(s, m, "k", LaunchDims::d1(1, 1), &[Arg::Ptr(buf)]).unwrap();
+    ctx.synchronize(s).unwrap();
+}
+
+/// Corrupted snapshot blobs are rejected with errors, never panics.
+#[test]
+fn corrupt_blobs_never_panic() {
+    use hetgpu::migrate::deserialize;
+    let mut r = hetgpu::testutil::XorShift::new(99);
+    for len in [0usize, 1, 3, 4, 7, 16, 64, 255] {
+        let junk: Vec<u8> = (0..len).map(|_| r.next_u32() as u8).collect();
+        let _ = deserialize(&junk); // must return Err, not panic
+    }
+    // Valid header then garbage.
+    let mut blob = b"HGPU".to_vec();
+    blob.extend_from_slice(&1u32.to_le_bytes());
+    blob.extend_from_slice(&[0xFF; 32]);
+    assert!(deserialize(&blob).is_err());
+}

@@ -1,0 +1,226 @@
+//! Property-based tests over the compilation pipeline:
+//!
+//! * text-format roundtrip: `parse(print(k)) == k` for randomly generated
+//!   kernels;
+//! * optimization soundness: constant folding + DCE never change observable
+//!   results;
+//! * cross-backend agreement: random straight-line kernels produce
+//!   identical global memory on every backend (the §6.1 portability claim,
+//!   fuzzed).
+
+use hetgpu::backends::{self, TranslateOpts};
+use hetgpu::hetir::builder::KernelBuilder;
+use hetgpu::hetir::instr::*;
+use hetgpu::hetir::module::Kernel;
+use hetgpu::hetir::types::{AddrSpace, Scalar, Type, Value};
+use hetgpu::hetir::{parser, passes, printer, verify};
+use hetgpu::isa::simt_isa::SimtConfig;
+use hetgpu::isa::tensix_isa::{TensixConfig, TensixMode};
+use hetgpu::sim::mem::DeviceMemory;
+use hetgpu::sim::simt::{LaunchDims, SimtSim};
+use hetgpu::sim::tensix::TensixSim;
+use hetgpu::testutil::{check, XorShift};
+use std::sync::atomic::AtomicBool;
+
+/// Generate a random, verifier-clean kernel: a mix of arithmetic over a
+/// few registers, divergent ifs, uniform loops, and stores of the results.
+fn random_kernel(r: &mut XorShift) -> Kernel {
+    let mut b = KernelBuilder::new("fuzz");
+    let out = b.param("out", Type::PTR_GLOBAL);
+    let n = b.param("n", Type::U32);
+    let gid = b.special(SpecialReg::GlobalId(Dim::X));
+
+    // Pool of f32 values to combine.
+    let mut vals: Vec<Reg> = Vec::new();
+    let gidf = b.cvt(Scalar::U32, Scalar::F32, gid.into());
+    vals.push(gidf);
+    for _ in 0..r.below(4) + 1 {
+        let c = b.mov(Type::F32, Operand::Imm(Value::f32(r.f32() * 4.0)));
+        vals.push(c);
+    }
+    let n_ops = r.below(12) + 3;
+    for _ in 0..n_ops {
+        let a = vals[r.below(vals.len() as u64) as usize];
+        let c = vals[r.below(vals.len() as u64) as usize];
+        let op = match r.below(5) {
+            0 => BinOp::Add,
+            1 => BinOp::Sub,
+            2 => BinOp::Mul,
+            3 => BinOp::Min,
+            _ => BinOp::Max,
+        };
+        let v = b.bin(op, Scalar::F32, a.into(), c.into());
+        vals.push(v);
+    }
+    // Sometimes a divergent if writing a different combination.
+    let result = *vals.last().unwrap();
+    if r.bool() {
+        let parity = b.bin(BinOp::And, Scalar::U32, gid.into(), Operand::Imm(Value::u32(1)));
+        let p = b.cmp(CmpOp::Eq, Scalar::U32, parity.into(), Operand::Imm(Value::u32(0)));
+        let alt = vals[r.below(vals.len() as u64) as usize];
+        b.if_else(
+            p,
+            |bb| bb.bin_into(result, BinOp::Add, Scalar::F32, result.into(), alt.into()),
+            |bb| bb.bin_into(result, BinOp::Sub, Scalar::F32, result.into(), alt.into()),
+        );
+    }
+    // Sometimes a uniform loop accumulating.
+    if r.bool() {
+        let iters = r.below(5) as u32 + 1;
+        b.for_u32(Operand::Imm(Value::u32(0)), Operand::Imm(Value::u32(iters)), 1, |bb, _| {
+            bb.bin_into(result, BinOp::Add, Scalar::F32, result.into(), Operand::Imm(Value::f32(0.5)));
+        });
+    }
+    let guard = b.cmp(CmpOp::Lt, Scalar::U32, gid.into(), n.into());
+    b.if_(guard, |bb| {
+        bb.st(AddrSpace::Global, Scalar::F32, Address::indexed(out, gid, 4), result.into());
+    });
+    b.finish()
+}
+
+fn run_simt(k: &Kernel, cfg: SimtConfig, n: u32) -> Vec<u32> {
+    let p = backends::translate_simt(k, &cfg, TranslateOpts::default()).unwrap();
+    let sim = SimtSim::new(cfg);
+    let mut mem = DeviceMemory::new(1 << 16, "fuzz");
+    let pause = AtomicBool::new(false);
+    sim.run_grid(
+        &p,
+        LaunchDims::d1(n.div_ceil(32), 32),
+        &[Value::ptr(0, AddrSpace::Global), Value::u32(n)],
+        &mut mem,
+        &pause,
+        None,
+    )
+    .unwrap();
+    (0..n as u64)
+        .map(|i| mem.load(i * 4, Scalar::F32).unwrap().bits as u32)
+        .collect()
+}
+
+fn run_tensix(k: &Kernel, mode: TensixMode, n: u32) -> Vec<u32> {
+    let p = backends::translate_tensix(k, mode, TranslateOpts::default()).unwrap();
+    let sim = TensixSim::new(TensixConfig::blackhole());
+    let mut mem = DeviceMemory::new(1 << 16, "fuzz");
+    let pause = AtomicBool::new(false);
+    sim.run_grid(
+        &p,
+        LaunchDims::d1(n.div_ceil(32), 32),
+        &[Value::ptr(0, AddrSpace::Global), Value::u32(n)],
+        &mut mem,
+        &pause,
+        None,
+        None,
+    )
+    .unwrap();
+    (0..n as u64)
+        .map(|i| mem.load(i * 4, Scalar::F32).unwrap().bits as u32)
+        .collect()
+}
+
+#[test]
+fn prop_text_roundtrip() {
+    check(60, 0xA11CE, |r| {
+        let k = random_kernel(r);
+        let text = printer::print_kernel(&k);
+        let k2 = parser::parse_kernel_text(&text)
+            .unwrap_or_else(|e| panic!("parse failed: {e}\n{text}"));
+        assert_eq!(k, k2, "roundtrip mismatch:\n{text}");
+    });
+}
+
+#[test]
+fn prop_optimizations_preserve_semantics() {
+    check(40, 0xBEEF, |r| {
+        let k = random_kernel(r);
+        let mut opt = k.clone();
+        passes::optimize(&mut opt);
+        verify::verify_kernel(&opt).expect("optimized kernel must verify");
+        let n = 48;
+        let plain = run_simt(&k, SimtConfig::nvidia(), n);
+        let folded = run_simt(&opt, SimtConfig::nvidia(), n);
+        assert_eq!(plain, folded, "constfold+DCE changed results");
+    });
+}
+
+#[test]
+fn prop_backends_agree() {
+    check(25, 0xC0FFEE, |r| {
+        let k = random_kernel(r);
+        let n = 48;
+        let reference = run_simt(&k, SimtConfig::nvidia(), n);
+        assert_eq!(reference, run_simt(&k, SimtConfig::amd(), n), "amd disagrees");
+        assert_eq!(reference, run_simt(&k, SimtConfig::amd_wave64(), n), "wave64 disagrees");
+        assert_eq!(reference, run_simt(&k, SimtConfig::intel(), n), "intel disagrees");
+        assert_eq!(
+            reference,
+            run_tensix(&k, TensixMode::VectorSingleCore, n),
+            "tensix vector disagrees"
+        );
+        assert_eq!(
+            reference,
+            run_tensix(&k, TensixMode::VectorMultiCore, n),
+            "tensix multi-core disagrees"
+        );
+    });
+}
+
+/// Snapshot blobs roundtrip for arbitrary captured register contents.
+#[test]
+fn prop_blob_roundtrip() {
+    use hetgpu::migrate::{deserialize, serialize, Snapshot};
+    use hetgpu::runtime::launch::{Arg, LaunchSpec};
+    use hetgpu::runtime::memory::GpuPtr;
+    use hetgpu::runtime::stream::PausedKernel;
+    use hetgpu::sim::snapshot::{BlockCapture, BlockState, ThreadCapture};
+
+    check(40, 0xD00D, |r| {
+        let nblocks = r.below(4) + 1;
+        let blocks: Vec<BlockState> = (0..nblocks)
+            .map(|bi| match r.below(3) {
+                0 => BlockState::NotStarted,
+                1 => BlockState::Done,
+                _ => BlockState::Suspended(BlockCapture {
+                    block_idx: bi as u32,
+                    barrier_id: r.below(8) as u32,
+                    threads: (0..r.below(8) + 1)
+                        .map(|_| ThreadCapture {
+                            regs: (0..r.below(6))
+                                .map(|i| {
+                                    let ty = match r.below(4) {
+                                        0 => Type::F32,
+                                        1 => Type::U32,
+                                        2 => Type::PTR_GLOBAL,
+                                        _ => Type::U64,
+                                    };
+                                    (Reg(i as u32), Value { bits: r.next_u64(), ty })
+                                })
+                                .collect(),
+                        })
+                        .collect(),
+                    shared_mem: (0..r.below(64)).map(|_| r.next_u32() as u8).collect(),
+                }),
+            })
+            .collect();
+        let snap = Snapshot {
+            src_device: r.below(4) as usize,
+            paused: Some(PausedKernel {
+                spec: LaunchSpec {
+                    module: r.below(8) as usize,
+                    kernel: format!("k{}", r.below(100)),
+                    dims: LaunchDims::d1(nblocks as u32, 32),
+                    args: vec![Arg::Ptr(GpuPtr(r.next_u64() & 0xFFFF)), Arg::F32(r.f32())],
+                    tensix_mode_hint: None,
+                },
+                blocks,
+            }),
+            allocations: vec![(4096, (0..r.below(128)).map(|_| r.next_u32() as u8).collect())],
+        };
+        let blob = serialize(&snap);
+        let back = deserialize(&blob).expect("deserialize");
+        assert_eq!(snap.allocations, back.allocations);
+        assert_eq!(
+            snap.paused.as_ref().unwrap().blocks,
+            back.paused.as_ref().unwrap().blocks
+        );
+    });
+}
