@@ -73,8 +73,11 @@ fn simt_cycles(cfg: SimtConfig, prog: &SimtProgram, n: u32) -> u64 {
 
 fn main() {
     let n = 1 << 16; // vector length (scaled from the paper's 1M)
+    let smoke = std::env::var("HETGPU_BENCH_SMOKE").is_ok();
     let ctx = HetGpu::full_testbed().unwrap();
     let module = ctx.compile_cuda(suite::SUITE_SRC).unwrap();
+    // (kernel, device, simulated microseconds) rows for BENCH_e2.json.
+    let mut table: Vec<(String, String, f64)> = Vec::new();
 
     println!("\nE2: microbenchmark performance (paper §6.2)");
     println!("simulated time per kernel per device (model cycles / clock):\n");
@@ -88,16 +91,71 @@ fn main() {
             let stream = ctx.create_stream(dev).unwrap();
             let r = suite::run_kernel(&ctx, module, stream, kernel, 1).unwrap();
             assert!(r.passed, "{kernel} on dev {dev}");
-            let clock = match ctx.device_kind(dev).unwrap() {
+            let kind = ctx.device_kind(dev).unwrap();
+            let clock = match kind {
                 DeviceKind::NvidiaSim => 1700,
                 DeviceKind::AmdSim | DeviceKind::AmdWave64Sim => 2400,
                 DeviceKind::IntelSim => 1400,
                 DeviceKind::TenstorrentSim => 1350,
             };
-            print!(" {:>11.1} us", r.device_cycles as f64 / clock as f64);
+            let us = r.device_cycles as f64 / clock as f64;
+            table.push((kernel.to_string(), kind.name().to_string(), us));
+            print!(" {us:>11.1} us");
         }
         println!();
     }
+
+    // ---- parallel block dispatch: host wall-clock scaling ----
+    // The tentpole metric: the same grid with HETGPU_SIM_THREADS=1 vs
+    // workers = host cores. 1024 independent blocks, well over the 64-block
+    // floor where the work-stealing pool has anything to chew on.
+    let host_cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+    let (seq_wall_s, par_wall_s) = {
+        let m = hetgpu::frontend::compile(suite::SUITE_SRC, "suite").unwrap();
+        let k = m.kernel("vecadd").unwrap();
+        let cfg = SimtConfig::nvidia();
+        let prog =
+            backends::translate_simt(k, &cfg, TranslateOpts { migratable: true }).unwrap();
+        let pn: u32 = 1 << 18; // 1024 blocks x 256 threads
+        let reps = if smoke { 2 } else { 5 };
+        let time_with = |workers: usize| {
+            let sim = SimtSim::with_workers(cfg.clone(), workers);
+            let mut mem = DeviceMemory::new(32 << 20, "bench");
+            let params = [
+                Value::ptr(0, AddrSpace::Global),
+                Value::ptr((4 * pn) as u64, AddrSpace::Global),
+                Value::ptr((8 * pn) as u64, AddrSpace::Global),
+                Value::u32(pn),
+            ];
+            let pause = AtomicBool::new(false);
+            let t0 = std::time::Instant::now();
+            for _ in 0..reps {
+                sim.run_grid(
+                    &prog,
+                    LaunchDims::d1(pn / 256, 256),
+                    &params[..(prog.num_params as usize).clamp(3, 4)],
+                    &mut mem,
+                    &pause,
+                    None,
+                )
+                .unwrap();
+            }
+            t0.elapsed().as_secs_f64() / reps as f64
+        };
+        let seq = time_with(1);
+        let par = time_with(host_cores);
+        println!(
+            "\nparallel block dispatch (vecadd, {pn} elems, {} blocks):",
+            pn / 256
+        );
+        println!("  1 worker      {:>9.2} ms/launch", seq * 1e3);
+        println!(
+            "  {host_cores} workers     {:>9.2} ms/launch  -> {:.2}x wall-clock speedup",
+            par * 1e3,
+            seq / par
+        );
+        (seq, par)
+    };
 
     // ---- hetGPU vs hand-tuned (the <10% claim) ----
     println!("\nhetGPU vs hand-tuned device code (vecadd, {n} elements):");
@@ -218,5 +276,26 @@ fn main() {
         );
     } else {
         println!("\n(run `make artifacts` for the XLA vendor-library columns)");
+    }
+
+    // ---- machine-readable artifact (CI perf trajectory) ----
+    let json_path =
+        std::env::var("HETGPU_BENCH_JSON").unwrap_or_else(|_| "BENCH_e2.json".into());
+    let mut rows = String::new();
+    for (i, (kernel, dev, us)) in table.iter().enumerate() {
+        if i > 0 {
+            rows.push_str(",\n    ");
+        }
+        rows.push_str(&format!(
+            "{{\"kernel\": \"{kernel}\", \"device\": \"{dev}\", \"sim_us\": {us:.3}}}"
+        ));
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"e2_microbench\",\n  \"host_cores\": {host_cores},\n  \"dispatch\": {{\"workers\": {host_cores}, \"seq_wall_s\": {seq_wall_s:.6}, \"par_wall_s\": {par_wall_s:.6}, \"speedup\": {speedup:.3}}},\n  \"kernels\": [\n    {rows}\n  ]\n}}\n",
+        speedup = seq_wall_s / par_wall_s
+    );
+    match std::fs::write(&json_path, &json) {
+        Ok(()) => println!("\nwrote {json_path}"),
+        Err(e) => eprintln!("\nfailed to write {json_path}: {e}"),
     }
 }

@@ -3,56 +3,89 @@
 //! Every layer (IR, frontend, backend translators, simulators, runtime,
 //! migration) reports through [`HetError`] so the public API surfaces a
 //! single error enum, mirroring how the paper's runtime "propagates errors
-//! in a uniform way" (§4.3 *Error Handling*).
+//! in a uniform way" (§4.3 *Error Handling*). Display/Error are implemented
+//! by hand to keep the crate dependency-free.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, HetError>;
 
 /// Unified error enum for all hetGPU layers.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum HetError {
     /// Lexer/parser errors from the CUDA-subset frontend.
-    #[error("frontend error at {line}:{col}: {msg}")]
     Frontend { line: usize, col: usize, msg: String },
 
     /// hetIR text-assembly parse errors.
-    #[error("hetIR parse error at line {line}: {msg}")]
     IrParse { line: usize, msg: String },
 
     /// hetIR verifier failures (type errors, malformed structure).
-    #[error("hetIR verify error in `{func}`: {msg}")]
     Verify { func: String, msg: String },
 
     /// Backend translation failures (unsupported op on a target, etc).
-    #[error("backend `{backend}` translation error: {msg}")]
     Translate { backend: String, msg: String },
 
     /// Device simulator faults (the simulated equivalent of a GPU fault,
     /// e.g. an illegal global-memory access).
-    #[error("device fault on {device}: {msg}")]
     DeviceFault { device: String, msg: String },
 
     /// Runtime API misuse or resource exhaustion.
-    #[error("runtime error: {msg}")]
     Runtime { msg: String },
 
     /// Checkpoint/restore/migration failures.
-    #[error("migration error: {msg}")]
     Migrate { msg: String },
 
     /// State-blob (de)serialization failures.
-    #[error("state blob error: {msg}")]
     Blob { msg: String },
 
     /// Errors from the PJRT/XLA native path.
-    #[error("xla native error: {0}")]
     Xla(String),
 
     /// Wrapped I/O errors (artifact loading, config files).
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for HetError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            HetError::Frontend { line, col, msg } => {
+                write!(f, "frontend error at {line}:{col}: {msg}")
+            }
+            HetError::IrParse { line, msg } => {
+                write!(f, "hetIR parse error at line {line}: {msg}")
+            }
+            HetError::Verify { func, msg } => {
+                write!(f, "hetIR verify error in `{func}`: {msg}")
+            }
+            HetError::Translate { backend, msg } => {
+                write!(f, "backend `{backend}` translation error: {msg}")
+            }
+            HetError::DeviceFault { device, msg } => {
+                write!(f, "device fault on {device}: {msg}")
+            }
+            HetError::Runtime { msg } => write!(f, "runtime error: {msg}"),
+            HetError::Migrate { msg } => write!(f, "migration error: {msg}"),
+            HetError::Blob { msg } => write!(f, "state blob error: {msg}"),
+            HetError::Xla(msg) => write!(f, "xla native error: {msg}"),
+            HetError::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for HetError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            HetError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for HetError {
+    fn from(e: std::io::Error) -> Self {
+        HetError::Io(e)
+    }
 }
 
 impl HetError {

@@ -37,13 +37,32 @@ pub struct HetGpu {
 }
 
 impl HetGpu {
-    /// Create a context with the given simulated devices.
+    /// Create a context with the given simulated devices. Each device's
+    /// block-dispatch worker count comes from `HETGPU_SIM_THREADS`
+    /// (default: host cores).
     pub fn with_devices(kinds: &[DeviceKind]) -> Result<HetGpu> {
+        HetGpu::build(kinds, None)
+    }
+
+    /// Create a context with an explicit per-device dispatch worker count
+    /// (overrides `HETGPU_SIM_THREADS`; `1` forces sequential block
+    /// execution).
+    pub fn with_devices_and_workers(kinds: &[DeviceKind], workers: usize) -> Result<HetGpu> {
+        HetGpu::build(kinds, Some(workers))
+    }
+
+    fn build(kinds: &[DeviceKind], workers: Option<usize>) -> Result<HetGpu> {
         if kinds.is_empty() {
             return Err(HetError::runtime("no devices"));
         }
-        let devices: Vec<Device> =
-            kinds.iter().enumerate().map(|(i, k)| Device::new(i, *k)).collect();
+        let devices: Vec<Device> = kinds
+            .iter()
+            .enumerate()
+            .map(|(i, k)| match workers {
+                Some(w) => Device::new_with_workers(i, *k, w),
+                None => Device::new(i, *k),
+            })
+            .collect();
         let inner = Arc::new(RuntimeInner {
             devices,
             modules: std::sync::RwLock::new(Vec::new()),
@@ -56,6 +75,11 @@ impl HetGpu {
     /// Create a context with all four paper devices.
     pub fn full_testbed() -> Result<HetGpu> {
         HetGpu::with_devices(&DeviceKind::all())
+    }
+
+    /// Dispatch worker threads device `id` spreads thread blocks over.
+    pub fn sim_workers(&self, id: usize) -> Result<usize> {
+        Ok(self.inner.device(id)?.engine.workers())
     }
 
     pub fn device_count(&self) -> usize {
@@ -122,7 +146,7 @@ impl HetGpu {
             return Err(HetError::runtime("d2h copy out of bounds"));
         }
         let dev = self.inner.device(device)?;
-        dev.mem.lock().unwrap().read_bytes(src.0, out)
+        dev.mem.lock().unwrap().read_bytes_into(src.0, out)
     }
 
     /// Typed convenience: upload an `f32` slice.
@@ -250,7 +274,7 @@ impl HetGpu {
             let mem = dev.mem.lock().unwrap();
             for (addr, size) in allocs {
                 let mut bytes = vec![0u8; size as usize];
-                mem.read_bytes(addr, &mut bytes)?;
+                mem.read_bytes_into(addr, &mut bytes)?;
                 mem_blobs.push((addr, bytes));
             }
         }
@@ -261,7 +285,7 @@ impl HetGpu {
     pub fn restore(&self, stream: StreamHandle, snap: Snapshot, dst_device: usize) -> Result<()> {
         let dst = self.inner.device(dst_device)?;
         {
-            let mut mem = dst.mem.lock().unwrap();
+            let mem = dst.mem.lock().unwrap();
             for (addr, bytes) in &snap.allocations {
                 mem.write_bytes(*addr, bytes)?;
             }

@@ -6,6 +6,7 @@
 
 use crate::isa::simt_isa::SimtConfig;
 use crate::isa::tensix_isa::TensixConfig;
+use crate::sim::dispatch::DispatchOptions;
 use crate::sim::mem::DeviceMemory;
 use crate::sim::simt::SimtSim;
 use crate::sim::tensix::TensixSim;
@@ -70,6 +71,21 @@ impl Engine {
             Engine::Tensix(t) => t.cfg.clock_mhz,
         }
     }
+
+    /// Dispatch worker threads this engine spreads thread blocks over.
+    pub fn workers(&self) -> usize {
+        match self {
+            Engine::Simt(s) => s.dispatch.workers,
+            Engine::Tensix(t) => t.dispatch.workers,
+        }
+    }
+
+    fn set_dispatch(&mut self, opts: DispatchOptions) {
+        match self {
+            Engine::Simt(s) => s.dispatch = opts,
+            Engine::Tensix(t) => t.dispatch = opts,
+        }
+    }
 }
 
 /// One simulated GPU: engine + DRAM + the cooperative pause flag.
@@ -105,6 +121,15 @@ impl Device {
             mem: Mutex::new(DeviceMemory::new(DEVICE_MEM_BYTES, kind.name())),
             pause: AtomicBool::new(false),
         }
+    }
+
+    /// Like [`Device::new`] with an explicit dispatch worker count
+    /// (overriding `HETGPU_SIM_THREADS`); `workers = 1` is the sequential
+    /// escape hatch.
+    pub fn new_with_workers(id: usize, kind: DeviceKind, workers: usize) -> Device {
+        let mut d = Device::new(id, kind);
+        d.engine.set_dispatch(DispatchOptions::with_workers(workers));
+        d
     }
 
     /// Replace the Tensix engine configuration (perf-pass ablations).

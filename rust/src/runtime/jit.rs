@@ -35,11 +35,20 @@ pub struct JitEvent {
     pub out_insts: usize,
 }
 
+/// All mutable cache state behind one lock: the map, the E4 event log, and
+/// the hit counter move together, so a cache decision and its accounting
+/// are a single critical section (three separate mutexes previously let
+/// concurrent launches interleave them inconsistently).
+#[derive(Default)]
+struct JitState {
+    map: HashMap<JitKey, Arc<DeviceProgram>>,
+    events: Vec<JitEvent>,
+    hits: u64,
+}
+
 #[derive(Default)]
 pub struct JitCache {
-    map: Mutex<HashMap<JitKey, Arc<DeviceProgram>>>,
-    events: Mutex<Vec<JitEvent>>,
-    hits: Mutex<u64>,
+    state: Mutex<JitState>,
 }
 
 impl JitCache {
@@ -50,16 +59,27 @@ impl JitCache {
     /// Translate (or fetch the cached translation of) `kernel` for the
     /// target identified by `key`. `simt_cfg` must be provided for SIMT
     /// targets.
+    ///
+    /// The lock is **not** held across translation, so a slow translation
+    /// can't stall unrelated launches. Concurrent misses on the same key
+    /// may translate redundantly; the first to publish wins, later threads
+    /// discard their duplicate and count a hit — exactly one `JitEvent`
+    /// per distinct key, and every caller sees the same `Arc`.
     pub fn get_or_translate(
         &self,
         key: JitKey,
         kernel: &Kernel,
         simt_cfg: Option<&SimtConfig>,
     ) -> Result<Arc<DeviceProgram>> {
-        if let Some(p) = self.map.lock().unwrap().get(&key) {
-            *self.hits.lock().unwrap() += 1;
-            return Ok(p.clone());
+        {
+            let mut st = self.state.lock().unwrap();
+            if let Some(p) = st.map.get(&key) {
+                let p = p.clone();
+                st.hits += 1;
+                return Ok(p);
+            }
         }
+
         let opts = TranslateOpts { migratable: key.migratable };
         let t0 = Instant::now();
         let prog = match key.kind {
@@ -73,7 +93,15 @@ impl JitCache {
             }
         };
         let micros = t0.elapsed().as_secs_f64() * 1e6;
-        self.events.lock().unwrap().push(JitEvent {
+
+        let mut st = self.state.lock().unwrap();
+        if let Some(p) = st.map.get(&key) {
+            // Lost the miss race: keep the published program.
+            let p = p.clone();
+            st.hits += 1;
+            return Ok(p);
+        }
+        st.events.push(JitEvent {
             kernel: key.kernel.clone(),
             kind: key.kind,
             tensix_mode: key.tensix_mode,
@@ -81,19 +109,19 @@ impl JitCache {
             out_insts: prog.inst_count(),
         });
         let prog = Arc::new(prog);
-        self.map.lock().unwrap().insert(key, prog.clone());
+        st.map.insert(key, prog.clone());
         Ok(prog)
     }
 
     /// Recorded translation events (E4 table data).
     pub fn events(&self) -> Vec<JitEvent> {
-        self.events.lock().unwrap().clone()
+        self.state.lock().unwrap().events.clone()
     }
 
     /// Cache hit count (repeated-launch check, §6.2 "0.11 ms on
     /// subsequent runs (cached)").
     pub fn hit_count(&self) -> u64 {
-        *self.hits.lock().unwrap()
+        self.state.lock().unwrap().hits
     }
 }
 
@@ -126,6 +154,37 @@ mod tests {
         assert!(Arc::ptr_eq(&a, &b));
         assert_eq!(cache.hit_count(), 1);
         assert_eq!(cache.events().len(), 1);
+    }
+
+    #[test]
+    fn concurrent_misses_record_one_event_and_share_one_program() {
+        let cache = JitCache::new();
+        let k = tiny_kernel();
+        let cfg = SimtConfig::nvidia();
+        let key = JitKey {
+            module: 0,
+            kernel: "k".into(),
+            kind: DeviceKind::NvidiaSim,
+            tensix_mode: None,
+            migratable: true,
+        };
+        let progs: Vec<Arc<DeviceProgram>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..8)
+                .map(|_| {
+                    s.spawn(|| {
+                        cache.get_or_translate(key.clone(), &k, Some(&cfg)).unwrap()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(cache.events().len(), 1, "duplicate JitEvents recorded");
+        for p in &progs[1..] {
+            assert!(Arc::ptr_eq(&progs[0], p), "threads saw different programs");
+        }
+        // Exactly one miss translated-and-published; the other 7 hit
+        // (either before translating or when they lost the publish race).
+        assert_eq!(cache.hit_count(), 7);
     }
 
     #[test]

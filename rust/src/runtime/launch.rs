@@ -57,6 +57,18 @@ pub struct LaunchSpec {
     pub tensix_mode_hint: Option<TensixMode>,
 }
 
+/// Validate launch geometry with checked arithmetic *before* anything
+/// touches the unchecked `grid_size`/`block_size` accessors on the hot
+/// path: 3-D products that overflow `u32` (a debug-build panic and a
+/// silently wrapped grid in release builds) become a clear runtime error.
+/// Delegates to [`LaunchDims::validate`], the single home of the geometry
+/// rules shared with both simulators; per-architecture block-size caps are
+/// enforced by the target engine (SIMT's 1024-thread limit does not apply
+/// to Tensix MIMD/multi-core launches).
+pub fn validate_dims(dims: LaunchDims) -> Result<(u32, u32)> {
+    dims.validate()
+}
+
 /// Convert launch args to typed values against the kernel signature.
 pub fn args_to_values(kernel: &Kernel, args: &[Arg]) -> Result<Vec<Value>> {
     if args.len() != kernel.params.len() {
@@ -156,6 +168,22 @@ mod tests {
         assert!(args_to_values(k, &wrong_ty).is_err());
         let wrong_n = [Arg::Ptr(GpuPtr(4096))];
         assert!(args_to_values(k, &wrong_n).is_err());
+    }
+
+    #[test]
+    fn dims_validation_catches_overflow_and_empties() {
+        assert!(validate_dims(LaunchDims::d1(4, 256)).is_ok());
+        // 3-D products that wrap u32 must error, not panic.
+        let huge = LaunchDims { grid: [u32::MAX, u32::MAX, u32::MAX], block: [1, 1, 1] };
+        let e = validate_dims(huge).unwrap_err();
+        assert!(e.to_string().contains("overflow"), "{e}");
+        let wide_block = LaunchDims { grid: [1, 1, 1], block: [65536, 65536, 1] };
+        assert!(validate_dims(wide_block).is_err());
+        assert!(validate_dims(LaunchDims::d1(0, 32)).is_err());
+        assert!(validate_dims(LaunchDims::d1(1, 0)).is_err());
+        // Block-size caps are per-architecture (SIMT rejects >1024 in its
+        // engine; Tensix MIMD legitimately accepts larger blocks).
+        assert!(validate_dims(LaunchDims::d1(1, 2048)).is_ok());
     }
 
     #[test]

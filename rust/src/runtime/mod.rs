@@ -14,7 +14,7 @@ use crate::hetir::module::Module;
 use crate::isa::tensix_isa::TensixMode;
 use crate::runtime::device::{Device, DeviceKind, Engine};
 use crate::runtime::jit::{JitCache, JitKey};
-use crate::runtime::launch::{args_to_values, choose_tensix_mode, LaunchSpec};
+use crate::runtime::launch::{args_to_values, choose_tensix_mode, validate_dims, LaunchSpec};
 use crate::runtime::memory::MemoryManager;
 use crate::sim::snapshot::{BlockResume, LaunchOutcome};
 use std::sync::RwLock;
@@ -43,6 +43,10 @@ impl RuntimeInner {
         resume: Option<&[BlockResume]>,
     ) -> Result<LaunchOutcome> {
         let dev = self.device(device_id)?;
+        // Checked-arithmetic geometry validation up front: overflowing or
+        // empty dims surface as a clear runtime error instead of a
+        // debug-build panic inside the simulators.
+        validate_dims(spec.dims)?;
         let modules = self.modules.read().unwrap();
         let module = modules
             .get(spec.module)

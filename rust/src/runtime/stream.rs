@@ -47,6 +47,9 @@ pub struct StreamStats {
     pub completed: u64,
     pub cost: CostReport,
     pub wall_micros: f64,
+    /// Dispatch worker threads of the device the last launch ran on
+    /// (1 = sequential block execution).
+    pub sim_workers: usize,
 }
 
 pub enum Cmd {
@@ -155,9 +158,11 @@ fn worker(
         let t0 = Instant::now();
         let outcome = inner.run_launch(device, spec, resume)?;
         let wall = t0.elapsed().as_secs_f64() * 1e6;
+        let workers = inner.device(device).map(|d| d.engine.workers()).unwrap_or(1);
         let mut s = stats.lock().unwrap();
         s.launches += 1;
         s.wall_micros += wall;
+        s.sim_workers = workers;
         s.cost.merge(outcome.cost());
         match outcome {
             LaunchOutcome::Completed(_) => {

@@ -7,7 +7,7 @@
 //! break dataflow, not arithmetic.
 
 use crate::error::{HetError, Result};
-use crate::hetir::instr::{BinOp, CmpOp, UnOp};
+use crate::hetir::instr::{AtomOp, BinOp, CmpOp, UnOp};
 use crate::hetir::types::{Scalar, Value};
 
 /// Evaluate a binary operation in type `ty`.
@@ -145,6 +145,117 @@ pub fn bin(op: BinOp, ty: Scalar, a: Value, b: Value) -> Result<Value> {
                 Xor => x ^ y,
                 _ => return Err(HetError::runtime(format!("op {op:?} on predicate"))),
             })
+        }
+    })
+}
+
+/// Pre-decoded fast path for infallible binary ops: returns a monomorphic
+/// `fn` over raw bit patterns producing *exactly* the same bits as
+/// [`bin`], or `None` when the op can fault (integer div/rem by zero) or
+/// is invalid for the type. The interpreters resolve this once per
+/// instruction and run the lane loop without re-matching op/type or
+/// round-tripping through the `Value` enum — the dominant cost of the
+/// per-step dispatch once blocks execute hot in parallel.
+pub fn bin_fast(op: BinOp, ty: Scalar) -> Option<fn(u64, u64) -> u64> {
+    use BinOp::*;
+    #[inline(always)]
+    fn f32_of(x: u64) -> f32 {
+        f32::from_bits(x as u32)
+    }
+    #[inline(always)]
+    fn f32_bits(x: f32) -> u64 {
+        x.to_bits() as u64
+    }
+    #[inline(always)]
+    fn i32_bits(x: i32) -> u64 {
+        x as u32 as u64
+    }
+    let f: fn(u64, u64) -> u64 = match (ty, op) {
+        (Scalar::F32, Add) => |a, b| f32_bits(f32_of(a) + f32_of(b)),
+        (Scalar::F32, Sub) => |a, b| f32_bits(f32_of(a) - f32_of(b)),
+        (Scalar::F32, Mul) => |a, b| f32_bits(f32_of(a) * f32_of(b)),
+        (Scalar::F32, Div) => |a, b| f32_bits(f32_of(a) / f32_of(b)),
+        (Scalar::F32, Rem) => |a, b| f32_bits(f32_of(a) % f32_of(b)),
+        (Scalar::F32, Min) => |a, b| f32_bits(f32_of(a).min(f32_of(b))),
+        (Scalar::F32, Max) => |a, b| f32_bits(f32_of(a).max(f32_of(b))),
+
+        (Scalar::I32, Add) => |a, b| i32_bits((a as u32 as i32).wrapping_add(b as u32 as i32)),
+        (Scalar::I32, Sub) => |a, b| i32_bits((a as u32 as i32).wrapping_sub(b as u32 as i32)),
+        (Scalar::I32, Mul) => |a, b| i32_bits((a as u32 as i32).wrapping_mul(b as u32 as i32)),
+        (Scalar::I32, Min) => |a, b| i32_bits((a as u32 as i32).min(b as u32 as i32)),
+        (Scalar::I32, Max) => |a, b| i32_bits((a as u32 as i32).max(b as u32 as i32)),
+        (Scalar::I32, And) => |a, b| i32_bits((a as u32 as i32) & (b as u32 as i32)),
+        (Scalar::I32, Or) => |a, b| i32_bits((a as u32 as i32) | (b as u32 as i32)),
+        (Scalar::I32, Xor) => |a, b| i32_bits((a as u32 as i32) ^ (b as u32 as i32)),
+        (Scalar::I32, Shl) => |a, b| i32_bits((a as u32 as i32).wrapping_shl(b as u32 & 31)),
+        (Scalar::I32, Shr) => |a, b| i32_bits((a as u32 as i32).wrapping_shr(b as u32 & 31)),
+
+        (Scalar::U32, Add) => |a, b| (a as u32).wrapping_add(b as u32) as u64,
+        (Scalar::U32, Sub) => |a, b| (a as u32).wrapping_sub(b as u32) as u64,
+        (Scalar::U32, Mul) => |a, b| (a as u32).wrapping_mul(b as u32) as u64,
+        (Scalar::U32, Min) => |a, b| (a as u32).min(b as u32) as u64,
+        (Scalar::U32, Max) => |a, b| (a as u32).max(b as u32) as u64,
+        (Scalar::U32, And) => |a, b| ((a as u32) & (b as u32)) as u64,
+        (Scalar::U32, Or) => |a, b| ((a as u32) | (b as u32)) as u64,
+        (Scalar::U32, Xor) => |a, b| ((a as u32) ^ (b as u32)) as u64,
+        (Scalar::U32, Shl) => |a, b| (a as u32).wrapping_shl(b as u32 & 31) as u64,
+        (Scalar::U32, Shr) => |a, b| (a as u32).wrapping_shr(b as u32 & 31) as u64,
+
+        (Scalar::I64, Add) => |a, b| (a as i64).wrapping_add(b as i64) as u64,
+        (Scalar::I64, Sub) => |a, b| (a as i64).wrapping_sub(b as i64) as u64,
+        (Scalar::I64, Mul) => |a, b| (a as i64).wrapping_mul(b as i64) as u64,
+        (Scalar::I64, Min) => |a, b| (a as i64).min(b as i64) as u64,
+        (Scalar::I64, Max) => |a, b| (a as i64).max(b as i64) as u64,
+        (Scalar::I64, And) => |a, b| a & b,
+        (Scalar::I64, Or) => |a, b| a | b,
+        (Scalar::I64, Xor) => |a, b| a ^ b,
+        (Scalar::I64, Shl) => |a, b| (a as i64).wrapping_shl(b as u32 & 63) as u64,
+        (Scalar::I64, Shr) => |a, b| (a as i64).wrapping_shr(b as u32 & 63) as u64,
+
+        (Scalar::U64, Add) => |a, b| a.wrapping_add(b),
+        (Scalar::U64, Sub) => |a, b| a.wrapping_sub(b),
+        (Scalar::U64, Mul) => |a, b| a.wrapping_mul(b),
+        (Scalar::U64, Min) => |a, b| a.min(b),
+        (Scalar::U64, Max) => |a, b| a.max(b),
+        (Scalar::U64, And) => |a, b| a & b,
+        (Scalar::U64, Or) => |a, b| a | b,
+        (Scalar::U64, Xor) => |a, b| a ^ b,
+        (Scalar::U64, Shl) => |a, b| a.wrapping_shl(b as u32 & 63),
+        (Scalar::U64, Shr) => |a, b| a.wrapping_shr(b as u32 & 63),
+
+        (Scalar::Pred, And) => |a, b| (a & 1) & (b & 1),
+        (Scalar::Pred, Or) => |a, b| (a & 1) | (b & 1),
+        (Scalar::Pred, Xor) => |a, b| (a & 1) ^ (b & 1),
+
+        _ => return None,
+    };
+    Some(f)
+}
+
+/// Apply an atomic operation's combine function: the value committed to
+/// memory given the currently-loaded `old` and operand(s). Shared by the
+/// sequential shared-memory path and [`crate::sim::mem::DeviceMemory::atomic_rmw`]
+/// so both interleavings produce identical bits.
+pub fn apply_atom(
+    op: AtomOp,
+    ty: Scalar,
+    old: Value,
+    v: Value,
+    v2: Option<Value>,
+) -> Result<Value> {
+    Ok(match op {
+        AtomOp::Add => bin(BinOp::Add, ty, old, v)?,
+        AtomOp::Min => bin(BinOp::Min, ty, old, v)?,
+        AtomOp::Max => bin(BinOp::Max, ty, old, v)?,
+        AtomOp::And => bin(BinOp::And, ty, old, v)?,
+        AtomOp::Or => bin(BinOp::Or, ty, old, v)?,
+        AtomOp::Exch => v,
+        AtomOp::Cas => {
+            if old.bits == v.bits {
+                v2.expect("verified CAS has a second operand")
+            } else {
+                old
+            }
         }
     })
 }
@@ -374,6 +485,46 @@ mod tests {
     #[test]
     fn popc() {
         assert_eq!(un(UnOp::Popc, Scalar::U32, Value::u32(0xF0F0)).unwrap().as_u32(), 8);
+    }
+
+    #[test]
+    fn bin_fast_matches_bin_bit_for_bit() {
+        use crate::hetir::types::Type;
+        let ops = [
+            BinOp::Add,
+            BinOp::Sub,
+            BinOp::Mul,
+            BinOp::Div,
+            BinOp::Rem,
+            BinOp::Min,
+            BinOp::Max,
+            BinOp::And,
+            BinOp::Or,
+            BinOp::Xor,
+            BinOp::Shl,
+            BinOp::Shr,
+        ];
+        let tys =
+            [Scalar::F32, Scalar::I32, Scalar::U32, Scalar::I64, Scalar::U64, Scalar::Pred];
+        let mut rng = crate::testutil::XorShift::new(0xA1FA);
+        for ty in tys {
+            for op in ops {
+                let Some(f) = bin_fast(op, ty) else { continue };
+                for _ in 0..256 {
+                    let (a, b) = (rng.next_u64(), rng.next_u64());
+                    let slow = bin(
+                        op,
+                        ty,
+                        Value { bits: a, ty: Type::Scalar(ty) },
+                        Value { bits: b, ty: Type::Scalar(ty) },
+                    )
+                    .unwrap_or_else(|e| panic!("bin_fast covers fallible {op:?}/{ty}: {e}"));
+                    let fast = f(a, b);
+                    // NaN bit patterns are compared exactly too.
+                    assert_eq!(slow.bits, fast, "{op:?} {ty} a={a:#x} b={b:#x}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,449 @@
+//! Parallel block dispatch engine shared by the SIMT and Tensix simulators.
+//!
+//! Thread blocks of a grid are independent by construction (cross-block
+//! communication is only defined through global-memory atomics), so both
+//! simulators execute them concurrently on a pool of host worker threads —
+//! the simulated analog of a multi-SM GPU actually *being* parallel. The
+//! engine preserves the bit-reproducible semantics the migration machinery
+//! relies on:
+//!
+//! * **Linear-id commit order.** Workers claim blocks from an atomic
+//!   counter, but results (states, cycles, cost contributions) are
+//!   committed into the grid-shaped output in linear block-id order, so the
+//!   produced `PausedGrid`, cost report, and error (lowest failing block
+//!   wins) are identical for any worker count.
+//! * **Real atomics.** Blocks share an interior-mutable
+//!   [`crate::sim::mem::DeviceMemory`]; guest global atomics go through its
+//!   host-atomic `atomic_rmw` path, so integer atomics keep deterministic
+//!   final values under any interleaving (float atomicAdd is
+//!   order-sensitive, exactly as on real GPUs).
+//! * **Cooperative pause.** The pause flag is sampled at block-dispatch
+//!   boundaries exactly as in the sequential engine; once a worker observes
+//!   it (or a block suspends at a checkpoint), no *new* blocks start and
+//!   the remainder of the grid is committed as `NotStarted`. In-flight
+//!   blocks finish (to `Done` or a checkpoint dump) before the engine
+//!   returns. With one worker this reproduces the sequential frontier
+//!   bit-for-bit; with several, the *set* of already-started blocks depends
+//!   on pause timing — as it does on real hardware — while the commit
+//!   order stays deterministic. For timing-independent tests,
+//!   [`DispatchOptions::pause_at_block`] pins the frontier to a block id.
+//!
+//! Worker count: `HETGPU_SIM_THREADS` (default = available host cores,
+//! `HETGPU_SIM_THREADS=1` is the sequential escape hatch).
+
+use crate::error::Result;
+use crate::sim::snapshot::{BlockResume, BlockState};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+/// Configuration of the dispatch engine (per simulator instance).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DispatchOptions {
+    /// Number of host worker threads blocks are spread over.
+    pub workers: usize,
+    /// Deterministic pause frontier: when `Some(k)` and the program is
+    /// migratable, blocks with linear id `>= k` are committed as
+    /// `NotStarted` and blocks `< k` all execute, regardless of worker
+    /// count or pause-flag timing (the flag still drives in-block
+    /// checkpoint dumps). Used by determinism tests and migration drills;
+    /// `None` (the default) means flag-driven pausing.
+    pub pause_at_block: Option<u32>,
+}
+
+impl Default for DispatchOptions {
+    fn default() -> Self {
+        DispatchOptions::from_env()
+    }
+}
+
+impl DispatchOptions {
+    /// Worker count from `HETGPU_SIM_THREADS`, defaulting to the number of
+    /// host cores.
+    pub fn from_env() -> DispatchOptions {
+        let configured = std::env::var("HETGPU_SIM_THREADS")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .filter(|&n| n > 0);
+        let workers = configured.unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        });
+        DispatchOptions { workers: workers.max(1), pause_at_block: None }
+    }
+
+    /// Explicit worker count (overrides the environment).
+    pub fn with_workers(workers: usize) -> DispatchOptions {
+        DispatchOptions { workers: workers.max(1), pause_at_block: None }
+    }
+
+    /// Sequential execution (the `HETGPU_SIM_THREADS=1` escape hatch).
+    pub fn single() -> DispatchOptions {
+        DispatchOptions::with_workers(1)
+    }
+
+    /// Builder: pin the pause frontier to block `k` (see field docs).
+    pub fn pause_at(mut self, block: u32) -> DispatchOptions {
+        self.pause_at_block = Some(block);
+        self
+    }
+}
+
+/// Per-block contributions to the launch [`crate::sim::snapshot::CostReport`],
+/// returned by the block-execution closure and summed in linear-id order.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct BlockTotals {
+    pub warp_instructions: u64,
+    pub total_cycles: u64,
+    pub global_bytes: u64,
+}
+
+impl BlockTotals {
+    fn accumulate(&mut self, other: &BlockTotals) {
+        self.warp_instructions += other.warp_instructions;
+        self.total_cycles += other.total_cycles;
+        self.global_bytes += other.global_bytes;
+    }
+}
+
+/// Outcome of dispatching a whole grid, committed in linear block order.
+#[derive(Debug)]
+pub struct GridRun {
+    /// Per-block final state, indexed by linear block id.
+    pub states: Vec<BlockState>,
+    /// Per-block model cycles (0 for skipped / not-started blocks).
+    pub block_cycles: Vec<u64>,
+    /// Summed cost contributions of executed blocks.
+    pub totals: BlockTotals,
+    /// True if any block is `NotStarted` or `Suspended` (the launch must
+    /// surface a `PausedGrid`).
+    pub paused: bool,
+}
+
+/// What one claimed block produced.
+enum Slot {
+    /// Resume directive said `Skip` (block completed before the pause).
+    Skipped,
+    /// Pause observed at the dispatch boundary before this block started.
+    NotStarted,
+    Ran { state: BlockState, cycles: u64, totals: BlockTotals },
+}
+
+/// Execute `grid_size` blocks through `run_block`, spreading them over
+/// `opts.workers` host threads. `run_block` receives the linear block id
+/// and must be pure apart from its effects on shared (interior-mutable)
+/// device memory; it is invoked at most once per block.
+pub fn run_blocks<F>(
+    grid_size: u32,
+    opts: DispatchOptions,
+    migratable: bool,
+    pause: &AtomicBool,
+    resume: Option<&[BlockResume]>,
+    run_block: F,
+) -> Result<GridRun>
+where
+    F: Fn(u32) -> Result<(BlockState, u64, BlockTotals)> + Sync,
+{
+    let pause_at = if migratable { opts.pause_at_block } else { None };
+    let workers = opts.workers.min(grid_size as usize).max(1);
+    if workers == 1 {
+        return run_blocks_sequential(grid_size, migratable, pause, pause_at, resume, &run_block);
+    }
+
+    let next = AtomicU64::new(0);
+    // Flag-driven dispatch stop: a worker observed the pause flag or a
+    // block suspended at a checkpoint.
+    let stop = AtomicBool::new(false);
+    // Lowest faulting block id seen so far. Blocks *above* it are not
+    // dispatched (no point burning the grid tail after a fault), while
+    // blocks below it still run — one of them may fault at an even lower
+    // id — so the commit pass surfaces the lowest-id error deterministically
+    // for any worker count, matching the sequential path's first-error.
+    let fault_min = AtomicU64::new(u64::MAX);
+
+    let per_worker: Vec<Vec<(u32, Result<Slot>)>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                scope.spawn(|| {
+                    let mut local: Vec<(u32, Result<Slot>)> = Vec::new();
+                    loop {
+                        let b = next.fetch_add(1, Ordering::Relaxed);
+                        if b >= grid_size as u64 {
+                            break;
+                        }
+                        let b = b as u32;
+                        if matches!(resume.map(|r| &r[b as usize]), Some(BlockResume::Skip)) {
+                            local.push((b, Ok(Slot::Skipped)));
+                            continue;
+                        }
+                        if b as u64 > fault_min.load(Ordering::Acquire) {
+                            // Past a known fault: the launch is failing, the
+                            // slot is discarded by the error return.
+                            local.push((b, Ok(Slot::NotStarted)));
+                            continue;
+                        }
+                        let gated = match pause_at {
+                            Some(k) => b >= k,
+                            None => {
+                                stop.load(Ordering::Acquire)
+                                    || (migratable && pause.load(Ordering::SeqCst))
+                            }
+                        };
+                        if gated {
+                            stop.store(true, Ordering::Release);
+                            local.push((b, Ok(Slot::NotStarted)));
+                            continue;
+                        }
+                        match run_block(b) {
+                            Ok((state, cycles, totals)) => {
+                                if pause_at.is_none()
+                                    && matches!(state, BlockState::Suspended(_))
+                                {
+                                    stop.store(true, Ordering::Release);
+                                }
+                                local.push((b, Ok(Slot::Ran { state, cycles, totals })));
+                            }
+                            Err(e) => {
+                                fault_min.fetch_min(b as u64, Ordering::AcqRel);
+                                local.push((b, Err(e)));
+                            }
+                        }
+                    }
+                    local
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("dispatch worker panicked"))
+            .collect()
+    });
+
+    let mut slots: Vec<Option<Result<Slot>>> = Vec::with_capacity(grid_size as usize);
+    slots.resize_with(grid_size as usize, || None);
+    for chunk in per_worker {
+        for (b, slot) in chunk {
+            slots[b as usize] = Some(slot);
+        }
+    }
+    commit(slots)
+}
+
+/// The one-worker path: byte-identical to the historical sequential grid
+/// loop, including its early return on the first faulting block.
+fn run_blocks_sequential<F>(
+    grid_size: u32,
+    migratable: bool,
+    pause: &AtomicBool,
+    pause_at: Option<u32>,
+    resume: Option<&[BlockResume]>,
+    run_block: &F,
+) -> Result<GridRun>
+where
+    F: Fn(u32) -> Result<(BlockState, u64, BlockTotals)>,
+{
+    let mut slots: Vec<Option<Result<Slot>>> = Vec::with_capacity(grid_size as usize);
+    let mut stopped = false;
+    for b in 0..grid_size {
+        if matches!(resume.map(|r| &r[b as usize]), Some(BlockResume::Skip)) {
+            slots.push(Some(Ok(Slot::Skipped)));
+            continue;
+        }
+        let gated = match pause_at {
+            Some(k) => b >= k,
+            None => stopped || (migratable && pause.load(Ordering::SeqCst)),
+        };
+        if gated {
+            stopped = true;
+            slots.push(Some(Ok(Slot::NotStarted)));
+            continue;
+        }
+        let (state, cycles, totals) = run_block(b)?;
+        if matches!(state, BlockState::Suspended(_)) {
+            stopped = true;
+        }
+        slots.push(Some(Ok(Slot::Ran { state, cycles, totals })));
+    }
+    commit(slots)
+}
+
+/// Fold per-block slots into the grid-shaped result in linear-id order.
+fn commit(slots: Vec<Option<Result<Slot>>>) -> Result<GridRun> {
+    let n = slots.len();
+    let mut states = Vec::with_capacity(n);
+    let mut block_cycles = Vec::with_capacity(n);
+    let mut totals = BlockTotals::default();
+    let mut paused = false;
+    for slot in slots {
+        match slot.expect("every block is claimed exactly once") {
+            Ok(Slot::Skipped) => {
+                states.push(BlockState::Done);
+                block_cycles.push(0);
+            }
+            Ok(Slot::NotStarted) => {
+                paused = true;
+                states.push(BlockState::NotStarted);
+                block_cycles.push(0);
+            }
+            Ok(Slot::Ran { state, cycles, totals: t }) => {
+                if matches!(state, BlockState::Suspended(_)) {
+                    paused = true;
+                }
+                totals.accumulate(&t);
+                states.push(state);
+                block_cycles.push(cycles);
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(GridRun { states, block_cycles, totals, paused })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::error::HetError;
+    use std::sync::atomic::AtomicU64 as Counter;
+
+    fn done(cycles: u64) -> Result<(BlockState, u64, BlockTotals)> {
+        Ok((
+            BlockState::Done,
+            cycles,
+            BlockTotals { warp_instructions: 1, total_cycles: cycles, global_bytes: 0 },
+        ))
+    }
+
+    #[test]
+    fn commits_in_linear_order_for_any_worker_count() {
+        let pause = AtomicBool::new(false);
+        for workers in [1usize, 2, 7] {
+            let run = run_blocks(
+                64,
+                DispatchOptions::with_workers(workers),
+                false,
+                &pause,
+                None,
+                |b| done(b as u64 * 10),
+            )
+            .unwrap();
+            assert!(!run.paused);
+            assert_eq!(run.block_cycles, (0..64).map(|b| b * 10).collect::<Vec<u64>>());
+            assert_eq!(run.totals.warp_instructions, 64);
+            assert_eq!(run.totals.total_cycles, (0..64u64).map(|b| b * 10).sum::<u64>());
+            assert!(run.states.iter().all(|s| *s == BlockState::Done));
+        }
+    }
+
+    #[test]
+    fn every_block_runs_exactly_once() {
+        let pause = AtomicBool::new(false);
+        let calls = Counter::new(0);
+        let run = run_blocks(
+            1000,
+            DispatchOptions::with_workers(8),
+            false,
+            &pause,
+            None,
+            |_| {
+                calls.fetch_add(1, Ordering::Relaxed);
+                done(1)
+            },
+        )
+        .unwrap();
+        assert_eq!(calls.load(Ordering::Relaxed), 1000);
+        assert_eq!(run.states.len(), 1000);
+    }
+
+    #[test]
+    fn skip_directives_bypass_execution_and_pause() {
+        let pause = AtomicBool::new(true); // pause pre-set
+        let resume: Vec<BlockResume> = (0..8)
+            .map(|b| if b % 2 == 0 { BlockResume::Skip } else { BlockResume::FromEntry })
+            .collect();
+        for workers in [1usize, 4] {
+            let run = run_blocks(
+                8,
+                DispatchOptions::with_workers(workers),
+                true,
+                &pause,
+                Some(&resume),
+                |b| panic!("block {b} must not run while paused"),
+            )
+            .unwrap();
+            assert!(run.paused);
+            for (b, s) in run.states.iter().enumerate() {
+                let want =
+                    if b % 2 == 0 { BlockState::Done } else { BlockState::NotStarted };
+                assert_eq!(*s, want, "block {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn pinned_pause_frontier_is_worker_count_independent() {
+        let pause = AtomicBool::new(false);
+        for workers in [1usize, 3, 8] {
+            let run = run_blocks(
+                32,
+                DispatchOptions::with_workers(workers).pause_at(5),
+                true,
+                &pause,
+                None,
+                |b| {
+                    assert!(b < 5, "block {b} dispatched past the pinned frontier");
+                    done(7)
+                },
+            )
+            .unwrap();
+            assert!(run.paused);
+            for (b, s) in run.states.iter().enumerate() {
+                let want = if b < 5 { BlockState::Done } else { BlockState::NotStarted };
+                assert_eq!(*s, want, "block {b} (workers {workers})");
+            }
+        }
+    }
+
+    #[test]
+    fn pinned_frontier_ignored_for_non_migratable_programs() {
+        let pause = AtomicBool::new(false);
+        let run = run_blocks(
+            8,
+            DispatchOptions::with_workers(2).pause_at(3),
+            false,
+            &pause,
+            None,
+            |_| done(1),
+        )
+        .unwrap();
+        assert!(!run.paused);
+        assert!(run.states.iter().all(|s| *s == BlockState::Done));
+    }
+
+    #[test]
+    fn lowest_block_error_wins() {
+        let pause = AtomicBool::new(false);
+        for workers in [1usize, 4] {
+            let err = run_blocks(
+                16,
+                DispatchOptions::with_workers(workers),
+                false,
+                &pause,
+                None,
+                |b| {
+                    if b >= 3 {
+                        Err(HetError::runtime(format!("boom {b}")))
+                    } else {
+                        done(1)
+                    }
+                },
+            )
+            .unwrap_err();
+            // Block 3 is the lowest faulting id; with >1 workers a higher
+            // block may fault concurrently but must not win the report.
+            assert!(err.to_string().contains("boom 3"), "workers {workers}: {err}");
+        }
+    }
+
+    #[test]
+    fn env_default_is_at_least_one_worker() {
+        assert!(DispatchOptions::from_env().workers >= 1);
+        assert_eq!(DispatchOptions::single().workers, 1);
+    }
+}

@@ -6,9 +6,12 @@
 //! cost model: [`simt`] models warp-based GPUs (NVIDIA/AMD/Intel configs),
 //! [`tensix`] models the many-core MIMD + vector-unit design.
 //! [`alu`] holds the scalar semantics shared by both (and by the constant
-//! folder); [`mem`] is the bounds-checked flat device memory.
+//! folder); [`mem`] is the bounds-checked flat device memory; [`dispatch`]
+//! is the parallel block dispatch engine both simulators schedule grids
+//! through (worker pool over host cores, deterministic linear-id commit).
 
 pub mod alu;
+pub mod dispatch;
 pub mod mem;
 pub mod simt;
 pub mod snapshot;

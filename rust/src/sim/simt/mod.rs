@@ -1,7 +1,9 @@
 //! SIMT device simulator: block/grid scheduling over the warp interpreter.
 //!
 //! One [`SimtSim`] instance is one simulated GPU chip (the `SimtConfig`
-//! decides which vendor it stands in for). Blocks execute sequentially in
+//! decides which vendor it stands in for). Blocks execute concurrently on
+//! the shared [`crate::sim::dispatch`] work pool (worker count from
+//! `HETGPU_SIM_THREADS`, default = host cores) with results committed in
 //! linear-id order — deterministic, which the bit-reproducible migration
 //! guarantees rely on — while the cost model distributes block costs over
 //! the configured number of SMs to produce device-level cycle estimates.
@@ -17,6 +19,7 @@ pub mod warp;
 use crate::error::{HetError, Result};
 use crate::hetir::types::Value;
 use crate::isa::simt_isa::{SimtConfig, SimtProgram};
+use crate::sim::dispatch::{self, BlockTotals, DispatchOptions};
 use crate::sim::mem::DeviceMemory;
 use crate::sim::snapshot::*;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -40,6 +43,40 @@ impl LaunchDims {
     pub fn block_size(&self) -> u32 {
         self.block[0] * self.block[1] * self.block[2]
     }
+    /// Overflow-checked launch geometry: `Some((grid_blocks,
+    /// threads_per_block))` when both products fit in `u32`, `None` on
+    /// overflow. The runtime validates every launch through this before
+    /// the unchecked accessors are used on the hot path.
+    pub fn checked_sizes(&self) -> Option<(u32, u32)> {
+        let g = (self.grid[0] as u64)
+            .checked_mul(self.grid[1] as u64)?
+            .checked_mul(self.grid[2] as u64)?;
+        let b = (self.block[0] as u64)
+            .checked_mul(self.block[1] as u64)?
+            .checked_mul(self.block[2] as u64)?;
+        if g > u32::MAX as u64 || b > u32::MAX as u64 {
+            return None;
+        }
+        Some((g as u32, b as u32))
+    }
+    /// The single geometry validation shared by the runtime launch path and
+    /// both simulators: checked products and non-emptiness. Returns
+    /// `(grid_blocks, threads_per_block)`. Per-architecture limits (the
+    /// CUDA-style 1024-thread SIMT block cap, the 32-lane Tensix
+    /// single-core cap) stay with the engine that owns them.
+    pub fn validate(&self) -> Result<(u32, u32)> {
+        let Some((grid, block)) = self.checked_sizes() else {
+            return Err(HetError::runtime(format!(
+                "launch dimension overflow: grid {:?} block {:?} exceeds u32",
+                self.grid, self.block
+            )));
+        };
+        if grid == 0 || block == 0 {
+            return Err(HetError::runtime("empty launch"));
+        }
+        Ok((grid, block))
+    }
+
     /// Decompose a linear block id into 3-D coordinates.
     pub fn block_coords(&self, linear: u32) -> [u32; 3] {
         [
@@ -63,11 +100,19 @@ enum WStatus {
 /// One simulated SIMT GPU.
 pub struct SimtSim {
     pub cfg: SimtConfig,
+    /// Parallel block dispatch configuration (worker count etc).
+    pub dispatch: DispatchOptions,
 }
 
 impl SimtSim {
     pub fn new(cfg: SimtConfig) -> SimtSim {
-        SimtSim { cfg }
+        SimtSim { cfg, dispatch: DispatchOptions::from_env() }
+    }
+
+    /// Construct with an explicit dispatch worker count (benches and the
+    /// determinism tests pin this instead of relying on the environment).
+    pub fn with_workers(cfg: SimtConfig, workers: usize) -> SimtSim {
+        SimtSim { cfg, dispatch: DispatchOptions::with_workers(workers) }
     }
 
     /// Run a full grid (or resume one from per-block directives).
@@ -87,7 +132,10 @@ impl SimtSim {
         pause: &AtomicBool,
         resume: Option<&[BlockResume]>,
     ) -> Result<LaunchOutcome> {
-        let grid_size = dims.grid_size();
+        let (grid_size, block_size) = dims.validate()?;
+        if block_size > 1024 {
+            return Err(HetError::runtime(format!("block size {block_size} exceeds 1024")));
+        }
         if let Some(r) = resume {
             if r.len() != grid_size as usize {
                 return Err(HetError::migrate(format!(
@@ -96,60 +144,51 @@ impl SimtSim {
                 )));
             }
         }
-        let block_size = dims.block_size();
-        if block_size == 0 || grid_size == 0 {
-            return Err(HetError::runtime("empty launch"));
-        }
-        if block_size > 1024 {
-            return Err(HetError::runtime(format!("block size {block_size} exceeds 1024")));
-        }
 
-        let mut cost = CostReport::default();
-        let mut block_cycles: Vec<u64> = Vec::with_capacity(grid_size as usize);
-        let mut states: Vec<BlockState> = Vec::with_capacity(grid_size as usize);
-        let mut paused = false;
+        // Blocks execute concurrently on the dispatch pool against the
+        // shared interior-mutable global memory; the engine commits
+        // states/cycles in linear-id order and handles cooperative-pause
+        // gating at block-dispatch boundaries.
+        let global: &DeviceMemory = global;
+        let run = dispatch::run_blocks(
+            grid_size,
+            self.dispatch,
+            p.migratable,
+            pause,
+            resume,
+            |b| {
+                let directive = resume.map(|r| &r[b as usize]);
+                self.run_block(p, dims, b, params, global, pause, directive)
+            },
+        )?;
 
-        for b in 0..grid_size {
-            let directive = resume.map(|r| &r[b as usize]);
-            if matches!(directive, Some(BlockResume::Skip)) {
-                states.push(BlockState::Done);
-                block_cycles.push(0);
-                continue;
-            }
-            // Cooperative pause at block-dispatch granularity: blocks not
-            // yet started stay NotStarted in the snapshot.
-            if paused || (p.migratable && pause.load(Ordering::SeqCst)) {
-                paused = true;
-                states.push(BlockState::NotStarted);
-                block_cycles.push(0);
-                continue;
-            }
-            let (state, cycles) =
-                self.run_block(p, dims, b, params, global, pause, directive, &mut cost)?;
-            if matches!(state, BlockState::Suspended(_)) {
-                paused = true;
-            }
-            block_cycles.push(cycles);
-            states.push(state);
-        }
+        let mut cost = CostReport {
+            warp_instructions: run.totals.warp_instructions,
+            device_cycles: 0,
+            total_cycles: run.totals.total_cycles,
+            global_bytes: run.totals.global_bytes,
+        };
 
         // Distribute block costs round-robin over SMs; the device critical
         // path is the busiest SM.
         let sms = self.cfg.num_sms.max(1) as usize;
         let mut queues = vec![0u64; sms];
-        for (i, c) in block_cycles.iter().enumerate() {
+        for (i, c) in run.block_cycles.iter().enumerate() {
             queues[i % sms] += c;
         }
         cost.device_cycles = queues.into_iter().max().unwrap_or(0);
 
-        if paused {
-            Ok(LaunchOutcome::Paused { grid: PausedGrid { blocks: states }, cost })
+        if run.paused {
+            Ok(LaunchOutcome::Paused { grid: PausedGrid { blocks: run.states }, cost })
         } else {
             Ok(LaunchOutcome::Completed(cost))
         }
     }
 
-    /// Execute one block to completion or checkpoint-dump.
+    /// Execute one block to completion or checkpoint-dump. Runs on a
+    /// dispatch worker thread: everything mutated here is block-local
+    /// except `global`, which is shared with concurrently executing
+    /// blocks (guest atomics go through its host-atomic path).
     #[allow(clippy::too_many_arguments)]
     fn run_block(
         &self,
@@ -157,15 +196,14 @@ impl SimtSim {
         dims: LaunchDims,
         block_linear: u32,
         params: &[Value],
-        global: &mut DeviceMemory,
+        global: &DeviceMemory,
         pause: &AtomicBool,
         directive: Option<&BlockResume>,
-        cost: &mut CostReport,
-    ) -> Result<(BlockState, u64)> {
+    ) -> Result<(BlockState, u64, BlockTotals)> {
         let block_size = dims.block_size();
         let ww = self.cfg.warp_width;
         let num_warps = block_size.div_ceil(ww);
-        let mut shared = DeviceMemory::new(p.shared_bytes.max(1), self.cfg.name);
+        let shared = DeviceMemory::new(p.shared_bytes.max(1), self.cfg.name);
 
         // Build warps: fresh or restored.
         let mut warps: Vec<WarpState> = Vec::with_capacity(num_warps as usize);
@@ -208,7 +246,7 @@ impl SimtSim {
                 let mut env = Env {
                     cfg: &self.cfg,
                     global,
-                    shared: &mut shared,
+                    shared: &shared,
                     block_idx: dims.block_coords(block_linear),
                     block_dim: dims.block,
                     grid_dim: dims.grid,
@@ -227,10 +265,12 @@ impl SimtSim {
 
             // All done?
             if statuses.iter().all(|s| *s == WStatus::Done) {
-                cost.warp_instructions += insts;
-                cost.total_cycles += block_cost;
-                cost.global_bytes += gbytes;
-                return Ok((BlockState::Done, block_cost));
+                let totals = BlockTotals {
+                    warp_instructions: insts,
+                    total_cycles: block_cost,
+                    global_bytes: gbytes,
+                };
+                return Ok((BlockState::Done, block_cost, totals));
             }
 
             // All dumped at the same checkpoint?
@@ -252,11 +292,13 @@ impl SimtSim {
                 }
                 let mut shared_mem = vec![0u8; p.shared_bytes as usize];
                 if p.shared_bytes > 0 {
-                    shared.read_bytes(0, &mut shared_mem)?;
+                    shared.read_bytes_into(0, &mut shared_mem)?;
                 }
-                cost.warp_instructions += insts;
-                cost.total_cycles += block_cost;
-                cost.global_bytes += gbytes;
+                let totals = BlockTotals {
+                    warp_instructions: insts,
+                    total_cycles: block_cost,
+                    global_bytes: gbytes,
+                };
                 return Ok((
                     BlockState::Suspended(BlockCapture {
                         block_idx: block_linear,
@@ -265,6 +307,7 @@ impl SimtSim {
                         shared_mem,
                     }),
                     block_cost,
+                    totals,
                 ));
             }
 

@@ -11,7 +11,7 @@
 //! scheduler in [`super`] coordinates suspended warps.
 
 use crate::error::{HetError, Result};
-use crate::hetir::instr::{AtomOp, BinOp, ShflKind, VoteKind};
+use crate::hetir::instr::{ShflKind, VoteKind};
 use crate::hetir::types::{AddrSpace, Scalar, Type, Value};
 use crate::isa::simt_isa::*;
 use crate::sim::alu;
@@ -27,10 +27,14 @@ pub type Mask = u64;
 pub const TEAM_WIDTH: u32 = 32;
 
 /// Execution environment shared by all warps of a block.
+///
+/// `global` is the device DRAM shared with *concurrently executing* blocks
+/// on other dispatch workers (interior-mutable; see `sim::mem`); `shared`
+/// is this block's private shared-memory arena.
 pub struct Env<'a> {
     pub cfg: &'a SimtConfig,
-    pub global: &'a mut DeviceMemory,
-    pub shared: &'a mut DeviceMemory,
+    pub global: &'a DeviceMemory,
+    pub shared: &'a DeviceMemory,
     pub block_idx: [u32; 3],
     pub block_dim: [u32; 3],
     pub grid_dim: [u32; 3],
@@ -263,6 +267,16 @@ impl WarpState {
         }
     }
 
+    /// Read a pre-decoded operand for `lane`.
+    #[inline(always)]
+    fn pre(&self, lane: usize, op: PreOp) -> u64 {
+        if op.reg == PreOp::IMM {
+            op.imm
+        } else {
+            self.regs[lane][op.reg as usize]
+        }
+    }
+
     /// Effective address for `lane`.
     fn eaddr(&self, lane: usize, a: &SAddr) -> u64 {
         let base = self.regs[lane][a.base.0 as usize];
@@ -274,6 +288,28 @@ impl WarpState {
 
     fn linear_tid(&self, p_warp_w: u32, lane: u32) -> u32 {
         self.warp_idx * p_warp_w + lane
+    }
+}
+
+/// Operand pre-decoded once per dynamic instruction: a register index or
+/// immediate bits, read per lane without re-matching the `SOp` enum or
+/// round-tripping through `Value`. (`reg == IMM` flags an immediate; real
+/// register files are far smaller than the sentinel.)
+#[derive(Clone, Copy)]
+struct PreOp {
+    reg: u32,
+    imm: u64,
+}
+
+impl PreOp {
+    const IMM: u32 = u32::MAX;
+
+    #[inline(always)]
+    fn decode(op: &SOp) -> PreOp {
+        match op {
+            SOp::Reg(r) => PreOp { reg: r.0, imm: 0 },
+            SOp::Imm(v) => PreOp { reg: PreOp::IMM, imm: v.bits },
+        }
     }
 }
 
@@ -345,55 +381,80 @@ impl WarpState {
                 }
             }
             SInst::Mov { dst, src } => {
+                let ps = PreOp::decode(src);
+                let d = dst.0 as usize;
                 for lane in lanes_of(active, self.lanes) {
-                    self.regs[lane][dst.0 as usize] = self.rv(lane, src);
+                    let v = self.pre(lane, ps);
+                    self.regs[lane][d] = v;
                 }
             }
             SInst::Bin { op, ty, dst, a, b } => {
-                for lane in lanes_of(active, self.lanes) {
-                    let x = Value { bits: self.rv(lane, a), ty: Type::Scalar(*ty) };
-                    let y = Value { bits: self.rv(lane, b), ty: Type::Scalar(*ty) };
-                    let r = alu::bin(*op, *ty, x, y).map_err(|e| {
-                        HetError::fault(env.cfg.name, format!("{e} in {}", p.kernel_name))
-                    })?;
-                    self.regs[lane][dst.0 as usize] = r.bits;
+                let (pa, pb) = (PreOp::decode(a), PreOp::decode(b));
+                let d = dst.0 as usize;
+                if let Some(f) = alu::bin_fast(*op, *ty) {
+                    // Fast path: op/type resolved once; the lane loop runs
+                    // on raw bits.
+                    for lane in lanes_of(active, self.lanes) {
+                        let r = f(self.pre(lane, pa), self.pre(lane, pb));
+                        self.regs[lane][d] = r;
+                    }
+                } else {
+                    for lane in lanes_of(active, self.lanes) {
+                        let x = Value { bits: self.pre(lane, pa), ty: Type::Scalar(*ty) };
+                        let y = Value { bits: self.pre(lane, pb), ty: Type::Scalar(*ty) };
+                        let r = alu::bin(*op, *ty, x, y).map_err(|e| {
+                            HetError::fault(env.cfg.name, format!("{e} in {}", p.kernel_name))
+                        })?;
+                        self.regs[lane][d] = r.bits;
+                    }
                 }
             }
             SInst::Un { op, ty, dst, a } => {
+                let pa = PreOp::decode(a);
+                let d = dst.0 as usize;
                 for lane in lanes_of(active, self.lanes) {
-                    let x = Value { bits: self.rv(lane, a), ty: Type::Scalar(*ty) };
+                    let x = Value { bits: self.pre(lane, pa), ty: Type::Scalar(*ty) };
                     let r = alu::un(*op, *ty, x)
                         .map_err(|e| HetError::fault(env.cfg.name, e.to_string()))?;
-                    self.regs[lane][dst.0 as usize] = r.bits;
+                    self.regs[lane][d] = r.bits;
                 }
             }
             SInst::Fma { ty, dst, a, b, c } => {
+                debug_assert_eq!(*ty, Scalar::F32);
+                let (pa, pb, pc) = (PreOp::decode(a), PreOp::decode(b), PreOp::decode(c));
+                let d = dst.0 as usize;
                 for lane in lanes_of(active, self.lanes) {
-                    let x = f32::from_bits(self.rv(lane, a) as u32);
-                    let y = f32::from_bits(self.rv(lane, b) as u32);
-                    let z = f32::from_bits(self.rv(lane, c) as u32);
-                    debug_assert_eq!(*ty, Scalar::F32);
-                    self.regs[lane][dst.0 as usize] = x.mul_add(y, z).to_bits() as u64;
+                    let x = f32::from_bits(self.pre(lane, pa) as u32);
+                    let y = f32::from_bits(self.pre(lane, pb) as u32);
+                    let z = f32::from_bits(self.pre(lane, pc) as u32);
+                    self.regs[lane][d] = x.mul_add(y, z).to_bits() as u64;
                 }
             }
             SInst::Cmp { op, ty, dst, a, b } => {
+                let (pa, pb) = (PreOp::decode(a), PreOp::decode(b));
+                let d = dst.0 as usize;
                 for lane in lanes_of(active, self.lanes) {
-                    let x = Value { bits: self.rv(lane, a), ty: Type::Scalar(*ty) };
-                    let y = Value { bits: self.rv(lane, b), ty: Type::Scalar(*ty) };
-                    self.regs[lane][dst.0 as usize] = alu::cmp(*op, *ty, x, y) as u64;
+                    let x = Value { bits: self.pre(lane, pa), ty: Type::Scalar(*ty) };
+                    let y = Value { bits: self.pre(lane, pb), ty: Type::Scalar(*ty) };
+                    self.regs[lane][d] = alu::cmp(*op, *ty, x, y) as u64;
                 }
             }
             SInst::Sel { dst, cond, a, b } => {
+                let (pc, pa, pb) =
+                    (PreOp::decode(cond), PreOp::decode(a), PreOp::decode(b));
+                let d = dst.0 as usize;
                 for lane in lanes_of(active, self.lanes) {
-                    let c = self.rv(lane, cond) & 1 != 0;
-                    let v = if c { self.rv(lane, a) } else { self.rv(lane, b) };
-                    self.regs[lane][dst.0 as usize] = v;
+                    let c = self.pre(lane, pc) & 1 != 0;
+                    let v = if c { self.pre(lane, pa) } else { self.pre(lane, pb) };
+                    self.regs[lane][d] = v;
                 }
             }
             SInst::Cvt { from, to, dst, src } => {
+                let ps = PreOp::decode(src);
+                let d = dst.0 as usize;
                 for lane in lanes_of(active, self.lanes) {
-                    let v = Value { bits: self.rv(lane, src), ty: Type::Scalar(*from) };
-                    self.regs[lane][dst.0 as usize] = alu::cvt(*from, *to, v).bits;
+                    let v = Value { bits: self.pre(lane, ps), ty: Type::Scalar(*from) };
+                    self.regs[lane][d] = alu::cvt(*from, *to, v).bits;
                 }
             }
             SInst::PtrAdd { dst, addr } => {
@@ -411,13 +472,14 @@ impl WarpState {
                     n += 1;
                 }
                 Self::charge_mem(env, &addrs[..n], ty.size_bytes(), *space);
+                let m: &DeviceMemory = match space {
+                    AddrSpace::Global => env.global,
+                    AddrSpace::Shared => env.shared,
+                };
+                let d = dst.0 as usize;
                 for k in 0..n {
-                    let m: &DeviceMemory = match space {
-                        AddrSpace::Global => env.global,
-                        AddrSpace::Shared => env.shared,
-                    };
                     let v = m.load(addrs[k], *ty)?;
-                    self.regs[lanes[k]][dst.0 as usize] = v.bits;
+                    self.regs[lanes[k]][d] = v.bits;
                 }
             }
             SInst::St { space, ty, addr, val } => {
@@ -430,43 +492,43 @@ impl WarpState {
                     n += 1;
                 }
                 Self::charge_mem(env, &addrs[..n], ty.size_bytes(), *space);
+                let m: &DeviceMemory = match space {
+                    AddrSpace::Global => env.global,
+                    AddrSpace::Shared => env.shared,
+                };
+                let pv = PreOp::decode(val);
                 for k in 0..n {
-                    let v = Value { bits: self.rv(lanes[k], val), ty: Type::Scalar(*ty) };
-                    match space {
-                        AddrSpace::Global => env.global.store(addrs[k], *ty, v)?,
-                        AddrSpace::Shared => env.shared.store(addrs[k], *ty, v)?,
-                    }
+                    let v = Value { bits: self.pre(lanes[k], pv), ty: Type::Scalar(*ty) };
+                    m.store(addrs[k], *ty, v)?;
                 }
             }
             SInst::Atom { op, space, ty, dst, addr, val, val2 } => {
-                // Lanes apply sequentially in lane order (deterministic).
+                // Lanes apply sequentially in lane order (deterministic
+                // within the warp). Global atomics go through the device
+                // memory's host-atomic path so updates from concurrently
+                // dispatched blocks interleave like real hardware atomics;
+                // shared memory is block-private and keeps the plain path.
+                let devname = env.cfg.name;
                 for lane in lanes_of(active, self.lanes) {
                     *env.cost += env.cfg.atom_cost;
                     let a = self.eaddr(lane, addr);
-                    let m: &mut DeviceMemory = match space {
-                        AddrSpace::Global => env.global,
-                        AddrSpace::Shared => env.shared,
-                    };
-                    let old = m.load(a, *ty)?;
                     let v = Value { bits: self.rv(lane, val), ty: Type::Scalar(*ty) };
-                    let new = match op {
-                        AtomOp::Add => alu::bin(BinOp::Add, *ty, old, v)
-                            .map_err(|e| HetError::fault(env.cfg.name, e.to_string()))?,
-                        AtomOp::Min => alu::bin(BinOp::Min, *ty, old, v).unwrap(),
-                        AtomOp::Max => alu::bin(BinOp::Max, *ty, old, v).unwrap(),
-                        AtomOp::And => alu::bin(BinOp::And, *ty, old, v).unwrap(),
-                        AtomOp::Or => alu::bin(BinOp::Or, *ty, old, v).unwrap(),
-                        AtomOp::Exch => v,
-                        AtomOp::Cas => {
-                            let v2 = val2.as_ref().expect("verified CAS");
-                            if old.bits == v.bits {
-                                Value { bits: self.rv(lane, v2), ty: Type::Scalar(*ty) }
-                            } else {
-                                old
-                            }
+                    let v2 = val2
+                        .as_ref()
+                        .map(|v2| Value { bits: self.rv(lane, v2), ty: Type::Scalar(*ty) });
+                    let old = match space {
+                        AddrSpace::Global => env.global.atomic_rmw(a, *ty, |old| {
+                            alu::apply_atom(*op, *ty, old, v, v2)
+                                .map_err(|e| HetError::fault(devname, e.to_string()))
+                        })?,
+                        AddrSpace::Shared => {
+                            let old = env.shared.load(a, *ty)?;
+                            let new = alu::apply_atom(*op, *ty, old, v, v2)
+                                .map_err(|e| HetError::fault(devname, e.to_string()))?;
+                            env.shared.store(a, *ty, new)?;
+                            old
                         }
                     };
-                    m.store(a, *ty, new)?;
                     if let Some(d) = dst {
                         self.regs[lane][d.0 as usize] = old.bits;
                     }

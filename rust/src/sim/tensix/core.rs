@@ -11,7 +11,7 @@
 //! block scheduler in [`super`] coordinates the core group.
 
 use crate::error::{HetError, Result};
-use crate::hetir::instr::{AtomOp, BinOp, VoteKind};
+use crate::hetir::instr::VoteKind;
 use crate::hetir::types::{Scalar, Type, Value};
 use crate::isa::tensix_isa::*;
 use crate::isa::DevLoc;
@@ -25,10 +25,11 @@ pub type Mask = u32;
 /// Execution environment for one core while it runs.
 pub struct TEnv<'a> {
     pub cfg: &'a TensixConfig,
-    /// Device DRAM (shared by all cores).
-    pub global: &'a mut DeviceMemory,
+    /// Device DRAM (shared by all cores, and by concurrently dispatched
+    /// blocks on other host workers — interior-mutable, see `sim::mem`).
+    pub global: &'a DeviceMemory,
     /// This core's private scratchpad.
-    pub scratch: &'a mut DeviceMemory,
+    pub scratch: &'a DeviceMemory,
     pub block_idx: [u32; 3],
     pub block_dim: [u32; 3],
     pub grid_dim: [u32; 3],
@@ -94,6 +95,13 @@ fn mask_of(lanes: u32) -> Mask {
     } else {
         (1u32 << lanes) - 1
     }
+}
+
+/// A pre-decoded vector operand (see [`CoreState::prevo`]).
+#[derive(Clone, Copy)]
+enum PreVo {
+    Reg(usize),
+    Bits(u64),
 }
 
 impl CoreState {
@@ -292,6 +300,27 @@ impl CoreState {
         }
     }
 
+    /// Pre-decode a vector operand once per dynamic instruction: register
+    /// index, or already-resolved splat/immediate bits (scalar registers
+    /// cannot change while one vector instruction executes). The lane loop
+    /// then reads raw bits without re-matching the `Vo` enum.
+    #[inline(always)]
+    fn prevo(&self, o: &Vo) -> PreVo {
+        match o {
+            Vo::Reg(r) => PreVo::Reg(r.0 as usize),
+            Vo::Splat(s) => PreVo::Bits(self.sregs[s.0 as usize]),
+            Vo::Imm(v) => PreVo::Bits(v.bits),
+        }
+    }
+
+    #[inline(always)]
+    fn vread(&self, p: PreVo, lane: usize) -> u64 {
+        match p {
+            PreVo::Reg(i) => self.vregs[i][lane],
+            PreVo::Bits(b) => b,
+        }
+    }
+
     fn saddr(&self, a: &TAddr) -> u64 {
         let base = self.sregs[a.base.0 as usize];
         let idx = a.index.map_or(0i64, |r| self.sregs[r.0 as usize] as i64);
@@ -409,14 +438,16 @@ impl CoreState {
             TInst::SAtom { op, ty, dst, addr, val, val2 } => {
                 *env.cost += env.cfg.dma_base_cost + 2 * env.cfg.dma_per_32b_cost;
                 let a = self.saddr(addr);
-                let old = env.global.load(a, *ty)?;
                 let v = Value { bits: self.so(val), ty: Type::Scalar(*ty) };
-                let new = apply_atom(*op, *ty, old, v, val2.map(|v2| Value {
-                    bits: self.so(&v2),
-                    ty: Type::Scalar(*ty),
-                }))
-                .map_err(|e| HetError::fault(env.cfg.name, e.to_string()))?;
-                env.global.store(a, *ty, new)?;
+                let v2 =
+                    val2.map(|v2| Value { bits: self.so(&v2), ty: Type::Scalar(*ty) });
+                // Global atomics take the host-atomic path so concurrently
+                // dispatched blocks interleave like hardware atomics.
+                let devname = env.cfg.name;
+                let old = env.global.atomic_rmw(a, *ty, |old| {
+                    alu::apply_atom(*op, *ty, old, v, v2)
+                        .map_err(|e| HetError::fault(devname, e.to_string()))
+                })?;
                 if let Some(d) = dst {
                     self.sregs[d.0 as usize] = old.bits;
                 }
@@ -447,68 +478,93 @@ impl CoreState {
             }
             TInst::VMov { dst, src } => {
                 *env.cost += env.cfg.vector_fp_cost; // register move rides the VPU
+                let ps = self.prevo(src);
+                let d = dst.0 as usize;
                 for lane in 0..self.lanes as usize {
                     if active >> lane & 1 == 0 { continue; }
-                    self.vregs[dst.0 as usize][lane] = self.vo(src, lane);
+                    let v = self.vread(ps, lane);
+                    self.vregs[d][lane] = v;
                 }
             }
             TInst::VBin { op, ty, dst, a, b } => {
                 *env.cost += self.vcost(env.cfg, *ty, active);
-                for lane in 0..self.lanes as usize {
-                    if active >> lane & 1 == 0 { continue; }
-                    let x = Value { bits: self.vo(a, lane), ty: Type::Scalar(*ty) };
-                    let y = Value { bits: self.vo(b, lane), ty: Type::Scalar(*ty) };
-                    self.vregs[dst.0 as usize][lane] = alu::bin(*op, *ty, x, y)
-                        .map_err(|e| HetError::fault(env.cfg.name, e.to_string()))?
-                        .bits;
+                let (pa, pb) = (self.prevo(a), self.prevo(b));
+                let d = dst.0 as usize;
+                if let Some(f) = alu::bin_fast(*op, *ty) {
+                    // Fast path: op/type resolved once, lanes run on raw
+                    // bits.
+                    for lane in 0..self.lanes as usize {
+                        if active >> lane & 1 == 0 { continue; }
+                        let r = f(self.vread(pa, lane), self.vread(pb, lane));
+                        self.vregs[d][lane] = r;
+                    }
+                } else {
+                    for lane in 0..self.lanes as usize {
+                        if active >> lane & 1 == 0 { continue; }
+                        let x = Value { bits: self.vread(pa, lane), ty: Type::Scalar(*ty) };
+                        let y = Value { bits: self.vread(pb, lane), ty: Type::Scalar(*ty) };
+                        self.vregs[d][lane] = alu::bin(*op, *ty, x, y)
+                            .map_err(|e| HetError::fault(env.cfg.name, e.to_string()))?
+                            .bits;
+                    }
                 }
             }
             TInst::VUn { op, ty, dst, a } => {
                 *env.cost += self.vcost(env.cfg, *ty, active);
+                let pa = self.prevo(a);
+                let d = dst.0 as usize;
                 for lane in 0..self.lanes as usize {
                     if active >> lane & 1 == 0 { continue; }
-                    let x = Value { bits: self.vo(a, lane), ty: Type::Scalar(*ty) };
-                    self.vregs[dst.0 as usize][lane] = alu::un(*op, *ty, x)
+                    let x = Value { bits: self.vread(pa, lane), ty: Type::Scalar(*ty) };
+                    self.vregs[d][lane] = alu::un(*op, *ty, x)
                         .map_err(|e| HetError::fault(env.cfg.name, e.to_string()))?
                         .bits;
                 }
             }
             TInst::VFma { ty, dst, a, b, c } => {
                 *env.cost += self.vcost(env.cfg, *ty, active);
+                let (pa, pb, pc) = (self.prevo(a), self.prevo(b), self.prevo(c));
+                let d = dst.0 as usize;
                 for lane in 0..self.lanes as usize {
                     if active >> lane & 1 == 0 { continue; }
-                    let x = f32::from_bits(self.vo(a, lane) as u32);
-                    let y = f32::from_bits(self.vo(b, lane) as u32);
-                    let z = f32::from_bits(self.vo(c, lane) as u32);
-                    self.vregs[dst.0 as usize][lane] = x.mul_add(y, z).to_bits() as u64;
+                    let x = f32::from_bits(self.vread(pa, lane) as u32);
+                    let y = f32::from_bits(self.vread(pb, lane) as u32);
+                    let z = f32::from_bits(self.vread(pc, lane) as u32);
+                    self.vregs[d][lane] = x.mul_add(y, z).to_bits() as u64;
                 }
             }
             TInst::VCmp { op, ty, dst, a, b } => {
                 // Predicate production is integer-domain → emulated.
                 *env.cost += env.cfg.vector_emu_base_cost
                     + env.cfg.vector_emu_lane_cost * active.count_ones() as u64;
+                let (pa, pb) = (self.prevo(a), self.prevo(b));
+                let d = dst.0 as usize;
                 for lane in 0..self.lanes as usize {
                     if active >> lane & 1 == 0 { continue; }
-                    let x = Value { bits: self.vo(a, lane), ty: Type::Scalar(*ty) };
-                    let y = Value { bits: self.vo(b, lane), ty: Type::Scalar(*ty) };
-                    self.vregs[dst.0 as usize][lane] = alu::cmp(*op, *ty, x, y) as u64;
+                    let x = Value { bits: self.vread(pa, lane), ty: Type::Scalar(*ty) };
+                    let y = Value { bits: self.vread(pb, lane), ty: Type::Scalar(*ty) };
+                    self.vregs[d][lane] = alu::cmp(*op, *ty, x, y) as u64;
                 }
             }
             TInst::VSel { dst, cond, a, b } => {
                 *env.cost += self.vcost(env.cfg, Scalar::U32, active);
+                let (pc, pa, pb) = (self.prevo(cond), self.prevo(a), self.prevo(b));
+                let d = dst.0 as usize;
                 for lane in 0..self.lanes as usize {
                     if active >> lane & 1 == 0 { continue; }
-                    let c = self.vo(cond, lane) & 1 != 0;
-                    let v = if c { self.vo(a, lane) } else { self.vo(b, lane) };
-                    self.vregs[dst.0 as usize][lane] = v;
+                    let c = self.vread(pc, lane) & 1 != 0;
+                    let v = if c { self.vread(pa, lane) } else { self.vread(pb, lane) };
+                    self.vregs[d][lane] = v;
                 }
             }
             TInst::VCvt { from, to, dst, src } => {
                 *env.cost += self.vcost(env.cfg, *to, active);
+                let ps = self.prevo(src);
+                let d = dst.0 as usize;
                 for lane in 0..self.lanes as usize {
                     if active >> lane & 1 == 0 { continue; }
-                    let v = Value { bits: self.vo(src, lane), ty: Type::Scalar(*from) };
-                    self.vregs[dst.0 as usize][lane] = alu::cvt(*from, *to, v).bits;
+                    let v = Value { bits: self.vread(ps, lane), ty: Type::Scalar(*from) };
+                    self.vregs[d][lane] = alu::cvt(*from, *to, v).bits;
                 }
             }
             TInst::VRng { dst, state } => {
@@ -581,6 +637,7 @@ impl CoreState {
                 }
             }
             TInst::VAtom { op, ty, dst, base, idx, scale, disp, val, val2, local } => {
+                let devname = env.cfg.name;
                 for lane in 0..self.lanes as usize {
                     if active >> lane & 1 == 0 { continue; }
                     *env.cost += if *local {
@@ -589,14 +646,21 @@ impl CoreState {
                         env.cfg.dma_base_cost / 2 + env.cfg.dma_per_32b_cost
                     };
                     let a = self.vaddr(*base, *idx, *scale, *disp, lane);
-                    let m: &mut DeviceMemory =
-                        if *local { env.scratch } else { env.global };
-                    let old = m.load(a, *ty)?;
                     let v = Value { bits: self.vo(val, lane), ty: Type::Scalar(*ty) };
                     let v2 = val2.map(|v2| Value { bits: self.vo(&v2, lane), ty: Type::Scalar(*ty) });
-                    let new = apply_atom(*op, *ty, old, v, v2)
-                        .map_err(|e| HetError::fault(env.cfg.name, e.to_string()))?;
-                    m.store(a, *ty, new)?;
+                    let old = if *local {
+                        // Scratchpad is core-private; the plain path is exact.
+                        let old = env.scratch.load(a, *ty)?;
+                        let new = alu::apply_atom(*op, *ty, old, v, v2)
+                            .map_err(|e| HetError::fault(devname, e.to_string()))?;
+                        env.scratch.store(a, *ty, new)?;
+                        old
+                    } else {
+                        env.global.atomic_rmw(a, *ty, |old| {
+                            alu::apply_atom(*op, *ty, old, v, v2)
+                                .map_err(|e| HetError::fault(devname, e.to_string()))
+                        })?
+                    };
                     if let Some(d) = dst {
                         self.vregs[d.0 as usize][lane] = old.bits;
                     }
@@ -993,26 +1057,3 @@ fn gather_dma_cost(cfg: &TensixConfig, elem: u64, addrs: &[u64]) -> u64 {
     }
 }
 
-fn apply_atom(
-    op: AtomOp,
-    ty: Scalar,
-    old: Value,
-    v: Value,
-    v2: Option<Value>,
-) -> crate::error::Result<Value> {
-    Ok(match op {
-        AtomOp::Add => alu::bin(BinOp::Add, ty, old, v)?,
-        AtomOp::Min => alu::bin(BinOp::Min, ty, old, v)?,
-        AtomOp::Max => alu::bin(BinOp::Max, ty, old, v)?,
-        AtomOp::And => alu::bin(BinOp::And, ty, old, v)?,
-        AtomOp::Or => alu::bin(BinOp::Or, ty, old, v)?,
-        AtomOp::Exch => v,
-        AtomOp::Cas => {
-            if old.bits == v.bits {
-                v2.expect("verified CAS")
-            } else {
-                old
-            }
-        }
-    })
-}

@@ -18,6 +18,7 @@ pub mod core;
 use crate::error::{HetError, Result};
 use crate::hetir::types::Value;
 use crate::isa::tensix_isa::{TensixConfig, TensixMode, TensixProgram};
+use crate::sim::dispatch::{self, BlockTotals, DispatchOptions};
 use crate::sim::mem::DeviceMemory;
 use crate::sim::simt::LaunchDims;
 use crate::sim::snapshot::*;
@@ -36,11 +37,18 @@ enum CStatus {
 /// One simulated Tensix device.
 pub struct TensixSim {
     pub cfg: TensixConfig,
+    /// Parallel block dispatch configuration (worker count etc).
+    pub dispatch: DispatchOptions,
 }
 
 impl TensixSim {
     pub fn new(cfg: TensixConfig) -> TensixSim {
-        TensixSim { cfg }
+        TensixSim { cfg, dispatch: DispatchOptions::from_env() }
+    }
+
+    /// Construct with an explicit dispatch worker count.
+    pub fn with_workers(cfg: TensixConfig, workers: usize) -> TensixSim {
+        TensixSim { cfg, dispatch: DispatchOptions::with_workers(workers) }
     }
 
     /// Run a grid. `shared_heap` must point at a reserved global region of
@@ -56,11 +64,7 @@ impl TensixSim {
         resume: Option<&[BlockResume]>,
         shared_heap: Option<u64>,
     ) -> Result<LaunchOutcome> {
-        let grid_size = dims.grid_size();
-        let block_size = dims.block_size();
-        if block_size == 0 || grid_size == 0 {
-            return Err(HetError::runtime("empty launch"));
-        }
+        let (grid_size, block_size) = dims.validate()?;
         match p.mode {
             TensixMode::VectorSingleCore if block_size > 32 => {
                 return Err(HetError::runtime(format!(
@@ -80,52 +84,47 @@ impl TensixSim {
             }
         }
 
-        let mut cost = CostReport::default();
-        let mut block_cycles: Vec<u64> = Vec::with_capacity(grid_size as usize);
-        let mut states: Vec<BlockState> = Vec::with_capacity(grid_size as usize);
-        let mut paused = false;
+        // Blocks (vector core-groups or MIMD batches) run concurrently on
+        // the shared dispatch pool; results commit in linear-id order.
+        let global: &DeviceMemory = global;
+        let run = dispatch::run_blocks(
+            grid_size,
+            self.dispatch,
+            p.migratable,
+            pause,
+            resume,
+            |b| {
+                let directive = resume.map(|r| &r[b as usize]);
+                let shared_base = match p.mode {
+                    TensixMode::VectorMultiCore => {
+                        shared_heap.unwrap_or(0) + b as u64 * p.shared_bytes
+                    }
+                    _ => 0, // scratchpad offset
+                };
+                match p.mode {
+                    TensixMode::ScalarMimd => {
+                        self.run_block_mimd(p, dims, b, params, global, pause)
+                    }
+                    _ => self.run_block_vector(
+                        p,
+                        dims,
+                        b,
+                        params,
+                        global,
+                        pause,
+                        directive,
+                        shared_base,
+                    ),
+                }
+            },
+        )?;
 
-        for b in 0..grid_size {
-            let directive = resume.map(|r| &r[b as usize]);
-            if matches!(directive, Some(BlockResume::Skip)) {
-                states.push(BlockState::Done);
-                block_cycles.push(0);
-                continue;
-            }
-            if paused || (p.migratable && pause.load(Ordering::SeqCst)) {
-                paused = true;
-                states.push(BlockState::NotStarted);
-                block_cycles.push(0);
-                continue;
-            }
-            let shared_base = match p.mode {
-                TensixMode::VectorMultiCore => {
-                    shared_heap.unwrap_or(0) + b as u64 * p.shared_bytes
-                }
-                _ => 0, // scratchpad offset
-            };
-            let (state, cycles) = match p.mode {
-                TensixMode::ScalarMimd => {
-                    self.run_block_mimd(p, dims, b, params, global, pause, &mut cost)?
-                }
-                _ => self.run_block_vector(
-                    p,
-                    dims,
-                    b,
-                    params,
-                    global,
-                    pause,
-                    directive,
-                    shared_base,
-                    &mut cost,
-                )?,
-            };
-            if matches!(state, BlockState::Suspended(_)) {
-                paused = true;
-            }
-            block_cycles.push(cycles);
-            states.push(state);
-        }
+        let mut cost = CostReport {
+            warp_instructions: run.totals.warp_instructions,
+            device_cycles: 0,
+            total_cycles: run.totals.total_cycles,
+            global_bytes: run.totals.global_bytes,
+        };
 
         // Device critical path.
         match p.mode {
@@ -135,7 +134,7 @@ impl TensixSim {
             // by the longest single block).
             TensixMode::ScalarMimd => {
                 let packed = cost.total_cycles / self.cfg.num_cores.max(1) as u64;
-                let longest = block_cycles.iter().copied().max().unwrap_or(0);
+                let longest = run.block_cycles.iter().copied().max().unwrap_or(0);
                 cost.device_cycles = packed.max(longest);
             }
             // Vector modes: blocks occupy core-group slots.
@@ -146,21 +145,23 @@ impl TensixSim {
                 };
                 let slots = (self.cfg.num_cores / cores_per_block).max(1) as usize;
                 let mut queues = vec![0u64; slots];
-                for (i, c) in block_cycles.iter().enumerate() {
+                for (i, c) in run.block_cycles.iter().enumerate() {
                     queues[i % slots] += c;
                 }
                 cost.device_cycles = queues.into_iter().max().unwrap_or(0);
             }
         }
 
-        if paused {
-            Ok(LaunchOutcome::Paused { grid: PausedGrid { blocks: states }, cost })
+        if run.paused {
+            Ok(LaunchOutcome::Paused { grid: PausedGrid { blocks: run.states }, cost })
         } else {
             Ok(LaunchOutcome::Completed(cost))
         }
     }
 
     /// Vector modes: a block on one core or a mesh-coordinated core group.
+    /// Runs on a dispatch worker thread; everything here is block-local
+    /// except `global` (shared with concurrent blocks).
     #[allow(clippy::too_many_arguments)]
     fn run_block_vector(
         &self,
@@ -168,12 +169,11 @@ impl TensixSim {
         dims: LaunchDims,
         block_linear: u32,
         params: &[Value],
-        global: &mut DeviceMemory,
+        global: &DeviceMemory,
         pause: &AtomicBool,
         directive: Option<&BlockResume>,
         shared_base: u64,
-        cost: &mut CostReport,
-    ) -> Result<(BlockState, u64)> {
+    ) -> Result<(BlockState, u64, BlockTotals)> {
         let block_size = dims.block_size();
         let num_cores = block_size.div_ceil(32);
         let single_core = p.mode == TensixMode::VectorSingleCore;
@@ -225,7 +225,7 @@ impl TensixSim {
                 let mut env = TEnv {
                     cfg: &self.cfg,
                     global,
-                    scratch: &mut scratches[c],
+                    scratch: &scratches[c],
                     block_idx: dims.block_coords(block_linear),
                     block_dim: dims.block,
                     grid_dim: dims.grid,
@@ -247,11 +247,13 @@ impl TensixSim {
             }
 
             if statuses.iter().all(|s| *s == CStatus::Done) {
-                cost.warp_instructions += insts;
                 let block_cost = *core_costs.iter().max().unwrap();
-                cost.total_cycles += core_costs.iter().sum::<u64>();
-                cost.global_bytes += gbytes;
-                return Ok((BlockState::Done, block_cost));
+                let totals = BlockTotals {
+                    warp_instructions: insts,
+                    total_cycles: core_costs.iter().sum::<u64>(),
+                    global_bytes: gbytes,
+                };
+                return Ok((BlockState::Done, block_cost, totals));
             }
 
             if statuses.iter().all(|s| matches!(s, CStatus::Dumped(_))) {
@@ -266,15 +268,17 @@ impl TensixSim {
                 let mut shared_mem = vec![0u8; p.shared_bytes as usize];
                 if p.shared_bytes > 0 {
                     if single_core {
-                        scratches[0].read_bytes(shared_base, &mut shared_mem)?;
+                        scratches[0].read_bytes_into(shared_base, &mut shared_mem)?;
                     } else {
-                        global.read_bytes(shared_base, &mut shared_mem)?;
+                        global.read_bytes_into(shared_base, &mut shared_mem)?;
                     }
                 }
-                cost.warp_instructions += insts;
-                cost.total_cycles += core_costs.iter().sum::<u64>();
-                cost.global_bytes += gbytes;
                 let block_cost = *core_costs.iter().max().unwrap();
+                let totals = BlockTotals {
+                    warp_instructions: insts,
+                    total_cycles: core_costs.iter().sum::<u64>(),
+                    global_bytes: gbytes,
+                };
                 return Ok((
                     BlockState::Suspended(BlockCapture {
                         block_idx: block_linear,
@@ -283,6 +287,7 @@ impl TensixSim {
                         shared_mem,
                     }),
                     block_cost,
+                    totals,
                 ));
             }
 
@@ -346,23 +351,21 @@ impl TensixSim {
 
     /// MIMD mode: threads of the block run independently, round-robin over
     /// cores. Barrier-free programs only (the translator enforces this).
-    #[allow(clippy::too_many_arguments)]
     fn run_block_mimd(
         &self,
         p: &TensixProgram,
         dims: LaunchDims,
         block_linear: u32,
         params: &[Value],
-        global: &mut DeviceMemory,
+        global: &DeviceMemory,
         pause: &AtomicBool,
-        cost: &mut CostReport,
-    ) -> Result<(BlockState, u64)> {
+    ) -> Result<(BlockState, u64, BlockTotals)> {
         let block_size = dims.block_size();
         let n_cores = self.cfg.num_cores.max(1);
         let mut core_costs = vec![0u64; n_cores as usize];
         let mut insts = 0u64;
         let mut gbytes = 0u64;
-        let mut scratch = DeviceMemory::new(self.cfg.scratchpad_bytes, self.cfg.name);
+        let scratch = DeviceMemory::new(self.cfg.scratchpad_bytes, self.cfg.name);
         for t in 0..block_size {
             let bd = dims.block;
             let tc = [t % bd[0], (t / bd[0]) % bd[1], t / (bd[0] * bd[1])];
@@ -373,7 +376,7 @@ impl TensixSim {
             let mut env = TEnv {
                 cfg: &self.cfg,
                 global,
-                scratch: &mut scratch,
+                scratch: &scratch,
                 block_idx: dims.block_coords(block_linear),
                 block_dim: dims.block,
                 grid_dim: dims.grid,
@@ -394,11 +397,13 @@ impl TensixSim {
                 }
             }
         }
-        cost.warp_instructions += insts;
-        cost.total_cycles += core_costs.iter().sum::<u64>();
-        cost.global_bytes += gbytes;
         let block_cost = *core_costs.iter().max().unwrap_or(&0);
-        Ok((BlockState::Done, block_cost))
+        let totals = BlockTotals {
+            warp_instructions: insts,
+            total_cycles: core_costs.iter().sum::<u64>(),
+            global_bytes: gbytes,
+        };
+        Ok((BlockState::Done, block_cost, totals))
     }
 }
 

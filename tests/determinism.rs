@@ -1,0 +1,282 @@
+//! Parallel-dispatch determinism: the same grid executed with 1 worker and
+//! with N workers must produce bit-identical global memory, cost-report
+//! cycles, paused-grid states, and snapshot blobs. This is the contract the
+//! migration machinery depends on now that blocks run concurrently on the
+//! host (engine: `sim::dispatch`).
+
+use hetgpu::backends::{self, TranslateOpts};
+use hetgpu::frontend;
+use hetgpu::hetir::types::{AddrSpace, Value};
+use hetgpu::isa::simt_isa::{SimtConfig, SimtProgram};
+use hetgpu::isa::tensix_isa::TensixMode;
+use hetgpu::migrate::blob;
+use hetgpu::migrate::state::Snapshot;
+use hetgpu::runtime::api::HetGpu;
+use hetgpu::runtime::device::DeviceKind;
+use hetgpu::runtime::launch::{Arg, LaunchSpec};
+use hetgpu::runtime::stream::PausedKernel;
+use hetgpu::sim::mem::DeviceMemory;
+use hetgpu::sim::simt::{LaunchDims, SimtSim};
+use hetgpu::sim::snapshot::{CostReport, LaunchOutcome, PausedGrid};
+use hetgpu::sim::tensix::TensixSim;
+use std::sync::atomic::AtomicBool;
+
+const SCALE_SRC: &str = r#"
+__global__ void scale(float* x, unsigned n) {
+    unsigned i = blockIdx.x * blockDim.x + threadIdx.x;
+    if (i < n) x[i] = x[i] * 1.5f + 3.0f;
+}
+"#;
+
+/// Every thread hammers a handful of shared counters: cross-block ordering
+/// is entirely up to the dispatcher, but integer add/max are commutative,
+/// so final memory must not depend on the interleaving.
+const ATOMICS_SRC: &str = r#"
+__global__ void slam(unsigned* bins, unsigned* peaks) {
+    unsigned i = blockIdx.x * blockDim.x + threadIdx.x;
+    atomicAdd(&bins[i & 15u], i);
+    atomicMax(&peaks[i & 7u], i * 40503u);
+}
+"#;
+
+/// The paper's §5.3 persistent kernel: loop-carried register state and a
+/// barrier (= checkpoint site) every iteration.
+const PERSIST_SRC: &str = r#"
+__global__ void persist(float* data, unsigned iters) {
+    unsigned i = blockIdx.x * blockDim.x + threadIdx.x;
+    float acc = data[i];
+    for (unsigned k = 0u; k < iters; k++) {
+        acc = acc * 1.0001f + 1.0f;
+        __syncthreads();
+    }
+    data[i] = acc;
+}
+"#;
+
+fn compile_simt(src: &str, kernel: &str, cfg: &SimtConfig) -> SimtProgram {
+    let m = frontend::compile(src, "det").unwrap();
+    backends::translate_simt(m.kernel(kernel).unwrap(), cfg, TranslateOpts { migratable: true })
+        .unwrap()
+}
+
+fn dump(mem: &DeviceMemory) -> Vec<u8> {
+    let mut out = vec![0u8; mem.capacity() as usize];
+    mem.read_bytes_into(0, &mut out).unwrap();
+    out
+}
+
+/// Run `p` on a fresh memory image; returns (memory bytes, cost, paused).
+fn run_simt(
+    sim: &SimtSim,
+    p: &SimtProgram,
+    dims: LaunchDims,
+    params: &[Value],
+    init: &dyn Fn(&DeviceMemory),
+    pause_preset: bool,
+) -> (Vec<u8>, CostReport, Option<PausedGrid>) {
+    let mut mem = DeviceMemory::new(1 << 16, "det");
+    init(&mem);
+    let pause = AtomicBool::new(pause_preset);
+    let out = sim.run_grid(p, dims, params, &mut mem, &pause, None).unwrap();
+    let (cost, paused) = match out {
+        LaunchOutcome::Completed(c) => (c, None),
+        LaunchOutcome::Paused { grid, cost } => (cost, Some(grid)),
+    };
+    (dump(&mem), cost, paused)
+}
+
+#[test]
+fn simt_grid_bit_identical_across_worker_counts() {
+    let cfg = SimtConfig::nvidia();
+    let p = compile_simt(SCALE_SRC, "scale", &cfg);
+    let n: u32 = 4096; // 64 blocks x 64 threads
+    let dims = LaunchDims::d1(64, 64);
+    let params = [Value::ptr(0, AddrSpace::Global), Value::u32(n)];
+    let init = |mem: &DeviceMemory| {
+        for i in 0..n as u64 {
+            mem.store(i * 4, hetgpu::hetir::types::Scalar::F32, Value::f32(i as f32 * 0.25))
+                .unwrap();
+        }
+    };
+
+    let base = run_simt(&SimtSim::with_workers(cfg.clone(), 1), &p, dims, &params, &init, false);
+    assert!(base.2.is_none());
+    for workers in [2usize, 4, 8] {
+        let sim = SimtSim::with_workers(cfg.clone(), workers);
+        let got = run_simt(&sim, &p, dims, &params, &init, false);
+        assert_eq!(base.0, got.0, "global memory differs with {workers} workers");
+        assert_eq!(base.1, got.1, "cost report differs with {workers} workers");
+        assert!(got.2.is_none());
+    }
+}
+
+#[test]
+fn atomics_heavy_grid_bit_identical_across_worker_counts() {
+    let cfg = SimtConfig::nvidia();
+    let p = compile_simt(ATOMICS_SRC, "slam", &cfg);
+    let dims = LaunchDims::d1(64, 64); // 4096 threads on 16+8 counters
+    let params =
+        [Value::ptr(0, AddrSpace::Global), Value::ptr(1024, AddrSpace::Global)];
+    let init = |_: &DeviceMemory| {};
+
+    let base = run_simt(&SimtSim::with_workers(cfg.clone(), 1), &p, dims, &params, &init, false);
+    for workers in [2usize, 4, 8] {
+        let sim = SimtSim::with_workers(cfg.clone(), workers);
+        let got = run_simt(&sim, &p, dims, &params, &init, false);
+        assert_eq!(base.0, got.0, "atomic results differ with {workers} workers");
+        assert_eq!(base.1, got.1, "cost report differs with {workers} workers");
+    }
+}
+
+#[test]
+fn tensix_grids_bit_identical_across_worker_counts() {
+    let m = frontend::compile(SCALE_SRC, "det").unwrap();
+    let k = m.kernel("scale").unwrap();
+    let n: u32 = 2048; // 64 blocks x 32 threads
+    let dims = LaunchDims::d1(64, 32);
+    let params = [Value::ptr(0, AddrSpace::Global), Value::u32(n)];
+
+    for mode in [TensixMode::VectorSingleCore, TensixMode::ScalarMimd] {
+        let p = backends::translate_tensix(k, mode, TranslateOpts { migratable: false })
+            .unwrap();
+        let run = |workers: usize| {
+            let sim = TensixSim::with_workers(
+                hetgpu::isa::tensix_isa::TensixConfig::blackhole(),
+                workers,
+            );
+            let mut mem = DeviceMemory::new(1 << 16, "det");
+            for i in 0..n as u64 {
+                mem.store(i * 4, hetgpu::hetir::types::Scalar::F32, Value::f32(i as f32))
+                    .unwrap();
+            }
+            let pause = AtomicBool::new(false);
+            let out = sim
+                .run_grid(&p, dims, &params, &mut mem, &pause, None, None)
+                .unwrap();
+            assert!(out.is_completed());
+            (dump(&mem), *out.cost())
+        };
+        let (mem1, cost1) = run(1);
+        for workers in [2usize, 4] {
+            let (memn, costn) = run(workers);
+            assert_eq!(mem1, memn, "{mode:?}: memory differs with {workers} workers");
+            assert_eq!(cost1, costn, "{mode:?}: cost differs with {workers} workers");
+        }
+    }
+}
+
+/// A deterministic mid-grid pause: the pause flag is pre-set (so every
+/// dispatched block dumps at its first checkpoint barrier) and the dispatch
+/// frontier is pinned at block 5 — blocks 0..5 suspend with captured
+/// registers, blocks 5..8 stay NotStarted, for ANY worker count. The
+/// resulting snapshots must be bit-identical, and resuming each (with the
+/// *other* worker count) must reproduce the uninterrupted run exactly.
+#[test]
+fn pinned_pause_migrate_roundtrip_is_bit_identical() {
+    let cfg = SimtConfig::nvidia();
+    let p = compile_simt(PERSIST_SRC, "persist", &cfg);
+    let dims = LaunchDims::d1(8, 32);
+    let n = 256u64;
+    let iters = 3u32;
+    let params = [Value::ptr(0, AddrSpace::Global), Value::u32(iters)];
+    let init = |mem: &DeviceMemory| {
+        for i in 0..n {
+            mem.store(i * 4, hetgpu::hetir::types::Scalar::F32, Value::f32(i as f32 * 0.5))
+                .unwrap();
+        }
+    };
+    let spec = LaunchSpec {
+        module: 0,
+        kernel: "persist".to_string(),
+        dims,
+        args: Vec::<Arg>::new(),
+        tensix_mode_hint: None,
+    };
+
+    // Reference: uninterrupted sequential run.
+    let reference =
+        run_simt(&SimtSim::with_workers(cfg.clone(), 1), &p, dims, &params, &init, false);
+    assert!(reference.2.is_none());
+
+    let paused_run = |workers: usize| {
+        let mut sim = SimtSim::with_workers(cfg.clone(), workers);
+        sim.dispatch = sim.dispatch.pause_at(5);
+        let mut mem = DeviceMemory::new(1 << 16, "det");
+        init(&mem);
+        let pause = AtomicBool::new(true); // dump at the first ckpt barrier
+        let out = sim.run_grid(&p, dims, &params, &mut mem, &pause, None).unwrap();
+        let grid = match out {
+            LaunchOutcome::Paused { grid, .. } => grid,
+            LaunchOutcome::Completed(_) => panic!("expected a paused grid"),
+        };
+        assert_eq!(grid.suspended_count(), 5);
+        (dump(&mem), grid)
+    };
+
+    let (mem1, grid1) = paused_run(1);
+    let (mem8, grid8) = paused_run(8);
+    assert_eq!(mem1, mem8, "paused memory image differs");
+    assert_eq!(grid1, grid8, "paused grid states differ");
+
+    // Snapshot blobs must serialize to identical bytes.
+    let blob_of = |grid: &PausedGrid, mem: &[u8]| {
+        blob::serialize(&Snapshot {
+            src_device: 0,
+            paused: Some(PausedKernel { spec: spec.clone(), blocks: grid.blocks.clone() }),
+            allocations: vec![(0, mem.to_vec())],
+        })
+    };
+    assert_eq!(blob_of(&grid1, &mem1), blob_of(&grid8, &mem8), "snapshot blobs differ");
+
+    // Resume each snapshot with the opposite worker count; both must land
+    // exactly on the uninterrupted result.
+    for (grid, mem_bytes, workers) in [(&grid1, &mem1, 8usize), (&grid8, &mem8, 1usize)] {
+        let directives =
+            PausedKernel { spec: spec.clone(), blocks: grid.blocks.clone() }
+                .resume_directives();
+        let sim = SimtSim::with_workers(cfg.clone(), workers);
+        let mut mem = DeviceMemory::new(1 << 16, "det");
+        mem.write_bytes(0, mem_bytes).unwrap();
+        let pause = AtomicBool::new(false);
+        let out = sim
+            .run_grid(&p, dims, &params, &mut mem, &pause, Some(&directives))
+            .unwrap();
+        assert!(out.is_completed(), "resume with {workers} workers paused again");
+        assert_eq!(
+            reference.0,
+            dump(&mem),
+            "resumed result differs from uninterrupted run ({workers} workers)"
+        );
+    }
+}
+
+#[test]
+fn runtime_worker_plumbing_and_env_escape_hatch() {
+    // Explicit worker counts flow from the API constructor to the engine
+    // and out through stream stats; results agree with sequential.
+    let results: Vec<Vec<f32>> = [1usize, 3]
+        .iter()
+        .map(|&workers| {
+            let ctx =
+                HetGpu::with_devices_and_workers(&[DeviceKind::NvidiaSim], workers).unwrap();
+            assert_eq!(ctx.sim_workers(0).unwrap(), workers);
+            let m = ctx.compile_cuda(SCALE_SRC).unwrap();
+            let buf = ctx.malloc_on(4096, 0).unwrap();
+            let data: Vec<f32> = (0..1024).map(|i| i as f32).collect();
+            ctx.upload_f32(buf, &data).unwrap();
+            let s = ctx.create_stream(0).unwrap();
+            ctx.launch(
+                s,
+                m,
+                "scale",
+                LaunchDims::d1(16, 64),
+                &[Arg::Ptr(buf), Arg::U32(1024)],
+            )
+            .unwrap();
+            ctx.synchronize(s).unwrap();
+            assert_eq!(ctx.stream_stats(s).unwrap().sim_workers, workers);
+            ctx.download_f32(buf, 1024).unwrap()
+        })
+        .collect();
+    assert_eq!(results[0], results[1]);
+}
