@@ -39,14 +39,14 @@ fn main() {
         for (slot, mig) in [(0usize, true), (1, false)] {
             let p = backends::translate_simt(k, &cfg, TranslateOpts { migratable: mig }).unwrap();
             let sim = SimtSim::new(cfg.clone());
-            let mut mem = DeviceMemory::new(1 << 20, "bench");
+            let mem = DeviceMemory::new(1 << 20, "bench");
             let pause = AtomicBool::new(false);
             let out = sim
                 .run_grid(
                     &p,
                     LaunchDims::d1(4, 64),
                     &[Value::ptr(0, AddrSpace::Global), Value::u32(iters)],
-                    &mut mem,
+                    &mem,
                     &pause,
                     None,
                 )
@@ -71,14 +71,14 @@ fn main() {
         )
         .unwrap();
         let sim = TensixSim::new(TensixConfig::blackhole());
-        let mut mem = DeviceMemory::new(1 << 20, "bench");
+        let mem = DeviceMemory::new(1 << 20, "bench");
         let pause = AtomicBool::new(false);
         let out = sim
             .run_grid(
                 &p,
                 LaunchDims::d1(4, 32),
                 &[Value::ptr(0, AddrSpace::Global), Value::u32(iters)],
-                &mut mem,
+                &mem,
                 &pause,
                 None,
                 None,

@@ -694,7 +694,7 @@ mod tests {
     fn run_on(cfg: SimtConfig, k: &Kernel, n: usize) -> Vec<f32> {
         let p = translate(k, &cfg, TranslateOpts::default()).unwrap();
         let sim = SimtSim::new(cfg);
-        let mut mem = DeviceMemory::new(1 << 20, "t");
+        let mem = DeviceMemory::new(1 << 20, "t");
         for i in 0..n {
             mem.store(i as u64 * 4, Scalar::F32, Value::f32(i as f32)).unwrap();
             mem.store(65536 + i as u64 * 4, Scalar::F32, Value::f32(1000.0)).unwrap();
@@ -707,7 +707,7 @@ mod tests {
         ];
         let pause = AtomicBool::new(false);
         let blocks = (n as u32).div_ceil(128);
-        sim.run_grid(&p, LaunchDims::d1(blocks, 128), &params, &mut mem, &pause, None).unwrap();
+        sim.run_grid(&p, LaunchDims::d1(blocks, 128), &params, &mem, &pause, None).unwrap();
         (0..n)
             .map(|i| mem.load(131072 + i as u64 * 4, Scalar::F32).unwrap().as_f32())
             .collect()
@@ -745,13 +745,13 @@ mod tests {
         for cfg in [SimtConfig::nvidia(), SimtConfig::intel()] {
             let p = translate(&k, &cfg, TranslateOpts::default()).unwrap();
             let sim = SimtSim::new(cfg);
-            let mut mem = DeviceMemory::new(1 << 16, "t");
+            let mem = DeviceMemory::new(1 << 16, "t");
             let pause = AtomicBool::new(false);
             sim.run_grid(
                 &p,
                 LaunchDims::d1(1, 64),
                 &[Value::ptr(0, AddrSpace::Global)],
-                &mut mem,
+                &mem,
                 &pause,
                 None,
             )
@@ -785,13 +785,13 @@ mod tests {
         for cfg in [SimtConfig::nvidia(), SimtConfig::intel()] {
             let p = translate(&k, &cfg, TranslateOpts::default()).unwrap();
             let sim = SimtSim::new(cfg);
-            let mut mem = DeviceMemory::new(1 << 16, "t");
+            let mem = DeviceMemory::new(1 << 16, "t");
             let pause = AtomicBool::new(false);
             sim.run_grid(
                 &p,
                 LaunchDims::d1(1, 64),
                 &[Value::ptr(0, AddrSpace::Global)],
-                &mut mem,
+                &mem,
                 &pause,
                 None,
             )

@@ -1113,7 +1113,7 @@ mod tests {
         let k = vadd_kernel();
         let p = translate(&k, mode, TranslateOpts::default()).unwrap();
         let sim = TensixSim::new(TensixConfig::blackhole());
-        let mut mem = DeviceMemory::new(1 << 20, "t");
+        let mem = DeviceMemory::new(1 << 20, "t");
         for i in 0..n {
             mem.store(i as u64 * 4, Scalar::F32, Value::f32(i as f32)).unwrap();
             mem.store(65536 + i as u64 * 4, Scalar::F32, Value::f32(0.5)).unwrap();
@@ -1126,7 +1126,7 @@ mod tests {
         ];
         let pause = AtomicBool::new(false);
         let blocks = (n as u32).div_ceil(block);
-        sim.run_grid(&p, LaunchDims::d1(blocks, block), &params, &mut mem, &pause, None, None)
+        sim.run_grid(&p, LaunchDims::d1(blocks, block), &params, &mem, &pause, None, None)
             .unwrap();
         (0..n)
             .map(|i| mem.load(131072 + i as u64 * 4, Scalar::F32).unwrap().as_f32())
@@ -1190,14 +1190,14 @@ mod tests {
         for mode in [TensixMode::VectorSingleCore, TensixMode::VectorMultiCore] {
             let p = translate(&k, mode, TranslateOpts::default()).unwrap();
             let sim = TensixSim::new(TensixConfig::blackhole());
-            let mut mem = DeviceMemory::new(1 << 16, "t");
+            let mem = DeviceMemory::new(1 << 16, "t");
             let pause = AtomicBool::new(false);
             let heap = if mode == TensixMode::VectorMultiCore { Some(8192) } else { None };
             sim.run_grid(
                 &p,
                 LaunchDims::d1(1, 32),
                 &[Value::ptr(0, AddrSpace::Global)],
-                &mut mem,
+                &mem,
                 &pause,
                 None,
                 heap,

@@ -1,1 +1,276 @@
-// paper's L3 coordination contribution
+//! Multi-device grid coordinator — the paper's L3 contribution (§4.3,
+//! §6.3): treat disparate GPUs as one pool, moving work between them via
+//! serialized state.
+//!
+//! [`Coordinator::launch_sharded`] splits one logical grid into contiguous
+//! per-device block ranges (proportional to each device's dispatch worker
+//! count, see [`shard::split_grid`]), broadcasts the current contents of
+//! every unified-memory allocation to the participating devices (unified
+//! virtual addressing means the bytes land at the *same* addresses — no
+//! pointer fix-up), and records one shard launch per device in the event
+//! graph. The executor pool runs the shards concurrently; each shard skips
+//! the blocks it does not own via resume directives, the same mechanism
+//! migration resume uses.
+//!
+//! Because a shard is an ordinary (partial) launch on an ordinary stream,
+//! the whole checkpoint machinery applies to it: [`ShardedLaunch::rebalance`]
+//! pauses one shard cooperatively, captures a **shard-scoped snapshot**
+//! (kernel state + the broadcast memory image of the shard's device),
+//! moves it through the [`crate::migrate::blob`] wire format — the same
+//! transport a cross-host orchestrator would use — and resumes it on
+//! another device, including across SIMT↔Tensix kinds.
+//!
+//! [`ShardedLaunch::wait`] joins the shards: per-shard memory deltas
+//! (relative to the pre-launch baseline) are merged back into the home
+//! allocations in shard order, and per-shard [`CostReport`]s are merged
+//! (sums for totals, max for the critical path). For grids whose blocks
+//! write disjoint locations — the common data-parallel shape — the merged
+//! memory is bit-identical to a single-device run. Cross-shard global
+//! atomics are the documented limitation: shards run against separate
+//! memory images, so read-modify-write traffic between blocks of
+//! *different* shards does not compose (blocks within one shard still
+//! share real atomics).
+
+pub mod shard;
+
+use crate::error::{HetError, Result};
+use crate::migrate::blob;
+use crate::migrate::state::Snapshot;
+use crate::runtime::api::{HetGpu, ModuleHandle, StreamHandle};
+use crate::runtime::launch::Arg;
+use crate::sim::simt::LaunchDims;
+use crate::sim::snapshot::CostReport;
+use shard::ShardRange;
+use std::sync::atomic::Ordering;
+
+/// One shard of a sharded launch.
+#[derive(Debug)]
+pub struct Shard {
+    /// Internal stream the shard's commands are recorded on.
+    pub stream: StreamHandle,
+    /// Device currently executing the shard (updated by rebalance).
+    pub device: usize,
+    pub range: ShardRange,
+    /// The shard launch's graph event.
+    pub event: crate::runtime::events::EventId,
+}
+
+/// Pre-launch contents of one unified-memory allocation (the merge
+/// baseline), captured from its resident device.
+struct BaselineRegion {
+    addr: u64,
+    home: usize,
+    bytes: Vec<u8>,
+}
+
+/// Report of a completed sharded launch.
+#[derive(Debug, Clone)]
+pub struct ShardReport {
+    /// Totals summed over shards; `device_cycles` is the max over shards
+    /// (the grid's critical path is its slowest shard).
+    pub merged: CostReport,
+    /// `(final device, range, cost)` per shard, in block order.
+    pub per_shard: Vec<(usize, ShardRange, CostReport)>,
+    /// Shards that were moved to another device mid-run.
+    pub rebalanced: usize,
+}
+
+/// An in-flight grid sharded over several devices.
+pub struct ShardedLaunch<'a> {
+    ctx: &'a HetGpu,
+    pub shards: Vec<Shard>,
+    baseline: Vec<BaselineRegion>,
+    rebalanced: usize,
+}
+
+/// Coordinator view of a [`HetGpu`] context (see module docs).
+pub struct Coordinator<'a> {
+    ctx: &'a HetGpu,
+}
+
+impl<'a> Coordinator<'a> {
+    pub(crate) fn new(ctx: &'a HetGpu) -> Coordinator<'a> {
+        Coordinator { ctx }
+    }
+
+    /// The shard plan `launch_sharded` would use: contiguous block ranges
+    /// proportional to each device's dispatch worker count.
+    pub fn plan(&self, grid_size: u32, devices: &[usize]) -> Result<Vec<(usize, ShardRange)>> {
+        if devices.is_empty() {
+            return Err(HetError::runtime("sharded launch needs at least one device"));
+        }
+        let mut weights = Vec::with_capacity(devices.len());
+        for (i, &d) in devices.iter().enumerate() {
+            if devices[..i].contains(&d) {
+                return Err(HetError::runtime(format!("device {d} listed twice")));
+            }
+            weights.push((d, self.ctx.runtime().device(d)?.engine.workers()));
+        }
+        Ok(shard::split_grid(grid_size, &weights))
+    }
+
+    /// Split `dims` into per-device shards, broadcast memory, and record
+    /// the shard launches (they start executing immediately on the shared
+    /// executor pool). Call [`ShardedLaunch::wait`] to join and merge.
+    pub fn launch_sharded(
+        &self,
+        module: ModuleHandle,
+        kernel: &str,
+        dims: LaunchDims,
+        args: &[Arg],
+        devices: &[usize],
+    ) -> Result<ShardedLaunch<'a>> {
+        let (grid_size, _) = dims.validate()?;
+        let plan = self.plan(grid_size, devices)?;
+
+        // Baseline capture: the current bytes of every allocation, read
+        // from its resident device — both the broadcast source and the
+        // merge reference. The exclusive gate orders the capture after any
+        // in-flight kernel on that device (a torn baseline would corrupt
+        // the delta merge).
+        let mut baseline = Vec::new();
+        for (addr, size, home) in self.ctx.runtime().memory.all_allocations() {
+            let dev = self.ctx.runtime().device(home)?;
+            let _gate = dev.exec.write().unwrap();
+            let mut bytes = vec![0u8; size as usize];
+            dev.mem.read_bytes_into(addr, &mut bytes)?;
+            baseline.push(BaselineRegion { addr, home, bytes });
+        }
+
+        // Broadcast to every participating device that is not the home of
+        // the region (unified addresses: same offsets everywhere),
+        // likewise excluding running kernels.
+        for &(d, _) in &plan {
+            let dev = self.ctx.runtime().device(d)?;
+            let _gate = dev.exec.write().unwrap();
+            for region in &baseline {
+                if region.home != d {
+                    dev.mem.write_bytes(region.addr, &region.bytes)?;
+                }
+            }
+        }
+
+        let mut shards = Vec::with_capacity(plan.len());
+        for (d, range) in plan {
+            let stream = self.ctx.create_stream(d)?;
+            let event = self.ctx.launch_shard(stream, module, kernel, dims, args, range)?;
+            shards.push(Shard { stream, device: d, range, event });
+        }
+        Ok(ShardedLaunch { ctx: self.ctx, shards, baseline, rebalanced: 0 })
+    }
+}
+
+impl ShardedLaunch<'_> {
+    /// Cooperatively pause shard `idx` and move it to `dst_device`
+    /// (possibly of a different kind), using the snapshot wire format as
+    /// transport. Returns `true` if the shard was caught live mid-kernel
+    /// (`false`: it had already finished — only memory moved).
+    pub fn rebalance(&mut self, idx: usize, dst_device: usize) -> Result<bool> {
+        let rt = self.ctx.runtime();
+        let dst = rt.device(dst_device)?;
+        if idx >= self.shards.len() {
+            return Err(HetError::runtime("bad shard index"));
+        }
+        if self.shards.iter().any(|s| s.device == dst_device) {
+            return Err(HetError::runtime(format!(
+                "device {dst_device} already executes a shard"
+            )));
+        }
+        let shard = &mut self.shards[idx];
+        let src = rt.device(shard.device)?;
+
+        // Checkpoint protocol on the shard's stream (paper §4.2).
+        src.pause.store(true, Ordering::SeqCst);
+        let quiesce = self.ctx.with_stream(shard.stream, |s| s.quiesce());
+        src.pause.store(false, Ordering::SeqCst);
+        quiesce?;
+        let paused = self.ctx.with_stream(shard.stream, |s| s.take_paused())?;
+        let live = paused.is_some();
+
+        // Shard-scoped snapshot: the shard device's image of every region
+        // (residency bookkeeping untouched — these are broadcast copies).
+        let mut allocations = Vec::with_capacity(self.baseline.len());
+        {
+            let _gate = src.exec.write().unwrap();
+            for region in &self.baseline {
+                let mut bytes = vec![0u8; region.bytes.len()];
+                src.mem.read_bytes_into(region.addr, &mut bytes)?;
+                allocations.push((region.addr, bytes));
+            }
+        }
+        let snap =
+            Snapshot { src_device: shard.device, paused, allocations, shard: Some(shard.range) };
+        // Streams that observed the device-wide pause collaterally (user
+        // streams co-located with the shard) resume in place.
+        self.ctx.graph().resume_collateral(snap.src_device, shard.stream.0);
+
+        // Through the wire format — the transport a cross-host
+        // orchestrator would ship between machines.
+        let snap = blob::deserialize(&blob::serialize(&snap))?;
+
+        {
+            let _gate = dst.exec.write().unwrap();
+            for (addr, bytes) in &snap.allocations {
+                dst.mem.write_bytes(*addr, bytes)?;
+            }
+        }
+        self.ctx.with_stream(shard.stream, |s| s.resume(dst_device, snap.paused))?;
+        shard.device = dst_device;
+        self.rebalanced += 1;
+        Ok(live)
+    }
+
+    /// Join all shards, merge their memory deltas into the home
+    /// allocations, and merge cost reports. Takes `&mut self` so a
+    /// paused-shard error leaves the launch usable — the caller can
+    /// `rebalance` (or resume) the shard and wait again, as the error
+    /// message instructs.
+    pub fn wait(&mut self) -> Result<ShardReport> {
+        let rt = self.ctx.runtime();
+        let mut per_shard = Vec::with_capacity(self.shards.len());
+        let mut merged = CostReport::default();
+        for shard in &self.shards {
+            let halted = self.ctx.with_stream(shard.stream, |s| s.quiesce())?;
+            if halted {
+                return Err(HetError::runtime(format!(
+                    "shard {}..{} is paused at a checkpoint — rebalance or resume it \
+                     before waiting",
+                    shard.range.lo, shard.range.hi
+                )));
+            }
+            let cost = self.ctx.stream_stats(shard.stream)?.cost;
+            merged.warp_instructions += cost.warp_instructions;
+            merged.total_cycles += cost.total_cycles;
+            merged.global_bytes += cost.global_bytes;
+            merged.device_cycles = merged.device_cycles.max(cost.device_cycles);
+            per_shard.push((shard.device, shard.range, cost));
+        }
+
+        // Merge memory: apply each shard's byte deltas (vs the pre-launch
+        // baseline) to the home image, in shard order — deterministic for
+        // any executor interleaving.
+        for region in &self.baseline {
+            let mut result = region.bytes.clone();
+            let mut dirty = false;
+            for shard in &self.shards {
+                let dev = rt.device(shard.device)?;
+                let _gate = dev.exec.write().unwrap();
+                let mut cur = vec![0u8; region.bytes.len()];
+                dev.mem.read_bytes_into(region.addr, &mut cur)?;
+                for (i, (b, base)) in cur.iter().zip(&region.bytes).enumerate() {
+                    if b != base {
+                        result[i] = *b;
+                        dirty = true;
+                    }
+                }
+            }
+            if dirty {
+                let home = rt.device(region.home)?;
+                let _gate = home.exec.write().unwrap();
+                home.mem.write_bytes(region.addr, &result)?;
+            }
+        }
+
+        Ok(ShardReport { merged, per_shard, rebalanced: self.rebalanced })
+    }
+}

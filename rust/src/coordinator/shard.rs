@@ -1,0 +1,134 @@
+//! Grid sharding: splitting one logical launch into per-device block
+//! ranges.
+//!
+//! Thread blocks are independent by construction (cross-block communication
+//! is only defined through global-memory atomics), so a grid can be cut
+//! along linear block ids: each participating device executes the blocks in
+//! its [`ShardRange`] and skips the rest via resume directives — the same
+//! mechanism migration resume uses, which is why a shard can itself be
+//! paused and rebalanced. Ranges are contiguous and proportional to each
+//! device's dispatch worker count (a stand-in for relative device
+//! throughput), assigned by the largest-remainder method so the split is
+//! deterministic and exact.
+
+/// A contiguous range of linear block ids `[lo, hi)` owned by one shard.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardRange {
+    pub lo: u32,
+    pub hi: u32,
+}
+
+impl ShardRange {
+    pub fn len(&self) -> u32 {
+        self.hi.saturating_sub(self.lo)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.hi <= self.lo
+    }
+
+    pub fn contains(&self, block: u32) -> bool {
+        (self.lo..self.hi).contains(&block)
+    }
+}
+
+/// Split `grid_size` blocks over devices proportionally to `weights`
+/// (`(device id, weight)`; a zero weight is treated as 1). Returns
+/// contiguous, non-empty `(device, range)` shards covering the grid
+/// exactly, in ascending block order. Devices that would receive zero
+/// blocks (more devices than blocks) are dropped.
+pub fn split_grid(grid_size: u32, weights: &[(usize, usize)]) -> Vec<(usize, ShardRange)> {
+    if grid_size == 0 || weights.is_empty() {
+        return Vec::new();
+    }
+    let w: Vec<u64> = weights.iter().map(|&(_, w)| w.max(1) as u64).collect();
+    let total: u64 = w.iter().sum();
+    // Floor shares + largest remainder (ties broken by lower index) keeps
+    // the split deterministic for any weight vector.
+    let mut share: Vec<u64> = w.iter().map(|w| grid_size as u64 * w / total).collect();
+    let mut rem: Vec<(u64, usize)> = w
+        .iter()
+        .enumerate()
+        .map(|(i, w)| (grid_size as u64 * w % total, i))
+        .collect();
+    rem.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+    let assigned: u64 = share.iter().sum();
+    for &(_, i) in rem.iter().take((grid_size as u64 - assigned) as usize) {
+        share[i] += 1;
+    }
+
+    let mut out = Vec::with_capacity(weights.len());
+    let mut lo = 0u32;
+    for (i, &(device, _)) in weights.iter().enumerate() {
+        let n = share[i] as u32;
+        if n == 0 {
+            continue;
+        }
+        out.push((device, ShardRange { lo, hi: lo + n }));
+        lo += n;
+    }
+    debug_assert_eq!(lo, grid_size);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cover(grid: u32, shards: &[(usize, ShardRange)]) {
+        let mut next = 0u32;
+        for (_, r) in shards {
+            assert_eq!(r.lo, next, "shards must be contiguous");
+            assert!(!r.is_empty());
+            next = r.hi;
+        }
+        assert_eq!(next, grid, "shards must cover the grid exactly");
+    }
+
+    #[test]
+    fn equal_weights_split_evenly() {
+        let s = split_grid(64, &[(0, 4), (1, 4)]);
+        cover(64, &s);
+        assert_eq!(s[0].1.len(), 32);
+        assert_eq!(s[1].1.len(), 32);
+    }
+
+    #[test]
+    fn proportional_to_weights_with_remainders() {
+        let s = split_grid(10, &[(0, 1), (1, 2)]);
+        cover(10, &s);
+        // 10/3 -> floors 3 + 6, remainder block to the larger fraction.
+        assert_eq!(s[0].1.len() + s[1].1.len(), 10);
+        assert!(s[1].1.len() >= 2 * s[0].1.len() - 1);
+    }
+
+    #[test]
+    fn more_devices_than_blocks_drops_empty_shards() {
+        let s = split_grid(2, &[(0, 1), (1, 1), (2, 1), (3, 1)]);
+        cover(2, &s);
+        assert_eq!(s.len(), 2);
+        assert!(s.iter().all(|(_, r)| r.len() == 1));
+    }
+
+    #[test]
+    fn zero_weight_treated_as_one() {
+        let s = split_grid(8, &[(0, 0), (1, 0)]);
+        cover(8, &s);
+        assert_eq!(s.len(), 2);
+    }
+
+    #[test]
+    fn single_device_takes_everything() {
+        let s = split_grid(7, &[(3, 16)]);
+        cover(7, &s);
+        assert_eq!(s, vec![(3, ShardRange { lo: 0, hi: 7 })]);
+    }
+
+    #[test]
+    fn deterministic_for_same_inputs() {
+        let a = split_grid(101, &[(0, 3), (1, 5), (2, 7)]);
+        let b = split_grid(101, &[(0, 3), (1, 5), (2, 7)]);
+        cover(101, &a);
+        assert_eq!(a, b);
+    }
+}

@@ -39,7 +39,7 @@ mod tests {
         let k = m.kernel("saxpy").unwrap();
         let n = 130usize;
         let mk_mem = || {
-            let mut mem = DeviceMemory::new(1 << 16, "t");
+            let mem = DeviceMemory::new(1 << 16, "t");
             for i in 0..n {
                 mem.store(i as u64 * 4, Scalar::F32, Value::f32(i as f32)).unwrap();
                 mem.store(4096 + i as u64 * 4, Scalar::F32, Value::f32(1.0)).unwrap();
@@ -61,15 +61,15 @@ mod tests {
         for cfg in [SimtConfig::nvidia(), SimtConfig::amd(), SimtConfig::intel()] {
             let p = backends::translate_simt(k, &cfg, TranslateOpts::default()).unwrap();
             let sim = SimtSim::new(cfg);
-            let mut mem = mk_mem();
-            sim.run_grid(&p, LaunchDims::d1(5, 32), &params, &mut mem, &pause, None).unwrap();
+            let mem = mk_mem();
+            sim.run_grid(&p, LaunchDims::d1(5, 32), &params, &mem, &pause, None).unwrap();
             all.push(expect(&mem));
         }
         for mode in [TensixMode::VectorSingleCore, TensixMode::ScalarMimd] {
             let p = backends::translate_tensix(k, mode, TranslateOpts::default()).unwrap();
             let sim = TensixSim::new(TensixConfig::blackhole());
-            let mut mem = mk_mem();
-            sim.run_grid(&p, LaunchDims::d1(5, 32), &params, &mut mem, &pause, None, None)
+            let mem = mk_mem();
+            sim.run_grid(&p, LaunchDims::d1(5, 32), &params, &mem, &pause, None, None)
                 .unwrap();
             all.push(expect(&mem));
         }
@@ -96,7 +96,7 @@ mod tests {
         let p = backends::translate_simt(k, &cfg, TranslateOpts::default()).unwrap();
         let sim = SimtSim::new(cfg);
         // Memory sized so any access beyond n*4 faults.
-        let mut mem = DeviceMemory::new(16, "t");
+        let mem = DeviceMemory::new(16, "t");
         mem.store(0, Scalar::F32, Value::f32(5.0)).unwrap();
         mem.store(4, Scalar::F32, Value::f32(-5.0)).unwrap();
         let pause = AtomicBool::new(false);
@@ -104,7 +104,7 @@ mod tests {
             &p,
             LaunchDims::d1(1, 32),
             &[Value::ptr(0, AddrSpace::Global), Value::u32(2)],
-            &mut mem,
+            &mem,
             &pause,
             None,
         )
@@ -131,13 +131,13 @@ mod tests {
         let p = backends::translate_simt(m.kernel("k").unwrap(), &cfg, TranslateOpts::default())
             .unwrap();
         let sim = SimtSim::new(cfg);
-        let mut mem = DeviceMemory::new(256, "t");
+        let mem = DeviceMemory::new(256, "t");
         let pause = AtomicBool::new(false);
         sim.run_grid(
             &p,
             LaunchDims::d1(1, 4),
             &[Value::ptr(0, AddrSpace::Global)],
-            &mut mem,
+            &mem,
             &pause,
             None,
         )
@@ -168,7 +168,7 @@ mod tests {
         let cfg = SimtConfig::nvidia();
         let p = backends::translate_simt(k, &cfg, TranslateOpts::default()).unwrap();
         let sim = SimtSim::new(cfg);
-        let mut mem = DeviceMemory::new(4096, "t");
+        let mem = DeviceMemory::new(4096, "t");
         for i in 0..64u64 {
             mem.store(i * 4, Scalar::F32, Value::f32(1.0)).unwrap();
         }
@@ -177,7 +177,7 @@ mod tests {
             &p,
             LaunchDims::d1(2, 32),
             &[Value::ptr(0, AddrSpace::Global), Value::ptr(1024, AddrSpace::Global)],
-            &mut mem,
+            &mem,
             &pause,
             None,
         )
@@ -204,13 +204,13 @@ mod tests {
         )
         .unwrap();
         let sim = SimtSim::new(cfg);
-        let mut mem = DeviceMemory::new(64, "t");
+        let mem = DeviceMemory::new(64, "t");
         let pause = AtomicBool::new(false);
         sim.run_grid(
             &p,
             LaunchDims::d1(2, 32),
             &[Value::ptr(0, AddrSpace::Global)],
-            &mut mem,
+            &mem,
             &pause,
             None,
         )

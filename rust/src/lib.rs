@@ -13,11 +13,15 @@
 //! * [`isa`] — the simulated device instruction sets backends emit.
 //! * [`backends`] — JIT translation modules hetIR → device ISA.
 //! * [`sim`] — the device simulators (hardware substitution, DESIGN.md §2).
-//! * [`runtime`] — device registry, memory, streams, launch, JIT cache.
+//! * [`runtime`] — device registry, memory, event-graph streams, launch,
+//!   JIT cache.
+//! * [`coordinator`] — multi-device grid sharding + shard rebalance (the
+//!   paper's L3 coordination layer).
 //! * [`migrate`] — device-neutral snapshots, checkpoint/restore/migrate.
 //! * [`xla_native`] — PJRT/XLA "vendor native" path + numerics oracle.
 
 pub mod backends;
+pub mod coordinator;
 pub mod error;
 pub mod frontend;
 pub mod isa;

@@ -7,6 +7,7 @@
 //!
 //! ```text
 //! "HGPU" | u32 version
+//! | u8 has_shard | [shard: lo u32, hi u32]      (v2: coordinator shards)
 //! | u8 has_kernel
 //! |   [kernel: module u32, name, dims 6×u32, args, tensix hint]
 //! |   [blocks: u32 count, per block: tag u8
@@ -15,6 +16,7 @@
 //! | u32 alloc count | per alloc: addr u64, len u64, bytes
 //! ```
 
+use crate::coordinator::shard::ShardRange;
 use crate::error::{HetError, Result};
 use crate::hetir::instr::Reg as VReg;
 use crate::hetir::types::{AddrSpace, Scalar, Type, Value};
@@ -27,7 +29,8 @@ use crate::sim::simt::LaunchDims;
 use crate::sim::snapshot::{BlockCapture, BlockState, ThreadCapture};
 
 const MAGIC: &[u8; 4] = b"HGPU";
-const VERSION: u32 = 1;
+/// v2 added the optional shard range (coordinator shard-scoped snapshots).
+const VERSION: u32 = 2;
 
 // ---- writer ----
 
@@ -209,6 +212,14 @@ pub fn serialize(snap: &Snapshot) -> Vec<u8> {
     w.buf.extend_from_slice(MAGIC);
     w.u32(VERSION);
     w.u32(snap.src_device as u32);
+    match snap.shard {
+        None => w.u8(0),
+        Some(r) => {
+            w.u8(1);
+            w.u32(r.lo);
+            w.u32(r.hi);
+        }
+    }
     match &snap.paused {
         None => w.u8(0),
         Some(p) => {
@@ -266,6 +277,18 @@ pub fn deserialize(buf: &[u8]) -> Result<Snapshot> {
         return Err(HetError::Blob { msg: format!("unsupported version {ver}") });
     }
     let src_device = r.u32()? as usize;
+    let shard = match r.u8()? {
+        0 => None,
+        1 => {
+            let lo = r.u32()?;
+            let hi = r.u32()?;
+            if hi <= lo {
+                return Err(r.err("empty shard range"));
+            }
+            Some(ShardRange { lo, hi })
+        }
+        _ => return Err(r.err("bad shard tag")),
+    };
     let paused = if r.u8()? == 1 {
         let module = r.u32()? as usize;
         let kernel = r.string()?;
@@ -341,7 +364,7 @@ pub fn deserialize(buf: &[u8]) -> Result<Snapshot> {
     if r.pos != buf.len() {
         return Err(r.err("trailing bytes"));
     }
-    Ok(Snapshot { src_device, paused, allocations })
+    Ok(Snapshot { src_device, paused, allocations, shard })
 }
 
 #[cfg(test)]
@@ -384,6 +407,7 @@ mod tests {
                 ],
             }),
             allocations: vec![(0x1000, vec![0xAB; 100]), (0x8000, vec![0xCD; 7])],
+            shard: Some(ShardRange { lo: 1, hi: 3 }),
         }
     }
 
@@ -393,6 +417,7 @@ mod tests {
         let blob = serialize(&s);
         let s2 = deserialize(&blob).unwrap();
         assert_eq!(s.src_device, s2.src_device);
+        assert_eq!(s.shard, s2.shard);
         assert_eq!(s.allocations, s2.allocations);
         let (p, p2) = (s.paused.unwrap(), s2.paused.unwrap());
         assert_eq!(p.spec.kernel, p2.spec.kernel);
@@ -404,11 +429,24 @@ mod tests {
 
     #[test]
     fn roundtrip_idle_snapshot() {
-        let s = Snapshot { src_device: 0, paused: None, allocations: vec![(64, vec![9; 3])] };
+        let s = Snapshot {
+            src_device: 0,
+            paused: None,
+            allocations: vec![(64, vec![9; 3])],
+            shard: None,
+        };
         let blob = serialize(&s);
         let s2 = deserialize(&blob).unwrap();
         assert!(s2.paused.is_none());
+        assert!(s2.shard.is_none());
         assert_eq!(s2.allocations, s.allocations);
+    }
+
+    #[test]
+    fn rejects_empty_shard_range() {
+        let mut s = sample_snapshot();
+        s.shard = Some(ShardRange { lo: 4, hi: 4 });
+        assert!(deserialize(&serialize(&s)).is_err());
     }
 
     #[test]

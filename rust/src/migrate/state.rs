@@ -5,6 +5,7 @@
 //! contents, and all global allocations — everything needed to re-
 //! instantiate the computation on a *different* GPU architecture.
 
+use crate::coordinator::shard::ShardRange;
 use crate::runtime::stream::PausedKernel;
 use crate::sim::snapshot::BlockState;
 
@@ -18,6 +19,9 @@ pub struct Snapshot {
     pub paused: Option<PausedKernel>,
     /// Global-memory contents: (virtual address, bytes) per allocation.
     pub allocations: Vec<(u64, Vec<u8>)>,
+    /// When the capture is one shard of a coordinator-sharded grid: the
+    /// block range this snapshot owns (whole-stream snapshots: `None`).
+    pub shard: Option<ShardRange>,
 }
 
 impl Snapshot {
@@ -121,7 +125,7 @@ mod tests {
 
     #[test]
     fn empty_snapshot_counts() {
-        let s = Snapshot { src_device: 0, paused: None, allocations: vec![] };
+        let s = Snapshot { src_device: 0, paused: None, allocations: vec![], shard: None };
         assert_eq!(s.register_bytes(), 0);
         assert_eq!(s.suspended_blocks(), 0);
     }

@@ -5,19 +5,23 @@
 //! text), unified memory (`malloc`/`memcpy`), stream creation, kernel
 //! launch, and the checkpoint/migration entry points.
 
+use crate::coordinator::shard::ShardRange;
+use crate::coordinator::Coordinator;
 use crate::error::{HetError, Result};
 use crate::frontend;
 use crate::hetir::{self, module::Module};
 use crate::migrate::state::{MigrationReport, Snapshot};
 use crate::runtime::device::{Device, DeviceKind};
+use crate::runtime::events::{EventGraph, EventId, EventStatus, NodeKind};
 use crate::runtime::jit::JitCache;
 use crate::runtime::launch::{Arg, LaunchSpec};
 use crate::runtime::memory::{GpuPtr, MemoryManager};
-use crate::runtime::stream::{Cmd, Stream, StreamStats};
+use crate::runtime::stream::{Stream, StreamStats};
 use crate::runtime::RuntimeInner;
 use crate::sim::simt::LaunchDims;
 use std::sync::atomic::Ordering;
 use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
 use std::time::Instant;
 
 /// Handle to a loaded hetIR module.
@@ -31,9 +35,11 @@ pub struct StreamHandle(pub usize);
 /// The hetGPU context.
 pub struct HetGpu {
     inner: Arc<RuntimeInner>,
+    /// The command DAG every stream records into.
+    graph: Arc<EventGraph>,
+    /// Executor pool draining the graph (joined on drop).
+    executors: Vec<JoinHandle<()>>,
     streams: Mutex<Vec<Stream>>,
-    /// Device each stream is currently bound to (updated by migration).
-    stream_devices: Mutex<Vec<usize>>,
 }
 
 impl HetGpu {
@@ -69,7 +75,11 @@ impl HetGpu {
             jit: JitCache::new(),
             memory: MemoryManager::new(crate::runtime::device::DEVICE_MEM_BYTES),
         });
-        Ok(HetGpu { inner, streams: Mutex::new(Vec::new()), stream_devices: Mutex::new(Vec::new()) })
+        let graph = EventGraph::new(inner.clone());
+        // Enough executors that every device can be mid-launch while a few
+        // extra streams overlap copies; executors block while a node runs.
+        let executors = EventGraph::spawn_executors(&graph, (kinds.len() * 2).clamp(2, 8));
+        Ok(HetGpu { inner, graph, executors, streams: Mutex::new(Vec::new()) })
     }
 
     /// Create a context with all four paper devices.
@@ -93,6 +103,18 @@ impl HetGpu {
     /// Shared runtime internals (benches/tests poke at the JIT cache).
     pub fn runtime(&self) -> &RuntimeInner {
         &self.inner
+    }
+
+    /// The command DAG (crate-internal: coordinator + tests).
+    pub(crate) fn graph(&self) -> &Arc<EventGraph> {
+        &self.graph
+    }
+
+    /// Multi-device coordinator view of this context (paper §4.3/§6.3
+    /// L3 coordination): shard one grid over several devices, rebalance
+    /// paused shards.
+    pub fn coordinator(&self) -> Coordinator<'_> {
+        Coordinator::new(self)
     }
 
     // ---- modules ----
@@ -129,24 +151,33 @@ impl HetGpu {
         self.inner.memory.free(ptr)
     }
 
-    /// Host→device copy (to wherever the buffer is resident).
+    /// Host→device copy (to wherever the buffer is resident). Synchronous
+    /// and kernel-ordered: takes the device gate exclusively, so it waits
+    /// for in-flight launches on the device rather than racing them (the
+    /// pre-event-graph blocking behavior); use
+    /// [`HetGpu::memcpy_h2d_async`] for a stream-ordered copy that
+    /// overlaps other streams' kernels.
     pub fn memcpy_h2d(&self, dst: GpuPtr, data: &[u8]) -> Result<()> {
         let (base, size, device) = self.inner.memory.lookup(dst)?;
         if dst.0 + data.len() as u64 > base + size {
             return Err(HetError::runtime("h2d copy out of bounds"));
         }
         let dev = self.inner.device(device)?;
-        dev.mem.lock().unwrap().write_bytes(dst.0, data)
+        let _gate = dev.exec.write().unwrap();
+        dev.mem.write_bytes(dst.0, data)
     }
 
-    /// Device→host copy.
+    /// Device→host copy. Synchronous and kernel-ordered (see
+    /// [`HetGpu::memcpy_h2d`]): waits for in-flight launches on the
+    /// device, so it never reads a half-written image.
     pub fn memcpy_d2h(&self, out: &mut [u8], src: GpuPtr) -> Result<()> {
         let (base, size, device) = self.inner.memory.lookup(src)?;
         if src.0 + out.len() as u64 > base + size {
             return Err(HetError::runtime("d2h copy out of bounds"));
         }
         let dev = self.inner.device(device)?;
-        dev.mem.lock().unwrap().read_bytes_into(src.0, out)
+        let _gate = dev.exec.write().unwrap();
+        dev.mem.read_bytes_into(src.0, out)
     }
 
     /// Typed convenience: upload an `f32` slice.
@@ -177,33 +208,39 @@ impl HetGpu {
 
     // ---- streams & launch ----
 
-    /// Create a stream bound to `device`.
+    /// Create a stream bound to `device`. Streams are thin graph handles —
+    /// creating one spawns no thread.
     pub fn create_stream(&self, device: usize) -> Result<StreamHandle> {
         self.inner.device(device)?;
         let mut streams = self.streams.lock().unwrap();
-        let id = streams.len();
-        streams.push(Stream::spawn(id, device, self.inner.clone()));
-        self.stream_devices.lock().unwrap().push(device);
+        let id = self.graph.add_stream(device);
+        debug_assert_eq!(id, streams.len());
+        streams.push(Stream::new(id, self.graph.clone()));
         Ok(StreamHandle(id))
     }
 
     /// Which device a stream currently runs on.
     pub fn stream_device(&self, s: StreamHandle) -> Result<usize> {
-        self.stream_devices
-            .lock()
-            .unwrap()
-            .get(s.0)
-            .copied()
-            .ok_or_else(|| HetError::runtime("bad stream handle"))
+        self.graph.stream_device(s.0)
     }
 
-    fn with_stream<T>(&self, s: StreamHandle, f: impl FnOnce(&Stream) -> Result<T>) -> Result<T> {
-        let streams = self.streams.lock().unwrap();
-        let st = streams.get(s.0).ok_or_else(|| HetError::runtime("bad stream handle"))?;
-        f(st)
+    pub(crate) fn with_stream<T>(
+        &self,
+        s: StreamHandle,
+        f: impl FnOnce(&Stream) -> Result<T>,
+    ) -> Result<T> {
+        // Clone the thin handle out so the registry lock is not held
+        // across blocking stream operations (synchronize/quiesce).
+        let st = {
+            let streams = self.streams.lock().unwrap();
+            streams.get(s.0).ok_or_else(|| HetError::runtime("bad stream handle"))?.clone()
+        };
+        f(&st)
     }
 
-    /// Asynchronously launch a kernel on a stream.
+    /// Asynchronously launch a kernel on a stream; returns the launch's
+    /// event (queryable via [`HetGpu::event_query`], waitable from other
+    /// streams via [`HetGpu::wait_event`]).
     pub fn launch(
         &self,
         stream: StreamHandle,
@@ -211,7 +248,7 @@ impl HetGpu {
         kernel: &str,
         dims: LaunchDims,
         args: &[Arg],
-    ) -> Result<()> {
+    ) -> Result<EventId> {
         let spec = LaunchSpec {
             module: module.0,
             kernel: kernel.to_string(),
@@ -219,7 +256,7 @@ impl HetGpu {
             args: args.to_vec(),
             tensix_mode_hint: None,
         };
-        self.with_stream(stream, |s| s.send(Cmd::Launch(spec)))
+        self.with_stream(stream, |s| s.launch(spec))
     }
 
     /// Launch with a Tensix execution-mode hint (paper §4.4 user hints).
@@ -231,7 +268,7 @@ impl HetGpu {
         dims: LaunchDims,
         args: &[Arg],
         mode: crate::isa::tensix_isa::TensixMode,
-    ) -> Result<()> {
+    ) -> Result<EventId> {
         let spec = LaunchSpec {
             module: module.0,
             kernel: kernel.to_string(),
@@ -239,7 +276,62 @@ impl HetGpu {
             args: args.to_vec(),
             tensix_mode_hint: Some(mode),
         };
-        self.with_stream(stream, |s| s.send(Cmd::Launch(spec)))
+        self.with_stream(stream, |s| s.launch(spec))
+    }
+
+    /// Launch only the blocks in `range` of a logically larger grid (the
+    /// coordinator's sharded-execution primitive).
+    pub(crate) fn launch_shard(
+        &self,
+        stream: StreamHandle,
+        module: ModuleHandle,
+        kernel: &str,
+        dims: LaunchDims,
+        args: &[Arg],
+        range: ShardRange,
+    ) -> Result<EventId> {
+        let spec = LaunchSpec {
+            module: module.0,
+            kernel: kernel.to_string(),
+            dims,
+            args: args.to_vec(),
+            tensix_mode_hint: None,
+        };
+        self.with_stream(stream, |s| {
+            s.enqueue(NodeKind::Launch { spec, shard: Some(range) }, &[])
+        })
+    }
+
+    /// Asynchronous host→device copy, ordered with the stream's other
+    /// commands (the event-graph analog of `cudaMemcpyAsync`).
+    pub fn memcpy_h2d_async(
+        &self,
+        stream: StreamHandle,
+        dst: GpuPtr,
+        data: &[u8],
+    ) -> Result<EventId> {
+        // Fail unknown pointers and overruns at record time, like the
+        // synchronous path (the executor re-checks at execution, when the
+        // allocation table may have changed).
+        let (base, size, _device) = self.inner.memory.lookup(dst)?;
+        if dst.0 + data.len() as u64 > base + size {
+            return Err(HetError::runtime("h2d copy out of bounds"));
+        }
+        self.with_stream(stream, |s| {
+            s.enqueue(NodeKind::CopyH2D { dst, data: data.to_vec() }, &[])
+        })
+    }
+
+    /// Make `stream` wait for `event` (recorded on any stream) before
+    /// running its subsequent commands — a cross-stream DAG edge.
+    pub fn wait_event(&self, stream: StreamHandle, event: EventId) -> Result<EventId> {
+        self.graph.query(event)?; // must name a recorded event
+        self.with_stream(stream, |s| s.enqueue(NodeKind::Marker, &[event]))
+    }
+
+    /// Status of a recorded event.
+    pub fn event_query(&self, event: EventId) -> Result<EventStatus> {
+        self.graph.query(event)
     }
 
     /// Wait for all work on a stream (propagates sticky errors).
@@ -247,9 +339,10 @@ impl HetGpu {
         self.with_stream(stream, |s| s.synchronize())
     }
 
-    /// Per-stream stats (launches, model cycles, wall time).
+    /// Per-stream stats (launches, model cycles, wall time), including the
+    /// per-device breakdown for streams that executed on several devices.
     pub fn stream_stats(&self, stream: StreamHandle) -> Result<StreamStats> {
-        self.with_stream(stream, |s| Ok(s.stats.lock().unwrap().clone()))
+        self.with_stream(stream, |s| s.stats())
     }
 
     // ---- checkpoint / migration (paper §4.2, §6.3) ----
@@ -268,30 +361,35 @@ impl HetGpu {
         dev.pause.store(false, Ordering::SeqCst);
         let paused = self.with_stream(stream, |s| s.take_paused())?;
         // Collect global memory: every allocation resident on the device.
+        // The exclusive gate keeps concurrent launches of *other* streams
+        // on this device out of the capture window.
         let allocs = self.inner.memory.allocations_on(device);
         let mut mem_blobs = Vec::with_capacity(allocs.len());
         {
-            let mem = dev.mem.lock().unwrap();
+            let _gate = dev.exec.write().unwrap();
             for (addr, size) in allocs {
                 let mut bytes = vec![0u8; size as usize];
-                mem.read_bytes_into(addr, &mut bytes)?;
+                dev.mem.read_bytes_into(addr, &mut bytes)?;
                 mem_blobs.push((addr, bytes));
             }
         }
-        Ok(Snapshot { src_device: device, paused, allocations: mem_blobs })
+        // Launches of *other* streams overlapping on this device may also
+        // have observed the pause flag and halted; resume them in place so
+        // a checkpoint of one stream never silently strands its neighbors.
+        self.graph.resume_collateral(device, stream.0);
+        Ok(Snapshot { src_device: device, paused, allocations: mem_blobs, shard: None })
     }
 
     /// Restore a snapshot onto `dst_device` and resume the stream there.
     pub fn restore(&self, stream: StreamHandle, snap: Snapshot, dst_device: usize) -> Result<()> {
         let dst = self.inner.device(dst_device)?;
         {
-            let mem = dst.mem.lock().unwrap();
+            let _gate = dst.exec.write().unwrap();
             for (addr, bytes) in &snap.allocations {
-                mem.write_bytes(*addr, bytes)?;
+                dst.mem.write_bytes(*addr, bytes)?;
             }
         }
         self.inner.memory.move_residency(snap.src_device, dst_device);
-        self.stream_devices.lock().unwrap()[stream.0] = dst_device;
         self.with_stream(stream, |s| s.resume(dst_device, snap.paused))
     }
 
@@ -324,5 +422,14 @@ impl HetGpu {
                 self.inner.device(dst_device)?.kind,
             ),
         })
+    }
+}
+
+impl Drop for HetGpu {
+    fn drop(&mut self) {
+        self.graph.shutdown();
+        for h in self.executors.drain(..) {
+            let _ = h.join();
+        }
     }
 }

@@ -11,7 +11,7 @@ use crate::sim::mem::DeviceMemory;
 use crate::sim::simt::SimtSim;
 use crate::sim::tensix::TensixSim;
 use std::sync::atomic::AtomicBool;
-use std::sync::Mutex;
+use std::sync::RwLock;
 
 /// The GPU vendors hetGPU supports (paper abstract: NVIDIA, AMD, Intel,
 /// Tenstorrent). `AmdWave64Sim` is the GCN-era wave64 configuration used
@@ -93,9 +93,16 @@ pub struct Device {
     pub id: usize,
     pub kind: DeviceKind,
     pub engine: Engine,
-    /// Device DRAM. A launch holds the lock for its whole execution;
-    /// host copies and checkpoint collection synchronize on it.
-    pub mem: Mutex<DeviceMemory>,
+    /// Device DRAM. Interior-mutable (word-atomic arena), so launches and
+    /// host copies target it concurrently — the event-graph executor
+    /// overlaps independent launches on the same device. Multi-byte
+    /// concurrent accesses to the *same* region are the application's race,
+    /// exactly as on real hardware.
+    pub mem: DeviceMemory,
+    /// Execution gate: launches and streamed copies take it shared;
+    /// whole-device snapshot capture/restore takes it exclusive so a
+    /// checkpoint never reads a half-running kernel's memory image.
+    pub exec: RwLock<()>,
     /// Cooperative pause flag (paper §4.2): checked by compiled-in
     /// checkpoint guards and at block-dispatch boundaries.
     pub pause: AtomicBool,
@@ -118,7 +125,8 @@ impl Device {
             id,
             kind,
             engine,
-            mem: Mutex::new(DeviceMemory::new(DEVICE_MEM_BYTES, kind.name())),
+            mem: DeviceMemory::new(DEVICE_MEM_BYTES, kind.name()),
+            exec: RwLock::new(()),
             pause: AtomicBool::new(false),
         }
     }
@@ -138,7 +146,8 @@ impl Device {
             id,
             kind: DeviceKind::TenstorrentSim,
             engine: Engine::Tensix(TensixSim::new(cfg)),
-            mem: Mutex::new(DeviceMemory::new(DEVICE_MEM_BYTES, "tenstorrent-sim")),
+            mem: DeviceMemory::new(DEVICE_MEM_BYTES, "tenstorrent-sim"),
+            exec: RwLock::new(()),
             pause: AtomicBool::new(false),
         }
     }
@@ -161,7 +170,7 @@ mod tests {
     fn device_construction() {
         let d = Device::new(0, DeviceKind::NvidiaSim);
         assert_eq!(d.kind.name(), "nvidia-sim");
-        assert_eq!(d.mem.lock().unwrap().capacity(), DEVICE_MEM_BYTES);
+        assert_eq!(d.mem.capacity(), DEVICE_MEM_BYTES);
         assert!(d.kind.is_simt());
         let t = Device::new(1, DeviceKind::TenstorrentSim);
         assert!(!t.kind.is_simt());

@@ -1,0 +1,685 @@
+//! Event-graph stream executor — the runtime's scheduling seam.
+//!
+//! The previous runtime gave every stream its own OS thread that executed
+//! launches *blocking*, so the PR-1 dispatch pool sat idle between kernels
+//! and two streams could only overlap by accident of having separate
+//! threads. This module replaces that with the paper's §4.3 command-graph
+//! model: a [`crate::runtime::stream::Stream`] is a thin handle that
+//! *records* commands — launch, copy, cross-stream waits (markers), resume
+//! — as nodes of a per-runtime DAG, and a small pool of executor threads
+//! drains **ready** nodes onto the shared block-dispatch pool.
+//!
+//! Graph shape and the invariants it preserves:
+//!
+//! * **Per-stream FIFO.** Every node has an implicit dependency on its
+//!   stream predecessor (streams are queues in the graph); a node is ready
+//!   only when it is at the front of its stream. Cross-stream edges are
+//!   explicit `deps` (recorded by wait-event-style marker nodes); a node
+//!   additionally waits for those to reach a terminal state.
+//! * **Halt semantics.** When a launch returns `Paused` (cooperative
+//!   checkpoint), the stream *halts*: its queued nodes stay pending — the
+//!   paper's "deferred until migration completes" — and only a `Resume`
+//!   node (pushed to the queue front by [`EventGraph::resume`]) may run.
+//!   Resume re-enters the kernel from its captured per-block state,
+//!   possibly on a different device, then the deferred queue drains in the
+//!   original FIFO order.
+//! * **Sticky errors.** A failing node poisons its stream: nodes already
+//!   queued behind it (and any recorded later) fail terminally — they can
+//!   never execute, and leaving them queued would hang cross-stream
+//!   waiters — while every `synchronize` keeps reporting the first error,
+//!   like the old per-stream worker. Other streams are unaffected unless
+//!   they wait on a failed event, which poisons them in turn.
+//! * **Device overlap.** Executors run `RuntimeInner::run_launch`, which
+//!   takes the device gate *shared* — independent launches overlap both
+//!   across devices and on one device, sharing host cores through the
+//!   dispatch-pool budget (`sim::dispatch::budget`).
+//!
+//! Sharded launches (the multi-device coordinator) enter here too: a launch
+//! node may carry a [`ShardRange`], which the executor lowers to per-block
+//! resume directives (`Skip` outside the range) — the same mechanism
+//! migration resume uses, so a shard can itself pause and be rebalanced.
+
+use crate::coordinator::shard::ShardRange;
+use crate::error::{HetError, Result};
+use crate::runtime::launch::LaunchSpec;
+use crate::runtime::memory::GpuPtr;
+use crate::runtime::stream::{PausedKernel, StreamStats};
+use crate::runtime::RuntimeInner;
+use crate::sim::snapshot::{BlockResume, CostReport, LaunchOutcome};
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Handle to a recorded command node (CUDA-event-like).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct EventId(pub u64);
+
+/// Lifecycle of a graph node, observable via [`EventGraph::query`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum EventStatus {
+    /// Recorded, not yet picked by an executor (possibly deferred behind a
+    /// halt or unsatisfied dependencies).
+    Queued,
+    Running,
+    /// Executed. A launch that *paused* at a checkpoint is still
+    /// `Completed` — the pause is stream state, not a node failure.
+    Completed,
+    Failed(String),
+}
+
+impl EventStatus {
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, EventStatus::Completed | EventStatus::Failed(_))
+    }
+}
+
+/// What a recorded command does when an executor picks it.
+pub(crate) enum NodeKind {
+    /// Kernel launch; `shard` restricts execution to a block range.
+    Launch { spec: LaunchSpec, shard: Option<ShardRange> },
+    /// Re-enter a paused kernel from its captured per-block state.
+    Resume { paused: Box<PausedKernel> },
+    /// Asynchronous host→device copy into unified memory.
+    CopyH2D { dst: GpuPtr, data: Vec<u8> },
+    /// No-op synchronization point (carries cross-stream `deps`).
+    Marker,
+}
+
+struct Node {
+    id: u64,
+    kind: NodeKind,
+    /// Explicit cross-stream dependencies (event ids); the implicit
+    /// same-stream predecessor edge is the queue order itself.
+    deps: Vec<u64>,
+}
+
+struct StreamState {
+    device: usize,
+    queue: VecDeque<Node>,
+    /// An executor is currently running this stream's front node.
+    running: bool,
+    /// Halted at a checkpoint; queued nodes are deferred until `Resume`.
+    halted: bool,
+    sticky: Option<String>,
+    paused: Option<PausedKernel>,
+    stats: StreamStats,
+}
+
+struct GraphInner {
+    streams: Vec<StreamState>,
+    /// Status of every node ever recorded (event queries stay valid after
+    /// completion; bounded by commands recorded in the context's lifetime).
+    status: HashMap<u64, EventStatus>,
+    shutdown: bool,
+}
+
+/// The per-runtime command DAG plus its executor pool's shared state.
+pub struct EventGraph {
+    rt: Arc<RuntimeInner>,
+    inner: Mutex<GraphInner>,
+    /// Single condvar for both edges: executors wait for ready nodes,
+    /// `synchronize` waits for completions; every state change notifies all.
+    cv: Condvar,
+    next_id: AtomicU64,
+}
+
+impl EventGraph {
+    pub fn new(rt: Arc<RuntimeInner>) -> Arc<EventGraph> {
+        Arc::new(EventGraph {
+            rt,
+            inner: Mutex::new(GraphInner {
+                streams: Vec::new(),
+                status: HashMap::new(),
+                shutdown: false,
+            }),
+            cv: Condvar::new(),
+            next_id: AtomicU64::new(1),
+        })
+    }
+
+    /// Start `n` executor threads draining `graph`.
+    pub fn spawn_executors(graph: &Arc<EventGraph>, n: usize) -> Vec<JoinHandle<()>> {
+        (0..n.max(1))
+            .map(|i| {
+                let g = Arc::clone(graph);
+                std::thread::Builder::new()
+                    .name(format!("hetgpu-exec-{i}"))
+                    .spawn(move || executor_loop(&g))
+                    .expect("spawn graph executor")
+            })
+            .collect()
+    }
+
+    /// Stop the executor pool (queued nodes are abandoned; contexts
+    /// synchronize before dropping if they care).
+    pub fn shutdown(&self) {
+        self.inner.lock().unwrap().shutdown = true;
+        self.cv.notify_all();
+    }
+
+    /// Register a new stream bound to `device`; returns its id.
+    pub fn add_stream(&self, device: usize) -> usize {
+        let mut g = self.inner.lock().unwrap();
+        g.streams.push(StreamState {
+            device,
+            queue: VecDeque::new(),
+            running: false,
+            halted: false,
+            sticky: None,
+            paused: None,
+            stats: StreamStats::default(),
+        });
+        g.streams.len() - 1
+    }
+
+    /// Record a command node at the back of `stream`'s queue.
+    pub(crate) fn enqueue(
+        &self,
+        stream: usize,
+        kind: NodeKind,
+        deps: &[EventId],
+    ) -> Result<EventId> {
+        let mut g = self.inner.lock().unwrap();
+        if g.shutdown {
+            return Err(HetError::runtime("runtime is shutting down"));
+        }
+        let st =
+            g.streams.get(stream).ok_or_else(|| HetError::runtime("bad stream handle"))?;
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        if st.sticky.is_some() {
+            // A poisoned stream never runs another node; record the event
+            // as terminally failed (rather than queued-forever) so
+            // cross-stream waiters observe a terminal state. The sticky
+            // error still surfaces at this stream's synchronize.
+            g.status.insert(id, EventStatus::Failed("stream poisoned by earlier error".into()));
+        } else {
+            g.status.insert(id, EventStatus::Queued);
+            g.streams[stream]
+                .queue
+                .push_back(Node { id, kind, deps: deps.iter().map(|e| e.0).collect() });
+        }
+        drop(g);
+        self.cv.notify_all();
+        Ok(EventId(id))
+    }
+
+    /// Status of a recorded event.
+    pub fn query(&self, ev: EventId) -> Result<EventStatus> {
+        self.inner
+            .lock()
+            .unwrap()
+            .status
+            .get(&ev.0)
+            .cloned()
+            .ok_or_else(|| HetError::runtime(format!("unknown event {}", ev.0)))
+    }
+
+    pub fn stream_device(&self, stream: usize) -> Result<usize> {
+        let g = self.inner.lock().unwrap();
+        g.streams
+            .get(stream)
+            .map(|s| s.device)
+            .ok_or_else(|| HetError::runtime("bad stream handle"))
+    }
+
+    pub fn stats(&self, stream: usize) -> Result<StreamStats> {
+        let g = self.inner.lock().unwrap();
+        g.streams
+            .get(stream)
+            .map(|s| s.stats.clone())
+            .ok_or_else(|| HetError::runtime("bad stream handle"))
+    }
+
+    /// Wait until the stream can make no further progress: its queue is
+    /// drained, or blocked by a halt / sticky error. Reports the sticky
+    /// error if any; leaves deferred nodes queued (they run after resume).
+    pub fn synchronize(&self, stream: usize) -> Result<()> {
+        self.wait_idle(stream).map(|_halted| ())
+    }
+
+    /// Like [`EventGraph::synchronize`], additionally reporting whether the
+    /// stream is halted at a checkpoint (the migration orchestrator asks).
+    pub fn quiesce(&self, stream: usize) -> Result<bool> {
+        self.wait_idle(stream)
+    }
+
+    fn wait_idle(&self, stream: usize) -> Result<bool> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            let st = g
+                .streams
+                .get(stream)
+                .ok_or_else(|| HetError::runtime("bad stream handle"))?;
+            // A halted stream still makes progress through a front `Resume`
+            // node (the re-entry the orchestrator just recorded), so only a
+            // halt with ordinary deferred work counts as blocked.
+            let front_resume = st
+                .queue
+                .front()
+                .map(|n| matches!(n.kind, NodeKind::Resume { .. }))
+                .unwrap_or(false);
+            let blocked = st.sticky.is_some() || (st.halted && !front_resume);
+            if !st.running && (st.queue.is_empty() || blocked) {
+                return match &st.sticky {
+                    Some(e) => Err(HetError::runtime(format!("stream {stream}: {e}"))),
+                    None => Ok(st.halted),
+                };
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    /// Take the paused kernel (leaves the stream halted until resume).
+    pub fn take_paused(&self, stream: usize) -> Result<Option<PausedKernel>> {
+        let mut g = self.inner.lock().unwrap();
+        g.streams
+            .get_mut(stream)
+            .map(|s| s.paused.take())
+            .ok_or_else(|| HetError::runtime("bad stream handle"))
+    }
+
+    /// Rebind the stream to `device` and re-enter the restored kernel (or
+    /// just un-halt when `paused` is `None`). The target device is
+    /// validated *before* anything is acknowledged — an invalid id errors
+    /// here, at the resume call, never as a later sticky stream error. The
+    /// re-entry itself runs asynchronously on the executor pool (the
+    /// chained H100→AMD→Tenstorrent scenario of §6.3 triggers the next
+    /// checkpoint while it runs); its failures become sticky errors.
+    pub fn resume(
+        &self,
+        stream: usize,
+        device: usize,
+        paused: Option<PausedKernel>,
+    ) -> Result<()> {
+        self.rt.device(device)?; // validate before acking
+        {
+            let mut guard = self.inner.lock().unwrap();
+            let inner = &mut *guard;
+            let st = inner
+                .streams
+                .get_mut(stream)
+                .ok_or_else(|| HetError::runtime("bad stream handle"))?;
+            st.device = device;
+            match paused {
+                Some(pk) => {
+                    // Jump the deferred queue: re-entry precedes every
+                    // command deferred while the stream was halted.
+                    let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+                    st.queue.push_front(Node {
+                        id,
+                        kind: NodeKind::Resume { paused: Box::new(pk) },
+                        deps: Vec::new(),
+                    });
+                    inner.status.insert(id, EventStatus::Queued);
+                }
+                None => st.halted = false,
+            }
+        }
+        self.cv.notify_all();
+        Ok(())
+    }
+
+    /// Resume-in-place every stream on `device` (except `exclude`) that
+    /// was collaterally halted by the device-wide pause flag. The
+    /// checkpoint protocol pauses a whole device, and with launches
+    /// overlapping on one device an unrelated stream's kernel can observe
+    /// the flag and halt too; nothing would ever resume it, and its
+    /// deferred work would silently never run. Callers invoke this after
+    /// the capture window (the exclusive device gate has been released, so
+    /// every launch that observed the flag has already halted); captured
+    /// kernels re-enter on their own device and deferred queues drain.
+    pub fn resume_collateral(&self, device: usize, exclude: usize) {
+        {
+            let mut guard = self.inner.lock().unwrap();
+            // A stream whose launch just returned Paused may not have had
+            // its halt folded into the graph yet (the executor publishes
+            // after releasing the device gate) — wait for every running
+            // node on this device to settle so no collateral halt is
+            // missed.
+            loop {
+                let busy = guard
+                    .streams
+                    .iter()
+                    .enumerate()
+                    .any(|(si, st)| si != exclude && st.device == device && st.running);
+                if !busy || guard.shutdown {
+                    break;
+                }
+                guard = self.cv.wait(guard).unwrap();
+            }
+            let inner = &mut *guard;
+            for (si, st) in inner.streams.iter_mut().enumerate() {
+                if si == exclude || st.device != device || !st.halted {
+                    continue;
+                }
+                match st.paused.take() {
+                    Some(pk) => {
+                        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+                        st.queue.push_front(Node {
+                            id,
+                            kind: NodeKind::Resume { paused: Box::new(pk) },
+                            deps: Vec::new(),
+                        });
+                        inner.status.insert(id, EventStatus::Queued);
+                    }
+                    // Halted with its capture already harvested elsewhere:
+                    // nothing to re-enter, just unblock the queue.
+                    None => st.halted = false,
+                }
+            }
+        }
+        self.cv.notify_all();
+    }
+}
+
+/// Outcome of executing one node, before it is folded back into the graph.
+enum Exec {
+    Launch {
+        cost: CostReport,
+        wall_us: f64,
+        workers: usize,
+        completed: bool,
+        paused: Option<PausedKernel>,
+    },
+    Plain,
+}
+
+/// Pick a ready node: front of a non-running, non-poisoned stream, with
+/// all explicit deps terminal; a halted stream only offers `Resume`. The
+/// returned flag is true when a dependency *failed* — the caller must
+/// fail the node without executing it (a cross-stream edge from a failed
+/// producer must poison the consumer, not silently satisfy it).
+fn take_ready(g: &mut GraphInner) -> Option<(usize, usize, Node, bool)> {
+    for si in 0..g.streams.len() {
+        let st = &g.streams[si];
+        if st.running || st.sticky.is_some() || st.queue.is_empty() {
+            continue;
+        }
+        let front = st.queue.front().unwrap();
+        if st.halted && !matches!(front.kind, NodeKind::Resume { .. }) {
+            continue;
+        }
+        let mut dep_failed = false;
+        let mut deps_terminal = true;
+        for d in &front.deps {
+            // A dep missing from the status map cannot happen via the
+            // public API (ids are handed out by enqueue); treat it as
+            // satisfied.
+            match g.status.get(d) {
+                Some(EventStatus::Failed(_)) => dep_failed = true,
+                Some(s) if !s.is_terminal() => deps_terminal = false,
+                _ => {}
+            }
+        }
+        if !deps_terminal {
+            continue;
+        }
+        let st = &mut g.streams[si];
+        let device = st.device;
+        let node = st.queue.pop_front().unwrap();
+        st.running = true;
+        g.status.insert(node.id, EventStatus::Running);
+        return Some((si, device, node, dep_failed));
+    }
+    None
+}
+
+fn executor_loop(g: &EventGraph) {
+    loop {
+        let (si, device, node, dep_failed) = {
+            let mut inner = g.inner.lock().unwrap();
+            loop {
+                if inner.shutdown {
+                    return;
+                }
+                if let Some(t) = take_ready(&mut inner) {
+                    break t;
+                }
+                inner = g.cv.wait(inner).unwrap();
+            }
+        };
+
+        let result = if dep_failed {
+            Err(HetError::runtime("awaited event failed"))
+        } else {
+            execute_node(&g.rt, device, &node.kind)
+        };
+
+        {
+            let mut guard = g.inner.lock().unwrap();
+            // Split the guard once so stream and status borrows are
+            // disjoint field projections.
+            let inner = &mut *guard;
+            let st = &mut inner.streams[si];
+            st.running = false;
+            match result {
+                Ok(Exec::Launch { cost, wall_us, workers, completed, paused }) => {
+                    st.stats.record_launch(device, workers, wall_us, &cost, completed);
+                    if let Some(pk) = paused {
+                        st.paused = Some(pk);
+                        st.halted = true;
+                    } else if matches!(node.kind, NodeKind::Resume { .. }) {
+                        st.halted = false;
+                    }
+                    inner.status.insert(node.id, EventStatus::Completed);
+                }
+                Ok(Exec::Plain) => {
+                    inner.status.insert(node.id, EventStatus::Completed);
+                }
+                Err(e) => {
+                    let msg = e.to_string();
+                    st.sticky.get_or_insert(msg.clone());
+                    // Everything deferred behind the poison will never
+                    // run; fail those nodes now so cross-stream waiters
+                    // (wait_event deps) reach a terminal state instead of
+                    // hanging on events that can no longer happen.
+                    let stranded: Vec<u64> = st.queue.iter().map(|n| n.id).collect();
+                    st.queue.clear();
+                    inner.status.insert(node.id, EventStatus::Failed(msg));
+                    for id in stranded {
+                        inner.status.insert(
+                            id,
+                            EventStatus::Failed("stream poisoned by earlier error".into()),
+                        );
+                    }
+                }
+            }
+        }
+        g.cv.notify_all();
+    }
+}
+
+/// Lower a shard range to per-block resume directives: blocks outside the
+/// range are `Skip`ped (committed as `Done` without running).
+pub(crate) fn shard_directives(grid_size: u32, range: ShardRange) -> Vec<BlockResume> {
+    (0..grid_size)
+        .map(|b| if range.contains(b) { BlockResume::FromEntry } else { BlockResume::Skip })
+        .collect()
+}
+
+fn execute_node(rt: &RuntimeInner, device: usize, kind: &NodeKind) -> Result<Exec> {
+    match kind {
+        NodeKind::Launch { spec, shard } => {
+            let dirs = match shard {
+                Some(r) => {
+                    let (grid_size, _) = spec.dims.validate()?;
+                    if r.is_empty() || r.hi > grid_size {
+                        return Err(HetError::runtime(format!(
+                            "shard range {}..{} outside grid of {grid_size} blocks",
+                            r.lo, r.hi
+                        )));
+                    }
+                    Some(shard_directives(grid_size, *r))
+                }
+                None => None,
+            };
+            run_timed(rt, device, spec, dirs.as_deref())
+        }
+        NodeKind::Resume { paused } => {
+            let dirs = paused.resume_directives();
+            run_timed(rt, device, &paused.spec, Some(&dirs))
+        }
+        NodeKind::CopyH2D { dst, data } => {
+            let (base, size, dev_id) = rt.memory.lookup(*dst)?;
+            if dst.0 + data.len() as u64 > base + size {
+                return Err(HetError::runtime("h2d copy out of bounds"));
+            }
+            let dev = rt.device(dev_id)?;
+            let _gate = dev.exec.read().unwrap();
+            dev.mem.write_bytes(dst.0, data)?;
+            Ok(Exec::Plain)
+        }
+        NodeKind::Marker => Ok(Exec::Plain),
+    }
+}
+
+fn run_timed(
+    rt: &RuntimeInner,
+    device: usize,
+    spec: &LaunchSpec,
+    resume: Option<&[BlockResume]>,
+) -> Result<Exec> {
+    let t0 = Instant::now();
+    let outcome = rt.run_launch(device, spec, resume)?;
+    let wall_us = t0.elapsed().as_secs_f64() * 1e6;
+    let workers = rt.device(device).map(|d| d.engine.workers()).unwrap_or(1);
+    let cost = *outcome.cost();
+    // Move the captured block states out (they can be every thread's
+    // registers plus shared memory — cloning them would sit directly in
+    // the checkpoint latency path).
+    let (completed, paused) = match outcome {
+        LaunchOutcome::Completed(_) => (true, None),
+        LaunchOutcome::Paused { grid, .. } => {
+            (false, Some(PausedKernel { spec: spec.clone(), blocks: grid.blocks }))
+        }
+    };
+    Ok(Exec::Launch { cost, wall_us, workers, completed, paused })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::api::HetGpu;
+    use crate::runtime::device::DeviceKind;
+    use crate::runtime::launch::Arg;
+    use crate::sim::simt::LaunchDims;
+
+    const BUMP_SRC: &str = r#"
+__global__ void bump(float* p) {
+    unsigned i = blockIdx.x * blockDim.x + threadIdx.x;
+    p[i] = p[i] + 1.0f;
+}
+"#;
+
+    #[test]
+    fn event_lifecycle_and_query() {
+        let ctx = HetGpu::with_devices(&[DeviceKind::NvidiaSim]).unwrap();
+        let m = ctx.compile_cuda(BUMP_SRC).unwrap();
+        let buf = ctx.malloc_on(256, 0).unwrap();
+        ctx.upload_f32(buf, &[0.0; 64]).unwrap();
+        let s = ctx.create_stream(0).unwrap();
+        let ev = ctx.launch(s, m, "bump", LaunchDims::d1(2, 32), &[Arg::Ptr(buf)]).unwrap();
+        ctx.synchronize(s).unwrap();
+        assert_eq!(ctx.event_query(ev).unwrap(), EventStatus::Completed);
+        assert!(ctx.event_query(EventId(u64::MAX)).is_err());
+    }
+
+    #[test]
+    fn sticky_error_defers_later_work_and_reports_at_sync() {
+        let ctx = HetGpu::with_devices(&[DeviceKind::NvidiaSim]).unwrap();
+        let m = ctx.compile_cuda(BUMP_SRC).unwrap();
+        let buf = ctx.malloc_on(256, 0).unwrap();
+        let s = ctx.create_stream(0).unwrap();
+        // Wrong arg count fails inside the executor -> sticky.
+        let bad = ctx.launch(s, m, "bump", LaunchDims::d1(2, 32), &[]).unwrap();
+        let after = ctx.launch(s, m, "bump", LaunchDims::d1(2, 32), &[Arg::Ptr(buf)]).unwrap();
+        assert!(ctx.synchronize(s).is_err());
+        assert!(matches!(ctx.event_query(bad).unwrap(), EventStatus::Failed(_)));
+        // The launch deferred behind the failure never ran — it fails
+        // terminally (so nothing can hang waiting on it) instead of
+        // staying queued forever.
+        assert!(matches!(ctx.event_query(after).unwrap(), EventStatus::Failed(_)));
+        // Sticky errors stay sticky, including for newly recorded work.
+        assert!(ctx.synchronize(s).is_err());
+        let late = ctx.launch(s, m, "bump", LaunchDims::d1(2, 32), &[Arg::Ptr(buf)]).unwrap();
+        assert!(matches!(ctx.event_query(late).unwrap(), EventStatus::Failed(_)));
+        assert!(ctx.synchronize(s).is_err());
+    }
+
+    #[test]
+    fn resume_rejects_invalid_device_before_ack() {
+        let ctx = HetGpu::with_devices(&[DeviceKind::NvidiaSim]).unwrap();
+        let s = ctx.create_stream(0).unwrap();
+        // Surfaces immediately, not as a later sticky stream error.
+        let err = ctx.graph().resume(s.0, 7, None).unwrap_err();
+        assert!(err.to_string().contains("no device 7"), "{err}");
+        ctx.synchronize(s).unwrap();
+    }
+
+    #[test]
+    fn cross_stream_marker_orders_work() {
+        let ctx = HetGpu::with_devices(&[DeviceKind::NvidiaSim]).unwrap();
+        let m = ctx
+            .compile_cuda(
+                r#"
+__global__ void produce(unsigned* p, unsigned iters) {
+    unsigned acc = 0u;
+    for (unsigned k = 0u; k < iters; k++) { acc = acc + 1u; }
+    if (threadIdx.x == 0u && blockIdx.x == 0u) p[1] = acc;
+}
+__global__ void consume(unsigned* p) {
+    if (threadIdx.x == 0u && blockIdx.x == 0u) p[2] = p[1] * 10u;
+}
+"#,
+            )
+            .unwrap();
+        // Stream b waits on a's (slow) producer event, so the consumer must
+        // observe p[1] — without the edge it would read 0.
+        let buf = ctx.malloc_on(256, 0).unwrap();
+        ctx.upload_u32(buf, &[0; 16]).unwrap();
+        let a = ctx.create_stream(0).unwrap();
+        let b = ctx.create_stream(0).unwrap();
+        let ev = ctx
+            .launch(a, m, "produce", LaunchDims::d1(1, 32), &[Arg::Ptr(buf), Arg::U32(50_000)])
+            .unwrap();
+        ctx.wait_event(b, ev).unwrap();
+        ctx.launch(b, m, "consume", LaunchDims::d1(1, 32), &[Arg::Ptr(buf)]).unwrap();
+        ctx.synchronize(b).unwrap();
+        ctx.synchronize(a).unwrap();
+        let got = ctx.download_u32(buf, 3).unwrap();
+        assert_eq!(got[1], 50_000);
+        assert_eq!(got[2], 500_000, "consumer ran before the awaited producer");
+    }
+
+    #[test]
+    fn failed_dependency_poisons_waiting_stream() {
+        let ctx = HetGpu::with_devices(&[DeviceKind::NvidiaSim]).unwrap();
+        let m = ctx.compile_cuda(BUMP_SRC).unwrap();
+        let buf = ctx.malloc_on(256, 0).unwrap();
+        let a = ctx.create_stream(0).unwrap();
+        let b = ctx.create_stream(0).unwrap();
+        // Wrong arg count: the producer launch fails in the executor.
+        let bad = ctx.launch(a, m, "bump", LaunchDims::d1(2, 32), &[]).unwrap();
+        ctx.wait_event(b, bad).unwrap();
+        let after = ctx.launch(b, m, "bump", LaunchDims::d1(2, 32), &[Arg::Ptr(buf)]).unwrap();
+        // The cross-stream edge must carry the failure, not satisfy it.
+        assert!(ctx.synchronize(b).is_err());
+        assert!(matches!(ctx.event_query(after).unwrap(), EventStatus::Failed(_)));
+        assert!(ctx.synchronize(a).is_err());
+    }
+
+    #[test]
+    fn async_h2d_copy_is_fifo_with_launches() {
+        let ctx = HetGpu::with_devices(&[DeviceKind::NvidiaSim]).unwrap();
+        let m = ctx.compile_cuda(BUMP_SRC).unwrap();
+        let buf = ctx.malloc_on(256, 0).unwrap();
+        let s = ctx.create_stream(0).unwrap();
+        let init: Vec<u8> = [5.0f32; 64].iter().flat_map(|v| v.to_le_bytes()).collect();
+        ctx.memcpy_h2d_async(s, buf, &init).unwrap();
+        ctx.launch(s, m, "bump", LaunchDims::d1(2, 32), &[Arg::Ptr(buf)]).unwrap();
+        ctx.synchronize(s).unwrap();
+        assert!(ctx.download_f32(buf, 64).unwrap().iter().all(|v| *v == 6.0));
+    }
+}

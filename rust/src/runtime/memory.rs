@@ -142,6 +142,16 @@ impl MemoryManager {
         v
     }
 
+    /// Every live allocation → (base, size, resident device), sorted by
+    /// address (the coordinator's broadcast/merge set).
+    pub fn all_allocations(&self) -> Vec<(u64, u64, usize)> {
+        let g = self.inner.lock().unwrap();
+        let mut v: Vec<(u64, u64, usize)> =
+            g.allocs.values().map(|a| (a.addr, a.size, a.device)).collect();
+        v.sort_unstable();
+        v
+    }
+
     /// Mark every allocation on `from` as now resident on `to` (after the
     /// migration copy completed).
     pub fn move_residency(&self, from: usize, to: usize) {

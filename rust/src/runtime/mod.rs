@@ -1,9 +1,11 @@
 //! The hetGPU runtime (paper §4.2): device registry, unified memory,
-//! JIT translation cache, streams, kernel launch, and the execution entry
-//! point shared by fresh launches and migration resumes.
+//! JIT translation cache, event-graph streams ([`events`]), kernel launch,
+//! and the execution entry point shared by fresh launches, coordinator
+//! shards, and migration resumes.
 
 pub mod api;
 pub mod device;
+pub mod events;
 pub mod jit;
 pub mod launch;
 pub mod memory;
@@ -75,10 +77,13 @@ impl RuntimeInner {
         let prog = self.jit.get_or_translate(key, kernel, simt_cfg.as_ref())?;
         drop(modules);
 
+        // Launches take the device gate *shared*: independent launches
+        // (different streams, coordinator shards) overlap on one device;
+        // only whole-device snapshot capture/restore excludes them.
+        let _gate = dev.exec.read().unwrap();
         match (&dev.engine, prog.as_ref()) {
             (Engine::Simt(sim), crate::backends::DeviceProgram::Simt(p)) => {
-                let mut mem = dev.mem.lock().unwrap();
-                sim.run_grid(p, spec.dims, &values, &mut mem, &dev.pause, resume)
+                sim.run_grid(p, spec.dims, &values, &dev.mem, &dev.pause, resume)
             }
             (Engine::Tensix(sim), crate::backends::DeviceProgram::Tensix(p)) => {
                 // Multi-core shared memory needs a global heap region.
@@ -88,18 +93,15 @@ impl RuntimeInner {
                 } else {
                     None
                 };
-                let out = {
-                    let mut mem = dev.mem.lock().unwrap();
-                    sim.run_grid(
-                        p,
-                        spec.dims,
-                        &values,
-                        &mut mem,
-                        &dev.pause,
-                        resume,
-                        heap.map(|h| h.0),
-                    )
-                };
+                let out = sim.run_grid(
+                    p,
+                    spec.dims,
+                    &values,
+                    &dev.mem,
+                    &dev.pause,
+                    resume,
+                    heap.map(|h| h.0),
+                );
                 if let Some(h) = heap {
                     // Shared contents are captured in block snapshots, so
                     // the heap region can be released either way.

@@ -1,22 +1,22 @@
-//! Streams: ordered asynchronous command queues, one worker thread each
-//! (paper §4.3 *Kernel and Stream Management*).
+//! Streams: ordered asynchronous command queues (paper §4.3 *Kernel and
+//! Stream Management*).
 //!
-//! A stream executes launches in order on its bound device. When a launch
-//! is paused by the cooperative checkpoint protocol, the stream **halts**:
-//! subsequent launches are deferred "until migration completes" (paper
-//! §4.3), and the harvested state waits for the orchestrator. A `Resume`
-//! command (possibly naming a different device) re-enters the kernel from
-//! its snapshot and then drains the deferred queue.
+//! A [`Stream`] is a **thin recording handle**: every operation appends a
+//! node to the runtime's event graph ([`crate::runtime::events`]) and
+//! returns immediately; a shared executor pool drains ready nodes onto the
+//! block-dispatch pool, so independent streams overlap while each stream's
+//! own commands retain FIFO order. When a launch is paused by the
+//! cooperative checkpoint protocol the stream **halts**: subsequent
+//! commands are deferred "until migration completes" (paper §4.3) and the
+//! harvested state waits for the orchestrator; `resume` (possibly naming a
+//! different device) re-enters the kernel from its snapshot, then the
+//! deferred queue drains in order.
 
-use crate::error::{HetError, Result};
+use crate::error::Result;
+use crate::runtime::events::{EventGraph, EventId, NodeKind};
 use crate::runtime::launch::LaunchSpec;
-use crate::runtime::RuntimeInner;
-use crate::sim::snapshot::{BlockResume, BlockState, CostReport, LaunchOutcome};
-use std::collections::VecDeque;
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
-use std::thread::JoinHandle;
-use std::time::Instant;
+use crate::sim::snapshot::{BlockResume, BlockState, CostReport};
+use std::sync::Arc;
 
 /// A kernel frozen mid-execution by a checkpoint.
 #[derive(Debug, Clone)]
@@ -40,6 +40,20 @@ impl PausedKernel {
     }
 }
 
+/// Per-device slice of a stream's accumulated statistics. A stream that
+/// migrated (or whose shards ran on several devices within one
+/// synchronize window) reports one entry per device it executed on.
+#[derive(Debug, Clone, Default)]
+pub struct PerDeviceStats {
+    pub device: usize,
+    pub launches: u64,
+    pub completed: u64,
+    /// Dispatch worker threads of that device's engine.
+    pub sim_workers: usize,
+    pub cost: CostReport,
+    pub wall_micros: f64,
+}
+
 /// Accumulated per-stream statistics.
 #[derive(Debug, Clone, Default)]
 pub struct StreamStats {
@@ -47,199 +61,125 @@ pub struct StreamStats {
     pub completed: u64,
     pub cost: CostReport,
     pub wall_micros: f64,
-    /// Dispatch worker threads of the device the last launch ran on
-    /// (1 = sequential block execution).
+    /// Dispatch worker threads of the device the most recent launch ran on
+    /// (1 = sequential block execution). See `per_device` for the full
+    /// breakdown when launches spread over several devices.
     pub sim_workers: usize,
+    /// Per-device breakdown, ordered by first use.
+    pub per_device: Vec<PerDeviceStats>,
 }
 
-pub enum Cmd {
-    Launch(LaunchSpec),
-    /// Fence: acknowledged once all prior commands were processed;
-    /// returns (sticky error, halted?).
-    Barrier(Sender<(Option<String>, bool)>),
-    /// Hand the paused kernel to the orchestrator (leaves the stream
-    /// halted until `Resume`).
-    TakePaused(Sender<Option<PausedKernel>>),
-    /// Re-enter a paused kernel (possibly on a new device), or just
-    /// un-halt if `paused` is `None`.
-    Resume { device: usize, paused: Option<Box<PausedKernel>>, ack: Sender<Result<()>> },
-    Shutdown,
+impl StreamStats {
+    /// Fold one executed launch into the totals and its device's slice.
+    pub(crate) fn record_launch(
+        &mut self,
+        device: usize,
+        workers: usize,
+        wall_us: f64,
+        cost: &CostReport,
+        completed: bool,
+    ) {
+        self.launches += 1;
+        self.wall_micros += wall_us;
+        self.sim_workers = workers;
+        self.cost.merge(cost);
+        if completed {
+            self.completed += 1;
+        }
+        let idx = match self.per_device.iter().position(|d| d.device == device) {
+            Some(i) => i,
+            None => {
+                self.per_device.push(PerDeviceStats { device, ..Default::default() });
+                self.per_device.len() - 1
+            }
+        };
+        let slot = &mut self.per_device[idx];
+        slot.launches += 1;
+        slot.wall_micros += wall_us;
+        slot.sim_workers = workers;
+        slot.cost.merge(cost);
+        if completed {
+            slot.completed += 1;
+        }
+    }
 }
 
-/// Host-side handle to a stream.
+/// Host-side handle to a stream: an id plus the graph it records into.
+/// Cheap to clone — all state lives in the graph.
+#[derive(Clone)]
 pub struct Stream {
     pub id: usize,
-    tx: Sender<Cmd>,
-    pub stats: Arc<Mutex<StreamStats>>,
-    handle: Option<JoinHandle<()>>,
+    graph: Arc<EventGraph>,
 }
 
 impl Stream {
-    pub fn spawn(id: usize, device: usize, inner: Arc<RuntimeInner>) -> Stream {
-        let (tx, rx) = channel();
-        let stats = Arc::new(Mutex::new(StreamStats::default()));
-        let stats2 = stats.clone();
-        let handle = std::thread::Builder::new()
-            .name(format!("hetgpu-stream-{id}"))
-            .spawn(move || worker(device, inner, rx, stats2))
-            .expect("spawn stream worker");
-        Stream { id, tx, stats, handle: Some(handle) }
+    pub(crate) fn new(id: usize, graph: Arc<EventGraph>) -> Stream {
+        Stream { id, graph }
     }
 
-    pub fn send(&self, cmd: Cmd) -> Result<()> {
-        self.tx.send(cmd).map_err(|_| HetError::runtime("stream worker died"))
+    /// Record a kernel launch; returns its event.
+    pub fn launch(&self, spec: LaunchSpec) -> Result<EventId> {
+        self.graph.enqueue(self.id, NodeKind::Launch { spec, shard: None }, &[])
     }
 
-    /// Wait for all queued work; surfaces the sticky error if any.
+    pub(crate) fn enqueue(&self, kind: NodeKind, deps: &[EventId]) -> Result<EventId> {
+        self.graph.enqueue(self.id, kind, deps)
+    }
+
+    /// Wait for all runnable queued work; surfaces the sticky error if any.
     pub fn synchronize(&self) -> Result<()> {
-        let (ack, rx) = channel();
-        self.send(Cmd::Barrier(ack))?;
-        let (err, _halted) =
-            rx.recv().map_err(|_| HetError::runtime("stream worker died"))?;
-        match err {
-            Some(e) => Err(HetError::runtime(format!("stream {}: {e}", self.id))),
-            None => Ok(()),
-        }
+        self.graph.synchronize(self.id)
     }
 
     /// Wait for the queue and report whether the stream is halted at a
     /// checkpoint (used by the migration orchestrator).
     pub fn quiesce(&self) -> Result<bool> {
-        let (ack, rx) = channel();
-        self.send(Cmd::Barrier(ack))?;
-        let (err, halted) =
-            rx.recv().map_err(|_| HetError::runtime("stream worker died"))?;
-        if let Some(e) = err {
-            return Err(HetError::runtime(format!("stream {}: {e}", self.id)));
-        }
-        Ok(halted)
+        self.graph.quiesce(self.id)
     }
 
     /// Take the paused kernel (leaves the stream halted).
     pub fn take_paused(&self) -> Result<Option<PausedKernel>> {
-        let (ack, rx) = channel();
-        self.send(Cmd::TakePaused(ack))?;
-        rx.recv().map_err(|_| HetError::runtime("stream worker died"))
+        self.graph.take_paused(self.id)
     }
 
-    /// Resume on `device` with optional restored kernel state.
+    /// Resume on `device` with optional restored kernel state. The device
+    /// is validated before anything is acknowledged; re-entry itself runs
+    /// asynchronously and drains the deferred queue in FIFO order.
     pub fn resume(&self, device: usize, paused: Option<PausedKernel>) -> Result<()> {
-        let (ack, rx) = channel();
-        self.send(Cmd::Resume { device, paused: paused.map(Box::new), ack })?;
-        rx.recv().map_err(|_| HetError::runtime("stream worker died"))?
+        self.graph.resume(self.id, device, paused)
+    }
+
+    /// Device this stream currently records against.
+    pub fn device(&self) -> Result<usize> {
+        self.graph.stream_device(self.id)
+    }
+
+    /// Snapshot of the accumulated statistics.
+    pub fn stats(&self) -> Result<StreamStats> {
+        self.graph.stats(self.id)
     }
 }
 
-impl Drop for Stream {
-    fn drop(&mut self) {
-        let _ = self.tx.send(Cmd::Shutdown);
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
-    }
-}
+#[cfg(test)]
+mod tests {
+    use super::*;
 
-fn worker(
-    mut device: usize,
-    inner: Arc<RuntimeInner>,
-    rx: Receiver<Cmd>,
-    stats: Arc<Mutex<StreamStats>>,
-) {
-    let mut deferred: VecDeque<LaunchSpec> = VecDeque::new();
-    let mut paused: Option<PausedKernel> = None;
-    let mut halted = false;
-    let mut sticky_error: Option<String> = None;
-
-    let exec = |device: usize,
-                spec: &LaunchSpec,
-                resume: Option<&[BlockResume]>,
-                stats: &Mutex<StreamStats>|
-     -> Result<Option<PausedKernel>> {
-        let t0 = Instant::now();
-        let outcome = inner.run_launch(device, spec, resume)?;
-        let wall = t0.elapsed().as_secs_f64() * 1e6;
-        let workers = inner.device(device).map(|d| d.engine.workers()).unwrap_or(1);
-        let mut s = stats.lock().unwrap();
-        s.launches += 1;
-        s.wall_micros += wall;
-        s.sim_workers = workers;
-        s.cost.merge(outcome.cost());
-        match outcome {
-            LaunchOutcome::Completed(_) => {
-                s.completed += 1;
-                Ok(None)
-            }
-            LaunchOutcome::Paused { grid, .. } => {
-                Ok(Some(PausedKernel { spec: spec.clone(), blocks: grid.blocks }))
-            }
-        }
-    };
-
-    loop {
-        // Drain deferred work first when running normally.
-        if !halted && sticky_error.is_none() {
-            if let Some(spec) = deferred.pop_front() {
-                match exec(device, &spec, None, &stats) {
-                    Ok(Some(p)) => {
-                        paused = Some(p);
-                        halted = true;
-                    }
-                    Ok(None) => {}
-                    Err(e) => sticky_error = Some(e.to_string()),
-                }
-                continue;
-            }
-        }
-        let cmd = match rx.recv() {
-            Ok(c) => c,
-            Err(_) => return,
-        };
-        match cmd {
-            Cmd::Launch(spec) => {
-                if halted || sticky_error.is_some() {
-                    deferred.push_back(spec);
-                } else {
-                    match exec(device, &spec, None, &stats) {
-                        Ok(Some(p)) => {
-                            paused = Some(p);
-                            halted = true;
-                        }
-                        Ok(None) => {}
-                        Err(e) => sticky_error = Some(e.to_string()),
-                    }
-                }
-            }
-            Cmd::Barrier(ack) => {
-                let _ = ack.send((sticky_error.clone(), halted));
-            }
-            Cmd::TakePaused(ack) => {
-                let _ = ack.send(paused.take());
-            }
-            Cmd::Resume { device: dev, paused: pk, ack } => {
-                device = dev;
-                // Acknowledge before executing: migration is considered
-                // complete once the kernel is re-entered; the caller can
-                // trigger another checkpoint while it runs (the chained
-                // H100→AMD→Tenstorrent scenario of §6.3). Errors surface
-                // as sticky stream errors at the next synchronize.
-                let _ = ack.send(Ok(()));
-                match pk {
-                    Some(pk) => {
-                        let dirs = pk.resume_directives();
-                        match exec(device, &pk.spec, Some(&dirs), &stats) {
-                            Ok(Some(p2)) => {
-                                // Paused again mid-resume (double migration).
-                                paused = Some(p2);
-                                halted = true;
-                            }
-                            Ok(None) => halted = false,
-                            Err(e) => sticky_error = Some(e.to_string()),
-                        }
-                    }
-                    None => halted = false,
-                }
-            }
-            Cmd::Shutdown => return,
-        }
+    #[test]
+    fn stats_accumulate_per_device() {
+        let mut s = StreamStats::default();
+        let c = CostReport { warp_instructions: 10, ..Default::default() };
+        s.record_launch(0, 4, 5.0, &c, true);
+        s.record_launch(1, 2, 7.0, &c, true);
+        s.record_launch(0, 4, 1.0, &c, false);
+        assert_eq!(s.launches, 3);
+        assert_eq!(s.completed, 2);
+        assert_eq!(s.cost.warp_instructions, 30);
+        assert_eq!(s.sim_workers, 4, "last launch ran on device 0");
+        assert_eq!(s.per_device.len(), 2);
+        let d0 = &s.per_device[0];
+        assert_eq!((d0.device, d0.launches, d0.completed, d0.sim_workers), (0, 2, 1, 4));
+        assert_eq!(d0.cost.warp_instructions, 20);
+        let d1 = &s.per_device[1];
+        assert_eq!((d1.device, d1.launches, d1.sim_workers), (1, 1, 2));
     }
 }

@@ -33,7 +33,77 @@
 
 use crate::error::Result;
 use crate::sim::snapshot::{BlockResume, BlockState};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicIsize, AtomicU64, Ordering};
+
+/// Process-wide dispatch-pool budget shared by **concurrent grid runs**.
+///
+/// Since the event-graph executor can drive several launches at once (two
+/// streams overlapping, or a grid sharded across devices by the
+/// coordinator), each `run_blocks` call no longer spawns its configured
+/// worker count unconditionally — that would put `runs × cores` threads on
+/// `cores` host cores. Instead every run is guaranteed one worker (so
+/// forward progress never depends on another grid finishing) and leases
+/// the rest from a global pool sized at the host core count. Leases are
+/// returned when the grid completes. Worker count never affects results
+/// (linear-id commit order), so a lease smaller than requested is only a
+/// throughput matter.
+pub mod budget {
+    use super::*;
+    use std::sync::OnceLock;
+
+    fn pool() -> &'static AtomicIsize {
+        static POOL: OnceLock<AtomicIsize> = OnceLock::new();
+        POOL.get_or_init(|| {
+            let cores =
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+            // One slot per core, minus the implicit worker every concurrent
+            // grid run already gets for free.
+            AtomicIsize::new(cores.saturating_sub(1) as isize)
+        })
+    }
+
+    /// A held lease of extra dispatch workers; returns them on drop.
+    pub struct Lease(usize);
+
+    impl Lease {
+        /// Extra workers granted on top of the guaranteed one.
+        pub fn extra(&self) -> usize {
+            self.0
+        }
+    }
+
+    impl Drop for Lease {
+        fn drop(&mut self) {
+            if self.0 > 0 {
+                pool().fetch_add(self.0 as isize, Ordering::AcqRel);
+            }
+        }
+    }
+
+    /// Lease up to `want` extra workers (grants whatever is available).
+    pub fn lease(want: usize) -> Lease {
+        if want == 0 {
+            return Lease(0);
+        }
+        let p = pool();
+        let mut avail = p.load(Ordering::Acquire);
+        loop {
+            let take = (avail.max(0) as usize).min(want);
+            if take == 0 {
+                return Lease(0);
+            }
+            match p.compare_exchange_weak(
+                avail,
+                avail - take as isize,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => return Lease(take),
+                Err(seen) => avail = seen,
+            }
+        }
+    }
+}
 
 /// Configuration of the dispatch engine (per simulator instance).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -126,6 +196,22 @@ enum Slot {
     Ran { state: BlockState, cycles: u64, totals: BlockTotals },
 }
 
+/// The slot committed for a block the pause gate kept from (re)starting.
+/// A `FromBarrier` block carries its earlier capture forward unchanged —
+/// re-committing it as `NotStarted` would silently discard mid-kernel
+/// register state when a chained double migration pauses a resume before
+/// that block re-entered.
+fn gated_slot(directive: Option<&BlockResume>) -> Slot {
+    match directive {
+        Some(BlockResume::FromBarrier(cap)) => Slot::Ran {
+            state: BlockState::Suspended(cap.clone()),
+            cycles: 0,
+            totals: BlockTotals::default(),
+        },
+        _ => Slot::NotStarted,
+    }
+}
+
 /// Execute `grid_size` blocks through `run_block`, spreading them over
 /// `opts.workers` host threads. `run_block` receives the linear block id
 /// and must be pure apart from its effects on shared (interior-mutable)
@@ -142,8 +228,8 @@ where
     F: Fn(u32) -> Result<(BlockState, u64, BlockTotals)> + Sync,
 {
     let pause_at = if migratable { opts.pause_at_block } else { None };
-    let workers = opts.workers.min(grid_size as usize).max(1);
-    if workers == 1 {
+    let want = opts.workers.min(grid_size as usize).max(1);
+    if want == 1 {
         return run_blocks_sequential(grid_size, migratable, pause, pause_at, resume, &run_block);
     }
 
@@ -158,62 +244,96 @@ where
     // for any worker count, matching the sequential path's first-error.
     let fault_min = AtomicU64::new(u64::MAX);
 
+    // The calling thread is the run's guaranteed worker; additional
+    // workers are leased from the process-wide budget shared with
+    // concurrently executing grid runs. The lease is *elastic*: between
+    // its own block claims the caller keeps trying to lease more slots
+    // (they free up when another grid finishes), so a run that started on
+    // a busy machine ramps up instead of being pinned at its
+    // admission-time width.
     let per_worker: Vec<Vec<(u32, Result<Slot>)>> = std::thread::scope(|scope| {
-        let handles: Vec<_> = (0..workers)
-            .map(|_| {
-                scope.spawn(|| {
-                    let mut local: Vec<(u32, Result<Slot>)> = Vec::new();
-                    loop {
-                        let b = next.fetch_add(1, Ordering::Relaxed);
-                        if b >= grid_size as u64 {
-                            break;
-                        }
-                        let b = b as u32;
-                        if matches!(resume.map(|r| &r[b as usize]), Some(BlockResume::Skip)) {
-                            local.push((b, Ok(Slot::Skipped)));
-                            continue;
-                        }
-                        if b as u64 > fault_min.load(Ordering::Acquire) {
-                            // Past a known fault: the launch is failing, the
-                            // slot is discarded by the error return.
-                            local.push((b, Ok(Slot::NotStarted)));
-                            continue;
-                        }
-                        let gated = match pause_at {
-                            Some(k) => b >= k,
-                            None => {
-                                stop.load(Ordering::Acquire)
-                                    || (migratable && pause.load(Ordering::SeqCst))
-                            }
-                        };
-                        if gated {
-                            stop.store(true, Ordering::Release);
-                            local.push((b, Ok(Slot::NotStarted)));
-                            continue;
-                        }
-                        match run_block(b) {
-                            Ok((state, cycles, totals)) => {
-                                if pause_at.is_none()
-                                    && matches!(state, BlockState::Suspended(_))
-                                {
-                                    stop.store(true, Ordering::Release);
-                                }
-                                local.push((b, Ok(Slot::Ran { state, cycles, totals })));
-                            }
-                            Err(e) => {
-                                fault_min.fetch_min(b as u64, Ordering::AcqRel);
-                                local.push((b, Err(e)));
-                            }
-                        }
+        // Claim and process one block; false when the grid is exhausted.
+        let step = |local: &mut Vec<(u32, Result<Slot>)>| -> bool {
+            let b = next.fetch_add(1, Ordering::Relaxed);
+            if b >= grid_size as u64 {
+                return false;
+            }
+            let b = b as u32;
+            if matches!(resume.map(|r| &r[b as usize]), Some(BlockResume::Skip)) {
+                local.push((b, Ok(Slot::Skipped)));
+                return true;
+            }
+            if b as u64 > fault_min.load(Ordering::Acquire) {
+                // Past a known fault: the launch is failing, the
+                // slot is discarded by the error return.
+                local.push((b, Ok(Slot::NotStarted)));
+                return true;
+            }
+            let gated = match pause_at {
+                Some(k) => b >= k,
+                None => {
+                    stop.load(Ordering::Acquire)
+                        || (migratable && pause.load(Ordering::SeqCst))
+                }
+            };
+            if gated {
+                stop.store(true, Ordering::Release);
+                local.push((b, Ok(gated_slot(resume.map(|r| &r[b as usize])))));
+                return true;
+            }
+            match run_block(b) {
+                Ok((state, cycles, totals)) => {
+                    if pause_at.is_none() && matches!(state, BlockState::Suspended(_)) {
+                        stop.store(true, Ordering::Release);
                     }
-                    local
-                })
-            })
-            .collect();
-        handles
+                    local.push((b, Ok(Slot::Ran { state, cycles, totals })));
+                }
+                Err(e) => {
+                    fault_min.fetch_min(b as u64, Ordering::AcqRel);
+                    local.push((b, Err(e)));
+                }
+            }
+            true
+        };
+        let work = || {
+            let mut local: Vec<(u32, Result<Slot>)> = Vec::new();
+            while step(&mut local) {}
+            local
+        };
+
+        let mut handles = Vec::new();
+        let mut leases = Vec::new();
+        let initial = budget::lease(want - 1);
+        for _ in 0..initial.extra() {
+            handles.push(scope.spawn(work));
+        }
+        leases.push(initial);
+
+        // Caller works the grid itself, attempting one ramp-up lease
+        // between blocks until the target width is reached.
+        let mut own: Vec<(u32, Result<Slot>)> = Vec::new();
+        while handles.len() < want - 1 {
+            let l = budget::lease(1);
+            if l.extra() == 1 {
+                handles.push(scope.spawn(work));
+                leases.push(l);
+                continue;
+            }
+            if !step(&mut own) {
+                break;
+            }
+        }
+        while step(&mut own) {}
+
+        let mut out: Vec<Vec<(u32, Result<Slot>)>> = handles
             .into_iter()
             .map(|h| h.join().expect("dispatch worker panicked"))
-            .collect()
+            .collect();
+        out.push(own);
+        // Leases drop (and return their slots) only after every worker
+        // has retired.
+        drop(leases);
+        out
     });
 
     let mut slots: Vec<Option<Result<Slot>>> = Vec::with_capacity(grid_size as usize);
@@ -252,7 +372,7 @@ where
         };
         if gated {
             stopped = true;
-            slots.push(Some(Ok(Slot::NotStarted)));
+            slots.push(Some(Ok(gated_slot(resume.map(|r| &r[b as usize])))));
             continue;
         }
         let (state, cycles, totals) = run_block(b)?;
@@ -373,6 +493,39 @@ mod tests {
                     if b % 2 == 0 { BlockState::Done } else { BlockState::NotStarted };
                 assert_eq!(*s, want, "block {b}");
             }
+        }
+    }
+
+    #[test]
+    fn gated_from_barrier_blocks_keep_their_capture() {
+        use crate::sim::snapshot::BlockCapture;
+        let pause = AtomicBool::new(true); // pause pre-set: nothing (re)starts
+        let cap = BlockCapture {
+            block_idx: 1,
+            barrier_id: 3,
+            threads: vec![],
+            shared_mem: vec![7],
+        };
+        let resume = vec![
+            BlockResume::Skip,
+            BlockResume::FromBarrier(cap.clone()),
+            BlockResume::FromEntry,
+        ];
+        for workers in [1usize, 2] {
+            let run = run_blocks(
+                3,
+                DispatchOptions::with_workers(workers),
+                true,
+                &pause,
+                Some(&resume),
+                |b| panic!("block {b} must not run while paused"),
+            )
+            .unwrap();
+            assert!(run.paused);
+            assert_eq!(run.states[0], BlockState::Done);
+            // The double-migration case: the capture survives the gate.
+            assert_eq!(run.states[1], BlockState::Suspended(cap.clone()));
+            assert_eq!(run.states[2], BlockState::NotStarted);
         }
     }
 

@@ -128,7 +128,7 @@ impl SimtSim {
         p: &SimtProgram,
         dims: LaunchDims,
         params: &[Value],
-        global: &mut DeviceMemory,
+        global: &DeviceMemory,
         pause: &AtomicBool,
         resume: Option<&[BlockResume]>,
     ) -> Result<LaunchOutcome> {
@@ -149,7 +149,6 @@ impl SimtSim {
         // shared interior-mutable global memory; the engine commits
         // states/cycles in linear-id order and handles cooperative-pause
         // gating at block-dispatch boundaries.
-        let global: &DeviceMemory = global;
         let run = dispatch::run_blocks(
             grid_size,
             self.dispatch,

@@ -59,7 +59,7 @@ impl TensixSim {
         p: &TensixProgram,
         dims: LaunchDims,
         params: &[Value],
-        global: &mut DeviceMemory,
+        global: &DeviceMemory,
         pause: &AtomicBool,
         resume: Option<&[BlockResume]>,
         shared_heap: Option<u64>,
@@ -86,7 +86,6 @@ impl TensixSim {
 
         // Blocks (vector core-groups or MIMD batches) run concurrently on
         // the shared dispatch pool; results commit in linear-id order.
-        let global: &DeviceMemory = global;
         let run = dispatch::run_blocks(
             grid_size,
             self.dispatch,

@@ -1,0 +1,60 @@
+#!/usr/bin/env python3
+"""Bench trend gate: fail CI when the dispatch-speedup section of
+BENCH_e2.json regresses by more than 20% wall-clock vs the previous
+artifact (ROADMAP "Bench CI trajectory").
+
+Usage: bench_trend.py PREV_JSON CURR_JSON [--threshold 0.20]
+
+Exits 0 when there is no previous artifact (first run / expired
+retention), when the sections are comparable, or when the current run is
+faster; exits 1 on a regression beyond the threshold.
+"""
+
+import json
+import os
+import sys
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def main(argv):
+    if len(argv) < 3:
+        print(__doc__)
+        return 2
+    prev_path, curr_path = argv[1], argv[2]
+    threshold = 0.20
+    if "--threshold" in argv:
+        threshold = float(argv[argv.index("--threshold") + 1])
+
+    if not os.path.exists(prev_path):
+        print(f"no previous artifact at {prev_path}; skipping trend check")
+        return 0
+    prev, curr = load(prev_path), load(curr_path)
+
+    failures = []
+    for section, key in [("dispatch", "par_wall_s"), ("streams", "overlapped_s")]:
+        p = prev.get(section, {}).get(key)
+        c = curr.get(section, {}).get(key)
+        if p is None or c is None:
+            print(f"{section}.{key}: missing in prev or curr; skipping")
+            continue
+        ratio = c / p if p > 0 else 1.0
+        verdict = "REGRESSION" if ratio > 1.0 + threshold else "ok"
+        print(f"{section}.{key}: prev {p:.6f}s -> curr {c:.6f}s ({ratio:.2f}x) {verdict}")
+        if ratio > 1.0 + threshold:
+            failures.append(f"{section}.{key} slowed {ratio:.2f}x (> {1 + threshold:.2f}x)")
+
+    if failures:
+        print("bench trend check FAILED:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("bench trend check passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

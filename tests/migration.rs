@@ -157,6 +157,114 @@ fn migrate_idle_stream_moves_memory_only() {
     assert_eq!(ctx.download_f32(buf, 1024).unwrap(), data);
 }
 
+/// Deferred commands must drain in their original FIFO order even after a
+/// *double* migration (the §6.3 chained scenario): each `mark` launch
+/// appends its value to a log, so any reordering of the deferred queue —
+/// e.g. a resume node enqueued behind deferred work, or a second
+/// migration's resume jumping an earlier one — shows up as a scrambled log.
+#[test]
+fn deferred_queue_drains_in_fifo_order_after_double_migration() {
+    let ctx = HetGpu::with_devices(&[
+        DeviceKind::NvidiaSim,
+        DeviceKind::AmdSim,
+        DeviceKind::IntelSim,
+    ])
+    .unwrap();
+    let m = ctx
+        .compile_cuda(&format!(
+            r#"
+{PERSIST_SRC}
+__global__ void mark(unsigned* log, unsigned val) {{
+    if (threadIdx.x == 0u && blockIdx.x == 0u) {{
+        unsigned h = log[0] + 1u;
+        log[h] = val;
+        log[0] = h;
+    }}
+}}
+"#
+        ))
+        .unwrap();
+    let data = ctx.malloc_on((N * 4) as u64, 0).unwrap();
+    ctx.upload_f32(data, &vec![0.0; N]).unwrap();
+    let log = ctx.malloc_on(256, 0).unwrap();
+    ctx.upload_u32(log, &[0; 16]).unwrap();
+
+    let s = ctx.create_stream(0).unwrap();
+    // A long launch to migrate out from under, then ordered markers that
+    // sit in the deferred queue across both migrations.
+    ctx.launch(
+        s,
+        m,
+        "persist",
+        LaunchDims::d1(DIMS.0, DIMS.1),
+        &[Arg::Ptr(data), Arg::U32(60_000)],
+    )
+    .unwrap();
+    for val in 1..=6u32 {
+        ctx.launch(s, m, "mark", LaunchDims::d1(1, 32), &[Arg::Ptr(log), Arg::U32(val)])
+            .unwrap();
+    }
+    ctx.migrate(s, 1).unwrap();
+    ctx.migrate(s, 2).unwrap();
+    ctx.synchronize(s).unwrap();
+    assert_eq!(ctx.stream_device(s).unwrap(), 2);
+
+    let got = ctx.download_u32(log, 7).unwrap();
+    assert_eq!(got[0], 6, "all marks must have drained: {got:?}");
+    assert_eq!(&got[1..7], &[1, 2, 3, 4, 5, 6], "deferred queue replayed out of order");
+}
+
+/// Coordinator acceptance: a shard paused mid-run rebalances — through the
+/// serialized blob transport — onto a device of a *different kind*
+/// (SIMT → Tensix) and completes, with the merged result bit-identical to
+/// an unmigrated single-device run.
+#[test]
+fn shard_rebalance_cross_kind_roundtrip() {
+    let mut iters = 60_000u32;
+    for _attempt in 0..4 {
+        let expect = reference(iters);
+
+        let ctx = HetGpu::with_devices(&[
+            DeviceKind::NvidiaSim,
+            DeviceKind::AmdSim,
+            DeviceKind::TenstorrentSim,
+        ])
+        .unwrap();
+        let m = ctx.compile_cuda(PERSIST_SRC).unwrap();
+        let buf = ctx.malloc_on((N * 4) as u64, 0).unwrap();
+        let init: Vec<f32> = (0..N).map(|i| i as f32 * 0.25).collect();
+        ctx.upload_f32(buf, &init).unwrap();
+
+        let mut run = ctx
+            .coordinator()
+            .launch_sharded(
+                m,
+                "persist",
+                LaunchDims::d1(DIMS.0, DIMS.1),
+                &[Arg::Ptr(buf), Arg::U32(iters)],
+                &[0, 1],
+            )
+            .unwrap();
+        assert_eq!(run.shards.len(), 2);
+        std::thread::sleep(std::time::Duration::from_millis(40));
+        // Move the second shard mid-flight onto the Tensix device.
+        let live = run.rebalance(1, 2).unwrap();
+        assert_eq!(run.shards[1].device, 2);
+        let report = run.wait().unwrap();
+        assert_eq!(report.rebalanced, 1);
+
+        let got = ctx.download_f32(buf, N).unwrap();
+        for (i, (e, g)) in expect.iter().zip(&got).enumerate() {
+            assert_eq!(e.to_bits(), g.to_bits(), "elem {i}: {e} vs {g}");
+        }
+        if live {
+            return; // caught genuinely mid-kernel: register state moved
+        }
+        iters *= 4; // machine too fast — retry with more work
+    }
+    panic!("shard never caught mid-run; machine too fast even at high iters");
+}
+
 /// Deferred launches run after migration completes, on the new device.
 #[test]
 fn deferred_launches_run_after_migration() {

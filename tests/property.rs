@@ -81,13 +81,13 @@ fn random_kernel(r: &mut XorShift) -> Kernel {
 fn run_simt(k: &Kernel, cfg: SimtConfig, n: u32) -> Vec<u32> {
     let p = backends::translate_simt(k, &cfg, TranslateOpts::default()).unwrap();
     let sim = SimtSim::new(cfg);
-    let mut mem = DeviceMemory::new(1 << 16, "fuzz");
+    let mem = DeviceMemory::new(1 << 16, "fuzz");
     let pause = AtomicBool::new(false);
     sim.run_grid(
         &p,
         LaunchDims::d1(n.div_ceil(32), 32),
         &[Value::ptr(0, AddrSpace::Global), Value::u32(n)],
-        &mut mem,
+        &mem,
         &pause,
         None,
     )
@@ -100,13 +100,13 @@ fn run_simt(k: &Kernel, cfg: SimtConfig, n: u32) -> Vec<u32> {
 fn run_tensix(k: &Kernel, mode: TensixMode, n: u32) -> Vec<u32> {
     let p = backends::translate_tensix(k, mode, TranslateOpts::default()).unwrap();
     let sim = TensixSim::new(TensixConfig::blackhole());
-    let mut mem = DeviceMemory::new(1 << 16, "fuzz");
+    let mem = DeviceMemory::new(1 << 16, "fuzz");
     let pause = AtomicBool::new(false);
     sim.run_grid(
         &p,
         LaunchDims::d1(n.div_ceil(32), 32),
         &[Value::ptr(0, AddrSpace::Global), Value::u32(n)],
-        &mut mem,
+        &mem,
         &pause,
         None,
         None,
@@ -214,6 +214,7 @@ fn prop_blob_roundtrip() {
                 blocks,
             }),
             allocations: vec![(4096, (0..r.below(128)).map(|_| r.next_u32() as u8).collect())],
+            shard: None,
         };
         let blob = serialize(&snap);
         let back = deserialize(&blob).expect("deserialize");
