@@ -36,6 +36,9 @@ fn main() {
                     print!(" | ERR {:>12}", e.to_string().chars().take(12).collect::<String>());
                 }
             }
+            // Per-cell streams are destroyed (API v2 lifecycle), so the
+            // matrix run leaves the event graph at its baseline size.
+            let _ = ctx.destroy_stream(stream);
         }
         println!();
     }

@@ -180,20 +180,17 @@ __global__ void spin(float* x, unsigned iters) {
         let run_with = |nstreams: usize| -> f64 {
             let ctx = HetGpu::with_devices(&[DeviceKind::NvidiaSim]).unwrap();
             let m = ctx.compile_cuda(heavy).unwrap();
-            let buf = ctx.malloc_on(4 * 64, 0).unwrap();
-            ctx.upload_f32(buf, &[1.0; 64]).unwrap();
+            let buf = ctx.alloc_buffer::<f32>(64, 0).unwrap();
+            ctx.upload(&buf, &[1.0; 64]).unwrap();
             let streams: Vec<_> =
                 (0..nstreams).map(|_| ctx.create_stream(0).unwrap()).collect();
             let t0 = std::time::Instant::now();
             for l in 0..launches {
-                ctx.launch(
-                    streams[l % nstreams],
-                    m,
-                    "spin",
-                    LaunchDims::d1(1, 64),
-                    &[Arg::Ptr(buf), Arg::U32(iters)],
-                )
-                .unwrap();
+                ctx.launch(m, "spin")
+                    .dims(LaunchDims::d1(1, 64))
+                    .args(&[buf.arg(), Arg::U32(iters)])
+                    .record(streams[l % nstreams])
+                    .unwrap();
             }
             for s in &streams {
                 ctx.synchronize(*s).unwrap();
@@ -218,31 +215,37 @@ __global__ void spin(float* x, unsigned iters) {
             HetGpu::with_devices(&[DeviceKind::NvidiaSim, DeviceKind::NvidiaSim]).unwrap();
         let m = ctx2.compile_cuda(suite::SUITE_SRC).unwrap();
         let sn: u32 = 1 << 18; // 1024 blocks x 256 threads
-        let buf_a = ctx2.malloc_on(4 * sn as u64, 0).unwrap();
-        let buf_b = ctx2.malloc_on(4 * sn as u64, 0).unwrap();
-        let buf_c = ctx2.malloc_on(4 * sn as u64, 0).unwrap();
-        ctx2.upload_f32(buf_a, &vec![1.0; sn as usize]).unwrap();
-        ctx2.upload_f32(buf_b, &vec![2.0; sn as usize]).unwrap();
+        let buf_a = ctx2.alloc_buffer::<f32>(sn as usize, 0).unwrap();
+        let buf_b = ctx2.alloc_buffer::<f32>(sn as usize, 0).unwrap();
+        let buf_c = ctx2.alloc_buffer::<f32>(sn as usize, 0).unwrap();
+        ctx2.upload(&buf_a, &vec![1.0; sn as usize]).unwrap();
+        ctx2.upload(&buf_b, &vec![2.0; sn as usize]).unwrap();
         let dims = LaunchDims::d1(sn / 256, 256);
-        let args =
-            [Arg::Ptr(buf_a), Arg::Ptr(buf_b), Arg::Ptr(buf_c), Arg::U32(sn)];
+        let args = [buf_a.arg(), buf_b.arg(), buf_c.arg(), Arg::U32(sn)];
+        let ws = [buf_a.ptr(), buf_b.ptr(), buf_c.ptr()];
         let reps = if smoke { 1 } else { 3 };
 
         let single = {
             let s = ctx2.create_stream(0).unwrap();
             let t0 = std::time::Instant::now();
             for _ in 0..reps {
-                ctx2.launch(s, m, "vecadd", dims, &args).unwrap();
+                ctx2.launch(m, "vecadd").dims(dims).args(&args).record(s).unwrap();
                 ctx2.synchronize(s).unwrap();
             }
             t0.elapsed().as_secs_f64() / reps as f64
         };
         let sharded = {
-            let coord = ctx2.coordinator();
+            // Working-set hint: broadcast/merge only the three vecadd
+            // buffers; the join overlaps merges with trailing shards.
             let t0 = std::time::Instant::now();
             for _ in 0..reps {
-                let mut run =
-                    coord.launch_sharded(m, "vecadd", dims, &args, &[0, 1]).unwrap();
+                let mut run = ctx2
+                    .launch(m, "vecadd")
+                    .dims(dims)
+                    .args(&args)
+                    .working_set(&ws)
+                    .sharded(&[0, 1])
+                    .unwrap();
                 run.wait().unwrap();
             }
             t0.elapsed().as_secs_f64() / reps as f64
@@ -255,6 +258,41 @@ __global__ void spin(float* x, unsigned iters) {
             single / sharded
         );
         (single, sharded)
+    };
+
+    // ---- handle churn: create/destroy streams + record/retire events ----
+    // API v2 reclamation surface: 10k create→record→retire→destroy cycles
+    // must reuse slots (tables bounded by live handles, not history) and
+    // stay cheap enough that per-launch stream setup never shows up in a
+    // service's profile. BENCH_e2.json carries the wall time so
+    // bench_trend.py gates reclamation regressions.
+    let (churn_s, churn_cycles, churn_stats) = {
+        let ctx3 = HetGpu::with_devices_and_workers(&[DeviceKind::NvidiaSim], 1).unwrap();
+        let cycles: usize = if smoke { 2_000 } else { 10_000 };
+        let t0 = std::time::Instant::now();
+        for _ in 0..cycles {
+            let s = ctx3.create_stream(0).unwrap();
+            let ev = ctx3.record_event(s).unwrap();
+            ctx3.synchronize(s).unwrap();
+            ctx3.retire_event(ev).unwrap();
+            ctx3.destroy_stream(s).unwrap();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let stats = ctx3.graph_stats();
+        println!("\nhandle churn ({cycles} create/destroy stream+event cycles):");
+        println!(
+            "  {:.2} ms total, {:.2} us/cycle; tables after: {} stream slots, {} event slots",
+            dt * 1e3,
+            dt / cycles as f64 * 1e6,
+            stats.stream_slots,
+            stats.event_slots
+        );
+        assert_eq!(stats.live_streams, 0, "churn leaked live streams");
+        assert!(
+            stats.stream_slots <= 4 && stats.event_slots <= 8,
+            "slot tables grew with history, not liveness: {stats:?}"
+        );
+        (dt, cycles, stats)
     };
 
     // ---- hetGPU vs hand-tuned (the <10% claim) ----
@@ -391,10 +429,13 @@ __global__ void spin(float* x, unsigned iters) {
         ));
     }
     let json = format!(
-        "{{\n  \"bench\": \"e2_microbench\",\n  \"host_cores\": {host_cores},\n  \"dispatch\": {{\"workers\": {host_cores}, \"seq_wall_s\": {seq_wall_s:.6}, \"par_wall_s\": {par_wall_s:.6}, \"speedup\": {speedup:.3}}},\n  \"streams\": {{\"serialized_s\": {ser_wall_s:.6}, \"overlapped_s\": {ovl_wall_s:.6}, \"speedup\": {stream_speedup:.3}}},\n  \"sharded\": {{\"single_s\": {single_wall_s:.6}, \"sharded_s\": {sharded_wall_s:.6}, \"ratio\": {shard_ratio:.3}}},\n  \"kernels\": [\n    {rows}\n  ]\n}}\n",
+        "{{\n  \"bench\": \"e2_microbench\",\n  \"host_cores\": {host_cores},\n  \"dispatch\": {{\"workers\": {host_cores}, \"seq_wall_s\": {seq_wall_s:.6}, \"par_wall_s\": {par_wall_s:.6}, \"speedup\": {speedup:.3}}},\n  \"streams\": {{\"serialized_s\": {ser_wall_s:.6}, \"overlapped_s\": {ovl_wall_s:.6}, \"speedup\": {stream_speedup:.3}}},\n  \"sharded\": {{\"single_s\": {single_wall_s:.6}, \"sharded_s\": {sharded_wall_s:.6}, \"ratio\": {shard_ratio:.3}}},\n  \"handles\": {{\"cycles\": {churn_cycles}, \"churn_s\": {churn_s:.6}, \"per_cycle_us\": {per_cycle_us:.3}, \"stream_slots\": {hs_streams}, \"event_slots\": {hs_events}}},\n  \"kernels\": [\n    {rows}\n  ]\n}}\n",
         speedup = seq_wall_s / par_wall_s,
         stream_speedup = ser_wall_s / ovl_wall_s,
-        shard_ratio = single_wall_s / sharded_wall_s
+        shard_ratio = single_wall_s / sharded_wall_s,
+        per_cycle_us = churn_s / churn_cycles as f64 * 1e6,
+        hs_streams = churn_stats.stream_slots,
+        hs_events = churn_stats.event_slots
     );
     match std::fs::write(&json_path, &json) {
         Ok(()) => println!("\nwrote {json_path}"),

@@ -26,20 +26,17 @@ fn main() {
     println!("divergent kernel (mc_pi, {points} points):");
     let mut mc = Vec::new();
     for mode in [TensixMode::ScalarMimd, TensixMode::VectorSingleCore] {
-        let hits = ctx.malloc_on(256, 0).unwrap();
-        ctx.upload_u32(hits, &[0]).unwrap();
+        let hits = ctx.alloc_buffer::<u32>(1, 0).unwrap();
+        ctx.upload(&hits, &[0]).unwrap();
         let s = ctx.create_stream(0).unwrap();
-        ctx.launch_with_mode(
-            s,
-            module,
-            "mc_pi",
-            LaunchDims::d1(threads / 32, 32),
-            &[Arg::Ptr(hits), Arg::U32(iters), Arg::U32(99)],
-            mode,
-        )
-        .unwrap();
+        ctx.launch(module, "mc_pi")
+            .dims(LaunchDims::d1(threads / 32, 32))
+            .args(&[hits.arg(), Arg::U32(iters), Arg::U32(99)])
+            .tensix_mode(mode)
+            .record(s)
+            .unwrap();
         ctx.synchronize(s).unwrap();
-        let got = ctx.download_u32(hits, 1).unwrap()[0] as u64;
+        let got = ctx.download(&hits, 1).unwrap()[0] as u64;
         assert_eq!(got, suite::mc_pi_reference(threads, iters, 99));
         let st = ctx.stream_stats(s).unwrap();
         let mpts = points as f64 / (st.cost.device_cycles as f64 / clock);
@@ -50,7 +47,8 @@ fn main() {
             mpts
         );
         mc.push(mpts);
-        ctx.free(hits).unwrap();
+        ctx.free_buffer(&hits).unwrap();
+        ctx.destroy_stream(s).unwrap();
     }
     println!(
         "  -> MIMD/vector = {:.2}x in favor of MIMD (paper: 25/18 = 1.39x)\n",
@@ -63,23 +61,18 @@ fn main() {
     println!("regular kernel (vecadd, {n} elements):");
     let mut va = Vec::new();
     for mode in [TensixMode::ScalarMimd, TensixMode::VectorSingleCore] {
-        let (pa, pb, pc) = (
-            ctx.malloc_on(4 * n as u64, 0).unwrap(),
-            ctx.malloc_on(4 * n as u64, 0).unwrap(),
-            ctx.malloc_on(4 * n as u64, 0).unwrap(),
-        );
-        ctx.upload_f32(pa, &vec![1.0; n]).unwrap();
-        ctx.upload_f32(pb, &vec![2.0; n]).unwrap();
+        let pa = ctx.alloc_buffer::<f32>(n, 0).unwrap();
+        let pb = ctx.alloc_buffer::<f32>(n, 0).unwrap();
+        let pc = ctx.alloc_buffer::<f32>(n, 0).unwrap();
+        ctx.upload(&pa, &vec![1.0; n]).unwrap();
+        ctx.upload(&pb, &vec![2.0; n]).unwrap();
         let s = ctx.create_stream(0).unwrap();
-        ctx.launch_with_mode(
-            s,
-            module,
-            "vecadd",
-            LaunchDims::d1(n as u32 / 32, 32),
-            &[Arg::Ptr(pa), Arg::Ptr(pb), Arg::Ptr(pc), Arg::U32(n as u32)],
-            mode,
-        )
-        .unwrap();
+        ctx.launch(module, "vecadd")
+            .dims(LaunchDims::d1(n as u32 / 32, 32))
+            .args(&[pa.arg(), pb.arg(), pc.arg(), Arg::U32(n as u32)])
+            .tensix_mode(mode)
+            .record(s)
+            .unwrap();
         ctx.synchronize(s).unwrap();
         let st = ctx.stream_stats(s).unwrap();
         println!(
@@ -88,9 +81,10 @@ fn main() {
             st.cost.device_cycles
         );
         va.push(st.cost.device_cycles);
-        for p in [pa, pb, pc] {
-            ctx.free(p).unwrap();
+        for p in [&pa, &pb, &pc] {
+            ctx.free_buffer(p).unwrap();
         }
+        ctx.destroy_stream(s).unwrap();
     }
     println!("  -> vector/MIMD = {:.2}x in favor of the vector unit\n", va[0] as f64 / va[1] as f64);
 
@@ -135,14 +129,11 @@ fn main() {
         let m2 = ctx2.compile_cuda(div_src).unwrap();
         let out = ctx2.malloc_on(1 << 16, 0).unwrap();
         let s = ctx2.create_stream(0).unwrap();
-        ctx2.launch(
-            s,
-            m2,
-            "divheavy",
-            LaunchDims::d1(16, 256),
-            &[Arg::Ptr(out), Arg::U32(4096)],
-        )
-        .unwrap();
+        ctx2.launch(m2, "divheavy")
+            .dims(LaunchDims::d1(16, 256))
+            .args(&[Arg::Ptr(out), Arg::U32(4096)])
+            .record(s)
+            .unwrap();
         ctx2.synchronize(s).unwrap();
         let st = ctx2.stream_stats(s).unwrap();
         println!("  {:14} {:>12} cycles", kind.name(), st.cost.device_cycles);

@@ -21,26 +21,21 @@ fn main() {
     let n = 128usize;
     let a = suite::gen_f32(n * n, 51);
     let b = suite::gen_f32(n * n, 52);
-    let (pa, pb, pc) = (
-        ctx.malloc_on(4 * (n * n) as u64, 0).unwrap(),
-        ctx.malloc_on(4 * (n * n) as u64, 0).unwrap(),
-        ctx.malloc_on(4 * (n * n) as u64, 0).unwrap(),
-    );
-    ctx.upload_f32(pa, &a).unwrap();
-    ctx.upload_f32(pb, &b).unwrap();
+    let pa = ctx.alloc_buffer::<f32>(n * n, 0).unwrap();
+    let pb = ctx.alloc_buffer::<f32>(n * n, 0).unwrap();
+    let pc = ctx.alloc_buffer::<f32>(n * n, 0).unwrap();
+    ctx.upload(&pa, &a).unwrap();
+    ctx.upload(&pb, &b).unwrap();
 
     println!("\nE5: live migration of a tiled matmul across three vendors (paper §6.3)\n");
     let stream = ctx.create_stream(0).unwrap();
     let t_job = std::time::Instant::now();
     let g = (n / 16) as u32;
-    ctx.launch(
-        stream,
-        module,
-        "matmul16",
-        LaunchDims { grid: [g, g, 1], block: [16, 16, 1] },
-        &[Arg::Ptr(pa), Arg::Ptr(pb), Arg::Ptr(pc), Arg::U32(n as u32)],
-    )
-    .unwrap();
+    ctx.launch(module, "matmul16")
+        .dims(LaunchDims { grid: [g, g, 1], block: [16, 16, 1] })
+        .args(&[pa.arg(), pb.arg(), pc.arg(), Arg::U32(n as u32)])
+        .record(stream)
+        .unwrap();
 
     let mut total_downtime_us = 0.0;
     let mut live = 0;
@@ -65,7 +60,7 @@ fn main() {
     let job = t_job.elapsed().as_secs_f64();
 
     // Bit-exact result check.
-    let c = ctx.download_f32(pc, n * n).unwrap();
+    let c = ctx.download(&pc, n * n).unwrap();
     let reference = suite::matmul_reference(&a, &b, n);
     let max_err =
         c.iter().zip(&reference).map(|(x, y)| (x - y).abs()).fold(0f32, f32::max);

@@ -109,19 +109,19 @@ fn main() {
     let lr = 0.08f32;
     let migrations = [(12usize, 1usize), (24, 2)];
 
-    let alloc = |n: usize| ctx.malloc_on(4 * n as u64, 0).unwrap();
+    let alloc = |n: usize| ctx.alloc_buffer::<f32>(n, 0).unwrap();
     let (px, py) = (alloc(B * D), alloc(B));
     let (pw1, pb1, pw2, pb2) = (alloc(D * H), alloc(H), alloc(H), alloc(8));
     let (ph, pdpred, pdh, pdw2, ploss) =
         (alloc(B * H), alloc(B), alloc(B * H), alloc(H), alloc(8));
     let xs = gen(B * D, 1.0, 201);
     let ys: Vec<f32> = (0..B).map(|r| (2.0 * xs[r * D]).sin()).collect();
-    ctx.upload_f32(px, &xs).unwrap();
-    ctx.upload_f32(py, &ys).unwrap();
-    ctx.upload_f32(pw1, &gen(D * H, 0.08, 202)).unwrap();
-    ctx.upload_f32(pb1, &vec![0.0; H]).unwrap();
-    ctx.upload_f32(pw2, &gen(H, 0.08, 203)).unwrap();
-    ctx.upload_f32(pb2, &[0.0]).unwrap();
+    ctx.upload(&px, &xs).unwrap();
+    ctx.upload(&py, &ys).unwrap();
+    ctx.upload(&pw1, &gen(D * H, 0.08, 202)).unwrap();
+    ctx.upload(&pb1, &vec![0.0; H]).unwrap();
+    ctx.upload(&pw2, &gen(H, 0.08, 203)).unwrap();
+    ctx.upload(&pb2, &[0.0]).unwrap();
 
     let d1 = |n: usize| LaunchDims::d1((n as u32).div_ceil(32), 32);
     let grid2 = |n: usize, rows: usize| LaunchDims {
@@ -141,19 +141,24 @@ fn main() {
                 r.modeled_downtime_ms
             );
         }
-        ctx.upload_f32(ploss, &[0.0]).unwrap();
-        ctx.launch(stream, module, "fwd_hidden", grid2(H, B),
-            &[Arg::Ptr(px), Arg::Ptr(pw1), Arg::Ptr(pb1), Arg::Ptr(ph), Arg::U32(D as u32), Arg::U32(H as u32)]).unwrap();
-        ctx.launch(stream, module, "fwd_head_grad", d1(B),
-            &[Arg::Ptr(ph), Arg::Ptr(pw2), Arg::Ptr(pb2), Arg::Ptr(py), Arg::Ptr(pdpred), Arg::Ptr(ploss), Arg::U32(H as u32), Arg::U32(B as u32)]).unwrap();
-        ctx.launch(stream, module, "bwd_hidden", d1(H),
-            &[Arg::Ptr(ph), Arg::Ptr(pw2), Arg::Ptr(pdpred), Arg::Ptr(pdh), Arg::Ptr(pdw2), Arg::U32(H as u32), Arg::U32(B as u32)]).unwrap();
-        ctx.launch(stream, module, "sgd_w1", grid2(H, D),
-            &[Arg::Ptr(px), Arg::Ptr(pdh), Arg::Ptr(pw1), Arg::Ptr(pb1), Arg::F32(lr), Arg::U32(D as u32), Arg::U32(H as u32), Arg::U32(B as u32)]).unwrap();
-        ctx.launch(stream, module, "sgd_w2", d1(H),
-            &[Arg::Ptr(pw2), Arg::Ptr(pdw2), Arg::Ptr(pb2), Arg::Ptr(pdpred), Arg::F32(lr), Arg::U32(H as u32), Arg::U32(B as u32)]).unwrap();
+        ctx.upload(&ploss, &[0.0]).unwrap();
+        ctx.launch(module, "fwd_hidden").dims(grid2(H, B))
+            .args(&[px.arg(), pw1.arg(), pb1.arg(), ph.arg(), Arg::U32(D as u32), Arg::U32(H as u32)])
+            .record(stream).unwrap();
+        ctx.launch(module, "fwd_head_grad").dims(d1(B))
+            .args(&[ph.arg(), pw2.arg(), pb2.arg(), py.arg(), pdpred.arg(), ploss.arg(), Arg::U32(H as u32), Arg::U32(B as u32)])
+            .record(stream).unwrap();
+        ctx.launch(module, "bwd_hidden").dims(d1(H))
+            .args(&[ph.arg(), pw2.arg(), pdpred.arg(), pdh.arg(), pdw2.arg(), Arg::U32(H as u32), Arg::U32(B as u32)])
+            .record(stream).unwrap();
+        ctx.launch(module, "sgd_w1").dims(grid2(H, D))
+            .args(&[px.arg(), pdh.arg(), pw1.arg(), pb1.arg(), Arg::F32(lr), Arg::U32(D as u32), Arg::U32(H as u32), Arg::U32(B as u32)])
+            .record(stream).unwrap();
+        ctx.launch(module, "sgd_w2").dims(d1(H))
+            .args(&[pw2.arg(), pdw2.arg(), pb2.arg(), pdpred.arg(), Arg::F32(lr), Arg::U32(H as u32), Arg::U32(B as u32)])
+            .record(stream).unwrap();
         ctx.synchronize(stream).unwrap();
-        losses.push(ctx.download_f32(ploss, 1).unwrap()[0]);
+        losses.push(ctx.download(&ploss, 1).unwrap()[0]);
     }
 
     println!("\n step | loss      | device");

@@ -10,7 +10,6 @@
 use hetgpu::isa::tensix_isa::TensixMode;
 use hetgpu::runtime::api::HetGpu;
 use hetgpu::runtime::device::DeviceKind;
-use hetgpu::runtime::launch::Arg;
 use hetgpu::sim::simt::LaunchDims;
 use hetgpu::suite;
 
@@ -26,19 +25,18 @@ fn main() -> hetgpu::Result<()> {
     println!("Monte-Carlo pi on tenstorrent-sim, {points} points, two mappings:\n");
     let mut rates = Vec::new();
     for mode in [TensixMode::ScalarMimd, TensixMode::VectorSingleCore] {
-        let hits = ctx.malloc_on(256, 0)?;
-        ctx.upload_u32(hits, &[0])?;
+        let hits = ctx.alloc_buffer::<u32>(1, 0)?;
+        ctx.upload(&hits, &[0])?;
         let stream = ctx.create_stream(0)?;
-        ctx.launch_with_mode(
-            stream,
-            module,
-            "mc_pi",
-            LaunchDims::d1(threads / 32, 32),
-            &[Arg::Ptr(hits), Arg::U32(iters), Arg::U32(7)],
-            mode,
-        )?;
+        ctx.launch(module, "mc_pi")
+            .dims(LaunchDims::d1(threads / 32, 32))
+            .arg(&hits)
+            .arg(iters)
+            .arg(7u32)
+            .tensix_mode(mode)
+            .record(stream)?;
         ctx.synchronize(stream)?;
-        let got = ctx.download_u32(hits, 1)?[0] as u64;
+        let got = ctx.download(&hits, 1)?[0] as u64;
         let want = suite::mc_pi_reference(threads, iters, 7);
         assert_eq!(got, want, "mode {mode} wrong");
         let stats = ctx.stream_stats(stream)?;
@@ -52,7 +50,8 @@ fn main() -> hetgpu::Result<()> {
             4.0 * got as f64 / points as f64,
         );
         rates.push(mpts);
-        ctx.free(hits)?;
+        ctx.free_buffer(&hits)?;
+        ctx.destroy_stream(stream)?;
     }
     let ratio = rates[0] / rates[1];
     println!(

@@ -135,17 +135,17 @@ fn main() -> hetgpu::Result<()> {
     let ctx = HetGpu::with_devices(&[DeviceKind::NvidiaSim, DeviceKind::AmdSim])?;
     let module = ctx.compile_cuda(TRAIN_SRC)?;
     let stream = ctx.create_stream(0)?;
-    let alloc = |n: usize| ctx.malloc_on(4 * n as u64, 0);
+    let alloc = |n: usize| ctx.alloc_buffer::<f32>(n, 0);
     let (px, py) = (alloc(B * D)?, alloc(B)?);
     let (pw1, pb1, pw2, pb2) = (alloc(D * H)?, alloc(H)?, alloc(H)?, alloc(8)?);
     let (ph, pdpred, pdh, pdw2, ploss) =
         (alloc(B * H)?, alloc(B)?, alloc(B * H)?, alloc(H)?, alloc(8)?);
-    ctx.upload_f32(px, &xs)?;
-    ctx.upload_f32(py, &ys)?;
-    ctx.upload_f32(pw1, &w1_0)?;
-    ctx.upload_f32(pb1, &b1_0)?;
-    ctx.upload_f32(pw2, &w2_0)?;
-    ctx.upload_f32(pb2, &[b2_0])?;
+    ctx.upload(&px, &xs)?;
+    ctx.upload(&py, &ys)?;
+    ctx.upload(&pw1, &w1_0)?;
+    ctx.upload(&pb1, &b1_0)?;
+    ctx.upload(&pw2, &w2_0)?;
+    ctx.upload(&pb2, &[b2_0])?;
 
     let d1 = |n: usize| LaunchDims::d1((n as u32).div_ceil(64), 64);
     let grid2 = |n: usize, rows: usize| LaunchDims {
@@ -165,29 +165,24 @@ fn main() -> hetgpu::Result<()> {
                 r.modeled_downtime_ms
             );
         }
-        ctx.upload_f32(ploss, &[0.0])?;
-        ctx.launch(
-            stream, module, "fwd_hidden", grid2(H, B),
-            &[Arg::Ptr(px), Arg::Ptr(pw1), Arg::Ptr(pb1), Arg::Ptr(ph), Arg::U32(D as u32), Arg::U32(H as u32)],
-        )?;
-        ctx.launch(
-            stream, module, "fwd_head_grad", d1(B),
-            &[Arg::Ptr(ph), Arg::Ptr(pw2), Arg::Ptr(pb2), Arg::Ptr(py), Arg::Ptr(pdpred), Arg::Ptr(ploss), Arg::U32(H as u32), Arg::U32(B as u32)],
-        )?;
-        ctx.launch(
-            stream, module, "bwd_hidden", d1(H),
-            &[Arg::Ptr(ph), Arg::Ptr(pw2), Arg::Ptr(pdpred), Arg::Ptr(pdh), Arg::Ptr(pdw2), Arg::U32(H as u32), Arg::U32(B as u32)],
-        )?;
-        ctx.launch(
-            stream, module, "sgd_w1", grid2(H, D),
-            &[Arg::Ptr(px), Arg::Ptr(pdh), Arg::Ptr(pw1), Arg::Ptr(pb1), Arg::F32(lr), Arg::U32(D as u32), Arg::U32(H as u32), Arg::U32(B as u32)],
-        )?;
-        ctx.launch(
-            stream, module, "sgd_w2", d1(H),
-            &[Arg::Ptr(pw2), Arg::Ptr(pdw2), Arg::Ptr(pb2), Arg::Ptr(pdpred), Arg::F32(lr), Arg::U32(H as u32), Arg::U32(B as u32)],
-        )?;
+        ctx.upload(&ploss, &[0.0])?;
+        ctx.launch(module, "fwd_hidden").dims(grid2(H, B))
+            .args(&[px.arg(), pw1.arg(), pb1.arg(), ph.arg(), Arg::U32(D as u32), Arg::U32(H as u32)])
+            .record(stream)?;
+        ctx.launch(module, "fwd_head_grad").dims(d1(B))
+            .args(&[ph.arg(), pw2.arg(), pb2.arg(), py.arg(), pdpred.arg(), ploss.arg(), Arg::U32(H as u32), Arg::U32(B as u32)])
+            .record(stream)?;
+        ctx.launch(module, "bwd_hidden").dims(d1(H))
+            .args(&[ph.arg(), pw2.arg(), pdpred.arg(), pdh.arg(), pdw2.arg(), Arg::U32(H as u32), Arg::U32(B as u32)])
+            .record(stream)?;
+        ctx.launch(module, "sgd_w1").dims(grid2(H, D))
+            .args(&[px.arg(), pdh.arg(), pw1.arg(), pb1.arg(), Arg::F32(lr), Arg::U32(D as u32), Arg::U32(H as u32), Arg::U32(B as u32)])
+            .record(stream)?;
+        ctx.launch(module, "sgd_w2").dims(d1(H))
+            .args(&[pw2.arg(), pdw2.arg(), pb2.arg(), pdpred.arg(), Arg::F32(lr), Arg::U32(H as u32), Arg::U32(B as u32)])
+            .record(stream)?;
         ctx.synchronize(stream)?;
-        het_losses.push(ctx.download_f32(ploss, 1)?[0]);
+        het_losses.push(ctx.download(&ploss, 1)?[0]);
     }
 
     // ---- native oracle: the L2 JAX train step via PJRT ----

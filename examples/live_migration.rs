@@ -8,7 +8,6 @@
 
 use hetgpu::runtime::api::HetGpu;
 use hetgpu::runtime::device::DeviceKind;
-use hetgpu::runtime::launch::Arg;
 use hetgpu::sim::simt::LaunchDims;
 use hetgpu::suite;
 
@@ -20,24 +19,22 @@ fn main() -> hetgpu::Result<()> {
     let n = 128usize; // tiled matmul, 16x16 tiles -> 64 blocks, barriers per tile step
     let a = suite::gen_f32(n * n, 41);
     let b = suite::gen_f32(n * n, 42);
-    let (pa, pb, pc) = (
-        ctx.malloc_on(4 * (n * n) as u64, 0)?,
-        ctx.malloc_on(4 * (n * n) as u64, 0)?,
-        ctx.malloc_on(4 * (n * n) as u64, 0)?,
-    );
-    ctx.upload_f32(pa, &a)?;
-    ctx.upload_f32(pb, &b)?;
+    let pa = ctx.alloc_buffer::<f32>(n * n, 0)?;
+    let pb = ctx.alloc_buffer::<f32>(n * n, 0)?;
+    let pc = ctx.alloc_buffer::<f32>(n * n, 0)?;
+    ctx.upload(&pa, &a)?;
+    ctx.upload(&pb, &b)?;
 
     let stream = ctx.create_stream(0)?;
     println!("launching {n}x{n} tiled matmul on {:?}", path[0]);
     let g = (n / 16) as u32;
-    ctx.launch(
-        stream,
-        module,
-        "matmul16",
-        LaunchDims { grid: [g, g, 1], block: [16, 16, 1] },
-        &[Arg::Ptr(pa), Arg::Ptr(pb), Arg::Ptr(pc), Arg::U32(n as u32)],
-    )?;
+    ctx.launch(module, "matmul16")
+        .dims(LaunchDims { grid: [g, g, 1], block: [16, 16, 1] })
+        .arg(&pa)
+        .arg(&pb)
+        .arg(&pc)
+        .arg(n as u32)
+        .record(stream)?;
 
     for dst in 1..path.len() {
         std::thread::sleep(std::time::Duration::from_millis(15));
@@ -56,7 +53,7 @@ fn main() -> hetgpu::Result<()> {
     }
     ctx.synchronize(stream)?;
 
-    let c = ctx.download_f32(pc, n * n)?;
+    let c = ctx.download(&pc, n * n)?;
     let reference = suite::matmul_reference(&a, &b, n);
     let max_err = c
         .iter()

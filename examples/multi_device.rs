@@ -9,7 +9,6 @@
 
 use hetgpu::runtime::api::HetGpu;
 use hetgpu::runtime::device::DeviceKind;
-use hetgpu::runtime::launch::Arg;
 use hetgpu::sim::simt::LaunchDims;
 
 const SRC: &str = r#"
@@ -36,22 +35,25 @@ fn main() -> hetgpu::Result<()> {
 
     // ---- 1. one grid over two devices ----
     let n: u32 = 1 << 16;
-    let buf = ctx.malloc_on(4 * n as u64, 0)?;
+    let buf = ctx.alloc_buffer::<f32>(n as usize, 0)?;
     let init: Vec<f32> = (0..n).map(|i| i as f32 * 0.25).collect();
-    ctx.upload_f32(buf, &init)?;
+    ctx.upload(&buf, &init)?;
 
     let coord = ctx.coordinator();
     let dims = LaunchDims::d1(n / 256, 256);
     for (d, r) in coord.plan(dims.grid_size(), &[0, 1])? {
         println!("shard plan: device {d} ({:?}) owns blocks {}..{}", kinds[d], r.lo, r.hi);
     }
-    let mut run = coord.launch_sharded(
-        module,
-        "scale",
-        dims,
-        &[Arg::Ptr(buf), Arg::U32(n)],
-        &[0, 1],
-    )?;
+    // The working-set hint names the only allocation this kernel touches,
+    // so the coordinator broadcasts and merges just that region instead
+    // of every live byte of unified memory.
+    let mut run = ctx
+        .launch(module, "scale")
+        .dims(dims)
+        .arg(&buf)
+        .arg(n)
+        .working_set(&[buf.ptr()])
+        .sharded(&[0, 1])?;
     let report = run.wait()?;
     println!(
         "sharded scale: {} warp-instructions over {} shards, critical path {} cycles",
@@ -59,20 +61,20 @@ fn main() -> hetgpu::Result<()> {
         report.per_shard.len(),
         report.merged.device_cycles
     );
-    let out = ctx.download_f32(buf, 4)?;
+    let out = ctx.download(&buf, 4)?;
     println!("merged result head: {out:?}");
 
     // ---- 2. rebalance a shard mid-run onto a different device kind ----
     let m: u32 = 64;
-    let data = ctx.malloc_on(4 * m as u64, 0)?;
-    ctx.upload_f32(data, &vec![1.0f32; m as usize])?;
-    let mut run = coord.launch_sharded(
-        module,
-        "persist",
-        LaunchDims::d1(2, 32),
-        &[Arg::Ptr(data), Arg::U32(200_000)],
-        &[0, 1],
-    )?;
+    let data = ctx.alloc_buffer::<f32>(m as usize, 0)?;
+    ctx.upload(&data, &vec![1.0f32; m as usize])?;
+    let mut run = ctx
+        .launch(module, "persist")
+        .dims(LaunchDims::d1(2, 32))
+        .arg(&data)
+        .arg(200_000u32)
+        .working_set(&[data.ptr()])
+        .sharded(&[0, 1])?;
     std::thread::sleep(std::time::Duration::from_millis(30));
     let live = run.rebalance(1, 2)?; // AMD shard -> Tenstorrent
     println!(
@@ -85,7 +87,7 @@ fn main() -> hetgpu::Result<()> {
         "persist finished; {} shard(s) rebalanced, merged {} warp-instructions",
         report.rebalanced, report.merged.warp_instructions
     );
-    let head = ctx.download_f32(data, 4)?;
+    let head = ctx.download(&data, 4)?;
     println!("persist result head: {head:?}");
     Ok(())
 }

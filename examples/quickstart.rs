@@ -7,7 +7,6 @@
 
 use hetgpu::runtime::api::HetGpu;
 use hetgpu::runtime::device::DeviceKind;
-use hetgpu::runtime::launch::Arg;
 use hetgpu::sim::simt::LaunchDims;
 
 fn main() -> hetgpu::Result<()> {
@@ -29,22 +28,24 @@ fn main() -> hetgpu::Result<()> {
 
     println!("hetGPU quickstart: one binary, {} devices\n", ctx.device_count());
     for dev in 0..ctx.device_count() {
-        let x = ctx.malloc_on(4 * n as u64, dev)?;
-        let y = ctx.malloc_on(4 * n as u64, dev)?;
-        ctx.upload_f32(x, &xs)?;
-        ctx.upload_f32(y, &ys)?;
+        // Typed buffers (API v2): element-typed, staleness-checked handles.
+        let x = ctx.alloc_buffer::<f32>(n, dev)?;
+        let y = ctx.alloc_buffer::<f32>(n, dev)?;
+        ctx.upload(&x, &xs)?;
+        ctx.upload(&y, &ys)?;
 
         let stream = ctx.create_stream(dev)?;
-        ctx.launch(
-            stream,
-            module,
-            "saxpy",
-            LaunchDims::d1(n as u32 / 256, 256),
-            &[Arg::Ptr(x), Arg::Ptr(y), Arg::F32(2.0), Arg::U32(n as u32)],
-        )?;
+        // Builder launch: dims + typed args, recorded on a stream.
+        ctx.launch(module, "saxpy")
+            .dims(LaunchDims::d1(n as u32 / 256, 256))
+            .arg(&x)
+            .arg(&y)
+            .arg(2.0f32)
+            .arg(n as u32)
+            .record(stream)?;
         ctx.synchronize(stream)?;
 
-        let out = ctx.download_f32(y, n)?;
+        let out = ctx.download(&y, n)?;
         let ok = (0..n).all(|i| out[i] == 2.0 * i as f32 + 1.0);
         let stats = ctx.stream_stats(stream)?;
         println!(
@@ -55,8 +56,10 @@ fn main() -> hetgpu::Result<()> {
             stats.wall_micros,
         );
         assert!(ok, "wrong results on device {dev}");
-        ctx.free(x)?;
-        ctx.free(y)?;
+        // Full lifecycle: buffers and stream are destroyed, not leaked.
+        ctx.free_buffer(&x)?;
+        ctx.free_buffer(&y)?;
+        ctx.destroy_stream(stream)?;
     }
     println!("\nall devices produced identical, correct results");
     Ok(())

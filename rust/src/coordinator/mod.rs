@@ -4,13 +4,22 @@
 //!
 //! [`Coordinator::launch_sharded`] splits one logical grid into contiguous
 //! per-device block ranges (proportional to each device's dispatch worker
-//! count, see [`shard::split_grid`]), broadcasts the current contents of
-//! every unified-memory allocation to the participating devices (unified
-//! virtual addressing means the bytes land at the *same* addresses — no
-//! pointer fix-up), and records one shard launch per device in the event
-//! graph. The executor pool runs the shards concurrently; each shard skips
-//! the blocks it does not own via resume directives, the same mechanism
-//! migration resume uses.
+//! count, see [`shard::split_grid`]), captures a host **baseline** of the
+//! launch's memory regions, and records the whole broadcast + execute
+//! plan into the event graph: every shard stream gets asynchronous **peer
+//! copies** pulling the regions from their home devices (unified virtual
+//! addressing means the bytes land at the *same* addresses — no pointer
+//! fix-up), and every shard launch carries cross-stream dependency edges
+//! on *all* broadcast copies, so no shard starts computing while any
+//! device is still being seeded. The executor pool then runs the shards
+//! concurrently; each shard skips the blocks it does not own via resume
+//! directives, the same mechanism migration resume uses.
+//!
+//! The regions moved are either **every live allocation** (conservative
+//! default — pointers may hide inside buffers, so argument reachability
+//! alone is unsound) or the launch's **working-set hint**
+//! (`LaunchBuilder::working_set`), which cuts the per-launch broadcast +
+//! merge from O(total memory) to O(working set).
 //!
 //! Because a shard is an ordinary (partial) launch on an ordinary stream,
 //! the whole checkpoint machinery applies to it: [`ShardedLaunch::rebalance`]
@@ -20,25 +29,27 @@
 //! transport a cross-host orchestrator would use — and resumes it on
 //! another device, including across SIMT↔Tensix kinds.
 //!
-//! [`ShardedLaunch::wait`] joins the shards: per-shard memory deltas
-//! (relative to the pre-launch baseline) are merged back into the home
-//! allocations in shard order, and per-shard [`CostReport`]s are merged
-//! (sums for totals, max for the critical path). For grids whose blocks
-//! write disjoint locations — the common data-parallel shape — the merged
-//! memory is bit-identical to a single-device run. Cross-shard global
-//! atomics are the documented limitation: shards run against separate
-//! memory images, so read-modify-write traffic between blocks of
-//! *different* shards does not compose (blocks within one shard still
-//! share real atomics).
+//! [`ShardedLaunch::wait`] joins the shards with **overlapped merges**:
+//! each shard's stream carries asynchronous device→host copies
+//! (`memcpy_d2h_async` into pinned buffers) queued behind its launch, so
+//! a finished shard's image streams out and merges on the host while
+//! trailing shards are still executing. Per-shard deltas (relative to the
+//! pre-launch baseline) are folded in shard order — deterministic for any
+//! executor interleaving, bit-identical to a synchronous join. Joining
+//! also **destroys the shards' internal streams and retires their
+//! events**, so a service calling `launch_sharded` in a loop holds the
+//! event graph at a constant size (the v1 surface leaked both, growing
+//! the graph's stream list and status map per iteration).
 
 pub mod shard;
 
 use crate::error::{HetError, Result};
 use crate::migrate::blob;
 use crate::migrate::state::Snapshot;
-use crate::runtime::api::{HetGpu, ModuleHandle, StreamHandle};
-use crate::runtime::launch::Arg;
-use crate::sim::simt::LaunchDims;
+use crate::runtime::api::{HetGpu, StreamHandle};
+use crate::runtime::events::EventId;
+use crate::runtime::launch::LaunchSpec;
+use crate::runtime::memory::{GpuPtr, PinnedBuffer};
 use crate::sim::snapshot::CostReport;
 use shard::ShardRange;
 use std::sync::atomic::Ordering;
@@ -46,17 +57,19 @@ use std::sync::atomic::Ordering;
 /// One shard of a sharded launch.
 #[derive(Debug)]
 pub struct Shard {
-    /// Internal stream the shard's commands are recorded on.
+    /// Internal stream the shard's commands are recorded on (destroyed
+    /// when the launch is joined).
     pub stream: StreamHandle,
     /// Device currently executing the shard (updated by rebalance).
     pub device: usize,
     pub range: ShardRange,
-    /// The shard launch's graph event.
-    pub event: crate::runtime::events::EventId,
+    /// The shard launch's graph event (retired when the launch is
+    /// joined).
+    pub event: EventId,
 }
 
-/// Pre-launch contents of one unified-memory allocation (the merge
-/// baseline), captured from its resident device.
+/// Pre-launch contents of one moved region (the merge baseline), captured
+/// from its resident device.
 struct BaselineRegion {
     addr: u64,
     home: usize,
@@ -75,12 +88,20 @@ pub struct ShardReport {
     pub rebalanced: usize,
 }
 
-/// An in-flight grid sharded over several devices.
+/// An in-flight grid sharded over several devices. Join with
+/// [`ShardedLaunch::wait`]; dropping an unjoined launch synchronizes and
+/// destroys its internal streams best-effort.
 pub struct ShardedLaunch<'a> {
     ctx: &'a HetGpu,
+    /// Live shard descriptors. After [`ShardedLaunch::wait`] succeeds the
+    /// stream/event handles in here are stale (the join destroys them).
     pub shards: Vec<Shard>,
     baseline: Vec<BaselineRegion>,
     rebalanced: usize,
+    /// Pinned host buffers of the join copies, `[shard][region]`;
+    /// recorded once even if `wait` is retried around a rebalance.
+    join: Option<Vec<Vec<PinnedBuffer>>>,
+    joined: bool,
 }
 
 /// Coordinator view of a [`HetGpu`] context (see module docs).
@@ -109,54 +130,105 @@ impl<'a> Coordinator<'a> {
         Ok(shard::split_grid(grid_size, &weights))
     }
 
-    /// Split `dims` into per-device shards, broadcast memory, and record
-    /// the shard launches (they start executing immediately on the shared
-    /// executor pool). Call [`ShardedLaunch::wait`] to join and merge.
+    /// Split `spec`'s grid into per-device shards, record the broadcast
+    /// (peer copies) and the shard launches into the event graph (they
+    /// start executing immediately on the shared executor pool), and
+    /// return the in-flight launch. `working_set` restricts the moved
+    /// regions; `None` conservatively moves every live allocation.
+    /// Usually reached through `LaunchBuilder::sharded`.
     pub fn launch_sharded(
         &self,
-        module: ModuleHandle,
-        kernel: &str,
-        dims: LaunchDims,
-        args: &[Arg],
+        spec: LaunchSpec,
+        working_set: Option<&[GpuPtr]>,
         devices: &[usize],
     ) -> Result<ShardedLaunch<'a>> {
-        let (grid_size, _) = dims.validate()?;
+        let (grid_size, _) = spec.dims.validate()?;
         let plan = self.plan(grid_size, devices)?;
+        let rt = self.ctx.runtime();
 
-        // Baseline capture: the current bytes of every allocation, read
-        // from its resident device — both the broadcast source and the
-        // merge reference. The exclusive gate orders the capture after any
+        // Resolve the regions to move: the working-set hint, or every
+        // live allocation.
+        let regions: Vec<(u64, u64, usize)> = match working_set {
+            None => rt.memory.all_allocations(),
+            Some(ptrs) => {
+                let mut v = Vec::with_capacity(ptrs.len());
+                for p in ptrs {
+                    let (base, size, home) = rt.memory.lookup(*p)?;
+                    v.push((base, size, home));
+                }
+                v.sort_unstable();
+                v.dedup();
+                v
+            }
+        };
+
+        // Baseline capture: the current bytes of every region, read from
+        // its resident device — both the broadcast source and the merge
+        // reference. The exclusive gate orders the capture after any
         // in-flight kernel on that device (a torn baseline would corrupt
         // the delta merge).
-        let mut baseline = Vec::new();
-        for (addr, size, home) in self.ctx.runtime().memory.all_allocations() {
-            let dev = self.ctx.runtime().device(home)?;
+        let mut baseline = Vec::with_capacity(regions.len());
+        for (addr, size, home) in regions {
+            let dev = rt.device(home)?;
             let _gate = dev.exec.write().unwrap();
             let mut bytes = vec![0u8; size as usize];
             dev.mem.read_bytes_into(addr, &mut bytes)?;
             baseline.push(BaselineRegion { addr, home, bytes });
         }
 
-        // Broadcast to every participating device that is not the home of
-        // the region (unified addresses: same offsets everywhere),
-        // likewise excluding running kernels.
-        for &(d, _) in &plan {
-            let dev = self.ctx.runtime().device(d)?;
-            let _gate = dev.exec.write().unwrap();
-            for region in &baseline {
-                if region.home != d {
-                    dev.mem.write_bytes(region.addr, &region.bytes)?;
+        // Record the broadcast + launches. `created` tracks every internal
+        // stream so a mid-function error destroys them instead of leaking
+        // graph slots (no ShardedLaunch exists yet to run Drop cleanup).
+        let mut created: Vec<StreamHandle> = Vec::new();
+        let ctx = self.ctx;
+        let record_all = |created: &mut Vec<StreamHandle>| -> Result<Vec<Shard>> {
+            // Each shard stream pulls every region it does not already
+            // home via an async peer copy; the copies of different shards
+            // overlap on the executor pool.
+            let mut broadcast_events: Vec<EventId> = Vec::new();
+            for &(d, _) in &plan {
+                let stream = ctx.create_stream(d)?;
+                created.push(stream);
+                for region in &baseline {
+                    if region.home != d {
+                        let ev = ctx.memcpy_peer_async(
+                            stream,
+                            GpuPtr(region.addr),
+                            region.bytes.len() as u64,
+                            region.home,
+                        )?;
+                        broadcast_events.push(ev);
+                    }
                 }
             }
+            // Every launch waits on *all* broadcast copies (cross-stream
+            // dependency edges): a shard on one device must not start
+            // writing a region while another shard's copy still reads
+            // that region from its home arena.
+            let mut shards = Vec::with_capacity(plan.len());
+            for (&(d, range), &stream) in plan.iter().zip(created.iter()) {
+                let event = ctx.record_launch(stream, spec.clone(), Some(range), &broadcast_events)?;
+                shards.push(Shard { stream, device: d, range, event });
+            }
+            Ok(shards)
+        };
+        match record_all(&mut created) {
+            Ok(shards) => Ok(ShardedLaunch {
+                ctx: self.ctx,
+                shards,
+                baseline,
+                rebalanced: 0,
+                join: None,
+                joined: false,
+            }),
+            Err(e) => {
+                for s in created {
+                    let _ = self.ctx.synchronize(s);
+                    let _ = self.ctx.destroy_stream(s);
+                }
+                Err(e)
+            }
         }
-
-        let mut shards = Vec::with_capacity(plan.len());
-        for (d, range) in plan {
-            let stream = self.ctx.create_stream(d)?;
-            let event = self.ctx.launch_shard(stream, module, kernel, dims, args, range)?;
-            shards.push(Shard { stream, device: d, range, event });
-        }
-        Ok(ShardedLaunch { ctx: self.ctx, shards, baseline, rebalanced: 0 })
     }
 }
 
@@ -171,6 +243,9 @@ impl ShardedLaunch<'_> {
         if idx >= self.shards.len() {
             return Err(HetError::runtime("bad shard index"));
         }
+        if self.joined {
+            return Err(HetError::runtime("sharded launch already joined"));
+        }
         if self.shards.iter().any(|s| s.device == dst_device) {
             return Err(HetError::runtime(format!(
                 "device {dst_device} already executes a shard"
@@ -181,14 +256,15 @@ impl ShardedLaunch<'_> {
 
         // Checkpoint protocol on the shard's stream (paper §4.2).
         src.pause.store(true, Ordering::SeqCst);
-        let quiesce = self.ctx.with_stream(shard.stream, |s| s.quiesce());
+        let quiesce = self.ctx.graph().quiesce(shard.stream);
         src.pause.store(false, Ordering::SeqCst);
         quiesce?;
-        let paused = self.ctx.with_stream(shard.stream, |s| s.take_paused())?;
+        let paused = self.ctx.graph().take_paused(shard.stream)?;
         let live = paused.is_some();
 
-        // Shard-scoped snapshot: the shard device's image of every region
-        // (residency bookkeeping untouched — these are broadcast copies).
+        // Shard-scoped snapshot: the shard device's image of every moved
+        // region (residency bookkeeping untouched — these are broadcast
+        // copies).
         let mut allocations = Vec::with_capacity(self.baseline.len());
         {
             let _gate = src.exec.write().unwrap();
@@ -198,11 +274,16 @@ impl ShardedLaunch<'_> {
                 allocations.push((region.addr, bytes));
             }
         }
-        let snap =
-            Snapshot { src_device: shard.device, paused, allocations, shard: Some(shard.range) };
+        let snap = Snapshot {
+            stream: shard.stream,
+            src_device: shard.device,
+            paused,
+            allocations,
+            shard: Some(shard.range),
+        };
         // Streams that observed the device-wide pause collaterally (user
         // streams co-located with the shard) resume in place.
-        self.ctx.graph().resume_collateral(snap.src_device, shard.stream.0);
+        self.ctx.graph().resume_collateral(snap.src_device, shard.stream);
 
         // Through the wire format — the transport a cross-host
         // orchestrator would ship between machines.
@@ -214,23 +295,56 @@ impl ShardedLaunch<'_> {
                 dst.mem.write_bytes(*addr, bytes)?;
             }
         }
-        self.ctx.with_stream(shard.stream, |s| s.resume(dst_device, snap.paused))?;
+        self.ctx.graph().resume(shard.stream, dst_device, snap.paused)?;
         shard.device = dst_device;
         self.rebalanced += 1;
         Ok(live)
     }
 
     /// Join all shards, merge their memory deltas into the home
-    /// allocations, and merge cost reports. Takes `&mut self` so a
+    /// allocations, and merge cost reports; then destroy the internal
+    /// shard streams and retire their events (the handles in
+    /// [`ShardedLaunch::shards`] go stale). Takes `&mut self` so a
     /// paused-shard error leaves the launch usable — the caller can
     /// `rebalance` (or resume) the shard and wait again, as the error
     /// message instructs.
+    ///
+    /// The merge **overlaps trailing shards**: each shard's stream
+    /// carries async D2H copies queued behind its launch, so an early
+    /// shard's image is merged on the host while later shards still
+    /// execute.
     pub fn wait(&mut self) -> Result<ShardReport> {
+        if self.joined {
+            return Err(HetError::runtime("sharded launch already joined"));
+        }
         let rt = self.ctx.runtime();
+
+        // Record the join copies exactly once (idempotent across
+        // halted-shard retries): per shard, one async D2H per region into
+        // a pinned host buffer, stream-ordered behind the shard launch.
+        if self.join.is_none() {
+            let mut join = Vec::with_capacity(self.shards.len());
+            for shard in &self.shards {
+                let mut copies = Vec::with_capacity(self.baseline.len());
+                for region in &self.baseline {
+                    let host = PinnedBuffer::new(region.bytes.len());
+                    self.ctx.memcpy_d2h_async(shard.stream, &host, GpuPtr(region.addr))?;
+                    copies.push(host);
+                }
+                join.push(copies);
+            }
+            self.join = Some(join);
+        }
+
+        // Join shards in block order, folding each shard's deltas as soon
+        // as its stream drains — trailing shards keep executing meanwhile.
         let mut per_shard = Vec::with_capacity(self.shards.len());
         let mut merged = CostReport::default();
-        for shard in &self.shards {
-            let halted = self.ctx.with_stream(shard.stream, |s| s.quiesce())?;
+        let mut result: Vec<Vec<u8>> =
+            self.baseline.iter().map(|r| r.bytes.clone()).collect();
+        let mut dirty = vec![false; self.baseline.len()];
+        for (si, shard) in self.shards.iter().enumerate() {
+            let halted = self.ctx.graph().quiesce(shard.stream)?;
             if halted {
                 return Err(HetError::runtime(format!(
                     "shard {}..{} is paused at a checkpoint — rebalance or resume it \
@@ -244,33 +358,54 @@ impl ShardedLaunch<'_> {
             merged.global_bytes += cost.global_bytes;
             merged.device_cycles = merged.device_cycles.max(cost.device_cycles);
             per_shard.push((shard.device, shard.range, cost));
-        }
 
-        // Merge memory: apply each shard's byte deltas (vs the pre-launch
-        // baseline) to the home image, in shard order — deterministic for
-        // any executor interleaving.
-        for region in &self.baseline {
-            let mut result = region.bytes.clone();
-            let mut dirty = false;
-            for shard in &self.shards {
-                let dev = rt.device(shard.device)?;
-                let _gate = dev.exec.write().unwrap();
-                let mut cur = vec![0u8; region.bytes.len()];
-                dev.mem.read_bytes_into(region.addr, &mut cur)?;
+            let copies = &self.join.as_ref().expect("join recorded above")[si];
+            for (ri, region) in self.baseline.iter().enumerate() {
+                let cur = copies[ri].to_vec();
+                let out = &mut result[ri];
                 for (i, (b, base)) in cur.iter().zip(&region.bytes).enumerate() {
                     if b != base {
-                        result[i] = *b;
-                        dirty = true;
+                        out[i] = *b;
+                        dirty[ri] = true;
                     }
                 }
             }
-            if dirty {
+        }
+
+        // Publish merged regions back to their home devices (exclusive
+        // gate: ordered against any in-flight kernels there).
+        for (ri, region) in self.baseline.iter().enumerate() {
+            if dirty[ri] {
                 let home = rt.device(region.home)?;
                 let _gate = home.exec.write().unwrap();
-                home.mem.write_bytes(region.addr, &result)?;
+                home.mem.write_bytes(region.addr, &result[ri])?;
             }
         }
 
+        // Reclaim the per-shard resources — without this, a
+        // `launch_sharded` loop grows the event graph's stream table and
+        // event-status map per iteration (the ROADMAP leak).
+        for shard in &self.shards {
+            let _ = self.ctx.destroy_stream(shard.stream);
+        }
+        self.joined = true;
+
         Ok(ShardReport { merged, per_shard, rebalanced: self.rebalanced })
+    }
+}
+
+impl Drop for ShardedLaunch<'_> {
+    fn drop(&mut self) {
+        if self.joined {
+            return;
+        }
+        // Best-effort cleanup of an abandoned launch: drain and destroy
+        // the internal streams (a poisoned shard destroys fine; a shard
+        // still halted at a checkpoint refuses and leaks deliberately —
+        // its captured kernel state has nowhere to go).
+        for shard in &self.shards {
+            let _ = self.ctx.synchronize(shard.stream);
+            let _ = self.ctx.destroy_stream(shard.stream);
+        }
     }
 }

@@ -33,6 +33,18 @@ pub enum HetError {
     /// Runtime API misuse or resource exhaustion.
     Runtime { msg: String },
 
+    /// A typed resource handle (stream, event, module, buffer) is stale:
+    /// it was destroyed, its slot was reused by a newer resource of the
+    /// same type, or it never came from this context. Generational
+    /// handles (API v2) detect all three instead of silently indexing a
+    /// table.
+    InvalidHandle {
+        /// Resource type the handle names ("stream", "event", "module",
+        /// "buffer").
+        resource: &'static str,
+        msg: String,
+    },
+
     /// Checkpoint/restore/migration failures.
     Migrate { msg: String },
 
@@ -65,6 +77,9 @@ impl fmt::Display for HetError {
                 write!(f, "device fault on {device}: {msg}")
             }
             HetError::Runtime { msg } => write!(f, "runtime error: {msg}"),
+            HetError::InvalidHandle { resource, msg } => {
+                write!(f, "invalid {resource} handle: {msg}")
+            }
             HetError::Migrate { msg } => write!(f, "migration error: {msg}"),
             HetError::Blob { msg } => write!(f, "state blob error: {msg}"),
             HetError::Xla(msg) => write!(f, "xla native error: {msg}"),
@@ -96,6 +111,14 @@ impl HetError {
     /// Convenience constructor for migration errors.
     pub fn migrate(msg: impl Into<String>) -> Self {
         HetError::Migrate { msg: msg.into() }
+    }
+    /// Convenience constructor for stale/foreign handle errors.
+    pub fn invalid_handle(resource: &'static str, msg: impl Into<String>) -> Self {
+        HetError::InvalidHandle { resource, msg: msg.into() }
+    }
+    /// Whether this error reports a stale or foreign resource handle.
+    pub fn is_invalid_handle(&self) -> bool {
+        matches!(self, HetError::InvalidHandle { .. })
     }
     /// Convenience constructor for device faults.
     pub fn fault(device: impl Into<String>, msg: impl Into<String>) -> Self {

@@ -13,11 +13,23 @@
 //! * [`isa`] — the simulated device instruction sets backends emit.
 //! * [`backends`] — JIT translation modules hetIR → device ISA.
 //! * [`sim`] — the device simulators (hardware substitution, DESIGN.md §2).
-//! * [`runtime`] — device registry, memory, event-graph streams, launch,
-//!   JIT cache.
+//! * [`runtime`] — the driver API v2 and its machinery:
+//!   * [`runtime::api`] — the public surface: generational typed handles
+//!     (module / buffer / stream / event) with full create→destroy
+//!     lifecycles, the `LaunchBuilder` launch surface, and the unified
+//!     copy surface (typed `upload`/`download`, sync/async H2D + D2H,
+//!     async peer copies);
+//!   * [`runtime::events`] — the event-graph stream executor: per-stream
+//!     FIFO over a command DAG, cross-stream `wait_event` edges, halt /
+//!     resume for checkpoints, and slot-reuse tables that keep stream and
+//!     event state bounded by *live* handles (stale handles fail with
+//!     `HetError::InvalidHandle`);
+//!   * plus device registry, unified memory, and the JIT cache.
 //! * [`coordinator`] — multi-device grid sharding + shard rebalance (the
-//!   paper's L3 coordination layer).
-//! * [`migrate`] — device-neutral snapshots, checkpoint/restore/migrate.
+//!   paper's L3 coordination layer): peer-copy broadcasts, working-set
+//!   hints, and joins that overlap merges with trailing shards.
+//! * [`migrate`] — device-neutral snapshots (named by stream handle),
+//!   checkpoint/restore/migrate, and the versioned wire blob.
 //! * [`xla_native`] — PJRT/XLA "vendor native" path + numerics oracle.
 
 pub mod backends;

@@ -6,7 +6,6 @@
 use hetgpu::hetir::printer;
 use hetgpu::runtime::api::HetGpu;
 use hetgpu::runtime::device::DeviceKind;
-use hetgpu::runtime::launch::Arg;
 use hetgpu::sim::simt::LaunchDims;
 use hetgpu::suite;
 use std::process::ExitCode;
@@ -122,6 +121,8 @@ fn cmd_run_suite(args: &[String]) -> hetgpu::Result<()> {
                 return Err(hetgpu::HetError::runtime(format!("{kernel} failed")));
             }
         }
+        // Full lifecycle: the per-device stream is destroyed, not leaked.
+        ctx.destroy_stream(stream)?;
     }
     Ok(())
 }
@@ -135,23 +136,21 @@ fn cmd_migrate_demo(args: &[String]) -> hetgpu::Result<()> {
     let n = 128usize;
     let a = suite::gen_f32(n * n, 71);
     let b = suite::gen_f32(n * n, 72);
-    let (pa, pb, pc) = (
-        ctx.malloc_on(4 * (n * n) as u64, 0)?,
-        ctx.malloc_on(4 * (n * n) as u64, 0)?,
-        ctx.malloc_on(4 * (n * n) as u64, 0)?,
-    );
-    ctx.upload_f32(pa, &a)?;
-    ctx.upload_f32(pb, &b)?;
+    let pa = ctx.alloc_buffer::<f32>(n * n, 0)?;
+    let pb = ctx.alloc_buffer::<f32>(n * n, 0)?;
+    let pc = ctx.alloc_buffer::<f32>(n * n, 0)?;
+    ctx.upload(&pa, &a)?;
+    ctx.upload(&pb, &b)?;
     let stream = ctx.create_stream(0)?;
     println!("launching {n}x{n} tiled matmul on {}", from.name());
     let g = (n / 16) as u32;
-    ctx.launch(
-        stream,
-        module,
-        "matmul16",
-        LaunchDims { grid: [g, g, 1], block: [16, 16, 1] },
-        &[Arg::Ptr(pa), Arg::Ptr(pb), Arg::Ptr(pc), Arg::U32(n as u32)],
-    )?;
+    ctx.launch(module, "matmul16")
+        .dims(LaunchDims { grid: [g, g, 1], block: [16, 16, 1] })
+        .arg(&pa)
+        .arg(&pb)
+        .arg(&pc)
+        .arg(n as u32)
+        .record(stream)?;
     std::thread::sleep(std::time::Duration::from_millis(20));
     let r = ctx.migrate(stream, 1)?;
     println!(
@@ -162,7 +161,7 @@ fn cmd_migrate_demo(args: &[String]) -> hetgpu::Result<()> {
         r.restore_us
     );
     ctx.synchronize(stream)?;
-    let c = ctx.download_f32(pc, n * n)?;
+    let c = ctx.download(&pc, n * n)?;
     let reference = suite::matmul_reference(&a, &b, n);
     let max_err = c.iter().zip(&reference).map(|(x, y)| (x - y).abs()).fold(0f32, f32::max);
     println!("max |err| vs CPU reference after migration: {max_err:.2e}");

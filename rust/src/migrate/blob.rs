@@ -7,9 +7,10 @@
 //!
 //! ```text
 //! "HGPU" | u32 version
+//! | u32 src_device | u64 stream handle           (v3: generational handle)
 //! | u8 has_shard | [shard: lo u32, hi u32]      (v2: coordinator shards)
 //! | u8 has_kernel
-//! |   [kernel: module u32, name, dims 6×u32, args, tensix hint]
+//! |   [kernel: module handle u64 (v3), name, dims 6×u32, args, tensix hint]
 //! |   [blocks: u32 count, per block: tag u8
 //! |      (2 ⇒ barrier u32, thread count, per thread: reg count,
 //! |         per reg: vreg u32, type tag u8, bits u64; shared bytes)]
@@ -24,13 +25,16 @@ use crate::isa::tensix_isa::TensixMode;
 use crate::migrate::state::Snapshot;
 use crate::runtime::launch::{Arg, LaunchSpec};
 use crate::runtime::memory::GpuPtr;
-use crate::runtime::stream::PausedKernel;
+use crate::runtime::stream::{PausedKernel, StreamHandle};
+use crate::runtime::ModuleHandle;
 use crate::sim::simt::LaunchDims;
 use crate::sim::snapshot::{BlockCapture, BlockState, ThreadCapture};
 
 const MAGIC: &[u8; 4] = b"HGPU";
-/// v2 added the optional shard range (coordinator shard-scoped snapshots).
-const VERSION: u32 = 2;
+/// v2 added the optional shard range (coordinator shard-scoped
+/// snapshots); v3 carries the generational stream handle and widens the
+/// module reference to a generational handle (API v2).
+const VERSION: u32 = 3;
 
 // ---- writer ----
 
@@ -212,6 +216,7 @@ pub fn serialize(snap: &Snapshot) -> Vec<u8> {
     w.buf.extend_from_slice(MAGIC);
     w.u32(VERSION);
     w.u32(snap.src_device as u32);
+    w.u64(snap.stream.raw());
     match snap.shard {
         None => w.u8(0),
         Some(r) => {
@@ -224,7 +229,7 @@ pub fn serialize(snap: &Snapshot) -> Vec<u8> {
         None => w.u8(0),
         Some(p) => {
             w.u8(1);
-            w.u32(p.spec.module as u32);
+            w.u64(p.spec.module.raw());
             w.string(&p.spec.kernel);
             for d in p.spec.dims.grid.iter().chain(p.spec.dims.block.iter()) {
                 w.u32(*d);
@@ -277,6 +282,7 @@ pub fn deserialize(buf: &[u8]) -> Result<Snapshot> {
         return Err(HetError::Blob { msg: format!("unsupported version {ver}") });
     }
     let src_device = r.u32()? as usize;
+    let stream = StreamHandle::from_raw(r.u64()?);
     let shard = match r.u8()? {
         0 => None,
         1 => {
@@ -290,7 +296,7 @@ pub fn deserialize(buf: &[u8]) -> Result<Snapshot> {
         _ => return Err(r.err("bad shard tag")),
     };
     let paused = if r.u8()? == 1 {
-        let module = r.u32()? as usize;
+        let module = ModuleHandle::from_raw(r.u64()?);
         let kernel = r.string()?;
         let mut dims = [0u32; 6];
         for d in dims.iter_mut() {
@@ -364,7 +370,7 @@ pub fn deserialize(buf: &[u8]) -> Result<Snapshot> {
     if r.pos != buf.len() {
         return Err(r.err("trailing bytes"));
     }
-    Ok(Snapshot { src_device, paused, allocations, shard })
+    Ok(Snapshot { stream, src_device, paused, allocations, shard })
 }
 
 #[cfg(test)]
@@ -373,10 +379,11 @@ mod tests {
 
     fn sample_snapshot() -> Snapshot {
         Snapshot {
+            stream: StreamHandle::new(2, 9),
             src_device: 1,
             paused: Some(PausedKernel {
                 spec: LaunchSpec {
-                    module: 3,
+                    module: ModuleHandle::from_raw(3),
                     kernel: "iter_mm".into(),
                     dims: LaunchDims::d1(4, 64),
                     args: vec![
@@ -417,9 +424,11 @@ mod tests {
         let blob = serialize(&s);
         let s2 = deserialize(&blob).unwrap();
         assert_eq!(s.src_device, s2.src_device);
+        assert_eq!(s.stream, s2.stream, "generational stream handle must roundtrip");
         assert_eq!(s.shard, s2.shard);
         assert_eq!(s.allocations, s2.allocations);
         let (p, p2) = (s.paused.unwrap(), s2.paused.unwrap());
+        assert_eq!(p.spec.module, p2.spec.module, "module handle must roundtrip");
         assert_eq!(p.spec.kernel, p2.spec.kernel);
         assert_eq!(p.spec.args, p2.spec.args);
         assert_eq!(p.spec.dims, p2.spec.dims);
@@ -430,6 +439,7 @@ mod tests {
     #[test]
     fn roundtrip_idle_snapshot() {
         let s = Snapshot {
+            stream: StreamHandle::from_raw(0),
             src_device: 0,
             paused: None,
             allocations: vec![(64, vec![9; 3])],

@@ -6,12 +6,17 @@
 //! instantiate the computation on a *different* GPU architecture.
 
 use crate::coordinator::shard::ShardRange;
-use crate::runtime::stream::PausedKernel;
+use crate::runtime::stream::{PausedKernel, StreamHandle};
 use crate::sim::snapshot::BlockState;
 
 /// A complete captured stream state.
 #[derive(Debug, Clone)]
 pub struct Snapshot {
+    /// Generational handle of the stream the snapshot was taken from
+    /// (API v2: snapshots name streams by handle, so `restore` needs no
+    /// separate stream argument). Only meaningful inside the capturing
+    /// context; cross-context restores rebind via `restore_into`.
+    pub stream: StreamHandle,
     /// Device the snapshot was taken on.
     pub src_device: usize,
     /// The kernel frozen mid-execution (None if the stream was idle or
@@ -25,6 +30,20 @@ pub struct Snapshot {
 }
 
 impl Snapshot {
+    /// Rebind the captured kernel's module handle — required when
+    /// restoring a snapshot in a **different context** than the one that
+    /// captured it: generational handles carry no context identity, so a
+    /// foreign `(slot, generation)` pair could coincidentally resolve to
+    /// an unrelated module loaded by the destination context. A
+    /// cross-context restore should pass the destination's handle for
+    /// the same binary here before calling `restore_into`.
+    pub fn with_module(mut self, module: crate::runtime::ModuleHandle) -> Snapshot {
+        if let Some(p) = &mut self.paused {
+            p.spec.module = module;
+        }
+        self
+    }
+
     /// Total bytes of captured register + shared-memory state (the paper's
     /// §8 scalability discussion measures exactly this).
     pub fn register_bytes(&self) -> u64 {
@@ -125,7 +144,13 @@ mod tests {
 
     #[test]
     fn empty_snapshot_counts() {
-        let s = Snapshot { src_device: 0, paused: None, allocations: vec![], shard: None };
+        let s = Snapshot {
+            stream: StreamHandle::from_raw(0),
+            src_device: 0,
+            paused: None,
+            allocations: vec![],
+            shard: None,
+        };
         assert_eq!(s.register_bytes(), 0);
         assert_eq!(s.suspended_blocks(), 0);
     }

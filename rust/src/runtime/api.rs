@@ -1,45 +1,77 @@
-//! The public hetGPU API — the CUDA-like abstraction layer of paper §4.3.
+//! The public hetGPU API v2 — the CUDA-driver-style abstraction layer of
+//! paper §4.3, rebuilt around **generational typed handles with full
+//! lifecycles**.
 //!
 //! `HetGpu` is the context a program links against (`libhetgpu.so` in the
-//! paper): device discovery, module loading (from CUDA source or hetIR
-//! text), unified memory (`malloc`/`memcpy`), stream creation, kernel
-//! launch, and the checkpoint/migration entry points.
+//! paper). Every resource it hands out is a `{slot, generation}` handle
+//! backed by a slot-reuse table, with a matching destroy path:
+//!
+//! | resource | create                         | destroy                  |
+//! |----------|--------------------------------|--------------------------|
+//! | module   | [`HetGpu::load_module`]        | [`HetGpu::unload_module`]|
+//! | buffer   | [`HetGpu::alloc_buffer`]       | [`HetGpu::free_buffer`]  |
+//! | stream   | [`HetGpu::create_stream`]      | [`HetGpu::destroy_stream`]|
+//! | event    | recorded by launches/copies    | [`HetGpu::retire_event`] |
+//!
+//! Stale handles of every type — destroyed, double-destroyed, or minted
+//! before the slot was reused — fail with
+//! [`HetError::InvalidHandle`](crate::error::HetError::InvalidHandle)
+//! instead of silently indexing a table. Terminal event statuses are
+//! garbage-collected once **unreferenced**: an event stays queryable (=
+//! referenced) while its creator holds it, until [`HetGpu::retire_event`]
+//! or its stream's destruction. Internal events (coordinator shards,
+//! migration resumes) release themselves, so `launch_sharded` loops and
+//! migration loops hold the graph at constant size; a service recording
+//! forever on one *long-lived* stream should retire the `EventId`s it
+//! does not intend to query again (or periodically destroy/recreate the
+//! stream) — see [`HetGpu::graph_stats`] for the observability hook.
+//!
+//! Kernel launches go through the [`LaunchBuilder`] (dims, typed args,
+//! Tensix mode hint, coordinator working-set hint), and copies through a
+//! unified surface: generic typed [`HetGpu::upload`]/[`HetGpu::download`]
+//! over [`Buffer`], raw synchronous [`HetGpu::memcpy_h2d`]/
+//! [`HetGpu::memcpy_d2h`], and stream-ordered asynchronous
+//! [`HetGpu::memcpy_h2d_async`], [`HetGpu::memcpy_d2h_async`] (into
+//! pinned host buffers) and [`HetGpu::memcpy_peer_async`] (between device
+//! arenas).
 
 use crate::coordinator::shard::ShardRange;
-use crate::coordinator::Coordinator;
+use crate::coordinator::{Coordinator, ShardedLaunch};
 use crate::error::{HetError, Result};
 use crate::frontend;
 use crate::hetir::{self, module::Module};
+use crate::isa::tensix_isa::TensixMode;
 use crate::migrate::state::{MigrationReport, Snapshot};
 use crate::runtime::device::{Device, DeviceKind};
-use crate::runtime::events::{EventGraph, EventId, EventStatus, NodeKind};
+use crate::runtime::events::{copy_end, EventGraph, EventId, EventStatus, GraphStats, NodeKind};
 use crate::runtime::jit::JitCache;
 use crate::runtime::launch::{Arg, LaunchSpec};
-use crate::runtime::memory::{GpuPtr, MemoryManager};
-use crate::runtime::stream::{Stream, StreamStats};
-use crate::runtime::RuntimeInner;
+use crate::runtime::memory::{
+    pod_from_bytes, pod_to_bytes, Buffer, GpuPtr, MemoryManager, PinnedBuffer, Pod,
+};
+use crate::runtime::stream::StreamStats;
+use crate::runtime::{ModuleTable, RuntimeInner};
 use crate::sim::simt::LaunchDims;
 use std::sync::atomic::Ordering;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
+
+// Handle types live next to their backing tables; re-exported here so the
+// public API surface reads from one place (`api::{HetGpu, ModuleHandle,
+// StreamHandle, ...}`).
+pub use crate::runtime::stream::StreamHandle;
+pub use crate::runtime::ModuleHandle;
 use std::thread::JoinHandle;
 use std::time::Instant;
-
-/// Handle to a loaded hetIR module.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub struct ModuleHandle(pub usize);
-
-/// Handle to a stream.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub struct StreamHandle(pub usize);
 
 /// The hetGPU context.
 pub struct HetGpu {
     inner: Arc<RuntimeInner>,
-    /// The command DAG every stream records into.
+    /// The command DAG every stream records into — the single source of
+    /// stream identity (there is no second host-side registry to skew
+    /// against it).
     graph: Arc<EventGraph>,
     /// Executor pool draining the graph (joined on drop).
     executors: Vec<JoinHandle<()>>,
-    streams: Mutex<Vec<Stream>>,
 }
 
 impl HetGpu {
@@ -71,7 +103,7 @@ impl HetGpu {
             .collect();
         let inner = Arc::new(RuntimeInner {
             devices,
-            modules: std::sync::RwLock::new(Vec::new()),
+            modules: std::sync::RwLock::new(ModuleTable::new()),
             jit: JitCache::new(),
             memory: MemoryManager::new(crate::runtime::device::DEVICE_MEM_BYTES),
         });
@@ -79,7 +111,7 @@ impl HetGpu {
         // Enough executors that every device can be mid-launch while a few
         // extra streams overlap copies; executors block while a node runs.
         let executors = EventGraph::spawn_executors(&graph, (kinds.len() * 2).clamp(2, 8));
-        Ok(HetGpu { inner, graph, executors, streams: Mutex::new(Vec::new()) })
+        Ok(HetGpu { inner, graph, executors })
     }
 
     /// Create a context with all four paper devices.
@@ -134,32 +166,41 @@ impl HetGpu {
     /// Load an in-memory hetIR module (verifies every kernel first).
     pub fn load_module(&self, module: Module) -> Result<ModuleHandle> {
         hetir::verify::verify_module(&module)?;
-        let mut mods = self.inner.modules.write().unwrap();
-        mods.push(module);
-        Ok(ModuleHandle(mods.len() - 1))
+        Ok(self.inner.modules.write().unwrap().insert(module))
     }
 
-    // ---- memory ----
+    /// Unload a module: frees its IR, evicts its cached translations, and
+    /// stales its handle. Launches already queued against it fail with a
+    /// typed stale-handle error when the executor reaches them.
+    pub fn unload_module(&self, module: ModuleHandle) -> Result<()> {
+        let uid = self.inner.modules.write().unwrap().remove(module)?;
+        self.inner.jit.evict_module(uid);
+        Ok(())
+    }
 
-    /// Allocate device memory resident on `device`.
+    // ---- raw memory (pointer surface) ----
+
+    /// Allocate device memory resident on `device` (raw pointer surface;
+    /// prefer [`HetGpu::alloc_buffer`] for typed, staleness-checked I/O).
     pub fn malloc_on(&self, bytes: u64, device: usize) -> Result<GpuPtr> {
         self.inner.device(device)?;
         self.inner.memory.alloc(bytes, device)
     }
 
+    /// Free a raw allocation. Typed buffer handles minted for the same
+    /// allocation become stale.
     pub fn free(&self, ptr: GpuPtr) -> Result<()> {
         self.inner.memory.free(ptr)
     }
 
     /// Host→device copy (to wherever the buffer is resident). Synchronous
     /// and kernel-ordered: takes the device gate exclusively, so it waits
-    /// for in-flight launches on the device rather than racing them (the
-    /// pre-event-graph blocking behavior); use
+    /// for in-flight launches on the device rather than racing them; use
     /// [`HetGpu::memcpy_h2d_async`] for a stream-ordered copy that
     /// overlaps other streams' kernels.
     pub fn memcpy_h2d(&self, dst: GpuPtr, data: &[u8]) -> Result<()> {
         let (base, size, device) = self.inner.memory.lookup(dst)?;
-        if dst.0 + data.len() as u64 > base + size {
+        if copy_end(dst.0, data.len() as u64, "h2d")? > base.saturating_add(size) {
             return Err(HetError::runtime("h2d copy out of bounds"));
         }
         let dev = self.inner.device(device)?;
@@ -172,7 +213,7 @@ impl HetGpu {
     /// device, so it never reads a half-written image.
     pub fn memcpy_d2h(&self, out: &mut [u8], src: GpuPtr) -> Result<()> {
         let (base, size, device) = self.inner.memory.lookup(src)?;
-        if src.0 + out.len() as u64 > base + size {
+        if copy_end(src.0, out.len() as u64, "d2h")? > base.saturating_add(size) {
             return Err(HetError::runtime("d2h copy out of bounds"));
         }
         let dev = self.inner.device(device)?;
@@ -180,127 +221,176 @@ impl HetGpu {
         dev.mem.read_bytes_into(src.0, out)
     }
 
-    /// Typed convenience: upload an `f32` slice.
-    pub fn upload_f32(&self, dst: GpuPtr, data: &[f32]) -> Result<()> {
-        let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
-        self.memcpy_h2d(dst, &bytes)
+    // ---- typed buffers (unified copy surface) ----
+
+    /// Allocate a typed device buffer of `len` elements on `device`.
+    pub fn alloc_buffer<T: Pod>(&self, len: usize, device: usize) -> Result<Buffer<T>> {
+        self.inner.device(device)?;
+        let bytes = (len as u64)
+            .checked_mul(T::SIZE as u64)
+            .ok_or_else(|| HetError::runtime("buffer byte size overflows u64"))?;
+        let (ptr, slot, gen) = self.inner.memory.alloc_handle(bytes, device)?;
+        Ok(Buffer::new(slot, gen, ptr, len))
     }
 
-    /// Typed convenience: download an `f32` slice.
-    pub fn download_f32(&self, src: GpuPtr, n: usize) -> Result<Vec<f32>> {
-        let mut bytes = vec![0u8; n * 4];
-        self.memcpy_d2h(&mut bytes, src)?;
-        Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    /// Free a typed buffer; the handle (and every copy of it) goes stale.
+    /// Validation and release are one critical section, so racing frees
+    /// of copied handles cannot free an allocation that reused the range.
+    pub fn free_buffer<T: Pod>(&self, buf: &Buffer<T>) -> Result<()> {
+        self.inner.memory.free_by_handle(buf.slot, buf.gen)
     }
 
-    /// Typed convenience: upload a `u32` slice.
-    pub fn upload_u32(&self, dst: GpuPtr, data: &[u32]) -> Result<()> {
-        let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
-        self.memcpy_h2d(dst, &bytes)
+    /// Upload typed elements into a buffer (synchronous, kernel-ordered).
+    /// The handle is revalidated: freed or stale buffers fail with
+    /// `HetError::InvalidHandle`, writes beyond `buf.len()` fail closed.
+    pub fn upload<T: Pod>(&self, buf: &Buffer<T>, data: &[T]) -> Result<()> {
+        let (_base, _size, device) = self.inner.memory.resolve(buf.slot, buf.gen)?;
+        if data.len() > buf.len() {
+            return Err(HetError::runtime(format!(
+                "upload of {} elements exceeds buffer length {}",
+                data.len(),
+                buf.len()
+            )));
+        }
+        let bytes = pod_to_bytes(data);
+        let dev = self.inner.device(device)?;
+        let _gate = dev.exec.write().unwrap();
+        // Re-resolve under the device gate: a free + realloc that won the
+        // race between validation and the gate stales the handle here
+        // instead of the copy landing in whatever reused the range.
+        let (base, _size2, device2) = self.inner.memory.resolve(buf.slot, buf.gen)?;
+        if device2 != device {
+            return Err(HetError::runtime("buffer migrated concurrently during upload"));
+        }
+        dev.mem.write_bytes(base, &bytes)
     }
 
-    /// Typed convenience: download a `u32` slice.
-    pub fn download_u32(&self, src: GpuPtr, n: usize) -> Result<Vec<u32>> {
-        let mut bytes = vec![0u8; n * 4];
-        self.memcpy_d2h(&mut bytes, src)?;
-        Ok(bytes.chunks_exact(4).map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    /// Download the first `n` typed elements of a buffer (synchronous,
+    /// kernel-ordered). Stale handles and over-long reads fail closed.
+    pub fn download<T: Pod>(&self, buf: &Buffer<T>, n: usize) -> Result<Vec<T>> {
+        let (_base, _size, device) = self.inner.memory.resolve(buf.slot, buf.gen)?;
+        if n > buf.len() {
+            return Err(HetError::runtime(format!(
+                "download of {n} elements exceeds buffer length {}",
+                buf.len()
+            )));
+        }
+        let mut bytes = vec![0u8; n * T::SIZE];
+        {
+            let dev = self.inner.device(device)?;
+            let _gate = dev.exec.write().unwrap();
+            // Re-resolve under the gate (see `upload`): stale-by-race
+            // handles fail instead of reading a reused range.
+            let (base, _size2, device2) = self.inner.memory.resolve(buf.slot, buf.gen)?;
+            if device2 != device {
+                return Err(HetError::runtime("buffer migrated concurrently during download"));
+            }
+            dev.mem.read_bytes_into(base, &mut bytes)?;
+        }
+        Ok(pod_from_bytes(&bytes))
     }
 
-    // ---- streams & launch ----
+    // ---- streams ----
 
     /// Create a stream bound to `device`. Streams are thin graph handles —
-    /// creating one spawns no thread.
+    /// creating one spawns no thread; the graph is the single source of
+    /// stream identity.
     pub fn create_stream(&self, device: usize) -> Result<StreamHandle> {
         self.inner.device(device)?;
-        let mut streams = self.streams.lock().unwrap();
-        let id = self.graph.add_stream(device);
-        debug_assert_eq!(id, streams.len());
-        streams.push(Stream::new(id, self.graph.clone()));
-        Ok(StreamHandle(id))
+        Ok(self.graph.add_stream(device))
+    }
+
+    /// Destroy a stream: waits for its queued work to drain (a poisoned
+    /// stream's cleared queue counts as drained), retires its events, and
+    /// frees its slot for reuse. Destroying a stream halted at a
+    /// checkpoint is an error — resume it first. Double-destroys and
+    /// stale handles fail with `HetError::InvalidHandle`.
+    pub fn destroy_stream(&self, stream: StreamHandle) -> Result<()> {
+        self.graph.destroy_stream(stream)
     }
 
     /// Which device a stream currently runs on.
     pub fn stream_device(&self, s: StreamHandle) -> Result<usize> {
-        self.graph.stream_device(s.0)
+        self.graph.stream_device(s)
     }
 
-    pub(crate) fn with_stream<T>(
-        &self,
-        s: StreamHandle,
-        f: impl FnOnce(&Stream) -> Result<T>,
-    ) -> Result<T> {
-        // Clone the thin handle out so the registry lock is not held
-        // across blocking stream operations (synchronize/quiesce).
-        let st = {
-            let streams = self.streams.lock().unwrap();
-            streams.get(s.0).ok_or_else(|| HetError::runtime("bad stream handle"))?.clone()
-        };
-        f(&st)
+    // ---- launch ----
+
+    /// Start describing a kernel launch from `module`. Finish the builder
+    /// with [`LaunchBuilder::record`] (one stream) or
+    /// [`LaunchBuilder::sharded`] (coordinator grid split).
+    ///
+    /// ```ignore
+    /// let ev = ctx.launch(module, "saxpy")
+    ///     .dims(LaunchDims::d1(256, 256))
+    ///     .arg(&x).arg(&y).arg(2.0f32).arg(n as u32)
+    ///     .record(stream)?;
+    /// ```
+    pub fn launch(&self, module: ModuleHandle, kernel: &str) -> LaunchBuilder<'_> {
+        LaunchBuilder {
+            ctx: self,
+            module,
+            kernel: kernel.to_string(),
+            dims: None,
+            args: Vec::new(),
+            tensix_mode: None,
+            working_set: None,
+        }
     }
 
-    /// Asynchronously launch a kernel on a stream; returns the launch's
-    /// event (queryable via [`HetGpu::event_query`], waitable from other
-    /// streams via [`HetGpu::wait_event`]).
-    pub fn launch(
+    /// Record a fully-built launch spec on a stream (crate-internal; the
+    /// coordinator also enters here for shard launches, with the block
+    /// `range` it owns and the broadcast events it must wait for).
+    pub(crate) fn record_launch(
         &self,
         stream: StreamHandle,
-        module: ModuleHandle,
-        kernel: &str,
-        dims: LaunchDims,
-        args: &[Arg],
+        spec: LaunchSpec,
+        shard: Option<ShardRange>,
+        deps: &[EventId],
     ) -> Result<EventId> {
-        let spec = LaunchSpec {
-            module: module.0,
-            kernel: kernel.to_string(),
-            dims,
-            args: args.to_vec(),
-            tensix_mode_hint: None,
-        };
-        self.with_stream(stream, |s| s.launch(spec))
+        // Fail stale module handles at record time (the executor
+        // re-checks at execution, when the table may have changed).
+        self.inner.modules.read().unwrap().get(spec.module)?;
+        self.graph.enqueue(stream, NodeKind::Launch { spec, shard }, deps)
     }
 
-    /// Launch with a Tensix execution-mode hint (paper §4.4 user hints).
-    pub fn launch_with_mode(
-        &self,
-        stream: StreamHandle,
-        module: ModuleHandle,
-        kernel: &str,
-        dims: LaunchDims,
-        args: &[Arg],
-        mode: crate::isa::tensix_isa::TensixMode,
-    ) -> Result<EventId> {
-        let spec = LaunchSpec {
-            module: module.0,
-            kernel: kernel.to_string(),
-            dims,
-            args: args.to_vec(),
-            tensix_mode_hint: Some(mode),
-        };
-        self.with_stream(stream, |s| s.launch(spec))
+    // ---- events ----
+
+    /// Record a marker event on a stream (the analog of
+    /// `cudaEventRecord`): completes when everything previously recorded
+    /// on the stream has completed.
+    pub fn record_event(&self, stream: StreamHandle) -> Result<EventId> {
+        self.graph.enqueue(stream, NodeKind::Marker, &[])
     }
 
-    /// Launch only the blocks in `range` of a logically larger grid (the
-    /// coordinator's sharded-execution primitive).
-    pub(crate) fn launch_shard(
-        &self,
-        stream: StreamHandle,
-        module: ModuleHandle,
-        kernel: &str,
-        dims: LaunchDims,
-        args: &[Arg],
-        range: ShardRange,
-    ) -> Result<EventId> {
-        let spec = LaunchSpec {
-            module: module.0,
-            kernel: kernel.to_string(),
-            dims,
-            args: args.to_vec(),
-            tensix_mode_hint: None,
-        };
-        self.with_stream(stream, |s| {
-            s.enqueue(NodeKind::Launch { spec, shard: Some(range) }, &[])
-        })
+    /// Make `stream` wait for `event` (recorded on any stream) before
+    /// running its subsequent commands — a cross-stream DAG edge. Waiting
+    /// on a retired event is a stale-handle error.
+    pub fn wait_event(&self, stream: StreamHandle, event: EventId) -> Result<EventId> {
+        self.graph.enqueue(stream, NodeKind::Marker, &[event])
     }
+
+    /// Status of a recorded event (stale handles fail with
+    /// `HetError::InvalidHandle`).
+    pub fn event_query(&self, event: EventId) -> Result<EventStatus> {
+        self.graph.query(event)
+    }
+
+    /// Drop the caller's hold on an event so its terminal status can be
+    /// reclaimed (it stays tracked only while pending nodes depend on
+    /// it). Destroying a stream retires its events in bulk.
+    pub fn retire_event(&self, event: EventId) -> Result<()> {
+        self.graph.retire_event(event)
+    }
+
+    /// Live/allocated handle counts of the event graph — the lifecycle
+    /// observability hook: slot counts are bounded by peak concurrent
+    /// liveness, not total history.
+    pub fn graph_stats(&self) -> GraphStats {
+        self.graph.graph_stats()
+    }
+
+    // ---- async copies (event-graph nodes) ----
 
     /// Asynchronous host→device copy, ordered with the stream's other
     /// commands (the event-graph analog of `cudaMemcpyAsync`).
@@ -314,35 +404,59 @@ impl HetGpu {
         // synchronous path (the executor re-checks at execution, when the
         // allocation table may have changed).
         let (base, size, _device) = self.inner.memory.lookup(dst)?;
-        if dst.0 + data.len() as u64 > base + size {
+        if copy_end(dst.0, data.len() as u64, "h2d")? > base.saturating_add(size) {
             return Err(HetError::runtime("h2d copy out of bounds"));
         }
-        self.with_stream(stream, |s| {
-            s.enqueue(NodeKind::CopyH2D { dst, data: data.to_vec() }, &[])
-        })
+        self.graph.enqueue(stream, NodeKind::CopyH2D { dst, data: data.to_vec() }, &[])
     }
 
-    /// Make `stream` wait for `event` (recorded on any stream) before
-    /// running its subsequent commands — a cross-stream DAG edge.
-    pub fn wait_event(&self, stream: StreamHandle, event: EventId) -> Result<EventId> {
-        self.graph.query(event)?; // must name a recorded event
-        self.with_stream(stream, |s| s.enqueue(NodeKind::Marker, &[event]))
+    /// Asynchronous device→host copy into a pinned host buffer, ordered
+    /// with the stream's other commands. Reads the *stream's* device
+    /// arena (a coordinator shard's stream is bound to the device holding
+    /// the shard image, including after a rebalance); the buffer holds
+    /// the bytes once the returned event completes.
+    pub fn memcpy_d2h_async(
+        &self,
+        stream: StreamHandle,
+        dst: &PinnedBuffer,
+        src: GpuPtr,
+    ) -> Result<EventId> {
+        let (base, size, _device) = self.inner.memory.lookup(src)?;
+        if copy_end(src.0, dst.len() as u64, "d2h")? > base.saturating_add(size) {
+            return Err(HetError::runtime("d2h copy out of bounds"));
+        }
+        self.graph.enqueue(stream, NodeKind::CopyD2H { src, dst: dst.clone() }, &[])
     }
 
-    /// Status of a recorded event.
-    pub fn event_query(&self, event: EventId) -> Result<EventStatus> {
-        self.graph.query(event)
+    /// Asynchronous peer copy: pull `bytes` bytes at `ptr` from
+    /// `src_device`'s arena into the arena of the device this stream runs
+    /// on (same unified virtual address on both sides — no pointer
+    /// fix-up). The coordinator uses this to broadcast memory images to
+    /// shard devices without staging through the host.
+    pub fn memcpy_peer_async(
+        &self,
+        stream: StreamHandle,
+        ptr: GpuPtr,
+        bytes: u64,
+        src_device: usize,
+    ) -> Result<EventId> {
+        self.inner.device(src_device)?;
+        let (base, size, _device) = self.inner.memory.lookup(ptr)?;
+        if copy_end(ptr.0, bytes, "peer")? > base.saturating_add(size) {
+            return Err(HetError::runtime("peer copy out of bounds"));
+        }
+        self.graph.enqueue(stream, NodeKind::CopyPeer { ptr, bytes, src_device }, &[])
     }
 
     /// Wait for all work on a stream (propagates sticky errors).
     pub fn synchronize(&self, stream: StreamHandle) -> Result<()> {
-        self.with_stream(stream, |s| s.synchronize())
+        self.graph.synchronize(stream)
     }
 
     /// Per-stream stats (launches, model cycles, wall time), including the
     /// per-device breakdown for streams that executed on several devices.
     pub fn stream_stats(&self, stream: StreamHandle) -> Result<StreamStats> {
-        self.with_stream(stream, |s| s.stats())
+        self.graph.stats(stream)
     }
 
     // ---- checkpoint / migration (paper §4.2, §6.3) ----
@@ -350,16 +464,19 @@ impl HetGpu {
     /// Cooperatively checkpoint a stream: sets the device pause flag,
     /// waits for the in-flight kernel to dump at its next barrier (or
     /// finish), and returns the device-neutral snapshot (kernel state +
-    /// all global allocations on the device).
+    /// all global allocations on the device). The snapshot names the
+    /// stream it was taken from by handle, so [`HetGpu::restore`] needs no
+    /// separate stream argument.
     pub fn checkpoint(&self, stream: StreamHandle) -> Result<Snapshot> {
         let device = self.stream_device(stream)?;
         let dev = self.inner.device(device)?;
         dev.pause.store(true, Ordering::SeqCst);
         // Wait until the worker has observed the pause (quiesce processes
         // the queue up to here; a running launch returns Paused first).
-        let _halted = self.with_stream(stream, |s| s.quiesce())?;
+        let quiesced = self.graph.quiesce(stream);
         dev.pause.store(false, Ordering::SeqCst);
-        let paused = self.with_stream(stream, |s| s.take_paused())?;
+        let _halted = quiesced?;
+        let paused = self.graph.take_paused(stream)?;
         // Collect global memory: every allocation resident on the device.
         // The exclusive gate keeps concurrent launches of *other* streams
         // on this device out of the capture window.
@@ -376,12 +493,36 @@ impl HetGpu {
         // Launches of *other* streams overlapping on this device may also
         // have observed the pause flag and halted; resume them in place so
         // a checkpoint of one stream never silently strands its neighbors.
-        self.graph.resume_collateral(device, stream.0);
-        Ok(Snapshot { src_device: device, paused, allocations: mem_blobs, shard: None })
+        self.graph.resume_collateral(device, stream);
+        Ok(Snapshot { stream, src_device: device, paused, allocations: mem_blobs, shard: None })
     }
 
-    /// Restore a snapshot onto `dst_device` and resume the stream there.
-    pub fn restore(&self, stream: StreamHandle, snap: Snapshot, dst_device: usize) -> Result<()> {
+    /// Restore a snapshot onto `dst_device` and resume the stream named
+    /// inside it (`snap.stream`).
+    pub fn restore(&self, snap: Snapshot, dst_device: usize) -> Result<()> {
+        let stream = snap.stream;
+        self.restore_into(stream, snap, dst_device)
+    }
+
+    /// Restore a snapshot onto `dst_device`, resuming `stream` instead of
+    /// the handle recorded in the snapshot (for snapshots shipped across
+    /// contexts, where the recorded handle belongs to another context).
+    /// Cross-context restores of a *paused* kernel must also rebind the
+    /// captured module handle via `Snapshot::with_module` — generational
+    /// handles carry no context identity, so a foreign module handle that
+    /// happens to collide resolves to whatever this context loaded there
+    /// (a non-colliding one fails with `HetError::InvalidHandle` when the
+    /// resumed launch executes).
+    pub fn restore_into(
+        &self,
+        stream: StreamHandle,
+        snap: Snapshot,
+        dst_device: usize,
+    ) -> Result<()> {
+        // Validate the (possibly wire-deserialized) stream handle BEFORE
+        // touching any state: a stale handle must error here, not after
+        // memory was overwritten and residency retagged.
+        self.graph.stream_device(stream)?;
         let dst = self.inner.device(dst_device)?;
         {
             let _gate = dst.exec.write().unwrap();
@@ -390,7 +531,7 @@ impl HetGpu {
             }
         }
         self.inner.memory.move_residency(snap.src_device, dst_device);
-        self.with_stream(stream, |s| s.resume(dst_device, snap.paused))
+        self.graph.resume(stream, dst_device, snap.paused)
     }
 
     /// Live-migrate a stream to another device: checkpoint → move memory →
@@ -406,7 +547,7 @@ impl HetGpu {
         let bytes: u64 = snap.allocations.iter().map(|(_, b)| b.len() as u64).sum();
         let reg_bytes = snap.register_bytes();
         let t1 = Instant::now();
-        self.restore(stream, snap, dst_device)?;
+        self.restore(snap, dst_device)?;
         let t_restore = t1.elapsed();
         // Wait for the resumed kernel to finish its current segment run.
         Ok(MigrationReport {
@@ -431,5 +572,94 @@ impl Drop for HetGpu {
         for h in self.executors.drain(..) {
             let _ = h.join();
         }
+    }
+}
+
+/// Builder describing one kernel launch (API v2): dimensions, typed
+/// arguments, an optional Tensix execution-mode hint (paper §4.4 user
+/// hints), and an optional **working-set hint** consumed by sharded
+/// launches to broadcast/merge only the named allocations instead of
+/// every live byte of unified memory.
+///
+/// Created by [`HetGpu::launch`]; consumed by [`LaunchBuilder::record`]
+/// (stream launch) or [`LaunchBuilder::sharded`] (coordinator grid
+/// split).
+#[must_use = "a launch builder does nothing until `record` or `sharded` is called"]
+pub struct LaunchBuilder<'a> {
+    ctx: &'a HetGpu,
+    module: ModuleHandle,
+    kernel: String,
+    dims: Option<LaunchDims>,
+    args: Vec<Arg>,
+    tensix_mode: Option<TensixMode>,
+    working_set: Option<Vec<GpuPtr>>,
+}
+
+impl<'a> LaunchBuilder<'a> {
+    /// Grid/block dimensions (required).
+    pub fn dims(mut self, dims: LaunchDims) -> Self {
+        self.dims = Some(dims);
+        self
+    }
+
+    /// Append one typed argument (`&Buffer<T>`, `GpuPtr`, `u32`, `i32`,
+    /// `u64`, `i64`, `f32`, `bool`, or a prebuilt [`Arg`]).
+    pub fn arg(mut self, a: impl Into<Arg>) -> Self {
+        self.args.push(a.into());
+        self
+    }
+
+    /// Append a slice of prebuilt arguments.
+    pub fn args(mut self, args: &[Arg]) -> Self {
+        self.args.extend_from_slice(args);
+        self
+    }
+
+    /// Override the Tensix execution-mode heuristic (paper §4.4).
+    pub fn tensix_mode(mut self, mode: TensixMode) -> Self {
+        self.tensix_mode = Some(mode);
+        self
+    }
+
+    /// Name the allocations this launch reads or writes (by any pointer
+    /// into them). A sharded launch then baselines, broadcasts, and
+    /// merges **only these regions**, cutting the O(total-memory) cost of
+    /// `launch_sharded` to O(working set). Launches on a single stream
+    /// ignore the hint. Without it, sharding conservatively moves every
+    /// live allocation (pointers may hide inside buffers, so
+    /// arg-reachability alone would be unsound).
+    pub fn working_set(mut self, ptrs: &[GpuPtr]) -> Self {
+        self.working_set = Some(ptrs.to_vec());
+        self
+    }
+
+    fn build_spec(self) -> Result<(&'a HetGpu, LaunchSpec, Option<Vec<GpuPtr>>)> {
+        let dims = self
+            .dims
+            .ok_or_else(|| HetError::runtime("launch dims not set (LaunchBuilder::dims)"))?;
+        let spec = LaunchSpec {
+            module: self.module,
+            kernel: self.kernel,
+            dims,
+            args: self.args,
+            tensix_mode_hint: self.tensix_mode,
+        };
+        Ok((self.ctx, spec, self.working_set))
+    }
+
+    /// Record the launch on `stream`; returns the launch's event
+    /// (queryable via [`HetGpu::event_query`], waitable from other
+    /// streams via [`HetGpu::wait_event`]).
+    pub fn record(self, stream: StreamHandle) -> Result<EventId> {
+        let (ctx, spec, _ws) = self.build_spec()?;
+        ctx.record_launch(stream, spec, None, &[])
+    }
+
+    /// Split the launch's grid over `devices` through the coordinator
+    /// (shards start executing immediately); join with
+    /// [`ShardedLaunch::wait`]. Consumes the working-set hint.
+    pub fn sharded(self, devices: &[usize]) -> Result<ShardedLaunch<'a>> {
+        let (ctx, spec, ws) = self.build_spec()?;
+        Coordinator::new(ctx).launch_sharded(spec, ws.as_deref(), devices)
     }
 }

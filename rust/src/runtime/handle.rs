@@ -1,0 +1,196 @@
+//! Generational slot tables — the backing store of every typed runtime
+//! handle (API v2).
+//!
+//! A handle is a `{slot, generation}` pair: the slot indexes a reuse
+//! table, the generation says *which* incarnation of the slot the handle
+//! was minted for. Destroying a resource frees its slot for reuse and
+//! bumps the slot's generation, so any handle minted before the destroy
+//! dangles detectably: a lookup with a stale generation misses instead of
+//! silently aliasing the resource that reused the slot. This is the
+//! CUDA-driver-style lifecycle discipline the paper's §4.3 abstraction
+//! layer needs once streams, events, modules and buffers can be destroyed
+//! mid-context.
+//!
+//! The table itself is not synchronized; owners wrap it in their own lock
+//! (the event graph's mutex, the memory manager's mutex, the module
+//! registry's `RwLock`).
+
+/// Generate the shared `{slot, generation}` handle surface for a handle
+/// type with `slot: u32` / `gen: u32` fields: `raw`/`from_raw` packing
+/// (slot in the low 32 bits, generation in the high — the form wire
+/// blobs carry, so the scheme must stay identical across handle types)
+/// and the `label#slot.gen` Display form.
+macro_rules! impl_handle_raw {
+    ($ty:ident, $label:literal) => {
+        impl $ty {
+            /// Pack the handle into a single `u64` (slot in the low 32
+            /// bits, generation in the high) — the form snapshots and
+            /// wire blobs carry.
+            pub fn raw(self) -> u64 {
+                ((self.gen as u64) << 32) | self.slot as u64
+            }
+
+            /// Rebuild a handle from its packed form. The pair is only
+            /// meaningful inside the context that minted it: handles
+            /// carry no context identity, so a foreign pair usually
+            /// misses (stale) but can coincidentally resolve if the
+            /// destination context allocated the same slot/generation —
+            /// cross-context consumers (snapshot restores) must rebind
+            /// handles explicitly rather than trust `from_raw`.
+            pub fn from_raw(raw: u64) -> $ty {
+                $ty { slot: raw as u32, gen: (raw >> 32) as u32 }
+            }
+        }
+
+        impl std::fmt::Display for $ty {
+            fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                write!(f, concat!($label, "#{}.{}"), self.slot, self.gen)
+            }
+        }
+    };
+}
+pub(crate) use impl_handle_raw;
+
+/// A generational slot-reuse table.
+///
+/// Slots are `u32` indices; generations are `u32` counters bumped on each
+/// free. Lookups require both to match, so the table distinguishes "never
+/// existed", "destroyed", and "slot reused by a newer resource" — all of
+/// which surface as a failed lookup.
+#[derive(Debug)]
+pub(crate) struct SlotTable<T> {
+    slots: Vec<Slot<T>>,
+    /// Slots available for reuse (LIFO keeps tables dense).
+    free: Vec<u32>,
+    live: usize,
+}
+
+// Hand-written (not derived) so `T` needs no `Default` bound.
+impl<T> Default for SlotTable<T> {
+    fn default() -> SlotTable<T> {
+        SlotTable::new()
+    }
+}
+
+#[derive(Debug)]
+struct Slot<T> {
+    /// Current generation; bumped on free so stale handles miss.
+    gen: u32,
+    entry: Option<T>,
+}
+
+impl<T> SlotTable<T> {
+    pub fn new() -> SlotTable<T> {
+        SlotTable { slots: Vec::new(), free: Vec::new(), live: 0 }
+    }
+
+    /// Insert a value, reusing a freed slot when one exists. Returns the
+    /// `(slot, generation)` pair to mint the handle from.
+    pub fn insert(&mut self, value: T) -> (u32, u32) {
+        self.live += 1;
+        if let Some(slot) = self.free.pop() {
+            let s = &mut self.slots[slot as usize];
+            debug_assert!(s.entry.is_none());
+            s.entry = Some(value);
+            (slot, s.gen)
+        } else {
+            self.slots.push(Slot { gen: 0, entry: Some(value) });
+            ((self.slots.len() - 1) as u32, 0)
+        }
+    }
+
+    /// Look up a live entry; `None` for never-allocated, destroyed, or
+    /// generation-mismatched (slot reused) handles.
+    pub fn get(&self, slot: u32, gen: u32) -> Option<&T> {
+        self.slots
+            .get(slot as usize)
+            .filter(|s| s.gen == gen)
+            .and_then(|s| s.entry.as_ref())
+    }
+
+    /// Mutable variant of [`SlotTable::get`].
+    pub fn get_mut(&mut self, slot: u32, gen: u32) -> Option<&mut T> {
+        self.slots
+            .get_mut(slot as usize)
+            .filter(|s| s.gen == gen)
+            .and_then(|s| s.entry.as_mut())
+    }
+
+    /// Remove the entry behind a handle; bumps the slot generation and
+    /// recycles the slot. `None` if the handle is already stale.
+    pub fn remove(&mut self, slot: u32, gen: u32) -> Option<T> {
+        let s = self.slots.get_mut(slot as usize)?;
+        if s.gen != gen || s.entry.is_none() {
+            return None;
+        }
+        let value = s.entry.take();
+        s.gen = s.gen.wrapping_add(1);
+        self.free.push(slot);
+        self.live -= 1;
+        value
+    }
+
+    /// Remove by slot alone (owner-internal paths that already validated
+    /// the handle and only kept the slot).
+    pub fn remove_at(&mut self, slot: u32) -> Option<T> {
+        let gen = self.slots.get(slot as usize)?.gen;
+        self.remove(slot, gen)
+    }
+
+    /// Live entry behind `slot`, whatever its generation (owner-internal
+    /// iteration).
+    pub fn entry_at(&self, slot: u32) -> Option<&T> {
+        self.slots.get(slot as usize).and_then(|s| s.entry.as_ref())
+    }
+
+    /// Mutable variant of [`SlotTable::entry_at`].
+    pub fn entry_at_mut(&mut self, slot: u32) -> Option<&mut T> {
+        self.slots.get_mut(slot as usize).and_then(|s| s.entry.as_mut())
+    }
+
+    /// Number of live entries.
+    pub fn live(&self) -> usize {
+        self.live
+    }
+
+    /// Number of slots ever allocated (live + reusable). Bounded by the
+    /// peak number of concurrently live resources, not total history —
+    /// the reclamation property the lifecycle tests assert.
+    pub fn slot_count(&self) -> usize {
+        self.slots.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slots_are_reused_and_generations_fence_staleness() {
+        let mut t: SlotTable<&'static str> = SlotTable::new();
+        let (s0, g0) = t.insert("a");
+        assert_eq!(t.get(s0, g0), Some(&"a"));
+        assert_eq!(t.remove(s0, g0), Some("a"));
+        assert_eq!(t.get(s0, g0), None, "destroyed handle must miss");
+        assert_eq!(t.remove(s0, g0), None, "double-destroy must miss");
+
+        let (s1, g1) = t.insert("b");
+        assert_eq!(s1, s0, "freed slot must be reused");
+        assert_ne!(g1, g0, "reused slot must carry a new generation");
+        assert_eq!(t.get(s0, g0), None, "stale handle must not alias the reuser");
+        assert_eq!(t.get(s1, g1), Some(&"b"));
+        assert_eq!(t.live(), 1);
+        assert_eq!(t.slot_count(), 1, "history must not grow the table");
+    }
+
+    #[test]
+    fn churn_stays_bounded_by_peak_liveness() {
+        let mut t: SlotTable<u64> = SlotTable::new();
+        for i in 0..10_000u64 {
+            let (s, g) = t.insert(i);
+            assert_eq!(t.remove(s, g), Some(i));
+        }
+        assert_eq!(t.live(), 0);
+        assert_eq!(t.slot_count(), 1, "one-at-a-time churn needs one slot");
+    }
+}

@@ -18,7 +18,10 @@ use std::time::Instant;
 /// Cache key: one translation per (module, kernel, target, mode, build).
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct JitKey {
-    pub module: usize,
+    /// The loaded module's unique id (`ModuleTable` uid, not its slot):
+    /// module slots are reused after `unload_module`, so keying by slot
+    /// would let a stale translation alias a newly loaded module.
+    pub module: u64,
     pub kernel: String,
     pub kind: DeviceKind,
     pub tensix_mode: Option<TensixMode>,
@@ -111,6 +114,14 @@ impl JitCache {
         let prog = Arc::new(prog);
         st.map.insert(key, prog.clone());
         Ok(prog)
+    }
+
+    /// Drop every cached translation of `module` (called by
+    /// `unload_module` so unloading actually releases the translated
+    /// programs, not just the IR).
+    pub fn evict_module(&self, module: u64) {
+        let mut st = self.state.lock().unwrap();
+        st.map.retain(|k, _| k.module != module);
     }
 
     /// Recorded translation events (E4 table data).

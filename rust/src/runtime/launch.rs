@@ -9,7 +9,8 @@ use crate::hetir::module::Kernel;
 use crate::hetir::passes::uniformity;
 use crate::hetir::types::{AddrSpace, Type, Value};
 use crate::isa::tensix_isa::TensixMode;
-use crate::runtime::memory::GpuPtr;
+use crate::runtime::memory::{Buffer, GpuPtr, Pod};
+use crate::runtime::ModuleHandle;
 use crate::sim::simt::LaunchDims;
 
 /// A kernel argument, CUDA-style.
@@ -45,11 +46,57 @@ impl Arg {
     }
 }
 
+/// Typed-argument conversions for the `LaunchBuilder`'s `arg` method:
+/// plain Rust values, raw pointers, and typed buffers all coerce into the
+/// CUDA-style argument enum.
+impl From<GpuPtr> for Arg {
+    fn from(p: GpuPtr) -> Arg {
+        Arg::Ptr(p)
+    }
+}
+impl<T: Pod> From<&Buffer<T>> for Arg {
+    fn from(b: &Buffer<T>) -> Arg {
+        Arg::Ptr(b.ptr())
+    }
+}
+impl From<u32> for Arg {
+    fn from(v: u32) -> Arg {
+        Arg::U32(v)
+    }
+}
+impl From<i32> for Arg {
+    fn from(v: i32) -> Arg {
+        Arg::I32(v)
+    }
+}
+impl From<u64> for Arg {
+    fn from(v: u64) -> Arg {
+        Arg::U64(v)
+    }
+}
+impl From<i64> for Arg {
+    fn from(v: i64) -> Arg {
+        Arg::I64(v)
+    }
+}
+impl From<f32> for Arg {
+    fn from(v: f32) -> Arg {
+        Arg::F32(v)
+    }
+}
+impl From<bool> for Arg {
+    fn from(v: bool) -> Arg {
+        Arg::Pred(v)
+    }
+}
+
 /// A fully-specified launch request.
 #[derive(Debug, Clone)]
 pub struct LaunchSpec {
-    /// Module handle (index into the context's loaded modules).
-    pub module: usize,
+    /// Generational handle of the loaded module (revalidated at
+    /// execution time, so launches queued across an `unload_module` fail
+    /// with a typed stale-handle error).
+    pub module: ModuleHandle,
     pub kernel: String,
     pub dims: LaunchDims,
     pub args: Vec<Arg>,

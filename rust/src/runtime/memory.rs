@@ -1,4 +1,5 @@
-//! Unified memory manager: device-independent GPU pointers.
+//! Unified memory manager: device-independent GPU pointers and the typed
+//! buffer surface of API v2.
 //!
 //! Implements paper §4.3 *Memory Allocation*: `gpuMalloc` returns a pointer
 //! usable on any GPU through the hetGPU API. We use a **unified virtual
@@ -9,13 +10,26 @@
 //! bases with pointer fix-up — is supported by the snapshot layer via typed
 //! pointer registers, and exercised in the migration tests).
 //!
+//! Two surfaces sit on top of the allocator:
+//!
+//! * the **raw pointer surface** ([`GpuPtr`]): untyped addresses for code
+//!   that manages its own layout (the migration machinery, the
+//!   coordinator's broadcast/merge set);
+//! * the **typed buffer surface** ([`Buffer`]): element-typed,
+//!   generation-checked handles used with the generic
+//!   `upload`/`download` copies — a stale or freed buffer handle is
+//!   rejected with `HetError::InvalidHandle` instead of reading whatever
+//!   allocation reused the address range.
+//!
 //! The allocator is a first-fit free list over the device DRAM range,
 //! deterministic across devices by construction.
 
 use crate::error::{HetError, Result};
+use crate::runtime::handle::SlotTable;
 use std::collections::HashMap;
 use std::fmt;
-use std::sync::Mutex;
+use std::marker::PhantomData;
+use std::sync::{Arc, Mutex};
 
 /// A device-independent GPU pointer (a virtual address).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -34,12 +48,164 @@ impl GpuPtr {
     }
 }
 
+/// Element types that can cross the host↔device copy boundary.
+///
+/// Every implementation round-trips through the device's little-endian
+/// byte representation (the layout the simulators, the snapshot blob, and
+/// the hetIR value model all share), so uploads and downloads are
+/// bit-exact for any payload including NaNs.
+pub trait Pod: Copy + Send + Sync + 'static {
+    /// Size of one element in device memory, in bytes.
+    const SIZE: usize;
+    /// Write the little-endian device representation into `out`
+    /// (exactly [`Pod::SIZE`] bytes).
+    fn write_le(&self, out: &mut [u8]);
+    /// Read one element back from its little-endian device representation
+    /// (exactly [`Pod::SIZE`] bytes).
+    fn read_le(src: &[u8]) -> Self;
+}
+
+macro_rules! impl_pod {
+    ($($t:ty),* $(,)?) => {
+        $(impl Pod for $t {
+            const SIZE: usize = std::mem::size_of::<$t>();
+            fn write_le(&self, out: &mut [u8]) {
+                out.copy_from_slice(&self.to_le_bytes());
+            }
+            fn read_le(src: &[u8]) -> Self {
+                <$t>::from_le_bytes(src.try_into().expect("Pod::SIZE chunk"))
+            }
+        })*
+    };
+}
+
+impl_pod!(u8, u16, u32, u64, i8, i16, i32, i64, f32, f64);
+
+/// Serialize a typed slice into its device byte image.
+pub(crate) fn pod_to_bytes<T: Pod>(data: &[T]) -> Vec<u8> {
+    let mut out = vec![0u8; data.len() * T::SIZE];
+    for (chunk, v) in out.chunks_exact_mut(T::SIZE).zip(data) {
+        v.write_le(chunk);
+    }
+    out
+}
+
+/// Deserialize a device byte image into typed elements (whole chunks
+/// only; callers size `bytes` as a multiple of `T::SIZE`).
+pub(crate) fn pod_from_bytes<T: Pod>(bytes: &[u8]) -> Vec<T> {
+    bytes.chunks_exact(T::SIZE).map(T::read_le).collect()
+}
+
+/// A typed, generation-checked device buffer handle (API v2).
+///
+/// `Buffer<T>` is `{slot, generation}` over the memory manager's
+/// allocation table plus the resolved base pointer and element count. The
+/// handle is `Copy` — cheap to pass around — and every copy operation
+/// revalidates it, so use-after-free and slot reuse surface as
+/// `HetError::InvalidHandle` rather than touching the wrong allocation.
+/// Obtain one from `HetGpu::alloc_buffer`, release with
+/// `HetGpu::free_buffer`.
+#[derive(Debug, Clone, Copy)]
+pub struct Buffer<T: Pod> {
+    pub(crate) slot: u32,
+    pub(crate) gen: u32,
+    ptr: GpuPtr,
+    len: usize,
+    _elem: PhantomData<T>,
+}
+
+impl<T: Pod> Buffer<T> {
+    pub(crate) fn new(slot: u32, gen: u32, ptr: GpuPtr, len: usize) -> Buffer<T> {
+        Buffer { slot, gen, ptr, len, _elem: PhantomData }
+    }
+
+    /// The buffer's device address — pass as a kernel pointer argument.
+    /// (The address itself is not generation-checked; kernels run against
+    /// raw unified memory exactly as on real hardware.)
+    pub fn ptr(&self) -> GpuPtr {
+        self.ptr
+    }
+
+    /// Element capacity.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Whether the buffer holds zero elements (never true for buffers
+    /// minted by `alloc_buffer`, which rejects empty allocations).
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Payload size in bytes (`len * T::SIZE`).
+    pub fn size_bytes(&self) -> u64 {
+        (self.len * T::SIZE) as u64
+    }
+
+    /// The buffer as a kernel launch argument (`Arg::Ptr`).
+    pub fn arg(&self) -> crate::runtime::launch::Arg {
+        crate::runtime::launch::Arg::Ptr(self.ptr)
+    }
+}
+
+/// A host-side staging buffer for asynchronous device→host copies (the
+/// analog of CUDA pinned host memory).
+///
+/// `memcpy_d2h_async` records a copy node that fills the buffer when the
+/// stream reaches it; the handle is clonable (shared contents), and the
+/// contents are read back with [`PinnedBuffer::to_vec`] /
+/// [`PinnedBuffer::read`] after the copy's event completes.
+#[derive(Debug, Clone)]
+pub struct PinnedBuffer {
+    bytes: Arc<Mutex<Vec<u8>>>,
+}
+
+impl PinnedBuffer {
+    /// Allocate a zeroed host buffer of `len` bytes.
+    pub fn new(len: usize) -> PinnedBuffer {
+        PinnedBuffer { bytes: Arc::new(Mutex::new(vec![0u8; len])) }
+    }
+
+    /// Capacity in bytes.
+    pub fn len(&self) -> usize {
+        self.bytes.lock().unwrap().len()
+    }
+
+    /// Whether the buffer has zero capacity.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Copy the current contents out.
+    pub fn to_vec(&self) -> Vec<u8> {
+        self.bytes.lock().unwrap().clone()
+    }
+
+    /// Reinterpret the contents as little-endian `T` elements (whole
+    /// elements only).
+    pub fn read<T: Pod>(&self) -> Vec<T> {
+        pod_from_bytes(&self.bytes.lock().unwrap())
+    }
+
+    /// Fill the buffer from device bytes (executor-side).
+    pub(crate) fn fill_from(
+        &self,
+        mem: &crate::sim::mem::DeviceMemory,
+        addr: u64,
+    ) -> Result<()> {
+        let mut host = self.bytes.lock().unwrap();
+        mem.read_bytes_into(addr, &mut host[..])
+    }
+}
+
 #[derive(Debug, Clone)]
 struct Alloc {
     addr: u64,
     size: u64,
     /// Device currently holding the bytes.
     device: usize,
+    /// Slot in the buffer-handle table (freed alongside the allocation).
+    slot: u32,
 }
 
 /// Allocation table + free-list allocator.
@@ -50,6 +216,9 @@ pub struct MemoryManager {
 struct Inner {
     /// Live allocations keyed by base address.
     allocs: HashMap<u64, Alloc>,
+    /// Generational buffer handles → base address (the typed surface's
+    /// staleness fence).
+    handles: SlotTable<u64>,
     /// Free regions (addr, size), kept sorted by address and coalesced.
     free: Vec<(u64, u64)>,
     capacity: u64,
@@ -59,11 +228,37 @@ struct Inner {
 /// Allocations start above address 0 so that null stays invalid.
 const HEAP_BASE: u64 = 4096;
 
+/// Release `ptr`'s allocation and recycle its handle slot; callers hold
+/// the manager lock (validation and release must be one critical
+/// section).
+fn free_locked(g: &mut Inner, ptr: GpuPtr) -> Result<()> {
+    let a = g
+        .allocs
+        .remove(&ptr.0)
+        .ok_or_else(|| HetError::runtime(format!("free of unknown pointer {ptr}")))?;
+    g.handles.remove_at(a.slot);
+    g.bytes_in_use -= a.size;
+    // insert + coalesce
+    let pos = g.free.partition_point(|(fa, _)| *fa < a.addr);
+    g.free.insert(pos, (a.addr, a.size));
+    let mut i = pos.saturating_sub(1);
+    while i + 1 < g.free.len() {
+        if g.free[i].0 + g.free[i].1 == g.free[i + 1].0 {
+            g.free[i].1 += g.free[i + 1].1;
+            g.free.remove(i + 1);
+        } else {
+            i += 1;
+        }
+    }
+    Ok(())
+}
+
 impl MemoryManager {
     pub fn new(capacity: u64) -> MemoryManager {
         MemoryManager {
             inner: Mutex::new(Inner {
                 allocs: HashMap::new(),
+                handles: SlotTable::new(),
                 free: vec![(HEAP_BASE, capacity - HEAP_BASE)],
                 capacity,
                 bytes_in_use: 0,
@@ -71,50 +266,73 @@ impl MemoryManager {
         }
     }
 
-    /// Allocate `size` bytes resident on `device`.
-    pub fn alloc(&self, size: u64, device: usize) -> Result<GpuPtr> {
+    /// Allocate `size` bytes resident on `device`, returning the pointer
+    /// plus the generational `(slot, generation)` buffer handle.
+    pub(crate) fn alloc_handle(&self, size: u64, device: usize) -> Result<(GpuPtr, u32, u32)> {
         if size == 0 {
             return Err(HetError::runtime("zero-size allocation"));
         }
-        let size = (size + 255) & !255; // 256-byte granularity
+        // 256-byte granularity; checked so sizes near u64::MAX fail
+        // closed instead of wrapping to a zero-size allocation that
+        // aliases the free list.
+        let size = size
+            .checked_add(255)
+            .ok_or_else(|| HetError::runtime(format!("allocation of {size} bytes too large")))?
+            & !255;
         let mut g = self.inner.lock().unwrap();
-        let slot = g
+        let slot_idx = g
             .free
             .iter()
             .position(|(_, s)| *s >= size)
             .ok_or_else(|| HetError::runtime(format!("out of device memory ({size} bytes)")))?;
-        let (addr, fsize) = g.free[slot];
+        let (addr, fsize) = g.free[slot_idx];
         if fsize == size {
-            g.free.remove(slot);
+            g.free.remove(slot_idx);
         } else {
-            g.free[slot] = (addr + size, fsize - size);
+            g.free[slot_idx] = (addr + size, fsize - size);
         }
-        g.allocs.insert(addr, Alloc { addr, size, device });
+        let (slot, gen) = g.handles.insert(addr);
+        g.allocs.insert(addr, Alloc { addr, size, device, slot });
         g.bytes_in_use += size;
-        Ok(GpuPtr(addr))
+        Ok((GpuPtr(addr), slot, gen))
     }
 
-    /// Free an allocation (must be the base pointer).
+    /// Allocate `size` bytes resident on `device` (raw pointer surface).
+    pub fn alloc(&self, size: u64, device: usize) -> Result<GpuPtr> {
+        self.alloc_handle(size, device).map(|(p, _, _)| p)
+    }
+
+    /// Free an allocation (must be the base pointer). Any typed buffer
+    /// handle minted for it becomes stale.
     pub fn free(&self, ptr: GpuPtr) -> Result<()> {
         let mut g = self.inner.lock().unwrap();
-        let a = g
-            .allocs
-            .remove(&ptr.0)
-            .ok_or_else(|| HetError::runtime(format!("free of unknown pointer {ptr}")))?;
-        g.bytes_in_use -= a.size;
-        // insert + coalesce
-        let pos = g.free.partition_point(|(fa, _)| *fa < a.addr);
-        g.free.insert(pos, (a.addr, a.size));
-        let mut i = pos.saturating_sub(1);
-        while i + 1 < g.free.len() {
-            if g.free[i].0 + g.free[i].1 == g.free[i + 1].0 {
-                g.free[i].1 += g.free[i + 1].1;
-                g.free.remove(i + 1);
-            } else {
-                i += 1;
-            }
-        }
-        Ok(())
+        free_locked(&mut g, ptr)
+    }
+
+    /// Free through a typed buffer handle: validation and release happen
+    /// under one lock acquisition, so two racing frees of the same
+    /// (Copy) handle cannot both pass validation and have the loser free
+    /// whatever allocation reused the address range.
+    pub(crate) fn free_by_handle(&self, slot: u32, gen: u32) -> Result<()> {
+        let mut g = self.inner.lock().unwrap();
+        let addr = *g
+            .handles
+            .get(slot, gen)
+            .ok_or_else(|| HetError::invalid_handle("buffer", "buffer was freed or never existed"))?;
+        free_locked(&mut g, GpuPtr(addr))
+    }
+
+    /// Resolve a typed buffer handle → `(base, size, device)`; stale
+    /// handles (freed, or their slot reused) miss with
+    /// [`HetError::InvalidHandle`].
+    pub(crate) fn resolve(&self, slot: u32, gen: u32) -> Result<(u64, u64, usize)> {
+        let g = self.inner.lock().unwrap();
+        let addr = *g
+            .handles
+            .get(slot, gen)
+            .ok_or_else(|| HetError::invalid_handle("buffer", "buffer was freed or never existed"))?;
+        let a = g.allocs.get(&addr).expect("handle table and alloc table in sync");
+        Ok((a.addr, a.size, a.device))
     }
 
     /// Look up the allocation containing `ptr` → (base, size, device).
@@ -143,7 +361,7 @@ impl MemoryManager {
     }
 
     /// Every live allocation → (base, size, resident device), sorted by
-    /// address (the coordinator's broadcast/merge set).
+    /// address (the coordinator's default broadcast/merge set).
     pub fn all_allocations(&self) -> Vec<(u64, u64, usize)> {
         let g = self.inner.lock().unwrap();
         let mut v: Vec<(u64, u64, usize)> =
@@ -170,6 +388,11 @@ impl MemoryManager {
     pub fn capacity(&self) -> u64 {
         self.inner.lock().unwrap().capacity
     }
+
+    /// Live typed-buffer handles (lifecycle observability).
+    pub fn live_buffers(&self) -> usize {
+        self.inner.lock().unwrap().handles.live()
+    }
 }
 
 #[cfg(test)]
@@ -188,6 +411,7 @@ mod tests {
         m.free(b).unwrap();
         m.free(c).unwrap();
         assert_eq!(m.bytes_in_use(), 0);
+        assert_eq!(m.live_buffers(), 0);
     }
 
     #[test]
@@ -205,6 +429,10 @@ mod tests {
     fn oom_reported() {
         let m = MemoryManager::new(1 << 16);
         assert!(m.alloc(1 << 20, 0).is_err());
+        // Sizes whose 256-byte rounding would wrap u64 fail closed
+        // instead of minting a zero-size aliasing allocation.
+        assert!(m.alloc(u64::MAX, 0).is_err());
+        assert!(m.alloc(u64::MAX - 100, 0).is_err());
     }
 
     #[test]
@@ -227,5 +455,35 @@ mod tests {
         }
         // After coalescing, one big allocation must fit again.
         assert!(m.alloc((1 << 20) - 8192, 0).is_ok());
+    }
+
+    #[test]
+    fn buffer_handles_go_stale_on_free_and_reuse() {
+        let m = MemoryManager::new(1 << 20);
+        let (p1, s1, g1) = m.alloc_handle(512, 0).unwrap();
+        assert_eq!(m.resolve(s1, g1).unwrap().0, p1.0);
+        m.free(p1).unwrap();
+        let e = m.resolve(s1, g1).unwrap_err();
+        assert!(e.is_invalid_handle(), "{e}");
+        // The same address and slot get reused — the old handle must not
+        // alias the new allocation.
+        let (p2, s2, g2) = m.alloc_handle(512, 0).unwrap();
+        assert_eq!(p1, p2);
+        assert_eq!(s1, s2);
+        assert_ne!(g1, g2);
+        assert!(m.resolve(s1, g1).is_err());
+        assert!(m.resolve(s2, g2).is_ok());
+    }
+
+    #[test]
+    fn pod_roundtrip_bit_exact() {
+        let data = [f32::NAN, -0.0, 1.5, f32::INFINITY];
+        let bytes = pod_to_bytes(&data);
+        let back: Vec<f32> = pod_from_bytes(&bytes);
+        for (a, b) in data.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let ints = [u32::MAX, 0, 7];
+        assert_eq!(pod_from_bytes::<u32>(&pod_to_bytes(&ints)), ints);
     }
 }

@@ -1,11 +1,13 @@
 //! The hetGPU runtime (paper §4.2): device registry, unified memory,
 //! JIT translation cache, event-graph streams ([`events`]), kernel launch,
-//! and the execution entry point shared by fresh launches, coordinator
-//! shards, and migration resumes.
+//! generational handle tables (`runtime::handle`), and the execution entry
+//! point shared by fresh launches, coordinator shards, and migration
+//! resumes.
 
 pub mod api;
 pub mod device;
 pub mod events;
+pub(crate) mod handle;
 pub mod jit;
 pub mod launch;
 pub mod memory;
@@ -15,16 +17,84 @@ use crate::error::{HetError, Result};
 use crate::hetir::module::Module;
 use crate::isa::tensix_isa::TensixMode;
 use crate::runtime::device::{Device, DeviceKind, Engine};
+use crate::runtime::handle::SlotTable;
 use crate::runtime::jit::{JitCache, JitKey};
 use crate::runtime::launch::{args_to_values, choose_tensix_mode, validate_dims, LaunchSpec};
 use crate::runtime::memory::MemoryManager;
 use crate::sim::snapshot::{BlockResume, LaunchOutcome};
 use std::sync::RwLock;
 
+/// Generational handle to a loaded hetIR module (API v2).
+///
+/// Minted by `HetGpu::load_module` (and the compile front-ends),
+/// invalidated by `HetGpu::unload_module`; stale handles — including
+/// launches already queued when the module was unloaded — fail with
+/// `HetError::InvalidHandle` instead of silently resolving whichever
+/// module reused the slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ModuleHandle {
+    pub(crate) slot: u32,
+    pub(crate) gen: u32,
+}
+
+handle::impl_handle_raw!(ModuleHandle, "module");
+
+/// A loaded module plus the process-unique id the JIT cache keys on.
+struct LoadedModule {
+    module: Module,
+    uid: u64,
+}
+
+/// Generational registry of loaded modules.
+#[derive(Default)]
+pub struct ModuleTable {
+    table: SlotTable<LoadedModule>,
+    next_uid: u64,
+}
+
+impl ModuleTable {
+    pub fn new() -> ModuleTable {
+        ModuleTable { table: SlotTable::new(), next_uid: 0 }
+    }
+
+    pub(crate) fn insert(&mut self, module: Module) -> ModuleHandle {
+        let uid = self.next_uid;
+        self.next_uid += 1;
+        let (slot, gen) = self.table.insert(LoadedModule { module, uid });
+        ModuleHandle { slot, gen }
+    }
+
+    /// Resolve a handle → `(module, uid)`; stale handles miss with
+    /// [`HetError::InvalidHandle`].
+    pub(crate) fn get(&self, h: ModuleHandle) -> Result<(&Module, u64)> {
+        self.table
+            .get(h.slot, h.gen)
+            .map(|m| (&m.module, m.uid))
+            .ok_or_else(|| {
+                HetError::invalid_handle("module", "module was unloaded or never loaded")
+            })
+    }
+
+    /// Unload a module; returns its uid for JIT-cache eviction.
+    pub(crate) fn remove(&mut self, h: ModuleHandle) -> Result<u64> {
+        self.table
+            .remove(h.slot, h.gen)
+            .map(|m| m.uid)
+            .ok_or_else(|| {
+                HetError::invalid_handle("module", "module was unloaded or never loaded")
+            })
+    }
+
+    /// Number of loaded modules.
+    pub fn live(&self) -> usize {
+        self.table.live()
+    }
+}
+
 /// Shared state behind a [`api::HetGpu`] context.
 pub struct RuntimeInner {
     pub devices: Vec<Device>,
-    pub modules: RwLock<Vec<Module>>,
+    pub modules: RwLock<ModuleTable>,
     pub jit: JitCache,
     pub memory: MemoryManager,
 }
@@ -37,7 +107,9 @@ impl RuntimeInner {
     /// Execute `spec` on `device_id`, optionally resuming from per-block
     /// directives. This is the single execution path used by streams and
     /// by the migration orchestrator — fresh launch and cross-device
-    /// resume differ only in `resume`.
+    /// resume differ only in `resume`. The module handle is revalidated
+    /// here: a launch queued before `unload_module` fails with a typed
+    /// stale-handle error when the executor reaches it.
     pub fn run_launch(
         &self,
         device_id: usize,
@@ -50,9 +122,7 @@ impl RuntimeInner {
         // debug-build panic inside the simulators.
         validate_dims(spec.dims)?;
         let modules = self.modules.read().unwrap();
-        let module = modules
-            .get(spec.module)
-            .ok_or_else(|| HetError::runtime(format!("no module {}", spec.module)))?;
+        let (module, uid) = modules.get(spec.module)?;
         let kernel = module
             .kernel(&spec.kernel)
             .ok_or_else(|| HetError::runtime(format!("no kernel `{}`", spec.kernel)))?;
@@ -64,7 +134,7 @@ impl RuntimeInner {
             None
         };
         let key = JitKey {
-            module: spec.module,
+            module: uid,
             kernel: spec.kernel.clone(),
             kind: dev.kind,
             tensix_mode,

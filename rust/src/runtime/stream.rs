@@ -1,22 +1,41 @@
-//! Streams: ordered asynchronous command queues (paper §4.3 *Kernel and
-//! Stream Management*).
+//! Stream handles and per-stream state shared with the event graph
+//! (paper §4.3 *Kernel and Stream Management*).
 //!
-//! A [`Stream`] is a **thin recording handle**: every operation appends a
-//! node to the runtime's event graph ([`crate::runtime::events`]) and
-//! returns immediately; a shared executor pool drains ready nodes onto the
-//! block-dispatch pool, so independent streams overlap while each stream's
-//! own commands retain FIFO order. When a launch is paused by the
-//! cooperative checkpoint protocol the stream **halts**: subsequent
-//! commands are deferred "until migration completes" (paper §4.3) and the
-//! harvested state waits for the orchestrator; `resume` (possibly naming a
-//! different device) re-enters the kernel from its snapshot, then the
-//! deferred queue drains in order.
+//! A stream is an ordered asynchronous command queue living entirely
+//! inside the runtime's event graph ([`crate::runtime::events`]); the
+//! host side only ever holds a [`StreamHandle`] — a generational
+//! `{slot, generation}` pair minted by `HetGpu::create_stream` and
+//! invalidated by `HetGpu::destroy_stream`. Every API call revalidates
+//! the handle against the graph's slot table, so use-after-destroy and
+//! slot reuse surface as `HetError::InvalidHandle` rather than aliasing
+//! whichever stream reused the slot.
+//!
+//! This module also holds [`PausedKernel`] (the captured mid-execution
+//! kernel a checkpoint harvests) and [`StreamStats`] (per-stream
+//! accounting), both of which the migration and coordinator layers share.
 
-use crate::error::Result;
-use crate::runtime::events::{EventGraph, EventId, NodeKind};
+use crate::runtime::handle::impl_handle_raw;
 use crate::runtime::launch::LaunchSpec;
 use crate::sim::snapshot::{BlockResume, BlockState, CostReport};
-use std::sync::Arc;
+
+/// Generational handle to a stream (API v2).
+///
+/// `Copy` and cheap; the `{slot, generation}` pair is validated on every
+/// use. Handles survive migration (the stream keeps its identity while
+/// its device binding changes) and go stale on `destroy_stream`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct StreamHandle {
+    pub(crate) slot: u32,
+    pub(crate) gen: u32,
+}
+
+impl StreamHandle {
+    pub(crate) fn new(slot: u32, gen: u32) -> StreamHandle {
+        StreamHandle { slot, gen }
+    }
+}
+
+impl_handle_raw!(StreamHandle, "stream");
 
 /// A kernel frozen mid-execution by a checkpoint.
 #[derive(Debug, Clone)]
@@ -104,62 +123,6 @@ impl StreamStats {
     }
 }
 
-/// Host-side handle to a stream: an id plus the graph it records into.
-/// Cheap to clone — all state lives in the graph.
-#[derive(Clone)]
-pub struct Stream {
-    pub id: usize,
-    graph: Arc<EventGraph>,
-}
-
-impl Stream {
-    pub(crate) fn new(id: usize, graph: Arc<EventGraph>) -> Stream {
-        Stream { id, graph }
-    }
-
-    /// Record a kernel launch; returns its event.
-    pub fn launch(&self, spec: LaunchSpec) -> Result<EventId> {
-        self.graph.enqueue(self.id, NodeKind::Launch { spec, shard: None }, &[])
-    }
-
-    pub(crate) fn enqueue(&self, kind: NodeKind, deps: &[EventId]) -> Result<EventId> {
-        self.graph.enqueue(self.id, kind, deps)
-    }
-
-    /// Wait for all runnable queued work; surfaces the sticky error if any.
-    pub fn synchronize(&self) -> Result<()> {
-        self.graph.synchronize(self.id)
-    }
-
-    /// Wait for the queue and report whether the stream is halted at a
-    /// checkpoint (used by the migration orchestrator).
-    pub fn quiesce(&self) -> Result<bool> {
-        self.graph.quiesce(self.id)
-    }
-
-    /// Take the paused kernel (leaves the stream halted).
-    pub fn take_paused(&self) -> Result<Option<PausedKernel>> {
-        self.graph.take_paused(self.id)
-    }
-
-    /// Resume on `device` with optional restored kernel state. The device
-    /// is validated before anything is acknowledged; re-entry itself runs
-    /// asynchronously and drains the deferred queue in FIFO order.
-    pub fn resume(&self, device: usize, paused: Option<PausedKernel>) -> Result<()> {
-        self.graph.resume(self.id, device, paused)
-    }
-
-    /// Device this stream currently records against.
-    pub fn device(&self) -> Result<usize> {
-        self.graph.stream_device(self.id)
-    }
-
-    /// Snapshot of the accumulated statistics.
-    pub fn stats(&self) -> Result<StreamStats> {
-        self.graph.stats(self.id)
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -181,5 +144,12 @@ mod tests {
         assert_eq!(d0.cost.warp_instructions, 20);
         let d1 = &s.per_device[1];
         assert_eq!((d1.device, d1.launches, d1.sim_workers), (1, 1, 2));
+    }
+
+    #[test]
+    fn handle_raw_roundtrip() {
+        let h = StreamHandle::new(7, 42);
+        assert_eq!(StreamHandle::from_raw(h.raw()), h);
+        assert_eq!(format!("{h}"), "stream#7.42");
     }
 }

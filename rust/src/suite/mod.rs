@@ -205,7 +205,7 @@ pub fn run_kernel(
     let device = ctx.stream_device(stream)?;
     let stats_before = ctx.stream_stats(stream)?;
     let run = |args: &[Arg], dims: LaunchDims| -> Result<()> {
-        ctx.launch(stream, module, kernel, dims, args)?;
+        ctx.launch(module, kernel).dims(dims).args(args).record(stream)?;
         ctx.synchronize(stream)
     };
     let approx = |a: f32, b: f32, tol: f32| (a - b).abs() <= tol * (1.0 + b.abs());
@@ -215,21 +215,19 @@ pub fn run_kernel(
             let n = (65536 / scale).max(256) as usize;
             let a = gen_f32(n, 1);
             let b = gen_f32(n, 2);
-            let (pa, pb, pc) = (
-                ctx.malloc_on(4 * n as u64, device)?,
-                ctx.malloc_on(4 * n as u64, device)?,
-                ctx.malloc_on(4 * n as u64, device)?,
-            );
-            ctx.upload_f32(pa, &a)?;
-            ctx.upload_f32(pb, &b)?;
+            let pa = ctx.alloc_buffer::<f32>(n, device)?;
+            let pb = ctx.alloc_buffer::<f32>(n, device)?;
+            let pc = ctx.alloc_buffer::<f32>(n, device)?;
+            ctx.upload(&pa, &a)?;
+            ctx.upload(&pb, &b)?;
             run(
-                &[Arg::Ptr(pa), Arg::Ptr(pb), Arg::Ptr(pc), Arg::U32(n as u32)],
+                &[pa.arg(), pb.arg(), pc.arg(), Arg::U32(n as u32)],
                 LaunchDims::d1((n as u32).div_ceil(256), 256),
             )?;
-            let c = ctx.download_f32(pc, n)?;
+            let c = ctx.download(&pc, n)?;
             let ok = (0..n).all(|i| c[i] == a[i] + b[i]);
-            for p in [pa, pb, pc] {
-                ctx.free(p)?;
+            for p in [&pa, &pb, &pc] {
+                ctx.free_buffer(p)?;
             }
             (ok, format!("n={n}"))
         }
@@ -237,71 +235,70 @@ pub fn run_kernel(
             let n = (65536 / scale).max(256) as usize;
             let x = gen_f32(n, 3);
             let y0 = gen_f32(n, 4);
-            let (px, py) =
-                (ctx.malloc_on(4 * n as u64, device)?, ctx.malloc_on(4 * n as u64, device)?);
-            ctx.upload_f32(px, &x)?;
-            ctx.upload_f32(py, &y0)?;
+            let px = ctx.alloc_buffer::<f32>(n, device)?;
+            let py = ctx.alloc_buffer::<f32>(n, device)?;
+            ctx.upload(&px, &x)?;
+            ctx.upload(&py, &y0)?;
             run(
-                &[Arg::Ptr(px), Arg::Ptr(py), Arg::F32(2.5), Arg::U32(n as u32)],
+                &[px.arg(), py.arg(), Arg::F32(2.5), Arg::U32(n as u32)],
                 LaunchDims::d1((n as u32).div_ceil(256), 256),
             )?;
-            let y = ctx.download_f32(py, n)?;
+            let y = ctx.download(&py, n)?;
             let ok = (0..n).all(|i| y[i] == 2.5 * x[i] + y0[i]);
-            ctx.free(px)?;
-            ctx.free(py)?;
+            ctx.free_buffer(&px)?;
+            ctx.free_buffer(&py)?;
             (ok, format!("n={n}"))
         }
         "matmul16" => {
             let n = if scale <= 1 { 128usize } else { 64 };
             let a = gen_f32(n * n, 5);
             let b = gen_f32(n * n, 6);
-            let (pa, pb, pc) = (
-                ctx.malloc_on(4 * (n * n) as u64, device)?,
-                ctx.malloc_on(4 * (n * n) as u64, device)?,
-                ctx.malloc_on(4 * (n * n) as u64, device)?,
-            );
-            ctx.upload_f32(pa, &a)?;
-            ctx.upload_f32(pb, &b)?;
+            let pa = ctx.alloc_buffer::<f32>(n * n, device)?;
+            let pb = ctx.alloc_buffer::<f32>(n * n, device)?;
+            let pc = ctx.alloc_buffer::<f32>(n * n, device)?;
+            ctx.upload(&pa, &a)?;
+            ctx.upload(&pb, &b)?;
             let g = (n / 16) as u32;
             run(
-                &[Arg::Ptr(pa), Arg::Ptr(pb), Arg::Ptr(pc), Arg::U32(n as u32)],
+                &[pa.arg(), pb.arg(), pc.arg(), Arg::U32(n as u32)],
                 LaunchDims { grid: [g, g, 1], block: [16, 16, 1] },
             )?;
-            let c = ctx.download_f32(pc, n * n)?;
+            let c = ctx.download(&pc, n * n)?;
             let reference = matmul_reference(&a, &b, n);
             let ok = c.iter().zip(&reference).all(|(g, r)| approx(*g, *r, 1e-4));
-            for p in [pa, pb, pc] {
-                ctx.free(p)?;
+            for p in [&pa, &pb, &pc] {
+                ctx.free_buffer(p)?;
             }
             (ok, format!("n={n}"))
         }
         "reduce_sum" => {
             let n = (65536 / scale).max(512) as usize;
             let x = gen_f32(n, 7);
-            let (px, po) = (ctx.malloc_on(4 * n as u64, device)?, ctx.malloc_on(256, device)?);
-            ctx.upload_f32(px, &x)?;
-            ctx.upload_f32(po, &[0.0])?;
+            let px = ctx.alloc_buffer::<f32>(n, device)?;
+            let po = ctx.alloc_buffer::<f32>(1, device)?;
+            ctx.upload(&px, &x)?;
+            ctx.upload(&po, &[0.0])?;
             run(
-                &[Arg::Ptr(px), Arg::Ptr(po), Arg::U32(n as u32)],
+                &[px.arg(), po.arg(), Arg::U32(n as u32)],
                 LaunchDims::d1((n as u32).div_ceil(256), 256),
             )?;
-            let got = ctx.download_f32(po, 1)?[0];
+            let got = ctx.download(&po, 1)?[0];
             let want: f32 = x.iter().sum();
             let ok = approx(got, want, 1e-3);
-            ctx.free(px)?;
-            ctx.free(po)?;
+            ctx.free_buffer(&px)?;
+            ctx.free_buffer(&po)?;
             (ok, format!("n={n} got={got} want={want}"))
         }
         "scan32" => {
             let n = 4096usize / scale.min(4) as usize;
             let x = gen_f32(n, 8);
-            let px = ctx.malloc_on(4 * n as u64, device)?;
-            ctx.upload_f32(px, &x)?;
+            let px = ctx.alloc_buffer::<f32>(n, device)?;
+            ctx.upload(&px, &x)?;
             run(
-                &[Arg::Ptr(px), Arg::U32(n as u32)],
+                &[px.arg(), Arg::U32(n as u32)],
                 LaunchDims::d1((n as u32).div_ceil(256), 256),
             )?;
-            let got = ctx.download_f32(px, n)?;
+            let got = ctx.download(&px, n)?;
             let mut ok = true;
             for team in 0..n / 32 {
                 let mut acc = 0f32;
@@ -312,40 +309,40 @@ pub fn run_kernel(
                     }
                 }
             }
-            ctx.free(px)?;
+            ctx.free_buffer(&px)?;
             (ok, format!("n={n}"))
         }
         "bitcount" => {
             let n = 8192usize / scale.min(8) as usize;
             let data = gen_u32(n, 9);
-            let (pd, pc) =
-                (ctx.malloc_on(4 * n as u64, device)?, ctx.malloc_on(256, device)?);
-            ctx.upload_u32(pd, &data)?;
-            ctx.upload_u32(pc, &[0])?;
+            let pd = ctx.alloc_buffer::<u32>(n, device)?;
+            let pc = ctx.alloc_buffer::<u32>(1, device)?;
+            ctx.upload(&pd, &data)?;
+            ctx.upload(&pc, &[0])?;
             run(
-                &[Arg::Ptr(pd), Arg::Ptr(pc), Arg::U32(n as u32)],
+                &[pd.arg(), pc.arg(), Arg::U32(n as u32)],
                 LaunchDims::d1((n as u32).div_ceil(256), 256),
             )?;
-            let got = ctx.download_u32(pc, 1)?[0];
+            let got = ctx.download(&pc, 1)?[0];
             let want = data.iter().filter(|v| *v & 1 == 1).count() as u32;
             let ok = got == want;
-            ctx.free(pd)?;
-            ctx.free(pc)?;
+            ctx.free_buffer(&pd)?;
+            ctx.free_buffer(&pc)?;
             (ok, format!("got={got} want={want}"))
         }
         "mc_pi" => {
             let threads = 512u32;
             let iters = (2000 / scale).max(50);
-            let ph = ctx.malloc_on(256, device)?;
-            ctx.upload_u32(ph, &[0])?;
+            let ph = ctx.alloc_buffer::<u32>(1, device)?;
+            ctx.upload(&ph, &[0])?;
             run(
-                &[Arg::Ptr(ph), Arg::U32(iters), Arg::U32(12345)],
+                &[ph.arg(), Arg::U32(iters), Arg::U32(12345)],
                 LaunchDims::d1(threads / 64, 64),
             )?;
-            let got = ctx.download_u32(ph, 1)?[0] as u64;
+            let got = ctx.download(&ph, 1)?[0] as u64;
             let want = mc_pi_reference(threads, iters, 12345);
             let ok = got == want;
-            ctx.free(ph)?;
+            ctx.free_buffer(&ph)?;
             (ok, format!("got={got} want={want} (bit-exact PRNG)"))
         }
         "nn_layer" => {
@@ -353,27 +350,25 @@ pub fn run_kernel(
             let x = gen_f32(batch * d, 10);
             let w = gen_f32(d * h, 11);
             let bias = gen_f32(h, 12);
-            let (px, pw, pb, po) = (
-                ctx.malloc_on(4 * (batch * d) as u64, device)?,
-                ctx.malloc_on(4 * (d * h) as u64, device)?,
-                ctx.malloc_on(4 * h as u64, device)?,
-                ctx.malloc_on(4 * (batch * h) as u64, device)?,
-            );
-            ctx.upload_f32(px, &x)?;
-            ctx.upload_f32(pw, &w)?;
-            ctx.upload_f32(pb, &bias)?;
+            let px = ctx.alloc_buffer::<f32>(batch * d, device)?;
+            let pw = ctx.alloc_buffer::<f32>(d * h, device)?;
+            let pb = ctx.alloc_buffer::<f32>(h, device)?;
+            let po = ctx.alloc_buffer::<f32>(batch * h, device)?;
+            ctx.upload(&px, &x)?;
+            ctx.upload(&pw, &w)?;
+            ctx.upload(&pb, &bias)?;
             run(
                 &[
-                    Arg::Ptr(px),
-                    Arg::Ptr(pw),
-                    Arg::Ptr(pb),
-                    Arg::Ptr(po),
+                    px.arg(),
+                    pw.arg(),
+                    pb.arg(),
+                    po.arg(),
                     Arg::U32(d as u32),
                     Arg::U32(h as u32),
                 ],
                 LaunchDims { grid: [(h as u32).div_ceil(64), batch as u32, 1], block: [64, 1, 1] },
             )?;
-            let out = ctx.download_f32(po, batch * h)?;
+            let out = ctx.download(&po, batch * h)?;
             let mut ok = true;
             for r in 0..batch {
                 for j in 0..h {
@@ -386,47 +381,47 @@ pub fn run_kernel(
                     }
                 }
             }
-            for p in [px, pw, pb, po] {
-                ctx.free(p)?;
+            for p in [&px, &pw, &pb, &po] {
+                ctx.free_buffer(p)?;
             }
             (ok, format!("batch={batch} d={d} h={h}"))
         }
         "stencil3" => {
             let n = (32768 / scale).max(512) as usize;
             let x = gen_f32(n, 13);
-            let (pi, po) =
-                (ctx.malloc_on(4 * n as u64, device)?, ctx.malloc_on(4 * n as u64, device)?);
-            ctx.upload_f32(pi, &x)?;
+            let pi = ctx.alloc_buffer::<f32>(n, device)?;
+            let po = ctx.alloc_buffer::<f32>(n, device)?;
+            ctx.upload(&pi, &x)?;
             run(
-                &[Arg::Ptr(pi), Arg::Ptr(po), Arg::U32(n as u32)],
+                &[pi.arg(), po.arg(), Arg::U32(n as u32)],
                 LaunchDims::d1((n as u32).div_ceil(256), 256),
             )?;
-            let got = ctx.download_f32(po, n)?;
+            let got = ctx.download(&po, n)?;
             let ok = (1..n - 1)
                 .all(|i| got[i] == 0.25 * x[i - 1] + 0.5 * x[i] + 0.25 * x[i + 1]);
-            ctx.free(pi)?;
-            ctx.free(po)?;
+            ctx.free_buffer(&pi)?;
+            ctx.free_buffer(&po)?;
             (ok, format!("n={n}"))
         }
         "hist16" => {
             let n = (32768 / scale).max(512) as usize;
             let data = gen_u32(n, 14);
-            let (pd, pb) =
-                (ctx.malloc_on(4 * n as u64, device)?, ctx.malloc_on(256, device)?);
-            ctx.upload_u32(pd, &data)?;
-            ctx.upload_u32(pb, &[0; 16])?;
+            let pd = ctx.alloc_buffer::<u32>(n, device)?;
+            let pb = ctx.alloc_buffer::<u32>(16, device)?;
+            ctx.upload(&pd, &data)?;
+            ctx.upload(&pb, &[0; 16])?;
             run(
-                &[Arg::Ptr(pd), Arg::Ptr(pb), Arg::U32(n as u32)],
+                &[pd.arg(), pb.arg(), Arg::U32(n as u32)],
                 LaunchDims::d1((n as u32).div_ceil(256), 256),
             )?;
-            let got = ctx.download_u32(pb, 16)?;
+            let got = ctx.download(&pb, 16)?;
             let mut want = [0u32; 16];
             for v in &data {
                 want[(v & 15) as usize] += 1;
             }
             let ok = got == want;
-            ctx.free(pd)?;
-            ctx.free(pb)?;
+            ctx.free_buffer(&pd)?;
+            ctx.free_buffer(&pb)?;
             (ok, "16 bins".to_string())
         }
         other => (false, format!("unknown kernel {other}")),

@@ -35,7 +35,13 @@ def main(argv):
     prev, curr = load(prev_path), load(curr_path)
 
     failures = []
-    for section, key in [("dispatch", "par_wall_s"), ("streams", "overlapped_s")]:
+    for section, key in [
+        ("dispatch", "par_wall_s"),
+        ("streams", "overlapped_s"),
+        # API v2 handle churn: gates regressions in stream/event
+        # create-destroy + reclamation (slot-table reuse).
+        ("handles", "churn_s"),
+    ]:
         p = prev.get(section, {}).get(key)
         c = curr.get(section, {}).get(key)
         if p is None or c is None:

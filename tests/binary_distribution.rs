@@ -28,25 +28,21 @@ fn hetir_text_binary_runs_everywhere() {
     for dev in 0..ctx.device_count() {
         let n = 96usize;
         let x = suite::gen_f32(n, 5);
-        let (px, py) = (
-            ctx.malloc_on(4 * n as u64, dev).unwrap(),
-            ctx.malloc_on(4 * n as u64, dev).unwrap(),
-        );
-        ctx.upload_f32(px, &x).unwrap();
-        ctx.upload_f32(py, &vec![1.0; n]).unwrap();
+        let px = ctx.alloc_buffer::<f32>(n, dev).unwrap();
+        let py = ctx.alloc_buffer::<f32>(n, dev).unwrap();
+        ctx.upload(&px, &x).unwrap();
+        ctx.upload(&py, &vec![1.0; n]).unwrap();
         let s = ctx.create_stream(dev).unwrap();
-        ctx.launch(
-            s,
-            module,
-            "saxpy",
-            LaunchDims::d1(3, 32),
-            &[Arg::Ptr(px), Arg::Ptr(py), Arg::F32(3.0), Arg::U32(n as u32)],
-        )
-        .unwrap();
+        ctx.launch(module, "saxpy")
+            .dims(LaunchDims::d1(3, 32))
+            .args(&[px.arg(), py.arg(), Arg::F32(3.0), Arg::U32(n as u32)])
+            .record(s)
+            .unwrap();
         ctx.synchronize(s).unwrap();
-        results.push(ctx.download_f32(py, n).unwrap());
-        ctx.free(px).unwrap();
-        ctx.free(py).unwrap();
+        results.push(ctx.download(&py, n).unwrap());
+        ctx.free_buffer(&px).unwrap();
+        ctx.free_buffer(&py).unwrap();
+        ctx.destroy_stream(s).unwrap();
     }
     for other in &results[1..] {
         assert_eq!(&results[0], other, "devices disagree on the shipped binary");
@@ -77,23 +73,20 @@ fn text_binary_with_live_migration() {
         let ctx =
             HetGpu::with_devices(&[DeviceKind::IntelSim, DeviceKind::TenstorrentSim]).unwrap();
         let module = ctx.load_module_text(&text).unwrap();
-        let buf = ctx.malloc_on(256, 0).unwrap();
-        ctx.upload_f32(buf, &(0..64).map(|i| i as f32).collect::<Vec<_>>()).unwrap();
+        let buf = ctx.alloc_buffer::<f32>(64, 0).unwrap();
+        ctx.upload(&buf, &(0..64).map(|i| i as f32).collect::<Vec<_>>()).unwrap();
         let s = ctx.create_stream(0).unwrap();
-        ctx.launch(
-            s,
-            module,
-            "persist",
-            LaunchDims::d1(2, 32),
-            &[Arg::Ptr(buf), Arg::U32(120_000)],
-        )
-        .unwrap();
+        ctx.launch(module, "persist")
+            .dims(LaunchDims::d1(2, 32))
+            .args(&[buf.arg(), Arg::U32(120_000)])
+            .record(s)
+            .unwrap();
         if migrate {
             std::thread::sleep(std::time::Duration::from_millis(30));
             ctx.migrate(s, 1).unwrap();
         }
         ctx.synchronize(s).unwrap();
-        ctx.download_f32(buf, 64).unwrap().iter().map(|v| v.to_bits()).collect()
+        ctx.download(&buf, 64).unwrap().iter().map(|v| v.to_bits()).collect()
     };
     assert_eq!(run(false), run(true), "migrated run diverged from straight run");
 }

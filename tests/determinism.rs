@@ -11,7 +11,7 @@ use hetgpu::isa::simt_isa::{SimtConfig, SimtProgram};
 use hetgpu::isa::tensix_isa::TensixMode;
 use hetgpu::migrate::blob;
 use hetgpu::migrate::state::Snapshot;
-use hetgpu::runtime::api::HetGpu;
+use hetgpu::runtime::api::{HetGpu, ModuleHandle, StreamHandle};
 use hetgpu::runtime::device::DeviceKind;
 use hetgpu::runtime::launch::{Arg, LaunchSpec};
 use hetgpu::runtime::stream::PausedKernel;
@@ -186,7 +186,7 @@ fn pinned_pause_migrate_roundtrip_is_bit_identical() {
         }
     };
     let spec = LaunchSpec {
-        module: 0,
+        module: ModuleHandle::from_raw(0),
         kernel: "persist".to_string(),
         dims,
         args: Vec::<Arg>::new(),
@@ -221,6 +221,7 @@ fn pinned_pause_migrate_roundtrip_is_bit_identical() {
     // Snapshot blobs must serialize to identical bytes.
     let blob_of = |grid: &PausedGrid, mem: &[u8]| {
         blob::serialize(&Snapshot {
+            stream: StreamHandle::from_raw(0),
             src_device: 0,
             paused: Some(PausedKernel { spec: spec.clone(), blocks: grid.blocks.clone() }),
             allocations: vec![(0, mem.to_vec())],
@@ -264,31 +265,41 @@ fn sharded_launch_bit_identical_to_single_device() {
     // Reference: one device, one launch.
     let ref_ctx = HetGpu::with_devices(&[DeviceKind::NvidiaSim]).unwrap();
     let m = ref_ctx.compile_cuda(SCALE_SRC).unwrap();
-    let buf = ref_ctx.malloc_on(4 * n as u64, 0).unwrap();
-    ref_ctx.upload_f32(buf, &init).unwrap();
+    let buf = ref_ctx.alloc_buffer::<f32>(n as usize, 0).unwrap();
+    ref_ctx.upload(&buf, &init).unwrap();
     let s = ref_ctx.create_stream(0).unwrap();
-    ref_ctx.launch(s, m, "scale", dims, &[Arg::Ptr(buf), Arg::U32(n)]).unwrap();
+    ref_ctx
+        .launch(m, "scale")
+        .dims(dims)
+        .args(&[buf.arg(), Arg::U32(n)])
+        .record(s)
+        .unwrap();
     ref_ctx.synchronize(s).unwrap();
-    let expect = ref_ctx.download_f32(buf, n as usize).unwrap();
+    let expect = ref_ctx.download(&buf, n as usize).unwrap();
     let ref_cost = ref_ctx.stream_stats(s).unwrap().cost;
 
     // Sharded: same grid over two NVIDIA devices (same cost model, so the
     // summed totals are exactly comparable; the allocator is
-    // deterministic, so `buf` lands at the same address).
+    // deterministic, so `buf` lands at the same address). The async
+    // peer-copy broadcast + overlapped D2H-merge join must still be
+    // bit-identical to the single-device run.
     let ctx = HetGpu::with_devices(&[DeviceKind::NvidiaSim, DeviceKind::NvidiaSim]).unwrap();
     let m2 = ctx.compile_cuda(SCALE_SRC).unwrap();
-    let buf2 = ctx.malloc_on(4 * n as u64, 0).unwrap();
-    assert_eq!(buf.0, buf2.0);
-    ctx.upload_f32(buf2, &init).unwrap();
+    let buf2 = ctx.alloc_buffer::<f32>(n as usize, 0).unwrap();
+    assert_eq!(buf.ptr(), buf2.ptr());
+    ctx.upload(&buf2, &init).unwrap();
     let mut run = ctx
-        .coordinator()
-        .launch_sharded(m2, "scale", dims, &[Arg::Ptr(buf2), Arg::U32(n)], &[0, 1])
+        .launch(m2, "scale")
+        .dims(dims)
+        .args(&[buf2.arg(), Arg::U32(n)])
+        .working_set(&[buf2.ptr()])
+        .sharded(&[0, 1])
         .unwrap();
     assert_eq!(run.shards.len(), 2, "both devices must own blocks");
     assert!(run.shards.iter().all(|sh| !sh.range.is_empty()));
     let report = run.wait().unwrap();
 
-    let got = ctx.download_f32(buf2, n as usize).unwrap();
+    let got = ctx.download(&buf2, n as usize).unwrap();
     for (i, (e, g)) in expect.iter().zip(&got).enumerate() {
         assert_eq!(e.to_bits(), g.to_bits(), "elem {i}: {e} vs {g}");
     }
@@ -310,21 +321,18 @@ fn runtime_worker_plumbing_and_env_escape_hatch() {
                 HetGpu::with_devices_and_workers(&[DeviceKind::NvidiaSim], workers).unwrap();
             assert_eq!(ctx.sim_workers(0).unwrap(), workers);
             let m = ctx.compile_cuda(SCALE_SRC).unwrap();
-            let buf = ctx.malloc_on(4096, 0).unwrap();
+            let buf = ctx.alloc_buffer::<f32>(1024, 0).unwrap();
             let data: Vec<f32> = (0..1024).map(|i| i as f32).collect();
-            ctx.upload_f32(buf, &data).unwrap();
+            ctx.upload(&buf, &data).unwrap();
             let s = ctx.create_stream(0).unwrap();
-            ctx.launch(
-                s,
-                m,
-                "scale",
-                LaunchDims::d1(16, 64),
-                &[Arg::Ptr(buf), Arg::U32(1024)],
-            )
-            .unwrap();
+            ctx.launch(m, "scale")
+                .dims(LaunchDims::d1(16, 64))
+                .args(&[buf.arg(), Arg::U32(1024)])
+                .record(s)
+                .unwrap();
             ctx.synchronize(s).unwrap();
             assert_eq!(ctx.stream_stats(s).unwrap().sim_workers, workers);
-            ctx.download_f32(buf, 1024).unwrap()
+            ctx.download(&buf, 1024).unwrap()
         })
         .collect();
     assert_eq!(results[0], results[1]);

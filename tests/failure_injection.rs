@@ -18,9 +18,10 @@ fn oob_access_faults_uniformly() {
     for kind in DeviceKind::all() {
         let ctx = HetGpu::with_devices(&[kind]).unwrap();
         let m = ctx.compile_cuda(src).unwrap();
+        // Raw pointer surface: kernels take untyped device addresses.
         let buf = ctx.malloc_on(256, 0).unwrap();
         let s = ctx.create_stream(0).unwrap();
-        ctx.launch(s, m, "oob", LaunchDims::d1(1, 32), &[Arg::Ptr(buf)]).unwrap();
+        ctx.launch(m, "oob").dims(LaunchDims::d1(1, 32)).arg(Arg::Ptr(buf)).record(s).unwrap();
         let err = ctx.synchronize(s).unwrap_err().to_string();
         assert!(
             err.contains("illegal memory access") || err.contains("exceeds capacity"),
@@ -40,9 +41,13 @@ fn div_by_zero_faults() {
     "#;
     let ctx = HetGpu::with_devices(&[DeviceKind::NvidiaSim]).unwrap();
     let m = ctx.compile_cuda(src).unwrap();
-    let buf = ctx.malloc_on(256, 0).unwrap();
+    let buf = ctx.alloc_buffer::<u32>(64, 0).unwrap();
     let s = ctx.create_stream(0).unwrap();
-    ctx.launch(s, m, "divz", LaunchDims::d1(1, 32), &[Arg::Ptr(buf), Arg::U32(0)]).unwrap();
+    ctx.launch(m, "divz")
+        .dims(LaunchDims::d1(1, 32))
+        .args(&[buf.arg(), Arg::U32(0)])
+        .record(s)
+        .unwrap();
     assert!(ctx.synchronize(s).is_err());
 }
 
@@ -70,10 +75,10 @@ fn arg_mismatch_rejected() {
     let m = ctx
         .compile_cuda("__global__ void k(float* p, unsigned n) { p[n] = 0.0f; }")
         .unwrap();
-    let buf = ctx.malloc_on(256, 0).unwrap();
+    let buf = ctx.alloc_buffer::<f32>(64, 0).unwrap();
     let s = ctx.create_stream(0).unwrap();
     // wrong count
-    ctx.launch(s, m, "k", LaunchDims::d1(1, 32), &[Arg::Ptr(buf)]).unwrap();
+    ctx.launch(m, "k").dims(LaunchDims::d1(1, 32)).arg(buf.arg()).record(s).unwrap();
     assert!(ctx.synchronize(s).is_err());
 }
 
@@ -83,7 +88,7 @@ fn unknown_kernel_reported() {
     let ctx = HetGpu::with_devices(&[DeviceKind::IntelSim]).unwrap();
     let m = ctx.compile_cuda("__global__ void k(float* p) { p[0] = 1.0f; }").unwrap();
     let s = ctx.create_stream(0).unwrap();
-    ctx.launch(s, m, "nope", LaunchDims::d1(1, 32), &[]).unwrap();
+    ctx.launch(m, "nope").dims(LaunchDims::d1(1, 32)).record(s).unwrap();
     let err = ctx.synchronize(s).unwrap_err().to_string();
     assert!(err.contains("nope"), "{err}");
 }
@@ -100,15 +105,19 @@ fn fault_is_sticky_but_context_survives() {
              __global__ void bad(float* p) { p[1073741824u] = 0.0f; }",
         )
         .unwrap();
-    let buf = ctx.malloc_on(256, 0).unwrap();
+    let buf = ctx.alloc_buffer::<f32>(64, 0).unwrap();
     let s1 = ctx.create_stream(0).unwrap();
-    ctx.launch(s1, m, "bad", LaunchDims::d1(1, 32), &[Arg::Ptr(buf)]).unwrap();
+    ctx.launch(m, "bad").dims(LaunchDims::d1(1, 32)).arg(buf.arg()).record(s1).unwrap();
     assert!(ctx.synchronize(s1).is_err());
     // Fresh stream still executes correctly.
     let s2 = ctx.create_stream(0).unwrap();
-    ctx.launch(s2, m, "good", LaunchDims::d1(1, 32), &[Arg::Ptr(buf)]).unwrap();
+    ctx.launch(m, "good").dims(LaunchDims::d1(1, 32)).arg(buf.arg()).record(s2).unwrap();
     ctx.synchronize(s2).unwrap();
-    assert_eq!(ctx.download_f32(buf, 1).unwrap()[0], 7.0);
+    assert_eq!(ctx.download(&buf, 1).unwrap()[0], 7.0);
+    // A poisoned stream still destroys cleanly (its queue was cleared by
+    // the sticky-error path).
+    ctx.destroy_stream(s1).unwrap();
+    ctx.destroy_stream(s2).unwrap();
 }
 
 /// Out-of-memory is a clean runtime error.
@@ -127,8 +136,8 @@ fn migrate_to_bad_device_fails_cleanly() {
     assert!(ctx.migrate(s, 7).is_err());
     // Stream still usable.
     let m = ctx.compile_cuda("__global__ void k(float* p) { p[0] = 1.0f; }").unwrap();
-    let buf = ctx.malloc_on(256, 0).unwrap();
-    ctx.launch(s, m, "k", LaunchDims::d1(1, 1), &[Arg::Ptr(buf)]).unwrap();
+    let buf = ctx.alloc_buffer::<f32>(1, 0).unwrap();
+    ctx.launch(m, "k").dims(LaunchDims::d1(1, 1)).arg(buf.arg()).record(s).unwrap();
     ctx.synchronize(s).unwrap();
 }
 

@@ -1,0 +1,328 @@
+//! API v2 handle-lifecycle tests: every resource type (stream, event,
+//! module, buffer) has a create→destroy lifecycle backed by generational
+//! slot-reuse tables, stale handles of every type fail with
+//! `HetError::InvalidHandle`, and reclamation keeps the event graph
+//! bounded by *live* handles — including across a `launch_sharded` loop,
+//! the ROADMAP's long-running-service leak.
+
+use hetgpu::runtime::api::HetGpu;
+use hetgpu::runtime::device::DeviceKind;
+use hetgpu::runtime::events::EventStatus;
+use hetgpu::sim::simt::LaunchDims;
+
+const BUMP_SRC: &str = r#"
+__global__ void bump(float* p) {
+    unsigned i = blockIdx.x * blockDim.x + threadIdx.x;
+    p[i] = p[i] + 1.0f;
+}
+"#;
+
+const PERSIST_SRC: &str = r#"
+__global__ void persist(float* data, unsigned iters) {
+    unsigned i = blockIdx.x * blockDim.x + threadIdx.x;
+    float acc = data[i];
+    for (unsigned k = 0u; k < iters; k++) {
+        acc = acc * 1.0001f + 1.0f;
+        __syncthreads();
+    }
+    data[i] = acc;
+}
+"#;
+
+#[test]
+fn stream_use_after_destroy_and_double_destroy() {
+    let ctx = HetGpu::with_devices(&[DeviceKind::NvidiaSim]).unwrap();
+    let m = ctx.compile_cuda(BUMP_SRC).unwrap();
+    let buf = ctx.alloc_buffer::<f32>(64, 0).unwrap();
+    let s = ctx.create_stream(0).unwrap();
+    ctx.launch(m, "bump").dims(LaunchDims::d1(2, 32)).arg(buf.arg()).record(s).unwrap();
+    ctx.destroy_stream(s).unwrap();
+
+    // Every operation on the dead handle is a typed stale-handle error.
+    assert!(ctx.synchronize(s).unwrap_err().is_invalid_handle());
+    assert!(ctx.stream_device(s).unwrap_err().is_invalid_handle());
+    assert!(ctx.stream_stats(s).unwrap_err().is_invalid_handle());
+    assert!(ctx.record_event(s).unwrap_err().is_invalid_handle());
+    let e = ctx
+        .launch(m, "bump")
+        .dims(LaunchDims::d1(2, 32))
+        .arg(buf.arg())
+        .record(s)
+        .unwrap_err();
+    assert!(e.is_invalid_handle(), "{e}");
+    // Double-destroy is detected, not a panic or a silent success.
+    assert!(ctx.destroy_stream(s).unwrap_err().is_invalid_handle());
+}
+
+#[test]
+fn stale_generation_does_not_alias_slot_reuser() {
+    let ctx = HetGpu::with_devices(&[DeviceKind::NvidiaSim]).unwrap();
+    let s1 = ctx.create_stream(0).unwrap();
+    ctx.destroy_stream(s1).unwrap();
+    // The slot is reused with a bumped generation...
+    let s2 = ctx.create_stream(0).unwrap();
+    assert_ne!(s1, s2);
+    // ...so the stale handle must NOT resolve to the new stream.
+    assert!(ctx.synchronize(s1).unwrap_err().is_invalid_handle());
+    assert!(ctx.destroy_stream(s1).unwrap_err().is_invalid_handle());
+    // The reuser is fully functional.
+    ctx.synchronize(s2).unwrap();
+    ctx.destroy_stream(s2).unwrap();
+    let stats = ctx.graph_stats();
+    assert_eq!(stats.live_streams, 0);
+    assert_eq!(stats.stream_slots, 1, "slot must be reused, not appended");
+}
+
+#[test]
+fn event_retirement_and_wait_on_retired_event() {
+    let ctx = HetGpu::with_devices(&[DeviceKind::NvidiaSim]).unwrap();
+    let s = ctx.create_stream(0).unwrap();
+    let ev = ctx.record_event(s).unwrap();
+    ctx.synchronize(s).unwrap();
+    assert_eq!(ctx.event_query(ev).unwrap(), EventStatus::Completed);
+    ctx.retire_event(ev).unwrap();
+    // Retired handles fail queries, waits, and double-retires.
+    assert!(ctx.event_query(ev).unwrap_err().is_invalid_handle());
+    assert!(ctx.wait_event(s, ev).unwrap_err().is_invalid_handle());
+    assert!(ctx.retire_event(ev).unwrap_err().is_invalid_handle());
+    ctx.destroy_stream(s).unwrap();
+}
+
+#[test]
+fn destroying_a_stream_retires_its_events() {
+    let ctx = HetGpu::with_devices(&[DeviceKind::NvidiaSim]).unwrap();
+    let s = ctx.create_stream(0).unwrap();
+    let ev = ctx.record_event(s).unwrap();
+    ctx.synchronize(s).unwrap();
+    ctx.destroy_stream(s).unwrap();
+    assert!(ctx.event_query(ev).unwrap_err().is_invalid_handle());
+    let stats = ctx.graph_stats();
+    assert_eq!(stats.live_events, 0, "destroy must reclaim the stream's events");
+}
+
+#[test]
+fn buffer_use_after_free_and_slot_reuse() {
+    let ctx = HetGpu::with_devices(&[DeviceKind::NvidiaSim]).unwrap();
+    let b1 = ctx.alloc_buffer::<f32>(64, 0).unwrap();
+    ctx.upload(&b1, &[1.0; 64]).unwrap();
+    ctx.free_buffer(&b1).unwrap();
+    assert!(ctx.upload(&b1, &[2.0; 64]).unwrap_err().is_invalid_handle());
+    assert!(ctx.download(&b1, 1).unwrap_err().is_invalid_handle());
+    assert!(ctx.free_buffer(&b1).unwrap_err().is_invalid_handle());
+    // The address range and handle slot are reused; the stale handle must
+    // not read the reuser's bytes.
+    let b2 = ctx.alloc_buffer::<f32>(64, 0).unwrap();
+    assert_eq!(b1.ptr(), b2.ptr(), "allocator must reuse the freed range first-fit");
+    ctx.upload(&b2, &[9.0; 64]).unwrap();
+    assert!(ctx.download(&b1, 1).unwrap_err().is_invalid_handle());
+    assert_eq!(ctx.download(&b2, 64).unwrap(), vec![9.0; 64]);
+}
+
+#[test]
+fn module_unload_lifecycle() {
+    let ctx = HetGpu::with_devices(&[DeviceKind::NvidiaSim]).unwrap();
+    let m = ctx.compile_cuda(BUMP_SRC).unwrap();
+    let buf = ctx.alloc_buffer::<f32>(64, 0).unwrap();
+    let s = ctx.create_stream(0).unwrap();
+    ctx.launch(m, "bump").dims(LaunchDims::d1(2, 32)).arg(buf.arg()).record(s).unwrap();
+    ctx.synchronize(s).unwrap();
+    ctx.unload_module(m).unwrap();
+    // Recording against the unloaded module is a typed stale-handle error.
+    let e = ctx
+        .launch(m, "bump")
+        .dims(LaunchDims::d1(2, 32))
+        .arg(buf.arg())
+        .record(s)
+        .unwrap_err();
+    assert!(e.is_invalid_handle(), "{e}");
+    assert!(ctx.unload_module(m).unwrap_err().is_invalid_handle());
+    // A fresh module reuses the slot with a new generation; the stale
+    // handle still misses.
+    let m2 = ctx.compile_cuda(BUMP_SRC).unwrap();
+    assert_ne!(m, m2);
+    ctx.launch(m2, "bump").dims(LaunchDims::d1(2, 32)).arg(buf.arg()).record(s).unwrap();
+    ctx.synchronize(s).unwrap();
+    assert!(ctx
+        .launch(m, "bump")
+        .dims(LaunchDims::d1(2, 32))
+        .arg(buf.arg())
+        .record(s)
+        .unwrap_err()
+        .is_invalid_handle());
+}
+
+#[test]
+fn destroying_a_checkpoint_halted_stream_is_refused() {
+    let ctx = HetGpu::with_devices(&[DeviceKind::NvidiaSim, DeviceKind::AmdSim]).unwrap();
+    let m = ctx.compile_cuda(PERSIST_SRC).unwrap();
+    let buf = ctx.alloc_buffer::<f32>(64, 0).unwrap();
+    ctx.upload(&buf, &[0.0; 64]).unwrap();
+    let s = ctx.create_stream(0).unwrap();
+    ctx.launch(m, "persist")
+        .dims(LaunchDims::d1(2, 32))
+        .arg(buf.arg())
+        .arg(200_000u32)
+        .record(s)
+        .unwrap();
+    std::thread::sleep(std::time::Duration::from_millis(30));
+    let snap = ctx.checkpoint(s).unwrap();
+    if snap.paused.is_some() {
+        // Halted at the checkpoint: destroying would lose the captured
+        // kernel, so the API refuses.
+        let e = ctx.destroy_stream(s).unwrap_err();
+        assert!(!e.is_invalid_handle(), "refusal is a state error, not staleness: {e}");
+    }
+    // After restore the stream drains and destroys cleanly.
+    ctx.restore(snap, 1).unwrap();
+    ctx.synchronize(s).unwrap();
+    ctx.destroy_stream(s).unwrap();
+}
+
+/// The acceptance loop: 10k create/destroy stream+event cycles keep both
+/// slot tables bounded by peak liveness, not history.
+#[test]
+fn stream_event_churn_stays_bounded() {
+    let ctx = HetGpu::with_devices_and_workers(&[DeviceKind::NvidiaSim], 1).unwrap();
+    for _ in 0..10_000 {
+        let s = ctx.create_stream(0).unwrap();
+        let ev = ctx.record_event(s).unwrap();
+        ctx.synchronize(s).unwrap();
+        ctx.retire_event(ev).unwrap();
+        ctx.destroy_stream(s).unwrap();
+    }
+    let stats = ctx.graph_stats();
+    assert_eq!(stats.live_streams, 0);
+    assert_eq!(stats.live_events, 0);
+    assert!(stats.stream_slots <= 2, "stream slots grew with history: {stats:?}");
+    assert!(stats.event_slots <= 4, "event slots grew with history: {stats:?}");
+}
+
+/// Migration loops must not grow the event table either: the internal
+/// Resume nodes a checkpoint/restore cycle records are never handed out,
+/// so they must self-reclaim on completion.
+#[test]
+fn migration_loop_keeps_event_table_bounded() {
+    let ctx = HetGpu::with_devices(&[DeviceKind::NvidiaSim, DeviceKind::AmdSim]).unwrap();
+    let m = ctx.compile_cuda(PERSIST_SRC).unwrap();
+    let buf = ctx.alloc_buffer::<f32>(64, 0).unwrap();
+    ctx.upload(&buf, &[0.0; 64]).unwrap();
+    let s = ctx.create_stream(0).unwrap();
+    for _ in 0..50 {
+        let ev = ctx
+            .launch(m, "persist")
+            .dims(LaunchDims::d1(2, 32))
+            .arg(buf.arg())
+            .arg(5_000u32)
+            .record(s)
+            .unwrap();
+        // Ping-pong between the two devices; a live mid-kernel catch
+        // records an internal Resume node, a post-completion migrate just
+        // moves memory — both must leave the table bounded.
+        let dst = 1 - ctx.stream_device(s).unwrap();
+        ctx.migrate(s, dst).unwrap();
+        ctx.synchronize(s).unwrap();
+        ctx.retire_event(ev).unwrap();
+    }
+    let stats = ctx.graph_stats();
+    assert_eq!(stats.live_events, 0, "migration loop leaked events: {stats:?}");
+    assert!(stats.event_slots <= 8, "event table grew with history: {stats:?}");
+}
+
+/// The ROADMAP leak, fixed: a service calling `launch_sharded` in a loop
+/// must hold the event graph at a constant size — the coordinator's
+/// internal per-shard streams are destroyed after each join and their
+/// terminal event statuses reclaimed.
+#[test]
+fn launch_sharded_loop_keeps_graph_bounded() {
+    let ctx = HetGpu::with_devices_and_workers(
+        &[DeviceKind::NvidiaSim, DeviceKind::NvidiaSim],
+        1,
+    )
+    .unwrap();
+    let m = ctx.compile_cuda(BUMP_SRC).unwrap();
+    let buf = ctx.alloc_buffer::<f32>(128, 0).unwrap();
+    ctx.upload(&buf, &[0.0; 128]).unwrap();
+    let dims = LaunchDims::d1(4, 32);
+    for _ in 0..1_000 {
+        let mut run = ctx
+            .launch(m, "bump")
+            .dims(dims)
+            .arg(buf.arg())
+            .working_set(&[buf.ptr()])
+            .sharded(&[0, 1])
+            .unwrap();
+        run.wait().unwrap();
+    }
+    let stats = ctx.graph_stats();
+    assert_eq!(stats.live_streams, 0, "join must destroy internal shard streams");
+    assert_eq!(stats.live_events, 0, "join must retire shard events");
+    assert!(
+        stats.stream_slots <= 8,
+        "stream table bounded by live handles, not history: {stats:?}"
+    );
+    assert!(
+        stats.event_slots <= 32,
+        "event table bounded by live handles, not history: {stats:?}"
+    );
+    // 1000 iterations × (+1.0 per element per iteration): the math also
+    // has to be right, proving every shard actually ran.
+    let out = ctx.download(&buf, 128).unwrap();
+    assert!(out.iter().all(|v| *v == 1_000.0), "{:?}", &out[..4]);
+}
+
+/// Coordinator join with a deliberately skewed shard: the fast shard's
+/// async D2H copies + host merge overlap the slow trailing shard, and the
+/// merged result is bit-identical to a single-device run of the same grid
+/// (the async D2H + peer-copy path must not change semantics).
+#[test]
+fn skewed_shard_join_bit_identical_to_single_device() {
+    let src = r#"
+__global__ void skew(float* x, unsigned iters) {
+    unsigned i = blockIdx.x * blockDim.x + threadIdx.x;
+    unsigned work = iters;
+    if (blockIdx.x >= 2u) { work = iters * 40u; }
+    float acc = x[i];
+    for (unsigned k = 0u; k < work; k++) { acc = acc * 1.000001f + 0.5f; }
+    x[i] = acc;
+}
+"#;
+    let n = 128usize; // 4 blocks x 32 threads
+    let dims = LaunchDims::d1(4, 32);
+    let init: Vec<f32> = (0..n).map(|i| i as f32 * 0.5).collect();
+
+    let ref_ctx = HetGpu::with_devices(&[DeviceKind::NvidiaSim]).unwrap();
+    let rm = ref_ctx.compile_cuda(src).unwrap();
+    let rbuf = ref_ctx.alloc_buffer::<f32>(n, 0).unwrap();
+    ref_ctx.upload(&rbuf, &init).unwrap();
+    let rs = ref_ctx.create_stream(0).unwrap();
+    ref_ctx
+        .launch(rm, "skew")
+        .dims(dims)
+        .arg(rbuf.arg())
+        .arg(3_000u32)
+        .record(rs)
+        .unwrap();
+    ref_ctx.synchronize(rs).unwrap();
+    let expect = ref_ctx.download(&rbuf, n).unwrap();
+
+    // Sharded: blocks 0..2 (cheap) on device 0, blocks 2..4 (40x work)
+    // trail on device 1; the join merges shard 0 while shard 1 runs.
+    let ctx = HetGpu::with_devices(&[DeviceKind::NvidiaSim, DeviceKind::NvidiaSim]).unwrap();
+    let m = ctx.compile_cuda(src).unwrap();
+    let buf = ctx.alloc_buffer::<f32>(n, 0).unwrap();
+    ctx.upload(&buf, &init).unwrap();
+    let mut run = ctx
+        .launch(m, "skew")
+        .dims(dims)
+        .arg(buf.arg())
+        .arg(3_000u32)
+        .working_set(&[buf.ptr()])
+        .sharded(&[0, 1])
+        .unwrap();
+    let report = run.wait().unwrap();
+    assert_eq!(report.per_shard.len(), 2);
+    let got = ctx.download(&buf, n).unwrap();
+    for (i, (e, g)) in expect.iter().zip(&got).enumerate() {
+        assert_eq!(e.to_bits(), g.to_bits(), "elem {i}: {e} vs {g}");
+    }
+}

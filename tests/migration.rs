@@ -31,14 +31,17 @@ const DIMS: (u32, u32) = (2, 32);
 fn reference(iters: u32) -> Vec<f32> {
     let ctx = HetGpu::with_devices(&[DeviceKind::NvidiaSim]).unwrap();
     let m = ctx.compile_cuda(PERSIST_SRC).unwrap();
-    let buf = ctx.malloc_on((N * 4) as u64, 0).unwrap();
+    let buf = ctx.alloc_buffer::<f32>(N, 0).unwrap();
     let init: Vec<f32> = (0..N).map(|i| i as f32 * 0.25).collect();
-    ctx.upload_f32(buf, &init).unwrap();
+    ctx.upload(&buf, &init).unwrap();
     let s = ctx.create_stream(0).unwrap();
-    ctx.launch(s, m, "persist", LaunchDims::d1(DIMS.0, DIMS.1), &[Arg::Ptr(buf), Arg::U32(iters)])
+    ctx.launch(m, "persist")
+        .dims(LaunchDims::d1(DIMS.0, DIMS.1))
+        .args(&[buf.arg(), Arg::U32(iters)])
+        .record(s)
         .unwrap();
     ctx.synchronize(s).unwrap();
-    ctx.download_f32(buf, N).unwrap()
+    ctx.download(&buf, N).unwrap()
 }
 
 /// Run with a migration triggered mid-kernel; retries with more work if
@@ -46,11 +49,14 @@ fn reference(iters: u32) -> Vec<f32> {
 fn migrated_run(path: &[DeviceKind], iters: u32) -> (Vec<f32>, usize) {
     let ctx = HetGpu::with_devices(path).unwrap();
     let m = ctx.compile_cuda(PERSIST_SRC).unwrap();
-    let buf = ctx.malloc_on((N * 4) as u64, 0).unwrap();
+    let buf = ctx.alloc_buffer::<f32>(N, 0).unwrap();
     let init: Vec<f32> = (0..N).map(|i| i as f32 * 0.25).collect();
-    ctx.upload_f32(buf, &init).unwrap();
+    ctx.upload(&buf, &init).unwrap();
     let s = ctx.create_stream(0).unwrap();
-    ctx.launch(s, m, "persist", LaunchDims::d1(DIMS.0, DIMS.1), &[Arg::Ptr(buf), Arg::U32(iters)])
+    ctx.launch(m, "persist")
+        .dims(LaunchDims::d1(DIMS.0, DIMS.1))
+        .args(&[buf.arg(), Arg::U32(iters)])
+        .record(s)
         .unwrap();
     let mut live_migrations = 0usize;
     for dst in 1..path.len() {
@@ -62,7 +68,7 @@ fn migrated_run(path: &[DeviceKind], iters: u32) -> (Vec<f32>, usize) {
         assert_eq!(ctx.stream_device(s).unwrap(), dst);
     }
     ctx.synchronize(s).unwrap();
-    (ctx.download_f32(buf, N).unwrap(), live_migrations)
+    (ctx.download(&buf, N).unwrap(), live_migrations)
 }
 
 fn assert_migrated_matches(path: &[DeviceKind]) {
@@ -117,26 +123,33 @@ fn migrate_chain_three_vendors() {
 }
 
 /// Snapshot blob: serialize → deserialize → restore on a different device.
+/// The snapshot names its stream by generational handle, so the restore
+/// needs no separate stream argument.
 #[test]
 fn snapshot_blob_roundtrip_restore() {
     let ctx = HetGpu::with_devices(&[DeviceKind::NvidiaSim, DeviceKind::AmdSim]).unwrap();
     let m = ctx.compile_cuda(PERSIST_SRC).unwrap();
-    let buf = ctx.malloc_on((N * 4) as u64, 0).unwrap();
+    let buf = ctx.alloc_buffer::<f32>(N, 0).unwrap();
     let init: Vec<f32> = (0..N).map(|i| i as f32 * 0.25).collect();
-    ctx.upload_f32(buf, &init).unwrap();
+    ctx.upload(&buf, &init).unwrap();
     let s = ctx.create_stream(0).unwrap();
     let iters = 200_000u32;
-    ctx.launch(s, m, "persist", LaunchDims::d1(DIMS.0, DIMS.1), &[Arg::Ptr(buf), Arg::U32(iters)])
+    ctx.launch(m, "persist")
+        .dims(LaunchDims::d1(DIMS.0, DIMS.1))
+        .args(&[buf.arg(), Arg::U32(iters)])
+        .record(s)
         .unwrap();
     std::thread::sleep(std::time::Duration::from_millis(50));
     let snap = ctx.checkpoint(s).unwrap();
+    assert_eq!(snap.stream, s, "snapshot must name the checkpointed stream");
     // Wire-format roundtrip — the device-independent blob.
     let blob = migrate::serialize(&snap);
     let snap2 = migrate::deserialize(&blob).unwrap();
     assert_eq!(snap.suspended_blocks(), snap2.suspended_blocks());
-    ctx.restore(s, snap2, 1).unwrap();
+    assert_eq!(snap2.stream, s, "stream handle must survive the wire format");
+    ctx.restore(snap2, 1).unwrap();
     ctx.synchronize(s).unwrap();
-    let got = ctx.download_f32(buf, N).unwrap();
+    let got = ctx.download(&buf, N).unwrap();
     let expect = reference(iters);
     for (i, (e, g)) in expect.iter().zip(&got).enumerate() {
         assert_eq!(e.to_bits(), g.to_bits(), "elem {i}");
@@ -147,14 +160,14 @@ fn snapshot_blob_roundtrip_restore() {
 #[test]
 fn migrate_idle_stream_moves_memory_only() {
     let ctx = HetGpu::with_devices(&[DeviceKind::AmdSim, DeviceKind::IntelSim]).unwrap();
-    let buf = ctx.malloc_on(4096, 0).unwrap();
+    let buf = ctx.alloc_buffer::<f32>(1024, 0).unwrap();
     let data: Vec<f32> = (0..1024).map(|i| i as f32).collect();
-    ctx.upload_f32(buf, &data).unwrap();
+    ctx.upload(&buf, &data).unwrap();
     let s = ctx.create_stream(0).unwrap();
     let report = ctx.migrate(s, 1).unwrap();
     assert_eq!(report.register_bytes, 0);
     assert!(report.memory_bytes >= 4096);
-    assert_eq!(ctx.download_f32(buf, 1024).unwrap(), data);
+    assert_eq!(ctx.download(&buf, 1024).unwrap(), data);
 }
 
 /// Deferred commands must drain in their original FIFO order even after a
@@ -184,24 +197,24 @@ __global__ void mark(unsigned* log, unsigned val) {{
 "#
         ))
         .unwrap();
-    let data = ctx.malloc_on((N * 4) as u64, 0).unwrap();
-    ctx.upload_f32(data, &vec![0.0; N]).unwrap();
-    let log = ctx.malloc_on(256, 0).unwrap();
-    ctx.upload_u32(log, &[0; 16]).unwrap();
+    let data = ctx.alloc_buffer::<f32>(N, 0).unwrap();
+    ctx.upload(&data, &vec![0.0; N]).unwrap();
+    let log = ctx.alloc_buffer::<u32>(16, 0).unwrap();
+    ctx.upload(&log, &[0; 16]).unwrap();
 
     let s = ctx.create_stream(0).unwrap();
     // A long launch to migrate out from under, then ordered markers that
     // sit in the deferred queue across both migrations.
-    ctx.launch(
-        s,
-        m,
-        "persist",
-        LaunchDims::d1(DIMS.0, DIMS.1),
-        &[Arg::Ptr(data), Arg::U32(60_000)],
-    )
-    .unwrap();
+    ctx.launch(m, "persist")
+        .dims(LaunchDims::d1(DIMS.0, DIMS.1))
+        .args(&[data.arg(), Arg::U32(60_000)])
+        .record(s)
+        .unwrap();
     for val in 1..=6u32 {
-        ctx.launch(s, m, "mark", LaunchDims::d1(1, 32), &[Arg::Ptr(log), Arg::U32(val)])
+        ctx.launch(m, "mark")
+            .dims(LaunchDims::d1(1, 32))
+            .args(&[log.arg(), Arg::U32(val)])
+            .record(s)
             .unwrap();
     }
     ctx.migrate(s, 1).unwrap();
@@ -209,7 +222,7 @@ __global__ void mark(unsigned* log, unsigned val) {{
     ctx.synchronize(s).unwrap();
     assert_eq!(ctx.stream_device(s).unwrap(), 2);
 
-    let got = ctx.download_u32(log, 7).unwrap();
+    let got = ctx.download(&log, 7).unwrap();
     assert_eq!(got[0], 6, "all marks must have drained: {got:?}");
     assert_eq!(&got[1..7], &[1, 2, 3, 4, 5, 6], "deferred queue replayed out of order");
 }
@@ -231,19 +244,15 @@ fn shard_rebalance_cross_kind_roundtrip() {
         ])
         .unwrap();
         let m = ctx.compile_cuda(PERSIST_SRC).unwrap();
-        let buf = ctx.malloc_on((N * 4) as u64, 0).unwrap();
+        let buf = ctx.alloc_buffer::<f32>(N, 0).unwrap();
         let init: Vec<f32> = (0..N).map(|i| i as f32 * 0.25).collect();
-        ctx.upload_f32(buf, &init).unwrap();
+        ctx.upload(&buf, &init).unwrap();
 
         let mut run = ctx
-            .coordinator()
-            .launch_sharded(
-                m,
-                "persist",
-                LaunchDims::d1(DIMS.0, DIMS.1),
-                &[Arg::Ptr(buf), Arg::U32(iters)],
-                &[0, 1],
-            )
+            .launch(m, "persist")
+            .dims(LaunchDims::d1(DIMS.0, DIMS.1))
+            .args(&[buf.arg(), Arg::U32(iters)])
+            .sharded(&[0, 1])
             .unwrap();
         assert_eq!(run.shards.len(), 2);
         std::thread::sleep(std::time::Duration::from_millis(40));
@@ -253,7 +262,7 @@ fn shard_rebalance_cross_kind_roundtrip() {
         let report = run.wait().unwrap();
         assert_eq!(report.rebalanced, 1);
 
-        let got = ctx.download_f32(buf, N).unwrap();
+        let got = ctx.download(&buf, N).unwrap();
         for (i, (e, g)) in expect.iter().zip(&got).enumerate() {
             assert_eq!(e.to_bits(), g.to_bits(), "elem {i}: {e} vs {g}");
         }
@@ -279,17 +288,17 @@ fn deferred_launches_run_after_migration() {
     "#,
         )
         .unwrap();
-    let buf = ctx.malloc_on(256, 0).unwrap();
-    ctx.upload_f32(buf, &[0.0; 64]).unwrap();
+    let buf = ctx.alloc_buffer::<f32>(64, 0).unwrap();
+    ctx.upload(&buf, &[0.0; 64]).unwrap();
     let s = ctx.create_stream(0).unwrap();
     for _ in 0..5 {
-        ctx.launch(s, m, "bump", LaunchDims::d1(2, 32), &[Arg::Ptr(buf)]).unwrap();
+        ctx.launch(m, "bump").dims(LaunchDims::d1(2, 32)).arg(buf.arg()).record(s).unwrap();
     }
     ctx.migrate(s, 1).unwrap();
     for _ in 0..5 {
-        ctx.launch(s, m, "bump", LaunchDims::d1(2, 32), &[Arg::Ptr(buf)]).unwrap();
+        ctx.launch(m, "bump").dims(LaunchDims::d1(2, 32)).arg(buf.arg()).record(s).unwrap();
     }
     ctx.synchronize(s).unwrap();
-    let out = ctx.download_f32(buf, 64).unwrap();
+    let out = ctx.download(&buf, 64).unwrap();
     assert!(out.iter().all(|v| *v == 10.0), "{out:?}");
 }

@@ -168,9 +168,10 @@ fn prop_backends_agree() {
 #[test]
 fn prop_blob_roundtrip() {
     use hetgpu::migrate::{deserialize, serialize, Snapshot};
+    use hetgpu::runtime::api::ModuleHandle;
     use hetgpu::runtime::launch::{Arg, LaunchSpec};
     use hetgpu::runtime::memory::GpuPtr;
-    use hetgpu::runtime::stream::PausedKernel;
+    use hetgpu::runtime::stream::{PausedKernel, StreamHandle};
     use hetgpu::sim::snapshot::{BlockCapture, BlockState, ThreadCapture};
 
     check(40, 0xD00D, |r| {
@@ -202,10 +203,11 @@ fn prop_blob_roundtrip() {
             })
             .collect();
         let snap = Snapshot {
+            stream: StreamHandle::from_raw(r.next_u64()),
             src_device: r.below(4) as usize,
             paused: Some(PausedKernel {
                 spec: LaunchSpec {
-                    module: r.below(8) as usize,
+                    module: ModuleHandle::from_raw(r.next_u64()),
                     kernel: format!("k{}", r.below(100)),
                     dims: LaunchDims::d1(nblocks as u32, 32),
                     args: vec![Arg::Ptr(GpuPtr(r.next_u64() & 0xFFFF)), Arg::F32(r.f32())],
