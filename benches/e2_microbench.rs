@@ -218,8 +218,9 @@ __global__ void spin(float* x, unsigned iters) {
         let buf_a = ctx2.alloc_buffer::<f32>(sn as usize, 0).unwrap();
         let buf_b = ctx2.alloc_buffer::<f32>(sn as usize, 0).unwrap();
         let buf_c = ctx2.alloc_buffer::<f32>(sn as usize, 0).unwrap();
-        ctx2.upload(&buf_a, &vec![1.0; sn as usize]).unwrap();
-        ctx2.upload(&buf_b, &vec![2.0; sn as usize]).unwrap();
+        let (ones, twos) = (vec![1.0; sn as usize], vec![2.0; sn as usize]);
+        ctx2.upload(&buf_a, &ones).unwrap();
+        ctx2.upload(&buf_b, &twos).unwrap();
         let dims = LaunchDims::d1(sn / 256, 256);
         let args = [buf_a.arg(), buf_b.arg(), buf_c.arg(), Arg::U32(sn)];
         let ws = [buf_a.ptr(), buf_b.ptr(), buf_c.ptr()];

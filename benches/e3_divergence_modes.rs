@@ -64,8 +64,9 @@ fn main() {
         let pa = ctx.alloc_buffer::<f32>(n, 0).unwrap();
         let pb = ctx.alloc_buffer::<f32>(n, 0).unwrap();
         let pc = ctx.alloc_buffer::<f32>(n, 0).unwrap();
-        ctx.upload(&pa, &vec![1.0; n]).unwrap();
-        ctx.upload(&pb, &vec![2.0; n]).unwrap();
+        let (ones, twos) = (vec![1.0; n], vec![2.0; n]);
+        ctx.upload(&pa, &ones).unwrap();
+        ctx.upload(&pb, &twos).unwrap();
         let s = ctx.create_stream(0).unwrap();
         ctx.launch(module, "vecadd")
             .dims(LaunchDims::d1(n as u32 / 32, 32))

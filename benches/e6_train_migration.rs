@@ -119,7 +119,7 @@ fn main() {
     ctx.upload(&px, &xs).unwrap();
     ctx.upload(&py, &ys).unwrap();
     ctx.upload(&pw1, &gen(D * H, 0.08, 202)).unwrap();
-    ctx.upload(&pb1, &vec![0.0; H]).unwrap();
+    ctx.upload(&pb1, &[0.0; H]).unwrap();
     ctx.upload(&pw2, &gen(H, 0.08, 203)).unwrap();
     ctx.upload(&pb2, &[0.0]).unwrap();
 

@@ -3,16 +3,23 @@
 //!
 //! Compares the migration-enabled build (checkpoint guard compiled in at
 //! every barrier) against the pure-performance build on a barrier-heavy
-//! kernel, on every SIMT vendor and the Tensix vector path.
+//! kernel, on every SIMT vendor and the Tensix vector path; then measures
+//! the delta-state engine: a full snapshot vs an incremental snapshot
+//! after a kernel dirtying ~5% of the captured memory. Emits
+//! `BENCH_e7.json` (the `delta` section is gated by
+//! `scripts/bench_trend.py`).
 
 use hetgpu::backends::{self, TranslateOpts};
 use hetgpu::hetir::types::{AddrSpace, Scalar, Value};
 use hetgpu::isa::simt_isa::SimtConfig;
 use hetgpu::isa::tensix_isa::{TensixConfig, TensixMode};
+use hetgpu::runtime::api::HetGpu;
+use hetgpu::runtime::device::DeviceKind;
 use hetgpu::sim::mem::DeviceMemory;
 use hetgpu::sim::simt::{LaunchDims, SimtSim};
 use hetgpu::sim::tensix::TensixSim;
 use std::sync::atomic::AtomicBool;
+use std::time::Instant;
 
 const SRC: &str = r#"
 __global__ void barrier_heavy(float* data, unsigned iters) {
@@ -93,6 +100,61 @@ fn main() {
         cycles[1],
         100.0 * (cycles[0] as f64 / cycles[1] as f64 - 1.0)
     );
+
+    // ---- incremental vs full snapshot (delta-state engine) ----
+    // A kernel dirties ~5% of a large buffer between a full base
+    // snapshot and an incremental one; the delta should carry (and cost)
+    // roughly that fraction.
+    let smoke = std::env::var("HETGPU_BENCH_SMOKE").is_ok();
+    let n: usize = if smoke { 1 << 20 } else { 1 << 23 }; // 4 / 32 MiB of f32
+    let dirty_blocks = (n / 20 / 256).max(1) as u32; // ~5%, whole blocks
+    let ctx = HetGpu::with_devices(&[DeviceKind::NvidiaSim]).unwrap();
+    let m = ctx
+        .compile_cuda("__global__ void bump(float* p) { unsigned i = blockIdx.x * blockDim.x + threadIdx.x; p[i] = p[i] + 1.0f; }")
+        .unwrap();
+    let buf = ctx.alloc_buffer::<f32>(n, 0).unwrap();
+    let init: Vec<f32> = (0..n).map(|i| i as f32).collect();
+    ctx.upload(&buf, &init).unwrap();
+    let s = ctx.create_stream(0).unwrap();
+
+    let t0 = Instant::now();
+    let base = ctx.checkpoint(s).unwrap();
+    let full_s = t0.elapsed().as_secs_f64();
+
+    ctx.launch(m, "bump")
+        .dims(LaunchDims::d1(dirty_blocks, 256))
+        .arg(buf.arg())
+        .record(s)
+        .unwrap();
+    ctx.synchronize(s).unwrap();
+
+    let t1 = Instant::now();
+    let delta = ctx.snapshot_incremental(s, &base).unwrap();
+    let incr_s = t1.elapsed().as_secs_f64();
+    assert!(delta.is_delta(), "incremental capture fell back to full");
+
+    let (full_bytes, incr_bytes) = (base.memory_bytes(), delta.memory_bytes());
+    let ratio = incr_bytes as f64 / full_bytes as f64;
+    println!("\nE7b: incremental snapshot (kernel dirtied ~5% of {} MiB)", n * 4 >> 20);
+    println!(
+        "  full capture    {:>10.3} ms  {:>12} bytes\n  incremental     {:>10.3} ms  {:>12} bytes  ({:.1}% of full)",
+        full_s * 1e3,
+        full_bytes,
+        incr_s * 1e3,
+        incr_bytes,
+        ratio * 100.0
+    );
+
+    // ---- machine-readable artifact (CI perf trajectory) ----
+    let json_path =
+        std::env::var("HETGPU_BENCH_JSON").unwrap_or_else(|_| "BENCH_e7.json".into());
+    let json = format!(
+        "{{\n  \"bench\": \"e7_ckpt_overhead\",\n  \"delta\": {{\"full_s\": {full_s:.6}, \"incr_s\": {incr_s:.6}, \"full_bytes\": {full_bytes}, \"incr_bytes\": {incr_bytes}, \"ratio\": {ratio:.4}}}\n}}\n"
+    );
+    match std::fs::write(&json_path, &json) {
+        Ok(()) => println!("\nwrote {json_path}"),
+        Err(e) => eprintln!("\nfailed to write {json_path}: {e}"),
+    }
     let _ = mem_note();
 }
 

@@ -67,7 +67,8 @@ fn main() -> hetgpu::Result<()> {
     // ---- 2. rebalance a shard mid-run onto a different device kind ----
     let m: u32 = 64;
     let data = ctx.alloc_buffer::<f32>(m as usize, 0)?;
-    ctx.upload(&data, &vec![1.0f32; m as usize])?;
+    let ones = vec![1.0f32; m as usize];
+    ctx.upload(&data, &ones)?;
     let mut run = ctx
         .launch(module, "persist")
         .dims(LaunchDims::d1(2, 32))

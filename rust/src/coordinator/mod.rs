@@ -4,55 +4,77 @@
 //!
 //! [`Coordinator::launch_sharded`] splits one logical grid into contiguous
 //! per-device block ranges (proportional to each device's dispatch worker
-//! count, see [`shard::split_grid`]), captures a host **baseline** of the
-//! launch's memory regions, and records the whole broadcast + execute
-//! plan into the event graph: every shard stream gets asynchronous **peer
-//! copies** pulling the regions from their home devices (unified virtual
-//! addressing means the bytes land at the *same* addresses — no pointer
-//! fix-up), and every shard launch carries cross-stream dependency edges
-//! on *all* broadcast copies, so no shard starts computing while any
-//! device is still being seeded. The executor pool then runs the shards
-//! concurrently; each shard skips the blocks it does not own via resume
-//! directives, the same mechanism migration resume uses.
+//! count, see [`shard::split_grid`]) and records the whole broadcast +
+//! execute plan into the event graph: every shard stream gets
+//! asynchronous **peer copies** pulling the moved regions from their home
+//! devices (unified virtual addressing means the bytes land at the *same*
+//! addresses — no pointer fix-up), and every shard launch carries
+//! cross-stream dependency edges on *all* broadcast copies, so no shard
+//! starts computing while any device is still being seeded.
 //!
-//! The regions moved are either **every live allocation** (conservative
-//! default — pointers may hide inside buffers, so argument reachability
-//! alone is unsound) or the launch's **working-set hint**
-//! (`LaunchBuilder::working_set`), which cuts the per-launch broadcast +
-//! merge from O(total memory) to O(working set).
+//! ## Delta-state sharding: everything costs O(dirty pages)
+//!
+//! The v2 coordinator read a full host **baseline** of every moved region
+//! up front, broadcast every byte, joined by copying every byte back, and
+//! byte-diffed whole regions — O(total memory) per launch unless the
+//! caller supplied a `working_set` hint. The delta-state engine replaces
+//! that wholesale with page-granular dirty tracking
+//! ([`crate::delta::tracker`]):
+//!
+//! * **Baseline.** The context keeps a persistent host **mirror** of the
+//!   moved regions ([`CoordCache`]). Each launch refreshes a region by
+//!   reading only the pages its home device dirtied since the region's
+//!   recorded watermark — a cold region is read once, after which the
+//!   per-launch baseline cost is O(dirty pages).
+//! * **Broadcast.** Per destination device the cache records the
+//!   watermarks at last sync; the next launch peer-copies only pages
+//!   dirtied on the home *or* on the destination since then. First
+//!   contact is a full copy; a `launch_sharded` loop broadcasts O(dirty).
+//! * **Shard-write isolation.** Each shard stream carries an
+//!   **epoch-cut node** between its broadcast copies and its launch
+//!   (per-stream FIFO makes that the exact boundary), so the pages the
+//!   shard's *kernel* dirtied are separable from the broadcast's writes.
+//! * **Merge.** The join quiesces each shard in block order and reads
+//!   back only that shard's dirty runs — while trailing shards still
+//!   execute — then folds them against the launch's baseline (byte-diff,
+//!   shard order) and publishes the union of dirty runs to the home
+//!   devices. Bit-identical to the full-region merge, because marks are
+//!   conservative: every written byte lies in a dirty page, and clean
+//!   pages equal the broadcast image.
+//!
+//! `LaunchBuilder::working_set` survives as an *override* restricting
+//! which regions are considered at all; it is no longer required for
+//! sub-O(total) behavior.
 //!
 //! Because a shard is an ordinary (partial) launch on an ordinary stream,
-//! the whole checkpoint machinery applies to it: [`ShardedLaunch::rebalance`]
-//! pauses one shard cooperatively, captures a **shard-scoped snapshot**
-//! (kernel state + the broadcast memory image of the shard's device),
-//! moves it through the [`crate::migrate::blob`] wire format — the same
-//! transport a cross-host orchestrator would use — and resumes it on
-//! another device, including across SIMT↔Tensix kinds.
+//! the whole checkpoint machinery applies to it:
+//! [`ShardedLaunch::rebalance`] pauses one shard cooperatively, captures
+//! its dirty runs as an **incremental delta snapshot** (blob v4), ships
+//! it through the [`crate::migrate::blob`] wire format — the transport a
+//! cross-host orchestrator would use, now delta-sized instead of
+//! image-sized — applies it to the launch baseline on the destination
+//! (epoch-validated, fail-closed), and resumes there, including across
+//! SIMT↔Tensix kinds.
 //!
-//! [`ShardedLaunch::wait`] joins the shards with **overlapped merges**:
-//! each shard's stream carries asynchronous device→host copies
-//! (`memcpy_d2h_async` into pinned buffers) queued behind its launch, so
-//! a finished shard's image streams out and merges on the host while
-//! trailing shards are still executing. Per-shard deltas (relative to the
-//! pre-launch baseline) are folded in shard order — deterministic for any
-//! executor interleaving, bit-identical to a synchronous join. Joining
-//! also **destroys the shards' internal streams and retires their
-//! events**, so a service calling `launch_sharded` in a loop holds the
-//! event graph at a constant size (the v1 surface leaked both, growing
-//! the graph's stream list and status map per iteration).
+//! Joining also **destroys the shards' internal streams and retires
+//! their events**, so a service calling `launch_sharded` in a loop holds
+//! the event graph at a constant size.
 
 pub mod shard;
 
+use crate::delta::capture::clip_runs;
 use crate::error::{HetError, Result};
 use crate::migrate::blob;
 use crate::migrate::state::Snapshot;
 use crate::runtime::api::{HetGpu, StreamHandle};
 use crate::runtime::events::EventId;
 use crate::runtime::launch::LaunchSpec;
-use crate::runtime::memory::{GpuPtr, PinnedBuffer};
+use crate::runtime::memory::GpuPtr;
 use crate::sim::snapshot::CostReport;
 use shard::ShardRange;
+use std::collections::HashMap;
 use std::sync::atomic::Ordering;
+use std::sync::{Arc, OnceLock};
 
 /// One shard of a sharded launch.
 #[derive(Debug)]
@@ -66,14 +88,64 @@ pub struct Shard {
     /// The shard launch's graph event (retired when the launch is
     /// joined).
     pub event: EventId,
+    /// Post-broadcast dirty watermark on `device` (filled by the
+    /// epoch-cut node): `dirty_since(cut)` = what the shard's kernel
+    /// wrote.
+    pub(crate) cut: Arc<OnceLock<u64>>,
+    /// Dirty runs carried across a rebalance (the shard's pre-move
+    /// writes, already merged into its restored image on the new device
+    /// but below the new watermark).
+    pub(crate) carry: Vec<(u64, u64)>,
 }
 
-/// Pre-launch contents of one moved region (the merge baseline), captured
-/// from its resident device.
-struct BaselineRegion {
-    addr: u64,
+/// One region of the persistent host baseline mirror.
+struct MirrorRegion {
+    size: u64,
     home: usize,
-    bytes: Vec<u8>,
+    /// Watermark on `home` up to which `bytes` is current.
+    mark: u64,
+    /// Region bytes; `Arc` so an in-flight launch keeps its baseline
+    /// isolated (copy-on-write on the next refresh) without cloning
+    /// O(total) per launch.
+    bytes: Arc<Vec<u8>>,
+}
+
+/// Per-destination-device broadcast sync state: what the device's copy of
+/// the moved regions is current up to.
+struct DstSync {
+    /// Watermark on the destination itself (its own writes since then
+    /// made pages stale).
+    dst_mark: u64,
+    /// Home-device watermarks at the time of the sync.
+    home_marks: HashMap<usize, u64>,
+    /// The exact region set synced; any difference forces a full resync.
+    regions: Vec<(u64, u64, usize)>,
+}
+
+/// The coordinator's persistent delta-sync state, owned by the `HetGpu`
+/// context (survives across `launch_sharded` calls — that persistence is
+/// what turns repeated baselines/broadcasts into O(dirty pages)).
+#[derive(Default)]
+pub struct CoordCache {
+    /// Host baseline mirror, keyed by region base address.
+    mirror: HashMap<u64, MirrorRegion>,
+    /// Broadcast sync state per destination device.
+    dst: HashMap<usize, DstSync>,
+}
+
+/// Byte-traffic accounting of one sharded launch — the observability the
+/// O(dirty) acceptance tests assert against.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ShardIo {
+    /// Bytes read from home devices to refresh the host baseline mirror.
+    pub baseline_bytes: u64,
+    /// Bytes moved by broadcast peer copies (stale runs only, once the
+    /// sync cache is warm).
+    pub broadcast_bytes: u64,
+    /// Bytes read back from shard devices at join (dirty runs only).
+    pub merged_bytes: u64,
+    /// Bytes written back to home devices (union of dirty runs).
+    pub published_bytes: u64,
 }
 
 /// Report of a completed sharded launch.
@@ -86,6 +158,8 @@ pub struct ShardReport {
     pub per_shard: Vec<(usize, ShardRange, CostReport)>,
     /// Shards that were moved to another device mid-run.
     pub rebalanced: usize,
+    /// Byte traffic of this launch (baseline / broadcast / merge).
+    pub io: ShardIo,
 }
 
 /// An in-flight grid sharded over several devices. Join with
@@ -96,11 +170,15 @@ pub struct ShardedLaunch<'a> {
     /// Live shard descriptors. After [`ShardedLaunch::wait`] succeeds the
     /// stream/event handles in here are stale (the join destroys them).
     pub shards: Vec<Shard>,
-    baseline: Vec<BaselineRegion>,
+    /// The moved regions `(addr, size, home)`, sorted by address.
+    regions: Vec<(u64, u64, usize)>,
+    /// This launch's baseline bytes, parallel to `regions` (shared with
+    /// the mirror; isolated copy-on-write if the mirror moves on).
+    baseline: Vec<Arc<Vec<u8>>>,
+    /// Home-device watermarks cut at baseline refresh (per home device).
+    cuts: HashMap<usize, u64>,
     rebalanced: usize,
-    /// Pinned host buffers of the join copies, `[shard][region]`;
-    /// recorded once even if `wait` is retried around a rebalance.
-    join: Option<Vec<Vec<PinnedBuffer>>>,
+    io: ShardIo,
     joined: bool,
 }
 
@@ -131,11 +209,13 @@ impl<'a> Coordinator<'a> {
     }
 
     /// Split `spec`'s grid into per-device shards, record the broadcast
-    /// (peer copies) and the shard launches into the event graph (they
-    /// start executing immediately on the shared executor pool), and
-    /// return the in-flight launch. `working_set` restricts the moved
-    /// regions; `None` conservatively moves every live allocation.
-    /// Usually reached through `LaunchBuilder::sharded`.
+    /// (stale-run peer copies), the per-shard epoch cuts, and the shard
+    /// launches into the event graph (they start executing immediately on
+    /// the shared executor pool), and return the in-flight launch.
+    /// `working_set` restricts the considered regions; `None` considers
+    /// every live allocation — either way the moved bytes are O(dirty
+    /// pages) once the sync cache is warm. Usually reached through
+    /// `LaunchBuilder::sharded`.
     pub fn launch_sharded(
         &self,
         spec: LaunchSpec,
@@ -162,63 +242,151 @@ impl<'a> Coordinator<'a> {
             }
         };
 
-        // Baseline capture: the current bytes of every region, read from
-        // its resident device — both the broadcast source and the merge
-        // reference. The exclusive gate orders the capture after any
-        // in-flight kernel on that device (a torn baseline would corrupt
-        // the delta merge).
-        let mut baseline = Vec::with_capacity(regions.len());
-        for (addr, size, home) in regions {
-            let dev = rt.device(home)?;
-            let _gate = dev.exec.write().unwrap();
-            let mut bytes = vec![0u8; size as usize];
-            dev.mem.read_bytes_into(addr, &mut bytes)?;
-            baseline.push(BaselineRegion { addr, home, bytes });
-        }
+        let mut io = ShardIo::default();
+        // ---- baseline mirror refresh + stale-run planning (cache lock) ----
+        let (baseline, cuts, stale): (Vec<Arc<Vec<u8>>>, HashMap<usize, u64>, Vec<Vec<(u64, u64)>>) = {
+            let mut cache = self.ctx.coord.lock().unwrap();
+            // Prune mirror entries whose allocation vanished or changed
+            // shape (freed / reallocated / migrated home).
+            cache.mirror.retain(|addr, m| {
+                matches!(rt.memory.lookup(GpuPtr(*addr)),
+                         Ok((base, size, home)) if base == *addr && size == m.size && home == m.home)
+            });
 
-        // Record the broadcast + launches. `created` tracks every internal
-        // stream so a mid-function error destroys them instead of leaking
-        // graph slots (no ShardedLaunch exists yet to run Drop cleanup).
-        let mut created: Vec<StreamHandle> = Vec::new();
-        let ctx = self.ctx;
-        let record_all = |created: &mut Vec<StreamHandle>| -> Result<Vec<Shard>> {
-            // Each shard stream pulls every region it does not already
-            // home via an async peer copy; the copies of different shards
-            // overlap on the executor pool.
-            let mut broadcast_events: Vec<EventId> = Vec::new();
-            for &(d, _) in &plan {
-                let stream = ctx.create_stream(d)?;
-                created.push(stream);
-                for region in &baseline {
-                    if region.home != d {
-                        let ev = ctx.memcpy_peer_async(
-                            stream,
-                            GpuPtr(region.addr),
-                            region.bytes.len() as u64,
-                            region.home,
-                        )?;
-                        broadcast_events.push(ev);
+            // One watermark cut per home device, taken *before* any read
+            // so racing writes are re-read next launch, never skipped.
+            let mut cuts: HashMap<usize, u64> = HashMap::new();
+            for &(_, _, home) in &regions {
+                if let std::collections::hash_map::Entry::Vacant(e) = cuts.entry(home) {
+                    e.insert(rt.device(home)?.mem.dirty_epoch_cut());
+                }
+            }
+
+            // Refresh each region: cold regions read whole, warm regions
+            // read only pages their home dirtied since the region's mark.
+            // The exclusive gate orders each read after in-flight kernels
+            // on that device (a torn baseline would corrupt the merge).
+            for &(addr, size, home) in &regions {
+                let dev = rt.device(home)?;
+                let fresh_mark = cuts[&home];
+                match cache.mirror.get_mut(&addr) {
+                    Some(m) => {
+                        let mut runs = Vec::new();
+                        crate::delta::tracker::intersect_into(
+                            &dev.mem.dirty_since(m.mark),
+                            addr,
+                            size,
+                            &mut runs,
+                        );
+                        if !runs.is_empty() {
+                            let _gate = dev.exec.write().unwrap();
+                            let bytes = Arc::make_mut(&mut m.bytes);
+                            for &(a, l) in &runs {
+                                let off = (a - addr) as usize;
+                                dev.mem.read_bytes_into(a, &mut bytes[off..off + l as usize])?;
+                                io.baseline_bytes += l;
+                            }
+                        }
+                        m.mark = fresh_mark;
+                    }
+                    None => {
+                        let mut bytes = vec![0u8; size as usize];
+                        {
+                            let _gate = dev.exec.write().unwrap();
+                            dev.mem.read_bytes_into(addr, &mut bytes)?;
+                        }
+                        io.baseline_bytes += size;
+                        cache.mirror.insert(
+                            addr,
+                            MirrorRegion { size, home, mark: fresh_mark, bytes: Arc::new(bytes) },
+                        );
                     }
                 }
+            }
+            let baseline: Vec<Arc<Vec<u8>>> =
+                regions.iter().map(|(addr, ..)| Arc::clone(&cache.mirror[addr].bytes)).collect();
+
+            // Stale runs per shard device: pages dirtied on the home or
+            // on the destination since the destination's last sync; a
+            // cold or mismatched destination re-pulls every region.
+            let stale: Vec<Vec<(u64, u64)>> = plan
+                .iter()
+                .map(|&(d, _)| -> Result<Vec<(u64, u64)>> {
+                    let sync = cache.dst.get(&d).filter(|s| s.regions == regions);
+                    let mut out = Vec::new();
+                    for &(addr, size, home) in &regions {
+                        if home == d {
+                            continue;
+                        }
+                        match sync {
+                            Some(s) => {
+                                let hm = s.home_marks.get(&home).copied().unwrap_or(0);
+                                let mut dirt = rt.device(home)?.mem.dirty_since(hm);
+                                dirt = merge_byte_runs(&dirt, &rt.device(d)?.mem.dirty_since(s.dst_mark));
+                                crate::delta::tracker::intersect_into(&dirt, addr, size, &mut out);
+                            }
+                            None => out.push((addr, size)),
+                        }
+                    }
+                    out.sort_unstable();
+                    Ok(out)
+                })
+                .collect::<Result<_>>()?;
+            (baseline, cuts, stale)
+        };
+
+        // ---- record broadcast + epoch cuts + launches ----
+        // `created` tracks every internal stream so a mid-function error
+        // destroys them instead of leaking graph slots.
+        let mut created: Vec<StreamHandle> = Vec::new();
+        let ctx = self.ctx;
+        let record_all = |created: &mut Vec<StreamHandle>,
+                          io: &mut ShardIo|
+         -> Result<Vec<Shard>> {
+            // Each shard stream pulls its stale runs via async peer
+            // copies; the copies of different shards overlap on the
+            // executor pool.
+            let mut broadcast_events: Vec<EventId> = Vec::new();
+            let mut cuts_cells: Vec<Arc<OnceLock<u64>>> = Vec::new();
+            for (&(d, _), runs) in plan.iter().zip(stale.iter()) {
+                let stream = ctx.create_stream(d)?;
+                created.push(stream);
+                for &(addr, len) in runs {
+                    let home = self
+                        .regions_home(&regions, addr)
+                        .expect("stale run inside a moved region");
+                    let ev = ctx.memcpy_peer_async(stream, GpuPtr(addr), len, home)?;
+                    io.broadcast_bytes += len;
+                    broadcast_events.push(ev);
+                }
+                // The cut lands after this stream's copies and before its
+                // launch (FIFO) — the shard-write isolation boundary.
+                let (_ev, cell) = ctx.record_epoch_cut(stream)?;
+                cuts_cells.push(cell);
             }
             // Every launch waits on *all* broadcast copies (cross-stream
             // dependency edges): a shard on one device must not start
             // writing a region while another shard's copy still reads
             // that region from its home arena.
             let mut shards = Vec::with_capacity(plan.len());
-            for (&(d, range), &stream) in plan.iter().zip(created.iter()) {
-                let event = ctx.record_launch(stream, spec.clone(), Some(range), &broadcast_events)?;
-                shards.push(Shard { stream, device: d, range, event });
+            for ((&(d, range), &stream), cell) in
+                plan.iter().zip(created.iter()).zip(cuts_cells)
+            {
+                let event =
+                    ctx.record_launch(stream, spec.clone(), Some(range), &broadcast_events)?;
+                shards.push(Shard { stream, device: d, range, event, cut: cell, carry: Vec::new() });
             }
             Ok(shards)
         };
-        match record_all(&mut created) {
+        match record_all(&mut created, &mut io) {
             Ok(shards) => Ok(ShardedLaunch {
                 ctx: self.ctx,
                 shards,
+                regions,
                 baseline,
+                cuts,
                 rebalanced: 0,
-                join: None,
+                io,
                 joined: false,
             }),
             Err(e) => {
@@ -230,13 +398,85 @@ impl<'a> Coordinator<'a> {
             }
         }
     }
+
+    /// Home device of the region containing `addr`.
+    fn regions_home(&self, regions: &[(u64, u64, usize)], addr: u64) -> Option<usize> {
+        regions
+            .iter()
+            .find(|&&(a, s, _)| addr >= a && addr < a + s)
+            .map(|&(_, _, home)| home)
+    }
+}
+
+/// Union of two sorted byte-run lists. **Overlapping** runs merge; runs
+/// that merely *touch* stay separate — deliberately unlike
+/// `delta::tracker::merge_runs` (page-index runs, where coalescing
+/// adjacent pages is wanted). Coordinator runs are clipped to allocation
+/// regions, and the first-fit allocator makes regions byte-adjacent, so
+/// gluing touching runs could produce a run crossing a region boundary —
+/// which the fold/publish paths (slicing one region's baseline) and
+/// delta-blob spans (one base allocation each) must never see. Regions
+/// are disjoint, so overlapping inputs are always same-region and the
+/// merged output never crosses a boundary.
+fn merge_byte_runs(a: &[(u64, u64)], b: &[(u64, u64)]) -> Vec<(u64, u64)> {
+    let mut out: Vec<(u64, u64)> = Vec::with_capacity(a.len() + b.len());
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < a.len() || j < b.len() {
+        let next = if j >= b.len() || (i < a.len() && a[i].0 <= b[j].0) {
+            let r = a[i];
+            i += 1;
+            r
+        } else {
+            let r = b[j];
+            j += 1;
+            r
+        };
+        match out.last_mut() {
+            Some((la, ll)) if *la + *ll > next.0 => {
+                let end = (*la + *ll).max(next.0 + next.1);
+                *ll = end - *la;
+            }
+            _ => out.push(next),
+        }
+    }
+    out
 }
 
 impl ShardedLaunch<'_> {
+    /// The moved regions' spans `(addr, len)`, sorted.
+    fn region_spans(&self) -> Vec<(u64, u64)> {
+        self.regions.iter().map(|&(a, s, _)| (a, s)).collect()
+    }
+
+    /// Baseline bytes at `addr` (which must lie inside a region), as
+    /// `(region index, offset)`.
+    fn locate(&self, addr: u64) -> Option<(usize, usize)> {
+        self.regions
+            .iter()
+            .position(|&(a, s, _)| addr >= a && addr < a + s)
+            .map(|ri| (ri, (addr - self.regions[ri].0) as usize))
+    }
+
+    /// Dirty runs of shard `idx`'s kernel: carried runs from rebalances
+    /// plus everything its current device dirtied past the shard's
+    /// post-broadcast cut, clipped to the moved regions.
+    fn shard_dirty(&self, idx: usize) -> Result<Vec<(u64, u64)>> {
+        let shard = &self.shards[idx];
+        let cut = *shard.cut.get().ok_or_else(|| {
+            HetError::runtime("shard epoch cut never executed (stream poisoned?)")
+        })?;
+        let dev = self.ctx.runtime().device(shard.device)?;
+        let dirt = clip_runs(&dev.mem.dirty_since(cut), &self.region_spans());
+        Ok(merge_byte_runs(&dirt, &shard.carry))
+    }
+
     /// Cooperatively pause shard `idx` and move it to `dst_device`
-    /// (possibly of a different kind), using the snapshot wire format as
-    /// transport. Returns `true` if the shard was caught live mid-kernel
-    /// (`false`: it had already finished — only memory moved).
+    /// (possibly of a different kind), shipping an **incremental delta
+    /// blob** (v4) as transport: only the shard's dirty runs travel; the
+    /// destination image is rebuilt as launch-baseline + delta
+    /// (epoch-validated, fail-closed). Returns `true` if the shard was
+    /// caught live mid-kernel (`false`: it had already finished — only
+    /// memory moved).
     pub fn rebalance(&mut self, idx: usize, dst_device: usize) -> Result<bool> {
         let rt = self.ctx.runtime();
         let dst = rt.device(dst_device)?;
@@ -251,98 +491,143 @@ impl ShardedLaunch<'_> {
                 "device {dst_device} already executes a shard"
             )));
         }
-        let shard = &mut self.shards[idx];
-        let src = rt.device(shard.device)?;
+        let src_device = self.shards[idx].device;
+        let src = rt.device(src_device)?;
 
         // Checkpoint protocol on the shard's stream (paper §4.2).
         src.pause.store(true, Ordering::SeqCst);
-        let quiesce = self.ctx.graph().quiesce(shard.stream);
+        let quiesce = self.ctx.graph().quiesce(self.shards[idx].stream);
         src.pause.store(false, Ordering::SeqCst);
         quiesce?;
-        let paused = self.ctx.graph().take_paused(shard.stream)?;
+        let paused = self.ctx.graph().take_paused(self.shards[idx].stream)?;
         let live = paused.is_some();
 
-        // Shard-scoped snapshot: the shard device's image of every moved
-        // region (residency bookkeeping untouched — these are broadcast
-        // copies).
-        let mut allocations = Vec::with_capacity(self.baseline.len());
+        // Shard-scoped *delta* snapshot: only the runs the shard dirtied,
+        // read from its device.
+        let base_epoch = *self.shards[idx].cut.get().ok_or_else(|| {
+            HetError::runtime("shard epoch cut never executed (stream poisoned?)")
+        })?;
+        let dirty = self.shard_dirty(idx)?;
+        let mut allocations = Vec::with_capacity(dirty.len());
         {
             let _gate = src.exec.write().unwrap();
-            for region in &self.baseline {
-                let mut bytes = vec![0u8; region.bytes.len()];
-                src.mem.read_bytes_into(region.addr, &mut bytes)?;
-                allocations.push((region.addr, bytes));
+            for &(addr, len) in &dirty {
+                let mut bytes = vec![0u8; len as usize];
+                src.mem.read_bytes_into(addr, &mut bytes)?;
+                allocations.push((addr, bytes));
             }
         }
-        let snap = Snapshot {
-            stream: shard.stream,
-            src_device: shard.device,
+        let delta = Snapshot {
+            stream: self.shards[idx].stream,
+            src_device,
             paused,
             allocations,
-            shard: Some(shard.range),
+            shard: Some(self.shards[idx].range),
+            epoch: base_epoch,
+            base_epoch: Some(base_epoch),
         };
         // Streams that observed the device-wide pause collaterally (user
         // streams co-located with the shard) resume in place.
-        self.ctx.graph().resume_collateral(snap.src_device, shard.stream);
+        self.ctx.graph().resume_collateral(src_device, self.shards[idx].stream);
 
-        // Through the wire format — the transport a cross-host
-        // orchestrator would ship between machines.
-        let snap = blob::deserialize(&blob::serialize(&snap))?;
+        // Through the wire format — a delta-sized blob, the transport a
+        // cross-host orchestrator would ship between machines (the
+        // receiver holds the launch baseline).
+        let delta = blob::deserialize(&blob::serialize(&delta))?;
+        // Wire sanity: the delta must still name this launch's baseline
+        // epoch and source device — fail closed before writing anything,
+        // the same contract `Snapshot::apply_delta` enforces.
+        if delta.base_epoch != Some(base_epoch) || delta.src_device != src_device {
+            return Err(HetError::migrate(
+                "rebalance delta blob does not match the launch baseline",
+            ));
+        }
 
+        // Rebuild the shard image on the destination as baseline + delta
+        // overlay, written straight from the launch's baseline Arcs — no
+        // intermediate full-region host copies. A destination with a
+        // warm sync state (same region set) already holds the regions up
+        // to its recorded watermarks, so only the runs stale since then
+        // need baseline bytes; a cold destination takes the full
+        // baseline.
+        let mut stale: Option<Vec<(u64, u64)>> = None;
         {
-            let _gate = dst.exec.write().unwrap();
-            for (addr, bytes) in &snap.allocations {
-                dst.mem.write_bytes(*addr, bytes)?;
+            let cache = self.ctx.coord.lock().unwrap();
+            if let Some(s) = cache.dst.get(&dst_device).filter(|s| s.regions == self.regions) {
+                let mut out = Vec::new();
+                for &(addr, size, home) in &self.regions {
+                    let hm = s.home_marks.get(&home).copied().unwrap_or(0);
+                    let dirt = merge_byte_runs(
+                        &rt.device(home)?.mem.dirty_since(hm),
+                        &dst.mem.dirty_since(s.dst_mark),
+                    );
+                    crate::delta::tracker::intersect_into(&dirt, addr, size, &mut out);
+                }
+                out.sort_unstable();
+                stale = Some(out);
             }
         }
-        self.ctx.graph().resume(shard.stream, dst_device, snap.paused)?;
+        let new_cut;
+        {
+            let _gate = dst.exec.write().unwrap();
+            match &stale {
+                Some(runs) => {
+                    for &(a, l) in runs {
+                        let (ri, off) = self.locate(a).expect("stale run inside a region");
+                        dst.mem.write_bytes(a, &self.baseline[ri][off..off + l as usize])?;
+                    }
+                }
+                None => {
+                    for (&(a, ..), b) in self.regions.iter().zip(self.baseline.iter()) {
+                        dst.mem.write_bytes(a, b)?;
+                    }
+                }
+            }
+            for (addr, bytes) in &delta.allocations {
+                dst.mem.write_bytes(*addr, bytes)?;
+            }
+            // Cut *after* the restore writes: the shard's future dirt on
+            // the new device is its kernel's, not the restore's (the
+            // restored pre-move writes ride along in `carry`).
+            new_cut = dst.mem.dirty_epoch_cut();
+        }
+        self.ctx.graph().resume(self.shards[idx].stream, dst_device, delta.paused)?;
+        let shard = &mut self.shards[idx];
         shard.device = dst_device;
+        shard.carry = merge_byte_runs(&shard.carry, &dirty);
+        let cell = OnceLock::new();
+        let _ = cell.set(new_cut);
+        shard.cut = Arc::new(cell);
         self.rebalanced += 1;
         Ok(live)
     }
 
-    /// Join all shards, merge their memory deltas into the home
-    /// allocations, and merge cost reports; then destroy the internal
-    /// shard streams and retire their events (the handles in
-    /// [`ShardedLaunch::shards`] go stale). Takes `&mut self` so a
-    /// paused-shard error leaves the launch usable — the caller can
-    /// `rebalance` (or resume) the shard and wait again, as the error
-    /// message instructs.
+    /// Join all shards, merge their dirty runs into the home allocations,
+    /// and merge cost reports; then destroy the internal shard streams
+    /// and retire their events (the handles in [`ShardedLaunch::shards`]
+    /// go stale). Takes `&mut self` so a paused-shard error leaves the
+    /// launch usable — the caller can `rebalance` (or resume) the shard
+    /// and wait again, as the error message instructs.
     ///
-    /// The merge **overlaps trailing shards**: each shard's stream
-    /// carries async D2H copies queued behind its launch, so an early
-    /// shard's image is merged on the host while later shards still
-    /// execute.
+    /// The merge **overlaps trailing shards**: each shard's dirty runs
+    /// are read back as soon as its stream drains, while later shards
+    /// still execute; folding (byte-diff against the launch baseline, in
+    /// shard order — bit-identical to the full-region merge) and the
+    /// publish of the dirty-run union happen once all shards are in.
     pub fn wait(&mut self) -> Result<ShardReport> {
         if self.joined {
             return Err(HetError::runtime("sharded launch already joined"));
         }
         let rt = self.ctx.runtime();
+        self.io.merged_bytes = 0;
+        self.io.published_bytes = 0;
 
-        // Record the join copies exactly once (idempotent across
-        // halted-shard retries): per shard, one async D2H per region into
-        // a pinned host buffer, stream-ordered behind the shard launch.
-        if self.join.is_none() {
-            let mut join = Vec::with_capacity(self.shards.len());
-            for shard in &self.shards {
-                let mut copies = Vec::with_capacity(self.baseline.len());
-                for region in &self.baseline {
-                    let host = PinnedBuffer::new(region.bytes.len());
-                    self.ctx.memcpy_d2h_async(shard.stream, &host, GpuPtr(region.addr))?;
-                    copies.push(host);
-                }
-                join.push(copies);
-            }
-            self.join = Some(join);
-        }
-
-        // Join shards in block order, folding each shard's deltas as soon
-        // as its stream drains — trailing shards keep executing meanwhile.
+        // Join shards in block order: quiesce, then read that shard's
+        // dirty runs — trailing shards keep executing meanwhile.
         let mut per_shard = Vec::with_capacity(self.shards.len());
         let mut merged = CostReport::default();
-        let mut result: Vec<Vec<u8>> =
-            self.baseline.iter().map(|r| r.bytes.clone()).collect();
-        let mut dirty = vec![false; self.baseline.len()];
+        let mut harvest: Vec<(Vec<(u64, u64)>, Vec<Vec<u8>>)> =
+            Vec::with_capacity(self.shards.len());
         for (si, shard) in self.shards.iter().enumerate() {
             let halted = self.ctx.graph().quiesce(shard.stream)?;
             if halted {
@@ -359,26 +644,78 @@ impl ShardedLaunch<'_> {
             merged.device_cycles = merged.device_cycles.max(cost.device_cycles);
             per_shard.push((shard.device, shard.range, cost));
 
-            let copies = &self.join.as_ref().expect("join recorded above")[si];
-            for (ri, region) in self.baseline.iter().enumerate() {
-                let cur = copies[ri].to_vec();
-                let out = &mut result[ri];
-                for (i, (b, base)) in cur.iter().zip(&region.bytes).enumerate() {
-                    if b != base {
-                        out[i] = *b;
-                        dirty[ri] = true;
+            let runs = self.shard_dirty(si)?;
+            let dev = rt.device(shard.device)?;
+            let mut bytes = Vec::with_capacity(runs.len());
+            {
+                // Shared gate: ordered against co-located user streams,
+                // concurrent with trailing shards on other devices.
+                let _gate = dev.exec.read().unwrap();
+                for &(addr, len) in &runs {
+                    let mut buf = vec![0u8; len as usize];
+                    dev.mem.read_bytes_into(addr, &mut buf)?;
+                    self.io.merged_bytes += len;
+                    bytes.push(buf);
+                }
+            }
+            harvest.push((runs, bytes));
+        }
+
+        // Fold in shard order against the launch baseline: overlay
+        // buffers exist only for the union of dirty runs.
+        let union: Vec<(u64, u64)> = harvest
+            .iter()
+            .fold(Vec::new(), |acc, (runs, _)| merge_byte_runs(&acc, runs));
+        let mut overlay: Vec<Vec<u8>> = union
+            .iter()
+            .map(|&(addr, len)| {
+                let (ri, off) = self.locate(addr).expect("union run inside a region");
+                self.baseline[ri][off..off + len as usize].to_vec()
+            })
+            .collect();
+        for (runs, bytes) in &harvest {
+            for (&(addr, len), run_bytes) in runs.iter().zip(bytes) {
+                let (ri, base_off) = self.locate(addr).expect("dirty run inside a region");
+                let base = &self.baseline[ri][base_off..base_off + len as usize];
+                // The union run containing this shard run (unions cover
+                // every shard run by construction).
+                let ui = union.partition_point(|&(ua, ul)| ua + ul <= addr);
+                let (ua, _) = union[ui];
+                let out = &mut overlay[ui][(addr - ua) as usize..][..len as usize];
+                for i in 0..len as usize {
+                    if run_bytes[i] != base[i] {
+                        out[i] = run_bytes[i];
                     }
                 }
             }
         }
 
-        // Publish merged regions back to their home devices (exclusive
+        // Publish the union runs back to their home devices (exclusive
         // gate: ordered against any in-flight kernels there).
-        for (ri, region) in self.baseline.iter().enumerate() {
-            if dirty[ri] {
-                let home = rt.device(region.home)?;
-                let _gate = home.exec.write().unwrap();
-                home.mem.write_bytes(region.addr, &result[ri])?;
+        for (&(addr, len), bytes) in union.iter().zip(&overlay) {
+            let (ri, _) = self.locate(addr).expect("union run inside a region");
+            let home = rt.device(self.regions[ri].2)?;
+            let _gate = home.exec.write().unwrap();
+            home.mem.write_bytes(addr, bytes)?;
+            self.io.published_bytes += len;
+        }
+
+        // Commit the broadcast sync state: each shard device now holds
+        // the regions as of this launch's watermarks (its own post-cut
+        // writes and anything homes publish later mark pages stale).
+        {
+            let mut cache = self.ctx.coord.lock().unwrap();
+            for shard in &self.shards {
+                if let Some(&cut) = shard.cut.get() {
+                    cache.dst.insert(
+                        shard.device,
+                        DstSync {
+                            dst_mark: cut,
+                            home_marks: self.cuts.clone(),
+                            regions: self.regions.clone(),
+                        },
+                    );
+                }
             }
         }
 
@@ -390,7 +727,7 @@ impl ShardedLaunch<'_> {
         }
         self.joined = true;
 
-        Ok(ShardReport { merged, per_shard, rebalanced: self.rebalanced })
+        Ok(ShardReport { merged, per_shard, rebalanced: self.rebalanced, io: self.io })
     }
 }
 
@@ -402,10 +739,34 @@ impl Drop for ShardedLaunch<'_> {
         // Best-effort cleanup of an abandoned launch: drain and destroy
         // the internal streams (a poisoned shard destroys fine; a shard
         // still halted at a checkpoint refuses and leaks deliberately —
-        // its captured kernel state has nowhere to go).
+        // its captured kernel state has nowhere to go). The sync cache is
+        // left untouched: its watermarks are conservative, so the
+        // unmerged shard writes simply re-broadcast next launch.
         for shard in &self.shards {
             let _ = self.ctx.synchronize(shard.stream);
             let _ = self.ctx.destroy_stream(shard.stream);
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_run_union_merges_overlap_but_not_touch() {
+        assert_eq!(
+            merge_byte_runs(&[(0, 10), (20, 5)], &[(5, 10), (40, 1)]),
+            vec![(0, 15), (20, 5), (40, 1)]
+        );
+        assert_eq!(merge_byte_runs(&[], &[]), Vec::<(u64, u64)>::new());
+        // Touching runs stay separate: clipped runs of byte-adjacent
+        // regions must never be glued into one cross-region run (the
+        // fold/publish paths slice per-region baselines).
+        assert_eq!(merge_byte_runs(&[(4, 4)], &[(0, 4)]), vec![(0, 4), (4, 4)]);
+        assert_eq!(merge_byte_runs(&[(0, 4), (4, 4)], &[]), vec![(0, 4), (4, 4)]);
+        // Containment still holds for the union fold: an input run is
+        // never split across union entries.
+        assert_eq!(merge_byte_runs(&[(0, 150)], &[(100, 100)]), vec![(0, 200)]);
     }
 }

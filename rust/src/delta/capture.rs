@@ -1,0 +1,230 @@
+//! Streaming snapshot capture — the copy half of the delta-state engine.
+//!
+//! The v3 checkpoint path held a device's exclusive execution gate for
+//! the whole memory copy: one stop-the-world window sized by *total*
+//! captured bytes, during which no other stream on the device could
+//! launch or copy. `capture_spans` replaces it with **chunked capture
+//! through the event graph**: the requested spans are split into ≤1 MiB
+//! chunks, each recorded as an ordinary async device→host copy node on an
+//! internal stream (pinned host staging), so already-quiesced pages
+//! stream out while other streams' kernels keep executing under the
+//! shared gate.
+//!
+//! Consistency comes from the dirty tracker, not from exclusion: the
+//! caller cuts an epoch before deriving what to capture, and after the
+//! chunks drain, pages dirtied since the last repair mark (someone wrote
+//! them mid-capture) are re-copied. Each repair round advances its own
+//! mark, so a round only re-reads pages dirtied since the *previous*
+//! round, not everything dirtied since capture start. A bounded number
+//! of shared-gate repair rounds is followed by one **final
+//! exclusive-gate pass** that re-reads whatever is still changing —
+//! acquiring the write gate orders the pass after every in-flight writer
+//! (they all hold the read gate), so the returned image is a
+//! point-in-time snapshot at the final pass, while the exclusive window
+//! shrinks from O(total bytes) to O(still-racing bytes) — zero on a
+//! quiet device.
+
+use crate::delta::tracker::intersect_into;
+use crate::error::Result;
+use crate::runtime::api::HetGpu;
+use crate::runtime::memory::{GpuPtr, PinnedBuffer};
+
+/// Chunk size of one streamed capture copy node (256 pages).
+pub const CAPTURE_CHUNK: u64 = 1 << 20;
+
+/// Shared-gate repair rounds before the exclusive-gate finalization.
+const REPAIR_ROUNDS: usize = 2;
+
+/// Capture the bytes of `spans` (sorted, non-overlapping `(addr, len)`
+/// ranges, each inside one live allocation) from `device`, streaming
+/// through the event graph (see module docs). Returns sorted
+/// `(addr, bytes)` spans — the requested ones, plus any `universe` range
+/// dirtied mid-capture (see below).
+///
+/// `epoch` is the watermark the caller cut **before deriving `spans`**
+/// (for a delta: cut first, then ask the ledger what changed — deriving
+/// spans before the cut could lose a racing write to a clean page
+/// forever, since neither this capture's spans nor a later
+/// `dirty_since(epoch)` would cover it).
+///
+/// `universe` is the full consistency domain (every allocation span,
+/// `== spans` for a full capture): the final exclusive pass also folds
+/// in universe pages dirtied since `epoch` that lie *outside* `spans`,
+/// so a delta capture racing concurrent writers stays point-in-time —
+/// it must not include a writer's later in-span write while missing the
+/// same writer's earlier out-of-span write.
+pub(crate) fn capture_spans(
+    ctx: &HetGpu,
+    device: usize,
+    spans: &[(u64, u64)],
+    epoch: u64,
+    universe: &[(u64, u64)],
+) -> Result<Vec<(u64, Vec<u8>)>> {
+    let dev = ctx.runtime().device(device)?;
+    let mut out: Vec<(u64, Vec<u8>)> =
+        spans.iter().map(|&(a, l)| (a, vec![0u8; l as usize])).collect();
+
+    // Round 0 copies everything; repair rounds re-copy what was dirtied
+    // since the previous round's mark (shared gate throughout — other
+    // streams keep running). Every write is >= the mark in effect when
+    // it landed and every later query uses a mark <= that, so no write
+    // escapes the repair chain; whatever the bounded rounds leave
+    // un-copied stays in `pending` for the final pass.
+    let mut mark = epoch;
+    let mut pending: Vec<(u64, u64)> = spans.to_vec();
+    for _ in 0..=REPAIR_ROUNDS {
+        if pending.is_empty() {
+            break;
+        }
+        stream_read(ctx, device, &pending, &mut out)?;
+        // Cut *before* the query: the next round (or the final pass)
+        // re-reads from this cut on, and the query still sees everything
+        // older — the two windows overlap instead of leaving a gap.
+        let next = dev.mem.dirty_epoch_cut();
+        pending = dirty_within(ctx, device, mark, spans);
+        mark = next;
+    }
+
+    // Finalization: the exclusive gate excludes (and orders after) every
+    // writer, so the remainder is read race-free: the last un-copied
+    // repair set, anything dirtied since the last cut (overlapping
+    // ranges are simply read twice — idempotent), and **universe
+    // growth** — pages dirtied since capture start that fall outside the
+    // requested spans, appended as fresh spans so the whole image is
+    // point-in-time here. On a quiet device every set is empty and the
+    // gate is held for ledger queries only.
+    {
+        let _gate = dev.exec.write().unwrap();
+        let still = dirty_within(ctx, device, mark, spans);
+        for (addr, len) in still.into_iter().chain(pending) {
+            let (base, buf) = span_containing(&mut out, addr);
+            let off = (addr - base) as usize;
+            dev.mem.read_bytes_into(addr, &mut buf[off..off + len as usize])?;
+        }
+        let grown = subtract_runs(&dirty_within(ctx, device, epoch, universe), spans);
+        for (addr, len) in grown {
+            let mut buf = vec![0u8; len as usize];
+            dev.mem.read_bytes_into(addr, &mut buf)?;
+            out.push((addr, buf));
+        }
+    }
+    out.sort_by_key(|(a, _)| *a);
+    Ok(out)
+}
+
+/// Pages dirtied on `device` since `epoch`, clipped to `spans`.
+fn dirty_within(ctx: &HetGpu, device: usize, epoch: u64, spans: &[(u64, u64)]) -> Vec<(u64, u64)> {
+    match ctx.runtime().device(device) {
+        Ok(dev) => clip_runs(&dev.mem.dirty_since(epoch), spans),
+        Err(_) => Vec::new(),
+    }
+}
+
+/// Copy `ranges` (each inside one of `out`'s spans) through chunked
+/// event-graph D2H nodes on an internal stream, patching the results into
+/// `out` in place.
+fn stream_read(
+    ctx: &HetGpu,
+    device: usize,
+    ranges: &[(u64, u64)],
+    out: &mut [(u64, Vec<u8>)],
+) -> Result<()> {
+    if ranges.is_empty() {
+        return Ok(());
+    }
+    let stream = ctx.create_stream(device)?;
+    let mut chunks: Vec<(u64, PinnedBuffer)> = Vec::new();
+    let recorded = (|| -> Result<()> {
+        for &(addr, len) in ranges {
+            let mut off = 0u64;
+            while off < len {
+                let n = (len - off).min(CAPTURE_CHUNK);
+                let host = PinnedBuffer::new(n as usize);
+                ctx.memcpy_d2h_async(stream, &host, GpuPtr(addr + off))?;
+                chunks.push((addr + off, host));
+                off += n;
+            }
+        }
+        ctx.synchronize(stream)
+    })();
+    let _ = ctx.destroy_stream(stream);
+    recorded?;
+    for (addr, host) in chunks {
+        let bytes = host.to_vec();
+        let (base, buf) = span_containing(out, addr);
+        let off = (addr - base) as usize;
+        buf[off..off + bytes.len()].copy_from_slice(&bytes);
+    }
+    Ok(())
+}
+
+/// The span of `out` containing `addr` (spans are sorted and every
+/// captured range lies inside one — guaranteed by construction).
+fn span_containing(out: &mut [(u64, Vec<u8>)], addr: u64) -> (u64, &mut Vec<u8>) {
+    let idx = match out.binary_search_by(|(a, _)| a.cmp(&addr)) {
+        Ok(i) => i,
+        Err(i) => i - 1,
+    };
+    let (base, buf) = &mut out[idx];
+    (*base, buf)
+}
+
+/// Clip sorted dirty byte `runs` to sorted allocation `spans` — the
+/// shared "which captured bytes does this delta cover" step of the
+/// incremental snapshot and coordinator merge paths.
+pub(crate) fn clip_runs(runs: &[(u64, u64)], spans: &[(u64, u64)]) -> Vec<(u64, u64)> {
+    let mut out = Vec::new();
+    for &(a, l) in spans {
+        intersect_into(runs, a, l, &mut out);
+    }
+    out.sort_unstable();
+    out
+}
+
+/// Pieces of sorted runs `a` not covered by sorted, non-overlapping
+/// runs `b` (set difference `a \ b`), in order.
+pub(crate) fn subtract_runs(a: &[(u64, u64)], b: &[(u64, u64)]) -> Vec<(u64, u64)> {
+    let mut out = Vec::new();
+    let mut j = 0usize;
+    for &(start, len) in a {
+        let end = start + len;
+        let mut cur = start;
+        while cur < end {
+            while j < b.len() && b[j].0 + b[j].1 <= cur {
+                j += 1;
+            }
+            match b.get(j) {
+                Some(&(ba, bl)) if ba < end => {
+                    if ba > cur {
+                        out.push((cur, ba - cur));
+                    }
+                    cur = (ba + bl).max(cur);
+                }
+                _ => {
+                    out.push((cur, end - cur));
+                    break;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::subtract_runs;
+
+    #[test]
+    fn subtract_runs_cases() {
+        // Disjoint, covered, partial overlaps, straddling.
+        assert_eq!(subtract_runs(&[(0, 10)], &[]), vec![(0, 10)]);
+        assert_eq!(subtract_runs(&[(0, 10)], &[(0, 10)]), vec![]);
+        assert_eq!(subtract_runs(&[(0, 10)], &[(2, 3)]), vec![(0, 2), (5, 5)]);
+        assert_eq!(
+            subtract_runs(&[(0, 10), (20, 10)], &[(5, 20)]),
+            vec![(0, 5), (25, 5)]
+        );
+        assert_eq!(subtract_runs(&[(10, 10)], &[(0, 5), (18, 4)]), vec![(10, 8)]);
+        assert_eq!(subtract_runs(&[], &[(0, 5)]), Vec::<(u64, u64)>::new());
+    }
+}

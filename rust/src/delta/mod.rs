@@ -1,0 +1,34 @@
+//! The delta-state engine: *what changed* as a first-class runtime
+//! concept.
+//!
+//! The paper's headline capability — live GPU migration with minimal
+//! overhead (§4.2 state serialization, §8 scalability) — turns on the
+//! runtime knowing which state actually changed, not just which state
+//! exists. This subsystem provides that knowledge as a hardware-invariant
+//! primitive and the machinery built on it:
+//!
+//! * [`tracker`] — lock-free page-granular dirty bitmaps (one atomic bit
+//!   per 4 KiB page) with a multi-watcher **epoch** model: any consumer
+//!   can cut an epoch and later ask "what changed since", independently
+//!   of every other consumer. Owned by each
+//!   [`crate::sim::mem::DeviceMemory`], fed by its word/bulk write paths.
+//! * [`capture`] — streaming snapshot capture: chunked event-graph copy
+//!   nodes into pinned host staging with dirty-epoch consistency repair,
+//!   replacing the stop-the-world exclusive-gate copy.
+//!
+//! Consumers:
+//!
+//! * `migrate` — **incremental snapshots** (blob v4): a snapshot can be a
+//!   delta of `(page_run, bytes)` spans against a named base epoch, with
+//!   full-capture fallback and fail-closed epoch validation on apply
+//!   (`HetError::EpochMismatch`).
+//! * `coordinator` — unhinted `launch_sharded` baselines, broadcasts, and
+//!   merges cost O(dirty pages) instead of O(total memory), and
+//!   `rebalance` ships delta blobs between epochs.
+//! * `runtime::api` — `snapshot_incremental` and the `dirty_stats`
+//!   observability hook.
+
+pub mod capture;
+pub mod tracker;
+
+pub use tracker::{DirtyStats, DirtyTracker, PAGE_SIZE};

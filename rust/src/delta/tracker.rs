@@ -1,0 +1,356 @@
+//! Page-granular dirty tracking — the "what changed" half of the
+//! delta-state engine.
+//!
+//! Every [`crate::sim::mem::DeviceMemory`] owns one [`DirtyTracker`]: a
+//! lock-free bitmap with **one atomic bit per 4 KiB page**, set by the
+//! memory's word/bulk write paths after the bytes land. The fast path is
+//! a relaxed load of the containing bitmap word followed by a `fetch_or`
+//! only when the bit is not yet set, so a kernel hammering the same pages
+//! pays one relaxed load per store — negligible next to the word-atomic
+//! arena access it rides on.
+//!
+//! ## Epoch model
+//!
+//! Consumers (incremental snapshots, the coordinator's dirty-range
+//! merges) need *“which pages changed since point X”* for several
+//! independent X at once, so the tracker is not a single clearable
+//! bitmap: [`DirtyTracker::cut`] closes the current **epoch** — it drains
+//! the live bitmap into a ledger entry labeled with the closing epoch and
+//! returns the new epoch id — and [`DirtyTracker::dirty_since`] unions
+//! every ledger entry labeled `>= epoch` with the live bitmap. Cutting is
+//! how a watcher names a point in time without disturbing other watchers:
+//! the drained bits stay queryable from the ledger.
+//!
+//! The ledger is bounded: beyond [`MAX_CLOSED_EPOCHS`] entries the two
+//! oldest are **compacted** — merged under the *newer* label — which can
+//! only over-approximate old queries (a query between the two labels now
+//! also sees the older entry's pages). Over-approximation is safe for
+//! every consumer (a delta that ships an unchanged page restores the same
+//! bytes); under-approximation never happens, which is the property the
+//! determinism tests pin.
+//!
+//! A mark racing a concurrent `cut` lands either in the drained entry or
+//! in the live bitmap — visible to `dirty_since` either way. Writes are
+//! marked *after* their bytes land, so a consistency check that observes
+//! a clean page after copying it copied stable bytes (the streaming
+//! capture in [`crate::delta::capture`] leans on this, with a final
+//! exclusive-gate pass closing the remaining raciness the same way the
+//! rest of the runtime orders copies against kernels).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Dirty-tracking granularity: one bit per 4 KiB page.
+pub const PAGE_SIZE: u64 = 4096;
+const PAGE_SHIFT: u32 = 12;
+
+/// Closed-epoch ledger bound; beyond it the two oldest entries are
+/// compacted (merged under the newer label — over-approximating, never
+/// dropping), so the ledger answers `dirty_since` for *every* epoch back
+/// to the tracker's creation in bounded memory.
+pub const MAX_CLOSED_EPOCHS: usize = 64;
+
+/// A half-open page-index run `[lo, hi)`.
+type PageRun = (u32, u32);
+
+/// Point-in-time observability of one device's dirty tracking (the
+/// `graph_stats`-style hook surfaced as `HetGpu::dirty_stats`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DirtyStats {
+    /// Tracking granularity in bytes (4096).
+    pub page_size: u64,
+    /// Pages the tracker covers (device capacity, rounded up).
+    pub total_pages: u64,
+    /// Pages dirty in the current (open) epoch.
+    pub dirty_pages: u64,
+    /// The current epoch id (bumped by every `cut`).
+    pub epoch: u64,
+    /// Closed ledger entries currently retained (bounded by
+    /// [`MAX_CLOSED_EPOCHS`]).
+    pub closed_epochs: usize,
+}
+
+struct Ledger {
+    /// Closed epochs, oldest first: `(label, page runs)`. An entry
+    /// labeled `e` holds pages dirtied while epoch `e` was open.
+    closed: VecDeque<(u64, Vec<PageRun>)>,
+    /// The open epoch's id.
+    epoch: u64,
+}
+
+/// Lock-free page-dirty bitmap plus the epoch ledger (see module docs).
+pub struct DirtyTracker {
+    /// Live bitmap: bit `p % 64` of word `p / 64` covers page `p`.
+    words: Box<[AtomicU64]>,
+    num_pages: u64,
+    ledger: Mutex<Ledger>,
+}
+
+impl DirtyTracker {
+    /// Tracker over `capacity` bytes of device memory (all pages clean,
+    /// epoch 1 open).
+    pub fn new(capacity: u64) -> DirtyTracker {
+        let num_pages = capacity.div_ceil(PAGE_SIZE).max(1);
+        let num_words = (num_pages as usize).div_ceil(64);
+        let words = (0..num_words).map(|_| AtomicU64::new(0)).collect();
+        DirtyTracker {
+            words,
+            num_pages,
+            ledger: Mutex::new(Ledger { closed: VecDeque::new(), epoch: 1 }),
+        }
+    }
+
+    /// Mark the pages covering byte span `[addr, addr + len)` dirty.
+    /// Lock-free; call *after* the bytes have landed. No-op for `len == 0`
+    /// (callers pass validated in-bounds spans).
+    #[inline]
+    pub fn mark(&self, addr: u64, len: u64) {
+        if len == 0 {
+            return;
+        }
+        let lo = addr >> PAGE_SHIFT;
+        let hi = (addr + len - 1) >> PAGE_SHIFT; // inclusive
+        for p in lo..=hi {
+            let w = (p / 64) as usize;
+            let bit = 1u64 << (p % 64);
+            // Test-first fast path: the common case (a kernel storing
+            // into already-dirty pages) is one relaxed load, no RMW.
+            if self.words[w].load(Ordering::Relaxed) & bit == 0 {
+                self.words[w].fetch_or(bit, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Close the current epoch: drain the live bitmap into the ledger
+    /// under the closing epoch's label and return the id of the freshly
+    /// opened epoch `E`. A later `dirty_since(E)` reports exactly the
+    /// pages written after this cut (plus any write racing the cut
+    /// itself, which may be attributed to either side).
+    pub fn cut(&self) -> u64 {
+        let mut g = self.ledger.lock().unwrap();
+        let runs = self.drain_runs();
+        let label = g.epoch;
+        if !runs.is_empty() {
+            g.closed.push_back((label, runs));
+        }
+        g.epoch += 1;
+        // Compact: merge the two oldest under the newer label — old
+        // queries only over-approximate, and memory stays bounded.
+        while g.closed.len() > MAX_CLOSED_EPOCHS {
+            let (_, old) = g.closed.pop_front().unwrap();
+            let (_, next) = g.closed.front_mut().unwrap();
+            *next = merge_runs(&old, next);
+        }
+        g.epoch
+    }
+
+    /// Every page dirtied since epoch `epoch` was opened, as sorted,
+    /// coalesced byte ranges clamped to the tracked capacity. Safe to
+    /// call with any epoch the tracker ever returned (the ledger compacts
+    /// instead of pruning); epochs from the future (or another device's
+    /// tracker) merely over-approximate toward the live bitmap.
+    pub fn dirty_since(&self, epoch: u64) -> Vec<(u64, u64)> {
+        let g = self.ledger.lock().unwrap();
+        let mut acc: Vec<PageRun> = self.peek_runs();
+        for (label, runs) in g.closed.iter() {
+            if *label >= epoch {
+                acc = merge_runs(&acc, runs);
+            }
+        }
+        drop(g);
+        acc.into_iter()
+            .map(|(lo, hi)| {
+                let start = (lo as u64) << PAGE_SHIFT;
+                let end = ((hi as u64) << PAGE_SHIFT).min(self.num_pages << PAGE_SHIFT);
+                (start, end - start)
+            })
+            .collect()
+    }
+
+    /// Current tracking counters (see [`DirtyStats`]).
+    pub fn stats(&self) -> DirtyStats {
+        let g = self.ledger.lock().unwrap();
+        let dirty: u64 = self.words.iter().map(|w| w.load(Ordering::Relaxed).count_ones() as u64).sum();
+        DirtyStats {
+            page_size: PAGE_SIZE,
+            total_pages: self.num_pages,
+            dirty_pages: dirty,
+            epoch: g.epoch,
+            closed_epochs: g.closed.len(),
+        }
+    }
+
+    /// Collect-and-clear the live bitmap into page runs.
+    fn drain_runs(&self) -> Vec<PageRun> {
+        let mut runs: Vec<PageRun> = Vec::new();
+        for (wi, w) in self.words.iter().enumerate() {
+            let mut bits = w.swap(0, Ordering::Relaxed);
+            while bits != 0 {
+                let b = bits.trailing_zeros();
+                let page = (wi as u32) * 64 + b;
+                push_page(&mut runs, page);
+                bits &= bits - 1;
+            }
+        }
+        runs
+    }
+
+    /// Collect the live bitmap into page runs without clearing.
+    fn peek_runs(&self) -> Vec<PageRun> {
+        let mut runs: Vec<PageRun> = Vec::new();
+        for (wi, w) in self.words.iter().enumerate() {
+            let mut bits = w.load(Ordering::Relaxed);
+            while bits != 0 {
+                let b = bits.trailing_zeros();
+                let page = (wi as u32) * 64 + b;
+                push_page(&mut runs, page);
+                bits &= bits - 1;
+            }
+        }
+        runs
+    }
+}
+
+/// Append one page to a sorted run list (pages arrive in ascending order
+/// from the bitmap scan).
+fn push_page(runs: &mut Vec<PageRun>, page: u32) {
+    match runs.last_mut() {
+        Some((_, hi)) if *hi == page => *hi = page + 1,
+        _ => runs.push((page, page + 1)),
+    }
+}
+
+/// Union of two sorted, coalesced run lists (sorted + coalesced result).
+fn merge_runs(a: &[PageRun], b: &[PageRun]) -> Vec<PageRun> {
+    let mut out: Vec<PageRun> = Vec::with_capacity(a.len() + b.len());
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < a.len() || j < b.len() {
+        let next = if j >= b.len() || (i < a.len() && a[i].0 <= b[j].0) {
+            let r = a[i];
+            i += 1;
+            r
+        } else {
+            let r = b[j];
+            j += 1;
+            r
+        };
+        match out.last_mut() {
+            Some((_, hi)) if *hi >= next.0 => *hi = (*hi).max(next.1),
+            _ => out.push(next),
+        }
+    }
+    out
+}
+
+/// Intersect sorted byte-range lists `runs` with one span `[addr, addr+len)`,
+/// appending the clamped pieces to `out` (shared by the capture and
+/// coordinator layers to restrict dirty ranges to allocation spans).
+pub fn intersect_into(runs: &[(u64, u64)], addr: u64, len: u64, out: &mut Vec<(u64, u64)>) {
+    let end = addr + len;
+    for &(ra, rl) in runs {
+        let rend = ra + rl;
+        if rend <= addr {
+            continue;
+        }
+        if ra >= end {
+            break;
+        }
+        let lo = ra.max(addr);
+        let hi = rend.min(end);
+        if hi > lo {
+            out.push((lo, hi - lo));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mark_and_query_pages() {
+        let t = DirtyTracker::new(16 * PAGE_SIZE);
+        assert!(t.dirty_since(1).is_empty());
+        t.mark(0, 1); // page 0
+        t.mark(PAGE_SIZE * 3 + 5, 10); // page 3
+        t.mark(PAGE_SIZE * 4 - 1, 2); // straddles pages 3,4
+        let d = t.dirty_since(1);
+        assert_eq!(d, vec![(0, PAGE_SIZE), (3 * PAGE_SIZE, 2 * PAGE_SIZE)]);
+        let s = t.stats();
+        assert_eq!(s.dirty_pages, 3);
+        assert_eq!(s.total_pages, 16);
+    }
+
+    #[test]
+    fn cut_separates_epochs_without_losing_history() {
+        let t = DirtyTracker::new(8 * PAGE_SIZE);
+        t.mark(0, 1);
+        let e2 = t.cut();
+        t.mark(2 * PAGE_SIZE, 1);
+        // Since the new epoch: only page 2.
+        assert_eq!(t.dirty_since(e2), vec![(2 * PAGE_SIZE, PAGE_SIZE)]);
+        // Since the beginning: both (the cut moved page 0 into the
+        // ledger, it did not forget it).
+        assert_eq!(
+            t.dirty_since(1),
+            vec![(0, PAGE_SIZE), (2 * PAGE_SIZE, PAGE_SIZE)]
+        );
+    }
+
+    #[test]
+    fn compaction_over_approximates_but_never_drops() {
+        let t = DirtyTracker::new(4096 * PAGE_SIZE);
+        let mut first_epoch = 0;
+        for i in 0..(MAX_CLOSED_EPOCHS as u64 + 20) {
+            t.mark(i * PAGE_SIZE, 1);
+            let e = t.cut();
+            if i == 0 {
+                first_epoch = e;
+            }
+        }
+        let s = t.stats();
+        assert!(s.closed_epochs <= MAX_CLOSED_EPOCHS);
+        // Everything since the first cut must still be reported (pages
+        // 1..N were dirtied after it; page 0 may over-approximate in).
+        let d = t.dirty_since(first_epoch);
+        let covered: u64 = d.iter().map(|(_, l)| l / PAGE_SIZE).sum();
+        assert!(covered >= MAX_CLOSED_EPOCHS as u64 + 19, "covered {covered}");
+    }
+
+    #[test]
+    fn concurrent_marks_lose_nothing() {
+        let t = DirtyTracker::new(1024 * PAGE_SIZE);
+        std::thread::scope(|s| {
+            for th in 0..4u64 {
+                let t = &t;
+                s.spawn(move || {
+                    for i in 0..1024u64 {
+                        // All threads hammer every page: the test-first
+                        // fast path must still leave every bit set.
+                        t.mark((i ^ (th * 37)) % 1024 * PAGE_SIZE, 1);
+                    }
+                });
+            }
+        });
+        assert_eq!(t.stats().dirty_pages, 1024);
+    }
+
+    #[test]
+    fn runs_merge_and_intersect() {
+        assert_eq!(merge_runs(&[(0, 2), (5, 7)], &[(1, 3), (7, 9)]), vec![(0, 3), (5, 9)]);
+        assert_eq!(merge_runs(&[], &[(4, 5)]), vec![(4, 5)]);
+        let mut out = Vec::new();
+        intersect_into(&[(0, 100), (200, 100)], 50, 200, &mut out);
+        assert_eq!(out, vec![(50, 50), (200, 50)]);
+    }
+
+    #[test]
+    fn tiny_capacity_still_tracks() {
+        let t = DirtyTracker::new(13);
+        t.mark(5, 3);
+        let d = t.dirty_since(1);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].0, 0);
+    }
+}

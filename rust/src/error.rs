@@ -48,6 +48,18 @@ pub enum HetError {
     /// Checkpoint/restore/migration failures.
     Migrate { msg: String },
 
+    /// An incremental (delta) snapshot was applied to the wrong base: the
+    /// delta names the epoch it was captured against, and the base
+    /// snapshot's epoch must match exactly — anything else would overlay
+    /// page deltas onto bytes they were not diffed against, silently
+    /// corrupting restored memory. Fails closed instead.
+    EpochMismatch {
+        /// Epoch of the base snapshot the delta was applied to.
+        expected: u64,
+        /// Base epoch recorded inside the delta.
+        got: u64,
+    },
+
     /// State-blob (de)serialization failures.
     Blob { msg: String },
 
@@ -81,6 +93,11 @@ impl fmt::Display for HetError {
                 write!(f, "invalid {resource} handle: {msg}")
             }
             HetError::Migrate { msg } => write!(f, "migration error: {msg}"),
+            HetError::EpochMismatch { expected, got } => write!(
+                f,
+                "delta epoch mismatch: delta was captured against base epoch {got}, \
+                 but the base snapshot is epoch {expected}"
+            ),
             HetError::Blob { msg } => write!(f, "state blob error: {msg}"),
             HetError::Xla(msg) => write!(f, "xla native error: {msg}"),
             HetError::Io(e) => write!(f, "io error: {e}"),
@@ -119,6 +136,11 @@ impl HetError {
     /// Whether this error reports a stale or foreign resource handle.
     pub fn is_invalid_handle(&self) -> bool {
         matches!(self, HetError::InvalidHandle { .. })
+    }
+    /// Whether this error reports a delta applied to a mismatched base
+    /// epoch (incremental snapshots fail closed on it).
+    pub fn is_epoch_mismatch(&self) -> bool {
+        matches!(self, HetError::EpochMismatch { .. })
     }
     /// Convenience constructor for device faults.
     pub fn fault(device: impl Into<String>, msg: impl Into<String>) -> Self {

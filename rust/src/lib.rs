@@ -13,6 +13,11 @@
 //! * [`isa`] — the simulated device instruction sets backends emit.
 //! * [`backends`] — JIT translation modules hetIR → device ISA.
 //! * [`sim`] — the device simulators (hardware substitution, DESIGN.md §2).
+//! * [`delta`] — the delta-state engine (DESIGN.md §8): page-granular
+//!   dirty tracking (one atomic bit per 4 KiB page, multi-watcher epoch
+//!   ledger) fed by `sim::mem` write paths, plus streaming chunked
+//!   snapshot capture through the event graph — the "what changed"
+//!   primitive behind incremental snapshots and O(dirty) sharded merges.
 //! * [`runtime`] — the driver API v2 and its machinery:
 //!   * [`runtime::api`] — the public surface: generational typed handles
 //!     (module / buffer / stream / event) with full create→destroy
@@ -26,14 +31,17 @@
 //!     `HetError::InvalidHandle`);
 //!   * plus device registry, unified memory, and the JIT cache.
 //! * [`coordinator`] — multi-device grid sharding + shard rebalance (the
-//!   paper's L3 coordination layer): peer-copy broadcasts, working-set
-//!   hints, and joins that overlap merges with trailing shards.
+//!   paper's L3 coordination layer): dirty-range baselines/broadcasts/
+//!   merges (O(dirty pages), no working-set hint required), peer-copy
+//!   broadcasts, and joins that overlap merges with trailing shards.
 //! * [`migrate`] — device-neutral snapshots (named by stream handle),
-//!   checkpoint/restore/migrate, and the versioned wire blob.
+//!   checkpoint/restore/migrate, incremental delta snapshots against a
+//!   base epoch, and the versioned wire blob (v4; v2/v3 read-compatible).
 //! * [`xla_native`] — PJRT/XLA "vendor native" path + numerics oracle.
 
 pub mod backends;
 pub mod coordinator;
+pub mod delta;
 pub mod error;
 pub mod frontend;
 pub mod isa;

@@ -8,6 +8,7 @@
 //! ```text
 //! "HGPU" | u32 version
 //! | u32 src_device | u64 stream handle           (v3: generational handle)
+//! | u64 epoch | u8 kind | [delta: u64 base_epoch]  (v4: delta snapshots)
 //! | u8 has_shard | [shard: lo u32, hi u32]      (v2: coordinator shards)
 //! | u8 has_kernel
 //! |   [kernel: module handle u64 (v3), name, dims 6×u32, args, tensix hint]
@@ -16,6 +17,14 @@
 //! |         per reg: vreg u32, type tag u8, bits u64; shared bytes)]
 //! | u32 alloc count | per alloc: addr u64, len u64, bytes
 //! ```
+//!
+//! Writers always emit the current version (4). The reader **stays
+//! compatible with v2 and v3 blobs**: v2 predates the stream handle
+//! (restores must rebind via `restore_into`) and carries a narrow u32
+//! module reference; both predate the epoch header and parse as full
+//! snapshots with `epoch = 0`. v4 `kind` distinguishes full captures
+//! (`0`) from incremental deltas (`1`, allocation entries are dirty
+//! page-run spans against `base_epoch`).
 
 use crate::coordinator::shard::ShardRange;
 use crate::error::{HetError, Result};
@@ -33,8 +42,11 @@ use crate::sim::snapshot::{BlockCapture, BlockState, ThreadCapture};
 const MAGIC: &[u8; 4] = b"HGPU";
 /// v2 added the optional shard range (coordinator shard-scoped
 /// snapshots); v3 carries the generational stream handle and widens the
-/// module reference to a generational handle (API v2).
-const VERSION: u32 = 3;
+/// module reference to a generational handle (API v2); v4 adds the
+/// dirty-epoch header and incremental (delta) snapshots.
+const VERSION: u32 = 4;
+/// Oldest version the reader still accepts.
+const MIN_VERSION: u32 = 2;
 
 // ---- writer ----
 
@@ -217,6 +229,14 @@ pub fn serialize(snap: &Snapshot) -> Vec<u8> {
     w.u32(VERSION);
     w.u32(snap.src_device as u32);
     w.u64(snap.stream.raw());
+    w.u64(snap.epoch);
+    match snap.base_epoch {
+        None => w.u8(0),
+        Some(base) => {
+            w.u8(1);
+            w.u64(base);
+        }
+    }
     match snap.shard {
         None => w.u8(0),
         Some(r) => {
@@ -278,11 +298,24 @@ pub fn deserialize(buf: &[u8]) -> Result<Snapshot> {
         return Err(HetError::Blob { msg: "bad magic (not a hetGPU snapshot)".into() });
     }
     let ver = r.u32()?;
-    if ver != VERSION {
+    if !(MIN_VERSION..=VERSION).contains(&ver) {
         return Err(HetError::Blob { msg: format!("unsupported version {ver}") });
     }
     let src_device = r.u32()? as usize;
-    let stream = StreamHandle::from_raw(r.u64()?);
+    // v2 predates stream-handle-carrying snapshots: the restored handle
+    // is a placeholder; callers rebind through `restore_into`.
+    let stream = if ver >= 3 { StreamHandle::from_raw(r.u64()?) } else { StreamHandle::from_raw(0) };
+    let (epoch, base_epoch) = if ver >= 4 {
+        let epoch = r.u64()?;
+        let base = match r.u8()? {
+            0 => None,
+            1 => Some(r.u64()?),
+            _ => return Err(r.err("bad snapshot kind tag")),
+        };
+        (epoch, base)
+    } else {
+        (0, None)
+    };
     let shard = match r.u8()? {
         0 => None,
         1 => {
@@ -296,7 +329,14 @@ pub fn deserialize(buf: &[u8]) -> Result<Snapshot> {
         _ => return Err(r.err("bad shard tag")),
     };
     let paused = if r.u8()? == 1 {
-        let module = ModuleHandle::from_raw(r.u64()?);
+        // v2 carried a narrow u32 module index; it maps onto a
+        // generation-0 handle (cross-context restores rebind via
+        // `Snapshot::with_module` regardless).
+        let module = if ver >= 3 {
+            ModuleHandle::from_raw(r.u64()?)
+        } else {
+            ModuleHandle::from_raw(r.u32()? as u64)
+        };
         let kernel = r.string()?;
         let mut dims = [0u32; 6];
         for d in dims.iter_mut() {
@@ -370,7 +410,7 @@ pub fn deserialize(buf: &[u8]) -> Result<Snapshot> {
     if r.pos != buf.len() {
         return Err(r.err("trailing bytes"));
     }
-    Ok(Snapshot { stream, src_device, paused, allocations, shard })
+    Ok(Snapshot { stream, src_device, paused, allocations, shard, epoch, base_epoch })
 }
 
 #[cfg(test)]
@@ -415,6 +455,8 @@ mod tests {
             }),
             allocations: vec![(0x1000, vec![0xAB; 100]), (0x8000, vec![0xCD; 7])],
             shard: Some(ShardRange { lo: 1, hi: 3 }),
+            epoch: 42,
+            base_epoch: None,
         }
     }
 
@@ -427,6 +469,8 @@ mod tests {
         assert_eq!(s.stream, s2.stream, "generational stream handle must roundtrip");
         assert_eq!(s.shard, s2.shard);
         assert_eq!(s.allocations, s2.allocations);
+        assert_eq!(s2.epoch, 42, "epoch must roundtrip");
+        assert_eq!(s2.base_epoch, None);
         let (p, p2) = (s.paused.unwrap(), s2.paused.unwrap());
         assert_eq!(p.spec.module, p2.spec.module, "module handle must roundtrip");
         assert_eq!(p.spec.kernel, p2.spec.kernel);
@@ -444,11 +488,25 @@ mod tests {
             paused: None,
             allocations: vec![(64, vec![9; 3])],
             shard: None,
+            epoch: 0,
+            base_epoch: None,
         };
         let blob = serialize(&s);
         let s2 = deserialize(&blob).unwrap();
         assert!(s2.paused.is_none());
         assert!(s2.shard.is_none());
+        assert_eq!(s2.allocations, s.allocations);
+    }
+
+    #[test]
+    fn roundtrip_delta_snapshot() {
+        let mut s = sample_snapshot();
+        s.base_epoch = Some(17);
+        s.allocations = vec![(0x1000, vec![1; 10]), (0x2000, vec![2; 4])];
+        let s2 = deserialize(&serialize(&s)).unwrap();
+        assert!(s2.is_delta());
+        assert_eq!(s2.epoch, 42);
+        assert_eq!(s2.base_epoch, Some(17));
         assert_eq!(s2.allocations, s.allocations);
     }
 

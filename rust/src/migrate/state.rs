@@ -4,8 +4,18 @@
 //! hetIR virtual-register files keyed by barrier/segment id, shared-memory
 //! contents, and all global allocations — everything needed to re-
 //! instantiate the computation on a *different* GPU architecture.
+//!
+//! Since the delta-state engine, a snapshot is either **full** (the
+//! memory payload covers every captured allocation; `base_epoch` is
+//! `None`) or an **incremental delta**: the payload holds only the
+//! page-run spans dirtied since a named base epoch, and the snapshot
+//! only becomes restorable after [`Snapshot::apply_delta`] overlays it
+//! onto the exact base it was captured against — a mismatched epoch
+//! fails closed with [`crate::error::HetError::EpochMismatch`] instead of
+//! corrupting memory.
 
 use crate::coordinator::shard::ShardRange;
+use crate::error::{HetError, Result};
 use crate::runtime::stream::{PausedKernel, StreamHandle};
 use crate::sim::snapshot::BlockState;
 
@@ -22,11 +32,20 @@ pub struct Snapshot {
     /// The kernel frozen mid-execution (None if the stream was idle or
     /// the kernel completed before observing the pause).
     pub paused: Option<PausedKernel>,
-    /// Global-memory contents: (virtual address, bytes) per allocation.
+    /// Global-memory contents, `(virtual address, bytes)` spans. Full
+    /// snapshots carry one span per allocation; deltas carry the dirty
+    /// page-run spans only.
     pub allocations: Vec<(u64, Vec<u8>)>,
     /// When the capture is one shard of a coordinator-sharded grid: the
     /// block range this snapshot owns (whole-stream snapshots: `None`).
     pub shard: Option<ShardRange>,
+    /// Dirty-tracking epoch this snapshot is consistent at (on the source
+    /// device's tracker); `dirty_since(epoch)` there names what changed
+    /// afterwards. `0` for snapshots read from legacy (v2/v3) blobs.
+    pub epoch: u64,
+    /// `Some(e)` marks this snapshot as a **delta** against the full
+    /// snapshot whose `epoch` is `e`; `None` marks it full.
+    pub base_epoch: Option<u64>,
 }
 
 impl Snapshot {
@@ -42,6 +61,85 @@ impl Snapshot {
             p.spec.module = module;
         }
         self
+    }
+
+    /// Whether this snapshot is an incremental delta (not directly
+    /// restorable; apply it to its base first).
+    pub fn is_delta(&self) -> bool {
+        self.base_epoch.is_some()
+    }
+
+    /// Total bytes of the captured memory payload (whole allocations for
+    /// a full snapshot, dirty page runs for a delta — the number the
+    /// incremental-vs-full assertions and the e7 bench compare).
+    pub fn memory_bytes(&self) -> u64 {
+        self.allocations.iter().map(|(_, b)| b.len() as u64).sum()
+    }
+
+    /// Overlay an incremental `delta` onto this full base snapshot,
+    /// producing the full snapshot the delta was captured at.
+    ///
+    /// Fails closed: `self` must be a full snapshot, `delta` must be a
+    /// delta captured on the **same device** whose recorded base epoch
+    /// matches `self.epoch` exactly ([`HetError::EpochMismatch`]
+    /// otherwise — epochs are per-device counters, so the device check
+    /// keeps numerically-colliding epochs of different devices from
+    /// pairing), and every delta span must fall inside one of the base's
+    /// allocation spans. The result carries the delta's kernel state,
+    /// epoch, and shard range; restoring it is bit-identical to
+    /// restoring a full snapshot taken at the delta's capture point.
+    pub fn apply_delta(&self, delta: &Snapshot) -> Result<Snapshot> {
+        if self.is_delta() {
+            return Err(HetError::migrate(
+                "apply_delta base must be a full snapshot, not a delta",
+            ));
+        }
+        let got = match delta.base_epoch {
+            Some(e) => e,
+            None => {
+                return Err(HetError::migrate(
+                    "apply_delta needs an incremental snapshot, got a full one",
+                ))
+            }
+        };
+        if delta.src_device != self.src_device {
+            return Err(HetError::migrate(format!(
+                "delta was captured on device {} but the base snapshot is from device {}",
+                delta.src_device, self.src_device
+            )));
+        }
+        if got != self.epoch {
+            return Err(HetError::EpochMismatch { expected: self.epoch, got });
+        }
+        let mut allocations = self.allocations.clone();
+        // Cheap metadata sort (bytes don't move): span resolution below
+        // binary-searches by base address.
+        allocations.sort_by_key(|(a, _)| *a);
+        for (addr, bytes) in &delta.allocations {
+            let idx = allocations.partition_point(|(base, _)| *base <= *addr);
+            let fits = idx > 0 && {
+                let (base, buf) = &allocations[idx - 1];
+                *addr + bytes.len() as u64 <= *base + buf.len() as u64
+            };
+            if !fits {
+                return Err(HetError::migrate(format!(
+                    "delta span 0x{addr:x}+{} falls outside every base allocation",
+                    bytes.len()
+                )));
+            }
+            let span = &mut allocations[idx - 1];
+            let off = (*addr - span.0) as usize;
+            span.1[off..off + bytes.len()].copy_from_slice(bytes);
+        }
+        Ok(Snapshot {
+            stream: delta.stream,
+            src_device: delta.src_device,
+            paused: delta.paused.clone(),
+            allocations,
+            shard: delta.shard,
+            epoch: delta.epoch,
+            base_epoch: None,
+        })
     }
 
     /// Total bytes of captured register + shared-memory state (the paper's
@@ -142,16 +240,57 @@ mod tests {
         assert!(ms_tt > ms, "dev-board PCIe must dominate");
     }
 
-    #[test]
-    fn empty_snapshot_counts() {
-        let s = Snapshot {
+    fn snap(epoch: u64, base: Option<u64>, allocations: Vec<(u64, Vec<u8>)>) -> Snapshot {
+        Snapshot {
             stream: StreamHandle::from_raw(0),
             src_device: 0,
             paused: None,
-            allocations: vec![],
+            allocations,
             shard: None,
-        };
+            epoch,
+            base_epoch: base,
+        }
+    }
+
+    #[test]
+    fn empty_snapshot_counts() {
+        let s = snap(0, None, vec![]);
         assert_eq!(s.register_bytes(), 0);
         assert_eq!(s.suspended_blocks(), 0);
+        assert_eq!(s.memory_bytes(), 0);
+        assert!(!s.is_delta());
+    }
+
+    #[test]
+    fn apply_delta_overlays_runs() {
+        let base = snap(3, None, vec![(0x1000, vec![0u8; 16]), (0x8000, vec![9u8; 8])]);
+        let delta = snap(7, Some(3), vec![(0x1004, vec![1, 2, 3, 4])]);
+        let full = base.apply_delta(&delta).unwrap();
+        assert_eq!(full.epoch, 7);
+        assert!(!full.is_delta());
+        assert_eq!(full.allocations[0].1, vec![0, 0, 0, 0, 1, 2, 3, 4, 0, 0, 0, 0, 0, 0, 0, 0]);
+        assert_eq!(full.allocations[1].1, vec![9u8; 8], "untouched span unchanged");
+    }
+
+    #[test]
+    fn apply_delta_fails_closed() {
+        let base = snap(3, None, vec![(0x1000, vec![0u8; 16])]);
+        // Wrong base epoch: typed error, memory untouched.
+        let wrong = snap(9, Some(4), vec![(0x1000, vec![1])]);
+        assert!(base.apply_delta(&wrong).unwrap_err().is_epoch_mismatch());
+        // Numerically-matching epoch from a *different device* must not
+        // pair either (epochs are per-device counters).
+        let mut foreign = snap(7, Some(3), vec![(0x1000, vec![1])]);
+        foreign.src_device = 1;
+        let e = base.apply_delta(&foreign).unwrap_err();
+        assert!(e.to_string().contains("device"), "{e}");
+        // Full-on-full and delta-as-base are both rejected.
+        let full2 = snap(5, None, vec![]);
+        assert!(base.apply_delta(&full2).is_err());
+        let delta = snap(7, Some(3), vec![(0x1000, vec![1])]);
+        assert!(delta.apply_delta(&delta).is_err());
+        // Span outside every base allocation: rejected.
+        let oob = snap(7, Some(3), vec![(0x2000, vec![1])]);
+        assert!(base.apply_delta(&oob).is_err());
     }
 }

@@ -36,7 +36,9 @@
 //! arenas).
 
 use crate::coordinator::shard::ShardRange;
-use crate::coordinator::{Coordinator, ShardedLaunch};
+use crate::coordinator::{CoordCache, Coordinator, ShardedLaunch};
+use crate::delta::capture::capture_spans;
+use crate::delta::tracker::DirtyStats;
 use crate::error::{HetError, Result};
 use crate::frontend;
 use crate::hetir::{self, module::Module};
@@ -53,7 +55,7 @@ use crate::runtime::stream::StreamStats;
 use crate::runtime::{ModuleTable, RuntimeInner};
 use crate::sim::simt::LaunchDims;
 use std::sync::atomic::Ordering;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, OnceLock};
 
 // Handle types live next to their backing tables; re-exported here so the
 // public API surface reads from one place (`api::{HetGpu, ModuleHandle,
@@ -72,6 +74,11 @@ pub struct HetGpu {
     graph: Arc<EventGraph>,
     /// Executor pool draining the graph (joined on drop).
     executors: Vec<JoinHandle<()>>,
+    /// The coordinator's persistent delta-sync state: host baseline
+    /// mirror + per-device sync watermarks (see `coordinator::CoordCache`),
+    /// so repeated `launch_sharded` calls baseline/broadcast/merge
+    /// O(dirty pages) instead of O(total memory).
+    pub(crate) coord: Mutex<CoordCache>,
 }
 
 impl HetGpu {
@@ -111,7 +118,7 @@ impl HetGpu {
         // Enough executors that every device can be mid-launch while a few
         // extra streams overlap copies; executors block while a node runs.
         let executors = EventGraph::spawn_executors(&graph, (kinds.len() * 2).clamp(2, 8));
-        Ok(HetGpu { inner, graph, executors })
+        Ok(HetGpu { inner, graph, executors, coord: Mutex::new(CoordCache::default()) })
     }
 
     /// Create a context with all four paper devices.
@@ -467,7 +474,102 @@ impl HetGpu {
     /// all global allocations on the device). The snapshot names the
     /// stream it was taken from by handle, so [`HetGpu::restore`] needs no
     /// separate stream argument.
+    ///
+    /// Capture is **streamed** (delta-state engine): the memory image is
+    /// copied through chunked event-graph nodes into pinned staging under
+    /// the shared device gate, with dirty-epoch consistency repair —
+    /// other streams on the device keep executing instead of sitting
+    /// behind one stop-the-world exclusive copy. The returned snapshot
+    /// records the capture epoch, the base a later
+    /// [`HetGpu::snapshot_incremental`] diffs against.
     pub fn checkpoint(&self, stream: StreamHandle) -> Result<Snapshot> {
+        let (device, paused) = self.pause_and_harvest(stream)?;
+        let epoch = self.inner.device(device)?.mem.dirty_epoch_cut();
+        let spans = self.inner.memory.allocations_on(device);
+        let captured = capture_spans(self, device, &spans, epoch, &spans);
+        // Launches of *other* streams overlapping on this device may also
+        // have observed the pause flag and halted; resume them in place so
+        // a checkpoint of one stream never silently strands its neighbors.
+        self.graph.resume_collateral(device, stream);
+        Ok(Snapshot {
+            stream,
+            src_device: device,
+            paused,
+            allocations: captured?,
+            shard: None,
+            epoch,
+            base_epoch: None,
+        })
+    }
+
+    /// Capture an **incremental snapshot**: the same checkpoint protocol
+    /// as [`HetGpu::checkpoint`], but the memory payload holds only the
+    /// page runs dirtied since `base` was captured — O(dirty pages)
+    /// instead of O(all allocations). Restore by overlaying onto the
+    /// base ([`Snapshot::apply_delta`], which fails closed on an epoch
+    /// mismatch) and passing the result to [`HetGpu::restore`].
+    ///
+    /// Falls back to a full capture (a snapshot with `base_epoch: None`)
+    /// when the base cannot anchor a delta: it is itself a delta, came
+    /// from a legacy (v2/v3) blob without an epoch, was taken on a
+    /// different device than the stream now runs on, or the device's
+    /// **allocation set drifted** since the base. Drift makes the pairing
+    /// unsound both ways — a span in a base-unknown allocation is
+    /// unappliable (late hard error), and a freed-then-reused range would
+    /// silently resurrect the base's stale bytes — so it degrades to a
+    /// full capture instead.
+    pub fn snapshot_incremental(
+        &self,
+        stream: StreamHandle,
+        base: &Snapshot,
+    ) -> Result<Snapshot> {
+        let (device, paused) = self.pause_and_harvest(stream)?;
+        // Cut BEFORE deriving the delta's spans: a write racing this
+        // boundary is then either visible to the `dirty_since(base)`
+        // query below (captured by this delta) or lands at an epoch
+        // >= `epoch` (captured by the next delta). Deriving spans first
+        // would let a racing write to a previously-clean page slip
+        // between the two — missing from this delta *and* from every
+        // later `dirty_since(epoch)` — silently corrupting base+delta.
+        let epoch = self.inner.device(device)?.mem.dirty_epoch_cut();
+        let allocs = self.inner.memory.allocations_on(device);
+        let same_alloc_set = allocs.len() == base.allocations.len()
+            && allocs
+                .iter()
+                .zip(&base.allocations)
+                .all(|(&(a, l), (ba, bb))| a == *ba && l == bb.len() as u64);
+        let full_fallback = base.is_delta()
+            || base.epoch == 0
+            || base.src_device != device
+            || !same_alloc_set;
+        let (spans, base_epoch) = if full_fallback {
+            (allocs.clone(), None)
+        } else {
+            let dirt = self.inner.device(device)?.mem.dirty_since(base.epoch);
+            (crate::delta::capture::clip_runs(&dirt, &allocs), Some(base.epoch))
+        };
+        // `allocs` is the consistency universe: pages outside the delta's
+        // spans dirtied mid-capture are folded in by the final pass, so
+        // base+delta is point-in-time like a full checkpoint.
+        let captured = capture_spans(self, device, &spans, epoch, &allocs);
+        self.graph.resume_collateral(device, stream);
+        Ok(Snapshot {
+            stream,
+            src_device: device,
+            paused,
+            allocations: captured?,
+            shard: None,
+            epoch,
+            base_epoch,
+        })
+    }
+
+    /// The shared checkpoint front half: pause the stream's device,
+    /// quiesce, harvest the paused kernel (if any), clear the flag.
+    fn pause_and_harvest(
+        &self,
+        stream: StreamHandle,
+    ) -> Result<(usize, Option<crate::runtime::stream::PausedKernel>)> {
         let device = self.stream_device(stream)?;
         let dev = self.inner.device(device)?;
         dev.pause.store(true, Ordering::SeqCst);
@@ -477,24 +579,26 @@ impl HetGpu {
         dev.pause.store(false, Ordering::SeqCst);
         let _halted = quiesced?;
         let paused = self.graph.take_paused(stream)?;
-        // Collect global memory: every allocation resident on the device.
-        // The exclusive gate keeps concurrent launches of *other* streams
-        // on this device out of the capture window.
-        let allocs = self.inner.memory.allocations_on(device);
-        let mut mem_blobs = Vec::with_capacity(allocs.len());
-        {
-            let _gate = dev.exec.write().unwrap();
-            for (addr, size) in allocs {
-                let mut bytes = vec![0u8; size as usize];
-                dev.mem.read_bytes_into(addr, &mut bytes)?;
-                mem_blobs.push((addr, bytes));
-            }
-        }
-        // Launches of *other* streams overlapping on this device may also
-        // have observed the pause flag and halted; resume them in place so
-        // a checkpoint of one stream never silently strands its neighbors.
-        self.graph.resume_collateral(device, stream);
-        Ok(Snapshot { stream, src_device: device, paused, allocations: mem_blobs, shard: None })
+        Ok((device, paused))
+    }
+
+    /// Dirty-tracking counters of `device` (pages tracked/dirty, current
+    /// epoch) — the delta-state engine's `graph_stats`-style
+    /// observability hook.
+    pub fn dirty_stats(&self, device: usize) -> Result<DirtyStats> {
+        Ok(self.inner.device(device)?.mem.dirty_stats())
+    }
+
+    /// Record an epoch-cut node on `stream` (crate-internal: the
+    /// coordinator places one between a shard's broadcast copies and its
+    /// launch); the cell holds the new epoch once the node executes.
+    pub(crate) fn record_epoch_cut(
+        &self,
+        stream: StreamHandle,
+    ) -> Result<(EventId, Arc<OnceLock<u64>>)> {
+        let out = Arc::new(OnceLock::new());
+        let ev = self.graph.enqueue(stream, NodeKind::EpochCut { out: Arc::clone(&out) }, &[])?;
+        Ok((ev, out))
     }
 
     /// Restore a snapshot onto `dst_device` and resume the stream named
@@ -519,6 +623,15 @@ impl HetGpu {
         snap: Snapshot,
         dst_device: usize,
     ) -> Result<()> {
+        // A delta must be overlaid onto its base first: restoring its
+        // sparse spans alone would leave every un-dirtied page at
+        // whatever the destination holds.
+        if snap.is_delta() {
+            return Err(HetError::migrate(
+                "cannot restore an incremental snapshot directly; apply it to its \
+                 base with Snapshot::apply_delta first",
+            ));
+        }
         // Validate the (possibly wire-deserialized) stream handle BEFORE
         // touching any state: a stale handle must error here, not after
         // memory was overwritten and residency retagged.
@@ -622,12 +735,13 @@ impl<'a> LaunchBuilder<'a> {
     }
 
     /// Name the allocations this launch reads or writes (by any pointer
-    /// into them). A sharded launch then baselines, broadcasts, and
-    /// merges **only these regions**, cutting the O(total-memory) cost of
-    /// `launch_sharded` to O(working set). Launches on a single stream
-    /// ignore the hint. Without it, sharding conservatively moves every
-    /// live allocation (pointers may hide inside buffers, so
-    /// arg-reachability alone would be unsound).
+    /// into them) — an **override** restricting the regions a sharded
+    /// launch considers at all. Since the delta-state engine, the hint
+    /// is no longer required for sub-O(total-memory) sharding: unhinted
+    /// launches consider every live allocation but baseline, broadcast
+    /// (steady-state), and merge only **dirty pages**. The hint still
+    /// shrinks the first-contact broadcast and the page-scan universe.
+    /// Launches on a single stream ignore it.
     pub fn working_set(mut self, ptrs: &[GpuPtr]) -> Self {
         self.working_set = Some(ptrs.to_vec());
         self

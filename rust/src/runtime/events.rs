@@ -57,7 +57,7 @@ use crate::runtime::stream::{PausedKernel, StreamHandle, StreamStats};
 use crate::runtime::RuntimeInner;
 use crate::sim::snapshot::{BlockResume, CostReport, LaunchOutcome};
 use std::collections::VecDeque;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -123,6 +123,12 @@ pub(crate) enum NodeKind {
     /// Peer copy: pull an address range from `src_device`'s arena into
     /// the stream's device arena (same unified address both sides).
     CopyPeer { ptr: GpuPtr, bytes: u64, src_device: usize },
+    /// Cut a dirty-tracking epoch on the stream's device when the stream
+    /// reaches this node, publishing the new epoch id into `out`. The
+    /// coordinator records one between a shard's broadcast copies and its
+    /// launch (per-stream FIFO makes that the exact boundary), so the
+    /// shard's own writes are separable from the broadcast's.
+    EpochCut { out: Arc<OnceLock<u64>> },
     /// No-op synchronization point (carries cross-stream `deps`).
     Marker,
 }
@@ -788,6 +794,11 @@ fn execute_node(rt: &RuntimeInner, device: usize, kind: &NodeKind) -> Result<Exe
             let dst = rt.device(device)?;
             let _gate = dst.exec.read().unwrap();
             dst.mem.write_bytes(ptr.0, &tmp)?;
+            Ok(Exec::Plain)
+        }
+        NodeKind::EpochCut { out } => {
+            let dev = rt.device(device)?;
+            let _ = out.set(dev.mem.dirty_epoch_cut());
             Ok(Exec::Plain)
         }
         NodeKind::Marker => Ok(Exec::Plain),

@@ -28,6 +28,14 @@
 //!   order stays deterministic. For timing-independent tests,
 //!   [`DispatchOptions::pause_at_block`] pins the frontier to a block id.
 //!
+//! * **Deterministic dirty sets.** Every write a block performs lands
+//!   through `DeviceMemory`'s marking write paths, so the *set* of 4 KiB
+//!   pages a grid dirties (the delta-state engine's feed, `crate::delta`)
+//!   is a function of the program — not of worker count or claim order.
+//!   Concurrent workers marking the same page race only on an idempotent
+//!   `fetch_or`, which cannot lose bits; the determinism suite pins
+//!   1-vs-N-worker dirty sets and the incremental blobs built from them.
+//!
 //! Worker count: `HETGPU_SIM_THREADS` (default = available host cores,
 //! `HETGPU_SIM_THREADS=1` is the sequential escape hatch).
 

@@ -35,7 +35,20 @@
 //!   final bits depend on arrival order — exactly as on real GPU hardware;
 //!   kernels needing reproducible float sums must reduce deterministically
 //!   (as the suite's tolerance-checked `reduce_sum` acknowledges).
+//!
+//! ## Dirty tracking
+//!
+//! Every write path (scalar stores, bulk writes, zeroing, guest atomics)
+//! additionally marks the touched 4 KiB page(s) in the memory's
+//! [`DirtyTracker`] **after** the bytes land — the delta-state engine's
+//! page-granular "what changed" feed (`crate::delta`). The fast path is
+//! one relaxed bitmap load (plus a `fetch_or` only on a page's first
+//! write per epoch), so the tracking cost is negligible next to the
+//! word-atomic arena access itself. Marks are deterministic in the set
+//! sense: the pages a grid dirties do not depend on dispatch worker
+//! count or interleaving, which the determinism suite pins.
 
+use crate::delta::tracker::{DirtyStats, DirtyTracker};
 use crate::error::{HetError, Result};
 use crate::hetir::types::{Scalar, Type, Value};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -73,6 +86,8 @@ pub struct DeviceMemory {
     /// Logical capacity in bytes.
     len: usize,
     device_name: Arc<str>,
+    /// Page-granular dirty tracking (see module docs).
+    dirty: DirtyTracker,
 }
 
 impl DeviceMemory {
@@ -86,7 +101,12 @@ impl DeviceMemory {
         // and bit validity as u64, and all-zero bytes are a valid
         // AtomicU64; the cast preserves the slice length metadata.
         let words = unsafe { Box::from_raw(Box::into_raw(zeroed) as *mut [AtomicU64]) };
-        DeviceMemory { words, len: capacity as usize, device_name: device_name.into() }
+        DeviceMemory {
+            words,
+            len: capacity as usize,
+            device_name: device_name.into(),
+            dirty: DirtyTracker::new(capacity),
+        }
     }
 
     pub fn capacity(&self) -> u64 {
@@ -154,6 +174,9 @@ impl DeviceMemory {
             let hi = sz - lo;
             Self::splice(&self.words[w + 1], bmask(hi), (bits >> (8 * lo)) & bmask(hi));
         }
+        // Mark after the bytes land (capture consistency leans on this
+        // ordering; see `delta::tracker` module docs).
+        self.dirty.mark(i as u64, sz as u64);
     }
 
     /// Read `sz` LE bytes at byte offset `i` (bounds already checked).
@@ -230,6 +253,7 @@ impl DeviceMemory {
                 .compare_exchange_weak(cur, word_new, Ordering::SeqCst, Ordering::SeqCst)
                 .is_ok()
             {
+                self.dirty.mark(addr, sz);
                 return Ok(old);
             }
         }
@@ -279,6 +303,7 @@ impl DeviceMemory {
             i += n;
             k += n;
         }
+        self.dirty.mark(addr, data.len() as u64);
         Ok(())
     }
 
@@ -297,7 +322,37 @@ impl DeviceMemory {
             }
             k += n;
         }
+        self.dirty.mark(addr, len);
         Ok(())
+    }
+
+    // ---- dirty tracking (delta-state engine feed) ----
+
+    /// Close the current dirty epoch and return the new epoch id: a
+    /// watermark such that [`DeviceMemory::dirty_since`] with it reports
+    /// exactly the pages written afterwards (see
+    /// [`crate::delta::tracker::DirtyTracker::cut`]).
+    pub fn dirty_epoch_cut(&self) -> u64 {
+        self.dirty.cut()
+    }
+
+    /// Byte ranges (page-aligned, clamped to capacity) dirtied since
+    /// `epoch`; sorted and coalesced. Over-approximates, never drops.
+    pub fn dirty_since(&self, epoch: u64) -> Vec<(u64, u64)> {
+        let mut runs = self.dirty.dirty_since(epoch);
+        // The last page rounds up past a non-page-multiple capacity.
+        if let Some((addr, len)) = runs.last_mut() {
+            let cap = self.len as u64;
+            if *addr + *len > cap {
+                *len = cap - *addr;
+            }
+        }
+        runs
+    }
+
+    /// Dirty-tracking counters (pages, epoch, ledger size).
+    pub fn dirty_stats(&self) -> DirtyStats {
+        self.dirty.stats()
     }
 }
 
@@ -459,6 +514,44 @@ mod tests {
         });
         assert_eq!(m.load(0, Scalar::U32).unwrap().as_u32(), 9_999);
         assert_eq!(m.load(4, Scalar::U32).unwrap().as_u32(), 9_999);
+    }
+
+    #[test]
+    fn every_write_path_marks_dirty_pages() {
+        use crate::delta::PAGE_SIZE;
+        let m = DeviceMemory::new(8 * PAGE_SIZE, "t");
+        let e = m.dirty_epoch_cut();
+        assert!(m.dirty_since(e).is_empty());
+        // Scalar store (page 0), bulk write (page 2), zero (page 4),
+        // atomic (page 6).
+        m.store(16, Scalar::U32, Value::u32(1)).unwrap();
+        m.write_bytes(2 * PAGE_SIZE + 100, &[1, 2, 3]).unwrap();
+        m.zero(4 * PAGE_SIZE, 8).unwrap();
+        m.atomic_rmw(6 * PAGE_SIZE, Scalar::U32, Ok).unwrap();
+        let d = m.dirty_since(e);
+        assert_eq!(
+            d,
+            vec![
+                (0, PAGE_SIZE),
+                (2 * PAGE_SIZE, PAGE_SIZE),
+                (4 * PAGE_SIZE, PAGE_SIZE),
+                (6 * PAGE_SIZE, PAGE_SIZE),
+            ]
+        );
+        // Loads mark nothing.
+        let e2 = m.dirty_epoch_cut();
+        m.load(16, Scalar::U32).unwrap();
+        let mut buf = [0u8; 64];
+        m.read_bytes_into(0, &mut buf).unwrap();
+        assert!(m.dirty_since(e2).is_empty());
+    }
+
+    #[test]
+    fn dirty_ranges_clamp_to_capacity() {
+        let m = DeviceMemory::new(100, "t");
+        m.write_bytes(90, &[7; 10]).unwrap();
+        assert_eq!(m.dirty_since(1), vec![(0, 100)]);
+        assert_eq!(m.dirty_stats().total_pages, 1);
     }
 
     #[test]

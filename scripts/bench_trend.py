@@ -41,6 +41,13 @@ def main(argv):
         # API v2 handle churn: gates regressions in stream/event
         # create-destroy + reclamation (slot-table reuse).
         ("handles", "churn_s"),
+        # Delta-state engine (BENCH_e7): gate the incremental/full *byte*
+        # ratio — deterministic, unlike the sub-millisecond smoke-mode
+        # wall time, which would flag runner jitter. A growing ratio
+        # means deltas capture more than the dirtied fraction. Sections
+        # absent from a given artifact are skipped, so one gate script
+        # serves both bench files.
+        ("delta", "ratio"),
     ]:
         p = prev.get(section, {}).get(key)
         c = curr.get(section, {}).get(key)

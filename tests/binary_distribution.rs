@@ -31,7 +31,8 @@ fn hetir_text_binary_runs_everywhere() {
         let px = ctx.alloc_buffer::<f32>(n, dev).unwrap();
         let py = ctx.alloc_buffer::<f32>(n, dev).unwrap();
         ctx.upload(&px, &x).unwrap();
-        ctx.upload(&py, &vec![1.0; n]).unwrap();
+        let ones = vec![1.0; n];
+        ctx.upload(&py, &ones).unwrap();
         let s = ctx.create_stream(dev).unwrap();
         ctx.launch(module, "saxpy")
             .dims(LaunchDims::d1(3, 32))

@@ -1,0 +1,307 @@
+//! Delta-state engine acceptance: incremental snapshots capture O(dirty)
+//! bytes, compose bit-identically with their base, fail closed on epoch
+//! mismatches, stay wire-compatible with v2/v3 golden blobs, and make
+//! unhinted `launch_sharded` move dirty pages instead of total memory.
+
+use hetgpu::migrate::blob;
+use hetgpu::runtime::api::HetGpu;
+use hetgpu::runtime::device::DeviceKind;
+use hetgpu::sim::simt::LaunchDims;
+use hetgpu::sim::snapshot::BlockState;
+
+const BUMP_SRC: &str = r#"
+__global__ void bump(float* p) {
+    unsigned i = blockIdx.x * blockDim.x + threadIdx.x;
+    p[i] = p[i] + 1.0f;
+}
+"#;
+
+// ---- golden-blob back-compat (satellite) ----
+
+#[test]
+fn v2_and_v3_idle_golden_blobs_still_restore() {
+    for (bytes, has_stream) in [
+        (&include_bytes!("fixtures/snapshot_v2_idle.blob")[..], false),
+        (&include_bytes!("fixtures/snapshot_v3_idle.blob")[..], true),
+    ] {
+        let snap = blob::deserialize(bytes).expect("golden blob parses");
+        assert_eq!(snap.src_device, 1);
+        assert_eq!(snap.epoch, 0, "legacy blobs carry no epoch");
+        assert!(!snap.is_delta());
+        assert!(snap.paused.is_none());
+        assert_eq!(snap.allocations.len(), 1);
+        if has_stream {
+            assert_eq!(snap.stream.raw(), 5);
+        }
+
+        // End-to-end: the bytes land in device memory through the normal
+        // restore path (rebinding the stream — v2 predates handles).
+        let ctx = HetGpu::with_devices(&[DeviceKind::NvidiaSim]).unwrap();
+        // First-fit allocator: the first buffer sits at the heap base
+        // 4096, exactly where the fixture's allocation lives.
+        let buf = ctx.alloc_buffer::<u8>(32, 0).unwrap();
+        assert_eq!(buf.ptr().0, 4096);
+        let s = ctx.create_stream(0).unwrap();
+        ctx.restore_into(s, snap, 0).unwrap();
+        let got = ctx.download(&buf, 32).unwrap();
+        let want: Vec<u8> = (0..32).collect();
+        assert_eq!(got, want, "golden allocation bytes must restore verbatim");
+    }
+}
+
+#[test]
+fn v2_and_v3_paused_golden_blobs_still_parse() {
+    for bytes in [
+        &include_bytes!("fixtures/snapshot_v2_paused.blob")[..],
+        &include_bytes!("fixtures/snapshot_v3_paused.blob")[..],
+    ] {
+        let snap = blob::deserialize(bytes).expect("golden blob parses");
+        assert_eq!(snap.src_device, 1);
+        let shard = snap.shard.expect("shard range survives");
+        assert_eq!((shard.lo, shard.hi), (1, 3));
+        let p = snap.paused.as_ref().expect("paused kernel survives");
+        assert_eq!(p.spec.kernel, "persist");
+        assert_eq!(p.spec.module.raw(), 7, "module ref widens to a handle");
+        assert_eq!(p.spec.dims, LaunchDims::d1(4, 64));
+        assert_eq!(p.spec.args.len(), 2);
+        assert_eq!(p.blocks.len(), 3);
+        match &p.blocks[1] {
+            BlockState::Suspended(cap) => {
+                assert_eq!(cap.block_idx, 2);
+                assert_eq!(cap.barrier_id, 5);
+                assert_eq!(cap.threads.len(), 1);
+                assert_eq!(cap.shared_mem, vec![1, 2, 3, 4]);
+            }
+            other => panic!("expected suspended block, got {other:?}"),
+        }
+        assert_eq!(snap.allocations, vec![(0x1000, vec![0xAB; 16])]);
+    }
+}
+
+// ---- incremental snapshots (tentpole acceptance) ----
+
+/// A launch dirtying <10% of a large buffer must yield an incremental
+/// snapshot proportionally smaller than a full one, and base + delta must
+/// restore bit-identically to a full snapshot taken at the same point.
+#[test]
+fn incremental_snapshot_is_proportional_and_composes_bit_identically() {
+    let n: usize = 1 << 20; // 4 MiB of f32
+    let dirty_elems: u32 = (n / 16) as u32; // kernel touches 6.25% (256 whole blocks)
+    let ctx = HetGpu::with_devices(&[DeviceKind::NvidiaSim, DeviceKind::NvidiaSim]).unwrap();
+    let m = ctx.compile_cuda(BUMP_SRC).unwrap();
+    let buf = ctx.alloc_buffer::<f32>(n, 0).unwrap();
+    let init: Vec<f32> = (0..n).map(|i| (i % 251) as f32).collect();
+    ctx.upload(&buf, &init).unwrap();
+    let s = ctx.create_stream(0).unwrap();
+
+    // Full base snapshot (epoch cut inside).
+    let base = ctx.checkpoint(s).unwrap();
+    assert!(!base.is_delta());
+    assert!(base.epoch > 0);
+
+    // Dirty ~5%: bump the first `dirty_elems` elements.
+    ctx.launch(m, "bump")
+        .dims(LaunchDims::d1(dirty_elems / 256, 256))
+        .arg(buf.arg())
+        .record(s)
+        .unwrap();
+    ctx.synchronize(s).unwrap();
+
+    // Observability: the open epoch's dirty pages are ~5% of the buffer.
+    let stats = ctx.dirty_stats(0).unwrap();
+    let dirty_bytes_seen = stats.dirty_pages * stats.page_size;
+    assert!(
+        dirty_bytes_seen <= buf.size_bytes() / 10,
+        "expected <10% dirty, saw {dirty_bytes_seen} of {}",
+        buf.size_bytes()
+    );
+    assert!(dirty_bytes_seen > 0);
+
+    let delta = ctx.snapshot_incremental(s, &base).unwrap();
+    assert!(delta.is_delta());
+    let full = ctx.checkpoint(s).unwrap();
+    assert!(!full.is_delta());
+
+    // Proportionality: payload and wire blob are both ~5%, not ~100%.
+    assert!(
+        delta.memory_bytes() <= full.memory_bytes() / 10,
+        "delta {} vs full {}",
+        delta.memory_bytes(),
+        full.memory_bytes()
+    );
+    assert!(delta.memory_bytes() >= u64::from(dirty_elems) * 4);
+    let delta_wire = blob::serialize(&delta);
+    let full_wire = blob::serialize(&full);
+    assert!(
+        delta_wire.len() <= full_wire.len() / 10,
+        "delta wire {} vs full wire {}",
+        delta_wire.len(),
+        full_wire.len()
+    );
+
+    // Compose through the wire format and compare against the full
+    // capture: bit-identical memory image.
+    let delta2 = blob::deserialize(&delta_wire).unwrap();
+    let applied = base.apply_delta(&delta2).unwrap();
+    assert_eq!(applied.allocations, full.allocations, "base+delta != full capture");
+
+    // End-to-end: restore the composed snapshot onto the second device
+    // and read the buffer back bit-exactly.
+    ctx.restore(applied, 1).unwrap();
+    let got = ctx.download(&buf, n).unwrap();
+    for (i, (g, w)) in got.iter().zip(&init).enumerate() {
+        let want = if (i as u32) < dirty_elems { *w + 1.0 } else { *w };
+        assert_eq!(g.to_bits(), want.to_bits(), "elem {i}");
+    }
+}
+
+/// Epoch pairing fails closed (satellite): a delta applied to any base
+/// other than the one it was captured against is a typed error, and a raw
+/// delta cannot be restored at all.
+#[test]
+fn delta_applied_to_mismatched_base_fails_closed() {
+    let ctx = HetGpu::with_devices(&[DeviceKind::NvidiaSim]).unwrap();
+    let m = ctx.compile_cuda(BUMP_SRC).unwrap();
+    let buf = ctx.alloc_buffer::<f32>(4096, 0).unwrap();
+    let ones = vec![1.0f32; 4096];
+    ctx.upload(&buf, &ones).unwrap();
+    let s = ctx.create_stream(0).unwrap();
+
+    let base = ctx.checkpoint(s).unwrap();
+    ctx.launch(m, "bump").dims(LaunchDims::d1(16, 256)).arg(buf.arg()).record(s).unwrap();
+    ctx.synchronize(s).unwrap();
+    let delta = ctx.snapshot_incremental(s, &base).unwrap();
+    assert!(delta.is_delta());
+
+    // A later full snapshot is a *different* epoch: typed, fail-closed.
+    let other = ctx.checkpoint(s).unwrap();
+    assert_ne!(other.epoch, base.epoch);
+    let err = other.apply_delta(&delta).unwrap_err();
+    assert!(err.is_epoch_mismatch(), "{err}");
+
+    // Restoring a raw delta is rejected before touching memory.
+    let err = ctx.restore(delta, 0).unwrap_err();
+    assert!(err.to_string().contains("apply it to its base"), "{err}");
+    // Memory is intact: the bumped values are still there.
+    assert!(ctx.download(&buf, 4096).unwrap().iter().all(|v| *v == 2.0));
+
+    // The matching base still composes fine.
+    let delta2 = ctx.snapshot_incremental(s, &base).unwrap();
+    assert!(base.apply_delta(&delta2).is_ok());
+}
+
+/// Full-capture fallback: a base taken on another device (the stream
+/// migrated since) cannot anchor a delta — the API degrades to a full
+/// snapshot instead of shipping an unanchorable diff.
+#[test]
+fn incremental_falls_back_to_full_across_migration() {
+    let ctx = HetGpu::with_devices(&[DeviceKind::NvidiaSim, DeviceKind::AmdSim]).unwrap();
+    let buf = ctx.alloc_buffer::<f32>(1024, 0).unwrap();
+    let threes = vec![3.0f32; 1024];
+    ctx.upload(&buf, &threes).unwrap();
+    let s = ctx.create_stream(0).unwrap();
+    let base = ctx.checkpoint(s).unwrap();
+    ctx.migrate(s, 1).unwrap();
+    let snap = ctx.snapshot_incremental(s, &base).unwrap();
+    assert!(!snap.is_delta(), "cross-device delta must fall back to full capture");
+    assert_eq!(snap.src_device, 1);
+    assert!(snap.memory_bytes() >= buf.size_bytes());
+}
+
+// ---- unhinted sharded launches move dirty pages, not total memory ----
+
+#[test]
+fn unhinted_sharded_launch_moves_dirty_not_total() {
+    let work_n: usize = 16 * 1024; // 64 KiB working buffer
+    let ballast_n: usize = 2 << 20; // 8 MiB ballast, never written
+    let ctx = HetGpu::with_devices(&[DeviceKind::NvidiaSim, DeviceKind::NvidiaSim]).unwrap();
+    let m = ctx.compile_cuda(BUMP_SRC).unwrap();
+    let ballast = ctx.alloc_buffer::<f32>(ballast_n, 0).unwrap();
+    let work = ctx.alloc_buffer::<f32>(work_n, 0).unwrap();
+    let sevens = vec![7.0f32; ballast_n];
+    let zeros = vec![0.0f32; work_n];
+    ctx.upload(&ballast, &sevens).unwrap();
+    ctx.upload(&work, &zeros).unwrap();
+
+    let work_bytes = work.size_bytes();
+    let total_bytes = work_bytes + ballast.size_bytes();
+    let dims = LaunchDims::d1((work_n / 256) as u32, 256);
+    let run = |i: u32| {
+        let mut launch = ctx
+            .launch(m, "bump")
+            .dims(dims)
+            .arg(work.arg())
+            .sharded(&[0, 1]) // NO working-set hint
+            .unwrap();
+        let report = launch.wait().unwrap();
+        // Merge and publish are O(dirty pages) from the first launch on.
+        assert!(
+            report.io.merged_bytes <= 2 * work_bytes,
+            "launch {i}: merged {} of {} total",
+            report.io.merged_bytes,
+            total_bytes
+        );
+        assert!(
+            report.io.published_bytes <= 2 * work_bytes,
+            "launch {i}: published {}",
+            report.io.published_bytes
+        );
+        report
+    };
+
+    // Cold launch: baseline + broadcast pay first-contact cost once.
+    let first = run(1);
+    assert!(first.io.baseline_bytes >= total_bytes, "cold baseline reads everything");
+    assert!(first.io.broadcast_bytes >= total_bytes, "cold broadcast seeds device 1");
+
+    // Warm launch: everything is O(dirty pages).
+    let second = run(2);
+    assert!(
+        second.io.baseline_bytes <= 2 * work_bytes,
+        "warm baseline must be O(dirty): {} of {}",
+        second.io.baseline_bytes,
+        total_bytes
+    );
+    assert!(
+        second.io.broadcast_bytes <= 2 * work_bytes,
+        "warm broadcast must be O(dirty): {} of {}",
+        second.io.broadcast_bytes,
+        total_bytes
+    );
+
+    // And the math is right: two bumps landed on every element, the
+    // ballast never changed.
+    assert!(ctx.download(&work, work_n).unwrap().iter().all(|v| *v == 2.0));
+    let b = ctx.download(&ballast, 1024).unwrap();
+    assert!(b.iter().all(|v| *v == 7.0));
+}
+
+/// Regression: byte-adjacent sub-page allocations share a dirty page.
+/// The clipped dirty runs of the two regions touch exactly at the
+/// boundary and must not be glued into one cross-region run (that would
+/// slice past one region's baseline in the join and build delta spans no
+/// base allocation contains).
+#[test]
+fn sharded_dirty_runs_respect_adjacent_region_boundaries() {
+    let ctx = HetGpu::with_devices(&[DeviceKind::NvidiaSim, DeviceKind::NvidiaSim]).unwrap();
+    let m = ctx.compile_cuda(BUMP_SRC).unwrap();
+    // Two 512-byte buffers: first-fit places them byte-adjacent inside
+    // one 4 KiB page (128 * 4 = 512, already 256-aligned).
+    let work = ctx.alloc_buffer::<f32>(128, 0).unwrap();
+    let neighbor = ctx.alloc_buffer::<f32>(128, 0).unwrap();
+    assert_eq!(neighbor.ptr().0, work.ptr().0 + 512, "buffers must be byte-adjacent");
+    ctx.upload(&work, &[1.0; 128]).unwrap();
+    ctx.upload(&neighbor, &[5.0; 128]).unwrap();
+
+    for _ in 0..2 {
+        let mut launch = ctx
+            .launch(m, "bump")
+            .dims(LaunchDims::d1(2, 64))
+            .arg(work.arg())
+            .sharded(&[0, 1]) // unhinted: both regions move
+            .unwrap();
+        launch.wait().unwrap();
+    }
+    assert!(ctx.download(&work, 128).unwrap().iter().all(|v| *v == 3.0));
+    assert!(ctx.download(&neighbor, 128).unwrap().iter().all(|v| *v == 5.0));
+}

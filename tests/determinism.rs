@@ -128,6 +128,60 @@ fn atomics_heavy_grid_bit_identical_across_worker_counts() {
     }
 }
 
+/// Delta-engine determinism: concurrent workers hammering the same pages
+/// (through stores *and* host-atomic RMWs) must not lose dirty bits. The
+/// dirty *set* is a function of the program, not of dispatch timing, so a
+/// 1-worker and an N-worker run must report identical dirty ranges and
+/// produce bit-identical incremental snapshot blobs.
+#[test]
+fn dirty_sets_and_incremental_blobs_bit_identical_across_worker_counts() {
+    let cfg = SimtConfig::nvidia();
+    let p = compile_simt(ATOMICS_SRC, "slam", &cfg);
+    let dims = LaunchDims::d1(64, 64); // 4096 threads on 16+8 counters
+    // Two pointer params on different pages, so the dirty set has shape.
+    let params =
+        [Value::ptr(0, AddrSpace::Global), Value::ptr(8192, AddrSpace::Global)];
+    let run = |workers: usize| {
+        let sim = SimtSim::with_workers(cfg.clone(), workers);
+        let mem = DeviceMemory::new(1 << 16, "det");
+        // Cut a base epoch: the delta covers exactly the launch's writes.
+        let base = mem.dirty_epoch_cut();
+        let pause = AtomicBool::new(false);
+        let out = sim.run_grid(&p, dims, &params, &mem, &pause, None).unwrap();
+        assert!(out.is_completed());
+        let dirty = mem.dirty_since(base);
+        let allocations: Vec<(u64, Vec<u8>)> = dirty
+            .iter()
+            .map(|&(a, l)| {
+                let mut b = vec![0u8; l as usize];
+                mem.read_bytes_into(a, &mut b).unwrap();
+                (a, b)
+            })
+            .collect();
+        let delta_blob = blob::serialize(&Snapshot {
+            stream: StreamHandle::from_raw(0),
+            src_device: 0,
+            paused: None,
+            allocations,
+            shard: None,
+            epoch: base + 1,
+            base_epoch: Some(base),
+        });
+        (dirty, delta_blob)
+    };
+    let (dirty1, blob1) = run(1);
+    assert_eq!(
+        dirty1,
+        vec![(0, 4096), (8192, 4096)],
+        "slam dirties exactly the two counter pages"
+    );
+    for workers in [2usize, 4, 8] {
+        let (d, b) = run(workers);
+        assert_eq!(dirty1, d, "dirty set differs with {workers} workers");
+        assert_eq!(blob1, b, "incremental blob differs with {workers} workers");
+    }
+}
+
 #[test]
 fn tensix_grids_bit_identical_across_worker_counts() {
     let m = frontend::compile(SCALE_SRC, "det").unwrap();
@@ -226,6 +280,8 @@ fn pinned_pause_migrate_roundtrip_is_bit_identical() {
             paused: Some(PausedKernel { spec: spec.clone(), blocks: grid.blocks.clone() }),
             allocations: vec![(0, mem.to_vec())],
             shard: None,
+            epoch: 0,
+            base_epoch: None,
         })
     };
     assert_eq!(blob_of(&grid1, &mem1), blob_of(&grid8, &mem8), "snapshot blobs differ");

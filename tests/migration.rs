@@ -198,7 +198,7 @@ __global__ void mark(unsigned* log, unsigned val) {{
         ))
         .unwrap();
     let data = ctx.alloc_buffer::<f32>(N, 0).unwrap();
-    ctx.upload(&data, &vec![0.0; N]).unwrap();
+    ctx.upload(&data, &[0.0; N]).unwrap();
     let log = ctx.alloc_buffer::<u32>(16, 0).unwrap();
     ctx.upload(&log, &[0; 16]).unwrap();
 

@@ -217,10 +217,14 @@ fn prop_blob_roundtrip() {
             }),
             allocations: vec![(4096, (0..r.below(128)).map(|_| r.next_u32() as u8).collect())],
             shard: None,
+            epoch: r.next_u64(),
+            base_epoch: if r.bool() { Some(r.next_u64()) } else { None },
         };
         let blob = serialize(&snap);
         let back = deserialize(&blob).expect("deserialize");
         assert_eq!(snap.allocations, back.allocations);
+        assert_eq!(snap.epoch, back.epoch);
+        assert_eq!(snap.base_epoch, back.base_epoch);
         assert_eq!(
             snap.paused.as_ref().unwrap().blocks,
             back.paused.as_ref().unwrap().blocks
