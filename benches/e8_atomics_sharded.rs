@@ -1,0 +1,137 @@
+//! E8 — cross-shard atomics: the journal protocol's cost shape.
+//!
+//! An atomics-heavy histogram grid runs (a) on one device, (b) sharded
+//! over two devices under the journal protocol (correct: bit-identical
+//! bins), and (c) sharded `Unsynchronized` (the pre-protocol
+//! last-writer-wins merge — wrong for atomics, measured as the A/B
+//! overhead baseline). Also measures the launch-batching first rung: N
+//! back-to-back launches of one kernel on one stream, which hit the
+//! per-stream JIT memo instead of the shared cache's lock + key hash.
+//!
+//! Emits `BENCH_e8.json`; the `atomics.journal_ops` count is
+//! deterministic and gated by `scripts/bench_trend.py` (wall times are
+//! printed for the notes but not gated — smoke-mode runs are too small
+//! to gate on jittery clocks).
+
+use hetgpu::runtime::api::{AtomicsMode, HetGpu};
+use hetgpu::runtime::device::DeviceKind;
+use hetgpu::runtime::launch::Arg;
+use hetgpu::sim::simt::LaunchDims;
+use std::time::Instant;
+
+const SRC: &str = r#"
+__global__ void slam(unsigned* bins, unsigned* peaks) {
+    unsigned i = blockIdx.x * blockDim.x + threadIdx.x;
+    atomicAdd(&bins[i & 15u], i);
+    atomicMax(&peaks[i & 7u], i * 40503u);
+}
+
+__global__ void tiny(unsigned* p) {
+    if (threadIdx.x == 0u && blockIdx.x == 0u) {
+        atomicAdd(&p[0], 1u);
+    }
+}
+"#;
+
+fn main() {
+    let smoke = std::env::var("HETGPU_BENCH_SMOKE").is_ok();
+    let blocks: u32 = if smoke { 64 } else { 256 };
+    let dims = LaunchDims::d1(blocks, 64);
+    let threads = blocks as u64 * 64;
+
+    // ---- single device (reference) ----
+    let ref_ctx = HetGpu::with_devices(&[DeviceKind::NvidiaSim]).unwrap();
+    let m = ref_ctx.compile_cuda(SRC).unwrap();
+    let bins = ref_ctx.alloc_buffer::<u32>(16, 0).unwrap();
+    let peaks = ref_ctx.alloc_buffer::<u32>(8, 0).unwrap();
+    ref_ctx.upload(&bins, &[0; 16]).unwrap();
+    ref_ctx.upload(&peaks, &[0; 8]).unwrap();
+    let s = ref_ctx.create_stream(0).unwrap();
+    let t0 = Instant::now();
+    ref_ctx
+        .launch(m, "slam")
+        .dims(dims)
+        .args(&[bins.arg(), peaks.arg()])
+        .record(s)
+        .unwrap();
+    ref_ctx.synchronize(s).unwrap();
+    let single_s = t0.elapsed().as_secs_f64();
+    let expect_bins = ref_ctx.download(&bins, 16).unwrap();
+
+    // ---- sharded, journal protocol (correct) ----
+    let ctx = HetGpu::with_devices(&[DeviceKind::NvidiaSim, DeviceKind::NvidiaSim]).unwrap();
+    let m2 = ctx.compile_cuda(SRC).unwrap();
+    let bins2 = ctx.alloc_buffer::<u32>(16, 0).unwrap();
+    let peaks2 = ctx.alloc_buffer::<u32>(8, 0).unwrap();
+    ctx.upload(&bins2, &[0; 16]).unwrap();
+    ctx.upload(&peaks2, &[0; 8]).unwrap();
+    let t1 = Instant::now();
+    let mut launch = ctx
+        .launch(m2, "slam")
+        .dims(dims)
+        .args(&[bins2.arg(), peaks2.arg()])
+        .sharded(&[0, 1])
+        .unwrap();
+    let report = launch.wait().unwrap();
+    let sharded_s = t1.elapsed().as_secs_f64();
+    let journal_ops = report.io.journal_ops;
+    assert_eq!(journal_ops, threads * 2, "every atomic journals exactly once");
+    assert_eq!(
+        ctx.download(&bins2, 16).unwrap(),
+        expect_bins,
+        "journaled sharded histogram must be bit-identical to single-device"
+    );
+
+    // ---- sharded, unsynchronized (A/B overhead baseline; WRONG bins) ----
+    ctx.upload(&bins2, &[0; 16]).unwrap();
+    ctx.upload(&peaks2, &[0; 8]).unwrap();
+    let t2 = Instant::now();
+    let mut launch = ctx
+        .launch(m2, "slam")
+        .dims(dims)
+        .args(&[bins2.arg(), peaks2.arg()])
+        .atomics_mode(AtomicsMode::Unsynchronized)
+        .sharded(&[0, 1])
+        .unwrap();
+    launch.wait().unwrap();
+    let unsync_s = t2.elapsed().as_secs_f64();
+
+    // ---- repeat-launch lookup cost (per-stream JIT memo) ----
+    let reps: u32 = if smoke { 200 } else { 2000 };
+    let p = ref_ctx.alloc_buffer::<u32>(4, 0).unwrap();
+    ref_ctx.upload(&p, &[0; 4]).unwrap();
+    // Warm the memo (and the JIT cache) once.
+    ref_ctx.launch(m, "tiny").dims(LaunchDims::d1(1, 32)).arg(p.arg()).record(s).unwrap();
+    ref_ctx.synchronize(s).unwrap();
+    let t3 = Instant::now();
+    for _ in 0..reps {
+        ref_ctx.launch(m, "tiny").dims(LaunchDims::d1(1, 32)).arg(p.arg()).record(s).unwrap();
+    }
+    ref_ctx.synchronize(s).unwrap();
+    let repeat_s = t3.elapsed().as_secs_f64();
+
+    println!("\nE8: cross-shard atomics protocol ({} threads, 2 atomics each)\n", threads);
+    println!("  single device        {:>10.3} ms", single_s * 1e3);
+    println!(
+        "  sharded + journal    {:>10.3} ms  ({journal_ops} ops replayed, {} B shipped)",
+        sharded_s * 1e3,
+        report.io.journal_bytes
+    );
+    println!("  sharded unsync (A/B) {:>10.3} ms  (last-writer-wins; wrong for atomics)", unsync_s * 1e3);
+    println!(
+        "\nE8b: repeat-launch lookup ({} same-kernel launches, per-stream JIT memo)\n  total {:>10.3} ms  ({:.2} us/launch)",
+        reps,
+        repeat_s * 1e3,
+        repeat_s * 1e6 / reps as f64
+    );
+
+    let json_path =
+        std::env::var("HETGPU_BENCH_JSON").unwrap_or_else(|_| "BENCH_e8.json".into());
+    let json = format!(
+        "{{\n  \"bench\": \"e8_atomics_sharded\",\n  \"atomics\": {{\"single_s\": {single_s:.6}, \"sharded_s\": {sharded_s:.6}, \"unsync_s\": {unsync_s:.6}, \"journal_ops\": {journal_ops}}},\n  \"lookup\": {{\"repeat_s\": {repeat_s:.6}, \"launches\": {reps}}}\n}}\n"
+    );
+    match std::fs::write(&json_path, &json) {
+        Ok(()) => println!("\nwrote {json_path}"),
+        Err(e) => eprintln!("\nfailed to write {json_path}: {e}"),
+    }
+}

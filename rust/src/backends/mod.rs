@@ -62,6 +62,15 @@ impl DeviceProgram {
             DeviceProgram::Tensix(p) => &p.kernel_name,
         }
     }
+    /// Commutativity classification of the program's global-memory
+    /// atomics — the hetIR [`crate::hetir::instr::AtomOp`] classification
+    /// threaded through lowering (see [`crate::isa::AtomicsClass`]).
+    pub fn atomics_class(&self) -> crate::isa::AtomicsClass {
+        match self {
+            DeviceProgram::Simt(p) => p.atomics_class(),
+            DeviceProgram::Tensix(p) => p.atomics_class(),
+        }
+    }
 }
 
 /// Translate `kernel` for a SIMT vendor configuration.

@@ -758,6 +758,7 @@ impl<'a> Ttx<'a> {
                         val: self.vo(val),
                         val2: val2.as_ref().map(|v| self.vo(v)),
                         local,
+                        shared: *space == AddrSpace::Shared,
                     }));
                 }
             }

@@ -46,15 +46,30 @@
 //! which regions are considered at all; it is no longer required for
 //! sub-O(total) behavior.
 //!
+//! ## Cross-shard atomics: the op-journal protocol
+//!
+//! Per-shard images make in-place read-modify-write between shards
+//! non-composable, so journaled launches (the default whenever the
+//! kernel performs global atomics, see
+//! [`crate::runtime::launch::AtomicsMode`]) carry an
+//! [`AtomicJournal`] per shard: commutative global atomics apply to the
+//! shard's image *and* append typed entries; ordered ops (Exch/Cas) fail
+//! closed with `HetError::OrderedAtomic`. The join excludes the
+//! journaled words from the byte fold and **replays** every shard's
+//! entries against the launch baseline in deterministic order — shard
+//! id, then program order — so integer atomics land bit-identically to a
+//! single-device run at any shard count (DESIGN.md §9).
+//!
 //! Because a shard is an ordinary (partial) launch on an ordinary stream,
 //! the whole checkpoint machinery applies to it:
 //! [`ShardedLaunch::rebalance`] pauses one shard cooperatively, captures
-//! its dirty runs as an **incremental delta snapshot** (blob v4), ships
-//! it through the [`crate::migrate::blob`] wire format — the transport a
-//! cross-host orchestrator would use, now delta-sized instead of
-//! image-sized — applies it to the launch baseline on the destination
-//! (epoch-validated, fail-closed), and resumes there, including across
-//! SIMT↔Tensix kinds.
+//! its dirty runs as an **incremental delta snapshot** (blob v5,
+//! carrying the shard's pending journal entries next to the byte delta),
+//! ships it through the [`crate::migrate::blob`] wire format — the
+//! transport a cross-host orchestrator would use, now delta-sized
+//! instead of image-sized — applies it to the launch baseline on the
+//! destination (epoch-validated, fail-closed), and resumes there,
+//! including across SIMT↔Tensix kinds.
 //!
 //! Joining also **destroys the shards' internal streams and retires
 //! their events**, so a service calling `launch_sharded` in a loop holds
@@ -63,12 +78,14 @@
 pub mod shard;
 
 use crate::delta::capture::clip_runs;
+use crate::delta::journal::{self, AtomicEntry, AtomicJournal};
 use crate::error::{HetError, Result};
+use crate::isa::AtomicsClass;
 use crate::migrate::blob;
 use crate::migrate::state::Snapshot;
 use crate::runtime::api::{HetGpu, StreamHandle};
 use crate::runtime::events::EventId;
-use crate::runtime::launch::LaunchSpec;
+use crate::runtime::launch::{kernel_features, AtomicsMode, LaunchSpec};
 use crate::runtime::memory::GpuPtr;
 use crate::sim::snapshot::CostReport;
 use shard::ShardRange;
@@ -96,6 +113,15 @@ pub struct Shard {
     /// writes, already merged into its restored image on the new device
     /// but below the new watermark).
     pub(crate) carry: Vec<(u64, u64)>,
+    /// The shard's cross-shard atomics journal (`None`: the launch runs
+    /// unsynchronized or performs no global atomics). Shared with the
+    /// shard's launch/resume graph nodes, which append entries as blocks
+    /// execute; the join drains it for replay.
+    pub(crate) journal: Option<Arc<AtomicJournal>>,
+    /// Journal entries carried across rebalances (shipped through the v5
+    /// delta blob), replayed *before* the live journal's entries — they
+    /// precede the post-move segment in program order.
+    pub(crate) journal_carry: Vec<AtomicEntry>,
 }
 
 /// One region of the persistent host baseline mirror.
@@ -146,6 +172,12 @@ pub struct ShardIo {
     pub merged_bytes: u64,
     /// Bytes written back to home devices (union of dirty runs).
     pub published_bytes: u64,
+    /// Commutative atomic ops replayed from shard journals at join (the
+    /// cross-shard atomics protocol's op traffic).
+    pub journal_ops: u64,
+    /// Journal bytes shipped through rebalance delta blobs (wire-entry
+    /// sized).
+    pub journal_bytes: u64,
 }
 
 /// Report of a completed sharded launch.
@@ -214,17 +246,48 @@ impl<'a> Coordinator<'a> {
     /// the shared executor pool), and return the in-flight launch.
     /// `working_set` restricts the considered regions; `None` considers
     /// every live allocation — either way the moved bytes are O(dirty
-    /// pages) once the sync cache is warm. Usually reached through
+    /// pages) once the sync cache is warm. `atomics` selects the
+    /// cross-shard atomics protocol (see
+    /// [`crate::runtime::launch::AtomicsMode`]): under journaling, every
+    /// shard gets an [`AtomicJournal`] its commutative global atomics
+    /// append to, and [`ShardedLaunch::wait`] replays all journals
+    /// against the launch baseline in place of the last-writer-wins byte
+    /// merge for the journaled words. Usually reached through
     /// `LaunchBuilder::sharded`.
     pub fn launch_sharded(
         &self,
         spec: LaunchSpec,
         working_set: Option<&[GpuPtr]>,
         devices: &[usize],
+        atomics: AtomicsMode,
     ) -> Result<ShardedLaunch<'a>> {
         let (grid_size, _) = spec.dims.validate()?;
         let plan = self.plan(grid_size, devices)?;
         let rt = self.ctx.runtime();
+
+        // Engage journaling per the mode: `Auto` keys on the hetIR-level
+        // atomics classification (the same one the lowered programs
+        // expose), so atomics-free kernels pay zero protocol cost.
+        let journaled = match atomics {
+            AtomicsMode::Unsynchronized => false,
+            AtomicsMode::Journal => true,
+            AtomicsMode::Auto => {
+                devices.len() > 1 && {
+                    let modules = rt.modules.read().unwrap();
+                    let (module, _uid) = modules.get(spec.module)?;
+                    module
+                        .kernel(&spec.kernel)
+                        .map(|k| kernel_features(k).global_atomics != AtomicsClass::None)
+                        .unwrap_or(false)
+                }
+            }
+        };
+        if journaled {
+            self.ctx
+                .journal_counters
+                .journaled_launches
+                .fetch_add(1, Ordering::Relaxed);
+        }
 
         // Resolve the regions to move: the working-set hint, or every
         // live allocation.
@@ -372,9 +435,24 @@ impl<'a> Coordinator<'a> {
             for ((&(d, range), &stream), cell) in
                 plan.iter().zip(created.iter()).zip(cuts_cells)
             {
-                let event =
-                    ctx.record_launch(stream, spec.clone(), Some(range), &broadcast_events)?;
-                shards.push(Shard { stream, device: d, range, event, cut: cell, carry: Vec::new() });
+                let journal = journaled.then(|| Arc::new(AtomicJournal::new(grid_size)));
+                let event = ctx.record_launch(
+                    stream,
+                    spec.clone(),
+                    Some(range),
+                    &broadcast_events,
+                    journal.clone(),
+                )?;
+                shards.push(Shard {
+                    stream,
+                    device: d,
+                    range,
+                    event,
+                    cut: cell,
+                    carry: Vec::new(),
+                    journal,
+                    journal_carry: Vec::new(),
+                });
             }
             Ok(shards)
         };
@@ -472,11 +550,12 @@ impl ShardedLaunch<'_> {
 
     /// Cooperatively pause shard `idx` and move it to `dst_device`
     /// (possibly of a different kind), shipping an **incremental delta
-    /// blob** (v4) as transport: only the shard's dirty runs travel; the
-    /// destination image is rebuilt as launch-baseline + delta
-    /// (epoch-validated, fail-closed). Returns `true` if the shard was
-    /// caught live mid-kernel (`false`: it had already finished — only
-    /// memory moved).
+    /// blob** (v5) as transport: only the shard's dirty runs travel —
+    /// plus its pending atomics-journal entries — and the destination
+    /// image is rebuilt as launch-baseline + delta (epoch-validated,
+    /// fail-closed). Returns `true` if the shard was caught live
+    /// mid-kernel (`false`: it had already finished — only memory
+    /// moved).
     pub fn rebalance(&mut self, idx: usize, dst_device: usize) -> Result<bool> {
         let rt = self.ctx.runtime();
         let dst = rt.device(dst_device)?;
@@ -517,6 +596,19 @@ impl ShardedLaunch<'_> {
                 allocations.push((addr, bytes));
             }
         }
+        // Pending atomics journal: prior carries, then the live journal.
+        // Read *without draining* — any error below must leave the
+        // shard's journal intact (a lossy failed rebalance would drop
+        // atomic updates, the exact bug class this protocol closes); the
+        // live journal is drained only at the commit point, and no new
+        // entries can land in between because the stream stays halted
+        // until the resume at the end. The entries ride the v5 blob next
+        // to the byte delta; a cross-host orchestrator needs both to
+        // join the shard later.
+        let mut pending = self.shards[idx].journal_carry.clone();
+        if let Some(j) = &self.shards[idx].journal {
+            pending.extend(j.entries_in_order());
+        }
         let delta = Snapshot {
             stream: self.shards[idx].stream,
             src_device,
@@ -525,6 +617,7 @@ impl ShardedLaunch<'_> {
             shard: Some(self.shards[idx].range),
             epoch: base_epoch,
             base_epoch: Some(base_epoch),
+            journal: pending,
         };
         // Streams that observed the device-wide pause collaterally (user
         // streams co-located with the shard) resume in place.
@@ -542,6 +635,11 @@ impl ShardedLaunch<'_> {
                 "rebalance delta blob does not match the launch baseline",
             ));
         }
+        self.io.journal_bytes += delta.journal.len() as u64 * blob::JOURNAL_ENTRY_WIRE_BYTES;
+        self.ctx
+            .journal_counters
+            .entries_shipped
+            .fetch_add(delta.journal.len() as u64, Ordering::Relaxed);
 
         // Rebuild the shard image on the destination as baseline + delta
         // overlay, written straight from the launch's baseline Arcs — no
@@ -591,7 +689,27 @@ impl ShardedLaunch<'_> {
             // restored pre-move writes ride along in `carry`).
             new_cut = dst.mem.dirty_epoch_cut();
         }
-        self.ctx.graph().resume(self.shards[idx].stream, dst_device, delta.paused)?;
+        // Commit the journal move — every fallible step is behind us
+        // except the resume itself. The wire-roundtripped entries become
+        // the shard's carry (what the join replays ahead of the live
+        // journal), and the live journal is drained *now*, before the
+        // resume can append post-move entries, so nothing is ever lost
+        // or double-replayed: carry == carry_old + drained.
+        {
+            let shard = &mut self.shards[idx];
+            if let Some(j) = &shard.journal {
+                let _ = j.take_all();
+            }
+            shard.journal_carry = delta.journal;
+        }
+        // Re-attach the shard's (now drained) journal to the resumed
+        // kernel so re-entered blocks keep journaling — their entries
+        // append behind the shipped carry in replay order.
+        let mut paused_resume = delta.paused;
+        if let Some(pk) = &mut paused_resume {
+            pk.journal = self.shards[idx].journal.clone();
+        }
+        self.ctx.graph().resume(self.shards[idx].stream, dst_device, paused_resume)?;
         let shard = &mut self.shards[idx];
         shard.device = dst_device;
         shard.carry = merge_byte_runs(&shard.carry, &dirty);
@@ -661,6 +779,27 @@ impl ShardedLaunch<'_> {
             harvest.push((runs, bytes));
         }
 
+        // Cross-shard atomics protocol: collect each shard's journal
+        // (carried entries first — they precede the post-rebalance
+        // segment in program order) and the union of journaled word
+        // spans. Journaled words are *excluded* from the byte fold below:
+        // every shard's local image holds only its own updates there, so
+        // last-writer-wins would drop the others' — their final value is
+        // baseline + replay instead.
+        let jentries: Vec<Vec<AtomicEntry>> = self
+            .shards
+            .iter()
+            .map(|s| {
+                let mut v = s.journal_carry.clone();
+                if let Some(j) = &s.journal {
+                    v.extend(j.entries_in_order());
+                }
+                v
+            })
+            .collect();
+        let all_entries: Vec<AtomicEntry> = jentries.iter().flatten().copied().collect();
+        let jspans = journal::word_spans(&all_entries);
+
         // Fold in shard order against the launch baseline: overlay
         // buffers exist only for the union of dirty runs.
         let union: Vec<(u64, u64)> = harvest
@@ -682,13 +821,61 @@ impl ShardedLaunch<'_> {
                 let ui = union.partition_point(|&(ua, ul)| ua + ul <= addr);
                 let (ua, _) = union[ui];
                 let out = &mut overlay[ui][(addr - ua) as usize..][..len as usize];
+                // Journaled word spans overlapping this run (sorted);
+                // bytes inside them skip the fold.
+                let mut skip: Vec<(u64, u64)> = Vec::new();
+                if !jspans.is_empty() {
+                    crate::delta::tracker::intersect_into(&jspans, addr, len, &mut skip);
+                }
+                let mut si = 0usize;
                 for i in 0..len as usize {
+                    let pos = addr + i as u64;
+                    while si < skip.len() && skip[si].0 + skip[si].1 <= pos {
+                        si += 1;
+                    }
+                    if si < skip.len() && pos >= skip[si].0 {
+                        continue;
+                    }
                     if run_bytes[i] != base[i] {
                         out[i] = run_bytes[i];
                     }
                 }
             }
         }
+
+        // Replay the journals against the overlay in deterministic order
+        // — shard id, then program order — exactly the combine functions
+        // the shards applied locally, so integer results are bit-identical
+        // to a single-device run under any shard count.
+        let mut replayed = 0u64;
+        for entries in &jentries {
+            for e in entries {
+                let (a, sz) = e.span();
+                let ui = union.partition_point(|&(ua, ul)| ua + ul <= a);
+                let covered = ui < union.len()
+                    && a >= union[ui].0
+                    && a + sz <= union[ui].0 + union[ui].1;
+                if !covered {
+                    // The journaling shard dirtied the word, so the union
+                    // covers it by construction; a miss means corruption.
+                    return Err(HetError::runtime(format!(
+                        "journal entry at 0x{a:x} falls outside the merged dirty runs"
+                    )));
+                }
+                let off = (a - union[ui].0) as usize;
+                let buf = &mut overlay[ui];
+                let mut cur = 0u64;
+                for k in 0..sz as usize {
+                    cur |= (buf[off + k] as u64) << (8 * k);
+                }
+                let new = journal::apply_entry(cur, e)?;
+                for k in 0..sz as usize {
+                    buf[off + k] = (new >> (8 * k)) as u8;
+                }
+                replayed += 1;
+            }
+        }
+        self.io.journal_ops = replayed;
 
         // Publish the union runs back to their home devices (exclusive
         // gate: ordered against any in-flight kernels there).
@@ -725,6 +912,14 @@ impl ShardedLaunch<'_> {
         for shard in &self.shards {
             let _ = self.ctx.destroy_stream(shard.stream);
         }
+        // Count the replay only on the join that commits (`joined` below
+        // makes this unreachable twice): a wait() retried after a
+        // publish error replays again, and counting per attempt would
+        // double-book `journal_stats().ops_replayed`.
+        self.ctx
+            .journal_counters
+            .ops_replayed
+            .fetch_add(self.io.journal_ops, Ordering::Relaxed);
         self.joined = true;
 
         Ok(ShardReport { merged, per_shard, rebalanced: self.rebalanced, io: self.io })

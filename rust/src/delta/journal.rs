@@ -1,0 +1,198 @@
+//! Op-granular atomic journaling — the delta-state engine's third
+//! granularity, below pages and bytes: *which read-modify-write updates*
+//! happened, not just which bytes changed.
+//!
+//! Sharded grids execute against per-device memory images, so a byte-level
+//! merge of shard deltas (last writer wins) silently loses concurrent
+//! read-modify-write traffic: two shards that each `atomicAdd` the same
+//! counter produce two images whose bytes *both* differ from the baseline,
+//! and whichever folds last clobbers the other. Commutative atomics
+//! (classified at the ISA layer by [`AtomOp::commutes`]) admit an exact
+//! fix: record every update as a typed **journal entry** while it applies
+//! to the shard's local image, and have the join replay all shards'
+//! entries against the launch baseline in a deterministic order — shard
+//! id, then program order (block linear id, then within-block commit
+//! order). For integer ops the replayed value is bit-identical to a
+//! single-device run under any interleaving; float `atomicAdd` replays
+//! deterministically for a *fixed* shard plan, matching its
+//! arrival-order-dependence on real hardware.
+//!
+//! Ordered ops (Exch/Cas) observe or replace the prior value and cannot
+//! be replayed order-free; executing one under a journaled shard fails
+//! closed with [`crate::error::HetError::OrderedAtomic`].
+//!
+//! One [`AtomicJournal`] exists per shard of a journaled sharded launch.
+//! Entries land in per-block slots, so the journal's order is a function
+//! of the program — not of dispatch worker count or claim order — which
+//! the determinism suite pins. A block that suspends at a checkpoint
+//! commits its partial batch; resuming appends the post-barrier batch to
+//! the same slot, preserving program order across pauses and rebalances.
+//! Rebalance drains the pending entries ([`AtomicJournal::take_all`]) and
+//! ships them through the snapshot blob (wire format v5) as the shard's
+//! **journal carry**, replayed ahead of the entries the shard journals on
+//! its new device.
+
+use crate::error::{HetError, Result};
+use crate::hetir::instr::AtomOp;
+use crate::hetir::types::Scalar;
+use crate::sim::alu;
+use crate::sim::mem::value_from_bits;
+use std::sync::Mutex;
+
+/// One journaled commutative global atomic.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AtomicEntry {
+    /// Guest global-memory address of the word (naturally aligned).
+    pub addr: u64,
+    /// Operand/word type (4- or 8-byte integer or f32).
+    pub ty: Scalar,
+    /// The commutative op ([`AtomOp::commutes`] holds for every entry).
+    pub op: AtomOp,
+    /// Operand bit pattern in type `ty`.
+    pub val: u64,
+}
+
+impl AtomicEntry {
+    /// Byte span of the addressed word: `(addr, size)`.
+    pub fn span(&self) -> (u64, u64) {
+        (self.addr, self.ty.size_bytes())
+    }
+}
+
+/// Per-shard journal of commutative global atomics (see module docs).
+///
+/// Interior-mutable and shared between the event-graph launch/resume
+/// nodes executing the shard and the coordinator that joins it; per-block
+/// slots keep concurrent dispatch workers from ever contending on one
+/// lock (each block's slot is touched by exactly one worker at a time).
+#[derive(Debug)]
+pub struct AtomicJournal {
+    /// Entry batches indexed by linear block id.
+    slots: Vec<Mutex<Vec<AtomicEntry>>>,
+}
+
+impl AtomicJournal {
+    /// Empty journal for a grid of `grid_size` blocks.
+    pub fn new(grid_size: u32) -> AtomicJournal {
+        AtomicJournal { slots: (0..grid_size).map(|_| Mutex::new(Vec::new())).collect() }
+    }
+
+    /// Append block `block`'s batch. Called once per `run_block`
+    /// invocation; a block that suspended and resumed commits twice, and
+    /// the second batch follows the first in program order.
+    pub fn commit(&self, block: u32, mut entries: Vec<AtomicEntry>) {
+        if entries.is_empty() {
+            return;
+        }
+        self.slots[block as usize].lock().unwrap().append(&mut entries);
+    }
+
+    /// Total journaled ops.
+    pub fn op_count(&self) -> usize {
+        self.slots.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    /// Every entry in deterministic program order: block linear id, then
+    /// within-block commit order.
+    pub fn entries_in_order(&self) -> Vec<AtomicEntry> {
+        let mut out = Vec::new();
+        for s in &self.slots {
+            out.extend(s.lock().unwrap().iter().copied());
+        }
+        out
+    }
+
+    /// Drain every entry (same order as
+    /// [`AtomicJournal::entries_in_order`]) — the rebalance path moves
+    /// the pending journal into the shard's host-side carry before the
+    /// shard resumes journaling on its new device.
+    pub fn take_all(&self) -> Vec<AtomicEntry> {
+        let mut out = Vec::new();
+        for s in &self.slots {
+            out.append(&mut s.lock().unwrap());
+        }
+        out
+    }
+}
+
+/// Sorted, coalesced byte spans of the words `entries` touch — the mask
+/// the join uses to exclude journaled words from the byte-level
+/// last-writer-wins fold (their final value is base + replay instead).
+pub fn word_spans(entries: &[AtomicEntry]) -> Vec<(u64, u64)> {
+    let mut spans: Vec<(u64, u64)> = entries.iter().map(|e| e.span()).collect();
+    spans.sort_unstable();
+    let mut out: Vec<(u64, u64)> = Vec::with_capacity(spans.len());
+    for (a, l) in spans {
+        match out.last_mut() {
+            Some((pa, pl)) if *pa + *pl >= a => {
+                let end = (*pa + *pl).max(a + l);
+                *pl = end - *pa;
+            }
+            _ => out.push((a, l)),
+        }
+    }
+    out
+}
+
+/// Replay one entry against the current bit pattern of its word,
+/// returning the new bits — the exact combine function the interpreters
+/// applied locally ([`alu::apply_atom`]), so base + replay reproduces
+/// in-place execution bit-for-bit for integer ops.
+pub fn apply_entry(cur: u64, e: &AtomicEntry) -> Result<u64> {
+    if !e.op.commutes() {
+        // Journals are built from commutative ops only; an ordered entry
+        // here means a corrupted wire blob — fail closed.
+        return Err(HetError::ordered_atomic(e.op.mnemonic(), e.addr));
+    }
+    let old = value_from_bits(e.ty, cur);
+    let v = value_from_bits(e.ty, e.val);
+    Ok(alu::apply_atom(e.op, e.ty, old, v, None)?.bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn entries_stitch_in_block_order_regardless_of_commit_order() {
+        let j = AtomicJournal::new(3);
+        let e = |addr, val| AtomicEntry { addr, ty: Scalar::U32, op: AtomOp::Add, val };
+        j.commit(2, vec![e(8, 30)]);
+        j.commit(0, vec![e(0, 10)]);
+        j.commit(1, vec![e(4, 20)]);
+        // Resumed block 0 appends a second batch after its first.
+        j.commit(0, vec![e(0, 11)]);
+        assert_eq!(j.op_count(), 4);
+        let vals: Vec<u64> = j.entries_in_order().iter().map(|e| e.val).collect();
+        assert_eq!(vals, vec![10, 11, 20, 30]);
+        let drained = j.take_all();
+        assert_eq!(drained.len(), 4);
+        assert_eq!(j.op_count(), 0, "take_all drains");
+    }
+
+    #[test]
+    fn word_spans_coalesce_touching_words() {
+        let e = |addr, ty| AtomicEntry { addr, ty, op: AtomOp::Add, val: 1 };
+        let spans = word_spans(&[
+            e(4, Scalar::U32),
+            e(0, Scalar::U32),
+            e(16, Scalar::U64),
+            e(4, Scalar::U32), // duplicate word
+        ]);
+        assert_eq!(spans, vec![(0, 8), (16, 8)]);
+        assert!(word_spans(&[]).is_empty());
+    }
+
+    #[test]
+    fn replay_matches_local_application() {
+        // u32 add chain: 5 +3 max7 -> bits track apply_atom exactly.
+        let mut cur = 5u64;
+        for (op, val) in [(AtomOp::Add, 3u64), (AtomOp::Max, 7), (AtomOp::And, 0xE)] {
+            cur = apply_entry(cur, &AtomicEntry { addr: 0, ty: Scalar::U32, op, val }).unwrap();
+        }
+        assert_eq!(cur, 8 & 0xE);
+        // Ordered entries fail closed (corrupted-blob guard).
+        let bad = AtomicEntry { addr: 16, ty: Scalar::U32, op: AtomOp::Exch, val: 1 };
+        assert!(apply_entry(0, &bad).unwrap_err().is_ordered_atomic());
+    }
+}

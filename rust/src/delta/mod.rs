@@ -28,7 +28,16 @@
 //! * `runtime::api` — `snapshot_incremental` and the `dirty_stats`
 //!   observability hook.
 
+//! * [`journal`] — op-granular **atomic journaling** for the cross-shard
+//!   atomics protocol: commutative global atomics executed by a
+//!   coordinator shard append typed entries that the join replays against
+//!   peer images in deterministic order, composing with the page-granular
+//!   dirty ledger (journaled words are excluded from the byte-level
+//!   merge) instead of being clobbered by it.
+
 pub mod capture;
+pub mod journal;
 pub mod tracker;
 
+pub use journal::{AtomicEntry, AtomicJournal};
 pub use tracker::{DirtyStats, DirtyTracker, PAGE_SIZE};

@@ -45,6 +45,21 @@ pub enum HetError {
         msg: String,
     },
 
+    /// An **ordered** atomic (EXCH/CAS) reached global memory while the
+    /// launch executed as a journaled coordinator shard. The cross-shard
+    /// atomics protocol replays *commutative* updates (Add/Min/Max/And/
+    /// Or/Xor) against peer images at join; Exch and Cas observe or
+    /// replace the prior value, so their result depends on a cross-shard
+    /// op order no shard can see — executing one locally would silently
+    /// diverge from single-device semantics. Fails closed instead: run
+    /// the launch unsharded, or opt into `AtomicsMode::Unsynchronized`.
+    OrderedAtomic {
+        /// Mnemonic of the offending op ("EXCH" / "CAS").
+        op: &'static str,
+        /// Guest global-memory address the op targeted.
+        addr: u64,
+    },
+
     /// Checkpoint/restore/migration failures.
     Migrate { msg: String },
 
@@ -92,6 +107,12 @@ impl fmt::Display for HetError {
             HetError::InvalidHandle { resource, msg } => {
                 write!(f, "invalid {resource} handle: {msg}")
             }
+            HetError::OrderedAtomic { op, addr } => write!(
+                f,
+                "ordered atomic {op} at 0x{addr:x} cannot execute as part of a journaled \
+                 shard: it does not commute across shards (run unsharded or with \
+                 AtomicsMode::Unsynchronized)"
+            ),
             HetError::Migrate { msg } => write!(f, "migration error: {msg}"),
             HetError::EpochMismatch { expected, got } => write!(
                 f,
@@ -141,6 +162,16 @@ impl HetError {
     /// epoch (incremental snapshots fail closed on it).
     pub fn is_epoch_mismatch(&self) -> bool {
         matches!(self, HetError::EpochMismatch { .. })
+    }
+    /// Convenience constructor for the fail-closed ordered-atomic rule of
+    /// the cross-shard journal protocol.
+    pub fn ordered_atomic(op: &'static str, addr: u64) -> Self {
+        HetError::OrderedAtomic { op, addr }
+    }
+    /// Whether this error reports an ordered atomic rejected under
+    /// journaled shard execution.
+    pub fn is_ordered_atomic(&self) -> bool {
+        matches!(self, HetError::OrderedAtomic { .. })
     }
     /// Convenience constructor for device faults.
     pub fn fault(device: impl Into<String>, msg: impl Into<String>) -> Self {

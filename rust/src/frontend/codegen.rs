@@ -536,7 +536,8 @@ impl Cg {
                 };
                 Ok((Operand::Reg(self.b.rng(state)), Ty::S(Scalar::U32)))
             }
-            "atomicAdd" | "atomicMin" | "atomicMax" | "atomicExch" | "atomicAnd" | "atomicOr" => {
+            "atomicAdd" | "atomicMin" | "atomicMax" | "atomicExch" | "atomicAnd" | "atomicOr"
+            | "atomicXor" => {
                 want(2)?;
                 let (space, elem, addr) = self.atomic_target(&args[0])?;
                 let v = self.eval_as(&args[1], elem)?;
@@ -546,6 +547,7 @@ impl Cg {
                     "atomicMax" => AtomOp::Max,
                     "atomicExch" => AtomOp::Exch,
                     "atomicAnd" => AtomOp::And,
+                    "atomicXor" => AtomOp::Xor,
                     _ => AtomOp::Or,
                 };
                 Ok((Operand::Reg(self.b.atom(op, space, elem, addr, v)), Ty::S(elem)))

@@ -171,6 +171,38 @@ pub enum AtomOp {
     Cas,
     And,
     Or,
+    Xor,
+}
+
+impl AtomOp {
+    /// Whether the op's combine function commutes: applying any multiset
+    /// of updates to a location yields the same final integer value in
+    /// every order (Add/Min/Max/And/Or/Xor). Exch and Cas *observe or
+    /// replace* the prior value, so their effect depends on where they
+    /// land in the update order — they are **ordered** ops. This is the
+    /// hardware-invariant classification the cross-shard atomics protocol
+    /// keys on: commutative ops journal and replay across shards; ordered
+    /// ops fail closed under sharded execution (see `delta::journal`).
+    /// Float `Add` commutes but is not associative, so its final *bits*
+    /// remain arrival-order-dependent — exactly as on real GPUs.
+    pub fn commutes(&self) -> bool {
+        !matches!(self, AtomOp::Exch | AtomOp::Cas)
+    }
+
+    /// Text-assembly mnemonic (shared by the printer, parser errors, and
+    /// the ordered-atomic fault message).
+    pub fn mnemonic(&self) -> &'static str {
+        match self {
+            AtomOp::Add => "ADD",
+            AtomOp::Min => "MIN",
+            AtomOp::Max => "MAX",
+            AtomOp::Exch => "EXCH",
+            AtomOp::Cas => "CAS",
+            AtomOp::And => "AND",
+            AtomOp::Or => "OR",
+            AtomOp::Xor => "XOR",
+        }
+    }
 }
 
 /// Warp/team vote flavors.

@@ -374,6 +374,7 @@ fn parse_inst(c: &mut Cursor, dst: Option<Reg>) -> Result<Inst> {
                 "CAS" => AtomOp::Cas,
                 "AND" => AtomOp::And,
                 "OR" => AtomOp::Or,
+                "XOR" => AtomOp::Xor,
                 other => return Err(c.err(format!("bad atomic `{other}`"))),
             };
             let space = match parts.get(2).copied().unwrap_or("") {
@@ -660,6 +661,13 @@ mod tests {
             Scalar::U32,
             Address::base(out),
             Operand::Imm(Value::u32(1)),
+        );
+        let _old2 = b.atom(
+            AtomOp::Xor,
+            AddrSpace::Global,
+            Scalar::U32,
+            Address::base(out).with_disp(4),
+            Operand::Imm(Value::u32(0xA5)),
         );
         b.st(AddrSpace::Global, Scalar::F32, Address::base(out).with_disp(8), acc.into());
         m.add_kernel(b.finish());

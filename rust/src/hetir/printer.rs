@@ -119,15 +119,7 @@ fn cmp_name(op: CmpOp) -> &'static str {
 }
 
 fn atom_name(op: AtomOp) -> &'static str {
-    match op {
-        AtomOp::Add => "ADD",
-        AtomOp::Min => "MIN",
-        AtomOp::Max => "MAX",
-        AtomOp::Exch => "EXCH",
-        AtomOp::Cas => "CAS",
-        AtomOp::And => "AND",
-        AtomOp::Or => "OR",
-    }
+    op.mnemonic()
 }
 
 fn shfl_name(k: ShflKind) -> &'static str {

@@ -24,8 +24,35 @@
 pub mod simt_isa;
 pub mod tensix_isa;
 
-use crate::hetir::instr::Reg as VReg;
+use crate::hetir::instr::{AtomOp, Reg as VReg};
 use crate::hetir::types::Type;
+
+/// Commutativity classification of a program's **global-memory** atomics,
+/// threaded from hetIR ([`AtomOp::commutes`]) through lowering into both
+/// backend ISAs. The cross-shard atomics protocol keys on it: a
+/// `Commutative` program can journal-and-replay across shards, an
+/// `Ordered` one carries Exch/Cas ops that fail closed if they execute
+/// under a journaled shard, and a `None` program needs no journal at all.
+/// Block-private spaces (SIMT shared memory, Tensix scratchpads) never
+/// cross shards and are excluded.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum AtomicsClass {
+    /// No global-memory atomics.
+    #[default]
+    None,
+    /// Only commutative global atomics (Add/Min/Max/And/Or/Xor).
+    Commutative,
+    /// At least one ordered global atomic (Exch/Cas).
+    Ordered,
+}
+
+impl AtomicsClass {
+    /// Fold one more global atomic op into the classification.
+    pub fn with(self, op: AtomOp) -> AtomicsClass {
+        let c = if op.commutes() { AtomicsClass::Commutative } else { AtomicsClass::Ordered };
+        self.max(c)
+    }
+}
 
 /// Where a hetIR virtual register lives on a particular device — the
 /// many-to-one low-level↔IR state mapping the paper's migration design

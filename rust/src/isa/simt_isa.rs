@@ -152,6 +152,20 @@ impl SimtProgram {
         self.blocks.iter().flatten().filter(|s| matches!(s, SStmt::I(_))).count()
     }
 
+    /// Commutativity classification of the program's global-memory
+    /// atomics (see [`crate::isa::AtomicsClass`]) — the hetIR `AtomOp`
+    /// classification surviving lowering into this ISA. Shared-memory
+    /// atomics are block-private and excluded.
+    pub fn atomics_class(&self) -> crate::isa::AtomicsClass {
+        let mut class = crate::isa::AtomicsClass::None;
+        for s in self.blocks.iter().flatten() {
+            if let SStmt::I(SInst::Atom { op, space: AddrSpace::Global, .. }) = s {
+                class = class.with(*op);
+            }
+        }
+        class
+    }
+
     /// Find the frame path to the statement *after* barrier `id`:
     /// a list of `(block, next_idx)` pairs from the entry block down to the
     /// position just past the `BarSync`. Used by the simulator to resume a

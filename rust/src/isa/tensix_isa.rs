@@ -149,6 +149,11 @@ pub enum TInst {
     /// Per-lane atomic, serialized lane-by-lane. `local` targets the
     /// core's scratchpad (single-core-mode shared memory); otherwise a
     /// global-DRAM DMA RMW (the paper's "spin-lock in global memory").
+    /// `shared` records the hetIR origin space: a multi-core-mode
+    /// shared-memory atomic lands in the global shared-heap region but
+    /// keeps **block-private** semantics — the cross-shard journal
+    /// protocol must treat it like a scratchpad atomic (never journal,
+    /// never fail closed), not like true global RMW traffic.
     VAtom {
         op: AtomOp,
         ty: Scalar,
@@ -160,6 +165,7 @@ pub enum TInst {
         val: Vo,
         val2: Option<Vo>,
         local: bool,
+        shared: bool,
     },
     /// Core-local team ops (a 32-thread team always maps onto one core's
     /// 32 lanes, so vote/ballot/shuffle never cross the mesh).
@@ -255,6 +261,27 @@ pub struct TensixProgram {
 impl TensixProgram {
     pub fn inst_count(&self) -> usize {
         self.blocks.iter().flatten().filter(|s| matches!(s, TStmt::I(_))).count()
+    }
+
+    /// Commutativity classification of the program's global-memory
+    /// atomics (see [`crate::isa::AtomicsClass`]) — the hetIR `AtomOp`
+    /// classification surviving lowering into this ISA. Block-private
+    /// atomics are excluded: `local` vector atomics hit the core's
+    /// scratchpad, and `shared` ones are hetIR shared-memory atomics
+    /// that merely *reside* in the global shared-heap region in
+    /// multi-core mode.
+    pub fn atomics_class(&self) -> crate::isa::AtomicsClass {
+        let mut class = crate::isa::AtomicsClass::None;
+        for s in self.blocks.iter().flatten() {
+            match s {
+                TStmt::I(TInst::SAtom { op, .. })
+                | TStmt::I(TInst::VAtom { op, local: false, shared: false, .. }) => {
+                    class = class.with(*op);
+                }
+                _ => {}
+            }
+        }
+        class
     }
 
     /// Structural path to just after mesh barrier `id` (resume support,

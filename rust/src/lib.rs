@@ -13,11 +13,13 @@
 //! * [`isa`] — the simulated device instruction sets backends emit.
 //! * [`backends`] — JIT translation modules hetIR → device ISA.
 //! * [`sim`] — the device simulators (hardware substitution, DESIGN.md §2).
-//! * [`delta`] — the delta-state engine (DESIGN.md §8): page-granular
+//! * [`delta`] — the delta-state engine (DESIGN.md §8–9): page-granular
 //!   dirty tracking (one atomic bit per 4 KiB page, multi-watcher epoch
-//!   ledger) fed by `sim::mem` write paths, plus streaming chunked
-//!   snapshot capture through the event graph — the "what changed"
-//!   primitive behind incremental snapshots and O(dirty) sharded merges.
+//!   ledger) fed by `sim::mem` write paths, streaming chunked snapshot
+//!   capture through the event graph, and the op-granular **atomics
+//!   journal** of the cross-shard atomics protocol — the "what changed"
+//!   primitives behind incremental snapshots, O(dirty) sharded merges,
+//!   and exact cross-shard read-modify-write composition.
 //! * [`runtime`] — the driver API v2 and its machinery:
 //!   * [`runtime::api`] — the public surface: generational typed handles
 //!     (module / buffer / stream / event) with full create→destroy
@@ -33,10 +35,12 @@
 //! * [`coordinator`] — multi-device grid sharding + shard rebalance (the
 //!   paper's L3 coordination layer): dirty-range baselines/broadcasts/
 //!   merges (O(dirty pages), no working-set hint required), peer-copy
-//!   broadcasts, and joins that overlap merges with trailing shards.
+//!   broadcasts, joins that overlap merges with trailing shards and
+//!   replay shard atomics journals in deterministic order (cross-shard
+//!   atomics compose with single-device semantics).
 //! * [`migrate`] — device-neutral snapshots (named by stream handle),
 //!   checkpoint/restore/migrate, incremental delta snapshots against a
-//!   base epoch, and the versioned wire blob (v4; v2/v3 read-compatible).
+//!   base epoch, and the versioned wire blob (v5; v2–v4 read-compatible).
 //! * [`xla_native`] — PJRT/XLA "vendor native" path + numerics oracle.
 
 pub mod backends;

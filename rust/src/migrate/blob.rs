@@ -10,6 +10,8 @@
 //! | u32 src_device | u64 stream handle           (v3: generational handle)
 //! | u64 epoch | u8 kind | [delta: u64 base_epoch]  (v4: delta snapshots)
 //! | u8 has_shard | [shard: lo u32, hi u32]      (v2: coordinator shards)
+//! | u32 journal count                           (v5: atomics journal)
+//! |   | per entry: addr u64, type tag u8, op tag u8, val u64
 //! | u8 has_kernel
 //! |   [kernel: module handle u64 (v3), name, dims 6×u32, args, tensix hint]
 //! |   [blocks: u32 count, per block: tag u8
@@ -18,17 +20,20 @@
 //! | u32 alloc count | per alloc: addr u64, len u64, bytes
 //! ```
 //!
-//! Writers always emit the current version (4). The reader **stays
-//! compatible with v2 and v3 blobs**: v2 predates the stream handle
+//! Writers always emit the current version (5). The reader **stays
+//! compatible with v2–v4 blobs**: v2 predates the stream handle
 //! (restores must rebind via `restore_into`) and carries a narrow u32
-//! module reference; both predate the epoch header and parse as full
+//! module reference; v2/v3 predate the epoch header and parse as full
 //! snapshots with `epoch = 0`. v4 `kind` distinguishes full captures
 //! (`0`) from incremental deltas (`1`, allocation entries are dirty
-//! page-run spans against `base_epoch`).
+//! page-run spans against `base_epoch`). v5 adds the cross-shard
+//! atomics-journal section (pending commutative-op entries a rebalanced
+//! shard carries); v2–v4 blobs parse with an empty journal.
 
 use crate::coordinator::shard::ShardRange;
+use crate::delta::journal::AtomicEntry;
 use crate::error::{HetError, Result};
-use crate::hetir::instr::Reg as VReg;
+use crate::hetir::instr::{AtomOp, Reg as VReg};
 use crate::hetir::types::{AddrSpace, Scalar, Type, Value};
 use crate::isa::tensix_isa::TensixMode;
 use crate::migrate::state::Snapshot;
@@ -40,11 +45,17 @@ use crate::sim::simt::LaunchDims;
 use crate::sim::snapshot::{BlockCapture, BlockState, ThreadCapture};
 
 const MAGIC: &[u8; 4] = b"HGPU";
+/// Wire size of one v5 atomics-journal entry: addr u64 + type tag u8 +
+/// op tag u8 + val u64. Lives next to the (de)serializer that owns the
+/// layout; the coordinator's `ShardIo::journal_bytes` accounting reuses
+/// it so the two can never drift.
+pub const JOURNAL_ENTRY_WIRE_BYTES: u64 = 18;
 /// v2 added the optional shard range (coordinator shard-scoped
 /// snapshots); v3 carries the generational stream handle and widens the
 /// module reference to a generational handle (API v2); v4 adds the
-/// dirty-epoch header and incremental (delta) snapshots.
-const VERSION: u32 = 4;
+/// dirty-epoch header and incremental (delta) snapshots; v5 adds the
+/// cross-shard atomics-journal section.
+const VERSION: u32 = 5;
 /// Oldest version the reader still accepts.
 const MIN_VERSION: u32 = 2;
 
@@ -203,6 +214,33 @@ fn read_arg(r: &mut R) -> Result<Arg> {
     })
 }
 
+fn atom_tag(op: AtomOp) -> u8 {
+    match op {
+        AtomOp::Add => 0,
+        AtomOp::Min => 1,
+        AtomOp::Max => 2,
+        AtomOp::Exch => 3,
+        AtomOp::Cas => 4,
+        AtomOp::And => 5,
+        AtomOp::Or => 6,
+        AtomOp::Xor => 7,
+    }
+}
+
+fn tag_atom(t: u8, r: &R) -> Result<AtomOp> {
+    Ok(match t {
+        0 => AtomOp::Add,
+        1 => AtomOp::Min,
+        2 => AtomOp::Max,
+        3 => AtomOp::Exch,
+        4 => AtomOp::Cas,
+        5 => AtomOp::And,
+        6 => AtomOp::Or,
+        7 => AtomOp::Xor,
+        _ => return Err(r.err("bad atomic op tag")),
+    })
+}
+
 fn mode_tag(m: Option<TensixMode>) -> u8 {
     match m {
         None => 0,
@@ -244,6 +282,14 @@ pub fn serialize(snap: &Snapshot) -> Vec<u8> {
             w.u32(r.lo);
             w.u32(r.hi);
         }
+    }
+    // v5: pending atomics-journal entries (program order).
+    w.u32(snap.journal.len() as u32);
+    for e in &snap.journal {
+        w.u64(e.addr);
+        w.u8(type_tag(Type::Scalar(e.ty)));
+        w.u8(atom_tag(e.op));
+        w.u64(e.val);
     }
     match &snap.paused {
         None => w.u8(0),
@@ -328,6 +374,27 @@ pub fn deserialize(buf: &[u8]) -> Result<Snapshot> {
         }
         _ => return Err(r.err("bad shard tag")),
     };
+    let journal = if ver >= 5 {
+        let n = r.count(JOURNAL_ENTRY_WIRE_BYTES as usize)?;
+        let mut entries = Vec::with_capacity(n);
+        for _ in 0..n {
+            let addr = r.u64()?;
+            let tt = r.u8()?;
+            let ty = match tag_type(tt, &r)? {
+                Type::Scalar(s) => s,
+                _ => return Err(r.err("journal entry type must be scalar")),
+            };
+            let op = {
+                let ot = r.u8()?;
+                tag_atom(ot, &r)?
+            };
+            let val = r.u64()?;
+            entries.push(AtomicEntry { addr, ty, op, val });
+        }
+        entries
+    } else {
+        Vec::new()
+    };
     let paused = if r.u8()? == 1 {
         // v2 carried a narrow u32 module index; it maps onto a
         // generation-0 handle (cross-context restores rebind via
@@ -396,6 +463,10 @@ pub fn deserialize(buf: &[u8]) -> Result<Snapshot> {
                 tensix_mode_hint,
             },
             blocks,
+            // The live journal handle never crosses the wire; pending
+            // entries travel in `Snapshot::journal` and the restoring
+            // side re-attaches a journal (coordinator rebalance).
+            journal: None,
         })
     } else {
         None
@@ -410,7 +481,7 @@ pub fn deserialize(buf: &[u8]) -> Result<Snapshot> {
     if r.pos != buf.len() {
         return Err(r.err("trailing bytes"));
     }
-    Ok(Snapshot { stream, src_device, paused, allocations, shard, epoch, base_epoch })
+    Ok(Snapshot { stream, src_device, paused, allocations, shard, epoch, base_epoch, journal })
 }
 
 #[cfg(test)]
@@ -422,6 +493,7 @@ mod tests {
             stream: StreamHandle::new(2, 9),
             src_device: 1,
             paused: Some(PausedKernel {
+                journal: None,
                 spec: LaunchSpec {
                     module: ModuleHandle::from_raw(3),
                     kernel: "iter_mm".into(),
@@ -457,6 +529,11 @@ mod tests {
             shard: Some(ShardRange { lo: 1, hi: 3 }),
             epoch: 42,
             base_epoch: None,
+            journal: vec![
+                AtomicEntry { addr: 0x1008, ty: Scalar::U32, op: AtomOp::Add, val: 7 },
+                AtomicEntry { addr: 0x1010, ty: Scalar::U64, op: AtomOp::Max, val: u64::MAX },
+                AtomicEntry { addr: 0x1018, ty: Scalar::F32, op: AtomOp::Add, val: 0x3F80_0000 },
+            ],
         }
     }
 
@@ -471,6 +548,7 @@ mod tests {
         assert_eq!(s.allocations, s2.allocations);
         assert_eq!(s2.epoch, 42, "epoch must roundtrip");
         assert_eq!(s2.base_epoch, None);
+        assert_eq!(s.journal, s2.journal, "atomics journal must roundtrip (v5)");
         let (p, p2) = (s.paused.unwrap(), s2.paused.unwrap());
         assert_eq!(p.spec.module, p2.spec.module, "module handle must roundtrip");
         assert_eq!(p.spec.kernel, p2.spec.kernel);
@@ -490,11 +568,13 @@ mod tests {
             shard: None,
             epoch: 0,
             base_epoch: None,
+            journal: Vec::new(),
         };
         let blob = serialize(&s);
         let s2 = deserialize(&blob).unwrap();
         assert!(s2.paused.is_none());
         assert!(s2.shard.is_none());
+        assert!(s2.journal.is_empty());
         assert_eq!(s2.allocations, s.allocations);
     }
 

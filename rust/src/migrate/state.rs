@@ -15,6 +15,7 @@
 //! corrupting memory.
 
 use crate::coordinator::shard::ShardRange;
+use crate::delta::journal::AtomicEntry;
 use crate::error::{HetError, Result};
 use crate::runtime::stream::{PausedKernel, StreamHandle};
 use crate::sim::snapshot::BlockState;
@@ -46,6 +47,12 @@ pub struct Snapshot {
     /// `Some(e)` marks this snapshot as a **delta** against the full
     /// snapshot whose `epoch` is `e`; `None` marks it full.
     pub base_epoch: Option<u64>,
+    /// Pending cross-shard atomics-journal entries of a journaled
+    /// coordinator shard, in program order (wire format v5; empty for
+    /// plain snapshots and legacy blobs). A rebalance ships the shard's
+    /// un-replayed commutative atomics here so the destination's join
+    /// can still replay them against peer images.
+    pub journal: Vec<AtomicEntry>,
 }
 
 impl Snapshot {
@@ -139,6 +146,7 @@ impl Snapshot {
             shard: delta.shard,
             epoch: delta.epoch,
             base_epoch: None,
+            journal: delta.journal.clone(),
         })
     }
 
@@ -249,6 +257,7 @@ mod tests {
             shard: None,
             epoch,
             base_epoch: base,
+            journal: Vec::new(),
         }
     }
 

@@ -38,6 +38,7 @@
 use crate::coordinator::shard::ShardRange;
 use crate::coordinator::{CoordCache, Coordinator, ShardedLaunch};
 use crate::delta::capture::capture_spans;
+use crate::delta::journal::AtomicJournal;
 use crate::delta::tracker::DirtyStats;
 use crate::error::{HetError, Result};
 use crate::frontend;
@@ -54,12 +55,13 @@ use crate::runtime::memory::{
 use crate::runtime::stream::StreamStats;
 use crate::runtime::{ModuleTable, RuntimeInner};
 use crate::sim::simt::LaunchDims;
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
 // Handle types live next to their backing tables; re-exported here so the
 // public API surface reads from one place (`api::{HetGpu, ModuleHandle,
 // StreamHandle, ...}`).
+pub use crate::runtime::launch::AtomicsMode;
 pub use crate::runtime::stream::StreamHandle;
 pub use crate::runtime::ModuleHandle;
 use std::thread::JoinHandle;
@@ -79,6 +81,32 @@ pub struct HetGpu {
     /// so repeated `launch_sharded` calls baseline/broadcast/merge
     /// O(dirty pages) instead of O(total memory).
     pub(crate) coord: Mutex<CoordCache>,
+    /// Cross-shard atomics-journal counters ([`HetGpu::journal_stats`]).
+    pub(crate) journal_counters: JournalCounters,
+}
+
+/// Context-lifetime counters of the cross-shard atomics protocol,
+/// maintained by the coordinator (creation at `launch_sharded`, replay at
+/// join, shipping at rebalance).
+#[derive(Default)]
+pub(crate) struct JournalCounters {
+    pub(crate) journaled_launches: AtomicU64,
+    pub(crate) ops_replayed: AtomicU64,
+    pub(crate) entries_shipped: AtomicU64,
+}
+
+/// Snapshot of the context's cross-shard atomics-journal counters — the
+/// `graph_stats`-style observability hook of the atomics protocol
+/// ([`HetGpu::journal_stats`]). Per-launch byte/op accounting lives in
+/// `ShardReport::io` (`journal_ops` / `journal_bytes`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct JournalStats {
+    /// Sharded launches that ran under the journal protocol.
+    pub journaled_launches: u64,
+    /// Journal entries replayed against peer images at joins.
+    pub ops_replayed: u64,
+    /// Journal entries shipped through rebalance delta blobs.
+    pub entries_shipped: u64,
 }
 
 impl HetGpu {
@@ -118,7 +146,13 @@ impl HetGpu {
         // Enough executors that every device can be mid-launch while a few
         // extra streams overlap copies; executors block while a node runs.
         let executors = EventGraph::spawn_executors(&graph, (kinds.len() * 2).clamp(2, 8));
-        Ok(HetGpu { inner, graph, executors, coord: Mutex::new(CoordCache::default()) })
+        Ok(HetGpu {
+            inner,
+            graph,
+            executors,
+            coord: Mutex::new(CoordCache::default()),
+            journal_counters: JournalCounters::default(),
+        })
     }
 
     /// Create a context with all four paper devices.
@@ -342,23 +376,27 @@ impl HetGpu {
             args: Vec::new(),
             tensix_mode: None,
             working_set: None,
+            atomics: AtomicsMode::default(),
         }
     }
 
     /// Record a fully-built launch spec on a stream (crate-internal; the
     /// coordinator also enters here for shard launches, with the block
-    /// `range` it owns and the broadcast events it must wait for).
+    /// `range` it owns, the broadcast events it must wait for, and the
+    /// shard's atomics `journal` when the launch runs the cross-shard
+    /// journal protocol).
     pub(crate) fn record_launch(
         &self,
         stream: StreamHandle,
         spec: LaunchSpec,
         shard: Option<ShardRange>,
         deps: &[EventId],
+        journal: Option<Arc<AtomicJournal>>,
     ) -> Result<EventId> {
         // Fail stale module handles at record time (the executor
         // re-checks at execution, when the table may have changed).
         self.inner.modules.read().unwrap().get(spec.module)?;
-        self.graph.enqueue(stream, NodeKind::Launch { spec, shard }, deps)
+        self.graph.enqueue(stream, NodeKind::Launch { spec, shard, journal }, deps)
     }
 
     // ---- events ----
@@ -395,6 +433,18 @@ impl HetGpu {
     /// liveness, not total history.
     pub fn graph_stats(&self) -> GraphStats {
         self.graph.graph_stats()
+    }
+
+    /// Context-lifetime counters of the cross-shard atomics protocol:
+    /// how many sharded launches ran journaled, journal ops replayed at
+    /// joins, entries shipped through rebalance blobs. Per-launch
+    /// accounting is in `ShardReport::io`.
+    pub fn journal_stats(&self) -> JournalStats {
+        JournalStats {
+            journaled_launches: self.journal_counters.journaled_launches.load(Ordering::Relaxed),
+            ops_replayed: self.journal_counters.ops_replayed.load(Ordering::Relaxed),
+            entries_shipped: self.journal_counters.entries_shipped.load(Ordering::Relaxed),
+        }
     }
 
     // ---- async copies (event-graph nodes) ----
@@ -499,6 +549,7 @@ impl HetGpu {
             shard: None,
             epoch,
             base_epoch: None,
+            journal: Vec::new(),
         })
     }
 
@@ -561,6 +612,7 @@ impl HetGpu {
             shard: None,
             epoch,
             base_epoch,
+            journal: Vec::new(),
         })
     }
 
@@ -706,6 +758,7 @@ pub struct LaunchBuilder<'a> {
     args: Vec<Arg>,
     tensix_mode: Option<TensixMode>,
     working_set: Option<Vec<GpuPtr>>,
+    atomics: AtomicsMode,
 }
 
 impl<'a> LaunchBuilder<'a> {
@@ -747,7 +800,18 @@ impl<'a> LaunchBuilder<'a> {
         self
     }
 
-    fn build_spec(self) -> Result<(&'a HetGpu, LaunchSpec, Option<Vec<GpuPtr>>)> {
+    /// How a **sharded** launch composes global atomics across shards
+    /// (see [`AtomicsMode`]): `Auto` (default) journals commutative
+    /// atomics whenever the grid spans devices and the kernel performs
+    /// global atomics, `Journal` forces the protocol, `Unsynchronized`
+    /// restores the pre-protocol last-writer-wins merge. Single-stream
+    /// launches ignore it.
+    pub fn atomics_mode(mut self, mode: AtomicsMode) -> Self {
+        self.atomics = mode;
+        self
+    }
+
+    fn build_spec(self) -> Result<(&'a HetGpu, LaunchSpec, Option<Vec<GpuPtr>>, AtomicsMode)> {
         let dims = self
             .dims
             .ok_or_else(|| HetError::runtime("launch dims not set (LaunchBuilder::dims)"))?;
@@ -758,22 +822,23 @@ impl<'a> LaunchBuilder<'a> {
             args: self.args,
             tensix_mode_hint: self.tensix_mode,
         };
-        Ok((self.ctx, spec, self.working_set))
+        Ok((self.ctx, spec, self.working_set, self.atomics))
     }
 
     /// Record the launch on `stream`; returns the launch's event
     /// (queryable via [`HetGpu::event_query`], waitable from other
     /// streams via [`HetGpu::wait_event`]).
     pub fn record(self, stream: StreamHandle) -> Result<EventId> {
-        let (ctx, spec, _ws) = self.build_spec()?;
-        ctx.record_launch(stream, spec, None, &[])
+        let (ctx, spec, _ws, _atomics) = self.build_spec()?;
+        ctx.record_launch(stream, spec, None, &[], None)
     }
 
     /// Split the launch's grid over `devices` through the coordinator
     /// (shards start executing immediately); join with
-    /// [`ShardedLaunch::wait`]. Consumes the working-set hint.
+    /// [`ShardedLaunch::wait`]. Consumes the working-set hint and the
+    /// atomics mode.
     pub fn sharded(self, devices: &[usize]) -> Result<ShardedLaunch<'a>> {
-        let (ctx, spec, ws) = self.build_spec()?;
-        Coordinator::new(ctx).launch_sharded(spec, ws.as_deref(), devices)
+        let (ctx, spec, ws, atomics) = self.build_spec()?;
+        Coordinator::new(ctx).launch_sharded(spec, ws.as_deref(), devices, atomics)
     }
 }

@@ -49,8 +49,10 @@
 //! migration resume uses, so a shard can itself pause and be rebalanced.
 
 use crate::coordinator::shard::ShardRange;
+use crate::delta::journal::AtomicJournal;
 use crate::error::{HetError, Result};
 use crate::runtime::handle::{impl_handle_raw, SlotTable};
+use crate::runtime::jit::JitMemo;
 use crate::runtime::launch::LaunchSpec;
 use crate::runtime::memory::{GpuPtr, PinnedBuffer};
 use crate::runtime::stream::{PausedKernel, StreamHandle, StreamStats};
@@ -110,8 +112,11 @@ pub struct GraphStats {
 
 /// What a recorded command does when an executor picks it.
 pub(crate) enum NodeKind {
-    /// Kernel launch; `shard` restricts execution to a block range.
-    Launch { spec: LaunchSpec, shard: Option<ShardRange> },
+    /// Kernel launch; `shard` restricts execution to a block range, and
+    /// `journal` engages the cross-shard atomics protocol (commutative
+    /// global atomics append typed entries the coordinator's join
+    /// replays; ordered ops fail closed).
+    Launch { spec: LaunchSpec, shard: Option<ShardRange>, journal: Option<Arc<AtomicJournal>> },
     /// Re-enter a paused kernel from its captured per-block state.
     Resume { paused: Box<PausedKernel> },
     /// Asynchronous host→device copy into unified memory (writes the
@@ -151,6 +156,11 @@ struct StreamState {
     sticky: Option<String>,
     paused: Option<PausedKernel>,
     stats: StreamStats,
+    /// The stream's last `(module, kernel)` JIT resolution (launch
+    /// batching: same-kernel repeats skip the shared cache). Shared with
+    /// the executor via `Arc` so the graph lock is never held across a
+    /// launch.
+    jit_memo: Arc<Mutex<Option<JitMemo>>>,
 }
 
 /// One tracked event: its status plus the references that keep the entry
@@ -259,6 +269,7 @@ impl EventGraph {
             sticky: None,
             paused: None,
             stats: StreamStats::default(),
+            jit_memo: Arc::new(Mutex::new(None)),
         });
         StreamHandle::new(slot, gen)
     }
@@ -588,7 +599,8 @@ enum Exec {
 /// returned flag is true when a dependency *failed* — the caller must
 /// fail the node without executing it (a cross-stream edge from a failed
 /// producer must poison the consumer, not silently satisfy it).
-fn take_ready(g: &mut GraphInner) -> Option<(u32, usize, Node, bool)> {
+#[allow(clippy::type_complexity)]
+fn take_ready(g: &mut GraphInner) -> Option<(u32, usize, Node, bool, Arc<Mutex<Option<JitMemo>>>)> {
     for si in 0..g.streams.slot_count() as u32 {
         let dep_failed = {
             let Some(st) = g.streams.entry_at(si) else { continue };
@@ -620,17 +632,18 @@ fn take_ready(g: &mut GraphInner) -> Option<(u32, usize, Node, bool)> {
         let device = st.device;
         let node = st.queue.pop_front().unwrap();
         st.running = true;
+        let memo = Arc::clone(&st.jit_memo);
         if let Some(e) = g.events.get_mut(node.id.slot, node.id.gen) {
             e.status = EventStatus::Running;
         }
-        return Some((si, device, node, dep_failed));
+        return Some((si, device, node, dep_failed, memo));
     }
     None
 }
 
 fn executor_loop(g: &EventGraph) {
     loop {
-        let (si, device, node, dep_failed) = {
+        let (si, device, node, dep_failed, memo) = {
             let mut inner = g.inner.lock().unwrap();
             loop {
                 if inner.shutdown {
@@ -646,7 +659,7 @@ fn executor_loop(g: &EventGraph) {
         let result = if dep_failed {
             Err(HetError::runtime("awaited event failed"))
         } else {
-            execute_node(&g.rt, device, &node.kind)
+            execute_node(&g.rt, device, &node.kind, &memo)
         };
 
         {
@@ -735,9 +748,14 @@ pub(crate) fn copy_end(addr: u64, len: u64, what: &str) -> Result<u64> {
         .ok_or_else(|| HetError::runtime(format!("{what} copy out of bounds (address overflow)")))
 }
 
-fn execute_node(rt: &RuntimeInner, device: usize, kind: &NodeKind) -> Result<Exec> {
+fn execute_node(
+    rt: &RuntimeInner,
+    device: usize,
+    kind: &NodeKind,
+    memo: &Mutex<Option<JitMemo>>,
+) -> Result<Exec> {
     match kind {
-        NodeKind::Launch { spec, shard } => {
+        NodeKind::Launch { spec, shard, journal } => {
             let dirs = match shard {
                 Some(r) => {
                     let (grid_size, _) = spec.dims.validate()?;
@@ -751,11 +769,14 @@ fn execute_node(rt: &RuntimeInner, device: usize, kind: &NodeKind) -> Result<Exe
                 }
                 None => None,
             };
-            run_timed(rt, device, spec, dirs.as_deref())
+            run_timed(rt, device, spec, dirs.as_deref(), journal.as_ref(), memo)
         }
         NodeKind::Resume { paused } => {
             let dirs = paused.resume_directives();
-            run_timed(rt, device, &paused.spec, Some(&dirs))
+            // A resumed journaled shard keeps journaling into the same
+            // journal (carried inside the paused kernel), so entries of
+            // re-entered blocks append behind their pre-pause batches.
+            run_timed(rt, device, &paused.spec, Some(&dirs), paused.journal.as_ref(), memo)
         }
         NodeKind::CopyH2D { dst, data } => {
             let (base, size, dev_id) = rt.memory.lookup(*dst)?;
@@ -810,9 +831,11 @@ fn run_timed(
     device: usize,
     spec: &LaunchSpec,
     resume: Option<&[BlockResume]>,
+    journal: Option<&Arc<AtomicJournal>>,
+    memo: &Mutex<Option<JitMemo>>,
 ) -> Result<Exec> {
     let t0 = Instant::now();
-    let outcome = rt.run_launch(device, spec, resume)?;
+    let outcome = rt.run_launch(device, spec, resume, journal.map(|j| j.as_ref()), Some(memo))?;
     let wall_us = t0.elapsed().as_secs_f64() * 1e6;
     let workers = rt.device(device).map(|d| d.engine.workers()).unwrap_or(1);
     let cost = *outcome.cost();
@@ -821,9 +844,14 @@ fn run_timed(
     // the checkpoint latency path).
     let (completed, paused) = match outcome {
         LaunchOutcome::Completed(_) => (true, None),
-        LaunchOutcome::Paused { grid, .. } => {
-            (false, Some(PausedKernel { spec: spec.clone(), blocks: grid.blocks }))
-        }
+        LaunchOutcome::Paused { grid, .. } => (
+            false,
+            Some(PausedKernel {
+                spec: spec.clone(),
+                blocks: grid.blocks,
+                journal: journal.cloned(),
+            }),
+        ),
     };
     Ok(Exec::Launch { cost, wall_us, workers, completed, paused })
 }

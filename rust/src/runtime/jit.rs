@@ -28,6 +28,54 @@ pub struct JitKey {
     pub migratable: bool,
 }
 
+/// One stream's memo of its most recent `(module, kernel)` JIT
+/// resolution — the first rung of launch batching. Back-to-back launches
+/// of the same kernel on one stream are the dominant pattern for
+/// sub-millisecond kernels, where the E4 cost table shows the *lookup*
+/// (shared-cache mutex + key hash, including a `String` clone per
+/// launch) dominating; the memo turns the repeat case into four integer/
+/// enum compares and one string compare, with no shared-lock traffic.
+///
+/// Module identity is the `ModuleTable` **uid**, which is unique per
+/// load and never reused — a memo held across `unload_module` can never
+/// alias a reloaded module; it simply stops matching.
+pub struct JitMemo {
+    module_uid: u64,
+    kernel: String,
+    kind: DeviceKind,
+    tensix_mode: Option<TensixMode>,
+    prog: Arc<DeviceProgram>,
+}
+
+impl JitMemo {
+    pub fn new(
+        module_uid: u64,
+        kernel: String,
+        kind: DeviceKind,
+        tensix_mode: Option<TensixMode>,
+        prog: Arc<DeviceProgram>,
+    ) -> JitMemo {
+        JitMemo { module_uid, kernel, kind, tensix_mode, prog }
+    }
+
+    /// The memoized program when it matches this resolution request
+    /// (migratable builds only — the launch path always translates with
+    /// migration support).
+    pub fn lookup(
+        &self,
+        module_uid: u64,
+        kernel: &str,
+        kind: DeviceKind,
+        tensix_mode: Option<TensixMode>,
+    ) -> Option<Arc<DeviceProgram>> {
+        (self.module_uid == module_uid
+            && self.kind == kind
+            && self.tensix_mode == tensix_mode
+            && self.kernel == kernel)
+            .then(|| self.prog.clone())
+    }
+}
+
 /// One recorded translation event (for the E4 table).
 #[derive(Debug, Clone)]
 pub struct JitEvent {

@@ -9,6 +9,7 @@ use crate::hetir::module::Kernel;
 use crate::hetir::passes::uniformity;
 use crate::hetir::types::{AddrSpace, Type, Value};
 use crate::isa::tensix_isa::TensixMode;
+use crate::isa::AtomicsClass;
 use crate::runtime::memory::{Buffer, GpuPtr, Pod};
 use crate::runtime::ModuleHandle;
 use crate::sim::simt::LaunchDims;
@@ -90,6 +91,34 @@ impl From<bool> for Arg {
     }
 }
 
+/// How a **sharded** launch composes global-memory atomics across shards
+/// (`LaunchBuilder::atomics_mode`; single-stream launches ignore it).
+///
+/// Sharded grids execute against per-device memory images, so in-place
+/// read-modify-write between shards does not compose by itself. Under the
+/// journal protocol every commutative global atomic applies to the
+/// shard's image *and* appends a typed entry to the shard's
+/// [`crate::delta::journal::AtomicJournal`]; the join replays all shards'
+/// entries against the launch baseline in deterministic order (shard id,
+/// then program order) in place of the last-writer-wins byte merge for
+/// the journaled words. Ordered ops (Exch/Cas) do not commute and fail
+/// closed with [`crate::error::HetError::OrderedAtomic`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AtomicsMode {
+    /// Journal when the grid spans more than one device **and** the
+    /// kernel performs global atomics ([`KernelFeatures::global_atomics`]);
+    /// otherwise run plain. The default.
+    #[default]
+    Auto,
+    /// Always journal (even when the kernel looks atomics-free).
+    Journal,
+    /// Pre-protocol behavior: shards apply atomics to their private
+    /// images only and the join byte-merges last-writer-wins — cross-shard
+    /// RMW traffic silently does not compose. Kept for atomics-free
+    /// kernels that want zero protocol overhead and for A/B measurement.
+    Unsynchronized,
+}
+
 /// A fully-specified launch request.
 #[derive(Debug, Clone)]
 pub struct LaunchSpec {
@@ -139,6 +168,11 @@ pub struct KernelFeatures {
     pub has_shared: bool,
     pub has_team_ops: bool,
     pub has_divergence: bool,
+    /// hetIR-level classification of the kernel's global-memory atomics —
+    /// the same classification the lowered backend programs expose via
+    /// `atomics_class()`. The coordinator's `AtomicsMode::Auto` keys on
+    /// it: `None` skips journaling entirely.
+    pub global_atomics: AtomicsClass,
 }
 
 pub fn kernel_features(k: &Kernel) -> KernelFeatures {
@@ -148,6 +182,9 @@ pub fn kernel_features(k: &Kernel) -> KernelFeatures {
         Inst::Ld { space: AddrSpace::Shared, .. }
         | Inst::St { space: AddrSpace::Shared, .. }
         | Inst::Atom { space: AddrSpace::Shared, .. } => f.has_shared = true,
+        Inst::Atom { op, space: AddrSpace::Global, .. } => {
+            f.global_atomics = f.global_atomics.with(*op)
+        }
         Inst::Vote { .. } | Inst::Ballot { .. } | Inst::Shfl { .. } => f.has_team_ops = true,
         _ => {}
     });
@@ -269,6 +306,33 @@ mod tests {
         let k = sh.kernel("s").unwrap();
         assert_eq!(choose_tensix_mode(k, LaunchDims::d1(1, 32)), TensixMode::VectorSingleCore);
         assert_eq!(choose_tensix_mode(k, LaunchDims::d1(1, 128)), TensixMode::VectorMultiCore);
+    }
+
+    #[test]
+    fn features_classify_global_atomics() {
+        let m = compile(
+            "__global__ void k(unsigned* p) { atomicAdd(&p[0], 1u); atomicXor(&p[1], 3u); }",
+            "m",
+        )
+        .unwrap();
+        assert_eq!(
+            kernel_features(m.kernel("k").unwrap()).global_atomics,
+            AtomicsClass::Commutative
+        );
+        let ordered = compile(
+            "__global__ void k(unsigned* p) { atomicExch(&p[0], 1u); }",
+            "m",
+        )
+        .unwrap();
+        assert_eq!(
+            kernel_features(ordered.kernel("k").unwrap()).global_atomics,
+            AtomicsClass::Ordered
+        );
+        let none = compile("__global__ void k(unsigned* p) { p[0] = 1u; }", "m").unwrap();
+        assert_eq!(
+            kernel_features(none.kernel("k").unwrap()).global_atomics,
+            AtomicsClass::None
+        );
     }
 
     #[test]

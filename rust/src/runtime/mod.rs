@@ -13,16 +13,18 @@ pub mod launch;
 pub mod memory;
 pub mod stream;
 
+use crate::delta::journal::AtomicJournal;
 use crate::error::{HetError, Result};
 use crate::hetir::module::Module;
 use crate::isa::tensix_isa::TensixMode;
+use crate::isa::AtomicsClass;
 use crate::runtime::device::{Device, DeviceKind, Engine};
 use crate::runtime::handle::SlotTable;
-use crate::runtime::jit::{JitCache, JitKey};
+use crate::runtime::jit::{JitCache, JitKey, JitMemo};
 use crate::runtime::launch::{args_to_values, choose_tensix_mode, validate_dims, LaunchSpec};
 use crate::runtime::memory::MemoryManager;
 use crate::sim::snapshot::{BlockResume, LaunchOutcome};
-use std::sync::RwLock;
+use std::sync::{Mutex, RwLock};
 
 /// Generational handle to a loaded hetIR module (API v2).
 ///
@@ -110,11 +112,19 @@ impl RuntimeInner {
     /// resume differ only in `resume`. The module handle is revalidated
     /// here: a launch queued before `unload_module` fails with a typed
     /// stale-handle error when the executor reaches it.
+    ///
+    /// `journal` engages the cross-shard atomics protocol (the launch is
+    /// a journaled coordinator shard; dropped when the lowered program
+    /// performs no global atomics). `memo` is the stream's last
+    /// `(module, kernel)` JIT resolution: same-kernel repeat launches
+    /// skip the shared cache's lock + key hash entirely.
     pub fn run_launch(
         &self,
         device_id: usize,
         spec: &LaunchSpec,
         resume: Option<&[BlockResume]>,
+        journal: Option<&AtomicJournal>,
+        memo: Option<&Mutex<Option<JitMemo>>>,
     ) -> Result<LaunchOutcome> {
         let dev = self.device(device_id)?;
         // Checked-arithmetic geometry validation up front: overflowing or
@@ -133,28 +143,59 @@ impl RuntimeInner {
         } else {
             None
         };
-        let key = JitKey {
-            module: uid,
-            kernel: spec.kernel.clone(),
-            kind: dev.kind,
-            tensix_mode,
-            migratable: true,
+        let memoized = memo.and_then(|m| {
+            let g = m.lock().unwrap();
+            g.as_ref().and_then(|mm| mm.lookup(uid, &spec.kernel, dev.kind, tensix_mode))
+        });
+        let prog = match memoized {
+            Some(p) => p,
+            None => {
+                let key = JitKey {
+                    module: uid,
+                    kernel: spec.kernel.clone(),
+                    kind: dev.kind,
+                    tensix_mode,
+                    migratable: true,
+                };
+                let simt_cfg = match &dev.engine {
+                    Engine::Simt(s) => Some(s.cfg.clone()),
+                    Engine::Tensix(_) => None,
+                };
+                let p = self.jit.get_or_translate(key, kernel, simt_cfg.as_ref())?;
+                if let Some(m) = memo {
+                    *m.lock().unwrap() = Some(JitMemo::new(
+                        uid,
+                        spec.kernel.clone(),
+                        dev.kind,
+                        tensix_mode,
+                        p.clone(),
+                    ));
+                }
+                p
+            }
         };
-        let simt_cfg = match &dev.engine {
-            Engine::Simt(s) => Some(s.cfg.clone()),
-            Engine::Tensix(_) => None,
-        };
-        let prog = self.jit.get_or_translate(key, kernel, simt_cfg.as_ref())?;
         drop(modules);
+
+        // A program with no global atomics journals nothing — skip the
+        // plumbing (the ISA-level classification, threaded through
+        // lowering, makes this a static decision).
+        let journal = journal.filter(|_| prog.atomics_class() != AtomicsClass::None);
 
         // Launches take the device gate *shared*: independent launches
         // (different streams, coordinator shards) overlap on one device;
         // only whole-device snapshot capture/restore excludes them.
         let _gate = dev.exec.read().unwrap();
         match (&dev.engine, prog.as_ref()) {
-            (Engine::Simt(sim), crate::backends::DeviceProgram::Simt(p)) => {
-                sim.run_grid(p, spec.dims, &values, &dev.mem, &dev.pause, resume)
-            }
+            (Engine::Simt(sim), crate::backends::DeviceProgram::Simt(p)) => sim
+                .run_grid_journaled(
+                    p,
+                    spec.dims,
+                    &values,
+                    &dev.mem,
+                    &dev.pause,
+                    resume,
+                    journal,
+                ),
             (Engine::Tensix(sim), crate::backends::DeviceProgram::Tensix(p)) => {
                 // Multi-core shared memory needs a global heap region.
                 let heap = if p.mode == TensixMode::VectorMultiCore && p.shared_bytes > 0 {
@@ -163,7 +204,7 @@ impl RuntimeInner {
                 } else {
                     None
                 };
-                let out = sim.run_grid(
+                let out = sim.run_grid_journaled(
                     p,
                     spec.dims,
                     &values,
@@ -171,6 +212,7 @@ impl RuntimeInner {
                     &dev.pause,
                     resume,
                     heap.map(|h| h.0),
+                    journal,
                 );
                 if let Some(h) = heap {
                     // Shared contents are captured in block snapshots, so

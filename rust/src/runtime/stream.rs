@@ -43,6 +43,13 @@ pub struct PausedKernel {
     pub spec: LaunchSpec,
     /// Per-block states (captured registers / not-started / done).
     pub blocks: Vec<BlockState>,
+    /// The cross-shard atomics journal of a journaled coordinator shard
+    /// (`None` for plain launches). Riding inside the paused kernel keeps
+    /// journal continuity through every resume path — including streams
+    /// collaterally halted by a co-located checkpoint. Not serialized:
+    /// the wire blob carries the *entries* (`Snapshot::journal`); the
+    /// restoring side attaches a fresh journal.
+    pub journal: Option<std::sync::Arc<crate::delta::journal::AtomicJournal>>,
 }
 
 impl PausedKernel {

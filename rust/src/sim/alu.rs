@@ -249,6 +249,7 @@ pub fn apply_atom(
         AtomOp::Max => bin(BinOp::Max, ty, old, v)?,
         AtomOp::And => bin(BinOp::And, ty, old, v)?,
         AtomOp::Or => bin(BinOp::Or, ty, old, v)?,
+        AtomOp::Xor => bin(BinOp::Xor, ty, old, v)?,
         AtomOp::Exch => v,
         AtomOp::Cas => {
             if old.bits == v.bits {

@@ -135,15 +135,34 @@ impl Default for DispatchOptions {
 
 impl DispatchOptions {
     /// Worker count from `HETGPU_SIM_THREADS`, defaulting to the number of
-    /// host cores.
+    /// host cores. `0` means explicit sequential execution (same as `1`);
+    /// an unparsable value warns loudly (once) naming the bad value and
+    /// the fallback instead of silently swallowing the typo.
     pub fn from_env() -> DispatchOptions {
-        let configured = std::env::var("HETGPU_SIM_THREADS")
-            .ok()
-            .and_then(|s| s.trim().parse::<usize>().ok())
-            .filter(|&n| n > 0);
-        let workers = configured.unwrap_or_else(|| {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-        });
+        let cores = || std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let workers = match std::env::var("HETGPU_SIM_THREADS") {
+            Err(_) => cores(),
+            Ok(raw) => match raw.trim().parse::<usize>() {
+                // An explicit 0 is the sequential escape hatch, not a
+                // typo: treat it exactly like 1.
+                Ok(0) | Ok(1) => 1,
+                Ok(n) => n,
+                Err(_) => {
+                    // Warn once per process: `from_env` runs per simulator
+                    // instance, and a misconfigured service would
+                    // otherwise spam one line per device per context.
+                    static WARNED: std::sync::Once = std::sync::Once::new();
+                    let fallback = cores();
+                    WARNED.call_once(|| {
+                        eprintln!(
+                            "hetgpu: HETGPU_SIM_THREADS={raw:?} is not a number; \
+                             falling back to {fallback} dispatch workers (host cores)"
+                        );
+                    });
+                    fallback
+                }
+            },
+        };
         DispatchOptions { workers: workers.max(1), pause_at_block: None }
     }
 

@@ -16,6 +16,7 @@
 
 pub mod warp;
 
+use crate::delta::journal::{AtomicEntry, AtomicJournal};
 use crate::error::{HetError, Result};
 use crate::hetir::types::Value;
 use crate::isa::simt_isa::{SimtConfig, SimtProgram};
@@ -132,6 +133,28 @@ impl SimtSim {
         pause: &AtomicBool,
         resume: Option<&[BlockResume]>,
     ) -> Result<LaunchOutcome> {
+        self.run_grid_journaled(p, dims, params, global, pause, resume, None)
+    }
+
+    /// [`SimtSim::run_grid`] with the cross-shard atomics protocol
+    /// engaged: when `journal` is set (the launch executes as a journaled
+    /// coordinator shard), every commutative global atomic a block
+    /// performs applies locally *and* is committed to the journal's slot
+    /// for that block, while ordered ops (Exch/Cas) fail closed with
+    /// `HetError::OrderedAtomic`. Entry order is a function of the
+    /// program (block linear id, then warp-scheduler order), not of the
+    /// dispatch worker count.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_grid_journaled(
+        &self,
+        p: &SimtProgram,
+        dims: LaunchDims,
+        params: &[Value],
+        global: &DeviceMemory,
+        pause: &AtomicBool,
+        resume: Option<&[BlockResume]>,
+        journal: Option<&AtomicJournal>,
+    ) -> Result<LaunchOutcome> {
         let (grid_size, block_size) = dims.validate()?;
         if block_size > 1024 {
             return Err(HetError::runtime(format!("block size {block_size} exceeds 1024")));
@@ -157,7 +180,7 @@ impl SimtSim {
             resume,
             |b| {
                 let directive = resume.map(|r| &r[b as usize]);
-                self.run_block(p, dims, b, params, global, pause, directive)
+                self.run_block(p, dims, b, params, global, pause, directive, journal)
             },
         )?;
 
@@ -198,6 +221,7 @@ impl SimtSim {
         global: &DeviceMemory,
         pause: &AtomicBool,
         directive: Option<&BlockResume>,
+        journal: Option<&AtomicJournal>,
     ) -> Result<(BlockState, u64, BlockTotals)> {
         let block_size = dims.block_size();
         let ww = self.cfg.warp_width;
@@ -235,6 +259,10 @@ impl SimtSim {
         let mut block_cost = 0u64;
         let mut insts = 0u64;
         let mut gbytes = 0u64;
+        // Cross-shard journal buffer: warps run sequentially within the
+        // block, so their entries land here in scheduler order; the batch
+        // is committed to the journal's per-block slot on Done/Suspend.
+        let mut atoms_buf: Vec<AtomicEntry> = Vec::new();
         loop {
             let mut progressed = false;
             for w in 0..num_warps as usize {
@@ -253,6 +281,7 @@ impl SimtSim {
                     cost: &mut block_cost,
                     insts: &mut insts,
                     gbytes: &mut gbytes,
+                    atoms: if journal.is_some() { Some(&mut atoms_buf) } else { None },
                 };
                 statuses[w] = match warps[w].run(p, &mut env)? {
                     WarpStop::Barrier(id) => WStatus::AtBarrier(id),
@@ -264,6 +293,9 @@ impl SimtSim {
 
             // All done?
             if statuses.iter().all(|s| *s == WStatus::Done) {
+                if let Some(j) = journal {
+                    j.commit(block_linear, std::mem::take(&mut atoms_buf));
+                }
                 let totals = BlockTotals {
                     warp_instructions: insts,
                     total_cycles: block_cost,
@@ -292,6 +324,13 @@ impl SimtSim {
                 let mut shared_mem = vec![0u8; p.shared_bytes as usize];
                 if p.shared_bytes > 0 {
                     shared.read_bytes_into(0, &mut shared_mem)?;
+                }
+                // Partial batch: the block's pre-checkpoint atomics are
+                // already applied locally, so they must be journaled now;
+                // the resumed run appends its post-barrier batch behind
+                // this one, preserving program order.
+                if let Some(j) = journal {
+                    j.commit(block_linear, std::mem::take(&mut atoms_buf));
                 }
                 let totals = BlockTotals {
                     warp_instructions: insts,

@@ -10,6 +10,7 @@
 //! a checkpoint dump (pause flag set), or at kernel end. The block
 //! scheduler in [`super`] coordinates suspended warps.
 
+use crate::delta::journal::AtomicEntry;
 use crate::error::{HetError, Result};
 use crate::hetir::instr::{ShflKind, VoteKind};
 use crate::hetir::types::{AddrSpace, Scalar, Type, Value};
@@ -45,6 +46,12 @@ pub struct Env<'a> {
     pub insts: &'a mut u64,
     /// Global-memory traffic counter (bytes).
     pub gbytes: &'a mut u64,
+    /// Cross-shard journaling mode: when the launch executes as a
+    /// journaled coordinator shard this is the block's entry buffer —
+    /// commutative global atomics apply locally *and* append a typed
+    /// entry here, while ordered ops (Exch/Cas) fail closed with
+    /// `HetError::OrderedAtomic`. `None` = plain execution.
+    pub atoms: Option<&'a mut Vec<AtomicEntry>>,
 }
 
 /// Why a warp stopped running.
@@ -517,10 +524,27 @@ impl WarpState {
                         .as_ref()
                         .map(|v2| Value { bits: self.rv(lane, v2), ty: Type::Scalar(*ty) });
                     let old = match space {
-                        AddrSpace::Global => env.global.atomic_rmw(a, *ty, |old| {
-                            alu::apply_atom(*op, *ty, old, v, v2)
-                                .map_err(|e| HetError::fault(devname, e.to_string()))
-                        })?,
+                        AddrSpace::Global => {
+                            // Journaled shard execution: ordered ops do
+                            // not commute across shards — fail closed
+                            // before touching memory (delta::journal).
+                            if env.atoms.is_some() && !op.commutes() {
+                                return Err(HetError::ordered_atomic(op.mnemonic(), a));
+                            }
+                            let old = env.global.atomic_rmw(a, *ty, |old| {
+                                alu::apply_atom(*op, *ty, old, v, v2)
+                                    .map_err(|e| HetError::fault(devname, e.to_string()))
+                            })?;
+                            if let Some(atoms) = env.atoms.as_mut() {
+                                atoms.push(AtomicEntry {
+                                    addr: a,
+                                    ty: *ty,
+                                    op: *op,
+                                    val: v.bits,
+                                });
+                            }
+                            old
+                        }
                         AddrSpace::Shared => {
                             let old = env.shared.load(a, *ty)?;
                             let new = alu::apply_atom(*op, *ty, old, v, v2)

@@ -10,6 +10,7 @@
 //! A core suspends at mesh barriers, mesh votes, and checkpoint dumps; the
 //! block scheduler in [`super`] coordinates the core group.
 
+use crate::delta::journal::AtomicEntry;
 use crate::error::{HetError, Result};
 use crate::hetir::instr::VoteKind;
 use crate::hetir::types::{Scalar, Type, Value};
@@ -41,6 +42,12 @@ pub struct TEnv<'a> {
     pub cost: &'a mut u64,
     pub insts: &'a mut u64,
     pub gbytes: &'a mut u64,
+    /// Cross-shard journaling mode: the block's entry buffer when the
+    /// launch executes as a journaled coordinator shard — commutative
+    /// global atomics apply locally *and* append typed entries; ordered
+    /// ops fail closed. Scratchpad (`local`) atomics are core-private and
+    /// never journal. `None` = plain execution.
+    pub atoms: Option<&'a mut Vec<AtomicEntry>>,
 }
 
 /// Why a core stopped.
@@ -444,10 +451,16 @@ impl CoreState {
                 // Global atomics take the host-atomic path so concurrently
                 // dispatched blocks interleave like hardware atomics.
                 let devname = env.cfg.name;
+                if env.atoms.is_some() && !op.commutes() {
+                    return Err(HetError::ordered_atomic(op.mnemonic(), a));
+                }
                 let old = env.global.atomic_rmw(a, *ty, |old| {
                     alu::apply_atom(*op, *ty, old, v, v2)
                         .map_err(|e| HetError::fault(devname, e.to_string()))
                 })?;
+                if let Some(atoms) = env.atoms.as_mut() {
+                    atoms.push(AtomicEntry { addr: a, ty: *ty, op: *op, val: v.bits });
+                }
                 if let Some(d) = dst {
                     self.sregs[d.0 as usize] = old.bits;
                 }
@@ -636,7 +649,7 @@ impl CoreState {
                     k += 1;
                 }
             }
-            TInst::VAtom { op, ty, dst, base, idx, scale, disp, val, val2, local } => {
+            TInst::VAtom { op, ty, dst, base, idx, scale, disp, val, val2, local, shared } => {
                 let devname = env.cfg.name;
                 for lane in 0..self.lanes as usize {
                     if active >> lane & 1 == 0 { continue; }
@@ -656,10 +669,28 @@ impl CoreState {
                         env.scratch.store(a, *ty, new)?;
                         old
                     } else {
-                        env.global.atomic_rmw(a, *ty, |old| {
+                        // `shared` = hetIR shared-memory atomic living in
+                        // the global shared-heap region (multi-core
+                        // mode): block-private semantics, so the journal
+                        // protocol ignores it like a scratchpad atomic.
+                        if env.atoms.is_some() && !shared && !op.commutes() {
+                            return Err(HetError::ordered_atomic(op.mnemonic(), a));
+                        }
+                        let old = env.global.atomic_rmw(a, *ty, |old| {
                             alu::apply_atom(*op, *ty, old, v, v2)
                                 .map_err(|e| HetError::fault(devname, e.to_string()))
-                        })?
+                        })?;
+                        if !shared {
+                            if let Some(atoms) = env.atoms.as_mut() {
+                                atoms.push(AtomicEntry {
+                                    addr: a,
+                                    ty: *ty,
+                                    op: *op,
+                                    val: v.bits,
+                                });
+                            }
+                        }
+                        old
                     };
                     if let Some(d) = dst {
                         self.vregs[d.0 as usize][lane] = old.bits;

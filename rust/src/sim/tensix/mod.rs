@@ -15,6 +15,7 @@
 
 pub mod core;
 
+use crate::delta::journal::{AtomicEntry, AtomicJournal};
 use crate::error::{HetError, Result};
 use crate::hetir::types::Value;
 use crate::isa::tensix_isa::{TensixConfig, TensixMode, TensixProgram};
@@ -54,6 +55,7 @@ impl TensixSim {
     /// Run a grid. `shared_heap` must point at a reserved global region of
     /// `grid_size * program.shared_bytes` bytes when the program was
     /// compiled for multi-core mode and uses shared memory.
+    #[allow(clippy::too_many_arguments)]
     pub fn run_grid(
         &self,
         p: &TensixProgram,
@@ -63,6 +65,25 @@ impl TensixSim {
         pause: &AtomicBool,
         resume: Option<&[BlockResume]>,
         shared_heap: Option<u64>,
+    ) -> Result<LaunchOutcome> {
+        self.run_grid_journaled(p, dims, params, global, pause, resume, shared_heap, None)
+    }
+
+    /// [`TensixSim::run_grid`] with the cross-shard atomics protocol
+    /// engaged (see `SimtSim::run_grid_journaled`): commutative global
+    /// atomics journal per block, ordered ops fail closed. Scratchpad
+    /// (`local`) atomics are core-private and never journal.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_grid_journaled(
+        &self,
+        p: &TensixProgram,
+        dims: LaunchDims,
+        params: &[Value],
+        global: &DeviceMemory,
+        pause: &AtomicBool,
+        resume: Option<&[BlockResume]>,
+        shared_heap: Option<u64>,
+        journal: Option<&AtomicJournal>,
     ) -> Result<LaunchOutcome> {
         let (grid_size, block_size) = dims.validate()?;
         match p.mode {
@@ -102,7 +123,7 @@ impl TensixSim {
                 };
                 match p.mode {
                     TensixMode::ScalarMimd => {
-                        self.run_block_mimd(p, dims, b, params, global, pause)
+                        self.run_block_mimd(p, dims, b, params, global, pause, journal)
                     }
                     _ => self.run_block_vector(
                         p,
@@ -113,6 +134,7 @@ impl TensixSim {
                         pause,
                         directive,
                         shared_base,
+                        journal,
                     ),
                 }
             },
@@ -172,6 +194,7 @@ impl TensixSim {
         pause: &AtomicBool,
         directive: Option<&BlockResume>,
         shared_base: u64,
+        journal: Option<&AtomicJournal>,
     ) -> Result<(BlockState, u64, BlockTotals)> {
         let block_size = dims.block_size();
         let num_cores = block_size.div_ceil(32);
@@ -214,6 +237,9 @@ impl TensixSim {
         let mut core_costs = vec![0u64; num_cores as usize];
         let mut insts = 0u64;
         let mut gbytes = 0u64;
+        // Cross-shard journal buffer: cores run sequentially within the
+        // block scheduler, so entries land in deterministic order.
+        let mut atoms_buf: Vec<AtomicEntry> = Vec::new();
         loop {
             let mut progressed = false;
             for c in 0..num_cores as usize {
@@ -234,6 +260,7 @@ impl TensixSim {
                     cost: &mut core_costs[c],
                     insts: &mut insts,
                     gbytes: &mut gbytes,
+                    atoms: if journal.is_some() { Some(&mut atoms_buf) } else { None },
                 };
                 statuses[c] = match cores[c].run(p, &mut env)? {
                     CoreStop::MeshBar(id) => CStatus::AtBar(id),
@@ -246,6 +273,9 @@ impl TensixSim {
             }
 
             if statuses.iter().all(|s| *s == CStatus::Done) {
+                if let Some(j) = journal {
+                    j.commit(block_linear, std::mem::take(&mut atoms_buf));
+                }
                 let block_cost = *core_costs.iter().max().unwrap();
                 let totals = BlockTotals {
                     warp_instructions: insts,
@@ -271,6 +301,11 @@ impl TensixSim {
                     } else {
                         global.read_bytes_into(shared_base, &mut shared_mem)?;
                     }
+                }
+                // Partial batch: pre-checkpoint atomics already applied
+                // locally; the resumed run appends behind this batch.
+                if let Some(j) = journal {
+                    j.commit(block_linear, std::mem::take(&mut atoms_buf));
                 }
                 let block_cost = *core_costs.iter().max().unwrap();
                 let totals = BlockTotals {
@@ -350,6 +385,7 @@ impl TensixSim {
 
     /// MIMD mode: threads of the block run independently, round-robin over
     /// cores. Barrier-free programs only (the translator enforces this).
+    #[allow(clippy::too_many_arguments)]
     fn run_block_mimd(
         &self,
         p: &TensixProgram,
@@ -358,12 +394,16 @@ impl TensixSim {
         params: &[Value],
         global: &DeviceMemory,
         pause: &AtomicBool,
+        journal: Option<&AtomicJournal>,
     ) -> Result<(BlockState, u64, BlockTotals)> {
         let block_size = dims.block_size();
         let n_cores = self.cfg.num_cores.max(1);
         let mut core_costs = vec![0u64; n_cores as usize];
         let mut insts = 0u64;
         let mut gbytes = 0u64;
+        // MIMD threads run sequentially here, so journal entries land in
+        // thread order — deterministic for any worker count.
+        let mut atoms_buf: Vec<AtomicEntry> = Vec::new();
         let scratch = DeviceMemory::new(self.cfg.scratchpad_bytes, self.cfg.name);
         for t in 0..block_size {
             let bd = dims.block;
@@ -385,6 +425,7 @@ impl TensixSim {
                 cost: &mut core_costs[slot],
                 insts: &mut insts,
                 gbytes: &mut gbytes,
+                atoms: if journal.is_some() { Some(&mut atoms_buf) } else { None },
             };
             match core.run(p, &mut env)? {
                 CoreStop::Done => {}
@@ -395,6 +436,9 @@ impl TensixSim {
                     ))
                 }
             }
+        }
+        if let Some(j) = journal {
+            j.commit(block_linear, std::mem::take(&mut atoms_buf));
         }
         let block_cost = *core_costs.iter().max().unwrap_or(&0);
         let totals = BlockTotals {

@@ -46,8 +46,13 @@ def main(argv):
         # wall time, which would flag runner jitter. A growing ratio
         # means deltas capture more than the dirtied fraction. Sections
         # absent from a given artifact are skipped, so one gate script
-        # serves both bench files.
+        # serves all bench files.
         ("delta", "ratio"),
+        # Cross-shard atomics (BENCH_e8): gate the journal op count —
+        # deterministic (threads x atomics per thread). Growth means the
+        # protocol started journaling redundantly (e.g. double-committing
+        # across pauses); wall times are printed but not gated.
+        ("atomics", "journal_ops"),
     ]:
         p = prev.get(section, {}).get(key)
         c = curr.get(section, {}).get(key)

@@ -1,6 +1,6 @@
 //! Delta-state engine acceptance: incremental snapshots capture O(dirty)
 //! bytes, compose bit-identically with their base, fail closed on epoch
-//! mismatches, stay wire-compatible with v2/v3 golden blobs, and make
+//! mismatches, stay wire-compatible with v2–v4 golden blobs, and make
 //! unhinted `launch_sharded` move dirty pages instead of total memory.
 
 use hetgpu::migrate::blob;
@@ -19,16 +19,20 @@ __global__ void bump(float* p) {
 // ---- golden-blob back-compat (satellite) ----
 
 #[test]
-fn v2_and_v3_idle_golden_blobs_still_restore() {
-    for (bytes, has_stream) in [
-        (&include_bytes!("fixtures/snapshot_v2_idle.blob")[..], false),
-        (&include_bytes!("fixtures/snapshot_v3_idle.blob")[..], true),
+fn v2_v3_and_v4_idle_golden_blobs_still_restore() {
+    for (bytes, has_stream, epoch) in [
+        (&include_bytes!("fixtures/snapshot_v2_idle.blob")[..], false, 0u64),
+        (&include_bytes!("fixtures/snapshot_v3_idle.blob")[..], true, 0),
+        // v4 predates the atomics-journal section (v5); it must parse
+        // with an empty journal and keep its epoch header.
+        (&include_bytes!("fixtures/snapshot_v4_idle.blob")[..], true, 9),
     ] {
         let snap = blob::deserialize(bytes).expect("golden blob parses");
         assert_eq!(snap.src_device, 1);
-        assert_eq!(snap.epoch, 0, "legacy blobs carry no epoch");
+        assert_eq!(snap.epoch, epoch);
         assert!(!snap.is_delta());
         assert!(snap.paused.is_none());
+        assert!(snap.journal.is_empty(), "pre-v5 blobs have no journal");
         assert_eq!(snap.allocations.len(), 1);
         if has_stream {
             assert_eq!(snap.stream.raw(), 5);

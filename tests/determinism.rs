@@ -166,6 +166,7 @@ fn dirty_sets_and_incremental_blobs_bit_identical_across_worker_counts() {
             shard: None,
             epoch: base + 1,
             base_epoch: Some(base),
+            journal: Vec::new(),
         });
         (dirty, delta_blob)
     };
@@ -277,11 +278,16 @@ fn pinned_pause_migrate_roundtrip_is_bit_identical() {
         blob::serialize(&Snapshot {
             stream: StreamHandle::from_raw(0),
             src_device: 0,
-            paused: Some(PausedKernel { spec: spec.clone(), blocks: grid.blocks.clone() }),
+            paused: Some(PausedKernel {
+                spec: spec.clone(),
+                blocks: grid.blocks.clone(),
+                journal: None,
+            }),
             allocations: vec![(0, mem.to_vec())],
             shard: None,
             epoch: 0,
             base_epoch: None,
+            journal: Vec::new(),
         })
     };
     assert_eq!(blob_of(&grid1, &mem1), blob_of(&grid8, &mem8), "snapshot blobs differ");
@@ -290,7 +296,7 @@ fn pinned_pause_migrate_roundtrip_is_bit_identical() {
     // exactly on the uninterrupted result.
     for (grid, mem_bytes, workers) in [(&grid1, &mem1, 8usize), (&grid8, &mem8, 1usize)] {
         let directives =
-            PausedKernel { spec: spec.clone(), blocks: grid.blocks.clone() }
+            PausedKernel { spec: spec.clone(), blocks: grid.blocks.clone(), journal: None }
                 .resume_directives();
         let sim = SimtSim::with_workers(cfg.clone(), workers);
         let mem = DeviceMemory::new(1 << 16, "det");
@@ -364,6 +370,148 @@ fn sharded_launch_bit_identical_to_single_device() {
     assert_eq!(report.merged.total_cycles, ref_cost.total_cycles);
     assert_eq!(report.merged.global_bytes, ref_cost.global_bytes);
     assert_eq!(report.rebalanced, 0);
+}
+
+/// Cross-shard atomics protocol acceptance (the PR-5 acid test): an
+/// atomics-heavy histogram grid sharded over 1, 2, and 4 devices must
+/// produce **bit-identical memory, merged cost totals, and snapshot
+/// blobs** vs the single-device run — for sequential and parallel
+/// dispatch alike. Without the journal protocol the shards' private
+/// `atomicAdd`/`atomicMax` images would byte-merge last-writer-wins and
+/// silently drop every other shard's updates.
+#[test]
+fn sharded_atomics_histogram_bit_identical_for_every_shard_count() {
+    let dims = LaunchDims::d1(64, 64); // 4096 threads on 16+8 counters
+
+    // (bins, peaks, cost totals, snapshot blob of the final image).
+    let run = |devices: usize, workers: usize| {
+        let kinds = vec![DeviceKind::NvidiaSim; devices];
+        let ctx = HetGpu::with_devices_and_workers(&kinds, workers).unwrap();
+        let m = ctx.compile_cuda(ATOMICS_SRC).unwrap();
+        let bins = ctx.alloc_buffer::<u32>(16, 0).unwrap();
+        let peaks = ctx.alloc_buffer::<u32>(8, 0).unwrap();
+        ctx.upload(&bins, &[0; 16]).unwrap();
+        ctx.upload(&peaks, &[0; 8]).unwrap();
+        let (got_bins, got_peaks, cost) = if devices == 1 {
+            let s = ctx.create_stream(0).unwrap();
+            ctx.launch(m, "slam")
+                .dims(dims)
+                .args(&[bins.arg(), peaks.arg()])
+                .record(s)
+                .unwrap();
+            ctx.synchronize(s).unwrap();
+            let c = ctx.stream_stats(s).unwrap().cost;
+            (ctx.download(&bins, 16).unwrap(), ctx.download(&peaks, 8).unwrap(), c)
+        } else {
+            let devs: Vec<usize> = (0..devices).collect();
+            let mut launch = ctx
+                .launch(m, "slam")
+                .dims(dims)
+                .args(&[bins.arg(), peaks.arg()])
+                .sharded(&devs)
+                .unwrap();
+            let report = launch.wait().unwrap();
+            // Every thread journals its two atomics; the join replays all
+            // of them (4096 threads x 2 ops).
+            assert_eq!(report.io.journal_ops, 8192, "devices {devices}");
+            assert_eq!(ctx.journal_stats().ops_replayed, 8192);
+            assert_eq!(ctx.journal_stats().journaled_launches, 1);
+            (ctx.download(&bins, 16).unwrap(), ctx.download(&peaks, 8).unwrap(), report.merged)
+        };
+        // Snapshot blob of the final memory image (fixed stream/epoch so
+        // blobs of different contexts are byte-comparable).
+        let to_bytes = |v: &[u32]| -> Vec<u8> { v.iter().flat_map(|x| x.to_le_bytes()).collect() };
+        let blob_bytes = blob::serialize(&Snapshot {
+            stream: StreamHandle::from_raw(0),
+            src_device: 0,
+            paused: None,
+            allocations: vec![
+                (bins.ptr().0, to_bytes(&got_bins)),
+                (peaks.ptr().0, to_bytes(&got_peaks)),
+            ],
+            shard: None,
+            epoch: 0,
+            base_epoch: None,
+            journal: Vec::new(),
+        });
+        (got_bins, got_peaks, cost, blob_bytes)
+    };
+
+    let reference = run(1, 1);
+    // Host-computed expectation pins the math, not just self-consistency.
+    let mut expect_bins = [0u32; 16];
+    let mut expect_peaks = [0u32; 8];
+    for i in 0..4096u32 {
+        expect_bins[(i & 15) as usize] = expect_bins[(i & 15) as usize].wrapping_add(i);
+        expect_peaks[(i & 7) as usize] =
+            expect_peaks[(i & 7) as usize].max(i.wrapping_mul(40503));
+    }
+    assert_eq!(reference.0, expect_bins.to_vec());
+    assert_eq!(reference.1, expect_peaks.to_vec());
+
+    for devices in [1usize, 2, 4] {
+        for workers in [1usize, 4] {
+            let got = run(devices, workers);
+            assert_eq!(
+                reference.0, got.0,
+                "bins differ: {devices} shards, {workers} workers"
+            );
+            assert_eq!(
+                reference.1, got.1,
+                "peaks differ: {devices} shards, {workers} workers"
+            );
+            assert_eq!(
+                (reference.2.warp_instructions, reference.2.total_cycles, reference.2.global_bytes),
+                (got.2.warp_instructions, got.2.total_cycles, got.2.global_bytes),
+                "cost totals differ: {devices} shards, {workers} workers"
+            );
+            assert_eq!(
+                reference.3, got.3,
+                "snapshot blobs differ: {devices} shards, {workers} workers"
+            );
+        }
+    }
+}
+
+/// Ordered atomics (Exch/Cas) do not commute across shards: under the
+/// journal protocol they fail closed with a typed error instead of
+/// silently diverging from single-device semantics; the documented
+/// `Unsynchronized` opt-out still executes.
+#[test]
+fn ordered_atomics_fail_closed_under_journaled_sharding() {
+    use hetgpu::runtime::api::AtomicsMode;
+    const SWAP_SRC: &str = r#"
+__global__ void swap(unsigned* p) {
+    unsigned i = blockIdx.x * blockDim.x + threadIdx.x;
+    atomicExch(&p[i & 3u], i);
+}
+"#;
+    let ctx = HetGpu::with_devices(&[DeviceKind::NvidiaSim, DeviceKind::NvidiaSim]).unwrap();
+    let m = ctx.compile_cuda(SWAP_SRC).unwrap();
+    let buf = ctx.alloc_buffer::<u32>(4, 0).unwrap();
+    ctx.upload(&buf, &[0; 4]).unwrap();
+    let mut launch = ctx
+        .launch(m, "swap")
+        .dims(LaunchDims::d1(8, 32))
+        .arg(buf.arg())
+        .sharded(&[0, 1])
+        .unwrap();
+    let err = launch.wait().unwrap_err();
+    assert!(err.to_string().contains("ordered atomic"), "{err}");
+    drop(launch);
+
+    let mut launch = ctx
+        .launch(m, "swap")
+        .dims(LaunchDims::d1(8, 32))
+        .arg(buf.arg())
+        .atomics_mode(AtomicsMode::Unsynchronized)
+        .sharded(&[0, 1])
+        .unwrap();
+    launch.wait().unwrap();
+    // Only the first (journaled, failed) launch counted; the opt-out ran
+    // outside the protocol.
+    assert_eq!(ctx.journal_stats().journaled_launches, 1);
+    assert_eq!(ctx.journal_stats().ops_replayed, 0);
 }
 
 #[test]

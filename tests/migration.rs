@@ -274,6 +274,75 @@ fn shard_rebalance_cross_kind_roundtrip() {
     panic!("shard never caught mid-run; machine too fast even at high iters");
 }
 
+/// Cross-shard atomics protocol x rebalance: a shard holding a
+/// **non-empty pending atomics journal** moves across device kinds
+/// through the v5 blob (the journal entries ship next to the byte
+/// delta), keeps journaling on the destination, and the join still
+/// replays every update — the merged histogram is exact.
+#[test]
+fn shard_rebalance_roundtrip_with_pending_atomics_journal() {
+    // Every thread adds 1 to its bin on each of the first 64 iterations;
+    // the barrier every iteration is the checkpoint site the rebalance
+    // pause lands on (bounding the adds keeps the journal small while
+    // `iters` scales the runtime so the pause catches the kernel live).
+    const ACCUM_SRC: &str = r#"
+__global__ void accum(unsigned* bins, unsigned iters) {
+    unsigned i = blockIdx.x * blockDim.x + threadIdx.x;
+    for (unsigned k = 0u; k < iters; k++) {
+        if (k < 64u) {
+            atomicAdd(&bins[i & 15u], 1u);
+        }
+        __syncthreads();
+    }
+}
+"#;
+    let mut iters = 60_000u32;
+    for _attempt in 0..4 {
+        let ctx = HetGpu::with_devices(&[
+            DeviceKind::NvidiaSim,
+            DeviceKind::AmdSim,
+            DeviceKind::TenstorrentSim,
+        ])
+        .unwrap();
+        let m = ctx.compile_cuda(ACCUM_SRC).unwrap();
+        let bins = ctx.alloc_buffer::<u32>(16, 0).unwrap();
+        ctx.upload(&bins, &[0; 16]).unwrap();
+
+        let mut launch = ctx
+            .launch(m, "accum")
+            .dims(LaunchDims::d1(DIMS.0, DIMS.1))
+            .args(&[bins.arg(), Arg::U32(iters)])
+            .sharded(&[0, 1])
+            .unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(40));
+        // Move the second shard mid-flight onto the Tensix device: its
+        // pending journal (whatever it added so far) must ship through
+        // the blob and survive as the shard's carry.
+        let live = launch.rebalance(1, 2).unwrap();
+        assert_eq!(launch.shards[1].device, 2);
+        let report = launch.wait().unwrap();
+        assert_eq!(report.rebalanced, 1);
+        assert_eq!(ctx.journal_stats().journaled_launches, 1);
+        // 64 threads over 16 bins, 64 adds of 1 each: exact or the
+        // journal lost/duplicated updates across the rebalance.
+        assert_eq!(report.io.journal_ops, 64 * 64, "every add replays exactly once");
+        let got = ctx.download(&bins, 16).unwrap();
+        assert!(got.iter().all(|v| *v == 4 * 64), "{got:?}");
+        // Accept only a run where the shard was caught live mid-kernel
+        // *with a non-empty pending journal* — the scenario under test:
+        // entries shipped through the blob, then journaling continued on
+        // the Tensix device. (A shard paused before its block started
+        // ships an empty journal; a shard that finished first was never
+        // live. Both still merged exactly — retry for the real catch.)
+        if live && report.io.journal_bytes > 0 {
+            assert!(ctx.journal_stats().entries_shipped > 0);
+            return;
+        }
+        iters *= 4; // timing missed the window — retry with more work
+    }
+    panic!("shard never caught mid-run; machine too fast even at high iters");
+}
+
 /// Deferred launches run after migration completes, on the new device.
 #[test]
 fn deferred_launches_run_after_migration() {

@@ -214,11 +214,13 @@ fn prop_blob_roundtrip() {
                     tensix_mode_hint: None,
                 },
                 blocks,
+                journal: None,
             }),
             allocations: vec![(4096, (0..r.below(128)).map(|_| r.next_u32() as u8).collect())],
             shard: None,
             epoch: r.next_u64(),
             base_epoch: if r.bool() { Some(r.next_u64()) } else { None },
+            journal: Vec::new(),
         };
         let blob = serialize(&snap);
         let back = deserialize(&blob).expect("deserialize");
