@@ -1,0 +1,95 @@
+//! E9 — fault-tolerant sharded execution: what recovery costs.
+//!
+//! The same atomics-heavy histogram grid as E8 runs (a) sharded over two
+//! devices with **no fault plan armed** — the gated number: the fault
+//! plane must cost nothing measurable on the fault-free path — then with
+//! a deterministic mid-kernel fault on device 1 recovered by (b)
+//! `Redistribute` (re-execute the dead shard's range on the survivor)
+//! and (c) `Retry` (re-execute on the same device). Both recoveries must
+//! end bit-identical to the fault-free bins.
+//!
+//! Emits `BENCH_e9.json`; `fault.fault_free_s` is gated by
+//! `scripts/bench_trend.py` (>20% regression fails CI). Recovery wall
+//! times are printed for the notes but not gated — they include the
+//! deliberate retry backoff.
+
+use hetgpu::runtime::api::{FaultPlan, FaultPolicy, HetGpu};
+use hetgpu::runtime::device::DeviceKind;
+use hetgpu::sim::simt::LaunchDims;
+use std::time::Instant;
+
+const SRC: &str = r#"
+__global__ void slam(unsigned* bins, unsigned* peaks) {
+    unsigned i = blockIdx.x * blockDim.x + threadIdx.x;
+    atomicAdd(&bins[i & 15u], i);
+    atomicMax(&peaks[i & 7u], i * 40503u);
+}
+"#;
+
+/// One sharded run: fresh two-device context, optional fault plan and
+/// policy; returns (wall seconds, bins, journal ops, attempts).
+fn run(plan: Option<&str>, policy: FaultPolicy) -> (f64, Vec<u32>, u64, u32) {
+    let smoke = std::env::var("HETGPU_BENCH_SMOKE").is_ok();
+    let blocks: u32 = if smoke { 64 } else { 256 };
+    let dims = LaunchDims::d1(blocks, 64);
+
+    let ctx = HetGpu::with_devices(&[DeviceKind::NvidiaSim, DeviceKind::NvidiaSim]).unwrap();
+    if let Some(p) = plan {
+        ctx.install_fault_plan(FaultPlan::parse(p).unwrap());
+    }
+    let m = ctx.compile_cuda(SRC).unwrap();
+    let bins = ctx.alloc_buffer::<u32>(16, 0).unwrap();
+    let peaks = ctx.alloc_buffer::<u32>(8, 0).unwrap();
+    ctx.upload(&bins, &[0; 16]).unwrap();
+    ctx.upload(&peaks, &[0; 8]).unwrap();
+    let t0 = Instant::now();
+    let mut launch = ctx
+        .launch(m, "slam")
+        .dims(dims)
+        .args(&[bins.arg(), peaks.arg()])
+        .fault_policy(policy)
+        .sharded(&[0, 1])
+        .unwrap();
+    let report = launch.wait().unwrap();
+    let wall = t0.elapsed().as_secs_f64();
+    (wall, ctx.download(&bins, 16).unwrap(), report.io.journal_ops, report.attempts)
+}
+
+fn main() {
+    let smoke = std::env::var("HETGPU_BENCH_SMOKE").is_ok();
+    let blocks: u32 = if smoke { 64 } else { 256 };
+    let threads = blocks as u64 * 64;
+
+    // ---- fault-free sharded baseline (gated) ----
+    let (fault_free_s, expect_bins, journal_ops, attempts) = run(None, FaultPolicy::FailFast);
+    assert_eq!(journal_ops, threads * 2, "every atomic journals exactly once");
+    assert_eq!(attempts, 2, "fault-free: one attempt per shard");
+
+    // ---- mid-kernel fault on device 1, redistributed to the survivor ----
+    let (recovery_s, bins, ops, att) =
+        run(Some("launch:dev=1,nth=0"), FaultPolicy::Redistribute);
+    assert_eq!(bins, expect_bins, "redistribute must join bit-identical");
+    assert_eq!(ops, threads * 2, "exactly-once journal replay under recovery");
+    assert!(att > 2, "recovery adds attempts");
+
+    // ---- same fault, retried on the same device ----
+    let (retry_s, bins, ops, _) =
+        run(Some("launch:dev=1,nth=0"), FaultPolicy::Retry { max: 3 });
+    assert_eq!(bins, expect_bins, "retry must join bit-identical");
+    assert_eq!(ops, threads * 2, "exactly-once journal replay under retry");
+
+    println!("\nE9: fault-tolerant sharded execution ({threads} threads, 2 shards)\n");
+    println!("  fault-free sharded     {:>10.3} ms  (gated: fault plane must be free)", fault_free_s * 1e3);
+    println!("  redistribute recovery  {:>10.3} ms  ({:.2}x fault-free)", recovery_s * 1e3, recovery_s / fault_free_s);
+    println!("  retry recovery         {:>10.3} ms  ({:.2}x fault-free, incl. backoff)", retry_s * 1e3, retry_s / fault_free_s);
+
+    let json_path =
+        std::env::var("HETGPU_BENCH_JSON").unwrap_or_else(|_| "BENCH_e9.json".into());
+    let json = format!(
+        "{{\n  \"bench\": \"e9_fault_recovery\",\n  \"fault\": {{\"fault_free_s\": {fault_free_s:.6}, \"recovery_s\": {recovery_s:.6}, \"retry_s\": {retry_s:.6}, \"journal_ops\": {journal_ops}}}\n}}\n"
+    );
+    match std::fs::write(&json_path, &json) {
+        Ok(()) => println!("\nwrote {json_path}"),
+        Err(e) => eprintln!("\nfailed to write {json_path}: {e}"),
+    }
+}

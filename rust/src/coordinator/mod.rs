@@ -71,6 +71,23 @@
 //! destination (epoch-validated, fail-closed), and resumes there,
 //! including across SIMT↔Tensix kinds.
 //!
+//! ## Fault recovery
+//!
+//! Because every shard re-executes deterministically from the launch
+//! baseline, a shard lost mid-kernel is recoverable without any shard
+//! having checkpointed: [`ShardedLaunch::wait`] detects device-fault
+//! poisoned shard streams (via the event graph's fault provenance) and
+//! applies the launch's [`FaultPolicy`] — fail fast with a typed
+//! `DeviceLost`, retry on the same device, or **redistribute** the dead
+//! shard's block range over the surviving shards' devices. The failed
+//! shard's partial byte-writes never reach the merge (its harvest is
+//! dropped, and the re-executed blocks' dirty runs cover and overwrite
+//! any pollution on its home regions), its journal is drained so only
+//! the recovery launches' entries replay (exactly-once), and the faulted
+//! device is quarantined out of future plans until
+//! `HetGpu::probe_device` reinstates it. The recovered join is
+//! bit-identical to the fault-free run (DESIGN.md §10).
+//!
 //! Joining also **destroys the shards' internal streams and retires
 //! their events**, so a service calling `launch_sharded` in a loop holds
 //! the event graph at a constant size.
@@ -84,7 +101,9 @@ use crate::isa::AtomicsClass;
 use crate::migrate::blob;
 use crate::migrate::state::Snapshot;
 use crate::runtime::api::{HetGpu, StreamHandle};
-use crate::runtime::events::EventId;
+use crate::runtime::device::HealthState;
+use crate::runtime::events::{EventId, LostInfo};
+use crate::runtime::faultinject::FaultPolicy;
 use crate::runtime::launch::{kernel_features, AtomicsMode, LaunchSpec};
 use crate::runtime::memory::GpuPtr;
 use crate::sim::snapshot::CostReport;
@@ -192,6 +211,12 @@ pub struct ShardReport {
     pub rebalanced: usize,
     /// Byte traffic of this launch (baseline / broadcast / merge).
     pub io: ShardIo,
+    /// Launch nodes recorded in total: the initial shards plus every
+    /// retry and redistribution piece (fault-free: the shard count).
+    pub attempts: u32,
+    /// Devices that faulted mid-launch and whose work was recovered
+    /// (same-device retry or redistribution), in detection order.
+    pub recovered_from: Vec<usize>,
 }
 
 /// An in-flight grid sharded over several devices. Join with
@@ -209,7 +234,17 @@ pub struct ShardedLaunch<'a> {
     baseline: Vec<Arc<Vec<u8>>>,
     /// Home-device watermarks cut at baseline refresh (per home device).
     cuts: HashMap<usize, u64>,
+    /// The launch spec, kept so fault recovery can re-record the failed
+    /// block ranges (shards re-execute deterministically from baseline).
+    spec: LaunchSpec,
+    /// What to do when a shard's device faults mid-kernel.
+    policy: FaultPolicy,
     rebalanced: usize,
+    /// Launch nodes recorded so far (initial shards + retries +
+    /// redistribution pieces).
+    attempts: u32,
+    /// Devices whose faulted work this launch recovered.
+    recovered_from: Vec<usize>,
     io: ShardIo,
     joined: bool,
 }
@@ -225,7 +260,9 @@ impl<'a> Coordinator<'a> {
     }
 
     /// The shard plan `launch_sharded` would use: contiguous block ranges
-    /// proportional to each device's dispatch worker count.
+    /// proportional to each device's dispatch worker count. Quarantined
+    /// devices are silently excluded (their share redistributes over the
+    /// healthy remainder); a plan with no healthy device left fails.
     pub fn plan(&self, grid_size: u32, devices: &[usize]) -> Result<Vec<(usize, ShardRange)>> {
         if devices.is_empty() {
             return Err(HetError::runtime("sharded launch needs at least one device"));
@@ -235,7 +272,16 @@ impl<'a> Coordinator<'a> {
             if devices[..i].contains(&d) {
                 return Err(HetError::runtime(format!("device {d} listed twice")));
             }
-            weights.push((d, self.ctx.runtime().device(d)?.engine.workers()));
+            let dev = self.ctx.runtime().device(d)?;
+            if dev.health() == HealthState::Quarantined {
+                continue;
+            }
+            weights.push((d, dev.engine.workers()));
+        }
+        if weights.is_empty() {
+            return Err(HetError::runtime(
+                "all requested devices are quarantined; probe_device to reinstate one",
+            ));
         }
         Ok(shard::split_grid(grid_size, &weights))
     }
@@ -252,14 +298,16 @@ impl<'a> Coordinator<'a> {
     /// shard gets an [`AtomicJournal`] its commutative global atomics
     /// append to, and [`ShardedLaunch::wait`] replays all journals
     /// against the launch baseline in place of the last-writer-wins byte
-    /// merge for the journaled words. Usually reached through
-    /// `LaunchBuilder::sharded`.
+    /// merge for the journaled words. `policy` selects the shard-fault
+    /// response applied at join (see [`FaultPolicy`]). Usually reached
+    /// through `LaunchBuilder::sharded`.
     pub fn launch_sharded(
         &self,
         spec: LaunchSpec,
         working_set: Option<&[GpuPtr]>,
         devices: &[usize],
         atomics: AtomicsMode,
+        policy: FaultPolicy,
     ) -> Result<ShardedLaunch<'a>> {
         let (grid_size, _) = spec.dims.validate()?;
         let plan = self.plan(grid_size, devices)?;
@@ -459,11 +507,15 @@ impl<'a> Coordinator<'a> {
         match record_all(&mut created, &mut io) {
             Ok(shards) => Ok(ShardedLaunch {
                 ctx: self.ctx,
+                attempts: shards.len() as u32,
                 shards,
                 regions,
                 baseline,
                 cuts,
+                spec,
+                policy,
                 rebalanced: 0,
+                recovered_from: Vec::new(),
                 io,
                 joined: false,
             }),
@@ -609,7 +661,7 @@ impl ShardedLaunch<'_> {
         if let Some(j) = &self.shards[idx].journal {
             pending.extend(j.entries_in_order());
         }
-        let delta = Snapshot {
+        let snap = Snapshot {
             stream: self.shards[idx].stream,
             src_device,
             paused,
@@ -625,12 +677,30 @@ impl ShardedLaunch<'_> {
 
         // Through the wire format — a delta-sized blob, the transport a
         // cross-host orchestrator would ship between machines (the
-        // receiver holds the launch baseline).
-        let delta = blob::deserialize(&blob::serialize(&delta))?;
+        // receiver holds the launch baseline). The fault plane's blob
+        // hook corrupts the wire bytes here when a `blob` spec is armed —
+        // the corruption must be caught below, never applied.
+        let mut wire = blob::serialize(&snap);
+        let _ = rt.fault.corrupt_blob(&mut wire);
+        // A corrupt blob fails **closed**: the source shard still holds
+        // its live state, so resume it in place (un-moving the shard, its
+        // journal untouched) and surface the error — never write a byte
+        // of a blob that didn't validate.
+        let delta = match blob::deserialize(&wire) {
+            Ok(d) => d,
+            Err(e) => {
+                self.ctx.graph().resume(self.shards[idx].stream, src_device, snap.paused)?;
+                return Err(e);
+            }
+        };
         // Wire sanity: the delta must still name this launch's baseline
-        // epoch and source device — fail closed before writing anything,
-        // the same contract `Snapshot::apply_delta` enforces.
-        if delta.base_epoch != Some(base_epoch) || delta.src_device != src_device {
+        // epoch, source device, and stream — fail closed before writing
+        // anything, the same contract `Snapshot::apply_delta` enforces.
+        if delta.base_epoch != Some(base_epoch)
+            || delta.src_device != src_device
+            || delta.stream != self.shards[idx].stream
+        {
+            self.ctx.graph().resume(self.shards[idx].stream, src_device, snap.paused)?;
             return Err(HetError::migrate(
                 "rebalance delta blob does not match the launch baseline",
             ));
@@ -732,6 +802,12 @@ impl ShardedLaunch<'_> {
     /// still execute; folding (byte-diff against the launch baseline, in
     /// shard order — bit-identical to the full-region merge) and the
     /// publish of the dirty-run union happen once all shards are in.
+    ///
+    /// A shard whose *device faulted* mid-kernel is handled per the
+    /// launch's [`FaultPolicy`] before anything is merged — see the
+    /// module docs' fault-recovery section. Non-fault errors (bad args,
+    /// ordered atomics, poisoned cuts) propagate unchanged: they would
+    /// fail identically on any device, so no recovery is attempted.
     pub fn wait(&mut self) -> Result<ShardReport> {
         if self.joined {
             return Err(HetError::runtime("sharded launch already joined"));
@@ -740,43 +816,101 @@ impl ShardedLaunch<'_> {
         self.io.merged_bytes = 0;
         self.io.published_bytes = 0;
 
-        // Join shards in block order: quiesce, then read that shard's
-        // dirty runs — trailing shards keep executing meanwhile.
+        // Join shards in block order: quiesce, apply the fault policy if
+        // the shard's device faulted, then read that shard's dirty runs
+        // — trailing shards keep executing meanwhile.
         let mut per_shard = Vec::with_capacity(self.shards.len());
         let mut merged = CostReport::default();
         let mut harvest: Vec<(Vec<(u64, u64)>, Vec<Vec<u8>>)> =
             Vec::with_capacity(self.shards.len());
-        for (si, shard) in self.shards.iter().enumerate() {
-            let halted = self.ctx.graph().quiesce(shard.stream)?;
-            if halted {
-                return Err(HetError::runtime(format!(
-                    "shard {}..{} is paused at a checkpoint — rebalance or resume it \
-                     before waiting",
-                    shard.range.lo, shard.range.hi
-                )));
-            }
-            let cost = self.ctx.stream_stats(shard.stream)?.cost;
-            merged.warp_instructions += cost.warp_instructions;
-            merged.total_cycles += cost.total_cycles;
-            merged.global_bytes += cost.global_bytes;
-            merged.device_cycles = merged.device_cycles.max(cost.device_cycles);
-            per_shard.push((shard.device, shard.range, cost));
-
-            let runs = self.shard_dirty(si)?;
-            let dev = rt.device(shard.device)?;
-            let mut bytes = Vec::with_capacity(runs.len());
-            {
-                // Shared gate: ordered against co-located user streams,
-                // concurrent with trailing shards on other devices.
-                let _gate = dev.exec.read().unwrap();
-                for &(addr, len) in &runs {
-                    let mut buf = vec![0u8; len as usize];
-                    dev.mem.read_bytes_into(addr, &mut buf)?;
-                    self.io.merged_bytes += len;
-                    bytes.push(buf);
+        let mut failed = vec![false; self.shards.len()];
+        for si in 0..self.shards.len() {
+            if let Some(fault) = self.quiesce_shard(si)? {
+                match self.policy {
+                    FaultPolicy::FailFast => {
+                        self.ctx.quarantine_device(fault.device);
+                        return Err(lost_error(fault));
+                    }
+                    FaultPolicy::Retry { max } => self.retry_shard(si, fault, max)?,
+                    FaultPolicy::Redistribute => {
+                        // Quarantine the device and discard the shard's
+                        // side effects: its journal entries are dropped
+                        // (the re-executed blocks journal afresh —
+                        // replaying both would double-apply) and its
+                        // harvest below is a placeholder, so the dead
+                        // device's partial byte-writes never reach the
+                        // merge.
+                        self.ctx.quarantine_device(fault.device);
+                        self.recovered_from.push(fault.device);
+                        let shard = &mut self.shards[si];
+                        if let Some(j) = &shard.journal {
+                            let _ = j.take_all();
+                        }
+                        shard.journal_carry.clear();
+                        failed[si] = true;
+                    }
                 }
             }
-            harvest.push((runs, bytes));
+            self.harvest_shard(si, failed[si], &mut merged, &mut per_shard, &mut harvest)?;
+        }
+
+        // Redistribute dead shards' ranges over the survivors: every
+        // block re-executes deterministically from the same broadcast
+        // image the dead shard saw (survivors hold every moved region,
+        // and nothing has been published yet), so the recovered join is
+        // bit-identical to the fault-free run. Survivors are then
+        // re-quiesced and re-harvested from scratch — their earlier
+        // harvests predate the recovery work.
+        let mut recovery_journals: Vec<Arc<AtomicJournal>> = Vec::new();
+        if failed.iter().any(|&f| f) {
+            let survivors: Vec<usize> =
+                (0..self.shards.len()).filter(|&i| !failed[i]).collect();
+            if survivors.is_empty() {
+                return Err(HetError::runtime(
+                    "every shard's device faulted; nothing left to redistribute to",
+                ));
+            }
+            let (grid_size, _) = self.spec.dims.validate()?;
+            let weights: Vec<(usize, usize)> = survivors
+                .iter()
+                .map(|&i| Ok((i, rt.device(self.shards[i].device)?.engine.workers())))
+                .collect::<Result<_>>()?;
+            for si in (0..self.shards.len()).filter(|&i| failed[i]) {
+                let range = self.shards[si].range;
+                let journaled = self.shards[si].journal.is_some();
+                for (owner, piece) in shard::split_grid(range.len(), &weights) {
+                    let piece =
+                        ShardRange { lo: range.lo + piece.lo, hi: range.lo + piece.hi };
+                    let journal = journaled.then(|| Arc::new(AtomicJournal::new(grid_size)));
+                    self.ctx.record_launch(
+                        self.shards[owner].stream,
+                        self.spec.clone(),
+                        Some(piece),
+                        &[],
+                        journal.clone(),
+                    )?;
+                    recovery_journals.extend(journal);
+                    rt.fault.counters.recoveries.fetch_add(1, Ordering::Relaxed);
+                    self.attempts += 1;
+                }
+            }
+            // A fault *during* recovery is terminal — no second-level
+            // redistribution: the quarantine already shrank the pool, and
+            // a cascade points at a systemic failure, not one flaky
+            // board.
+            per_shard.clear();
+            harvest.clear();
+            merged = CostReport::default();
+            self.io.merged_bytes = 0;
+            for si in 0..self.shards.len() {
+                if !failed[si] {
+                    if let Some(info) = self.quiesce_shard(si)? {
+                        self.ctx.quarantine_device(info.device);
+                        return Err(lost_error(info));
+                    }
+                }
+                self.harvest_shard(si, failed[si], &mut merged, &mut per_shard, &mut harvest)?;
+            }
         }
 
         // Cross-shard atomics protocol: collect each shard's journal
@@ -786,7 +920,7 @@ impl ShardedLaunch<'_> {
         // every shard's local image holds only its own updates there, so
         // last-writer-wins would drop the others' — their final value is
         // baseline + replay instead.
-        let jentries: Vec<Vec<AtomicEntry>> = self
+        let mut jentries: Vec<Vec<AtomicEntry>> = self
             .shards
             .iter()
             .map(|s| {
@@ -797,6 +931,14 @@ impl ShardedLaunch<'_> {
                 v
             })
             .collect();
+        // Recovery launches journal into fresh per-piece journals,
+        // appended after every shard's: commutativity makes the replayed
+        // values independent of that placement, and the failed shards'
+        // own journals were drained at quarantine time, so each logical
+        // atomic op replays exactly once.
+        for j in &recovery_journals {
+            jentries.push(j.entries_in_order());
+        }
         let all_entries: Vec<AtomicEntry> = jentries.iter().flatten().copied().collect();
         let jspans = journal::word_spans(&all_entries);
 
@@ -892,7 +1034,15 @@ impl ShardedLaunch<'_> {
         // writes and anything homes publish later mark pages stale).
         {
             let mut cache = self.ctx.coord.lock().unwrap();
-            for shard in &self.shards {
+            for (si, shard) in self.shards.iter().enumerate() {
+                // A failed shard's device replica holds partial kernel
+                // writes the merge never saw — drop its sync state so a
+                // reinstated device resyncs from scratch instead of
+                // trusting a polluted image.
+                if failed[si] {
+                    cache.dst.remove(&shard.device);
+                    continue;
+                }
                 if let Some(&cut) = shard.cut.get() {
                     cache.dst.insert(
                         shard.device,
@@ -922,7 +1072,154 @@ impl ShardedLaunch<'_> {
             .fetch_add(self.io.journal_ops, Ordering::Relaxed);
         self.joined = true;
 
-        Ok(ShardReport { merged, per_shard, rebalanced: self.rebalanced, io: self.io })
+        Ok(ShardReport {
+            merged,
+            per_shard,
+            rebalanced: self.rebalanced,
+            io: self.io,
+            attempts: self.attempts,
+            recovered_from: self.recovered_from.clone(),
+        })
+    }
+
+    /// Quiesce shard `si`'s stream. `Ok(None)`: drained clean.
+    /// `Ok(Some(info))`: the stream is poisoned by a *device fault*
+    /// (recoverable — the caller applies the launch's fault policy).
+    /// `Err`: halted at a checkpoint, or a non-fault (semantic) error,
+    /// which would fail identically on any device and is never retried.
+    fn quiesce_shard(&self, si: usize) -> Result<Option<LostInfo>> {
+        let shard = &self.shards[si];
+        match self.ctx.graph().quiesce(shard.stream) {
+            Ok(true) => Err(HetError::runtime(format!(
+                "shard {}..{} is paused at a checkpoint — rebalance or resume it \
+                 before waiting",
+                shard.range.lo, shard.range.hi
+            ))),
+            Ok(false) => Ok(None),
+            Err(e) => match self.ctx.graph().stream_fault(shard.stream) {
+                Ok(Some(info)) => Ok(Some(info)),
+                _ => Err(e),
+            },
+        }
+    }
+
+    /// `Retry` policy: re-record the failed shard on the *same* device up
+    /// to `max` times with capped backoff. Each attempt first resets the
+    /// poisoned stream, drains the shard's journal — the failed attempt's
+    /// partial entries must never replay — and **scrubs the failed
+    /// attempt's partial byte-writes** by restoring the launch baseline
+    /// over every run this launch dirtied on the device: the retry
+    /// re-executes every block from entry, and a thread that reads its
+    /// own output location (`x[i] = x[i] * 2`) would otherwise compound
+    /// the dead attempt's value instead of starting from baseline.
+    /// Exhausting `max` quarantines the device and surfaces the typed
+    /// loss.
+    fn retry_shard(&mut self, si: usize, mut fault: LostInfo, max: u32) -> Result<()> {
+        let rt = self.ctx.runtime();
+        for attempt in 1..=max {
+            rt.fault.counters.retries.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(std::time::Duration::from_millis((1u64 << attempt.min(4)).min(16)));
+            self.ctx.graph().reset_stream(self.shards[si].stream)?;
+            {
+                let shard = &mut self.shards[si];
+                if let Some(j) = &shard.journal {
+                    let _ = j.take_all();
+                }
+                shard.journal_carry.clear();
+            }
+            let scrub = self.shard_dirty(si)?;
+            {
+                let dev = rt.device(self.shards[si].device)?;
+                let _gate = dev.exec.write().unwrap();
+                for &(addr, len) in &scrub {
+                    let (ri, off) = self.locate(addr).expect("dirty run inside a region");
+                    dev.mem.write_bytes(addr, &self.baseline[ri][off..off + len as usize])?;
+                }
+            }
+            // Rebalance carry runs were part of the scrub (they are this
+            // launch's pre-move writes, also now rolled back); the retry
+            // regenerates everything from entry.
+            self.shards[si].carry.clear();
+            self.attempts += 1;
+            let (range, journal) = (self.shards[si].range, self.shards[si].journal.clone());
+            self.shards[si].event = self.ctx.record_launch(
+                self.shards[si].stream,
+                self.spec.clone(),
+                Some(range),
+                &[],
+                journal,
+            )?;
+            match self.quiesce_shard(si)? {
+                None => {
+                    let device = self.shards[si].device;
+                    let dev = rt.device(device)?;
+                    if dev.health() == HealthState::Healthy {
+                        dev.set_health(HealthState::Degraded);
+                    }
+                    rt.fault.counters.recoveries.fetch_add(1, Ordering::Relaxed);
+                    if !self.recovered_from.contains(&device) {
+                        self.recovered_from.push(device);
+                    }
+                    return Ok(());
+                }
+                Some(info) => fault = info,
+            }
+        }
+        self.ctx.quarantine_device(fault.device);
+        Err(lost_error(fault))
+    }
+
+    /// Read shard `si`'s cost and dirty runs into the join accumulators
+    /// (placeholder entries when the shard failed and was redistributed:
+    /// zero cost, no runs).
+    fn harvest_shard(
+        &mut self,
+        si: usize,
+        shard_failed: bool,
+        merged: &mut CostReport,
+        per_shard: &mut Vec<(usize, ShardRange, CostReport)>,
+        harvest: &mut Vec<(Vec<(u64, u64)>, Vec<Vec<u8>>)>,
+    ) -> Result<()> {
+        let (device, range) = (self.shards[si].device, self.shards[si].range);
+        if shard_failed {
+            per_shard.push((device, range, CostReport::default()));
+            harvest.push((Vec::new(), Vec::new()));
+            return Ok(());
+        }
+        let cost = self.ctx.stream_stats(self.shards[si].stream)?.cost;
+        merged.warp_instructions += cost.warp_instructions;
+        merged.total_cycles += cost.total_cycles;
+        merged.global_bytes += cost.global_bytes;
+        merged.device_cycles = merged.device_cycles.max(cost.device_cycles);
+        per_shard.push((device, range, cost));
+
+        let runs = self.shard_dirty(si)?;
+        let dev = self.ctx.runtime().device(device)?;
+        let mut bytes = Vec::with_capacity(runs.len());
+        {
+            // Shared gate: ordered against co-located user streams,
+            // concurrent with trailing shards on other devices.
+            let _gate = dev.exec.read().unwrap();
+            for &(addr, len) in &runs {
+                let mut buf = vec![0u8; len as usize];
+                dev.mem.read_bytes_into(addr, &mut buf)?;
+                self.io.merged_bytes += len;
+                bytes.push(buf);
+            }
+        }
+        harvest.push((runs, bytes));
+        Ok(())
+    }
+}
+
+/// Typed terminal error for an unrecovered shard fault.
+fn lost_error(info: LostInfo) -> HetError {
+    HetError::DeviceLost {
+        device: info.device,
+        device_name: info.device_name,
+        kernel: info.kernel,
+        block: info.block,
+        msg: info.msg,
     }
 }
 

@@ -11,6 +11,50 @@ use std::fmt;
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, HetError>;
 
+/// Launch provenance attached to a [`HetError::DeviceFault`]: which
+/// module/kernel was running and which thread block faulted. Filled
+/// incrementally as the error propagates up through layers that know
+/// each field (the simulator knows the block, the runtime knows the
+/// kernel and module uid) — multi-kernel streams stay debuggable.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultCtx {
+    /// Process-unique id of the module the faulting launch resolved.
+    pub module_uid: Option<u64>,
+    /// Kernel name of the faulting launch.
+    pub kernel: Option<String>,
+    /// Linear id of the thread block that faulted (lowest faulting
+    /// block — deterministic for any dispatch worker count).
+    pub block: Option<u32>,
+}
+
+impl FaultCtx {
+    fn is_empty(&self) -> bool {
+        self.module_uid.is_none() && self.kernel.is_none() && self.block.is_none()
+    }
+}
+
+impl fmt::Display for FaultCtx {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut sep = " (";
+        if let Some(k) = &self.kernel {
+            write!(f, "{sep}kernel `{k}`")?;
+            sep = ", ";
+        }
+        if let Some(b) = self.block {
+            write!(f, "{sep}block {b}")?;
+            sep = ", ";
+        }
+        if let Some(uid) = self.module_uid {
+            write!(f, "{sep}module uid {uid}")?;
+            sep = ", ";
+        }
+        if sep == ", " {
+            write!(f, ")")?;
+        }
+        Ok(())
+    }
+}
+
 /// Unified error enum for all hetGPU layers.
 #[derive(Debug)]
 pub enum HetError {
@@ -27,8 +71,27 @@ pub enum HetError {
     Translate { backend: String, msg: String },
 
     /// Device simulator faults (the simulated equivalent of a GPU fault,
-    /// e.g. an illegal global-memory access).
-    DeviceFault { device: String, msg: String },
+    /// e.g. an illegal global-memory access), with launch provenance.
+    DeviceFault { device: String, msg: String, ctx: FaultCtx },
+
+    /// A device was lost to a fault during sharded execution and the
+    /// launch's [fault policy] could not (or chose not to) recover. The
+    /// device is quarantined; provenance names the faulting kernel and
+    /// block when known.
+    ///
+    /// [fault policy]: crate::runtime::faultinject::FaultPolicy
+    DeviceLost {
+        /// Runtime id of the lost device.
+        device: usize,
+        /// Device kind name (e.g. `amd-sim`).
+        device_name: String,
+        /// Kernel that was executing when the device faulted.
+        kernel: Option<String>,
+        /// Linear id of the faulting thread block.
+        block: Option<u32>,
+        /// Underlying fault message.
+        msg: String,
+    },
 
     /// Runtime API misuse or resource exhaustion.
     Runtime { msg: String },
@@ -100,8 +163,21 @@ impl fmt::Display for HetError {
             HetError::Translate { backend, msg } => {
                 write!(f, "backend `{backend}` translation error: {msg}")
             }
-            HetError::DeviceFault { device, msg } => {
-                write!(f, "device fault on {device}: {msg}")
+            HetError::DeviceFault { device, msg, ctx } => {
+                write!(f, "device fault on {device}: {msg}")?;
+                if !ctx.is_empty() {
+                    write!(f, "{ctx}")?;
+                }
+                Ok(())
+            }
+            HetError::DeviceLost { device, device_name, kernel, block, msg } => {
+                write!(f, "device {device} ({device_name}) lost: {msg}")?;
+                let ctx =
+                    FaultCtx { module_uid: None, kernel: kernel.clone(), block: *block };
+                if !ctx.is_empty() {
+                    write!(f, "{ctx}")?;
+                }
+                write!(f, " [device quarantined]")
             }
             HetError::Runtime { msg } => write!(f, "runtime error: {msg}"),
             HetError::InvalidHandle { resource, msg } => {
@@ -175,7 +251,43 @@ impl HetError {
     }
     /// Convenience constructor for device faults.
     pub fn fault(device: impl Into<String>, msg: impl Into<String>) -> Self {
-        HetError::DeviceFault { device: device.into(), msg: msg.into() }
+        HetError::DeviceFault { device: device.into(), msg: msg.into(), ctx: FaultCtx::default() }
+    }
+    /// Whether this error is a device fault (injected or organic).
+    pub fn is_device_fault(&self) -> bool {
+        matches!(self, HetError::DeviceFault { .. })
+    }
+    /// Whether this error reports a device lost to an unrecovered shard
+    /// fault (the device is quarantined).
+    pub fn is_device_lost(&self) -> bool {
+        matches!(self, HetError::DeviceLost { .. })
+    }
+    /// Attach the faulting block id to a [`HetError::DeviceFault`]
+    /// (first writer wins — inner layers know the true block). No-op on
+    /// other variants.
+    pub fn with_fault_block(mut self, block: u32) -> Self {
+        if let HetError::DeviceFault { ctx, .. } = &mut self {
+            ctx.block.get_or_insert(block);
+        }
+        self
+    }
+    /// Attach the kernel name to a [`HetError::DeviceFault`] (first
+    /// writer wins). No-op on other variants.
+    pub fn with_fault_kernel(mut self, kernel: &str) -> Self {
+        if let HetError::DeviceFault { ctx, .. } = &mut self {
+            if ctx.kernel.is_none() {
+                ctx.kernel = Some(kernel.to_string());
+            }
+        }
+        self
+    }
+    /// Attach the module uid to a [`HetError::DeviceFault`] (first
+    /// writer wins). No-op on other variants.
+    pub fn with_fault_module(mut self, uid: u64) -> Self {
+        if let HetError::DeviceFault { ctx, .. } = &mut self {
+            ctx.module_uid.get_or_insert(uid);
+        }
+        self
     }
     /// Convenience constructor for translation errors.
     pub fn translate(backend: impl Into<String>, msg: impl Into<String>) -> Self {

@@ -47,6 +47,7 @@ use crate::isa::tensix_isa::TensixMode;
 use crate::migrate::state::{MigrationReport, Snapshot};
 use crate::runtime::device::{Device, DeviceKind};
 use crate::runtime::events::{copy_end, EventGraph, EventId, EventStatus, GraphStats, NodeKind};
+use crate::runtime::faultinject::FaultInjector;
 use crate::runtime::jit::JitCache;
 use crate::runtime::launch::{Arg, LaunchSpec};
 use crate::runtime::memory::{
@@ -61,6 +62,8 @@ use std::sync::{Arc, Mutex, OnceLock};
 // Handle types live next to their backing tables; re-exported here so the
 // public API surface reads from one place (`api::{HetGpu, ModuleHandle,
 // StreamHandle, ...}`).
+pub use crate::runtime::device::HealthState;
+pub use crate::runtime::faultinject::{FaultPlan, FaultPolicy, FaultStats};
 pub use crate::runtime::launch::AtomicsMode;
 pub use crate::runtime::stream::StreamHandle;
 pub use crate::runtime::ModuleHandle;
@@ -136,11 +139,18 @@ impl HetGpu {
                 None => Device::new(i, *k),
             })
             .collect();
+        // Arm the fault plane from the environment (inert when unset; a
+        // malformed value warns once and is ignored).
+        let fault = FaultInjector::default();
+        if let Some(plan) = FaultPlan::from_env() {
+            fault.install(plan);
+        }
         let inner = Arc::new(RuntimeInner {
             devices,
             modules: std::sync::RwLock::new(ModuleTable::new()),
             jit: JitCache::new(),
             memory: MemoryManager::new(crate::runtime::device::DEVICE_MEM_BYTES),
+            fault,
         });
         let graph = EventGraph::new(inner.clone());
         // Enough executors that every device can be mid-launch while a few
@@ -335,9 +345,17 @@ impl HetGpu {
 
     /// Create a stream bound to `device`. Streams are thin graph handles —
     /// creating one spawns no thread; the graph is the single source of
-    /// stream identity.
+    /// stream identity. Quarantined devices refuse new streams (execution
+    /// placement is gated; their memory stays readable) until a
+    /// [`HetGpu::probe_device`] reinstates them.
     pub fn create_stream(&self, device: usize) -> Result<StreamHandle> {
-        self.inner.device(device)?;
+        let dev = self.inner.device(device)?;
+        if dev.health() == HealthState::Quarantined {
+            return Err(HetError::runtime(format!(
+                "device {device} ({}) is quarantined after a fault; probe_device to reinstate",
+                dev.kind.name()
+            )));
+        }
         Ok(self.graph.add_stream(device))
     }
 
@@ -377,6 +395,7 @@ impl HetGpu {
             tensix_mode: None,
             working_set: None,
             atomics: AtomicsMode::default(),
+            fault_policy: FaultPolicy::default(),
         }
     }
 
@@ -445,6 +464,83 @@ impl HetGpu {
             ops_replayed: self.journal_counters.ops_replayed.load(Ordering::Relaxed),
             entries_shipped: self.journal_counters.entries_shipped.load(Ordering::Relaxed),
         }
+    }
+
+    // ---- fault plane (injection, health, recovery observability) ----
+
+    /// Install (or replace) a deterministic fault plan on this context
+    /// (see [`FaultPlan::parse`] for the `HETGPU_FAULT_PLAN` grammar,
+    /// which is also read automatically at context creation). Operation
+    /// ordinals (`nth`) count from installation.
+    pub fn install_fault_plan(&self, plan: FaultPlan) {
+        self.inner.fault.install(plan);
+    }
+
+    /// Context-lifetime fault-plane counters: faults injected by the
+    /// plan, device faults observed by the executor (injected or
+    /// organic), retry attempts, recovered shards, and quarantines.
+    pub fn fault_stats(&self) -> FaultStats {
+        self.inner.fault.stats()
+    }
+
+    /// Current operational health of `device`.
+    pub fn device_health(&self, device: usize) -> Result<HealthState> {
+        Ok(self.inner.device(device)?.health())
+    }
+
+    /// Move `device` to `Quarantined` (idempotent), excluding it from
+    /// stream creation and shard placement. Crate-internal: fault
+    /// policies quarantine; users reinstate via `probe_device`.
+    pub(crate) fn quarantine_device(&self, device: usize) {
+        if let Ok(d) = self.inner.device(device) {
+            if d.health() != HealthState::Quarantined {
+                d.set_health(HealthState::Quarantined);
+                self.inner.fault.counters.quarantines.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Probe a (possibly quarantined) device: run a small self-test
+    /// kernel directly on the engine — bypassing the quarantine gate and
+    /// the fault plan's launch hook, so the probe measures the device,
+    /// not the armed plan — and verify its output. Returns `true` and
+    /// reinstates the device to `Healthy` on success; returns `false`
+    /// (health unchanged) when the probe faults or miscomputes.
+    pub fn probe_device(&self, device: usize) -> Result<bool> {
+        self.inner.device(device)?;
+        let m = self.compile_cuda(
+            r#"__global__ void hetgpu_probe(unsigned* p) {
+                p[threadIdx.x] = threadIdx.x * 2654435761u + 12345u;
+            }"#,
+        )?;
+        let buf = self.alloc_buffer::<u32>(32, device)?;
+        let spec = LaunchSpec {
+            module: m,
+            kernel: "hetgpu_probe".to_string(),
+            dims: LaunchDims::d1(1, 32),
+            args: vec![Arg::Ptr(buf.ptr())],
+            tensix_mode_hint: None,
+        };
+        let run = self.inner.run_launch(device, &spec, None, None, None, None);
+        let passed = match run {
+            Ok(_) => self
+                .download(&buf, 32)?
+                .iter()
+                .enumerate()
+                .all(|(i, &v)| v == (i as u32).wrapping_mul(2654435761).wrapping_add(12345)),
+            Err(e) if e.is_device_fault() => false,
+            Err(e) => {
+                let _ = self.free_buffer(&buf);
+                let _ = self.unload_module(m);
+                return Err(e);
+            }
+        };
+        let _ = self.free_buffer(&buf);
+        let _ = self.unload_module(m);
+        if passed {
+            self.inner.device(device)?.set_health(HealthState::Healthy);
+        }
+        Ok(passed)
     }
 
     // ---- async copies (event-graph nodes) ----
@@ -759,6 +855,7 @@ pub struct LaunchBuilder<'a> {
     tensix_mode: Option<TensixMode>,
     working_set: Option<Vec<GpuPtr>>,
     atomics: AtomicsMode,
+    fault_policy: FaultPolicy,
 }
 
 impl<'a> LaunchBuilder<'a> {
@@ -811,7 +908,22 @@ impl<'a> LaunchBuilder<'a> {
         self
     }
 
-    fn build_spec(self) -> Result<(&'a HetGpu, LaunchSpec, Option<Vec<GpuPtr>>, AtomicsMode)> {
+    /// How a **sharded** launch responds to a shard's device fault (see
+    /// [`FaultPolicy`]): `FailFast` (default) quarantines and surfaces a
+    /// typed `DeviceLost`; `Retry { max }` re-executes the failed shard
+    /// on the same device with capped backoff; `Redistribute`
+    /// re-executes its block range on the surviving devices — either
+    /// recovery joins bit-identical to the fault-free run. Single-stream
+    /// launches ignore it.
+    pub fn fault_policy(mut self, policy: FaultPolicy) -> Self {
+        self.fault_policy = policy;
+        self
+    }
+
+    #[allow(clippy::type_complexity)]
+    fn build_spec(
+        self,
+    ) -> Result<(&'a HetGpu, LaunchSpec, Option<Vec<GpuPtr>>, AtomicsMode, FaultPolicy)> {
         let dims = self
             .dims
             .ok_or_else(|| HetError::runtime("launch dims not set (LaunchBuilder::dims)"))?;
@@ -822,23 +934,23 @@ impl<'a> LaunchBuilder<'a> {
             args: self.args,
             tensix_mode_hint: self.tensix_mode,
         };
-        Ok((self.ctx, spec, self.working_set, self.atomics))
+        Ok((self.ctx, spec, self.working_set, self.atomics, self.fault_policy))
     }
 
     /// Record the launch on `stream`; returns the launch's event
     /// (queryable via [`HetGpu::event_query`], waitable from other
     /// streams via [`HetGpu::wait_event`]).
     pub fn record(self, stream: StreamHandle) -> Result<EventId> {
-        let (ctx, spec, _ws, _atomics) = self.build_spec()?;
+        let (ctx, spec, _ws, _atomics, _policy) = self.build_spec()?;
         ctx.record_launch(stream, spec, None, &[], None)
     }
 
     /// Split the launch's grid over `devices` through the coordinator
     /// (shards start executing immediately); join with
-    /// [`ShardedLaunch::wait`]. Consumes the working-set hint and the
-    /// atomics mode.
+    /// [`ShardedLaunch::wait`]. Consumes the working-set hint, the
+    /// atomics mode, and the fault policy.
     pub fn sharded(self, devices: &[usize]) -> Result<ShardedLaunch<'a>> {
-        let (ctx, spec, ws, atomics) = self.build_spec()?;
-        Coordinator::new(ctx).launch_sharded(spec, ws.as_deref(), devices, atomics)
+        let (ctx, spec, ws, atomics, policy) = self.build_spec()?;
+        Coordinator::new(ctx).launch_sharded(spec, ws.as_deref(), devices, atomics, policy)
     }
 }

@@ -10,8 +10,41 @@ use crate::sim::dispatch::DispatchOptions;
 use crate::sim::mem::DeviceMemory;
 use crate::sim::simt::SimtSim;
 use crate::sim::tensix::TensixSim;
-use std::sync::atomic::AtomicBool;
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
 use std::sync::RwLock;
+
+/// Operational health of a device (fault-tolerance layer).
+///
+/// `Healthy → Degraded` on a recovered fault (retried copy or shard);
+/// `* → Quarantined` on an unrecovered fault or a fail-fast policy;
+/// `Quarantined → Healthy` only through a successful
+/// `HetGpu::probe_device`. Quarantine gates *execution placement*
+/// (stream creation, shard planning) — memory on the device stays
+/// readable so snapshots and evacuation keep working.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HealthState {
+    Healthy,
+    Degraded,
+    Quarantined,
+}
+
+impl HealthState {
+    fn from_u8(v: u8) -> HealthState {
+        match v {
+            1 => HealthState::Degraded,
+            2 => HealthState::Quarantined,
+            _ => HealthState::Healthy,
+        }
+    }
+
+    fn as_u8(self) -> u8 {
+        match self {
+            HealthState::Healthy => 0,
+            HealthState::Degraded => 1,
+            HealthState::Quarantined => 2,
+        }
+    }
+}
 
 /// The GPU vendors hetGPU supports (paper abstract: NVIDIA, AMD, Intel,
 /// Tenstorrent). `AmdWave64Sim` is the GCN-era wave64 configuration used
@@ -106,6 +139,9 @@ pub struct Device {
     /// Cooperative pause flag (paper §4.2): checked by compiled-in
     /// checkpoint guards and at block-dispatch boundaries.
     pub pause: AtomicBool,
+    /// Operational health (see [`HealthState`]); written by the fault
+    /// plane, read at stream creation and shard planning.
+    health: AtomicU8,
 }
 
 /// Default simulated DRAM size per device (256 MiB — enough for every
@@ -128,7 +164,18 @@ impl Device {
             mem: DeviceMemory::new(DEVICE_MEM_BYTES, kind.name()),
             exec: RwLock::new(()),
             pause: AtomicBool::new(false),
+            health: AtomicU8::new(HealthState::Healthy.as_u8()),
         }
+    }
+
+    /// Current operational health.
+    pub fn health(&self) -> HealthState {
+        HealthState::from_u8(self.health.load(Ordering::Acquire))
+    }
+
+    /// Set operational health (fault plane / probe reinstatement).
+    pub fn set_health(&self, state: HealthState) {
+        self.health.store(state.as_u8(), Ordering::Release);
     }
 
     /// Like [`Device::new`] with an explicit dispatch worker count
@@ -149,6 +196,7 @@ impl Device {
             mem: DeviceMemory::new(DEVICE_MEM_BYTES, "tenstorrent-sim"),
             exec: RwLock::new(()),
             pause: AtomicBool::new(false),
+            health: AtomicU8::new(HealthState::Healthy.as_u8()),
         }
     }
 }
@@ -174,5 +222,17 @@ mod tests {
         assert!(d.kind.is_simt());
         let t = Device::new(1, DeviceKind::TenstorrentSim);
         assert!(!t.kind.is_simt());
+    }
+
+    #[test]
+    fn health_transitions() {
+        let d = Device::new(0, DeviceKind::NvidiaSim);
+        assert_eq!(d.health(), HealthState::Healthy);
+        d.set_health(HealthState::Degraded);
+        assert_eq!(d.health(), HealthState::Degraded);
+        d.set_health(HealthState::Quarantined);
+        assert_eq!(d.health(), HealthState::Quarantined);
+        d.set_health(HealthState::Healthy);
+        assert_eq!(d.health(), HealthState::Healthy);
     }
 }

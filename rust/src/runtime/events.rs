@@ -51,6 +51,8 @@
 use crate::coordinator::shard::ShardRange;
 use crate::delta::journal::AtomicJournal;
 use crate::error::{HetError, Result};
+use crate::runtime::device::HealthState;
+use crate::runtime::faultinject::FaultKind;
 use crate::runtime::handle::{impl_handle_raw, SlotTable};
 use crate::runtime::jit::JitMemo;
 use crate::runtime::launch::LaunchSpec;
@@ -59,6 +61,7 @@ use crate::runtime::stream::{PausedKernel, StreamHandle, StreamStats};
 use crate::runtime::RuntimeInner;
 use crate::sim::snapshot::{BlockResume, CostReport, LaunchOutcome};
 use std::collections::VecDeque;
+use std::sync::atomic;
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 use std::time::Instant;
@@ -146,6 +149,27 @@ struct Node {
     deps: Vec<EventId>,
 }
 
+/// Provenance of a device fault that poisoned a stream, kept alongside
+/// the sticky error string so recovery layers (the coordinator's fault
+/// policies) can distinguish *device* faults — recoverable by re-placing
+/// work — from semantic errors (bad args, ordered atomics) that would
+/// fail identically anywhere.
+#[derive(Debug, Clone)]
+pub struct LostInfo {
+    /// Runtime id of the device that faulted.
+    pub device: usize,
+    /// Device kind name as reported by the fault (e.g. `amd-sim`).
+    pub device_name: String,
+    /// Kernel that was executing, when known.
+    pub kernel: Option<String>,
+    /// Faulting thread block (lowest faulting linear id), when known.
+    pub block: Option<u32>,
+    /// Module uid of the faulting launch, when known.
+    pub module_uid: Option<u64>,
+    /// Underlying fault message.
+    pub msg: String,
+}
+
 struct StreamState {
     device: usize,
     queue: VecDeque<Node>,
@@ -154,6 +178,9 @@ struct StreamState {
     /// Halted at a checkpoint; queued nodes are deferred until `Resume`.
     halted: bool,
     sticky: Option<String>,
+    /// Device-fault provenance when the sticky error was a device fault
+    /// (first fault wins, like `sticky`).
+    fault: Option<LostInfo>,
     paused: Option<PausedKernel>,
     stats: StreamStats,
     /// The stream's last `(module, kernel)` JIT resolution (launch
@@ -267,6 +294,7 @@ impl EventGraph {
             running: false,
             halted: false,
             sticky: None,
+            fault: None,
             paused: None,
             stats: StreamStats::default(),
             jit_memo: Arc::new(Mutex::new(None)),
@@ -406,6 +434,42 @@ impl EventGraph {
             .get(stream.slot, stream.gen)
             .map(|s| s.stats.clone())
             .ok_or_else(bad_stream)
+    }
+
+    /// Device-fault provenance of a poisoned stream, if the poisoning
+    /// error was a device fault. `None` means the stream is healthy or
+    /// failed for a non-device reason (recovery must not retry those).
+    pub fn stream_fault(&self, stream: StreamHandle) -> Result<Option<LostInfo>> {
+        let g = self.inner.lock().unwrap();
+        g.streams
+            .get(stream.slot, stream.gen)
+            .map(|s| s.fault.clone())
+            .ok_or_else(bad_stream)
+    }
+
+    /// Clear a stream's sticky error so it can run again — the recovery
+    /// path for fault policies: the poison already drained the queue
+    /// (stranded nodes failed terminally), so after the reset the stream
+    /// is empty and re-recorded work executes normally. Accumulated
+    /// stats survive (failed launches never recorded any). Refuses on a
+    /// halted or busy stream.
+    pub fn reset_stream(&self, stream: StreamHandle) -> Result<()> {
+        {
+            let mut g = self.inner.lock().unwrap();
+            let st = g.streams.get_mut(stream.slot, stream.gen).ok_or_else(bad_stream)?;
+            if st.halted {
+                return Err(HetError::runtime(
+                    "cannot reset a stream halted at a checkpoint; resume it first",
+                ));
+            }
+            if st.running || !st.queue.is_empty() {
+                return Err(HetError::runtime("cannot reset a busy stream; synchronize first"));
+            }
+            st.sticky = None;
+            st.fault = None;
+        }
+        self.cv.notify_all();
+        Ok(())
     }
 
     /// Live/allocated counts of both handle tables.
@@ -659,7 +723,38 @@ fn executor_loop(g: &EventGraph) {
         let result = if dep_failed {
             Err(HetError::runtime("awaited event failed"))
         } else {
-            execute_node(&g.rt, device, &node.kind, &memo)
+            let mut result = execute_node(&g.rt, device, &node.kind, &memo);
+            // Copies are idempotent (same source bytes, same destination
+            // range), so a device fault during one — a flaky link, an
+            // injected transient — is retried in place instead of
+            // poisoning the stream; cross-stream waiters then observe
+            // Completed and unblock. Launches are NOT retried here: a
+            // faulted launch may have committed partial writes, and only
+            // the coordinator knows how to discard those against a
+            // baseline.
+            if matches!(
+                node.kind,
+                NodeKind::CopyH2D { .. } | NodeKind::CopyD2H { .. } | NodeKind::CopyPeer { .. }
+            ) {
+                let mut attempts = 1;
+                while attempts < 3
+                    && matches!(&result, Err(e) if e.is_device_fault())
+                {
+                    g.rt.fault.counters.retries.fetch_add(1, atomic::Ordering::Relaxed);
+                    result = execute_node(&g.rt, device, &node.kind, &memo);
+                    attempts += 1;
+                }
+                if attempts > 1 && result.is_ok() {
+                    // Recovered after a fault: the device works but is
+                    // suspect.
+                    if let Ok(d) = g.rt.device(device) {
+                        if d.health() == HealthState::Healthy {
+                            d.set_health(HealthState::Degraded);
+                        }
+                    }
+                }
+            }
+            result
         };
 
         {
@@ -697,6 +792,23 @@ fn executor_loop(g: &EventGraph) {
                 }
                 Err(e) => {
                     let msg = e.to_string();
+                    // Device faults keep typed provenance alongside the
+                    // sticky string so recovery layers can tell "this
+                    // device broke" from "this program is wrong".
+                    let lost = match &e {
+                        HetError::DeviceFault { device: name, msg, ctx } => Some(LostInfo {
+                            device,
+                            device_name: name.clone(),
+                            kernel: ctx.kernel.clone(),
+                            block: ctx.block,
+                            module_uid: ctx.module_uid,
+                            msg: msg.clone(),
+                        }),
+                        _ => None,
+                    };
+                    if lost.is_some() {
+                        g.rt.fault.counters.observed.fetch_add(1, atomic::Ordering::Relaxed);
+                    }
                     // Everything deferred behind the poison will never
                     // run; fail those nodes now so cross-stream waiters
                     // (wait_event deps) reach a terminal state instead of
@@ -705,6 +817,9 @@ fn executor_loop(g: &EventGraph) {
                         Some(st) => {
                             st.running = false;
                             st.sticky.get_or_insert(msg.clone());
+                            if st.fault.is_none() {
+                                st.fault = lost;
+                            }
                             st.queue.drain(..).collect()
                         }
                         None => Vec::new(),
@@ -756,6 +871,12 @@ fn execute_node(
 ) -> Result<Exec> {
     match kind {
         NodeKind::Launch { spec, shard, journal } => {
+            // The fault plane speaks in block offsets *relative to the
+            // executed range* (it cannot know shard ranges); the executor
+            // — which does — resolves the absolute faulting block here.
+            // Skip-directive blocks outside a shard's range never run, so
+            // an unresolved absolute id might never fire.
+            let fault_off = rt.fault.launch_fault(device);
             let dirs = match shard {
                 Some(r) => {
                     let (grid_size, _) = spec.dims.validate()?;
@@ -769,14 +890,18 @@ fn execute_node(
                 }
                 None => None,
             };
-            run_timed(rt, device, spec, dirs.as_deref(), journal.as_ref(), memo)
+            let fault = fault_off.map(|off| match shard {
+                Some(r) => r.lo.saturating_add(off).min(r.hi.saturating_sub(1)),
+                None => off,
+            });
+            run_timed(rt, device, spec, dirs.as_deref(), journal.as_ref(), memo, fault)
         }
         NodeKind::Resume { paused } => {
             let dirs = paused.resume_directives();
             // A resumed journaled shard keeps journaling into the same
             // journal (carried inside the paused kernel), so entries of
             // re-entered blocks append behind their pre-pause batches.
-            run_timed(rt, device, &paused.spec, Some(&dirs), paused.journal.as_ref(), memo)
+            run_timed(rt, device, &paused.spec, Some(&dirs), paused.journal.as_ref(), memo, None)
         }
         NodeKind::CopyH2D { dst, data } => {
             let (base, size, dev_id) = rt.memory.lookup(*dst)?;
@@ -789,6 +914,9 @@ fn execute_node(
             Ok(Exec::Plain)
         }
         NodeKind::CopyD2H { src, dst } => {
+            if let Some(msg) = rt.fault.copy_fault(device, FaultKind::D2h) {
+                return Err(HetError::fault(rt.device(device)?.kind.name(), msg));
+            }
             // Reads the *stream's* device (not the residency table): a
             // coordinator shard's stream is bound to the device actually
             // holding the shard's image, including after a rebalance.
@@ -802,6 +930,9 @@ fn execute_node(
             Ok(Exec::Plain)
         }
         NodeKind::CopyPeer { ptr, bytes, src_device } => {
+            if let Some(msg) = rt.fault.copy_fault(device, FaultKind::Broadcast) {
+                return Err(HetError::fault(rt.device(device)?.kind.name(), msg));
+            }
             let (base, size, _home) = rt.memory.lookup(*ptr)?;
             if copy_end(ptr.0, *bytes, "peer")? > base.saturating_add(size) {
                 return Err(HetError::runtime("peer copy out of bounds"));
@@ -833,9 +964,11 @@ fn run_timed(
     resume: Option<&[BlockResume]>,
     journal: Option<&Arc<AtomicJournal>>,
     memo: &Mutex<Option<JitMemo>>,
+    fault: Option<u32>,
 ) -> Result<Exec> {
     let t0 = Instant::now();
-    let outcome = rt.run_launch(device, spec, resume, journal.map(|j| j.as_ref()), Some(memo))?;
+    let outcome =
+        rt.run_launch(device, spec, resume, journal.map(|j| j.as_ref()), Some(memo), fault)?;
     let wall_us = t0.elapsed().as_secs_f64() * 1e6;
     let workers = rt.device(device).map(|d| d.engine.workers()).unwrap_or(1);
     let cost = *outcome.cost();

@@ -1,0 +1,438 @@
+//! Deterministic fault-injection plane.
+//!
+//! Real GPUs fail mid-kernel: an Xid on one board, a flaky PCIe link
+//! corrupting a DMA, a migration blob truncated on the wire. The paper's
+//! state capture/reload machinery exists to survive exactly this, so the
+//! runtime needs a way to *cause* those failures on demand — seeded and
+//! programmable, so every failure mode is bit-reproducible in tests and
+//! benches. A [`FaultPlan`] describes which operations fail ("device 1's
+//! first launch node, at block offset 3"; "the next D2H on device 0";
+//! "the next migration blob"); the [`FaultInjector`] installed on the
+//! runtime arms it and fires each spec deterministically by per-device
+//! operation count, never by wall clock or thread timing.
+//!
+//! Plans install through [`crate::runtime::api::HetGpu::install_fault_plan`]
+//! or the `HETGPU_FAULT_PLAN` environment variable (see [`FaultPlan::parse`]
+//! for the grammar). With no plan installed the plane costs one relaxed
+//! atomic load per operation — the fault-free path pays nothing measurable.
+
+use crate::error::{HetError, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// The operation classes a fault spec can target.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FaultKind {
+    /// Fail a kernel launch node mid-grid (at a block offset).
+    Launch,
+    /// Fail a peer/broadcast copy (coordinator working-set distribution).
+    Broadcast,
+    /// Fail a device-to-host copy (sync or async D2H nodes).
+    D2h,
+    /// Corrupt the next serialized migration/rebalance blob.
+    Blob,
+}
+
+impl FaultKind {
+    fn parse(s: &str) -> Option<FaultKind> {
+        Some(match s {
+            "launch" => FaultKind::Launch,
+            "broadcast" => FaultKind::Broadcast,
+            "d2h" => FaultKind::D2h,
+            "blob" => FaultKind::Blob,
+            _ => return None,
+        })
+    }
+
+    fn name(self) -> &'static str {
+        match self {
+            FaultKind::Launch => "launch",
+            FaultKind::Broadcast => "broadcast",
+            FaultKind::D2h => "d2h",
+            FaultKind::Blob => "blob",
+        }
+    }
+}
+
+/// One programmed fault: fire on the `nth` matching operation (counted
+/// per device from plan installation), `times` consecutive times.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultSpec {
+    pub kind: FaultKind,
+    /// Restrict to one device id; `None` matches any device (`Blob`
+    /// specs ignore the device entirely — blobs are host-side).
+    pub device: Option<usize>,
+    /// Zero-based index of the first matching operation that fails.
+    pub nth: u64,
+    /// For `Launch`: block offset *relative to the executed range* at
+    /// which the grid faults (the injector cannot know shard ranges; the
+    /// executor resolves the absolute block id).
+    pub block: u32,
+    /// How many consecutive matching operations fail; `0` means every
+    /// one from `nth` on (a permanently dead device/link).
+    pub times: u32,
+}
+
+/// A parsed, installable set of fault specs plus the seed that makes
+/// value-level corruption (blob byte flips) reproducible.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct FaultPlan {
+    pub specs: Vec<FaultSpec>,
+    pub seed: u64,
+}
+
+impl FaultPlan {
+    /// Parse the `HETGPU_FAULT_PLAN` grammar: semicolon-separated specs
+    /// of the form `kind:key=val,...` plus an optional `seed=N` item.
+    ///
+    /// Kinds: `launch`, `broadcast`, `d2h`, `blob`. Keys: `dev` (device
+    /// id; omitted = any), `nth` (default 0), `block` (launch only,
+    /// default 0), `times` (default 1; 0 = always). Examples:
+    ///
+    /// ```text
+    /// launch:dev=1,nth=0,block=3
+    /// d2h:dev=0,times=2;blob:nth=0;seed=42
+    /// ```
+    pub fn parse(s: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for item in s.split(';').map(str::trim).filter(|i| !i.is_empty()) {
+            if let Some(seed) = item.strip_prefix("seed=") {
+                plan.seed = seed
+                    .parse()
+                    .map_err(|_| HetError::runtime(format!("fault plan: bad seed {seed:?}")))?;
+                continue;
+            }
+            let (kind, rest) = match item.split_once(':') {
+                Some((k, r)) => (k, r),
+                None => (item, ""),
+            };
+            let kind = FaultKind::parse(kind).ok_or_else(|| {
+                HetError::runtime(format!(
+                    "fault plan: unknown fault kind {kind:?} (want launch|broadcast|d2h|blob)"
+                ))
+            })?;
+            let mut spec = FaultSpec { kind, device: None, nth: 0, block: 0, times: 1 };
+            for kv in rest.split(',').map(str::trim).filter(|kv| !kv.is_empty()) {
+                let (key, val) = kv.split_once('=').ok_or_else(|| {
+                    HetError::runtime(format!("fault plan: expected key=value, got {kv:?}"))
+                })?;
+                let num: u64 = val.parse().map_err(|_| {
+                    HetError::runtime(format!("fault plan: {key}={val:?} is not a number"))
+                })?;
+                match key {
+                    "dev" => spec.device = Some(num as usize),
+                    "nth" => spec.nth = num,
+                    "block" => spec.block = num as u32,
+                    "times" => spec.times = num as u32,
+                    _ => {
+                        return Err(HetError::runtime(format!(
+                            "fault plan: unknown key {key:?} (want dev|nth|block|times)"
+                        )))
+                    }
+                }
+            }
+            plan.specs.push(spec);
+        }
+        Ok(plan)
+    }
+
+    /// Read `HETGPU_FAULT_PLAN`. Unset means no plan; a malformed value
+    /// warns loudly **once** (naming the bad value and the no-faults
+    /// fallback — the same contract `HETGPU_SIM_THREADS` has) and is
+    /// treated as absent.
+    pub fn from_env() -> Option<FaultPlan> {
+        let raw = std::env::var("HETGPU_FAULT_PLAN").ok()?;
+        match FaultPlan::parse(&raw) {
+            Ok(plan) if plan.specs.is_empty() => None,
+            Ok(plan) => Some(plan),
+            Err(e) => {
+                static WARNED: std::sync::Once = std::sync::Once::new();
+                WARNED.call_once(|| {
+                    eprintln!(
+                        "hetgpu: HETGPU_FAULT_PLAN={raw:?} is invalid ({e}); \
+                         falling back to no injected faults"
+                    );
+                });
+                None
+            }
+        }
+    }
+}
+
+/// How a sharded launch responds to a shard fault. Set per launch via
+/// `LaunchBuilder::fault_policy`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FaultPolicy {
+    /// Surface a typed [`HetError::DeviceLost`] immediately; the faulted
+    /// device is quarantined, survivors' work is discarded.
+    #[default]
+    FailFast,
+    /// Re-execute the failed shard on the *same* device up to `max`
+    /// times with capped exponential backoff; quarantine + `DeviceLost`
+    /// when exhausted.
+    Retry { max: u32 },
+    /// Quarantine the faulted device and re-execute its block range on
+    /// the surviving shards' devices, from the launch baseline. The join
+    /// is bit-identical to the fault-free run.
+    Redistribute,
+}
+
+/// Cumulative fault-plane counters (per context, monotonic).
+#[derive(Default)]
+pub struct FaultCounters {
+    /// Faults the injector fired.
+    pub injected: AtomicU64,
+    /// Device faults the event-graph executor observed (injected or
+    /// organic).
+    pub observed: AtomicU64,
+    /// Retry attempts (copy-node retries + same-device shard retries).
+    pub retries: AtomicU64,
+    /// Shards whose work was recovered (same-device retry success or
+    /// redistribute to survivors).
+    pub recoveries: AtomicU64,
+    /// Devices moved to `Quarantined`.
+    pub quarantines: AtomicU64,
+}
+
+/// Snapshot of [`FaultCounters`], returned by `HetGpu::fault_stats`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct FaultStats {
+    pub injected: u64,
+    pub observed: u64,
+    pub retries: u64,
+    pub recoveries: u64,
+    pub quarantines: u64,
+}
+
+/// Armed spec plus how many times it has fired.
+struct Armed {
+    spec: FaultSpec,
+    fired: u32,
+}
+
+impl Armed {
+    /// Whether operation number `n` (per-device, per-kind) fires this
+    /// spec; advances the fired count when it does.
+    fn fires(&mut self, kind: FaultKind, device: Option<usize>, n: u64) -> bool {
+        if self.spec.kind != kind {
+            return false;
+        }
+        if let (Some(want), Some(have)) = (self.spec.device, device) {
+            if want != have {
+                return false;
+            }
+        }
+        if n < self.spec.nth {
+            return false;
+        }
+        if self.spec.times != 0 && self.fired >= self.spec.times {
+            return false;
+        }
+        self.fired += 1;
+        true
+    }
+}
+
+#[derive(Default)]
+struct InjectState {
+    specs: Vec<Armed>,
+    seed: u64,
+    /// Per-device launch-node counters (operation ordinals are counted
+    /// from plan installation, per device — deterministic regardless of
+    /// executor interleaving because each stream's nodes run FIFO).
+    launch_seq: HashMap<usize, u64>,
+    /// Per-(device, kind) copy-node counters.
+    copy_seq: HashMap<(usize, FaultKind), u64>,
+    /// Host-side blob serialization counter.
+    blob_seq: u64,
+}
+
+/// The per-context injector: holds the armed plan and the observability
+/// counters. Lives on `RuntimeInner`; all hooks are `&self`.
+#[derive(Default)]
+pub struct FaultInjector {
+    /// Fast-path gate: false whenever no plan is installed, so the
+    /// disabled plane costs one relaxed load per hooked operation.
+    armed: AtomicBool,
+    state: Mutex<InjectState>,
+    pub(crate) counters: FaultCounters,
+}
+
+impl FaultInjector {
+    /// Install (or replace) the active plan; operation counters restart
+    /// from zero so `nth` is relative to installation.
+    pub fn install(&self, plan: FaultPlan) {
+        let mut st = self.state.lock().unwrap();
+        let any = !plan.specs.is_empty();
+        *st = InjectState {
+            specs: plan.specs.into_iter().map(|spec| Armed { spec, fired: 0 }).collect(),
+            seed: plan.seed,
+            ..InjectState::default()
+        };
+        self.armed.store(any, Ordering::Release);
+    }
+
+    /// Hook for launch nodes: returns the block offset (relative to the
+    /// executed range) at which this launch must fault, if any.
+    pub fn launch_fault(&self, device: usize) -> Option<u32> {
+        if !self.armed.load(Ordering::Acquire) {
+            return None;
+        }
+        let mut st = self.state.lock().unwrap();
+        let seq = st.launch_seq.entry(device).or_insert(0);
+        let n = *seq;
+        *seq += 1;
+        let block = st
+            .specs
+            .iter_mut()
+            .find_map(|a| a.fires(FaultKind::Launch, Some(device), n).then_some(a.spec.block));
+        if block.is_some() {
+            self.counters.injected.fetch_add(1, Ordering::Relaxed);
+        }
+        block
+    }
+
+    /// Hook for copy nodes (`Broadcast` for peer copies, `D2h` for
+    /// device-to-host): returns the fault message when the copy must
+    /// fail.
+    pub fn copy_fault(&self, device: usize, kind: FaultKind) -> Option<String> {
+        if !self.armed.load(Ordering::Acquire) {
+            return None;
+        }
+        let mut st = self.state.lock().unwrap();
+        let seq = st.copy_seq.entry((device, kind)).or_insert(0);
+        let n = *seq;
+        *seq += 1;
+        let fires = st.specs.iter_mut().any(|a| a.fires(kind, Some(device), n));
+        if fires {
+            self.counters.injected.fetch_add(1, Ordering::Relaxed);
+            Some(format!("injected {} fault (op {n} on device {device})", kind.name()))
+        } else {
+            None
+        }
+    }
+
+    /// Hook for blob serialization: deterministically flips one header
+    /// byte (seeded offset within the first 16 bytes, where the magic /
+    /// version / src-device / stream fields live, so deserialization or
+    /// the epoch check reliably fails). Returns whether it fired.
+    pub fn corrupt_blob(&self, bytes: &mut [u8]) -> bool {
+        if !self.armed.load(Ordering::Acquire) || bytes.is_empty() {
+            return false;
+        }
+        let mut st = self.state.lock().unwrap();
+        let n = st.blob_seq;
+        st.blob_seq += 1;
+        let fires = st.specs.iter_mut().any(|a| a.fires(FaultKind::Blob, None, n));
+        if !fires {
+            return false;
+        }
+        // xorshift64 over seed + ordinal: reproducible, never zero-state.
+        let mut x = st.seed.wrapping_add(n).wrapping_mul(0x9E3779B97F4A7C15) | 1;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        let off = (x as usize) % bytes.len().min(16);
+        bytes[off] ^= 0x5A;
+        self.counters.injected.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    /// Snapshot the counters.
+    pub fn stats(&self) -> FaultStats {
+        FaultStats {
+            injected: self.counters.injected.load(Ordering::Relaxed),
+            observed: self.counters.observed.load(Ordering::Relaxed),
+            retries: self.counters.retries.load(Ordering::Relaxed),
+            recoveries: self.counters.recoveries.load(Ordering::Relaxed),
+            quarantines: self.counters.quarantines.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_grammar() {
+        let plan = FaultPlan::parse("launch:dev=1,nth=2,block=3;d2h:times=0;blob:nth=1;seed=42")
+            .unwrap();
+        assert_eq!(plan.seed, 42);
+        assert_eq!(plan.specs.len(), 3);
+        assert_eq!(
+            plan.specs[0],
+            FaultSpec { kind: FaultKind::Launch, device: Some(1), nth: 2, block: 3, times: 1 }
+        );
+        assert_eq!(
+            plan.specs[1],
+            FaultSpec { kind: FaultKind::D2h, device: None, nth: 0, block: 0, times: 0 }
+        );
+        assert_eq!(plan.specs[2].kind, FaultKind::Blob);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(FaultPlan::parse("explode:dev=0").is_err());
+        assert!(FaultPlan::parse("launch:dev=abc").is_err());
+        assert!(FaultPlan::parse("launch:color=red").is_err());
+        assert!(FaultPlan::parse("seed=many").is_err());
+        assert!(FaultPlan::parse("launch dev 0").is_err());
+    }
+
+    #[test]
+    fn launch_fault_fires_on_nth_per_device() {
+        let inj = FaultInjector::default();
+        inj.install(FaultPlan::parse("launch:dev=1,nth=1,block=7").unwrap());
+        // Device 0 never matches; device 1 fires on its *second* launch.
+        assert_eq!(inj.launch_fault(0), None);
+        assert_eq!(inj.launch_fault(1), None);
+        assert_eq!(inj.launch_fault(1), Some(7));
+        assert_eq!(inj.launch_fault(1), None); // times=1: armed once
+        assert_eq!(inj.stats().injected, 1);
+    }
+
+    #[test]
+    fn times_zero_fires_forever() {
+        let inj = FaultInjector::default();
+        inj.install(FaultPlan::parse("d2h:dev=0,times=0").unwrap());
+        for _ in 0..4 {
+            assert!(inj.copy_fault(0, FaultKind::D2h).is_some());
+        }
+        assert!(inj.copy_fault(1, FaultKind::D2h).is_none());
+        assert!(inj.copy_fault(0, FaultKind::Broadcast).is_none());
+    }
+
+    #[test]
+    fn blob_corruption_is_deterministic() {
+        let reference = {
+            let inj = FaultInjector::default();
+            inj.install(FaultPlan::parse("blob;seed=9").unwrap());
+            let mut b = vec![0u8; 64];
+            assert!(inj.corrupt_blob(&mut b));
+            b
+        };
+        let inj = FaultInjector::default();
+        inj.install(FaultPlan::parse("blob;seed=9").unwrap());
+        let mut b = vec![0u8; 64];
+        assert!(inj.corrupt_blob(&mut b));
+        assert_eq!(b, reference);
+        assert_ne!(b, vec![0u8; 64]);
+        assert!(b[..16].iter().any(|&x| x != 0), "corruption must land in the header");
+        // Second blob: spec exhausted (times=1) — untouched.
+        let mut c = vec![0u8; 64];
+        assert!(!inj.corrupt_blob(&mut c));
+        assert_eq!(c, vec![0u8; 64]);
+    }
+
+    #[test]
+    fn uninstalled_plane_is_inert() {
+        let inj = FaultInjector::default();
+        assert_eq!(inj.launch_fault(0), None);
+        assert!(inj.copy_fault(0, FaultKind::D2h).is_none());
+        let mut b = vec![1u8; 8];
+        assert!(!inj.corrupt_blob(&mut b));
+        assert_eq!(inj.stats(), FaultStats::default());
+    }
+}

@@ -7,6 +7,7 @@
 pub mod api;
 pub mod device;
 pub mod events;
+pub mod faultinject;
 pub(crate) mod handle;
 pub mod jit;
 pub mod launch;
@@ -19,6 +20,7 @@ use crate::hetir::module::Module;
 use crate::isa::tensix_isa::TensixMode;
 use crate::isa::AtomicsClass;
 use crate::runtime::device::{Device, DeviceKind, Engine};
+use crate::runtime::faultinject::FaultInjector;
 use crate::runtime::handle::SlotTable;
 use crate::runtime::jit::{JitCache, JitKey, JitMemo};
 use crate::runtime::launch::{args_to_values, choose_tensix_mode, validate_dims, LaunchSpec};
@@ -99,6 +101,9 @@ pub struct RuntimeInner {
     pub modules: RwLock<ModuleTable>,
     pub jit: JitCache,
     pub memory: MemoryManager,
+    /// Deterministic fault-injection plane (inert unless a plan is
+    /// installed) plus the fault/recovery observability counters.
+    pub fault: FaultInjector,
 }
 
 impl RuntimeInner {
@@ -117,7 +122,10 @@ impl RuntimeInner {
     /// a journaled coordinator shard; dropped when the lowered program
     /// performs no global atomics). `memo` is the stream's last
     /// `(module, kernel)` JIT resolution: same-kernel repeat launches
-    /// skip the shared cache's lock + key hash entirely.
+    /// skip the shared cache's lock + key hash entirely. `fault`
+    /// (resolved by the event-graph executor from the injector's launch
+    /// hook) makes the grid fault deterministically at that block linear
+    /// id.
     pub fn run_launch(
         &self,
         device_id: usize,
@@ -125,6 +133,7 @@ impl RuntimeInner {
         resume: Option<&[BlockResume]>,
         journal: Option<&AtomicJournal>,
         memo: Option<&Mutex<Option<JitMemo>>>,
+        fault: Option<u32>,
     ) -> Result<LaunchOutcome> {
         let dev = self.device(device_id)?;
         // Checked-arithmetic geometry validation up front: overflowing or
@@ -185,7 +194,7 @@ impl RuntimeInner {
         // (different streams, coordinator shards) overlap on one device;
         // only whole-device snapshot capture/restore excludes them.
         let _gate = dev.exec.read().unwrap();
-        match (&dev.engine, prog.as_ref()) {
+        let out = match (&dev.engine, prog.as_ref()) {
             (Engine::Simt(sim), crate::backends::DeviceProgram::Simt(p)) => sim
                 .run_grid_journaled(
                     p,
@@ -195,6 +204,7 @@ impl RuntimeInner {
                     &dev.pause,
                     resume,
                     journal,
+                    fault,
                 ),
             (Engine::Tensix(sim), crate::backends::DeviceProgram::Tensix(p)) => {
                 // Multi-core shared memory needs a global heap region.
@@ -213,6 +223,7 @@ impl RuntimeInner {
                     resume,
                     heap.map(|h| h.0),
                     journal,
+                    fault,
                 );
                 if let Some(h) = heap {
                     // Shared contents are captured in block snapshots, so
@@ -222,6 +233,9 @@ impl RuntimeInner {
                 out
             }
             _ => Err(HetError::runtime("engine/program kind mismatch (JIT cache corrupt)")),
-        }
+        };
+        // Device faults carry launch provenance: the simulator stamped
+        // the faulting block and kernel; the runtime knows the module.
+        out.map_err(|e| e.with_fault_kernel(&spec.kernel).with_fault_module(uid))
     }
 }

@@ -133,7 +133,7 @@ impl SimtSim {
         pause: &AtomicBool,
         resume: Option<&[BlockResume]>,
     ) -> Result<LaunchOutcome> {
-        self.run_grid_journaled(p, dims, params, global, pause, resume, None)
+        self.run_grid_journaled(p, dims, params, global, pause, resume, None, None)
     }
 
     /// [`SimtSim::run_grid`] with the cross-shard atomics protocol
@@ -144,6 +144,11 @@ impl SimtSim {
     /// `HetError::OrderedAtomic`. Entry order is a function of the
     /// program (block linear id, then warp-scheduler order), not of the
     /// dispatch worker count.
+    ///
+    /// `fault` injects a deterministic device fault at the given block
+    /// linear id (the fault plane's launch hook): the block errors
+    /// before executing any instruction. A fault id outside the
+    /// executed range never fires.
     #[allow(clippy::too_many_arguments)]
     pub fn run_grid_journaled(
         &self,
@@ -154,6 +159,7 @@ impl SimtSim {
         pause: &AtomicBool,
         resume: Option<&[BlockResume]>,
         journal: Option<&AtomicJournal>,
+        fault: Option<u32>,
     ) -> Result<LaunchOutcome> {
         let (grid_size, block_size) = dims.validate()?;
         if block_size > 1024 {
@@ -179,8 +185,17 @@ impl SimtSim {
             pause,
             resume,
             |b| {
+                if fault == Some(b) {
+                    return Err(HetError::fault(
+                        self.cfg.name,
+                        format!("injected fault at block {b}"),
+                    )
+                    .with_fault_block(b)
+                    .with_fault_kernel(&p.kernel_name));
+                }
                 let directive = resume.map(|r| &r[b as usize]);
                 self.run_block(p, dims, b, params, global, pause, directive, journal)
+                    .map_err(|e| e.with_fault_block(b).with_fault_kernel(&p.kernel_name))
             },
         )?;
 

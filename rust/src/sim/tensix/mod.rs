@@ -66,13 +66,16 @@ impl TensixSim {
         resume: Option<&[BlockResume]>,
         shared_heap: Option<u64>,
     ) -> Result<LaunchOutcome> {
-        self.run_grid_journaled(p, dims, params, global, pause, resume, shared_heap, None)
+        self.run_grid_journaled(p, dims, params, global, pause, resume, shared_heap, None, None)
     }
 
     /// [`TensixSim::run_grid`] with the cross-shard atomics protocol
     /// engaged (see `SimtSim::run_grid_journaled`): commutative global
     /// atomics journal per block, ordered ops fail closed. Scratchpad
-    /// (`local`) atomics are core-private and never journal.
+    /// (`local`) atomics are core-private and never journal. `fault`
+    /// injects a deterministic device fault at the given block linear id
+    /// (same contract as the SIMT engine — uniform recovery semantics
+    /// across vendors).
     #[allow(clippy::too_many_arguments)]
     pub fn run_grid_journaled(
         &self,
@@ -84,6 +87,7 @@ impl TensixSim {
         resume: Option<&[BlockResume]>,
         shared_heap: Option<u64>,
         journal: Option<&AtomicJournal>,
+        fault: Option<u32>,
     ) -> Result<LaunchOutcome> {
         let (grid_size, block_size) = dims.validate()?;
         match p.mode {
@@ -114,6 +118,14 @@ impl TensixSim {
             pause,
             resume,
             |b| {
+                if fault == Some(b) {
+                    return Err(HetError::fault(
+                        self.cfg.name,
+                        format!("injected fault at block {b}"),
+                    )
+                    .with_fault_block(b)
+                    .with_fault_kernel(&p.kernel_name));
+                }
                 let directive = resume.map(|r| &r[b as usize]);
                 let shared_base = match p.mode {
                     TensixMode::VectorMultiCore => {
@@ -137,6 +149,7 @@ impl TensixSim {
                         journal,
                     ),
                 }
+                .map_err(|e| e.with_fault_block(b).with_fault_kernel(&p.kernel_name))
             },
         )?;
 

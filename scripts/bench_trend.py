@@ -53,6 +53,12 @@ def main(argv):
         # protocol started journaling redundantly (e.g. double-committing
         # across pauses); wall times are printed but not gated.
         ("atomics", "journal_ops"),
+        # Fault plane (BENCH_e9): gate the *fault-free* sharded wall
+        # clock — the injection hooks and health checks sit on the hot
+        # path and must stay unmeasurable when no plan is armed.
+        # Recovery times are printed but not gated (they include the
+        # deliberate retry backoff).
+        ("fault", "fault_free_s"),
     ]:
         p = prev.get(section, {}).get(key)
         c = curr.get(section, {}).get(key)

@@ -541,3 +541,121 @@ fn runtime_worker_plumbing_and_env_escape_hatch() {
         .collect();
     assert_eq!(results[0], results[1]);
 }
+
+/// Fault-recovery acceptance (the PR-6 acid test): the same histogram+max
+/// grid as the atomics acid test, but one shard's device faults
+/// mid-kernel under `FaultPolicy::Redistribute`. The recovered join — at
+/// 2 and 4 shards, sequential and parallel dispatch — must be
+/// **bit-identical** to the fault-free single-device run: memory, merged
+/// cost totals, and snapshot blobs. Failed launches record no stats and
+/// their journals are discarded, so neither partial writes nor
+/// double-replayed atomics can leak into the result.
+#[test]
+fn sharded_fault_recovery_bit_identical_under_redistribute() {
+    use hetgpu::runtime::api::{FaultPlan, FaultPolicy};
+    let dims = LaunchDims::d1(64, 64);
+    let to_bytes = |v: &[u32]| -> Vec<u8> { v.iter().flat_map(|x| x.to_le_bytes()).collect() };
+
+    // Fault-free single-device reference (same construction as the
+    // atomics acid test, pinned against the host-computed expectation).
+    let reference = {
+        let ctx = HetGpu::with_devices(&[DeviceKind::NvidiaSim]).unwrap();
+        let m = ctx.compile_cuda(ATOMICS_SRC).unwrap();
+        let bins = ctx.alloc_buffer::<u32>(16, 0).unwrap();
+        let peaks = ctx.alloc_buffer::<u32>(8, 0).unwrap();
+        ctx.upload(&bins, &[0; 16]).unwrap();
+        ctx.upload(&peaks, &[0; 8]).unwrap();
+        let s = ctx.create_stream(0).unwrap();
+        ctx.launch(m, "slam").dims(dims).args(&[bins.arg(), peaks.arg()]).record(s).unwrap();
+        ctx.synchronize(s).unwrap();
+        let cost = ctx.stream_stats(s).unwrap().cost;
+        let got_bins = ctx.download(&bins, 16).unwrap();
+        let got_peaks = ctx.download(&peaks, 8).unwrap();
+        let mut expect_bins = [0u32; 16];
+        let mut expect_peaks = [0u32; 8];
+        for i in 0..4096u32 {
+            expect_bins[(i & 15) as usize] = expect_bins[(i & 15) as usize].wrapping_add(i);
+            expect_peaks[(i & 7) as usize] =
+                expect_peaks[(i & 7) as usize].max(i.wrapping_mul(40503));
+        }
+        assert_eq!(got_bins, expect_bins.to_vec());
+        assert_eq!(got_peaks, expect_peaks.to_vec());
+        (got_bins.clone(), got_peaks.clone(), cost, {
+            blob::serialize(&Snapshot {
+                stream: StreamHandle::from_raw(0),
+                src_device: 0,
+                paused: None,
+                allocations: vec![
+                    (bins.ptr().0, to_bytes(&got_bins)),
+                    (peaks.ptr().0, to_bytes(&got_peaks)),
+                ],
+                shard: None,
+                epoch: 0,
+                base_epoch: None,
+                journal: Vec::new(),
+            })
+        })
+    };
+
+    for devices in [2usize, 4] {
+        for workers in [1usize, 4] {
+            let kinds = vec![DeviceKind::NvidiaSim; devices];
+            let ctx = HetGpu::with_devices_and_workers(&kinds, workers).unwrap();
+            // Device 1's first launch faults at the first block of its
+            // shard range — mid-grid, after real work has run.
+            ctx.install_fault_plan(FaultPlan::parse("launch:dev=1,nth=0,block=0").unwrap());
+            let m = ctx.compile_cuda(ATOMICS_SRC).unwrap();
+            let bins = ctx.alloc_buffer::<u32>(16, 0).unwrap();
+            let peaks = ctx.alloc_buffer::<u32>(8, 0).unwrap();
+            ctx.upload(&bins, &[0; 16]).unwrap();
+            ctx.upload(&peaks, &[0; 8]).unwrap();
+            let devs: Vec<usize> = (0..devices).collect();
+            let mut launch = ctx
+                .launch(m, "slam")
+                .dims(dims)
+                .args(&[bins.arg(), peaks.arg()])
+                .fault_policy(FaultPolicy::Redistribute)
+                .sharded(&devs)
+                .unwrap();
+            let report = launch.wait().unwrap();
+
+            let tag = format!("{devices} shards, {workers} workers");
+            assert_eq!(report.recovered_from, vec![1], "{tag}");
+            assert!(report.attempts > devices as u32, "{tag}");
+            // Exactly-once journal replay despite the recovery.
+            assert_eq!(report.io.journal_ops, 8192, "{tag}");
+            let stats = ctx.fault_stats();
+            assert_eq!(stats.injected, 1, "{tag}");
+            assert_eq!(stats.quarantines, 1, "{tag}");
+            assert!(stats.recoveries >= 1, "{tag}");
+
+            let got_bins = ctx.download(&bins, 16).unwrap();
+            let got_peaks = ctx.download(&peaks, 8).unwrap();
+            assert_eq!(reference.0, got_bins, "bins differ: {tag}");
+            assert_eq!(reference.1, got_peaks, "peaks differ: {tag}");
+            // Work-conserving totals: the failed attempt recorded no
+            // stats, so the recovered run cost exactly the fault-free run
+            // (device_cycles is a max-merge and legitimately shifts with
+            // placement, so it is excluded, as in the atomics acid test).
+            assert_eq!(
+                (reference.2.warp_instructions, reference.2.total_cycles, reference.2.global_bytes),
+                (report.merged.warp_instructions, report.merged.total_cycles, report.merged.global_bytes),
+                "cost totals differ: {tag}"
+            );
+            let blob_bytes = blob::serialize(&Snapshot {
+                stream: StreamHandle::from_raw(0),
+                src_device: 0,
+                paused: None,
+                allocations: vec![
+                    (bins.ptr().0, to_bytes(&got_bins)),
+                    (peaks.ptr().0, to_bytes(&got_peaks)),
+                ],
+                shard: None,
+                epoch: 0,
+                base_epoch: None,
+                journal: Vec::new(),
+            });
+            assert_eq!(reference.3, blob_bytes, "snapshot blobs differ: {tag}");
+        }
+    }
+}

@@ -1,7 +1,7 @@
 //! Failure injection: the abstraction layer must surface device faults
 //! uniformly (paper §4.3 *Error Handling*) and recover cleanly.
 
-use hetgpu::runtime::api::HetGpu;
+use hetgpu::runtime::api::{FaultPlan, FaultPolicy, HealthState, HetGpu};
 use hetgpu::runtime::device::DeviceKind;
 use hetgpu::runtime::launch::Arg;
 use hetgpu::sim::simt::LaunchDims;
@@ -155,4 +155,210 @@ fn corrupt_blobs_never_panic() {
     blob.extend_from_slice(&1u32.to_le_bytes());
     blob.extend_from_slice(&[0xFF; 32]);
     assert!(deserialize(&blob).is_err());
+}
+
+// ---- deterministic fault injection + recovery (fault plane) ----
+
+/// Histogram slam used by the recovery tests: 8 blocks x 32 threads, one
+/// global atomic per thread, so every bin ends at exactly 32 and the
+/// cross-shard journal carries 256 ops.
+const HIST_SRC: &str = r#"
+__global__ void hist(unsigned* bins) {
+    unsigned i = blockIdx.x * blockDim.x + threadIdx.x;
+    atomicAdd(&bins[i & 7u], 1u);
+}
+"#;
+
+/// An injected mid-kernel device fault under the default `FailFast`
+/// policy surfaces a typed `DeviceLost` naming the kernel and faulting
+/// block, and quarantines the device: stream creation refuses it until a
+/// probe reinstates it.
+#[test]
+fn injected_fault_failfast_quarantines_with_provenance() {
+    let ctx = HetGpu::with_devices(&[DeviceKind::NvidiaSim, DeviceKind::NvidiaSim]).unwrap();
+    ctx.install_fault_plan(FaultPlan::parse("launch:dev=1,nth=0,block=1").unwrap());
+    let m = ctx.compile_cuda(HIST_SRC).unwrap();
+    let bins = ctx.alloc_buffer::<u32>(8, 0).unwrap();
+    ctx.upload(&bins, &[0; 8]).unwrap();
+    let mut launch = ctx
+        .launch(m, "hist")
+        .dims(LaunchDims::d1(8, 32))
+        .arg(bins.arg())
+        .sharded(&[0, 1])
+        .unwrap();
+    let err = launch.wait().unwrap_err();
+    assert!(err.is_device_lost(), "{err}");
+    let msg = err.to_string();
+    assert!(msg.contains("lost: injected fault"), "{msg}");
+    assert!(msg.contains("kernel `hist`"), "{msg}");
+    assert!(msg.contains("block"), "{msg}");
+    assert!(msg.contains("[device quarantined]"), "{msg}");
+    drop(launch);
+
+    assert_eq!(ctx.device_health(1).unwrap(), HealthState::Quarantined);
+    let err = ctx.create_stream(1).unwrap_err().to_string();
+    assert!(err.contains("quarantined"), "{err}");
+
+    let stats = ctx.fault_stats();
+    assert_eq!(stats.injected, 1);
+    assert_eq!(stats.observed, 1);
+    assert_eq!(stats.quarantines, 1);
+    assert_eq!(stats.recoveries, 0);
+}
+
+/// `Retry` re-executes the failed shard on the same device: the join is
+/// bit-identical to a fault-free run (discarded journal, deterministic
+/// re-execution), the device is marked `Degraded` (not quarantined), and
+/// the report counts the extra attempt.
+#[test]
+fn retry_policy_reexecutes_failed_shard_bit_identically() {
+    let ctx = HetGpu::with_devices(&[DeviceKind::NvidiaSim, DeviceKind::NvidiaSim]).unwrap();
+    ctx.install_fault_plan(FaultPlan::parse("launch:dev=1,nth=0").unwrap());
+    let m = ctx.compile_cuda(HIST_SRC).unwrap();
+    let bins = ctx.alloc_buffer::<u32>(8, 0).unwrap();
+    ctx.upload(&bins, &[0; 8]).unwrap();
+    let mut launch = ctx
+        .launch(m, "hist")
+        .dims(LaunchDims::d1(8, 32))
+        .arg(bins.arg())
+        .fault_policy(FaultPolicy::Retry { max: 3 })
+        .sharded(&[0, 1])
+        .unwrap();
+    let report = launch.wait().unwrap();
+
+    // Exactly-once atomics: the failed attempt's journal was drained, so
+    // the replay applies each thread's op once despite the re-execution.
+    assert_eq!(ctx.download(&bins, 8).unwrap(), vec![32u32; 8]);
+    assert_eq!(report.io.journal_ops, 256);
+    assert_eq!(report.attempts, 3); // 2 shards + 1 retry
+    assert_eq!(report.recovered_from, vec![1]);
+    assert_eq!(ctx.device_health(1).unwrap(), HealthState::Degraded);
+
+    let stats = ctx.fault_stats();
+    assert_eq!(stats.injected, 1);
+    assert_eq!(stats.retries, 1);
+    assert_eq!(stats.recoveries, 1);
+    assert_eq!(stats.quarantines, 0);
+}
+
+/// `Redistribute` quarantines the faulted device and re-executes its
+/// block range on the survivors; the next sharded launch places no shard
+/// there until a passing probe reinstates it.
+#[test]
+fn redistribute_quarantines_then_probe_reinstates() {
+    let ctx = HetGpu::with_devices(&[DeviceKind::NvidiaSim, DeviceKind::NvidiaSim]).unwrap();
+    ctx.install_fault_plan(FaultPlan::parse("launch:dev=1,nth=0").unwrap());
+    let m = ctx.compile_cuda(HIST_SRC).unwrap();
+    let bins = ctx.alloc_buffer::<u32>(8, 0).unwrap();
+
+    let run = |expect_shards: usize| {
+        ctx.upload(&bins, &[0; 8]).unwrap();
+        let mut launch = ctx
+            .launch(m, "hist")
+            .dims(LaunchDims::d1(8, 32))
+            .arg(bins.arg())
+            .fault_policy(FaultPolicy::Redistribute)
+            .sharded(&[0, 1])
+            .unwrap();
+        let report = launch.wait().unwrap();
+        assert_eq!(report.per_shard.len(), expect_shards);
+        assert_eq!(ctx.download(&bins, 8).unwrap(), vec![32u32; 8]);
+        report
+    };
+
+    let report = run(2);
+    assert_eq!(report.recovered_from, vec![1]);
+    assert_eq!(ctx.device_health(1).unwrap(), HealthState::Quarantined);
+    assert!(ctx.fault_stats().recoveries >= 1);
+
+    // Quarantined devices are silently excluded from shard placement:
+    // the same device list now plans a single shard on device 0.
+    let report = run(1);
+    assert_eq!(report.per_shard[0].0, 0);
+    assert!(report.recovered_from.is_empty());
+
+    // A passing probe reinstates the device (the plan's single-shot
+    // fault is spent), and placement uses it again.
+    assert!(ctx.probe_device(1).unwrap());
+    assert_eq!(ctx.device_health(1).unwrap(), HealthState::Healthy);
+    let report = run(2);
+    assert!(report.recovered_from.is_empty());
+}
+
+/// A corrupted rebalance wire blob fails **closed**: the rebalance errors
+/// out, the source shard keeps executing from its intact state, and the
+/// join still produces correct results.
+#[test]
+fn corrupt_rebalance_blob_fails_closed_without_poisoning() {
+    let kinds = [DeviceKind::NvidiaSim; 4];
+    let ctx = HetGpu::with_devices(&kinds).unwrap();
+    ctx.install_fault_plan(FaultPlan::parse("blob:nth=0;seed=7").unwrap());
+    let m = ctx.compile_cuda(HIST_SRC).unwrap();
+    let bins = ctx.alloc_buffer::<u32>(8, 0).unwrap();
+    ctx.upload(&bins, &[0; 8]).unwrap();
+    let mut launch = ctx
+        .launch(m, "hist")
+        .dims(LaunchDims::d1(8, 32))
+        .arg(bins.arg())
+        .sharded(&[0, 1, 2])
+        .unwrap();
+    assert!(launch.rebalance(1, 3).is_err());
+    let report = launch.wait().unwrap();
+    assert_eq!(report.rebalanced, 0);
+    assert_eq!(ctx.download(&bins, 8).unwrap(), vec![32u32; 8]);
+    assert_eq!(ctx.fault_stats().injected, 1);
+}
+
+/// A transient broadcast (peer-copy) fault is retried in place — copies
+/// are idempotent — and only degrades the device instead of poisoning
+/// the shard stream.
+#[test]
+fn transient_broadcast_fault_is_retried_and_degrades_device() {
+    let src = r#"
+        __global__ void dbl(float* x, unsigned n) {
+            unsigned i = blockIdx.x * blockDim.x + threadIdx.x;
+            if (i < n) x[i] = x[i] * 2.0f;
+        }
+    "#;
+    let ctx = HetGpu::with_devices(&[DeviceKind::NvidiaSim, DeviceKind::NvidiaSim]).unwrap();
+    ctx.install_fault_plan(FaultPlan::parse("broadcast:dev=1,nth=0").unwrap());
+    let m = ctx.compile_cuda(src).unwrap();
+    let buf = ctx.alloc_buffer::<f32>(256, 0).unwrap();
+    let data: Vec<f32> = (0..256).map(|i| i as f32).collect();
+    ctx.upload(&buf, &data).unwrap();
+    let mut launch = ctx
+        .launch(m, "dbl")
+        .dims(LaunchDims::d1(8, 32))
+        .args(&[buf.arg(), Arg::U32(256)])
+        .sharded(&[0, 1])
+        .unwrap();
+    launch.wait().unwrap();
+    let got = ctx.download(&buf, 256).unwrap();
+    for (i, v) in got.iter().enumerate() {
+        assert_eq!(*v, i as f32 * 2.0, "element {i}");
+    }
+    let stats = ctx.fault_stats();
+    assert_eq!(stats.injected, 1);
+    assert!(stats.retries >= 1);
+    assert_eq!(stats.observed, 0); // the retry absorbed it
+    assert_eq!(ctx.device_health(1).unwrap(), HealthState::Degraded);
+}
+
+/// A malformed `HETGPU_FAULT_PLAN` must not take the process down or arm
+/// garbage: the context warns once, runs with no faults, and the
+/// counters stay zero (same contract as `HETGPU_SIM_THREADS`).
+#[test]
+fn malformed_fault_plan_env_is_ignored_with_warning() {
+    std::env::set_var("HETGPU_FAULT_PLAN", "launch:dev=banana");
+    let ctx = HetGpu::with_devices(&[DeviceKind::NvidiaSim]).unwrap();
+    std::env::remove_var("HETGPU_FAULT_PLAN");
+    let m = ctx
+        .compile_cuda("__global__ void k(float* p) { p[threadIdx.x] = 2.0f; }")
+        .unwrap();
+    let buf = ctx.alloc_buffer::<f32>(32, 0).unwrap();
+    let s = ctx.create_stream(0).unwrap();
+    ctx.launch(m, "k").dims(LaunchDims::d1(1, 32)).arg(buf.arg()).record(s).unwrap();
+    ctx.synchronize(s).unwrap();
+    assert_eq!(ctx.download(&buf, 1).unwrap()[0], 2.0);
+    assert_eq!(ctx.fault_stats().injected, 0);
 }
