@@ -116,7 +116,7 @@ fn main() {
         let k = m.kernel("vecadd").unwrap();
         let cfg = SimtConfig::nvidia();
         let prog =
-            backends::translate_simt(k, &cfg, TranslateOpts { migratable: true }).unwrap();
+            backends::translate_simt(k, &cfg, TranslateOpts { migratable: true, ..Default::default() }).unwrap();
         let pn: u32 = 1 << 18; // 1024 blocks x 256 threads
         let reps = if smoke { 2 } else { 5 };
         let time_with = |workers: usize| {
@@ -296,6 +296,61 @@ __global__ void spin(float* x, unsigned iters) {
         (dt, cycles, stats)
     };
 
+    // ---- tiered-JIT gate: unarmed launch-path overhead ----
+    // With the background tier-2 compiler armed but no kernel hot, the
+    // launch path's entire tiering cost is one relaxed generation load
+    // plus one relaxed profile increment — the same discipline as the
+    // fault-injection gate: hooks on the hot path must cost nothing when
+    // nothing is armed. The bound is generous (this catches accidental
+    // locks or allocations, not scheduler noise); the precise number is
+    // gated across runs via BENCH_e4.json's `tiering.unarmed_launch_s`.
+    {
+        use hetgpu::runtime::api::{JitTier, TierPolicy};
+        let launches: usize = if smoke { 300 } else { 2_000 };
+        let time_launches = |policy: TierPolicy| -> f64 {
+            let ctx = HetGpu::with_devices_workers_and_jit(&[DeviceKind::NvidiaSim], 1, policy)
+                .unwrap();
+            let m = ctx
+                .compile_cuda("__global__ void nop(unsigned* p) { p[threadIdx.x] = threadIdx.x; }")
+                .unwrap();
+            let buf = ctx.alloc_buffer::<u32>(32, 0).unwrap();
+            let s = ctx.create_stream(0).unwrap();
+            let run = || {
+                ctx.launch(m, "nop")
+                    .dims(LaunchDims::d1(1, 32))
+                    .args(&[buf.arg()])
+                    .record(s)
+                    .unwrap();
+                ctx.synchronize(s).unwrap();
+            };
+            run(); // translate once; the timed loop is all memoized hits
+            let t0 = std::time::Instant::now();
+            for _ in 0..launches {
+                run();
+            }
+            t0.elapsed().as_secs_f64() / launches as f64
+        };
+        let armed = time_launches(TierPolicy { hot_threshold: u64::MAX, force: None });
+        let forced = time_launches(TierPolicy {
+            hot_threshold: u64::MAX,
+            force: Some(JitTier::Baseline),
+        });
+        println!("\ntiered-JIT unarmed launch path ({launches} tiny launches):");
+        println!("  compiler armed  {:>9.2} us/launch", armed * 1e6);
+        println!(
+            "  forced tier 1   {:>9.2} us/launch  (ratio {:.3})",
+            forced * 1e6,
+            armed / forced
+        );
+        assert!(
+            armed < forced * 2.0 + 50e-6,
+            "unarmed tiering must be unmeasurable on the launch path: \
+             armed {:.2}us vs forced-tier-1 {:.2}us",
+            armed * 1e6,
+            forced * 1e6
+        );
+    }
+
     // ---- hetGPU vs hand-tuned (the <10% claim) ----
     println!("\nhetGPU vs hand-tuned device code (vecadd, {n} elements):");
     {
@@ -303,7 +358,7 @@ __global__ void spin(float* x, unsigned iters) {
         let k = m.kernel("vecadd").unwrap();
         for cfg in [SimtConfig::nvidia(), SimtConfig::amd(), SimtConfig::intel()] {
             let name = cfg.name;
-            let het = backends::translate_simt(k, &cfg, TranslateOpts { migratable: true }).unwrap();
+            let het = backends::translate_simt(k, &cfg, TranslateOpts { migratable: true, ..Default::default() }).unwrap();
             let hand = hand_vecadd_simt();
             let c_het = simt_cycles(cfg.clone(), &het, n);
             let c_hand = simt_cycles(cfg, &hand, n);
@@ -357,7 +412,7 @@ __global__ void spin(float* x, unsigned iters) {
         let k = m.kernel("matmul16").unwrap();
         for (label, mig) in [("migratable", true), ("pure-perf", false)] {
             let cfg = SimtConfig::nvidia();
-            let p = backends::translate_simt(k, &cfg, TranslateOpts { migratable: mig }).unwrap();
+            let p = backends::translate_simt(k, &cfg, TranslateOpts { migratable: mig, ..Default::default() }).unwrap();
             let sim = SimtSim::new(cfg);
             let mem = DeviceMemory::new(32 << 20, "bench");
             for i in 0..64 * 64 {

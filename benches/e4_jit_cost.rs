@@ -9,9 +9,28 @@
 //! reproduced shape. Costs are "acceptable for long-running programs;
 //! repeated launches don't incur translation overhead" (cache hits).
 
-use hetgpu::runtime::api::HetGpu;
+use hetgpu::runtime::api::{HetGpu, JitTier, TierPolicy};
 use hetgpu::runtime::device::DeviceKind;
+use hetgpu::runtime::launch::Arg;
+use hetgpu::sim::simt::LaunchDims;
 use hetgpu::suite;
+
+/// Strength-reduction/LICM-friendly hot kernel: the loop body re-derives a
+/// loop-invariant product and multiplies/divides/mods by powers of two, so
+/// the tier-2 mid-end has real work (hoists + shift/mask rewrites) and the
+/// steady-state delta is attributable to better code, not noise.
+const HOT_SRC: &str = r#"
+__global__ void hotloop(unsigned* p, unsigned n) {
+    unsigned i = blockIdx.x * blockDim.x + threadIdx.x;
+    unsigned acc = 0u;
+    for (unsigned j = 0u; j < n; j++) {
+        unsigned base = n * 16u;
+        unsigned t = (i * 8u + base + j) / 4u;
+        acc = acc + (t % 32u) * 2u;
+    }
+    p[i] = acc;
+}
+"#;
 
 fn main() {
     let ctx = HetGpu::full_testbed().unwrap();
@@ -31,7 +50,10 @@ fn main() {
 
     let events = ctx.runtime().jit.events();
     println!("\nE4: JIT translation cost per kernel per target (paper §6.2)\n");
-    println!("{:12} {:>16} {:>12} {:>12}", "kernel", "target", "micros", "out insts");
+    println!(
+        "{:12} {:>16} {:>6} {:>12} {:>12}",
+        "kernel", "target", "tier", "micros", "out insts"
+    );
     let mut per_target: std::collections::HashMap<&str, (f64, usize)> = Default::default();
     for e in &events {
         let tname = match e.kind {
@@ -41,7 +63,14 @@ fn main() {
             DeviceKind::IntelSim => "intel (SPIR-V)",
             DeviceKind::TenstorrentSim => "tt (Metalium)",
         };
-        println!("{:12} {:>16} {:>12.1} {:>12}", e.kernel, tname, e.micros, e.out_insts);
+        let tier = match e.tier {
+            JitTier::Baseline => "t1",
+            JitTier::Optimized => "t2",
+        };
+        println!(
+            "{:12} {:>16} {:>6} {:>12.1} {:>12}",
+            e.kernel, tname, tier, e.micros, e.out_insts
+        );
         let t = per_target.entry(tname).or_default();
         t.0 += e.micros;
         t.1 += 1;
@@ -57,4 +86,151 @@ fn main() {
         ctx.runtime().jit.hit_count()
     );
     assert!(ctx.runtime().jit.hit_count() > 0);
+
+    // ---- tiered JIT: tier-1 vs tier-2 steady state, promotion latency,
+    // and the unarmed launch-path overhead (BENCH_e4.json `tiering`) ----
+    let smoke = std::env::var("HETGPU_BENCH_SMOKE").is_ok();
+    let iters: u32 = if smoke { 2_000 } else { 20_000 };
+    let reps = if smoke { 3 } else { 10 };
+    let dims = LaunchDims::d1(4, 64);
+
+    // Steady-state wall clock with the cache pinned to one tier (forced
+    // tiers disable the background thread entirely, so both measurements
+    // see an identical runtime apart from the code they execute).
+    let steady = |force: JitTier| -> f64 {
+        let ctx = HetGpu::with_devices_workers_and_jit(
+            &[DeviceKind::NvidiaSim],
+            1,
+            TierPolicy { hot_threshold: u64::MAX, force: Some(force) },
+        )
+        .unwrap();
+        let m = ctx.compile_cuda(HOT_SRC).unwrap();
+        let buf = ctx.alloc_buffer::<u32>(256, 0).unwrap();
+        let s = ctx.create_stream(0).unwrap();
+        let run = || {
+            ctx.launch(m, "hotloop")
+                .dims(dims)
+                .args(&[buf.arg(), Arg::U32(iters)])
+                .record(s)
+                .unwrap();
+            ctx.synchronize(s).unwrap();
+        };
+        run(); // translate + warm
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            run();
+        }
+        t0.elapsed().as_secs_f64() / reps as f64
+    };
+    let tier1_steady_s = steady(JitTier::Baseline);
+    let tier2_steady_s = steady(JitTier::Optimized);
+    println!("\ntiered JIT, steady state (hotloop, {iters} iters/thread):");
+    println!("  tier 1 (baseline)  {:>9.2} ms/launch", tier1_steady_s * 1e3);
+    println!(
+        "  tier 2 (optimized) {:>9.2} ms/launch  -> {:.2}x",
+        tier2_steady_s * 1e3,
+        tier1_steady_s / tier2_steady_s
+    );
+
+    // Background promotion: cross the threshold, then keep launching while
+    // the compile thread works — launches never block on tier 2; the swap
+    // lands at a launch boundary.
+    let (promotion_latency_s, launches_during_compile) = {
+        let threshold = 8u64;
+        let ctx = HetGpu::with_devices_workers_and_jit(
+            &[DeviceKind::NvidiaSim],
+            1,
+            TierPolicy { hot_threshold: threshold, force: None },
+        )
+        .unwrap();
+        let m = ctx.compile_cuda(HOT_SRC).unwrap();
+        let buf = ctx.alloc_buffer::<u32>(256, 0).unwrap();
+        let s = ctx.create_stream(0).unwrap();
+        let run = || {
+            ctx.launch(m, "hotloop")
+                .dims(dims)
+                .args(&[buf.arg(), Arg::U32(iters)])
+                .record(s)
+                .unwrap();
+            ctx.synchronize(s).unwrap();
+        };
+        for _ in 0..threshold {
+            run();
+        }
+        let t0 = std::time::Instant::now();
+        let mut during = 0u64;
+        while ctx.jit_stats().swaps == 0 && t0.elapsed().as_secs_f64() < 30.0 {
+            run(); // foreground progress while tier 2 compiles
+            during += 1;
+        }
+        let latency = t0.elapsed().as_secs_f64();
+        let stats = ctx.jit_stats();
+        assert!(stats.swaps >= 1, "background promotion never landed: {stats:?}");
+        assert_eq!(stats.promotions, 1, "exactly one promotion expected: {stats:?}");
+        println!("\nbackground promotion (threshold {threshold}):");
+        println!(
+            "  swap landed after {:.2} ms; {during} foreground launches completed meanwhile",
+            latency * 1e3
+        );
+        println!(
+            "  stats: t1 {} t2 {} promotions {} swaps {} gen {}",
+            stats.tier1_translations,
+            stats.tier2_translations,
+            stats.promotions,
+            stats.swaps,
+            stats.generation
+        );
+        (latency, during)
+    };
+
+    // Launch-path overhead with tiering armed but nothing hot: the only
+    // added work per launch is one relaxed generation load + one relaxed
+    // profile increment, so armed-vs-forced-baseline must be in the noise.
+    let launch_path = |policy: TierPolicy| -> f64 {
+        let ctx =
+            HetGpu::with_devices_workers_and_jit(&[DeviceKind::NvidiaSim], 1, policy).unwrap();
+        let m = ctx.compile_cuda(HOT_SRC).unwrap();
+        let buf = ctx.alloc_buffer::<u32>(64, 0).unwrap();
+        let s = ctx.create_stream(0).unwrap();
+        let n = if smoke { 200 } else { 1_000 };
+        let run = || {
+            ctx.launch(m, "hotloop")
+                .dims(LaunchDims::d1(1, 32))
+                .args(&[buf.arg(), Arg::U32(1)])
+                .record(s)
+                .unwrap();
+            ctx.synchronize(s).unwrap();
+        };
+        run();
+        let t0 = std::time::Instant::now();
+        for _ in 0..n {
+            run();
+        }
+        t0.elapsed().as_secs_f64() / n as f64
+    };
+    let unarmed_launch_s =
+        launch_path(TierPolicy { hot_threshold: u64::MAX, force: None });
+    let baseline_launch_s = launch_path(TierPolicy {
+        hot_threshold: u64::MAX,
+        force: Some(JitTier::Baseline),
+    });
+    println!("\nlaunch path at 0% hot (tiny launches):");
+    println!("  tiering armed   {:>9.2} us/launch", unarmed_launch_s * 1e6);
+    println!(
+        "  forced tier 1   {:>9.2} us/launch  (ratio {:.3})",
+        baseline_launch_s * 1e6,
+        unarmed_launch_s / baseline_launch_s
+    );
+
+    // ---- machine-readable artifact (CI perf trajectory) ----
+    let json_path =
+        std::env::var("HETGPU_BENCH_JSON").unwrap_or_else(|_| "BENCH_e4.json".into());
+    let json = format!(
+        "{{\n  \"bench\": \"e4_jit_cost\",\n  \"tiering\": {{\"tier1_steady_s\": {tier1_steady_s:.6}, \"tier2_steady_s\": {tier2_steady_s:.6}, \"speedup\": {speedup:.3}, \"promotion_latency_s\": {promotion_latency_s:.6}, \"launches_during_compile\": {launches_during_compile}, \"unarmed_launch_s\": {unarmed_launch_s:.9}, \"baseline_launch_s\": {baseline_launch_s:.9}}}\n}}\n",
+        speedup = tier1_steady_s / tier2_steady_s,
+    );
+    match std::fs::write(&json_path, &json) {
+        Ok(()) => println!("\nwrote {json_path}"),
+        Err(e) => eprintln!("\nfailed to write {json_path}: {e}"),
+    }
 }

@@ -44,7 +44,7 @@ fn main() {
     for cfg in [SimtConfig::nvidia(), SimtConfig::amd(), SimtConfig::intel()] {
         let mut cycles = [0u64; 2];
         for (slot, mig) in [(0usize, true), (1, false)] {
-            let p = backends::translate_simt(k, &cfg, TranslateOpts { migratable: mig }).unwrap();
+            let p = backends::translate_simt(k, &cfg, TranslateOpts { migratable: mig, ..Default::default() }).unwrap();
             let sim = SimtSim::new(cfg.clone());
             let mem = DeviceMemory::new(1 << 20, "bench");
             let pause = AtomicBool::new(false);
@@ -74,7 +74,7 @@ fn main() {
         let p = backends::translate_tensix(
             k,
             TensixMode::VectorSingleCore,
-            TranslateOpts { migratable: mig },
+            TranslateOpts { migratable: mig, ..Default::default() },
         )
         .unwrap();
         let sim = TensixSim::new(TensixConfig::blackhole());

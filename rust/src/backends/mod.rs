@@ -28,17 +28,33 @@ use crate::isa::simt_isa::{SimtConfig, SimtProgram};
 use crate::isa::tensix_isa::{TensixMode, TensixProgram};
 use crate::Result;
 
+/// Compilation tier (see `runtime::jit` and DESIGN.md §11).
+///
+/// `Baseline` is the fast first-launch translate; `Optimized` additionally
+/// runs the tier-2 hetIR mid-end ([`crate::hetir::passes::optimize_tier2`]:
+/// LICM, strength reduction, uniformity-driven scheduling) before lowering.
+/// Both tiers produce bit-identical memory, cost reports, and snapshot
+/// blobs — the tier only affects host-side simulation speed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum JitTier {
+    #[default]
+    Baseline,
+    Optimized,
+}
+
 /// Translation options.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct TranslateOpts {
     /// Compile in checkpoint guards at barriers (paper's migration-friendly
     /// build; off reproduces the pure-performance build of §6.2).
     pub migratable: bool,
+    /// Which compilation tier to produce.
+    pub tier: JitTier,
 }
 
 impl Default for TranslateOpts {
     fn default() -> Self {
-        TranslateOpts { migratable: true }
+        TranslateOpts { migratable: true, tier: JitTier::Baseline }
     }
 }
 
@@ -73,9 +89,22 @@ impl DeviceProgram {
     }
 }
 
+/// Run the tier-2 mid-end if the options ask for it, returning the kernel
+/// to lower. Tier-1 lowers the caller's kernel untouched (no clone).
+fn tiered<'a>(kernel: &'a Kernel, opts: TranslateOpts) -> std::borrow::Cow<'a, Kernel> {
+    match opts.tier {
+        JitTier::Baseline => std::borrow::Cow::Borrowed(kernel),
+        JitTier::Optimized => {
+            let mut k = kernel.clone();
+            crate::hetir::passes::optimize_tier2(&mut k);
+            std::borrow::Cow::Owned(k)
+        }
+    }
+}
+
 /// Translate `kernel` for a SIMT vendor configuration.
 pub fn translate_simt(kernel: &Kernel, cfg: &SimtConfig, opts: TranslateOpts) -> Result<SimtProgram> {
-    simt::translate(kernel, cfg, opts)
+    simt::translate(&tiered(kernel, opts), cfg, opts)
 }
 
 /// Translate `kernel` for the Tensix backend in the given mode.
@@ -84,5 +113,5 @@ pub fn translate_tensix(
     mode: TensixMode,
     opts: TranslateOpts,
 ) -> Result<TensixProgram> {
-    tenstorrent::translate(kernel, mode, opts)
+    tenstorrent::translate(&tiered(kernel, opts), mode, opts)
 }

@@ -813,11 +813,11 @@ mod tests {
         let _n = b.param("N", Type::U32);
         b.bar();
         let k = b.finish();
-        let p = translate(&k, &SimtConfig::nvidia(), TranslateOpts { migratable: true }).unwrap();
+        let p = translate(&k, &SimtConfig::nvidia(), TranslateOpts { migratable: true, ..Default::default() }).unwrap();
         assert_eq!(p.ckpt_sites.len(), 1);
         let has_ckpt = p.blocks.iter().flatten().any(|s| matches!(s, SStmt::I(SInst::Ckpt { .. })));
         assert!(has_ckpt);
-        let p2 = translate(&k, &SimtConfig::nvidia(), TranslateOpts { migratable: false }).unwrap();
+        let p2 = translate(&k, &SimtConfig::nvidia(), TranslateOpts { migratable: false, ..Default::default() }).unwrap();
         assert!(p2.ckpt_sites.is_empty());
         assert!(!p2
             .blocks

@@ -1,0 +1,378 @@
+//! Loop-invariant code motion (tier-2 pass): hoists pure, loop-invariant
+//! computations out of `While` bodies into the enclosing block, so a hot
+//! loop stops re-executing them every iteration.
+//!
+//! The hoist conditions are deliberately strict — tier-2 code must stay
+//! **bit-identical** to tier-1 in memory effects and snapshot blobs
+//! (including the zero-trip case, where a hoisted instruction runs once
+//! although the original never ran):
+//!
+//! 1. The candidate sits at the *top level* of a loop body (never under a
+//!    nested `If`: hoisting conditionally-executed code would speculate it).
+//! 2. It is pure and thread-local: has a destination, no side effects, no
+//!    team communication, and is not `Div`/`Rem` (those trap on zero — a
+//!    hoist could introduce a fault a zero-trip loop never raised) and not
+//!    `Ld` (loop stores/atomics may change memory between iterations).
+//! 3. Every source register is defined nowhere inside the loop.
+//! 4. The destination is defined exactly once in the whole kernel (the
+//!    candidate), and every use of it sits inside this loop *after* the
+//!    candidate (none in the loop condition, none before it in the body,
+//!    none outside the loop). This pins zero-trip bit-identity: the value
+//!    the hoisted instruction computes is only ever observed where the
+//!    original would already have computed it — and it guarantees the
+//!    destination is dead at every barrier *before* the candidate, so the
+//!    tier-1 suspension-point live sets (which tier-2 reuses verbatim —
+//!    see `optimize_tier2`) stay exact.
+//!
+//! Floats may be hoisted: the hoisted op computes the same value from the
+//! same inputs (it is invariant), so no reassociation occurs. Runs to a
+//! fixpoint, so invariant chains and nested loops hoist fully.
+
+use crate::hetir::instr::{BinOp, Inst, Reg};
+use crate::hetir::module::{Kernel, Stmt};
+use std::collections::HashMap;
+
+/// Per-register static def/use counts over the whole kernel.
+fn global_counts(k: &Kernel) -> (HashMap<Reg, u32>, HashMap<Reg, u32>) {
+    let mut defs = HashMap::new();
+    let mut uses = HashMap::new();
+    let mut buf = Vec::new();
+    k.visit_insts(|i| {
+        if let Some(d) = i.def() {
+            *defs.entry(d).or_insert(0) += 1;
+        }
+        buf.clear();
+        i.uses(&mut buf);
+        for r in &buf {
+            *uses.entry(*r).or_insert(0) += 1;
+        }
+    });
+    (defs, uses)
+}
+
+fn count_in_stmts(stmts: &[Stmt], defs: &mut HashMap<Reg, u32>, uses: &mut HashMap<Reg, u32>) {
+    let mut buf = Vec::new();
+    for s in stmts {
+        s.visit_insts(&mut |i| {
+            if let Some(d) = i.def() {
+                *defs.entry(d).or_insert(0) += 1;
+            }
+            buf.clear();
+            i.uses(&mut buf);
+            for r in &buf {
+                *uses.entry(*r).or_insert(0) += 1;
+            }
+        });
+    }
+}
+
+/// Whether `i` is eligible to move at all (independent of invariance).
+fn movable(i: &Inst) -> bool {
+    if i.def().is_none() || i.has_side_effect() || i.is_team_op() {
+        return false;
+    }
+    match i {
+        // Traps on a zero divisor: hoisting would speculate the fault.
+        Inst::Bin { op: BinOp::Div | BinOp::Rem, .. } => false,
+        // Memory may be written by the loop between iterations.
+        Inst::Ld { .. } => false,
+        _ => true,
+    }
+}
+
+/// Find and perform one hoist anywhere in `stmts`; `true` if one moved.
+fn hoist_one(
+    stmts: &mut Vec<Stmt>,
+    kernel_defs: &HashMap<Reg, u32>,
+    kernel_uses: &HashMap<Reg, u32>,
+) -> bool {
+    let mut i = 0;
+    while i < stmts.len() {
+        let mut hoisted: Option<Stmt> = None;
+        match &mut stmts[i] {
+            Stmt::If { then_b, else_b, .. } => {
+                if hoist_one(then_b, kernel_defs, kernel_uses)
+                    || hoist_one(else_b, kernel_defs, kernel_uses)
+                {
+                    return true;
+                }
+            }
+            Stmt::While { cond, body, .. } => {
+                // Innermost first: a value hoisted out of an inner loop
+                // becomes a candidate for the outer loop next round.
+                if hoist_one(cond, kernel_defs, kernel_uses)
+                    || hoist_one(body, kernel_defs, kernel_uses)
+                {
+                    return true;
+                }
+                if let Some(ci) = find_candidate(cond, body, kernel_defs, kernel_uses) {
+                    hoisted = Some(body.remove(ci));
+                }
+            }
+            _ => {}
+        }
+        if let Some(inst) = hoisted {
+            stmts.insert(i, inst);
+            return true;
+        }
+        i += 1;
+    }
+    false
+}
+
+/// Index of the first hoistable top-level instruction in `body`, per the
+/// module-level conditions.
+fn find_candidate(
+    cond: &[Stmt],
+    body: &[Stmt],
+    kernel_defs: &HashMap<Reg, u32>,
+    kernel_uses: &HashMap<Reg, u32>,
+) -> Option<usize> {
+    // Defs and uses inside this loop (cond + body, all nesting levels).
+    let (mut loop_defs, mut loop_uses) = (HashMap::new(), HashMap::new());
+    count_in_stmts(cond, &mut loop_defs, &mut loop_uses);
+    count_in_stmts(body, &mut loop_defs, &mut loop_uses);
+
+    let mut buf = Vec::new();
+    for (ci, s) in body.iter().enumerate() {
+        let Stmt::I(inst) = s else { continue };
+        if !movable(inst) {
+            continue;
+        }
+        let dst = inst.def().expect("movable implies def");
+        // Single static assignment over the whole kernel.
+        if kernel_defs.get(&dst).copied().unwrap_or(0) != 1 {
+            continue;
+        }
+        // Operands invariant: no def of any source inside the loop.
+        buf.clear();
+        inst.uses(&mut buf);
+        if buf.iter().any(|r| loop_defs.contains_key(r)) {
+            continue;
+        }
+        // All uses of dst live inside this loop...
+        if kernel_uses.get(&dst).copied().unwrap_or(0) != loop_uses.get(&dst).copied().unwrap_or(0)
+        {
+            continue;
+        }
+        // ...and none in the condition or before the candidate.
+        let mut early = HashMap::new();
+        let mut early_defs = HashMap::new();
+        count_in_stmts(cond, &mut early_defs, &mut early);
+        count_in_stmts(&body[..ci], &mut early_defs, &mut early);
+        if early.contains_key(&dst) {
+            continue;
+        }
+        return Some(ci);
+    }
+    None
+}
+
+/// Run loop-invariant code motion to a fixpoint.
+pub fn run(k: &mut Kernel) {
+    loop {
+        let (defs, uses) = global_counts(k);
+        let mut body = std::mem::take(&mut k.body);
+        let moved = hoist_one(&mut body, &defs, &uses);
+        k.body = body;
+        if !moved {
+            break;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hetir::builder::KernelBuilder;
+    use crate::hetir::instr::Operand;
+    use crate::hetir::types::{Scalar, Type, Value};
+    use crate::hetir::verify::verify_kernel;
+
+    fn top_level_kinds(k: &Kernel) -> Vec<&'static str> {
+        k.body
+            .iter()
+            .map(|s| match s {
+                Stmt::I(_) => "inst",
+                Stmt::While { .. } => "while",
+                Stmt::If { .. } => "if",
+                _ => "other",
+            })
+            .collect()
+    }
+
+    /// `x*3+7` inside the loop hoists (both instructions, as a chain).
+    #[test]
+    fn hoists_invariant_chain_out_of_loop() {
+        let mut b = KernelBuilder::new("k");
+        let x = b.param("x", Type::U32);
+        let n = b.param("n", Type::U32);
+        let acc = b.mov(Type::U32, Operand::Imm(Value::u32(0)));
+        b.for_u32(Operand::Imm(Value::u32(0)), n.into(), 1, |b, _| {
+            let t = b.bin(BinOp::Mul, Scalar::U32, x.into(), Operand::Imm(Value::u32(3)));
+            let u = b.bin(BinOp::Add, Scalar::U32, t.into(), Operand::Imm(Value::u32(7)));
+            b.bin_into(acc, BinOp::Add, Scalar::U32, acc.into(), u.into());
+        });
+        let mut k = b.finish_raw();
+        let before = k.inst_count();
+        run(&mut k);
+        verify_kernel(&k).unwrap();
+        assert_eq!(k.inst_count(), before, "LICM moves, never adds/removes");
+        // The while body should be down to the loop-carried add (plus the
+        // for_u32 induction update); mul and add-7 sit before the loop.
+        let Some(Stmt::While { body, .. }) =
+            k.body.iter().find(|s| matches!(s, Stmt::While { .. }))
+        else {
+            panic!("loop missing")
+        };
+        let mut mul_in_loop = false;
+        for s in body {
+            s.visit_insts(&mut |i| {
+                if matches!(i, Inst::Bin { op: BinOp::Mul, .. }) {
+                    mul_in_loop = true;
+                }
+            });
+        }
+        assert!(!mul_in_loop, "invariant mul must hoist out: {:?}", top_level_kinds(&k));
+        let hoisted: Vec<_> = k
+            .body
+            .iter()
+            .take_while(|s| matches!(s, Stmt::I(_)))
+            .filter(|s| {
+                matches!(s, Stmt::I(Inst::Bin { op: BinOp::Mul | BinOp::Add, .. }))
+            })
+            .count();
+        assert!(hoisted >= 2, "mul and add-7 both hoisted");
+    }
+
+    /// Loop-carried values and their consumers must stay put.
+    #[test]
+    fn loop_carried_work_stays() {
+        let mut b = KernelBuilder::new("k");
+        let n = b.param("n", Type::U32);
+        let acc = b.mov(Type::U32, Operand::Imm(Value::u32(0)));
+        b.for_u32(Operand::Imm(Value::u32(0)), n.into(), 1, |b, i| {
+            let t = b.bin(BinOp::Mul, Scalar::U32, i.into(), Operand::Imm(Value::u32(3)));
+            b.bin_into(acc, BinOp::Add, Scalar::U32, acc.into(), t.into());
+        });
+        let mut k = b.finish_raw();
+        run(&mut k);
+        verify_kernel(&k).unwrap();
+        let Some(Stmt::While { body, .. }) =
+            k.body.iter().find(|s| matches!(s, Stmt::While { .. }))
+        else {
+            panic!("loop missing")
+        };
+        let mut mul_in_loop = false;
+        for s in body {
+            s.visit_insts(&mut |i| {
+                if matches!(i, Inst::Bin { op: BinOp::Mul, .. }) {
+                    mul_in_loop = true;
+                }
+            });
+        }
+        assert!(mul_in_loop, "induction-dependent mul must not hoist");
+    }
+
+    /// Division never hoists (zero-trip loop must not speculate a trap),
+    /// and a value also used after the loop never hoists (zero-trip would
+    /// change what the post-loop use observes).
+    #[test]
+    fn traps_and_escaping_values_not_hoisted() {
+        let mut b = KernelBuilder::new("k");
+        let x = b.param("x", Type::U32);
+        let y = b.param("y", Type::U32);
+        let n = b.param("n", Type::U32);
+        let acc = b.mov(Type::U32, Operand::Imm(Value::u32(0)));
+        let mut div = Reg(0);
+        let mut escapee = Reg(0);
+        b.for_u32(Operand::Imm(Value::u32(0)), n.into(), 1, |b, _| {
+            div = b.bin(BinOp::Div, Scalar::U32, x.into(), y.into());
+            escapee = b.bin(BinOp::Add, Scalar::U32, x.into(), Operand::Imm(Value::u32(1)));
+            b.bin_into(acc, BinOp::Add, Scalar::U32, div.into(), escapee.into());
+        });
+        // Post-loop observer of `escapee` (reads stale value on zero trips).
+        let _after = b.bin(BinOp::Add, Scalar::U32, escapee.into(), acc.into());
+        let mut k = b.finish_raw();
+        run(&mut k);
+        verify_kernel(&k).unwrap();
+        let Some(Stmt::While { body, .. }) =
+            k.body.iter().find(|s| matches!(s, Stmt::While { .. }))
+        else {
+            panic!("loop missing")
+        };
+        let (mut div_in, mut esc_in) = (false, false);
+        for s in body {
+            s.visit_insts(&mut |i| match i {
+                Inst::Bin { op: BinOp::Div, .. } => div_in = true,
+                Inst::Bin { dst, .. } if *dst == escapee => esc_in = true,
+                _ => {}
+            });
+        }
+        assert!(div_in, "div must not be speculated");
+        assert!(esc_in, "value used after the loop must not hoist");
+    }
+
+    /// Conditionally-executed instructions (under an If inside the loop)
+    /// must not hoist.
+    #[test]
+    fn guarded_work_not_hoisted() {
+        let mut b = KernelBuilder::new("k");
+        let x = b.param("x", Type::U32);
+        let p = b.param("p", Type::PRED);
+        let n = b.param("n", Type::U32);
+        let acc = b.mov(Type::U32, Operand::Imm(Value::u32(0)));
+        let mut guarded = Reg(0);
+        b.for_u32(Operand::Imm(Value::u32(0)), n.into(), 1, |b, _| {
+            b.if_(p, |b| {
+                guarded = b.bin(BinOp::Mul, Scalar::U32, x.into(), Operand::Imm(Value::u32(2)));
+                b.bin_into(acc, BinOp::Add, Scalar::U32, acc.into(), guarded.into());
+            });
+        });
+        let mut k = b.finish_raw();
+        run(&mut k);
+        verify_kernel(&k).unwrap();
+        assert!(
+            !k.body.iter().any(
+                |s| matches!(s, Stmt::I(Inst::Bin { dst, .. }) if *dst == guarded)
+            ),
+            "guarded mul speculated out of loop"
+        );
+    }
+
+    /// Barrier loops: hoisting must keep suspension metadata exact (the
+    /// hoisted def is dead at every barrier before it ran in tier-1 too).
+    #[test]
+    fn preserves_suspension_metadata_in_barrier_loop() {
+        let mut b = KernelBuilder::new("k");
+        let x = b.param("x", Type::U32);
+        let n = b.param("n", Type::U32);
+        let acc = b.mov(Type::U32, Operand::Imm(Value::u32(0)));
+        b.for_u32(Operand::Imm(Value::u32(0)), n.into(), 1, |b, _| {
+            let t = b.bin(BinOp::Mul, Scalar::U32, x.into(), Operand::Imm(Value::u32(5)));
+            b.bin_into(acc, BinOp::Add, Scalar::U32, acc.into(), t.into());
+            b.bar();
+        });
+        let mut k = b.finish(); // segmenter + liveness
+        let barriers = k.num_barriers;
+        let sp = k.suspension_points.clone();
+        run(&mut k);
+        verify_kernel(&k).unwrap();
+        assert_eq!(k.num_barriers, barriers);
+        assert_eq!(k.suspension_points, sp);
+        let Some(Stmt::While { body, .. }) =
+            k.body.iter().find(|s| matches!(s, Stmt::While { .. }))
+        else {
+            panic!("loop missing")
+        };
+        let mut mul_in = false;
+        for s in body {
+            s.visit_insts(&mut |i| {
+                if matches!(i, Inst::Bin { op: BinOp::Mul, .. }) {
+                    mul_in = true;
+                }
+            });
+        }
+        assert!(!mul_in, "invariant mul should hoist past the barrier loop");
+    }
+}

@@ -10,8 +10,11 @@
 pub mod constfold;
 pub mod cse;
 pub mod dce;
+pub mod licm;
 pub mod liveness;
+pub mod scalarize;
 pub mod segmenter;
+pub mod strength;
 pub mod uniformity;
 
 use super::module::Kernel;
@@ -25,4 +28,31 @@ pub fn optimize(k: &mut Kernel) {
     // Re-establish migration metadata after any instruction removal.
     segmenter::run(k);
     liveness::run(k);
+}
+
+/// The optimizing tier-2 mid-end used by the background JIT compiler.
+///
+/// Runs on a kernel that already went through [`optimize`] at module
+/// compile time. Deliberately does NOT rerun [`segmenter`] / [`liveness`]:
+/// tier-1 suspension points, barrier ids, and captured register sets are
+/// preserved verbatim so that tier-2 code produces bit-identical snapshot
+/// blobs and a kernel paused under one tier resumes correctly under the
+/// other. That is sound because every tier-2 pass keeps the value of every
+/// register live at a barrier unchanged (strength rewrites are bit-exact
+/// per the ALU's modular semantics, LICM only hoists values whose uses all
+/// stay in the loop, scalarize only reorders independent pure instructions
+/// within a barrier-free run) — the captured sets remain sound supersets.
+/// Floats are never reassociated and journaled atomics never reordered.
+pub fn optimize_tier2(k: &mut Kernel) {
+    let barriers = k.num_barriers;
+    let suspension = k.suspension_points.len();
+    licm::run(k);
+    strength::run(k);
+    scalarize::run(k);
+    debug_assert_eq!(k.num_barriers, barriers, "tier-2 must preserve barrier ids");
+    debug_assert_eq!(
+        k.suspension_points.len(),
+        suspension,
+        "tier-2 must preserve suspension metadata"
+    );
 }

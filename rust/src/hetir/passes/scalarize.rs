@@ -1,0 +1,265 @@
+//! Uniformity-driven scalarization (tier-2 pass): consumes the
+//! [`uniformity`] analysis to hoist warp-uniform work out of the vector
+//! path, and exposes the per-kernel uniform/varying profile the runtime's
+//! Tensix tile-mode heuristic keys on.
+//!
+//! hetIR has no explicit scalar/vector register split — the backends make
+//! that assignment (the Tensix translator places uniform values in scalar
+//! core registers; SIMT backends broadcast them per warp). What the
+//! mid-end *can* do is schedule: within each straight-line run of pure
+//! instructions, uniform (scalar-path) work is floated above varying
+//! (vector-path) work, subject to data dependences. On the Tensix MIMD
+//! backend that groups the scalar-core prefix of each block, so uniform
+//! address/control arithmetic issues once instead of interleaving with
+//! per-lane vector work; on SIMT backends it is a no-cost schedule.
+//!
+//! Determinism: only pure, non-team instructions move (`Ld` may move —
+//! the run it moves within contains no store, atomic, fence, or barrier,
+//! so the loaded bytes are identical), swaps respect every def/use
+//! dependence, and no instruction crosses a barrier or control edge.
+//! Register state at every barrier — and therefore every snapshot blob —
+//! plus the modeled cost report (same instruction multiset, same
+//! addresses) are bit-identical to the unscheduled kernel's.
+
+use crate::hetir::instr::{Inst, Reg};
+use crate::hetir::module::{Kernel, Stmt};
+use crate::hetir::passes::uniformity::{self, Uniformity};
+
+/// Per-kernel uniform/varying instruction counts (the runtime's Tensix
+/// tile-mode heuristic consumes this; see `runtime::launch`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ScalarProfile {
+    /// Instructions whose result (or, for resultless instructions, whose
+    /// every input) is warp-uniform.
+    pub uniform: usize,
+    /// Instructions depending on thread identity.
+    pub varying: usize,
+}
+
+impl ScalarProfile {
+    /// True when at least `pct` percent of classified instructions are
+    /// uniform (zero-instruction kernels are not "mostly uniform").
+    pub fn mostly_uniform(&self, pct: usize) -> bool {
+        let total = self.uniform + self.varying;
+        total > 0 && self.uniform * 100 >= total * pct
+    }
+}
+
+fn inst_is_uniform(i: &Inst, uni: &Uniformity, buf: &mut Vec<Reg>) -> bool {
+    if let Some(d) = i.def() {
+        return uni.is_uniform(d);
+    }
+    buf.clear();
+    i.uses(buf);
+    buf.iter().all(|r| uni.is_uniform(*r))
+}
+
+/// Classify every instruction of `k` as uniform or varying.
+pub fn profile(k: &Kernel) -> ScalarProfile {
+    let uni = uniformity::run(k);
+    let mut p = ScalarProfile::default();
+    let mut buf = Vec::new();
+    k.visit_insts(|i| {
+        if inst_is_uniform(i, &uni, &mut buf) {
+            p.uniform += 1;
+        } else {
+            p.varying += 1;
+        }
+    });
+    p
+}
+
+/// Whether an instruction may be re-scheduled within its run: pure (its
+/// only effect is its def), thread-local, and not a barrier/fence.
+fn movable(i: &Inst) -> bool {
+    i.def().is_some() && !i.has_side_effect() && !i.is_team_op()
+}
+
+/// Stable uniform-first partition of one run of movable instructions.
+/// A uniform instruction bubbles up past a varying neighbor only when
+/// the pair is independent (no RAW/WAR/WAW hazard between them).
+fn schedule_run(run: &mut [Stmt], uni: &Uniformity) {
+    let n = run.len();
+    let mut buf = Vec::new();
+    let mut changed = true;
+    while changed {
+        changed = false;
+        for j in 0..n.saturating_sub(1) {
+            let (a, b) = (&run[j], &run[j + 1]);
+            let (Stmt::I(ia), Stmt::I(ib)) = (a, b) else { continue };
+            let (da, db) = (ia.def().unwrap(), ib.def().unwrap());
+            if !uni.is_varying(da) || !uni.is_uniform(db) {
+                continue;
+            }
+            // Dependence check: b must not read a's def (RAW), a must not
+            // read b's def (WAR), and they must not write the same reg.
+            if da == db {
+                continue;
+            }
+            buf.clear();
+            ib.uses(&mut buf);
+            if buf.contains(&da) {
+                continue;
+            }
+            buf.clear();
+            ia.uses(&mut buf);
+            if buf.contains(&db) {
+                continue;
+            }
+            run.swap(j, j + 1);
+            changed = true;
+        }
+    }
+}
+
+fn walk(stmts: &mut [Stmt], uni: &Uniformity) {
+    let mut i = 0;
+    while i < stmts.len() {
+        if matches!(&stmts[i], Stmt::I(inst) if movable(inst)) {
+            let start = i;
+            while i < stmts.len() && matches!(&stmts[i], Stmt::I(inst) if movable(inst)) {
+                i += 1;
+            }
+            schedule_run(&mut stmts[start..i], uni);
+        } else {
+            match &mut stmts[i] {
+                Stmt::If { then_b, else_b, .. } => {
+                    walk(then_b, uni);
+                    walk(else_b, uni);
+                }
+                Stmt::While { cond, body, .. } => {
+                    walk(cond, uni);
+                    walk(body, uni);
+                }
+                _ => {}
+            }
+            i += 1;
+        }
+    }
+}
+
+/// Run the uniform-first scheduler over the kernel.
+pub fn run(k: &mut Kernel) {
+    let uni = uniformity::run(k);
+    let mut body = std::mem::take(&mut k.body);
+    walk(&mut body, &uni);
+    k.body = body;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hetir::builder::KernelBuilder;
+    use crate::hetir::instr::{Address, BinOp, Dim, Operand, SpecialReg};
+    use crate::hetir::types::{AddrSpace, Scalar, Type, Value};
+    use crate::hetir::verify::verify_kernel;
+
+    fn insts(k: &Kernel) -> Vec<Inst> {
+        let mut v = Vec::new();
+        k.visit_insts(|i| v.push(i.clone()));
+        v
+    }
+
+    /// Varying work first, uniform work second → the scheduler floats the
+    /// independent uniform chain above the varying chain.
+    #[test]
+    fn uniform_work_floats_above_varying_work() {
+        let mut b = KernelBuilder::new("k");
+        let x = b.param("x", Type::U32);
+        let tid = b.special(SpecialReg::GlobalId(Dim::X));
+        let v1 = b.bin(BinOp::Add, Scalar::U32, tid.into(), Operand::Imm(Value::u32(1)));
+        let u1 = b.bin(BinOp::Add, Scalar::U32, x.into(), Operand::Imm(Value::u32(2)));
+        let u2 = b.bin(BinOp::Mul, Scalar::U32, u1.into(), Operand::Imm(Value::u32(3)));
+        let _v2 = b.bin(BinOp::Add, Scalar::U32, v1.into(), u2.into());
+        let mut k = b.finish_raw();
+        let before = insts(&k);
+        run(&mut k);
+        verify_kernel(&k).unwrap();
+        let after = insts(&k);
+        assert_eq!(before.len(), after.len());
+        let pos = |dst: Reg, v: &[Inst]| {
+            v.iter().position(|i| i.def() == Some(dst)).unwrap()
+        };
+        assert!(pos(u1, &after) < pos(v1, &after), "uniform add above varying add");
+        assert!(pos(u2, &after) < pos(v1, &after), "uniform mul above varying add");
+        assert!(pos(u1, &after) < pos(u2, &after), "uniform chain order kept");
+        assert!(pos(tid, &after) > pos(u2, &after), "varying GlobalId sinks below uniforms");
+    }
+
+    /// A uniform instruction reading a varying def must not move above it.
+    #[test]
+    fn dependences_pin_the_schedule() {
+        let mut b = KernelBuilder::new("k");
+        let tid = b.special(SpecialReg::ThreadIdx(Dim::X));
+        let v = b.ballot(tid.into()); // team op: immovable run boundary
+        let u = b.bin(BinOp::And, Scalar::U32, v.into(), Operand::Imm(Value::u32(1)));
+        let mut k = b.finish_raw();
+        let before = insts(&k);
+        run(&mut k);
+        verify_kernel(&k).unwrap();
+        assert_eq!(before, insts(&k), "nothing may cross a team op");
+        let _ = u;
+    }
+
+    /// Stores, atomics, and barriers bound runs: nothing crosses them.
+    #[test]
+    fn side_effects_bound_runs() {
+        let mut b = KernelBuilder::new("k");
+        let p = b.param("p", Type::PTR_GLOBAL);
+        let x = b.param("x", Type::U32);
+        let tid = b.special(SpecialReg::GlobalId(Dim::X));
+        let v1 = b.bin(BinOp::Add, Scalar::U32, tid.into(), Operand::Imm(Value::u32(1)));
+        b.st(AddrSpace::Global, Scalar::U32, Address::base(p), v1.into());
+        let u1 = b.bin(BinOp::Add, Scalar::U32, x.into(), Operand::Imm(Value::u32(2)));
+        let mut k = b.finish_raw();
+        run(&mut k);
+        verify_kernel(&k).unwrap();
+        let after = insts(&k);
+        let st_pos = after.iter().position(|i| matches!(i, Inst::St { .. })).unwrap();
+        let u1_pos = after.iter().position(|i| i.def() == Some(u1)).unwrap();
+        assert!(u1_pos > st_pos, "uniform add must not cross the store");
+    }
+
+    /// The profile classifies a thread-indexed kernel as mostly varying
+    /// and a parameter-only kernel as mostly uniform.
+    #[test]
+    fn profile_classifies_kernels() {
+        let mut b = KernelBuilder::new("vary");
+        let p = b.param("p", Type::PTR_GLOBAL);
+        let tid = b.special(SpecialReg::GlobalId(Dim::X));
+        let v = b.bin(BinOp::Mul, Scalar::U32, tid.into(), Operand::Imm(Value::u32(3)));
+        b.st(AddrSpace::Global, Scalar::U32, Address::indexed(p, tid, 4), v.into());
+        let k = b.finish_raw();
+        let pv = profile(&k);
+        assert!(pv.varying >= 3, "{pv:?}");
+        assert!(!pv.mostly_uniform(90));
+
+        let mut b = KernelBuilder::new("unif");
+        let x = b.param("x", Type::U32);
+        let a = b.bin(BinOp::Add, Scalar::U32, x.into(), Operand::Imm(Value::u32(1)));
+        let _c = b.bin(BinOp::Mul, Scalar::U32, a.into(), x.into());
+        let k = b.finish_raw();
+        let pu = profile(&k);
+        assert_eq!(pu.varying, 0, "{pu:?}");
+        assert!(pu.mostly_uniform(90));
+    }
+
+    /// Scheduling preserves suspension metadata exactly.
+    #[test]
+    fn preserves_suspension_metadata() {
+        let mut b = KernelBuilder::new("k");
+        let x = b.param("x", Type::U32);
+        let tid = b.special(SpecialReg::GlobalId(Dim::X));
+        let _v = b.bin(BinOp::Add, Scalar::U32, tid.into(), Operand::Imm(Value::u32(1)));
+        let _u = b.bin(BinOp::Add, Scalar::U32, x.into(), Operand::Imm(Value::u32(2)));
+        b.bar();
+        let _w = b.bin(BinOp::Add, Scalar::U32, tid.into(), x.into());
+        let mut k = b.finish();
+        let barriers = k.num_barriers;
+        let sp = k.suspension_points.clone();
+        run(&mut k);
+        verify_kernel(&k).unwrap();
+        assert_eq!(k.num_barriers, barriers);
+        assert_eq!(k.suspension_points, sp);
+    }
+}

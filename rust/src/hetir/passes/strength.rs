@@ -1,0 +1,345 @@
+//! Strength reduction (tier-2 pass): integer multiply / divide / remainder
+//! by power-of-two constants become shifts and masks, and constant index
+//! registers fold into address displacements.
+//!
+//! Every rewrite is a 1:1 instruction replacement whose result is
+//! **bit-identical** to the original under the simulators' wrapping
+//! semantics (`sim::alu`): `x * 2^k` ≡ `x << k` in two's-complement
+//! modular arithmetic (signed or unsigned), and `x / 2^k` ≡ `x >> k`,
+//! `x % 2^k` ≡ `x & (2^k - 1)` for **unsigned** types only (signed
+//! division rounds toward zero, a shift rounds toward −∞ — never
+//! rewritten). Floats are never touched (tier-2 determinism contract:
+//! no reassociation). Because replacements are 1:1 and the cost model
+//! charges ALU ops uniformly, the modeled `CostReport` of a
+//! strength-reduced kernel is bit-identical to the original's.
+//!
+//! The address fold mirrors the simulators' effective-address rule
+//! (`base + (idx_bits as i64).wrapping_mul(scale) + disp`, all wrapping),
+//! so folding a known-constant index into `disp` is exact — including
+//! for negative signed indices, whose register bit pattern is
+//! zero-extended exactly like the fold's `bits as i64`.
+//!
+//! This pass changes no control structure, adds no registers, and
+//! removes no instructions, so barrier ids and suspension-point live
+//! sets remain valid as-is (see `optimize_tier2`).
+
+use crate::hetir::instr::{Address, BinOp, Inst, Operand, Reg};
+use crate::hetir::module::{Kernel, Stmt};
+use crate::hetir::types::{Scalar, Type, Value};
+use std::collections::HashMap;
+
+/// Known-constant registers within a straight-line region (same
+/// conservative joins as `constfold`).
+type Env = HashMap<Reg, Value>;
+
+/// The constant's exponent when the operand is an immediate power of two
+/// in `ty`'s width (unsigned bit-pattern interpretation — modular
+/// arithmetic makes that exact for `Mul` even on signed types).
+fn pow2_exp(op: &Operand, ty: Scalar) -> Option<u32> {
+    let v = match op {
+        Operand::Imm(v) => *v,
+        Operand::Reg(_) => return None,
+    };
+    let bits = if ty.is_64() { v.bits } else { v.bits & 0xFFFF_FFFF };
+    (bits != 0 && bits & (bits - 1) == 0).then(|| bits.trailing_zeros())
+}
+
+fn is_zero(op: &Operand, ty: Scalar) -> bool {
+    match op {
+        Operand::Imm(v) => (if ty.is_64() { v.bits } else { v.bits & 0xFFFF_FFFF }) == 0,
+        Operand::Reg(_) => false,
+    }
+}
+
+/// An immediate of `ty` with the given bit pattern.
+fn imm_of(ty: Scalar, bits: u64) -> Operand {
+    let bits = if ty.is_64() { bits } else { bits & 0xFFFF_FFFF };
+    Operand::Imm(Value { bits, ty: Type::Scalar(ty) })
+}
+
+/// Rewrite one instruction in place, if a cost-neutral reduction applies.
+fn reduce(i: &mut Inst) {
+    let Inst::Bin { op, ty, dst, a, b } = i else { return };
+    if !ty.is_int() {
+        return;
+    }
+    let (op, ty, dst, a, b) = (*op, *ty, *dst, *a, *b);
+    match op {
+        BinOp::Mul => {
+            // Commutes: reduce whichever side is the power-of-two
+            // constant. Skip all-immediate forms (constfold's job).
+            let (k, other) = match (pow2_exp(&a, ty), pow2_exp(&b, ty)) {
+                (_, Some(k)) if b.reg().is_none() && a.reg().is_some() => (Some(k), a),
+                (Some(k), _) if a.reg().is_none() && b.reg().is_some() => (Some(k), b),
+                _ => (None, a),
+            };
+            if let Some(k) = k {
+                *i = if k == 0 {
+                    Inst::Mov { dst, src: other }
+                } else {
+                    Inst::Bin { op: BinOp::Shl, ty, dst, a: other, b: imm_of(ty, k as u64) }
+                };
+            } else if (is_zero(&a, ty) && b.reg().is_some())
+                || (is_zero(&b, ty) && a.reg().is_some())
+            {
+                *i = Inst::Mov { dst, src: imm_of(ty, 0) };
+            }
+        }
+        // Unsigned only: signed division truncates toward zero, an
+        // arithmetic shift would round toward −∞.
+        BinOp::Div if !ty.is_signed() => {
+            if let Some(k) = pow2_exp(&b, ty) {
+                if a.reg().is_some() {
+                    *i = if k == 0 {
+                        Inst::Mov { dst, src: a }
+                    } else {
+                        Inst::Bin { op: BinOp::Shr, ty, dst, a, b: imm_of(ty, k as u64) }
+                    };
+                }
+            }
+        }
+        BinOp::Rem if !ty.is_signed() => {
+            if let Some(k) = pow2_exp(&b, ty) {
+                if a.reg().is_some() {
+                    *i = if k == 0 {
+                        Inst::Mov { dst, src: imm_of(ty, 0) }
+                    } else {
+                        Inst::Bin {
+                            op: BinOp::And,
+                            ty,
+                            dst,
+                            a,
+                            b: imm_of(ty, (1u64 << k) - 1),
+                        }
+                    };
+                }
+            }
+        }
+        _ => {}
+    }
+}
+
+/// Fold a known-constant index register into the address displacement.
+/// Exact by construction: the simulators compute
+/// `base + (idx_bits as i64).wrapping_mul(scale) + disp` with wrapping
+/// adds, and wrapping addition is associative.
+fn fold_addr(a: &mut Address, env: &Env) {
+    let Some(idx) = a.index else { return };
+    let Some(v) = env.get(&idx) else { return };
+    a.disp = a.disp.wrapping_add((v.bits as i64).wrapping_mul(a.scale as i64));
+    a.index = None;
+}
+
+fn run_block(stmts: &mut [Stmt], env: &mut Env) {
+    for s in stmts.iter_mut() {
+        match s {
+            Stmt::I(i) => {
+                reduce(i);
+                match i {
+                    Inst::Ld { addr, .. } | Inst::St { addr, .. } | Inst::Atom { addr, .. } => {
+                        fold_addr(addr, env)
+                    }
+                    Inst::PtrAdd { addr, .. } => fold_addr(addr, env),
+                    _ => {}
+                }
+                match i {
+                    Inst::Mov { dst, src: Operand::Imm(v) } => {
+                        env.insert(*dst, *v);
+                    }
+                    _ => {
+                        if let Some(d) = i.def() {
+                            env.remove(&d);
+                        }
+                    }
+                }
+            }
+            Stmt::If { then_b, else_b, .. } => {
+                let mut t_env = env.clone();
+                run_block(then_b, &mut t_env);
+                let mut e_env = env.clone();
+                run_block(else_b, &mut e_env);
+                env.retain(|r, v| t_env.get(r) == Some(v) && e_env.get(r) == Some(v));
+            }
+            Stmt::While { cond, body, .. } => {
+                let mut killed = Vec::new();
+                for b in [&*cond, &*body] {
+                    for st in b {
+                        st.visit_insts(&mut |ii| {
+                            if let Some(d) = ii.def() {
+                                killed.push(d);
+                            }
+                        });
+                    }
+                }
+                for r in &killed {
+                    env.remove(r);
+                }
+                let mut loop_env = env.clone();
+                run_block(cond, &mut loop_env);
+                run_block(body, &mut loop_env);
+                for r in &killed {
+                    env.remove(r);
+                }
+            }
+            Stmt::Break | Stmt::Continue | Stmt::Return => {}
+        }
+    }
+}
+
+/// Run strength reduction over the kernel.
+pub fn run(k: &mut Kernel) {
+    let mut env = Env::new();
+    let mut body = std::mem::take(&mut k.body);
+    run_block(&mut body, &mut env);
+    k.body = body;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hetir::builder::KernelBuilder;
+    use crate::hetir::instr::AtomOp;
+    use crate::hetir::types::AddrSpace;
+    use crate::hetir::verify::verify_kernel;
+
+    fn insts(k: &Kernel) -> Vec<Inst> {
+        let mut v = Vec::new();
+        k.visit_insts(|i| v.push(i.clone()));
+        v
+    }
+
+    #[test]
+    fn mul_div_rem_by_pow2_become_shift_and_mask() {
+        let mut b = KernelBuilder::new("k");
+        let x = b.param("x", Type::U32);
+        let m = b.bin(BinOp::Mul, Scalar::U32, x.into(), Operand::Imm(Value::u32(8)));
+        let d = b.bin(BinOp::Div, Scalar::U32, m.into(), Operand::Imm(Value::u32(4)));
+        let _r = b.bin(BinOp::Rem, Scalar::U32, d.into(), Operand::Imm(Value::u32(16)));
+        let mut k = b.finish_raw();
+        run(&mut k);
+        verify_kernel(&k).unwrap();
+        let got = insts(&k);
+        assert!(matches!(
+            got[0],
+            Inst::Bin { op: BinOp::Shl, a: Operand::Reg(r), b: Operand::Imm(v), .. }
+                if r == x && v.bits == 3
+        ));
+        assert!(matches!(
+            got[1],
+            Inst::Bin { op: BinOp::Shr, b: Operand::Imm(v), .. } if v.bits == 2
+        ));
+        assert!(matches!(
+            got[2],
+            Inst::Bin { op: BinOp::And, b: Operand::Imm(v), .. } if v.bits == 15
+        ));
+    }
+
+    #[test]
+    fn mul_commutes_and_identities_fold() {
+        let mut b = KernelBuilder::new("k");
+        let x = b.param("x", Type::U32);
+        let _a = b.bin(BinOp::Mul, Scalar::U32, Operand::Imm(Value::u32(16)), x.into());
+        let _one = b.bin(BinOp::Mul, Scalar::U32, x.into(), Operand::Imm(Value::u32(1)));
+        let _zero = b.bin(BinOp::Mul, Scalar::U32, x.into(), Operand::Imm(Value::u32(0)));
+        let mut k = b.finish_raw();
+        run(&mut k);
+        verify_kernel(&k).unwrap();
+        let got = insts(&k);
+        assert!(matches!(
+            got[0],
+            Inst::Bin { op: BinOp::Shl, a: Operand::Reg(r), b: Operand::Imm(v), .. }
+                if r == x && v.bits == 4
+        ));
+        assert!(matches!(got[1], Inst::Mov { src: Operand::Reg(r), .. } if r == x));
+        assert!(matches!(got[2], Inst::Mov { src: Operand::Imm(v), .. } if v.bits == 0));
+    }
+
+    #[test]
+    fn signed_div_and_non_pow2_left_alone() {
+        let mut b = KernelBuilder::new("k");
+        let x = b.param("x", Type::I32);
+        let y = b.param("y", Type::U32);
+        // Signed division must NOT become an arithmetic shift
+        // (rounding direction differs for negative dividends).
+        let _sd = b.bin(BinOp::Div, Scalar::I32, x.into(), Operand::Imm(Value::i32(4)));
+        let _np = b.bin(BinOp::Mul, Scalar::U32, y.into(), Operand::Imm(Value::u32(40503)));
+        // Signed Mul by a pow2 IS safe under wrapping semantics.
+        let _sm = b.bin(BinOp::Mul, Scalar::I32, x.into(), Operand::Imm(Value::i32(4)));
+        let mut k = b.finish_raw();
+        run(&mut k);
+        verify_kernel(&k).unwrap();
+        let got = insts(&k);
+        assert!(matches!(got[0], Inst::Bin { op: BinOp::Div, .. }));
+        assert!(matches!(got[1], Inst::Bin { op: BinOp::Mul, .. }));
+        assert!(matches!(got[2], Inst::Bin { op: BinOp::Shl, .. }));
+    }
+
+    #[test]
+    fn constant_index_folds_into_displacement() {
+        let mut b = KernelBuilder::new("k");
+        let p = b.param("p", Type::PTR_GLOBAL);
+        let idx = b.mov(Type::U32, Operand::Imm(Value::u32(5)));
+        let v = b.ld(AddrSpace::Global, Scalar::U32, Address::indexed(p, idx, 4));
+        b.st(
+            AddrSpace::Global,
+            Scalar::U32,
+            Address::indexed(p, idx, 4).with_disp(64),
+            v.into(),
+        );
+        b.atom(
+            AtomOp::Add,
+            AddrSpace::Global,
+            Scalar::U32,
+            Address::indexed(p, idx, 8),
+            Operand::Imm(Value::u32(1)),
+        );
+        let mut k = b.finish_raw();
+        run(&mut k);
+        verify_kernel(&k).unwrap();
+        let got = insts(&k);
+        assert!(matches!(got[1], Inst::Ld { addr: Address { index: None, disp: 20, .. }, .. }));
+        assert!(matches!(got[2], Inst::St { addr: Address { index: None, disp: 84, .. }, .. }));
+        assert!(matches!(got[3], Inst::Atom { addr: Address { index: None, disp: 40, .. }, .. }));
+    }
+
+    #[test]
+    fn divergently_assigned_index_not_folded() {
+        let mut b = KernelBuilder::new("k");
+        let p = b.param("p", Type::PTR_GLOBAL);
+        let c = b.param("c", Type::PRED);
+        let idx = b.mov(Type::U32, Operand::Imm(Value::u32(1)));
+        b.if_(c, |b| {
+            b.bin_into(idx, BinOp::Add, Scalar::U32, idx.into(), Operand::Imm(Value::u32(1)));
+        });
+        let _v = b.ld(AddrSpace::Global, Scalar::U32, Address::indexed(p, idx, 4));
+        let mut k = b.finish_raw();
+        run(&mut k);
+        verify_kernel(&k).unwrap();
+        let got = insts(&k);
+        let ld = got.iter().find(|i| matches!(i, Inst::Ld { .. })).unwrap();
+        assert!(
+            matches!(ld, Inst::Ld { addr: Address { index: Some(r), .. }, .. } if *r == idx),
+            "index assigned under divergence must not fold"
+        );
+    }
+
+    #[test]
+    fn preserves_structure_and_suspension_metadata() {
+        let mut b = KernelBuilder::new("k");
+        let x = b.param("x", Type::U32);
+        let n = b.param("n", Type::U32);
+        b.for_u32(Operand::Imm(Value::u32(0)), n.into(), 1, |b, _| {
+            b.bin(BinOp::Mul, Scalar::U32, x.into(), Operand::Imm(Value::u32(4)));
+            b.bar();
+        });
+        let mut k = b.finish(); // segmenter + liveness run
+        let barriers = k.num_barriers;
+        let sp = k.suspension_points.clone();
+        let count = k.inst_count();
+        run(&mut k);
+        verify_kernel(&k).unwrap();
+        assert_eq!(k.num_barriers, barriers);
+        assert_eq!(k.suspension_points, sp);
+        assert_eq!(k.inst_count(), count, "strength reduction must be 1:1");
+    }
+}

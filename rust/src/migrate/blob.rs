@@ -467,6 +467,12 @@ pub fn deserialize(buf: &[u8]) -> Result<Snapshot> {
             // entries travel in `Snapshot::journal` and the restoring
             // side re-attaches a journal (coordinator rebalance).
             journal: None,
+            // Programs don't cross the wire either: the restoring context
+            // re-resolves through its own JIT (no pin; `device` is the
+            // source device, which a restored kernel never resumes on
+            // without re-translation anyway).
+            device: src_device,
+            prog: None,
         })
     } else {
         None
@@ -494,6 +500,8 @@ mod tests {
             src_device: 1,
             paused: Some(PausedKernel {
                 journal: None,
+                device: 1,
+                prog: None,
                 spec: LaunchSpec {
                     module: ModuleHandle::from_raw(3),
                     kernel: "iter_mm".into(),

@@ -49,6 +49,8 @@ use crate::runtime::device::{Device, DeviceKind};
 use crate::runtime::events::{copy_end, EventGraph, EventId, EventStatus, GraphStats, NodeKind};
 use crate::runtime::faultinject::FaultInjector;
 use crate::runtime::jit::JitCache;
+pub use crate::backends::JitTier;
+pub use crate::runtime::jit::{JitStats, TierPolicy};
 use crate::runtime::launch::{Arg, LaunchSpec};
 use crate::runtime::memory::{
     pod_from_bytes, pod_to_bytes, Buffer, GpuPtr, MemoryManager, PinnedBuffer, Pod,
@@ -79,6 +81,9 @@ pub struct HetGpu {
     graph: Arc<EventGraph>,
     /// Executor pool draining the graph (joined on drop).
     executors: Vec<JoinHandle<()>>,
+    /// Background tier-2 JIT compiler (None when a forced tier disables
+    /// adaptive promotion); shut down and joined on drop.
+    jit_compiler: Option<JoinHandle<()>>,
     /// The coordinator's persistent delta-sync state: host baseline
     /// mirror + per-device sync watermarks (see `coordinator::CoordCache`),
     /// so repeated `launch_sharded` calls baseline/broadcast/merge
@@ -117,17 +122,28 @@ impl HetGpu {
     /// block-dispatch worker count comes from `HETGPU_SIM_THREADS`
     /// (default: host cores).
     pub fn with_devices(kinds: &[DeviceKind]) -> Result<HetGpu> {
-        HetGpu::build(kinds, None)
+        HetGpu::build(kinds, None, None)
     }
 
     /// Create a context with an explicit per-device dispatch worker count
     /// (overrides `HETGPU_SIM_THREADS`; `1` forces sequential block
     /// execution).
     pub fn with_devices_and_workers(kinds: &[DeviceKind], workers: usize) -> Result<HetGpu> {
-        HetGpu::build(kinds, Some(workers))
+        HetGpu::build(kinds, Some(workers), None)
     }
 
-    fn build(kinds: &[DeviceKind], workers: Option<usize>) -> Result<HetGpu> {
+    /// Create a context with explicit workers AND an explicit JIT tiering
+    /// policy (overrides `HETGPU_JIT_HOT_THRESHOLD` / `HETGPU_JIT_TIER` —
+    /// tests pin policies without racing on process-global env vars).
+    pub fn with_devices_workers_and_jit(
+        kinds: &[DeviceKind],
+        workers: usize,
+        jit: TierPolicy,
+    ) -> Result<HetGpu> {
+        HetGpu::build(kinds, Some(workers), Some(jit))
+    }
+
+    fn build(kinds: &[DeviceKind], workers: Option<usize>, jit: Option<TierPolicy>) -> Result<HetGpu> {
         if kinds.is_empty() {
             return Err(HetError::runtime("no devices"));
         }
@@ -145,10 +161,11 @@ impl HetGpu {
         if let Some(plan) = FaultPlan::from_env() {
             fault.install(plan);
         }
+        let jit_policy = jit.unwrap_or_else(TierPolicy::from_env);
         let inner = Arc::new(RuntimeInner {
             devices,
             modules: std::sync::RwLock::new(ModuleTable::new()),
-            jit: JitCache::new(),
+            jit: JitCache::with_policy(jit_policy),
             memory: MemoryManager::new(crate::runtime::device::DEVICE_MEM_BYTES),
             fault,
         });
@@ -156,10 +173,24 @@ impl HetGpu {
         // Enough executors that every device can be mid-launch while a few
         // extra streams overlap copies; executors block while a node runs.
         let executors = EventGraph::spawn_executors(&graph, (kinds.len() * 2).clamp(2, 8));
+        // The background tier-2 compiler: parked on the hot queue unless a
+        // forced tier disables adaptive promotion entirely.
+        let jit_compiler = if jit_policy.force.is_none() {
+            let rt = inner.clone();
+            Some(
+                std::thread::Builder::new()
+                    .name("hetgpu-jit2".into())
+                    .spawn(move || crate::runtime::jit_compiler_loop(rt))
+                    .map_err(|e| HetError::runtime(format!("spawn jit compiler: {e}")))?,
+            )
+        } else {
+            None
+        };
         Ok(HetGpu {
             inner,
             graph,
             executors,
+            jit_compiler,
             coord: Mutex::new(CoordCache::default()),
             journal_counters: JournalCounters::default(),
         })
@@ -483,6 +514,13 @@ impl HetGpu {
         self.inner.fault.stats()
     }
 
+    /// Tiered-JIT observability: cache hits, per-tier translation counts,
+    /// background promotions, in-flight compiles, installed swaps, the
+    /// current cache generation, and dropped ring events (DESIGN.md §11).
+    pub fn jit_stats(&self) -> JitStats {
+        self.inner.jit.stats()
+    }
+
     /// Current operational health of `device`.
     pub fn device_health(&self, device: usize) -> Result<HealthState> {
         Ok(self.inner.device(device)?.health())
@@ -521,7 +559,7 @@ impl HetGpu {
             args: vec![Arg::Ptr(buf.ptr())],
             tensix_mode_hint: None,
         };
-        let run = self.inner.run_launch(device, &spec, None, None, None, None);
+        let run = self.inner.run_launch(device, &spec, None, None, None, None, None);
         let passed = match run {
             Ok(_) => self
                 .download(&buf, 32)?
@@ -831,6 +869,13 @@ impl Drop for HetGpu {
     fn drop(&mut self) {
         self.graph.shutdown();
         for h in self.executors.drain(..) {
+            let _ = h.join();
+        }
+        // Wake the background tier-2 compiler out of its queue wait and
+        // join it (any in-progress compile finishes first — installing
+        // into a cache nobody will read again is harmless).
+        self.inner.jit.shutdown_compiler();
+        if let Some(h) = self.jit_compiler.take() {
             let _ = h.join();
         }
     }

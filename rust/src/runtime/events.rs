@@ -894,14 +894,19 @@ fn execute_node(
                 Some(r) => r.lo.saturating_add(off).min(r.hi.saturating_sub(1)),
                 None => off,
             });
-            run_timed(rt, device, spec, dirs.as_deref(), journal.as_ref(), memo, fault)
+            run_timed(rt, device, spec, dirs.as_deref(), journal.as_ref(), memo, None, fault)
         }
         NodeKind::Resume { paused } => {
             let dirs = paused.resume_directives();
+            // A same-device resume runs the pinned translation the kernel
+            // was suspended under — a tier-2 swap while it was paused must
+            // not change the program its captured registers re-enter. A
+            // cross-device resume re-translates for the new target.
+            let pinned = if paused.device == device { paused.prog.as_ref() } else { None };
             // A resumed journaled shard keeps journaling into the same
             // journal (carried inside the paused kernel), so entries of
             // re-entered blocks append behind their pre-pause batches.
-            run_timed(rt, device, &paused.spec, Some(&dirs), paused.journal.as_ref(), memo, None)
+            run_timed(rt, device, &paused.spec, Some(&dirs), paused.journal.as_ref(), memo, pinned, None)
         }
         NodeKind::CopyH2D { dst, data } => {
             let (base, size, dev_id) = rt.memory.lookup(*dst)?;
@@ -964,11 +969,12 @@ fn run_timed(
     resume: Option<&[BlockResume]>,
     journal: Option<&Arc<AtomicJournal>>,
     memo: &Mutex<Option<JitMemo>>,
+    pinned: Option<&Arc<crate::backends::DeviceProgram>>,
     fault: Option<u32>,
 ) -> Result<Exec> {
     let t0 = Instant::now();
-    let outcome =
-        rt.run_launch(device, spec, resume, journal.map(|j| j.as_ref()), Some(memo), fault)?;
+    let (outcome, prog) =
+        rt.run_launch(device, spec, resume, journal.map(|j| j.as_ref()), Some(memo), pinned, fault)?;
     let wall_us = t0.elapsed().as_secs_f64() * 1e6;
     let workers = rt.device(device).map(|d| d.engine.workers()).unwrap_or(1);
     let cost = *outcome.cost();
@@ -983,6 +989,11 @@ fn run_timed(
                 spec: spec.clone(),
                 blocks: grid.blocks,
                 journal: journal.cloned(),
+                device,
+                // Pin the translation the kernel suspended under: a
+                // same-device resume re-enters exactly this program even
+                // if the tiered JIT swaps the cache entry meanwhile.
+                prog: Some(prog),
             }),
         ),
     };

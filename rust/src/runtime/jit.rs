@@ -1,19 +1,122 @@
 //! JIT translation cache (paper §4.2 Module Loading and JIT: "the runtime
 //! caches these translated kernels, so repeated launches don't incur
-//! translation overhead").
+//! translation overhead") — now two-tiered (DESIGN.md §11).
+//!
+//! **Tier 1** is the fast first-launch translate, unchanged. Every launch
+//! bumps the cache entry's hit profile; when a `(module uid, kernel, kind,
+//! mode)` pair crosses [`TierPolicy::hot_threshold`] launches, the key is
+//! queued for the background compile thread (owned by `HetGpu`, see
+//! `runtime::jit_compiler_loop`), which re-lowers the kernel through the
+//! optimizing **tier-2** hetIR mid-end (`hetir::passes::optimize_tier2`)
+//! and [`JitCache::install_tier2`]s the result. The swap is an `Arc`
+//! replacement under the cache lock plus a generation bump — running grids
+//! keep their pinned tier-1 `Arc`; the *next* launch boundary observes
+//! tier 2. Per-stream [`JitMemo`]s revalidate against the generation
+//! counter (one relaxed atomic load on the launch path), so a memo can
+//! never pin a stale tier-1 translation alive.
+//!
+//! Both tiers are bit-identical in everything the determinism suite
+//! measures (memory, cost reports, snapshot blobs); tier 2 only shrinks
+//! host-side simulation work. See `optimize_tier2` for why.
 //!
 //! Also records per-translation timing — the data behind the paper's §6.2
-//! "Translation/JIT cost" table (bench E4).
+//! "Translation/JIT cost" table (bench E4) — in a bounded ring (aggregate
+//! counters stay exact; see [`JitStats`]).
 
-use crate::backends::{self, DeviceProgram, TranslateOpts};
+use crate::backends::{self, DeviceProgram, JitTier, TranslateOpts};
 use crate::error::Result;
 use crate::hetir::module::Kernel;
 use crate::isa::simt_isa::SimtConfig;
 use crate::isa::tensix_isa::TensixMode;
 use crate::runtime::device::DeviceKind;
-use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
+
+/// Default launch count after which an entry is promoted to tier 2.
+pub const DEFAULT_HOT_THRESHOLD: u64 = 32;
+
+/// Translation events kept for the E4 table; older events are dropped
+/// (counted in [`JitStats::events_dropped`]) so long-lived serving runs
+/// don't grow without bound.
+const EVENT_RING_CAP: usize = 512;
+
+/// Tiering policy: when to promote, and the forced-tier debug override.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TierPolicy {
+    /// Launches of one cache entry before it is queued for tier 2.
+    pub hot_threshold: u64,
+    /// `Some(tier)` pins every translation to that tier: `Baseline`
+    /// disables promotion entirely, `Optimized` compiles tier 2 eagerly
+    /// on first launch (no background thread involved). `None` = adaptive.
+    pub force: Option<JitTier>,
+}
+
+impl Default for TierPolicy {
+    fn default() -> Self {
+        TierPolicy { hot_threshold: DEFAULT_HOT_THRESHOLD, force: None }
+    }
+}
+
+/// Parse `HETGPU_JIT_HOT_THRESHOLD`. `0` is clamped to 1 (promote after
+/// the first launch), not an error. Returns the value plus the warning to
+/// print for malformed input.
+fn parse_hot_threshold(raw: &str) -> (u64, Option<String>) {
+    match raw.trim().parse::<u64>() {
+        Ok(0) => (1, None),
+        Ok(n) => (n, None),
+        Err(_) => (
+            DEFAULT_HOT_THRESHOLD,
+            Some(format!(
+                "hetgpu: HETGPU_JIT_HOT_THRESHOLD={raw:?} is not a number; \
+                 falling back to the default of {DEFAULT_HOT_THRESHOLD} launches"
+            )),
+        ),
+    }
+}
+
+/// Parse `HETGPU_JIT_TIER` (`1` = force baseline, `2` = force optimized).
+/// Returns the override plus the warning to print for malformed input.
+fn parse_forced_tier(raw: &str) -> (Option<JitTier>, Option<String>) {
+    match raw.trim() {
+        "1" => (Some(JitTier::Baseline), None),
+        "2" => (Some(JitTier::Optimized), None),
+        _ => (
+            None,
+            Some(format!(
+                "hetgpu: HETGPU_JIT_TIER={raw:?} is not a tier (expected 1 or 2); \
+                 leaving tiering adaptive"
+            )),
+        ),
+    }
+}
+
+impl TierPolicy {
+    /// Policy from `HETGPU_JIT_HOT_THRESHOLD` / `HETGPU_JIT_TIER`.
+    /// Malformed values warn loudly once per process, naming the bad value
+    /// and the default used — the `HETGPU_SIM_THREADS` contract.
+    pub fn from_env() -> TierPolicy {
+        let mut p = TierPolicy::default();
+        if let Ok(raw) = std::env::var("HETGPU_JIT_HOT_THRESHOLD") {
+            let (v, warn) = parse_hot_threshold(&raw);
+            p.hot_threshold = v;
+            if let Some(msg) = warn {
+                static WARNED: std::sync::Once = std::sync::Once::new();
+                WARNED.call_once(|| eprintln!("{msg}"));
+            }
+        }
+        if let Ok(raw) = std::env::var("HETGPU_JIT_TIER") {
+            let (f, warn) = parse_forced_tier(&raw);
+            p.force = f;
+            if let Some(msg) = warn {
+                static WARNED: std::sync::Once = std::sync::Once::new();
+                WARNED.call_once(|| eprintln!("{msg}"));
+            }
+        }
+        p
+    }
+}
 
 /// Cache key: one translation per (module, kernel, target, mode, build).
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
@@ -28,23 +131,54 @@ pub struct JitKey {
     pub migratable: bool,
 }
 
+/// The launch-count profile of one cache entry. Shared (`Arc`) between
+/// the cache entry and every stream memo of it, so memoized repeat
+/// launches — which never touch the cache lock — still count toward
+/// promotion: one relaxed `fetch_add` per launch.
+pub struct EntryProfile {
+    key: JitKey,
+    launches: AtomicU64,
+}
+
+impl EntryProfile {
+    /// Launches counted against this entry so far.
+    pub fn launches(&self) -> u64 {
+        self.launches.load(Ordering::Relaxed)
+    }
+}
+
+/// A cache resolution: the program plus the profile to count launches
+/// against and the generation the resolution was made at (memos store it;
+/// a later swap bumps the generation and invalidates them).
+pub struct JitResolution {
+    pub prog: Arc<DeviceProgram>,
+    pub profile: Arc<EntryProfile>,
+    pub gen: u64,
+}
+
 /// One stream's memo of its most recent `(module, kernel)` JIT
 /// resolution — the first rung of launch batching. Back-to-back launches
 /// of the same kernel on one stream are the dominant pattern for
 /// sub-millisecond kernels, where the E4 cost table shows the *lookup*
 /// (shared-cache mutex + key hash, including a `String` clone per
 /// launch) dominating; the memo turns the repeat case into four integer/
-/// enum compares and one string compare, with no shared-lock traffic.
+/// enum compares, one string compare, and one relaxed generation load,
+/// with no shared-lock traffic.
 ///
 /// Module identity is the `ModuleTable` **uid**, which is unique per
 /// load and never reused — a memo held across `unload_module` can never
-/// alias a reloaded module; it simply stops matching.
+/// alias a reloaded module; it simply stops matching. Tier swaps are
+/// observed through the generation: [`JitCache::install_tier2`] bumps it,
+/// the next `lookup` mismatches, and the launch re-resolves through the
+/// cache (re-memoizing the tier-2 program at the new generation).
 pub struct JitMemo {
     module_uid: u64,
     kernel: String,
     kind: DeviceKind,
     tensix_mode: Option<TensixMode>,
+    gen: u64,
     prog: Arc<DeviceProgram>,
+    profile: Arc<EntryProfile>,
 }
 
 impl JitMemo {
@@ -53,26 +187,38 @@ impl JitMemo {
         kernel: String,
         kind: DeviceKind,
         tensix_mode: Option<TensixMode>,
-        prog: Arc<DeviceProgram>,
+        res: &JitResolution,
     ) -> JitMemo {
-        JitMemo { module_uid, kernel, kind, tensix_mode, prog }
+        JitMemo {
+            module_uid,
+            kernel,
+            kind,
+            tensix_mode,
+            gen: res.gen,
+            prog: res.prog.clone(),
+            profile: res.profile.clone(),
+        }
     }
 
-    /// The memoized program when it matches this resolution request
-    /// (migratable builds only — the launch path always translates with
-    /// migration support).
+    /// The memoized program when it matches this resolution request AND
+    /// the cache generation it was taken at (migratable builds only — the
+    /// launch path always translates with migration support). Pass the
+    /// current [`JitCache::generation`]: any swap since memoization forces
+    /// a cache re-resolution.
     pub fn lookup(
         &self,
         module_uid: u64,
         kernel: &str,
         kind: DeviceKind,
         tensix_mode: Option<TensixMode>,
-    ) -> Option<Arc<DeviceProgram>> {
-        (self.module_uid == module_uid
+        gen: u64,
+    ) -> Option<(Arc<DeviceProgram>, Arc<EntryProfile>)> {
+        (self.gen == gen
+            && self.module_uid == module_uid
             && self.kind == kind
             && self.tensix_mode == tensix_mode
             && self.kernel == kernel)
-            .then(|| self.prog.clone())
+            .then(|| (self.prog.clone(), self.profile.clone()))
     }
 }
 
@@ -82,29 +228,118 @@ pub struct JitEvent {
     pub kernel: String,
     pub kind: DeviceKind,
     pub tensix_mode: Option<TensixMode>,
+    pub tier: JitTier,
     pub micros: f64,
     pub out_insts: usize,
 }
 
-/// All mutable cache state behind one lock: the map, the E4 event log, and
-/// the hit counter move together, so a cache decision and its accounting
-/// are a single critical section (three separate mutexes previously let
-/// concurrent launches interleave them inconsistently).
-#[derive(Default)]
-struct JitState {
-    map: HashMap<JitKey, Arc<DeviceProgram>>,
-    events: Vec<JitEvent>,
-    hits: u64,
+/// Aggregate JIT observability (`HetGpu::jit_stats`). The counters are
+/// exact for the life of the process; only the per-event ring is bounded.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct JitStats {
+    /// Cache-lock hits (memoized repeat launches don't count here).
+    pub hits: u64,
+    /// Tier-1 (baseline) translations performed.
+    pub tier1_translations: u64,
+    /// Tier-2 (optimized) translations performed — background promotions
+    /// plus forced-tier-2 eager translations.
+    pub tier2_translations: u64,
+    /// Entries promoted tier 1 → tier 2 by the background compiler.
+    pub promotions: u64,
+    /// Hot keys queued or compiling right now.
+    pub in_flight_compiles: u64,
+    /// Program swaps installed at a launch boundary.
+    pub swaps: u64,
+    /// Current cache generation (bumped once per swap).
+    pub generation: u64,
+    /// `JitEvent`s dropped from the bounded ring.
+    pub events_dropped: u64,
 }
 
+/// One cached translation plus its tier and launch profile.
+struct Entry {
+    prog: Arc<DeviceProgram>,
+    tier: JitTier,
+    profile: Arc<EntryProfile>,
+}
+
+/// All mutable cache state behind one lock: the map, the E4 event ring,
+/// and the counters move together, so a cache decision and its accounting
+/// are a single critical section.
 #[derive(Default)]
+struct JitState {
+    map: HashMap<JitKey, Entry>,
+    events: VecDeque<JitEvent>,
+    hits: u64,
+    tier1_translations: u64,
+    tier2_translations: u64,
+    promotions: u64,
+    swaps: u64,
+    events_dropped: u64,
+}
+
+impl JitState {
+    fn push_event(&mut self, cap: usize, ev: JitEvent) {
+        if self.events.len() >= cap {
+            self.events.pop_front();
+            self.events_dropped += 1;
+        }
+        self.events.push_back(ev);
+    }
+}
+
+/// Hot keys awaiting the background compiler.
+#[derive(Default)]
+struct CompileQueue {
+    pending: VecDeque<JitKey>,
+    shutdown: bool,
+}
+
 pub struct JitCache {
     state: Mutex<JitState>,
+    queue: Mutex<CompileQueue>,
+    queue_cond: Condvar,
+    /// Bumped (release) once per installed swap; the launch path reads it
+    /// relaxed to revalidate stream memos. Monotonic, never reset.
+    generation: AtomicU64,
+    in_flight: AtomicU64,
+    policy: TierPolicy,
+    event_cap: usize,
+}
+
+impl Default for JitCache {
+    fn default() -> Self {
+        JitCache::with_policy(TierPolicy::default())
+    }
 }
 
 impl JitCache {
     pub fn new() -> JitCache {
         JitCache::default()
+    }
+
+    pub fn with_policy(policy: TierPolicy) -> JitCache {
+        JitCache {
+            state: Mutex::default(),
+            queue: Mutex::default(),
+            queue_cond: Condvar::new(),
+            generation: AtomicU64::new(0),
+            in_flight: AtomicU64::new(0),
+            policy,
+            event_cap: EVENT_RING_CAP,
+        }
+    }
+
+    /// The active tiering policy.
+    pub fn policy(&self) -> TierPolicy {
+        self.policy
+    }
+
+    /// Current cache generation — one relaxed load; this is the entire
+    /// launch-path cost of tiering when nothing is hot (the faultinject
+    /// gate discipline).
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::Relaxed)
     }
 
     /// Translate (or fetch the cached translation of) `kernel` for the
@@ -121,60 +356,166 @@ impl JitCache {
         key: JitKey,
         kernel: &Kernel,
         simt_cfg: Option<&SimtConfig>,
-    ) -> Result<Arc<DeviceProgram>> {
+    ) -> Result<JitResolution> {
         {
             let mut st = self.state.lock().unwrap();
-            if let Some(p) = st.map.get(&key) {
-                let p = p.clone();
+            if let Some(e) = st.map.get(&key) {
+                let res = JitResolution {
+                    prog: e.prog.clone(),
+                    profile: e.profile.clone(),
+                    gen: self.generation(),
+                };
                 st.hits += 1;
-                return Ok(p);
+                return Ok(res);
             }
         }
 
-        let opts = TranslateOpts { migratable: key.migratable };
-        let t0 = Instant::now();
-        let prog = match key.kind {
-            DeviceKind::TenstorrentSim => {
-                let mode = key.tensix_mode.expect("tensix mode required");
-                DeviceProgram::Tensix(backends::translate_tensix(kernel, mode, opts)?)
-            }
-            _ => {
-                let cfg = simt_cfg.expect("simt config required");
-                DeviceProgram::Simt(backends::translate_simt(kernel, cfg, opts)?)
-            }
+        // Forced tier 2 compiles eagerly (debug override); otherwise the
+        // first translation is always the fast tier-1 path and promotion
+        // happens in the background.
+        let tier = match self.policy.force {
+            Some(JitTier::Optimized) => JitTier::Optimized,
+            _ => JitTier::Baseline,
         };
+        let t0 = Instant::now();
+        let prog = translate_for_key(&key, kernel, simt_cfg, tier)?;
         let micros = t0.elapsed().as_secs_f64() * 1e6;
 
         let mut st = self.state.lock().unwrap();
-        if let Some(p) = st.map.get(&key) {
+        if let Some(e) = st.map.get(&key) {
             // Lost the miss race: keep the published program.
-            let p = p.clone();
+            let res = JitResolution {
+                prog: e.prog.clone(),
+                profile: e.profile.clone(),
+                gen: self.generation(),
+            };
             st.hits += 1;
-            return Ok(p);
+            return Ok(res);
         }
-        st.events.push(JitEvent {
-            kernel: key.kernel.clone(),
-            kind: key.kind,
-            tensix_mode: key.tensix_mode,
-            micros,
-            out_insts: prog.inst_count(),
-        });
+        st.push_event(
+            self.event_cap,
+            JitEvent {
+                kernel: key.kernel.clone(),
+                kind: key.kind,
+                tensix_mode: key.tensix_mode,
+                tier,
+                micros,
+                out_insts: prog.inst_count(),
+            },
+        );
+        match tier {
+            JitTier::Baseline => st.tier1_translations += 1,
+            JitTier::Optimized => st.tier2_translations += 1,
+        }
         let prog = Arc::new(prog);
-        st.map.insert(key, prog.clone());
-        Ok(prog)
+        let profile = Arc::new(EntryProfile { key: key.clone(), launches: AtomicU64::new(0) });
+        let res = JitResolution { prog: prog.clone(), profile: profile.clone(), gen: self.generation() };
+        st.map.insert(key, Entry { prog, tier, profile });
+        Ok(res)
+    }
+
+    /// Count one launch against `profile`; exactly the launch that crosses
+    /// the hot threshold queues the key for the background compiler (the
+    /// `fetch_add` return value makes the crossing unique even under
+    /// concurrent launches from many streams).
+    pub fn count_launch(&self, profile: &EntryProfile) {
+        let prev = profile.launches.fetch_add(1, Ordering::Relaxed);
+        if prev + 1 == self.policy.hot_threshold && self.policy.force.is_none() {
+            self.in_flight.fetch_add(1, Ordering::Relaxed);
+            let mut q = self.queue.lock().unwrap();
+            if q.shutdown {
+                drop(q);
+                self.in_flight.fetch_sub(1, Ordering::Relaxed);
+            } else {
+                q.pending.push_back(profile.key.clone());
+                self.queue_cond.notify_one();
+            }
+        }
+    }
+
+    /// Block until a hot key is queued (background compile thread); `None`
+    /// once [`JitCache::shutdown_compiler`] ran.
+    pub fn next_hot(&self) -> Option<JitKey> {
+        let mut q = self.queue.lock().unwrap();
+        loop {
+            if q.shutdown {
+                return None;
+            }
+            if let Some(k) = q.pending.pop_front() {
+                return Some(k);
+            }
+            q = self.queue_cond.wait(q).unwrap();
+        }
+    }
+
+    /// Wake and terminate the background compiler; queued-but-uncompiled
+    /// keys are dropped (context is shutting down).
+    pub fn shutdown_compiler(&self) {
+        let mut q = self.queue.lock().unwrap();
+        q.shutdown = true;
+        let dropped = q.pending.len() as u64;
+        q.pending.clear();
+        self.in_flight.fetch_sub(dropped, Ordering::Relaxed);
+        self.queue_cond.notify_all();
+    }
+
+    /// Install a finished tier-2 program for `key` and bump the
+    /// generation: the swap itself is an `Arc` replacement — in-flight
+    /// grids keep the `Arc` they resolved at their launch boundary, the
+    /// next launch of the kernel re-resolves (memo generation mismatch)
+    /// and picks up tier 2. No launch ever blocks on tier-2 compilation.
+    pub fn install_tier2(&self, key: &JitKey, prog: DeviceProgram, micros: f64) {
+        let out_insts = prog.inst_count();
+        {
+            let mut st = self.state.lock().unwrap();
+            if let Some(e) = st.map.get_mut(key) {
+                e.prog = Arc::new(prog);
+                e.tier = JitTier::Optimized;
+            } else {
+                // Module was unloaded while the compile ran; nothing to
+                // install (uids are never reused, so this can't alias).
+                drop(st);
+                self.in_flight.fetch_sub(1, Ordering::Relaxed);
+                return;
+            }
+            st.tier2_translations += 1;
+            st.promotions += 1;
+            st.swaps += 1;
+            st.push_event(
+                self.event_cap,
+                JitEvent {
+                    kernel: key.kernel.clone(),
+                    kind: key.kind,
+                    tensix_mode: key.tensix_mode,
+                    tier: JitTier::Optimized,
+                    micros,
+                    out_insts,
+                },
+            );
+        }
+        self.in_flight.fetch_sub(1, Ordering::Relaxed);
+        self.generation.fetch_add(1, Ordering::Release);
+    }
+
+    /// The background compiler failed to produce tier-2 code for `key`
+    /// (it stays on tier 1 permanently — deterministic, never retried).
+    pub fn abandon_promotion(&self, _key: &JitKey) {
+        self.in_flight.fetch_sub(1, Ordering::Relaxed);
     }
 
     /// Drop every cached translation of `module` (called by
     /// `unload_module` so unloading actually releases the translated
-    /// programs, not just the IR).
+    /// programs, not just the IR). The generation is untouched: uids are
+    /// never reused, so stale memos miss on the uid compare.
     pub fn evict_module(&self, module: u64) {
         let mut st = self.state.lock().unwrap();
         st.map.retain(|k, _| k.module != module);
     }
 
-    /// Recorded translation events (E4 table data).
+    /// Recorded translation events (E4 table data; bounded ring — see
+    /// [`JitStats::events_dropped`]).
     pub fn events(&self) -> Vec<JitEvent> {
-        self.state.lock().unwrap().events.clone()
+        self.state.lock().unwrap().events.iter().cloned().collect()
     }
 
     /// Cache hit count (repeated-launch check, §6.2 "0.11 ms on
@@ -182,6 +523,49 @@ impl JitCache {
     pub fn hit_count(&self) -> u64 {
         self.state.lock().unwrap().hits
     }
+
+    /// Aggregate tiering/translation counters.
+    pub fn stats(&self) -> JitStats {
+        let st = self.state.lock().unwrap();
+        JitStats {
+            hits: st.hits,
+            tier1_translations: st.tier1_translations,
+            tier2_translations: st.tier2_translations,
+            promotions: st.promotions,
+            in_flight_compiles: self.in_flight.load(Ordering::Relaxed),
+            swaps: st.swaps,
+            generation: self.generation(),
+            events_dropped: st.events_dropped,
+        }
+    }
+
+    #[cfg(test)]
+    fn with_event_cap(policy: TierPolicy, cap: usize) -> JitCache {
+        let mut c = JitCache::with_policy(policy);
+        c.event_cap = cap;
+        c
+    }
+}
+
+/// Lower `kernel` for the target identified by `key` at the given tier.
+/// Shared by the launch path and the background compiler.
+pub(crate) fn translate_for_key(
+    key: &JitKey,
+    kernel: &Kernel,
+    simt_cfg: Option<&SimtConfig>,
+    tier: JitTier,
+) -> Result<DeviceProgram> {
+    let opts = TranslateOpts { migratable: key.migratable, tier };
+    Ok(match key.kind {
+        DeviceKind::TenstorrentSim => {
+            let mode = key.tensix_mode.expect("tensix mode required");
+            DeviceProgram::Tensix(backends::translate_tensix(kernel, mode, opts)?)
+        }
+        _ => {
+            let cfg = simt_cfg.expect("simt config required");
+            DeviceProgram::Simt(backends::translate_simt(kernel, cfg, opts)?)
+        }
+    })
 }
 
 #[cfg(test)]
@@ -196,23 +580,29 @@ mod tests {
         b.finish()
     }
 
-    #[test]
-    fn caches_by_key() {
-        let cache = JitCache::new();
-        let k = tiny_kernel();
-        let key = JitKey {
-            module: 0,
+    fn nv_key(module: u64) -> JitKey {
+        JitKey {
+            module,
             kernel: "k".into(),
             kind: DeviceKind::NvidiaSim,
             tensix_mode: None,
             migratable: true,
-        };
+        }
+    }
+
+    #[test]
+    fn caches_by_key() {
+        let cache = JitCache::new();
+        let k = tiny_kernel();
         let cfg = SimtConfig::nvidia();
-        let a = cache.get_or_translate(key.clone(), &k, Some(&cfg)).unwrap();
-        let b = cache.get_or_translate(key, &k, Some(&cfg)).unwrap();
-        assert!(Arc::ptr_eq(&a, &b));
+        let a = cache.get_or_translate(nv_key(0), &k, Some(&cfg)).unwrap();
+        let b = cache.get_or_translate(nv_key(0), &k, Some(&cfg)).unwrap();
+        assert!(Arc::ptr_eq(&a.prog, &b.prog));
+        assert!(Arc::ptr_eq(&a.profile, &b.profile));
         assert_eq!(cache.hit_count(), 1);
         assert_eq!(cache.events().len(), 1);
+        assert_eq!(cache.events()[0].tier, JitTier::Baseline);
+        assert_eq!(cache.stats().tier1_translations, 1);
     }
 
     #[test]
@@ -220,18 +610,11 @@ mod tests {
         let cache = JitCache::new();
         let k = tiny_kernel();
         let cfg = SimtConfig::nvidia();
-        let key = JitKey {
-            module: 0,
-            kernel: "k".into(),
-            kind: DeviceKind::NvidiaSim,
-            tensix_mode: None,
-            migratable: true,
-        };
         let progs: Vec<Arc<DeviceProgram>> = std::thread::scope(|s| {
             let handles: Vec<_> = (0..8)
                 .map(|_| {
                     s.spawn(|| {
-                        cache.get_or_translate(key.clone(), &k, Some(&cfg)).unwrap()
+                        cache.get_or_translate(nv_key(0), &k, Some(&cfg)).unwrap().prog
                     })
                 })
                 .collect();
@@ -268,5 +651,128 @@ mod tests {
             .unwrap();
         assert_eq!(cache.events().len(), 2);
         assert_eq!(cache.hit_count(), 0);
+    }
+
+    #[test]
+    fn event_ring_is_bounded_but_counters_stay_exact() {
+        let cache = JitCache::with_event_cap(TierPolicy::default(), 2);
+        let k = tiny_kernel();
+        let cfg = SimtConfig::nvidia();
+        for m in 0..3 {
+            cache.get_or_translate(nv_key(m), &k, Some(&cfg)).unwrap();
+        }
+        assert_eq!(cache.events().len(), 2, "ring capped");
+        let st = cache.stats();
+        assert_eq!(st.events_dropped, 1);
+        assert_eq!(st.tier1_translations, 3, "aggregate counter exact");
+    }
+
+    #[test]
+    fn threshold_crossing_promotes_and_swaps_at_generation_bump() {
+        let cache = JitCache::with_policy(TierPolicy { hot_threshold: 2, force: None });
+        let k = tiny_kernel();
+        let cfg = SimtConfig::nvidia();
+        let res = cache.get_or_translate(nv_key(0), &k, Some(&cfg)).unwrap();
+        let g0 = cache.generation();
+        assert_eq!(res.gen, g0);
+
+        // Launch 1: below threshold — nothing queued, nothing in flight.
+        cache.count_launch(&res.profile);
+        assert_eq!(cache.stats().in_flight_compiles, 0);
+        // Launch 2: crosses the threshold exactly once.
+        cache.count_launch(&res.profile);
+        assert_eq!(cache.stats().in_flight_compiles, 1);
+        // Launch 3: already crossed — must not re-queue.
+        cache.count_launch(&res.profile);
+        assert_eq!(cache.stats().in_flight_compiles, 1);
+
+        let hot = cache.next_hot().expect("hot key queued");
+        assert_eq!(hot, nv_key(0));
+        let prog = translate_for_key(&hot, &k, Some(&cfg), JitTier::Optimized).unwrap();
+        cache.install_tier2(&hot, prog, 1.0);
+
+        assert_eq!(cache.generation(), g0 + 1, "swap bumps the generation");
+        let st = cache.stats();
+        assert_eq!(
+            (st.promotions, st.swaps, st.tier2_translations, st.in_flight_compiles),
+            (1, 1, 1, 0)
+        );
+
+        // The stream memo taken at g0 must refuse its stale program now.
+        let memo = JitMemo::new(0, "k".into(), DeviceKind::NvidiaSim, None, &res);
+        assert!(memo.lookup(0, "k", DeviceKind::NvidiaSim, None, g0).is_some());
+        assert!(
+            memo.lookup(0, "k", DeviceKind::NvidiaSim, None, cache.generation()).is_none(),
+            "memo must revalidate on generation mismatch"
+        );
+
+        // Re-resolution at the launch boundary returns the tier-2 program.
+        let res2 = cache.get_or_translate(nv_key(0), &k, Some(&cfg)).unwrap();
+        assert!(!Arc::ptr_eq(&res.prog, &res2.prog), "swap visible to next launch");
+        assert!(Arc::ptr_eq(&res.profile, &res2.profile), "profile survives the swap");
+    }
+
+    #[test]
+    fn forced_tiers_disable_the_background_path() {
+        // Forced baseline: threshold crossings never queue.
+        let cache =
+            JitCache::with_policy(TierPolicy { hot_threshold: 1, force: Some(JitTier::Baseline) });
+        let k = tiny_kernel();
+        let cfg = SimtConfig::nvidia();
+        let res = cache.get_or_translate(nv_key(0), &k, Some(&cfg)).unwrap();
+        cache.count_launch(&res.profile);
+        cache.count_launch(&res.profile);
+        assert_eq!(cache.stats().in_flight_compiles, 0);
+        assert_eq!(cache.stats().tier2_translations, 0);
+        cache.shutdown_compiler();
+        assert!(cache.next_hot().is_none());
+
+        // Forced optimized: tier 2 eagerly, still no background traffic.
+        let cache =
+            JitCache::with_policy(TierPolicy { hot_threshold: 1, force: Some(JitTier::Optimized) });
+        let res = cache.get_or_translate(nv_key(0), &k, Some(&cfg)).unwrap();
+        cache.count_launch(&res.profile);
+        let st = cache.stats();
+        assert_eq!(st.tier2_translations, 1);
+        assert_eq!(st.tier1_translations, 0);
+        assert_eq!(st.in_flight_compiles, 0);
+        assert_eq!(st.promotions, 0, "eager tier 2 is not a promotion");
+        assert_eq!(cache.events()[0].tier, JitTier::Optimized);
+        let _ = res;
+    }
+
+    #[test]
+    fn shutdown_drains_pending_queue() {
+        let cache = JitCache::with_policy(TierPolicy { hot_threshold: 1, force: None });
+        let k = tiny_kernel();
+        let cfg = SimtConfig::nvidia();
+        let res = cache.get_or_translate(nv_key(0), &k, Some(&cfg)).unwrap();
+        cache.count_launch(&res.profile);
+        assert_eq!(cache.stats().in_flight_compiles, 1);
+        cache.shutdown_compiler();
+        assert!(cache.next_hot().is_none(), "shutdown wins over pending work");
+        assert_eq!(cache.stats().in_flight_compiles, 0);
+        // Crossings after shutdown are dropped cleanly too.
+        let res2 = cache.get_or_translate(nv_key(1), &k, Some(&cfg)).unwrap();
+        cache.count_launch(&res2.profile);
+        assert_eq!(cache.stats().in_flight_compiles, 0);
+    }
+
+    #[test]
+    fn env_parsers_follow_the_sim_threads_contract() {
+        assert_eq!(parse_hot_threshold("64"), (64, None));
+        assert_eq!(parse_hot_threshold(" 8 "), (8, None));
+        assert_eq!(parse_hot_threshold("0"), (1, None), "0 clamps to promote-on-first");
+        let (v, warn) = parse_hot_threshold("banana");
+        assert_eq!(v, DEFAULT_HOT_THRESHOLD);
+        let warn = warn.expect("malformed threshold must warn");
+        assert!(warn.contains("banana") && warn.contains("32"), "{warn}");
+
+        assert_eq!(parse_forced_tier("1"), (Some(JitTier::Baseline), None));
+        assert_eq!(parse_forced_tier("2"), (Some(JitTier::Optimized), None));
+        let (f, warn) = parse_forced_tier("coffee");
+        assert_eq!(f, None);
+        let warn = warn.expect("malformed tier must warn");
+        assert!(warn.contains("coffee"), "{warn}");
     }
 }

@@ -6,7 +6,7 @@
 use crate::error::{HetError, Result};
 use crate::hetir::instr::Inst;
 use crate::hetir::module::Kernel;
-use crate::hetir::passes::uniformity;
+use crate::hetir::passes::{scalarize, uniformity};
 use crate::hetir::types::{AddrSpace, Type, Value};
 use crate::isa::tensix_isa::TensixMode;
 use crate::isa::AtomicsClass;
@@ -226,6 +226,13 @@ pub fn choose_tensix_mode(k: &Kernel, dims: LaunchDims) -> TensixMode {
     if !needs_vector && f.has_divergence {
         return TensixMode::ScalarMimd;
     }
+    // A kernel that is almost entirely warp-uniform work gains nothing
+    // from lockstep vector execution — every lane computes the same
+    // values — while MIMD lets the scalarization pass hoist that work
+    // into straight scalar code per thread.
+    if !needs_vector && scalarize::profile(k).mostly_uniform(90) {
+        return TensixMode::ScalarMimd;
+    }
     if dims.block_size() <= 32 {
         TensixMode::VectorSingleCore
     } else {
@@ -306,6 +313,38 @@ mod tests {
         let k = sh.kernel("s").unwrap();
         assert_eq!(choose_tensix_mode(k, LaunchDims::d1(1, 32)), TensixMode::VectorSingleCore);
         assert_eq!(choose_tensix_mode(k, LaunchDims::d1(1, 128)), TensixMode::VectorMultiCore);
+    }
+
+    #[test]
+    fn mostly_uniform_kernels_prefer_mimd() {
+        // Nearly all the work is warp-uniform (every lane would compute the
+        // same values in lockstep) → MIMD, even with no divergence at all.
+        let u = compile(
+            r#"__global__ void u(unsigned* p, unsigned n) {
+                unsigned a = n * 3u;
+                unsigned b = a ^ 17u;
+                unsigned c = b + n;
+                p[0] = a + b + c;
+            }"#,
+            "m",
+        )
+        .unwrap();
+        assert_eq!(
+            choose_tensix_mode(u.kernel("u").unwrap(), LaunchDims::d1(4, 32)),
+            TensixMode::ScalarMimd
+        );
+
+        // Per-thread addressing keeps the profile varying → vector modes
+        // still win for regular data-parallel kernels.
+        let v = compile(
+            "__global__ void v(unsigned* p) { p[threadIdx.x] = threadIdx.x * 2u; }",
+            "m",
+        )
+        .unwrap();
+        assert_eq!(
+            choose_tensix_mode(v.kernel("v").unwrap(), LaunchDims::d1(4, 32)),
+            TensixMode::VectorSingleCore
+        );
     }
 
     #[test]

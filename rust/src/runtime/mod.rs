@@ -16,7 +16,7 @@ pub mod stream;
 
 use crate::delta::journal::AtomicJournal;
 use crate::error::{HetError, Result};
-use crate::hetir::module::Module;
+use crate::hetir::module::{Kernel, Module};
 use crate::isa::tensix_isa::TensixMode;
 use crate::isa::AtomicsClass;
 use crate::runtime::device::{Device, DeviceKind, Engine};
@@ -93,6 +93,21 @@ impl ModuleTable {
     pub fn live(&self) -> usize {
         self.table.live()
     }
+
+    /// Resolve a kernel by module **uid** (not handle) — the background
+    /// tier-2 compiler holds `JitKey`s, which carry uids. Returns a clone
+    /// so the module lock is not held across the compile. `None` when the
+    /// module was unloaded while the key sat in the compile queue.
+    pub(crate) fn kernel_by_uid(&self, uid: u64, kernel: &str) -> Option<Kernel> {
+        for slot in 0..self.table.slot_count() as u32 {
+            if let Some(lm) = self.table.entry_at(slot) {
+                if lm.uid == uid {
+                    return lm.module.kernel(kernel).cloned();
+                }
+            }
+        }
+        None
+    }
 }
 
 /// Shared state behind a [`api::HetGpu`] context.
@@ -122,10 +137,17 @@ impl RuntimeInner {
     /// a journaled coordinator shard; dropped when the lowered program
     /// performs no global atomics). `memo` is the stream's last
     /// `(module, kernel)` JIT resolution: same-kernel repeat launches
-    /// skip the shared cache's lock + key hash entirely. `fault`
-    /// (resolved by the event-graph executor from the injector's launch
-    /// hook) makes the grid fault deterministically at that block linear
-    /// id.
+    /// skip the shared cache's lock + key hash entirely — revalidated
+    /// against the cache generation so a tier-2 swap is observed at the
+    /// next launch boundary. `pinned` bypasses resolution entirely: a
+    /// resume of a [`stream::PausedKernel`] must run the exact program
+    /// the kernel was suspended under, even if tier 2 swapped in while it
+    /// was paused. `fault` (resolved by the event-graph executor from the
+    /// injector's launch hook) makes the grid fault deterministically at
+    /// that block linear id.
+    ///
+    /// Returns the outcome **and** the program it ran under, so pause
+    /// paths can pin it.
     pub fn run_launch(
         &self,
         device_id: usize,
@@ -133,8 +155,9 @@ impl RuntimeInner {
         resume: Option<&[BlockResume]>,
         journal: Option<&AtomicJournal>,
         memo: Option<&Mutex<Option<JitMemo>>>,
+        pinned: Option<&std::sync::Arc<crate::backends::DeviceProgram>>,
         fault: Option<u32>,
-    ) -> Result<LaunchOutcome> {
+    ) -> Result<(LaunchOutcome, std::sync::Arc<crate::backends::DeviceProgram>)> {
         let dev = self.device(device_id)?;
         // Checked-arithmetic geometry validation up front: overflowing or
         // empty dims surface as a clear runtime error instead of a
@@ -152,37 +175,50 @@ impl RuntimeInner {
         } else {
             None
         };
-        let memoized = memo.and_then(|m| {
-            let g = m.lock().unwrap();
-            g.as_ref().and_then(|mm| mm.lookup(uid, &spec.kernel, dev.kind, tensix_mode))
-        });
-        let prog = match memoized {
-            Some(p) => p,
+        // The entire tiering cost on an unarmed launch: one relaxed load.
+        let gen = self.jit.generation();
+        let (prog, profile) = match pinned {
+            // Resumes run the suspended kernel's exact translation and
+            // don't count toward promotion (they are not fresh launches).
+            Some(p) => (p.clone(), None),
             None => {
-                let key = JitKey {
-                    module: uid,
-                    kernel: spec.kernel.clone(),
-                    kind: dev.kind,
-                    tensix_mode,
-                    migratable: true,
-                };
-                let simt_cfg = match &dev.engine {
-                    Engine::Simt(s) => Some(s.cfg.clone()),
-                    Engine::Tensix(_) => None,
-                };
-                let p = self.jit.get_or_translate(key, kernel, simt_cfg.as_ref())?;
-                if let Some(m) = memo {
-                    *m.lock().unwrap() = Some(JitMemo::new(
-                        uid,
-                        spec.kernel.clone(),
-                        dev.kind,
-                        tensix_mode,
-                        p.clone(),
-                    ));
+                let memoized = memo.and_then(|m| {
+                    let g = m.lock().unwrap();
+                    g.as_ref()
+                        .and_then(|mm| mm.lookup(uid, &spec.kernel, dev.kind, tensix_mode, gen))
+                });
+                match memoized {
+                    Some((p, prof)) => (p, Some(prof)),
+                    None => {
+                        let key = JitKey {
+                            module: uid,
+                            kernel: spec.kernel.clone(),
+                            kind: dev.kind,
+                            tensix_mode,
+                            migratable: true,
+                        };
+                        let simt_cfg = match &dev.engine {
+                            Engine::Simt(s) => Some(s.cfg.clone()),
+                            Engine::Tensix(_) => None,
+                        };
+                        let res = self.jit.get_or_translate(key, kernel, simt_cfg.as_ref())?;
+                        if let Some(m) = memo {
+                            *m.lock().unwrap() = Some(JitMemo::new(
+                                uid,
+                                spec.kernel.clone(),
+                                dev.kind,
+                                tensix_mode,
+                                &res,
+                            ));
+                        }
+                        (res.prog, Some(res.profile))
+                    }
                 }
-                p
             }
         };
+        if let Some(prof) = &profile {
+            self.jit.count_launch(prof);
+        }
         drop(modules);
 
         // A program with no global atomics journals nothing — skip the
@@ -236,6 +272,48 @@ impl RuntimeInner {
         };
         // Device faults carry launch provenance: the simulator stamped
         // the faulting block and kernel; the runtime knows the module.
-        out.map_err(|e| e.with_fault_kernel(&spec.kernel).with_fault_module(uid))
+        out.map(|o| (o, prog))
+            .map_err(|e| e.with_fault_kernel(&spec.kernel).with_fault_module(uid))
+    }
+}
+
+/// Body of the background tier-2 compile thread (spawned by
+/// `HetGpu::build`, joined on drop after `JitCache::shutdown_compiler`).
+///
+/// Blocks on the hot queue; for each hot key it re-resolves the kernel IR
+/// by module uid, runs the optimizing mid-end + backend lowering
+/// (`JitTier::Optimized`), and installs the swap. Launches never block on
+/// this thread: a key whose module vanished, or whose tier-2 lowering
+/// fails, is abandoned and the entry stays on tier 1 forever.
+pub(crate) fn jit_compiler_loop(inner: std::sync::Arc<RuntimeInner>) {
+    while let Some(key) = inner.jit.next_hot() {
+        let kernel = {
+            let modules = inner.modules.read().unwrap();
+            modules.kernel_by_uid(key.module, &key.kernel)
+        };
+        let Some(kernel) = kernel else {
+            inner.jit.abandon_promotion(&key);
+            continue;
+        };
+        // Any device of the key's kind carries the needed SIMT config
+        // (devices are never removed from a context).
+        let simt_cfg = inner.devices.iter().find_map(|d| {
+            if d.kind != key.kind {
+                return None;
+            }
+            match &d.engine {
+                Engine::Simt(s) => Some(s.cfg.clone()),
+                Engine::Tensix(_) => None,
+            }
+        });
+        let t0 = std::time::Instant::now();
+        match jit::translate_for_key(&key, &kernel, simt_cfg.as_ref(), crate::backends::JitTier::Optimized)
+        {
+            Ok(prog) => {
+                let micros = t0.elapsed().as_secs_f64() * 1e6;
+                inner.jit.install_tier2(&key, prog, micros);
+            }
+            Err(_) => inner.jit.abandon_promotion(&key),
+        }
     }
 }

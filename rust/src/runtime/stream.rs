@@ -50,6 +50,17 @@ pub struct PausedKernel {
     /// the wire blob carries the *entries* (`Snapshot::journal`); the
     /// restoring side attaches a fresh journal.
     pub journal: Option<std::sync::Arc<crate::delta::journal::AtomicJournal>>,
+    /// The device the kernel was suspended on — the pin below is only
+    /// valid there (a cross-device resume must re-translate for the new
+    /// target anyway).
+    pub device: usize,
+    /// The exact translation the kernel was suspended under, pinned so a
+    /// same-device resume runs it even if the tiered JIT swapped the
+    /// cache entry while the kernel was paused. `None` after a wire
+    /// restore — blobs don't carry programs; the restoring context
+    /// re-resolves, which is safe because both tiers agree on every
+    /// barrier's register state and suspension metadata (DESIGN.md §11).
+    pub prog: Option<std::sync::Arc<crate::backends::DeviceProgram>>,
 }
 
 impl PausedKernel {

@@ -59,6 +59,12 @@ def main(argv):
         # Recovery times are printed but not gated (they include the
         # deliberate retry backoff).
         ("fault", "fault_free_s"),
+        # Tiered JIT (BENCH_e4): gate the unarmed launch path — with the
+        # background compiler running but no kernel hot, the per-launch
+        # tiering cost is one relaxed generation load plus one relaxed
+        # profile increment and must stay unmeasurable. Steady-state
+        # tier-1/tier-2 wall clocks are checked intra-artifact below.
+        ("tiering", "unarmed_launch_s"),
     ]:
         p = prev.get(section, {}).get(key)
         c = curr.get(section, {}).get(key)
@@ -70,6 +76,18 @@ def main(argv):
         print(f"{section}.{key}: prev {p:.6f}s -> curr {c:.6f}s ({ratio:.2f}x) {verdict}")
         if ratio > 1.0 + threshold:
             failures.append(f"{section}.{key} slowed {ratio:.2f}x (> {1 + threshold:.2f}x)")
+
+    # Intra-artifact invariant (BENCH_e4): tier-2 code must beat tier-1 in
+    # steady state on the strength-reduction bench kernel — the whole point
+    # of the optimizing mid-end. Checked on the *current* artifact alone,
+    # so it fails even on the first run of a regressed build.
+    tiering = curr.get("tiering", {})
+    t1, t2 = tiering.get("tier1_steady_s"), tiering.get("tier2_steady_s")
+    if t1 is not None and t2 is not None:
+        verdict = "ok" if t2 < t1 else "REGRESSION"
+        print(f"tiering: tier1 {t1:.6f}s vs tier2 {t2:.6f}s ({t1 / t2:.2f}x) {verdict}")
+        if t2 >= t1:
+            failures.append(f"tier-2 steady state ({t2:.6f}s) not faster than tier-1 ({t1:.6f}s)")
 
     if failures:
         print("bench trend check FAILED:")

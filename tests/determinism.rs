@@ -11,7 +11,7 @@ use hetgpu::isa::simt_isa::{SimtConfig, SimtProgram};
 use hetgpu::isa::tensix_isa::TensixMode;
 use hetgpu::migrate::blob;
 use hetgpu::migrate::state::Snapshot;
-use hetgpu::runtime::api::{HetGpu, ModuleHandle, StreamHandle};
+use hetgpu::runtime::api::{HetGpu, JitTier, ModuleHandle, StreamHandle, TierPolicy};
 use hetgpu::runtime::device::DeviceKind;
 use hetgpu::runtime::launch::{Arg, LaunchSpec};
 use hetgpu::runtime::stream::PausedKernel;
@@ -55,7 +55,7 @@ __global__ void persist(float* data, unsigned iters) {
 
 fn compile_simt(src: &str, kernel: &str, cfg: &SimtConfig) -> SimtProgram {
     let m = frontend::compile(src, "det").unwrap();
-    backends::translate_simt(m.kernel(kernel).unwrap(), cfg, TranslateOpts { migratable: true })
+    backends::translate_simt(m.kernel(kernel).unwrap(), cfg, TranslateOpts { migratable: true, ..Default::default() })
         .unwrap()
 }
 
@@ -192,7 +192,7 @@ fn tensix_grids_bit_identical_across_worker_counts() {
     let params = [Value::ptr(0, AddrSpace::Global), Value::u32(n)];
 
     for mode in [TensixMode::VectorSingleCore, TensixMode::ScalarMimd] {
-        let p = backends::translate_tensix(k, mode, TranslateOpts { migratable: false })
+        let p = backends::translate_tensix(k, mode, TranslateOpts { migratable: false, ..Default::default() })
             .unwrap();
         let run = |workers: usize| {
             let sim = TensixSim::with_workers(
@@ -282,6 +282,8 @@ fn pinned_pause_migrate_roundtrip_is_bit_identical() {
                 spec: spec.clone(),
                 blocks: grid.blocks.clone(),
                 journal: None,
+                device: 0,
+                prog: None,
             }),
             allocations: vec![(0, mem.to_vec())],
             shard: None,
@@ -296,8 +298,14 @@ fn pinned_pause_migrate_roundtrip_is_bit_identical() {
     // exactly on the uninterrupted result.
     for (grid, mem_bytes, workers) in [(&grid1, &mem1, 8usize), (&grid8, &mem8, 1usize)] {
         let directives =
-            PausedKernel { spec: spec.clone(), blocks: grid.blocks.clone(), journal: None }
-                .resume_directives();
+            PausedKernel {
+                spec: spec.clone(),
+                blocks: grid.blocks.clone(),
+                journal: None,
+                device: 0,
+                prog: None,
+            }
+            .resume_directives();
         let sim = SimtSim::with_workers(cfg.clone(), workers);
         let mem = DeviceMemory::new(1 << 16, "det");
         mem.write_bytes(0, mem_bytes).unwrap();
@@ -658,4 +666,316 @@ fn sharded_fault_recovery_bit_identical_under_redistribute() {
             assert_eq!(reference.3, blob_bytes, "snapshot blobs differ: {tag}");
         }
     }
+}
+
+/// The tier-1-vs-tier-2 acid kernel: atomics-heavy histogram+max whose
+/// loop body is full of strength-reducible arithmetic (mul/div/mod by
+/// powers of two) but deliberately free of hoistable loop-invariants —
+/// every value depends on the induction variable, so the tier-2 rewrites
+/// that fire here are all 1:1 cost-neutral transforms and the cost report
+/// must match tier-1 bit for bit. (LICM's executed-count reductions are
+/// exercised by the hetir unit tests and measured in E4.)
+const TIERED_ATOMICS_SRC: &str = r#"
+__global__ void histmax(unsigned* bins, unsigned* peaks, unsigned n) {
+    unsigned i = blockIdx.x * blockDim.x + threadIdx.x;
+    for (unsigned j = 0u; j < n; j++) {
+        unsigned x = (i + j) * 4u;
+        unsigned b = (x / 8u) % 16u;
+        atomicAdd(&bins[b], 1u);
+        atomicMax(&peaks[b % 8u], x);
+    }
+}
+"#;
+
+/// Tiered-JIT acid test (the PR-7 tentpole contract): the histogram+max
+/// grid with the promotion threshold forced to 1 (everything promotes on
+/// first launch) must be **bit-identical** — memory, cost reports, and
+/// snapshot blobs — to a forced-tier-1 run, for sequential and parallel
+/// dispatch alike. The unforced runs wait for the background swap to land
+/// so the post-promotion launches demonstrably execute tier-2 code.
+#[test]
+fn tiered_jit_histogram_bit_identical_across_tiers_and_workers() {
+    let dims = LaunchDims::d1(16, 64); // 1024 threads on 16+8 counters
+    let n = 8u32;
+    let launches = 5usize;
+    let to_bytes = |v: &[u32]| -> Vec<u8> { v.iter().flat_map(|x| x.to_le_bytes()).collect() };
+
+    let run = |force: Option<JitTier>, workers: usize| {
+        let ctx = HetGpu::with_devices_workers_and_jit(
+            &[DeviceKind::NvidiaSim],
+            workers,
+            TierPolicy { hot_threshold: 1, force },
+        )
+        .unwrap();
+        let m = ctx.compile_cuda(TIERED_ATOMICS_SRC).unwrap();
+        let bins = ctx.alloc_buffer::<u32>(16, 0).unwrap();
+        let peaks = ctx.alloc_buffer::<u32>(8, 0).unwrap();
+        ctx.upload(&bins, &[0; 16]).unwrap();
+        ctx.upload(&peaks, &[0; 8]).unwrap();
+        let s = ctx.create_stream(0).unwrap();
+        let launch = || {
+            ctx.launch(m, "histmax")
+                .dims(dims)
+                .args(&[bins.arg(), peaks.arg(), Arg::U32(n)])
+                .record(s)
+                .unwrap();
+            ctx.synchronize(s).unwrap();
+        };
+        launch(); // tier-1; with threshold 1 this also triggers the promotion
+        if force.is_none() {
+            let t0 = std::time::Instant::now();
+            while ctx.jit_stats().swaps == 0 {
+                assert!(
+                    t0.elapsed().as_secs_f64() < 30.0,
+                    "promotion never landed: {:?}",
+                    ctx.jit_stats()
+                );
+                std::thread::yield_now();
+            }
+        }
+        for _ in 1..launches {
+            launch();
+        }
+        let stats = ctx.jit_stats();
+        match force {
+            None => {
+                assert_eq!(stats.promotions, 1, "{stats:?}");
+                assert!(stats.swaps >= 1 && stats.tier2_translations >= 1, "{stats:?}");
+            }
+            Some(_) => {
+                assert_eq!(stats.promotions, 0, "forced tiers never promote: {stats:?}")
+            }
+        }
+        let got_bins = ctx.download(&bins, 16).unwrap();
+        let got_peaks = ctx.download(&peaks, 8).unwrap();
+        let cost = ctx.stream_stats(s).unwrap().cost;
+        let blob_bytes = blob::serialize(&Snapshot {
+            stream: StreamHandle::from_raw(0),
+            src_device: 0,
+            paused: None,
+            allocations: vec![
+                (bins.ptr().0, to_bytes(&got_bins)),
+                (peaks.ptr().0, to_bytes(&got_peaks)),
+            ],
+            shard: None,
+            epoch: 0,
+            base_epoch: None,
+            journal: Vec::new(),
+        });
+        (got_bins, got_peaks, cost, blob_bytes)
+    };
+
+    let reference = run(Some(JitTier::Baseline), 1);
+    // Host-computed expectation pins the math, not just tier agreement.
+    let mut expect_bins = [0u32; 16];
+    let mut expect_peaks = [0u32; 8];
+    for i in 0..1024u32 {
+        for j in 0..n {
+            let x = (i + j).wrapping_mul(4);
+            let b = ((x / 8) % 16) as usize;
+            expect_bins[b] += launches as u32;
+            expect_peaks[b % 8] = expect_peaks[b % 8].max(x);
+        }
+    }
+    assert_eq!(reference.0, expect_bins.to_vec());
+    assert_eq!(reference.1, expect_peaks.to_vec());
+
+    for force in [Some(JitTier::Baseline), Some(JitTier::Optimized), None] {
+        for workers in [1usize, 4] {
+            let got = run(force, workers);
+            let tag = format!("force {force:?}, {workers} workers");
+            assert_eq!(reference.0, got.0, "bins differ: {tag}");
+            assert_eq!(reference.1, got.1, "peaks differ: {tag}");
+            assert_eq!(reference.2, got.2, "cost reports differ: {tag}");
+            assert_eq!(reference.3, got.3, "snapshot blobs differ: {tag}");
+        }
+    }
+}
+
+/// Barrier-loop variant of the acid kernel for suspend/resume coverage:
+/// checkpoint sites every iteration, strength-reducible body, no
+/// hoistable loop-invariants (same reasoning as `TIERED_ATOMICS_SRC`).
+const TIERED_PERSIST_SRC: &str = r#"
+__global__ void persist3(unsigned* data, unsigned iters) {
+    unsigned i = blockIdx.x * blockDim.x + threadIdx.x;
+    unsigned acc = data[i];
+    for (unsigned k = 0u; k < iters; k++) {
+        acc = acc + (((i + k) * 8u) / 4u) % 64u;
+        __syncthreads();
+    }
+    data[i] = acc;
+}
+"#;
+
+/// Mid-grid pause/migrate under an in-flight promotion: a kernel
+/// suspended at a checkpoint under tier 1 must finish bit-identically
+/// even though tier 2 swapped into the cache while it was paused. Three
+/// resume paths: same-device (runs the translation *pinned* in the
+/// `PausedKernel`), cross-device (pin is device-bound, so the resume
+/// re-resolves — hitting the now-tier-2 cache entry), and wire restore
+/// (blobs carry no program, so it also re-resolves). Cross-tier resume is
+/// safe because both tiers agree on every barrier's register state and
+/// reuse tier-1 suspension metadata verbatim.
+#[test]
+fn pause_migrate_under_inflight_promotion_bit_identical() {
+    let dims = LaunchDims::d1(8, 32);
+    let n = 256usize;
+    let iters = 6u32;
+    let init: Vec<u32> = (0..n as u32).map(|i| i.wrapping_mul(3)).collect();
+
+    // Reference: forced tier-1, uninterrupted.
+    let reference = {
+        let ctx = HetGpu::with_devices_workers_and_jit(
+            &[DeviceKind::NvidiaSim],
+            1,
+            TierPolicy { hot_threshold: 1, force: Some(JitTier::Baseline) },
+        )
+        .unwrap();
+        let m = ctx.compile_cuda(TIERED_PERSIST_SRC).unwrap();
+        let buf = ctx.alloc_buffer::<u32>(n, 0).unwrap();
+        ctx.upload(&buf, &init).unwrap();
+        let s = ctx.create_stream(0).unwrap();
+        ctx.launch(m, "persist3")
+            .dims(dims)
+            .args(&[buf.arg(), Arg::U32(iters)])
+            .record(s)
+            .unwrap();
+        ctx.synchronize(s).unwrap();
+        ctx.download(&buf, n).unwrap()
+    };
+
+    // (wire restore?, destination device) — same-device pinned resume,
+    // cross-device re-resolve, and wire restore (pin stripped).
+    for (wire, dst) in [(false, 0usize), (false, 1usize), (true, 1usize)] {
+        for workers in [1usize, 4] {
+            let tag = format!("wire {wire}, dst {dst}, {workers} workers");
+            let ctx = HetGpu::with_devices_workers_and_jit(
+                &[DeviceKind::NvidiaSim, DeviceKind::NvidiaSim],
+                workers,
+                TierPolicy { hot_threshold: 1, force: None },
+            )
+            .unwrap();
+            let m = ctx.compile_cuda(TIERED_PERSIST_SRC).unwrap();
+            let buf = ctx.alloc_buffer::<u32>(n, 0).unwrap();
+            ctx.upload(&buf, &init).unwrap();
+            let s = ctx.create_stream(0).unwrap();
+            ctx.launch(m, "persist3")
+                .dims(dims)
+                .args(&[buf.arg(), Arg::U32(iters)])
+                .record(s)
+                .unwrap();
+            // Pause the grid mid-flight (blocks suspend at their next
+            // checkpoint barrier under whatever tier they launched with).
+            let snap = ctx.checkpoint(s).unwrap();
+            // The first launch crossed the threshold; wait for the
+            // background promotion to land *while the kernel is paused*.
+            let t0 = std::time::Instant::now();
+            while ctx.jit_stats().swaps == 0 {
+                assert!(
+                    t0.elapsed().as_secs_f64() < 30.0,
+                    "promotion never landed ({tag}): {:?}",
+                    ctx.jit_stats()
+                );
+                std::thread::yield_now();
+            }
+            let snap = if wire {
+                // The wire round-trip drops the pinned program: the
+                // restoring side re-resolves against the (tier-2) cache.
+                blob::deserialize(&blob::serialize(&snap)).unwrap()
+            } else {
+                snap
+            };
+            ctx.restore(snap, dst).unwrap();
+            ctx.synchronize(s).unwrap();
+            let stats = ctx.jit_stats();
+            assert_eq!(stats.promotions, 1, "{tag}: {stats:?}");
+            assert_eq!(
+                reference,
+                ctx.download(&buf, n).unwrap(),
+                "resumed result differs from uninterrupted tier-1 run: {tag}"
+            );
+        }
+    }
+}
+
+/// Sim-level cross-tier contract: tier-2 lowering of the barrier-loop
+/// kernel must actually differ from tier-1 (the strength rewrites fire),
+/// execute bit-identically (memory *and* cost), and a grid paused under
+/// the tier-1 program must resume correctly under the tier-2 program —
+/// the tiers share suspension metadata and agree on every barrier's
+/// register state.
+#[test]
+fn tier2_program_differs_but_runs_and_resumes_bit_identical() {
+    let cfg = SimtConfig::nvidia();
+    let m = frontend::compile(TIERED_PERSIST_SRC, "det").unwrap();
+    let k = m.kernel("persist3").unwrap();
+    let t1 = backends::translate_simt(
+        k,
+        &cfg,
+        TranslateOpts { migratable: true, ..Default::default() },
+    )
+    .unwrap();
+    let t2 = backends::translate_simt(
+        k,
+        &cfg,
+        TranslateOpts { migratable: true, tier: hetgpu::backends::JitTier::Optimized },
+    )
+    .unwrap();
+    assert_ne!(t1, t2, "tier-2 must actually rewrite the code");
+    assert_eq!(t1.ckpt_sites, t2.ckpt_sites, "tiers must share suspension metadata");
+
+    let dims = LaunchDims::d1(8, 32);
+    let n = 256u64;
+    let iters = 6u32;
+    let params = [Value::ptr(0, AddrSpace::Global), Value::u32(iters)];
+    let init = |mem: &DeviceMemory| {
+        for i in 0..n {
+            mem.store(
+                i * 4,
+                hetgpu::hetir::types::Scalar::U32,
+                Value::u32((i as u32).wrapping_mul(3)),
+            )
+            .unwrap();
+        }
+    };
+
+    let sim = SimtSim::with_workers(cfg.clone(), 1);
+    let r1 = run_simt(&sim, &t1, dims, &params, &init, false);
+    let r2 = run_simt(&sim, &t2, dims, &params, &init, false);
+    assert_eq!(r1.0, r2.0, "tier-2 memory differs from tier-1");
+    assert_eq!(r1.1, r2.1, "tier-2 cost report differs from tier-1");
+
+    // Pause a deterministic prefix under tier 1, resume under tier 2.
+    let mut psim = SimtSim::with_workers(cfg.clone(), 1);
+    psim.dispatch = psim.dispatch.pause_at(5);
+    let mem = DeviceMemory::new(1 << 16, "det");
+    init(&mem);
+    let pause = AtomicBool::new(true);
+    let out = psim.run_grid(&t1, dims, &params, &mem, &pause, None).unwrap();
+    let grid = match out {
+        LaunchOutcome::Paused { grid, .. } => grid,
+        LaunchOutcome::Completed(_) => panic!("expected a paused grid"),
+    };
+    assert_eq!(grid.suspended_count(), 5);
+    let directives = PausedKernel {
+        spec: LaunchSpec {
+            module: ModuleHandle::from_raw(0),
+            kernel: "persist3".to_string(),
+            dims,
+            args: Vec::<Arg>::new(),
+            tensix_mode_hint: None,
+        },
+        blocks: grid.blocks.clone(),
+        journal: None,
+        device: 0,
+        prog: None,
+    }
+    .resume_directives();
+    let resume_sim = SimtSim::with_workers(cfg, 1);
+    let unpaused = AtomicBool::new(false);
+    let out = resume_sim
+        .run_grid(&t2, dims, &params, &mem, &unpaused, Some(&directives))
+        .unwrap();
+    assert!(out.is_completed(), "cross-tier resume paused again");
+    assert_eq!(r1.0, dump(&mem), "cross-tier resume diverged from the tier-1 run");
 }

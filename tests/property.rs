@@ -215,6 +215,8 @@ fn prop_blob_roundtrip() {
                 },
                 blocks,
                 journal: None,
+                device: 0,
+                prog: None,
             }),
             allocations: vec![(4096, (0..r.below(128)).map(|_| r.next_u32() as u8).collect())],
             shard: None,
