@@ -9,7 +9,7 @@
 //! reproduced shape. Costs are "acceptable for long-running programs;
 //! repeated launches don't incur translation overhead" (cache hits).
 
-use hetgpu::runtime::api::{HetGpu, JitTier, TierPolicy};
+use hetgpu::runtime::api::{AnalysisLevel, HetGpu, JitTier, TierPolicy};
 use hetgpu::runtime::device::DeviceKind;
 use hetgpu::runtime::launch::Arg;
 use hetgpu::sim::simt::LaunchDims;
@@ -222,11 +222,53 @@ fn main() {
         unarmed_launch_s / baseline_launch_s
     );
 
+    // ---- static analysis (DESIGN.md §12): load-time cost per kernel and
+    // the per-launch price of the pre-flight gate (Warn vs Off) ----
+    let actx = HetGpu::with_devices(&[DeviceKind::NvidiaSim]).unwrap();
+    let _suite_mod = actx.compile_cuda(suite::SUITE_SRC).unwrap();
+    let astats = actx.analysis_stats();
+    let kernels_analyzed = astats.kernels_analyzed;
+    let analyze_us_per_kernel = if kernels_analyzed > 0 {
+        astats.analysis_nanos as f64 / 1e3 / kernels_analyzed as f64
+    } else {
+        0.0
+    };
+    let hm = actx.compile_cuda(HOT_SRC).unwrap();
+    let gate_path = |level: AnalysisLevel| -> f64 {
+        let buf = actx.alloc_buffer::<u32>(64, 0).unwrap();
+        let s = actx.create_stream(0).unwrap();
+        let n = if smoke { 200 } else { 1_000 };
+        let run = || {
+            actx.launch(hm, "hotloop")
+                .dims(LaunchDims::d1(1, 32))
+                .args(&[buf.arg(), Arg::U32(1)])
+                .analysis(level)
+                .record(s)
+                .unwrap();
+            actx.synchronize(s).unwrap();
+        };
+        run();
+        let t0 = std::time::Instant::now();
+        for _ in 0..n {
+            run();
+        }
+        t0.elapsed().as_secs_f64() / n as f64
+    };
+    let preflight_launch_s = gate_path(AnalysisLevel::Warn);
+    let off_launch_s = gate_path(AnalysisLevel::Off);
+    println!("\nstatic analysis (suite, {kernels_analyzed} kernels):");
+    println!("  analyze at load   {analyze_us_per_kernel:>9.2} us/kernel");
+    println!(
+        "  pre-flight gate   {:>9.2} us/launch (Warn) vs {:>9.2} us/launch (Off)",
+        preflight_launch_s * 1e6,
+        off_launch_s * 1e6
+    );
+
     // ---- machine-readable artifact (CI perf trajectory) ----
     let json_path =
         std::env::var("HETGPU_BENCH_JSON").unwrap_or_else(|_| "BENCH_e4.json".into());
     let json = format!(
-        "{{\n  \"bench\": \"e4_jit_cost\",\n  \"tiering\": {{\"tier1_steady_s\": {tier1_steady_s:.6}, \"tier2_steady_s\": {tier2_steady_s:.6}, \"speedup\": {speedup:.3}, \"promotion_latency_s\": {promotion_latency_s:.6}, \"launches_during_compile\": {launches_during_compile}, \"unarmed_launch_s\": {unarmed_launch_s:.9}, \"baseline_launch_s\": {baseline_launch_s:.9}}}\n}}\n",
+        "{{\n  \"bench\": \"e4_jit_cost\",\n  \"tiering\": {{\"tier1_steady_s\": {tier1_steady_s:.6}, \"tier2_steady_s\": {tier2_steady_s:.6}, \"speedup\": {speedup:.3}, \"promotion_latency_s\": {promotion_latency_s:.6}, \"launches_during_compile\": {launches_during_compile}, \"unarmed_launch_s\": {unarmed_launch_s:.9}, \"baseline_launch_s\": {baseline_launch_s:.9}}},\n  \"analyze\": {{\"analyze_us_per_kernel\": {analyze_us_per_kernel:.3}, \"kernels_analyzed\": {kernels_analyzed}, \"preflight_launch_s\": {preflight_launch_s:.9}, \"off_launch_s\": {off_launch_s:.9}}}\n}}\n",
         speedup = tier1_steady_s / tier2_steady_s,
     );
     match std::fs::write(&json_path, &json) {

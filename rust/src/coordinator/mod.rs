@@ -97,6 +97,8 @@ pub mod shard;
 use crate::delta::capture::clip_runs;
 use crate::delta::journal::{self, AtomicEntry, AtomicJournal};
 use crate::error::{HetError, Result};
+use crate::hetir::analyze::AnalysisLevel;
+use crate::hetir::types::AddrSpace;
 use crate::isa::AtomicsClass;
 use crate::migrate::blob;
 use crate::migrate::state::Snapshot;
@@ -299,8 +301,14 @@ impl<'a> Coordinator<'a> {
     /// append to, and [`ShardedLaunch::wait`] replays all journals
     /// against the launch baseline in place of the last-writer-wins byte
     /// merge for the journaled words. `policy` selects the shard-fault
-    /// response applied at join (see [`FaultPolicy`]). Usually reached
-    /// through `LaunchBuilder::sharded`.
+    /// response applied at join (see [`FaultPolicy`]). `analysis` gates
+    /// the coordinator's **static pre-flight**: unless `Off`, a journaled
+    /// launch of a kernel whose global atomics are `Ordered` (exch/cas —
+    /// they do not commute, so the journal replay cannot compose them
+    /// across shards) is rejected with a typed
+    /// [`HetError::StaticFault`] before any shard is recorded; the
+    /// runtime's `OrderedAtomic` fail-closed path stays as defense in
+    /// depth for `Off`. Usually reached through `LaunchBuilder::sharded`.
     pub fn launch_sharded(
         &self,
         spec: LaunchSpec,
@@ -308,6 +316,7 @@ impl<'a> Coordinator<'a> {
         devices: &[usize],
         atomics: AtomicsMode,
         policy: FaultPolicy,
+        analysis: AnalysisLevel,
     ) -> Result<ShardedLaunch<'a>> {
         let (grid_size, _) = spec.dims.validate()?;
         let plan = self.plan(grid_size, devices)?;
@@ -316,21 +325,54 @@ impl<'a> Coordinator<'a> {
         // Engage journaling per the mode: `Auto` keys on the hetIR-level
         // atomics classification (the same one the lowered programs
         // expose), so atomics-free kernels pay zero protocol cost.
+        let atomics_class = {
+            let modules = rt.modules.read().unwrap();
+            let (module, _uid) = modules.get(spec.module)?;
+            module
+                .kernel(&spec.kernel)
+                .map(|k| kernel_features(k).global_atomics)
+                .unwrap_or(AtomicsClass::None)
+        };
         let journaled = match atomics {
             AtomicsMode::Unsynchronized => false,
             AtomicsMode::Journal => true,
-            AtomicsMode::Auto => {
-                devices.len() > 1 && {
-                    let modules = rt.modules.read().unwrap();
-                    let (module, _uid) = modules.get(spec.module)?;
-                    module
-                        .kernel(&spec.kernel)
-                        .map(|k| kernel_features(k).global_atomics != AtomicsClass::None)
-                        .unwrap_or(false)
-                }
-            }
+            AtomicsMode::Auto => devices.len() > 1 && atomics_class != AtomicsClass::None,
         };
         if journaled {
+            // Static pre-flight: a journaled launch of an ordered-atomic
+            // kernel would fail closed (`HetError::OrderedAtomic`) at the
+            // first exch/cas a shard executes — reject it *here*, before
+            // any block runs, naming the offending statement when the
+            // analysis report has it.
+            if analysis != AnalysisLevel::Off && atomics_class == AtomicsClass::Ordered {
+                let stmt = rt
+                    .modules
+                    .read()
+                    .unwrap()
+                    .analysis(spec.module)
+                    .ok()
+                    .flatten()
+                    .and_then(|r| {
+                        r.kernel(&spec.kernel).and_then(|kr| {
+                            kr.accesses
+                                .iter()
+                                .find(|a| a.ordered_atomic && a.space == AddrSpace::Global)
+                                .map(|a| a.path.to_string())
+                        })
+                    })
+                    .unwrap_or_else(|| "<kernel>".to_string());
+                self.ctx
+                    .analysis_counters
+                    .preflight_rejections
+                    .fetch_add(1, Ordering::Relaxed);
+                return Err(HetError::static_fault(
+                    spec.kernel.clone(),
+                    stmt,
+                    "kernel performs ordered global atomics (exch/cas), which do \
+                     not compose across shards under the journal protocol; run it \
+                     on one device or opt out with AtomicsMode::Unsynchronized",
+                ));
+            }
             self.ctx
                 .journal_counters
                 .journaled_launches

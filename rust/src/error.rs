@@ -65,7 +65,18 @@ pub enum HetError {
     IrParse { line: usize, msg: String },
 
     /// hetIR verifier failures (type errors, malformed structure).
-    Verify { func: String, msg: String },
+    /// `stmt` is the statement path (e.g. `body[3].then[1]`, or
+    /// `<kernel>` for kernel-level checks) — the same location language
+    /// the static analyzer's diagnostics use.
+    Verify { func: String, stmt: String, msg: String },
+
+    /// A launch rejected by static analysis pre-flight before any block
+    /// ran: a provable out-of-bounds access at the requested dims/args,
+    /// a `Strict`-gated load-time diagnostic, or an ordered-atomic
+    /// kernel submitted for sharded execution. `stmt` is the statement
+    /// path of the offending access (`<kernel>` for whole-kernel
+    /// findings) and `diag` the full rendered diagnostic.
+    StaticFault { kernel: String, stmt: String, diag: String },
 
     /// Backend translation failures (unsupported op on a target, etc).
     Translate { backend: String, msg: String },
@@ -157,8 +168,11 @@ impl fmt::Display for HetError {
             HetError::IrParse { line, msg } => {
                 write!(f, "hetIR parse error at line {line}: {msg}")
             }
-            HetError::Verify { func, msg } => {
-                write!(f, "hetIR verify error in `{func}`: {msg}")
+            HetError::Verify { func, stmt, msg } => {
+                write!(f, "hetIR verify error in `{func}` at {stmt}: {msg}")
+            }
+            HetError::StaticFault { kernel, stmt, diag } => {
+                write!(f, "static analysis rejected launch of `{kernel}` at {stmt}: {diag}")
             }
             HetError::Translate { backend, msg } => {
                 write!(f, "backend `{backend}` translation error: {msg}")
@@ -292,6 +306,19 @@ impl HetError {
     /// Convenience constructor for translation errors.
     pub fn translate(backend: impl Into<String>, msg: impl Into<String>) -> Self {
         HetError::Translate { backend: backend.into(), msg: msg.into() }
+    }
+    /// Convenience constructor for static-analysis pre-flight rejections.
+    pub fn static_fault(
+        kernel: impl Into<String>,
+        stmt: impl Into<String>,
+        diag: impl Into<String>,
+    ) -> Self {
+        HetError::StaticFault { kernel: kernel.into(), stmt: stmt.into(), diag: diag.into() }
+    }
+    /// Whether this error reports a launch rejected by static analysis
+    /// pre-flight (before any block executed).
+    pub fn is_static_fault(&self) -> bool {
+        matches!(self, HetError::StaticFault { .. })
     }
 }
 

@@ -1,0 +1,432 @@
+//! The affine value domain underneath the static analyzer (DESIGN.md §12).
+//!
+//! Every integer register is approximated as an **affine form** over a
+//! small symbol alphabet — thread/block coordinates, launch dimensions,
+//! kernel parameters, and per-loop opaque symbols minted at widening
+//! points — plus a conservative interval of slop. Address disjointness
+//! (the race detector) and access bounds (pre-flight OOB) are both
+//! questions about the range of an affine expression under a set of
+//! affine inequalities, answered here by interval evaluation sharpened
+//! with a small Fourier–Motzkin-style guard substitution.
+//!
+//! Arithmetic is done in `i128` with saturating infinities so that launch
+//! geometry as large as `u32` grids times `u64` params can never wrap the
+//! analysis itself. Note the analysis models *mathematical* integers: a
+//! `u32` subtraction that wraps at runtime is treated as its un-wrapped
+//! value (guards like `i < n` make the wrapped case infeasible in the
+//! kernels we accept; see DESIGN.md §12 for the soundness discussion).
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Saturating "minus infinity". `i128::MIN / 4` keeps headroom so that
+/// sums/products of two infinities still clamp instead of wrapping.
+pub const NEG_INF: i128 = i128::MIN / 4;
+/// Saturating "plus infinity".
+pub const POS_INF: i128 = i128::MAX / 4;
+
+fn clamp(v: i128) -> i128 {
+    v.clamp(NEG_INF, POS_INF)
+}
+
+fn sat_add(a: i128, b: i128) -> i128 {
+    clamp(a.saturating_add(b))
+}
+
+fn sat_mul(a: i128, b: i128) -> i128 {
+    clamp(a.saturating_mul(b))
+}
+
+/// A closed interval `[lo, hi]` with saturating endpoints.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Itv {
+    pub lo: i128,
+    pub hi: i128,
+}
+
+impl Itv {
+    pub const TOP: Itv = Itv { lo: NEG_INF, hi: POS_INF };
+    pub const ZERO: Itv = Itv { lo: 0, hi: 0 };
+
+    pub fn point(v: i128) -> Itv {
+        let v = clamp(v);
+        Itv { lo: v, hi: v }
+    }
+
+    pub fn range(lo: i128, hi: i128) -> Itv {
+        Itv { lo: clamp(lo), hi: clamp(hi) }
+    }
+
+    pub fn is_point(&self) -> bool {
+        self.lo == self.hi
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lo > self.hi
+    }
+
+    pub fn add(self, o: Itv) -> Itv {
+        Itv { lo: sat_add(self.lo, o.lo), hi: sat_add(self.hi, o.hi) }
+    }
+
+    pub fn neg(self) -> Itv {
+        Itv { lo: clamp(-self.hi), hi: clamp(-self.lo) }
+    }
+
+    pub fn sub(self, o: Itv) -> Itv {
+        self.add(o.neg())
+    }
+
+    /// Multiply by a constant.
+    pub fn scale(self, c: i128) -> Itv {
+        let (a, b) = (sat_mul(self.lo, c), sat_mul(self.hi, c));
+        Itv { lo: a.min(b), hi: a.max(b) }
+    }
+
+    pub fn mul(self, o: Itv) -> Itv {
+        let ps = [
+            sat_mul(self.lo, o.lo),
+            sat_mul(self.lo, o.hi),
+            sat_mul(self.hi, o.lo),
+            sat_mul(self.hi, o.hi),
+        ];
+        Itv {
+            lo: ps.iter().copied().min().unwrap(),
+            hi: ps.iter().copied().max().unwrap(),
+        }
+    }
+
+    pub fn join(self, o: Itv) -> Itv {
+        Itv { lo: self.lo.min(o.lo), hi: self.hi.max(o.hi) }
+    }
+}
+
+impl fmt::Display for Itv {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let end = |v: i128, f: &mut fmt::Formatter<'_>| -> fmt::Result {
+            if v <= NEG_INF {
+                write!(f, "-inf")
+            } else if v >= POS_INF {
+                write!(f, "+inf")
+            } else {
+                write!(f, "{v}")
+            }
+        };
+        write!(f, "[")?;
+        end(self.lo, f)?;
+        write!(f, ", ")?;
+        end(self.hi, f)?;
+        write!(f, "]")
+    }
+}
+
+/// Loop-head widening: endpoints that keep moving jump straight to zero
+/// (the ubiquitous "counts down/up through non-negatives" case) and then
+/// to infinity, so every loop stabilizes in at most three rounds.
+pub fn widen(prev: Itv, next: Itv) -> Itv {
+    let lo = if next.lo >= prev.lo {
+        prev.lo
+    } else if next.lo >= 0 {
+        0
+    } else {
+        NEG_INF
+    };
+    let hi = if next.hi <= prev.hi { prev.hi } else { POS_INF };
+    Itv { lo, hi }
+}
+
+/// The symbol alphabet of affine forms. Dimension components are stored
+/// as their `Dim::index()` (0 = x, 1 = y, 2 = z) because `Dim` itself
+/// does not order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Sym {
+    /// `threadIdx.<dim>` — in `[0, ntid-1]`.
+    Tid(u8),
+    /// `blockDim.<dim>`.
+    Ntid(u8),
+    /// `blockIdx.<dim>` — in `[0, nctaid-1]`.
+    Ctaid(u8),
+    /// `gridDim.<dim>`.
+    Nctaid(u8),
+    /// The product `blockIdx.<dim> * blockDim.<dim>`, recognized as its
+    /// own symbol so the universal `global_id = ctaid*ntid + tid` pattern
+    /// stays affine (a product of two symbols is otherwise non-affine).
+    CtaidNtid(u8),
+    /// The value of scalar kernel parameter `i` (symbolic at module load,
+    /// a concrete point at launch pre-flight).
+    Param(u32),
+    /// A loop-widened unknown: minted once per `(loop, register)` at the
+    /// loop head, carrying only the widened interval recorded in the
+    /// kernel's opaque table.
+    Opaque(u32),
+}
+
+fn dim_name(d: u8) -> &'static str {
+    ["x", "y", "z"][d as usize % 3]
+}
+
+impl fmt::Display for Sym {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Sym::Tid(d) => write!(f, "tid.{}", dim_name(*d)),
+            Sym::Ntid(d) => write!(f, "ntid.{}", dim_name(*d)),
+            Sym::Ctaid(d) => write!(f, "ctaid.{}", dim_name(*d)),
+            Sym::Nctaid(d) => write!(f, "nctaid.{}", dim_name(*d)),
+            Sym::CtaidNtid(d) => {
+                write!(f, "ctaid.{d}*ntid.{d}", d = dim_name(*d))
+            }
+            Sym::Param(i) => write!(f, "param{i}"),
+            Sym::Opaque(q) => write!(f, "loopvar{q}"),
+        }
+    }
+}
+
+/// An affine expression `k + Σ cᵢ·sᵢ` over symbols `S` (by default the
+/// kernel alphabet [`Sym`]; the race detector instantiates it over
+/// per-thread-instance renamings).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Affine<S: Ord + Copy = Sym> {
+    pub k: i128,
+    pub terms: BTreeMap<S, i128>,
+}
+
+impl<S: Ord + Copy> Affine<S> {
+    pub fn konst(k: i128) -> Affine<S> {
+        Affine { k: clamp(k), terms: BTreeMap::new() }
+    }
+
+    pub fn sym(s: S) -> Affine<S> {
+        let mut terms = BTreeMap::new();
+        terms.insert(s, 1);
+        Affine { k: 0, terms }
+    }
+
+    pub fn as_const(&self) -> Option<i128> {
+        self.terms.is_empty().then_some(self.k)
+    }
+
+    pub fn add(&self, o: &Affine<S>) -> Affine<S> {
+        let mut r = self.clone();
+        r.k = sat_add(r.k, o.k);
+        for (&s, &c) in &o.terms {
+            let e = r.terms.entry(s).or_insert(0);
+            *e = sat_add(*e, c);
+            if *e == 0 {
+                r.terms.remove(&s);
+            }
+        }
+        r
+    }
+
+    pub fn add_const(&self, c: i128) -> Affine<S> {
+        let mut r = self.clone();
+        r.k = sat_add(r.k, c);
+        r
+    }
+
+    pub fn neg(&self) -> Affine<S> {
+        self.scale(-1)
+    }
+
+    pub fn sub(&self, o: &Affine<S>) -> Affine<S> {
+        self.add(&o.neg())
+    }
+
+    pub fn scale(&self, c: i128) -> Affine<S> {
+        if c == 0 {
+            return Affine::konst(0);
+        }
+        Affine {
+            k: sat_mul(self.k, c),
+            terms: self.terms.iter().map(|(&s, &t)| (s, sat_mul(t, c))).collect(),
+        }
+    }
+
+    /// Substitute/rename every symbol through `f`, merging collisions.
+    pub fn map_syms<T: Ord + Copy>(&self, f: impl Fn(S) -> T) -> Affine<T> {
+        let mut r: Affine<T> = Affine::konst(self.k);
+        for (&s, &c) in &self.terms {
+            let e = r.terms.entry(f(s)).or_insert(0);
+            *e = sat_add(*e, c);
+        }
+        r.terms.retain(|_, c| *c != 0);
+        r
+    }
+
+    /// Interval of the expression under per-symbol bounds.
+    pub fn eval(&self, bounds: &impl Fn(S) -> Itv) -> Itv {
+        let mut r = Itv::point(self.k);
+        for (&s, &c) in &self.terms {
+            r = r.add(bounds(s).scale(c));
+        }
+        r
+    }
+}
+
+impl fmt::Display for Affine<Sym> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut first = true;
+        for (s, c) in &self.terms {
+            if first {
+                if *c == 1 {
+                    write!(f, "{s}")?;
+                } else {
+                    write!(f, "{c}*{s}")?;
+                }
+                first = false;
+            } else if *c < 0 {
+                write!(f, " - {}*{s}", -c)?;
+            } else if *c == 1 {
+                write!(f, " + {s}")?;
+            } else {
+                write!(f, " + {c}*{s}")?;
+            }
+        }
+        if first {
+            write!(f, "{}", self.k)
+        } else if self.k < 0 {
+            write!(f, " - {}", -self.k)
+        } else if self.k > 0 {
+            write!(f, " + {}", self.k)
+        } else {
+            Ok(())
+        }
+    }
+}
+
+/// A path condition attached to an access: either `e ≤ 0` or `e = 0`
+/// over the same affine alphabet as the offsets it guards.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Guard<S: Ord + Copy = Sym> {
+    Le(Affine<S>),
+    Eq(Affine<S>),
+}
+
+impl<S: Ord + Copy> Guard<S> {
+    pub fn map_syms<T: Ord + Copy>(&self, f: impl Fn(S) -> T) -> Guard<T> {
+        match self {
+            Guard::Le(e) => Guard::Le(e.map_syms(&f)),
+            Guard::Eq(e) => Guard::Eq(e.map_syms(&f)),
+        }
+    }
+}
+
+/// Flatten guards into their `e ≤ 0` forms (an equality contributes both
+/// directions).
+pub fn le_forms<S: Ord + Copy>(guards: &[Guard<S>]) -> Vec<Affine<S>> {
+    let mut les = Vec::with_capacity(guards.len());
+    for g in guards {
+        match g {
+            Guard::Le(e) => les.push(e.clone()),
+            Guard::Eq(e) => {
+                les.push(e.clone());
+                les.push(e.neg());
+            }
+        }
+    }
+    les
+}
+
+/// Recursion budget for guard substitution. Each level eliminates one
+/// symbol occurrence through one inequality; real kernel guards are one
+/// or two deep.
+const SUBST_DEPTH: u32 = 4;
+
+/// Upper-bound `e` given inequalities `g ≤ 0`: besides plain interval
+/// evaluation, any guard whose coefficient on a shared symbol divides
+/// `e`'s with a positive quotient `c` yields `e ≤ e - c·g` (since
+/// `-c·g ≥ 0`), recursively — a bounded Fourier–Motzkin elimination.
+pub fn upper_bound<S: Ord + Copy>(
+    e: &Affine<S>,
+    les: &[Affine<S>],
+    bounds: &impl Fn(S) -> Itv,
+    depth: u32,
+) -> i128 {
+    let mut best = e.eval(bounds).hi;
+    if depth == 0 || e.terms.is_empty() {
+        return best;
+    }
+    for g in les {
+        for (&s, &ec) in &e.terms {
+            if let Some(&gc) = g.terms.get(&s) {
+                if gc != 0 && ec % gc == 0 && ec / gc > 0 {
+                    let e2 = e.sub(&g.scale(ec / gc));
+                    best = best.min(upper_bound(&e2, les, bounds, depth - 1));
+                }
+            }
+        }
+    }
+    best
+}
+
+pub fn lower_bound<S: Ord + Copy>(
+    e: &Affine<S>,
+    les: &[Affine<S>],
+    bounds: &impl Fn(S) -> Itv,
+    depth: u32,
+) -> i128 {
+    clamp(-upper_bound(&e.neg(), les, bounds, depth))
+}
+
+/// Guard-sharpened range of `e`.
+pub fn bound<S: Ord + Copy>(
+    e: &Affine<S>,
+    les: &[Affine<S>],
+    bounds: &impl Fn(S) -> Itv,
+) -> Itv {
+    Itv {
+        lo: lower_bound(e, les, bounds, SUBST_DEPTH),
+        hi: upper_bound(e, les, bounds, SUBST_DEPTH),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn b_top(_: Sym) -> Itv {
+        Itv::TOP
+    }
+
+    #[test]
+    fn affine_arith_normalizes() {
+        let t = Affine::sym(Sym::Tid(0));
+        let e = t.scale(4).add(&Affine::konst(8)).sub(&t.scale(4));
+        assert_eq!(e.as_const(), Some(8));
+        assert!(e.terms.is_empty());
+    }
+
+    #[test]
+    fn widen_jumps_to_zero_then_inf() {
+        let w1 = widen(Itv::point(128), Itv::range(64, 128));
+        assert_eq!(w1, Itv::range(64, 128));
+        let w2 = widen(w1, Itv::range(32, 128));
+        assert_eq!(w2, Itv::range(0, 128));
+        let w3 = widen(w2, Itv::range(-1, 256));
+        assert_eq!(w3, Itv::TOP);
+    }
+
+    #[test]
+    fn guard_substitution_bounds_guarded_index() {
+        // i = tid + ctaid*ntid, guard i < n, param n concrete: the byte
+        // offset 4*i is bounded by 4n - 4 even though tid alone is not.
+        let i = Affine::sym(Sym::Tid(0)).add(&Affine::sym(Sym::CtaidNtid(0)));
+        let n = Affine::sym(Sym::Param(1));
+        // i < n  <=>  i - n + 1 <= 0
+        let g = i.sub(&n).add_const(1);
+        let off = i.scale(4);
+        let bounds = |s: Sym| match s {
+            Sym::Tid(_) | Sym::CtaidNtid(_) => Itv::range(0, POS_INF),
+            Sym::Param(_) => Itv::point(1000),
+            _ => Itv::TOP,
+        };
+        assert_eq!(upper_bound(&off, &[g], &bounds, SUBST_DEPTH), 4 * 1000 - 4);
+        assert_eq!(lower_bound(&off, &[], &bounds, SUBST_DEPTH), 0);
+    }
+
+    #[test]
+    fn unguarded_index_stays_unbounded() {
+        let off = Affine::sym(Sym::Tid(0)).scale(4);
+        assert!(upper_bound(&off, &[], &b_top, SUBST_DEPTH) >= POS_INF);
+    }
+}

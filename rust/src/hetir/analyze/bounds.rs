@@ -1,0 +1,174 @@
+//! Bounds checking: symbolic at module load, concrete at launch
+//! pre-flight (DESIGN.md §12).
+//!
+//! At load time only constant shared-memory offsets can be judged (the
+//! shared window size is part of the kernel). Everything else stays
+//! symbolic in launch dims and scalar params; `preflight_launch`
+//! instantiates the recorded access forms against one concrete launch and
+//! turns a provable out-of-bounds access into a typed
+//! [`HetError::StaticFault`] **before any block executes**. An access
+//! that merely *may* be out of bounds is left to the device-level fault
+//! path — pre-flight only rejects what it can prove, so it never blocks a
+//! correct launch.
+
+use super::affine::{le_forms, lower_bound, upper_bound, Itv, Sym};
+use super::{Diagnostic, KernelReport, Prov, Severity};
+use crate::error::{HetError, Result};
+use crate::hetir::module::Kernel;
+use crate::hetir::types::AddrSpace;
+
+/// Guard-substitution depth for bounds queries (see `affine::upper_bound`).
+const DEPTH: u32 = 4;
+
+/// Load-time pass: flag constant shared-memory offsets that fall outside
+/// the kernel's static shared window. These are wrong at *every* launch,
+/// so they are `Error`-severity diagnostics (a `Strict` launch gate).
+pub(crate) fn load_time_check(kr: &mut KernelReport, k: &Kernel) {
+    let mut diags = Vec::new();
+    {
+        let lb = kr.load_bounds();
+        for a in &kr.accesses {
+            if a.space != AddrSpace::Shared || a.prov != Prov::Shared {
+                continue;
+            }
+            if !a.provable || !a.off.terms.is_empty() || !a.slop.is_point() {
+                continue;
+            }
+            // A guard that can never hold means the access is dead code.
+            let les = le_forms(&a.guards);
+            if les.iter().any(|e| e.eval(&lb).lo > 0) {
+                continue;
+            }
+            let off = a.off.k + a.slop.lo;
+            let end = off + a.width as i128;
+            if off < 0 || end > k.shared_bytes as i128 {
+                diags.push(Diagnostic {
+                    severity: Severity::Error,
+                    kernel: kr.name.clone(),
+                    path: a.path.clone(),
+                    analysis: "bounds",
+                    message: format!(
+                        "shared-memory {} of {} byte(s) at constant offset {} is \
+                         outside the kernel's {}-byte shared window",
+                        a.kind.verb(),
+                        a.width,
+                        off,
+                        k.shared_bytes
+                    ),
+                });
+            }
+        }
+    }
+    kr.diags.extend(diags);
+}
+
+/// Instantiate the kernel's recorded access forms against one concrete
+/// launch and reject it if any access is **provably** out of bounds.
+///
+/// * `param_vals[i]` — the concrete value of scalar parameter `i`
+///   (`None` for pointers or unresolvable args).
+/// * `param_avail[i]` — for pointer parameter `i`, the byte size of the
+///   allocation it points at (`None` when the base could not be resolved
+///   to an allocation start — pre-flight then skips accesses through it).
+pub fn preflight_launch(
+    kr: &KernelReport,
+    kernel: &Kernel,
+    grid: [u32; 3],
+    block: [u32; 3],
+    param_vals: &[Option<i128>],
+    param_avail: &[Option<i128>],
+) -> Result<()> {
+    if grid.iter().chain(&block).any(|&d| d == 0) {
+        return Ok(()); // dim validation rejects this launch elsewhere
+    }
+    let bounds = |s: Sym| -> Itv {
+        match s {
+            Sym::Tid(d) => Itv::range(0, block[d as usize] as i128 - 1),
+            Sym::Ntid(d) => Itv::point(block[d as usize] as i128),
+            Sym::Ctaid(d) => Itv::range(0, grid[d as usize] as i128 - 1),
+            Sym::Nctaid(d) => Itv::point(grid[d as usize] as i128),
+            Sym::CtaidNtid(d) => {
+                Itv::range(0, (grid[d as usize] as i128 - 1) * block[d as usize] as i128)
+            }
+            Sym::Param(i) => param_vals
+                .get(i as usize)
+                .copied()
+                .flatten()
+                .map(Itv::point)
+                .unwrap_or_else(|| {
+                    kr.param_itv.get(i as usize).copied().unwrap_or(Itv::TOP)
+                }),
+            Sym::Opaque(q) => {
+                kr.opaques.get(q as usize).map(|o| o.itv).unwrap_or(Itv::TOP)
+            }
+        }
+    };
+    for a in &kr.accesses {
+        // Only accesses that provably execute, with exact offset forms
+        // whose every symbol is concrete at this launch, can be *proven*
+        // out of bounds.
+        if !a.provable || a.slop != Itv::ZERO {
+            continue;
+        }
+        let avail: i128 = match a.prov {
+            Prov::Shared => kernel.shared_bytes as i128,
+            Prov::Param(i) => match param_avail.get(i as usize).copied().flatten() {
+                Some(n) => n,
+                None => continue,
+            },
+            Prov::Unknown => continue,
+        };
+        let concrete = a.off.terms.keys().all(|s| match s {
+            Sym::Opaque(_) => false,
+            Sym::Param(i) => param_vals.get(*i as usize).copied().flatten().is_some(),
+            _ => true,
+        });
+        if !concrete {
+            continue;
+        }
+        let les = le_forms(&a.guards);
+        // A guard that is infeasible at these dims/args (e.g. `i < n`
+        // with n = 0) means the access never executes here.
+        if les.iter().any(|e| e.eval(&bounds).lo > 0) {
+            continue;
+        }
+        let hi = upper_bound(&a.off, &les, &bounds, DEPTH);
+        let lo = lower_bound(&a.off, &les, &bounds, DEPTH);
+        let end = hi.saturating_add(a.width as i128);
+        if lo < 0 || end > avail {
+            let region = match a.prov {
+                Prov::Shared => "the shared window".to_string(),
+                Prov::Param(i) => format!(
+                    "the allocation behind param `{}`",
+                    kernel
+                        .params
+                        .get(i as usize)
+                        .map(|p| p.name.as_str())
+                        .unwrap_or("?")
+                ),
+                Prov::Unknown => unreachable!(),
+            };
+            let diag = Diagnostic {
+                severity: Severity::Error,
+                kernel: kr.name.clone(),
+                path: a.path.clone(),
+                analysis: "bounds",
+                message: format!(
+                    "{} of {} byte(s) at offset `{}` reaches bytes [{lo}, {end}) of \
+                     {region} ({avail} bytes) at grid {:?} block {:?}",
+                    a.kind.verb(),
+                    a.width,
+                    a.off,
+                    grid,
+                    block,
+                ),
+            };
+            return Err(HetError::StaticFault {
+                kernel: kr.name.clone(),
+                stmt: a.path.to_string(),
+                diag: diag.to_string(),
+            });
+        }
+    }
+    Ok(())
+}

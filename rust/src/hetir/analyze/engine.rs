@@ -1,0 +1,1066 @@
+//! The affine abstract interpreter over hetIR's structured control flow.
+//!
+//! One forward pass per kernel computes, for every virtual register at
+//! every program point, an [`Approx`]: an affine form over [`Sym`]s plus
+//! interval slop. `While` loops run a bounded "quiet" fixpoint with
+//! widening at the loop head (changing registers become per-loop
+//! [`Sym::Opaque`] symbols), then one final *recording* pass collects:
+//!
+//! * every shared/global memory [`Access`] with its offset form, path
+//!   conditions ([`Guard`]s), and barrier-interval label,
+//! * barrier-interval structure: labels allocated at each `Bar`, merged
+//!   through a union-find when a uniform `If` barriers on only some
+//!   paths, plus loop backedge records (`tail → head`),
+//! * uninitialized-read diagnostics (must-init meet at joins).
+
+use super::affine::{widen, Affine, Guard, Itv, Sym, NEG_INF, POS_INF};
+use super::{
+    Access, AccessKind, Diagnostic, KernelReport, OpaqueInfo, Prov, SegKind, Severity, StmtPath,
+};
+use crate::hetir::instr::{Address, BinOp, CmpOp, Inst, Operand, Reg, SpecialReg, UnOp};
+use crate::hetir::module::{Kernel, Stmt};
+use crate::hetir::passes::uniformity::{self, Uniformity};
+use crate::hetir::types::{AddrSpace, Scalar, Type, Value};
+use std::collections::{HashMap, HashSet};
+
+/// Iteration budget for the loop-head fixpoint. Widening jumps endpoints
+/// to 0 and then ±inf, so real loops stabilize in 3–4 rounds; the cap is
+/// a safety net, and overshooting it only loses precision (the final
+/// head env is still an over-approximation joined through widening).
+const FIXPOINT_ITERS: u32 = 8;
+
+/// An abstract integer value: `form + slop`.
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) struct Approx {
+    pub form: Affine,
+    pub slop: Itv,
+}
+
+impl Approx {
+    pub fn exact(form: Affine) -> Approx {
+        Approx { form, slop: Itv::ZERO }
+    }
+
+    pub fn konst(k: i128) -> Approx {
+        Approx::exact(Affine::konst(k))
+    }
+
+    pub fn top() -> Approx {
+        Approx { form: Affine::konst(0), slop: Itv::TOP }
+    }
+
+    pub fn from_itv(i: Itv) -> Approx {
+        Approx { form: Affine::konst(0), slop: i }
+    }
+
+    pub fn is_exact(&self) -> bool {
+        self.slop == Itv::ZERO
+    }
+
+    pub fn as_const(&self) -> Option<i128> {
+        if self.is_exact() {
+            self.form.as_const()
+        } else {
+            None
+        }
+    }
+
+    pub fn add(&self, o: &Approx) -> Approx {
+        Approx { form: self.form.add(&o.form), slop: self.slop.add(o.slop) }
+    }
+
+    pub fn sub(&self, o: &Approx) -> Approx {
+        Approx { form: self.form.sub(&o.form), slop: self.slop.sub(o.slop) }
+    }
+
+    pub fn neg(&self) -> Approx {
+        Approx { form: self.form.neg(), slop: self.slop.neg() }
+    }
+
+    pub fn scale(&self, c: i128) -> Approx {
+        Approx { form: self.form.scale(c), slop: self.slop.scale(c) }
+    }
+
+    pub fn add_const(&self, c: i128) -> Approx {
+        Approx { form: self.form.add_const(c), slop: self.slop }
+    }
+}
+
+/// What a pointer register points at: a region plus a byte offset.
+#[derive(Debug, Clone, PartialEq)]
+struct PtrVal {
+    prov: Prov,
+    off: Approx,
+}
+
+/// A predicate register's symbolic condition, kept so branch guards can
+/// be derived at the `If` that consumes it. `&&`/`||` arrive from the
+/// frontend as predicated regions, reassembled at the join (see
+/// `join_cond`).
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) enum CondExpr {
+    Cmp { op: CmpOp, lhs: Approx, rhs: Approx },
+    And(Box<CondExpr>, Box<CondExpr>),
+    Or(Box<CondExpr>, Box<CondExpr>),
+    Not(Box<CondExpr>),
+}
+
+/// Per-register abstract state.
+#[derive(Debug, Clone, PartialEq)]
+struct AbsVal {
+    ap: Approx,
+    init: bool,
+    ptr: Option<PtrVal>,
+    cond: Option<CondExpr>,
+}
+
+impl AbsVal {
+    fn top_uninit() -> AbsVal {
+        AbsVal { ap: Approx::top(), init: false, ptr: None, cond: None }
+    }
+}
+
+type Env = Vec<AbsVal>;
+
+/// Result of abstractly executing a statement block.
+struct Out {
+    /// Environment at normal fall-through (`None` = all paths left the
+    /// block through break/continue/return).
+    fall: Option<Env>,
+    brks: Vec<Env>,
+    conts: Vec<Env>,
+}
+
+struct Ctx<'a> {
+    k: &'a Kernel,
+    uni: Uniformity,
+    /// Off during loop fixpoints: no accesses, labels, or diagnostics.
+    record: bool,
+    opaque_ids: HashMap<(u32, u32), u32>,
+    opaques: Vec<OpaqueInfo>,
+    loop_ids: HashMap<Vec<(SegKind, u32)>, u32>,
+    loop_parent: Vec<Option<u32>>,
+    loop_stack: Vec<u32>,
+    label: u32,
+    next_label: u32,
+    parent: Vec<u32>,
+    accesses: Vec<Access>,
+    backedges: Vec<(u32, u32, u32)>,
+    diags: Vec<Diagnostic>,
+    uninit_flagged: HashSet<u32>,
+    guards: Vec<Guard>,
+    /// Count of enclosing conditions that produced no guards — accesses
+    /// under any such condition are not `provable` for pre-flight.
+    unknown_conds: u32,
+    path: Vec<(SegKind, u32)>,
+    param_itv: Vec<Itv>,
+    tid_dims: [bool; 3],
+    uses_buf: Vec<Reg>,
+}
+
+/// Run the engine over one kernel.
+pub(crate) fn run(k: &Kernel) -> KernelReport {
+    let uni = uniformity::run(k);
+    let param_itv: Vec<Itv> = k.params.iter().map(|p| type_itv(p.ty)).collect();
+    let mut ctx = Ctx {
+        k,
+        uni,
+        record: true,
+        opaque_ids: HashMap::new(),
+        opaques: Vec::new(),
+        loop_ids: HashMap::new(),
+        loop_parent: Vec::new(),
+        loop_stack: Vec::new(),
+        label: 0,
+        next_label: 1,
+        parent: vec![0],
+        accesses: Vec::new(),
+        backedges: Vec::new(),
+        diags: Vec::new(),
+        uninit_flagged: HashSet::new(),
+        guards: Vec::new(),
+        unknown_conds: 0,
+        path: Vec::new(),
+        param_itv,
+        tid_dims: [false; 3],
+        uses_buf: Vec::new(),
+    };
+    let env = ctx.initial_env();
+    let _ = ctx.run_block(&k.body, env, SegKind::Body);
+
+    // Canonicalize barrier-interval labels through the union-find.
+    let mut accesses = std::mem::take(&mut ctx.accesses);
+    for a in &mut accesses {
+        a.label = ctx.find(a.label);
+    }
+    let mut backedges: Vec<(u32, u32, u32)> =
+        ctx.backedges.clone().into_iter().map(|(t, e, l)| (ctx.find(t), ctx.find(e), l)).collect();
+    backedges.sort_unstable();
+    backedges.dedup();
+
+    KernelReport {
+        name: k.name.clone(),
+        diags: ctx.diags,
+        accesses,
+        opaques: ctx.opaques,
+        loop_parent: ctx.loop_parent,
+        backedges,
+        tid_dims: ctx.tid_dims,
+        param_itv: ctx.param_itv,
+        analysis_nanos: 0,
+    }
+}
+
+fn type_itv(ty: Type) -> Itv {
+    match ty {
+        Type::Scalar(Scalar::Pred) => Itv::range(0, 1),
+        Type::Scalar(Scalar::I32) => Itv::range(i32::MIN as i128, i32::MAX as i128),
+        Type::Scalar(Scalar::U32) => Itv::range(0, u32::MAX as i128),
+        Type::Scalar(Scalar::I64) => Itv::range(i64::MIN as i128, i64::MAX as i128),
+        Type::Scalar(Scalar::U64) => Itv::range(0, u64::MAX as i128),
+        _ => Itv::TOP,
+    }
+}
+
+fn imm_math(v: &Value) -> Option<i128> {
+    match v.ty {
+        Type::Scalar(Scalar::Pred) => Some((v.bits & 1) as i128),
+        Type::Scalar(Scalar::I32) => Some((v.bits as u32 as i32) as i128),
+        Type::Scalar(Scalar::U32) => Some((v.bits as u32) as i128),
+        Type::Scalar(Scalar::I64) => Some((v.bits as i64) as i128),
+        Type::Scalar(Scalar::U64) => Some(v.bits as i128),
+        _ => None,
+    }
+}
+
+impl<'a> Ctx<'a> {
+    fn initial_env(&self) -> Env {
+        let mut env = vec![AbsVal::top_uninit(); self.k.reg_types.len()];
+        for (i, p) in self.k.params.iter().enumerate() {
+            let v = &mut env[i];
+            v.init = true;
+            match p.ty {
+                Type::Ptr(AddrSpace::Global) => {
+                    v.ptr =
+                        Some(PtrVal { prov: Prov::Param(i as u32), off: Approx::konst(0) });
+                }
+                Type::Ptr(AddrSpace::Shared) => {
+                    v.ptr = Some(PtrVal { prov: Prov::Shared, off: Approx::top() });
+                }
+                Type::Scalar(s) if s.is_int() => {
+                    v.ap = Approx::exact(Affine::sym(Sym::Param(i as u32)));
+                }
+                _ => {}
+            }
+        }
+        env
+    }
+
+    fn sym_itv(&self, s: Sym) -> Itv {
+        match s {
+            Sym::Tid(_) | Sym::Ctaid(_) | Sym::CtaidNtid(_) => Itv::range(0, POS_INF),
+            Sym::Ntid(_) | Sym::Nctaid(_) => Itv::range(1, POS_INF),
+            Sym::Param(i) => self.param_itv.get(i as usize).copied().unwrap_or(Itv::TOP),
+            Sym::Opaque(q) => {
+                self.opaques.get(q as usize).map(|o| o.itv).unwrap_or(Itv::TOP)
+            }
+        }
+    }
+
+    fn ap_itv(&self, a: &Approx) -> Itv {
+        a.form.eval(&|s| self.sym_itv(s)).add(a.slop)
+    }
+
+    // ---- joins -----------------------------------------------------
+
+    fn join_ap(&self, a: &Approx, b: &Approx) -> Approx {
+        if a == b {
+            a.clone()
+        } else if a.form == b.form {
+            Approx { form: a.form.clone(), slop: a.slop.join(b.slop) }
+        } else {
+            Approx::from_itv(self.ap_itv(a).join(self.ap_itv(b)))
+        }
+    }
+
+    fn join_val(&self, a: &AbsVal, b: &AbsVal, cond: Option<&CondExpr>) -> AbsVal {
+        let ptr = match (&a.ptr, &b.ptr) {
+            (Some(x), Some(y)) if x.prov == y.prov => {
+                Some(PtrVal { prov: x.prov, off: self.join_ap(&x.off, &y.off) })
+            }
+            _ => None,
+        };
+        AbsVal {
+            ap: self.join_ap(&a.ap, &b.ap),
+            init: a.init && b.init,
+            ptr,
+            cond: join_cond(&a.cond, &b.cond, cond),
+        }
+    }
+
+    fn join_env(&self, a: &Env, b: &Env, cond: Option<&CondExpr>) -> Env {
+        a.iter().zip(b).map(|(x, y)| self.join_val(x, y, cond)).collect()
+    }
+
+    // ---- barrier-interval labels -----------------------------------
+
+    fn fresh_label(&mut self) -> u32 {
+        let l = self.next_label;
+        self.next_label += 1;
+        self.parent.push(l);
+        l
+    }
+
+    fn find(&mut self, mut x: u32) -> u32 {
+        while self.parent[x as usize] != x {
+            let p = self.parent[x as usize];
+            self.parent[x as usize] = self.parent[p as usize];
+            x = self.parent[x as usize];
+        }
+        x
+    }
+
+    fn union(&mut self, a: u32, b: u32) {
+        let (ra, rb) = (self.find(a), self.find(b));
+        if ra != rb {
+            self.parent[ra as usize] = rb;
+        }
+    }
+
+    // ---- operand evaluation ----------------------------------------
+
+    fn op_ap(&self, o: &Operand, env: &Env) -> Approx {
+        match o {
+            Operand::Reg(r) => env[r.0 as usize].ap.clone(),
+            Operand::Imm(v) => imm_math(v).map(Approx::konst).unwrap_or_else(Approx::top),
+        }
+    }
+
+    fn operand_val(&self, o: &Operand, env: &Env) -> AbsVal {
+        match o {
+            Operand::Reg(r) => {
+                let mut v = env[r.0 as usize].clone();
+                v.init = true;
+                v
+            }
+            Operand::Imm(v) => {
+                let mut a = AbsVal::top_uninit();
+                a.init = true;
+                match v.ty {
+                    Type::Ptr(space) => {
+                        a.ptr = Some(PtrVal {
+                            prov: if space == AddrSpace::Shared {
+                                Prov::Shared
+                            } else {
+                                Prov::Unknown
+                            },
+                            off: Approx::konst(v.bits as i128),
+                        });
+                    }
+                    _ => {
+                        if let Some(k) = imm_math(v) {
+                            a.ap = Approx::konst(k);
+                        }
+                    }
+                }
+                a
+            }
+        }
+    }
+
+    fn addr_val(&self, a: &Address, env: &Env) -> (Prov, Approx) {
+        let base = &env[a.base.0 as usize];
+        let (prov, mut off) = match &base.ptr {
+            Some(p) => (p.prov, p.off.clone()),
+            None => (Prov::Unknown, Approx::top()),
+        };
+        if let Some(ix) = a.index {
+            off = off.add(&env[ix.0 as usize].ap.scale(a.scale as i128));
+        }
+        (prov, off.add_const(a.disp as i128))
+    }
+
+    // ---- transfer function -----------------------------------------
+
+    fn set(&self, env: &mut Env, dst: Reg, ap: Approx) {
+        env[dst.0 as usize] = AbsVal { ap, init: true, ptr: None, cond: None };
+    }
+
+    fn record_access(
+        &mut self,
+        kind: AccessKind,
+        space: AddrSpace,
+        addr: &Address,
+        width: u64,
+        ordered: bool,
+        env: &Env,
+    ) {
+        if !self.record {
+            return;
+        }
+        let (prov, off) = self.addr_val(addr, env);
+        self.accesses.push(Access {
+            kind,
+            space,
+            prov,
+            off: off.form,
+            slop: off.slop,
+            width,
+            guards: self.guards.clone(),
+            label: self.label,
+            loops: self.loop_stack.clone(),
+            path: StmtPath(self.path.clone()),
+            provable: self.unknown_conds == 0,
+            ordered_atomic: ordered,
+        });
+    }
+
+    fn eval_inst(&mut self, i: &Inst, env: &mut Env) {
+        // Must-init check: every register read must be initialized on all
+        // paths reaching here. A flagged register is treated as
+        // initialized afterwards so one bad def site produces one
+        // diagnostic, not a cascade.
+        let mut uses = std::mem::take(&mut self.uses_buf);
+        uses.clear();
+        i.uses(&mut uses);
+        for r in &uses {
+            let v = &mut env[r.0 as usize];
+            if !v.init {
+                v.init = true;
+                if self.record && self.uninit_flagged.insert(r.0) {
+                    self.diags.push(Diagnostic {
+                        severity: Severity::Warning,
+                        kernel: self.k.name.clone(),
+                        path: StmtPath(self.path.clone()),
+                        analysis: "uninit",
+                        message: format!(
+                            "register %{} may be read before initialization \
+                             (not assigned on every path reaching this statement)",
+                            r.0
+                        ),
+                    });
+                }
+            }
+        }
+        self.uses_buf = uses;
+
+        match i {
+            Inst::Special { dst, kind } => {
+                let ap = match kind {
+                    SpecialReg::ThreadIdx(d) => {
+                        self.tid_dims[d.index()] = true;
+                        Approx::exact(Affine::sym(Sym::Tid(d.index() as u8)))
+                    }
+                    SpecialReg::BlockIdx(d) => {
+                        Approx::exact(Affine::sym(Sym::Ctaid(d.index() as u8)))
+                    }
+                    SpecialReg::BlockDim(d) => {
+                        Approx::exact(Affine::sym(Sym::Ntid(d.index() as u8)))
+                    }
+                    SpecialReg::GridDim(d) => {
+                        Approx::exact(Affine::sym(Sym::Nctaid(d.index() as u8)))
+                    }
+                    SpecialReg::GlobalId(d) => {
+                        self.tid_dims[d.index()] = true;
+                        Approx::exact(
+                            Affine::sym(Sym::CtaidNtid(d.index() as u8))
+                                .add(&Affine::sym(Sym::Tid(d.index() as u8))),
+                        )
+                    }
+                };
+                self.set(env, *dst, ap);
+            }
+            Inst::Mov { dst, src } => {
+                env[dst.0 as usize] = self.operand_val(src, env);
+            }
+            Inst::Bin { op, ty, dst, a, b } => {
+                let ap = if ty.is_float() {
+                    Approx::top()
+                } else {
+                    let av = self.op_ap(a, env);
+                    let bv = self.op_ap(b, env);
+                    self.bin_ap(*op, &av, &bv)
+                };
+                self.set(env, *dst, ap);
+            }
+            Inst::Un { op, ty, dst, a } => {
+                let src_cond = if let Operand::Reg(r) = a {
+                    env[r.0 as usize].cond.clone()
+                } else {
+                    None
+                };
+                let ap = if ty.is_float() {
+                    Approx::top()
+                } else if *ty == Scalar::Pred {
+                    Approx::from_itv(Itv::range(0, 1))
+                } else {
+                    let av = self.op_ap(a, env);
+                    match op {
+                        UnOp::Neg => av.neg(),
+                        // bitwise not: !x = -x - 1
+                        UnOp::Not => av.neg().add_const(-1),
+                        UnOp::Abs => {
+                            let i = self.ap_itv(&av);
+                            let lo = if i.lo >= 0 { i.lo } else { 0 };
+                            Approx::from_itv(Itv::range(lo, i.hi.abs().max(i.lo.abs())))
+                        }
+                        UnOp::Popc => Approx::from_itv(Itv::range(0, 64)),
+                        _ => Approx::top(),
+                    }
+                };
+                self.set(env, *dst, ap);
+                if *op == UnOp::Not && *ty == Scalar::Pred {
+                    env[dst.0 as usize].cond = src_cond.map(|c| CondExpr::Not(Box::new(c)));
+                }
+            }
+            Inst::Fma { dst, .. } => self.set(env, *dst, Approx::top()),
+            Inst::Cmp { op, ty, dst, a, b } => {
+                let cond = if ty.is_float() {
+                    None
+                } else {
+                    Some(CondExpr::Cmp {
+                        op: *op,
+                        lhs: self.op_ap(a, env),
+                        rhs: self.op_ap(b, env),
+                    })
+                };
+                env[dst.0 as usize] = AbsVal {
+                    ap: Approx::from_itv(Itv::range(0, 1)),
+                    init: true,
+                    ptr: None,
+                    cond,
+                };
+            }
+            Inst::Sel { dst, a, b, .. } => {
+                let av = self.operand_val(a, env);
+                let bv = self.operand_val(b, env);
+                let mut v = self.join_val(&av, &bv, None);
+                v.init = true;
+                env[dst.0 as usize] = v;
+            }
+            Inst::Cvt { from, to, dst, src } => {
+                let ap = if from.is_int() && to.is_int() {
+                    // Width/sign conversions keep the math value; wraps
+                    // are outside the analysis' integer model (§12).
+                    self.op_ap(src, env)
+                } else {
+                    Approx::top()
+                };
+                self.set(env, *dst, ap);
+            }
+            Inst::PtrAdd { dst, addr } => {
+                let (prov, off) = self.addr_val(addr, env);
+                env[dst.0 as usize] = AbsVal {
+                    ap: Approx::top(),
+                    init: true,
+                    ptr: Some(PtrVal { prov, off }),
+                    cond: None,
+                };
+            }
+            Inst::Ld { space, ty, dst, addr } => {
+                self.record_access(
+                    AccessKind::Read,
+                    *space,
+                    addr,
+                    ty.size_bytes() as u64,
+                    false,
+                    env,
+                );
+                self.set(env, *dst, Approx::top());
+            }
+            Inst::St { space, ty, addr, .. } => {
+                self.record_access(
+                    AccessKind::Write,
+                    *space,
+                    addr,
+                    ty.size_bytes() as u64,
+                    false,
+                    env,
+                );
+            }
+            Inst::Atom { op, space, ty, dst, addr, .. } => {
+                self.record_access(
+                    AccessKind::Atomic,
+                    *space,
+                    addr,
+                    ty.size_bytes() as u64,
+                    !op.commutes(),
+                    env,
+                );
+                if let Some(d) = dst {
+                    self.set(env, *d, Approx::top());
+                }
+            }
+            Inst::Bar { .. } => {
+                if self.record {
+                    self.label = self.fresh_label();
+                }
+            }
+            Inst::Fence { .. } | Inst::Trap { .. } => {}
+            Inst::Vote { dst, .. } => {
+                self.set(env, *dst, Approx::from_itv(Itv::range(0, 1)));
+            }
+            Inst::Ballot { dst, .. } => {
+                self.set(env, *dst, Approx::from_itv(Itv::range(0, u32::MAX as i128)));
+            }
+            Inst::Shfl { dst, .. } => self.set(env, *dst, Approx::top()),
+            Inst::Rng { dst, state } => {
+                self.set(env, *dst, Approx::from_itv(Itv::range(0, u32::MAX as i128)));
+                self.set(env, *state, Approx::from_itv(Itv::range(0, u32::MAX as i128)));
+            }
+        }
+    }
+
+    fn bin_ap(&self, op: BinOp, a: &Approx, b: &Approx) -> Approx {
+        let ai = self.ap_itv(a);
+        let bi = self.ap_itv(b);
+        match op {
+            BinOp::Add => a.add(b),
+            BinOp::Sub => a.sub(b),
+            BinOp::Mul => {
+                if let Some(c) = a.as_const() {
+                    return b.scale(c);
+                }
+                if let Some(c) = b.as_const() {
+                    return a.scale(c);
+                }
+                if let Some(p) = prod_sym(a, b) {
+                    return p;
+                }
+                Approx::from_itv(ai.mul(bi))
+            }
+            BinOp::Div => {
+                if let Some(c) = b.as_const() {
+                    if c > 0 {
+                        if a.is_exact()
+                            && a.form.k % c == 0
+                            && a.form.terms.values().all(|t| t % c == 0)
+                        {
+                            // form = c * g exactly: truncating division is
+                            // exact regardless of sign.
+                            let mut f = a.form.clone();
+                            f.k /= c;
+                            for t in f.terms.values_mut() {
+                                *t /= c;
+                            }
+                            return Approx::exact(f);
+                        }
+                        if ai.lo >= 0 {
+                            return Approx::from_itv(Itv::range(ai.lo / c, ai.hi / c));
+                        }
+                    }
+                }
+                Approx::top()
+            }
+            BinOp::Rem => {
+                if let Some(c) = b.as_const() {
+                    if c > 0 {
+                        if ai.lo >= 0 {
+                            return Approx::from_itv(Itv::range(0, (c - 1).min(ai.hi)));
+                        }
+                        return Approx::from_itv(Itv::range(-(c - 1), c - 1));
+                    }
+                }
+                Approx::top()
+            }
+            BinOp::Min => Approx::from_itv(Itv::range(ai.lo.min(bi.lo), ai.hi.min(bi.hi))),
+            BinOp::Max => Approx::from_itv(Itv::range(ai.lo.max(bi.lo), ai.hi.max(bi.hi))),
+            BinOp::And => {
+                // x & m is in [0, m] for any x when m >= 0 (two's
+                // complement: a non-negative mask caps the bits).
+                if let Some(m) = b.as_const() {
+                    if m >= 0 {
+                        return Approx::from_itv(Itv::range(0, m));
+                    }
+                }
+                if let Some(m) = a.as_const() {
+                    if m >= 0 {
+                        return Approx::from_itv(Itv::range(0, m));
+                    }
+                }
+                if ai.lo >= 0 && bi.lo >= 0 {
+                    Approx::from_itv(Itv::range(0, ai.hi.min(bi.hi)))
+                } else {
+                    Approx::top()
+                }
+            }
+            BinOp::Or | BinOp::Xor => {
+                if ai.lo >= 0 && bi.lo >= 0 {
+                    // x|m <= x+m and x^m <= x+m for non-negative operands.
+                    Approx::from_itv(Itv::range(0, Itv::range(ai.hi, ai.hi).add(bi).hi))
+                } else {
+                    Approx::top()
+                }
+            }
+            BinOp::Shl => {
+                if let Some(c) = b.as_const() {
+                    if (0..=63).contains(&c) {
+                        return a.scale(1i128 << c);
+                    }
+                }
+                Approx::top()
+            }
+            BinOp::Shr => {
+                if let Some(c) = b.as_const() {
+                    if (0..=63).contains(&c) && ai.lo >= 0 {
+                        return Approx::from_itv(Itv::range(ai.lo >> c, ai.hi >> c));
+                    }
+                }
+                if ai.lo >= 0 {
+                    Approx::from_itv(Itv::range(0, ai.hi))
+                } else {
+                    Approx::top()
+                }
+            }
+        }
+    }
+
+    // ---- control flow ----------------------------------------------
+
+    fn run_block(&mut self, stmts: &[Stmt], env: Env, seg: SegKind) -> Out {
+        let mut env = Some(env);
+        let mut out = Out { fall: None, brks: Vec::new(), conts: Vec::new() };
+        let guards_base = self.guards.len();
+        let unknown_base = self.unknown_conds;
+        for (idx, s) in stmts.iter().enumerate() {
+            let Some(mut cur) = env.take() else { break };
+            self.path.push((seg, idx as u32));
+            match s {
+                Stmt::I(i) => {
+                    self.eval_inst(i, &mut cur);
+                    env = Some(cur);
+                }
+                Stmt::If { cond, then_b, else_b } => {
+                    let cexpr = cur[cond.0 as usize].cond.clone();
+                    let l0 = self.label;
+                    let t_out = self.branch(then_b, cur.clone(), SegKind::Then, cexpr.as_ref(), true);
+                    let lt = self.label;
+                    self.label = l0;
+                    let e_out = self.branch(else_b, cur, SegKind::Else, cexpr.as_ref(), false);
+                    let le = self.label;
+                    if self.record {
+                        if lt != l0 || le != l0 {
+                            // A (uniform) branch barriered: both arms drain
+                            // into one joined interval, even when only one
+                            // arm contained the barrier.
+                            let lj = self.fresh_label();
+                            self.union(lt, lj);
+                            self.union(le, lj);
+                            self.label = lj;
+                        } else {
+                            self.label = l0;
+                        }
+                    }
+                    out.brks.extend(t_out.brks);
+                    out.brks.extend(e_out.brks);
+                    out.conts.extend(t_out.conts);
+                    out.conts.extend(e_out.conts);
+                    env = match (t_out.fall, e_out.fall) {
+                        (Some(a), Some(b)) => Some(self.join_env(&a, &b, cexpr.as_ref())),
+                        (Some(a), None) => {
+                            // Early-exit else arm: everything after this
+                            // statement in the block runs under the
+                            // then-condition.
+                            self.persist_guards(cexpr.as_ref(), true);
+                            Some(a)
+                        }
+                        (None, Some(b)) => {
+                            self.persist_guards(cexpr.as_ref(), false);
+                            Some(b)
+                        }
+                        (None, None) => None,
+                    };
+                }
+                Stmt::While { cond, cond_reg, body } => {
+                    let o = self.do_while(cond, *cond_reg, body, cur);
+                    env = o.fall;
+                }
+                Stmt::Break => {
+                    out.brks.push(cur);
+                }
+                Stmt::Continue => {
+                    out.conts.push(cur);
+                }
+                Stmt::Return => {}
+            }
+            self.path.pop();
+        }
+        self.guards.truncate(guards_base);
+        self.unknown_conds = unknown_base;
+        out.fall = env;
+        out
+    }
+
+    /// Run a conditional arm with its branch guards pushed.
+    fn branch(
+        &mut self,
+        stmts: &[Stmt],
+        env: Env,
+        seg: SegKind,
+        cond: Option<&CondExpr>,
+        sense: bool,
+    ) -> Out {
+        let gbase = self.guards.len();
+        let ubase = self.unknown_conds;
+        self.persist_guards(cond, sense);
+        let out = self.run_block(stmts, env, seg);
+        self.guards.truncate(gbase);
+        self.unknown_conds = ubase;
+        out
+    }
+
+    /// Push the guards of one condition side; an untranslatable condition
+    /// counts as unknown (accesses under it lose `provable`).
+    fn persist_guards(&mut self, cond: Option<&CondExpr>, sense: bool) {
+        let gs = match cond {
+            Some(c) if sense => guards_true(c),
+            Some(c) => guards_false(c),
+            None => Vec::new(),
+        };
+        if gs.is_empty() {
+            self.unknown_conds += 1;
+        } else {
+            self.guards.extend(gs);
+        }
+    }
+
+    fn do_while(&mut self, cond: &[Stmt], cond_reg: Reg, body: &[Stmt], env: Env) -> Out {
+        let loop_id = self.loop_id_for_path();
+        self.loop_stack.push(loop_id);
+
+        // Quiet fixpoint: stabilize the loop-head env under widening.
+        let saved_record = self.record;
+        self.record = false;
+        let mut head = env.clone();
+        for _ in 0..FIXPOINT_ITERS {
+            let (_, _, b_out) = self.loop_pass(cond, cond_reg, body, &head);
+            let mut be: Option<Env> = b_out.fall;
+            for c in b_out.conts {
+                be = Some(match be {
+                    Some(x) => self.join_env(&x, &c, None),
+                    None => c,
+                });
+            }
+            let joined = match &be {
+                Some(b) => self.join_env(&env, b, None),
+                None => env.clone(),
+            };
+            let (new_head, changed) = self.widen_head(&head, &joined, loop_id);
+            head = new_head;
+            if !changed {
+                break;
+            }
+        }
+        self.record = saved_record;
+
+        // One recording pass from the stable head.
+        let head_label = self.label;
+        let (e1, _cexpr, b_out) = self.loop_pass(cond, cond_reg, body, &head);
+        if self.record {
+            let tail_label = self.label;
+            self.backedges.push((tail_label, head_label, loop_id));
+        }
+
+        // Exit env: condition-false fall-through joined with breaks. The
+        // post-loop label stays at the tail — a zero-trip loop would fall
+        // through with the head label, a miss the advisory race detector
+        // accepts (see DESIGN.md §12).
+        let mut exit = e1;
+        for b in b_out.brks {
+            exit = self.join_env(&exit, &b, None);
+        }
+        self.loop_stack.pop();
+        Out { fall: Some(exit), brks: Vec::new(), conts: Vec::new() }
+    }
+
+    fn loop_pass(
+        &mut self,
+        cond: &[Stmt],
+        cond_reg: Reg,
+        body: &[Stmt],
+        head: &Env,
+    ) -> (Env, Option<CondExpr>, Out) {
+        let c_out = self.run_block(cond, head.clone(), SegKind::Cond);
+        let e1 = c_out.fall.unwrap_or_else(|| head.clone());
+        let cexpr = e1[cond_reg.0 as usize].cond.clone();
+        let b_out = self.branch(body, e1.clone(), SegKind::Body, cexpr.as_ref(), true);
+        (e1, cexpr, b_out)
+    }
+
+    fn loop_id_for_path(&mut self) -> u32 {
+        if let Some(&id) = self.loop_ids.get(&self.path) {
+            return id;
+        }
+        let id = self.loop_parent.len() as u32;
+        self.loop_ids.insert(self.path.clone(), id);
+        self.loop_parent.push(self.loop_stack.last().copied());
+        id
+    }
+
+    fn opaque_for(&mut self, loop_id: u32, reg: u32) -> u32 {
+        if let Some(&q) = self.opaque_ids.get(&(loop_id, reg)) {
+            return q;
+        }
+        let q = self.opaques.len() as u32;
+        self.opaque_ids.insert((loop_id, reg), q);
+        self.opaques.push(OpaqueInfo {
+            // Empty until the first widen records the first joined range.
+            itv: Itv { lo: POS_INF, hi: NEG_INF },
+            loop_id,
+            uniform: self.uni.is_uniform(Reg(reg)),
+        });
+        q
+    }
+
+    /// Widen `joined` (entry ⊔ backedge) against the previous head env.
+    /// Registers whose affine form is unstable become per-loop opaque
+    /// symbols whose interval widens monotonically, so the fixpoint
+    /// terminates in a handful of rounds.
+    fn widen_head(&mut self, old: &Env, joined: &Env, loop_id: u32) -> (Env, bool) {
+        let mut changed = false;
+        let mut out = Vec::with_capacity(old.len());
+        for (r, (o, j)) in old.iter().zip(joined).enumerate() {
+            if o == j {
+                out.push(o.clone());
+                continue;
+            }
+            let mut v = j.clone();
+            if o.ap != j.ap {
+                let q = self.opaque_for(loop_id, r as u32);
+                let jit = self.ap_itv(&j.ap);
+                let prev = self.opaques[q as usize].itv;
+                let w = if prev.is_empty() { jit } else { widen(prev, jit) };
+                if w != prev {
+                    self.opaques[q as usize].itv = w;
+                    changed = true;
+                }
+                v.ap = Approx::exact(Affine::sym(Sym::Opaque(q)));
+            }
+            if o.ptr != j.ptr {
+                v.ptr = None;
+            } else {
+                v.ptr = o.ptr.clone();
+            }
+            if o.cond != j.cond {
+                v.cond = None;
+            }
+            v.init = o.init && j.init;
+            if v != *o {
+                changed = true;
+            }
+            out.push(v);
+        }
+        (out, changed)
+    }
+}
+
+/// Recognize `ctaid.d * ntid.d` (either order) as its product symbol.
+fn prod_sym(a: &Approx, b: &Approx) -> Option<Approx> {
+    let single = |x: &Approx| -> Option<Sym> {
+        if x.is_exact() && x.form.k == 0 && x.form.terms.len() == 1 {
+            let (&s, &c) = x.form.terms.iter().next().unwrap();
+            (c == 1).then_some(s)
+        } else {
+            None
+        }
+    };
+    match (single(a)?, single(b)?) {
+        (Sym::Ctaid(d1), Sym::Ntid(d2)) | (Sym::Ntid(d1), Sym::Ctaid(d2)) if d1 == d2 => {
+            Some(Approx::exact(Affine::sym(Sym::CtaidNtid(d1))))
+        }
+        _ => None,
+    }
+}
+
+/// Condition join at an `If` merge: reassembles the frontend's
+/// short-circuit lowering. `a` is the then-arm value, `b` the else-arm
+/// value, `c` the branch condition:
+/// `a && b` lowers to `r = a; if (r) r = b` — at the join the else value
+/// *is* the condition, so the merged value is `And(c, then)`. `a || b`
+/// lowers through `if (!r) r = b`, recognized as `Or(else, then)`.
+fn join_cond(
+    a: &Option<CondExpr>,
+    b: &Option<CondExpr>,
+    c: Option<&CondExpr>,
+) -> Option<CondExpr> {
+    if a == b {
+        return a.clone();
+    }
+    let (Some(av), Some(bv)) = (a, b) else { return None };
+    let Some(c) = c else { return None };
+    if bv == c {
+        return Some(CondExpr::And(Box::new(c.clone()), Box::new(av.clone())));
+    }
+    if let CondExpr::Not(inner) = c {
+        if **inner == *bv {
+            return Some(CondExpr::Or(Box::new(bv.clone()), Box::new(av.clone())));
+        }
+    }
+    None
+}
+
+fn negate_cmp(op: CmpOp) -> CmpOp {
+    match op {
+        CmpOp::Eq => CmpOp::Ne,
+        CmpOp::Ne => CmpOp::Eq,
+        CmpOp::Lt => CmpOp::Ge,
+        CmpOp::Le => CmpOp::Gt,
+        CmpOp::Gt => CmpOp::Le,
+        CmpOp::Ge => CmpOp::Lt,
+    }
+}
+
+/// Guards implied by `lhs <op> rhs` being true, as `e ≤ 0` / `e = 0`
+/// forms over `d = lhs - rhs` (slop folded conservatively; infinite slop
+/// yields nothing).
+fn cmp_guards(op: CmpOp, lhs: &Approx, rhs: &Approx) -> Vec<Guard> {
+    let d = lhs.sub(rhs);
+    let (f, s) = (d.form, d.slop);
+    match op {
+        CmpOp::Lt if s.lo > NEG_INF => vec![Guard::Le(f.add_const(1 + s.lo))],
+        CmpOp::Le if s.lo > NEG_INF => vec![Guard::Le(f.add_const(s.lo))],
+        CmpOp::Gt if s.hi < POS_INF => vec![Guard::Le(f.neg().add_const(1 - s.hi))],
+        CmpOp::Ge if s.hi < POS_INF => vec![Guard::Le(f.neg().add_const(-s.hi))],
+        CmpOp::Eq => {
+            if s == Itv::ZERO {
+                vec![Guard::Eq(f)]
+            } else {
+                let mut g = Vec::new();
+                if s.lo > NEG_INF {
+                    g.push(Guard::Le(f.add_const(s.lo)));
+                }
+                if s.hi < POS_INF {
+                    g.push(Guard::Le(f.neg().add_const(-s.hi)));
+                }
+                g
+            }
+        }
+        _ => Vec::new(),
+    }
+}
+
+pub(crate) fn guards_true(c: &CondExpr) -> Vec<Guard> {
+    match c {
+        CondExpr::Cmp { op, lhs, rhs } => cmp_guards(*op, lhs, rhs),
+        CondExpr::And(a, b) => {
+            let mut g = guards_true(a);
+            g.extend(guards_true(b));
+            g
+        }
+        CondExpr::Or(_, _) => Vec::new(),
+        CondExpr::Not(x) => guards_false(x),
+    }
+}
+
+pub(crate) fn guards_false(c: &CondExpr) -> Vec<Guard> {
+    match c {
+        CondExpr::Cmp { op, lhs, rhs } => cmp_guards(negate_cmp(*op), lhs, rhs),
+        CondExpr::And(_, _) => Vec::new(),
+        CondExpr::Or(a, b) => {
+            let mut g = guards_false(a);
+            g.extend(guards_false(b));
+            g
+        }
+        CondExpr::Not(x) => guards_true(x),
+    }
+}

@@ -1,0 +1,367 @@
+//! Static analysis of hetIR kernels (DESIGN.md §12).
+//!
+//! The paper's binary-compatibility promise means undefined behavior one
+//! backend tolerates silently (an OOB global store, a benign-under-lockstep
+//! shared-memory race, an ordered atomic across shards) is a portability
+//! and migration hazard on every other backend — so it is caught **once,
+//! statically, at the IR layer**. `analyze_module` runs after
+//! `verify_module` at module load and produces an [`AnalysisReport`]
+//! cached per module beside the JIT cache:
+//!
+//! * an **affine range engine** ([`affine`], [`engine`]) giving every
+//!   integer register a symbolic affine form over thread coordinates and
+//!   kernel parameters,
+//! * a **shared-memory race detector** ([`race`]) over barrier intervals,
+//! * **bounds checking** ([`bounds`]) — symbolic at load, instantiated
+//!   with concrete dims/args at launch pre-flight,
+//! * **uninitialized-read detection** (in [`engine`], must-init meet at
+//!   joins).
+//!
+//! Analysis never changes codegen, migration, or suspension metadata — it
+//! only reads the IR and gates launches through
+//! `LaunchBuilder::analysis(Strict | Warn | Off)`.
+
+pub mod affine;
+mod bounds;
+mod engine;
+mod race;
+
+pub use bounds::preflight_launch;
+
+use crate::hetir::module::{Kernel, Module};
+use crate::hetir::types::AddrSpace;
+use affine::{Affine, Guard, Itv, Sym};
+use std::fmt;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// One segment of a statement path: which arm of which block statement.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SegKind {
+    Body,
+    Then,
+    Else,
+    Cond,
+}
+
+impl SegKind {
+    fn name(self) -> &'static str {
+        match self {
+            SegKind::Body => "body",
+            SegKind::Then => "then",
+            SegKind::Else => "else",
+            SegKind::Cond => "cond",
+        }
+    }
+}
+
+/// A path to a statement inside a kernel body, e.g. `body[3].then[1]` —
+/// the uniform location language shared by verifier errors and analysis
+/// diagnostics.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, Default)]
+pub struct StmtPath(pub Vec<(SegKind, u32)>);
+
+impl fmt::Display for StmtPath {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.0.is_empty() {
+            return write!(f, "<kernel>");
+        }
+        for (i, (kind, idx)) in self.0.iter().enumerate() {
+            if i > 0 {
+                write!(f, ".")?;
+            }
+            write!(f, "{}[{}]", kind.name(), idx)?;
+        }
+        Ok(())
+    }
+}
+
+/// Diagnostic severity. `Warn` mode prints `Warning` and above at module
+/// load; `Strict` mode refuses to launch kernels carrying any.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Info,
+    Warning,
+    Error,
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Severity::Info => "info",
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        })
+    }
+}
+
+/// A structured analysis finding.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    pub severity: Severity,
+    pub kernel: String,
+    pub path: StmtPath,
+    /// Which analysis produced it: `"race"`, `"bounds"`, or `"uninit"`.
+    pub analysis: &'static str,
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "hetgpu: [{}] {} in `{}` at {}: {}",
+            self.severity, self.analysis, self.kernel, self.path, self.message
+        )
+    }
+}
+
+/// How a memory instruction touches its location.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccessKind {
+    Read,
+    Write,
+    Atomic,
+}
+
+impl AccessKind {
+    fn verb(self) -> &'static str {
+        match self {
+            AccessKind::Read => "read",
+            AccessKind::Write => "write",
+            AccessKind::Atomic => "atomic",
+        }
+    }
+}
+
+/// Which memory region an access offset is relative to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Prov {
+    /// Offset from the pointer passed as kernel parameter `i`.
+    Param(u32),
+    /// Offset into the kernel's static shared-memory window.
+    Shared,
+    /// Base pointer could not be traced — bounds checking skips it, the
+    /// race detector treats it as overlapping everything in its space.
+    Unknown,
+}
+
+/// One memory access, fully symbolic: the engine records these once per
+/// kernel; the race detector pairs them up and launch pre-flight
+/// instantiates them against concrete dims/args.
+#[derive(Debug, Clone)]
+pub struct Access {
+    pub kind: AccessKind,
+    pub space: AddrSpace,
+    pub prov: Prov,
+    /// Byte offset from the region base as an affine form...
+    pub off: Affine,
+    /// ...plus this much interval slop (`[0,0]` = exact).
+    pub slop: Itv,
+    /// Access width in bytes.
+    pub width: u64,
+    /// Path conditions that hold whenever the access executes.
+    pub guards: Vec<Guard>,
+    /// Canonical barrier-interval label (accesses with equal labels can
+    /// be concurrent for two threads of one block).
+    pub label: u32,
+    /// Enclosing loop ids, outermost first.
+    pub loops: Vec<u32>,
+    pub path: StmtPath,
+    /// False when the access sits under a condition the engine could not
+    /// translate into guards — pre-flight then cannot prove the access
+    /// executes and stays silent.
+    pub provable: bool,
+    /// Atomic op that does not commute (Exch/Cas).
+    pub ordered_atomic: bool,
+}
+
+/// A loop-widened unknown: its interval, the loop that minted it, and
+/// whether the underlying register is block-uniform (uniform loop
+/// variables are *shared* between the two thread instances of a race
+/// query; varying ones are renamed apart).
+#[derive(Debug, Clone, Copy)]
+pub struct OpaqueInfo {
+    pub itv: Itv,
+    pub loop_id: u32,
+    pub uniform: bool,
+}
+
+/// Per-kernel analysis result.
+#[derive(Debug, Clone)]
+pub struct KernelReport {
+    pub name: String,
+    pub diags: Vec<Diagnostic>,
+    pub accesses: Vec<Access>,
+    pub opaques: Vec<OpaqueInfo>,
+    /// Loop nesting: `loop_parent[l]` is the id of the loop enclosing `l`.
+    pub loop_parent: Vec<Option<u32>>,
+    /// `(tail label, head label, loop id)` — accesses in the tail
+    /// interval of an iteration can race accesses in the head interval of
+    /// the next one. Labels are canonical.
+    pub backedges: Vec<(u32, u32, u32)>,
+    /// Which `threadIdx` dimensions the kernel reads at all (unreferenced
+    /// dimensions are assumed to have extent 1 for distinctness
+    /// arguments; see DESIGN.md §12).
+    pub tid_dims: [bool; 3],
+    /// Type-derived range of each scalar parameter (load-time bounds).
+    pub param_itv: Vec<Itv>,
+    pub analysis_nanos: u64,
+}
+
+impl KernelReport {
+    /// Highest diagnostic severity, if any.
+    pub fn worst(&self) -> Option<Severity> {
+        self.diags.iter().map(|d| d.severity).max()
+    }
+
+    /// Load-time per-symbol bounds: coordinates are only sign-bounded,
+    /// parameters carry their type range, opaques their widened interval.
+    pub fn load_bounds(&self) -> impl Fn(Sym) -> Itv + '_ {
+        move |s| match s {
+            Sym::Tid(_) | Sym::Ctaid(_) | Sym::CtaidNtid(_) => Itv::range(0, affine::POS_INF),
+            Sym::Ntid(_) | Sym::Nctaid(_) => Itv::range(1, affine::POS_INF),
+            Sym::Param(i) => self.param_itv.get(i as usize).copied().unwrap_or(Itv::TOP),
+            Sym::Opaque(q) => {
+                self.opaques.get(q as usize).map(|o| o.itv).unwrap_or(Itv::TOP)
+            }
+        }
+    }
+}
+
+/// Whole-module analysis result, cached per loaded module.
+#[derive(Debug, Clone, Default)]
+pub struct AnalysisReport {
+    pub kernels: Vec<KernelReport>,
+}
+
+impl AnalysisReport {
+    pub fn kernel(&self, name: &str) -> Option<&KernelReport> {
+        self.kernels.iter().find(|k| k.name == name)
+    }
+
+    /// `(info, warning, error)` diagnostic counts.
+    pub fn diag_counts(&self) -> (u64, u64, u64) {
+        let mut c = (0, 0, 0);
+        for k in &self.kernels {
+            for d in &k.diags {
+                match d.severity {
+                    Severity::Info => c.0 += 1,
+                    Severity::Warning => c.1 += 1,
+                    Severity::Error => c.2 += 1,
+                }
+            }
+        }
+        c
+    }
+
+    pub fn total_nanos(&self) -> u64 {
+        self.kernels.iter().map(|k| k.analysis_nanos).sum()
+    }
+}
+
+/// Analyze every kernel of a verified module.
+pub fn analyze_module(m: &Module) -> AnalysisReport {
+    AnalysisReport { kernels: m.kernels.iter().map(analyze_kernel).collect() }
+}
+
+/// Analyze one kernel: run the affine engine, then the race detector and
+/// the load-time bounds pass over its access set.
+pub fn analyze_kernel(k: &Kernel) -> KernelReport {
+    let t0 = Instant::now();
+    let mut report = engine::run(k);
+    race::check(&mut report);
+    bounds::load_time_check(&mut report, k);
+    report.analysis_nanos = t0.elapsed().as_nanos() as u64;
+    report
+}
+
+/// How much the analyzer is allowed to gate (per launch; default from
+/// `HETGPU_ANALYZE`, overridden per-launch by `LaunchBuilder::analysis`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AnalysisLevel {
+    /// Any load-time diagnostic of `Warning` severity or above fails the
+    /// launch, in addition to everything `Warn` rejects.
+    Strict,
+    /// Load-time diagnostics print to stderr; a *provable* OOB at the
+    /// requested dims/args still fails pre-flight (there is no
+    /// configuration in which running it is correct). The default.
+    #[default]
+    Warn,
+    /// No analysis, no pre-flight: the runtime fail-closed paths
+    /// (device-level OOB faults, `OrderedAtomic`) remain as defense in
+    /// depth.
+    Off,
+}
+
+/// Parse an `HETGPU_ANALYZE` value. Malformed input returns the default
+/// plus the warning to print — the `HETGPU_SIM_THREADS` contract.
+pub fn parse_analysis_level(raw: &str) -> (AnalysisLevel, Option<String>) {
+    match raw.trim().to_ascii_lowercase().as_str() {
+        "strict" => (AnalysisLevel::Strict, None),
+        "warn" => (AnalysisLevel::Warn, None),
+        "off" => (AnalysisLevel::Off, None),
+        _ => (
+            AnalysisLevel::Warn,
+            Some(format!(
+                "hetgpu: HETGPU_ANALYZE={raw:?} is not one of strict|warn|off; \
+                 falling back to warn"
+            )),
+        ),
+    }
+}
+
+impl AnalysisLevel {
+    /// Level from `HETGPU_ANALYZE`, warning once on malformed input.
+    pub fn from_env() -> AnalysisLevel {
+        match std::env::var("HETGPU_ANALYZE") {
+            Ok(raw) => {
+                let (level, warning) = parse_analysis_level(&raw);
+                if let Some(msg) = warning {
+                    warn_once(&msg);
+                }
+                level
+            }
+            Err(_) => AnalysisLevel::Warn,
+        }
+    }
+}
+
+/// Print a warning to stderr at most once per distinct message for the
+/// process lifetime — shared by every parse-warn-default env knob.
+pub(crate) fn warn_once(msg: &str) {
+    use std::collections::HashSet;
+    use std::sync::{Mutex, OnceLock};
+    static SEEN: OnceLock<Mutex<HashSet<String>>> = OnceLock::new();
+    let seen = SEEN.get_or_init(|| Mutex::new(HashSet::new()));
+    if seen.lock().unwrap().insert(msg.to_string()) {
+        eprintln!("{msg}");
+    }
+}
+
+/// Shared handle type for the cached report.
+pub type SharedReport = Arc<AnalysisReport>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stmt_path_renders_like_the_issue_example() {
+        let p = StmtPath(vec![(SegKind::Body, 3), (SegKind::Then, 1)]);
+        assert_eq!(p.to_string(), "body[3].then[1]");
+        assert_eq!(StmtPath::default().to_string(), "<kernel>");
+    }
+
+    #[test]
+    fn analysis_level_parses_with_warn_fallback() {
+        assert_eq!(parse_analysis_level("strict"), (AnalysisLevel::Strict, None));
+        assert_eq!(parse_analysis_level(" WARN "), (AnalysisLevel::Warn, None));
+        assert_eq!(parse_analysis_level("off"), (AnalysisLevel::Off, None));
+        let (level, warning) = parse_analysis_level("paranoid");
+        assert_eq!(level, AnalysisLevel::Warn);
+        let msg = warning.expect("malformed value must warn");
+        assert!(msg.contains("HETGPU_ANALYZE"), "warning must name the variable: {msg}");
+        assert!(msg.contains("paranoid"));
+    }
+}

@@ -1,0 +1,350 @@
+//! Shared-memory race detection over barrier intervals (DESIGN.md §12).
+//!
+//! Two accesses can race iff (a) they live in the same barrier interval —
+//! same canonical label, or labels joined by a loop backedge — and (b)
+//! their byte ranges can overlap for **two distinct threads** of one
+//! block. Overlap is decided on the affine offset forms: each access is
+//! instantiated for one of two thread instances (renaming `tid.*` and
+//! per-thread loop variables apart, sharing uniform symbols), and the
+//! difference of the two offsets is bounded under both instances' path
+//! guards. A proof that the ranges cannot meet ⇒ clean; anything short of
+//! a proof ⇒ a `Warning` diagnostic (races are report-only, never a
+//! launch gate — see `AnalysisLevel`).
+
+use super::affine::{le_forms, lower_bound, upper_bound, Affine, Guard, Itv, Sym, POS_INF};
+use super::{Access, AccessKind, Diagnostic, KernelReport, Prov, Severity};
+use crate::hetir::types::AddrSpace;
+use std::collections::{BTreeMap, HashSet};
+
+/// Guard-substitution depth for race queries: pair queries combine two
+/// guard sets, so allow a little more elimination than the default.
+const DEPTH: u32 = 4;
+
+/// A symbol instantiated for a two-thread race query: either shared
+/// between both thread instances (uniform values, launch geometry,
+/// params) or private to instance 0/1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+enum RSym {
+    Sh(Sym),
+    Inst(u8, Sym),
+}
+
+impl RSym {
+    fn base(self) -> Sym {
+        match self {
+            RSym::Sh(s) | RSym::Inst(_, s) => s,
+        }
+    }
+}
+
+/// Which per-thread symbols get renamed apart for a query.
+#[derive(Clone, Copy)]
+enum Renaming<'a> {
+    /// Same barrier interval, same loop iteration: `tid` and *varying*
+    /// loop variables differ between the instances; uniform loop
+    /// variables are lockstep-shared.
+    SameInterval,
+    /// Tail-of-iteration vs. head-of-next-iteration of loop `l`: loop
+    /// variables minted by `l` or any nested loop also differ between the
+    /// instances even when uniform (they belong to different iterations).
+    Backedge { l: u32, kr: &'a KernelReport },
+}
+
+impl<'a> Renaming<'a> {
+    fn apply(&self, kr: &KernelReport, inst: u8, s: Sym) -> RSym {
+        let renamed = match s {
+            Sym::Tid(_) => true,
+            Sym::Opaque(q) => {
+                let info = &kr.opaques[q as usize];
+                !info.uniform
+                    || match self {
+                        Renaming::SameInterval => false,
+                        Renaming::Backedge { l, kr } => loop_within(kr, info.loop_id, *l),
+                    }
+            }
+            _ => false,
+        };
+        if renamed {
+            RSym::Inst(inst, s)
+        } else {
+            RSym::Sh(s)
+        }
+    }
+}
+
+/// True if `inner` is `outer` or nested (transitively) inside it.
+fn loop_within(kr: &KernelReport, inner: u32, outer: u32) -> bool {
+    let mut cur = Some(inner);
+    while let Some(l) = cur {
+        if l == outer {
+            return true;
+        }
+        cur = kr.loop_parent.get(l as usize).copied().flatten();
+    }
+    false
+}
+
+fn conflicting(a: AccessKind, b: AccessKind) -> bool {
+    // Read/read never conflicts; atomic/atomic serializes by definition.
+    !matches!(
+        (a, b),
+        (AccessKind::Read, AccessKind::Read) | (AccessKind::Atomic, AccessKind::Atomic)
+    )
+}
+
+/// Run race detection over a kernel's recorded accesses, appending
+/// `Warning` diagnostics for every pair that cannot be proven disjoint.
+pub(crate) fn check(kr: &mut KernelReport) {
+    let shared: Vec<usize> = (0..kr.accesses.len())
+        .filter(|&i| kr.accesses[i].space == AddrSpace::Shared)
+        .collect();
+    if shared.is_empty() {
+        return;
+    }
+    let mut reported: HashSet<(String, String)> = HashSet::new();
+    let mut diags: Vec<Diagnostic> = Vec::new();
+
+    for (pi, &i) in shared.iter().enumerate() {
+        for &j in &shared[pi..] {
+            let a = &kr.accesses[i];
+            let b = &kr.accesses[j];
+            if !conflicting(a.kind, b.kind) {
+                continue;
+            }
+            let mut racy = false;
+            if a.label == b.label && may_race(kr, a, b, Renaming::SameInterval) {
+                racy = true;
+            }
+            if !racy {
+                for &(t, h, l) in &kr.backedges {
+                    let pair = if a.label == t && b.label == h {
+                        Some((a, b))
+                    } else if b.label == t && a.label == h {
+                        Some((b, a))
+                    } else {
+                        None
+                    };
+                    if let Some((tail, head)) = pair {
+                        if may_race(kr, tail, head, Renaming::Backedge { l, kr }) {
+                            racy = true;
+                            break;
+                        }
+                    }
+                }
+            }
+            if racy {
+                let (pa, pb) = (a.path.to_string(), b.path.to_string());
+                let key = if pa <= pb { (pa, pb) } else { (pb, pa) };
+                if reported.insert(key) {
+                    diags.push(race_diag(kr, a, b));
+                }
+            }
+        }
+    }
+    kr.diags.extend(diags);
+}
+
+fn race_diag(kr: &KernelReport, a: &Access, b: &Access) -> Diagnostic {
+    let message = if a.path == b.path {
+        format!(
+            "possible shared-memory race: {} of `{}` can touch the same \
+             bytes from two threads in one barrier interval",
+            a.kind.verb(),
+            a.off
+        )
+    } else {
+        format!(
+            "possible shared-memory race: {} of `{}` and {} of `{}` (at {}) \
+             can overlap in one barrier interval",
+            a.kind.verb(),
+            a.off,
+            b.kind.verb(),
+            b.off,
+            b.path
+        )
+    };
+    Diagnostic {
+        severity: Severity::Warning,
+        kernel: kr.name.clone(),
+        path: a.path.clone(),
+        analysis: "race",
+        message,
+    }
+}
+
+/// Can accesses `a` (instance 0) and `b` (instance 1) overlap for two
+/// distinct threads? `true` = could not prove disjoint.
+fn may_race(kr: &KernelReport, a: &Access, b: &Access, ren: Renaming) -> bool {
+    if a.prov == Prov::Unknown || b.prov == Prov::Unknown {
+        return true; // untraceable base: overlaps everything in its space
+    }
+
+    let fa = a.off.map_syms(|s| ren.apply(kr, 0, s));
+    let fb = b.off.map_syms(|s| ren.apply(kr, 1, s));
+    let d = fb.sub(&fa);
+    let (wa, wb) = (a.width as i128, b.width as i128);
+
+    // Fast path for exact tid-strided forms: difference reduces to
+    // `k + Σ c_d·(tidB_d − tidA_d)` with the dims covering every tid
+    // dimension the kernel reads, so thread distinctness directly bounds
+    // |difference| away from zero.
+    if a.slop == Itv::ZERO && b.slop == Itv::ZERO && digit_disjoint(kr, &d, wa.max(wb)) {
+        return false;
+    }
+
+    let mut guards: Vec<Guard<RSym>> = Vec::new();
+    guards.extend(a.guards.iter().map(|g| g.map_syms(|s| ren.apply(kr, 0, s))));
+    guards.extend(b.guards.iter().map(|g| g.map_syms(|s| ren.apply(kr, 1, s))));
+    let les = le_forms(&guards);
+
+    // Guard-driven separation (e.g. `tidA < s` vs. a read of `tid + s`).
+    if disjoint(&d, &les, kr, &[], a.slop, b.slop, wa, wb) {
+        return false;
+    }
+
+    // Case split when one instance's tid is pinned by an equality guard
+    // (`if (tid == 0) ...`): the *other* thread is then confined to one
+    // side of the pin. Only valid when the kernel reads a single tid
+    // dimension, so "distinct threads" means exactly "this coordinate
+    // differs".
+    let used: Vec<usize> = (0..3).filter(|&d| kr.tid_dims[d]).collect();
+    if let [dim] = used[..] {
+        let dim = dim as u8;
+        let pin_a = pinned(&guards, 0, dim);
+        let pin_b = pinned(&guards, 1, dim);
+        match (pin_a, pin_b) {
+            (Some(pa), Some(pb)) => {
+                if pa == pb {
+                    return false; // both instances forced to one thread
+                }
+                let over = [
+                    (RSym::Inst(0, Sym::Tid(dim)), Itv::point(pa)),
+                    (RSym::Inst(1, Sym::Tid(dim)), Itv::point(pb)),
+                ];
+                return !disjoint(&d, &les, kr, &over, a.slop, b.slop, wa, wb);
+            }
+            (Some(p), None) | (None, Some(p)) => {
+                let pinned_inst = if pin_a.is_some() { 0 } else { 1 };
+                let free = RSym::Inst(1 - pinned_inst, Sym::Tid(dim));
+                let mut all_clear = true;
+                for side in [Itv::range(0, p - 1), Itv::range(p + 1, POS_INF)] {
+                    if side.is_empty() {
+                        continue;
+                    }
+                    let over = [
+                        (RSym::Inst(pinned_inst, Sym::Tid(dim)), Itv::point(p)),
+                        (free, side),
+                    ];
+                    if !disjoint(&d, &les, kr, &over, a.slop, b.slop, wa, wb) {
+                        all_clear = false;
+                        break;
+                    }
+                }
+                return !all_clear;
+            }
+            (None, None) => {}
+        }
+    }
+
+    true
+}
+
+/// The two byte ranges `[A+slopA.lo, A+slopA.hi+wa)` / `[B+slopB.lo,
+/// B+slopB.hi+wb)` are provably disjoint under the guards.
+#[allow(clippy::too_many_arguments)]
+fn disjoint(
+    d: &Affine<RSym>,
+    les: &[Affine<RSym>],
+    kr: &KernelReport,
+    over: &[(RSym, Itv)],
+    sa: Itv,
+    sb: Itv,
+    wa: i128,
+    wb: i128,
+) -> bool {
+    let bounds = |rs: RSym| {
+        if let Some(&(_, itv)) = over.iter().find(|(s, _)| *s == rs) {
+            return itv;
+        }
+        load_sym_itv(kr, rs.base())
+    };
+    // b starts at or after a ends:
+    if lower_bound(d, les, &bounds, DEPTH) >= sa.hi.saturating_add(wa).saturating_sub(sb.lo) {
+        return true;
+    }
+    // a starts at or after b ends:
+    upper_bound(d, les, &bounds, DEPTH) <= sa.lo.saturating_sub(sb.hi).saturating_sub(wb)
+}
+
+fn load_sym_itv(kr: &KernelReport, s: Sym) -> Itv {
+    match s {
+        Sym::Tid(_) | Sym::Ctaid(_) | Sym::CtaidNtid(_) => Itv::range(0, POS_INF),
+        Sym::Ntid(_) | Sym::Nctaid(_) => Itv::range(1, POS_INF),
+        Sym::Param(i) => kr.param_itv.get(i as usize).copied().unwrap_or(Itv::TOP),
+        Sym::Opaque(q) => kr.opaques.get(q as usize).map(|o| o.itv).unwrap_or(Itv::TOP),
+    }
+}
+
+/// Find a constant `p` with `tid(dim) = p` forced by instance `inst`'s
+/// equality guards.
+fn pinned(guards: &[Guard<RSym>], inst: u8, dim: u8) -> Option<i128> {
+    for g in guards {
+        if let Guard::Eq(e) = g {
+            if e.terms.len() == 1 {
+                let (&s, &c) = e.terms.iter().next().unwrap();
+                if s == RSym::Inst(inst, Sym::Tid(dim)) && c != 0 && e.k % c == 0 {
+                    return Some(-e.k / c);
+                }
+            }
+        }
+    }
+    None
+}
+
+/// Exact strided-form disjointness from thread distinctness alone.
+///
+/// Succeeds when `d = k + Σ_dim c·(tidB − tidA)` over tid symbols only,
+/// the paired dims cover every tid dimension the kernel reads (distinct
+/// threads ⇒ some covered coordinate differs), and the minimum possible
+/// `|d|` over a nonzero coordinate delta is at least the access width.
+/// Multi-dim forms additionally require `k = 0` and rest on the usual
+/// mixed-radix thread layout (DESIGN.md §12 records the assumption).
+fn digit_disjoint(kr: &KernelReport, d: &Affine<RSym>, w: i128) -> bool {
+    let mut per_dim: BTreeMap<u8, (i128, i128)> = BTreeMap::new();
+    for (&s, &c) in &d.terms {
+        match s {
+            RSym::Inst(0, Sym::Tid(dim)) => per_dim.entry(dim).or_insert((0, 0)).0 = c,
+            RSym::Inst(1, Sym::Tid(dim)) => per_dim.entry(dim).or_insert((0, 0)).1 = c,
+            _ => return false,
+        }
+    }
+    let mut coeffs: Vec<(u8, i128)> = Vec::new();
+    for (dim, (c0, c1)) in per_dim {
+        if c1 != -c0 || c1 == 0 {
+            return false;
+        }
+        coeffs.push((dim, c1));
+    }
+    for dim in 0..3u8 {
+        if kr.tid_dims[dim as usize] && !coeffs.iter().any(|&(d2, _)| d2 == dim) {
+            return false;
+        }
+    }
+    match coeffs[..] {
+        [] => false,
+        [(_, c)] => {
+            // min |c·Δ + k| over nonzero integers Δ; |c·Δ + k| is V-shaped
+            // in Δ, so the minimum sits at an integer adjacent to the
+            // vertex -k/c (or at ±1 when the vertex rounds to zero).
+            let k = d.k;
+            let q = (-k).div_euclid(c);
+            [q - 1, q, q + 1, -1, 1]
+                .into_iter()
+                .filter(|&dl| dl != 0)
+                .map(|dl| (c.saturating_mul(dl).saturating_add(k)).abs())
+                .min()
+                .is_some_and(|m| m >= w)
+        }
+        _ => d.k == 0 && coeffs.iter().all(|&(_, c)| c.abs() >= w),
+    }
+}

@@ -7,6 +7,7 @@
 //! pass, and the target-agnostic optimization + migration-metadata
 //! [`passes`].
 
+pub mod analyze;
 pub mod builder;
 pub mod instr;
 pub mod module;

@@ -13,6 +13,7 @@
 //!   analysis — the cross-platform UB the paper's design must avoid);
 //! * barrier ids are dense and match `num_barriers` (segmenter ran).
 
+use super::analyze::{SegKind, StmtPath};
 use super::instr::*;
 use super::module::{Kernel, Module, Stmt};
 use super::passes::uniformity;
@@ -23,11 +24,19 @@ struct V<'k> {
     k: &'k Kernel,
     loop_depth: usize,
     barrier_ids: Vec<u32>,
+    /// Statement path of the statement currently being checked, rendered
+    /// into every error — the same location language the static
+    /// analyzer's diagnostics use.
+    path: Vec<(SegKind, u32)>,
 }
 
 impl<'k> V<'k> {
     fn err(&self, msg: impl Into<String>) -> HetError {
-        HetError::Verify { func: self.k.name.clone(), msg: msg.into() }
+        HetError::Verify {
+            func: self.k.name.clone(),
+            stmt: StmtPath(self.path.clone()).to_string(),
+            msg: msg.into(),
+        }
     }
 
     fn reg_ty(&self, r: Reg) -> Result<Type> {
@@ -198,24 +207,25 @@ impl<'k> V<'k> {
         Ok(())
     }
 
-    fn check_block(&mut self, stmts: &[Stmt]) -> Result<()> {
-        for s in stmts {
+    fn check_block(&mut self, stmts: &[Stmt], seg: SegKind) -> Result<()> {
+        for (idx, s) in stmts.iter().enumerate() {
+            self.path.push((seg, idx as u32));
             match s {
                 Stmt::I(i) => self.check_inst(i)?,
                 Stmt::If { cond, then_b, else_b } => {
                     if self.reg_ty(*cond)? != Type::PRED {
                         return Err(self.err(format!("if condition {cond} must be pred")));
                     }
-                    self.check_block(then_b)?;
-                    self.check_block(else_b)?;
+                    self.check_block(then_b, SegKind::Then)?;
+                    self.check_block(else_b, SegKind::Else)?;
                 }
                 Stmt::While { cond, cond_reg, body } => {
                     if self.reg_ty(*cond_reg)? != Type::PRED {
                         return Err(self.err(format!("loop condition {cond_reg} must be pred")));
                     }
-                    self.check_block(cond)?;
+                    self.check_block(cond, SegKind::Cond)?;
                     self.loop_depth += 1;
-                    self.check_block(body)?;
+                    self.check_block(body, SegKind::Body)?;
                     self.loop_depth -= 1;
                 }
                 Stmt::Break | Stmt::Continue => {
@@ -225,6 +235,7 @@ impl<'k> V<'k> {
                 }
                 Stmt::Return => {}
             }
+            self.path.pop();
         }
         Ok(())
     }
@@ -236,6 +247,7 @@ pub fn verify_kernel(k: &Kernel) -> Result<()> {
     if k.params.len() > k.reg_types.len() {
         return Err(HetError::Verify {
             func: k.name.clone(),
+            stmt: StmtPath::default().to_string(),
             msg: "fewer registers than parameters".into(),
         });
     }
@@ -243,13 +255,14 @@ pub fn verify_kernel(k: &Kernel) -> Result<()> {
         if k.reg_types[i] != p.ty {
             return Err(HetError::Verify {
                 func: k.name.clone(),
+                stmt: StmtPath::default().to_string(),
                 msg: format!("param {} type mismatch: reg says {}, param says {}",
                     p.name, k.reg_types[i], p.ty),
             });
         }
     }
-    let mut v = V { k, loop_depth: 0, barrier_ids: Vec::new() };
-    v.check_block(&k.body)?;
+    let mut v = V { k, loop_depth: 0, barrier_ids: Vec::new(), path: Vec::new() };
+    v.check_block(&k.body, SegKind::Body)?;
     // Barrier ids dense 0..num_barriers.
     let mut ids = v.barrier_ids.clone();
     ids.sort_unstable();
@@ -257,6 +270,7 @@ pub fn verify_kernel(k: &Kernel) -> Result<()> {
     if ids != expect {
         return Err(HetError::Verify {
             func: k.name.clone(),
+            stmt: StmtPath::default().to_string(),
             msg: format!(
                 "barrier ids {ids:?} are not dense 0..{} — run the segmenter",
                 k.num_barriers
@@ -267,6 +281,7 @@ pub fn verify_kernel(k: &Kernel) -> Result<()> {
     if let Some(id) = uniformity::barrier_under_divergence(k) {
         return Err(HetError::Verify {
             func: k.name.clone(),
+            stmt: StmtPath::default().to_string(),
             msg: format!("barrier {id} under divergent control flow"),
         });
     }
@@ -307,6 +322,9 @@ mod tests {
         b.st(AddrSpace::Global, Scalar::F32, Address::indexed(a, i, 4), i.into());
         let e = verify_kernel(&b.finish()).unwrap_err();
         assert!(e.to_string().contains("ST val"));
+        // Errors carry the statement path in the analyzer's location
+        // language: the store is the second body statement.
+        assert!(e.to_string().contains("at body[1]"), "missing stmt path: {e}");
     }
 
     #[test]

@@ -42,6 +42,8 @@ use crate::delta::journal::AtomicJournal;
 use crate::delta::tracker::DirtyStats;
 use crate::error::{HetError, Result};
 use crate::frontend;
+use crate::hetir::analyze::{self, Severity};
+pub use crate::hetir::analyze::{AnalysisLevel, AnalysisReport};
 use crate::hetir::{self, module::Module};
 use crate::isa::tensix_isa::TensixMode;
 use crate::migrate::state::{MigrationReport, Snapshot};
@@ -91,6 +93,12 @@ pub struct HetGpu {
     pub(crate) coord: Mutex<CoordCache>,
     /// Cross-shard atomics-journal counters ([`HetGpu::journal_stats`]).
     pub(crate) journal_counters: JournalCounters,
+    /// Context-default analysis gating level, resolved from
+    /// `HETGPU_ANALYZE` at creation; `LaunchBuilder::analysis` overrides
+    /// it per launch.
+    pub(crate) analysis_default: AnalysisLevel,
+    /// Static-analyzer counters ([`HetGpu::analysis_stats`]).
+    pub(crate) analysis_counters: AnalysisCounters,
 }
 
 /// Context-lifetime counters of the cross-shard atomics protocol,
@@ -101,6 +109,42 @@ pub(crate) struct JournalCounters {
     pub(crate) journaled_launches: AtomicU64,
     pub(crate) ops_replayed: AtomicU64,
     pub(crate) entries_shipped: AtomicU64,
+}
+
+/// Context-lifetime counters of the static analyzer (DESIGN.md §12):
+/// analysis work at module load, launch pre-flights, and static launch
+/// rejections.
+#[derive(Default)]
+pub(crate) struct AnalysisCounters {
+    pub(crate) kernels_analyzed: AtomicU64,
+    pub(crate) diags_info: AtomicU64,
+    pub(crate) diags_warning: AtomicU64,
+    pub(crate) diags_error: AtomicU64,
+    pub(crate) preflight_checks: AtomicU64,
+    pub(crate) preflight_rejections: AtomicU64,
+    pub(crate) analysis_nanos: AtomicU64,
+}
+
+/// Snapshot of the context's static-analyzer counters
+/// ([`HetGpu::analysis_stats`]) — the `graph_stats`-style observability
+/// hook of the analysis plane.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct AnalysisStats {
+    /// Kernels the analyzer has processed. Analysis runs once per
+    /// `(module, kernel)` — cached reports do not recount, so this stays
+    /// flat across repeat launches.
+    pub kernels_analyzed: u64,
+    /// Diagnostics produced, by severity.
+    pub diags_info: u64,
+    pub diags_warning: u64,
+    pub diags_error: u64,
+    /// Launch pre-flights performed (launches at `Strict` or `Warn`).
+    pub preflight_checks: u64,
+    /// Launches rejected statically (`HetError::StaticFault`) before any
+    /// block executed.
+    pub preflight_rejections: u64,
+    /// Total wall time spent inside the analyzer, in nanoseconds.
+    pub analysis_nanos: u64,
 }
 
 /// Snapshot of the context's cross-shard atomics-journal counters — the
@@ -193,6 +237,8 @@ impl HetGpu {
             jit_compiler,
             coord: Mutex::new(CoordCache::default()),
             journal_counters: JournalCounters::default(),
+            analysis_default: AnalysisLevel::from_env(),
+            analysis_counters: AnalysisCounters::default(),
         })
     }
 
@@ -245,10 +291,164 @@ impl HetGpu {
         self.load_module(module)
     }
 
-    /// Load an in-memory hetIR module (verifies every kernel first).
+    /// Load an in-memory hetIR module (verifies every kernel first, then
+    /// runs the static analyzer — unless the context default is
+    /// [`AnalysisLevel::Off`], in which case analysis happens lazily on
+    /// the first launch that asks for it). The report is cached beside
+    /// the module, so analysis runs once per `(module, kernel)` no matter
+    /// how many launches follow.
     pub fn load_module(&self, module: Module) -> Result<ModuleHandle> {
         hetir::verify::verify_module(&module)?;
-        Ok(self.inner.modules.write().unwrap().insert(module))
+        let report = if self.analysis_default != AnalysisLevel::Off {
+            Some(Arc::new(self.run_analysis(&module)))
+        } else {
+            None
+        };
+        let mut modules = self.inner.modules.write().unwrap();
+        let h = modules.insert(module);
+        if let Some(r) = report {
+            // The handle was minted under this same write lock, so the
+            // cache write cannot miss.
+            let _ = modules.set_analysis(h, r);
+        }
+        Ok(h)
+    }
+
+    /// The static-analysis report for a loaded module, computing and
+    /// caching it on first use (module load already computed it unless
+    /// the context default is `Off`). Repeated calls return the same
+    /// `Arc` — analysis never reruns for a loaded module.
+    pub fn analysis_report(&self, module: ModuleHandle) -> Result<Arc<AnalysisReport>> {
+        if let Some(r) = self.inner.modules.read().unwrap().analysis(module)? {
+            return Ok(r);
+        }
+        let report = {
+            let modules = self.inner.modules.read().unwrap();
+            let (m, _uid) = modules.get(module)?;
+            Arc::new(self.run_analysis(m))
+        };
+        let mut modules = self.inner.modules.write().unwrap();
+        if let Some(r) = modules.analysis(module)? {
+            return Ok(r); // a racing caller computed and cached it first
+        }
+        modules.set_analysis(module, Arc::clone(&report))?;
+        Ok(report)
+    }
+
+    /// Run the analyzer over a module: bump the context counters and
+    /// print `Warning`-and-above diagnostics to stderr (the `Warn`-mode
+    /// contract; `Strict` additionally gates launches in `preflight`).
+    fn run_analysis(&self, module: &Module) -> AnalysisReport {
+        let report = analyze::analyze_module(module);
+        let (info, warn, err) = report.diag_counts();
+        let c = &self.analysis_counters;
+        c.kernels_analyzed.fetch_add(report.kernels.len() as u64, Ordering::Relaxed);
+        c.diags_info.fetch_add(info, Ordering::Relaxed);
+        c.diags_warning.fetch_add(warn, Ordering::Relaxed);
+        c.diags_error.fetch_add(err, Ordering::Relaxed);
+        c.analysis_nanos.fetch_add(report.total_nanos(), Ordering::Relaxed);
+        for kr in &report.kernels {
+            for d in &kr.diags {
+                if d.severity >= Severity::Warning {
+                    eprintln!("{d}");
+                }
+            }
+        }
+        report
+    }
+
+    /// Launch pre-flight (DESIGN.md §12): gate `spec` against the cached
+    /// analysis report at `level`, before anything is recorded into the
+    /// event graph. `Strict` rejects kernels carrying any load-time
+    /// `Warning`-or-above diagnostic; at **both** `Strict` and `Warn` the
+    /// recorded access forms are instantiated against the concrete
+    /// dims/args and a *provable* out-of-bounds access fails the launch —
+    /// there is no configuration in which running it is correct.
+    pub(crate) fn preflight(&self, spec: &LaunchSpec, level: AnalysisLevel) -> Result<()> {
+        if level == AnalysisLevel::Off {
+            return Ok(());
+        }
+        self.analysis_counters.preflight_checks.fetch_add(1, Ordering::Relaxed);
+        let report = self.analysis_report(spec.module)?;
+        let Some(kr) = report.kernel(&spec.kernel) else {
+            return Ok(()); // unknown kernels fail with their own error downstream
+        };
+        if level == AnalysisLevel::Strict {
+            if let Some(d) = kr.diags.iter().find(|d| d.severity >= Severity::Warning) {
+                self.analysis_counters.preflight_rejections.fetch_add(1, Ordering::Relaxed);
+                return Err(HetError::static_fault(
+                    &kr.name,
+                    d.path.to_string(),
+                    d.to_string(),
+                ));
+            }
+        }
+        let (param_vals, param_avail) = self.resolve_preflight_args(spec);
+        let res = {
+            let modules = self.inner.modules.read().unwrap();
+            let (m, _uid) = modules.get(spec.module)?;
+            match m.kernel(&spec.kernel) {
+                Some(k) => analyze::preflight_launch(
+                    kr,
+                    k,
+                    spec.dims.grid,
+                    spec.dims.block,
+                    &param_vals,
+                    &param_avail,
+                ),
+                None => Ok(()),
+            }
+        };
+        if res.is_err() {
+            self.analysis_counters.preflight_rejections.fetch_add(1, Ordering::Relaxed);
+        }
+        res
+    }
+
+    /// Resolve launch args for bounds instantiation: scalar args become
+    /// concrete values; pointer args resolve to the byte count available
+    /// from the pointer to the end of its allocation (`None` when the
+    /// pointer does not land in a live allocation — pre-flight then skips
+    /// accesses through it and leaves them to the device fault path).
+    fn resolve_preflight_args(&self, spec: &LaunchSpec) -> (Vec<Option<i128>>, Vec<Option<i128>>) {
+        let mut vals = Vec::with_capacity(spec.args.len());
+        let mut avail = Vec::with_capacity(spec.args.len());
+        for a in &spec.args {
+            let (v, n) = match a {
+                Arg::Ptr(p) => (
+                    None,
+                    self.inner.memory.lookup(*p).ok().and_then(|(base, size, _dev)| {
+                        let off = p.0.checked_sub(base)?;
+                        size.checked_sub(off).map(|left| left as i128)
+                    }),
+                ),
+                Arg::U32(v) => (Some(*v as i128), None),
+                Arg::I32(v) => (Some(*v as i128), None),
+                Arg::U64(v) => (Some(*v as i128), None),
+                Arg::I64(v) => (Some(*v as i128), None),
+                Arg::F32(_) => (None, None),
+                Arg::Pred(v) => (Some(*v as i128), None),
+            };
+            vals.push(v);
+            avail.push(n);
+        }
+        (vals, avail)
+    }
+
+    /// Context-lifetime static-analyzer counters: kernels analyzed,
+    /// diagnostics by severity, launch pre-flights, and static launch
+    /// rejections (see [`AnalysisStats`]).
+    pub fn analysis_stats(&self) -> AnalysisStats {
+        let c = &self.analysis_counters;
+        AnalysisStats {
+            kernels_analyzed: c.kernels_analyzed.load(Ordering::Relaxed),
+            diags_info: c.diags_info.load(Ordering::Relaxed),
+            diags_warning: c.diags_warning.load(Ordering::Relaxed),
+            diags_error: c.diags_error.load(Ordering::Relaxed),
+            preflight_checks: c.preflight_checks.load(Ordering::Relaxed),
+            preflight_rejections: c.preflight_rejections.load(Ordering::Relaxed),
+            analysis_nanos: c.analysis_nanos.load(Ordering::Relaxed),
+        }
     }
 
     /// Unload a module: frees its IR, evicts its cached translations, and
@@ -427,6 +627,7 @@ impl HetGpu {
             working_set: None,
             atomics: AtomicsMode::default(),
             fault_policy: FaultPolicy::default(),
+            analysis: None,
         }
     }
 
@@ -901,6 +1102,7 @@ pub struct LaunchBuilder<'a> {
     working_set: Option<Vec<GpuPtr>>,
     atomics: AtomicsMode,
     fault_policy: FaultPolicy,
+    analysis: Option<AnalysisLevel>,
 }
 
 impl<'a> LaunchBuilder<'a> {
@@ -965,13 +1167,33 @@ impl<'a> LaunchBuilder<'a> {
         self
     }
 
+    /// How much the static analyzer gates **this** launch (see
+    /// [`AnalysisLevel`]): `Strict` refuses kernels carrying any
+    /// load-time `Warning`-or-above diagnostic, `Warn` (the context
+    /// default unless `HETGPU_ANALYZE` says otherwise) still refuses a
+    /// *provably* out-of-bounds access at the requested dims/args, `Off`
+    /// skips pre-flight entirely. The builder setting wins over the
+    /// environment default.
+    pub fn analysis(mut self, level: AnalysisLevel) -> Self {
+        self.analysis = Some(level);
+        self
+    }
+
     #[allow(clippy::type_complexity)]
     fn build_spec(
         self,
-    ) -> Result<(&'a HetGpu, LaunchSpec, Option<Vec<GpuPtr>>, AtomicsMode, FaultPolicy)> {
+    ) -> Result<(
+        &'a HetGpu,
+        LaunchSpec,
+        Option<Vec<GpuPtr>>,
+        AtomicsMode,
+        FaultPolicy,
+        AnalysisLevel,
+    )> {
         let dims = self
             .dims
             .ok_or_else(|| HetError::runtime("launch dims not set (LaunchBuilder::dims)"))?;
+        let level = self.analysis.unwrap_or(self.ctx.analysis_default);
         let spec = LaunchSpec {
             module: self.module,
             kernel: self.kernel,
@@ -979,23 +1201,29 @@ impl<'a> LaunchBuilder<'a> {
             args: self.args,
             tensix_mode_hint: self.tensix_mode,
         };
-        Ok((self.ctx, spec, self.working_set, self.atomics, self.fault_policy))
+        Ok((self.ctx, spec, self.working_set, self.atomics, self.fault_policy, level))
     }
 
     /// Record the launch on `stream`; returns the launch's event
     /// (queryable via [`HetGpu::event_query`], waitable from other
-    /// streams via [`HetGpu::wait_event`]).
+    /// streams via [`HetGpu::wait_event`]). Pre-flights the launch
+    /// against the cached analysis report first: a statically-rejected
+    /// launch fails here, before anything enters the event graph.
     pub fn record(self, stream: StreamHandle) -> Result<EventId> {
-        let (ctx, spec, _ws, _atomics, _policy) = self.build_spec()?;
+        let (ctx, spec, _ws, _atomics, _policy, level) = self.build_spec()?;
+        ctx.preflight(&spec, level)?;
         ctx.record_launch(stream, spec, None, &[], None)
     }
 
     /// Split the launch's grid over `devices` through the coordinator
     /// (shards start executing immediately); join with
     /// [`ShardedLaunch::wait`]. Consumes the working-set hint, the
-    /// atomics mode, and the fault policy.
+    /// atomics mode, the fault policy, and the analysis level (the
+    /// coordinator additionally rejects ordered-atomic kernels up front —
+    /// their cross-shard journal replay cannot compose).
     pub fn sharded(self, devices: &[usize]) -> Result<ShardedLaunch<'a>> {
-        let (ctx, spec, ws, atomics, policy) = self.build_spec()?;
-        Coordinator::new(ctx).launch_sharded(spec, ws.as_deref(), devices, atomics, policy)
+        let (ctx, spec, ws, atomics, policy, level) = self.build_spec()?;
+        ctx.preflight(&spec, level)?;
+        Coordinator::new(ctx).launch_sharded(spec, ws.as_deref(), devices, atomics, policy, level)
     }
 }

@@ -102,16 +102,14 @@ impl TierPolicy {
             let (v, warn) = parse_hot_threshold(&raw);
             p.hot_threshold = v;
             if let Some(msg) = warn {
-                static WARNED: std::sync::Once = std::sync::Once::new();
-                WARNED.call_once(|| eprintln!("{msg}"));
+                crate::hetir::analyze::warn_once(&msg);
             }
         }
         if let Ok(raw) = std::env::var("HETGPU_JIT_TIER") {
             let (f, warn) = parse_forced_tier(&raw);
             p.force = f;
             if let Some(msg) = warn {
-                static WARNED: std::sync::Once = std::sync::Once::new();
-                WARNED.call_once(|| eprintln!("{msg}"));
+                crate::hetir::analyze::warn_once(&msg);
             }
         }
         p

@@ -43,10 +43,13 @@ pub struct ModuleHandle {
 
 handle::impl_handle_raw!(ModuleHandle, "module");
 
-/// A loaded module plus the process-unique id the JIT cache keys on.
+/// A loaded module plus the process-unique id the JIT cache keys on and
+/// the cached static-analysis report (`None` until the analyzer has run —
+/// either eagerly at load, or lazily on the first launch that needs it).
 struct LoadedModule {
     module: Module,
     uid: u64,
+    analysis: Option<std::sync::Arc<crate::hetir::analyze::AnalysisReport>>,
 }
 
 /// Generational registry of loaded modules.
@@ -64,8 +67,40 @@ impl ModuleTable {
     pub(crate) fn insert(&mut self, module: Module) -> ModuleHandle {
         let uid = self.next_uid;
         self.next_uid += 1;
-        let (slot, gen) = self.table.insert(LoadedModule { module, uid });
+        let (slot, gen) = self.table.insert(LoadedModule { module, uid, analysis: None });
         ModuleHandle { slot, gen }
+    }
+
+    /// The cached analysis report for a module, if the analyzer has run.
+    pub(crate) fn analysis(
+        &self,
+        h: ModuleHandle,
+    ) -> Result<Option<std::sync::Arc<crate::hetir::analyze::AnalysisReport>>> {
+        self.table
+            .get(h.slot, h.gen)
+            .map(|m| m.analysis.clone())
+            .ok_or_else(|| {
+                HetError::invalid_handle("module", "module was unloaded or never loaded")
+            })
+    }
+
+    /// Cache an analysis report beside the module (idempotent — the
+    /// report for a given module never changes, so last write wins).
+    pub(crate) fn set_analysis(
+        &mut self,
+        h: ModuleHandle,
+        report: std::sync::Arc<crate::hetir::analyze::AnalysisReport>,
+    ) -> Result<()> {
+        match self.table.get_mut(h.slot, h.gen) {
+            Some(m) => {
+                m.analysis = Some(report);
+                Ok(())
+            }
+            None => Err(HetError::invalid_handle(
+                "module",
+                "module was unloaded or never loaded",
+            )),
+        }
     }
 
     /// Resolve a handle → `(module, uid)`; stale handles miss with

@@ -65,6 +65,12 @@ def main(argv):
         # profile increment and must stay unmeasurable. Steady-state
         # tier-1/tier-2 wall clocks are checked intra-artifact below.
         ("tiering", "unarmed_launch_s"),
+        # Static analyzer (BENCH_e4 `analyze`): gate the load-time cost
+        # per kernel — the affine engine runs once per (module, kernel)
+        # and must stay cheap enough to leave on by default. The per-launch
+        # pre-flight gate (Warn vs Off) is printed by the bench but not
+        # trend-gated: at micro-launch scale it sits inside runner jitter.
+        ("analyze", "analyze_us_per_kernel"),
     ]:
         p = prev.get(section, {}).get(key)
         c = curr.get(section, {}).get(key)

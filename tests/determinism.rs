@@ -487,7 +487,7 @@ fn sharded_atomics_histogram_bit_identical_for_every_shard_count() {
 /// `Unsynchronized` opt-out still executes.
 #[test]
 fn ordered_atomics_fail_closed_under_journaled_sharding() {
-    use hetgpu::runtime::api::AtomicsMode;
+    use hetgpu::runtime::api::{AnalysisLevel, AtomicsMode};
     const SWAP_SRC: &str = r#"
 __global__ void swap(unsigned* p) {
     unsigned i = blockIdx.x * blockDim.x + threadIdx.x;
@@ -498,10 +498,13 @@ __global__ void swap(unsigned* p) {
     let m = ctx.compile_cuda(SWAP_SRC).unwrap();
     let buf = ctx.alloc_buffer::<u32>(4, 0).unwrap();
     ctx.upload(&buf, &[0; 4]).unwrap();
+    // Static analysis off: this test pins down the *runtime* fail-closed
+    // path (the static pre-flight check would reject the launch earlier).
     let mut launch = ctx
         .launch(m, "swap")
         .dims(LaunchDims::d1(8, 32))
         .arg(buf.arg())
+        .analysis(AnalysisLevel::Off)
         .sharded(&[0, 1])
         .unwrap();
     let err = launch.wait().unwrap_err();

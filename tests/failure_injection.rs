@@ -1,7 +1,7 @@
 //! Failure injection: the abstraction layer must surface device faults
 //! uniformly (paper §4.3 *Error Handling*) and recover cleanly.
 
-use hetgpu::runtime::api::{FaultPlan, FaultPolicy, HealthState, HetGpu};
+use hetgpu::runtime::api::{AnalysisLevel, FaultPlan, FaultPolicy, HealthState, HetGpu};
 use hetgpu::runtime::device::DeviceKind;
 use hetgpu::runtime::launch::Arg;
 use hetgpu::sim::simt::LaunchDims;
@@ -21,7 +21,14 @@ fn oob_access_faults_uniformly() {
         // Raw pointer surface: kernels take untyped device addresses.
         let buf = ctx.malloc_on(256, 0).unwrap();
         let s = ctx.create_stream(0).unwrap();
-        ctx.launch(m, "oob").dims(LaunchDims::d1(1, 32)).arg(Arg::Ptr(buf)).record(s).unwrap();
+        // Analysis off: this test exercises the *runtime* fault path, which
+        // must hold even when the static pre-flight check is disabled.
+        ctx.launch(m, "oob")
+            .dims(LaunchDims::d1(1, 32))
+            .arg(Arg::Ptr(buf))
+            .analysis(AnalysisLevel::Off)
+            .record(s)
+            .unwrap();
         let err = ctx.synchronize(s).unwrap_err().to_string();
         assert!(
             err.contains("illegal memory access") || err.contains("exceeds capacity"),
@@ -107,7 +114,14 @@ fn fault_is_sticky_but_context_survives() {
         .unwrap();
     let buf = ctx.alloc_buffer::<f32>(64, 0).unwrap();
     let s1 = ctx.create_stream(0).unwrap();
-    ctx.launch(m, "bad").dims(LaunchDims::d1(1, 32)).arg(buf.arg()).record(s1).unwrap();
+    // Analysis off so the provably-bad store reaches the device and
+    // poisons the stream (the sticky-error path under test).
+    ctx.launch(m, "bad")
+        .dims(LaunchDims::d1(1, 32))
+        .arg(buf.arg())
+        .analysis(AnalysisLevel::Off)
+        .record(s1)
+        .unwrap();
     assert!(ctx.synchronize(s1).is_err());
     // Fresh stream still executes correctly.
     let s2 = ctx.create_stream(0).unwrap();

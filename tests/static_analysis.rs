@@ -1,0 +1,292 @@
+//! Golden tests for the hetIR static analyzer (DESIGN.md §12): the
+//! shared-memory race detector, pre-flight bounds linting at `record()`,
+//! uninitialized-read detection, `Strict`/`Warn` gating, the sharded
+//! ordered-atomic rejection, and once-per-module report caching.
+
+use hetgpu::frontend;
+use hetgpu::hetir::analyze::{analyze_kernel, analyze_module, Severity};
+use hetgpu::hetir::builder::KernelBuilder;
+use hetgpu::hetir::instr::*;
+use hetgpu::hetir::types::{AddrSpace, Scalar, Type, Value};
+use hetgpu::runtime::api::{AnalysisLevel, HetGpu};
+use hetgpu::runtime::device::DeviceKind;
+use hetgpu::runtime::launch::Arg;
+use hetgpu::sim::simt::LaunchDims;
+use std::sync::Arc;
+
+/// The classic unsynchronized tree reduction: iterations of the strided
+/// combine are separated by nothing, so thread `t`'s write of `tile[t]`
+/// races with thread `t'`'s read of `tile[t' + s']` from the next
+/// iteration.
+const RACY_SRC: &str = r#"
+__global__ void racy(float* in, float* out) {
+    __shared__ float tile[32];
+    unsigned t = threadIdx.x;
+    tile[t] = in[t];
+    __syncthreads();
+    for (unsigned s = 16u; s > 0u; s >>= 1u) {
+        if (t < s) tile[t] += tile[t + s];
+    }
+    if (t == 0u) out[0] = tile[0];
+}
+"#;
+
+/// Two clean variants the detector must stay silent on: the same
+/// reduction with a barrier closing every iteration (write range `[0, s)`
+/// and read range `[s, 2s)` are guard-separated within one interval), and
+/// a tid-strided kernel whose accesses are pairwise disjoint by the
+/// affine stride alone.
+const SAFE_SRC: &str = r#"
+__global__ void blocksum(float* in, float* out) {
+    __shared__ float tile[32];
+    unsigned t = threadIdx.x;
+    tile[t] = in[t];
+    __syncthreads();
+    for (unsigned s = 16u; s > 0u; s >>= 1u) {
+        if (t < s) tile[t] += tile[t + s];
+        __syncthreads();
+    }
+    if (t == 0u) out[0] = tile[0];
+}
+
+__global__ void strided(float* out) {
+    __shared__ float buf[64];
+    unsigned t = threadIdx.x;
+    buf[2u * t] = 1.0f;
+    buf[2u * t + 1u] = 2.0f;
+    out[t] = buf[2u * t] + buf[2u * t + 1u];
+}
+"#;
+
+#[test]
+fn race_flagged_on_unsynchronized_reduction() {
+    let m = frontend::compile(RACY_SRC, "racy_m").unwrap();
+    let report = analyze_module(&m);
+    let kr = report.kernel("racy").expect("kernel analyzed");
+    let races: Vec<_> = kr.diags.iter().filter(|d| d.analysis == "race").collect();
+    assert!(!races.is_empty(), "unsynchronized reduction must be flagged");
+    for d in &races {
+        assert_eq!(d.severity, Severity::Warning, "{d}");
+        let msg = d.to_string();
+        assert!(msg.contains("racy") && msg.contains("race"), "{msg}");
+        assert!(msg.contains("body["), "diag must name the statement: {msg}");
+    }
+}
+
+#[test]
+fn race_silent_on_barrier_separated_and_affine_disjoint() {
+    let m = frontend::compile(SAFE_SRC, "safe_m").unwrap();
+    let report = analyze_module(&m);
+    for name in ["blocksum", "strided"] {
+        let kr = report.kernel(name).expect("kernel analyzed");
+        assert!(kr.diags.is_empty(), "false positive on `{name}`: {:?}", kr.diags);
+    }
+}
+
+const OOB_SRC: &str = r#"
+__global__ void oob_lin(float* p) {
+    unsigned i = blockIdx.x * blockDim.x + threadIdx.x;
+    p[i] = 1.0f;
+}
+"#;
+
+/// A provably out-of-bounds launch fails at `record()` with a typed
+/// `StaticFault` naming the kernel and statement, before any block runs;
+/// the same kernel at in-bounds dims records and completes on the same
+/// (unpoisoned) stream.
+#[test]
+fn provable_oob_caught_before_launch_in_bounds_passes() {
+    let ctx = HetGpu::with_devices(&[DeviceKind::NvidiaSim]).unwrap();
+    let m = ctx.compile_cuda(OOB_SRC).unwrap();
+    let buf = ctx.alloc_buffer::<f32>(256, 0).unwrap();
+    ctx.upload(&buf, &[0.0; 256]).unwrap();
+    let s = ctx.create_stream(0).unwrap();
+
+    // 4 blocks x 256 threads write 4096 floats into a 256-float buffer.
+    let err = ctx
+        .launch(m, "oob_lin")
+        .dims(LaunchDims::d1(4, 256))
+        .arg(buf.arg())
+        .record(s)
+        .unwrap_err();
+    assert!(err.is_static_fault(), "{err}");
+    let msg = err.to_string();
+    assert!(msg.contains("oob_lin"), "must name the kernel: {msg}");
+    assert!(msg.contains("body["), "must name the statement: {msg}");
+    // Nothing executed: the buffer is untouched.
+    assert!(ctx.download(&buf, 256).unwrap().iter().all(|v| *v == 0.0));
+
+    ctx.launch(m, "oob_lin")
+        .dims(LaunchDims::d1(1, 256))
+        .arg(buf.arg())
+        .record(s)
+        .unwrap();
+    ctx.synchronize(s).unwrap();
+    assert!(ctx.download(&buf, 256).unwrap().iter().all(|v| *v == 1.0));
+
+    let stats = ctx.analysis_stats();
+    assert!(stats.preflight_checks >= 2, "{stats:?}");
+    assert!(stats.preflight_rejections >= 1, "{stats:?}");
+}
+
+/// A register assigned only under a divergent branch and read afterwards
+/// is a (report-only) uninitialized-read warning.
+#[test]
+fn uninit_read_under_divergent_branch_flagged() {
+    let mut b = KernelBuilder::new("halfinit");
+    let out = b.param("out", Type::PTR_GLOBAL);
+    let t = b.special(SpecialReg::ThreadIdx(Dim::X));
+    let v = b.reg(Type::F32);
+    let lo = b.cmp(CmpOp::Lt, Scalar::U32, t.into(), Operand::Imm(Value::u32(16)));
+    b.if_(lo, |bb| {
+        bb.bin_into(
+            v,
+            BinOp::Add,
+            Scalar::F32,
+            Operand::Imm(Value::f32(1.0)),
+            Operand::Imm(Value::f32(2.0)),
+        );
+    });
+    b.st(AddrSpace::Global, Scalar::F32, Address::indexed(out, t, 4), v.into());
+    let k = b.finish();
+    let kr = analyze_kernel(&k);
+    let d = kr
+        .diags
+        .iter()
+        .find(|d| d.analysis == "uninit")
+        .expect("divergently-assigned register read after the branch");
+    assert_eq!(d.severity, Severity::Warning, "{d}");
+    assert!(d.message.contains("read before initialization"), "{}", d.message);
+}
+
+const SWAP_SRC: &str = r#"
+__global__ void swap(unsigned* p) {
+    unsigned i = blockIdx.x * blockDim.x + threadIdx.x;
+    atomicExch(&p[i & 3u], i);
+}
+"#;
+
+/// Sharding a kernel whose global atomics are ordered (exch/cas) is
+/// rejected statically at launch — typed error, zero blocks run. Opting
+/// the analysis off falls back to the runtime fail-closed path.
+#[test]
+fn ordered_atomic_sharded_launch_rejected_statically() {
+    let ctx = HetGpu::with_devices(&[DeviceKind::NvidiaSim, DeviceKind::NvidiaSim]).unwrap();
+    let m = ctx.compile_cuda(SWAP_SRC).unwrap();
+    let buf = ctx.alloc_buffer::<u32>(4, 0).unwrap();
+    ctx.upload(&buf, &[0; 4]).unwrap();
+
+    let err = match ctx
+        .launch(m, "swap")
+        .dims(LaunchDims::d1(8, 32))
+        .arg(buf.arg())
+        .sharded(&[0, 1])
+    {
+        Ok(_) => panic!("ordered-atomic sharded launch must be rejected"),
+        Err(e) => e,
+    };
+    assert!(err.is_static_fault(), "{err}");
+    let msg = err.to_string();
+    assert!(msg.contains("swap") && msg.contains("ordered"), "{msg}");
+    // Zero blocks ran.
+    assert!(ctx.download(&buf, 4).unwrap().iter().all(|v| *v == 0));
+    assert!(ctx.analysis_stats().preflight_rejections >= 1);
+
+    let mut launch = ctx
+        .launch(m, "swap")
+        .dims(LaunchDims::d1(8, 32))
+        .arg(buf.arg())
+        .analysis(AnalysisLevel::Off)
+        .sharded(&[0, 1])
+        .unwrap();
+    let err = launch.wait().unwrap_err();
+    assert!(err.is_ordered_atomic(), "{err}");
+}
+
+/// `Strict` turns any Warning-or-worse diagnostic into a launch gate;
+/// the default (`Warn`) keeps races report-only.
+#[test]
+fn strict_gates_warnings_at_record_warn_reports_only() {
+    let ctx = HetGpu::with_devices(&[DeviceKind::NvidiaSim]).unwrap();
+    let m = ctx.compile_cuda(RACY_SRC).unwrap();
+    let input = ctx.alloc_buffer::<f32>(32, 0).unwrap();
+    let out = ctx.alloc_buffer::<f32>(4, 0).unwrap();
+    ctx.upload(&input, &[1.0; 32]).unwrap();
+    ctx.upload(&out, &[0.0; 4]).unwrap();
+    let s = ctx.create_stream(0).unwrap();
+
+    let err = ctx
+        .launch(m, "racy")
+        .dims(LaunchDims::d1(1, 32))
+        .arg(input.arg())
+        .arg(out.arg())
+        .analysis(AnalysisLevel::Strict)
+        .record(s)
+        .unwrap_err();
+    assert!(err.is_static_fault(), "{err}");
+    assert!(err.to_string().contains("race"), "{err}");
+
+    ctx.launch(m, "racy")
+        .dims(LaunchDims::d1(1, 32))
+        .arg(input.arg())
+        .arg(out.arg())
+        .record(s)
+        .unwrap();
+    ctx.synchronize(s).unwrap();
+}
+
+/// Every suite kernel — including the shared-memory tiled matmul and the
+/// barrier-separated reduction — analyzes clean under `Strict` (nothing
+/// at Warning or above), as do the frontend idiom kernels.
+#[test]
+fn strict_sweep_suite_and_frontend_kernels_clean() {
+    let m = frontend::compile(hetgpu::suite::SUITE_SRC, "suite").unwrap();
+    let report = analyze_module(&m);
+    assert_eq!(report.kernels.len(), 10);
+    for kr in &report.kernels {
+        assert!(
+            kr.worst() < Some(Severity::Warning),
+            "kernel `{}` would fail Strict: {:?}",
+            kr.name,
+            kr.diags
+        );
+    }
+    let report = analyze_module(&frontend::compile(SAFE_SRC, "safe").unwrap());
+    for kr in &report.kernels {
+        assert!(kr.worst() < Some(Severity::Warning), "kernel `{}`: {:?}", kr.name, kr.diags);
+    }
+}
+
+/// Analysis runs once per module (at load), the cached report is shared,
+/// and repeated launches never re-analyze.
+#[test]
+fn analysis_cached_once_per_module() {
+    let ctx = HetGpu::with_devices(&[DeviceKind::NvidiaSim]).unwrap();
+    let m = ctx.compile_cuda(hetgpu::suite::SUITE_SRC).unwrap();
+    let stats0 = ctx.analysis_stats();
+    assert_eq!(stats0.kernels_analyzed, 10, "{stats0:?}");
+
+    let r1 = ctx.analysis_report(m).unwrap();
+    let r2 = ctx.analysis_report(m).unwrap();
+    assert!(Arc::ptr_eq(&r1, &r2), "report must be computed once and shared");
+
+    let a = ctx.alloc_buffer::<f32>(1024, 0).unwrap();
+    let b = ctx.alloc_buffer::<f32>(1024, 0).unwrap();
+    let c = ctx.alloc_buffer::<f32>(1024, 0).unwrap();
+    ctx.upload(&a, &vec![1.0; 1024]).unwrap();
+    ctx.upload(&b, &vec![2.0; 1024]).unwrap();
+    let s = ctx.create_stream(0).unwrap();
+    for _ in 0..2 {
+        ctx.launch(m, "vecadd")
+            .dims(LaunchDims::d1(4, 256))
+            .args(&[a.arg(), b.arg(), c.arg(), Arg::U32(1024)])
+            .record(s)
+            .unwrap();
+    }
+    ctx.synchronize(s).unwrap();
+    assert_eq!(ctx.download(&c, 1024).unwrap()[7], 3.0);
+
+    let stats = ctx.analysis_stats();
+    assert_eq!(stats.kernels_analyzed, 10, "launches must not re-analyze: {stats:?}");
+    assert!(stats.preflight_checks >= 2, "{stats:?}");
+}
