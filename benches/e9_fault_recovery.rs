@@ -27,13 +27,22 @@ __global__ void slam(unsigned* bins, unsigned* peaks) {
 "#;
 
 /// One sharded run: fresh two-device context, optional fault plan and
-/// policy; returns (wall seconds, bins, journal ops, attempts).
-fn run(plan: Option<&str>, policy: FaultPolicy) -> (f64, Vec<u32>, u64, u32) {
+/// policy; returns (wall seconds, bins, journal ops, attempts). With
+/// `trace_to`, the run executes with tracing armed and exports its span
+/// tree as a Perfetto-loadable trace (the CI sample artifact).
+fn run(
+    plan: Option<&str>,
+    policy: FaultPolicy,
+    trace_to: Option<&std::path::Path>,
+) -> (f64, Vec<u32>, u64, u32) {
     let smoke = std::env::var("HETGPU_BENCH_SMOKE").is_ok();
     let blocks: u32 = if smoke { 64 } else { 256 };
     let dims = LaunchDims::d1(blocks, 64);
 
     let ctx = HetGpu::with_devices(&[DeviceKind::NvidiaSim, DeviceKind::NvidiaSim]).unwrap();
+    if trace_to.is_some() {
+        ctx.arm_tracing();
+    }
     if let Some(p) = plan {
         ctx.install_fault_plan(FaultPlan::parse(p).unwrap());
     }
@@ -52,6 +61,12 @@ fn run(plan: Option<&str>, policy: FaultPolicy) -> (f64, Vec<u32>, u64, u32) {
         .unwrap();
     let report = launch.wait().unwrap();
     let wall = t0.elapsed().as_secs_f64();
+    if let Some(path) = trace_to {
+        match ctx.export_trace(path) {
+            Ok(()) => println!("wrote sample trace {}", path.display()),
+            Err(e) => eprintln!("failed to write sample trace {}: {e}", path.display()),
+        }
+    }
     (wall, ctx.download(&bins, 16).unwrap(), report.io.journal_ops, report.attempts)
 }
 
@@ -61,20 +76,30 @@ fn main() {
     let threads = blocks as u64 * 64;
 
     // ---- fault-free sharded baseline (gated) ----
-    let (fault_free_s, expect_bins, journal_ops, attempts) = run(None, FaultPolicy::FailFast);
+    let (fault_free_s, expect_bins, journal_ops, attempts) =
+        run(None, FaultPolicy::FailFast, None);
     assert_eq!(journal_ops, threads * 2, "every atomic journals exactly once");
     assert_eq!(attempts, 2, "fault-free: one attempt per shard");
 
     // ---- mid-kernel fault on device 1, redistributed to the survivor ----
-    let (recovery_s, bins, ops, att) =
-        run(Some("launch:dev=1,nth=0"), FaultPolicy::Redistribute);
+    // Tracing is armed on this run; its span tree — record root, shard
+    // dispatches, the redistributed re-dispatch, merge/replay — is
+    // exported as a Perfetto-loadable sample trace that CI uploads as an
+    // artifact (`BENCH_e9_trace.json`).
+    let trace_path = std::env::var("HETGPU_TRACE_OUT")
+        .unwrap_or_else(|_| "BENCH_e9_trace.json".into());
+    let (recovery_s, bins, ops, att) = run(
+        Some("launch:dev=1,nth=0"),
+        FaultPolicy::Redistribute,
+        Some(std::path::Path::new(&trace_path)),
+    );
     assert_eq!(bins, expect_bins, "redistribute must join bit-identical");
     assert_eq!(ops, threads * 2, "exactly-once journal replay under recovery");
     assert!(att > 2, "recovery adds attempts");
 
     // ---- same fault, retried on the same device ----
     let (retry_s, bins, ops, _) =
-        run(Some("launch:dev=1,nth=0"), FaultPolicy::Retry { max: 3 });
+        run(Some("launch:dev=1,nth=0"), FaultPolicy::Retry { max: 3 }, None);
     assert_eq!(bins, expect_bins, "retry must join bit-identical");
     assert_eq!(ops, threads * 2, "exactly-once journal replay under retry");
 

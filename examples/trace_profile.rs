@@ -1,0 +1,111 @@
+//! Observability-plane demo (DESIGN.md §13): suite kernels sharded
+//! across two device *kinds* with tracing armed, then the three outputs
+//! of the plane — the per-phase latency percentiles from
+//! `HetGpu::metrics()`, the per-kernel execution profiles harvested from
+//! both simulator families, and a Perfetto-loadable `trace.json`
+//! (open it at <https://ui.perfetto.dev>).
+//!
+//! ```sh
+//! cargo run --release --example trace_profile
+//! ```
+
+use hetgpu::runtime::api::HetGpu;
+use hetgpu::runtime::device::DeviceKind;
+use hetgpu::runtime::launch::Arg;
+use hetgpu::sim::simt::LaunchDims;
+use hetgpu::suite;
+
+fn main() -> hetgpu::Result<()> {
+    // One SIMT device and one Tensix device: the same hetIR binary runs
+    // on both, and the harvested profiles show each family's counters
+    // (divergence ratio vs. scalar/vector mode mix).
+    let kinds = [DeviceKind::NvidiaSim, DeviceKind::TenstorrentSim];
+    let ctx = HetGpu::with_devices(&kinds)?;
+    ctx.arm_tracing();
+    let module = ctx.compile_cuda(suite::SUITE_SRC)?;
+
+    let n: u32 = 1 << 14;
+    let dims = LaunchDims::d1(n / 256, 256);
+    let reps = 3;
+
+    // ---- vecadd + saxpy + stencil3, each sharded over both kinds ----
+    let a = ctx.alloc_buffer::<f32>(n as usize, 0)?;
+    let b = ctx.alloc_buffer::<f32>(n as usize, 0)?;
+    let c = ctx.alloc_buffer::<f32>(n as usize, 0)?;
+    let va = suite::gen_f32(n as usize, 1);
+    let vb = suite::gen_f32(n as usize, 2);
+    ctx.upload(&a, &va)?;
+    ctx.upload(&b, &vb)?;
+    for _ in 0..reps {
+        let mut run = ctx
+            .launch(module, "vecadd")
+            .dims(dims)
+            .args(&[a.arg(), b.arg(), c.arg(), Arg::U32(n)])
+            .working_set(&[a.ptr(), b.ptr(), c.ptr()])
+            .sharded(&[0, 1])?;
+        run.wait()?;
+    }
+    let got = ctx.download(&c, n as usize)?;
+    assert!((0..n as usize).all(|i| got[i] == va[i] + vb[i]), "vecadd merge mismatch");
+
+    for _ in 0..reps {
+        let mut run = ctx
+            .launch(module, "saxpy")
+            .dims(dims)
+            .args(&[a.arg(), b.arg(), Arg::F32(2.5), Arg::U32(n)])
+            .working_set(&[a.ptr(), b.ptr()])
+            .sharded(&[0, 1])?;
+        run.wait()?;
+    }
+    for _ in 0..reps {
+        let mut run = ctx
+            .launch(module, "stencil3")
+            .dims(dims)
+            .args(&[a.arg(), c.arg(), Arg::U32(n)])
+            .working_set(&[a.ptr(), c.ptr()])
+            .sharded(&[0, 1])?;
+        run.wait()?;
+    }
+
+    // ---- top-5 phases by p99 latency ----
+    let metrics = ctx.metrics();
+    let mut phases: Vec<_> = metrics.phases.iter().filter(|p| p.count > 0).collect();
+    phases.sort_by(|x, y| y.p99_us.partial_cmp(&x.p99_us).unwrap());
+    println!("top phases by p99 latency ({} spans recorded):", ctx.trace_spans().len());
+    println!("{:16} {:>7} {:>12} {:>10} {:>10}", "phase", "count", "total", "p50", "p99");
+    for p in phases.iter().take(5) {
+        println!(
+            "{:16} {:>7} {:>10.1}us {:>8.0}us {:>8.0}us",
+            p.phase.name(),
+            p.count,
+            p.total_us,
+            p.p50_us,
+            p.p99_us
+        );
+    }
+
+    // ---- per-kernel execution profiles, one row per device kind ----
+    println!("\nper-kernel execution profiles (module/kernel x device kind x tier):");
+    println!(
+        "{:10} {:16} {:>9} {:>10} {:>12} {:>10} {:>8}",
+        "kernel", "device kind", "launches", "cycles", "divergence", "vector", "atomics"
+    );
+    for (key, prof) in &metrics.profiles {
+        println!(
+            "{:10} {:16} {:>9} {:>10} {:>11.1}% {:>9.1}% {:>8}",
+            key.kernel,
+            key.kind.name(),
+            prof.launches,
+            prof.device_cycles,
+            100.0 * prof.profile.divergence_ratio(),
+            100.0 * prof.profile.vector_fraction(),
+            prof.profile.global_atomics
+        );
+    }
+    println!("\nspans dropped by the flight recorder: {}", metrics.spans_dropped);
+
+    // ---- Perfetto export ----
+    ctx.export_trace("trace.json")?;
+    println!("wrote trace.json — load it at https://ui.perfetto.dev");
+    Ok(())
+}

@@ -102,6 +102,7 @@ use crate::hetir::types::AddrSpace;
 use crate::isa::AtomicsClass;
 use crate::migrate::blob;
 use crate::migrate::state::Snapshot;
+use crate::obs::{Phase, SpanStart};
 use crate::runtime::api::{HetGpu, StreamHandle};
 use crate::runtime::device::HealthState;
 use crate::runtime::events::{EventId, LostInfo};
@@ -249,6 +250,11 @@ pub struct ShardedLaunch<'a> {
     recovered_from: Vec<usize>,
     io: ShardIo,
     joined: bool,
+    /// The launch's observability root span (`None` when tracing was
+    /// disarmed at record time): allocated by `LaunchBuilder::sharded`,
+    /// ended at the join so it covers record → dispatch → merge/replay.
+    /// Shard/rebalance/merge spans parent under its id.
+    root: Option<SpanStart>,
 }
 
 /// Coordinator view of a [`HetGpu`] context (see module docs).
@@ -308,7 +314,10 @@ impl<'a> Coordinator<'a> {
     /// across shards) is rejected with a typed
     /// [`HetError::StaticFault`] before any shard is recorded; the
     /// runtime's `OrderedAtomic` fail-closed path stays as defense in
-    /// depth for `Off`. Usually reached through `LaunchBuilder::sharded`.
+    /// depth for `Off`. Usually reached through `LaunchBuilder::sharded`,
+    /// which allocates `root` — the launch's observability root span,
+    /// ended at the join (`None` when tracing is disarmed).
+    #[allow(clippy::too_many_arguments)]
     pub fn launch_sharded(
         &self,
         spec: LaunchSpec,
@@ -317,6 +326,7 @@ impl<'a> Coordinator<'a> {
         atomics: AtomicsMode,
         policy: FaultPolicy,
         analysis: AnalysisLevel,
+        root: Option<SpanStart>,
     ) -> Result<ShardedLaunch<'a>> {
         let (grid_size, _) = spec.dims.validate()?;
         let plan = self.plan(grid_size, devices)?;
@@ -532,6 +542,7 @@ impl<'a> Coordinator<'a> {
                     Some(range),
                     &broadcast_events,
                     journal.clone(),
+                    root.map_or(0, |s| s.id),
                 )?;
                 shards.push(Shard {
                     stream,
@@ -560,6 +571,7 @@ impl<'a> Coordinator<'a> {
                 recovered_from: Vec::new(),
                 io,
                 joined: false,
+                root,
             }),
             Err(e) => {
                 for s in created {
@@ -666,6 +678,7 @@ impl ShardedLaunch<'_> {
         }
         let src_device = self.shards[idx].device;
         let src = rt.device(src_device)?;
+        let obs_span = rt.obs.begin();
 
         // Checkpoint protocol on the shard's stream (paper §4.2).
         src.pause.store(true, Ordering::SeqCst);
@@ -820,6 +833,10 @@ impl ShardedLaunch<'_> {
         let mut paused_resume = delta.paused;
         if let Some(pk) = &mut paused_resume {
             pk.journal = self.shards[idx].journal.clone();
+            // Wire blobs never carry span ids; rejoin the resumed kernel
+            // to this launch's trace tree so its resume spans on the new
+            // device land under the same root.
+            pk.trace = self.root.map_or(0, |s| s.id);
         }
         self.ctx.graph().resume(self.shards[idx].stream, dst_device, paused_resume)?;
         let shard = &mut self.shards[idx];
@@ -829,6 +846,20 @@ impl ShardedLaunch<'_> {
         let _ = cell.set(new_cut);
         shard.cut = Arc::new(cell);
         self.rebalanced += 1;
+        if let Some(s) = obs_span {
+            rt.obs.end(
+                s,
+                self.root.map_or(0, |r| r.id),
+                Phase::Rebalance,
+                &format!(
+                    "shard [{}..{}) dev{src_device} -> dev{dst_device}{}",
+                    self.shards[idx].range.lo,
+                    self.shards[idx].range.hi,
+                    if live { " (live)" } else { "" }
+                ),
+                Some(dst_device),
+            );
+        }
         Ok(live)
     }
 
@@ -930,6 +961,7 @@ impl ShardedLaunch<'_> {
                         Some(piece),
                         &[],
                         journal.clone(),
+                        self.root.map_or(0, |s| s.id),
                     )?;
                     recovery_journals.extend(journal);
                     rt.fault.counters.recoveries.fetch_add(1, Ordering::Relaxed);
@@ -986,6 +1018,8 @@ impl ShardedLaunch<'_> {
 
         // Fold in shard order against the launch baseline: overlay
         // buffers exist only for the union of dirty runs.
+        let trace = self.root.map_or(0, |s| s.id);
+        let m_span = rt.obs.begin();
         let union: Vec<(u64, u64)> = harvest
             .iter()
             .fold(Vec::new(), |acc, (runs, _)| merge_byte_runs(&acc, runs));
@@ -1031,6 +1065,7 @@ impl ShardedLaunch<'_> {
         // — shard id, then program order — exactly the combine functions
         // the shards applied locally, so integer results are bit-identical
         // to a single-device run under any shard count.
+        let r_span = rt.obs.begin();
         let mut replayed = 0u64;
         for entries in &jentries {
             for e in entries {
@@ -1059,6 +1094,9 @@ impl ShardedLaunch<'_> {
                 replayed += 1;
             }
         }
+        if let Some(s) = r_span {
+            rt.obs.end(s, trace, Phase::Replay, &format!("{replayed} journal ops"), None);
+        }
         self.io.journal_ops = replayed;
 
         // Publish the union runs back to their home devices (exclusive
@@ -1069,6 +1107,15 @@ impl ShardedLaunch<'_> {
             let _gate = home.exec.write().unwrap();
             home.mem.write_bytes(addr, bytes)?;
             self.io.published_bytes += len;
+        }
+        if let Some(s) = m_span {
+            rt.obs.end(
+                s,
+                trace,
+                Phase::Merge,
+                &format!("fold+publish {} dirty runs", union.len()),
+                None,
+            );
         }
 
         // Commit the broadcast sync state: each shard device now holds
@@ -1113,6 +1160,11 @@ impl ShardedLaunch<'_> {
             .ops_replayed
             .fetch_add(self.io.journal_ops, Ordering::Relaxed);
         self.joined = true;
+        // Close the launch's root span: it now covers record → broadcast
+        // → shard dispatch → merge/replay.
+        if let Some(s) = self.root.take() {
+            rt.obs.end(s, 0, Phase::Record, &format!("{} (sharded)", self.spec.kernel), None);
+        }
 
         Ok(ShardReport {
             merged,
@@ -1190,6 +1242,7 @@ impl ShardedLaunch<'_> {
                 Some(range),
                 &[],
                 journal,
+                self.root.map_or(0, |s| s.id),
             )?;
             match self.quiesce_shard(si)? {
                 None => {
@@ -1233,6 +1286,7 @@ impl ShardedLaunch<'_> {
         merged.total_cycles += cost.total_cycles;
         merged.global_bytes += cost.global_bytes;
         merged.device_cycles = merged.device_cycles.max(cost.device_cycles);
+        merged.profile.merge(&cost.profile);
         per_shard.push((device, range, cost));
 
         let runs = self.shard_dirty(si)?;
@@ -1279,6 +1333,17 @@ impl Drop for ShardedLaunch<'_> {
         for shard in &self.shards {
             let _ = self.ctx.synchronize(shard.stream);
             let _ = self.ctx.destroy_stream(shard.stream);
+        }
+        // An abandoned launch still closes its root span, so the flight
+        // recorder shows where the trace tree was cut off.
+        if let Some(s) = self.root.take() {
+            self.ctx.runtime().obs.end(
+                s,
+                0,
+                Phase::Record,
+                &format!("{} (sharded, abandoned)", self.spec.kernel),
+                None,
+            );
         }
     }
 }

@@ -41,6 +41,14 @@
 //! * [`migrate`] — device-neutral snapshots (named by stream handle),
 //!   checkpoint/restore/migrate, incremental delta snapshots against a
 //!   base epoch, and the versioned wire blob (v5; v2–v4 read-compatible).
+//! * [`obs`] — the unified observability plane (DESIGN.md §13):
+//!   launch-lifecycle span trees (record → analyze → translate →
+//!   graph-schedule → dispatch → merge/replay), a bounded flight-recorder
+//!   ring (drop-oldest, `HETGPU_TRACE_RING`), per-phase log2 latency
+//!   histograms behind `HetGpu::metrics()`, per-kernel execution profiles
+//!   keyed by (module, kernel, device kind, tier), and Chrome
+//!   trace-event / Perfetto export (`HetGpu::export_trace`,
+//!   `HETGPU_TRACE` dump-on-drop). Disarmed cost: one relaxed load.
 //! * [`xla_native`] — PJRT/XLA "vendor native" path + numerics oracle.
 
 pub mod backends;
@@ -50,6 +58,7 @@ pub mod error;
 pub mod frontend;
 pub mod isa;
 pub mod migrate;
+pub mod obs;
 pub mod runtime;
 pub mod hetir;
 pub mod sim;

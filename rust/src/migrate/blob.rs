@@ -473,6 +473,9 @@ pub fn deserialize(buf: &[u8]) -> Result<Snapshot> {
             // without re-translation anyway).
             device: src_device,
             prog: None,
+            // Span ids are runtime-local; a wire-restored kernel starts a
+            // fresh trace tree on the destination.
+            trace: 0,
         })
     } else {
         None
@@ -502,6 +505,7 @@ mod tests {
                 journal: None,
                 device: 1,
                 prog: None,
+                trace: 0,
                 spec: LaunchSpec {
                     module: ModuleHandle::from_raw(3),
                     kernel: "iter_mm".into(),

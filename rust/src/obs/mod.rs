@@ -1,0 +1,666 @@
+//! The unified observability plane (DESIGN.md §13): launch-lifecycle
+//! **spans**, a bounded **flight-recorder ring**, per-phase **latency
+//! histograms**, per-kernel **execution profiles**, and a Chrome
+//! trace-event (Perfetto-loadable) **exporter**.
+//!
+//! Every context owns one [`Obs`]. It is *disarmed* by default: the only
+//! cost an instrumented site pays then is a single relaxed atomic load
+//! ([`Obs::armed`]) — no lock, no allocation, no clock read — the same
+//! contract the fault plane (`faultinject.rs`) and the tiering gate in
+//! `run_launch` follow. Arm it with [`Obs::arm`] /
+//! `HetGpu::arm_tracing`, or from the environment: `HETGPU_TRACE=<path>`
+//! arms tracing at context creation and dumps the trace to `<path>` when
+//! the context drops; `HETGPU_TRACE_RING=<n>` sizes the flight recorder.
+//! Malformed values warn **once**, name the variable, and fall back —
+//! the `HETGPU_SIM_THREADS` contract.
+//!
+//! Armed, each instrumented phase of a launch's life — record → analyze
+//! → translate(tier) → graph-schedule → dispatch → join/merge →
+//! journal-replay (plus rebalance, delta capture, restore, migrate) —
+//! becomes a [`SpanEvent`] in the ring: fixed capacity, drop-oldest,
+//! with a dropped counter, so a long-running service keeps the *recent*
+//! history like a real flight recorder. Span durations simultaneously
+//! feed fixed-bucket log2 histograms per [`Phase`] (p50/p90/p99 without
+//! storing samples), and completed launches fold their hardware-invariant
+//! [`ExecProfile`] counters into per-`(module, kernel, device kind,
+//! tier)` [`KernelProfile`]s.
+
+pub mod json;
+
+use crate::backends::JitTier;
+use crate::error::{HetError, Result};
+use crate::hetir::analyze::warn_once;
+use crate::runtime::device::DeviceKind;
+use crate::sim::snapshot::{CostReport, ExecProfile};
+use std::collections::{HashMap, VecDeque};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Default flight-recorder capacity (spans) when `HETGPU_TRACE_RING` is
+/// unset.
+pub const DEFAULT_RING_CAP: usize = 8192;
+
+/// Fixed histogram bucket count: bucket `i` holds durations in
+/// `[2^(i-1), 2^i)` microseconds (bucket 0 holds sub-microsecond spans),
+/// so 32 buckets cover everything up to ~35 simulated minutes.
+pub const HIST_BUCKETS: usize = 32;
+
+/// A phase of the launch lifecycle (or of the checkpoint/migration
+/// machinery) that the observability plane attributes time to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    /// API-level launch recording (builder → event graph), the root span
+    /// of a launch's tree.
+    Record,
+    /// Static-analyzer pre-flight of a launch.
+    Analyze,
+    /// hetIR → device-program translation (JIT miss or tier-2 recompile;
+    /// the label carries the tier).
+    Translate,
+    /// Queue residence inside the event graph: enqueue → executor pickup.
+    GraphSchedule,
+    /// Kernel execution on a device (one span per device per shard).
+    Dispatch,
+    /// Coordinator join: folding shard images back into the canonical
+    /// device.
+    Merge,
+    /// Cross-shard atomics-journal replay at a join.
+    Replay,
+    /// Mid-kernel shard rebalance (pause → ship → resume).
+    Rebalance,
+    /// Delta-state capture (checkpoint / incremental snapshot).
+    DeltaCapture,
+    /// Snapshot restore onto a device.
+    Restore,
+    /// End-to-end live migration (checkpoint + restore + resume).
+    Migrate,
+}
+
+impl Phase {
+    /// All phases, in histogram-index order.
+    pub const ALL: [Phase; 11] = [
+        Phase::Record,
+        Phase::Analyze,
+        Phase::Translate,
+        Phase::GraphSchedule,
+        Phase::Dispatch,
+        Phase::Merge,
+        Phase::Replay,
+        Phase::Rebalance,
+        Phase::DeltaCapture,
+        Phase::Restore,
+        Phase::Migrate,
+    ];
+
+    /// Stable lowercase name (used as the Perfetto event category and in
+    /// metrics output).
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Record => "record",
+            Phase::Analyze => "analyze",
+            Phase::Translate => "translate",
+            Phase::GraphSchedule => "graph-schedule",
+            Phase::Dispatch => "dispatch",
+            Phase::Merge => "merge",
+            Phase::Replay => "replay",
+            Phase::Rebalance => "rebalance",
+            Phase::DeltaCapture => "delta-capture",
+            Phase::Restore => "restore",
+            Phase::Migrate => "migrate",
+        }
+    }
+
+    /// Index into the per-phase histogram table (== position in
+    /// [`Phase::ALL`]).
+    pub fn index(self) -> usize {
+        match self {
+            Phase::Record => 0,
+            Phase::Analyze => 1,
+            Phase::Translate => 2,
+            Phase::GraphSchedule => 3,
+            Phase::Dispatch => 4,
+            Phase::Merge => 5,
+            Phase::Replay => 6,
+            Phase::Rebalance => 7,
+            Phase::DeltaCapture => 8,
+            Phase::Restore => 9,
+            Phase::Migrate => 10,
+        }
+    }
+}
+
+/// One completed span in the flight recorder. Times are microseconds
+/// since the owning context's creation ([`Obs`] epoch), matching the
+/// Chrome trace-event `ts`/`dur` convention.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanEvent {
+    /// Unique id (1-based; 0 is reserved for "no parent").
+    pub id: u64,
+    /// Id of the enclosing span, or 0 for a root.
+    pub parent: u64,
+    pub phase: Phase,
+    /// Human-readable detail (kernel name, shard range, tier, ...).
+    pub label: String,
+    /// Device the phase ran on; `None` for host-side phases.
+    pub device: Option<usize>,
+    pub start_us: f64,
+    pub dur_us: f64,
+}
+
+/// An open span returned by [`Obs::begin`] — carry it across the work
+/// and close it with [`Obs::end`]. Its `id` is the parent id to hand to
+/// child spans opened while this one is in flight.
+#[derive(Debug, Clone, Copy)]
+pub struct SpanStart {
+    /// The span's pre-allocated id (usable as a child's `parent` before
+    /// the span is closed).
+    pub id: u64,
+    t0: Instant,
+}
+
+/// Attribution key of a per-kernel execution profile: translation unit,
+/// kernel, device kind, and the JIT tier that produced the program the
+/// launch actually ran.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ProfileKey {
+    /// The module's load-unique id (stable across handle reuse).
+    pub module: u64,
+    pub kernel: String,
+    pub kind: DeviceKind,
+    pub tier: JitTier,
+}
+
+/// Accumulated execution profile of one [`ProfileKey`]: launch count,
+/// summed critical-path model cycles, and the merged hardware-invariant
+/// counters harvested by the simulators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct KernelProfile {
+    pub launches: u64,
+    pub device_cycles: u64,
+    pub profile: ExecProfile,
+}
+
+/// Percentile summary of one phase's log2 latency histogram
+/// ([`Obs::phase_stats`]). Percentile values are bucket upper bounds
+/// (`2^i` µs), i.e. exact to within a factor of two — the fixed price of
+/// not storing samples.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PhaseStats {
+    pub phase: Phase,
+    /// Spans recorded for this phase.
+    pub count: u64,
+    pub total_us: f64,
+    pub p50_us: f64,
+    pub p90_us: f64,
+    pub p99_us: f64,
+}
+
+/// One phase's fixed-bucket log2 histogram.
+struct PhaseHist {
+    buckets: [u64; HIST_BUCKETS],
+    count: u64,
+    total_us: f64,
+}
+
+impl PhaseHist {
+    fn new() -> PhaseHist {
+        PhaseHist { buckets: [0; HIST_BUCKETS], count: 0, total_us: 0.0 }
+    }
+
+    fn record(&mut self, dur_us: f64) {
+        self.buckets[bucket_of_us(dur_us)] += 1;
+        self.count += 1;
+        self.total_us += dur_us;
+    }
+
+    /// The smallest bucket upper bound at or below which fraction `q` of
+    /// recorded spans fall.
+    fn percentile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((self.count as f64 * q).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (i, &b) in self.buckets.iter().enumerate() {
+            cum += b;
+            if cum >= target {
+                return (1u64 << i) as f64;
+            }
+        }
+        (1u64 << (HIST_BUCKETS - 1)) as f64
+    }
+}
+
+/// Histogram bucket index for a duration: `floor(log2(µs)) + 1`, clamped
+/// to the table (bucket 0 = sub-microsecond).
+fn bucket_of_us(dur_us: f64) -> usize {
+    let v = dur_us as u64;
+    if v == 0 {
+        0
+    } else {
+        ((64 - v.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+    }
+}
+
+/// Everything behind the armed gate, under one mutex (the
+/// `JitState`-style idiom from `runtime/jit.rs`): the span ring, the
+/// per-phase histograms, and the per-kernel profile table.
+struct ObsState {
+    ring: VecDeque<SpanEvent>,
+    cap: usize,
+    hist: Vec<PhaseHist>,
+    profiles: HashMap<ProfileKey, KernelProfile>,
+}
+
+/// The per-context observability plane. See the module docs for the
+/// arming contract; all methods are `&self` and thread-safe.
+pub struct Obs {
+    armed: AtomicBool,
+    /// t=0 of every span timestamp (context creation).
+    epoch: Instant,
+    next_id: AtomicU64,
+    dropped: AtomicU64,
+    state: Mutex<ObsState>,
+    /// Where to dump the trace when the context drops (`HETGPU_TRACE`).
+    dump: Mutex<Option<PathBuf>>,
+}
+
+impl Default for Obs {
+    fn default() -> Obs {
+        Obs::new()
+    }
+}
+
+impl Obs {
+    /// A disarmed plane with the default ring capacity.
+    pub fn new() -> Obs {
+        Obs {
+            armed: AtomicBool::new(false),
+            epoch: Instant::now(),
+            next_id: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            state: Mutex::new(ObsState {
+                ring: VecDeque::new(),
+                cap: DEFAULT_RING_CAP,
+                hist: Phase::ALL.iter().map(|_| PhaseHist::new()).collect(),
+                profiles: HashMap::new(),
+            }),
+            dump: Mutex::new(None),
+        }
+    }
+
+    /// Build from the environment: `HETGPU_TRACE=<path>` arms tracing
+    /// and schedules a dump-on-drop; `HETGPU_TRACE_RING=<n>` sizes the
+    /// ring. Malformed values warn once (naming the variable) and fall
+    /// back, like `HETGPU_SIM_THREADS`.
+    pub fn from_env() -> Obs {
+        let obs = Obs::new();
+        let (cap, warn) = parse_ring_cap(std::env::var("HETGPU_TRACE_RING").ok().as_deref());
+        if let Some(w) = warn {
+            warn_once(&w);
+        }
+        obs.state.lock().unwrap().cap = cap;
+        if let Ok(path) = std::env::var("HETGPU_TRACE") {
+            if path.trim().is_empty() {
+                warn_once(
+                    "hetgpu: HETGPU_TRACE is set but empty (expected a file path for the \
+                     trace dump); tracing stays disarmed",
+                );
+            } else {
+                obs.armed.store(true, Ordering::Relaxed);
+                *obs.dump.lock().unwrap() = Some(PathBuf::from(path));
+            }
+        }
+        obs
+    }
+
+    /// Whether tracing is armed — **the** disarmed-path cost: one
+    /// relaxed load.
+    #[inline]
+    pub fn armed(&self) -> bool {
+        self.armed.load(Ordering::Relaxed)
+    }
+
+    pub fn arm(&self) {
+        self.armed.store(true, Ordering::Relaxed);
+    }
+
+    pub fn disarm(&self) {
+        self.armed.store(false, Ordering::Relaxed);
+    }
+
+    /// Open a span. Returns `None` when disarmed (after exactly one
+    /// relaxed load); armed, allocates the span id and stamps the clock.
+    pub fn begin(&self) -> Option<SpanStart> {
+        if !self.armed() {
+            return None;
+        }
+        Some(SpanStart {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed) + 1,
+            t0: Instant::now(),
+        })
+    }
+
+    /// Close a span opened with [`Obs::begin`]: records it into the ring
+    /// and folds its duration into the phase histogram.
+    pub fn end(
+        &self,
+        start: SpanStart,
+        parent: u64,
+        phase: Phase,
+        label: &str,
+        device: Option<usize>,
+    ) {
+        let start_us = start.t0.saturating_duration_since(self.epoch).as_secs_f64() * 1e6;
+        let dur_us = start.t0.elapsed().as_secs_f64() * 1e6;
+        self.push(SpanEvent {
+            id: start.id,
+            parent,
+            phase,
+            label: label.to_string(),
+            device,
+            start_us,
+            dur_us,
+        });
+    }
+
+    /// Record a span retroactively from a start `Instant` captured
+    /// earlier (e.g. a node's enqueue time) to now. Returns the span id,
+    /// or 0 when disarmed (one relaxed load).
+    pub fn span_since(
+        &self,
+        t0: Instant,
+        parent: u64,
+        phase: Phase,
+        label: &str,
+        device: Option<usize>,
+    ) -> u64 {
+        if !self.armed() {
+            return 0;
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
+        let start_us = t0.saturating_duration_since(self.epoch).as_secs_f64() * 1e6;
+        let dur_us = t0.elapsed().as_secs_f64() * 1e6;
+        self.push(SpanEvent {
+            id,
+            parent,
+            phase,
+            label: label.to_string(),
+            device,
+            start_us,
+            dur_us,
+        });
+        id
+    }
+
+    fn push(&self, ev: SpanEvent) {
+        let mut st = self.state.lock().unwrap();
+        st.hist[ev.phase.index()].record(ev.dur_us);
+        if st.ring.len() >= st.cap {
+            st.ring.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        st.ring.push_back(ev);
+    }
+
+    /// Fold a completed launch's cost report into the per-kernel profile
+    /// table (no-op when disarmed: one relaxed load).
+    pub fn record_profile(&self, key: ProfileKey, cost: &CostReport) {
+        if !self.armed() {
+            return;
+        }
+        let mut st = self.state.lock().unwrap();
+        let e = st.profiles.entry(key).or_default();
+        e.launches += 1;
+        e.device_cycles += cost.device_cycles;
+        e.profile.merge(&cost.profile);
+    }
+
+    /// Resize the flight recorder (minimum 1). Shrinking drops the
+    /// oldest spans and counts them as dropped.
+    pub fn set_ring_capacity(&self, cap: usize) {
+        let cap = cap.max(1);
+        let mut st = self.state.lock().unwrap();
+        st.cap = cap;
+        while st.ring.len() > cap {
+            st.ring.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Spans evicted from the ring since creation.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Span ids ever allocated (== spans recorded + spans still open).
+    pub fn spans_started(&self) -> u64 {
+        self.next_id.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot of the flight recorder, oldest first.
+    pub fn spans(&self) -> Vec<SpanEvent> {
+        self.state.lock().unwrap().ring.iter().cloned().collect()
+    }
+
+    /// Per-phase latency summaries (count, total, p50/p90/p99), in
+    /// [`Phase::ALL`] order — including phases with zero spans, so
+    /// consumers can index by phase.
+    pub fn phase_stats(&self) -> Vec<PhaseStats> {
+        let st = self.state.lock().unwrap();
+        Phase::ALL
+            .iter()
+            .map(|&p| {
+                let h = &st.hist[p.index()];
+                PhaseStats {
+                    phase: p,
+                    count: h.count,
+                    total_us: h.total_us,
+                    p50_us: h.percentile(0.50),
+                    p90_us: h.percentile(0.90),
+                    p99_us: h.percentile(0.99),
+                }
+            })
+            .collect()
+    }
+
+    /// Per-kernel execution profiles, deterministically ordered by
+    /// (module, kernel, device kind, tier).
+    pub fn profiles(&self) -> Vec<(ProfileKey, KernelProfile)> {
+        let st = self.state.lock().unwrap();
+        let mut v: Vec<(ProfileKey, KernelProfile)> =
+            st.profiles.iter().map(|(k, p)| (k.clone(), *p)).collect();
+        v.sort_by(|(a, _), (b, _)| {
+            (a.module, a.kernel.as_str(), a.kind.name(), tier_rank(a.tier)).cmp(&(
+                b.module,
+                b.kernel.as_str(),
+                b.kind.name(),
+                tier_rank(b.tier),
+            ))
+        });
+        v
+    }
+
+    /// The dump-on-drop path (`HETGPU_TRACE`), if any.
+    pub fn dump_path(&self) -> Option<PathBuf> {
+        self.dump.lock().unwrap().clone()
+    }
+
+    /// Export the flight recorder as Chrome trace-event JSON (loadable
+    /// by Perfetto / `chrome://tracing`). `device_names[i]` labels the
+    /// track of device `i`; host-side spans land on track "runtime".
+    pub fn export_trace(&self, path: &Path, device_names: &[String]) -> Result<()> {
+        let spans = self.spans();
+        let mut out = String::with_capacity(256 + spans.len() * 192);
+        out.push_str("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[");
+        out.push_str(
+            "{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":0,\"tid\":0,\
+             \"args\":{\"name\":\"hetgpu\"}}",
+        );
+        out.push_str(
+            ",{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":0,\"tid\":0,\
+             \"args\":{\"name\":\"runtime\"}}",
+        );
+        for (i, name) in device_names.iter().enumerate() {
+            out.push_str(&format!(
+                ",{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":0,\"tid\":{},\
+                 \"args\":{{\"name\":\"{}\"}}}}",
+                i + 1,
+                json::escape(name)
+            ));
+        }
+        for ev in &spans {
+            let tid = match ev.device {
+                Some(d) => d + 1,
+                None => 0,
+            };
+            let name = if ev.label.is_empty() {
+                ev.phase.name().to_string()
+            } else {
+                format!("{}: {}", ev.phase.name(), ev.label)
+            };
+            out.push_str(&format!(
+                ",{{\"name\":\"{}\",\"cat\":\"hetgpu\",\"ph\":\"X\",\"ts\":{:.3},\
+                 \"dur\":{:.3},\"pid\":0,\"tid\":{},\
+                 \"args\":{{\"span\":{},\"parent\":{},\"phase\":\"{}\"}}}}",
+                json::escape(&name),
+                ev.start_us,
+                ev.dur_us,
+                tid,
+                ev.id,
+                ev.parent,
+                ev.phase.name()
+            ));
+        }
+        out.push_str("]}");
+        std::fs::write(path, out)
+            .map_err(|e| HetError::runtime(format!("write trace {}: {e}", path.display())))
+    }
+}
+
+fn tier_rank(t: JitTier) -> u8 {
+    match t {
+        JitTier::Baseline => 0,
+        JitTier::Optimized => 1,
+    }
+}
+
+/// Parse `HETGPU_TRACE_RING`: positive integer, or fall back to
+/// [`DEFAULT_RING_CAP`] with a warning message (returned, not printed,
+/// so callers control the once-only gate).
+fn parse_ring_cap(raw: Option<&str>) -> (usize, Option<String>) {
+    match raw {
+        None => (DEFAULT_RING_CAP, None),
+        Some(s) => match s.trim().parse::<usize>() {
+            Ok(n) if n > 0 => (n, None),
+            _ => (
+                DEFAULT_RING_CAP,
+                Some(format!(
+                    "hetgpu: HETGPU_TRACE_RING={s:?} is not a positive integer; \
+                     using the default ring capacity of {DEFAULT_RING_CAP} spans"
+                )),
+            ),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_are_log2() {
+        assert_eq!(bucket_of_us(0.0), 0);
+        assert_eq!(bucket_of_us(0.9), 0);
+        assert_eq!(bucket_of_us(1.0), 1);
+        assert_eq!(bucket_of_us(2.0), 2);
+        assert_eq!(bucket_of_us(3.9), 2);
+        assert_eq!(bucket_of_us(1024.0), 11);
+        assert_eq!(bucket_of_us(f64::MAX.min(1e30)), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn percentiles_walk_the_histogram() {
+        let mut h = PhaseHist::new();
+        for _ in 0..90 {
+            h.record(1.5); // bucket 1 (upper bound 2µs)
+        }
+        for _ in 0..10 {
+            h.record(1000.0); // bucket 10 (upper bound 1024µs)
+        }
+        assert_eq!(h.percentile(0.50), 2.0);
+        assert_eq!(h.percentile(0.90), 2.0);
+        assert_eq!(h.percentile(0.99), 1024.0);
+        assert_eq!(PhaseHist::new().percentile(0.99), 0.0);
+    }
+
+    #[test]
+    fn ring_drops_oldest_and_counts() {
+        let obs = Obs::new();
+        obs.arm();
+        obs.set_ring_capacity(4);
+        for i in 0..10 {
+            let s = obs.begin().unwrap();
+            obs.end(s, 0, Phase::Dispatch, &format!("k{i}"), Some(0));
+        }
+        let spans = obs.spans();
+        assert_eq!(spans.len(), 4);
+        assert_eq!(obs.dropped(), 6);
+        // Oldest-first, and the survivors are the most recent four.
+        assert_eq!(spans[0].label, "k6");
+        assert_eq!(spans[3].label, "k9");
+        // Histograms saw all ten, ring eviction notwithstanding.
+        let d = &obs.phase_stats()[Phase::Dispatch.index()];
+        assert_eq!(d.count, 10);
+    }
+
+    #[test]
+    fn disarmed_begin_is_none() {
+        let obs = Obs::new();
+        assert!(obs.begin().is_none());
+        assert_eq!(obs.span_since(Instant::now(), 0, Phase::Record, "x", None), 0);
+        assert_eq!(obs.spans_started(), 0);
+    }
+
+    #[test]
+    fn ring_cap_parsing_follows_env_contract() {
+        assert_eq!(parse_ring_cap(None), (DEFAULT_RING_CAP, None));
+        assert_eq!(parse_ring_cap(Some("16")), (16, None));
+        let (cap, warn) = parse_ring_cap(Some("zero"));
+        assert_eq!(cap, DEFAULT_RING_CAP);
+        assert!(warn.unwrap().contains("HETGPU_TRACE_RING"));
+        let (cap, warn) = parse_ring_cap(Some("0"));
+        assert_eq!(cap, DEFAULT_RING_CAP);
+        assert!(warn.is_some());
+    }
+
+    #[test]
+    fn profiles_accumulate_and_sort() {
+        let obs = Obs::new();
+        obs.arm();
+        let key = ProfileKey {
+            module: 1,
+            kernel: "k".into(),
+            kind: DeviceKind::NvidiaSim,
+            tier: JitTier::Baseline,
+        };
+        let cost = CostReport {
+            device_cycles: 100,
+            profile: ExecProfile { blocks_executed: 4, ..Default::default() },
+            ..Default::default()
+        };
+        obs.record_profile(key.clone(), &cost);
+        obs.record_profile(key.clone(), &cost);
+        let key2 = ProfileKey { tier: JitTier::Optimized, ..key.clone() };
+        obs.record_profile(key2, &cost);
+        let profs = obs.profiles();
+        assert_eq!(profs.len(), 2);
+        assert_eq!(profs[0].0, key);
+        assert_eq!(profs[0].1.launches, 2);
+        assert_eq!(profs[0].1.device_cycles, 200);
+        assert_eq!(profs[0].1.profile.blocks_executed, 8);
+        assert_eq!(profs[1].0.tier, JitTier::Optimized);
+    }
+}

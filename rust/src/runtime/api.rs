@@ -47,6 +47,7 @@ pub use crate::hetir::analyze::{AnalysisLevel, AnalysisReport};
 use crate::hetir::{self, module::Module};
 use crate::isa::tensix_isa::TensixMode;
 use crate::migrate::state::{MigrationReport, Snapshot};
+use crate::obs::{KernelProfile, Phase, PhaseStats, ProfileKey, SpanEvent};
 use crate::runtime::device::{Device, DeviceKind};
 use crate::runtime::events::{copy_end, EventGraph, EventId, EventStatus, GraphStats, NodeKind};
 use crate::runtime::faultinject::FaultInjector;
@@ -161,6 +162,39 @@ pub struct JournalStats {
     pub entries_shipped: u64,
 }
 
+/// One unified snapshot of every counter plane in the context, returned
+/// by [`HetGpu::metrics`] (DESIGN.md §13): the six legacy `*_stats()`
+/// structs folded side by side, the per-phase launch-lifecycle latency
+/// histograms of the observability plane, the per-kernel execution
+/// profiles harvested from the simulators while tracing is armed, and the
+/// flight recorder's drop counter.
+#[derive(Debug, Clone)]
+pub struct Metrics {
+    /// Tiered-JIT counters ([`HetGpu::jit_stats`]).
+    pub jit: JitStats,
+    /// Fault-plane counters ([`HetGpu::fault_stats`]).
+    pub fault: FaultStats,
+    /// Cross-shard atomics-journal counters ([`HetGpu::journal_stats`]).
+    pub journal: JournalStats,
+    /// Static-analyzer counters ([`HetGpu::analysis_stats`]).
+    pub analysis: AnalysisStats,
+    /// Event-graph lifecycle counters ([`HetGpu::graph_stats`]).
+    pub graph: GraphStats,
+    /// Per-device dirty-tracking counters ([`HetGpu::dirty_stats`]),
+    /// indexed by device id.
+    pub dirty: Vec<DirtyStats>,
+    /// Per-phase latency distributions (count, total, p50/p90/p99 µs) of
+    /// the launch lifecycle, one entry per [`Phase`] in `Phase::ALL`
+    /// order. Populated while tracing is armed.
+    pub phases: Vec<PhaseStats>,
+    /// Per-kernel execution profiles keyed by `(module uid, kernel,
+    /// device kind, JIT tier)`, harvested from the simulators' cost
+    /// reports while tracing is armed.
+    pub profiles: Vec<(ProfileKey, KernelProfile)>,
+    /// Flight-recorder spans evicted (drop-oldest) since arming.
+    pub spans_dropped: u64,
+}
+
 impl HetGpu {
     /// Create a context with the given simulated devices. Each device's
     /// block-dispatch worker count comes from `HETGPU_SIM_THREADS`
@@ -212,6 +246,9 @@ impl HetGpu {
             jit: JitCache::with_policy(jit_policy),
             memory: MemoryManager::new(crate::runtime::device::DEVICE_MEM_BYTES),
             fault,
+            // Observability plane: disarmed unless `HETGPU_TRACE` asked
+            // for a dump-on-drop trace (DESIGN.md §13).
+            obs: crate::obs::Obs::from_env(),
         });
         let graph = EventGraph::new(inner.clone());
         // Enough executors that every device can be mid-launch while a few
@@ -437,7 +474,8 @@ impl HetGpu {
 
     /// Context-lifetime static-analyzer counters: kernels analyzed,
     /// diagnostics by severity, launch pre-flights, and static launch
-    /// rejections (see [`AnalysisStats`]).
+    /// rejections (see [`AnalysisStats`]). Also folded into
+    /// [`HetGpu::metrics`].
     pub fn analysis_stats(&self) -> AnalysisStats {
         let c = &self.analysis_counters;
         AnalysisStats {
@@ -635,7 +673,9 @@ impl HetGpu {
     /// coordinator also enters here for shard launches, with the block
     /// `range` it owns, the broadcast events it must wait for, and the
     /// shard's atomics `journal` when the launch runs the cross-shard
-    /// journal protocol).
+    /// journal protocol). `trace` is the launch's observability root span
+    /// id (0 when tracing is disarmed) — the executor parents its
+    /// graph-schedule/dispatch spans under it.
     pub(crate) fn record_launch(
         &self,
         stream: StreamHandle,
@@ -643,11 +683,12 @@ impl HetGpu {
         shard: Option<ShardRange>,
         deps: &[EventId],
         journal: Option<Arc<AtomicJournal>>,
+        trace: u64,
     ) -> Result<EventId> {
         // Fail stale module handles at record time (the executor
         // re-checks at execution, when the table may have changed).
         self.inner.modules.read().unwrap().get(spec.module)?;
-        self.graph.enqueue(stream, NodeKind::Launch { spec, shard, journal }, deps)
+        self.graph.enqueue(stream, NodeKind::Launch { spec, shard, journal, trace }, deps)
     }
 
     // ---- events ----
@@ -681,7 +722,8 @@ impl HetGpu {
 
     /// Live/allocated handle counts of the event graph — the lifecycle
     /// observability hook: slot counts are bounded by peak concurrent
-    /// liveness, not total history.
+    /// liveness, not total history. Also folded into
+    /// [`HetGpu::metrics`].
     pub fn graph_stats(&self) -> GraphStats {
         self.graph.graph_stats()
     }
@@ -689,7 +731,8 @@ impl HetGpu {
     /// Context-lifetime counters of the cross-shard atomics protocol:
     /// how many sharded launches ran journaled, journal ops replayed at
     /// joins, entries shipped through rebalance blobs. Per-launch
-    /// accounting is in `ShardReport::io`.
+    /// accounting is in `ShardReport::io`; also folded into
+    /// [`HetGpu::metrics`].
     pub fn journal_stats(&self) -> JournalStats {
         JournalStats {
             journaled_launches: self.journal_counters.journaled_launches.load(Ordering::Relaxed),
@@ -710,7 +753,8 @@ impl HetGpu {
 
     /// Context-lifetime fault-plane counters: faults injected by the
     /// plan, device faults observed by the executor (injected or
-    /// organic), retry attempts, recovered shards, and quarantines.
+    /// organic), retry attempts, recovered shards, and quarantines. Also
+    /// folded into [`HetGpu::metrics`].
     pub fn fault_stats(&self) -> FaultStats {
         self.inner.fault.stats()
     }
@@ -718,6 +762,7 @@ impl HetGpu {
     /// Tiered-JIT observability: cache hits, per-tier translation counts,
     /// background promotions, in-flight compiles, installed swaps, the
     /// current cache generation, and dropped ring events (DESIGN.md §11).
+    /// Also folded into [`HetGpu::metrics`].
     pub fn jit_stats(&self) -> JitStats {
         self.inner.jit.stats()
     }
@@ -760,7 +805,7 @@ impl HetGpu {
             args: vec![Arg::Ptr(buf.ptr())],
             tensix_mode_hint: None,
         };
-        let run = self.inner.run_launch(device, &spec, None, None, None, None, None);
+        let run = self.inner.run_launch(device, &spec, None, None, None, None, None, 0);
         let passed = match run {
             Ok(_) => self
                 .download(&buf, 32)?
@@ -845,10 +890,77 @@ impl HetGpu {
         self.graph.synchronize(stream)
     }
 
-    /// Per-stream stats (launches, model cycles, wall time), including the
-    /// per-device breakdown for streams that executed on several devices.
+    /// Per-stream stats (launches, model cycles, busy and queued wall
+    /// time), including the per-device breakdown for streams that
+    /// executed on several devices. Context-wide planes are folded into
+    /// [`HetGpu::metrics`].
     pub fn stream_stats(&self, stream: StreamHandle) -> Result<StreamStats> {
         self.graph.stats(stream)
+    }
+
+    // ---- observability plane (DESIGN.md §13) ----
+
+    /// One unified snapshot of every counter plane: the six legacy
+    /// `*_stats()` structs plus the observability plane's per-phase
+    /// latency histograms, per-kernel execution profiles, and the flight
+    /// recorder's drop counter. See [`Metrics`].
+    pub fn metrics(&self) -> Metrics {
+        Metrics {
+            jit: self.jit_stats(),
+            fault: self.fault_stats(),
+            journal: self.journal_stats(),
+            analysis: self.analysis_stats(),
+            graph: self.graph_stats(),
+            dirty: (0..self.device_count()).filter_map(|d| self.dirty_stats(d).ok()).collect(),
+            phases: self.inner.obs.phase_stats(),
+            profiles: self.inner.obs.profiles(),
+            spans_dropped: self.inner.obs.dropped(),
+        }
+    }
+
+    /// Arm the tracing plane: launches start emitting lifecycle span
+    /// trees into the flight recorder and the simulators' cost reports
+    /// are harvested into per-kernel profiles. While disarmed, every
+    /// instrumentation site costs exactly one relaxed atomic load.
+    /// `HETGPU_TRACE=<path>` arms at context creation and additionally
+    /// exports the recorder on drop.
+    pub fn arm_tracing(&self) {
+        self.inner.obs.arm();
+    }
+
+    /// Disarm the tracing plane (recorded spans, histograms, and
+    /// profiles are kept; new launches stop emitting).
+    pub fn disarm_tracing(&self) {
+        self.inner.obs.disarm();
+    }
+
+    /// Whether the tracing plane is currently armed.
+    pub fn tracing_armed(&self) -> bool {
+        self.inner.obs.armed()
+    }
+
+    /// The flight recorder's current contents, oldest first — the
+    /// bounded span ring behind [`HetGpu::export_trace`] (capacity from
+    /// `HETGPU_TRACE_RING`, drop-oldest; evictions are counted in
+    /// [`Metrics::spans_dropped`]).
+    pub fn trace_spans(&self) -> Vec<SpanEvent> {
+        self.inner.obs.spans()
+    }
+
+    /// Export the flight recorder as a Chrome trace-event JSON file that
+    /// Perfetto / `chrome://tracing` load directly: one track per device
+    /// plus a host "runtime" track, spans nested by trace-tree parent
+    /// ids carried in `args`.
+    pub fn export_trace(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        self.inner.obs.export_trace(path.as_ref(), &self.device_track_names())
+    }
+
+    fn device_track_names(&self) -> Vec<String> {
+        self.inner
+            .devices
+            .iter()
+            .map(|d| format!("dev{} {}", d.id, d.kind.name()))
+            .collect()
     }
 
     // ---- checkpoint / migration (paper §4.2, §6.3) ----
@@ -868,6 +980,7 @@ impl HetGpu {
     /// records the capture epoch, the base a later
     /// [`HetGpu::snapshot_incremental`] diffs against.
     pub fn checkpoint(&self, stream: StreamHandle) -> Result<Snapshot> {
+        let obs_span = self.inner.obs.begin();
         let (device, paused) = self.pause_and_harvest(stream)?;
         let epoch = self.inner.device(device)?.mem.dirty_epoch_cut();
         let spans = self.inner.memory.allocations_on(device);
@@ -876,11 +989,15 @@ impl HetGpu {
         // have observed the pause flag and halted; resume them in place so
         // a checkpoint of one stream never silently strands its neighbors.
         self.graph.resume_collateral(device, stream);
+        let allocations = captured?;
+        if let Some(s) = obs_span {
+            self.inner.obs.end(s, 0, Phase::DeltaCapture, "checkpoint", Some(device));
+        }
         Ok(Snapshot {
             stream,
             src_device: device,
             paused,
-            allocations: captured?,
+            allocations,
             shard: None,
             epoch,
             base_epoch: None,
@@ -909,6 +1026,7 @@ impl HetGpu {
         stream: StreamHandle,
         base: &Snapshot,
     ) -> Result<Snapshot> {
+        let obs_span = self.inner.obs.begin();
         let (device, paused) = self.pause_and_harvest(stream)?;
         // Cut BEFORE deriving the delta's spans: a write racing this
         // boundary is then either visible to the `dirty_since(base)`
@@ -939,11 +1057,17 @@ impl HetGpu {
         // base+delta is point-in-time like a full checkpoint.
         let captured = capture_spans(self, device, &spans, epoch, &allocs);
         self.graph.resume_collateral(device, stream);
+        let allocations = captured?;
+        if let Some(s) = obs_span {
+            let label =
+                if base_epoch.is_some() { "snapshot (delta)" } else { "snapshot (full)" };
+            self.inner.obs.end(s, 0, Phase::DeltaCapture, label, Some(device));
+        }
         Ok(Snapshot {
             stream,
             src_device: device,
             paused,
-            allocations: captured?,
+            allocations,
             shard: None,
             epoch,
             base_epoch,
@@ -971,7 +1095,8 @@ impl HetGpu {
 
     /// Dirty-tracking counters of `device` (pages tracked/dirty, current
     /// epoch) — the delta-state engine's `graph_stats`-style
-    /// observability hook.
+    /// observability hook. Also folded into [`HetGpu::metrics`]
+    /// (per-device, indexed by id).
     pub fn dirty_stats(&self, device: usize) -> Result<DirtyStats> {
         Ok(self.inner.device(device)?.mem.dirty_stats())
     }
@@ -1023,6 +1148,7 @@ impl HetGpu {
         // touching any state: a stale handle must error here, not after
         // memory was overwritten and residency retagged.
         self.graph.stream_device(stream)?;
+        let obs_span = self.inner.obs.begin();
         let dst = self.inner.device(dst_device)?;
         {
             let _gate = dst.exec.write().unwrap();
@@ -1031,7 +1157,11 @@ impl HetGpu {
             }
         }
         self.inner.memory.move_residency(snap.src_device, dst_device);
-        self.graph.resume(stream, dst_device, snap.paused)
+        let out = self.graph.resume(stream, dst_device, snap.paused);
+        if let Some(s) = obs_span {
+            self.inner.obs.end(s, 0, Phase::Restore, "restore", Some(dst_device));
+        }
+        out
     }
 
     /// Live-migrate a stream to another device: checkpoint → move memory →
@@ -1041,6 +1171,7 @@ impl HetGpu {
         if src_device == dst_device {
             return Err(HetError::migrate("source and destination are the same device"));
         }
+        let obs_span = self.inner.obs.begin();
         let t0 = Instant::now();
         let snap = self.checkpoint(stream)?;
         let t_ckpt = t0.elapsed();
@@ -1049,6 +1180,15 @@ impl HetGpu {
         let t1 = Instant::now();
         self.restore(snap, dst_device)?;
         let t_restore = t1.elapsed();
+        if let Some(s) = obs_span {
+            self.inner.obs.end(
+                s,
+                0,
+                Phase::Migrate,
+                &format!("dev{src_device} -> dev{dst_device}"),
+                Some(dst_device),
+            );
+        }
         // Wait for the resumed kernel to finish its current segment run.
         Ok(MigrationReport {
             src_device,
@@ -1078,6 +1218,14 @@ impl Drop for HetGpu {
         self.inner.jit.shutdown_compiler();
         if let Some(h) = self.jit_compiler.take() {
             let _ = h.join();
+        }
+        // Dump-on-drop: `HETGPU_TRACE=<path>` armed tracing at creation
+        // and recorded the destination; export after every executor has
+        // joined so the recorder is complete and quiescent.
+        if let Some(path) = self.inner.obs.dump_path() {
+            if let Err(e) = self.inner.obs.export_trace(&path, &self.device_track_names()) {
+                eprintln!("hetgpu: HETGPU_TRACE export to {} failed: {e}", path.display());
+            }
         }
     }
 }
@@ -1211,8 +1359,23 @@ impl<'a> LaunchBuilder<'a> {
     /// launch fails here, before anything enters the event graph.
     pub fn record(self, stream: StreamHandle) -> Result<EventId> {
         let (ctx, spec, _ws, _atomics, _policy, level) = self.build_spec()?;
-        ctx.preflight(&spec, level)?;
-        ctx.record_launch(stream, spec, None, &[], None)
+        // The launch's root span covers the record phase; the executor
+        // later parents graph-schedule/dispatch (and any resume spans)
+        // under the same trace id.
+        let obs = &ctx.inner.obs;
+        let root = obs.begin();
+        let trace = root.map_or(0, |s| s.id);
+        let label = root.map(|_| spec.kernel.clone());
+        let a_span = obs.begin();
+        let pf = ctx.preflight(&spec, level);
+        if let Some(s) = a_span {
+            obs.end(s, trace, Phase::Analyze, &spec.kernel, None);
+        }
+        let out = pf.and_then(|_| ctx.record_launch(stream, spec, None, &[], None, trace));
+        if let Some(s) = root {
+            obs.end(s, 0, Phase::Record, label.as_deref().unwrap_or(""), None);
+        }
+        out
     }
 
     /// Split the launch's grid over `devices` through the coordinator
@@ -1223,7 +1386,28 @@ impl<'a> LaunchBuilder<'a> {
     /// their cross-shard journal replay cannot compose).
     pub fn sharded(self, devices: &[usize]) -> Result<ShardedLaunch<'a>> {
         let (ctx, spec, ws, atomics, policy, level) = self.build_spec()?;
-        ctx.preflight(&spec, level)?;
-        Coordinator::new(ctx).launch_sharded(spec, ws.as_deref(), devices, atomics, policy, level)
+        // Root span of the whole sharded launch: handed to the
+        // coordinator, which ends it at the join (`ShardedLaunch::wait`)
+        // so it covers record → shard dispatch → merge/replay.
+        let obs = &ctx.inner.obs;
+        let root = obs.begin();
+        let trace = root.map_or(0, |s| s.id);
+        let a_span = obs.begin();
+        let pf = ctx.preflight(&spec, level);
+        if let Some(s) = a_span {
+            obs.end(s, trace, Phase::Analyze, &spec.kernel, None);
+        }
+        let out = pf.and_then(|_| {
+            Coordinator::new(ctx)
+                .launch_sharded(spec, ws.as_deref(), devices, atomics, policy, level, root)
+        });
+        if out.is_err() {
+            // A launch that never started still closes its root span so
+            // the flight recorder shows the failed record attempt.
+            if let Some(s) = root {
+                obs.end(s, 0, Phase::Record, "sharded launch (failed to record)", None);
+            }
+        }
+        out
     }
 }

@@ -51,6 +51,7 @@
 use crate::coordinator::shard::ShardRange;
 use crate::delta::journal::AtomicJournal;
 use crate::error::{HetError, Result};
+use crate::obs::Phase;
 use crate::runtime::device::HealthState;
 use crate::runtime::faultinject::FaultKind;
 use crate::runtime::handle::{impl_handle_raw, SlotTable};
@@ -115,11 +116,18 @@ pub struct GraphStats {
 
 /// What a recorded command does when an executor picks it.
 pub(crate) enum NodeKind {
-    /// Kernel launch; `shard` restricts execution to a block range, and
+    /// Kernel launch; `shard` restricts execution to a block range,
     /// `journal` engages the cross-shard atomics protocol (commutative
     /// global atomics append typed entries the coordinator's join
-    /// replays; ordered ops fail closed).
-    Launch { spec: LaunchSpec, shard: Option<ShardRange>, journal: Option<Arc<AtomicJournal>> },
+    /// replays; ordered ops fail closed), and `trace` is the
+    /// observability root span this launch's spans parent under (0 when
+    /// tracing was disarmed at record time).
+    Launch {
+        spec: LaunchSpec,
+        shard: Option<ShardRange>,
+        journal: Option<Arc<AtomicJournal>>,
+        trace: u64,
+    },
     /// Re-enter a paused kernel from its captured per-block state.
     Resume { paused: Box<PausedKernel> },
     /// Asynchronous host→device copy into unified memory (writes the
@@ -147,6 +155,10 @@ struct Node {
     /// Explicit cross-stream dependencies; the implicit same-stream
     /// predecessor edge is the queue order itself.
     deps: Vec<EventId>,
+    /// When the node entered its stream queue — feeds the busy-vs-queued
+    /// breakdown in [`StreamStats`] and, when tracing is armed, the
+    /// graph-schedule span (enqueue → executor pickup).
+    enqueued: Instant,
 }
 
 /// Provenance of a device fault that poisoned a stream, kept alongside
@@ -404,7 +416,7 @@ impl EventGraph {
                 .get_mut(stream.slot, stream.gen)
                 .expect("validated above")
                 .queue
-                .push_back(Node { id, kind, deps: deps.to_vec() });
+                .push_back(Node { id, kind, deps: deps.to_vec(), enqueued: Instant::now() });
         }
         drop(g);
         self.cv.notify_all();
@@ -567,6 +579,7 @@ impl EventGraph {
                         id: EventId { slot, gen },
                         kind: NodeKind::Resume { paused: Box::new(pk) },
                         deps: Vec::new(),
+                        enqueued: Instant::now(),
                     });
                 }
                 None => st.halted = false,
@@ -634,6 +647,7 @@ impl EventGraph {
                             id: EventId { slot, gen },
                             kind: NodeKind::Resume { paused: Box::new(pk) },
                             deps: Vec::new(),
+                            enqueued: Instant::now(),
                         });
                     }
                     // Halted with its capture already harvested elsewhere:
@@ -720,10 +734,34 @@ fn executor_loop(g: &EventGraph) {
             }
         };
 
+        // Queued time (enqueue → pickup) is the always-on half of the
+        // busy-vs-queued stream stats breakdown; the observability spans
+        // below only materialize while tracing is armed.
+        let queued_us = node.enqueued.elapsed().as_secs_f64() * 1e6;
+        let trace = match &node.kind {
+            NodeKind::Launch { trace, .. } => *trace,
+            NodeKind::Resume { paused } => paused.trace,
+            _ => 0,
+        };
+
         let result = if dep_failed {
             Err(HetError::runtime("awaited event failed"))
         } else {
-            let mut result = execute_node(&g.rt, device, &node.kind, &memo);
+            let is_launch = matches!(node.kind, NodeKind::Launch { .. } | NodeKind::Resume { .. });
+            if is_launch && g.rt.obs.armed() {
+                // The graph-schedule span covers the node's queued life:
+                // enqueue (record) to the moment this executor picked it.
+                g.rt.obs.span_since(
+                    node.enqueued,
+                    trace,
+                    Phase::GraphSchedule,
+                    &launch_label(&node.kind),
+                    Some(device),
+                );
+            }
+            let d_span = if is_launch { g.rt.obs.begin() } else { None };
+            let parent_span = d_span.map_or(0, |s| s.id);
+            let mut result = execute_node(&g.rt, device, &node.kind, &memo, parent_span);
             // Copies are idempotent (same source bytes, same destination
             // range), so a device fault during one — a flaky link, an
             // injected transient — is retried in place instead of
@@ -741,7 +779,7 @@ fn executor_loop(g: &EventGraph) {
                     && matches!(&result, Err(e) if e.is_device_fault())
                 {
                     g.rt.fault.counters.retries.fetch_add(1, atomic::Ordering::Relaxed);
-                    result = execute_node(&g.rt, device, &node.kind, &memo);
+                    result = execute_node(&g.rt, device, &node.kind, &memo, parent_span);
                     attempts += 1;
                 }
                 if attempts > 1 && result.is_ok() {
@@ -753,6 +791,9 @@ fn executor_loop(g: &EventGraph) {
                         }
                     }
                 }
+            }
+            if let Some(s) = d_span {
+                g.rt.obs.end(s, trace, Phase::Dispatch, &launch_label(&node.kind), Some(device));
             }
             result
         };
@@ -770,8 +811,12 @@ fn executor_loop(g: &EventGraph) {
                 Ok(Exec::Launch { cost, wall_us, workers, completed, paused }) => {
                     if let Some(st) = inner.streams.entry_at_mut(si) {
                         st.running = false;
-                        st.stats.record_launch(device, workers, wall_us, &cost, completed);
-                        if let Some(pk) = paused {
+                        st.stats
+                            .record_launch(device, workers, wall_us, queued_us, &cost, completed);
+                        if let Some(mut pk) = paused {
+                            // Stamp the launch's root span so the spans of
+                            // the eventual resume join the same tree.
+                            pk.trace = trace;
                             st.paused = Some(pk);
                             st.halted = true;
                         } else if matches!(node.kind, NodeKind::Resume { .. }) {
@@ -847,6 +892,20 @@ fn executor_loop(g: &EventGraph) {
     }
 }
 
+/// Human-readable span label of a launch-shaped node: kernel name, plus
+/// the shard range for coordinator shards and a `resume` prefix for
+/// re-entered kernels. Only called while tracing is armed (it allocates).
+fn launch_label(kind: &NodeKind) -> String {
+    match kind {
+        NodeKind::Launch { spec, shard: Some(r), .. } => {
+            format!("{} [{}..{})", spec.kernel, r.lo, r.hi)
+        }
+        NodeKind::Launch { spec, .. } => spec.kernel.clone(),
+        NodeKind::Resume { paused } => format!("resume {}", paused.spec.kernel),
+        _ => String::new(),
+    }
+}
+
 /// Lower a shard range to per-block resume directives: blocks outside the
 /// range are `Skip`ped (committed as `Done` without running).
 pub(crate) fn shard_directives(grid_size: u32, range: ShardRange) -> Vec<BlockResume> {
@@ -868,9 +927,10 @@ fn execute_node(
     device: usize,
     kind: &NodeKind,
     memo: &Mutex<Option<JitMemo>>,
+    parent_span: u64,
 ) -> Result<Exec> {
     match kind {
-        NodeKind::Launch { spec, shard, journal } => {
+        NodeKind::Launch { spec, shard, journal, .. } => {
             // The fault plane speaks in block offsets *relative to the
             // executed range* (it cannot know shard ranges); the executor
             // — which does — resolves the absolute faulting block here.
@@ -894,7 +954,8 @@ fn execute_node(
                 Some(r) => r.lo.saturating_add(off).min(r.hi.saturating_sub(1)),
                 None => off,
             });
-            run_timed(rt, device, spec, dirs.as_deref(), journal.as_ref(), memo, None, fault)
+            let dirs = dirs.as_deref();
+            run_timed(rt, device, spec, dirs, journal.as_ref(), memo, None, fault, parent_span)
         }
         NodeKind::Resume { paused } => {
             let dirs = paused.resume_directives();
@@ -906,7 +967,9 @@ fn execute_node(
             // A resumed journaled shard keeps journaling into the same
             // journal (carried inside the paused kernel), so entries of
             // re-entered blocks append behind their pre-pause batches.
-            run_timed(rt, device, &paused.spec, Some(&dirs), paused.journal.as_ref(), memo, pinned, None)
+            let journal = paused.journal.as_ref();
+            let spec = &paused.spec;
+            run_timed(rt, device, spec, Some(&dirs), journal, memo, pinned, None, parent_span)
         }
         NodeKind::CopyH2D { dst, data } => {
             let (base, size, dev_id) = rt.memory.lookup(*dst)?;
@@ -962,6 +1025,7 @@ fn execute_node(
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_timed(
     rt: &RuntimeInner,
     device: usize,
@@ -971,10 +1035,19 @@ fn run_timed(
     memo: &Mutex<Option<JitMemo>>,
     pinned: Option<&Arc<crate::backends::DeviceProgram>>,
     fault: Option<u32>,
+    parent_span: u64,
 ) -> Result<Exec> {
     let t0 = Instant::now();
-    let (outcome, prog) =
-        rt.run_launch(device, spec, resume, journal.map(|j| j.as_ref()), Some(memo), pinned, fault)?;
+    let (outcome, prog) = rt.run_launch(
+        device,
+        spec,
+        resume,
+        journal.map(|j| j.as_ref()),
+        Some(memo),
+        pinned,
+        fault,
+        parent_span,
+    )?;
     let wall_us = t0.elapsed().as_secs_f64() * 1e6;
     let workers = rt.device(device).map(|d| d.engine.workers()).unwrap_or(1);
     let cost = *outcome.cost();
@@ -994,6 +1067,9 @@ fn run_timed(
                 // same-device resume re-enters exactly this program even
                 // if the tiered JIT swaps the cache entry meanwhile.
                 prog: Some(prog),
+                // The executor fold stamps the real root span id; the
+                // timed runner doesn't know it.
+                trace: 0,
             }),
         ),
     };

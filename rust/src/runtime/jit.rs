@@ -152,6 +152,9 @@ pub struct JitResolution {
     pub prog: Arc<DeviceProgram>,
     pub profile: Arc<EntryProfile>,
     pub gen: u64,
+    /// The tier of the resolved program (the observability plane labels
+    /// translate spans and profile keys with it).
+    pub tier: JitTier,
 }
 
 /// One stream's memo of its most recent `(module, kernel)` JIT
@@ -362,6 +365,7 @@ impl JitCache {
                     prog: e.prog.clone(),
                     profile: e.profile.clone(),
                     gen: self.generation(),
+                    tier: e.tier,
                 };
                 st.hits += 1;
                 return Ok(res);
@@ -386,6 +390,7 @@ impl JitCache {
                 prog: e.prog.clone(),
                 profile: e.profile.clone(),
                 gen: self.generation(),
+                tier: e.tier,
             };
             st.hits += 1;
             return Ok(res);
@@ -407,9 +412,21 @@ impl JitCache {
         }
         let prog = Arc::new(prog);
         let profile = Arc::new(EntryProfile { key: key.clone(), launches: AtomicU64::new(0) });
-        let res = JitResolution { prog: prog.clone(), profile: profile.clone(), gen: self.generation() };
+        let res = JitResolution {
+            prog: prog.clone(),
+            profile: profile.clone(),
+            gen: self.generation(),
+            tier,
+        };
         st.map.insert(key, Entry { prog, tier, profile });
         Ok(res)
+    }
+
+    /// The tier currently installed for `key` (`None` when not cached) —
+    /// the observability plane attributes memoized launches, whose
+    /// resolution bypassed the cache lock, to the right tier with it.
+    pub fn entry_tier(&self, key: &JitKey) -> Option<JitTier> {
+        self.state.lock().unwrap().map.get(key).map(|e| e.tier)
     }
 
     /// Count one launch against `profile`; exactly the launch that crosses

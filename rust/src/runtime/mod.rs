@@ -154,6 +154,10 @@ pub struct RuntimeInner {
     /// Deterministic fault-injection plane (inert unless a plan is
     /// installed) plus the fault/recovery observability counters.
     pub fault: FaultInjector,
+    /// The observability plane (DESIGN.md §13): lifecycle spans, flight
+    /// recorder, phase histograms, per-kernel profiles. Disarmed unless
+    /// `HETGPU_TRACE` is set or `HetGpu::arm_tracing` ran.
+    pub obs: crate::obs::Obs,
 }
 
 impl RuntimeInner {
@@ -183,6 +187,13 @@ impl RuntimeInner {
     ///
     /// Returns the outcome **and** the program it ran under, so pause
     /// paths can pin it.
+    ///
+    /// `parent_span` is the observability parent (the dispatch span of
+    /// the executing graph node, or 0): when tracing is armed, a JIT-miss
+    /// translation emits a child `translate` span under it, and the
+    /// completed launch's cost report folds into the per-kernel profile
+    /// table. Disarmed, the whole plane costs one relaxed load.
+    #[allow(clippy::too_many_arguments)]
     pub fn run_launch(
         &self,
         device_id: usize,
@@ -192,6 +203,7 @@ impl RuntimeInner {
         memo: Option<&Mutex<Option<JitMemo>>>,
         pinned: Option<&std::sync::Arc<crate::backends::DeviceProgram>>,
         fault: Option<u32>,
+        parent_span: u64,
     ) -> Result<(LaunchOutcome, std::sync::Arc<crate::backends::DeviceProgram>)> {
         let dev = self.device(device_id)?;
         // Checked-arithmetic geometry validation up front: overflowing or
@@ -236,7 +248,21 @@ impl RuntimeInner {
                             Engine::Simt(s) => Some(s.cfg.clone()),
                             Engine::Tensix(_) => None,
                         };
+                        let t_span = self.obs.begin();
                         let res = self.jit.get_or_translate(key, kernel, simt_cfg.as_ref())?;
+                        if let Some(s) = t_span {
+                            let tier = match res.tier {
+                                crate::backends::JitTier::Baseline => "tier1",
+                                crate::backends::JitTier::Optimized => "tier2",
+                            };
+                            self.obs.end(
+                                s,
+                                parent_span,
+                                crate::obs::Phase::Translate,
+                                &format!("{} {tier}", spec.kernel),
+                                Some(device_id),
+                            );
+                        }
                         if let Some(m) = memo {
                             *m.lock().unwrap() = Some(JitMemo::new(
                                 uid,
@@ -305,6 +331,34 @@ impl RuntimeInner {
             }
             _ => Err(HetError::runtime("engine/program kind mismatch (JIT cache corrupt)")),
         };
+        // Armed, fold the run's hardware-invariant counters into the
+        // per-kernel profile table, attributed to the tier that actually
+        // ran (memoized launches bypassed the cache lock, so the tier
+        // comes from the cache entry; pinned resumes of an evicted module
+        // fall back to baseline).
+        if self.obs.armed() {
+            if let Ok(o) = &out {
+                let tier = self
+                    .jit
+                    .entry_tier(&JitKey {
+                        module: uid,
+                        kernel: spec.kernel.clone(),
+                        kind: dev.kind,
+                        tensix_mode,
+                        migratable: true,
+                    })
+                    .unwrap_or_default();
+                self.obs.record_profile(
+                    crate::obs::ProfileKey {
+                        module: uid,
+                        kernel: spec.kernel.clone(),
+                        kind: dev.kind,
+                        tier,
+                    },
+                    o.cost(),
+                );
+            }
+        }
         // Device faults carry launch provenance: the simulator stamped
         // the faulting block and kernel; the runtime knows the module.
         out.map(|o| (o, prog))
@@ -346,6 +400,15 @@ pub(crate) fn jit_compiler_loop(inner: std::sync::Arc<RuntimeInner>) {
         {
             Ok(prog) => {
                 let micros = t0.elapsed().as_secs_f64() * 1e6;
+                // Background promotions belong to no launch: a rootless
+                // translate span on the runtime track (no-op disarmed).
+                inner.obs.span_since(
+                    t0,
+                    0,
+                    crate::obs::Phase::Translate,
+                    &format!("{} tier2 (background)", key.kernel),
+                    None,
+                );
                 inner.jit.install_tier2(&key, prog, micros);
             }
             Err(_) => inner.jit.abandon_promotion(&key),

@@ -61,6 +61,11 @@ pub struct PausedKernel {
     /// re-resolves, which is safe because both tiers agree on every
     /// barrier's register state and suspension metadata (DESIGN.md §11).
     pub prog: Option<std::sync::Arc<crate::backends::DeviceProgram>>,
+    /// Observability root span id of the launch this kernel belongs to
+    /// (0 when tracing was disarmed), so spans of a resume — possibly on
+    /// another device, after a rebalance — join the original launch's
+    /// tree. Not serialized: a wire-restored kernel starts a fresh tree.
+    pub trace: u64,
 }
 
 impl PausedKernel {
@@ -88,7 +93,12 @@ pub struct PerDeviceStats {
     /// Dispatch worker threads of that device's engine.
     pub sim_workers: usize,
     pub cost: CostReport,
+    /// Wall time spent *executing* on this device (busy time).
     pub wall_micros: f64,
+    /// Wall time this device's launches spent queued in the event graph
+    /// before an executor picked them (enqueue → pickup) — the other half
+    /// of the busy-vs-queued breakdown.
+    pub queued_micros: f64,
 }
 
 /// Accumulated per-stream statistics.
@@ -97,7 +107,12 @@ pub struct StreamStats {
     pub launches: u64,
     pub completed: u64,
     pub cost: CostReport,
+    /// Total busy wall time (executing launches), summed over devices.
     pub wall_micros: f64,
+    /// Total queued wall time (enqueue → executor pickup), summed over
+    /// devices — busy vs. queued per phase of a launch's life; the
+    /// per-device slices carry the breakdown.
+    pub queued_micros: f64,
     /// Dispatch worker threads of the device the most recent launch ran on
     /// (1 = sequential block execution). See `per_device` for the full
     /// breakdown when launches spread over several devices.
@@ -108,16 +123,20 @@ pub struct StreamStats {
 
 impl StreamStats {
     /// Fold one executed launch into the totals and its device's slice.
+    /// `wall_us` is the execution (busy) time; `queued_us` is how long
+    /// the node sat in the event graph before an executor picked it.
     pub(crate) fn record_launch(
         &mut self,
         device: usize,
         workers: usize,
         wall_us: f64,
+        queued_us: f64,
         cost: &CostReport,
         completed: bool,
     ) {
         self.launches += 1;
         self.wall_micros += wall_us;
+        self.queued_micros += queued_us;
         self.sim_workers = workers;
         self.cost.merge(cost);
         if completed {
@@ -133,6 +152,7 @@ impl StreamStats {
         let slot = &mut self.per_device[idx];
         slot.launches += 1;
         slot.wall_micros += wall_us;
+        slot.queued_micros += queued_us;
         slot.sim_workers = workers;
         slot.cost.merge(cost);
         if completed {
@@ -149,19 +169,23 @@ mod tests {
     fn stats_accumulate_per_device() {
         let mut s = StreamStats::default();
         let c = CostReport { warp_instructions: 10, ..Default::default() };
-        s.record_launch(0, 4, 5.0, &c, true);
-        s.record_launch(1, 2, 7.0, &c, true);
-        s.record_launch(0, 4, 1.0, &c, false);
+        s.record_launch(0, 4, 5.0, 0.5, &c, true);
+        s.record_launch(1, 2, 7.0, 0.25, &c, true);
+        s.record_launch(0, 4, 1.0, 0.5, &c, false);
         assert_eq!(s.launches, 3);
         assert_eq!(s.completed, 2);
         assert_eq!(s.cost.warp_instructions, 30);
         assert_eq!(s.sim_workers, 4, "last launch ran on device 0");
+        assert_eq!(s.wall_micros, 13.0);
+        assert_eq!(s.queued_micros, 1.25, "queued time accumulates separately from busy");
         assert_eq!(s.per_device.len(), 2);
         let d0 = &s.per_device[0];
         assert_eq!((d0.device, d0.launches, d0.completed, d0.sim_workers), (0, 2, 1, 4));
         assert_eq!(d0.cost.warp_instructions, 20);
+        assert_eq!((d0.wall_micros, d0.queued_micros), (6.0, 1.0));
         let d1 = &s.per_device[1];
         assert_eq!((d1.device, d1.launches, d1.sim_workers), (1, 1, 2));
+        assert_eq!((d1.wall_micros, d1.queued_micros), (7.0, 0.25));
     }
 
     #[test]

@@ -40,7 +40,7 @@
 //! `HETGPU_SIM_THREADS=1` is the sequential escape hatch).
 
 use crate::error::Result;
-use crate::sim::snapshot::{BlockResume, BlockState};
+use crate::sim::snapshot::{BlockResume, BlockState, ExecProfile};
 use std::sync::atomic::{AtomicBool, AtomicIsize, AtomicU64, Ordering};
 
 /// Process-wide dispatch-pool budget shared by **concurrent grid runs**.
@@ -190,6 +190,8 @@ pub struct BlockTotals {
     pub warp_instructions: u64,
     pub total_cycles: u64,
     pub global_bytes: u64,
+    /// Hardware-invariant execution counters (observability plane).
+    pub profile: ExecProfile,
 }
 
 impl BlockTotals {
@@ -197,6 +199,7 @@ impl BlockTotals {
         self.warp_instructions += other.warp_instructions;
         self.total_cycles += other.total_cycles;
         self.global_bytes += other.global_bytes;
+        self.profile.merge(&other.profile);
     }
 }
 
@@ -453,7 +456,12 @@ mod tests {
         Ok((
             BlockState::Done,
             cycles,
-            BlockTotals { warp_instructions: 1, total_cycles: cycles, global_bytes: 0 },
+            BlockTotals {
+                warp_instructions: 1,
+                total_cycles: cycles,
+                global_bytes: 0,
+                ..Default::default()
+            },
         ))
     }
 

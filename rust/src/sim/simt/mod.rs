@@ -204,6 +204,7 @@ impl SimtSim {
             device_cycles: 0,
             total_cycles: run.totals.total_cycles,
             global_bytes: run.totals.global_bytes,
+            profile: run.totals.profile,
         };
 
         // Distribute block costs round-robin over SMs; the device critical
@@ -274,6 +275,7 @@ impl SimtSim {
         let mut block_cost = 0u64;
         let mut insts = 0u64;
         let mut gbytes = 0u64;
+        let mut prof = ExecProfile { blocks_executed: 1, ..Default::default() };
         // Cross-shard journal buffer: warps run sequentially within the
         // block, so their entries land here in scheduler order; the batch
         // is committed to the journal's per-block slot on Done/Suspend.
@@ -296,6 +298,7 @@ impl SimtSim {
                     cost: &mut block_cost,
                     insts: &mut insts,
                     gbytes: &mut gbytes,
+                    prof: &mut prof,
                     atoms: if journal.is_some() { Some(&mut atoms_buf) } else { None },
                 };
                 statuses[w] = match warps[w].run(p, &mut env)? {
@@ -315,6 +318,7 @@ impl SimtSim {
                     warp_instructions: insts,
                     total_cycles: block_cost,
                     global_bytes: gbytes,
+                    profile: prof,
                 };
                 return Ok((BlockState::Done, block_cost, totals));
             }
@@ -351,6 +355,7 @@ impl SimtSim {
                     warp_instructions: insts,
                     total_cycles: block_cost,
                     global_bytes: gbytes,
+                    profile: prof,
                 };
                 return Ok((
                     BlockState::Suspended(BlockCapture {

@@ -17,7 +17,7 @@ use crate::hetir::types::{AddrSpace, Scalar, Type, Value};
 use crate::isa::simt_isa::*;
 use crate::sim::alu;
 use crate::sim::mem::DeviceMemory;
-use crate::sim::snapshot::ThreadCapture;
+use crate::sim::snapshot::{ExecProfile, ThreadCapture};
 use std::sync::atomic::{AtomicBool, Ordering};
 
 /// Lane activity mask (supports warp widths up to 64).
@@ -46,6 +46,9 @@ pub struct Env<'a> {
     pub insts: &'a mut u64,
     /// Global-memory traffic counter (bytes).
     pub gbytes: &'a mut u64,
+    /// Hardware-invariant execution counters for this block (divergence,
+    /// atomics, barriers — the observability plane's profiling feed).
+    pub prof: &'a mut ExecProfile,
     /// Cross-shard journaling mode: when the launch executes as a
     /// journaled coordinator shard this is the block's entry buffer —
     /// commutative global atomics apply locally *and* append a typed
@@ -518,6 +521,9 @@ impl WarpState {
                 let devname = env.cfg.name;
                 for lane in lanes_of(active, self.lanes) {
                     *env.cost += env.cfg.atom_cost;
+                    if *space == AddrSpace::Global {
+                        env.prof.global_atomics += 1;
+                    }
                     let a = self.eaddr(lane, addr);
                     let v = Value { bits: self.rv(lane, val), ty: Type::Scalar(*ty) };
                     let v2 = val2
@@ -560,6 +566,7 @@ impl WarpState {
             }
             SInst::BarSync { id } => {
                 *env.cost += env.cfg.bar_cost;
+                env.prof.barrier_waits += 1;
                 if active != self.full_mask {
                     return Err(HetError::fault(
                         env.cfg.name,
@@ -791,6 +798,10 @@ impl WarpState {
                     }
                     let e = active & !t;
                     *env.cost += env.cfg.alu_cost; // the branch itself
+                    env.prof.branches += 1;
+                    if t != 0 && e != 0 {
+                        env.prof.divergent_branches += 1;
+                    }
                     let then_empty = p.blocks[*then_b].is_empty();
                     let else_empty = p.blocks[*else_b].is_empty();
                     if t != 0 && !then_empty {

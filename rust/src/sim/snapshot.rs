@@ -71,6 +71,62 @@ impl PausedGrid {
     }
 }
 
+/// Hardware-invariant execution profile of a launch, harvested by both
+/// simulators as a side effect of running blocks (the observability
+/// plane's per-kernel attribution feed, DESIGN.md §13). SIMT engines fill
+/// the branch counters (divergence ratio); the Tensix engine fills the
+/// scalar/vector split (mode mix). Atomics and barrier counts are common
+/// to both, so cross-backend runs of the same kernel are comparable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ExecProfile {
+    /// Thread blocks actually executed (skipped/not-started excluded).
+    pub blocks_executed: u64,
+    /// Dynamic branch statements executed (SIMT `If`, per warp).
+    pub branches: u64,
+    /// Branches where both sides had active lanes (the warp diverged).
+    pub divergent_branches: u64,
+    /// Block-barrier / mesh-barrier arrivals.
+    pub barrier_waits: u64,
+    /// Global-memory atomic operations (per lane / per thread).
+    pub global_atomics: u64,
+    /// Tensix: instructions executed on the scalar core.
+    pub scalar_instructions: u64,
+    /// Tensix: instructions executed on the vector unit.
+    pub vector_instructions: u64,
+}
+
+impl ExecProfile {
+    pub fn merge(&mut self, other: &ExecProfile) {
+        self.blocks_executed += other.blocks_executed;
+        self.branches += other.branches;
+        self.divergent_branches += other.divergent_branches;
+        self.barrier_waits += other.barrier_waits;
+        self.global_atomics += other.global_atomics;
+        self.scalar_instructions += other.scalar_instructions;
+        self.vector_instructions += other.vector_instructions;
+    }
+
+    /// Fraction of executed branches that diverged (0.0 when branch-free).
+    pub fn divergence_ratio(&self) -> f64 {
+        if self.branches == 0 {
+            0.0
+        } else {
+            self.divergent_branches as f64 / self.branches as f64
+        }
+    }
+
+    /// Fraction of Tensix instructions that rode the vector unit
+    /// (0.0 for SIMT launches, which don't fill the mode-mix counters).
+    pub fn vector_fraction(&self) -> f64 {
+        let total = self.scalar_instructions + self.vector_instructions;
+        if total == 0 {
+            0.0
+        } else {
+            self.vector_instructions as f64 / total as f64
+        }
+    }
+}
+
 /// Per-launch cost model output (model cycles, see `SimtConfig`).
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct CostReport {
@@ -82,6 +138,9 @@ pub struct CostReport {
     pub total_cycles: u64,
     /// Bytes moved between global memory and the chip (DMA/LD/ST traffic).
     pub global_bytes: u64,
+    /// Hardware-invariant execution counters (divergence, atomics,
+    /// barriers, Tensix mode mix) for per-kernel profiling.
+    pub profile: ExecProfile,
 }
 
 impl CostReport {
@@ -95,6 +154,7 @@ impl CostReport {
         self.device_cycles += other.device_cycles;
         self.total_cycles += other.total_cycles;
         self.global_bytes += other.global_bytes;
+        self.profile.merge(&other.profile);
     }
 }
 

@@ -18,7 +18,7 @@ use crate::isa::tensix_isa::*;
 use crate::isa::DevLoc;
 use crate::sim::alu;
 use crate::sim::mem::DeviceMemory;
-use crate::sim::snapshot::ThreadCapture;
+use crate::sim::snapshot::{ExecProfile, ThreadCapture};
 use std::sync::atomic::{AtomicBool, Ordering};
 
 pub type Mask = u32;
@@ -42,6 +42,9 @@ pub struct TEnv<'a> {
     pub cost: &'a mut u64,
     pub insts: &'a mut u64,
     pub gbytes: &'a mut u64,
+    /// Hardware-invariant execution counters for this block (mode mix,
+    /// atomics, barriers — the observability plane's profiling feed).
+    pub prof: &'a mut ExecProfile,
     /// Cross-shard journaling mode: the block's entry buffer when the
     /// launch executes as a journaled coordinator shard — commutative
     /// global atomics apply locally *and* append typed entries; ordered
@@ -361,6 +364,33 @@ impl CoreState {
     fn exec_inst(&mut self, p: &TensixProgram, env: &mut TEnv, i: &TInst) -> Result<Option<CoreStop>> {
         let active = self.active();
         *env.insts += 1;
+        // Mode-mix attribution: V-prefixed ops ride the vector unit,
+        // everything else (scalar ALU, DMA, mesh coordination) runs on
+        // the scalar core.
+        if matches!(
+            i,
+            TInst::VLaneId { .. }
+                | TInst::VMov { .. }
+                | TInst::VBin { .. }
+                | TInst::VUn { .. }
+                | TInst::VFma { .. }
+                | TInst::VCmp { .. }
+                | TInst::VSel { .. }
+                | TInst::VCvt { .. }
+                | TInst::VRng { .. }
+                | TInst::VLdLocal { .. }
+                | TInst::VStLocal { .. }
+                | TInst::VDmaGather { .. }
+                | TInst::VDmaScatter { .. }
+                | TInst::VAtom { .. }
+                | TInst::VVote { .. }
+                | TInst::VBallot { .. }
+                | TInst::VShfl { .. }
+        ) {
+            env.prof.vector_instructions += 1;
+        } else {
+            env.prof.scalar_instructions += 1;
+        }
         match i {
             // ---- scalar ----
             TInst::SSpecial { dst, kind } => {
@@ -454,6 +484,7 @@ impl CoreState {
                 if env.atoms.is_some() && !op.commutes() {
                     return Err(HetError::ordered_atomic(op.mnemonic(), a));
                 }
+                env.prof.global_atomics += 1;
                 let old = env.global.atomic_rmw(a, *ty, |old| {
                     alu::apply_atom(*op, *ty, old, v, v2)
                         .map_err(|e| HetError::fault(devname, e.to_string()))
@@ -676,6 +707,9 @@ impl CoreState {
                         if env.atoms.is_some() && !shared && !op.commutes() {
                             return Err(HetError::ordered_atomic(op.mnemonic(), a));
                         }
+                        if !shared {
+                            env.prof.global_atomics += 1;
+                        }
                         let old = env.global.atomic_rmw(a, *ty, |old| {
                             alu::apply_atom(*op, *ty, old, v, v2)
                                 .map_err(|e| HetError::fault(devname, e.to_string()))
@@ -748,6 +782,7 @@ impl CoreState {
             // ---- mesh / sync ----
             TInst::MeshBar { id } => {
                 *env.cost += env.cfg.mesh_bar_cost;
+                env.prof.barrier_waits += 1;
                 if active != self.full_mask {
                     return Err(HetError::fault(
                         env.cfg.name,

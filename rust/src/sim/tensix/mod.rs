@@ -158,6 +158,7 @@ impl TensixSim {
             device_cycles: 0,
             total_cycles: run.totals.total_cycles,
             global_bytes: run.totals.global_bytes,
+            profile: run.totals.profile,
         };
 
         // Device critical path.
@@ -250,6 +251,7 @@ impl TensixSim {
         let mut core_costs = vec![0u64; num_cores as usize];
         let mut insts = 0u64;
         let mut gbytes = 0u64;
+        let mut prof = ExecProfile { blocks_executed: 1, ..Default::default() };
         // Cross-shard journal buffer: cores run sequentially within the
         // block scheduler, so entries land in deterministic order.
         let mut atoms_buf: Vec<AtomicEntry> = Vec::new();
@@ -273,6 +275,7 @@ impl TensixSim {
                     cost: &mut core_costs[c],
                     insts: &mut insts,
                     gbytes: &mut gbytes,
+                    prof: &mut prof,
                     atoms: if journal.is_some() { Some(&mut atoms_buf) } else { None },
                 };
                 statuses[c] = match cores[c].run(p, &mut env)? {
@@ -294,6 +297,7 @@ impl TensixSim {
                     warp_instructions: insts,
                     total_cycles: core_costs.iter().sum::<u64>(),
                     global_bytes: gbytes,
+                    profile: prof,
                 };
                 return Ok((BlockState::Done, block_cost, totals));
             }
@@ -325,6 +329,7 @@ impl TensixSim {
                     warp_instructions: insts,
                     total_cycles: core_costs.iter().sum::<u64>(),
                     global_bytes: gbytes,
+                    profile: prof,
                 };
                 return Ok((
                     BlockState::Suspended(BlockCapture {
@@ -414,6 +419,7 @@ impl TensixSim {
         let mut core_costs = vec![0u64; n_cores as usize];
         let mut insts = 0u64;
         let mut gbytes = 0u64;
+        let mut prof = ExecProfile { blocks_executed: 1, ..Default::default() };
         // MIMD threads run sequentially here, so journal entries land in
         // thread order — deterministic for any worker count.
         let mut atoms_buf: Vec<AtomicEntry> = Vec::new();
@@ -438,6 +444,7 @@ impl TensixSim {
                 cost: &mut core_costs[slot],
                 insts: &mut insts,
                 gbytes: &mut gbytes,
+                prof: &mut prof,
                 atoms: if journal.is_some() { Some(&mut atoms_buf) } else { None },
             };
             match core.run(p, &mut env)? {
@@ -458,6 +465,7 @@ impl TensixSim {
             warp_instructions: insts,
             total_cycles: core_costs.iter().sum::<u64>(),
             global_bytes: gbytes,
+            profile: prof,
         };
         Ok((BlockState::Done, block_cost, totals))
     }

@@ -65,6 +65,13 @@ def main(argv):
         # profile increment and must stay unmeasurable. Steady-state
         # tier-1/tier-2 wall clocks are checked intra-artifact below.
         ("tiering", "unarmed_launch_s"),
+        # Observability plane (BENCH_e2 `trace`): gate the *disarmed*
+        # launch path — tracing off is the default, and every
+        # instrumentation site must cost one relaxed atomic load, so any
+        # slowdown here is a lock or allocation that leaked onto the hot
+        # path. Armed ring-write and export costs are printed by the
+        # bench but not trend-gated (they scale with ring capacity).
+        ("trace", "disarmed_launch_s"),
         # Static analyzer (BENCH_e4 `analyze`): gate the load-time cost
         # per kernel — the affine engine runs once per (module, kernel)
         # and must stay cheap enough to leave on by default. The per-launch

@@ -1,0 +1,334 @@
+//! Observability-plane integration tests (DESIGN.md §13): launch
+//! lifecycle span trees, the bounded flight recorder, the disarmed
+//! fast path, the unified metrics snapshot, and the Perfetto export.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use hetgpu::obs::{json, Obs, Phase};
+use hetgpu::runtime::api::HetGpu;
+use hetgpu::runtime::device::DeviceKind;
+use hetgpu::runtime::launch::Arg;
+use hetgpu::sim::simt::LaunchDims;
+
+// ---- counting allocator (disarmed no-allocation assertion) ----
+//
+// Thread-local so the count only sees this test thread's allocations —
+// the libtest harness runs other tests concurrently on other threads.
+// `try_with` keeps the allocator safe during TLS teardown.
+
+struct CountingAlloc;
+
+thread_local! {
+    static THREAD_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let _ = THREAD_ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn thread_allocs() -> u64 {
+    THREAD_ALLOCS.with(|c| c.get())
+}
+
+// ---- fixtures ----
+
+/// Barrier-bearing kernel so shard pauses (rebalance) have a landing
+/// site, same shape as the migration suite's persistent kernel.
+const PERSIST_SRC: &str = r#"
+__global__ void persist(float* data, unsigned iters) {
+    unsigned i = blockIdx.x * blockDim.x + threadIdx.x;
+    float acc = data[i];
+    for (unsigned k = 0u; k < iters; k++) {
+        acc = acc * 1.0001f + 1.0f;
+        __syncthreads();
+    }
+    data[i] = acc;
+}
+"#;
+
+const BUMP_SRC: &str = r#"
+__global__ void bump(float* p) {
+    unsigned i = blockIdx.x * blockDim.x + threadIdx.x;
+    p[i] = p[i] + 1.0f;
+}
+"#;
+
+const N: usize = 64; // 2 blocks x 32 threads
+const DIMS: (u32, u32) = (2, 32);
+
+/// A sharded run across devices 0/1 with one mid-flight rebalance onto
+/// device 2, tracing armed. Returns the context for span inspection.
+fn traced_sharded_rebalanced() -> HetGpu {
+    let ctx = HetGpu::with_devices(&[
+        DeviceKind::NvidiaSim,
+        DeviceKind::AmdSim,
+        DeviceKind::TenstorrentSim,
+    ])
+    .unwrap();
+    ctx.arm_tracing();
+    let m = ctx.compile_cuda(PERSIST_SRC).unwrap();
+    let buf = ctx.alloc_buffer::<f32>(N, 0).unwrap();
+    let init: Vec<f32> = (0..N).map(|i| i as f32 * 0.25).collect();
+    ctx.upload(&buf, &init).unwrap();
+    let mut run = ctx
+        .launch(m, "persist")
+        .dims(LaunchDims::d1(DIMS.0, DIMS.1))
+        .args(&[buf.arg(), Arg::U32(40_000)])
+        .sharded(&[0, 1])
+        .unwrap();
+    std::thread::sleep(std::time::Duration::from_millis(30));
+    // Whether or not the shard is caught live, the rebalance phase runs
+    // (and emits its span) — no retry loop needed for tree-shape checks.
+    run.rebalance(1, 2).unwrap();
+    let report = run.wait().unwrap();
+    assert_eq!(report.rebalanced, 1);
+    ctx
+}
+
+/// The span tree of a sharded + rebalanced launch has the documented
+/// shape: one Record root, with Analyze / GraphSchedule / Dispatch /
+/// Merge / Replay / Rebalance children, Dispatch pinned to its device
+/// track and Translate nested under a Dispatch span.
+#[test]
+fn span_tree_covers_sharded_rebalanced_launch() {
+    let ctx = traced_sharded_rebalanced();
+    let spans = ctx.trace_spans();
+
+    let root = spans
+        .iter()
+        .find(|s| s.phase == Phase::Record && s.parent == 0 && s.label == "persist (sharded)")
+        .expect("sharded launch must emit a Record root span");
+    assert!(root.id > 0, "span ids are 1-based");
+    assert!(root.dur_us >= 0.0);
+
+    let children: Vec<_> = spans.iter().filter(|s| s.parent == root.id).collect();
+    for phase in [
+        Phase::Analyze,
+        Phase::GraphSchedule,
+        Phase::Dispatch,
+        Phase::Merge,
+        Phase::Replay,
+        Phase::Rebalance,
+    ] {
+        assert!(
+            children.iter().any(|s| s.phase == phase),
+            "missing {} child under the root; got {children:#?}",
+            phase.name()
+        );
+    }
+
+    // Shard dispatches land on their device tracks, under the root.
+    for dev in [0usize, 1usize] {
+        assert!(
+            children.iter().any(|s| s.phase == Phase::Dispatch && s.device == Some(dev)),
+            "no dispatch span for shard device {dev}"
+        );
+    }
+    // The rebalance span names the destination device.
+    let reb = children.iter().find(|s| s.phase == Phase::Rebalance).unwrap();
+    assert_eq!(reb.device, Some(2));
+    assert!(reb.label.contains("dev1 -> dev2"), "{:?}", reb.label);
+
+    // Translate nests under a dispatch span of this tree (the JIT runs
+    // inside the executor's dispatch window).
+    let dispatch_ids: Vec<u64> = children
+        .iter()
+        .filter(|s| s.phase == Phase::Dispatch)
+        .map(|s| s.id)
+        .collect();
+    assert!(
+        spans
+            .iter()
+            .any(|s| s.phase == Phase::Translate && dispatch_ids.contains(&s.parent)),
+        "no translate span nested under a shard dispatch"
+    );
+
+    // Host-side phases stay off the device tracks.
+    for s in &children {
+        if matches!(s.phase, Phase::Analyze | Phase::Merge | Phase::Replay) {
+            assert_eq!(s.device, None, "{} span pinned to a device", s.phase.name());
+        }
+    }
+
+    // The histograms saw the same lifecycle.
+    let phases = ctx.metrics().phases;
+    assert_eq!(phases.len(), Phase::ALL.len());
+    assert!(phases[Phase::Record.index()].count >= 1);
+    assert!(phases[Phase::Dispatch.index()].count >= 2, "one dispatch per shard");
+    assert!(phases[Phase::Rebalance.index()].count >= 1);
+    for p in &phases {
+        if p.count > 0 {
+            assert!(p.p50_us <= p.p90_us && p.p90_us <= p.p99_us, "{p:?}");
+        }
+    }
+}
+
+/// The flight recorder is bounded: over capacity it evicts oldest-first
+/// and counts every eviction.
+#[test]
+fn flight_recorder_drops_oldest_and_counts() {
+    let ctx = HetGpu::with_devices(&[DeviceKind::NvidiaSim]).unwrap();
+    ctx.arm_tracing();
+    ctx.runtime().obs.set_ring_capacity(4);
+    let m = ctx.compile_cuda(BUMP_SRC).unwrap();
+    let buf = ctx.alloc_buffer::<f32>(N, 0).unwrap();
+    ctx.upload(&buf, &[0.0; N]).unwrap();
+    let s = ctx.create_stream(0).unwrap();
+    for _ in 0..8 {
+        ctx.launch(m, "bump")
+            .dims(LaunchDims::d1(DIMS.0, DIMS.1))
+            .arg(buf.arg())
+            .record(s)
+            .unwrap();
+    }
+    ctx.synchronize(s).unwrap();
+
+    let spans = ctx.trace_spans();
+    assert!(spans.len() <= 4, "ring exceeded capacity: {} spans", spans.len());
+    // Eight launches emit far more than four spans, so evictions happened
+    // and the survivors are the newest (ids strictly increasing,
+    // oldest-first ring order).
+    assert!(ctx.metrics().spans_dropped > 0);
+    for w in spans.windows(2) {
+        assert!(w[0].id < w[1].id, "ring must stay in span-id order");
+    }
+    // Histograms are not bounded by the ring: they saw every launch.
+    assert_eq!(ctx.metrics().phases[Phase::Record.index()].count, 8);
+}
+
+/// While disarmed, the plane records nothing — and its instrumentation
+/// gate allocates nothing (one relaxed atomic load per site).
+#[test]
+fn disarmed_path_records_nothing_and_never_allocates() {
+    let ctx = HetGpu::with_devices(&[DeviceKind::AmdSim]).unwrap();
+    ctx.disarm_tracing();
+    let m = ctx.compile_cuda(BUMP_SRC).unwrap();
+    let buf = ctx.alloc_buffer::<f32>(N, 0).unwrap();
+    ctx.upload(&buf, &[0.0; N]).unwrap();
+    let s = ctx.create_stream(0).unwrap();
+    for _ in 0..4 {
+        ctx.launch(m, "bump")
+            .dims(LaunchDims::d1(DIMS.0, DIMS.1))
+            .arg(buf.arg())
+            .record(s)
+            .unwrap();
+    }
+    ctx.synchronize(s).unwrap();
+
+    assert!(ctx.trace_spans().is_empty(), "disarmed launches must not emit spans");
+    let metrics = ctx.metrics();
+    assert_eq!(metrics.spans_dropped, 0);
+    assert!(metrics.profiles.is_empty(), "disarmed launches must not harvest profiles");
+    for p in &metrics.phases {
+        assert_eq!(p.count, 0, "{} histogram populated while disarmed", p.phase.name());
+    }
+
+    // The disarmed gate itself: begin() on a disarmed plane performs no
+    // heap allocation at all.
+    let obs = Obs::new();
+    assert!(!obs.armed());
+    let before = thread_allocs();
+    for _ in 0..10_000 {
+        assert!(obs.begin().is_none());
+    }
+    assert_eq!(thread_allocs() - before, 0, "disarmed begin() allocated");
+}
+
+/// `metrics()` is a faithful fold of the six legacy per-plane getters.
+#[test]
+fn metrics_snapshot_matches_legacy_stats() {
+    let ctx =
+        HetGpu::with_devices(&[DeviceKind::NvidiaSim, DeviceKind::IntelSim]).unwrap();
+    let m = ctx.compile_cuda(BUMP_SRC).unwrap();
+    let buf = ctx.alloc_buffer::<f32>(N, 0).unwrap();
+    ctx.upload(&buf, &[0.0; N]).unwrap();
+    let s = ctx.create_stream(0).unwrap();
+    // Stay far below the tier-2 hot threshold so the background JIT
+    // can't bump counters between the snapshot and the getters.
+    for _ in 0..3 {
+        ctx.launch(m, "bump")
+            .dims(LaunchDims::d1(DIMS.0, DIMS.1))
+            .arg(buf.arg())
+            .record(s)
+            .unwrap();
+    }
+    ctx.synchronize(s).unwrap();
+    // Let the executor threads finish their post-completion bookkeeping
+    // so the snapshot and the getters read identical counters.
+    std::thread::sleep(std::time::Duration::from_millis(50));
+
+    let metrics = ctx.metrics();
+    assert_eq!(metrics.jit, ctx.jit_stats());
+    assert_eq!(metrics.fault, ctx.fault_stats());
+    assert_eq!(metrics.journal, ctx.journal_stats());
+    assert_eq!(metrics.analysis, ctx.analysis_stats());
+    assert_eq!(metrics.graph, ctx.graph_stats());
+    assert_eq!(metrics.dirty.len(), ctx.device_count());
+    for (d, got) in metrics.dirty.iter().enumerate() {
+        assert_eq!(*got, ctx.dirty_stats(d).unwrap(), "device {d} dirty stats diverge");
+    }
+    assert_eq!(metrics.phases.len(), Phase::ALL.len());
+}
+
+/// The exported trace is valid Chrome trace-event JSON: it re-parses,
+/// names every track, and carries the span tree in event args.
+#[test]
+fn perfetto_export_round_trips_through_parser() {
+    let ctx = traced_sharded_rebalanced();
+    let path = std::env::temp_dir().join(format!("hetgpu_obs_test_{}.json", std::process::id()));
+    ctx.export_trace(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    let doc = json::parse(&text).expect("exported trace must be valid JSON");
+    let events = doc
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .expect("top-level traceEvents array");
+
+    // Track metadata: the process plus the host track and one per device.
+    let meta_names: Vec<&str> = events
+        .iter()
+        .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("M"))
+        .filter_map(|e| e.get("args")?.get("name")?.as_str())
+        .collect();
+    assert!(meta_names.contains(&"hetgpu"));
+    assert!(meta_names.contains(&"runtime"));
+    for dev in ["dev0", "dev1", "dev2"] {
+        assert!(
+            meta_names.iter().any(|n| n.starts_with(dev)),
+            "no thread_name track for {dev}: {meta_names:?}"
+        );
+    }
+
+    // Complete events: well-formed timings and span/parent args.
+    let xs: Vec<_> = events
+        .iter()
+        .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X"))
+        .collect();
+    assert!(!xs.is_empty(), "no complete events exported");
+    for e in &xs {
+        assert!(e.get("ts").and_then(|v| v.as_num()).is_some(), "missing ts: {e:?}");
+        assert!(e.get("dur").and_then(|v| v.as_num()).unwrap_or(-1.0) >= 0.0);
+        let args = e.get("args").expect("X event args");
+        assert!(args.get("span").and_then(|v| v.as_num()).unwrap_or(0.0) >= 1.0);
+        assert!(args.get("parent").and_then(|v| v.as_num()).is_some());
+        assert!(args.get("phase").and_then(|v| v.as_str()).is_some());
+    }
+    let names: Vec<&str> = xs.iter().filter_map(|e| e.get("name")?.as_str()).collect();
+    assert!(names.iter().any(|n| n.starts_with("record: ") && n.contains("(sharded)")));
+    assert!(names.iter().any(|n| n.starts_with("dispatch: ")));
+    assert!(names.iter().any(|n| n.starts_with("translate: ")));
+    assert!(names.iter().any(|n| n.starts_with("rebalance: ")));
+}
