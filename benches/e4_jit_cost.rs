@@ -9,7 +9,9 @@
 //! reproduced shape. Costs are "acceptable for long-running programs;
 //! repeated launches don't incur translation overhead" (cache hits).
 
-use hetgpu::runtime::api::{AnalysisLevel, HetGpu, JitTier, TierPolicy};
+use hetgpu::runtime::api::{
+    AnalysisLevel, DiskCacheConfig, HetGpu, JitTier, ModuleHandle, TierPolicy,
+};
 use hetgpu::runtime::device::DeviceKind;
 use hetgpu::runtime::launch::Arg;
 use hetgpu::sim::simt::LaunchDims;
@@ -208,8 +210,7 @@ fn main() {
         }
         t0.elapsed().as_secs_f64() / n as f64
     };
-    let unarmed_launch_s =
-        launch_path(TierPolicy { hot_threshold: u64::MAX, force: None });
+    let unarmed_launch_s = launch_path(TierPolicy { hot_threshold: u64::MAX, force: None });
     let baseline_launch_s = launch_path(TierPolicy {
         hot_threshold: u64::MAX,
         force: Some(JitTier::Baseline),
@@ -264,11 +265,150 @@ fn main() {
         off_launch_s * 1e6
     );
 
+    // ---- AOT fat blobs & the on-disk translation cache (DESIGN.md §14):
+    // first-launch latency for the whole suite under three regimes —
+    // cold JIT, warm disk cache, fat-blob seeding — plus the disarmed
+    // launch path and batched vs looped event recording ----
+    let pol = TierPolicy { hot_threshold: u64::MAX, force: None };
+    let first_launches = |ctx: &HetGpu, m: ModuleHandle| -> f64 {
+        let s = ctx.create_stream(0).unwrap();
+        let t0 = std::time::Instant::now();
+        for kernel in suite::KERNELS {
+            let _ = suite::run_kernel(ctx, m, s, kernel, 8).unwrap();
+        }
+        t0.elapsed().as_secs_f64()
+    };
+
+    // Cold: fresh context, no cache — every first launch pays a lowering.
+    let cold_first_launch_s = {
+        let ctx = HetGpu::with_devices_workers_and_jit(&[DeviceKind::NvidiaSim], 1, pol).unwrap();
+        let m = ctx.compile_cuda(suite::SUITE_SRC).unwrap();
+        first_launches(&ctx, m)
+    };
+
+    // Warm disk: one context populates a shared cache dir (untimed), a
+    // second context then first-launches everything from disk hits.
+    let cache_dir = std::env::temp_dir().join(format!("hetgpu-e4-cache-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&cache_dir);
+    let cache = || DiskCacheConfig { dir: cache_dir.clone(), max_mb: 256 };
+    {
+        let ctx = HetGpu::with_devices_workers_jit_and_cache(
+            &[DeviceKind::NvidiaSim],
+            1,
+            pol,
+            cache(),
+        )
+        .unwrap();
+        let m = ctx.compile_cuda(suite::SUITE_SRC).unwrap();
+        let s = ctx.create_stream(0).unwrap();
+        for kernel in suite::KERNELS {
+            let _ = suite::run_kernel(&ctx, m, s, kernel, 8).unwrap();
+        }
+    }
+    let (warm_disk_first_launch_s, warm_disk_hits) = {
+        let ctx = HetGpu::with_devices_workers_jit_and_cache(
+            &[DeviceKind::NvidiaSim],
+            1,
+            pol,
+            cache(),
+        )
+        .unwrap();
+        let m = ctx.compile_cuda(suite::SUITE_SRC).unwrap();
+        let t = first_launches(&ctx, m);
+        (t, ctx.jit_stats().disk_hits)
+    };
+    assert!(warm_disk_hits > 0, "warm-disk pass never hit the cache");
+    let _ = std::fs::remove_dir_all(&cache_dir);
+
+    // Fat blob: pre-lower everything AOT (untimed), decode + seed in a
+    // fresh context (untimed load), then time zero-translation launches.
+    let blob = {
+        let ctx = HetGpu::with_devices(&[DeviceKind::NvidiaSim]).unwrap();
+        let m = ctx.compile_cuda(suite::SUITE_SRC).unwrap();
+        ctx.build_fat_blob(m).unwrap()
+    };
+    if let Ok(out) = std::env::var("HETGPU_FATBLOB_OUT") {
+        match std::fs::write(&out, &blob) {
+            Ok(()) => println!("\nwrote sample fat blob to {out} ({} bytes)", blob.len()),
+            Err(e) => eprintln!("\nfailed to write fat blob to {out}: {e}"),
+        }
+    }
+    let (fatblob_first_launch_s, aot_seeded) = {
+        let ctx = HetGpu::with_devices_workers_and_jit(&[DeviceKind::NvidiaSim], 1, pol).unwrap();
+        let m = ctx.load_fat_blob(&blob).unwrap();
+        let t = first_launches(&ctx, m);
+        (t, ctx.jit_stats().aot_seeded)
+    };
+    assert!(aot_seeded > 0, "fat blob seeded nothing");
+
+    // Disarmed-cache launch path: repeat launches with no cache configured
+    // must stay as cheap as before the cache plumbing existed.
+    let nocache_launch_s = launch_path(pol);
+
+    println!("\nAOT/warm starts, first launch of all {} suite kernels:", suite::KERNELS.len());
+    println!("  cold JIT        {:>9.2} ms", cold_first_launch_s * 1e3);
+    println!(
+        "  warm disk cache {:>9.2} ms  ({warm_disk_hits} disk hits)",
+        warm_disk_first_launch_s * 1e3
+    );
+    println!(
+        "  fat blob (AOT)  {:>9.2} ms  ({aot_seeded} entries seeded, {} byte blob)",
+        fatblob_first_launch_s * 1e3,
+        blob.len()
+    );
+
+    // Batched vs looped recording: N tiny launches submitted under one
+    // graph lock vs N lock round-trips. Record phase only — the executor
+    // drains between the two timed windows.
+    let (batched_record_s, looped_record_s) = {
+        let ctx = HetGpu::with_devices_and_workers(&[DeviceKind::NvidiaSim], 1).unwrap();
+        let m = ctx.compile_cuda(HOT_SRC).unwrap();
+        let buf = ctx.alloc_buffer::<u32>(64, 0).unwrap();
+        let s = ctx.create_stream(0).unwrap();
+        let n = if smoke { 64 } else { 256 };
+        let batch_reps = if smoke { 3 } else { 10 };
+        let mk = || {
+            ctx.launch(m, "hotloop")
+                .dims(LaunchDims::d1(1, 32))
+                .args(&[buf.arg(), Arg::U32(1)])
+        };
+        mk().record(s).unwrap(); // translate + warm
+        ctx.synchronize(s).unwrap();
+        let mut batched = 0.0f64;
+        for _ in 0..batch_reps {
+            let launches: Vec<_> = (0..n).map(|_| mk()).collect();
+            let t0 = std::time::Instant::now();
+            ctx.record_batch(s, launches).unwrap();
+            batched += t0.elapsed().as_secs_f64();
+            ctx.synchronize(s).unwrap();
+        }
+        let batched = batched / batch_reps as f64;
+        let mut looped = 0.0f64;
+        for _ in 0..batch_reps {
+            let launches: Vec<_> = (0..n).map(|_| mk()).collect();
+            let t0 = std::time::Instant::now();
+            for l in launches {
+                l.record(s).unwrap();
+            }
+            looped += t0.elapsed().as_secs_f64();
+            ctx.synchronize(s).unwrap();
+        }
+        let looped = looped / batch_reps as f64;
+        println!("\nevent recording ({n} tiny launches per rep):");
+        println!("  batched  {:>9.2} us/rep", batched * 1e6);
+        println!(
+            "  looped   {:>9.2} us/rep  (ratio {:.3})",
+            looped * 1e6,
+            batched / looped
+        );
+        (batched, looped)
+    };
+
     // ---- machine-readable artifact (CI perf trajectory) ----
     let json_path =
         std::env::var("HETGPU_BENCH_JSON").unwrap_or_else(|_| "BENCH_e4.json".into());
     let json = format!(
-        "{{\n  \"bench\": \"e4_jit_cost\",\n  \"tiering\": {{\"tier1_steady_s\": {tier1_steady_s:.6}, \"tier2_steady_s\": {tier2_steady_s:.6}, \"speedup\": {speedup:.3}, \"promotion_latency_s\": {promotion_latency_s:.6}, \"launches_during_compile\": {launches_during_compile}, \"unarmed_launch_s\": {unarmed_launch_s:.9}, \"baseline_launch_s\": {baseline_launch_s:.9}}},\n  \"analyze\": {{\"analyze_us_per_kernel\": {analyze_us_per_kernel:.3}, \"kernels_analyzed\": {kernels_analyzed}, \"preflight_launch_s\": {preflight_launch_s:.9}, \"off_launch_s\": {off_launch_s:.9}}}\n}}\n",
+        "{{\n  \"bench\": \"e4_jit_cost\",\n  \"tiering\": {{\"tier1_steady_s\": {tier1_steady_s:.6}, \"tier2_steady_s\": {tier2_steady_s:.6}, \"speedup\": {speedup:.3}, \"promotion_latency_s\": {promotion_latency_s:.6}, \"launches_during_compile\": {launches_during_compile}, \"unarmed_launch_s\": {unarmed_launch_s:.9}, \"baseline_launch_s\": {baseline_launch_s:.9}}},\n  \"analyze\": {{\"analyze_us_per_kernel\": {analyze_us_per_kernel:.3}, \"kernels_analyzed\": {kernels_analyzed}, \"preflight_launch_s\": {preflight_launch_s:.9}, \"off_launch_s\": {off_launch_s:.9}}},\n  \"aot\": {{\"cold_first_launch_s\": {cold_first_launch_s:.6}, \"warm_disk_first_launch_s\": {warm_disk_first_launch_s:.6}, \"fatblob_first_launch_s\": {fatblob_first_launch_s:.6}, \"nocache_launch_s\": {nocache_launch_s:.9}, \"batched_record_s\": {batched_record_s:.9}, \"looped_record_s\": {looped_record_s:.9}}}\n}}\n",
         speedup = tier1_steady_s / tier2_steady_s,
     );
     match std::fs::write(&json_path, &json) {

@@ -1,0 +1,1565 @@
+//! Byte codec for translated `DeviceProgram`s — the payload format both
+//! the fat blob and the on-disk translation cache embed.
+//!
+//! Little-endian, hand-rolled on the same `W`/`R` primitives as the
+//! snapshot wire format (`migrate::blob`). Every enum gets an explicit
+//! tag space (declaration order); unknown tags and truncated payloads
+//! decode to `HetError::Blob`, never a panic — callers treat any decode
+//! error as a cache miss and re-translate from hetIR.
+//!
+//! The codec is deliberately *not* self-versioning: artifacts carry
+//! [`crate::aot::CODEC_VERSION`] in their headers and refuse payloads
+//! from another version before a single payload byte is parsed.
+
+use crate::backends::DeviceProgram;
+use crate::error::Result;
+use crate::hetir::instr::{BinOp, CmpOp, Dim, FenceScope, Reg as VReg, ShflKind, UnOp, VoteKind};
+use crate::hetir::types::{Scalar, Type, Value};
+use crate::isa::simt_isa::{DReg, SAddr, SInst, SOp, SSpecial, SStmt, SimtProgram};
+use crate::isa::tensix_isa::{So, TAddr, TInst, TSpecial, TStmt, TensixProgram, Vo, SR, VR};
+use crate::isa::{CkptSite, DevLoc};
+use crate::migrate::blob::{atom_tag, mode_tag, tag_atom, tag_mode, tag_type, type_tag, R, W};
+
+// ---- small enum tag spaces (declaration order) ----
+
+fn scalar_tag(s: Scalar) -> u8 {
+    type_tag(Type::Scalar(s))
+}
+
+fn tag_scalar(t: u8, r: &R) -> Result<Scalar> {
+    match tag_type(t, r)? {
+        Type::Scalar(s) => Ok(s),
+        Type::Ptr(_) => Err(r.err("pointer type tag where scalar expected")),
+    }
+}
+
+fn bin_tag(op: BinOp) -> u8 {
+    match op {
+        BinOp::Add => 0,
+        BinOp::Sub => 1,
+        BinOp::Mul => 2,
+        BinOp::Div => 3,
+        BinOp::Rem => 4,
+        BinOp::Min => 5,
+        BinOp::Max => 6,
+        BinOp::And => 7,
+        BinOp::Or => 8,
+        BinOp::Xor => 9,
+        BinOp::Shl => 10,
+        BinOp::Shr => 11,
+    }
+}
+
+fn tag_bin(t: u8, r: &R) -> Result<BinOp> {
+    Ok(match t {
+        0 => BinOp::Add,
+        1 => BinOp::Sub,
+        2 => BinOp::Mul,
+        3 => BinOp::Div,
+        4 => BinOp::Rem,
+        5 => BinOp::Min,
+        6 => BinOp::Max,
+        7 => BinOp::And,
+        8 => BinOp::Or,
+        9 => BinOp::Xor,
+        10 => BinOp::Shl,
+        11 => BinOp::Shr,
+        _ => return Err(r.err("bad binop tag")),
+    })
+}
+
+fn un_tag(op: UnOp) -> u8 {
+    match op {
+        UnOp::Neg => 0,
+        UnOp::Not => 1,
+        UnOp::Abs => 2,
+        UnOp::Sqrt => 3,
+        UnOp::Rsqrt => 4,
+        UnOp::Exp => 5,
+        UnOp::Log => 6,
+        UnOp::Sin => 7,
+        UnOp::Cos => 8,
+        UnOp::Popc => 9,
+    }
+}
+
+fn tag_un(t: u8, r: &R) -> Result<UnOp> {
+    Ok(match t {
+        0 => UnOp::Neg,
+        1 => UnOp::Not,
+        2 => UnOp::Abs,
+        3 => UnOp::Sqrt,
+        4 => UnOp::Rsqrt,
+        5 => UnOp::Exp,
+        6 => UnOp::Log,
+        7 => UnOp::Sin,
+        8 => UnOp::Cos,
+        9 => UnOp::Popc,
+        _ => return Err(r.err("bad unop tag")),
+    })
+}
+
+fn cmp_tag(op: CmpOp) -> u8 {
+    match op {
+        CmpOp::Eq => 0,
+        CmpOp::Ne => 1,
+        CmpOp::Lt => 2,
+        CmpOp::Le => 3,
+        CmpOp::Gt => 4,
+        CmpOp::Ge => 5,
+    }
+}
+
+fn tag_cmp(t: u8, r: &R) -> Result<CmpOp> {
+    Ok(match t {
+        0 => CmpOp::Eq,
+        1 => CmpOp::Ne,
+        2 => CmpOp::Lt,
+        3 => CmpOp::Le,
+        4 => CmpOp::Gt,
+        5 => CmpOp::Ge,
+        _ => return Err(r.err("bad cmpop tag")),
+    })
+}
+
+fn dim_tag(d: Dim) -> u8 {
+    match d {
+        Dim::X => 0,
+        Dim::Y => 1,
+        Dim::Z => 2,
+    }
+}
+
+fn tag_dim(t: u8, r: &R) -> Result<Dim> {
+    Ok(match t {
+        0 => Dim::X,
+        1 => Dim::Y,
+        2 => Dim::Z,
+        _ => return Err(r.err("bad dim tag")),
+    })
+}
+
+fn vote_tag(k: VoteKind) -> u8 {
+    match k {
+        VoteKind::Any => 0,
+        VoteKind::All => 1,
+    }
+}
+
+fn tag_vote(t: u8, r: &R) -> Result<VoteKind> {
+    Ok(match t {
+        0 => VoteKind::Any,
+        1 => VoteKind::All,
+        _ => return Err(r.err("bad vote tag")),
+    })
+}
+
+fn shfl_tag(k: ShflKind) -> u8 {
+    match k {
+        ShflKind::Idx => 0,
+        ShflKind::Down => 1,
+        ShflKind::Up => 2,
+        ShflKind::Xor => 3,
+    }
+}
+
+fn tag_shfl(t: u8, r: &R) -> Result<ShflKind> {
+    Ok(match t {
+        0 => ShflKind::Idx,
+        1 => ShflKind::Down,
+        2 => ShflKind::Up,
+        3 => ShflKind::Xor,
+        _ => return Err(r.err("bad shuffle tag")),
+    })
+}
+
+fn fence_tag(s: FenceScope) -> u8 {
+    match s {
+        FenceScope::Block => 0,
+        FenceScope::Device => 1,
+    }
+}
+
+fn tag_fence(t: u8, r: &R) -> Result<FenceScope> {
+    Ok(match t {
+        0 => FenceScope::Block,
+        1 => FenceScope::Device,
+        _ => return Err(r.err("bad fence tag")),
+    })
+}
+
+fn space_tag(s: crate::hetir::types::AddrSpace) -> u8 {
+    match s {
+        crate::hetir::types::AddrSpace::Global => 0,
+        crate::hetir::types::AddrSpace::Shared => 1,
+    }
+}
+
+fn tag_space(t: u8, r: &R) -> Result<crate::hetir::types::AddrSpace> {
+    Ok(match t {
+        0 => crate::hetir::types::AddrSpace::Global,
+        1 => crate::hetir::types::AddrSpace::Shared,
+        _ => return Err(r.err("bad address-space tag")),
+    })
+}
+
+/// Backend-kind tag — part of artifact keys and the fat-blob entry
+/// header, so it must stay stable across releases (append-only).
+pub(crate) fn kind_tag(k: crate::runtime::device::DeviceKind) -> u8 {
+    use crate::runtime::device::DeviceKind::*;
+    match k {
+        NvidiaSim => 0,
+        AmdSim => 1,
+        AmdWave64Sim => 2,
+        IntelSim => 3,
+        TenstorrentSim => 4,
+    }
+}
+
+pub(crate) fn tag_kind(t: u8, r: &R) -> Result<crate::runtime::device::DeviceKind> {
+    use crate::runtime::device::DeviceKind::*;
+    Ok(match t {
+        0 => NvidiaSim,
+        1 => AmdSim,
+        2 => AmdWave64Sim,
+        3 => IntelSim,
+        4 => TenstorrentSim,
+        _ => return Err(r.err("bad device-kind tag")),
+    })
+}
+
+pub(crate) fn tier_tag(t: crate::backends::JitTier) -> u8 {
+    match t {
+        crate::backends::JitTier::Baseline => 0,
+        crate::backends::JitTier::Optimized => 1,
+    }
+}
+
+pub(crate) fn tag_tier(t: u8, r: &R) -> Result<crate::backends::JitTier> {
+    Ok(match t {
+        0 => crate::backends::JitTier::Baseline,
+        1 => crate::backends::JitTier::Optimized,
+        _ => return Err(r.err("bad tier tag")),
+    })
+}
+
+// ---- shared leaf encoders ----
+
+fn write_value(w: &mut W, v: Value) {
+    w.u8(type_tag(v.ty));
+    w.u64(v.bits);
+}
+
+fn read_value(r: &mut R) -> Result<Value> {
+    let t = r.u8()?;
+    let ty = tag_type(t, r)?;
+    Ok(Value { bits: r.u64()?, ty })
+}
+
+fn write_sop(w: &mut W, op: &SOp) {
+    match op {
+        SOp::Reg(d) => {
+            w.u8(0);
+            w.u32(d.0);
+        }
+        SOp::Imm(v) => {
+            w.u8(1);
+            write_value(w, *v);
+        }
+    }
+}
+
+fn read_sop(r: &mut R) -> Result<SOp> {
+    Ok(match r.u8()? {
+        0 => SOp::Reg(DReg(r.u32()?)),
+        1 => SOp::Imm(read_value(r)?),
+        _ => return Err(r.err("bad simt operand tag")),
+    })
+}
+
+fn write_saddr(w: &mut W, a: &SAddr) {
+    w.u32(a.base.0);
+    match a.index {
+        None => w.u8(0),
+        Some(i) => {
+            w.u8(1);
+            w.u32(i.0);
+        }
+    }
+    w.u32(a.scale);
+    w.i64(a.disp);
+}
+
+fn read_saddr(r: &mut R) -> Result<SAddr> {
+    let base = DReg(r.u32()?);
+    let index = match r.u8()? {
+        0 => None,
+        1 => Some(DReg(r.u32()?)),
+        _ => return Err(r.err("bad simt address index flag")),
+    };
+    Ok(SAddr { base, index, scale: r.u32()?, disp: r.i64()? })
+}
+
+fn write_so(w: &mut W, op: &So) {
+    match op {
+        So::Reg(s) => {
+            w.u8(0);
+            w.u16(s.0);
+        }
+        So::Imm(v) => {
+            w.u8(1);
+            write_value(w, *v);
+        }
+    }
+}
+
+fn read_so(r: &mut R) -> Result<So> {
+    Ok(match r.u8()? {
+        0 => So::Reg(SR(r.u16()?)),
+        1 => So::Imm(read_value(r)?),
+        _ => return Err(r.err("bad tensix scalar operand tag")),
+    })
+}
+
+fn write_vo(w: &mut W, op: &Vo) {
+    match op {
+        Vo::Reg(v) => {
+            w.u8(0);
+            w.u16(v.0);
+        }
+        Vo::Splat(s) => {
+            w.u8(1);
+            w.u16(s.0);
+        }
+        Vo::Imm(v) => {
+            w.u8(2);
+            write_value(w, *v);
+        }
+    }
+}
+
+fn read_vo(r: &mut R) -> Result<Vo> {
+    Ok(match r.u8()? {
+        0 => Vo::Reg(VR(r.u16()?)),
+        1 => Vo::Splat(SR(r.u16()?)),
+        2 => Vo::Imm(read_value(r)?),
+        _ => return Err(r.err("bad tensix vector operand tag")),
+    })
+}
+
+fn write_taddr(w: &mut W, a: &TAddr) {
+    w.u16(a.base.0);
+    match a.index {
+        None => w.u8(0),
+        Some(i) => {
+            w.u8(1);
+            w.u16(i.0);
+        }
+    }
+    w.u32(a.scale);
+    w.i64(a.disp);
+}
+
+fn read_taddr(r: &mut R) -> Result<TAddr> {
+    let base = SR(r.u16()?);
+    let index = match r.u8()? {
+        0 => None,
+        1 => Some(SR(r.u16()?)),
+        _ => return Err(r.err("bad tensix address index flag")),
+    };
+    Ok(TAddr { base, index, scale: r.u32()?, disp: r.i64()? })
+}
+
+fn write_devloc(w: &mut W, l: DevLoc) {
+    match l {
+        DevLoc::SimtReg(n) => {
+            w.u8(0);
+            w.u32(n);
+        }
+        DevLoc::TensixScalar(n) => {
+            w.u8(1);
+            w.u16(n);
+        }
+        DevLoc::TensixVector(n) => {
+            w.u8(2);
+            w.u16(n);
+        }
+    }
+}
+
+fn read_devloc(r: &mut R) -> Result<DevLoc> {
+    Ok(match r.u8()? {
+        0 => DevLoc::SimtReg(r.u32()?),
+        1 => DevLoc::TensixScalar(r.u16()?),
+        2 => DevLoc::TensixVector(r.u16()?),
+        _ => return Err(r.err("bad device-location tag")),
+    })
+}
+
+fn write_ckpt_site(w: &mut W, s: &CkptSite) {
+    w.u32(s.barrier_id);
+    w.u32(s.saves.len() as u32);
+    for (vreg, ty, loc) in &s.saves {
+        w.u32(vreg.0);
+        w.u8(type_tag(*ty));
+        write_devloc(w, *loc);
+    }
+}
+
+fn read_ckpt_site(r: &mut R) -> Result<CkptSite> {
+    let barrier_id = r.u32()?;
+    let n = r.count(7)?;
+    let mut saves = Vec::with_capacity(n);
+    for _ in 0..n {
+        let vreg = VReg(r.u32()?);
+        let t = r.u8()?;
+        let ty = tag_type(t, r)?;
+        saves.push((vreg, ty, read_devloc(r)?));
+    }
+    Ok(CkptSite { barrier_id, saves })
+}
+
+fn write_opt_u16(w: &mut W, v: Option<u16>) {
+    match v {
+        None => w.u8(0),
+        Some(n) => {
+            w.u8(1);
+            w.u16(n);
+        }
+    }
+}
+
+fn read_opt_u16(r: &mut R) -> Result<Option<u16>> {
+    Ok(match r.u8()? {
+        0 => None,
+        1 => Some(r.u16()?),
+        _ => return Err(r.err("bad optional-register flag")),
+    })
+}
+
+// ---- SIMT statements ----
+
+fn write_sinst(w: &mut W, i: &SInst) {
+    match i {
+        SInst::Special { dst, kind } => {
+            w.u8(0);
+            w.u32(dst.0);
+            match kind {
+                SSpecial::ThreadIdx(d) => {
+                    w.u8(0);
+                    w.u8(dim_tag(*d));
+                }
+                SSpecial::BlockIdx(d) => {
+                    w.u8(1);
+                    w.u8(dim_tag(*d));
+                }
+                SSpecial::BlockDim(d) => {
+                    w.u8(2);
+                    w.u8(dim_tag(*d));
+                }
+                SSpecial::GridDim(d) => {
+                    w.u8(3);
+                    w.u8(dim_tag(*d));
+                }
+                SSpecial::LaneId => w.u8(4),
+                SSpecial::LinearTid => w.u8(5),
+            }
+        }
+        SInst::Mov { dst, src } => {
+            w.u8(1);
+            w.u32(dst.0);
+            write_sop(w, src);
+        }
+        SInst::Bin { op, ty, dst, a, b } => {
+            w.u8(2);
+            w.u8(bin_tag(*op));
+            w.u8(scalar_tag(*ty));
+            w.u32(dst.0);
+            write_sop(w, a);
+            write_sop(w, b);
+        }
+        SInst::Un { op, ty, dst, a } => {
+            w.u8(3);
+            w.u8(un_tag(*op));
+            w.u8(scalar_tag(*ty));
+            w.u32(dst.0);
+            write_sop(w, a);
+        }
+        SInst::Fma { ty, dst, a, b, c } => {
+            w.u8(4);
+            w.u8(scalar_tag(*ty));
+            w.u32(dst.0);
+            write_sop(w, a);
+            write_sop(w, b);
+            write_sop(w, c);
+        }
+        SInst::Cmp { op, ty, dst, a, b } => {
+            w.u8(5);
+            w.u8(cmp_tag(*op));
+            w.u8(scalar_tag(*ty));
+            w.u32(dst.0);
+            write_sop(w, a);
+            write_sop(w, b);
+        }
+        SInst::Sel { dst, cond, a, b } => {
+            w.u8(6);
+            w.u32(dst.0);
+            write_sop(w, cond);
+            write_sop(w, a);
+            write_sop(w, b);
+        }
+        SInst::Cvt { from, to, dst, src } => {
+            w.u8(7);
+            w.u8(scalar_tag(*from));
+            w.u8(scalar_tag(*to));
+            w.u32(dst.0);
+            write_sop(w, src);
+        }
+        SInst::PtrAdd { dst, addr } => {
+            w.u8(8);
+            w.u32(dst.0);
+            write_saddr(w, addr);
+        }
+        SInst::Ld { space, ty, dst, addr } => {
+            w.u8(9);
+            w.u8(space_tag(*space));
+            w.u8(scalar_tag(*ty));
+            w.u32(dst.0);
+            write_saddr(w, addr);
+        }
+        SInst::St { space, ty, addr, val } => {
+            w.u8(10);
+            w.u8(space_tag(*space));
+            w.u8(scalar_tag(*ty));
+            write_saddr(w, addr);
+            write_sop(w, val);
+        }
+        SInst::Atom { op, space, ty, dst, addr, val, val2 } => {
+            w.u8(11);
+            w.u8(atom_tag(*op));
+            w.u8(space_tag(*space));
+            w.u8(scalar_tag(*ty));
+            match dst {
+                None => w.u8(0),
+                Some(d) => {
+                    w.u8(1);
+                    w.u32(d.0);
+                }
+            }
+            write_saddr(w, addr);
+            write_sop(w, val);
+            match val2 {
+                None => w.u8(0),
+                Some(v) => {
+                    w.u8(1);
+                    write_sop(w, v);
+                }
+            }
+        }
+        SInst::BarSync { id } => {
+            w.u8(12);
+            w.u32(*id);
+        }
+        SInst::Ckpt { site } => {
+            w.u8(13);
+            write_ckpt_site(w, site);
+        }
+        SInst::TeamSync => w.u8(14),
+        SInst::Fence { scope } => {
+            w.u8(15);
+            w.u8(fence_tag(*scope));
+        }
+        SInst::Vote { kind, dst, src } => {
+            w.u8(16);
+            w.u8(vote_tag(*kind));
+            w.u32(dst.0);
+            write_sop(w, src);
+        }
+        SInst::Ballot { dst, src } => {
+            w.u8(17);
+            w.u32(dst.0);
+            write_sop(w, src);
+        }
+        SInst::Shfl { kind, ty, dst, val, lane } => {
+            w.u8(18);
+            w.u8(shfl_tag(*kind));
+            w.u8(scalar_tag(*ty));
+            w.u32(dst.0);
+            write_sop(w, val);
+            write_sop(w, lane);
+        }
+        SInst::Rng { dst, state } => {
+            w.u8(19);
+            w.u32(dst.0);
+            w.u32(state.0);
+        }
+        SInst::Trap { code } => {
+            w.u8(20);
+            w.u32(*code);
+        }
+    }
+}
+
+fn read_sinst(r: &mut R) -> Result<SInst> {
+    Ok(match r.u8()? {
+        0 => {
+            let dst = DReg(r.u32()?);
+            let kind = match r.u8()? {
+                0 => SSpecial::ThreadIdx(tag_dim(r.u8()?, r)?),
+                1 => SSpecial::BlockIdx(tag_dim(r.u8()?, r)?),
+                2 => SSpecial::BlockDim(tag_dim(r.u8()?, r)?),
+                3 => SSpecial::GridDim(tag_dim(r.u8()?, r)?),
+                4 => SSpecial::LaneId,
+                5 => SSpecial::LinearTid,
+                _ => return Err(r.err("bad simt special tag")),
+            };
+            SInst::Special { dst, kind }
+        }
+        1 => SInst::Mov { dst: DReg(r.u32()?), src: read_sop(r)? },
+        2 => {
+            let op = tag_bin(r.u8()?, r)?;
+            let t = r.u8()?;
+            let ty = tag_scalar(t, r)?;
+            SInst::Bin { op, ty, dst: DReg(r.u32()?), a: read_sop(r)?, b: read_sop(r)? }
+        }
+        3 => {
+            let op = tag_un(r.u8()?, r)?;
+            let t = r.u8()?;
+            let ty = tag_scalar(t, r)?;
+            SInst::Un { op, ty, dst: DReg(r.u32()?), a: read_sop(r)? }
+        }
+        4 => {
+            let t = r.u8()?;
+            let ty = tag_scalar(t, r)?;
+            SInst::Fma {
+                ty,
+                dst: DReg(r.u32()?),
+                a: read_sop(r)?,
+                b: read_sop(r)?,
+                c: read_sop(r)?,
+            }
+        }
+        5 => {
+            let op = tag_cmp(r.u8()?, r)?;
+            let t = r.u8()?;
+            let ty = tag_scalar(t, r)?;
+            SInst::Cmp { op, ty, dst: DReg(r.u32()?), a: read_sop(r)?, b: read_sop(r)? }
+        }
+        6 => SInst::Sel {
+            dst: DReg(r.u32()?),
+            cond: read_sop(r)?,
+            a: read_sop(r)?,
+            b: read_sop(r)?,
+        },
+        7 => {
+            let f = r.u8()?;
+            let from = tag_scalar(f, r)?;
+            let t = r.u8()?;
+            let to = tag_scalar(t, r)?;
+            SInst::Cvt { from, to, dst: DReg(r.u32()?), src: read_sop(r)? }
+        }
+        8 => SInst::PtrAdd { dst: DReg(r.u32()?), addr: read_saddr(r)? },
+        9 => {
+            let space = tag_space(r.u8()?, r)?;
+            let t = r.u8()?;
+            let ty = tag_scalar(t, r)?;
+            SInst::Ld { space, ty, dst: DReg(r.u32()?), addr: read_saddr(r)? }
+        }
+        10 => {
+            let space = tag_space(r.u8()?, r)?;
+            let t = r.u8()?;
+            let ty = tag_scalar(t, r)?;
+            SInst::St { space, ty, addr: read_saddr(r)?, val: read_sop(r)? }
+        }
+        11 => {
+            let op = tag_atom(r.u8()?, r)?;
+            let space = tag_space(r.u8()?, r)?;
+            let t = r.u8()?;
+            let ty = tag_scalar(t, r)?;
+            let dst = match r.u8()? {
+                0 => None,
+                1 => Some(DReg(r.u32()?)),
+                _ => return Err(r.err("bad atomic dst flag")),
+            };
+            let addr = read_saddr(r)?;
+            let val = read_sop(r)?;
+            let val2 = match r.u8()? {
+                0 => None,
+                1 => Some(read_sop(r)?),
+                _ => return Err(r.err("bad atomic val2 flag")),
+            };
+            SInst::Atom { op, space, ty, dst, addr, val, val2 }
+        }
+        12 => SInst::BarSync { id: r.u32()? },
+        13 => SInst::Ckpt { site: read_ckpt_site(r)? },
+        14 => SInst::TeamSync,
+        15 => SInst::Fence { scope: tag_fence(r.u8()?, r)? },
+        16 => {
+            let kind = tag_vote(r.u8()?, r)?;
+            SInst::Vote { kind, dst: DReg(r.u32()?), src: read_sop(r)? }
+        }
+        17 => SInst::Ballot { dst: DReg(r.u32()?), src: read_sop(r)? },
+        18 => {
+            let kind = tag_shfl(r.u8()?, r)?;
+            let t = r.u8()?;
+            let ty = tag_scalar(t, r)?;
+            SInst::Shfl { kind, ty, dst: DReg(r.u32()?), val: read_sop(r)?, lane: read_sop(r)? }
+        }
+        19 => SInst::Rng { dst: DReg(r.u32()?), state: DReg(r.u32()?) },
+        20 => SInst::Trap { code: r.u32()? },
+        _ => return Err(r.err("bad simt instruction tag")),
+    })
+}
+
+fn write_sstmt(w: &mut W, s: &SStmt) {
+    match s {
+        SStmt::I(i) => {
+            w.u8(0);
+            write_sinst(w, i);
+        }
+        SStmt::If { cond, then_b, else_b } => {
+            w.u8(1);
+            w.u32(cond.0);
+            w.u64(*then_b as u64);
+            w.u64(*else_b as u64);
+        }
+        SStmt::Loop { cond, cond_reg, body } => {
+            w.u8(2);
+            w.u64(*cond as u64);
+            w.u32(cond_reg.0);
+            w.u64(*body as u64);
+        }
+        SStmt::Break => w.u8(3),
+        SStmt::Continue => w.u8(4),
+        SStmt::Return => w.u8(5),
+    }
+}
+
+fn read_sstmt(r: &mut R) -> Result<SStmt> {
+    Ok(match r.u8()? {
+        0 => SStmt::I(read_sinst(r)?),
+        1 => SStmt::If {
+            cond: DReg(r.u32()?),
+            then_b: r.u64()? as usize,
+            else_b: r.u64()? as usize,
+        },
+        2 => SStmt::Loop {
+            cond: r.u64()? as usize,
+            cond_reg: DReg(r.u32()?),
+            body: r.u64()? as usize,
+        },
+        3 => SStmt::Break,
+        4 => SStmt::Continue,
+        5 => SStmt::Return,
+        _ => return Err(r.err("bad simt statement tag")),
+    })
+}
+
+// ---- Tensix statements ----
+
+fn write_tspecial(w: &mut W, k: &TSpecial) {
+    match k {
+        TSpecial::BlockIdx(d) => {
+            w.u8(0);
+            w.u8(dim_tag(*d));
+        }
+        TSpecial::BlockDim(d) => {
+            w.u8(1);
+            w.u8(dim_tag(*d));
+        }
+        TSpecial::GridDim(d) => {
+            w.u8(2);
+            w.u8(dim_tag(*d));
+        }
+        TSpecial::CoreSlot => w.u8(3),
+        TSpecial::MimdThread(d) => {
+            w.u8(4);
+            w.u8(dim_tag(*d));
+        }
+    }
+}
+
+fn read_tspecial(r: &mut R) -> Result<TSpecial> {
+    Ok(match r.u8()? {
+        0 => TSpecial::BlockIdx(tag_dim(r.u8()?, r)?),
+        1 => TSpecial::BlockDim(tag_dim(r.u8()?, r)?),
+        2 => TSpecial::GridDim(tag_dim(r.u8()?, r)?),
+        3 => TSpecial::CoreSlot,
+        4 => TSpecial::MimdThread(tag_dim(r.u8()?, r)?),
+        _ => return Err(r.err("bad tensix special tag")),
+    })
+}
+
+fn write_tinst(w: &mut W, i: &TInst) {
+    match i {
+        TInst::SSpecial { dst, kind } => {
+            w.u8(0);
+            w.u16(dst.0);
+            write_tspecial(w, kind);
+        }
+        TInst::SMov { dst, src } => {
+            w.u8(1);
+            w.u16(dst.0);
+            write_so(w, src);
+        }
+        TInst::SBin { op, ty, dst, a, b } => {
+            w.u8(2);
+            w.u8(bin_tag(*op));
+            w.u8(scalar_tag(*ty));
+            w.u16(dst.0);
+            write_so(w, a);
+            write_so(w, b);
+        }
+        TInst::SUn { op, ty, dst, a } => {
+            w.u8(3);
+            w.u8(un_tag(*op));
+            w.u8(scalar_tag(*ty));
+            w.u16(dst.0);
+            write_so(w, a);
+        }
+        TInst::SCmp { op, ty, dst, a, b } => {
+            w.u8(4);
+            w.u8(cmp_tag(*op));
+            w.u8(scalar_tag(*ty));
+            w.u16(dst.0);
+            write_so(w, a);
+            write_so(w, b);
+        }
+        TInst::SSel { dst, cond, a, b } => {
+            w.u8(5);
+            w.u16(dst.0);
+            write_so(w, cond);
+            write_so(w, a);
+            write_so(w, b);
+        }
+        TInst::SCvt { from, to, dst, src } => {
+            w.u8(6);
+            w.u8(scalar_tag(*from));
+            w.u8(scalar_tag(*to));
+            w.u16(dst.0);
+            write_so(w, src);
+        }
+        TInst::SFma { ty, dst, a, b, c } => {
+            w.u8(7);
+            w.u8(scalar_tag(*ty));
+            w.u16(dst.0);
+            write_so(w, a);
+            write_so(w, b);
+            write_so(w, c);
+        }
+        TInst::SRng { dst, state } => {
+            w.u8(8);
+            w.u16(dst.0);
+            w.u16(state.0);
+        }
+        TInst::SLdLocal { ty, dst, addr } => {
+            w.u8(9);
+            w.u8(scalar_tag(*ty));
+            w.u16(dst.0);
+            write_taddr(w, addr);
+        }
+        TInst::SStLocal { ty, addr, val } => {
+            w.u8(10);
+            w.u8(scalar_tag(*ty));
+            write_taddr(w, addr);
+            write_so(w, val);
+        }
+        TInst::SDmaLd { ty, dst, addr } => {
+            w.u8(11);
+            w.u8(scalar_tag(*ty));
+            w.u16(dst.0);
+            write_taddr(w, addr);
+        }
+        TInst::SDmaSt { ty, addr, val } => {
+            w.u8(12);
+            w.u8(scalar_tag(*ty));
+            write_taddr(w, addr);
+            write_so(w, val);
+        }
+        TInst::SAtom { op, ty, dst, addr, val, val2 } => {
+            w.u8(13);
+            w.u8(atom_tag(*op));
+            w.u8(scalar_tag(*ty));
+            write_opt_u16(w, dst.map(|d| d.0));
+            write_taddr(w, addr);
+            write_so(w, val);
+            match val2 {
+                None => w.u8(0),
+                Some(v) => {
+                    w.u8(1);
+                    write_so(w, v);
+                }
+            }
+        }
+        TInst::DmaIn { local, global, len } => {
+            w.u8(14);
+            write_taddr(w, local);
+            write_taddr(w, global);
+            write_so(w, len);
+        }
+        TInst::DmaOut { local, global, len } => {
+            w.u8(15);
+            write_taddr(w, local);
+            write_taddr(w, global);
+            write_so(w, len);
+        }
+        TInst::VLaneId { dst } => {
+            w.u8(16);
+            w.u16(dst.0);
+        }
+        TInst::VMov { dst, src } => {
+            w.u8(17);
+            w.u16(dst.0);
+            write_vo(w, src);
+        }
+        TInst::VBin { op, ty, dst, a, b } => {
+            w.u8(18);
+            w.u8(bin_tag(*op));
+            w.u8(scalar_tag(*ty));
+            w.u16(dst.0);
+            write_vo(w, a);
+            write_vo(w, b);
+        }
+        TInst::VUn { op, ty, dst, a } => {
+            w.u8(19);
+            w.u8(un_tag(*op));
+            w.u8(scalar_tag(*ty));
+            w.u16(dst.0);
+            write_vo(w, a);
+        }
+        TInst::VFma { ty, dst, a, b, c } => {
+            w.u8(20);
+            w.u8(scalar_tag(*ty));
+            w.u16(dst.0);
+            write_vo(w, a);
+            write_vo(w, b);
+            write_vo(w, c);
+        }
+        TInst::VCmp { op, ty, dst, a, b } => {
+            w.u8(21);
+            w.u8(cmp_tag(*op));
+            w.u8(scalar_tag(*ty));
+            w.u16(dst.0);
+            write_vo(w, a);
+            write_vo(w, b);
+        }
+        TInst::VSel { dst, cond, a, b } => {
+            w.u8(22);
+            w.u16(dst.0);
+            write_vo(w, cond);
+            write_vo(w, a);
+            write_vo(w, b);
+        }
+        TInst::VCvt { from, to, dst, src } => {
+            w.u8(23);
+            w.u8(scalar_tag(*from));
+            w.u8(scalar_tag(*to));
+            w.u16(dst.0);
+            write_vo(w, src);
+        }
+        TInst::VRng { dst, state } => {
+            w.u8(24);
+            w.u16(dst.0);
+            w.u16(state.0);
+        }
+        TInst::VLdLocal { ty, dst, base, idx, scale, disp } => {
+            w.u8(25);
+            w.u8(scalar_tag(*ty));
+            w.u16(dst.0);
+            w.u16(base.0);
+            write_opt_u16(w, idx.map(|i| i.0));
+            w.u32(*scale);
+            w.i64(*disp);
+        }
+        TInst::VStLocal { ty, base, idx, scale, disp, val } => {
+            w.u8(26);
+            w.u8(scalar_tag(*ty));
+            w.u16(base.0);
+            write_opt_u16(w, idx.map(|i| i.0));
+            w.u32(*scale);
+            w.i64(*disp);
+            write_vo(w, val);
+        }
+        TInst::VDmaGather { ty, dst, base, idx, scale, disp } => {
+            w.u8(27);
+            w.u8(scalar_tag(*ty));
+            w.u16(dst.0);
+            w.u16(base.0);
+            write_opt_u16(w, idx.map(|i| i.0));
+            w.u32(*scale);
+            w.i64(*disp);
+        }
+        TInst::VDmaScatter { ty, base, idx, scale, disp, val } => {
+            w.u8(28);
+            w.u8(scalar_tag(*ty));
+            w.u16(base.0);
+            write_opt_u16(w, idx.map(|i| i.0));
+            w.u32(*scale);
+            w.i64(*disp);
+            write_vo(w, val);
+        }
+        TInst::VAtom { op, ty, dst, base, idx, scale, disp, val, val2, local, shared } => {
+            w.u8(29);
+            w.u8(atom_tag(*op));
+            w.u8(scalar_tag(*ty));
+            write_opt_u16(w, dst.map(|d| d.0));
+            w.u16(base.0);
+            write_opt_u16(w, idx.map(|i| i.0));
+            w.u32(*scale);
+            w.i64(*disp);
+            write_vo(w, val);
+            match val2 {
+                None => w.u8(0),
+                Some(v) => {
+                    w.u8(1);
+                    write_vo(w, v);
+                }
+            }
+            w.u8(*local as u8);
+            w.u8(*shared as u8);
+        }
+        TInst::VVote { kind, dst, src } => {
+            w.u8(30);
+            w.u8(vote_tag(*kind));
+            w.u16(dst.0);
+            write_vo(w, src);
+        }
+        TInst::VBallot { dst, src } => {
+            w.u8(31);
+            w.u16(dst.0);
+            write_vo(w, src);
+        }
+        TInst::VShfl { kind, ty, dst, val, lane } => {
+            w.u8(32);
+            w.u8(shfl_tag(*kind));
+            w.u8(scalar_tag(*ty));
+            w.u16(dst.0);
+            write_vo(w, val);
+            write_vo(w, lane);
+        }
+        TInst::MeshBar { id } => {
+            w.u8(33);
+            w.u32(*id);
+        }
+        TInst::MeshVoteAny { dst, src } => {
+            w.u8(34);
+            w.u16(dst.0);
+            write_vo(w, src);
+        }
+        TInst::Ckpt { site } => {
+            w.u8(35);
+            write_ckpt_site(w, site);
+        }
+        TInst::Trap { code } => {
+            w.u8(36);
+            w.u32(*code);
+        }
+    }
+}
+
+fn read_tinst(r: &mut R) -> Result<TInst> {
+    Ok(match r.u8()? {
+        0 => TInst::SSpecial { dst: SR(r.u16()?), kind: read_tspecial(r)? },
+        1 => TInst::SMov { dst: SR(r.u16()?), src: read_so(r)? },
+        2 => {
+            let op = tag_bin(r.u8()?, r)?;
+            let t = r.u8()?;
+            let ty = tag_scalar(t, r)?;
+            TInst::SBin { op, ty, dst: SR(r.u16()?), a: read_so(r)?, b: read_so(r)? }
+        }
+        3 => {
+            let op = tag_un(r.u8()?, r)?;
+            let t = r.u8()?;
+            let ty = tag_scalar(t, r)?;
+            TInst::SUn { op, ty, dst: SR(r.u16()?), a: read_so(r)? }
+        }
+        4 => {
+            let op = tag_cmp(r.u8()?, r)?;
+            let t = r.u8()?;
+            let ty = tag_scalar(t, r)?;
+            TInst::SCmp { op, ty, dst: SR(r.u16()?), a: read_so(r)?, b: read_so(r)? }
+        }
+        5 => {
+            TInst::SSel { dst: SR(r.u16()?), cond: read_so(r)?, a: read_so(r)?, b: read_so(r)? }
+        }
+        6 => {
+            let f = r.u8()?;
+            let from = tag_scalar(f, r)?;
+            let t = r.u8()?;
+            let to = tag_scalar(t, r)?;
+            TInst::SCvt { from, to, dst: SR(r.u16()?), src: read_so(r)? }
+        }
+        7 => {
+            let t = r.u8()?;
+            let ty = tag_scalar(t, r)?;
+            TInst::SFma { ty, dst: SR(r.u16()?), a: read_so(r)?, b: read_so(r)?, c: read_so(r)? }
+        }
+        8 => TInst::SRng { dst: SR(r.u16()?), state: SR(r.u16()?) },
+        9 => {
+            let t = r.u8()?;
+            let ty = tag_scalar(t, r)?;
+            TInst::SLdLocal { ty, dst: SR(r.u16()?), addr: read_taddr(r)? }
+        }
+        10 => {
+            let t = r.u8()?;
+            let ty = tag_scalar(t, r)?;
+            TInst::SStLocal { ty, addr: read_taddr(r)?, val: read_so(r)? }
+        }
+        11 => {
+            let t = r.u8()?;
+            let ty = tag_scalar(t, r)?;
+            TInst::SDmaLd { ty, dst: SR(r.u16()?), addr: read_taddr(r)? }
+        }
+        12 => {
+            let t = r.u8()?;
+            let ty = tag_scalar(t, r)?;
+            TInst::SDmaSt { ty, addr: read_taddr(r)?, val: read_so(r)? }
+        }
+        13 => {
+            let op = tag_atom(r.u8()?, r)?;
+            let t = r.u8()?;
+            let ty = tag_scalar(t, r)?;
+            let dst = read_opt_u16(r)?.map(SR);
+            let addr = read_taddr(r)?;
+            let val = read_so(r)?;
+            let val2 = match r.u8()? {
+                0 => None,
+                1 => Some(read_so(r)?),
+                _ => return Err(r.err("bad atomic val2 flag")),
+            };
+            TInst::SAtom { op, ty, dst, addr, val, val2 }
+        }
+        14 => TInst::DmaIn { local: read_taddr(r)?, global: read_taddr(r)?, len: read_so(r)? },
+        15 => TInst::DmaOut { local: read_taddr(r)?, global: read_taddr(r)?, len: read_so(r)? },
+        16 => TInst::VLaneId { dst: VR(r.u16()?) },
+        17 => TInst::VMov { dst: VR(r.u16()?), src: read_vo(r)? },
+        18 => {
+            let op = tag_bin(r.u8()?, r)?;
+            let t = r.u8()?;
+            let ty = tag_scalar(t, r)?;
+            TInst::VBin { op, ty, dst: VR(r.u16()?), a: read_vo(r)?, b: read_vo(r)? }
+        }
+        19 => {
+            let op = tag_un(r.u8()?, r)?;
+            let t = r.u8()?;
+            let ty = tag_scalar(t, r)?;
+            TInst::VUn { op, ty, dst: VR(r.u16()?), a: read_vo(r)? }
+        }
+        20 => {
+            let t = r.u8()?;
+            let ty = tag_scalar(t, r)?;
+            TInst::VFma { ty, dst: VR(r.u16()?), a: read_vo(r)?, b: read_vo(r)?, c: read_vo(r)? }
+        }
+        21 => {
+            let op = tag_cmp(r.u8()?, r)?;
+            let t = r.u8()?;
+            let ty = tag_scalar(t, r)?;
+            TInst::VCmp { op, ty, dst: VR(r.u16()?), a: read_vo(r)?, b: read_vo(r)? }
+        }
+        22 => {
+            TInst::VSel { dst: VR(r.u16()?), cond: read_vo(r)?, a: read_vo(r)?, b: read_vo(r)? }
+        }
+        23 => {
+            let f = r.u8()?;
+            let from = tag_scalar(f, r)?;
+            let t = r.u8()?;
+            let to = tag_scalar(t, r)?;
+            TInst::VCvt { from, to, dst: VR(r.u16()?), src: read_vo(r)? }
+        }
+        24 => TInst::VRng { dst: VR(r.u16()?), state: VR(r.u16()?) },
+        25 => {
+            let t = r.u8()?;
+            let ty = tag_scalar(t, r)?;
+            TInst::VLdLocal {
+                ty,
+                dst: VR(r.u16()?),
+                base: SR(r.u16()?),
+                idx: read_opt_u16(r)?.map(VR),
+                scale: r.u32()?,
+                disp: r.i64()?,
+            }
+        }
+        26 => {
+            let t = r.u8()?;
+            let ty = tag_scalar(t, r)?;
+            TInst::VStLocal {
+                ty,
+                base: SR(r.u16()?),
+                idx: read_opt_u16(r)?.map(VR),
+                scale: r.u32()?,
+                disp: r.i64()?,
+                val: read_vo(r)?,
+            }
+        }
+        27 => {
+            let t = r.u8()?;
+            let ty = tag_scalar(t, r)?;
+            TInst::VDmaGather {
+                ty,
+                dst: VR(r.u16()?),
+                base: SR(r.u16()?),
+                idx: read_opt_u16(r)?.map(VR),
+                scale: r.u32()?,
+                disp: r.i64()?,
+            }
+        }
+        28 => {
+            let t = r.u8()?;
+            let ty = tag_scalar(t, r)?;
+            TInst::VDmaScatter {
+                ty,
+                base: SR(r.u16()?),
+                idx: read_opt_u16(r)?.map(VR),
+                scale: r.u32()?,
+                disp: r.i64()?,
+                val: read_vo(r)?,
+            }
+        }
+        29 => {
+            let op = tag_atom(r.u8()?, r)?;
+            let t = r.u8()?;
+            let ty = tag_scalar(t, r)?;
+            let dst = read_opt_u16(r)?.map(VR);
+            let base = SR(r.u16()?);
+            let idx = read_opt_u16(r)?.map(VR);
+            let scale = r.u32()?;
+            let disp = r.i64()?;
+            let val = read_vo(r)?;
+            let val2 = match r.u8()? {
+                0 => None,
+                1 => Some(read_vo(r)?),
+                _ => return Err(r.err("bad atomic val2 flag")),
+            };
+            let local = r.u8()? != 0;
+            let shared = r.u8()? != 0;
+            TInst::VAtom { op, ty, dst, base, idx, scale, disp, val, val2, local, shared }
+        }
+        30 => {
+            let kind = tag_vote(r.u8()?, r)?;
+            TInst::VVote { kind, dst: SR(r.u16()?), src: read_vo(r)? }
+        }
+        31 => TInst::VBallot { dst: SR(r.u16()?), src: read_vo(r)? },
+        32 => {
+            let kind = tag_shfl(r.u8()?, r)?;
+            let t = r.u8()?;
+            let ty = tag_scalar(t, r)?;
+            TInst::VShfl { kind, ty, dst: VR(r.u16()?), val: read_vo(r)?, lane: read_vo(r)? }
+        }
+        33 => TInst::MeshBar { id: r.u32()? },
+        34 => TInst::MeshVoteAny { dst: SR(r.u16()?), src: read_vo(r)? },
+        35 => TInst::Ckpt { site: read_ckpt_site(r)? },
+        36 => TInst::Trap { code: r.u32()? },
+        _ => return Err(r.err("bad tensix instruction tag")),
+    })
+}
+
+fn write_tstmt(w: &mut W, s: &TStmt) {
+    match s {
+        TStmt::I(i) => {
+            w.u8(0);
+            write_tinst(w, i);
+        }
+        TStmt::SIf { cond, then_b, else_b } => {
+            w.u8(1);
+            w.u16(cond.0);
+            w.u64(*then_b as u64);
+            w.u64(*else_b as u64);
+        }
+        TStmt::VIf { cond, then_b, else_b, always } => {
+            w.u8(2);
+            w.u16(cond.0);
+            w.u64(*then_b as u64);
+            w.u64(*else_b as u64);
+            w.u8(*always as u8);
+        }
+        TStmt::SLoop { cond, cond_reg, body } => {
+            w.u8(3);
+            w.u64(*cond as u64);
+            w.u16(cond_reg.0);
+            w.u64(*body as u64);
+        }
+        TStmt::VLoop { cond, cond_reg, body, collective } => {
+            w.u8(4);
+            w.u64(*cond as u64);
+            w.u16(cond_reg.0);
+            w.u64(*body as u64);
+            write_opt_u16(w, collective.map(|s| s.0));
+        }
+        TStmt::Break => w.u8(5),
+        TStmt::Continue => w.u8(6),
+        TStmt::Return => w.u8(7),
+    }
+}
+
+fn read_tstmt(r: &mut R) -> Result<TStmt> {
+    Ok(match r.u8()? {
+        0 => TStmt::I(read_tinst(r)?),
+        1 => TStmt::SIf {
+            cond: SR(r.u16()?),
+            then_b: r.u64()? as usize,
+            else_b: r.u64()? as usize,
+        },
+        2 => TStmt::VIf {
+            cond: VR(r.u16()?),
+            then_b: r.u64()? as usize,
+            else_b: r.u64()? as usize,
+            always: r.u8()? != 0,
+        },
+        3 => TStmt::SLoop {
+            cond: r.u64()? as usize,
+            cond_reg: SR(r.u16()?),
+            body: r.u64()? as usize,
+        },
+        4 => TStmt::VLoop {
+            cond: r.u64()? as usize,
+            cond_reg: VR(r.u16()?),
+            body: r.u64()? as usize,
+            collective: read_opt_u16(r)?.map(SR),
+        },
+        5 => TStmt::Break,
+        6 => TStmt::Continue,
+        7 => TStmt::Return,
+        _ => return Err(r.err("bad tensix statement tag")),
+    })
+}
+
+// ---- program envelopes ----
+
+/// Serialize a translated program to its byte payload. Infallible —
+/// every in-memory program has a wire form.
+pub fn encode_program(p: &DeviceProgram) -> Vec<u8> {
+    let mut w = W::new();
+    match p {
+        DeviceProgram::Simt(sp) => {
+            w.u8(0);
+            w.string(&sp.kernel_name);
+            w.u32(sp.num_regs);
+            w.u64(sp.shared_bytes);
+            w.u32(sp.num_params);
+            w.u8(sp.migratable as u8);
+            w.u64(sp.entry as u64);
+            w.u32(sp.ckpt_sites.len() as u32);
+            for site in &sp.ckpt_sites {
+                write_ckpt_site(&mut w, site);
+            }
+            w.u32(sp.blocks.len() as u32);
+            for block in &sp.blocks {
+                w.u32(block.len() as u32);
+                for stmt in block {
+                    write_sstmt(&mut w, stmt);
+                }
+            }
+        }
+        DeviceProgram::Tensix(tp) => {
+            w.u8(1);
+            w.string(&tp.kernel_name);
+            w.u8(mode_tag(Some(tp.mode)));
+            w.u16(tp.num_sregs);
+            w.u16(tp.num_vregs);
+            w.u64(tp.shared_bytes);
+            w.u16(tp.shared_base_sreg.0);
+            w.u32(tp.num_params);
+            w.u8(tp.migratable as u8);
+            w.u64(tp.entry as u64);
+            w.u32(tp.ckpt_sites.len() as u32);
+            for site in &tp.ckpt_sites {
+                write_ckpt_site(&mut w, site);
+            }
+            w.u32(tp.blocks.len() as u32);
+            for block in &tp.blocks {
+                w.u32(block.len() as u32);
+                for stmt in block {
+                    write_tstmt(&mut w, stmt);
+                }
+            }
+        }
+    }
+    w.buf
+}
+
+/// Decode a program payload. Any malformed byte yields `HetError::Blob`;
+/// callers fall back to fresh translation.
+pub fn decode_program(bytes: &[u8]) -> Result<DeviceProgram> {
+    let mut r = R::new(bytes);
+    match r.u8()? {
+        0 => {
+            let kernel_name = r.string()?;
+            let num_regs = r.u32()?;
+            let shared_bytes = r.u64()?;
+            let num_params = r.u32()?;
+            let migratable = r.u8()? != 0;
+            let entry = r.u64()? as usize;
+            let nsites = r.count(8)?;
+            let mut ckpt_sites = Vec::with_capacity(nsites);
+            for _ in 0..nsites {
+                ckpt_sites.push(read_ckpt_site(&mut r)?);
+            }
+            let nblocks = r.count(4)?;
+            let mut blocks = Vec::with_capacity(nblocks);
+            for _ in 0..nblocks {
+                let nstmts = r.count(1)?;
+                let mut block = Vec::with_capacity(nstmts);
+                for _ in 0..nstmts {
+                    block.push(read_sstmt(&mut r)?);
+                }
+                blocks.push(block);
+            }
+            if entry >= blocks.len() {
+                return Err(r.err("entry block out of range"));
+            }
+            Ok(DeviceProgram::Simt(SimtProgram {
+                kernel_name,
+                blocks,
+                entry,
+                num_regs,
+                shared_bytes,
+                num_params,
+                ckpt_sites,
+                migratable,
+            }))
+        }
+        1 => {
+            let kernel_name = r.string()?;
+            let mt = r.u8()?;
+            let mode = match tag_mode(mt, &r)? {
+                Some(m) => m,
+                None => return Err(r.err("tensix program missing mode")),
+            };
+            let num_sregs = r.u16()?;
+            let num_vregs = r.u16()?;
+            let shared_bytes = r.u64()?;
+            let shared_base_sreg = SR(r.u16()?);
+            let num_params = r.u32()?;
+            let migratable = r.u8()? != 0;
+            let entry = r.u64()? as usize;
+            let nsites = r.count(8)?;
+            let mut ckpt_sites = Vec::with_capacity(nsites);
+            for _ in 0..nsites {
+                ckpt_sites.push(read_ckpt_site(&mut r)?);
+            }
+            let nblocks = r.count(4)?;
+            let mut blocks = Vec::with_capacity(nblocks);
+            for _ in 0..nblocks {
+                let nstmts = r.count(1)?;
+                let mut block = Vec::with_capacity(nstmts);
+                for _ in 0..nstmts {
+                    block.push(read_tstmt(&mut r)?);
+                }
+                blocks.push(block);
+            }
+            if entry >= blocks.len() {
+                return Err(r.err("entry block out of range"));
+            }
+            Ok(DeviceProgram::Tensix(TensixProgram {
+                kernel_name,
+                mode,
+                blocks,
+                entry,
+                num_sregs,
+                num_vregs,
+                shared_bytes,
+                shared_base_sreg,
+                num_params,
+                ckpt_sites,
+                migratable,
+            }))
+        }
+        _ => Err(r.err("bad program tag")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backends::{self, JitTier, TranslateOpts};
+    use crate::frontend;
+    use crate::isa::simt_isa::SimtConfig;
+    use crate::isa::tensix_isa::TensixMode;
+
+    /// Exercises branches, loops, barriers (⇒ Ckpt sites), shared memory,
+    /// atomics, team ops, and math intrinsics — a broad ISA surface.
+    const SRC: &str = r#"
+__global__ void stress(float* x, unsigned* bins, unsigned n) {
+    __shared__ float stage[64];
+    unsigned i = blockIdx.x * blockDim.x + threadIdx.x;
+    float acc = 0.0f;
+    for (unsigned k = 0u; k < 8u; k++) {
+        if (i + k < n) {
+            acc += sqrtf(x[i] * 1.5f) + expf(x[i] * 0.001f);
+        }
+        stage[threadIdx.x & 63u] = acc;
+        __syncthreads();
+        acc += stage[(threadIdx.x + k) & 63u];
+    }
+    atomicAdd(&bins[i & 15u], (unsigned)acc);
+    x[i] = acc + __shfl_down_sync(0xffffffffu, acc, 1u);
+}
+"#;
+
+    fn programs() -> Vec<DeviceProgram> {
+        let m = frontend::compile(SRC, "codec-test").unwrap();
+        let k = m.kernel("stress").unwrap();
+        let mut out = Vec::new();
+        for cfg in
+            [SimtConfig::nvidia(), SimtConfig::amd(), SimtConfig::amd_wave64(), SimtConfig::intel()]
+        {
+            for tier in [JitTier::Baseline, JitTier::Optimized] {
+                let opts = TranslateOpts { migratable: true, tier };
+                out.push(DeviceProgram::Simt(backends::translate_simt(k, &cfg, opts).unwrap()));
+            }
+        }
+        for mode in
+            [TensixMode::VectorSingleCore, TensixMode::VectorMultiCore, TensixMode::ScalarMimd]
+        {
+            for tier in [JitTier::Baseline, JitTier::Optimized] {
+                let opts = TranslateOpts { migratable: true, tier };
+                if let Ok(p) = backends::translate_tensix(k, mode, opts) {
+                    out.push(DeviceProgram::Tensix(p));
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn roundtrips_every_backend_and_tier() {
+        let ps = programs();
+        assert!(ps.len() >= 8, "expected a broad program set, got {}", ps.len());
+        for p in &ps {
+            let bytes = encode_program(p);
+            let back = decode_program(&bytes).unwrap();
+            assert_eq!(*p, back);
+        }
+    }
+
+    #[test]
+    fn truncation_fails_closed_at_every_length() {
+        let p = &programs()[0];
+        let bytes = encode_program(p);
+        // Every proper prefix must produce Err, never panic. Step through
+        // a sample of prefix lengths (all of them is O(n²) on big blobs).
+        for cut in (0..bytes.len()).step_by(7) {
+            assert!(decode_program(&bytes[..cut]).is_err(), "prefix {cut} decoded");
+        }
+    }
+
+    #[test]
+    fn bit_flips_never_panic() {
+        let p = &programs()[0];
+        let bytes = encode_program(p);
+        for pos in (0..bytes.len()).step_by(11) {
+            let mut evil = bytes.clone();
+            evil[pos] ^= 0x40;
+            // Either it decodes to *some* program or errors — both fine;
+            // the cache layers above checksum payloads so a silent bit
+            // flip can't actually reach the decoder in practice.
+            let _ = decode_program(&evil);
+        }
+    }
+
+    #[test]
+    fn bad_program_tag_is_rejected() {
+        assert!(decode_program(&[9u8]).is_err());
+        assert!(decode_program(&[]).is_err());
+    }
+}

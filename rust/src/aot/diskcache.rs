@@ -1,0 +1,453 @@
+//! On-disk content-addressed translation cache (DESIGN.md §14).
+//!
+//! One file per translation, named by the FNV-1a-128 hex of the full
+//! content-address key `(IR content hash, backend kind, Tensix mode,
+//! migratable, tier, codec version, kernel name)`. The cache is shared
+//! across processes with no coordination protocol:
+//!
+//! * **Writes** encode into a process/sequence-unique `.tmp` sibling and
+//!   `rename(2)` it into place — readers observe either the old file,
+//!   the new file, or no file, never a torn entry.
+//! * **Reads** take no file locks: one `read()`, then magic / version /
+//!   checksum validation. Anything malformed — truncation, bit flips, a
+//!   codec-version bump, a partial write from a crashed peer — counts as
+//!   a miss and the entry is deleted best-effort. The runtime then
+//!   re-translates from hetIR: fail closed, never crash.
+//! * **Eviction** is size-capped LRU by file mtime, run after each
+//!   store. The cap comes from `HETGPU_CACHE_MAX_MB` (default 512).
+//!
+//! The cache is enabled by pointing `HETGPU_CACHE_DIR` at a directory
+//! (created on demand), or explicitly via [`DiskCacheConfig`] — both env
+//! knobs follow the `HETGPU_SIM_THREADS` warn-once contract: malformed
+//! values warn once per process, naming the bad value and the default
+//! used, and never fail the run.
+
+use crate::aot::codec::{self, kind_tag, tier_tag};
+use crate::aot::CODEC_VERSION;
+use crate::backends::{DeviceProgram, JitTier};
+use crate::hetir::printer::fnv1a128;
+use crate::isa::tensix_isa::TensixMode;
+use crate::migrate::blob::mode_tag;
+use crate::runtime::device::DeviceKind;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+const MAGIC: &[u8; 4] = b"HGPC";
+/// Default size cap when `HETGPU_CACHE_MAX_MB` is unset.
+pub const DEFAULT_MAX_MB: u64 = 512;
+/// Entry filename extension (scans ignore everything else, so foreign
+/// files and in-flight `.tmp` siblings are never evicted or counted).
+const EXT: &str = "hgpc";
+
+/// Explicit cache configuration (the programmatic alternative to the
+/// `HETGPU_CACHE_DIR` / `HETGPU_CACHE_MAX_MB` env knobs).
+#[derive(Debug, Clone)]
+pub struct DiskCacheConfig {
+    /// Cache directory; created on demand.
+    pub dir: PathBuf,
+    /// Size cap in MiB; the LRU sweep evicts oldest-mtime entries first.
+    pub max_mb: u64,
+}
+
+/// Cache observability counters (`HetGpu::cache_stats()`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Entries served (payload validated and decoded).
+    pub hits: u64,
+    /// Lookups that found nothing usable (absent, corrupt, or stale
+    /// version — the last two also delete the offending file).
+    pub misses: u64,
+    /// Entries written (skipped when the key already exists on disk).
+    pub stores: u64,
+    /// Entries removed by the LRU size sweep.
+    pub evictions: u64,
+    /// Current on-disk footprint of the cache directory.
+    pub bytes: u64,
+}
+
+/// Identity of one translation in the content-address space. Everything
+/// that can change the produced program is in here; everything that
+/// can't (e.g. `SimtConfig` contents, which are fixed per kind) is not.
+#[derive(Debug, Clone, Copy)]
+pub struct CacheKey<'a> {
+    /// `hetir::printer::module_hash` of the source module.
+    pub ir_hash: u128,
+    pub kind: DeviceKind,
+    pub tensix_mode: Option<TensixMode>,
+    /// `TranslateOpts::migratable` — changes emitted Ckpt guards.
+    pub migratable: bool,
+    pub tier: JitTier,
+    pub kernel: &'a str,
+}
+
+impl CacheKey<'_> {
+    fn file_name(&self) -> String {
+        let mut key = Vec::with_capacity(32 + self.kernel.len());
+        key.extend_from_slice(&self.ir_hash.to_le_bytes());
+        key.push(kind_tag(self.kind));
+        key.push(mode_tag(self.tensix_mode));
+        key.push(self.migratable as u8);
+        key.push(tier_tag(self.tier));
+        key.extend_from_slice(&CODEC_VERSION.to_le_bytes());
+        key.extend_from_slice(self.kernel.as_bytes());
+        format!("{:032x}.{EXT}", fnv1a128(&key))
+    }
+}
+
+/// The shared cache. All methods are `&self` and lock-free on the file
+/// system — concurrency safety rests entirely on atomic rename.
+#[derive(Debug)]
+pub struct DiskCache {
+    dir: PathBuf,
+    max_bytes: u64,
+    /// Entry-format version stamped into files; parameterized (not the
+    /// constant) so tests can prove a version bump invalidates entries.
+    version: u32,
+    seq: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    stores: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl DiskCache {
+    /// Open (creating the directory if needed). Fails only when the
+    /// directory can't be created — a cache that can't persist is a
+    /// configuration error worth surfacing at build time.
+    pub fn new(cfg: DiskCacheConfig) -> std::io::Result<DiskCache> {
+        std::fs::create_dir_all(&cfg.dir)?;
+        Ok(DiskCache {
+            dir: cfg.dir,
+            max_bytes: cfg.max_mb.saturating_mul(1024 * 1024).max(1),
+            version: CODEC_VERSION,
+            seq: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            stores: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        })
+    }
+
+    /// Test hook: same cache, different stamped format version.
+    #[cfg(test)]
+    pub(crate) fn with_version(cfg: DiskCacheConfig, version: u32) -> std::io::Result<DiskCache> {
+        let mut c = DiskCache::new(cfg)?;
+        c.version = version;
+        Ok(c)
+    }
+
+    /// Cache from the env knobs; `None` when `HETGPU_CACHE_DIR` is unset
+    /// (the default: no persistence, pure in-memory JIT) or unusable.
+    pub fn from_env() -> Option<DiskCache> {
+        let dir = std::env::var("HETGPU_CACHE_DIR").ok()?;
+        let dir = dir.trim();
+        if dir.is_empty() {
+            return None;
+        }
+        let mut max_mb = DEFAULT_MAX_MB;
+        if let Ok(raw) = std::env::var("HETGPU_CACHE_MAX_MB") {
+            let (v, warn) = parse_cache_max_mb(&raw);
+            max_mb = v;
+            if let Some(msg) = warn {
+                crate::hetir::analyze::warn_once(&msg);
+            }
+        }
+        match DiskCache::new(DiskCacheConfig { dir: PathBuf::from(dir), max_mb }) {
+            Ok(c) => Some(c),
+            Err(e) => {
+                crate::hetir::analyze::warn_once(&format!(
+                    "hetgpu: HETGPU_CACHE_DIR={dir:?} is unusable ({e}); \
+                     translation cache disabled for this process"
+                ));
+                None
+            }
+        }
+    }
+
+    fn path_for(&self, key: &CacheKey) -> PathBuf {
+        self.dir.join(key.file_name())
+    }
+
+    /// Look up a translation. Lock-free; every failure mode is a miss.
+    pub fn load(&self, key: &CacheKey) -> Option<DeviceProgram> {
+        let path = self.path_for(key);
+        match self.try_load(&path) {
+            Some(p) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(p)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    fn try_load(&self, path: &Path) -> Option<DeviceProgram> {
+        let bytes = std::fs::read(path).ok()?;
+        match self.parse_entry(&bytes) {
+            Some(p) => Some(p),
+            None => {
+                // Corrupt or version-mismatched: reclaim the slot so the
+                // follow-up store is not blocked by the exists-check.
+                let _ = std::fs::remove_file(path);
+                None
+            }
+        }
+    }
+
+    fn parse_entry(&self, bytes: &[u8]) -> Option<DeviceProgram> {
+        if bytes.len() < 4 + 4 + 8 + 8 || &bytes[..4] != MAGIC {
+            return None;
+        }
+        let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+        if version != self.version {
+            return None;
+        }
+        let sum = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
+        let len = u64::from_le_bytes(bytes[16..24].try_into().unwrap()) as usize;
+        let payload = bytes.get(24..)?;
+        if payload.len() != len || fnv1a128(payload) as u64 != sum {
+            return None;
+        }
+        codec::decode_program(payload).ok()
+    }
+
+    /// Persist a translation. Best-effort: IO errors are swallowed (the
+    /// cache is an accelerator, not a store of record) and an existing
+    /// entry for the key is left untouched.
+    pub fn store(&self, key: &CacheKey, prog: &DeviceProgram) {
+        let path = self.path_for(key);
+        if path.exists() {
+            return;
+        }
+        let payload = codec::encode_program(prog);
+        let mut bytes = Vec::with_capacity(24 + payload.len());
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&self.version.to_le_bytes());
+        bytes.extend_from_slice(&(fnv1a128(&payload) as u64).to_le_bytes());
+        bytes.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        bytes.extend_from_slice(&payload);
+
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let tmp = self.dir.join(format!(
+            "{}.tmp-{}-{}",
+            path.file_name().and_then(|n| n.to_str()).unwrap_or("entry"),
+            std::process::id(),
+            seq
+        ));
+        if std::fs::write(&tmp, &bytes).is_err() {
+            let _ = std::fs::remove_file(&tmp);
+            return;
+        }
+        if std::fs::rename(&tmp, &path).is_err() {
+            let _ = std::fs::remove_file(&tmp);
+            return;
+        }
+        self.stores.fetch_add(1, Ordering::Relaxed);
+        self.evict_to_cap();
+    }
+
+    /// Scan the directory for cache entries: (path, bytes, mtime).
+    fn scan(&self) -> Vec<(PathBuf, u64, std::time::SystemTime)> {
+        let mut out = Vec::new();
+        let Ok(rd) = std::fs::read_dir(&self.dir) else { return out };
+        for entry in rd.flatten() {
+            let path = entry.path();
+            if path.extension().and_then(|e| e.to_str()) != Some(EXT) {
+                continue;
+            }
+            let Ok(meta) = entry.metadata() else { continue };
+            let mtime = meta.modified().unwrap_or(std::time::SystemTime::UNIX_EPOCH);
+            out.push((path, meta.len(), mtime));
+        }
+        out
+    }
+
+    /// LRU sweep: drop oldest-mtime entries until under the byte cap.
+    fn evict_to_cap(&self) {
+        let mut entries = self.scan();
+        let mut total: u64 = entries.iter().map(|(_, len, _)| len).sum();
+        if total <= self.max_bytes {
+            return;
+        }
+        entries.sort_by_key(|(_, _, mtime)| *mtime);
+        for (path, len, _) in entries {
+            if total <= self.max_bytes {
+                break;
+            }
+            if std::fs::remove_file(&path).is_ok() {
+                total = total.saturating_sub(len);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Counters plus the current on-disk footprint (one directory scan).
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            stores: self.stores.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            bytes: self.scan().iter().map(|(_, len, _)| len).sum(),
+        }
+    }
+}
+
+/// Parse `HETGPU_CACHE_MAX_MB`. `0` is clamped to 1 MiB (a zero cap
+/// would evict every entry as it lands), not an error. Returns the value
+/// plus the warning to print for malformed input.
+pub fn parse_cache_max_mb(raw: &str) -> (u64, Option<String>) {
+    match raw.trim().parse::<u64>() {
+        Ok(0) => (1, None),
+        Ok(n) => (n, None),
+        Err(_) => (
+            DEFAULT_MAX_MB,
+            Some(format!(
+                "hetgpu: HETGPU_CACHE_MAX_MB={raw:?} is not a number; \
+                 falling back to the default of {DEFAULT_MAX_MB} MiB"
+            )),
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backends::{self, TranslateOpts};
+    use crate::frontend;
+    use crate::hetir::printer::module_hash;
+    use crate::isa::simt_isa::SimtConfig;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("hetgpu-diskcache-test-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn sample() -> (u128, DeviceProgram) {
+        let src = r#"
+__global__ void bump(unsigned* x) {
+    unsigned i = blockIdx.x * blockDim.x + threadIdx.x;
+    x[i] = x[i] + 1u;
+}
+"#;
+        let m = frontend::compile(src, "cache-test").unwrap();
+        let p = backends::translate_simt(
+            m.kernel("bump").unwrap(),
+            &SimtConfig::nvidia(),
+            TranslateOpts::default(),
+        )
+        .unwrap();
+        (module_hash(&m), DeviceProgram::Simt(p))
+    }
+
+    fn key(ir_hash: u128) -> CacheKey<'static> {
+        CacheKey {
+            ir_hash,
+            kind: DeviceKind::NvidiaSim,
+            tensix_mode: None,
+            migratable: true,
+            tier: JitTier::Baseline,
+            kernel: "bump",
+        }
+    }
+
+    #[test]
+    fn store_then_load_roundtrips() {
+        let dir = tmpdir("roundtrip");
+        let cache = DiskCache::new(DiskCacheConfig { dir: dir.clone(), max_mb: 64 }).unwrap();
+        let (h, prog) = sample();
+        assert!(cache.load(&key(h)).is_none());
+        cache.store(&key(h), &prog);
+        let back = cache.load(&key(h)).expect("stored entry should load");
+        assert_eq!(prog, back);
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.stores), (1, 1, 1));
+        assert!(s.bytes > 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncated_and_bit_flipped_entries_read_as_misses() {
+        let dir = tmpdir("corrupt");
+        let cache = DiskCache::new(DiskCacheConfig { dir: dir.clone(), max_mb: 64 }).unwrap();
+        let (h, prog) = sample();
+        let k = key(h);
+        cache.store(&k, &prog);
+        let path = cache.path_for(&k);
+
+        // Truncate to half: must fall back, and the file must be removed
+        // so a subsequent store can repopulate.
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() / 2]).unwrap();
+        assert!(cache.load(&k).is_none());
+        assert!(!path.exists(), "corrupt entry should be reclaimed");
+        cache.store(&k, &prog);
+        assert!(cache.load(&k).is_some());
+
+        // Flip one payload bit: the checksum must catch it.
+        let mut evil = std::fs::read(&path).unwrap();
+        let last = evil.len() - 1;
+        evil[last] ^= 0x01;
+        std::fs::write(&path, &evil).unwrap();
+        assert!(cache.load(&k).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn version_bump_invalidates_entries() {
+        let dir = tmpdir("version");
+        let cfg = DiskCacheConfig { dir: dir.clone(), max_mb: 64 };
+        let (h, prog) = sample();
+        let old = DiskCache::with_version(cfg.clone(), CODEC_VERSION).unwrap();
+        old.store(&key(h), &prog);
+        assert!(old.load(&key(h)).is_some());
+        // Same directory, same key, newer format: stale entry is a miss.
+        let new = DiskCache::with_version(cfg, CODEC_VERSION + 1).unwrap();
+        assert!(new.load(&key(h)).is_none());
+        assert_eq!(new.stats().misses, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn lru_sweep_keeps_footprint_under_cap() {
+        let dir = tmpdir("lru");
+        // 1 MiB floor via the 0-clamp; entries are far smaller, so force
+        // eviction by dropping the cap below one entry's size instead.
+        let cache = DiskCache::new(DiskCacheConfig { dir: dir.clone(), max_mb: 1 }).unwrap();
+        let (h, prog) = sample();
+        let entry_bytes = {
+            cache.store(&key(h), &prog);
+            cache.stats().bytes
+        };
+        assert!(entry_bytes > 0);
+        // Shrink the cap under the entry size and store a second key:
+        // the sweep must evict down to at most one entry.
+        let mut tight = DiskCache::new(DiskCacheConfig { dir: dir.clone(), max_mb: 1 }).unwrap();
+        tight.max_bytes = entry_bytes;
+        let mut k2 = key(h);
+        k2.kernel = "other";
+        tight.store(&k2, &prog);
+        let s = tight.stats();
+        assert!(s.evictions >= 1, "expected an LRU eviction, stats: {s:?}");
+        assert!(s.bytes <= entry_bytes, "footprint {} over cap {}", s.bytes, entry_bytes);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn env_parsers_follow_the_sim_threads_contract() {
+        // Valid values parse silently.
+        assert_eq!(parse_cache_max_mb("128"), (128, None));
+        // 0 clamps (a zero cap would thrash) without warning.
+        assert_eq!(parse_cache_max_mb("0"), (1, None));
+        // Malformed values fall back to the default and warn, naming the
+        // bad value and the default used.
+        let (v, warn) = parse_cache_max_mb("lots");
+        assert_eq!(v, DEFAULT_MAX_MB);
+        let msg = warn.expect("malformed value must warn");
+        assert!(msg.contains("lots") && msg.contains("512"), "{msg}");
+    }
+}

@@ -1,0 +1,275 @@
+//! The fat-blob artifact (DESIGN.md §14): one distributable file that
+//! carries a hetIR module pre-lowered to **every** backend ISA — each
+//! SIMT vendor config and each Tensix mapping mode, at both JIT tiers —
+//! plus the hetIR text itself as the portable fallback. The classic
+//! fat-binary scheme (cubin per arch + PTX fallback) with hetIR playing
+//! the PTX role: a device the blob wasn't pre-lowered for still loads
+//! and JITs from the embedded IR.
+//!
+//! ```text
+//! "HGFB" | u32 codec version
+//! | u64 ir_hash lo | u64 ir_hash hi      (hetIR content hash)
+//! | string hetIR module text             (portable fallback)
+//! | u32 entry count | per entry:
+//! |   string kernel | u8 kind | u8 mode | u8 tier | u8 migratable
+//! |   u64 payload checksum | bytes payload (aot::codec program)
+//! ```
+//!
+//! **Header-stability contract:** everything through the module text
+//! parses identically in every codec version, so a version-mismatched
+//! blob still yields the module (marked [`FatBlob::stale`], all entries
+//! skipped → pure JIT). Individual entries that fail their checksum or
+//! decode are skipped, never fatal — fail closed, re-translate.
+
+use crate::aot::codec::{self, kind_tag, tag_kind, tag_tier, tier_tag};
+use crate::aot::CODEC_VERSION;
+use crate::backends::{self, DeviceProgram, JitTier, TranslateOpts};
+use crate::error::Result;
+use crate::hetir::module::Module;
+use crate::hetir::printer::{fnv1a128, print_module};
+use crate::isa::simt_isa::SimtConfig;
+use crate::isa::tensix_isa::TensixMode;
+use crate::migrate::blob::{mode_tag, tag_mode, R, W};
+use crate::runtime::device::DeviceKind;
+
+const MAGIC: &[u8; 4] = b"HGFB";
+
+/// One pre-lowered translation inside a fat blob.
+#[derive(Debug, Clone)]
+pub struct FatEntry {
+    pub kernel: String,
+    pub kind: DeviceKind,
+    pub tensix_mode: Option<TensixMode>,
+    pub migratable: bool,
+    pub tier: JitTier,
+    pub prog: DeviceProgram,
+}
+
+/// A parsed fat blob: the portable module plus whatever pre-lowered
+/// entries survived validation.
+#[derive(Debug)]
+pub struct FatBlob {
+    /// Content hash recorded at build time (equals
+    /// `hetir::printer::module_hash(&module)` for an intact blob).
+    pub ir_hash: u128,
+    pub module: Module,
+    pub entries: Vec<FatEntry>,
+    /// Entries dropped by validation (checksum, tags, decode, or a
+    /// truncated tail). Observability only — skipped targets JIT.
+    pub skipped: u32,
+    /// True when the blob was built by a different codec version: the
+    /// module text is still trusted (header-stability contract) but all
+    /// entries were ignored.
+    pub stale: bool,
+}
+
+/// Every (kind, mode) target the AOT pipeline pre-lowers for. SIMT
+/// configs are fixed per kind, so the kind alone names the target.
+fn targets() -> Vec<(DeviceKind, Option<TensixMode>)> {
+    vec![
+        (DeviceKind::NvidiaSim, None),
+        (DeviceKind::AmdSim, None),
+        (DeviceKind::AmdWave64Sim, None),
+        (DeviceKind::IntelSim, None),
+        (DeviceKind::TenstorrentSim, Some(TensixMode::VectorSingleCore)),
+        (DeviceKind::TenstorrentSim, Some(TensixMode::VectorMultiCore)),
+        (DeviceKind::TenstorrentSim, Some(TensixMode::ScalarMimd)),
+    ]
+}
+
+fn simt_config(kind: DeviceKind) -> Option<SimtConfig> {
+    match kind {
+        DeviceKind::NvidiaSim => Some(SimtConfig::nvidia()),
+        DeviceKind::AmdSim => Some(SimtConfig::amd()),
+        DeviceKind::AmdWave64Sim => Some(SimtConfig::amd_wave64()),
+        DeviceKind::IntelSim => Some(SimtConfig::intel()),
+        DeviceKind::TenstorrentSim => None,
+    }
+}
+
+/// Pre-lower `m` for every target × both tiers and pack the fat blob.
+/// Kernels a backend can't lower (e.g. a Tensix mode the uniformity
+/// analysis rejects) are simply absent from the blob — those targets
+/// fall back to the embedded hetIR at load time. Migratable builds only:
+/// the runtime's launch path always resolves `migratable: true` keys.
+pub fn build_fat_blob(m: &Module) -> Result<Vec<u8>> {
+    crate::hetir::verify::verify_module(m)?;
+    let text = print_module(m);
+    let ir_hash = fnv1a128(text.as_bytes());
+
+    let mut entries: Vec<(String, DeviceKind, Option<TensixMode>, JitTier, Vec<u8>)> = Vec::new();
+    for kernel in &m.kernels {
+        for (kind, mode) in targets() {
+            for tier in [JitTier::Baseline, JitTier::Optimized] {
+                let opts = TranslateOpts { migratable: true, tier };
+                let prog = match (simt_config(kind), mode) {
+                    (Some(cfg), None) => backends::translate_simt(kernel, &cfg, opts)
+                        .ok()
+                        .map(DeviceProgram::Simt),
+                    (None, Some(mode)) => backends::translate_tensix(kernel, mode, opts)
+                        .ok()
+                        .map(DeviceProgram::Tensix),
+                    _ => unreachable!("targets() pairs kinds and modes consistently"),
+                };
+                if let Some(p) = prog {
+                    entries.push((kernel.name.clone(), kind, mode, tier, codec::encode_program(&p)));
+                }
+            }
+        }
+    }
+
+    let mut w = W::new();
+    w.buf.extend_from_slice(MAGIC);
+    w.u32(CODEC_VERSION);
+    w.u64(ir_hash as u64);
+    w.u64((ir_hash >> 64) as u64);
+    w.string(&text);
+    w.u32(entries.len() as u32);
+    for (kernel, kind, mode, tier, payload) in &entries {
+        w.string(kernel);
+        w.u8(kind_tag(*kind));
+        w.u8(mode_tag(*mode));
+        w.u8(tier_tag(*tier));
+        w.u8(1); // migratable
+        w.u64(fnv1a128(payload) as u64);
+        w.bytes(payload);
+    }
+    Ok(w.buf)
+}
+
+/// Parse a fat blob. Errors only when the *portable core* (header or
+/// module text) is unusable; damaged entries degrade to JIT instead.
+pub fn parse_fat_blob(bytes: &[u8]) -> Result<FatBlob> {
+    let mut r = R::new(bytes);
+    if r.take(4)? != MAGIC {
+        return Err(r.err("not a fat blob (bad magic)"));
+    }
+    let version = r.u32()?;
+    let ir_hash = (r.u64()? as u128) | ((r.u64()? as u128) << 64);
+    let text = r.string()?;
+    let module = crate::hetir::parser::parse_module(&text)?;
+
+    let mut blob = FatBlob { ir_hash, module, entries: Vec::new(), skipped: 0, stale: false };
+    if version != CODEC_VERSION {
+        // Different codec: entry payloads are unreadable by contract, but
+        // the embedded hetIR above is fully usable. Pure-JIT fallback.
+        blob.stale = true;
+        return Ok(blob);
+    }
+
+    let declared = r.count(1)? as u32;
+    for parsed in 0..declared {
+        // Read the raw fields first so one bad entry never desyncs the
+        // stream; validate after.
+        let raw = (|| -> Result<(String, u8, u8, u8, u8, u64, Vec<u8>)> {
+            Ok((r.string()?, r.u8()?, r.u8()?, r.u8()?, r.u8()?, r.u64()?, r.bytes()?))
+        })();
+        let Ok((kernel, kt, mt, tt, mig, sum, payload)) = raw else {
+            // Truncated tail: everything not yet parsed is lost.
+            blob.skipped += declared - parsed;
+            break;
+        };
+        let entry = (|| -> Option<FatEntry> {
+            let kind = tag_kind(kt, &r).ok()?;
+            let tensix_mode = tag_mode(mt, &r).ok()?;
+            let tier = tag_tier(tt, &r).ok()?;
+            if fnv1a128(&payload) as u64 != sum {
+                return None;
+            }
+            let prog = codec::decode_program(&payload).ok()?;
+            if prog.kernel_name() != kernel {
+                return None;
+            }
+            Some(FatEntry { kernel, kind, tensix_mode, migratable: mig != 0, tier, prog })
+        })();
+        match entry {
+            Some(e) => blob.entries.push(e),
+            None => blob.skipped += 1,
+        }
+    }
+    Ok(blob)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend;
+
+    const SRC: &str = r#"
+__global__ void axpy(float* x, float* y, float a, unsigned n) {
+    unsigned i = blockIdx.x * blockDim.x + threadIdx.x;
+    if (i < n) y[i] = a * x[i] + y[i];
+}
+
+__global__ void hist(unsigned* bins) {
+    unsigned i = blockIdx.x * blockDim.x + threadIdx.x;
+    atomicAdd(&bins[i & 7u], 1u);
+}
+"#;
+
+    fn module() -> Module {
+        frontend::compile(SRC, "fatblob-test").unwrap()
+    }
+
+    #[test]
+    fn build_parse_roundtrip_covers_all_targets() {
+        let m = module();
+        let bytes = build_fat_blob(&m).unwrap();
+        let blob = parse_fat_blob(&bytes).unwrap();
+        assert!(!blob.stale);
+        assert_eq!(blob.skipped, 0);
+        assert_eq!(blob.ir_hash, crate::hetir::printer::module_hash(&blob.module));
+        // Two kernels × 4 SIMT kinds × 2 tiers minimum; Tensix modes are
+        // best-effort but at least one should lower for these kernels.
+        assert!(blob.entries.len() >= 16, "only {} entries", blob.entries.len());
+        assert!(blob.entries.iter().any(|e| e.kind == DeviceKind::TenstorrentSim));
+        assert!(blob.entries.iter().all(|e| e.migratable));
+        // Reparse of the embedded text prints identically (hash-stable).
+        assert_eq!(print_module(&blob.module), print_module(&m));
+    }
+
+    #[test]
+    fn bit_flipped_entry_is_skipped_not_fatal() {
+        let m = module();
+        let bytes = build_fat_blob(&m).unwrap();
+        let intact = parse_fat_blob(&bytes).unwrap();
+        // Flip a byte near the end — inside some entry's payload.
+        let mut evil = bytes.clone();
+        let pos = evil.len() - 9;
+        evil[pos] ^= 0x10;
+        let blob = parse_fat_blob(&evil).unwrap();
+        assert_eq!(blob.entries.len() + blob.skipped as usize, intact.entries.len());
+        assert!(blob.skipped >= 1);
+    }
+
+    #[test]
+    fn truncated_tail_keeps_leading_entries() {
+        let m = module();
+        let bytes = build_fat_blob(&m).unwrap();
+        let intact = parse_fat_blob(&bytes).unwrap();
+        let cut = parse_fat_blob(&bytes[..bytes.len() - 40]).unwrap();
+        assert!(cut.entries.len() < intact.entries.len());
+        assert_eq!(cut.entries.len() + cut.skipped as usize, intact.entries.len());
+        for (a, b) in cut.entries.iter().zip(&intact.entries) {
+            assert_eq!(a.kernel, b.kernel);
+            assert_eq!(a.prog, b.prog);
+        }
+    }
+
+    #[test]
+    fn version_bump_degrades_to_portable_fallback() {
+        let m = module();
+        let mut bytes = build_fat_blob(&m).unwrap();
+        bytes[4] = bytes[4].wrapping_add(1); // codec version lives at [4..8]
+        let blob = parse_fat_blob(&bytes).unwrap();
+        assert!(blob.stale);
+        assert!(blob.entries.is_empty());
+        assert_eq!(blob.module.kernels.len(), 2);
+    }
+
+    #[test]
+    fn garbage_header_is_an_error() {
+        assert!(parse_fat_blob(b"nope").is_err());
+        assert!(parse_fat_blob(b"HGFB").is_err());
+    }
+}

@@ -1,0 +1,41 @@
+//! AOT artifacts & the translation cache (DESIGN.md §14).
+//!
+//! The paper's runtime "dynamically translates this IR to the target
+//! GPU's native code" — correct, but a warm fleet should never pay that
+//! translation twice. This layer closes the loop with two complementary
+//! mechanisms, both keyed by the hetIR **content hash**
+//! ([`crate::hetir::printer::module_hash`]):
+//!
+//! 1. **Fat blobs** ([`fatblob`]) — one versioned artifact carrying the
+//!    module pre-lowered to every backend ISA (each SIMT config × each
+//!    Tensix mode × both JIT tiers) plus the hetIR text itself as the
+//!    portable fallback, mirroring the classic fat-binary
+//!    cubin-per-arch + PTX scheme with hetIR playing the PTX role.
+//!    `HetGpu::load_fat_blob` seeds the JIT cache with zero translation
+//!    work; entries that fail validation are skipped individually and
+//!    fall back to JIT.
+//! 2. **Disk cache** ([`diskcache`]) — an on-disk content-addressed
+//!    store shared across processes. JIT misses consult it before
+//!    lowering; fresh translations (foreground tier 1 and background
+//!    tier 2 alike) persist into it, so a fleet of processes over the
+//!    same modules converges to zero compiles. Writes are
+//!    atomic-rename, reads take no file locks, and every entry is
+//!    checksummed — corrupt or version-mismatched entries read as
+//!    misses (re-translate, never crash).
+//!
+//! The shared [`codec`] serializes a `DeviceProgram` to a little-endian
+//! byte payload; both artifact kinds embed those payloads verbatim, so
+//! one `CODEC_VERSION` bump invalidates both at once.
+
+pub mod codec;
+pub mod diskcache;
+pub mod fatblob;
+
+pub use diskcache::{CacheStats, DiskCache, DiskCacheConfig};
+pub use fatblob::{build_fat_blob, parse_fat_blob, FatBlob, FatEntry};
+
+/// Version of the `DeviceProgram` byte codec (and therefore of every
+/// artifact embedding codec payloads). Bump on ANY change to the ISA
+/// enums or program layouts serialized by [`codec`] — stale artifacts
+/// then read as misses and the runtime re-translates from hetIR.
+pub const CODEC_VERSION: u32 = 1;

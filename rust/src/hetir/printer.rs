@@ -285,6 +285,29 @@ pub fn print_module(m: &Module) -> String {
     out
 }
 
+/// FNV-1a, 128-bit: the content hash used to address AOT artifacts and
+/// on-disk translation-cache entries. Hand-rolled (no external hash
+/// crates); collision resistance is not a security property here — the
+/// cache is advisory and every entry is checksummed independently.
+pub fn fnv1a128(bytes: &[u8]) -> u128 {
+    const OFFSET: u128 = 0x6c62272e07bb014262b821756295c58d;
+    const PRIME: u128 = 0x0000000001000000000000000000013B;
+    let mut h = OFFSET;
+    for &b in bytes {
+        h ^= b as u128;
+        h = h.wrapping_mul(PRIME);
+    }
+    h
+}
+
+/// Content hash of a module: FNV-1a-128 over the canonical printed text.
+/// The printer is the single source of truth for hetIR identity — two
+/// modules that print identically translate identically, so the hash is
+/// a sound content address for every derived artifact.
+pub fn module_hash(m: &Module) -> u128 {
+    fnv1a128(print_module(m).as_bytes())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -49,8 +49,16 @@
 //!   keyed by (module, kernel, device kind, tier), and Chrome
 //!   trace-event / Perfetto export (`HetGpu::export_trace`,
 //!   `HETGPU_TRACE` dump-on-drop). Disarmed cost: one relaxed load.
+//! * [`aot`] — AOT artifacts & the translation cache (DESIGN.md §14): a
+//!   versioned **fat-blob** distributable pre-lowered to every backend
+//!   ISA (SIMT configs × Tensix modes × JIT tiers) with the hetIR text
+//!   retained as the portable fallback, and an on-disk content-addressed
+//!   translation cache (`HETGPU_CACHE_DIR`) keyed by (IR hash, backend,
+//!   `TranslateOpts`, tier, format version) — atomic-rename writes,
+//!   lock-free reads, fail-closed on corruption, size-capped LRU.
 //! * [`xla_native`] — PJRT/XLA "vendor native" path + numerics oracle.
 
+pub mod aot;
 pub mod backends;
 pub mod coordinator;
 pub mod delta;

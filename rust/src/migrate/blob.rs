@@ -60,45 +60,62 @@ const VERSION: u32 = 5;
 const MIN_VERSION: u32 = 2;
 
 // ---- writer ----
+//
+// `W`/`R` and the tag helpers below are crate-visible: the AOT fat-blob
+// and translation-cache codecs (`aot::codec`) serialize `DeviceProgram`s
+// with the same little-endian primitives so the two wire formats can
+// never drift on fundamentals (length-prefix, count guards, tag spaces).
 
-struct W {
-    buf: Vec<u8>,
+pub(crate) struct W {
+    pub(crate) buf: Vec<u8>,
 }
 
 impl W {
-    fn u8(&mut self, v: u8) {
+    pub(crate) fn new() -> Self {
+        W { buf: Vec::new() }
+    }
+    pub(crate) fn u8(&mut self, v: u8) {
         self.buf.push(v);
     }
-    fn u32(&mut self, v: u32) {
+    pub(crate) fn u16(&mut self, v: u16) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
-    fn u64(&mut self, v: u64) {
+    pub(crate) fn u32(&mut self, v: u32) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
-    fn f32(&mut self, v: f32) {
+    pub(crate) fn u64(&mut self, v: u64) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
-    fn bytes(&mut self, v: &[u8]) {
+    pub(crate) fn i64(&mut self, v: i64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    pub(crate) fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    pub(crate) fn bytes(&mut self, v: &[u8]) {
         self.u64(v.len() as u64);
         self.buf.extend_from_slice(v);
     }
-    fn string(&mut self, s: &str) {
+    pub(crate) fn string(&mut self, s: &str) {
         self.bytes(s.as_bytes());
     }
 }
 
 // ---- reader ----
 
-struct R<'a> {
-    buf: &'a [u8],
-    pos: usize,
+pub(crate) struct R<'a> {
+    pub(crate) buf: &'a [u8],
+    pub(crate) pos: usize,
 }
 
 impl<'a> R<'a> {
-    fn err(&self, msg: &str) -> HetError {
+    pub(crate) fn new(buf: &'a [u8]) -> Self {
+        R { buf, pos: 0 }
+    }
+    pub(crate) fn err(&self, msg: &str) -> HetError {
         HetError::Blob { msg: format!("{msg} at offset {}", self.pos) }
     }
-    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+    pub(crate) fn take(&mut self, n: usize) -> Result<&'a [u8]> {
         if self.pos + n > self.buf.len() {
             return Err(self.err("truncated blob"));
         }
@@ -106,32 +123,38 @@ impl<'a> R<'a> {
         self.pos += n;
         Ok(s)
     }
-    fn u8(&mut self) -> Result<u8> {
+    pub(crate) fn u8(&mut self) -> Result<u8> {
         Ok(self.take(1)?[0])
     }
-    fn u32(&mut self) -> Result<u32> {
+    pub(crate) fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    pub(crate) fn u32(&mut self) -> Result<u32> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
-    fn u64(&mut self) -> Result<u64> {
+    pub(crate) fn u64(&mut self) -> Result<u64> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
-    fn f32(&mut self) -> Result<f32> {
+    pub(crate) fn i64(&mut self) -> Result<i64> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    pub(crate) fn f32(&mut self) -> Result<f32> {
         Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
-    fn bytes(&mut self) -> Result<Vec<u8>> {
+    pub(crate) fn bytes(&mut self) -> Result<Vec<u8>> {
         let n = self.u64()? as usize;
         if n > self.buf.len() {
             return Err(self.err("length field exceeds blob size"));
         }
         Ok(self.take(n)?.to_vec())
     }
-    fn string(&mut self) -> Result<String> {
+    pub(crate) fn string(&mut self) -> Result<String> {
         String::from_utf8(self.bytes()?).map_err(|e| HetError::Blob { msg: e.to_string() })
     }
     /// Validate an element count against the remaining bytes (each element
     /// needs at least `min_elem` bytes) — untrusted counts must never
     /// drive `Vec::with_capacity` directly.
-    fn count(&mut self, min_elem: usize) -> Result<usize> {
+    pub(crate) fn count(&mut self, min_elem: usize) -> Result<usize> {
         let n = self.u32()? as usize;
         let remaining = self.buf.len() - self.pos;
         if n.saturating_mul(min_elem.max(1)) > remaining {
@@ -141,7 +164,7 @@ impl<'a> R<'a> {
     }
 }
 
-fn type_tag(t: Type) -> u8 {
+pub(crate) fn type_tag(t: Type) -> u8 {
     match t {
         Type::Scalar(Scalar::Pred) => 0,
         Type::Scalar(Scalar::I32) => 1,
@@ -154,7 +177,7 @@ fn type_tag(t: Type) -> u8 {
     }
 }
 
-fn tag_type(t: u8, r: &R) -> Result<Type> {
+pub(crate) fn tag_type(t: u8, r: &R) -> Result<Type> {
     Ok(match t {
         0 => Type::PRED,
         1 => Type::I32,
@@ -214,7 +237,7 @@ fn read_arg(r: &mut R) -> Result<Arg> {
     })
 }
 
-fn atom_tag(op: AtomOp) -> u8 {
+pub(crate) fn atom_tag(op: AtomOp) -> u8 {
     match op {
         AtomOp::Add => 0,
         AtomOp::Min => 1,
@@ -227,7 +250,7 @@ fn atom_tag(op: AtomOp) -> u8 {
     }
 }
 
-fn tag_atom(t: u8, r: &R) -> Result<AtomOp> {
+pub(crate) fn tag_atom(t: u8, r: &R) -> Result<AtomOp> {
     Ok(match t {
         0 => AtomOp::Add,
         1 => AtomOp::Min,
@@ -241,7 +264,7 @@ fn tag_atom(t: u8, r: &R) -> Result<AtomOp> {
     })
 }
 
-fn mode_tag(m: Option<TensixMode>) -> u8 {
+pub(crate) fn mode_tag(m: Option<TensixMode>) -> u8 {
     match m {
         None => 0,
         Some(TensixMode::VectorSingleCore) => 1,
@@ -250,7 +273,7 @@ fn mode_tag(m: Option<TensixMode>) -> u8 {
     }
 }
 
-fn tag_mode(t: u8, r: &R) -> Result<Option<TensixMode>> {
+pub(crate) fn tag_mode(t: u8, r: &R) -> Result<Option<TensixMode>> {
     Ok(match t {
         0 => None,
         1 => Some(TensixMode::VectorSingleCore),

@@ -35,6 +35,8 @@
 //! pinned host buffers) and [`HetGpu::memcpy_peer_async`] (between device
 //! arenas).
 
+pub use crate::aot::{CacheStats, DiskCacheConfig};
+use crate::aot::{self, DiskCache};
 use crate::coordinator::shard::ShardRange;
 use crate::coordinator::{CoordCache, Coordinator, ShardedLaunch};
 use crate::delta::capture::capture_spans;
@@ -172,6 +174,8 @@ pub struct JournalStats {
 pub struct Metrics {
     /// Tiered-JIT counters ([`HetGpu::jit_stats`]).
     pub jit: JitStats,
+    /// On-disk translation-cache counters ([`HetGpu::cache_stats`]).
+    pub cache: CacheStats,
     /// Fault-plane counters ([`HetGpu::fault_stats`]).
     pub fault: FaultStats,
     /// Cross-shard atomics-journal counters ([`HetGpu::journal_stats`]).
@@ -200,14 +204,14 @@ impl HetGpu {
     /// block-dispatch worker count comes from `HETGPU_SIM_THREADS`
     /// (default: host cores).
     pub fn with_devices(kinds: &[DeviceKind]) -> Result<HetGpu> {
-        HetGpu::build(kinds, None, None)
+        HetGpu::build(kinds, None, None, None)
     }
 
     /// Create a context with an explicit per-device dispatch worker count
     /// (overrides `HETGPU_SIM_THREADS`; `1` forces sequential block
     /// execution).
     pub fn with_devices_and_workers(kinds: &[DeviceKind], workers: usize) -> Result<HetGpu> {
-        HetGpu::build(kinds, Some(workers), None)
+        HetGpu::build(kinds, Some(workers), None, None)
     }
 
     /// Create a context with explicit workers AND an explicit JIT tiering
@@ -218,10 +222,27 @@ impl HetGpu {
         workers: usize,
         jit: TierPolicy,
     ) -> Result<HetGpu> {
-        HetGpu::build(kinds, Some(workers), Some(jit))
+        HetGpu::build(kinds, Some(workers), Some(jit), None)
     }
 
-    fn build(kinds: &[DeviceKind], workers: Option<usize>, jit: Option<TierPolicy>) -> Result<HetGpu> {
+    /// Create a context with an explicit on-disk translation-cache
+    /// location (overrides `HETGPU_CACHE_DIR` / `HETGPU_CACHE_MAX_MB` —
+    /// tests pin cache dirs without racing on process-global env vars).
+    pub fn with_devices_workers_jit_and_cache(
+        kinds: &[DeviceKind],
+        workers: usize,
+        jit: TierPolicy,
+        cache: DiskCacheConfig,
+    ) -> Result<HetGpu> {
+        HetGpu::build(kinds, Some(workers), Some(jit), Some(cache))
+    }
+
+    fn build(
+        kinds: &[DeviceKind],
+        workers: Option<usize>,
+        jit: Option<TierPolicy>,
+        cache: Option<DiskCacheConfig>,
+    ) -> Result<HetGpu> {
         if kinds.is_empty() {
             return Err(HetError::runtime("no devices"));
         }
@@ -240,10 +261,20 @@ impl HetGpu {
             fault.install(plan);
         }
         let jit_policy = jit.unwrap_or_else(TierPolicy::from_env);
+        // The on-disk translation cache: an explicit config wins; else the
+        // `HETGPU_CACHE_DIR` env contract; else disabled. An explicit dir
+        // that can't be created is a hard error (the caller asked for it);
+        // env-configured dirs degrade to no-cache with a warning.
+        let disk = match cache {
+            Some(cfg) => Some(DiskCache::new(cfg).map_err(|e| {
+                HetError::runtime(format!("translation cache dir unusable: {e}"))
+            })?),
+            None => DiskCache::from_env(),
+        };
         let inner = Arc::new(RuntimeInner {
             devices,
             modules: std::sync::RwLock::new(ModuleTable::new()),
-            jit: JitCache::with_policy(jit_policy),
+            jit: JitCache::with_policy_and_disk(jit_policy, disk),
             memory: MemoryManager::new(crate::runtime::device::DEVICE_MEM_BYTES),
             fault,
             // Observability plane: disarmed unless `HETGPU_TRACE` asked
@@ -349,6 +380,46 @@ impl HetGpu {
             let _ = modules.set_analysis(h, r);
         }
         Ok(h)
+    }
+
+    /// Pre-lower every kernel of a loaded module for every backend ISA at
+    /// both JIT tiers and pack the versioned fat-blob artifact
+    /// (DESIGN.md §14) — the AOT half of the zero-translation warm start.
+    /// Feed the bytes back to [`HetGpu::load_fat_blob`] (any process, any
+    /// machine with the same codec version).
+    pub fn build_fat_blob(&self, module: ModuleHandle) -> Result<Vec<u8>> {
+        let modules = self.inner.modules.read().unwrap();
+        let (m, _uid) = modules.get(module)?;
+        aot::build_fat_blob(m)
+    }
+
+    /// Load a module from a fat-blob artifact: parse the embedded hetIR
+    /// (always — the portable fallback), then seed the JIT cache with
+    /// every pre-lowered entry that survives validation, so first
+    /// launches on every backend start at tier 2 with **zero**
+    /// translation work ([`JitStats::aot_seeded`] counts the seeds).
+    ///
+    /// Degradation is silent and per-entry: a stale codec version, a
+    /// corrupt entry, or an unknown target skips that entry and the
+    /// runtime JITs from the embedded IR as if the blob were plain text.
+    pub fn load_fat_blob(&self, bytes: &[u8]) -> Result<ModuleHandle> {
+        let blob = aot::parse_fat_blob(bytes)?;
+        let h = self.load_module(blob.module)?;
+        if !blob.entries.is_empty() {
+            let uid = {
+                let modules = self.inner.modules.read().unwrap();
+                let (_m, uid) = modules.get(h)?;
+                uid
+            };
+            self.inner.jit.seed_aot(uid, blob.entries);
+        }
+        Ok(h)
+    }
+
+    /// On-disk translation-cache counters (hits, misses, stores,
+    /// evictions, resident bytes). All zeros when no cache is configured.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.inner.jit.disk_stats().unwrap_or_default()
     }
 
     /// The static-analysis report for a loaded module, computing and
@@ -691,6 +762,52 @@ impl HetGpu {
         self.graph.enqueue(stream, NodeKind::Launch { spec, shard, journal, trace }, deps)
     }
 
+    /// Record a batch of launches on `stream` in **one** event-graph
+    /// submission — the last launch-batching rung after the per-stream
+    /// JIT memo: every launch is pre-flighted up front, then all nodes
+    /// enter the graph under a single graph lock with a single executor
+    /// wake-up, instead of paying one lock hand-off + condvar notify per
+    /// launch. Returns the launches' events in record order; stream
+    /// ordering within the batch is unchanged (they run in order, like N
+    /// separate `record` calls). Every builder must come from this
+    /// context, and any failure (bad spec, pre-flight rejection) records
+    /// nothing.
+    pub fn record_batch(
+        &self,
+        stream: StreamHandle,
+        launches: Vec<LaunchBuilder<'_>>,
+    ) -> Result<Vec<EventId>> {
+        let obs = &self.inner.obs;
+        let root = obs.begin();
+        let trace = root.map_or(0, |s| s.id);
+        let n = launches.len();
+        let build = || -> Result<Vec<NodeKind>> {
+            let mut kinds = Vec::with_capacity(n);
+            for b in launches {
+                if !std::ptr::eq(b.ctx, self) {
+                    return Err(HetError::runtime(
+                        "record_batch: launch was built on a different context",
+                    ));
+                }
+                let (_ctx, spec, _ws, _atomics, _policy, level) = b.build_spec()?;
+                let a_span = obs.begin();
+                let pf = self.preflight(&spec, level);
+                if let Some(s) = a_span {
+                    obs.end(s, trace, Phase::Analyze, &spec.kernel, None);
+                }
+                pf?;
+                self.inner.modules.read().unwrap().get(spec.module)?;
+                kinds.push(NodeKind::Launch { spec, shard: None, journal: None, trace });
+            }
+            Ok(kinds)
+        };
+        let out = build().and_then(|kinds| self.graph.enqueue_batch(stream, kinds));
+        if let Some(s) = root {
+            obs.end(s, 0, Phase::Record, &format!("batch record ({n} launches)"), None);
+        }
+        out
+    }
+
     // ---- events ----
 
     /// Record a marker event on a stream (the analog of
@@ -907,6 +1024,7 @@ impl HetGpu {
     pub fn metrics(&self) -> Metrics {
         Metrics {
             jit: self.jit_stats(),
+            cache: self.cache_stats(),
             fault: self.fault_stats(),
             journal: self.journal_stats(),
             analysis: self.analysis_stats(),

@@ -423,6 +423,53 @@ impl EventGraph {
         Ok(id)
     }
 
+    /// Record a batch of dependency-less command nodes at the back of
+    /// `stream`'s queue under **one** graph lock acquisition and **one**
+    /// executor wake-up — N `enqueue` calls pay N lock hand-offs and N
+    /// condvar notifies; a batch pays one of each (the `record_batch`
+    /// rung of launch batching). Stream semantics are unchanged: the
+    /// nodes run in order, exactly as if recorded one at a time.
+    pub(crate) fn enqueue_batch(
+        &self,
+        stream: StreamHandle,
+        kinds: Vec<NodeKind>,
+    ) -> Result<Vec<EventId>> {
+        let mut g = self.inner.lock().unwrap();
+        if g.shutdown {
+            return Err(HetError::runtime("runtime is shutting down"));
+        }
+        let sticky = {
+            let st = g.streams.get(stream.slot, stream.gen).ok_or_else(bad_stream)?;
+            st.sticky.is_some()
+        };
+        let mut ids = Vec::with_capacity(kinds.len());
+        for kind in kinds {
+            let status = if sticky {
+                EventStatus::Failed("stream poisoned by earlier error".into())
+            } else {
+                EventStatus::Queued
+            };
+            let (slot, gen) = g.events.insert(EventEntry {
+                status,
+                dep_refs: 0,
+                held: true,
+                stream_slot: stream.slot,
+            });
+            let id = EventId { slot, gen };
+            if !sticky {
+                g.streams
+                    .get_mut(stream.slot, stream.gen)
+                    .expect("validated above")
+                    .queue
+                    .push_back(Node { id, kind, deps: Vec::new(), enqueued: Instant::now() });
+            }
+            ids.push(id);
+        }
+        drop(g);
+        self.cv.notify_all();
+        Ok(ids)
+    }
+
     /// Status of a recorded event; stale handles (retired events) return
     /// `HetError::InvalidHandle`.
     pub fn query(&self, ev: EventId) -> Result<EventStatus> {

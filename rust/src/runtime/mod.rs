@@ -49,6 +49,10 @@ handle::impl_handle_raw!(ModuleHandle, "module");
 struct LoadedModule {
     module: Module,
     uid: u64,
+    /// Content hash of the module's printed hetIR
+    /// ([`crate::hetir::printer::module_hash`]) — the address every
+    /// AOT/disk-cache artifact of this module is keyed by.
+    ir_hash: u128,
     analysis: Option<std::sync::Arc<crate::hetir::analyze::AnalysisReport>>,
 }
 
@@ -67,8 +71,29 @@ impl ModuleTable {
     pub(crate) fn insert(&mut self, module: Module) -> ModuleHandle {
         let uid = self.next_uid;
         self.next_uid += 1;
-        let (slot, gen) = self.table.insert(LoadedModule { module, uid, analysis: None });
+        let ir_hash = crate::hetir::printer::module_hash(&module);
+        let (slot, gen) = self.table.insert(LoadedModule { module, uid, ir_hash, analysis: None });
         ModuleHandle { slot, gen }
+    }
+
+    /// Content hash of a loaded module (the AOT/disk-cache address).
+    pub(crate) fn ir_hash(&self, h: ModuleHandle) -> Result<u128> {
+        self.table.get(h.slot, h.gen).map(|m| m.ir_hash).ok_or_else(|| {
+            HetError::invalid_handle("module", "module was unloaded or never loaded")
+        })
+    }
+
+    /// Content hash by module **uid** (background compiler path; see
+    /// [`ModuleTable::kernel_by_uid`] for why uids, not handles).
+    pub(crate) fn ir_hash_by_uid(&self, uid: u64) -> Option<u128> {
+        for slot in 0..self.table.slot_count() as u32 {
+            if let Some(lm) = self.table.entry_at(slot) {
+                if lm.uid == uid {
+                    return Some(lm.ir_hash);
+                }
+            }
+        }
+        None
     }
 
     /// The cached analysis report for a module, if the analyzer has run.
@@ -235,7 +260,10 @@ impl RuntimeInner {
                         .and_then(|mm| mm.lookup(uid, &spec.kernel, dev.kind, tensix_mode, gen))
                 });
                 match memoized {
-                    Some((p, prof)) => (p, Some(prof)),
+                    Some((p, prof)) => {
+                        self.jit.count_memo_hit();
+                        (p, Some(prof))
+                    }
                     None => {
                         let key = JitKey {
                             module: uid,
@@ -248,8 +276,10 @@ impl RuntimeInner {
                             Engine::Simt(s) => Some(s.cfg.clone()),
                             Engine::Tensix(_) => None,
                         };
+                        let ir_hash = modules.ir_hash(spec.module).ok();
                         let t_span = self.obs.begin();
-                        let res = self.jit.get_or_translate(key, kernel, simt_cfg.as_ref())?;
+                        let res =
+                            self.jit.get_or_translate(key, kernel, simt_cfg.as_ref(), ir_hash)?;
                         if let Some(s) = t_span {
                             let tier = match res.tier {
                                 crate::backends::JitTier::Baseline => "tier1",
@@ -259,7 +289,7 @@ impl RuntimeInner {
                                 s,
                                 parent_span,
                                 crate::obs::Phase::Translate,
-                                &format!("{} {tier}", spec.kernel),
+                                &format!("{} {tier} {}", spec.kernel, res.source),
                                 Some(device_id),
                             );
                         }
@@ -375,10 +405,17 @@ impl RuntimeInner {
 /// this thread: a key whose module vanished, or whose tier-2 lowering
 /// fails, is abandoned and the entry stays on tier 1 forever.
 pub(crate) fn jit_compiler_loop(inner: std::sync::Arc<RuntimeInner>) {
+    use crate::runtime::jit::TranslationSource;
     while let Some(key) = inner.jit.next_hot() {
-        let kernel = {
+        // Already at the top tier (an AOT-seeded entry whose launches
+        // crossed the hot threshold): nothing to compile.
+        if inner.jit.entry_tier(&key) == Some(crate::backends::JitTier::Optimized) {
+            inner.jit.abandon_promotion(&key);
+            continue;
+        }
+        let (kernel, ir_hash) = {
             let modules = inner.modules.read().unwrap();
-            modules.kernel_by_uid(key.module, &key.kernel)
+            (modules.kernel_by_uid(key.module, &key.kernel), modules.ir_hash_by_uid(key.module))
         };
         let Some(kernel) = kernel else {
             inner.jit.abandon_promotion(&key);
@@ -396,9 +433,20 @@ pub(crate) fn jit_compiler_loop(inner: std::sync::Arc<RuntimeInner>) {
             }
         });
         let t0 = std::time::Instant::now();
-        match jit::translate_for_key(&key, &kernel, simt_cfg.as_ref(), crate::backends::JitTier::Optimized)
-        {
-            Ok(prog) => {
+        // A prior process may have persisted this exact tier-2 lowering:
+        // consult the disk before paying the optimizing mid-end.
+        let compiled = match inner.jit.disk_load_tier2(&key, ir_hash) {
+            Some(prog) => Ok((prog, TranslationSource::Disk)),
+            None => jit::translate_for_key(
+                &key,
+                &kernel,
+                simt_cfg.as_ref(),
+                crate::backends::JitTier::Optimized,
+            )
+            .map(|p| (p, TranslationSource::Fresh)),
+        };
+        match compiled {
+            Ok((prog, source)) => {
                 let micros = t0.elapsed().as_secs_f64() * 1e6;
                 // Background promotions belong to no launch: a rootless
                 // translate span on the runtime track (no-op disarmed).
@@ -406,10 +454,10 @@ pub(crate) fn jit_compiler_loop(inner: std::sync::Arc<RuntimeInner>) {
                     t0,
                     0,
                     crate::obs::Phase::Translate,
-                    &format!("{} tier2 (background)", key.kernel),
+                    &format!("{} tier2 (background) {source}", key.kernel),
                     None,
                 );
-                inner.jit.install_tier2(&key, prog, micros);
+                inner.jit.install_tier2(&key, prog, micros, source, ir_hash);
             }
             Err(_) => inner.jit.abandon_promotion(&key),
         }

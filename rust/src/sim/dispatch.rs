@@ -42,6 +42,7 @@
 use crate::error::Result;
 use crate::sim::snapshot::{BlockResume, BlockState, ExecProfile};
 use std::sync::atomic::{AtomicBool, AtomicIsize, AtomicU64, Ordering};
+use std::sync::Mutex;
 
 /// Process-wide dispatch-pool budget shared by **concurrent grid runs**.
 ///
@@ -108,6 +109,209 @@ pub mod budget {
             ) {
                 Ok(_) => return Lease(take),
                 Err(seen) => avail = seen,
+            }
+        }
+    }
+}
+
+/// Warm persistent dispatch pool shared by every grid run in the process.
+///
+/// `run_blocks` used to spawn its leased workers fresh per launch via
+/// `std::thread::scope` — one thread create/join pair per worker per
+/// launch, which dominates sub-millisecond repeat launches (the E4
+/// batching tiers measure it). The pool keeps workers alive across
+/// launches instead: they are spawned lazily on first demand, never
+/// exceed the host core budget, and never exit, so
+/// [`warmpool::workers_spawned`] is bounded by `cores - 1` for the life
+/// of the process no matter how many grids run.
+///
+/// A job is a **lifetime-erased** closure borrowing the launching stack
+/// frame. Soundness rests on the [`warmpool::JobSet`] completion
+/// barrier: `join` (called explicitly, and again from `Drop` on unwind)
+/// blocks until every submitted job has either finished in a pool worker
+/// or been reclaimed from the queue and run inline by the launcher — so
+/// the erased borrows are live whenever a job body runs, and dead only
+/// after none can run. The `JobSet` must be declared *after* everything
+/// its jobs borrow, so unwinding drops (and therefore joins) it first.
+pub mod warmpool {
+    use std::collections::VecDeque;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+    use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+    /// A queued job, lifetime-erased in [`JobSet::submit`].
+    type Job = Box<dyn FnOnce() + Send + 'static>;
+
+    struct PoolState {
+        q: VecDeque<(Arc<SetInner>, Job)>,
+        idle: usize,
+        workers: usize,
+    }
+
+    struct Pool {
+        state: Mutex<PoolState>,
+        cv: Condvar,
+        spawned: AtomicU64,
+        /// Worker ceiling: one per host core minus the launching thread
+        /// (which always works its own grid) — mirrors [`super::budget`].
+        cap: usize,
+    }
+
+    fn pool() -> &'static Pool {
+        static POOL: OnceLock<Pool> = OnceLock::new();
+        POOL.get_or_init(|| {
+            let cores =
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+            Pool {
+                state: Mutex::new(PoolState { q: VecDeque::new(), idle: 0, workers: 0 }),
+                cv: Condvar::new(),
+                spawned: AtomicU64::new(0),
+                cap: cores.saturating_sub(1),
+            }
+        })
+    }
+
+    /// Total pool workers ever spawned. Workers are reused, never
+    /// respawned, so this stays `<= cores - 1` for the process lifetime —
+    /// the invariant the warm-reuse test pins.
+    pub fn workers_spawned() -> u64 {
+        pool().spawned.load(Ordering::Relaxed)
+    }
+
+    fn worker_loop(p: &'static Pool) {
+        loop {
+            let (set, job) = {
+                let mut st = p.state.lock().unwrap();
+                loop {
+                    if let Some(j) = st.q.pop_front() {
+                        break j;
+                    }
+                    st.idle += 1;
+                    st = p.cv.wait(st).unwrap();
+                    st.idle -= 1;
+                }
+            };
+            run_one(&set, job);
+        }
+    }
+
+    /// Run one job and retire it against its set's barrier. A panicking
+    /// job still retires (the launcher re-raises at `join`) — a worker
+    /// must never die holding barrier counts.
+    fn run_one(set: &SetInner, job: Job) {
+        if catch_unwind(AssertUnwindSafe(job)).is_err() {
+            set.panicked.store(true, Ordering::Release);
+        }
+        let mut rem = set.remaining.lock().unwrap();
+        *rem -= 1;
+        if *rem == 0 {
+            drop(rem);
+            set.cv.notify_all();
+        }
+    }
+
+    struct SetInner {
+        remaining: Mutex<usize>,
+        cv: Condvar,
+        panicked: AtomicBool,
+    }
+
+    /// One launch's batch of pool jobs plus its completion barrier (see
+    /// the module docs for the drop-order contract).
+    pub struct JobSet {
+        inner: Arc<SetInner>,
+        joined: bool,
+    }
+
+    impl Default for JobSet {
+        fn default() -> Self {
+            JobSet::new()
+        }
+    }
+
+    impl JobSet {
+        pub fn new() -> JobSet {
+            JobSet {
+                inner: Arc::new(SetInner {
+                    remaining: Mutex::new(0),
+                    cv: Condvar::new(),
+                    panicked: AtomicBool::new(false),
+                }),
+                joined: false,
+            }
+        }
+
+        /// Submit a job that may borrow the caller's stack frame. The
+        /// borrows stay live until [`JobSet::join`] returns (enforced by
+        /// `Drop` on unwind), which is what makes the erasure sound.
+        pub fn submit<'env>(&self, job: Box<dyn FnOnce() + Send + 'env>) {
+            *self.inner.remaining.lock().unwrap() += 1;
+            // SAFETY: `join` blocks until this job has run (in a worker
+            // or reclaimed inline), and runs from `Drop` if the caller
+            // unwinds first, so the `'env` borrows outlive every use.
+            let job: Job =
+                unsafe { std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Job>(job) };
+            let p = pool();
+            let mut st = p.state.lock().unwrap();
+            st.q.push_back((self.inner.clone(), job));
+            if st.idle == 0 && st.workers < p.cap {
+                st.workers += 1;
+                p.spawned.fetch_add(1, Ordering::Relaxed);
+                let n = st.workers;
+                drop(st);
+                if std::thread::Builder::new()
+                    .name(format!("hetgpu-dispatch-{n}"))
+                    .spawn(move || worker_loop(p))
+                    .is_err()
+                {
+                    // Could not grow the pool: the job stays queued for
+                    // an existing worker or the inline reclaim at join.
+                    p.state.lock().unwrap().workers -= 1;
+                    p.cv.notify_one();
+                }
+            } else {
+                drop(st);
+                p.cv.notify_one();
+            }
+        }
+
+        /// Block until every submitted job completed. Jobs still queued
+        /// (pool saturated by other grids, or no workers at all) are
+        /// reclaimed and run inline — forward progress never depends on
+        /// pool capacity. Re-raises a worker panic as
+        /// "dispatch worker panicked" (suppressed while already
+        /// unwinding, where it would abort).
+        pub fn join(&mut self) {
+            self.joined = true;
+            let p = pool();
+            loop {
+                let job = {
+                    let mut st = p.state.lock().unwrap();
+                    match st.q.iter().position(|(s, _)| Arc::ptr_eq(s, &self.inner)) {
+                        Some(i) => st.q.remove(i).map(|(_, j)| j),
+                        None => None,
+                    }
+                };
+                match job {
+                    Some(j) => run_one(&self.inner, j),
+                    None => break,
+                }
+            }
+            let mut rem = self.inner.remaining.lock().unwrap();
+            while *rem > 0 {
+                rem = self.inner.cv.wait(rem).unwrap();
+            }
+            drop(rem);
+            if self.inner.panicked.load(Ordering::Acquire) && !std::thread::panicking() {
+                panic!("dispatch worker panicked");
+            }
+        }
+    }
+
+    impl Drop for JobSet {
+        fn drop(&mut self) {
+            if !self.joined {
+                self.join();
             }
         }
     }
@@ -276,95 +480,98 @@ where
 
     // The calling thread is the run's guaranteed worker; additional
     // workers are leased from the process-wide budget shared with
-    // concurrently executing grid runs. The lease is *elastic*: between
-    // its own block claims the caller keeps trying to lease more slots
-    // (they free up when another grid finishes), so a run that started on
-    // a busy machine ramps up instead of being pinned at its
-    // admission-time width.
-    let per_worker: Vec<Vec<(u32, Result<Slot>)>> = std::thread::scope(|scope| {
-        // Claim and process one block; false when the grid is exhausted.
-        let step = |local: &mut Vec<(u32, Result<Slot>)>| -> bool {
-            let b = next.fetch_add(1, Ordering::Relaxed);
-            if b >= grid_size as u64 {
-                return false;
-            }
-            let b = b as u32;
-            if matches!(resume.map(|r| &r[b as usize]), Some(BlockResume::Skip)) {
-                local.push((b, Ok(Slot::Skipped)));
-                return true;
-            }
-            if b as u64 > fault_min.load(Ordering::Acquire) {
-                // Past a known fault: the launch is failing, the
-                // slot is discarded by the error return.
-                local.push((b, Ok(Slot::NotStarted)));
-                return true;
-            }
-            let gated = match pause_at {
-                Some(k) => b >= k,
-                None => {
-                    stop.load(Ordering::Acquire)
-                        || (migratable && pause.load(Ordering::SeqCst))
-                }
-            };
-            if gated {
-                stop.store(true, Ordering::Release);
-                local.push((b, Ok(gated_slot(resume.map(|r| &r[b as usize])))));
-                return true;
-            }
-            match run_block(b) {
-                Ok((state, cycles, totals)) => {
-                    if pause_at.is_none() && matches!(state, BlockState::Suspended(_)) {
-                        stop.store(true, Ordering::Release);
-                    }
-                    local.push((b, Ok(Slot::Ran { state, cycles, totals })));
-                }
-                Err(e) => {
-                    fault_min.fetch_min(b as u64, Ordering::AcqRel);
-                    local.push((b, Err(e)));
-                }
-            }
-            true
-        };
-        let work = || {
-            let mut local: Vec<(u32, Result<Slot>)> = Vec::new();
-            while step(&mut local) {}
-            local
-        };
-
-        let mut handles = Vec::new();
-        let mut leases = Vec::new();
-        let initial = budget::lease(want - 1);
-        for _ in 0..initial.extra() {
-            handles.push(scope.spawn(work));
+    // concurrently executing grid runs and serviced by the persistent
+    // [`warmpool`] (no thread create/join per launch). The lease is
+    // *elastic*: between its own block claims the caller keeps trying to
+    // lease more slots (they free up when another grid finishes), so a
+    // run that started on a busy machine ramps up instead of being
+    // pinned at its admission-time width.
+    //
+    // Claim and process one block; false when the grid is exhausted.
+    let step = |local: &mut Vec<(u32, Result<Slot>)>| -> bool {
+        let b = next.fetch_add(1, Ordering::Relaxed);
+        if b >= grid_size as u64 {
+            return false;
         }
-        leases.push(initial);
-
-        // Caller works the grid itself, attempting one ramp-up lease
-        // between blocks until the target width is reached.
-        let mut own: Vec<(u32, Result<Slot>)> = Vec::new();
-        while handles.len() < want - 1 {
-            let l = budget::lease(1);
-            if l.extra() == 1 {
-                handles.push(scope.spawn(work));
-                leases.push(l);
-                continue;
+        let b = b as u32;
+        if matches!(resume.map(|r| &r[b as usize]), Some(BlockResume::Skip)) {
+            local.push((b, Ok(Slot::Skipped)));
+            return true;
+        }
+        if b as u64 > fault_min.load(Ordering::Acquire) {
+            // Past a known fault: the launch is failing, the
+            // slot is discarded by the error return.
+            local.push((b, Ok(Slot::NotStarted)));
+            return true;
+        }
+        let gated = match pause_at {
+            Some(k) => b >= k,
+            None => {
+                stop.load(Ordering::Acquire)
+                    || (migratable && pause.load(Ordering::SeqCst))
             }
-            if !step(&mut own) {
-                break;
+        };
+        if gated {
+            stop.store(true, Ordering::Release);
+            local.push((b, Ok(gated_slot(resume.map(|r| &r[b as usize])))));
+            return true;
+        }
+        match run_block(b) {
+            Ok((state, cycles, totals)) => {
+                if pause_at.is_none() && matches!(state, BlockState::Suspended(_)) {
+                    stop.store(true, Ordering::Release);
+                }
+                local.push((b, Ok(Slot::Ran { state, cycles, totals })));
+            }
+            Err(e) => {
+                fault_min.fetch_min(b as u64, Ordering::AcqRel);
+                local.push((b, Err(e)));
             }
         }
-        while step(&mut own) {}
+        true
+    };
+    let collected: Mutex<Vec<Vec<(u32, Result<Slot>)>>> = Mutex::new(Vec::new());
+    let work = || {
+        let mut local: Vec<(u32, Result<Slot>)> = Vec::new();
+        while step(&mut local) {}
+        collected.lock().unwrap().push(local);
+    };
 
-        let mut out: Vec<Vec<(u32, Result<Slot>)>> = handles
-            .into_iter()
-            .map(|h| h.join().expect("dispatch worker panicked"))
-            .collect();
-        out.push(own);
-        // Leases drop (and return their slots) only after every worker
-        // has retired.
-        drop(leases);
-        out
-    });
+    // Declared after everything the jobs borrow (`step`, `work`,
+    // `collected`, the atomics above): if anything below unwinds, the
+    // set drops — and joins — before any borrowed state does.
+    let mut set = warmpool::JobSet::new();
+    let mut leases = Vec::new();
+    let initial = budget::lease(want - 1);
+    let mut extra = initial.extra();
+    for _ in 0..extra {
+        set.submit(Box::new(&work));
+    }
+    leases.push(initial);
+
+    // Caller works the grid itself, attempting one ramp-up lease
+    // between blocks until the target width is reached.
+    let mut own: Vec<(u32, Result<Slot>)> = Vec::new();
+    while extra < want - 1 {
+        let l = budget::lease(1);
+        if l.extra() == 1 {
+            set.submit(Box::new(&work));
+            leases.push(l);
+            extra += 1;
+            continue;
+        }
+        if !step(&mut own) {
+            break;
+        }
+    }
+    while step(&mut own) {}
+    // Barrier: every submitted job ran (pool worker or reclaimed
+    // inline). Leases return their slots only after that.
+    set.join();
+    drop(leases);
+
+    let mut per_worker = std::mem::take(&mut *collected.lock().unwrap());
+    per_worker.push(own);
 
     let mut slots: Vec<Option<Result<Slot>>> = Vec::with_capacity(grid_size as usize);
     slots.resize_with(grid_size as usize, || None);
@@ -633,5 +840,47 @@ mod tests {
     fn env_default_is_at_least_one_worker() {
         assert!(DispatchOptions::from_env().workers >= 1);
         assert_eq!(DispatchOptions::single().workers, 1);
+    }
+
+    #[test]
+    fn dispatch_pool_workers_are_reused_across_runs() {
+        let pause = AtomicBool::new(false);
+        for _ in 0..5 {
+            let run = run_blocks(
+                256,
+                DispatchOptions::with_workers(4),
+                false,
+                &pause,
+                None,
+                |b| done(b as u64),
+            )
+            .unwrap();
+            assert_eq!(run.states.len(), 256);
+        }
+        // Workers persist across runs: total spawns stay bounded by the
+        // core budget no matter how many grids ran (without reuse this
+        // would grow by ~3 per run above).
+        let cores =
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) as u64;
+        assert!(
+            warmpool::workers_spawned() <= cores.saturating_sub(1),
+            "pool respawned workers: {} spawned on {cores} cores",
+            warmpool::workers_spawned()
+        );
+    }
+
+    #[test]
+    fn jobset_join_is_a_completion_barrier_even_without_workers() {
+        // Inline reclaim: even if the pool never grants a worker (1-core
+        // host, saturated pool), join runs the queued jobs itself.
+        let ran = Counter::new(0);
+        let mut set = warmpool::JobSet::new();
+        for _ in 0..4 {
+            set.submit(Box::new(|| {
+                ran.fetch_add(1, Ordering::Relaxed);
+            }));
+        }
+        set.join();
+        assert_eq!(ran.load(Ordering::Relaxed), 4);
     }
 }

@@ -78,6 +78,13 @@ def main(argv):
         # pre-flight gate (Warn vs Off) is printed by the bench but not
         # trend-gated: at micro-launch scale it sits inside runner jitter.
         ("analyze", "analyze_us_per_kernel"),
+        # AOT / translation cache (BENCH_e4 `aot`): gate the launch path
+        # with *no* disk cache configured — the common case. The cache
+        # plumbing adds one Option check on the miss path and nothing on
+        # the memo fast path, so the disarmed-cache cost must not move.
+        # The cold/warm/fat-blob first-launch ordering is checked
+        # intra-artifact below.
+        ("aot", "nocache_launch_s"),
     ]:
         p = prev.get(section, {}).get(key)
         c = curr.get(section, {}).get(key)
@@ -101,6 +108,29 @@ def main(argv):
         print(f"tiering: tier1 {t1:.6f}s vs tier2 {t2:.6f}s ({t1 / t2:.2f}x) {verdict}")
         if t2 >= t1:
             failures.append(f"tier-2 steady state ({t2:.6f}s) not faster than tier-1 ({t1:.6f}s)")
+
+    # Intra-artifact invariants (BENCH_e4 `aot`): warm starts must beat the
+    # cold JIT path — a fat-blob-seeded module launches with zero
+    # translation work and a warm disk cache replaces lowering with one
+    # file read + decode, so both first-launch tiers sit strictly below
+    # the cold tier or the artifact pipeline is broken. Likewise batched
+    # recording (one graph lock for N nodes) must beat N looped records.
+    aot = curr.get("aot", {})
+    cold = aot.get("cold_first_launch_s")
+    for name, key in [("fat-blob", "fatblob_first_launch_s"), ("warm-disk", "warm_disk_first_launch_s")]:
+        warm = aot.get(key)
+        if cold is None or warm is None:
+            continue
+        verdict = "ok" if warm < cold else "REGRESSION"
+        print(f"aot: {name} first launch {warm:.6f}s vs cold {cold:.6f}s ({cold / warm:.2f}x) {verdict}")
+        if warm >= cold:
+            failures.append(f"{name} first launch ({warm:.6f}s) not below cold JIT ({cold:.6f}s)")
+    batched, looped = aot.get("batched_record_s"), aot.get("looped_record_s")
+    if batched is not None and looped is not None:
+        verdict = "ok" if batched < looped else "REGRESSION"
+        print(f"aot: batched record {batched:.6f}s vs looped {looped:.6f}s ({looped / batched:.2f}x) {verdict}")
+        if batched >= looped:
+            failures.append(f"batched record ({batched:.6f}s) not below looped ({looped:.6f}s)")
 
     if failures:
         print("bench trend check FAILED:")

@@ -1,0 +1,213 @@
+//! AOT fat blobs and the on-disk translation cache, end to end through
+//! the public API (DESIGN.md §14): a fat-blob-seeded module launches
+//! with zero translation work and matches the JIT run bit for bit;
+//! corrupt artifacts degrade per entry (never crash the load); two
+//! contexts sharing one cache directory skip lowering entirely on the
+//! second start; and a corrupted cache directory falls back to fresh
+//! translation with the damage reclaimed behind it.
+
+use hetgpu::runtime::api::{DiskCacheConfig, HetGpu, ModuleHandle, TierPolicy};
+use hetgpu::runtime::device::DeviceKind;
+use hetgpu::runtime::launch::Arg;
+use hetgpu::sim::simt::LaunchDims;
+use std::path::{Path, PathBuf};
+
+/// Three kernels so warm starts exercise several cache keys, with a
+/// data dependency (`fill` -> `square` -> `mix`) so a wrong or stale
+/// translation anywhere corrupts the final image.
+const MULTI_SRC: &str = r#"
+__global__ void fill(unsigned* x, unsigned n) {
+    unsigned i = blockIdx.x * blockDim.x + threadIdx.x;
+    if (i < n) x[i] = i * 3u + 7u;
+}
+
+__global__ void square(unsigned* x, unsigned n) {
+    unsigned i = blockIdx.x * blockDim.x + threadIdx.x;
+    if (i < n) x[i] = x[i] * x[i] + 1u;
+}
+
+__global__ void mix(unsigned* x, unsigned* y, unsigned n) {
+    unsigned i = blockIdx.x * blockDim.x + threadIdx.x;
+    if (i < n) y[i] = (x[i] / 5u) * 3u + (x[i] % 7u) + (i & 15u);
+}
+"#;
+
+const N: usize = 256;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("hetgpu-aot-test-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Promotion disabled: the tests count translations, and an adaptive
+/// background promotion would race the counters.
+fn nojit() -> TierPolicy {
+    TierPolicy { hot_threshold: u64::MAX, force: None }
+}
+
+fn simt_ctx(workers: usize) -> HetGpu {
+    HetGpu::with_devices_workers_and_jit(&[DeviceKind::NvidiaSim], workers, nojit()).unwrap()
+}
+
+fn cached_ctx(workers: usize, dir: &Path) -> HetGpu {
+    let cfg = DiskCacheConfig { dir: dir.to_path_buf(), max_mb: 64 };
+    HetGpu::with_devices_workers_jit_and_cache(&[DeviceKind::NvidiaSim], workers, nojit(), cfg)
+        .unwrap()
+}
+
+/// Launch all three kernels in dependency order; returns the `y` image.
+fn run_all(ctx: &HetGpu, m: ModuleHandle) -> Vec<u32> {
+    let x = ctx.alloc_buffer::<u32>(N, 0).unwrap();
+    let y = ctx.alloc_buffer::<u32>(N, 0).unwrap();
+    let s = ctx.create_stream(0).unwrap();
+    let dims = LaunchDims::d1(4, 64);
+    let n = Arg::U32(N as u32);
+    ctx.launch(m, "fill")
+        .dims(dims)
+        .args(&[x.arg(), n])
+        .record(s)
+        .unwrap();
+    ctx.launch(m, "square")
+        .dims(dims)
+        .args(&[x.arg(), n])
+        .record(s)
+        .unwrap();
+    ctx.launch(m, "mix")
+        .dims(dims)
+        .args(&[x.arg(), y.arg(), n])
+        .record(s)
+        .unwrap();
+    ctx.synchronize(s).unwrap();
+    ctx.download(&y, N).unwrap()
+}
+
+/// The plain JIT result every warm-start path must reproduce exactly.
+fn reference() -> Vec<u32> {
+    let ctx = simt_ctx(1);
+    let m = ctx.compile_cuda(MULTI_SRC).unwrap();
+    run_all(&ctx, m)
+}
+
+fn build_blob() -> Vec<u8> {
+    let ctx = simt_ctx(1);
+    let m = ctx.compile_cuda(MULTI_SRC).unwrap();
+    ctx.build_fat_blob(m).unwrap()
+}
+
+#[test]
+fn fat_blob_warm_start_translates_nothing_and_is_bit_identical() {
+    let want = reference();
+    let blob = build_blob();
+
+    let ctx = simt_ctx(2);
+    let m = ctx.load_fat_blob(&blob).unwrap();
+    let got = run_all(&ctx, m);
+    assert_eq!(want, got, "AOT-seeded run differs from the JIT run");
+
+    let stats = ctx.jit_stats();
+    assert!(stats.aot_seeded > 0, "nothing was seeded: {stats:?}");
+    assert_eq!(
+        (stats.tier1_translations, stats.tier2_translations, stats.disk_hits),
+        (0, 0, 0),
+        "a fat-blob warm start must do zero translation work: {stats:?}"
+    );
+}
+
+#[test]
+fn corrupt_fat_blob_entries_are_skipped_not_fatal() {
+    let want = reference();
+    let blob = build_blob();
+
+    // Tail truncation loses trailing entries but never the module: the
+    // parse reports them skipped, the load succeeds, results match.
+    let truncated = &blob[..blob.len() - 9];
+    let parsed = hetgpu::aot::parse_fat_blob(truncated).unwrap();
+    assert!(parsed.skipped > 0, "truncated tail should skip entries");
+    let ctx = simt_ctx(1);
+    let m = ctx.load_fat_blob(truncated).unwrap();
+    assert_eq!(want, run_all(&ctx, m), "truncated blob changed results");
+
+    // One flipped payload bit fails that entry's checksum; everything
+    // else seeds normally and the launches stay correct.
+    let mut evil = blob.clone();
+    let at = evil.len() - 9;
+    evil[at] ^= 0x40;
+    let parsed = hetgpu::aot::parse_fat_blob(&evil).unwrap();
+    assert!(parsed.skipped >= 1, "bit flip should skip one entry");
+    let ctx = simt_ctx(1);
+    let m = ctx.load_fat_blob(&evil).unwrap();
+    assert_eq!(want, run_all(&ctx, m), "bit-flipped blob changed results");
+
+    // A mangled header is not a degradable artifact: fail loudly.
+    let mut bad = blob;
+    bad[0] ^= 0xff;
+    assert!(simt_ctx(1).load_fat_blob(&bad).is_err());
+}
+
+#[test]
+fn shared_cache_dir_second_context_translates_nothing() {
+    let want = reference();
+    let dir = tmpdir("shared");
+
+    // First context pays the lowering and populates the cache.
+    {
+        let ctx = cached_ctx(1, &dir);
+        let m = ctx.compile_cuda(MULTI_SRC).unwrap();
+        assert_eq!(want, run_all(&ctx, m), "cache-armed run differs");
+        let js = ctx.jit_stats();
+        assert_eq!(js.tier1_translations, 3, "{js:?}");
+        let cs = ctx.cache_stats();
+        assert!(cs.stores >= 3, "first context persisted nothing: {cs:?}");
+        assert!(cs.bytes > 0, "{cs:?}");
+    }
+
+    // Second context (fresh process stand-in): every miss is served
+    // from disk, zero lowering, bit-identical output.
+    let ctx = cached_ctx(2, &dir);
+    let m = ctx.compile_cuda(MULTI_SRC).unwrap();
+    assert_eq!(want, run_all(&ctx, m), "warm-disk run differs");
+    let js = ctx.jit_stats();
+    assert_eq!(js.disk_hits, 3, "{js:?}");
+    assert_eq!(js.tier1_translations, 0, "warm start still lowered: {js:?}");
+    let cs = ctx.cache_stats();
+    assert!(cs.hits >= 3, "{cs:?}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupted_cache_entries_fall_back_to_fresh_translation() {
+    let want = reference();
+    let dir = tmpdir("corrupt");
+    {
+        let ctx = cached_ctx(1, &dir);
+        let m = ctx.compile_cuda(MULTI_SRC).unwrap();
+        let _ = run_all(&ctx, m);
+    }
+
+    // Truncate every entry on disk to half its size.
+    let mut mangled = 0;
+    for entry in std::fs::read_dir(&dir).unwrap().flatten() {
+        let path = entry.path();
+        if path.extension().and_then(|e| e.to_str()) != Some("hgpc") {
+            continue;
+        }
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        mangled += 1;
+    }
+    assert!(mangled >= 3, "expected on-disk entries to mangle");
+
+    // Fail closed: every lookup is a miss, translation happens fresh,
+    // results are unchanged, and the damage is reclaimed + re-stored.
+    let ctx = cached_ctx(1, &dir);
+    let m = ctx.compile_cuda(MULTI_SRC).unwrap();
+    assert_eq!(want, run_all(&ctx, m), "corrupt cache changed results");
+    let js = ctx.jit_stats();
+    assert_eq!(js.disk_hits, 0, "{js:?}");
+    assert_eq!(js.tier1_translations, 3, "{js:?}");
+    let cs = ctx.cache_stats();
+    assert!(cs.misses >= 3, "{cs:?}");
+    assert!(cs.stores >= 3, "corrupt entries were not repopulated: {cs:?}");
+    let _ = std::fs::remove_dir_all(&dir);
+}

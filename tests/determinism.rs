@@ -11,7 +11,9 @@ use hetgpu::isa::simt_isa::{SimtConfig, SimtProgram};
 use hetgpu::isa::tensix_isa::TensixMode;
 use hetgpu::migrate::blob;
 use hetgpu::migrate::state::Snapshot;
-use hetgpu::runtime::api::{HetGpu, JitTier, ModuleHandle, StreamHandle, TierPolicy};
+use hetgpu::runtime::api::{
+    DiskCacheConfig, HetGpu, JitTier, ModuleHandle, StreamHandle, TierPolicy,
+};
 use hetgpu::runtime::device::DeviceKind;
 use hetgpu::runtime::launch::{Arg, LaunchSpec};
 use hetgpu::runtime::stream::PausedKernel;
@@ -981,4 +983,90 @@ fn tier2_program_differs_but_runs_and_resumes_bit_identical() {
         .unwrap();
     assert!(out.is_completed(), "cross-tier resume paused again");
     assert_eq!(r1.0, dump(&mem), "cross-tier resume diverged from the tier-1 run");
+}
+
+/// AOT acid test (DESIGN.md §14): a kernel paused mid-grid in a context
+/// that warm-started from a fat blob — with a shared on-disk translation
+/// cache armed — must migrate cross-device (and survive a wire
+/// round-trip) and resume bit-identically to the plain no-cache JIT run,
+/// with *zero* lowering work anywhere in the warm context. This pins
+/// down the whole artifact pipeline: seeded programs are the same bytes
+/// the JIT would have produced, and re-resolution after restore lands on
+/// them instead of translating.
+#[test]
+fn aot_seeded_pause_migrate_resume_bit_identical() {
+    let dims = LaunchDims::d1(8, 32);
+    let n = 256usize;
+    let iters = 6u32;
+    let init: Vec<u32> = (0..n as u32).map(|i| i.wrapping_mul(5)).collect();
+    let pol = TierPolicy { hot_threshold: u64::MAX, force: None };
+
+    // Reference: plain JIT, no cache, uninterrupted.
+    let reference = {
+        let ctx = HetGpu::with_devices_workers_and_jit(&[DeviceKind::NvidiaSim], 1, pol).unwrap();
+        let m = ctx.compile_cuda(TIERED_PERSIST_SRC).unwrap();
+        let buf = ctx.alloc_buffer::<u32>(n, 0).unwrap();
+        ctx.upload(&buf, &init).unwrap();
+        let s = ctx.create_stream(0).unwrap();
+        ctx.launch(m, "persist3")
+            .dims(dims)
+            .args(&[buf.arg(), Arg::U32(iters)])
+            .record(s)
+            .unwrap();
+        ctx.synchronize(s).unwrap();
+        ctx.download(&buf, n).unwrap()
+    };
+
+    // The artifact, built once by a disposable context.
+    let fat = {
+        let ctx = HetGpu::with_devices(&[DeviceKind::NvidiaSim]).unwrap();
+        let m = ctx.compile_cuda(TIERED_PERSIST_SRC).unwrap();
+        ctx.build_fat_blob(m).unwrap()
+    };
+
+    let dir = std::env::temp_dir().join(format!("hetgpu-det-aot-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    for wire in [false, true] {
+        let ctx = HetGpu::with_devices_workers_jit_and_cache(
+            &[DeviceKind::NvidiaSim, DeviceKind::NvidiaSim],
+            4,
+            pol,
+            DiskCacheConfig { dir: dir.clone(), max_mb: 64 },
+        )
+        .unwrap();
+        let m = ctx.load_fat_blob(&fat).unwrap();
+        assert!(ctx.jit_stats().aot_seeded > 0, "wire {wire}: nothing seeded");
+        let buf = ctx.alloc_buffer::<u32>(n, 0).unwrap();
+        ctx.upload(&buf, &init).unwrap();
+        let s = ctx.create_stream(0).unwrap();
+        ctx.launch(m, "persist3")
+            .dims(dims)
+            .args(&[buf.arg(), Arg::U32(iters)])
+            .record(s)
+            .unwrap();
+        // Pause mid-grid, optionally strip the pinned program via the
+        // wire format, then resume on the *other* device: re-resolution
+        // must land on the AOT-seeded cache entry, not a fresh lowering.
+        let snap = ctx.checkpoint(s).unwrap();
+        let snap = if wire {
+            blob::deserialize(&blob::serialize(&snap)).unwrap()
+        } else {
+            snap
+        };
+        ctx.restore(snap, 1).unwrap();
+        ctx.synchronize(s).unwrap();
+        let stats = ctx.jit_stats();
+        assert_eq!(
+            (stats.tier1_translations, stats.tier2_translations),
+            (0, 0),
+            "wire {wire}: AOT warm start still lowered something: {stats:?}"
+        );
+        assert_eq!(
+            reference,
+            ctx.download(&buf, n).unwrap(),
+            "wire {wire}: AOT-seeded resumed run differs from the plain JIT run"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
 }
